@@ -1,0 +1,17 @@
+//! The paper's headline RNN comparison (Fig 9a) as a standalone scenario:
+//! unified int16 loses accuracy on a translation-style task, adaptive
+//! precision recovers it by escalating only the tensors that need it.
+//!
+//!     cargo run --release --example adaptive_vs_static -- \
+//!         [--iters 600] [--vocab 12] [--len 4]
+
+use apt::exp;
+use apt::util::cli::Args;
+
+fn main() {
+    let args = Args::from_env();
+    exp::run("fig9a", &args);
+    println!();
+    // if artifacts are built, also run the transformer variant
+    exp::run("fig9b", &args);
+}

@@ -1,0 +1,58 @@
+//! Detection + segmentation under adaptive precision (Table 1's non-
+//! classification rows): an SSD-lite detector and a deeplab-lite
+//! segmenter trained f32 vs adaptive on synthetic scenes.
+//!
+//!     cargo run --release --example detection_lite -- [--iters 300]
+
+use apt::data::{SynthDetection, SynthSegmentation};
+use apt::exp::common::grad_mix_string;
+use apt::nn::models::{DetectionNet, SegNet};
+use apt::nn::{QuantMode, TrainCtx};
+use apt::util::cli::Args;
+use apt::util::Pcg32;
+
+fn main() {
+    let args = Args::from_env();
+    let iters = args.u64_or("iters", 300);
+
+    println!("== detection (SSD-lite, synthetic single-object scenes) ==");
+    for (label, mode) in modes(iters) {
+        let mut rng = Pcg32::seeded(7);
+        let mut net = DetectionNet::new(3, mode, &mut rng);
+        let mut data = SynthDetection::new(5, 3, 3, 16, 16);
+        let mut ctx = TrainCtx::new();
+        for it in 0..iters {
+            ctx.iter = it;
+            let (x, boxes, classes) = data.batch(16);
+            net.train_step(&x, &boxes, &classes, 0.05, &mut ctx);
+        }
+        ctx.ledger.set_total_iters(iters);
+        let (x, boxes, classes) = data.batch(128);
+        let map = net.map_lite(&x, &boxes, &classes, &mut ctx);
+        println!("  {label:<9} mAP-lite {map:.3}   {}", grad_mix_string(&ctx.ledger));
+    }
+
+    println!("\n== segmentation (deeplab-lite, synthetic masks) ==");
+    for (label, mode) in modes(iters) {
+        let mut rng = Pcg32::seeded(8);
+        let mut net = SegNet::new(3, mode, &mut rng);
+        let mut data = SynthSegmentation::new(6, 3, 3, 12, 12);
+        let mut ctx = TrainCtx::new();
+        for it in 0..iters {
+            ctx.iter = it;
+            let (x, labels) = data.batch(8);
+            net.train_step(&x, &labels, &mut ctx);
+        }
+        ctx.ledger.set_total_iters(iters);
+        let (x, labels) = data.batch(64);
+        let miou = net.eval_miou(&x, &labels, &mut ctx);
+        println!("  {label:<9} meanIoU {miou:.3}   {}", grad_mix_string(&ctx.ledger));
+    }
+    println!("\npaper shape (Table 1): adaptive ≈ float32 on both tasks");
+}
+
+fn modes(iters: u64) -> Vec<(&'static str, QuantMode)> {
+    let mut cfg = apt::apt::AptConfig::default();
+    cfg.init_phase_iters = iters / 10;
+    vec![("float32", QuantMode::Float32), ("adaptive", QuantMode::Adaptive(cfg))]
+}

@@ -1,0 +1,17 @@
+//! Reproduce the paper's observation figures (Fig 1 + Fig 2) in one run:
+//! gradient distributions per layer, range evolution, and the per-layer
+//! bit-width sensitivity that motivates adaptive precision.
+//!
+//!     cargo run --release --example observe_distributions -- [--iters 200]
+
+use apt::exp;
+use apt::util::cli::Args;
+
+fn main() {
+    let args = Args::from_env();
+    exp::run("fig1", &args);
+    println!();
+    exp::run("fig2", &args);
+    println!();
+    exp::run("fig11", &args);
+}

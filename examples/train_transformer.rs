@@ -1,0 +1,93 @@
+//! E2E driver: train a Transformer LM through the FULL three-layer stack —
+//! Rust coordinator (QEM/QPA host control) → PJRT CPU client → AOT HLO
+//! containing the Pallas-derived quantized train step.
+//!
+//! Python never runs here: the artifact was built once by `make artifacts`.
+//!
+//!     cargo run --release --example train_transformer -- \
+//!         [--steps 200] [--lr 3e-3] [--mode adaptive|int16|float32] \
+//!         [--artifacts artifacts] [--log results/e2e_loss.csv]
+//!
+//! Model size is fixed by the artifact (see `python/compile/aot.py`
+//! --preset); scaling toward the paper's sizes is a preset knob, not a code
+//! change (DESIGN.md §2).
+
+use apt::coordinator::{tfm_slot_names, tokens_value, ArtifactTrainer};
+use apt::data::lm_batch;
+use apt::nn::QuantMode;
+use apt::runtime::Runtime;
+use apt::util::cli::Args;
+use apt::util::out::Csv;
+use apt::util::{Pcg32, Timer};
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env();
+    let steps = args.u64_or("steps", 200);
+    let lr = args.f32_or("lr", 3e-3);
+    let artifacts = args.str_or("artifacts", "artifacts");
+    let log_path = args.str_or("log", "results/e2e_loss.csv");
+    let mode = match args.str_or("mode", "adaptive").as_str() {
+        "float32" | "f32" => QuantMode::Float32,
+        "adaptive" => {
+            let mut cfg = apt::apt::AptConfig::default();
+            cfg.init_phase_iters = (steps / 10).max(1);
+            QuantMode::Adaptive(cfg)
+        }
+        s if s.starts_with("int") => QuantMode::Static(s[3..].parse()?),
+        other => anyhow::bail!("unknown mode {other:?}"),
+    };
+
+    let mut rt = Runtime::new(&artifacts)?;
+    println!("PJRT platform: {}", rt.platform());
+    let spec = rt
+        .manifest
+        .get("tfm_train_step")
+        .ok_or_else(|| anyhow::anyhow!("tfm_train_step missing — run `make artifacts`"))?
+        .clone();
+    let n_q = spec.inputs[spec.input_index("qparams").unwrap()].dims[0];
+    let n_layers = (n_q - 1) / 6;
+    let toks = &spec.inputs[spec.input_index("tokens").unwrap()];
+    let (batch, seq) = (toks.dims[0], toks.dims[1]);
+    let vocab = spec.inputs[spec.input_index("p_embed").unwrap()].dims[0];
+    let d_model = spec.inputs[spec.input_index("p_embed").unwrap()].dims[1];
+    let n_params: usize = spec
+        .inputs
+        .iter()
+        .filter(|s| s.name.starts_with("p_"))
+        .map(|s| s.elements())
+        .sum();
+    println!(
+        "model: vocab {vocab}, d_model {d_model}, {n_layers} blocks, seq {seq}, batch {batch} — {n_params} parameters, {n_q} quantized tensors"
+    );
+
+    let compile_t = Timer::start();
+    rt.load("tfm_train_step")?;
+    println!("artifact compiled in {:.2}s", compile_t.secs());
+
+    let mut trainer = ArtifactTrainer::new(&rt, "tfm_train_step", tfm_slot_names(n_layers), mode, 42)?;
+    let mut rng = Pcg32::seeded(7);
+    let mut csv = Csv::new(&log_path, &["step", "loss", "ms", "bits"]);
+    let train_t = Timer::start();
+    let mut last_loss = 0.0;
+    for step in 0..steps {
+        let (tk, tg) = lm_batch(&mut rng, batch, seq, vocab);
+        let t = Timer::start();
+        let res = trainer.step(&mut rt, vec![tokens_value(&tk), tokens_value(&tg)], lr)?;
+        let ms = t.secs() * 1e3;
+        last_loss = res.loss;
+        let bits: String = res.grad_bits.iter().map(|b| b.to_string()).collect::<Vec<_>>().join("/");
+        csv.row(&[step.to_string(), format!("{:.4}", res.loss), format!("{ms:.1}"), bits.clone()]);
+        if step % 10 == 0 || step + 1 == steps {
+            println!("step {step:>4}  loss {:.4}  {:.0} ms  grad bits [{bits}]", res.loss, ms);
+        }
+    }
+    csv.write()?;
+    let total = train_t.secs();
+    println!(
+        "\ndone: {steps} steps in {total:.1}s ({:.1} ms/step, {:.0} tokens/s)",
+        total * 1e3 / steps as f64,
+        (steps as f64 * (batch * seq) as f64) / total
+    );
+    println!("final loss {last_loss:.4}; curve written to {log_path}");
+    Ok(())
+}

@@ -1,0 +1,264 @@
+"""AOT compile path: lower the L2 graphs to HLO *text* artifacts.
+
+HLO text (never ``.serialize()``) is the interchange format: jax ≥ 0.5 emits
+HloModuleProto with 64-bit instruction ids which the xla crate's
+xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Also emits ``artifacts/manifest.txt`` describing each artifact's I/O so the
+Rust runtime can marshal Literals without any Python at run time:
+
+    artifact <name> <file>
+    in <name> <dtype> <d0,d1,...|scalar>
+    out <name> <dtype> <dims|scalar>
+
+Usage:  python -m compile.aot --out-dir ../artifacts [--preset small|e2e]
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+from .kernels import quantize as kq
+from .kernels import stats as ks
+from .kernels import qmatmul as kmm
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _spec(shape, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def _dims(s) -> str:
+    return "scalar" if len(s.shape) == 0 else ",".join(str(d) for d in s.shape)
+
+
+def _dt(s) -> str:
+    return {jnp.float32.dtype: "f32", jnp.int32.dtype: "i32"}[s.dtype]
+
+
+class Emitter:
+    def __init__(self, out_dir: str):
+        self.out_dir = out_dir
+        self.lines: list[str] = []
+        os.makedirs(out_dir, exist_ok=True)
+
+    def emit(self, name, fn, in_named, out_named):
+        """Lower fn(*inputs) -> tuple(outputs); record manifest entries."""
+        specs = [s for _, s in in_named]
+        lowered = jax.jit(fn).lower(*specs)
+        text = to_hlo_text(lowered)
+        fname = f"{name}.hlo.txt"
+        with open(os.path.join(self.out_dir, fname), "w") as f:
+            f.write(text)
+        self.lines.append(f"artifact {name} {fname}")
+        for n, s in in_named:
+            self.lines.append(f"in {n} {_dt(s)} {_dims(s)}")
+        for n, s in out_named:
+            self.lines.append(f"out {n} {_dt(s)} {_dims(s)}")
+        print(f"  {fname}: {len(text)} chars, {len(in_named)} in / {len(out_named)} out")
+
+    def finish(self):
+        with open(os.path.join(self.out_dir, "manifest.txt"), "w") as f:
+            f.write("\n".join(self.lines) + "\n")
+
+
+# --------------------------------------------------------------------------
+# kernel-level artifacts (runtime unit tests + Rust-vs-oracle cross checks)
+# --------------------------------------------------------------------------
+
+
+def emit_kernel_artifacts(em: Emitter):
+    m, n, k = 64, 64, 64
+
+    def fq(x, params):
+        return (kq.fake_quant_pallas(x, params),)
+
+    em.emit(
+        "quant_fake",
+        fq,
+        [("x", _spec((m, n))), ("params", _spec((3,)))],
+        [("xq", _spec((m, n)))],
+    )
+
+    def st(x, params):
+        return (ks.qem_stats_pallas(x, params),)
+
+    em.emit(
+        "qem_stats",
+        st,
+        [("x", _spec((m, n))), ("params", _spec((4,)))],
+        [("stats", _spec((ks.N_STATS,)))],
+    )
+
+    def mm(x, w, params):
+        return (kmm.qmatmul_pallas(x, w, params),)
+
+    em.emit(
+        "qmatmul",
+        mm,
+        [("x", _spec((m, k))), ("w", _spec((k, n))), ("params", _spec((6,)))],
+        [("y", _spec((m, n)))],
+    )
+
+
+# --------------------------------------------------------------------------
+# MLP train/eval artifacts
+# --------------------------------------------------------------------------
+
+
+def emit_mlp(em: Emitter, batch=32, dims=model.MLP_DIMS):
+    n_q = model.mlp_n_q(dims)
+    pshapes = []
+    for i in range(len(dims) - 1):
+        pshapes += [(f"w{i}", (dims[i], dims[i + 1])), (f"b{i}", (dims[i + 1],))]
+
+    def unflatten(flat):
+        return [(flat[2 * i], flat[2 * i + 1]) for i in range(len(dims) - 1)]
+
+    def step(*args):
+        flat = args[: 2 * n_q]
+        x, labels, qparams, lr = args[2 * n_q :]
+        gtaps = jnp.zeros((n_q, 3, model.N_STATS), jnp.float32)
+        new_params, loss, wst, xst, gst = model.mlp_train_step(
+            unflatten(flat), x, labels, qparams, gtaps, lr
+        )
+        out = []
+        for w, b in new_params:
+            out += [w, b]
+        return tuple(out) + (loss, wst, xst, gst)
+
+    ins = [(n, _spec(s)) for n, s in pshapes] + [
+        ("x", _spec((batch, dims[0]))),
+        ("labels", _spec((batch,), jnp.int32)),
+        ("qparams", _spec((n_q, model.QP_LEN))),
+        ("lr", _spec(())),
+    ]
+    outs = (
+        [(f"new_{n}", _spec(s)) for n, s in pshapes]
+        + [("loss", _spec(()))]
+        + [
+            ("wstats", _spec((n_q, model.N_STATS))),
+            ("xstats", _spec((n_q, model.N_STATS))),
+            ("gstats", _spec((n_q, model.N_STATS))),
+        ]
+    )
+    em.emit("mlp_train_step", step, ins, outs)
+
+    def ev(*args):
+        flat = args[: 2 * n_q]
+        x, labels, qparams = args[2 * n_q :]
+        gtaps = jnp.zeros((n_q, 3, model.N_STATS), jnp.float32)
+        acc, loss = model.mlp_eval(unflatten(flat), x, labels, qparams, gtaps)
+        return (acc, loss)
+
+    em.emit(
+        "mlp_eval",
+        ev,
+        [(n, _spec(s)) for n, s in pshapes]
+        + [
+            ("x", _spec((batch, dims[0]))),
+            ("labels", _spec((batch,), jnp.int32)),
+            ("qparams", _spec((n_q, model.QP_LEN))),
+        ],
+        [("acc", _spec(())), ("loss", _spec(()))],
+    )
+
+
+# --------------------------------------------------------------------------
+# Transformer-LM train artifact (E2E driver)
+# --------------------------------------------------------------------------
+
+
+def emit_tfm(em: Emitter, cfg, batch):
+    n_q = model.tfm_n_q(cfg)
+    key = jax.random.PRNGKey(0)
+    p0 = model.tfm_init(key, cfg)
+    names = sorted(p0.keys())  # deterministic order shared with Rust
+    shapes = {k: p0[k].shape for k in names}
+
+    def pack(flat):
+        return {k: v for k, v in zip(names, flat)}
+
+    n = len(names)
+
+    def step(*args):
+        p = pack(args[0:n])
+        m = pack(args[n : 2 * n])
+        v = pack(args[2 * n : 3 * n])
+        tokens, targets, qparams, lr, stepno = args[3 * n :]
+        gtaps = jnp.zeros((n_q, 3, model.N_STATS), jnp.float32)
+        p2, m2, v2, loss, wst, xst, gst = model.tfm_train_step(
+            p, m, v, tokens, targets, cfg, qparams, gtaps, lr, stepno
+        )
+        out = [p2[k] for k in names] + [m2[k] for k in names] + [v2[k] for k in names]
+        return tuple(out) + (loss, wst, xst, gst)
+
+    b, s = batch, cfg["seq"]
+    ins = (
+        [(f"p_{k}", _spec(shapes[k])) for k in names]
+        + [(f"m_{k}", _spec(shapes[k])) for k in names]
+        + [(f"v_{k}", _spec(shapes[k])) for k in names]
+        + [
+            ("tokens", _spec((b, s), jnp.int32)),
+            ("targets", _spec((b, s), jnp.int32)),
+            ("qparams", _spec((n_q, model.QP_LEN))),
+            ("lr", _spec(())),
+            ("step", _spec(())),
+        ]
+    )
+    outs = (
+        [(f"new_p_{k}", _spec(shapes[k])) for k in names]
+        + [(f"new_m_{k}", _spec(shapes[k])) for k in names]
+        + [(f"new_v_{k}", _spec(shapes[k])) for k in names]
+        + [
+            ("loss", _spec(())),
+            ("wstats", _spec((n_q, model.N_STATS))),
+            ("xstats", _spec((n_q, model.N_STATS))),
+            ("gstats", _spec((n_q, model.N_STATS))),
+        ]
+    )
+    em.emit("tfm_train_step", step, ins, outs)
+
+
+PRESETS = {
+    # Small enough to AOT-compile + run fast under interpret-mode Pallas on
+    # one CPU core; the E2E driver scales via --preset.
+    "small": dict(cfg=model.tfm_config(vocab=64, seq=32, d_model=64, n_heads=4, n_layers=2), batch=8),
+    "e2e": dict(cfg=model.tfm_config(vocab=256, seq=64, d_model=128, n_heads=4, n_layers=2), batch=8),
+}
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--preset", default="small", choices=sorted(PRESETS))
+    args = ap.parse_args()
+
+    em = Emitter(args.out_dir)
+    print("emitting kernel artifacts…")
+    emit_kernel_artifacts(em)
+    print("emitting mlp artifacts…")
+    emit_mlp(em)
+    print(f"emitting transformer artifact (preset={args.preset})…")
+    preset = PRESETS[args.preset]
+    emit_tfm(em, preset["cfg"], preset["batch"])
+    em.finish()
+    print(f"manifest: {os.path.join(args.out_dir, 'manifest.txt')}")
+
+
+if __name__ == "__main__":
+    main()

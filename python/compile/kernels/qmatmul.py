@@ -1,0 +1,115 @@
+"""L1 Pallas kernel: fused quantize → integer matmul → rescale.
+
+The paper's hot-spot is the fixed-point GEMM ``r1*r2*(I1 @ I2)`` (Eq. 12).
+On AVX2 the authors tile over registers; the TPU re-think (DESIGN.md
+§Hardware-Adaptation) tiles over the MXU:
+
+  grid = (M/bm, N/bn, K/bk); per step the (bm×bk) X-tile and (bk×bn) W-tile
+  are staged in VMEM, quantized to integer codes by the VPU, pushed through a
+  ``dot_general`` (on TPU: one MXU systolic pass, int8×int8→int32), and the
+  i32 partial products accumulate into the (bm×bn) output tile which stays
+  VMEM-resident across the K loop; the final K step applies the scalar
+  rescale ``r1*r2``.
+
+Codes are carried in f32 here (exact for |code| < 2^24, i.e. up to int24)
+so the kernel is bit-exact to the integer pipeline while staying executable
+under ``interpret=True`` on CPU.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# MXU-native tile: 128×128 output, K panels of 128.
+BM, BN, BK = 128, 128, 128
+
+
+def _make_qmatmul_kernel(kdim: int, bk: int):
+    """Kernel closure over the true contraction length: Pallas NaN-pads
+    partial K tiles, so out-of-range codes are masked to 0 (a 0 code adds
+    nothing to the i32 accumulator — the same trick an int8 MXU pass uses)."""
+
+    def _qmatmul_kernel(params_ref, x_ref, w_ref, o_ref):
+        rx = params_ref[0, 0]
+        qminx = params_ref[0, 1]
+        qmaxx = params_ref[0, 2]
+        rw = params_ref[0, 3]
+        qminw = params_ref[0, 4]
+        qmaxw = params_ref[0, 5]
+
+        k = pl.program_id(2)
+        nk = pl.num_programs(2)
+
+        x = x_ref[...]
+        w = w_ref[...]
+        kx = jax.lax.broadcasted_iota(jnp.int32, x.shape, 1) + k * bk
+        kw = jax.lax.broadcasted_iota(jnp.int32, w.shape, 0) + k * bk
+        ix = jnp.where(kx < kdim, jnp.clip(jnp.round(x / rx), qminx, qmaxx), 0.0)
+        iw = jnp.where(kw < kdim, jnp.clip(jnp.round(w / rw), qminw, qmaxw), 0.0)
+        # On TPU: int8 codes through the MXU with preferred_element_type=int32.
+        part = jnp.dot(ix, iw, preferred_element_type=jnp.float32)
+
+        @pl.when(k == 0)
+        def _init():
+            o_ref[...] = jnp.zeros_like(o_ref)
+
+        o_ref[...] += part
+
+        @pl.when(k == nk - 1)
+        def _rescale():
+            o_ref[...] *= rx * rw
+
+    return _qmatmul_kernel
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "bk"))
+def qmatmul_pallas(x, w, params, *, bm: int = BM, bn: int = BN, bk: int = BK):
+    """Quantized matmul ``x_hat @ w_hat`` via the fused Pallas kernel.
+
+    Args:
+      x: f32[m, k]; w: f32[k, n].
+      params: f32[6] — ``(rx, qminx, qmaxx, rw, qminw, qmaxw)``.
+    Returns:
+      f32[m, n] — bit-exact to ``ref.qmatmul``.
+    """
+    m, k = x.shape
+    k2, n = w.shape
+    assert k == k2, (x.shape, w.shape)
+    bm_, bn_, bk_ = min(bm, m), min(bn, n), min(bk, k)
+    grid = (pl.cdiv(m, bm_), pl.cdiv(n, bn_), pl.cdiv(k, bk_))
+    return pl.pallas_call(
+        _make_qmatmul_kernel(k, bk_),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 6), lambda i, j, kk: (0, 0)),
+            pl.BlockSpec((bm_, bk_), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk_, bn_), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm_, bn_), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=True,
+    )(params.reshape(1, 6), x, w)
+
+
+def qmatmul(x, w, rx, qminx, qmaxx, rw, qminw, qmaxw):
+    """Signature-compatible twin of ``ref.qmatmul``."""
+    params = jnp.stack(
+        [jnp.asarray(v, jnp.float32) for v in (rx, qminx, qmaxx, rw, qminw, qmaxw)]
+    )
+    return qmatmul_pallas(x, w, params)
+
+
+def vmem_bytes(bm: int = BM, bn: int = BN, bk: int = BK) -> int:
+    """Estimated VMEM working set of one grid step (f32 staging + i32 acc).
+
+    Used by the §Perf analysis in EXPERIMENTS.md: x-tile + w-tile + their
+    code copies + output accumulator, double-buffered inputs.
+    """
+    tile_in = (bm * bk + bk * bn) * 4  # staged f32 tiles
+    codes = (bm * bk + bk * bn) * 1  # int8 codes on real TPU
+    acc = bm * bn * 4  # i32 accumulator
+    return 2 * tile_in + codes + acc  # ×2: double buffering of inputs

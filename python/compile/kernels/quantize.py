@@ -1,0 +1,72 @@
+"""L1 Pallas kernel: fake-quantization ``x_hat = r * clamp(round(x / r))``.
+
+TPU design (see DESIGN.md §Hardware-Adaptation): the input is streamed
+HBM→VMEM in ``(BLOCK_ROWS, cols)`` tiles; the quantization parameters
+``(r, qmin, qmax)`` are a single (1,3) scalar block broadcast to every grid
+step (on real TPU they would live in SMEM via scalar prefetch). The kernel is
+purely element-wise, so the VPU (8×128 lanes) processes a full tile per pass.
+
+Must run with ``interpret=True`` on this CPU-only box — real TPU lowering
+emits a Mosaic custom-call the CPU PJRT plugin cannot execute.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Rows per VMEM tile. 256 rows × ≤2048 cols × 4 B ≈ 2 MiB — comfortably
+# inside the ~16 MiB VMEM budget with double buffering.
+BLOCK_ROWS = 256
+
+
+def _fake_quant_kernel(params_ref, x_ref, o_ref):
+    r = params_ref[0, 0]
+    qmin = params_ref[0, 1]
+    qmax = params_ref[0, 2]
+    x = x_ref[...]
+    o_ref[...] = jnp.clip(jnp.round(x / r), qmin, qmax) * r
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows",))
+def fake_quant_pallas(x, params, *, block_rows: int = BLOCK_ROWS):
+    """Fake-quantize a 2-D array with a Pallas kernel.
+
+    Args:
+      x: f32[m, n] input.
+      params: f32[3] — ``(r, qmin, qmax)`` with qmin/qmax the *code* bounds.
+      block_rows: VMEM tile height.
+    Returns:
+      f32[m, n] dequantized fixed-point values.
+    """
+    m, n = x.shape
+    bm = min(block_rows, m)
+    grid = (pl.cdiv(m, bm),)
+    return pl.pallas_call(
+        _fake_quant_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 3), lambda i: (0, 0)),  # broadcast scalar tile
+            pl.BlockSpec((bm, n), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((bm, n), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((m, n), x.dtype),
+        interpret=True,
+    )(params.reshape(1, 3), x)
+
+
+def fake_quant(x, r, qmin, qmax):
+    """Convenience wrapper matching ``ref.fake_quant``'s signature.
+
+    Handles any rank by flattening to 2-D for the kernel.
+    """
+    shape = x.shape
+    x2 = x.reshape((-1, shape[-1])) if x.ndim >= 2 else x.reshape((1, -1))
+    params = jnp.stack(
+        [jnp.asarray(r, jnp.float32), jnp.asarray(qmin, jnp.float32), jnp.asarray(qmax, jnp.float32)]
+    )
+    out = fake_quant_pallas(x2, params)
+    return out.reshape(shape)

@@ -1,0 +1,98 @@
+"""Pure-jnp reference oracle for the APT kernels.
+
+Everything in this file is the *specification*: the Pallas kernels
+(`quantize.py`, `stats.py`, `qmatmul.py`) and the Rust `fixedpoint` module are
+tested against these functions.
+
+Quantization scheme (paper Appendix B, "scheme 1"):
+    a fixed-point number is ``(sign, (n-1)-bit integer, global resolution r)``
+    with ``r = 2**s``, ``s = ceil(log2(Z / (2**(n-1) - 1)))`` for max-abs ``Z``;
+    code ``I = round(F / r)`` clamped to ``[-2**(n-1), 2**(n-1) - 1]``;
+    dequantized value ``F_hat = r * I``.
+
+QEM (paper Eq. 2):
+    ``Diff = log2(|sum|x| - sum|x_hat|| / sum|x| + 1)``.
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax.numpy as jnp
+import numpy as np
+
+
+def resolution_exponent(max_abs: float, n_bits: int) -> int:
+    """``s = ceil(log2(Z / (2^(n-1) - 1)))`` — the paper's quantization scale.
+
+    For ``max_abs == 0`` the data is all-zero; any resolution represents it
+    exactly, we pick ``s = -(n-1)`` so the range is ~[-1, 1).
+    """
+    q_top = float((1 << (n_bits - 1)) - 1)
+    if max_abs <= 0.0 or not math.isfinite(max_abs):
+        return -(n_bits - 1)
+    return int(math.ceil(math.log2(max_abs / q_top)))
+
+
+def scheme_params(max_abs: float, n_bits: int) -> tuple[float, float, float]:
+    """Return ``(r, qmin, qmax)`` for bit-width ``n_bits`` covering ``max_abs``.
+
+    ``qmin/qmax`` are the *code* bounds (integers as f32), so the represented
+    range is ``[r*qmin, r*qmax]`` (paper Table 4 column 3).
+    """
+    s = resolution_exponent(max_abs, n_bits)
+    r = 2.0**s
+    qmin = -float(1 << (n_bits - 1))
+    qmax = float((1 << (n_bits - 1)) - 1)
+    return r, qmin, qmax
+
+
+def quantize_codes(x, r, qmin, qmax):
+    """Integer codes ``I = clamp(round(x / r))`` (as f32 values, exact ints)."""
+    return jnp.clip(jnp.round(x / r), qmin, qmax)
+
+
+def fake_quant(x, r, qmin, qmax):
+    """Dequantized fixed-point value ``x_hat = r * I`` — the oracle."""
+    return quantize_codes(x, r, qmin, qmax) * r
+
+
+def qem_stats(x, r, qmin, qmax):
+    """QEM statistics ``(sum|x|, sum|x_hat|, max|x|)`` for one tensor."""
+    xq = fake_quant(x, r, qmin, qmax)
+    return (
+        jnp.sum(jnp.abs(x)),
+        jnp.sum(jnp.abs(xq)),
+        jnp.max(jnp.abs(x)),
+    )
+
+
+def qem_diff(sum_abs: float, sum_abs_q: float) -> float:
+    """Paper Eq. 2. ``Diff = log2(|m_x - m_xhat| / m_x + 1)`` (host-side)."""
+    if sum_abs <= 0.0:
+        return 0.0
+    return math.log2(abs(sum_abs - sum_abs_q) / sum_abs + 1.0)
+
+
+def qmatmul(x, w, rx, qminx, qmaxx, rw, qminw, qmaxw):
+    """Quantized matmul: ``(rx*rw) * (Ix @ Iw)`` (paper Eq. 12).
+
+    Computing on codes then rescaling is bit-exact to ``x_hat @ w_hat``
+    because every code is an exact small integer in f32.
+    """
+    ix = quantize_codes(x, rx, qminx, qmaxx)
+    iw = quantize_codes(w, rw, qminw, qmaxw)
+    return (ix @ iw) * (rx * rw)
+
+
+# --- host-side numpy twins (used by tests to cross-check jnp) -------------
+
+
+def np_fake_quant(x: np.ndarray, r: float, qmin: float, qmax: float) -> np.ndarray:
+    return np.clip(np.round(x / r), qmin, qmax) * r
+
+
+def np_qem_diff(x: np.ndarray, r: float, qmin: float, qmax: float) -> float:
+    s = float(np.sum(np.abs(x)))
+    sq = float(np.sum(np.abs(np_fake_quant(x, r, qmin, qmax))))
+    return qem_diff(s, sq)

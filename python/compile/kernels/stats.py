@@ -1,0 +1,132 @@
+"""L1 Pallas kernel: QEM statistics with multi-candidate bit-widths.
+
+The coordinator (Rust QEM/QPA) needs, per quantized tensor:
+
+    sum|x|, max|x|, and sum|x_hat| under the *applied* scheme plus under the
+    candidate bit-widths {8, 16, 24} — so that a single device round-trip
+    lets QPA run the paper's "increase n by 8 until Diff < T" loop without
+    touching the raw data again (DESIGN.md §6.1).
+
+Output layout (f32[6]):
+    [0] sum|x|
+    [1] max|x|
+    [2] sum|x_hat| under applied (r, qmin, qmax)
+    [3] sum|x_hat| under candidate int8   (range from in-tensor max)
+    [4] sum|x_hat| under candidate int16
+    [5] sum|x_hat| under candidate int24
+
+TPU design: two-pass reduction. Pass 1 (this kernel, gridded) reduces each
+row-tile into a partial-stats row; pass 2 (tiny, single block) folds partials.
+Candidate resolutions depend on the global max, so candidate sums are computed
+in pass 2 from the *quantization-invariant* trick: they need the raw data.
+Instead we compute candidate sums in pass 1 using the applied range scaled to
+each candidate width — exact when the applied range tracks the true max
+(which QPA guarantees within its update interval); the pure-jnp oracle in
+`ref.py` + pytest pin this contract.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BLOCK_ROWS = 256
+
+N_STATS = 6
+CANDIDATE_BITS = (8, 16, 24)
+
+
+def _make_stats_kernel(m: int, bm: int):
+    """Kernel closure over the true row count (partial tiles are NaN-padded
+    by Pallas; reductions must mask them out)."""
+
+    def _stats_kernel(params_ref, x_ref, o_ref):
+        r = params_ref[0, 0]
+        qmin = params_ref[0, 1]
+        qmax = params_ref[0, 2]
+        rng = params_ref[0, 3]  # range estimate used for candidate schemes
+
+        i = pl.program_id(0)
+        x = x_ref[...]
+        rows = jax.lax.broadcasted_iota(jnp.int32, x.shape, 0)
+        valid = rows + i * bm < m
+        x = jnp.where(valid, x, 0.0)
+        ax = jnp.abs(x)
+
+        @pl.when(i == 0)
+        def _init():
+            o_ref[...] = jnp.zeros_like(o_ref)
+
+        def cand_sum(bits):
+            q_top = float((1 << (bits - 1)) - 1)
+            # r_c = 2^ceil(log2(range / q_top)); guard range<=0 with r_c=1.
+            rc = jnp.where(rng > 0.0, jnp.exp2(jnp.ceil(jnp.log2(rng / q_top))), 1.0)
+            lo = -float(1 << (bits - 1))
+            hi = q_top
+            return jnp.sum(jnp.abs(jnp.clip(jnp.round(x / rc), lo, hi) * rc))
+
+        sum_abs = jnp.sum(ax)
+        max_abs = jnp.max(ax)
+        sum_q = jnp.sum(jnp.abs(jnp.clip(jnp.round(x / r), qmin, qmax) * r))
+        c8, c16, c24 = (cand_sum(b) for b in CANDIDATE_BITS)
+
+        prev = o_ref[0, :]
+        acc = jnp.stack(
+            [
+                prev[0] + sum_abs,
+                jnp.maximum(prev[1], max_abs),
+                prev[2] + sum_q,
+                prev[3] + c8,
+                prev[4] + c16,
+                prev[5] + c24,
+            ]
+        )
+        o_ref[0, :] = acc
+
+    return _stats_kernel
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows",))
+def qem_stats_pallas(x, params, *, block_rows: int = BLOCK_ROWS):
+    """Compute the 6 QEM statistics of a 2-D array.
+
+    Args:
+      x: f32[m, n].
+      params: f32[4] — ``(r, qmin, qmax, range_estimate)``.
+    Returns:
+      f32[6] as documented in the module docstring.
+    """
+    m, n = x.shape
+    bm = min(block_rows, m)
+    grid = (pl.cdiv(m, bm),)
+    out = pl.pallas_call(
+        _make_stats_kernel(m, bm),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 4), lambda i: (0, 0)),
+            pl.BlockSpec((bm, n), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, N_STATS), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((1, N_STATS), jnp.float32),
+        interpret=True,
+    )(params.reshape(1, 4), x)
+    return out[0]
+
+
+def qem_stats(x, r, qmin, qmax, range_estimate=None):
+    """Rank-agnostic wrapper; defaults the candidate range to max|x|."""
+    x2 = x.reshape((-1, x.shape[-1])) if x.ndim >= 2 else x.reshape((1, -1))
+    if range_estimate is None:
+        range_estimate = jnp.max(jnp.abs(x))
+    params = jnp.stack(
+        [
+            jnp.asarray(r, jnp.float32),
+            jnp.asarray(qmin, jnp.float32),
+            jnp.asarray(qmax, jnp.float32),
+            jnp.asarray(range_estimate, jnp.float32),
+        ]
+    )
+    return qem_stats_pallas(x2, params)

@@ -1,0 +1,343 @@
+"""L2: JAX compute graphs implementing Algorithm 1 of the paper.
+
+Every dense matmul goes through :func:`qlinear`, a ``jax.custom_vjp`` that is
+the paper's Figure 3 for one layer:
+
+    FPROP :   y    = X_hat @ W_hat                  (quantized operands)
+    BPROP :   dX   = dY_hat @ W_hat^T
+    WTGRAD:   dW   = X_hat^T @ dY_hat
+
+with each of X, W, dY quantized by its *own* runtime ``(r, qmin, qmax)``
+triple — so the Rust QPA can change bit-widths without recompiling.
+
+QEM statistics (sum|x|, max|x|, sum|x_hat| under the applied scheme and under
+candidate int8/16/24) are returned for all three tensors of every layer:
+W / X stats come out of the forward pass as auxiliary outputs, and dY stats
+ride out of the backward pass as the cotangent of a dummy ``gtap`` argument
+(the custom_vjp is free to define that cotangent; jax.grad w.r.t. ``gtap``
+then delivers it to the host) — one device round-trip per training step.
+
+The element-wise quantization + stats math is the L1 Pallas kernels
+(``kernels.quantize``, ``kernels.stats``); set ``APT_PALLAS=0`` to swap in the
+pure-jnp oracle (bit-identical by pytest) when iterating on HLO size.
+"""
+
+from __future__ import annotations
+
+import functools
+import os
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import ref
+from .kernels import quantize as kq
+from .kernels import stats as ks
+
+USE_PALLAS = os.environ.get("APT_PALLAS", "1") != "0"
+
+N_STATS = 6  # see kernels.stats
+QP_LEN = 9  # (rx,qminx,qmaxx, rw,qminw,qmaxw, rg,qming,qmaxg)
+
+
+def _fake_quant(x, r, qmin, qmax):
+    if USE_PALLAS and x.ndim >= 2:
+        return kq.fake_quant(x, r, qmin, qmax)
+    return ref.fake_quant(x, r, qmin, qmax)
+
+
+def _stats(x, r, qmin, qmax):
+    """f32[6] QEM stats; candidate range = in-tensor max (see stats.py)."""
+    rng = jnp.max(jnp.abs(x))
+    if USE_PALLAS and x.ndim >= 2:
+        return ks.qem_stats(x, r, qmin, qmax, rng)
+    xq = ref.fake_quant(x, r, qmin, qmax)
+
+    def cand(bits):
+        q_top = float((1 << (bits - 1)) - 1)
+        rc = jnp.where(rng > 0.0, jnp.exp2(jnp.ceil(jnp.log2(rng / q_top))), 1.0)
+        return jnp.sum(jnp.abs(jnp.clip(jnp.round(x / rc), -q_top - 1.0, q_top) * rc))
+
+    return jnp.stack(
+        [
+            jnp.sum(jnp.abs(x)),
+            rng,
+            jnp.sum(jnp.abs(xq)),
+            cand(8),
+            cand(16),
+            cand(24),
+        ]
+    )
+
+
+# --------------------------------------------------------------------------
+# qlinear: the quantized matmul primitive (Algorithm 1, one layer)
+# --------------------------------------------------------------------------
+
+
+@jax.custom_vjp
+def qlinear(x, w, qp, gtap):
+    """Quantized ``x @ w``.
+
+    Args:
+      x: f32[m, k] activations.
+      w: f32[k, n] weights.
+      qp: f32[9] quant params ``(rx,qminx,qmaxx, rw,qminw,qmaxw, rg,qming,qmaxg)``.
+      gtap: f32[3, 6] dummy whose cotangent carries the (W, X, dY) QEM stats.
+
+    All QEM statistics are produced inside the *backward* rule: the
+    custom_vjp body is opaque to JAX's JVP tracing, which keeps the Pallas
+    stats kernel out of differentiation (interpret-mode pallas_call cannot
+    be traced under JVP) and costs one extra elementwise pass instead of a
+    second forward.
+    """
+    del gtap
+    xh = _fake_quant(x, qp[0], qp[1], qp[2])
+    wh = _fake_quant(w, qp[3], qp[4], qp[5])
+    return xh @ wh
+
+
+def _qlinear_fwd(x, w, qp, gtap):
+    del gtap
+    xh = _fake_quant(x, qp[0], qp[1], qp[2])
+    wh = _fake_quant(w, qp[3], qp[4], qp[5])
+    return xh @ wh, (x, w, qp)
+
+
+def _qlinear_bwd(res, g):
+    x, w, qp = res
+    xh = _fake_quant(x, qp[0], qp[1], qp[2])
+    wh = _fake_quant(w, qp[3], qp[4], qp[5])
+    gh = _fake_quant(g, qp[6], qp[7], qp[8])
+    dx = gh @ wh.T  # BPROP on quantized operands
+    dw = xh.T @ gh  # WTGRAD on quantized operands
+    stats = jnp.stack(
+        [
+            _stats(w, qp[3], qp[4], qp[5]),
+            _stats(x, qp[0], qp[1], qp[2]),
+            _stats(g, qp[6], qp[7], qp[8]),
+        ]
+    )
+    return dx, dw, jnp.zeros_like(qp), stats
+
+
+qlinear.defvjp(_qlinear_fwd, _qlinear_bwd)
+
+
+def qlinear_nd(x, w, qp, gtap):
+    """qlinear for inputs of rank ≥ 2 (flattens leading dims)."""
+    lead = x.shape[:-1]
+    y = qlinear(x.reshape((-1, x.shape[-1])), w, qp, gtap)
+    return y.reshape(lead + (w.shape[-1],))
+
+
+def fwd_stats(x, w, qp):
+    """(wstats, xstats) for one qlinear — forward-side QEM inputs."""
+    x2 = x.reshape((-1, x.shape[-1]))
+    return _stats(w, qp[3], qp[4], qp[5]), _stats(x2, qp[0], qp[1], qp[2])
+
+
+# --------------------------------------------------------------------------
+# MLP classifier (the Rust integration-test model + quickstart artifact)
+# --------------------------------------------------------------------------
+
+MLP_DIMS = (64, 128, 64, 10)  # in, hidden…, classes
+
+
+def mlp_init(key, dims=MLP_DIMS):
+    """He-initialized (w, b) pairs, matching the paper's init assumption."""
+    params = []
+    for i in range(len(dims) - 1):
+        key, k1 = jax.random.split(key)
+        w = jax.random.normal(k1, (dims[i], dims[i + 1]), jnp.float32)
+        w = w * jnp.sqrt(2.0 / dims[i])
+        params.append((w, jnp.zeros((dims[i + 1],), jnp.float32)))
+    return params
+
+
+def mlp_n_q(dims=MLP_DIMS) -> int:
+    return len(dims) - 1
+
+
+def _softmax_xent(logits, labels):
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[:, None], axis=-1)[:, 0]
+    return jnp.mean(logz - gold)
+
+
+def mlp_loss(params, x, labels, qparams, gtaps):
+    """Quantized forward pass + xent."""
+    h = x
+    n = len(params)
+    for i, (w, b) in enumerate(params):
+        h = qlinear(h, w, qparams[i], gtaps[i]) + b
+        if i < n - 1:
+            h = jax.nn.relu(h)
+    return _softmax_xent(h, labels)
+
+
+def mlp_train_step(params, x, labels, qparams, gtaps, lr):
+    """One SGD step. Returns (new_params, loss, wstats, xstats, gstats),
+    the stats stacks each f32[n_q, 6] (see kernels.stats for the layout)."""
+    loss, (gparams, ggtaps) = jax.value_and_grad(mlp_loss, argnums=(0, 4))(
+        params, x, labels, qparams, gtaps
+    )
+    new_params = jax.tree_util.tree_map(lambda p, g: p - lr * g, params, gparams)
+    wstats, xstats, gstats = ggtaps[:, 0], ggtaps[:, 1], ggtaps[:, 2]
+    return new_params, loss, wstats, xstats, gstats
+
+
+def mlp_eval(params, x, labels, qparams, gtaps):
+    """Quantized-forward accuracy + mean loss (deployment-int8 check)."""
+    h = x
+    for i, (w, b) in enumerate(params):
+        h = qlinear(h, w, qparams[i], gtaps[i]) + b
+        if i < len(params) - 1:
+            h = jax.nn.relu(h)
+    acc = jnp.mean((jnp.argmax(h, axis=-1) == labels).astype(jnp.float32))
+    return acc, _softmax_xent(h, labels)
+
+
+# --------------------------------------------------------------------------
+# Transformer LM (the E2E driver's model)
+# --------------------------------------------------------------------------
+
+
+def tfm_config(vocab=256, seq=64, d_model=128, n_heads=4, n_layers=2, d_ff=None):
+    return dict(
+        vocab=vocab,
+        seq=seq,
+        d_model=d_model,
+        n_heads=n_heads,
+        n_layers=n_layers,
+        d_ff=d_ff or 4 * d_model,
+    )
+
+
+# Quantized matmuls per block: wq, wk, wv, wo, w1, w2  (attention
+# score/value matmuls and layernorms stay f32 — see DESIGN.md §6).
+TFM_Q_PER_BLOCK = 6
+
+
+def tfm_n_q(cfg) -> int:
+    return cfg["n_layers"] * TFM_Q_PER_BLOCK + 1  # +1 output head
+
+
+def tfm_init(key, cfg):
+    """Parameter pytree: dict of name → array. Deterministic ordering."""
+    d, v, s, ff = cfg["d_model"], cfg["vocab"], cfg["seq"], cfg["d_ff"]
+    p = {}
+
+    def dense(key, shape, scale):
+        return jax.random.normal(key, shape, jnp.float32) * scale
+
+    key, k = jax.random.split(key)
+    p["embed"] = dense(k, (v, d), 0.02)
+    key, k = jax.random.split(key)
+    p["pos"] = dense(k, (s, d), 0.02)
+    for i in range(cfg["n_layers"]):
+        pre = f"b{i}_"
+        for name, shape in (
+            ("wq", (d, d)),
+            ("wk", (d, d)),
+            ("wv", (d, d)),
+            ("wo", (d, d)),
+            ("w1", (d, ff)),
+            ("w2", (ff, d)),
+        ):
+            key, k = jax.random.split(key)
+            p[pre + name] = dense(k, shape, (2.0 / shape[0]) ** 0.5)
+        p[pre + "ln1_g"] = jnp.ones((d,), jnp.float32)
+        p[pre + "ln1_b"] = jnp.zeros((d,), jnp.float32)
+        p[pre + "ln2_g"] = jnp.ones((d,), jnp.float32)
+        p[pre + "ln2_b"] = jnp.zeros((d,), jnp.float32)
+    p["lnf_g"] = jnp.ones((d,), jnp.float32)
+    p["lnf_b"] = jnp.zeros((d,), jnp.float32)
+    key, k = jax.random.split(key)
+    p["head"] = dense(k, (d, v), (1.0 / d) ** 0.5)
+    return p
+
+
+def _layernorm(x, g, b, eps=1e-5):
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    return (x - mu) * jax.lax.rsqrt(var + eps) * g + b
+
+
+def tfm_forward(p, tokens, cfg, qparams, gtaps):
+    """Causal LM forward with quantized projections; returns logits + stats."""
+    d, h = cfg["d_model"], cfg["n_heads"]
+    hd = d // h
+    b, s = tokens.shape
+    x = p["embed"][tokens] + p["pos"][None, :s, :]
+    mask = jnp.tril(jnp.ones((s, s), jnp.float32))
+    neg = jnp.float32(-1e9)
+
+    qi = 0
+
+    def ql(x_, w_):
+        nonlocal qi
+        y = qlinear_nd(x_, w_, qparams[qi], gtaps[qi])
+        qi += 1
+        return y
+
+    for i in range(cfg["n_layers"]):
+        pre = f"b{i}_"
+        xn = _layernorm(x, p[pre + "ln1_g"], p[pre + "ln1_b"])
+        q = ql(xn, p[pre + "wq"]).reshape(b, s, h, hd).transpose(0, 2, 1, 3)
+        k = ql(xn, p[pre + "wk"]).reshape(b, s, h, hd).transpose(0, 2, 1, 3)
+        v = ql(xn, p[pre + "wv"]).reshape(b, s, h, hd).transpose(0, 2, 1, 3)
+        att = jnp.einsum("bhqd,bhkd->bhqk", q, k) / jnp.sqrt(jnp.float32(hd))
+        att = jnp.where(mask[None, None] > 0, att, neg)
+        att = jax.nn.softmax(att, axis=-1)
+        o = jnp.einsum("bhqk,bhkd->bhqd", att, v).transpose(0, 2, 1, 3).reshape(b, s, d)
+        x = x + ql(o, p[pre + "wo"])
+        xn = _layernorm(x, p[pre + "ln2_g"], p[pre + "ln2_b"])
+        x = x + ql(jax.nn.relu(ql(xn, p[pre + "w1"])), p[pre + "w2"])
+
+    x = _layernorm(x, p["lnf_g"], p["lnf_b"])
+    logits = ql(x, p["head"])
+    return logits
+
+
+def tfm_loss(p, tokens, targets, cfg, qparams, gtaps):
+    logits = tfm_forward(p, tokens, cfg, qparams, gtaps)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, targets[..., None], axis=-1)[..., 0]
+    return jnp.mean(logz - gold)
+
+
+def tfm_train_step(p, m, v_, tokens, targets, cfg, qparams, gtaps, lr, step):
+    """One Adam step. Returns (p', m', v', loss, wstats, xstats, gstats)."""
+    loss, (gp, ggtaps) = jax.value_and_grad(tfm_loss, argnums=(0, 5))(
+        p, tokens, targets, cfg, qparams, gtaps
+    )
+    b1, b2, eps = 0.9, 0.999, 1e-8
+    m2 = jax.tree_util.tree_map(lambda a, g: b1 * a + (1 - b1) * g, m, gp)
+    v2 = jax.tree_util.tree_map(lambda a, g: b2 * a + (1 - b2) * g * g, v_, gp)
+    bc1 = 1.0 - b1**step
+    bc2 = 1.0 - b2**step
+    p2 = jax.tree_util.tree_map(
+        lambda w, mm, vv: w - lr * (mm / bc1) / (jnp.sqrt(vv / bc2) + eps), p, m2, v2
+    )
+    wstats, xstats, gstats = ggtaps[:, 0], ggtaps[:, 1], ggtaps[:, 2]
+    return p2, m2, v2, loss, wstats, xstats, gstats
+
+
+# --------------------------------------------------------------------------
+# Default quant params helper (all-int8, paper's starting point)
+# --------------------------------------------------------------------------
+
+
+def default_qparams(n_q: int, bits=(8, 8, 16), assumed_range=8.0):
+    """Initial qparams[n_q, 9]: (x, w, g) at the given bit-widths.
+
+    The Rust controller replaces these with live QPA values each step; these
+    defaults only matter for step 0 and for pytest.
+    """
+    row = []
+    for b in bits:
+        r, qmin, qmax = ref.scheme_params(assumed_range, b)
+        row += [r, qmin, qmax]
+    # reorder: helper computes (x, w, g) already in the qp layout
+    return jnp.tile(jnp.asarray(row, jnp.float32)[None, :], (n_q, 1))

@@ -1,0 +1,222 @@
+"""L1 correctness: Pallas kernels vs the pure-jnp oracle (ref.py).
+
+Hypothesis sweeps shapes, value scales, and bit-widths; every property the
+Rust `fixedpoint` module relies on is pinned here first.
+"""
+
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import qmatmul as kmm
+from compile.kernels import quantize as kq
+from compile.kernels import ref
+from compile.kernels import stats as ks
+
+jax.config.update("jax_platform_name", "cpu")
+
+SETTINGS = settings(max_examples=25, deadline=None)
+
+
+def rand(shape, scale, seed):
+    rng = np.random.default_rng(seed)
+    return (rng.standard_normal(shape) * scale).astype(np.float32)
+
+
+# --------------------------------------------------------------------------
+# scheme_params / resolution_exponent
+# --------------------------------------------------------------------------
+
+
+@given(
+    max_abs=st.floats(1e-6, 1e6),
+    bits=st.sampled_from([8, 12, 16, 24]),
+)
+@SETTINGS
+def test_scheme_covers_range(max_abs, bits):
+    """The paper's scale: r*qmax must reach max_abs, and not overshoot 2x."""
+    r, qmin, qmax = ref.scheme_params(max_abs, bits)
+    assert r * qmax >= max_abs * (1 - 1e-6)
+    # ceil() overshoots by at most one power of two
+    assert r * qmax < 2 * max_abs * (1 + 1e-6) + r
+
+
+def test_scheme_zero_range():
+    r, qmin, qmax = ref.scheme_params(0.0, 8)
+    assert r > 0 and qmin == -128 and qmax == 127
+
+
+@given(bits=st.sampled_from([8, 16, 24]))
+@SETTINGS
+def test_code_bounds(bits):
+    _, qmin, qmax = ref.scheme_params(1.0, bits)
+    assert qmin == -(2 ** (bits - 1))
+    assert qmax == 2 ** (bits - 1) - 1
+
+
+# --------------------------------------------------------------------------
+# fake_quant kernel vs oracle
+# --------------------------------------------------------------------------
+
+
+@given(
+    m=st.sampled_from([1, 3, 64, 200, 300]),
+    n=st.sampled_from([1, 5, 64, 128]),
+    scale=st.sampled_from([1e-4, 1.0, 100.0]),
+    bits=st.sampled_from([8, 16]),
+    seed=st.integers(0, 2**16),
+)
+@SETTINGS
+def test_fake_quant_matches_ref(m, n, scale, bits, seed):
+    x = rand((m, n), scale, seed)
+    r, qmin, qmax = ref.scheme_params(float(np.abs(x).max()), bits)
+    got = kq.fake_quant(jnp.asarray(x), r, qmin, qmax)
+    want = ref.fake_quant(jnp.asarray(x), r, qmin, qmax)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_fake_quant_idempotent():
+    x = rand((64, 64), 3.0, 0)
+    r, qmin, qmax = ref.scheme_params(float(np.abs(x).max()), 8)
+    q1 = np.asarray(kq.fake_quant(jnp.asarray(x), r, qmin, qmax))
+    q2 = np.asarray(kq.fake_quant(jnp.asarray(q1), r, qmin, qmax))
+    np.testing.assert_array_equal(q1, q2)
+
+
+def test_fake_quant_saturates():
+    x = jnp.asarray([[1000.0, -1000.0]], jnp.float32)
+    r, qmin, qmax = 1.0, -128.0, 127.0
+    out = np.asarray(kq.fake_quant(x, r, qmin, qmax))
+    assert out[0, 0] == 127.0 and out[0, 1] == -128.0
+
+
+@given(bits=st.sampled_from([8, 16, 24]), seed=st.integers(0, 2**16))
+@SETTINGS
+def test_quant_error_bounded_by_half_resolution(bits, seed):
+    """|x - x_hat| <= r/2 for in-range data — the fixed-point contract."""
+    x = rand((32, 32), 1.0, seed)
+    r, qmin, qmax = ref.scheme_params(float(np.abs(x).max()), bits)
+    xq = np.asarray(ref.fake_quant(jnp.asarray(x), r, qmin, qmax))
+    assert np.max(np.abs(x - xq)) <= r / 2 + 1e-9
+
+
+# --------------------------------------------------------------------------
+# stats kernel vs oracle
+# --------------------------------------------------------------------------
+
+
+@given(
+    m=st.sampled_from([1, 7, 64, 300]),
+    n=st.sampled_from([1, 33, 64]),
+    scale=st.sampled_from([1e-3, 1.0, 50.0]),
+    seed=st.integers(0, 2**16),
+)
+@SETTINGS
+def test_stats_matches_ref(m, n, scale, seed):
+    x = rand((m, n), scale, seed)
+    xj = jnp.asarray(x)
+    r, qmin, qmax = ref.scheme_params(float(np.abs(x).max()), 8)
+    got = np.asarray(ks.qem_stats(xj, r, qmin, qmax))
+    s, sq, mx = (np.asarray(v) for v in ref.qem_stats(xj, r, qmin, qmax))
+    np.testing.assert_allclose(got[0], s, rtol=1e-5)
+    np.testing.assert_allclose(got[1], mx, rtol=1e-6)
+    np.testing.assert_allclose(got[2], sq, rtol=1e-5)
+    # candidate sums: recompute with the oracle at each width
+    rng = float(np.abs(x).max())
+    for idx, bits in zip((3, 4, 5), ks.CANDIDATE_BITS):
+        rc, lo, hi = ref.scheme_params(rng, bits)
+        want = np.sum(np.abs(ref.np_fake_quant(x, rc, lo, hi)))
+        np.testing.assert_allclose(got[idx], want, rtol=1e-5)
+
+
+def test_stats_diff_decreases_with_bits():
+    """QEM Diff must be monotone non-increasing in bit-width (paper Obs. 3)."""
+    x = rand((256, 64), 1.0, 7)
+    s = float(np.sum(np.abs(x)))
+    diffs = []
+    for bits in (8, 16, 24):
+        r, lo, hi = ref.scheme_params(float(np.abs(x).max()), bits)
+        sq = float(np.sum(np.abs(ref.np_fake_quant(x, r, lo, hi))))
+        diffs.append(ref.qem_diff(s, sq))
+    assert diffs[0] >= diffs[1] >= diffs[2]
+    assert diffs[2] < 1e-3
+
+
+def test_qem_diff_zero_for_exact():
+    assert ref.qem_diff(10.0, 10.0) == 0.0
+    assert ref.qem_diff(0.0, 0.0) == 0.0
+
+
+# --------------------------------------------------------------------------
+# qmatmul kernel vs oracle + integer-exactness property
+# --------------------------------------------------------------------------
+
+
+@given(
+    m=st.sampled_from([1, 16, 64, 130]),
+    k=st.sampled_from([1, 32, 64]),
+    n=st.sampled_from([1, 16, 64, 129]),
+    seed=st.integers(0, 2**16),
+)
+@SETTINGS
+def test_qmatmul_matches_ref(m, k, n, seed):
+    x = rand((m, k), 1.0, seed)
+    w = rand((k, n), 0.2, seed + 1)
+    rx, lxo, hxo = ref.scheme_params(float(np.abs(x).max()), 8)
+    rw, lwo, hwo = ref.scheme_params(float(np.abs(w).max()), 8)
+    got = np.asarray(kmm.qmatmul(jnp.asarray(x), jnp.asarray(w), rx, lxo, hxo, rw, lwo, hwo))
+    want = np.asarray(ref.qmatmul(jnp.asarray(x), jnp.asarray(w), rx, lxo, hxo, rw, lwo, hwo))
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+def test_qmatmul_equals_fakequant_matmul():
+    """r1*r2*(I1@I2) must be bit-equal to x_hat @ w_hat (paper Eq. 12)."""
+    x = rand((64, 64), 2.0, 3)
+    w = rand((64, 64), 0.5, 4)
+    rx, lx, hx = ref.scheme_params(float(np.abs(x).max()), 8)
+    rw, lw, hw = ref.scheme_params(float(np.abs(w).max()), 8)
+    via_codes = np.asarray(ref.qmatmul(jnp.asarray(x), jnp.asarray(w), rx, lx, hx, rw, lw, hw))
+    xh = ref.np_fake_quant(x, rx, lx, hx)
+    wh = ref.np_fake_quant(w, rw, lw, hw)
+    np.testing.assert_allclose(via_codes, xh @ wh, rtol=1e-6, atol=1e-6)
+
+
+def test_qmatmul_high_bits_converges_to_f32():
+    x = rand((32, 32), 1.0, 5)
+    w = rand((32, 32), 1.0, 6)
+    rx, lx, hx = ref.scheme_params(float(np.abs(x).max()), 24)
+    rw, lw, hw = ref.scheme_params(float(np.abs(w).max()), 24)
+    got = np.asarray(ref.qmatmul(jnp.asarray(x), jnp.asarray(w), rx, lx, hx, rw, lw, hw))
+    np.testing.assert_allclose(got, x @ w, rtol=1e-3, atol=1e-4)
+
+
+# --------------------------------------------------------------------------
+# Appendix A property: m_x/m_xhat > 1 and grows with (b-a)^2 * (-k)
+# --------------------------------------------------------------------------
+
+
+def _mean_ratio(sigma, bits):
+    rng = np.random.default_rng(0)
+    x = np.abs(rng.normal(0.0, sigma, 200_000)).astype(np.float32)
+    r, lo, hi = ref.scheme_params(float(x.max()), bits)
+    xq = ref.np_fake_quant(x, r, lo, hi)
+    return float(np.mean(x) / max(np.mean(xq), 1e-30))
+
+
+def test_appendix_a_mean_ratio_above_one():
+    # Coarse quantization of a half-Gaussian over-shrinks the mean (S3 >> S4
+    # in the paper's Fig. 4): ratio > 1 and decreasing with bit-width.
+    r8 = _mean_ratio(1.0, 6)
+    r16 = _mean_ratio(1.0, 12)
+    assert r8 > 1.0
+    assert r8 > r16
+    assert abs(r16 - 1.0) < abs(r8 - 1.0)
+
+
+def test_vmem_budget():
+    """The default qmatmul tiling must fit comfortably in 16 MiB VMEM."""
+    assert kmm.vmem_bytes() <= 4 * 1024 * 1024

@@ -1,0 +1,174 @@
+"""L2 correctness: qlinear implements Algorithm 1; train steps learn.
+
+The key contract is that ``jax.grad`` through :func:`model.qlinear` produces
+exactly the paper's three quantized products (FPROP/BPROP/WTGRAD) and that
+the dY QEM statistics ride out as the gtap cotangent.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model
+from compile.kernels import ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def rand(shape, scale, seed):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray((rng.standard_normal(shape) * scale).astype(np.float32))
+
+
+def qp_row(x, w, g, bits=(8, 8, 16)):
+    vals = []
+    for t, b in zip((x, w, g), bits):
+        vals += list(ref.scheme_params(float(jnp.max(jnp.abs(t))), b))
+    return jnp.asarray(vals, jnp.float32)
+
+
+class TestQLinear:
+    def test_forward_is_quantized_product(self):
+        x, w = rand((16, 8), 1.0, 0), rand((8, 4), 0.5, 1)
+        g = jnp.ones((16, 4), jnp.float32)
+        qp = qp_row(x, w, g)
+        y = model.qlinear(x, w, qp, jnp.zeros((3, 6)))
+        xh = ref.fake_quant(x, qp[0], qp[1], qp[2])
+        wh = ref.fake_quant(w, qp[3], qp[4], qp[5])
+        np.testing.assert_allclose(np.asarray(y), np.asarray(xh @ wh), rtol=1e-6)
+
+    def test_backward_matches_algorithm1(self):
+        """dX = g_hat @ W_hat^T and dW = X_hat^T @ g_hat, exactly."""
+        x, w = rand((16, 8), 1.0, 2), rand((8, 4), 0.5, 3)
+        g = rand((16, 4), 2.0, 4)
+        qp = qp_row(x, w, g)
+
+        def f(x_, w_):
+            return jnp.sum(model.qlinear(x_, w_, qp, jnp.zeros((3, 6))) * g)
+
+        dx, dw = jax.grad(f, argnums=(0, 1))(x, w)
+        xh = ref.fake_quant(x, qp[0], qp[1], qp[2])
+        wh = ref.fake_quant(w, qp[3], qp[4], qp[5])
+        gh = ref.fake_quant(g, qp[6], qp[7], qp[8])
+        np.testing.assert_allclose(np.asarray(dx), np.asarray(gh @ wh.T), rtol=1e-5, atol=1e-6)
+        np.testing.assert_allclose(np.asarray(dw), np.asarray(xh.T @ gh), rtol=1e-5, atol=1e-6)
+
+    def test_gtap_cotangent_carries_gradient_stats(self):
+        x, w = rand((16, 8), 1.0, 5), rand((8, 4), 0.5, 6)
+        g = rand((16, 4), 2.0, 7)
+        qp = qp_row(x, w, g)
+
+        def f(x_, gtap):
+            return jnp.sum(model.qlinear(x_, w, qp, gtap) * g)
+
+        stats = jax.grad(f, argnums=1)(x, jnp.zeros((3, 6)))
+        # row 0: W stats, row 1: X stats, row 2: dY stats
+        for row, t_ in ((0, w), (1, x), (2, g)):
+            pr = qp[3:6] if row == 0 else (qp[0:3] if row == 1 else qp[6:9])
+            s, sq, mx = ref.qem_stats(t_, pr[0], pr[1], pr[2])
+            np.testing.assert_allclose(float(stats[row, 0]), float(s), rtol=1e-5)
+            np.testing.assert_allclose(float(stats[row, 1]), float(mx), rtol=1e-6)
+            np.testing.assert_allclose(float(stats[row, 2]), float(sq), rtol=1e-5)
+
+    def test_high_bitwidth_approaches_float_grads(self):
+        x, w = rand((8, 8), 1.0, 8), rand((8, 8), 0.5, 9)
+        qp = qp_row(x, w, jnp.ones((8, 8)), bits=(24, 24, 24))
+
+        def fq(x_, w_):
+            return jnp.sum(jnp.tanh(model.qlinear(x_, w_, qp, jnp.zeros((3, 6)))))
+
+        def ff(x_, w_):
+            return jnp.sum(jnp.tanh(x_ @ w_))
+
+        dq = jax.grad(fq, argnums=(0, 1))(x, w)
+        df = jax.grad(ff, argnums=(0, 1))(x, w)
+        for a, b in zip(dq, df):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-2, atol=1e-3)
+
+
+class TestMLP:
+    def _data(self, batch=32, seed=0):
+        rng = np.random.default_rng(seed)
+        x = rng.standard_normal((batch, model.MLP_DIMS[0])).astype(np.float32)
+        y = rng.integers(0, model.MLP_DIMS[-1], batch).astype(np.int32)
+        return jnp.asarray(x), jnp.asarray(y)
+
+    def test_train_step_shapes_and_loss_finite(self):
+        params = model.mlp_init(jax.random.PRNGKey(0))
+        n_q = model.mlp_n_q()
+        x, y = self._data()
+        qp = model.default_qparams(n_q)
+        gt = jnp.zeros((n_q, 3, model.N_STATS))
+        p2, loss, wst, xst, gst = model.mlp_train_step(params, x, y, qp, gt, 0.05)
+        assert np.isfinite(float(loss))
+        assert wst.shape == (n_q, model.N_STATS)
+        assert gst.shape == (n_q, model.N_STATS)
+        for (w2, b2), (w1, b1) in zip(p2, params):
+            assert w2.shape == w1.shape and b2.shape == b1.shape
+            assert not np.allclose(np.asarray(w2), np.asarray(w1))  # it moved
+
+    def test_loss_decreases_with_int8_fwd_int16_bwd(self):
+        """The paper's configuration must learn a separable toy problem."""
+        step = jax.jit(model.mlp_train_step)
+        params = model.mlp_init(jax.random.PRNGKey(1))
+        n_q = model.mlp_n_q()
+        gt = jnp.zeros((n_q, 3, model.N_STATS))
+        rng = np.random.default_rng(0)
+        # two gaussian blobs per class over 10 classes
+        centers = rng.standard_normal((10, model.MLP_DIMS[0])).astype(np.float32) * 2
+        losses = []
+        for i in range(30):
+            y = rng.integers(0, 10, 32).astype(np.int32)
+            x = centers[y] + rng.standard_normal((32, model.MLP_DIMS[0])).astype(np.float32) * 0.3
+            # refresh qparams from live ranges like the Rust controller does
+            qp = model.default_qparams(n_q, bits=(8, 8, 16), assumed_range=6.0)
+            params, loss, *_ = step(params, jnp.asarray(x), jnp.asarray(y), qp, gt, 0.05)
+            losses.append(float(loss))
+        assert np.mean(losses[-5:]) < np.mean(losses[:5]) * 0.7, losses
+
+    def test_eval_runs(self):
+        params = model.mlp_init(jax.random.PRNGKey(2))
+        n_q = model.mlp_n_q()
+        x, y = self._data()
+        acc, loss = model.mlp_eval(params, x, y, model.default_qparams(n_q), jnp.zeros((n_q, 3, 6)))
+        assert 0.0 <= float(acc) <= 1.0 and np.isfinite(float(loss))
+
+
+class TestTransformer:
+    CFG = model.tfm_config(vocab=32, seq=16, d_model=32, n_heads=2, n_layers=1)
+
+    def test_forward_shapes(self):
+        cfg = self.CFG
+        p = model.tfm_init(jax.random.PRNGKey(0), cfg)
+        n_q = model.tfm_n_q(cfg)
+        toks = jnp.zeros((2, cfg["seq"]), jnp.int32)
+        qp = model.default_qparams(n_q)
+        logits = model.tfm_forward(p, toks, cfg, qp, jnp.zeros((n_q, 3, 6)))
+        assert logits.shape == (2, cfg["seq"], cfg["vocab"])
+
+    def test_train_step_learns_copy_task(self):
+        cfg = self.CFG
+        p = model.tfm_init(jax.random.PRNGKey(1), cfg)
+        m = jax.tree_util.tree_map(jnp.zeros_like, p)
+        v = jax.tree_util.tree_map(jnp.zeros_like, p)
+        n_q = model.tfm_n_q(cfg)
+        qp = model.default_qparams(n_q, bits=(8, 8, 16), assumed_range=4.0)
+        gt = jnp.zeros((n_q, 3, model.N_STATS))
+        step = jax.jit(lambda p, m, v, t, tg, s: model.tfm_train_step(
+            p, m, v, t, tg, cfg, qp, gt, 3e-3, s))
+        rng = np.random.default_rng(0)
+        losses = []
+        for i in range(25):
+            # predictable sequence: token t+1 = token t + 1 (mod vocab)
+            start = rng.integers(0, cfg["vocab"], (4, 1))
+            seq = (start + np.arange(cfg["seq"] + 1)[None, :]) % cfg["vocab"]
+            toks = jnp.asarray(seq[:, :-1].astype(np.int32))
+            tgts = jnp.asarray(seq[:, 1:].astype(np.int32))
+            p, m, v, loss, *_ = step(p, m, v, toks, tgts, jnp.float32(i + 1))
+            losses.append(float(loss))
+        assert losses[-1] < losses[0] * 0.6, losses
+
+    def test_n_q_counts_every_projection(self):
+        cfg = self.CFG
+        assert model.tfm_n_q(cfg) == cfg["n_layers"] * model.TFM_Q_PER_BLOCK + 1

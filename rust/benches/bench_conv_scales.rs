@@ -1,0 +1,14 @@
+//! cargo bench — Fig 10: computation time for growing conv scales,
+//! fixed-point vs float, plus the QEM/QPA overhead series.
+
+use apt::exp;
+use apt::util::cli::Args;
+
+fn main() {
+    let quick = std::env::var("BENCH_QUICK").is_ok();
+    let args = Args::parse(
+        [format!("--quick={}", if quick { "true" } else { "false" })]
+            .into_iter(),
+    );
+    exp::run("fig10", &args);
+}

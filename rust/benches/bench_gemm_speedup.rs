@@ -1,0 +1,40 @@
+//! cargo bench — Table 3: layer-wise AlexNet GEMM speedups (i8 fwd, i16 bwd
+//! vs f32) on this CPU. `BENCH_QUICK=1` shortens sampling.
+
+use apt::bench::Bencher;
+use apt::exp::speed::measure_layers;
+
+fn main() {
+    let quick = std::env::var("BENCH_QUICK").is_ok();
+    let bencher = if quick { Bencher::quick() } else { Bencher::default() };
+    println!("bench_gemm_speedup (Table 3 substrate)");
+    println!(
+        "{:<8} {:>10} {:>10} {:>10} {:>9} {:>9}",
+        "layer", "f32 ms", "i8 ms", "i16 ms", "fwd x", "bwd x"
+    );
+    let rows = measure_layers(64, &bencher);
+    let (mut f, mut i8t, mut i16t) = (0.0, 0.0, 0.0);
+    for (name, fwd, bwd, sf, s8, s16) in &rows {
+        println!(
+            "{:<8} {:>10.3} {:>10.3} {:>10.3} {:>8.2}x {:>8.2}x",
+            name,
+            sf.median() * 1e3,
+            s8.median() * 1e3,
+            s16.median() * 1e3,
+            fwd,
+            bwd
+        );
+        f += sf.median();
+        i8t += s8.median();
+        i16t += s16.median();
+    }
+    println!(
+        "{:<8} {:>10.3} {:>10.3} {:>10.3} {:>8.2}x {:>8.2}x   (paper overall: fwd 3.98x bwd 2.07x)",
+        "overall",
+        f * 1e3,
+        i8t * 1e3,
+        i16t * 1e3,
+        f / i8t,
+        f / i16t
+    );
+}

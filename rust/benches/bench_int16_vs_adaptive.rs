@@ -1,0 +1,14 @@
+//! cargo bench — Appendix E: the adaptive int8-fwd/int16-bwd mix vs
+//! int16-everywhere (paper: 1.7× fwd, 1.3× overall).
+
+use apt::exp;
+use apt::util::cli::Args;
+
+fn main() {
+    let quick = std::env::var("BENCH_QUICK").is_ok();
+    let args = Args::parse(
+        [format!("--quick={}", if quick { "true" } else { "false" })]
+            .into_iter(),
+    );
+    exp::run("appxE", &args);
+}

@@ -1,0 +1,70 @@
+//! cargo bench — measured analogue of Fig 7: the cost of the quantization
+//! passes (fake-quant, codes, fused stats) relative to the GEMM they feed,
+//! plus the QEM amortization effect of the update interval.
+
+use apt::bench::Bencher;
+use apt::fixedpoint::gemm;
+use apt::fixedpoint::quantize::{codes_i8, fake_quant_stats_inplace, max_abs, stats_only};
+use apt::fixedpoint::Scheme;
+use apt::util::Pcg32;
+
+fn main() {
+    let quick = std::env::var("BENCH_QUICK").is_ok();
+    let bencher = if quick { Bencher::quick() } else { Bencher::default() };
+    let (m, k, n) = (256usize, 256, 256);
+    let mut rng = Pcg32::seeded(0);
+    let mut a = vec![0.0f32; m * k];
+    let mut b = vec![0.0f32; k * n];
+    rng.fill_normal(&mut a, 1.0);
+    rng.fill_normal(&mut b, 1.0);
+    let sch = Scheme::for_range(max_abs(&a), 8);
+
+    let s_gemm = {
+        let (a, b) = (a.clone(), b.clone());
+        let mut c = vec![0.0f32; m * n];
+        bencher.run("gemm_f32", move || {
+            gemm::gemm_f32(m, k, n, &a, &b, &mut c);
+            std::hint::black_box(&c);
+        })
+    };
+    let s_fq = {
+        let a0 = a.clone();
+        bencher.run("fake_quant+stats", move || {
+            let mut x = a0.clone();
+            std::hint::black_box(fake_quant_stats_inplace(&mut x, sch));
+        })
+    };
+    let s_codes = {
+        let a0 = a.clone();
+        let mut out = vec![0i8; a0.len()];
+        bencher.run("codes_i8", move || {
+            codes_i8(&a0, &mut out, sch);
+            std::hint::black_box(&out);
+        })
+    };
+    let s_stats = {
+        let a0 = a.clone();
+        bencher.run("stats_only (QEM probe)", move || {
+            std::hint::black_box(stats_only(&a0, sch));
+        })
+    };
+
+    println!("bench_quant_overhead ({m}x{k}x{n} GEMM vs {}-elem passes)", m * k);
+    for s in [&s_gemm, &s_fq, &s_codes, &s_stats] {
+        println!(
+            "{:<24} {:>10.4} ms  ({:.2}% of GEMM)",
+            s.name,
+            s.median() * 1e3,
+            100.0 * s.median() / s_gemm.median()
+        );
+    }
+    // amortization: QEM runs every Itv iterations (paper: 0.01–2%)
+    for itv in [1u64, 10, 100, 1000] {
+        let amortized = s_stats.median() / itv as f64;
+        println!(
+            "QEM amortized at Itv={itv:<5} {:>10.5} ms ({:.3}% of GEMM)",
+            amortized * 1e3,
+            100.0 * amortized / s_gemm.median()
+        );
+    }
+}

@@ -1,0 +1,122 @@
+//! Hyper-parameters of adaptive precision training (paper §5.3).
+
+/// QPA bit-width restart policy (paper §4.2).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Mode {
+    /// Mode1: restart the search at 8 bits on every update (bit-width can
+    /// shrink during training — Fig 8b shows more layers back at int8).
+    Mode1,
+    /// Mode2: start from the previous bit-width (monotone non-decreasing;
+    /// the paper's default — slightly better accuracy).
+    Mode2,
+}
+
+/// Threshold interpretation for the QEM output (DESIGN.md §6.5): the paper's
+/// §1 describes "ratio of quantization error exceeds 3%" while §4.2 applies
+/// `T_topdiff` to `Diff = log2(ratio+1)`. Both are supported; they differ by
+/// a constant ≈1.44 for small values.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ThresholdOn {
+    /// Compare the pre-log ratio |Σ|x|−Σ|x̂||/Σ|x| against T.
+    Ratio,
+    /// Compare Diff = log2(ratio+1) against T.
+    Diff,
+}
+
+/// Full configuration; `Default` reproduces the paper's settings
+/// (α=0.01, β=0.025, δ=25, γ=2, T=0.03, Mode2, W/X pinned to int8).
+#[derive(Clone, Copy, Debug)]
+pub struct AptConfig {
+    /// EMA factor for the range moving average (Eq. 3).
+    pub alpha: f32,
+    /// Interval numerator (Itv = β / max(I1, I2) − γ).
+    pub beta: f32,
+    /// Diff² weight in I1 = δ·Diff².
+    pub delta: f32,
+    /// Interval offset γ.
+    pub gamma: f32,
+    /// QEM threshold T_topdiff.
+    pub threshold: f64,
+    /// What the threshold compares against.
+    pub threshold_on: ThresholdOn,
+    /// Bit-width restart policy.
+    pub mode: Mode,
+    /// Bit-width growth step n′ (8 in the paper).
+    pub bit_step: u8,
+    /// Initial / minimum bit-width.
+    pub min_bits: u8,
+    /// Hard ceiling on bit-width (32 = f32-equivalent fallback).
+    pub max_bits: u8,
+    /// Iterations of the initialization phase (Itv forced to 1) —
+    /// "one-tenth of the first epoch" in the paper.
+    pub init_phase_iters: u64,
+    /// Upper clamp on the update interval (safety valve; the paper reports
+    /// intervals growing until ~0.1% of iterations trigger updates).
+    pub max_interval: u64,
+    /// If true, weights and activations are pinned to `min_bits` (the
+    /// paper's experimental setting: only gradients adapt).
+    pub pin_forward_bits: bool,
+}
+
+impl Default for AptConfig {
+    fn default() -> Self {
+        AptConfig {
+            alpha: 0.01,
+            beta: 0.025,
+            delta: 25.0,
+            gamma: 2.0,
+            threshold: 0.03,
+            threshold_on: ThresholdOn::Ratio,
+            mode: Mode::Mode2,
+            bit_step: 8,
+            min_bits: 8,
+            max_bits: 32,
+            init_phase_iters: 100,
+            max_interval: 10_000,
+            pin_forward_bits: true,
+        }
+    }
+}
+
+impl AptConfig {
+    /// Unified static bit-width baseline (e.g. the int16 comparator in
+    /// Fig 9): adaptation disabled by an infinite threshold.
+    pub fn static_bits(bits: u8) -> Self {
+        AptConfig {
+            min_bits: bits,
+            max_bits: bits,
+            threshold: f64::INFINITY,
+            ..Default::default()
+        }
+    }
+
+    /// Mode1 variant of the defaults.
+    pub fn mode1() -> Self {
+        AptConfig { mode: Mode::Mode1, ..Default::default() }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_match_paper() {
+        let c = AptConfig::default();
+        assert_eq!(c.alpha, 0.01);
+        assert_eq!(c.beta, 0.025);
+        assert_eq!(c.delta, 25.0);
+        assert_eq!(c.gamma, 2.0);
+        assert_eq!(c.threshold, 0.03);
+        assert_eq!(c.mode, Mode::Mode2);
+        assert_eq!(c.bit_step, 8);
+    }
+
+    #[test]
+    fn static_config_never_adapts() {
+        let c = AptConfig::static_bits(16);
+        assert_eq!(c.min_bits, 16);
+        assert_eq!(c.max_bits, 16);
+        assert!(c.threshold.is_infinite());
+    }
+}

@@ -1,0 +1,317 @@
+//! Per-tensor precision controller — Algorithm 1's control plane for one
+//! quantized tensor (one `update_iter_*` slot in the paper's pseudocode).
+//!
+//! The controller owns the applied [`Scheme`], the range moving average
+//! `R_i` (Eq. 3), and the next update iteration. At update iterations it
+//! runs QEM + QPA and logs the decision to the [`Ledger`]. Between updates
+//! quantization parameters are frozen, so no statistics need computing —
+//! that is the source of the paper's <1% overhead (Fig 7).
+
+use super::config::AptConfig;
+use super::ledger::{Event, Ledger};
+use super::qpa;
+use crate::fixedpoint::quantize;
+use crate::fixedpoint::{Scheme, TensorKind};
+use crate::util::Ema;
+
+/// Controller state for one tensor.
+#[derive(Clone, Debug)]
+pub struct PrecisionController {
+    pub cfg: AptConfig,
+    pub layer: String,
+    pub kind: TensorKind,
+    scheme: Scheme,
+    range_ema: Ema,
+    prev_range: f32,
+    next_update: u64,
+    updates: u64,
+}
+
+impl PrecisionController {
+    pub fn new(cfg: AptConfig, layer: impl Into<String>, kind: TensorKind) -> Self {
+        let mut cfg = cfg;
+        // The paper pins weights/activations to the base width; only
+        // activation gradients adapt (§5.3).
+        if cfg.pin_forward_bits && kind != TensorKind::Gradient {
+            cfg.max_bits = cfg.min_bits;
+        }
+        PrecisionController {
+            scheme: Scheme::for_range(1.0, cfg.min_bits),
+            cfg,
+            layer: layer.into(),
+            kind,
+            range_ema: Ema::new(cfg.alpha),
+            prev_range: 0.0,
+            next_update: 0,
+            updates: 0,
+        }
+    }
+
+    /// Scheme to apply at this iteration.
+    pub fn scheme(&self) -> Scheme {
+        self.scheme
+    }
+
+    pub fn bits(&self) -> u8 {
+        self.scheme.bits
+    }
+
+    pub fn updates(&self) -> u64 {
+        self.updates
+    }
+
+    /// Does Algorithm 1's `if i == update_iter` fire?
+    pub fn needs_update(&self, iter: u64) -> bool {
+        iter >= self.next_update
+    }
+
+    /// Update from in-hand data (the pure-Rust training path). Call only
+    /// when [`needs_update`] is true; returns the applied scheme either way.
+    pub fn maybe_update_from_data(
+        &mut self,
+        iter: u64,
+        data: &[f32],
+        ledger: &mut Ledger,
+    ) -> Scheme {
+        if !self.needs_update(iter) {
+            return self.scheme;
+        }
+        let range_now = quantize::max_abs(data);
+        let cfg = self.cfg;
+        let probe = move |bits: u8| {
+            let sch = Scheme::for_range(range_now.max(1e-30), bits);
+            qpa::error_for_threshold(&cfg, quantize::stats_only(data, sch).ratio())
+        };
+        self.apply_decision(iter, range_now, &probe, ledger)
+    }
+
+    /// Update from device-computed statistics (the PJRT path): `sum_abs`,
+    /// `max_abs` and `sum_abs_q` per candidate width, as produced by
+    /// `kernels/stats.py` (candidates int8/16/24; wider widths are assumed
+    /// exact).
+    pub fn maybe_update_from_stats(
+        &mut self,
+        iter: u64,
+        sum_abs: f64,
+        max_abs: f32,
+        cand_sum_q: &[(u8, f64)],
+        ledger: &mut Ledger,
+    ) -> Scheme {
+        if !self.needs_update(iter) {
+            return self.scheme;
+        }
+        let cfg = self.cfg;
+        let probe = move |bits: u8| {
+            let ratio = cand_sum_q
+                .iter()
+                .find(|(b, _)| *b >= bits)
+                .map(|(_, sq)| {
+                    if sum_abs <= 0.0 {
+                        0.0
+                    } else {
+                        (sum_abs - sq).abs() / sum_abs
+                    }
+                })
+                .unwrap_or(0.0);
+            qpa::error_for_threshold(&cfg, ratio)
+        };
+        self.apply_decision(iter, max_abs, &probe, ledger)
+    }
+
+    fn apply_decision(
+        &mut self,
+        iter: u64,
+        range_now: f32,
+        probe: &qpa::ErrorProbe,
+        ledger: &mut Ledger,
+    ) -> Scheme {
+        let prev_r = if self.range_ema.is_initialized() {
+            self.range_ema.value
+        } else {
+            range_now
+        };
+        let r_i = self.range_ema.update(range_now);
+        let range_delta = r_i - prev_r;
+        self.prev_range = r_i;
+
+        let in_init = iter < self.cfg.init_phase_iters;
+        let decision = qpa::adjust(&self.cfg, self.scheme, r_i.max(range_now), range_delta, in_init, probe);
+        self.scheme = decision.scheme;
+        self.next_update = iter + decision.interval;
+        self.updates += 1;
+        ledger.record_event(
+            &self.layer,
+            self.kind,
+            Event {
+                iter,
+                bits: decision.scheme.bits,
+                interval: decision.interval,
+                error: decision.error,
+            },
+        );
+        self.scheme
+    }
+}
+
+/// Controllers for all three tensors of one linear/conv layer.
+#[derive(Clone, Debug)]
+pub struct LayerControllers {
+    pub w: PrecisionController,
+    pub x: PrecisionController,
+    pub g: PrecisionController,
+}
+
+impl LayerControllers {
+    pub fn new(cfg: AptConfig, layer: &str) -> Self {
+        LayerControllers {
+            w: PrecisionController::new(cfg, layer, TensorKind::Weight),
+            x: PrecisionController::new(cfg, layer, TensorKind::Activation),
+            g: PrecisionController::new(cfg, layer, TensorKind::Gradient),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Pcg32;
+
+    fn gaussian(seed: u64, n: usize, std: f32) -> Vec<f32> {
+        let mut r = Pcg32::seeded(seed);
+        (0..n).map(|_| r.normal() * std).collect()
+    }
+
+    #[test]
+    fn first_iteration_always_updates() {
+        let mut c = PrecisionController::new(AptConfig::default(), "l0", TensorKind::Gradient);
+        assert!(c.needs_update(0));
+        let mut ledger = Ledger::new();
+        let data = gaussian(1, 512, 1.0);
+        c.maybe_update_from_data(0, &data, &mut ledger);
+        assert_eq!(c.updates(), 1);
+        assert!(!c.needs_update(0)); // interval ≥ 1 moved the slot forward
+    }
+
+    #[test]
+    fn gaussian_data_stays_low_width_tail_escalates() {
+        let mut ledger = Ledger::new();
+        let mut cfg = AptConfig::default();
+        cfg.init_phase_iters = 0;
+        // benign data: int8 suffices
+        let mut c = PrecisionController::new(cfg, "conv1", TensorKind::Gradient);
+        let benign = gaussian(2, 8192, 1.0);
+        c.maybe_update_from_data(0, &benign, &mut ledger);
+        assert_eq!(c.bits(), 8, "benign gaussian should stay int8");
+
+        // long-tail data: needs escalation (fc2-like — Observation 3)
+        let mut tail = gaussian(3, 8192, 0.05);
+        for (i, v) in tail.iter_mut().enumerate() {
+            if i % 64 == 0 {
+                *v *= 400.0;
+            }
+        }
+        let mut c2 = PrecisionController::new(cfg, "fc2", TensorKind::Gradient);
+        c2.maybe_update_from_data(0, &tail, &mut ledger);
+        assert!(c2.bits() >= 16, "long-tail gradient must escalate, got {}", c2.bits());
+    }
+
+    #[test]
+    fn pinned_weight_never_escalates() {
+        let mut ledger = Ledger::new();
+        let cfg = AptConfig::default(); // pin_forward_bits = true
+        let mut c = PrecisionController::new(cfg, "fc2", TensorKind::Weight);
+        let mut tail = gaussian(4, 4096, 0.05);
+        for (i, v) in tail.iter_mut().enumerate() {
+            if i % 64 == 0 {
+                *v *= 400.0;
+            }
+        }
+        c.maybe_update_from_data(0, &tail, &mut ledger);
+        assert_eq!(c.bits(), 8);
+    }
+
+    #[test]
+    fn interval_one_during_init_phase() {
+        let mut ledger = Ledger::new();
+        let mut cfg = AptConfig::default();
+        cfg.init_phase_iters = 10;
+        let mut c = PrecisionController::new(cfg, "l", TensorKind::Gradient);
+        let data = gaussian(5, 256, 1.0);
+        for it in 0..10u64 {
+            assert!(c.needs_update(it), "iter {it} must update during init");
+            c.maybe_update_from_data(it, &data, &mut ledger);
+        }
+        assert_eq!(c.updates(), 10);
+    }
+
+    #[test]
+    fn interval_grows_after_init_on_stable_data() {
+        let mut ledger = Ledger::new();
+        let mut cfg = AptConfig::default();
+        cfg.init_phase_iters = 2;
+        let mut c = PrecisionController::new(cfg, "l", TensorKind::Gradient);
+        let data = gaussian(6, 4096, 1.0);
+        let mut updates = 0;
+        for it in 0..200u64 {
+            if c.needs_update(it) {
+                c.maybe_update_from_data(it, &data, &mut ledger);
+                updates += 1;
+            }
+        }
+        // stable distribution → long intervals → few updates
+        assert!(updates < 20, "updates={updates}");
+    }
+
+    #[test]
+    fn stats_path_matches_data_path_choice() {
+        let mut cfg = AptConfig::default();
+        cfg.init_phase_iters = 0;
+        let data = gaussian(7, 4096, 1.0);
+        let mut l1 = Ledger::new();
+        let mut c1 = PrecisionController::new(cfg, "l", TensorKind::Gradient);
+        c1.maybe_update_from_data(0, &data, &mut l1);
+
+        // device-style stats with candidate sums at 8/16/24
+        let z = quantize::max_abs(&data);
+        let sum_abs: f64 = data.iter().map(|&x| x.abs() as f64).sum();
+        let cand: Vec<(u8, f64)> = [8u8, 16, 24]
+            .iter()
+            .map(|&b| {
+                let sch = Scheme::for_range(z, b);
+                (b, quantize::stats_only(&data, sch).sum_abs_q)
+            })
+            .collect();
+        let mut l2 = Ledger::new();
+        let mut c2 = PrecisionController::new(cfg, "l", TensorKind::Gradient);
+        c2.maybe_update_from_stats(0, sum_abs, z, &cand, &mut l2);
+        assert_eq!(c1.bits(), c2.bits());
+    }
+
+    #[test]
+    fn mode1_can_decrease_mode2_cannot() {
+        let mut ledger = Ledger::new();
+        let mut cfg1 = AptConfig::mode1();
+        cfg1.init_phase_iters = 0;
+        let mut cfg2 = AptConfig::default();
+        cfg2.init_phase_iters = 0;
+
+        let mut tail = gaussian(8, 4096, 0.05);
+        for (i, v) in tail.iter_mut().enumerate() {
+            if i % 64 == 0 {
+                *v *= 400.0;
+            }
+        }
+        let benign = gaussian(9, 4096, 1.0);
+
+        for (cfg, expect_final) in [(cfg1, 8u8), (cfg2, 16u8)] {
+            let mut c = PrecisionController::new(cfg, "l", TensorKind::Gradient);
+            c.maybe_update_from_data(0, &tail, &mut ledger); // escalates to ≥16
+            assert!(c.bits() >= 16);
+            // data becomes benign; force an update far in the future
+            let far = 1_000_000;
+            assert!(c.needs_update(far));
+            c.maybe_update_from_data(far, &benign, &mut ledger);
+            assert_eq!(c.bits(), expect_final, "mode={:?}", cfg.mode);
+        }
+    }
+}

@@ -1,0 +1,228 @@
+//! Run ledger: per-tensor records of every QPA decision, powering Fig 8
+//! (adjustment frequency, bit-width mix over training) and the Table 1
+//! int8/int16/int24 percentage columns.
+
+use std::collections::BTreeMap;
+
+use crate::fixedpoint::TensorKind;
+
+/// One QPA event.
+#[derive(Clone, Copy, Debug)]
+pub struct Event {
+    pub iter: u64,
+    pub bits: u8,
+    pub interval: u64,
+    pub error: f64,
+}
+
+/// Per-tensor history.
+#[derive(Clone, Debug, Default)]
+pub struct TensorHistory {
+    pub events: Vec<Event>,
+    /// (iteration, bits) samples — one per iteration bucket for mix curves.
+    pub bits_trace: Vec<(u64, u8)>,
+}
+
+/// Identifies one quantized tensor: layer name + role.
+pub type TensorId = (String, TensorKind);
+
+/// The ledger.
+#[derive(Clone, Debug, Default)]
+pub struct Ledger {
+    pub tensors: BTreeMap<TensorId, TensorHistory>,
+    pub total_iters: u64,
+}
+
+impl Ledger {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn record_event(&mut self, layer: &str, kind: TensorKind, ev: Event) {
+        self.tensors
+            .entry((layer.to_string(), kind))
+            .or_default()
+            .events
+            .push(ev);
+    }
+
+    /// Sample the applied bit-width at an iteration (call once per iter or
+    /// per bucket).
+    pub fn trace_bits(&mut self, layer: &str, kind: TensorKind, iter: u64, bits: u8) {
+        self.tensors
+            .entry((layer.to_string(), kind))
+            .or_default()
+            .bits_trace
+            .push((iter, bits));
+    }
+
+    pub fn set_total_iters(&mut self, iters: u64) {
+        self.total_iters = iters;
+    }
+
+    /// Fraction of iterations that triggered a QPA update, over all tensors
+    /// of a kind, bucketed into `buckets` equal spans (Fig 8a).
+    pub fn adjustment_frequency(&self, kind: TensorKind, buckets: usize) -> Vec<f64> {
+        let mut counts = vec![0u64; buckets];
+        let mut tensors = 0u64;
+        let total = self.total_iters.max(1);
+        for ((_, k), hist) in &self.tensors {
+            if *k != kind {
+                continue;
+            }
+            tensors += 1;
+            for ev in &hist.events {
+                let b = ((ev.iter * buckets as u64) / total).min(buckets as u64 - 1) as usize;
+                counts[b] += 1;
+            }
+        }
+        let span = total as f64 / buckets as f64;
+        counts
+            .iter()
+            .map(|&c| c as f64 / (span * tensors.max(1) as f64))
+            .collect()
+    }
+
+    /// Final bit-width distribution over tensors of a kind (Table 1 columns):
+    /// map bits → fraction of tensors.
+    pub fn final_bits_mix(&self, kind: TensorKind) -> BTreeMap<u8, f64> {
+        let mut counts: BTreeMap<u8, u64> = BTreeMap::new();
+        let mut n = 0u64;
+        for ((_, k), hist) in &self.tensors {
+            if *k != kind {
+                continue;
+            }
+            if let Some(ev) = hist.events.last() {
+                *counts.entry(ev.bits).or_default() += 1;
+                n += 1;
+            }
+        }
+        counts
+            .into_iter()
+            .map(|(b, c)| (b, c as f64 / n.max(1) as f64))
+            .collect()
+    }
+
+    /// Time-weighted bit mix over the whole run (the paper's "12.56% of
+    /// activation gradients quantified to int8" style number): for each
+    /// tensor, each iteration contributes the bits applied at it.
+    pub fn timewise_bits_mix(&self, kind: TensorKind) -> BTreeMap<u8, f64> {
+        let mut weight: BTreeMap<u8, f64> = BTreeMap::new();
+        let mut total = 0.0f64;
+        let end = self.total_iters;
+        for ((_, k), hist) in &self.tensors {
+            if *k != kind {
+                continue;
+            }
+            for (i, ev) in hist.events.iter().enumerate() {
+                let until = hist.events.get(i + 1).map(|e| e.iter).unwrap_or(end);
+                let span = until.saturating_sub(ev.iter) as f64;
+                *weight.entry(ev.bits).or_default() += span;
+                total += span;
+            }
+        }
+        weight
+            .into_iter()
+            .map(|(b, w)| (b, w / total.max(1.0)))
+            .collect()
+    }
+
+    /// Percentage of *iterations* at each bit-width for one kind, bucketed
+    /// over training (Fig 8b's int8-share curve).
+    pub fn bits_share_over_time(&self, kind: TensorKind, bits: u8, buckets: usize) -> Vec<f64> {
+        let total = self.total_iters.max(1);
+        let mut hit = vec![0u64; buckets];
+        let mut all = vec![0u64; buckets];
+        for ((_, k), hist) in &self.tensors {
+            if *k != kind {
+                continue;
+            }
+            for &(it, b) in &hist.bits_trace {
+                let bucket = ((it * buckets as u64) / total).min(buckets as u64 - 1) as usize;
+                all[bucket] += 1;
+                if b == bits {
+                    hit[bucket] += 1;
+                }
+            }
+        }
+        hit.iter()
+            .zip(&all)
+            .map(|(&h, &a)| if a == 0 { 0.0 } else { h as f64 / a as f64 })
+            .collect()
+    }
+
+    /// Total QPA updates across all tensors (numerator of the paper's
+    /// "0.01%–2% of iterations activate QEM/QPA").
+    pub fn total_updates(&self) -> u64 {
+        self.tensors.values().map(|h| h.events.len() as u64).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ev(iter: u64, bits: u8) -> Event {
+        Event { iter, bits, interval: 1, error: 0.0 }
+    }
+
+    #[test]
+    fn final_mix_counts_last_event() {
+        let mut l = Ledger::new();
+        l.record_event("a", TensorKind::Gradient, ev(0, 8));
+        l.record_event("a", TensorKind::Gradient, ev(10, 16));
+        l.record_event("b", TensorKind::Gradient, ev(0, 8));
+        l.set_total_iters(100);
+        let mix = l.final_bits_mix(TensorKind::Gradient);
+        assert_eq!(mix[&16], 0.5);
+        assert_eq!(mix[&8], 0.5);
+    }
+
+    #[test]
+    fn timewise_mix_weights_by_span() {
+        let mut l = Ledger::new();
+        l.set_total_iters(100);
+        // 8 bits for iters 0..50, 16 bits for 50..100
+        l.record_event("a", TensorKind::Gradient, ev(0, 8));
+        l.record_event("a", TensorKind::Gradient, ev(50, 16));
+        let mix = l.timewise_bits_mix(TensorKind::Gradient);
+        assert!((mix[&8] - 0.5).abs() < 1e-9);
+        assert!((mix[&16] - 0.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn adjustment_frequency_decays() {
+        let mut l = Ledger::new();
+        l.set_total_iters(1000);
+        // dense updates early, sparse late
+        for i in 0..100 {
+            l.record_event("a", TensorKind::Gradient, ev(i, 8));
+        }
+        l.record_event("a", TensorKind::Gradient, ev(900, 8));
+        let f = l.adjustment_frequency(TensorKind::Gradient, 10);
+        assert!(f[0] > 0.9);
+        assert!(f[9] < 0.05);
+    }
+
+    #[test]
+    fn bits_share_over_time() {
+        let mut l = Ledger::new();
+        l.set_total_iters(10);
+        for it in 0..10u64 {
+            l.trace_bits("a", TensorKind::Gradient, it, if it < 5 { 8 } else { 16 });
+        }
+        let share8 = l.bits_share_over_time(TensorKind::Gradient, 8, 2);
+        assert_eq!(share8, vec![1.0, 0.0]);
+    }
+
+    #[test]
+    fn kinds_are_separate() {
+        let mut l = Ledger::new();
+        l.set_total_iters(10);
+        l.record_event("a", TensorKind::Weight, ev(0, 8));
+        l.record_event("a", TensorKind::Gradient, ev(0, 16));
+        assert_eq!(l.final_bits_mix(TensorKind::Weight)[&8], 1.0);
+        assert_eq!(l.final_bits_mix(TensorKind::Gradient)[&16], 1.0);
+        assert_eq!(l.total_updates(), 2);
+    }
+}

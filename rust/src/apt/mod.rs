@@ -1,0 +1,13 @@
+//! Adaptive Precision Training core (the paper's contribution, systems
+//! S2–S4 in DESIGN.md): QEM error measurement, QPA parameter adjustment,
+//! the per-tensor precision controller, and the run ledger.
+
+pub mod config;
+pub mod controller;
+pub mod ledger;
+pub mod qem;
+pub mod qpa;
+
+pub use config::{AptConfig, Mode, ThresholdOn};
+pub use controller::{LayerControllers, PrecisionController};
+pub use ledger::Ledger;

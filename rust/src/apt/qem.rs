@@ -1,0 +1,168 @@
+//! Quantization Error Measurement (paper §4.1 + §5.1).
+//!
+//! The paper's metric **M1** is the relative change of the mean absolute
+//! value under quantization, reported as `Diff = log2(M1 + 1)` (Eq. 2).
+//! M2–M4 are the comparison metrics of Fig 5/6; they exist here so the
+//! correlation experiment can score all four against network accuracy.
+
+use crate::fixedpoint::{QuantStats, Scheme};
+
+/// M1 — the paper's metric: `|Σ|x| − Σ|x̂|| / Σ|x|`.
+pub fn m1(x: &[f32], sch: Scheme) -> f64 {
+    crate::fixedpoint::quantize::stats_only(x, sch).ratio()
+}
+
+/// Diff (Eq. 2) = log2(M1 + 1), from precomputed stats.
+pub fn diff_from_stats(st: &QuantStats) -> f64 {
+    st.diff()
+}
+
+/// M2 — mean absolute quantization error: `Σ|x − x̂| / Σ|x|`
+/// (the metric of [27, 39] in the paper's numbering).
+pub fn m2(x: &[f32], sch: Scheme) -> f64 {
+    let mut num = 0.0f64;
+    let mut den = 0.0f64;
+    for &v in x {
+        num += (v - sch.fake_quant(v)).abs() as f64;
+        den += v.abs() as f64;
+    }
+    if den <= 0.0 {
+        0.0
+    } else {
+        num / den
+    }
+}
+
+/// M3 — sum of element-wise relative errors: `Σ |x−x̂|/|x|` (zeros skipped),
+/// normalized by element count to keep it scale-comparable.
+pub fn m3(x: &[f32], sch: Scheme) -> f64 {
+    let mut s = 0.0f64;
+    let mut n = 0usize;
+    for &v in x {
+        if v != 0.0 {
+            s += ((v - sch.fake_quant(v)).abs() / v.abs()) as f64;
+            n += 1;
+        }
+    }
+    if n == 0 {
+        0.0
+    } else {
+        s / n as f64
+    }
+}
+
+/// M4 — Kullback–Leibler divergence between the log2-magnitude histograms
+/// of the data before and after quantization.
+pub fn m4(x: &[f32], sch: Scheme) -> f64 {
+    const BINS: usize = 64;
+    const MIN_EXP: i32 = -40;
+    let hist = |vals: &mut dyn Iterator<Item = f32>| -> Vec<f64> {
+        let mut h = vec![0.0f64; BINS + 1]; // +1: zero bucket
+        let mut total = 0.0f64;
+        for v in vals {
+            let a = v.abs();
+            let idx = if a == 0.0 {
+                BINS
+            } else {
+                ((a.log2().floor() as i32 - MIN_EXP).clamp(0, BINS as i32 - 1)) as usize
+            };
+            h[idx] += 1.0;
+            total += 1.0;
+        }
+        for c in h.iter_mut() {
+            *c /= total.max(1.0);
+        }
+        h
+    };
+    let p = hist(&mut x.iter().copied());
+    let q = hist(&mut x.iter().map(|&v| sch.fake_quant(v)));
+    let eps = 1e-12;
+    p.iter()
+        .zip(&q)
+        .map(|(&pi, &qi)| {
+            if pi <= 0.0 {
+                0.0
+            } else {
+                pi * ((pi + eps) / (qi + eps)).ln()
+            }
+        })
+        .sum()
+}
+
+/// All four metrics at once (single pass over the heavy parts is not needed
+/// for experiment-time probes; clarity wins).
+pub fn all_metrics(x: &[f32], sch: Scheme) -> [f64; 4] {
+    [m1(x, sch), m2(x, sch), m3(x, sch), m4(x, sch)]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fixedpoint::quantize::max_abs;
+    use crate::util::proptest::check;
+    use crate::util::Pcg32;
+
+    fn gaussian(seed: u64, n: usize, std: f32) -> Vec<f32> {
+        let mut r = Pcg32::seeded(seed);
+        (0..n).map(|_| r.normal() * std).collect()
+    }
+
+    #[test]
+    fn metrics_zero_for_exact_representation() {
+        // Data already on the grid of a wide scheme quantizes exactly.
+        let sch = Scheme { bits: 16, s: 0 }; // resolution 1, range ±32767
+        let x: Vec<f32> = (-100..100).map(|i| i as f32).collect();
+        assert_eq!(m1(&x, sch), 0.0);
+        assert_eq!(m2(&x, sch), 0.0);
+        assert_eq!(m3(&x, sch), 0.0);
+        assert!(m4(&x, sch).abs() < 1e-9);
+    }
+
+    #[test]
+    fn prop_all_metrics_shrink_with_bits() {
+        check("metrics-shrink", 20, |g| {
+            let _sc = g.f32_log(1e-2, 1e2);
+            let x = g.normal_vec(2048, _sc);
+            let z = max_abs(&x);
+            for f in [m1 as fn(&[f32], Scheme) -> f64, m2, m3] {
+                let a = f(&x, Scheme::for_range(z, 8));
+                let b = f(&x, Scheme::for_range(z, 16));
+                assert!(b <= a + 1e-9, "metric grew: {a} -> {b}");
+            }
+        });
+    }
+
+    #[test]
+    fn m2_upper_bounds_m1() {
+        // |Σ|x| − Σ|x̂|| <= Σ|x − x̂| by the triangle inequality, so M1 <= M2.
+        check("m1-le-m2", 20, |g| {
+            let x = g.normal_vec(1024, 1.0);
+            let sch = Scheme::for_range(max_abs(&x), 8);
+            assert!(m1(&x, sch) <= m2(&x, sch) + 1e-12);
+        });
+    }
+
+    #[test]
+    fn m4_nonnegative() {
+        let x = gaussian(5, 4096, 3.0);
+        let sch = Scheme::for_range(max_abs(&x), 6);
+        assert!(m4(&x, sch) >= 0.0);
+    }
+
+    #[test]
+    fn m1_detects_variance_growth() {
+        // Observation 3: larger σ (relative to the quantization grid set by
+        // the max) → larger M1 at int8. Long-tail data has a large max but
+        // mass near zero — exactly the hard case.
+        let narrow = gaussian(1, 8192, 1.0);
+        let mut tail = gaussian(2, 8192, 1.0);
+        for (i, v) in tail.iter_mut().enumerate() {
+            if i % 50 == 0 {
+                *v *= 60.0;
+            }
+        }
+        let mn = m1(&narrow, Scheme::for_range(max_abs(&narrow), 8));
+        let mt = m1(&tail, Scheme::for_range(max_abs(&tail), 8));
+        assert!(mt > mn, "tail {mt} vs narrow {mn}");
+    }
+}

@@ -1,0 +1,212 @@
+//! Quantification Parameter Adjustment (paper §4.2).
+//!
+//! Given the QEM output and the range moving average, QPA decides:
+//!   1. the new bit-width `n` (grown in steps of n′=8 until the error is
+//!      below threshold — from 8 in Mode1, from the current width in Mode2);
+//!   2. the new resolution `r = 2^ceil(log2(Range / (2^(n−1)−1)))`;
+//!   3. the next update interval `Itv = β / max(I1, I2) − γ`, with
+//!      `I1 = δ·Diff²` and `I2 = |R_i − R_{i−1}|`.
+
+use super::config::{AptConfig, Mode, ThresholdOn};
+use crate::fixedpoint::Scheme;
+
+/// A probe of the quantization error at a specific bit-width: callers supply
+/// `|bits| -> (error_value)` where the error is the ratio or Diff per
+/// `cfg.threshold_on`. The pure-Rust path computes it from the raw tensor;
+/// the PJRT path reads it from the artifact's candidate-stat outputs.
+pub type ErrorProbe<'a> = dyn Fn(u8) -> f64 + 'a;
+
+/// Outcome of one QPA run.
+#[derive(Clone, Copy, Debug)]
+pub struct QpaDecision {
+    /// New scheme (bits + resolution).
+    pub scheme: Scheme,
+    /// Next update interval in iterations (≥ 1).
+    pub interval: u64,
+    /// Error value at the chosen width (for logging).
+    pub error: f64,
+    /// Whether the bit-width changed.
+    pub bits_changed: bool,
+}
+
+/// Convert a QEM error into the thresholded quantity.
+pub fn error_for_threshold(cfg: &AptConfig, ratio: f64) -> f64 {
+    match cfg.threshold_on {
+        ThresholdOn::Ratio => ratio,
+        ThresholdOn::Diff => (ratio + 1.0).log2(),
+    }
+}
+
+/// Choose the bit-width per §4.2: grow by `bit_step` until the probed error
+/// is below threshold (or `max_bits` is hit).
+pub fn choose_bits(cfg: &AptConfig, current_bits: u8, probe: &ErrorProbe) -> (u8, f64) {
+    let start = match cfg.mode {
+        Mode::Mode1 => cfg.min_bits,
+        Mode::Mode2 => current_bits.max(cfg.min_bits),
+    };
+    let mut bits = start.min(cfg.max_bits);
+    let mut err = probe(bits);
+    while err > cfg.threshold && bits < cfg.max_bits {
+        bits = (bits + cfg.bit_step).min(cfg.max_bits);
+        err = probe(bits);
+    }
+    (bits, err)
+}
+
+/// The interval rule. `diff` is the Eq. 2 Diff at the chosen width;
+/// `range_delta` is |R_i − R_{i−1}|.
+pub fn interval(cfg: &AptConfig, diff: f64, range_delta: f32, in_init_phase: bool) -> u64 {
+    if in_init_phase {
+        return 1;
+    }
+    let i1 = cfg.delta as f64 * diff * diff;
+    let i2 = range_delta.abs() as f64;
+    let denom = i1.max(i2);
+    if denom <= 0.0 {
+        return cfg.max_interval;
+    }
+    let itv = cfg.beta as f64 / denom - cfg.gamma as f64;
+    itv.max(1.0).min(cfg.max_interval as f64) as u64
+}
+
+/// Full QPA: choose bits, derive the resolution from the range estimate,
+/// compute the next interval.
+pub fn adjust(
+    cfg: &AptConfig,
+    current: Scheme,
+    range_estimate: f32,
+    range_delta: f32,
+    in_init_phase: bool,
+    probe: &ErrorProbe,
+) -> QpaDecision {
+    let (bits, err) = choose_bits(cfg, current.bits, probe);
+    let scheme = Scheme::for_range(range_estimate, bits);
+    let ratio = match cfg.threshold_on {
+        ThresholdOn::Ratio => err,
+        ThresholdOn::Diff => err.exp2() - 1.0,
+    };
+    let diff = (ratio + 1.0).log2();
+    QpaDecision {
+        scheme,
+        interval: interval(cfg, diff, range_delta, in_init_phase),
+        error: err,
+        bits_changed: bits != current.bits,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg() -> AptConfig {
+        AptConfig::default()
+    }
+
+    /// Probe with fixed errors per width.
+    fn table_probe(e8: f64, e16: f64, e24: f64) -> impl Fn(u8) -> f64 {
+        move |bits| match bits {
+            8 => e8,
+            16 => e16,
+            24 => e24,
+            _ => 0.0,
+        }
+    }
+
+    #[test]
+    fn grows_until_below_threshold() {
+        let p = table_probe(0.5, 0.1, 0.01);
+        let (bits, err) = choose_bits(&cfg(), 8, &p);
+        assert_eq!(bits, 24);
+        assert!((err - 0.01).abs() < 1e-12);
+    }
+
+    #[test]
+    fn stays_at_8_when_good() {
+        let p = table_probe(0.001, 0.0, 0.0);
+        let (bits, _) = choose_bits(&cfg(), 8, &p);
+        assert_eq!(bits, 8);
+    }
+
+    #[test]
+    fn mode2_starts_from_current() {
+        let mut c = cfg();
+        c.mode = Mode::Mode2;
+        // error at 8 would fail, but we never probe it: current is 16.
+        let calls = std::cell::RefCell::new(vec![]);
+        let p = |bits: u8| {
+            calls.borrow_mut().push(bits);
+            0.0
+        };
+        let (bits, _) = choose_bits(&c, 16, &p);
+        assert_eq!(bits, 16);
+        assert_eq!(*calls.borrow(), vec![16]);
+    }
+
+    #[test]
+    fn mode1_restarts_at_8() {
+        let mut c = cfg();
+        c.mode = Mode::Mode1;
+        let p = table_probe(0.001, 0.0, 0.0);
+        let (bits, _) = choose_bits(&c, 24, &p); // current is 24 but 8 is fine
+        assert_eq!(bits, 8);
+    }
+
+    #[test]
+    fn max_bits_caps_growth() {
+        let mut c = cfg();
+        c.max_bits = 16;
+        let p = table_probe(1.0, 1.0, 1.0);
+        let (bits, _) = choose_bits(&c, 8, &p);
+        assert_eq!(bits, 16);
+    }
+
+    #[test]
+    fn interval_init_phase_is_one() {
+        assert_eq!(interval(&cfg(), 10.0, 10.0, true), 1);
+    }
+
+    #[test]
+    fn interval_grows_as_training_stabilizes() {
+        let c = cfg();
+        // Early: large Diff and moving range → tiny interval.
+        let early = interval(&c, 0.05, 0.5, false);
+        // Late: tiny Diff, frozen range → long interval.
+        let late = interval(&c, 0.001, 1e-5, false);
+        assert!(early <= 2, "early={early}");
+        assert!(late > 100, "late={late}");
+        assert!(late <= c.max_interval);
+    }
+
+    #[test]
+    fn interval_formula_matches_paper() {
+        let c = cfg();
+        // Itv = β/max(δ·Diff², |ΔR|) − γ with β=0.025, δ=25, γ=2.
+        let diff = 0.01;
+        let i1 = 25.0 * diff * diff; // 0.0025
+        let want = (0.025f64 / i1 - 2.0).max(1.0) as u64; // 10 − 2 = 8
+        assert_eq!(interval(&c, diff, 0.0, false), want);
+    }
+
+    #[test]
+    fn zero_error_and_frozen_range_maxes_interval() {
+        let c = cfg();
+        assert_eq!(interval(&c, 0.0, 0.0, false), c.max_interval);
+    }
+
+    #[test]
+    fn adjust_sets_resolution_from_range() {
+        let c = cfg();
+        let p = table_probe(0.0, 0.0, 0.0);
+        let d = adjust(&c, Scheme { bits: 8, s: 0 }, 4.0, 0.0, false, &p);
+        assert_eq!(d.scheme, Scheme::for_range(4.0, 8));
+        assert!(!d.bits_changed);
+    }
+
+    #[test]
+    fn static_config_never_changes_bits() {
+        let c = AptConfig::static_bits(16);
+        let p = table_probe(9.9, 9.9, 9.9); // terrible errors everywhere
+        let d = adjust(&c, Scheme { bits: 16, s: -3 }, 1.0, 0.0, false, &p);
+        assert_eq!(d.scheme.bits, 16);
+    }
+}

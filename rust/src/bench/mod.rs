@@ -1,0 +1,130 @@
+//! Micro-benchmark harness (offline substitute for criterion — DESIGN.md §2).
+//!
+//! Warmup + fixed-duration sampling, trimmed statistics, and a comparison
+//! table printer. Used by `rust/benches/*` (cargo bench, harness = false)
+//! and by the experiment drivers that need timing (Table 3, Fig 10).
+
+use crate::util::stats;
+use crate::util::Timer;
+
+/// One benchmark's samples.
+#[derive(Clone, Debug)]
+pub struct Sample {
+    pub name: String,
+    /// Seconds per iteration.
+    pub secs: Vec<f64>,
+}
+
+impl Sample {
+    pub fn median(&self) -> f64 {
+        stats::median(&self.secs)
+    }
+
+    pub fn mean(&self) -> f64 {
+        stats::mean(&self.secs)
+    }
+
+    pub fn stddev(&self) -> f64 {
+        stats::stddev(&self.secs)
+    }
+}
+
+/// Benchmark runner configuration.
+#[derive(Clone, Copy, Debug)]
+pub struct Bencher {
+    pub warmup_iters: usize,
+    pub min_iters: usize,
+    pub max_iters: usize,
+    /// Stop sampling after this much wall time.
+    pub budget_secs: f64,
+}
+
+impl Default for Bencher {
+    fn default() -> Self {
+        Bencher { warmup_iters: 3, min_iters: 5, max_iters: 200, budget_secs: 1.0 }
+    }
+}
+
+impl Bencher {
+    /// Quick preset for sweeps with many points.
+    pub fn quick() -> Self {
+        Bencher { warmup_iters: 1, min_iters: 3, max_iters: 50, budget_secs: 0.25 }
+    }
+
+    /// Run a closure repeatedly; the closure must do one full unit of work.
+    pub fn run(&self, name: &str, mut f: impl FnMut()) -> Sample {
+        for _ in 0..self.warmup_iters {
+            f();
+        }
+        let mut secs = Vec::new();
+        let budget = Timer::start();
+        while secs.len() < self.min_iters
+            || (secs.len() < self.max_iters && budget.secs() < self.budget_secs)
+        {
+            let t = Timer::start();
+            f();
+            secs.push(t.secs());
+        }
+        Sample { name: name.to_string(), secs }
+    }
+}
+
+/// Pretty-print a speedup table: rows of (label, baseline, contender),
+/// reporting median seconds and the baseline/contender ratio.
+pub fn print_speedup_table(title: &str, rows: &[(String, &Sample, &Sample)]) {
+    println!("\n== {title}");
+    println!(
+        "{:<18} {:>12} {:>12} {:>9}",
+        "case", "base (ms)", "new (ms)", "speedup"
+    );
+    for (label, base, new) in rows {
+        println!(
+            "{:<18} {:>12.4} {:>12.4} {:>8.2}x",
+            label,
+            base.median() * 1e3,
+            new.median() * 1e3,
+            base.median() / new.median().max(1e-12)
+        );
+    }
+}
+
+/// GFLOP/s helper for GEMM-shaped work (2·m·k·n flops per run).
+pub fn gemm_gflops(m: usize, k: usize, n: usize, secs_per_iter: f64) -> f64 {
+    (2.0 * m as f64 * k as f64 * n as f64) / secs_per_iter / 1e9
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bencher_collects_samples() {
+        let b = Bencher { warmup_iters: 1, min_iters: 3, max_iters: 5, budget_secs: 0.01 };
+        let mut count = 0usize;
+        let s = b.run("noop", || count += 1);
+        assert!(s.secs.len() >= 3);
+        assert!(count >= 4); // warmup + samples
+        assert!(s.median() >= 0.0);
+    }
+
+    #[test]
+    fn slower_work_measures_slower() {
+        let b = Bencher { warmup_iters: 1, min_iters: 5, max_iters: 10, budget_secs: 0.05 };
+        // black_box the loop bound so release builds cannot constant-fold
+        let fast = b.run("fast", || {
+            let n = std::hint::black_box(100u64);
+            std::hint::black_box((0..n).map(std::hint::black_box).sum::<u64>());
+        });
+        let slow = b.run("slow", || {
+            let n = std::hint::black_box(1_000_000u64);
+            std::hint::black_box((0..n).map(std::hint::black_box).sum::<u64>());
+        });
+        assert!(slow.median() > fast.median());
+    }
+
+    #[test]
+    fn gflops_math() {
+        let g = gemm_gflops(1000, 1000, 1000, 1.0);
+        assert!((g - 2.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,314 @@
+//! L3 coordinator for the PJRT path (system S14): drives the AOT train-step
+//! artifacts while running QEM/QPA on the host, exactly the split of the
+//! paper's Fig 3 — quantified GEMMs on the device, control plane here.
+//!
+//! Per step the coordinator:
+//!   1. renders each tensor's applied [`Scheme`] into the `qparams[n_q, 9]`
+//!      runtime input (`(r, qmin, qmax)` for X, W, dY — bit-width changes
+//!      never recompile, DESIGN.md §6.1);
+//!   2. executes the artifact;
+//!   3. reads back the `wstats/xstats/gstats[n_q, 6]` QEM statistics
+//!      (sum|x|, max|x|, sum|x̂| applied, sum|x̂| at candidate int8/16/24)
+//!      and feeds the controllers that are due for an update.
+
+use anyhow::{anyhow, Result};
+
+use crate::apt::{AptConfig, Ledger, PrecisionController};
+use crate::fixedpoint::{Scheme, TensorKind};
+use crate::nn::QuantMode;
+use crate::runtime::{Dtype, HostValue, Runtime};
+use crate::util::Pcg32;
+
+/// Quantized-tensor stats layout produced by kernels/stats.py.
+pub const N_STATS: usize = 6;
+pub const QP_LEN: usize = 9;
+
+/// Controllers for the three roles of one q-tensor slot.
+pub struct SlotControllers {
+    pub name: String,
+    pub x: PrecisionController,
+    pub w: PrecisionController,
+    pub g: PrecisionController,
+}
+
+/// Scheme → the (r, qmin, qmax) triple the L2 graph consumes.
+pub fn scheme_triple(s: Scheme) -> [f32; 3] {
+    [s.resolution(), s.qmin() as f32, s.qmax() as f32]
+}
+
+/// Feed one stats row (f32[6]) into a controller.
+fn feed(ctl: &mut PrecisionController, iter: u64, row: &[f32], ledger: &mut Ledger) {
+    let sum_abs = row[0] as f64;
+    let max_abs = row[1];
+    let cand = [(8u8, row[3] as f64), (16, row[4] as f64), (24, row[5] as f64)];
+    if ctl.needs_update(iter) {
+        ctl.maybe_update_from_stats(iter, sum_abs, max_abs, &cand, ledger);
+    }
+}
+
+/// Generic driver over a train-step artifact with the calling convention
+/// emitted by `python/compile/aot.py`:
+///   inputs:  [params…] ([m…] [v…] if Adam) data… qparams lr (step if Adam)
+///   outputs: [new params…] (new m/v…) loss wstats xstats gstats
+pub struct ArtifactTrainer {
+    pub artifact: String,
+    pub n_q: usize,
+    pub adam: bool,
+    /// Parameter state, in manifest order.
+    pub params: Vec<HostValue>,
+    opt_m: Vec<HostValue>,
+    opt_v: Vec<HostValue>,
+    pub slots: Vec<SlotControllers>,
+    pub ledger: Ledger,
+    pub step_count: u64,
+    n_params: usize,
+    data_inputs: usize,
+}
+
+/// One step's observable results.
+#[derive(Clone, Debug)]
+pub struct StepResult {
+    pub loss: f32,
+    /// Applied gradient bit-widths per q slot.
+    pub grad_bits: Vec<u8>,
+}
+
+impl ArtifactTrainer {
+    /// Build from the manifest: infers parameter count, Adam-ness and n_q
+    /// from the artifact's input list; initializes parameters host-side
+    /// (He/embedding init by name — see DESIGN.md §6).
+    pub fn new(
+        rt: &Runtime,
+        artifact: &str,
+        slot_names: Vec<String>,
+        mode: QuantMode,
+        seed: u64,
+    ) -> Result<Self> {
+        let spec = rt
+            .manifest
+            .get(artifact)
+            .ok_or_else(|| anyhow!("artifact {artifact} missing — run `make artifacts`"))?
+            .clone();
+        let adam = spec.inputs.iter().any(|s| s.name == "step");
+        let qp_idx = spec
+            .input_index("qparams")
+            .ok_or_else(|| anyhow!("{artifact}: no qparams input"))?;
+        let n_q = spec.inputs[qp_idx].dims[0];
+        if slot_names.len() != n_q {
+            anyhow::bail!("{artifact}: {} slot names for n_q={n_q}", slot_names.len());
+        }
+        // inputs before the first data input are params (+ m,v if adam)
+        let first_data = spec
+            .inputs
+            .iter()
+            .position(|s| s.name == "x" || s.name == "tokens")
+            .ok_or_else(|| anyhow!("{artifact}: no data input"))?;
+        let n_params = if adam { first_data / 3 } else { first_data };
+        let data_inputs = qp_idx - first_data;
+
+        let mut rng = Pcg32::seeded(seed);
+        let mut init = |iospec: &crate::runtime::IoSpec| -> HostValue {
+            let n = iospec.elements();
+            let name = iospec.name.trim_start_matches("p_");
+            let mut v = vec![0.0f32; n];
+            if name.ends_with("_g") || name == "lnf_g" {
+                v.fill(1.0); // layernorm gains
+            } else if name.ends_with("_b") || name.starts_with('b') && iospec.dims.len() == 1 {
+                // biases stay zero
+            } else if name.contains("embed") || name.contains("pos") {
+                rng.fill_normal(&mut v, 0.02);
+            } else if iospec.dims.len() == 2 {
+                let fan_in = iospec.dims[0] as f32;
+                rng.fill_normal(&mut v, (2.0 / fan_in).sqrt());
+            }
+            HostValue::F32(v)
+        };
+        let params: Vec<HostValue> = spec.inputs[..n_params].iter().map(&mut init).collect();
+        let zeros = |spec: &crate::runtime::IoSpec| HostValue::F32(vec![0.0; spec.elements()]);
+        let (opt_m, opt_v) = if adam {
+            (
+                spec.inputs[n_params..2 * n_params].iter().map(zeros).collect(),
+                spec.inputs[2 * n_params..3 * n_params].iter().map(zeros).collect(),
+            )
+        } else {
+            (vec![], vec![])
+        };
+
+        let cfg = mode.config().unwrap_or_else(|| {
+            // Float32 runs use a 32-bit static config: quantization grid so
+            // fine it is numerically f32 (DESIGN.md §2).
+            AptConfig::static_bits(32)
+        });
+        let slots = slot_names
+            .into_iter()
+            .map(|n| SlotControllers {
+                x: PrecisionController::new(cfg, &n, TensorKind::Activation),
+                w: PrecisionController::new(cfg, &n, TensorKind::Weight),
+                g: PrecisionController::new(cfg, &n, TensorKind::Gradient),
+                name: n,
+            })
+            .collect();
+
+        Ok(ArtifactTrainer {
+            artifact: artifact.to_string(),
+            n_q,
+            adam,
+            params,
+            opt_m,
+            opt_v,
+            slots,
+            ledger: Ledger::new(),
+            step_count: 0,
+            n_params,
+            data_inputs,
+        })
+    }
+
+    /// Render the current schemes into the qparams input.
+    pub fn qparams(&self) -> HostValue {
+        let mut out = Vec::with_capacity(self.n_q * QP_LEN);
+        for s in &self.slots {
+            out.extend_from_slice(&scheme_triple(s.x.scheme()));
+            out.extend_from_slice(&scheme_triple(s.w.scheme()));
+            out.extend_from_slice(&scheme_triple(s.g.scheme()));
+        }
+        HostValue::F32(out)
+    }
+
+    /// One training step. `data` are the artifact's data inputs in manifest
+    /// order (e.g. `[x, labels]` or `[tokens, targets]`).
+    pub fn step(&mut self, rt: &mut Runtime, data: Vec<HostValue>, lr: f32) -> Result<StepResult> {
+        if data.len() != self.data_inputs {
+            anyhow::bail!("expected {} data inputs, got {}", self.data_inputs, data.len());
+        }
+        let mut inputs = Vec::with_capacity(3 * self.n_params + data.len() + 3);
+        inputs.extend(self.params.iter().cloned());
+        if self.adam {
+            inputs.extend(self.opt_m.iter().cloned());
+            inputs.extend(self.opt_v.iter().cloned());
+        }
+        inputs.extend(data);
+        inputs.push(self.qparams());
+        inputs.push(HostValue::F32(vec![lr]));
+        if self.adam {
+            inputs.push(HostValue::F32(vec![(self.step_count + 1) as f32]));
+        }
+        let outputs = rt.exec(&self.artifact, &inputs)?;
+
+        // unpack: params, (m, v), loss, wstats, xstats, gstats
+        let mut it = outputs.into_iter();
+        for p in self.params.iter_mut() {
+            *p = it.next().ok_or_else(|| anyhow!("missing param output"))?;
+        }
+        if self.adam {
+            for m in self.opt_m.iter_mut() {
+                *m = it.next().ok_or_else(|| anyhow!("missing m output"))?;
+            }
+            for v in self.opt_v.iter_mut() {
+                *v = it.next().ok_or_else(|| anyhow!("missing v output"))?;
+            }
+        }
+        let loss = it.next().ok_or_else(|| anyhow!("missing loss"))?.scalar_f32();
+        let wstats = it.next().ok_or_else(|| anyhow!("missing wstats"))?;
+        let xstats = it.next().ok_or_else(|| anyhow!("missing xstats"))?;
+        let gstats = it.next().ok_or_else(|| anyhow!("missing gstats"))?;
+
+        let iter = self.step_count;
+        for (i, slot) in self.slots.iter_mut().enumerate() {
+            let row = |hv: &HostValue| hv.as_f32()[i * N_STATS..(i + 1) * N_STATS].to_vec();
+            feed(&mut slot.w, iter, &row(&wstats), &mut self.ledger);
+            feed(&mut slot.x, iter, &row(&xstats), &mut self.ledger);
+            feed(&mut slot.g, iter, &row(&gstats), &mut self.ledger);
+            self.ledger
+                .trace_bits(&slot.name, TensorKind::Gradient, iter, slot.g.bits());
+        }
+        self.step_count += 1;
+        self.ledger.set_total_iters(self.step_count);
+
+        Ok(StepResult {
+            loss,
+            grad_bits: self.slots.iter().map(|s| s.g.bits()).collect(),
+        })
+    }
+
+    /// Current parameter by manifest input name.
+    pub fn param(&self, rt: &Runtime, name: &str) -> Option<&HostValue> {
+        let spec = rt.manifest.get(&self.artifact)?;
+        let idx = spec.input_index(name)?;
+        self.params.get(idx)
+    }
+}
+
+/// Slot names for the transformer artifact (must match the qlinear call
+/// order in python/compile/model.py::tfm_forward).
+pub fn tfm_slot_names(n_layers: usize) -> Vec<String> {
+    let mut v = Vec::new();
+    for i in 0..n_layers {
+        for p in ["wq", "wk", "wv", "wo", "w1", "w2"] {
+            v.push(format!("b{i}_{p}"));
+        }
+    }
+    v.push("head".to_string());
+    v
+}
+
+/// Slot names for the MLP artifact.
+pub fn mlp_slot_names(n: usize) -> Vec<String> {
+    (0..n).map(|i| format!("fc{i}")).collect()
+}
+
+/// Tokens → HostValue helper.
+pub fn tokens_value(tokens: &[Vec<i32>]) -> HostValue {
+    HostValue::I32(tokens.iter().flatten().copied().collect())
+}
+
+/// Marshal a f32 batch.
+pub fn f32_value(rows: &[Vec<f32>]) -> HostValue {
+    HostValue::F32(rows.iter().flatten().copied().collect())
+}
+
+/// Infer n_q for an artifact without instantiating a trainer.
+pub fn artifact_n_q(rt: &Runtime, artifact: &str) -> Option<usize> {
+    let spec = rt.manifest.get(artifact)?;
+    let idx = spec.input_index("qparams")?;
+    Some(spec.inputs[idx].dims[0])
+}
+
+/// Which Dtype a data input expects.
+pub fn data_dtype(rt: &Runtime, artifact: &str, input: &str) -> Option<Dtype> {
+    let spec = rt.manifest.get(artifact)?;
+    Some(spec.inputs[spec.input_index(input)?].dtype)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn slot_names_match_model_order() {
+        let names = tfm_slot_names(2);
+        assert_eq!(names.len(), 13);
+        assert_eq!(names[0], "b0_wq");
+        assert_eq!(names[5], "b0_w2");
+        assert_eq!(names[6], "b1_wq");
+        assert_eq!(names.last().unwrap(), "head");
+        assert_eq!(mlp_slot_names(3), vec!["fc0", "fc1", "fc2"]);
+    }
+
+    #[test]
+    fn scheme_triple_roundtrip() {
+        let s = Scheme::for_range(4.0, 8);
+        let t = scheme_triple(s);
+        assert_eq!(t[1], -128.0);
+        assert_eq!(t[2], 127.0);
+        assert!(t[0] > 0.0);
+    }
+
+    #[test]
+    fn tokens_marshal() {
+        let hv = tokens_value(&[vec![1, 2], vec![3, 4]]);
+        assert_eq!(hv.as_i32(), &[1, 2, 3, 4]);
+    }
+
+    // Full artifact-driving integration lives in rust/tests/test_e2e_pjrt.rs.
+}

@@ -1,0 +1,319 @@
+//! Synthetic data substrate (system S8 in DESIGN.md §2).
+//!
+//! Every generator is deterministic by seed. These replace the paper's
+//! gated datasets (ImageNet/COCO/VOC/WMT) with distributions that exercise
+//! the same code paths: class-template images with clutter for
+//! classification, single-object scenes for detection, region masks for
+//! segmentation, and a token-reversal corpus for translation.
+
+use crate::tensor::Tensor;
+use crate::util::Pcg32;
+
+/// Class-conditional image generator: each class has a fixed random template
+/// (drawn once from the dataset seed); samples are `template + σ·noise` with
+/// per-sample global clutter. NCHW flattened to [n, c*h*w].
+pub struct SynthImages {
+    pub classes: usize,
+    pub c: usize,
+    pub h: usize,
+    pub w: usize,
+    pub noise: f32,
+    templates: Vec<f32>,
+    rng: Pcg32,
+}
+
+impl SynthImages {
+    pub fn new(seed: u64, classes: usize, c: usize, h: usize, w: usize, noise: f32) -> Self {
+        let mut trng = Pcg32::seeded(seed);
+        let n = classes * c * h * w;
+        let mut templates = vec![0.0f32; n];
+        trng.fill_normal(&mut templates, 1.0);
+        SynthImages { classes, c, h, w, noise, templates, rng: Pcg32::seeded(seed ^ 0xbeef) }
+    }
+
+    pub fn input_len(&self) -> usize {
+        self.c * self.h * self.w
+    }
+
+    /// Next batch: (images [n, chw], labels).
+    pub fn batch(&mut self, n: usize) -> (Tensor, Vec<usize>) {
+        let chw = self.input_len();
+        let mut x = Tensor::zeros(&[n, chw]);
+        let mut y = vec![0usize; n];
+        for b in 0..n {
+            let cls = self.rng.below(self.classes);
+            y[b] = cls;
+            let tpl = &self.templates[cls * chw..(cls + 1) * chw];
+            let row = &mut x.data[b * chw..(b + 1) * chw];
+            for (v, &t) in row.iter_mut().zip(tpl) {
+                *v = t + self.rng.normal() * self.noise;
+            }
+        }
+        (x, y)
+    }
+
+    /// A fixed evaluation set drawn from a separate stream.
+    pub fn eval_set(&self, seed: u64, n: usize) -> (Tensor, Vec<usize>) {
+        let mut clone = SynthImages {
+            classes: self.classes,
+            c: self.c,
+            h: self.h,
+            w: self.w,
+            noise: self.noise,
+            templates: self.templates.clone(),
+            rng: Pcg32::seeded(seed),
+        };
+        clone.batch(n)
+    }
+}
+
+/// Detection scene: clutter background + one axis-aligned box whose interior
+/// carries a class-specific channel signature. Targets are
+/// (cx, cy, w, h) in [0,1] plus the class id.
+pub struct SynthDetection {
+    pub classes: usize,
+    pub c: usize,
+    pub h: usize,
+    pub w: usize,
+    rng: Pcg32,
+    signatures: Vec<f32>, // class × c
+}
+
+impl SynthDetection {
+    pub fn new(seed: u64, classes: usize, c: usize, h: usize, w: usize) -> Self {
+        let mut trng = Pcg32::seeded(seed);
+        let mut signatures = vec![0.0f32; classes * c];
+        trng.fill_normal(&mut signatures, 2.0);
+        SynthDetection { classes, c, h, w, rng: Pcg32::seeded(seed ^ 0xd07), signatures }
+    }
+
+    pub fn input_len(&self) -> usize {
+        self.c * self.h * self.w
+    }
+
+    /// (images, boxes [n][4], classes [n])
+    pub fn batch(&mut self, n: usize) -> (Tensor, Vec<[f32; 4]>, Vec<usize>) {
+        let (c, h, w) = (self.c, self.h, self.w);
+        let chw = c * h * w;
+        let mut x = Tensor::zeros(&[n, chw]);
+        let mut boxes = Vec::with_capacity(n);
+        let mut classes = Vec::with_capacity(n);
+        for b in 0..n {
+            let row = &mut x.data[b * chw..(b + 1) * chw];
+            for v in row.iter_mut() {
+                *v = self.rng.normal() * 0.3;
+            }
+            let cls = self.rng.below(self.classes);
+            let bw = self.rng.range(0.25, 0.6);
+            let bh = self.rng.range(0.25, 0.6);
+            let cx = self.rng.range(bw / 2.0, 1.0 - bw / 2.0);
+            let cy = self.rng.range(bh / 2.0, 1.0 - bh / 2.0);
+            let (x0, x1) = (((cx - bw / 2.0) * w as f32) as usize, ((cx + bw / 2.0) * w as f32) as usize);
+            let (y0, y1) = (((cy - bh / 2.0) * h as f32) as usize, ((cy + bh / 2.0) * h as f32) as usize);
+            for ch in 0..c {
+                let sig = self.signatures[cls * c + ch];
+                for yy in y0..y1.min(h) {
+                    for xx in x0..x1.min(w) {
+                        row[ch * h * w + yy * w + xx] += sig;
+                    }
+                }
+            }
+            boxes.push([cx, cy, bw, bh]);
+            classes.push(cls);
+        }
+        (x, boxes, classes)
+    }
+}
+
+/// Segmentation scene: one rectangular region of a foreground class over
+/// background class 0. Labels are per-pixel class ids.
+pub struct SynthSegmentation {
+    pub classes: usize,
+    pub c: usize,
+    pub h: usize,
+    pub w: usize,
+    rng: Pcg32,
+    signatures: Vec<f32>,
+}
+
+impl SynthSegmentation {
+    pub fn new(seed: u64, classes: usize, c: usize, h: usize, w: usize) -> Self {
+        assert!(classes >= 2);
+        let mut trng = Pcg32::seeded(seed);
+        let mut signatures = vec![0.0f32; classes * c];
+        trng.fill_normal(&mut signatures, 2.0);
+        SynthSegmentation { classes, c, h, w, rng: Pcg32::seeded(seed ^ 0x5e6), signatures }
+    }
+
+    pub fn input_len(&self) -> usize {
+        self.c * self.h * self.w
+    }
+
+    /// (images, per-pixel labels [n][h*w])
+    pub fn batch(&mut self, n: usize) -> (Tensor, Vec<Vec<usize>>) {
+        let (c, h, w) = (self.c, self.h, self.w);
+        let chw = c * h * w;
+        let mut x = Tensor::zeros(&[n, chw]);
+        let mut labels = Vec::with_capacity(n);
+        for b in 0..n {
+            let row = &mut x.data[b * chw..(b + 1) * chw];
+            for v in row.iter_mut() {
+                *v = self.rng.normal() * 0.3;
+            }
+            let mut mask = vec![0usize; h * w];
+            let cls = 1 + self.rng.below(self.classes - 1);
+            let x0 = self.rng.below(w / 2);
+            let y0 = self.rng.below(h / 2);
+            let x1 = x0 + 2 + self.rng.below(w / 2 - 1);
+            let y1 = y0 + 2 + self.rng.below(h / 2 - 1);
+            for yy in y0..y1.min(h) {
+                for xx in x0..x1.min(w) {
+                    mask[yy * w + xx] = cls;
+                    for ch in 0..c {
+                        row[ch * h * w + yy * w + xx] += self.signatures[cls * c + ch];
+                    }
+                }
+            }
+            labels.push(mask);
+        }
+        (x, labels)
+    }
+}
+
+/// Token-reversal translation batch: target is the reversed source — a
+/// long-range dependency every position of the decoder must resolve, like
+/// (a miniature of) real translation reordering. Token 0 is reserved as BOS.
+pub fn translation_batch(
+    rng: &mut Pcg32,
+    batch: usize,
+    len: usize,
+    vocab: usize,
+) -> (Vec<Vec<usize>>, Vec<Vec<usize>>) {
+    let mut src = Vec::with_capacity(batch);
+    let mut tgt = Vec::with_capacity(batch);
+    for _ in 0..batch {
+        let s: Vec<usize> = (0..len).map(|_| 1 + rng.below(vocab - 1)).collect();
+        let mut t = s.clone();
+        t.reverse();
+        src.push(s);
+        tgt.push(t);
+    }
+    (src, tgt)
+}
+
+/// Integer-sequence LM batch for the transformer driver: arithmetic
+/// progressions mod vocab (`x_{t+1} = x_t + step`), predictable but
+/// position-dependent. Returns (tokens, targets) each [batch][seq].
+pub fn lm_batch(
+    rng: &mut Pcg32,
+    batch: usize,
+    seq: usize,
+    vocab: usize,
+) -> (Vec<Vec<i32>>, Vec<Vec<i32>>) {
+    let mut toks = Vec::with_capacity(batch);
+    let mut tgts = Vec::with_capacity(batch);
+    for _ in 0..batch {
+        let start = rng.below(vocab);
+        let step = 1 + rng.below(3);
+        let seq_full: Vec<i32> = (0..=seq)
+            .map(|t| ((start + t * step) % vocab) as i32)
+            .collect();
+        toks.push(seq_full[..seq].to_vec());
+        tgts.push(seq_full[1..].to_vec());
+    }
+    (toks, tgts)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn images_deterministic_and_separable() {
+        let mut d1 = SynthImages::new(7, 4, 3, 8, 8, 0.1);
+        let mut d2 = SynthImages::new(7, 4, 3, 8, 8, 0.1);
+        let (x1, y1) = d1.batch(8);
+        let (x2, y2) = d2.batch(8);
+        assert_eq!(x1.data, x2.data);
+        assert_eq!(y1, y2);
+        // low noise → nearest-template classification is near perfect
+        let chw = d1.input_len();
+        for b in 0..8 {
+            let row = &x1.data[b * chw..(b + 1) * chw];
+            let best = (0..4)
+                .min_by(|&a, &c| {
+                    let da: f32 = row
+                        .iter()
+                        .zip(&d1.templates[a * chw..(a + 1) * chw])
+                        .map(|(x, t)| (x - t) * (x - t))
+                        .sum();
+                    let dc: f32 = row
+                        .iter()
+                        .zip(&d1.templates[c * chw..(c + 1) * chw])
+                        .map(|(x, t)| (x - t) * (x - t))
+                        .sum();
+                    da.partial_cmp(&dc).unwrap()
+                })
+                .unwrap();
+            assert_eq!(best, y1[b]);
+        }
+    }
+
+    #[test]
+    fn detection_boxes_in_bounds() {
+        let mut d = SynthDetection::new(3, 3, 3, 16, 16);
+        let (_, boxes, classes) = d.batch(16);
+        for (bx, cls) in boxes.iter().zip(&classes) {
+            assert!(*cls < 3);
+            assert!(bx[0] - bx[2] / 2.0 >= -1e-5 && bx[0] + bx[2] / 2.0 <= 1.0 + 1e-5);
+            assert!(bx[1] - bx[3] / 2.0 >= -1e-5 && bx[1] + bx[3] / 2.0 <= 1.0 + 1e-5);
+        }
+    }
+
+    #[test]
+    fn segmentation_mask_matches_signal() {
+        let mut d = SynthSegmentation::new(5, 3, 2, 12, 12);
+        let (x, labels) = d.batch(4);
+        // foreground pixels have larger magnitude on average
+        let chw = d.input_len();
+        let hw = 12 * 12;
+        let mut fg = 0.0f32;
+        let mut bg = 0.0f32;
+        let (mut nfg, mut nbg) = (0, 0);
+        for b in 0..4 {
+            for p in 0..hw {
+                let mag: f32 = (0..2).map(|ch| x.data[b * chw + ch * hw + p].abs()).sum();
+                if labels[b][p] > 0 {
+                    fg += mag;
+                    nfg += 1;
+                } else {
+                    bg += mag;
+                    nbg += 1;
+                }
+            }
+        }
+        assert!(fg / nfg as f32 > bg / nbg as f32);
+    }
+
+    #[test]
+    fn translation_is_reversal() {
+        let mut rng = Pcg32::seeded(0);
+        let (src, tgt) = translation_batch(&mut rng, 4, 6, 20);
+        for (s, t) in src.iter().zip(&tgt) {
+            let mut r = s.clone();
+            r.reverse();
+            assert_eq!(&r, t);
+            assert!(s.iter().all(|&tok| tok >= 1 && tok < 20));
+        }
+    }
+
+    #[test]
+    fn lm_batch_is_shifted() {
+        let mut rng = Pcg32::seeded(1);
+        let (toks, tgts) = lm_batch(&mut rng, 3, 10, 32);
+        for (x, y) in toks.iter().zip(&tgts) {
+            assert_eq!(x.len(), 10);
+            assert_eq!(&x[1..], &y[..9]);
+        }
+    }
+}

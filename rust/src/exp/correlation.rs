@@ -1,0 +1,100 @@
+//! Fig 5 / Fig 6 — correlation between the QEM metrics M1..M4 and
+//! network accuracy under single-layer deployment quantization.
+//!
+//! Protocol (paper §5.1): train a model, then for each weight tensor and
+//! each bit-width in {6, 8}, quantize only that tensor, run the forward
+//! pass on a held-out set, and record (metric value, accuracy). The paper's
+//! claim: M1 (mean-change) has the highest Pearson R².
+
+use crate::apt::qem;
+use crate::data::SynthImages;
+use crate::exp::common::{param_copy, train_classifier, weight_tensors, with_param_replaced, TrainOpts};
+use crate::fixedpoint::quantize::{fake_quant_stats_inplace, max_abs};
+use crate::fixedpoint::Scheme;
+use crate::nn::loss::accuracy;
+use crate::nn::models;
+use crate::nn::TrainCtx;
+use crate::util::cli::Args;
+use crate::util::out::{results_dir, Csv};
+use crate::util::stats::pearson_r2;
+
+pub fn run(model: &str, figure: &str, args: &Args) {
+    let iters = args.u64_or("iters", 250);
+    println!("== {figure}: metric↔accuracy correlation on {model}(-mini) ==");
+    let run = train_classifier(
+        &TrainOpts { iters, model: model.into(), lr: 0.01, ..Default::default() },
+        None,
+    );
+    let mut net = run.net;
+    println!("trained float32 baseline: eval acc {:.3}", run.eval_acc);
+
+    let mut data = SynthImages::new(
+        1000 + 1, // must match TrainOpts.seed + 1000 for template identity
+        models::CLASSES,
+        models::IN_C,
+        models::IN_H,
+        models::IN_W,
+        0.5,
+    );
+    let (ex, ey) = data.batch(256);
+    let mut ctx = TrainCtx::new();
+    ctx.training = false;
+
+    let widx = weight_tensors(&mut net);
+    let mut series: Vec<[f64; 4]> = Vec::new();
+    let mut accs: Vec<f64> = Vec::new();
+    let mut csv = Csv::new(
+        results_dir().join(format!("{}_points.csv", figure.to_lowercase())),
+        &["param", "bits", "m1", "m2", "m3", "m4", "acc"],
+    );
+    for &pi in &widx {
+        let w = param_copy(&mut net, pi);
+        for bits in [6u8, 8] {
+            let sch = Scheme::for_range(max_abs(&w.data), bits);
+            let ms = qem::all_metrics(&w.data, sch);
+            let acc = with_param_replaced(
+                &mut net,
+                pi,
+                |p| {
+                    fake_quant_stats_inplace(&mut p.data, sch);
+                },
+                |n| {
+                    let logits = n.forward(&ex, &mut ctx);
+                    accuracy(&logits, &ey)
+                },
+            );
+            csv.row(&[
+                pi.to_string(),
+                bits.to_string(),
+                format!("{:.6}", ms[0]),
+                format!("{:.6}", ms[1]),
+                format!("{:.6}", ms[2]),
+                format!("{:.6}", ms[3]),
+                format!("{acc:.4}"),
+            ]);
+            series.push(ms);
+            accs.push(acc);
+        }
+    }
+    csv.write().unwrap();
+
+    println!("\n{:<8} {:>8}   (paper: M1 highest, ~0.84–0.85)", "metric", "R²");
+    let mut best = ("", 0.0f64);
+    for (i, name) in ["M1", "M2", "M3", "M4"].iter().enumerate() {
+        let vals: Vec<f64> = series.iter().map(|m| m[i]).collect();
+        let r2 = pearson_r2(&vals, &accs);
+        if r2 > best.1 {
+            best = (name, r2);
+        }
+        println!("{:<8} {:>8.3}{}", name, r2, if *name == "M1" { "  ← paper's metric" } else { "" });
+    }
+    println!("highest: {} ({:.3})", best.0, best.1);
+}
+
+pub fn fig5(args: &Args) {
+    run("mobilenet", "Fig5", args);
+}
+
+pub fn fig6(args: &Args) {
+    run("resnet", "Fig6", args);
+}

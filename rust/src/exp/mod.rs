@@ -1,0 +1,43 @@
+//! Experiment drivers (system S13): one entry per table/figure of the paper
+//! (see the per-experiment index in DESIGN.md §5). Each prints a
+//! paper-vs-measured comparison and writes CSV/JSON under `results/`.
+
+pub mod accuracy;
+pub mod common;
+pub mod correlation;
+pub mod observations;
+pub mod overhead;
+pub mod speed;
+pub mod translation;
+
+use crate::util::cli::Args;
+
+/// All experiment ids, in suggested running order.
+pub const ALL: [&str; 14] = [
+    "fig1", "fig2", "fig5", "fig6", "fig7", "fig8", "fig9", "fig10", "fig11",
+    "table1", "table2", "table3", "table5", "appxE",
+];
+
+/// Dispatch one experiment by id. Returns false for unknown ids.
+pub fn run(id: &str, args: &Args) -> bool {
+    match id {
+        "fig1" => observations::fig1(args),
+        "fig2" => observations::fig2(args),
+        "fig5" => correlation::fig5(args),
+        "fig6" => correlation::fig6(args),
+        "fig7" => overhead::fig7(args),
+        "fig8" => overhead::fig8(args),
+        "fig9" => translation::fig9(args),
+        "fig9a" => translation::fig9a(args),
+        "fig9b" => translation::fig9b(args),
+        "fig10" => speed::fig10(args),
+        "fig11" => observations::fig11(args),
+        "table1" => accuracy::table1(args),
+        "table2" => accuracy::table2(args),
+        "table3" => speed::table3(args),
+        "table5" => overhead::table5(args),
+        "appxE" | "appendixE" => speed::appendix_e(args),
+        _ => return false,
+    }
+    true
+}

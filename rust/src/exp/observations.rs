@@ -1,0 +1,195 @@
+//! Fig 1, Fig 2, Fig 11 — the paper's observations on gradient
+//! distributions and per-layer bit-width sensitivity.
+
+use crate::exp::common::{tail_loss, train_classifier, TrainOpts};
+use crate::fixedpoint::quantize::max_abs;
+use crate::fixedpoint::Scheme;
+use crate::nn::QuantMode;
+use crate::util::cli::Args;
+use crate::util::out::{results_dir, Csv, Json};
+use crate::util::Log2Histogram;
+
+fn grad_histogram(data: &[f32], bits: Option<u8>) -> Log2Histogram {
+    let mut h = Log2Histogram::new(-24, 8);
+    match bits {
+        None => h.add_all(data),
+        Some(b) => {
+            let sch = Scheme::for_range(max_abs(data), b);
+            for &v in data {
+                h.add(sch.fake_quant(v));
+            }
+        }
+    }
+    h
+}
+
+/// Fig 1: last-fc activation-gradient distribution under f32/int8/12/16 and
+/// the training-loss consequence of quantizing just that layer.
+pub fn fig1(args: &Args) {
+    let iters = args.u64_or("iters", 400);
+    println!("== Fig 1: AlexNet(-mini) fc1 gradient distribution & convergence ==");
+    // Capture the gradient tensor of the last fc during an f32 run.
+    let mut captured: Option<Vec<f32>> = None;
+    let capture_at = iters / 2;
+    let mut probe = |it: u64, net: &crate::nn::Sequential| {
+        if it == capture_at {
+            if let Some(g) = net.last_grad_of("fc1") {
+                captured = Some(g.data.clone());
+            }
+        }
+    };
+    let opts = TrainOpts { iters, probe_every: 1, lr: 0.01, noise: 2.0, ..Default::default() };
+    let _ = train_classifier(&opts, Some(&mut probe));
+    let grad = captured.expect("no fc1 gradient captured");
+
+    let mut csv = Csv::new(results_dir().join("fig1_hist.csv"), &["variant", "exp", "freq"]);
+    for (label, bits) in [("float32", None), ("int8", Some(8)), ("int12", Some(12)), ("int16", Some(16))] {
+        let h = grad_histogram(&grad, bits);
+        println!("\n-- {label} (log2 |dX| histogram, fc1)");
+        print!("{}", h.ascii(40));
+        for (i, f) in h.freqs().iter().enumerate() {
+            csv.row(&[label.to_string(), (h.min_exp + i as i32).to_string(), format!("{f:.6}")]);
+        }
+    }
+    csv.write().unwrap();
+
+    // Convergence curves with fc1 gradient pinned per variant (Fig 1d).
+    let mut curves = Json::obj();
+    println!("\n-- convergence (loss, tail mean over last 20 iters)");
+    println!("{:<10} {:>10} {:>12}", "variant", "tail loss", "vs float32");
+    let mut f32_tail = 0.0;
+    for (label, bits) in [("float32", None), ("int8", Some(8u8)), ("int12", Some(12)), ("int16", Some(16))] {
+        let mut cfg = crate::apt::AptConfig::default();
+        cfg.init_phase_iters = iters / 10;
+        let opts = TrainOpts {
+            iters,
+            lr: 0.01,
+            noise: 2.0,
+            mode: QuantMode::Adaptive(cfg),
+            grad_overrides: bits.map(|b| vec![("fc1".to_string(), b)]).unwrap_or_default(),
+            // float32 variant: run truly unquantized
+            ..Default::default()
+        };
+        let opts = if bits.is_none() { TrainOpts { mode: QuantMode::Float32, ..opts } } else { opts };
+        let run = train_classifier(&opts, None);
+        let tail = tail_loss(&run.losses, 20);
+        if bits.is_none() {
+            f32_tail = tail;
+        }
+        println!("{:<10} {:>10.4} {:>11.1}%", label, tail, 100.0 * (tail - f32_tail) / f32_tail.max(1e-9));
+        curves.set(label, Json::arr_f32(&run.losses));
+    }
+    curves.write(results_dir().join("fig1_curves.json")).unwrap();
+    println!("\npaper shape: int8 diverges/slow at start, int12 slower, int16 ≈ float32");
+}
+
+/// Fig 2: (a) per-layer gradient distributions, (b) max|dX| evolution,
+/// (c) single-layer quantization convergence.
+pub fn fig2(args: &Args) {
+    let iters = args.u64_or("iters", 400);
+    println!("== Fig 2: observations on AlexNet(-mini) ==");
+    let layers = ["conv0", "conv1", "conv2", "fc0", "fc1"];
+
+    // (a)+(b): probe per-layer gradients during one f32 run
+    let mut maxes: Vec<(u64, Vec<f32>)> = Vec::new();
+    let mut final_hists: Vec<(String, Log2Histogram)> = Vec::new();
+    let capture_at = iters - 1;
+    let mut probe = |it: u64, net: &crate::nn::Sequential| {
+        let row: Vec<f32> = layers
+            .iter()
+            .map(|l| net.last_grad_of(l).map(|g| g.max_abs()).unwrap_or(0.0))
+            .collect();
+        maxes.push((it, row));
+        if it == capture_at {
+            for l in layers {
+                if let Some(g) = net.last_grad_of(l) {
+                    final_hists.push((l.to_string(), grad_histogram(&g.data, None)));
+                }
+            }
+        }
+    };
+    let opts = TrainOpts { iters, probe_every: 1, lr: 0.01, noise: 2.0, ..Default::default() };
+    let _ = train_classifier(&opts, Some(&mut probe));
+
+    println!("\n-- (b) log2 max |dX| during training (first→last sampled rows)");
+    println!("{:<8} {}", "iter", layers.map(|l| format!("{l:>8}")).join(""));
+    let step = (maxes.len() / 8).max(1);
+    let mut csv = Csv::new(results_dir().join("fig2b_maxabs.csv"), &["iter", "layer", "log2max"]);
+    for (it, row) in maxes.iter().step_by(step) {
+        let cells: String = row.iter().map(|&m| format!("{:>8.1}", m.max(1e-30).log2())).collect();
+        println!("{:<8} {}", it, cells);
+    }
+    for (it, row) in &maxes {
+        for (l, &m) in layers.iter().zip(row) {
+            csv.row(&[it.to_string(), l.to_string(), format!("{:.3}", m.max(1e-30).log2())]);
+        }
+    }
+    csv.write().unwrap();
+    println!("paper shape: fc layers carry larger max |dX| than bottom convs;\nrange moves fast in the first ~1/10 of training then stabilizes");
+
+    println!("\n-- (a) per-layer |dX| distributions at the end of training");
+    for (l, h) in &final_hists {
+        let fc = l.starts_with("fc");
+        println!("{l}: mass at 2^{:.1} (mean |dX|), zeros {:.1}%{}",
+            h.coarse_mean_abs().max(1e-30).log2(),
+            100.0 * h.zeros as f64 / h.total.max(1) as f64,
+            if fc { "  [fc: wider]" } else { "" });
+    }
+
+    // (c): single-layer quantization convergence
+    println!("\n-- (c) convergence with one layer's dX pinned");
+    println!("{:<16} {:>10} {:>10}", "variant", "tail loss", "eval acc");
+    let mut csv = Csv::new(results_dir().join("fig2c_convergence.csv"), &["variant", "tail_loss", "acc"]);
+    let variants: Vec<(String, Vec<(String, u8)>)> = vec![
+        ("float32".into(), vec![]),
+        ("conv1-int8".into(), vec![("conv1".into(), 8)]),
+        ("fc1-int8".into(), vec![("fc1".into(), 8)]),
+        ("fc1-int12".into(), vec![("fc1".into(), 12)]),
+        ("fc1-int16".into(), vec![("fc1".into(), 16)]),
+    ];
+    for (label, ovs) in variants {
+        let mut cfg = crate::apt::AptConfig::default();
+        cfg.init_phase_iters = iters / 10;
+        let mode = if ovs.is_empty() { QuantMode::Float32 } else { QuantMode::Adaptive(cfg) };
+        let run = train_classifier(
+            &TrainOpts { iters, lr: 0.01, noise: 2.0, mode, grad_overrides: ovs, ..Default::default() },
+            None,
+        );
+        let tail = tail_loss(&run.losses, 20);
+        println!("{:<16} {:>10.4} {:>10.3}", label, tail, run.eval_acc);
+        csv.row(&[label, format!("{tail:.4}"), format!("{:.4}", run.eval_acc)]);
+    }
+    csv.write().unwrap();
+    println!("paper shape: conv1-int8 ≈ float32; fc1-int8 hurts; fc1-int16 recovers");
+}
+
+/// Fig 11 (Appendix C): same observation on ResNet(-mini).
+pub fn fig11(args: &Args) {
+    let iters = args.u64_or("iters", 400);
+    println!("== Fig 11: observations on ResNet(-mini) ==");
+    println!("{:<16} {:>10} {:>10}", "variant", "tail loss", "eval acc");
+    let mut csv = Csv::new(results_dir().join("fig11.csv"), &["variant", "tail_loss", "acc"]);
+    let variants: Vec<(String, Vec<(String, u8)>)> = vec![
+        ("float32".into(), vec![]),
+        // inner residual conv (analogue of g3b2c2): int8 is fine
+        ("g1b2c2-int8".into(), vec![("g1b2c2".into(), 8)]),
+        // stem conv0 and fc have large variance: int8 hurts
+        ("conv0-int8".into(), vec![("conv0".into(), 8)]),
+        ("fc-int8".into(), vec![("fc".into(), 8)]),
+        ("fc-int16".into(), vec![("fc".into(), 16)]),
+    ];
+    for (label, ovs) in variants {
+        let mut cfg = crate::apt::AptConfig::default();
+        cfg.init_phase_iters = iters / 10;
+        let mode = if ovs.is_empty() { QuantMode::Float32 } else { QuantMode::Adaptive(cfg) };
+        let run = train_classifier(
+            &TrainOpts { iters, model: "resnet".into(), lr: 0.01, noise: 2.0, mode, grad_overrides: ovs, ..Default::default() },
+            None,
+        );
+        let tail = tail_loss(&run.losses, 20);
+        println!("{:<16} {:>10.4} {:>10.3}", label, tail, run.eval_acc);
+        csv.row(&[label, format!("{tail:.4}"), format!("{:.4}", run.eval_acc)]);
+    }
+    csv.write().unwrap();
+    println!("paper shape: inner-block convs tolerate int8; conv0/fc need ≥int16");
+}

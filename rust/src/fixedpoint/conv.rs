@@ -1,0 +1,255 @@
+//! Convolution via im2col + GEMM, in f32 and fixed-point variants.
+//!
+//! Layout: NCHW activations, OIHW weights, row-major. im2col lowers a
+//! convolution to a `(C·KH·KW) × (OH·OW)` patch matrix per image so all
+//! conv speed/accuracy questions reduce to the GEMM kernels in `gemm.rs` —
+//! exactly how the paper's CPU implementation (and MKL-DNN) works, which is
+//! what makes the Table 3 / Fig 10 layer-shape benchmarks faithful.
+
+use super::gemm;
+
+/// Convolution geometry.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Conv2dGeom {
+    pub in_c: usize,
+    pub out_c: usize,
+    pub kh: usize,
+    pub kw: usize,
+    pub stride: usize,
+    pub pad: usize,
+}
+
+impl Conv2dGeom {
+    pub fn out_hw(&self, h: usize, w: usize) -> (usize, usize) {
+        (
+            (h + 2 * self.pad - self.kh) / self.stride + 1,
+            (w + 2 * self.pad - self.kw) / self.stride + 1,
+        )
+    }
+
+    /// Multiply-accumulate count for a forward pass over one image.
+    pub fn macs(&self, h: usize, w: usize) -> u64 {
+        let (oh, ow) = self.out_hw(h, w);
+        (self.out_c * oh * ow) as u64 * (self.in_c * self.kh * self.kw) as u64
+    }
+
+    /// im2col patch-matrix dims for one image: (rows = C·KH·KW, cols = OH·OW).
+    pub fn im2col_dims(&self, h: usize, w: usize) -> (usize, usize) {
+        let (oh, ow) = self.out_hw(h, w);
+        (self.in_c * self.kh * self.kw, oh * ow)
+    }
+}
+
+/// Lower one image (C×H×W) into the im2col patch matrix (row-major
+/// rows=C·KH·KW, cols=OH·OW). `out` must be sized `rows*cols`.
+pub fn im2col(g: Conv2dGeom, h: usize, w: usize, img: &[f32], out: &mut [f32]) {
+    let (oh, ow) = g.out_hw(h, w);
+    let (rows, cols) = g.im2col_dims(h, w);
+    assert_eq!(img.len(), g.in_c * h * w);
+    assert_eq!(out.len(), rows * cols);
+    let mut row = 0usize;
+    for c in 0..g.in_c {
+        for ky in 0..g.kh {
+            for kx in 0..g.kw {
+                let orow = &mut out[row * cols..(row + 1) * cols];
+                let mut col = 0usize;
+                for oy in 0..oh {
+                    let iy = (oy * g.stride + ky) as isize - g.pad as isize;
+                    for ox in 0..ow {
+                        let ix = (ox * g.stride + kx) as isize - g.pad as isize;
+                        orow[col] = if iy >= 0 && iy < h as isize && ix >= 0 && ix < w as isize {
+                            img[c * h * w + iy as usize * w + ix as usize]
+                        } else {
+                            0.0
+                        };
+                        col += 1;
+                    }
+                }
+                row += 1;
+            }
+        }
+    }
+}
+
+/// Scatter-add the transpose of im2col (col2im) — the backward of `im2col`,
+/// used by BPROP to push patch-space gradients back to image space.
+pub fn col2im(g: Conv2dGeom, h: usize, w: usize, cols_mat: &[f32], img_grad: &mut [f32]) {
+    let (oh, ow) = g.out_hw(h, w);
+    let (rows, cols) = g.im2col_dims(h, w);
+    assert_eq!(cols_mat.len(), rows * cols);
+    assert_eq!(img_grad.len(), g.in_c * h * w);
+    img_grad.fill(0.0);
+    let mut row = 0usize;
+    for c in 0..g.in_c {
+        for ky in 0..g.kh {
+            for kx in 0..g.kw {
+                let crow = &cols_mat[row * cols..(row + 1) * cols];
+                let mut col = 0usize;
+                for oy in 0..oh {
+                    let iy = (oy * g.stride + ky) as isize - g.pad as isize;
+                    for ox in 0..ow {
+                        let ix = (ox * g.stride + kx) as isize - g.pad as isize;
+                        if iy >= 0 && iy < h as isize && ix >= 0 && ix < w as isize {
+                            img_grad[c * h * w + iy as usize * w + ix as usize] += crow[col];
+                        }
+                        col += 1;
+                    }
+                }
+                row += 1;
+            }
+        }
+    }
+}
+
+/// f32 forward convolution of one image: out[out_c × OH·OW] = W · im2col(x).
+/// `scratch` must hold `rows*cols` f32.
+pub fn conv2d_f32(
+    g: Conv2dGeom,
+    h: usize,
+    w: usize,
+    img: &[f32],
+    weight: &[f32], // out_c × (in_c·kh·kw)
+    out: &mut [f32],
+    scratch: &mut [f32],
+) {
+    let (rows, cols) = g.im2col_dims(h, w);
+    assert_eq!(weight.len(), g.out_c * rows);
+    assert_eq!(out.len(), g.out_c * cols);
+    im2col(g, h, w, img, scratch);
+    gemm::gemm_f32(g.out_c, rows, cols, weight, scratch, out);
+}
+
+/// Quantized forward convolution (codes + integer GEMM + rescale); used by
+/// the Table 3 / Fig 10 benches. i8 path.
+pub fn conv2d_i8(
+    g: Conv2dGeom,
+    h: usize,
+    w: usize,
+    img: &[f32],
+    s_img: super::Scheme,
+    weight: &[f32],
+    s_w: super::Scheme,
+    out: &mut [f32],
+) {
+    let (rows, cols) = g.im2col_dims(h, w);
+    let mut patch = vec![0.0f32; rows * cols];
+    im2col(g, h, w, img, &mut patch);
+    let mut cw = vec![0i8; weight.len()];
+    let mut cp = vec![0i8; patch.len()];
+    super::quantize::codes_i8(weight, &mut cw, s_w);
+    super::quantize::codes_i8(&patch, &mut cp, s_img);
+    let mut acc = vec![0i32; out.len()];
+    gemm::gemm_i8(g.out_c, rows, cols, &cw, &cp, &mut acc);
+    gemm::rescale_i32(&acc, s_w.resolution() * s_img.resolution(), out);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fixedpoint::quantize::max_abs;
+    use crate::fixedpoint::Scheme;
+    use crate::util::Pcg32;
+
+    fn naive_conv(
+        g: Conv2dGeom,
+        h: usize,
+        w: usize,
+        img: &[f32],
+        weight: &[f32],
+    ) -> Vec<f32> {
+        let (oh, ow) = g.out_hw(h, w);
+        let mut out = vec![0.0f32; g.out_c * oh * ow];
+        for oc in 0..g.out_c {
+            for oy in 0..oh {
+                for ox in 0..ow {
+                    let mut acc = 0.0f32;
+                    for c in 0..g.in_c {
+                        for ky in 0..g.kh {
+                            for kx in 0..g.kw {
+                                let iy = (oy * g.stride + ky) as isize - g.pad as isize;
+                                let ix = (ox * g.stride + kx) as isize - g.pad as isize;
+                                if iy >= 0 && iy < h as isize && ix >= 0 && ix < w as isize {
+                                    let iv = img[c * h * w + iy as usize * w + ix as usize];
+                                    let wv = weight
+                                        [oc * g.in_c * g.kh * g.kw + c * g.kh * g.kw + ky * g.kw + kx];
+                                    acc += iv * wv;
+                                }
+                            }
+                        }
+                    }
+                    out[oc * oh * ow + oy * ow + ox] = acc;
+                }
+            }
+        }
+        out
+    }
+
+    fn geom() -> Conv2dGeom {
+        Conv2dGeom { in_c: 3, out_c: 5, kh: 3, kw: 3, stride: 2, pad: 1 }
+    }
+
+    #[test]
+    fn conv_matches_naive() {
+        let g = geom();
+        let (h, w) = (11, 9);
+        let mut r = Pcg32::seeded(1);
+        let img: Vec<f32> = (0..g.in_c * h * w).map(|_| r.normal()).collect();
+        let weight: Vec<f32> = (0..g.out_c * g.in_c * g.kh * g.kw).map(|_| r.normal()).collect();
+        let (rows, cols) = g.im2col_dims(h, w);
+        let mut out = vec![0.0; g.out_c * cols];
+        let mut scratch = vec![0.0; rows * cols];
+        conv2d_f32(g, h, w, &img, &weight, &mut out, &mut scratch);
+        let want = naive_conv(g, h, w, &img, &weight);
+        for (x, y) in out.iter().zip(&want) {
+            assert!((x - y).abs() < 1e-4, "{x} vs {y}");
+        }
+    }
+
+    #[test]
+    fn quantized_conv_close_to_f32_at_int8() {
+        let g = geom();
+        let (h, w) = (8, 8);
+        let mut r = Pcg32::seeded(2);
+        let img: Vec<f32> = (0..g.in_c * h * w).map(|_| r.normal()).collect();
+        let weight: Vec<f32> = (0..g.out_c * g.in_c * g.kh * g.kw).map(|_| r.normal() * 0.2).collect();
+        let (_, cols) = g.im2col_dims(h, w);
+        let mut qout = vec![0.0; g.out_c * cols];
+        conv2d_i8(
+            g, h, w,
+            &img, Scheme::for_range(max_abs(&img), 8),
+            &weight, Scheme::for_range(max_abs(&weight), 8),
+            &mut qout,
+        );
+        let want = naive_conv(g, h, w, &img, &weight);
+        let err: f32 = qout.iter().zip(&want).map(|(a, b)| (a - b).abs()).sum::<f32>()
+            / want.iter().map(|v| v.abs()).sum::<f32>();
+        assert!(err < 0.05, "relative int8 conv error {err}");
+    }
+
+    #[test]
+    fn col2im_adjoint_of_im2col() {
+        // <im2col(x), y> == <x, col2im(y)> — adjointness (the property BPROP
+        // relies on).
+        let g = geom();
+        let (h, w) = (7, 6);
+        let mut r = Pcg32::seeded(3);
+        let x: Vec<f32> = (0..g.in_c * h * w).map(|_| r.normal()).collect();
+        let (rows, cols) = g.im2col_dims(h, w);
+        let y: Vec<f32> = (0..rows * cols).map(|_| r.normal()).collect();
+        let mut ix = vec![0.0; rows * cols];
+        im2col(g, h, w, &x, &mut ix);
+        let lhs: f64 = ix.iter().zip(&y).map(|(a, b)| (a * b) as f64).sum();
+        let mut cy = vec![0.0; x.len()];
+        col2im(g, h, w, &y, &mut cy);
+        let rhs: f64 = x.iter().zip(&cy).map(|(a, b)| (a * b) as f64).sum();
+        assert!((lhs - rhs).abs() < 1e-3 * lhs.abs().max(1.0), "{lhs} vs {rhs}");
+    }
+
+    #[test]
+    fn geometry_math() {
+        let g = Conv2dGeom { in_c: 3, out_c: 96, kh: 11, kw: 11, stride: 4, pad: 0 };
+        // AlexNet conv0 on 227×227 → 55×55
+        assert_eq!(g.out_hw(227, 227), (55, 55));
+        assert_eq!(g.macs(227, 227), 96 * 55 * 55 * 3 * 11 * 11);
+    }
+}

@@ -1,0 +1,308 @@
+//! Integer and float GEMM kernels — the measured substrate for the paper's
+//! training-speedup claims (Table 3, Fig 10, Appendix E).
+//!
+//! The paper's Xeon Gold 6154 numbers come from AVX2 int8/int16 vector
+//! instructions. Here the same datapath-width argument is exercised through
+//! LLVM autovectorization: all kernels share one blocked structure
+//! (MC×KC panels, 8-wide accumulator strips) and differ only in element
+//! type, so the int8/int16 vs f32 *ratio* reflects lane width, not kernel
+//! quality. i8×i8 and i16×i16 products accumulate in i32 (exact — the same
+//! contract as the MXU / VNNI path); the caller rescales by `r1·r2`.
+//!
+//! Row-major everywhere: `a` is m×k, `b` is k×n, `c` is m×n.
+
+/// Blocking parameters shared by all kernels (tuned in the perf pass; see
+/// EXPERIMENTS.md §Perf).
+pub const MC: usize = 64;
+pub const KC: usize = 256;
+
+/// f32 GEMM baseline: c = a·b (c fully overwritten).
+pub fn gemm_f32(m: usize, k: usize, n: usize, a: &[f32], b: &[f32], c: &mut [f32]) {
+    assert_eq!(a.len(), m * k);
+    assert_eq!(b.len(), k * n);
+    assert_eq!(c.len(), m * n);
+    c.fill(0.0);
+    // i-k-j loop order: unit-stride over b and c rows → autovectorizes.
+    for ic in (0..m).step_by(MC) {
+        let mend = (ic + MC).min(m);
+        for pc in (0..k).step_by(KC) {
+            let kend = (pc + KC).min(k);
+            for i in ic..mend {
+                let arow = &a[i * k..(i + 1) * k];
+                let crow = &mut c[i * n..(i + 1) * n];
+                for p in pc..kend {
+                    let av = arow[p];
+                    if av == 0.0 {
+                        continue;
+                    }
+                    let brow = &b[p * n..(p + 1) * n];
+                    for j in 0..n {
+                        crow[j] += av * brow[j];
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// int8 GEMM with i32 accumulation: c_i32 = a_i8 · b_i8. Dispatches to the
+/// AVX-512 VNNI kernel when available (see `gemm_simd`), else the portable
+/// blocked kernel below.
+pub fn gemm_i8(m: usize, k: usize, n: usize, a: &[i8], b: &[i8], c: &mut [i32]) {
+    super::gemm_simd::gemm_i8_fast(m, k, n, a, b, c)
+}
+
+/// Portable autovectorized int8 kernel (the pre-perf-pass baseline, kept
+/// for dispatch fallback and for the §Perf before/after comparison).
+pub fn gemm_i8_portable(m: usize, k: usize, n: usize, a: &[i8], b: &[i8], c: &mut [i32]) {
+    assert_eq!(a.len(), m * k);
+    assert_eq!(b.len(), k * n);
+    assert_eq!(c.len(), m * n);
+    c.fill(0);
+    for ic in (0..m).step_by(MC) {
+        let mend = (ic + MC).min(m);
+        for pc in (0..k).step_by(KC) {
+            let kend = (pc + KC).min(k);
+            for i in ic..mend {
+                let arow = &a[i * k..(i + 1) * k];
+                let crow = &mut c[i * n..(i + 1) * n];
+                for p in pc..kend {
+                    let av = arow[p] as i32;
+                    if av == 0 {
+                        continue;
+                    }
+                    let brow = &b[p * n..(p + 1) * n];
+                    for j in 0..n {
+                        crow[j] += av * brow[j] as i32;
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// int16 GEMM with i32 accumulation (the paper's backward-pass precision;
+/// footnote 10: int16×int8 executes as int16×int16 on AVX2). Dispatches to
+/// the AVX-512 vpmaddwd kernel when available.
+pub fn gemm_i16(m: usize, k: usize, n: usize, a: &[i16], b: &[i16], c: &mut [i32]) {
+    super::gemm_simd::gemm_i16_fast(m, k, n, a, b, c)
+}
+
+/// Portable autovectorized int16 kernel (fallback + §Perf baseline).
+pub fn gemm_i16_portable(m: usize, k: usize, n: usize, a: &[i16], b: &[i16], c: &mut [i32]) {
+    assert_eq!(a.len(), m * k);
+    assert_eq!(b.len(), k * n);
+    assert_eq!(c.len(), m * n);
+    c.fill(0);
+    for ic in (0..m).step_by(MC) {
+        let mend = (ic + MC).min(m);
+        for pc in (0..k).step_by(KC) {
+            let kend = (pc + KC).min(k);
+            for i in ic..mend {
+                let arow = &a[i * k..(i + 1) * k];
+                let crow = &mut c[i * n..(i + 1) * n];
+                for p in pc..kend {
+                    let av = arow[p] as i32;
+                    if av == 0 {
+                        continue;
+                    }
+                    let brow = &b[p * n..(p + 1) * n];
+                    for j in 0..n {
+                        crow[j] += av * brow[j] as i32;
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Rescale an i32 accumulator into f32 output: `c = acc · scale`.
+pub fn rescale_i32(acc: &[i32], scale: f32, out: &mut [f32]) {
+    assert_eq!(acc.len(), out.len());
+    for (o, &v) in out.iter_mut().zip(acc) {
+        *o = v as f32 * scale;
+    }
+}
+
+/// Transpose a row-major m×n matrix into n×m.
+pub fn transpose(m: usize, n: usize, a: &[f32], out: &mut [f32]) {
+    assert_eq!(a.len(), m * n);
+    assert_eq!(out.len(), m * n);
+    for i in 0..m {
+        for j in 0..n {
+            out[j * m + i] = a[i * n + j];
+        }
+    }
+}
+
+/// End-to-end quantized matmul on f32 buffers (quantize → int GEMM →
+/// rescale) choosing i8 or i16 kernels from the schemes; falls back to
+/// fake-quant + f32 GEMM for wider schemes. Scratch-free convenience used
+/// by tests and the speedup benches; the training hot path pre-allocates.
+pub fn qgemm(
+    m: usize,
+    k: usize,
+    n: usize,
+    a: &[f32],
+    sa: super::Scheme,
+    b: &[f32],
+    sb: super::Scheme,
+    c: &mut [f32],
+) {
+    use super::quantize::{codes_i16, codes_i8};
+    let scale = sa.resolution() * sb.resolution();
+    if sa.bits <= 8 && sb.bits <= 8 {
+        let mut ca = vec![0i8; a.len()];
+        let mut cb = vec![0i8; b.len()];
+        codes_i8(a, &mut ca, sa);
+        codes_i8(b, &mut cb, sb);
+        let mut acc = vec![0i32; c.len()];
+        gemm_i8(m, k, n, &ca, &cb, &mut acc);
+        rescale_i32(&acc, scale, c);
+    } else if sa.bits <= 16 && sb.bits <= 16 {
+        let mut ca = vec![0i16; a.len()];
+        let mut cb = vec![0i16; b.len()];
+        codes_i16(a, &mut ca, sa);
+        codes_i16(b, &mut cb, sb);
+        let mut acc = vec![0i32; c.len()];
+        gemm_i16(m, k, n, &ca, &cb, &mut acc);
+        rescale_i32(&acc, scale, c);
+    } else {
+        // int24+ codes exceed i16; emulate with fake-quant + f32 GEMM
+        // (exact: codes < 2^24 are representable in f32).
+        let mut qa = a.to_vec();
+        let mut qb = b.to_vec();
+        super::quantize::fake_quant_stats_inplace(&mut qa, sa);
+        super::quantize::fake_quant_stats_inplace(&mut qb, sb);
+        gemm_f32(m, k, n, &qa, &qb, c);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fixedpoint::quantize::max_abs;
+    use crate::fixedpoint::Scheme;
+    use crate::util::proptest::check;
+    use crate::util::Pcg32;
+
+    fn naive_f32(m: usize, k: usize, n: usize, a: &[f32], b: &[f32]) -> Vec<f32> {
+        let mut c = vec![0.0f32; m * n];
+        for i in 0..m {
+            for p in 0..k {
+                for j in 0..n {
+                    c[i * n + j] += a[i * k + p] * b[p * n + j];
+                }
+            }
+        }
+        c
+    }
+
+    fn randvec(seed: u64, n: usize, scale: f32) -> Vec<f32> {
+        let mut r = Pcg32::seeded(seed);
+        (0..n).map(|_| r.normal() * scale).collect()
+    }
+
+    #[test]
+    fn f32_matches_naive() {
+        for &(m, k, n) in &[(1, 1, 1), (3, 5, 7), (64, 64, 64), (65, 130, 33)] {
+            let a = randvec(m as u64, m * k, 1.0);
+            let b = randvec(n as u64 + 7, k * n, 1.0);
+            let mut c = vec![0.0; m * n];
+            gemm_f32(m, k, n, &a, &b, &mut c);
+            let want = naive_f32(m, k, n, &a, &b);
+            for (x, y) in c.iter().zip(&want) {
+                assert!((x - y).abs() <= 1e-3 * y.abs().max(1.0), "{x} vs {y}");
+            }
+        }
+    }
+
+    #[test]
+    fn i8_exact_vs_naive_int() {
+        let mut r = Pcg32::seeded(3);
+        let (m, k, n) = (17, 31, 13);
+        let a: Vec<i8> = (0..m * k).map(|_| (r.below(255) as i32 - 127) as i8).collect();
+        let b: Vec<i8> = (0..k * n).map(|_| (r.below(255) as i32 - 127) as i8).collect();
+        let mut c = vec![0i32; m * n];
+        gemm_i8(m, k, n, &a, &b, &mut c);
+        for i in 0..m {
+            for j in 0..n {
+                let want: i32 = (0..k).map(|p| a[i * k + p] as i32 * b[p * n + j] as i32).sum();
+                assert_eq!(c[i * n + j], want);
+            }
+        }
+    }
+
+    #[test]
+    fn i16_exact_vs_naive_int() {
+        let mut r = Pcg32::seeded(4);
+        let (m, k, n) = (9, 65, 21);
+        let a: Vec<i16> = (0..m * k).map(|_| (r.below(65535) as i32 - 32767) as i16).collect();
+        let b: Vec<i16> = (0..k * n).map(|_| (r.below(200) as i32 - 100) as i16).collect();
+        let mut c = vec![0i32; m * n];
+        gemm_i16(m, k, n, &a, &b, &mut c);
+        for i in 0..m {
+            for j in 0..n {
+                let want: i32 = (0..k).map(|p| a[i * k + p] as i32 * b[p * n + j] as i32).sum();
+                assert_eq!(c[i * n + j], want);
+            }
+        }
+    }
+
+    #[test]
+    fn prop_qgemm_equals_fakequant_f32gemm() {
+        // Paper Eq. 12: r1 r2 (I1·I2) == x̂·ŵ bit-for-bit (both paths
+        // compute exact small-integer arithmetic; f32 rounding in the
+        // accumulation differs, so compare with a tiny tolerance scaled
+        // by k).
+        check("qgemm-eq12", 15, |g| {
+            let m = g.usize(1, 40);
+            let k = g.usize(1, 60);
+            let n = g.usize(1, 40);
+            let bits = *g.choose(&[8u8, 16]);
+            let _sc = g.f32_log(1e-2, 10.0);
+            let a = g.normal_vec(m * k, _sc);
+            let _sc = g.f32_log(1e-2, 10.0);
+            let b = g.normal_vec(k * n, _sc);
+            let sa = Scheme::for_range(max_abs(&a), bits);
+            let sb = Scheme::for_range(max_abs(&b), bits);
+            let mut c = vec![0.0; m * n];
+            qgemm(m, k, n, &a, sa, &b, sb, &mut c);
+
+            let mut qa = a.clone();
+            let mut qb = b.clone();
+            crate::fixedpoint::quantize::fake_quant_stats_inplace(&mut qa, sa);
+            crate::fixedpoint::quantize::fake_quant_stats_inplace(&mut qb, sb);
+            let want = naive_f32(m, k, n, &qa, &qb);
+            for (x, y) in c.iter().zip(&want) {
+                let tol = 1e-4 * y.abs().max(1.0);
+                assert!((x - y).abs() <= tol, "{x} vs {y} (m={m},k={k},n={n},bits={bits})");
+            }
+        });
+    }
+
+    #[test]
+    fn transpose_roundtrip() {
+        let a = randvec(9, 6 * 4, 1.0);
+        let mut t = vec![0.0; 24];
+        let mut tt = vec![0.0; 24];
+        transpose(6, 4, &a, &mut t);
+        transpose(4, 6, &t, &mut tt);
+        assert_eq!(a, tt);
+    }
+
+    #[test]
+    fn qgemm_int24_path() {
+        let (m, k, n) = (8, 8, 8);
+        let a = randvec(11, m * k, 1.0);
+        let b = randvec(12, k * n, 1.0);
+        let sa = Scheme::for_range(max_abs(&a), 24);
+        let sb = Scheme::for_range(max_abs(&b), 24);
+        let mut c = vec![0.0; m * n];
+        qgemm(m, k, n, &a, sa, &b, sb, &mut c);
+        let want = naive_f32(m, k, n, &a, &b);
+        for (x, y) in c.iter().zip(&want) {
+            assert!((x - y).abs() <= 2e-3 * y.abs().max(1.0), "{x} vs {y}");
+        }
+    }
+}

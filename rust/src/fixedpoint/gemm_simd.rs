@@ -1,0 +1,385 @@
+//! AVX-512 VNNI / BW integer GEMM kernels — the perf-pass hot path
+//! (EXPERIMENTS.md §Perf).
+//!
+//! The paper's int8/int16 speedups come from wider integer SIMD lanes
+//! (AVX2 on their Xeon 6154). The autovectorized broadcast-row kernels in
+//! `gemm.rs` cannot beat f32 FMA: an i8 lane widened to i32 carries no more
+//! MACs per instruction than f32. The dot-product layout does:
+//!
+//!   * int8:  `vpdpbusd` (AVX-512 VNNI) — 64 u8×s8 MACs per instruction.
+//!     Signed×signed is handled with the classic bias trick:
+//!     `(a ⊕ 0x80)·b = a·b + 128·b`, corrected by `128·Σ_k b[j,k]`
+//!     (precomputed per output column during packing).
+//!   * int16: `vpmaddwd` (AVX-512 BW) — 32 s16×s16 MACs per instruction.
+//!
+//! Both kernels consume B packed **transposed** (`bt[j*k ..]` contiguous in
+//! k) so a whole K-panel streams through one accumulator register chain.
+//! Runtime dispatch: callers go through [`super::gemm::gemm_i8`] /
+//! [`gemm_i16`], which pick these when the CPU supports them.
+
+#[cfg(target_arch = "x86_64")]
+use core::arch::x86_64::*;
+
+/// Pack row-major B (k×n) into BT (n×k) and per-column sums (for the i8
+/// bias correction).
+pub fn pack_bt_i8(k: usize, n: usize, b: &[i8], bt: &mut [i8], colsum: &mut [i32]) {
+    assert_eq!(b.len(), k * n);
+    assert_eq!(bt.len(), k * n);
+    assert_eq!(colsum.len(), n);
+    for j in 0..n {
+        let mut s = 0i32;
+        for p in 0..k {
+            let v = b[p * n + j];
+            bt[j * k + p] = v;
+            s += v as i32;
+        }
+        colsum[j] = s;
+    }
+}
+
+/// Pack row-major B (k×n) into BT (n×k) for the i16 kernel.
+pub fn pack_bt_i16(k: usize, n: usize, b: &[i16], bt: &mut [i16]) {
+    assert_eq!(b.len(), k * n);
+    assert_eq!(bt.len(), k * n);
+    for j in 0..n {
+        for p in 0..k {
+            bt[j * k + p] = b[p * n + j];
+        }
+    }
+}
+
+/// Is the VNNI path available on this CPU?
+pub fn has_vnni() -> bool {
+    #[cfg(target_arch = "x86_64")]
+    {
+        is_x86_feature_detected!("avx512vnni") && is_x86_feature_detected!("avx512bw")
+    }
+    #[cfg(not(target_arch = "x86_64"))]
+    {
+        false
+    }
+}
+
+/// Is the AVX-512 BW (vpmaddwd) path available?
+pub fn has_avx512bw() -> bool {
+    #[cfg(target_arch = "x86_64")]
+    {
+        is_x86_feature_detected!("avx512bw") && is_x86_feature_detected!("avx512f")
+    }
+    #[cfg(not(target_arch = "x86_64"))]
+    {
+        false
+    }
+}
+
+/// i8 GEMM on pre-packed BT: c[i,j] = Σ_k a[i,k]·bt[j,k], i32 accumulate.
+///
+/// # Safety
+/// Requires avx512f+avx512bw+avx512vnni (check [`has_vnni`]).
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx512f,avx512bw,avx512vnni")]
+pub unsafe fn gemm_i8_vnni_packed(
+    m: usize,
+    k: usize,
+    n: usize,
+    a: &[i8],
+    bt: &[i8],
+    colsum: &[i32],
+    c: &mut [i32],
+) {
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(bt.len(), k * n);
+    debug_assert_eq!(c.len(), m * n);
+    let bias = _mm512_set1_epi8(-128i8 as i8); // XOR 0x80 == add 128 (u8 view)
+    let kv = k / 64 * 64;
+    // j-outer: BT (the big panel) streams exactly once; the whole A block
+    // stays cache-resident and is reused for every output column.
+    for j in 0..n {
+        let brow = &bt[j * k..(j + 1) * k];
+        for i in 0..m {
+            let arow = &a[i * k..(i + 1) * k];
+            let mut acc = _mm512_setzero_si512();
+            let mut p = 0usize;
+            while p < kv {
+                let av = _mm512_loadu_si512(arow.as_ptr().add(p) as *const _);
+                let au = _mm512_xor_si512(av, bias); // a + 128 as u8
+                let bv = _mm512_loadu_si512(brow.as_ptr().add(p) as *const _);
+                acc = _mm512_dpbusd_epi32(acc, au, bv);
+                p += 64;
+            }
+            let mut sum = _mm512_reduce_add_epi32(acc);
+            // scalar tail
+            let mut tail_bsum = 0i32;
+            while p < k {
+                sum += (arow[p] as i32 + 128) * brow[p] as i32;
+                tail_bsum += brow[p] as i32;
+                p += 1;
+            }
+            let _ = tail_bsum; // tail already used the biased product
+            // correction: subtract 128·Σ_k b — colsum covers the FULL k
+            sum -= 128 * colsum[j];
+            c[i * n + j] = sum;
+        }
+    }
+}
+
+/// i16 GEMM on pre-packed BT via vpmaddwd.
+///
+/// # Safety
+/// Requires avx512f+avx512bw (check [`has_avx512bw`]).
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx512f,avx512bw")]
+pub unsafe fn gemm_i16_madd_packed(
+    m: usize,
+    k: usize,
+    n: usize,
+    a: &[i16],
+    bt: &[i16],
+    c: &mut [i32],
+) {
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(bt.len(), k * n);
+    debug_assert_eq!(c.len(), m * n);
+    let kv = k / 32 * 32;
+    // j-outer: see gemm_i8_vnni_packed — stream BT once, keep A hot.
+    for j in 0..n {
+        let brow = &bt[j * k..(j + 1) * k];
+        for i in 0..m {
+            let arow = &a[i * k..(i + 1) * k];
+            let mut acc = _mm512_setzero_si512();
+            let mut p = 0usize;
+            while p < kv {
+                let av = _mm512_loadu_si512(arow.as_ptr().add(p) as *const _);
+                let bv = _mm512_loadu_si512(brow.as_ptr().add(p) as *const _);
+                acc = _mm512_add_epi32(acc, _mm512_madd_epi16(av, bv));
+                p += 32;
+            }
+            let mut sum = _mm512_reduce_add_epi32(acc);
+            while p < k {
+                sum += arow[p] as i32 * brow[p] as i32;
+                p += 1;
+            }
+            c[i * n + j] = sum;
+        }
+    }
+}
+
+/// Safe wrapper: i8 GEMM with row-major B (packs internally). Falls back to
+/// the portable kernel when VNNI is unavailable.
+pub fn gemm_i8_fast(m: usize, k: usize, n: usize, a: &[i8], b: &[i8], c: &mut [i32]) {
+    #[cfg(target_arch = "x86_64")]
+    if has_vnni() && k >= 64 {
+        let mut bt = vec![0i8; k * n];
+        let mut colsum = vec![0i32; n];
+        pack_bt_i8(k, n, b, &mut bt, &mut colsum);
+        unsafe {
+            gemm_i8_vnni_packed(m, k, n, a, &bt, &colsum, c);
+        }
+        return;
+    }
+    super::gemm::gemm_i8_portable(m, k, n, a, b, c);
+}
+
+/// Safe wrapper: i16 GEMM with row-major B (packs internally).
+pub fn gemm_i16_fast(m: usize, k: usize, n: usize, a: &[i16], b: &[i16], c: &mut [i32]) {
+    #[cfg(target_arch = "x86_64")]
+    if has_avx512bw() && k >= 32 {
+        let mut bt = vec![0i16; k * n];
+        pack_bt_i16(k, n, b, &mut bt);
+        unsafe {
+            gemm_i16_madd_packed(m, k, n, a, &bt, c);
+        }
+        return;
+    }
+    super::gemm::gemm_i16_portable(m, k, n, a, b, c);
+}
+
+
+/// Safe prepacked entry points: in training, quantization emits codes
+/// directly in BT layout (one pass, same cost as row-major emission), so
+/// the GEMM itself is what Table 3 times. Falls back to repacking + the
+/// portable kernel off-AVX512.
+pub fn gemm_i8_prepacked(
+    m: usize,
+    k: usize,
+    n: usize,
+    a: &[i8],
+    bt: &[i8],
+    colsum: &[i32],
+    c: &mut [i32],
+) {
+    #[cfg(target_arch = "x86_64")]
+    if has_vnni() {
+        unsafe {
+            gemm_i8_vnni_packed(m, k, n, a, bt, colsum, c);
+        }
+        return;
+    }
+    // unpack and use the portable kernel
+    let mut b = vec![0i8; k * n];
+    for j in 0..n {
+        for p in 0..k {
+            b[p * n + j] = bt[j * k + p];
+        }
+    }
+    super::gemm::gemm_i8_portable(m, k, n, a, &b, c);
+}
+
+/// Prepacked i16 GEMM (see [`gemm_i8_prepacked`]).
+pub fn gemm_i16_prepacked(m: usize, k: usize, n: usize, a: &[i16], bt: &[i16], c: &mut [i32]) {
+    #[cfg(target_arch = "x86_64")]
+    if has_avx512bw() {
+        unsafe {
+            gemm_i16_madd_packed(m, k, n, a, bt, c);
+        }
+        return;
+    }
+    let mut b = vec![0i16; k * n];
+    for j in 0..n {
+        for p in 0..k {
+            b[p * n + j] = bt[j * k + p];
+        }
+    }
+    super::gemm::gemm_i16_portable(m, k, n, a, &b, c);
+}
+
+/// Quantize f32 row-major (k×n) directly into BT codes + column sums — the
+/// single fused pass the training loop uses (no separate transpose).
+pub fn codes_i8_bt(
+    k: usize,
+    n: usize,
+    src: &[f32],
+    sch: crate::fixedpoint::Scheme,
+    bt: &mut [i8],
+    colsum: &mut [i32],
+) {
+    assert_eq!(src.len(), k * n);
+    assert_eq!(bt.len(), k * n);
+    assert_eq!(colsum.len(), n);
+    let inv_r = 1.0 / sch.resolution();
+    let lo = sch.qmin() as f32;
+    let hi = sch.qmax() as f32;
+    colsum.fill(0);
+    for p in 0..k {
+        let row = &src[p * n..(p + 1) * n];
+        for (j, &x) in row.iter().enumerate() {
+            let code = (x * inv_r).round_ties_even().clamp(lo, hi) as i8;
+            bt[j * k + p] = code;
+            colsum[j] += code as i32;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Pcg32;
+
+    fn naive_i8(m: usize, k: usize, n: usize, a: &[i8], b: &[i8]) -> Vec<i32> {
+        let mut c = vec![0i32; m * n];
+        for i in 0..m {
+            for p in 0..k {
+                for j in 0..n {
+                    c[i * n + j] += a[i * k + p] as i32 * b[p * n + j] as i32;
+                }
+            }
+        }
+        c
+    }
+
+    fn naive_i16(m: usize, k: usize, n: usize, a: &[i16], b: &[i16]) -> Vec<i32> {
+        let mut c = vec![0i32; m * n];
+        for i in 0..m {
+            for p in 0..k {
+                for j in 0..n {
+                    c[i * n + j] += a[i * k + p] as i32 * b[p * n + j] as i32;
+                }
+            }
+        }
+        c
+    }
+
+    #[test]
+    fn i8_fast_exact_including_tails() {
+        let mut rng = Pcg32::seeded(1);
+        for &(m, k, n) in &[(3usize, 64usize, 5usize), (7, 100, 9), (16, 192, 16), (1, 65, 1)] {
+            let a: Vec<i8> = (0..m * k).map(|_| (rng.below(255) as i32 - 127) as i8).collect();
+            let b: Vec<i8> = (0..k * n).map(|_| (rng.below(255) as i32 - 127) as i8).collect();
+            let mut c = vec![0i32; m * n];
+            gemm_i8_fast(m, k, n, &a, &b, &mut c);
+            assert_eq!(c, naive_i8(m, k, n, &a, &b), "shape {m}x{k}x{n}");
+        }
+    }
+
+    #[test]
+    fn i8_fast_extreme_values() {
+        // saturating corners: -128 everywhere (the bias trick's edge)
+        let (m, k, n) = (2usize, 64usize, 2usize);
+        let a = vec![-128i8; m * k];
+        let b = vec![-128i8; k * n];
+        let mut c = vec![0i32; m * n];
+        gemm_i8_fast(m, k, n, &a, &b, &mut c);
+        assert!(c.iter().all(|&v| v == 64 * 128 * 128));
+    }
+
+    #[test]
+    fn i16_fast_exact_including_tails() {
+        let mut rng = Pcg32::seeded(2);
+        for &(m, k, n) in &[(3usize, 32usize, 5usize), (5, 100, 7), (8, 96, 8), (1, 33, 1)] {
+            let a: Vec<i16> = (0..m * k).map(|_| (rng.below(65535) as i32 - 32767) as i16).collect();
+            let b: Vec<i16> = (0..k * n).map(|_| (rng.below(255) as i32 - 127) as i16).collect();
+            let mut c = vec![0i32; m * n];
+            gemm_i16_fast(m, k, n, &a, &b, &mut c);
+            assert_eq!(c, naive_i16(m, k, n, &a, &b), "shape {m}x{k}x{n}");
+        }
+    }
+
+    #[test]
+    fn prepacked_matches_fast() {
+        let mut rng = Pcg32::seeded(3);
+        let (m, k, n) = (4usize, 96usize, 6usize);
+        let a: Vec<i8> = (0..m * k).map(|_| (rng.below(255) as i32 - 127) as i8).collect();
+        let b: Vec<i8> = (0..k * n).map(|_| (rng.below(255) as i32 - 127) as i8).collect();
+        let mut bt = vec![0i8; k * n];
+        let mut colsum = vec![0i32; n];
+        pack_bt_i8(k, n, &b, &mut bt, &mut colsum);
+        let mut c1 = vec![0i32; m * n];
+        let mut c2 = vec![0i32; m * n];
+        gemm_i8_prepacked(m, k, n, &a, &bt, &colsum, &mut c1);
+        gemm_i8_fast(m, k, n, &a, &b, &mut c2);
+        assert_eq!(c1, c2);
+    }
+
+    #[test]
+    fn codes_bt_fused_pass_matches_two_pass() {
+        use crate::fixedpoint::quantize::{codes_i8, max_abs};
+        use crate::fixedpoint::Scheme;
+        let mut rng = Pcg32::seeded(4);
+        let (k, n) = (64usize, 8usize);
+        let src: Vec<f32> = (0..k * n).map(|_| rng.normal()).collect();
+        let sch = Scheme::for_range(max_abs(&src), 8);
+        let mut bt = vec![0i8; k * n];
+        let mut colsum = vec![0i32; n];
+        codes_i8_bt(k, n, &src, sch, &mut bt, &mut colsum);
+        let mut codes = vec![0i8; k * n];
+        codes_i8(&src, &mut codes, sch);
+        for j in 0..n {
+            let mut s = 0i32;
+            for p in 0..k {
+                assert_eq!(bt[j * k + p], codes[p * n + j]);
+                s += codes[p * n + j] as i32;
+            }
+            assert_eq!(colsum[j], s);
+        }
+    }
+
+    #[test]
+    fn small_k_falls_back_to_portable() {
+        let (m, k, n) = (4usize, 8usize, 4usize);
+        let a = vec![1i8; m * k];
+        let b = vec![2i8; k * n];
+        let mut c = vec![0i32; m * n];
+        gemm_i8_fast(m, k, n, &a, &b, &mut c);
+        assert!(c.iter().all(|&v| v == 16));
+    }
+}

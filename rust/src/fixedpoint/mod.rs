@@ -1,0 +1,16 @@
+//! Fixed-point numeric substrate (system S1 in DESIGN.md).
+//!
+//! - [`scheme`]: bit-width + power-of-two-resolution schemes (Appendix B).
+//! - [`quantize`]: bulk fake-quant / integer codes fused with QEM stats.
+//! - [`gemm`]: i8/i16/f32 GEMM kernels with i32 accumulation — the measured
+//!   substrate for Table 3 / Fig 10 / Appendix E speedups.
+//! - [`conv`]: im2col-based convolution over those GEMMs.
+
+pub mod conv;
+pub mod gemm;
+pub mod gemm_simd;
+pub mod quantize;
+pub mod scheme;
+
+pub use quantize::QuantStats;
+pub use scheme::{Scheme, TensorKind, BIT_STEPS};

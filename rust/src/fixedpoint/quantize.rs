@@ -1,0 +1,218 @@
+//! Bulk quantization: f32 slices → integer codes / fake-quant, fused with
+//! the QEM statistics pass (single traversal — the L3 hot-path version of
+//! `kernels/stats.py`).
+
+use super::scheme::Scheme;
+
+/// QEM statistics of one tensor under one scheme (mirrors kernels/stats.py).
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct QuantStats {
+    /// Σ|x| before quantization.
+    pub sum_abs: f64,
+    /// max|x| before quantization.
+    pub max_abs: f32,
+    /// Σ|x̂| after quantization under the applied scheme.
+    pub sum_abs_q: f64,
+}
+
+impl QuantStats {
+    /// Paper Eq. 2: `Diff = log2(|Σ|x| − Σ|x̂|| / Σ|x| + 1)`.
+    pub fn diff(&self) -> f64 {
+        if self.sum_abs <= 0.0 {
+            return 0.0;
+        }
+        ((self.sum_abs - self.sum_abs_q).abs() / self.sum_abs + 1.0).log2()
+    }
+
+    /// Relative mean error (the pre-log ratio; the paper's "3%" threshold).
+    pub fn ratio(&self) -> f64 {
+        if self.sum_abs <= 0.0 {
+            return 0.0;
+        }
+        (self.sum_abs - self.sum_abs_q).abs() / self.sum_abs
+    }
+}
+
+/// Fake-quantize `xs` in place and return the fused QEM statistics.
+///
+/// One traversal computes Σ|x|, max|x| and Σ|x̂| while writing x̂ — this is
+/// the hot path of the pure-Rust training substrate, kept allocation-free.
+pub fn fake_quant_stats_inplace(xs: &mut [f32], sch: Scheme) -> QuantStats {
+    let r = sch.resolution();
+    let inv_r = 1.0 / r;
+    let lo = sch.qmin() as f32;
+    let hi = sch.qmax() as f32;
+    let mut sum_abs = 0.0f64;
+    let mut sum_abs_q = 0.0f64;
+    let mut max_abs = 0.0f32;
+    for x in xs.iter_mut() {
+        let v = *x;
+        let a = v.abs();
+        sum_abs += a as f64;
+        if a > max_abs {
+            max_abs = a;
+        }
+        let q = (v * inv_r).round_ties_even().clamp(lo, hi) * r;
+        sum_abs_q += q.abs() as f64;
+        *x = q;
+    }
+    QuantStats { sum_abs, max_abs, sum_abs_q }
+}
+
+/// Fake-quantize out of place (`out` must match `xs` length).
+pub fn fake_quant_into(xs: &[f32], out: &mut [f32], sch: Scheme) -> QuantStats {
+    assert_eq!(xs.len(), out.len());
+    out.copy_from_slice(xs);
+    fake_quant_stats_inplace(out, sch)
+}
+
+/// Statistics only (no mutation) — used by QEM probes at update iterations.
+pub fn stats_only(xs: &[f32], sch: Scheme) -> QuantStats {
+    let r = sch.resolution();
+    let inv_r = 1.0 / r;
+    let lo = sch.qmin() as f32;
+    let hi = sch.qmax() as f32;
+    let mut sum_abs = 0.0f64;
+    let mut sum_abs_q = 0.0f64;
+    let mut max_abs = 0.0f32;
+    for &v in xs {
+        let a = v.abs();
+        sum_abs += a as f64;
+        if a > max_abs {
+            max_abs = a;
+        }
+        let q = (v * inv_r).round_ties_even().clamp(lo, hi) * r;
+        sum_abs_q += q.abs() as f64;
+    }
+    QuantStats { sum_abs, max_abs, sum_abs_q }
+}
+
+/// Max |x| of a slice (the paper's `Z` / `Range` probe).
+pub fn max_abs(xs: &[f32]) -> f32 {
+    xs.iter().fold(0.0f32, |a, &x| a.max(x.abs()))
+}
+
+/// Quantize to i8 codes (for the integer GEMM hot path). Panics in debug if
+/// the scheme is wider than 8 bits.
+pub fn codes_i8(xs: &[f32], out: &mut [i8], sch: Scheme) {
+    debug_assert!(sch.bits <= 8);
+    debug_assert_eq!(xs.len(), out.len());
+    let inv_r = 1.0 / sch.resolution();
+    let lo = sch.qmin() as f32;
+    let hi = sch.qmax() as f32;
+    for (o, &x) in out.iter_mut().zip(xs) {
+        *o = (x * inv_r).round_ties_even().clamp(lo, hi) as i8;
+    }
+}
+
+/// Quantize to i16 codes.
+pub fn codes_i16(xs: &[f32], out: &mut [i16], sch: Scheme) {
+    debug_assert!(sch.bits <= 16);
+    debug_assert_eq!(xs.len(), out.len());
+    let inv_r = 1.0 / sch.resolution();
+    let lo = sch.qmin() as f32;
+    let hi = sch.qmax() as f32;
+    for (o, &x) in out.iter_mut().zip(xs) {
+        *o = (x * inv_r).round_ties_even().clamp(lo, hi) as i16;
+    }
+}
+
+/// Quantize to i32 codes (int24 schemes use i32 storage).
+pub fn codes_i32(xs: &[f32], out: &mut [i32], sch: Scheme) {
+    debug_assert_eq!(xs.len(), out.len());
+    let inv_r = 1.0 / sch.resolution();
+    let lo = sch.qmin() as f32;
+    let hi = sch.qmax() as f32;
+    for (o, &x) in out.iter_mut().zip(xs) {
+        *o = (x * inv_r).round_ties_even().clamp(lo, hi) as i32;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::check;
+    use crate::util::Pcg32;
+
+    fn randvec(seed: u64, n: usize, scale: f32) -> Vec<f32> {
+        let mut r = Pcg32::seeded(seed);
+        (0..n).map(|_| r.normal() * scale).collect()
+    }
+
+    #[test]
+    fn stats_match_scalar_path() {
+        let xs = randvec(1, 1000, 2.0);
+        let sch = Scheme::for_range(max_abs(&xs), 8);
+        let st = stats_only(&xs, sch);
+        let mut ys = xs.clone();
+        let st2 = fake_quant_stats_inplace(&mut ys, sch);
+        assert_eq!(st, st2);
+        // mutation matches per-element fake_quant
+        for (&x, &y) in xs.iter().zip(&ys) {
+            assert_eq!(y, sch.fake_quant(x));
+        }
+    }
+
+    #[test]
+    fn diff_formula() {
+        let st = QuantStats { sum_abs: 100.0, sum_abs_q: 97.0, max_abs: 1.0 };
+        assert!((st.diff() - (1.03f64).log2()).abs() < 1e-12);
+        assert!((st.ratio() - 0.03).abs() < 1e-12);
+    }
+
+    #[test]
+    fn diff_zero_cases() {
+        assert_eq!(QuantStats::default().diff(), 0.0);
+        let st = QuantStats { sum_abs: 5.0, sum_abs_q: 5.0, max_abs: 1.0 };
+        assert_eq!(st.diff(), 0.0);
+    }
+
+    #[test]
+    fn prop_diff_monotone_in_bits() {
+        check("diff-monotone-bits", 40, |g| {
+            let _sc = g.f32_log(1e-3, 1e3);
+            let xs = g.normal_vec(512, _sc);
+            let z = max_abs(&xs);
+            let d8 = stats_only(&xs, Scheme::for_range(z, 8)).diff();
+            let d16 = stats_only(&xs, Scheme::for_range(z, 16)).diff();
+            let d24 = stats_only(&xs, Scheme::for_range(z, 24)).diff();
+            assert!(d8 >= d16 - 1e-9 && d16 >= d24 - 1e-9, "{d8} {d16} {d24}");
+            assert!(d24 < 1e-3);
+        });
+    }
+
+    #[test]
+    fn prop_codes_match_fake_quant() {
+        check("codes-vs-fq", 30, |g| {
+            let _sc = g.f32_log(1e-2, 1e2);
+            let xs = g.normal_vec(128, _sc);
+            let sch = Scheme::for_range(max_abs(&xs), 8);
+            let mut c = vec![0i8; xs.len()];
+            codes_i8(&xs, &mut c, sch);
+            for (&x, &code) in xs.iter().zip(&c) {
+                assert_eq!(code as f32 * sch.resolution(), sch.fake_quant(x));
+            }
+            let sch16 = Scheme::for_range(max_abs(&xs), 16);
+            let mut c16 = vec![0i16; xs.len()];
+            codes_i16(&xs, &mut c16, sch16);
+            for (&x, &code) in xs.iter().zip(&c16) {
+                assert_eq!(code as f32 * sch16.resolution(), sch16.fake_quant(x));
+            }
+        });
+    }
+
+    #[test]
+    fn large_variance_has_larger_diff_than_uniformish() {
+        // Observation 1/3 of the paper: centralized long-tail distributions
+        // (large σ relative to resolution) suffer more at int8.
+        let mut r = Pcg32::seeded(2);
+        // long-tailed: mixture of small and huge values
+        let long_tail: Vec<f32> = (0..4096)
+            .map(|i| if i % 100 == 0 { r.normal() * 100.0 } else { r.normal() * 0.1 })
+            .collect();
+        let uniform: Vec<f32> = (0..4096).map(|_| r.range(-1.0, 1.0)).collect();
+        let d_tail = stats_only(&long_tail, Scheme::for_range(max_abs(&long_tail), 8)).diff();
+        let d_unif = stats_only(&uniform, Scheme::for_range(max_abs(&uniform), 8)).diff();
+        assert!(d_tail > d_unif, "tail={d_tail} unif={d_unif}");
+    }
+}

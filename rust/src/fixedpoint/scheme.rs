@@ -1,0 +1,219 @@
+//! Fixed-point quantization scheme (paper Appendix B, "scheme 1").
+//!
+//! A scheme is a bit-width `n` and a power-of-two resolution `r = 2^s`.
+//! Codes are `I = clamp(round(F / r), -2^(n-1), 2^(n-1)-1)` and the
+//! dequantized value is `F̂ = r·I`, so the representable range is
+//! `[r·qmin, r·qmax]` (Table 4). This file is the single source of truth for
+//! scheme math on the Rust side and is pinned against `kernels/ref.py` via
+//! the shared test vectors in `rust/tests/test_cross_oracle.rs`.
+
+/// Bit-widths the paper's QPA steps through (n' = 8 growth).
+pub const BIT_STEPS: [u8; 4] = [8, 16, 24, 32];
+
+/// A fixed-point quantization scheme: bit-width + resolution exponent.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Scheme {
+    /// Total bit-width n (sign + (n-1)-bit magnitude), 2..=32.
+    pub bits: u8,
+    /// Resolution exponent s with r = 2^s.
+    pub s: i32,
+}
+
+impl Scheme {
+    /// Largest representable code (2^(n-1) − 1).
+    #[inline]
+    pub fn qmax(&self) -> i64 {
+        (1i64 << (self.bits - 1)) - 1
+    }
+
+    /// Smallest representable code (−2^(n-1)).
+    #[inline]
+    pub fn qmin(&self) -> i64 {
+        -(1i64 << (self.bits - 1))
+    }
+
+    /// Resolution r = 2^s.
+    #[inline]
+    pub fn resolution(&self) -> f32 {
+        (self.s as f32).exp2()
+    }
+
+    /// Representable range top, r·qmax (≈ the paper's `Range`).
+    #[inline]
+    pub fn range_top(&self) -> f32 {
+        self.resolution() * self.qmax() as f32
+    }
+
+    /// The paper's scale rule: `s = ceil(log2(Z / (2^(n-1) − 1)))` for
+    /// max-abs `Z`. Zero/non-finite Z falls back to s = −(n−1) (range ~[−1,1]).
+    pub fn for_range(max_abs: f32, bits: u8) -> Scheme {
+        assert!((2..=32).contains(&bits), "bits out of range: {bits}");
+        let q_top = ((1i64 << (bits - 1)) - 1) as f32;
+        let s = if max_abs > 0.0 && max_abs.is_finite() {
+            (max_abs / q_top).log2().ceil() as i32
+        } else {
+            -(bits as i32 - 1)
+        };
+        Scheme { bits, s }
+    }
+
+    /// Quantize one value to its integer code.
+    #[inline]
+    pub fn code(&self, x: f32) -> i32 {
+        let r = self.resolution();
+        let q = (x / r).round_ties_even_away(); // see helper below
+        q.clamp(self.qmin() as f32, self.qmax() as f32) as i32
+    }
+
+    /// Dequantize a code.
+    #[inline]
+    pub fn decode(&self, code: i32) -> f32 {
+        code as f32 * self.resolution()
+    }
+
+    /// Fake-quantize one value (quantize + dequantize).
+    #[inline]
+    pub fn fake_quant(&self, x: f32) -> f32 {
+        self.decode(self.code(x))
+    }
+}
+
+/// Rounding helper matching `jnp.round` / `np.round` (banker's rounding,
+/// round-half-to-even) so the Rust substrate is bit-identical to the oracle.
+pub trait RoundTiesEven {
+    fn round_ties_even_away(self) -> f32;
+}
+
+impl RoundTiesEven for f32 {
+    #[inline]
+    fn round_ties_even_away(self) -> f32 {
+        // f32::round_ties_even is stable since 1.77.
+        self.round_ties_even()
+    }
+}
+
+/// The three tensor roles Algorithm 1 quantizes per layer.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum TensorKind {
+    /// Weights W_l (pinned int8 in the paper's experiments).
+    Weight,
+    /// Activations X_l (pinned int8).
+    Activation,
+    /// Activation gradients ΔX_{l+1} (adaptive int8/16/24).
+    Gradient,
+}
+
+impl TensorKind {
+    pub const ALL: [TensorKind; 3] = [TensorKind::Weight, TensorKind::Activation, TensorKind::Gradient];
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            TensorKind::Weight => "W",
+            TensorKind::Activation => "X",
+            TensorKind::Gradient => "dX",
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::check;
+
+    #[test]
+    fn code_bounds_by_width() {
+        for bits in BIT_STEPS {
+            let s = Scheme::for_range(1.0, bits);
+            assert_eq!(s.qmax(), (1i64 << (bits - 1)) - 1);
+            assert_eq!(s.qmin(), -(1i64 << (bits - 1)));
+        }
+    }
+
+    #[test]
+    fn scale_covers_range() {
+        // r*qmax >= Z for a spread of magnitudes and widths.
+        for &z in &[1e-6f32, 0.3, 1.0, 77.0, 1e6] {
+            for bits in BIT_STEPS {
+                let s = Scheme::for_range(z, bits);
+                assert!(
+                    s.range_top() >= z * (1.0 - 1e-6),
+                    "z={z} bits={bits} top={}",
+                    s.range_top()
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn zero_range_fallback() {
+        let s = Scheme::for_range(0.0, 8);
+        assert_eq!(s.s, -7);
+        assert_eq!(s.fake_quant(0.0), 0.0);
+    }
+
+    #[test]
+    fn saturation() {
+        let s = Scheme { bits: 8, s: 0 }; // r = 1
+        assert_eq!(s.code(1000.0), 127);
+        assert_eq!(s.code(-1000.0), -128);
+        assert_eq!(s.fake_quant(1000.0), 127.0);
+    }
+
+    #[test]
+    fn round_half_to_even_matches_numpy() {
+        let s = Scheme { bits: 8, s: 0 };
+        assert_eq!(s.code(0.5), 0); // numpy rounds 0.5 -> 0
+        assert_eq!(s.code(1.5), 2);
+        assert_eq!(s.code(2.5), 2);
+        assert_eq!(s.code(-0.5), 0);
+        assert_eq!(s.code(-1.5), -2);
+    }
+
+    #[test]
+    fn prop_fake_quant_error_half_resolution() {
+        check("fq-error-bound", 50, |g| {
+            let bits = *g.choose(&[8u8, 16, 24]);
+            let scale = g.f32_log(1e-4, 1e4);
+            let xs = g.normal_vec(256, scale);
+            let z = xs.iter().fold(0f32, |a, &x| a.max(x.abs()));
+            let sch = Scheme::for_range(z, bits);
+            for &x in &xs {
+                let e = (x - sch.fake_quant(x)).abs();
+                assert!(e <= sch.resolution() / 2.0 + 1e-9, "x={x} err={e} r={}", sch.resolution());
+            }
+        });
+    }
+
+    #[test]
+    fn prop_idempotent() {
+        check("fq-idempotent", 30, |g| {
+            let bits = *g.choose(&[8u8, 16]);
+            let _sc = g.f32_log(1e-2, 1e2);
+            let xs = g.normal_vec(64, _sc);
+            let z = xs.iter().fold(0f32, |a, &x| a.max(x.abs()));
+            let sch = Scheme::for_range(z, bits);
+            for &x in &xs {
+                let q1 = sch.fake_quant(x);
+                assert_eq!(q1, sch.fake_quant(q1));
+            }
+        });
+    }
+
+    #[test]
+    fn prop_more_bits_never_worse() {
+        check("bits-monotone", 30, |g| {
+            let _sc = g.f32_log(1e-2, 1e2);
+            let xs = g.normal_vec(256, _sc);
+            let z = xs.iter().fold(0f32, |a, &x| a.max(x.abs()));
+            let e8: f64 = xs
+                .iter()
+                .map(|&x| (x - Scheme::for_range(z, 8).fake_quant(x)).abs() as f64)
+                .sum();
+            let e16: f64 = xs
+                .iter()
+                .map(|&x| (x - Scheme::for_range(z, 16).fake_quant(x)).abs() as f64)
+                .sum();
+            assert!(e16 <= e8 + 1e-6, "e8={e8} e16={e16}");
+        });
+    }
+}

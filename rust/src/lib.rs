@@ -1,0 +1,27 @@
+//! # Adaptive Precision Training (APT)
+//!
+//! Production-grade reproduction of *"Adaptive Precision Training: Quantify
+//! Back Propagation in Neural Networks with Fixed-point Numbers"*
+//! (Zhang et al., 2019): layer-wise precision-adaptive fixed-point
+//! quantization of the forward **and** backward passes, with bit-widths
+//! chosen online by the QEM/QPA controller.
+//!
+//! Three-layer architecture (see DESIGN.md):
+//! - **L3** (this crate): coordinator — `apt` controller, `nn` training
+//!   substrate, experiment drivers, PJRT `runtime` for the AOT artifacts.
+//! - **L2** (`python/compile/model.py`): JAX train-step graphs, AOT-lowered
+//!   to HLO text at build time.
+//! - **L1** (`python/compile/kernels/`): Pallas quantization/stats/qmatmul
+//!   kernels that lower into those graphs.
+
+pub mod apt;
+pub mod bench;
+pub mod coordinator;
+pub mod data;
+pub mod exp;
+pub mod fixedpoint;
+pub mod nn;
+pub mod opcount;
+pub mod runtime;
+pub mod tensor;
+pub mod util;

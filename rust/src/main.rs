@@ -1,0 +1,94 @@
+//! `apt` — the Adaptive Precision Training coordinator CLI.
+//!
+//! Subcommands:
+//!   exp <id|all> [--iters N ...]   run a paper experiment (fig1..table5)
+//!   train [--model M --mode Q]     train one classifier and report
+//!   opcount [--batch N]            print the Fig7/Table5 analytic counts
+//!   list                           list experiments and models
+use apt::exp;
+use apt::exp::common::{grad_mix_string, train_classifier, TrainOpts};
+use apt::nn::QuantMode;
+use apt::util::cli::Args;
+
+fn usage() -> ! {
+    eprintln!(
+        "usage: apt <command>\n\
+         \n\
+         commands:\n\
+         \x20 exp <id|all> [--iters N] [--quick]   run a paper experiment\n\
+         \x20 train [--model alexnet|vgg|resnet|mobilenet|inception|mlp]\n\
+         \x20       [--mode float32|adaptive|int8|int16] [--iters N] [--lr F]\n\
+         \x20 opcount [--batch N]\n\
+         \x20 list\n\
+         \n\
+         experiments: {}",
+        exp::ALL.join(" ")
+    );
+    std::process::exit(2);
+}
+
+fn main() {
+    let args = Args::from_env();
+    let pos = args.positional().to_vec();
+    match pos.first().map(|s| s.as_str()) {
+        Some("exp") => {
+            let id = pos.get(1).map(|s| s.as_str()).unwrap_or("all");
+            if id == "all" {
+                for e in exp::ALL {
+                    exp::run(e, &args);
+                    println!();
+                }
+            } else if !exp::run(id, &args) {
+                eprintln!("unknown experiment {id:?}");
+                usage();
+            }
+        }
+        Some("train") => {
+            let model = args.str_or("model", "alexnet");
+            let iters = args.u64_or("iters", 300);
+            let mode = match args.str_or("mode", "adaptive").as_str() {
+                "float32" | "f32" => QuantMode::Float32,
+                "adaptive" => {
+                    let mut cfg = apt::apt::AptConfig::default();
+                    cfg.init_phase_iters = iters / 10;
+                    QuantMode::Adaptive(cfg)
+                }
+                s if s.starts_with("int") => {
+                    QuantMode::Static(s[3..].parse().expect("intN"))
+                }
+                other => {
+                    eprintln!("unknown mode {other:?}");
+                    usage();
+                }
+            };
+            let opts = TrainOpts {
+                model,
+                iters,
+                mode,
+                lr: args.f32_or("lr", 0.01),
+                batch: args.usize_or("batch", 16),
+                seed: args.u64_or("seed", 0),
+                noise: args.f32_or("noise", 0.5),
+                ..Default::default()
+            };
+            let run = train_classifier(&opts, None);
+            println!("{}: eval acc {:.3}", run.label, run.eval_acc);
+            println!("gradient bits: {}", grad_mix_string(&run.ledger));
+            println!(
+                "QPA updates: {} over {} iters",
+                run.ledger.total_updates(),
+                iters
+            );
+        }
+        Some("opcount") => {
+            exp::run("fig7", &args);
+            println!();
+            exp::run("table5", &args);
+        }
+        Some("list") => {
+            println!("experiments: {}", exp::ALL.join(" "));
+            println!("models: {} mlp", apt::nn::models::ZOO.join(" "));
+        }
+        _ => usage(),
+    }
+}

@@ -1,0 +1,207 @@
+//! Activation / shape layers: ReLU, max-pool 2×2, global average pool.
+//! None of these are quantized (the paper quantizes GEMM operands only).
+
+use super::{Layer, TrainCtx};
+use crate::tensor::Tensor;
+
+/// Elementwise ReLU.
+pub struct ReLU {
+    name: String,
+    mask: Vec<bool>,
+}
+
+impl ReLU {
+    pub fn new(name: &str) -> Self {
+        ReLU { name: name.to_string(), mask: Vec::new() }
+    }
+}
+
+impl Layer for ReLU {
+    fn forward(&mut self, x: &Tensor, ctx: &mut TrainCtx) -> Tensor {
+        let mut y = x.clone();
+        if ctx.training {
+            self.mask = x.data.iter().map(|&v| v > 0.0).collect();
+        }
+        y.map_inplace(|v| v.max(0.0));
+        y
+    }
+
+    fn backward(&mut self, g: &Tensor, _ctx: &mut TrainCtx) -> Tensor {
+        assert_eq!(g.len(), self.mask.len());
+        let mut d = g.clone();
+        for (v, &m) in d.data.iter_mut().zip(&self.mask) {
+            if !m {
+                *v = 0.0;
+            }
+        }
+        d
+    }
+
+    fn name(&self) -> &str {
+        &self.name
+    }
+}
+
+/// 2×2 max pool, stride 2, over NCHW carried as [n, c*h*w].
+pub struct MaxPool2 {
+    name: String,
+    pub c: usize,
+    pub h: usize,
+    pub w: usize,
+    argmax: Vec<usize>,
+}
+
+impl MaxPool2 {
+    pub fn new(name: &str, c: usize, h: usize, w: usize) -> Self {
+        assert!(h % 2 == 0 && w % 2 == 0, "pool needs even dims, got {h}x{w}");
+        MaxPool2 { name: name.to_string(), c, h, w, argmax: Vec::new() }
+    }
+
+    pub fn out_hw(&self) -> (usize, usize) {
+        (self.h / 2, self.w / 2)
+    }
+}
+
+impl Layer for MaxPool2 {
+    fn forward(&mut self, x: &Tensor, ctx: &mut TrainCtx) -> Tensor {
+        let n = x.dim(0);
+        let (c, h, w) = (self.c, self.h, self.w);
+        assert_eq!(x.dim(1), c * h * w);
+        let (oh, ow) = self.out_hw();
+        let mut y = Tensor::zeros(&[n, c * oh * ow]);
+        self.argmax.clear();
+        self.argmax.resize(n * c * oh * ow, 0);
+        for img in 0..n {
+            for ch in 0..c {
+                let xi = &x.data[img * c * h * w + ch * h * w..][..h * w];
+                let base_o = img * c * oh * ow + ch * oh * ow;
+                for oy in 0..oh {
+                    for ox in 0..ow {
+                        let mut best = f32::NEG_INFINITY;
+                        let mut bi = 0usize;
+                        for dy in 0..2 {
+                            for dx in 0..2 {
+                                let idx = (2 * oy + dy) * w + 2 * ox + dx;
+                                if xi[idx] > best {
+                                    best = xi[idx];
+                                    bi = idx;
+                                }
+                            }
+                        }
+                        y.data[base_o + oy * ow + ox] = best;
+                        if ctx.training {
+                            self.argmax[base_o + oy * ow + ox] = img * c * h * w + ch * h * w + bi;
+                        }
+                    }
+                }
+            }
+        }
+        y
+    }
+
+    fn backward(&mut self, g: &Tensor, _ctx: &mut TrainCtx) -> Tensor {
+        let n = g.dim(0);
+        let mut dx = Tensor::zeros(&[n, self.c * self.h * self.w]);
+        for (i, &gi) in g.data.iter().enumerate() {
+            dx.data[self.argmax[i]] += gi;
+        }
+        dx
+    }
+
+    fn name(&self) -> &str {
+        &self.name
+    }
+}
+
+/// Global average pool: [n, c*h*w] → [n, c].
+pub struct GlobalAvgPool {
+    name: String,
+    pub c: usize,
+    pub h: usize,
+    pub w: usize,
+}
+
+impl GlobalAvgPool {
+    pub fn new(name: &str, c: usize, h: usize, w: usize) -> Self {
+        GlobalAvgPool { name: name.to_string(), c, h, w }
+    }
+}
+
+impl Layer for GlobalAvgPool {
+    fn forward(&mut self, x: &Tensor, _ctx: &mut TrainCtx) -> Tensor {
+        let n = x.dim(0);
+        let hw = self.h * self.w;
+        assert_eq!(x.dim(1), self.c * hw);
+        let mut y = Tensor::zeros(&[n, self.c]);
+        for img in 0..n {
+            for ch in 0..self.c {
+                let s: f32 = x.data[img * self.c * hw + ch * hw..][..hw].iter().sum();
+                y.data[img * self.c + ch] = s / hw as f32;
+            }
+        }
+        y
+    }
+
+    fn backward(&mut self, g: &Tensor, _ctx: &mut TrainCtx) -> Tensor {
+        let n = g.dim(0);
+        let hw = self.h * self.w;
+        let mut dx = Tensor::zeros(&[n, self.c * hw]);
+        let inv = 1.0 / hw as f32;
+        for img in 0..n {
+            for ch in 0..self.c {
+                let gv = g.data[img * self.c + ch] * inv;
+                for v in dx.data[img * self.c * hw + ch * hw..][..hw].iter_mut() {
+                    *v = gv;
+                }
+            }
+        }
+        dx
+    }
+
+    fn name(&self) -> &str {
+        &self.name
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Pcg32;
+
+    #[test]
+    fn relu_masks_gradient() {
+        let mut r = ReLU::new("r");
+        let x = Tensor::from_vec(&[1, 4], vec![-1.0, 2.0, -3.0, 4.0]);
+        let mut ctx = TrainCtx::new();
+        let y = r.forward(&x, &mut ctx);
+        assert_eq!(y.data, vec![0.0, 2.0, 0.0, 4.0]);
+        let g = Tensor::filled(&[1, 4], 1.0);
+        let d = r.backward(&g, &mut ctx);
+        assert_eq!(d.data, vec![0.0, 1.0, 0.0, 1.0]);
+    }
+
+    #[test]
+    fn maxpool_forward_backward() {
+        let mut p = MaxPool2::new("p", 1, 2, 2);
+        let x = Tensor::from_vec(&[1, 4], vec![1.0, 5.0, 3.0, 2.0]);
+        let mut ctx = TrainCtx::new();
+        let y = p.forward(&x, &mut ctx);
+        assert_eq!(y.data, vec![5.0]);
+        let d = p.backward(&Tensor::filled(&[1, 1], 2.0), &mut ctx);
+        assert_eq!(d.data, vec![0.0, 2.0, 0.0, 0.0]);
+    }
+
+    #[test]
+    fn gap_mean_and_backward() {
+        let mut p = GlobalAvgPool::new("g", 2, 2, 2);
+        let mut x = Tensor::zeros(&[1, 8]);
+        let mut rng = Pcg32::seeded(0);
+        rng.fill_normal(&mut x.data, 1.0);
+        let mut ctx = TrainCtx::new();
+        let y = p.forward(&x, &mut ctx);
+        let m0: f32 = x.data[..4].iter().sum::<f32>() / 4.0;
+        assert!((y.data[0] - m0).abs() < 1e-6);
+        let d = p.backward(&Tensor::filled(&[1, 2], 4.0), &mut ctx);
+        assert!(d.data.iter().all(|&v| (v - 1.0).abs() < 1e-6));
+    }
+}

@@ -1,0 +1,468 @@
+//! Convolution layers (standard + depthwise) with Algorithm-1 quantization.
+//!
+//! Internally a conv is the GEMM `W[out_c × CKK] · patches[CKK × OHW]` over
+//! the im2col lowering, so quantization hits exactly the operands the paper
+//! quantizes. NCHW activations flattened as `[n, c*h*w]` 2-D tensors with
+//! the geometry carried by the layer.
+
+use super::{Layer, QuantMode, TrainCtx};
+use crate::apt::LayerControllers;
+use crate::fixedpoint::conv::{col2im, im2col, Conv2dGeom};
+use crate::fixedpoint::gemm;
+use crate::fixedpoint::quantize::fake_quant_stats_inplace;
+use crate::fixedpoint::TensorKind;
+use crate::tensor::Tensor;
+use crate::util::Pcg32;
+
+pub struct Conv2d {
+    name: String,
+    pub geom: Conv2dGeom,
+    pub in_h: usize,
+    pub in_w: usize,
+    pub w: Tensor, // out_c × (in_c·kh·kw)
+    pub b: Tensor,
+    pub gw: Tensor,
+    pub gb: Tensor,
+    ctl: Option<LayerControllers>,
+    patches_q: Vec<Tensor>, // per image, quantized patch matrix
+    w_q: Tensor,
+    last_g: Option<Tensor>,
+    pub grad_bits_override: Option<u8>,
+}
+
+impl Conv2d {
+    pub fn new(
+        name: &str,
+        geom: Conv2dGeom,
+        in_h: usize,
+        in_w: usize,
+        mode: QuantMode,
+        rng: &mut Pcg32,
+    ) -> Self {
+        let fan_in = geom.in_c * geom.kh * geom.kw;
+        let mut w = Tensor::zeros(&[geom.out_c, fan_in]);
+        rng.fill_normal(&mut w.data, (2.0 / fan_in as f32).sqrt());
+        Conv2d {
+            name: name.to_string(),
+            geom,
+            in_h,
+            in_w,
+            b: Tensor::zeros(&[geom.out_c]),
+            gw: Tensor::zeros(&[geom.out_c, fan_in]),
+            gb: Tensor::zeros(&[geom.out_c]),
+            ctl: mode.config().map(|c| LayerControllers::new(c, name)),
+            w,
+            patches_q: Vec::new(),
+            w_q: Tensor::zeros(&[0]),
+            last_g: None,
+            grad_bits_override: None,
+        }
+    }
+
+    pub fn out_hw(&self) -> (usize, usize) {
+        self.geom.out_hw(self.in_h, self.in_w)
+    }
+
+    pub fn out_len(&self) -> usize {
+        let (oh, ow) = self.out_hw();
+        self.geom.out_c * oh * ow
+    }
+}
+
+impl Layer for Conv2d {
+    fn forward(&mut self, x: &Tensor, ctx: &mut TrainCtx) -> Tensor {
+        let n = x.dim(0);
+        let (h, w) = (self.in_h, self.in_w);
+        let g = self.geom;
+        assert_eq!(x.dim(1), g.in_c * h * w, "{}: input size", self.name);
+        let (rows, cols) = g.im2col_dims(h, w);
+
+        // quantization parameter update + weight fake-quant
+        let (sw_opt, sx_opt) = match &mut self.ctl {
+            None => (None, None),
+            Some(ctl) => {
+                let sw = if ctl.w.needs_update(ctx.iter) {
+                    ctl.w.maybe_update_from_data(ctx.iter, &self.w.data, &mut ctx.ledger)
+                } else {
+                    ctl.w.scheme()
+                };
+                let sx = if ctl.x.needs_update(ctx.iter) {
+                    ctl.x.maybe_update_from_data(ctx.iter, &x.data, &mut ctx.ledger)
+                } else {
+                    ctl.x.scheme()
+                };
+                (Some(sw), Some(sx))
+            }
+        };
+        let mut wq = self.w.clone();
+        if let Some(sw) = sw_opt {
+            fake_quant_stats_inplace(&mut wq.data, sw);
+        }
+
+        let (oh, ow) = g.out_hw(h, w);
+        let mut out = Tensor::zeros(&[n, g.out_c * oh * ow]);
+        self.patches_q.clear();
+        let mut patch = vec![0.0f32; rows * cols];
+        for img in 0..n {
+            let xi = &x.data[img * g.in_c * h * w..(img + 1) * g.in_c * h * w];
+            im2col(g, h, w, xi, &mut patch);
+            if let Some(sx) = sx_opt {
+                fake_quant_stats_inplace(&mut patch, sx);
+            }
+            let co = &mut out.data[img * g.out_c * cols..(img + 1) * g.out_c * cols];
+            gemm::gemm_f32(g.out_c, rows, cols, &wq.data, &patch, co);
+            // bias per output channel
+            for oc in 0..g.out_c {
+                let bv = self.b.data[oc];
+                for v in co[oc * cols..(oc + 1) * cols].iter_mut() {
+                    *v += bv;
+                }
+            }
+            if ctx.training {
+                self.patches_q.push(Tensor::from_vec(&[rows, cols], patch.clone()));
+            }
+        }
+        if ctx.training {
+            self.w_q = wq;
+        }
+        out
+    }
+
+    fn backward(&mut self, gout: &Tensor, ctx: &mut TrainCtx) -> Tensor {
+        let n = gout.dim(0);
+        let g = self.geom;
+        let (h, w) = (self.in_h, self.in_w);
+        let (rows, cols) = g.im2col_dims(h, w);
+
+        // quantize the incoming activation gradient (Algorithm 1's ΔX̂)
+        let mut gq = gout.clone();
+        if let Some(ctl) = &mut self.ctl {
+            let sg = match self.grad_bits_override {
+                Some(bits) => crate::fixedpoint::Scheme::for_range(gout.max_abs(), bits),
+                None => {
+                    if ctl.g.needs_update(ctx.iter) {
+                        ctl.g.maybe_update_from_data(ctx.iter, &gout.data, &mut ctx.ledger)
+                    } else {
+                        ctl.g.scheme()
+                    }
+                }
+            };
+            ctx.ledger.trace_bits(&self.name, TensorKind::Gradient, ctx.iter, sg.bits);
+            fake_quant_stats_inplace(&mut gq.data, sg);
+        }
+        self.last_g = Some(gout.clone());
+
+        let mut dx = Tensor::zeros(&[n, g.in_c * h * w]);
+        let mut dpatch = vec![0.0f32; rows * cols];
+        let mut wt = vec![0.0f32; self.w.len()];
+        let wsrc = if self.ctl.is_some() { &self.w_q } else { &self.w };
+        gemm::transpose(g.out_c, rows, &wsrc.data, &mut wt);
+        let mut dw_local = vec![0.0f32; self.w.len()];
+        let mut patch_t = vec![0.0f32; rows * cols];
+        for img in 0..n {
+            let gi = &gq.data[img * g.out_c * cols..(img + 1) * g.out_c * cols];
+            // WTGRAD: dW += ĝ[out_c×cols] · patchᵀ[cols×rows]
+            let pq = &self.patches_q[img];
+            gemm::transpose(rows, cols, &pq.data, &mut patch_t);
+            gemm::gemm_f32(g.out_c, cols, rows, gi, &patch_t, &mut dw_local);
+            for (a, &b) in self.gw.data.iter_mut().zip(dw_local.iter()) {
+                *a += b;
+            }
+            // bias grad
+            for oc in 0..g.out_c {
+                self.gb.data[oc] += gi[oc * cols..(oc + 1) * cols].iter().sum::<f32>();
+            }
+            // BPROP: dpatch = Ŵᵀ[rows×out_c] · ĝ[out_c×cols]; col2im → dx
+            gemm::gemm_f32(rows, g.out_c, cols, &wt, gi, &mut dpatch);
+            let dxi = &mut dx.data[img * g.in_c * h * w..(img + 1) * g.in_c * h * w];
+            col2im(g, h, w, &dpatch, dxi);
+        }
+        dx
+    }
+
+    fn visit_params(&mut self, f: &mut dyn FnMut(&mut Tensor, &mut Tensor)) {
+        f(&mut self.w, &mut self.gw);
+        f(&mut self.b, &mut self.gb);
+    }
+
+    fn name(&self) -> &str {
+        &self.name
+    }
+
+    fn last_grad(&self) -> Option<&Tensor> {
+        self.last_g.as_ref()
+    }
+
+    fn set_grad_override(&mut self, layer: &str, bits: Option<u8>) -> bool {
+        if layer == self.name {
+            self.grad_bits_override = bits;
+            true
+        } else {
+            false
+        }
+    }
+}
+
+/// Depthwise 3×3 convolution (MobileNet's separable building block).
+/// Quantization applies to the per-channel kernels and activations the same
+/// way; implemented directly (no im2col) since each channel is independent.
+pub struct DepthwiseConv2d {
+    name: String,
+    pub c: usize,
+    pub in_h: usize,
+    pub in_w: usize,
+    pub stride: usize,
+    pub w: Tensor, // c × 9
+    pub gw: Tensor,
+    ctl: Option<LayerControllers>,
+    x_q: Tensor,
+    w_q: Tensor,
+    last_g: Option<Tensor>,
+}
+
+impl DepthwiseConv2d {
+    pub fn new(name: &str, c: usize, in_h: usize, in_w: usize, stride: usize, mode: QuantMode, rng: &mut Pcg32) -> Self {
+        let mut w = Tensor::zeros(&[c, 9]);
+        rng.fill_normal(&mut w.data, (2.0 / 9.0f32).sqrt());
+        DepthwiseConv2d {
+            name: name.to_string(),
+            c,
+            in_h,
+            in_w,
+            stride,
+            gw: Tensor::zeros(&[c, 9]),
+            ctl: mode.config().map(|cg| LayerControllers::new(cg, name)),
+            w,
+            x_q: Tensor::zeros(&[0]),
+            w_q: Tensor::zeros(&[0]),
+            last_g: None,
+        }
+    }
+
+    pub fn out_hw(&self) -> (usize, usize) {
+        ((self.in_h + 2 - 3) / self.stride + 1, (self.in_w + 2 - 3) / self.stride + 1)
+    }
+}
+
+impl Layer for DepthwiseConv2d {
+    fn forward(&mut self, x: &Tensor, ctx: &mut TrainCtx) -> Tensor {
+        let n = x.dim(0);
+        let (h, w) = (self.in_h, self.in_w);
+        let (oh, ow) = self.out_hw();
+        assert_eq!(x.dim(1), self.c * h * w);
+
+        let (mut xq, mut wq) = (x.clone(), self.w.clone());
+        if let Some(ctl) = &mut self.ctl {
+            let sw = if ctl.w.needs_update(ctx.iter) {
+                ctl.w.maybe_update_from_data(ctx.iter, &self.w.data, &mut ctx.ledger)
+            } else {
+                ctl.w.scheme()
+            };
+            let sx = if ctl.x.needs_update(ctx.iter) {
+                ctl.x.maybe_update_from_data(ctx.iter, &x.data, &mut ctx.ledger)
+            } else {
+                ctl.x.scheme()
+            };
+            fake_quant_stats_inplace(&mut xq.data, sx);
+            fake_quant_stats_inplace(&mut wq.data, sw);
+        }
+
+        let mut out = Tensor::zeros(&[n, self.c * oh * ow]);
+        for img in 0..n {
+            for c in 0..self.c {
+                let xi = &xq.data[img * self.c * h * w + c * h * w..][..h * w];
+                let k = &wq.data[c * 9..(c + 1) * 9];
+                let oi = &mut out.data[img * self.c * oh * ow + c * oh * ow..][..oh * ow];
+                for oy in 0..oh {
+                    for ox in 0..ow {
+                        let mut acc = 0.0f32;
+                        for ky in 0..3 {
+                            let iy = (oy * self.stride + ky) as isize - 1;
+                            if iy < 0 || iy >= h as isize {
+                                continue;
+                            }
+                            for kx in 0..3 {
+                                let ix = (ox * self.stride + kx) as isize - 1;
+                                if ix < 0 || ix >= w as isize {
+                                    continue;
+                                }
+                                acc += k[ky * 3 + kx] * xi[iy as usize * w + ix as usize];
+                            }
+                        }
+                        oi[oy * ow + ox] = acc;
+                    }
+                }
+            }
+        }
+        if ctx.training {
+            self.x_q = xq;
+            self.w_q = wq;
+        }
+        out
+    }
+
+    fn backward(&mut self, gout: &Tensor, ctx: &mut TrainCtx) -> Tensor {
+        let n = gout.dim(0);
+        let (h, w) = (self.in_h, self.in_w);
+        let (oh, ow) = self.out_hw();
+        let mut gq = gout.clone();
+        if let Some(ctl) = &mut self.ctl {
+            let sg = if ctl.g.needs_update(ctx.iter) {
+                ctl.g.maybe_update_from_data(ctx.iter, &gout.data, &mut ctx.ledger)
+            } else {
+                ctl.g.scheme()
+            };
+            ctx.ledger.trace_bits(&self.name, TensorKind::Gradient, ctx.iter, sg.bits);
+            fake_quant_stats_inplace(&mut gq.data, sg);
+        }
+        self.last_g = Some(gout.clone());
+
+        let mut dx = Tensor::zeros(&[n, self.c * h * w]);
+        for img in 0..n {
+            for c in 0..self.c {
+                let xi = &self.x_q.data[img * self.c * h * w + c * h * w..][..h * w];
+                let k = &self.w_q.data[c * 9..(c + 1) * 9];
+                let gi = &gq.data[img * self.c * oh * ow + c * oh * ow..][..oh * ow];
+                let dxi = &mut dx.data[img * self.c * h * w + c * h * w..][..h * w];
+                let gk = &mut self.gw.data[c * 9..(c + 1) * 9];
+                for oy in 0..oh {
+                    for ox in 0..ow {
+                        let gv = gi[oy * ow + ox];
+                        if gv == 0.0 {
+                            continue;
+                        }
+                        for ky in 0..3 {
+                            let iy = (oy * self.stride + ky) as isize - 1;
+                            if iy < 0 || iy >= h as isize {
+                                continue;
+                            }
+                            for kx in 0..3 {
+                                let ix = (ox * self.stride + kx) as isize - 1;
+                                if ix < 0 || ix >= w as isize {
+                                    continue;
+                                }
+                                let xi_v = xi[iy as usize * w + ix as usize];
+                                gk[ky * 3 + kx] += gv * xi_v;
+                                dxi[iy as usize * w + ix as usize] += gv * k[ky * 3 + kx];
+                            }
+                        }
+                    }
+                }
+            }
+        }
+        dx
+    }
+
+    fn visit_params(&mut self, f: &mut dyn FnMut(&mut Tensor, &mut Tensor)) {
+        f(&mut self.w, &mut self.gw);
+    }
+
+    fn name(&self) -> &str {
+        &self.name
+    }
+
+    fn last_grad(&self) -> Option<&Tensor> {
+        self.last_g.as_ref()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::QuantMode;
+    use crate::util::Pcg32;
+
+    #[test]
+    fn conv_backward_matches_finite_difference() {
+        let mut rng = Pcg32::seeded(0);
+        let g = Conv2dGeom { in_c: 2, out_c: 3, kh: 3, kw: 3, stride: 1, pad: 1 };
+        let mut l = Conv2d::new("c", g, 5, 5, QuantMode::Float32, &mut rng);
+        let mut x = Tensor::zeros(&[1, 2 * 5 * 5]);
+        rng.fill_normal(&mut x.data, 1.0);
+        let mut ctx = TrainCtx::new();
+        let y = l.forward(&x, &mut ctx);
+        let gup = Tensor::filled(&y.shape.clone(), 1.0);
+        let dx = l.backward(&gup, &mut ctx);
+        let eps = 1e-3f32;
+        for idx in [0usize, 7, 30, 49] {
+            let mut xp = x.clone();
+            xp.data[idx] += eps;
+            let yp = l.forward(&xp, &mut ctx).sum();
+            let mut xm = x.clone();
+            xm.data[idx] -= eps;
+            let ym = l.forward(&xm, &mut ctx).sum();
+            let fd = ((yp - ym) / (2.0 * eps as f64)) as f32;
+            assert!((dx.data[idx] - fd).abs() < 2e-2, "idx={idx}: {} vs {fd}", dx.data[idx]);
+        }
+    }
+
+    #[test]
+    fn conv_weight_grad_matches_finite_difference() {
+        let mut rng = Pcg32::seeded(1);
+        let g = Conv2dGeom { in_c: 1, out_c: 2, kh: 3, kw: 3, stride: 1, pad: 0 };
+        let mut l = Conv2d::new("c", g, 4, 4, QuantMode::Float32, &mut rng);
+        let mut x = Tensor::zeros(&[2, 16]);
+        rng.fill_normal(&mut x.data, 1.0);
+        let mut ctx = TrainCtx::new();
+        let y = l.forward(&x, &mut ctx);
+        let gup = Tensor::filled(&y.shape.clone(), 1.0);
+        let _ = l.backward(&gup, &mut ctx);
+        let gw = l.gw.clone();
+        let eps = 1e-3f32;
+        for idx in [0usize, 5, 17] {
+            l.gw.data.fill(0.0);
+            l.w.data[idx] += eps;
+            let yp = l.forward(&x, &mut ctx).sum();
+            l.w.data[idx] -= 2.0 * eps;
+            let ym = l.forward(&x, &mut ctx).sum();
+            l.w.data[idx] += eps;
+            let fd = ((yp - ym) / (2.0 * eps as f64)) as f32;
+            assert!((gw.data[idx] - fd).abs() < 2e-2, "idx={idx}: {} vs {fd}", gw.data[idx]);
+        }
+    }
+
+    #[test]
+    fn depthwise_backward_matches_finite_difference() {
+        let mut rng = Pcg32::seeded(2);
+        let mut l = DepthwiseConv2d::new("dw", 2, 5, 5, 1, QuantMode::Float32, &mut rng);
+        let mut x = Tensor::zeros(&[1, 2 * 25]);
+        rng.fill_normal(&mut x.data, 1.0);
+        let mut ctx = TrainCtx::new();
+        let y = l.forward(&x, &mut ctx);
+        let gup = Tensor::filled(&y.shape.clone(), 1.0);
+        let dx = l.backward(&gup, &mut ctx);
+        let eps = 1e-3f32;
+        for idx in [0usize, 12, 26, 49] {
+            let mut xp = x.clone();
+            xp.data[idx] += eps;
+            let yp = l.forward(&xp, &mut ctx).sum();
+            let mut xm = x.clone();
+            xm.data[idx] -= eps;
+            let ym = l.forward(&xm, &mut ctx).sum();
+            let fd = ((yp - ym) / (2.0 * eps as f64)) as f32;
+            assert!((dx.data[idx] - fd).abs() < 2e-2, "idx={idx}: {} vs {fd}", dx.data[idx]);
+        }
+    }
+
+    #[test]
+    fn quantized_conv_close_to_f32_conv() {
+        let mut rng = Pcg32::seeded(3);
+        let g = Conv2dGeom { in_c: 2, out_c: 4, kh: 3, kw: 3, stride: 1, pad: 1 };
+        let mut lf = Conv2d::new("cf", g, 6, 6, QuantMode::Float32, &mut rng);
+        let mut lq = Conv2d::new("cq", g, 6, 6, QuantMode::Static(16), &mut rng);
+        lq.w = lf.w.clone();
+        let mut x = Tensor::zeros(&[1, 2 * 36]);
+        rng.fill_normal(&mut x.data, 1.0);
+        let mut ctx = TrainCtx::new();
+        let yf = lf.forward(&x, &mut ctx);
+        let yq = lq.forward(&x, &mut ctx);
+        let rel: f32 = yf
+            .data
+            .iter()
+            .zip(&yq.data)
+            .map(|(a, b)| (a - b).abs())
+            .sum::<f32>()
+            / yf.data.iter().map(|v| v.abs()).sum::<f32>();
+        assert!(rel < 0.01, "int16 conv deviates {rel}");
+    }
+}

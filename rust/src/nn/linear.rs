@@ -1,0 +1,244 @@
+//! Fully-connected layer with Algorithm-1 quantization.
+//!
+//! Forward:  y = X̂ · Ŵ + b        (X̂, Ŵ fake-quantized per controller)
+//! Backward: dX = dŶ · Ŵᵀ          (BPROP — quantized gradient)
+//!           dW = X̂ᵀ · dŶ          (WTGRAD — same quantized gradient)
+//!
+//! Bias add and bias grad stay f32 (the paper quantizes the GEMM operands).
+
+use super::{Layer, QuantMode, TrainCtx};
+use crate::apt::LayerControllers;
+use crate::fixedpoint::quantize::fake_quant_stats_inplace;
+use crate::tensor::Tensor;
+use crate::util::Pcg32;
+
+pub struct Linear {
+    name: String,
+    pub w: Tensor, // in × out
+    pub b: Tensor,
+    pub gw: Tensor,
+    pub gb: Tensor,
+    ctl: Option<LayerControllers>,
+    // caches
+    x_q: Tensor,
+    w_q: Tensor,
+    last_g: Option<Tensor>,
+    /// When set, the gradient controller is forced to this static width for
+    /// this layer only (the per-layer ablations of Fig 1/2/11).
+    pub grad_bits_override: Option<u8>,
+}
+
+impl Linear {
+    pub fn new(name: &str, din: usize, dout: usize, mode: QuantMode, rng: &mut Pcg32) -> Self {
+        let mut w = Tensor::zeros(&[din, dout]);
+        // He init, matching the paper's initialization assumption (§3).
+        let std = (2.0 / din as f32).sqrt();
+        rng.fill_normal(&mut w.data, std);
+        Linear {
+            name: name.to_string(),
+            b: Tensor::zeros(&[dout]),
+            gw: Tensor::zeros(&[din, dout]),
+            gb: Tensor::zeros(&[dout]),
+            ctl: mode.config().map(|c| LayerControllers::new(c, name)),
+            w,
+            x_q: Tensor::zeros(&[0]),
+            w_q: Tensor::zeros(&[0]),
+            last_g: None,
+            grad_bits_override: None,
+        }
+    }
+
+    pub fn grad_controller_bits(&self) -> Option<u8> {
+        self.ctl.as_ref().map(|c| c.g.bits())
+    }
+}
+
+impl Layer for Linear {
+    fn forward(&mut self, x: &Tensor, ctx: &mut TrainCtx) -> Tensor {
+        assert_eq!(x.rank(), 2, "{}: expected 2-D input", self.name);
+        match &mut self.ctl {
+            None => {
+                if ctx.training {
+                    self.x_q = x.clone();
+                    self.w_q = self.w.clone();
+                }
+                let mut y = x.matmul(&self.w);
+                y.add_row_bias(&self.b.data);
+                y
+            }
+            Some(ctl) => {
+                // QEM/QPA at update iterations, then fake-quantize.
+                let sw = if ctl.w.needs_update(ctx.iter) {
+                    ctl.w.maybe_update_from_data(ctx.iter, &self.w.data, &mut ctx.ledger)
+                } else {
+                    ctl.w.scheme()
+                };
+                let sx = if ctl.x.needs_update(ctx.iter) {
+                    ctl.x.maybe_update_from_data(ctx.iter, &x.data, &mut ctx.ledger)
+                } else {
+                    ctl.x.scheme()
+                };
+                let mut xq = x.clone();
+                fake_quant_stats_inplace(&mut xq.data, sx);
+                let mut wq = self.w.clone();
+                fake_quant_stats_inplace(&mut wq.data, sw);
+                let mut y = xq.matmul(&wq);
+                y.add_row_bias(&self.b.data);
+                if ctx.training {
+                    self.x_q = xq;
+                    self.w_q = wq;
+                }
+                y
+            }
+        }
+    }
+
+    fn backward(&mut self, g: &Tensor, ctx: &mut TrainCtx) -> Tensor {
+        let gq = match &mut self.ctl {
+            None => g.clone(),
+            Some(ctl) => {
+                let sg = match self.grad_bits_override {
+                    Some(bits) => {
+                        // static per-layer override (observation ablations)
+                        crate::fixedpoint::Scheme::for_range(g.max_abs(), bits)
+                    }
+                    None => {
+                        if ctl.g.needs_update(ctx.iter) {
+                            ctl.g.maybe_update_from_data(ctx.iter, &g.data, &mut ctx.ledger)
+                        } else {
+                            ctl.g.scheme()
+                        }
+                    }
+                };
+                ctx.ledger.trace_bits(&self.name, crate::fixedpoint::TensorKind::Gradient, ctx.iter, sg.bits);
+                let mut gq = g.clone();
+                fake_quant_stats_inplace(&mut gq.data, sg);
+                gq
+            }
+        };
+        self.last_g = Some(g.clone());
+        // WTGRAD: dW += X̂ᵀ · dŶ
+        let dw = self.x_q.t().matmul(&gq);
+        self.gw.add_inplace(&dw);
+        // bias grad: column sums
+        let n = gq.dim(1);
+        for row in gq.data.chunks(n) {
+            for (gb, &v) in self.gb.data.iter_mut().zip(row) {
+                *gb += v;
+            }
+        }
+        // BPROP: dX = dŶ · Ŵᵀ
+        gq.matmul(&self.w_q.t())
+    }
+
+    fn visit_params(&mut self, f: &mut dyn FnMut(&mut Tensor, &mut Tensor)) {
+        f(&mut self.w, &mut self.gw);
+        f(&mut self.b, &mut self.gb);
+    }
+
+    fn name(&self) -> &str {
+        &self.name
+    }
+
+    fn last_grad(&self) -> Option<&Tensor> {
+        self.last_g.as_ref()
+    }
+
+    fn set_grad_override(&mut self, layer: &str, bits: Option<u8>) -> bool {
+        if layer == self.name {
+            self.grad_bits_override = bits;
+            true
+        } else {
+            false
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::apt::AptConfig;
+    use crate::fixedpoint::Scheme;
+    use crate::util::Pcg32;
+
+    fn randt(rng: &mut Pcg32, shape: &[usize], std: f32) -> Tensor {
+        let mut t = Tensor::zeros(shape);
+        rng.fill_normal(&mut t.data, std);
+        t
+    }
+
+    #[test]
+    fn f32_backward_matches_finite_difference() {
+        let mut rng = Pcg32::seeded(0);
+        let mut l = Linear::new("fc", 5, 3, QuantMode::Float32, &mut rng);
+        let x = randt(&mut rng, &[2, 5], 1.0);
+        let mut ctx = TrainCtx::new();
+        // loss = sum(y)
+        let y = l.forward(&x, &mut ctx);
+        let g = Tensor::filled(&[2, 3], 1.0);
+        let dx = l.backward(&g, &mut ctx);
+        let eps = 1e-3f32;
+        for idx in [0usize, 3, 9] {
+            let mut xp = x.clone();
+            xp.data[idx] += eps;
+            let yp = l.forward(&xp, &mut ctx).sum();
+            let mut xm = x.clone();
+            xm.data[idx] -= eps;
+            let ym = l.forward(&xm, &mut ctx).sum();
+            let fd = ((yp - ym) / (2.0 * eps as f64)) as f32;
+            assert!((dx.data[idx] - fd).abs() < 1e-2, "idx={idx}: {} vs {fd}", dx.data[idx]);
+        }
+        let _ = y;
+    }
+
+    #[test]
+    fn quantized_backward_uses_quantized_operands() {
+        let mut rng = Pcg32::seeded(1);
+        let mut cfg = AptConfig::default();
+        cfg.init_phase_iters = 0;
+        let mut l = Linear::new("fc", 4, 4, QuantMode::Adaptive(cfg), &mut rng);
+        let x = randt(&mut rng, &[3, 4], 1.0);
+        let mut ctx = TrainCtx::new();
+        let _y = l.forward(&x, &mut ctx);
+        let g = randt(&mut rng, &[3, 4], 1.0);
+        let dx = l.backward(&g, &mut ctx);
+
+        // manual: ĝ @ ŵᵀ with the schemes the controllers landed on
+        let sg = Scheme::for_range(g.max_abs(), l.ctl.as_ref().unwrap().g.bits());
+        let mut gq = g.clone();
+        fake_quant_stats_inplace(&mut gq.data, sg);
+        let want = gq.matmul(&l.w_q.t());
+        for (a, b) in dx.data.iter().zip(&want.data) {
+            assert!((a - b).abs() < 1e-5, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn static_mode_pins_every_width() {
+        let mut rng = Pcg32::seeded(2);
+        let mut l = Linear::new("fc", 8, 8, QuantMode::Static(16), &mut rng);
+        let x = randt(&mut rng, &[2, 8], 1.0);
+        let mut ctx = TrainCtx::new();
+        let _ = l.forward(&x, &mut ctx);
+        let g = randt(&mut rng, &[2, 8], 1.0);
+        let _ = l.backward(&g, &mut ctx);
+        let ctl = l.ctl.as_ref().unwrap();
+        assert_eq!(ctl.w.bits(), 16);
+        assert_eq!(ctl.x.bits(), 16);
+        assert_eq!(ctl.g.bits(), 16);
+    }
+
+    #[test]
+    fn grad_override_bypasses_controller() {
+        let mut rng = Pcg32::seeded(3);
+        let mut l = Linear::new("fc", 4, 4, QuantMode::Adaptive(AptConfig::default()), &mut rng);
+        l.grad_bits_override = Some(12);
+        let x = randt(&mut rng, &[2, 4], 1.0);
+        let mut ctx = TrainCtx::new();
+        let _ = l.forward(&x, &mut ctx);
+        let g = randt(&mut rng, &[2, 4], 100.0);
+        let _ = l.backward(&g, &mut ctx);
+        // controller untouched by the override path
+        assert_eq!(l.ctl.as_ref().unwrap().g.updates(), 0);
+    }
+}

@@ -1,0 +1,198 @@
+//! Loss functions: softmax cross-entropy (classification / segmentation /
+//! LM), smooth-L1 (detection box regression), plus accuracy/IoU metrics.
+
+use crate::tensor::{softmax_rows, Tensor};
+
+/// Softmax cross-entropy over rows. Returns (mean loss, dL/dlogits).
+pub fn softmax_xent(logits: &Tensor, labels: &[usize]) -> (f32, Tensor) {
+    assert_eq!(logits.rank(), 2);
+    let n = logits.dim(0);
+    let c = logits.dim(1);
+    assert_eq!(labels.len(), n);
+    let mut probs = logits.clone();
+    softmax_rows(&mut probs);
+    let mut loss = 0.0f64;
+    let mut grad = probs.clone();
+    for (b, &y) in labels.iter().enumerate() {
+        debug_assert!(y < c);
+        loss -= (probs.data[b * c + y].max(1e-12) as f64).ln();
+        grad.data[b * c + y] -= 1.0;
+    }
+    grad.scale_inplace(1.0 / n as f32);
+    ((loss / n as f64) as f32, grad)
+}
+
+/// Top-1 accuracy.
+pub fn accuracy(logits: &Tensor, labels: &[usize]) -> f64 {
+    let preds = logits.argmax_rows();
+    let hit = preds.iter().zip(labels).filter(|(p, y)| p == y).count();
+    hit as f64 / labels.len().max(1) as f64
+}
+
+/// Smooth-L1 (Huber, δ=1) over all elements. Returns (mean loss, grad).
+pub fn smooth_l1(pred: &Tensor, target: &Tensor) -> (f32, Tensor) {
+    assert_eq!(pred.shape, target.shape);
+    let n = pred.len().max(1);
+    let mut loss = 0.0f64;
+    let mut grad = Tensor::zeros(&pred.shape);
+    for i in 0..pred.len() {
+        let d = pred.data[i] - target.data[i];
+        if d.abs() < 1.0 {
+            loss += (0.5 * d * d) as f64;
+            grad.data[i] = d;
+        } else {
+            loss += (d.abs() - 0.5) as f64;
+            grad.data[i] = d.signum();
+        }
+    }
+    grad.scale_inplace(1.0 / n as f32);
+    ((loss / n as f64) as f32, grad)
+}
+
+/// Per-pixel softmax-xent for segmentation: logits [n, classes*h*w] in CHW
+/// order, labels [n, h*w]. Returns (loss, grad in the same layout).
+pub fn pixel_xent(logits: &Tensor, labels: &[Vec<usize>], classes: usize) -> (f32, Tensor) {
+    let n = logits.dim(0);
+    let chw = logits.dim(1);
+    let hw = chw / classes;
+    let mut grad = Tensor::zeros(&logits.shape);
+    let mut loss = 0.0f64;
+    for img in 0..n {
+        for p in 0..hw {
+            // gather per-pixel logits (stride hw in CHW)
+            let mut maxv = f32::NEG_INFINITY;
+            for c in 0..classes {
+                maxv = maxv.max(logits.data[img * chw + c * hw + p]);
+            }
+            let mut z = 0.0f32;
+            for c in 0..classes {
+                z += (logits.data[img * chw + c * hw + p] - maxv).exp();
+            }
+            let y = labels[img][p];
+            for c in 0..classes {
+                let pr = (logits.data[img * chw + c * hw + p] - maxv).exp() / z;
+                grad.data[img * chw + c * hw + p] = pr - (c == y) as i32 as f32;
+                if c == y {
+                    loss -= (pr.max(1e-12) as f64).ln();
+                }
+            }
+        }
+    }
+    let denom = (n * hw) as f32;
+    grad.scale_inplace(1.0 / denom);
+    ((loss / denom as f64) as f32, grad)
+}
+
+/// Mean IoU over classes for segmentation predictions.
+pub fn mean_iou(pred: &[Vec<usize>], gold: &[Vec<usize>], classes: usize) -> f64 {
+    let mut inter = vec![0u64; classes];
+    let mut union = vec![0u64; classes];
+    for (p_img, g_img) in pred.iter().zip(gold) {
+        for (&p, &g) in p_img.iter().zip(g_img) {
+            if p == g {
+                inter[p] += 1;
+                union[p] += 1;
+            } else {
+                union[p] += 1;
+                union[g] += 1;
+            }
+        }
+    }
+    let mut sum = 0.0;
+    let mut cnt = 0;
+    for c in 0..classes {
+        if union[c] > 0 {
+            sum += inter[c] as f64 / union[c] as f64;
+            cnt += 1;
+        }
+    }
+    if cnt == 0 {
+        0.0
+    } else {
+        sum / cnt as f64
+    }
+}
+
+/// IoU of two axis-aligned boxes (cx, cy, w, h) in [0,1] coords.
+pub fn box_iou(a: &[f32; 4], b: &[f32; 4]) -> f64 {
+    let (ax0, ay0, ax1, ay1) = (a[0] - a[2] / 2.0, a[1] - a[3] / 2.0, a[0] + a[2] / 2.0, a[1] + a[3] / 2.0);
+    let (bx0, by0, bx1, by1) = (b[0] - b[2] / 2.0, b[1] - b[3] / 2.0, b[0] + b[2] / 2.0, b[1] + b[3] / 2.0);
+    let iw = (ax1.min(bx1) - ax0.max(bx0)).max(0.0) as f64;
+    let ih = (ay1.min(by1) - ay0.max(by0)).max(0.0) as f64;
+    let inter = iw * ih;
+    let ua = (ax1 - ax0) as f64 * (ay1 - ay0) as f64 + (bx1 - bx0) as f64 * (by1 - by0) as f64 - inter;
+    if ua <= 0.0 {
+        0.0
+    } else {
+        inter / ua
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn xent_gradient_matches_probs_minus_onehot() {
+        let logits = Tensor::from_vec(&[1, 3], vec![1.0, 2.0, 3.0]);
+        let (l, g) = softmax_xent(&logits, &[2]);
+        assert!(l > 0.0);
+        // grad sums to 0 per row
+        let s: f32 = g.data.iter().sum();
+        assert!(s.abs() < 1e-6);
+        assert!(g.data[2] < 0.0 && g.data[0] > 0.0);
+    }
+
+    #[test]
+    fn xent_perfect_prediction_low_loss() {
+        let logits = Tensor::from_vec(&[1, 2], vec![20.0, -20.0]);
+        let (l, _) = softmax_xent(&logits, &[0]);
+        assert!(l < 1e-3);
+    }
+
+    #[test]
+    fn accuracy_counts() {
+        let logits = Tensor::from_vec(&[2, 2], vec![2.0, 1.0, 0.0, 3.0]);
+        assert_eq!(accuracy(&logits, &[0, 1]), 1.0);
+        assert_eq!(accuracy(&logits, &[1, 1]), 0.5);
+    }
+
+    #[test]
+    fn smooth_l1_quadratic_then_linear() {
+        let p = Tensor::from_vec(&[1, 2], vec![0.5, 3.0]);
+        let t = Tensor::zeros(&[1, 2]);
+        let (l, g) = smooth_l1(&p, &t);
+        assert!((l - (0.5 * 0.25 + 2.5) as f32 / 2.0).abs() < 1e-6);
+        assert!((g.data[0] - 0.25).abs() < 1e-6); // 0.5/2
+        assert!((g.data[1] - 0.5).abs() < 1e-6); // sign/2
+    }
+
+    #[test]
+    fn box_iou_cases() {
+        let a = [0.5, 0.5, 0.2, 0.2];
+        assert!((box_iou(&a, &a) - 1.0).abs() < 1e-9);
+        let b = [0.9, 0.9, 0.1, 0.1];
+        assert_eq!(box_iou(&a, &b), 0.0);
+    }
+
+    #[test]
+    fn mean_iou_perfect_and_disjoint() {
+        let p = vec![vec![0, 1, 1, 0]];
+        assert!((mean_iou(&p, &p, 2) - 1.0).abs() < 1e-9);
+        let g = vec![vec![1, 0, 0, 1]];
+        assert_eq!(mean_iou(&p, &g, 2), 0.0);
+    }
+
+    #[test]
+    fn pixel_xent_grad_rowsums_zero() {
+        let logits = Tensor::from_vec(&[1, 2 * 2], vec![1.0, -1.0, 0.5, 0.5]); // 2 classes, 2 px
+        let labels = vec![vec![0usize, 1]];
+        let (l, g) = pixel_xent(&logits, &labels, 2);
+        assert!(l > 0.0);
+        // per pixel, grads over classes sum to 0
+        for p in 0..2 {
+            let s = g.data[p] + g.data[2 + p];
+            assert!(s.abs() < 1e-6);
+        }
+    }
+}

@@ -1,0 +1,236 @@
+//! Pure-Rust training substrate (system S5/S6 in DESIGN.md).
+//!
+//! A small define-by-layer autograd: each [`Layer`] caches what its backward
+//! needs, `Sequential` chains them, and quantization per Algorithm 1 happens
+//! *inside* the linear/conv layers (quantized W/X on forward, quantized
+//! dY driving both BPROP and WTGRAD on backward), steered by the per-layer
+//! [`crate::apt::PrecisionController`]s.
+
+pub mod activ;
+pub mod conv;
+pub mod linear;
+pub mod loss;
+pub mod models;
+pub mod norm;
+pub mod rnn;
+
+use crate::apt::{AptConfig, Ledger};
+use crate::tensor::Tensor;
+
+/// Quantization mode of a training run.
+#[derive(Clone, Copy, Debug)]
+pub enum QuantMode {
+    /// Plain float32 training.
+    Float32,
+    /// Adaptive precision training (the paper's method).
+    Adaptive(AptConfig),
+    /// Unified static bit-width for every quantized tensor (the int8 / int16
+    /// baselines of Fig 9 and Table 2).
+    Static(u8),
+}
+
+impl QuantMode {
+    /// The controller config, if quantization is on.
+    pub fn config(&self) -> Option<AptConfig> {
+        match self {
+            QuantMode::Float32 => None,
+            QuantMode::Adaptive(c) => Some(*c),
+            QuantMode::Static(bits) => Some(AptConfig::static_bits(*bits)),
+        }
+    }
+
+    pub fn label(&self) -> String {
+        match self {
+            QuantMode::Float32 => "float32".into(),
+            QuantMode::Adaptive(_) => "adaptive".into(),
+            QuantMode::Static(b) => format!("int{b}"),
+        }
+    }
+}
+
+/// Mutable training context threaded through forward/backward.
+pub struct TrainCtx {
+    pub iter: u64,
+    pub training: bool,
+    pub ledger: Ledger,
+}
+
+impl TrainCtx {
+    pub fn new() -> Self {
+        TrainCtx { iter: 0, training: true, ledger: Ledger::new() }
+    }
+}
+
+impl Default for TrainCtx {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// A differentiable layer.
+pub trait Layer {
+    /// Forward pass; caches whatever backward needs when `ctx.training`.
+    fn forward(&mut self, x: &Tensor, ctx: &mut TrainCtx) -> Tensor;
+    /// Backward pass: consumes dL/dy, accumulates parameter grads internally,
+    /// returns dL/dx.
+    fn backward(&mut self, g: &Tensor, ctx: &mut TrainCtx) -> Tensor;
+    /// Visit (param, grad) pairs for the optimizer.
+    fn visit_params(&mut self, _f: &mut dyn FnMut(&mut Tensor, &mut Tensor)) {}
+    /// Layer name (used as the ledger key).
+    fn name(&self) -> &str;
+    /// Gradient-tensor probe for the observation experiments: layers that
+    /// quantize gradients report the last dY seen (before quantization).
+    fn last_grad(&self) -> Option<&Tensor> {
+        None
+    }
+    /// Force a static gradient bit-width on the named (sub)layer — the
+    /// per-layer ablation switch of Fig 1/2/11. Returns true if applied.
+    fn set_grad_override(&mut self, _layer: &str, _bits: Option<u8>) -> bool {
+        false
+    }
+}
+
+/// A chain of layers.
+pub struct Sequential {
+    pub layers: Vec<Box<dyn Layer>>,
+}
+
+impl Sequential {
+    pub fn new(layers: Vec<Box<dyn Layer>>) -> Self {
+        Sequential { layers }
+    }
+
+    pub fn forward(&mut self, x: &Tensor, ctx: &mut TrainCtx) -> Tensor {
+        let mut h = x.clone();
+        for l in self.layers.iter_mut() {
+            h = l.forward(&h, ctx);
+        }
+        h
+    }
+
+    pub fn backward(&mut self, g: &Tensor, ctx: &mut TrainCtx) -> Tensor {
+        let mut d = g.clone();
+        for l in self.layers.iter_mut().rev() {
+            d = l.backward(&d, ctx);
+        }
+        d
+    }
+
+    pub fn visit_params(&mut self, f: &mut dyn FnMut(&mut Tensor, &mut Tensor)) {
+        for l in self.layers.iter_mut() {
+            l.visit_params(f);
+        }
+    }
+
+    pub fn param_count(&mut self) -> usize {
+        let mut n = 0;
+        self.visit_params(&mut |p, _| n += p.len());
+        n
+    }
+
+    /// Apply a per-layer gradient bit-width override (Fig 1/2/11 ablations).
+    pub fn set_grad_override(&mut self, layer: &str, bits: Option<u8>) -> bool {
+        self.layers.iter_mut().any(|l| l.set_grad_override(layer, bits))
+    }
+
+    /// The last pre-quantization activation gradient seen by a named layer.
+    pub fn last_grad_of(&self, layer: &str) -> Option<&Tensor> {
+        self.layers.iter().find(|l| l.name() == layer).and_then(|l| l.last_grad())
+    }
+
+    /// Names of gradient-quantizing layers (linear/conv), in forward order.
+    pub fn quantized_layer_names(&self) -> Vec<String> {
+        self.layers
+            .iter()
+            .filter(|l| l.last_grad().is_some() || l.name().starts_with("fc") || l.name().contains("conv") || l.name().starts_with("pw") || l.name().starts_with("dw"))
+            .map(|l| l.name().to_string())
+            .collect()
+    }
+}
+
+/// SGD with momentum. Velocity buffers are kept keyed by parameter identity
+/// (visit order), which is stable for a fixed architecture.
+pub struct Sgd {
+    pub lr: f32,
+    pub momentum: f32,
+    velocity: Vec<Vec<f32>>,
+}
+
+impl Sgd {
+    pub fn new(lr: f32, momentum: f32) -> Self {
+        Sgd { lr, momentum, velocity: Vec::new() }
+    }
+
+    pub fn step(&mut self, net: &mut Sequential) {
+        let mut idx = 0usize;
+        let lr = self.lr;
+        let mu = self.momentum;
+        let vel = &mut self.velocity;
+        net.visit_params(&mut |p, g| {
+            if vel.len() <= idx {
+                vel.push(vec![0.0; p.len()]);
+            }
+            let v = &mut vel[idx];
+            assert_eq!(v.len(), p.len(), "parameter set changed shape");
+            for ((pv, gv), vv) in p.data.iter_mut().zip(g.data.iter_mut()).zip(v.iter_mut()) {
+                *vv = mu * *vv + *gv;
+                *pv -= lr * *vv;
+                *gv = 0.0; // zero grads for the next step
+            }
+            idx += 1;
+        });
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::linear::Linear;
+    use crate::nn::loss::softmax_xent;
+    use crate::util::Pcg32;
+
+    /// A 2-layer MLP must fit a linearly-separable toy problem in f32.
+    #[test]
+    fn sequential_learns_f32() {
+        let mut rng = Pcg32::seeded(0);
+        let mut net = Sequential::new(vec![
+            Box::new(Linear::new("fc0", 4, 16, QuantMode::Float32, &mut rng)),
+            Box::new(crate::nn::activ::ReLU::new("relu0")),
+            Box::new(Linear::new("fc1", 16, 2, QuantMode::Float32, &mut rng)),
+        ]);
+        let mut opt = Sgd::new(0.1, 0.9);
+        let mut ctx = TrainCtx::new();
+        let mut first = None;
+        let mut last = 0.0;
+        for it in 0..60 {
+            ctx.iter = it;
+            // class = sign of x0+x1
+            let mut x = Tensor::zeros(&[16, 4]);
+            let mut y = vec![0usize; 16];
+            for b in 0..16 {
+                for j in 0..4 {
+                    x.data[b * 4 + j] = rng.normal();
+                }
+                y[b] = (x.data[b * 4] + x.data[b * 4 + 1] > 0.0) as usize;
+            }
+            let logits = net.forward(&x, &mut ctx);
+            let (l, g) = softmax_xent(&logits, &y);
+            net.backward(&g, &mut ctx);
+            opt.step(&mut net);
+            if first.is_none() {
+                first = Some(l);
+            }
+            last = l;
+        }
+        assert!(last < first.unwrap() * 0.5, "first={:?} last={last}", first);
+    }
+
+    #[test]
+    fn quant_mode_labels() {
+        assert_eq!(QuantMode::Float32.label(), "float32");
+        assert_eq!(QuantMode::Static(16).label(), "int16");
+        assert!(QuantMode::Adaptive(AptConfig::default()).label().contains("adaptive"));
+        assert!(QuantMode::Float32.config().is_none());
+        assert_eq!(QuantMode::Static(16).config().unwrap().min_bits, 16);
+    }
+}

@@ -1,0 +1,158 @@
+//! SSD-lite: conv trunk + parallel box-regression and classification heads
+//! over the synthetic single-object detection task (Table 1's detection rows).
+
+use crate::fixedpoint::conv::Conv2dGeom;
+use crate::nn::activ::{MaxPool2, ReLU};
+use crate::nn::conv::Conv2d;
+use crate::nn::linear::Linear;
+use crate::nn::loss::{box_iou, smooth_l1, softmax_xent};
+use crate::nn::{Layer, QuantMode, Sequential, TrainCtx};
+use crate::tensor::Tensor;
+use crate::util::Pcg32;
+
+pub struct DetectionNet {
+    pub trunk: Sequential,
+    pub head_box: Linear,
+    pub head_cls: Linear,
+    pub classes: usize,
+    feat: Tensor,
+}
+
+impl DetectionNet {
+    /// 3×16×16 input, `classes` object classes.
+    pub fn new(classes: usize, mode: QuantMode, rng: &mut Pcg32) -> Self {
+        let g = |ic, oc| Conv2dGeom { in_c: ic, out_c: oc, kh: 3, kw: 3, stride: 1, pad: 1 };
+        let trunk = Sequential::new(vec![
+            Box::new(Conv2d::new("det_conv0", g(3, 8), 16, 16, mode, rng)),
+            Box::new(ReLU::new("dr0")),
+            Box::new(MaxPool2::new("dp0", 8, 16, 16)),
+            Box::new(Conv2d::new("det_conv1", g(8, 16), 8, 8, mode, rng)),
+            Box::new(ReLU::new("dr1")),
+            Box::new(MaxPool2::new("dp1", 16, 8, 8)),
+        ]);
+        DetectionNet {
+            trunk,
+            head_box: Linear::new("det_box", 16 * 4 * 4, 4, mode, rng),
+            head_cls: Linear::new("det_cls", 16 * 4 * 4, classes, mode, rng),
+            classes,
+            feat: Tensor::zeros(&[0]),
+        }
+    }
+
+    /// Forward: (boxes [n,4] via sigmoid, class logits [n, classes]).
+    pub fn forward(&mut self, x: &Tensor, ctx: &mut TrainCtx) -> (Tensor, Tensor) {
+        let f = self.trunk.forward(x, ctx);
+        let mut boxes = self.head_box.forward(&f, ctx);
+        // sigmoid → boxes in (0,1)
+        boxes.map_inplace(|v| 1.0 / (1.0 + (-v).exp()));
+        let logits = self.head_cls.forward(&f, ctx);
+        self.feat = f;
+        (boxes, logits)
+    }
+
+    /// One SGD step; returns (box loss, class loss).
+    pub fn train_step(
+        &mut self,
+        x: &Tensor,
+        gt_boxes: &[[f32; 4]],
+        gt_classes: &[usize],
+        lr: f32,
+        ctx: &mut TrainCtx,
+    ) -> (f32, f32) {
+        let (boxes, logits) = self.forward(x, ctx);
+        let n = x.dim(0);
+        let mut target = Tensor::zeros(&[n, 4]);
+        for (b, bx) in gt_boxes.iter().enumerate() {
+            target.data[b * 4..(b + 1) * 4].copy_from_slice(bx);
+        }
+        let (lb, mut gb) = smooth_l1(&boxes, &target);
+        // through the sigmoid
+        for (g, &s) in gb.data.iter_mut().zip(&boxes.data) {
+            *g *= s * (1.0 - s);
+        }
+        let (lc, gc) = softmax_xent(&logits, gt_classes);
+        let dfb = self.head_box.backward(&gb, ctx);
+        let dfc = self.head_cls.backward(&gc, ctx);
+        let mut df = dfb;
+        df.add_inplace(&dfc);
+        self.trunk.backward(&df, ctx);
+        // SGD (no momentum on the tiny detector)
+        let mut apply = |p: &mut Tensor, g: &mut Tensor| {
+            for (pv, gv) in p.data.iter_mut().zip(g.data.iter_mut()) {
+                *pv -= lr * *gv;
+                *gv = 0.0;
+            }
+        };
+        self.trunk.visit_params(&mut apply);
+        self.head_box.visit_params(&mut apply);
+        self.head_cls.visit_params(&mut apply);
+        (lb, lc)
+    }
+
+    /// mAP-lite: AP@IoU≥0.5 for the single-object task = fraction of images
+    /// whose predicted class matches AND predicted box IoU ≥ 0.5.
+    pub fn map_lite(
+        &mut self,
+        x: &Tensor,
+        gt_boxes: &[[f32; 4]],
+        gt_classes: &[usize],
+        ctx: &mut TrainCtx,
+    ) -> f64 {
+        let was_training = ctx.training;
+        ctx.training = false;
+        let (boxes, logits) = self.forward(x, ctx);
+        ctx.training = was_training;
+        let preds = logits.argmax_rows();
+        let n = x.dim(0);
+        let mut hits = 0usize;
+        for b in 0..n {
+            let pb = [
+                boxes.data[b * 4],
+                boxes.data[b * 4 + 1],
+                boxes.data[b * 4 + 2],
+                boxes.data[b * 4 + 3],
+            ];
+            if preds[b] == gt_classes[b] && box_iou(&pb, &gt_boxes[b]) >= 0.5 {
+                hits += 1;
+            }
+        }
+        hits as f64 / n as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::SynthDetection;
+
+    #[test]
+    fn detection_learns_f32() {
+        let mut rng = Pcg32::seeded(0);
+        let mut net = DetectionNet::new(3, QuantMode::Float32, &mut rng);
+        let mut data = SynthDetection::new(1, 3, 3, 16, 16);
+        let mut ctx = TrainCtx::new();
+        let mut first = 0.0;
+        let mut last = 0.0;
+        for it in 0..30 {
+            ctx.iter = it;
+            let (x, boxes, classes) = data.batch(8);
+            let (lb, lc) = net.train_step(&x, &boxes, &classes, 0.05, &mut ctx);
+            if it == 0 {
+                first = lb + lc;
+            }
+            last = lb + lc;
+        }
+        assert!(last < first, "first={first} last={last}");
+    }
+
+    #[test]
+    fn map_lite_bounds() {
+        let mut rng = Pcg32::seeded(1);
+        let mut net = DetectionNet::new(3, QuantMode::Float32, &mut rng);
+        let mut data = SynthDetection::new(2, 3, 3, 16, 16);
+        let mut ctx = TrainCtx::new();
+        let (x, boxes, classes) = data.batch(8);
+        let m = net.map_lite(&x, &boxes, &classes, &mut ctx);
+        assert!((0.0..=1.0).contains(&m));
+    }
+}

@@ -1,0 +1,213 @@
+//! Model zoo (system S7): miniature versions of every architecture family
+//! the paper evaluates, plus the detection/segmentation task heads.
+//!
+//! All image models take 3×12×12 inputs (flattened NCHW) and emit 10-class
+//! logits. "Mini" keeps each family's signature structure — AlexNet's
+//! conv→pool→fc stack, VGG's 3×3 chains, ResNet's identity skips + BN,
+//! MobileNet's depthwise-separable blocks, Inception's parallel branches —
+//! because the paper's claim is about *gradient distributions per layer
+//! type*, which these structures reproduce (DESIGN.md §2).
+
+mod blocks;
+mod detection;
+mod segmentation;
+
+pub use blocks::{InceptionBlock, ResidualBlock};
+pub use detection::DetectionNet;
+pub use segmentation::SegNet;
+
+use super::activ::{GlobalAvgPool, MaxPool2, ReLU};
+use super::conv::{Conv2d, DepthwiseConv2d};
+use super::linear::Linear;
+use super::norm::BatchNorm2d;
+use super::{QuantMode, Sequential};
+use crate::fixedpoint::conv::Conv2dGeom;
+use crate::util::Pcg32;
+
+/// Input geometry shared by the zoo.
+pub const IN_C: usize = 3;
+pub const IN_H: usize = 12;
+pub const IN_W: usize = 12;
+pub const CLASSES: usize = 10;
+
+pub fn input_len() -> usize {
+    IN_C * IN_H * IN_W
+}
+
+fn g(in_c: usize, out_c: usize, k: usize, stride: usize, pad: usize) -> Conv2dGeom {
+    Conv2dGeom { in_c, out_c, kh: k, kw: k, stride, pad }
+}
+
+/// AlexNet-mini: 3 convs (+pools) and 2 fully-connected layers — the
+/// paper's Fig 1/2 subject. Layer names mirror the paper (conv0.., fc0..).
+pub fn alexnet_mini(mode: QuantMode, rng: &mut Pcg32) -> Sequential {
+    Sequential::new(vec![
+        Box::new(Conv2d::new("conv0", g(IN_C, 8, 3, 1, 1), 12, 12, mode, rng)),
+        Box::new(ReLU::new("relu0")),
+        Box::new(MaxPool2::new("pool0", 8, 12, 12)),
+        Box::new(Conv2d::new("conv1", g(8, 16, 3, 1, 1), 6, 6, mode, rng)),
+        Box::new(ReLU::new("relu1")),
+        Box::new(MaxPool2::new("pool1", 16, 6, 6)),
+        Box::new(Conv2d::new("conv2", g(16, 16, 3, 1, 1), 3, 3, mode, rng)),
+        Box::new(ReLU::new("relu2")),
+        Box::new(Linear::new("fc0", 16 * 3 * 3, 64, mode, rng)),
+        Box::new(ReLU::new("relu3")),
+        Box::new(Linear::new("fc1", 64, CLASSES, mode, rng)),
+    ])
+}
+
+/// VGG-mini: chained 3×3 convs in two stages.
+pub fn vgg_mini(mode: QuantMode, rng: &mut Pcg32) -> Sequential {
+    Sequential::new(vec![
+        Box::new(Conv2d::new("conv0_0", g(IN_C, 8, 3, 1, 1), 12, 12, mode, rng)),
+        Box::new(ReLU::new("r00")),
+        Box::new(Conv2d::new("conv0_1", g(8, 8, 3, 1, 1), 12, 12, mode, rng)),
+        Box::new(ReLU::new("r01")),
+        Box::new(MaxPool2::new("p0", 8, 12, 12)),
+        Box::new(Conv2d::new("conv1_0", g(8, 16, 3, 1, 1), 6, 6, mode, rng)),
+        Box::new(ReLU::new("r10")),
+        Box::new(Conv2d::new("conv1_1", g(16, 16, 3, 1, 1), 6, 6, mode, rng)),
+        Box::new(ReLU::new("r11")),
+        Box::new(MaxPool2::new("p1", 16, 6, 6)),
+        Box::new(Linear::new("fc0", 16 * 3 * 3, 64, mode, rng)),
+        Box::new(ReLU::new("rf")),
+        Box::new(Linear::new("fc1", 64, CLASSES, mode, rng)),
+    ])
+}
+
+/// ResNet-mini: stem conv + two identity residual blocks with BN.
+pub fn resnet_mini(mode: QuantMode, rng: &mut Pcg32) -> Sequential {
+    Sequential::new(vec![
+        Box::new(Conv2d::new("conv0", g(IN_C, 16, 3, 1, 1), 12, 12, mode, rng)),
+        Box::new(BatchNorm2d::new("bn0", 16, 12 * 12)),
+        Box::new(ReLU::new("r0")),
+        Box::new(ResidualBlock::new("g1b1", 16, 12, 12, mode, rng)),
+        Box::new(ResidualBlock::new("g1b2", 16, 12, 12, mode, rng)),
+        Box::new(MaxPool2::new("p", 16, 12, 12)),
+        Box::new(GlobalAvgPool::new("gap", 16, 6, 6)),
+        Box::new(Linear::new("fc", 16, CLASSES, mode, rng)),
+    ])
+}
+
+/// MobileNet-mini: depthwise-separable blocks (dw 3×3 + pw 1×1 + BN).
+pub fn mobilenet_mini(mode: QuantMode, rng: &mut Pcg32) -> Sequential {
+    Sequential::new(vec![
+        Box::new(Conv2d::new("conv0", g(IN_C, 8, 3, 2, 1), 12, 12, mode, rng)),
+        Box::new(BatchNorm2d::new("bn0", 8, 6 * 6)),
+        Box::new(ReLU::new("r0")),
+        Box::new(DepthwiseConv2d::new("dw1", 8, 6, 6, 1, mode, rng)),
+        Box::new(Conv2d::new("pw1", g(8, 16, 1, 1, 0), 6, 6, mode, rng)),
+        Box::new(BatchNorm2d::new("bn1", 16, 6 * 6)),
+        Box::new(ReLU::new("r1")),
+        Box::new(DepthwiseConv2d::new("dw2", 16, 6, 6, 1, mode, rng)),
+        Box::new(Conv2d::new("pw2", g(16, 16, 1, 1, 0), 6, 6, mode, rng)),
+        Box::new(BatchNorm2d::new("bn2", 16, 6 * 6)),
+        Box::new(ReLU::new("r2")),
+        Box::new(GlobalAvgPool::new("gap", 16, 6, 6)),
+        Box::new(Linear::new("fc", 16, CLASSES, mode, rng)),
+    ])
+}
+
+/// Inception-mini: stem + one two-branch inception block (1×1 ∥ 3×3) + head.
+pub fn inception_mini(mode: QuantMode, rng: &mut Pcg32) -> Sequential {
+    Sequential::new(vec![
+        Box::new(Conv2d::new("conv0", g(IN_C, 8, 3, 1, 1), 12, 12, mode, rng)),
+        Box::new(BatchNorm2d::new("bn0", 8, 12 * 12)),
+        Box::new(ReLU::new("r0")),
+        Box::new(MaxPool2::new("p0", 8, 12, 12)),
+        Box::new(InceptionBlock::new("inc1", 8, 8, 8, 6, 6, mode, rng)),
+        Box::new(ReLU::new("r1")),
+        Box::new(GlobalAvgPool::new("gap", 16, 6, 6)),
+        Box::new(Linear::new("fc", 16, CLASSES, mode, rng)),
+    ])
+}
+
+/// Plain MLP (the quickstart model; matches the L2 MLP artifact shape).
+pub fn mlp(mode: QuantMode, rng: &mut Pcg32, din: usize, classes: usize) -> Sequential {
+    Sequential::new(vec![
+        Box::new(Linear::new("fc0", din, 128, mode, rng)),
+        Box::new(ReLU::new("r0")),
+        Box::new(Linear::new("fc1", 128, 64, mode, rng)),
+        Box::new(ReLU::new("r1")),
+        Box::new(Linear::new("fc2", 64, classes, mode, rng)),
+    ])
+}
+
+/// Look up a classification model by family name.
+pub fn by_name(name: &str, mode: QuantMode, rng: &mut Pcg32) -> Option<Sequential> {
+    Some(match name {
+        "alexnet" => alexnet_mini(mode, rng),
+        "vgg" => vgg_mini(mode, rng),
+        "resnet" => resnet_mini(mode, rng),
+        "mobilenet" => mobilenet_mini(mode, rng),
+        "inception" => inception_mini(mode, rng),
+        "mlp" => mlp(mode, rng, input_len(), CLASSES),
+        _ => return None,
+    })
+}
+
+pub const ZOO: [&str; 5] = ["alexnet", "vgg", "inception", "resnet", "mobilenet"];
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::loss::softmax_xent;
+    use crate::nn::{Sgd, TrainCtx};
+    use crate::tensor::Tensor;
+
+    fn smoke(name: &str, mode: QuantMode) {
+        let mut rng = Pcg32::seeded(0);
+        let mut net = by_name(name, mode, &mut rng).unwrap();
+        let mut ctx = TrainCtx::new();
+        let mut x = Tensor::zeros(&[2, input_len()]);
+        rng.fill_normal(&mut x.data, 1.0);
+        let logits = net.forward(&x, &mut ctx);
+        assert_eq!(logits.shape, vec![2, CLASSES], "{name}");
+        let (l, g) = softmax_xent(&logits, &[0, 1]);
+        assert!(l.is_finite(), "{name}");
+        let dx = net.backward(&g, &mut ctx);
+        assert_eq!(dx.len(), 2 * input_len(), "{name}");
+        let mut opt = Sgd::new(0.01, 0.9);
+        opt.step(&mut net);
+    }
+
+    #[test]
+    fn all_models_forward_backward_f32() {
+        for name in ZOO.iter().chain(["mlp"].iter()) {
+            smoke(name, QuantMode::Float32);
+        }
+    }
+
+    #[test]
+    fn all_models_forward_backward_adaptive() {
+        let mut cfg = crate::apt::AptConfig::default();
+        cfg.init_phase_iters = 1;
+        for name in ZOO.iter().chain(["mlp"].iter()) {
+            smoke(name, QuantMode::Adaptive(cfg));
+        }
+    }
+
+    #[test]
+    fn alexnet_learns_synthetic_classes() {
+        let mut rng = Pcg32::seeded(1);
+        let mut net = alexnet_mini(QuantMode::Float32, &mut rng);
+        let mut data = crate::data::SynthImages::new(11, CLASSES, IN_C, IN_H, IN_W, 0.4);
+        let mut opt = Sgd::new(0.02, 0.9);
+        let mut ctx = TrainCtx::new();
+        let mut first = 0.0;
+        let mut last = 0.0;
+        for it in 0..40 {
+            ctx.iter = it;
+            let (x, y) = data.batch(16);
+            let logits = net.forward(&x, &mut ctx);
+            let (l, g) = softmax_xent(&logits, &y);
+            net.backward(&g, &mut ctx);
+            opt.step(&mut net);
+            if it == 0 {
+                first = l;
+            }
+            last = l;
+        }
+        assert!(last < first * 0.6, "first={first} last={last}");
+    }
+}

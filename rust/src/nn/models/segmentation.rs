@@ -1,0 +1,107 @@
+//! deeplab-lite: fully-convolutional per-pixel classifier over the synthetic
+//! mask task (Table 1's segmentation row).
+
+use crate::fixedpoint::conv::Conv2dGeom;
+use crate::nn::activ::ReLU;
+use crate::nn::conv::Conv2d;
+use crate::nn::loss::{mean_iou, pixel_xent};
+use crate::nn::{QuantMode, Sequential, Sgd, TrainCtx};
+use crate::tensor::Tensor;
+use crate::util::Pcg32;
+
+pub struct SegNet {
+    pub net: Sequential,
+    pub classes: usize,
+    pub h: usize,
+    pub w: usize,
+    opt: Sgd,
+}
+
+impl SegNet {
+    /// 3×12×12 input, `classes` per-pixel classes, resolution preserved.
+    pub fn new(classes: usize, mode: QuantMode, rng: &mut Pcg32) -> Self {
+        let g = |ic, oc, k, pad| Conv2dGeom { in_c: ic, out_c: oc, kh: k, kw: k, stride: 1, pad };
+        SegNet {
+            net: Sequential::new(vec![
+                Box::new(Conv2d::new("seg_conv0", g(3, 8, 3, 1), 12, 12, mode, rng)),
+                Box::new(ReLU::new("sr0")),
+                Box::new(Conv2d::new("seg_conv1", g(8, 8, 3, 1), 12, 12, mode, rng)),
+                Box::new(ReLU::new("sr1")),
+                Box::new(Conv2d::new("seg_head", g(8, classes, 1, 0), 12, 12, mode, rng)),
+            ]),
+            classes,
+            h: 12,
+            w: 12,
+            opt: Sgd::new(0.05, 0.9),
+        }
+    }
+
+    /// One step; returns mean pixel loss.
+    pub fn train_step(&mut self, x: &Tensor, labels: &[Vec<usize>], ctx: &mut TrainCtx) -> f32 {
+        let logits = self.net.forward(x, ctx);
+        let (l, g) = pixel_xent(&logits, labels, self.classes);
+        self.net.backward(&g, ctx);
+        self.opt.step(&mut self.net);
+        l
+    }
+
+    /// Per-pixel argmax predictions.
+    pub fn predict(&mut self, x: &Tensor, ctx: &mut TrainCtx) -> Vec<Vec<usize>> {
+        let was = ctx.training;
+        ctx.training = false;
+        let logits = self.net.forward(x, ctx);
+        ctx.training = was;
+        let n = x.dim(0);
+        let hw = self.h * self.w;
+        let mut out = Vec::with_capacity(n);
+        for img in 0..n {
+            let mut mask = vec![0usize; hw];
+            for p in 0..hw {
+                let mut best = f32::NEG_INFINITY;
+                for c in 0..self.classes {
+                    let v = logits.data[img * self.classes * hw + c * hw + p];
+                    if v > best {
+                        best = v;
+                        mask[p] = c;
+                    }
+                }
+            }
+            out.push(mask);
+        }
+        out
+    }
+
+    pub fn eval_miou(&mut self, x: &Tensor, labels: &[Vec<usize>], ctx: &mut TrainCtx) -> f64 {
+        let preds = self.predict(x, ctx);
+        mean_iou(&preds, labels, self.classes)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::SynthSegmentation;
+
+    #[test]
+    fn segmentation_learns_f32() {
+        let mut rng = Pcg32::seeded(0);
+        let mut net = SegNet::new(3, QuantMode::Float32, &mut rng);
+        let mut data = SynthSegmentation::new(1, 3, 3, 12, 12);
+        let mut ctx = TrainCtx::new();
+        let mut first = 0.0;
+        let mut last = 0.0;
+        for it in 0..25 {
+            ctx.iter = it;
+            let (x, labels) = data.batch(8);
+            let l = net.train_step(&x, &labels, &mut ctx);
+            if it == 0 {
+                first = l;
+            }
+            last = l;
+        }
+        assert!(last < first * 0.9, "first={first} last={last}");
+        let (x, labels) = data.batch(8);
+        let iou = net.eval_miou(&x, &labels, &mut ctx);
+        assert!((0.0..=1.0).contains(&iou));
+    }
+}

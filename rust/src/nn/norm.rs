@@ -1,0 +1,214 @@
+//! Batch normalization over channels of NCHW activations carried as
+//! [n, c*h*w]. Kept in f32 (the paper quantizes only GEMM operands); needed
+//! for the ResNet/Inception/MobileNet mini architectures to train.
+
+use super::{Layer, TrainCtx};
+use crate::tensor::Tensor;
+
+pub struct BatchNorm2d {
+    name: String,
+    pub c: usize,
+    pub hw: usize,
+    pub gamma: Tensor,
+    pub beta: Tensor,
+    pub ggamma: Tensor,
+    pub gbeta: Tensor,
+    pub running_mean: Vec<f32>,
+    pub running_var: Vec<f32>,
+    pub momentum: f32,
+    eps: f32,
+    // caches
+    xhat: Tensor,
+    inv_std: Vec<f32>,
+}
+
+impl BatchNorm2d {
+    pub fn new(name: &str, c: usize, hw: usize) -> Self {
+        BatchNorm2d {
+            name: name.to_string(),
+            c,
+            hw,
+            gamma: Tensor::filled(&[c], 1.0),
+            beta: Tensor::zeros(&[c]),
+            ggamma: Tensor::zeros(&[c]),
+            gbeta: Tensor::zeros(&[c]),
+            running_mean: vec![0.0; c],
+            running_var: vec![1.0; c],
+            momentum: 0.1,
+            eps: 1e-5,
+            xhat: Tensor::zeros(&[0]),
+            inv_std: vec![],
+        }
+    }
+}
+
+impl Layer for BatchNorm2d {
+    fn forward(&mut self, x: &Tensor, ctx: &mut TrainCtx) -> Tensor {
+        let n = x.dim(0);
+        let (c, hw) = (self.c, self.hw);
+        assert_eq!(x.dim(1), c * hw);
+        let cnt = (n * hw) as f32;
+        let mut y = x.clone();
+        if ctx.training {
+            self.inv_std = vec![0.0; c];
+            let mut xhat = x.clone();
+            for ch in 0..c {
+                let mut mean = 0.0f32;
+                for img in 0..n {
+                    mean += x.data[img * c * hw + ch * hw..][..hw].iter().sum::<f32>();
+                }
+                mean /= cnt;
+                let mut var = 0.0f32;
+                for img in 0..n {
+                    for &v in &x.data[img * c * hw + ch * hw..][..hw] {
+                        var += (v - mean) * (v - mean);
+                    }
+                }
+                var /= cnt;
+                let istd = 1.0 / (var + self.eps).sqrt();
+                self.inv_std[ch] = istd;
+                self.running_mean[ch] =
+                    (1.0 - self.momentum) * self.running_mean[ch] + self.momentum * mean;
+                self.running_var[ch] =
+                    (1.0 - self.momentum) * self.running_var[ch] + self.momentum * var;
+                let (g, b) = (self.gamma.data[ch], self.beta.data[ch]);
+                for img in 0..n {
+                    for i in 0..hw {
+                        let idx = img * c * hw + ch * hw + i;
+                        let xh = (x.data[idx] - mean) * istd;
+                        xhat.data[idx] = xh;
+                        y.data[idx] = g * xh + b;
+                    }
+                }
+            }
+            self.xhat = xhat;
+        } else {
+            for ch in 0..c {
+                let istd = 1.0 / (self.running_var[ch] + self.eps).sqrt();
+                let mean = self.running_mean[ch];
+                let (g, b) = (self.gamma.data[ch], self.beta.data[ch]);
+                for img in 0..n {
+                    for i in 0..hw {
+                        let idx = img * c * hw + ch * hw + i;
+                        y.data[idx] = g * (x.data[idx] - mean) * istd + b;
+                    }
+                }
+            }
+        }
+        y
+    }
+
+    fn backward(&mut self, g: &Tensor, _ctx: &mut TrainCtx) -> Tensor {
+        let n = g.dim(0);
+        let (c, hw) = (self.c, self.hw);
+        let cnt = (n * hw) as f32;
+        let mut dx = Tensor::zeros(&[n, c * hw]);
+        for ch in 0..c {
+            let mut sum_g = 0.0f32;
+            let mut sum_gx = 0.0f32;
+            for img in 0..n {
+                for i in 0..hw {
+                    let idx = img * c * hw + ch * hw + i;
+                    sum_g += g.data[idx];
+                    sum_gx += g.data[idx] * self.xhat.data[idx];
+                }
+            }
+            self.gbeta.data[ch] += sum_g;
+            self.ggamma.data[ch] += sum_gx;
+            let gamma = self.gamma.data[ch];
+            let istd = self.inv_std[ch];
+            for img in 0..n {
+                for i in 0..hw {
+                    let idx = img * c * hw + ch * hw + i;
+                    dx.data[idx] = gamma * istd / cnt
+                        * (cnt * g.data[idx] - sum_g - self.xhat.data[idx] * sum_gx);
+                }
+            }
+        }
+        dx
+    }
+
+    fn visit_params(&mut self, f: &mut dyn FnMut(&mut Tensor, &mut Tensor)) {
+        f(&mut self.gamma, &mut self.ggamma);
+        f(&mut self.beta, &mut self.gbeta);
+    }
+
+    fn name(&self) -> &str {
+        &self.name
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Pcg32;
+
+    #[test]
+    fn normalizes_per_channel() {
+        let mut bn = BatchNorm2d::new("bn", 2, 4);
+        let mut x = Tensor::zeros(&[3, 8]);
+        let mut rng = Pcg32::seeded(0);
+        rng.fill_normal(&mut x.data, 5.0);
+        for v in x.data.iter_mut() {
+            *v += 10.0;
+        }
+        let mut ctx = TrainCtx::new();
+        let y = bn.forward(&x, &mut ctx);
+        // per channel over batch: mean ≈ 0, var ≈ 1
+        for ch in 0..2 {
+            let mut vals = vec![];
+            for img in 0..3 {
+                vals.extend_from_slice(&y.data[img * 8 + ch * 4..][..4]);
+            }
+            let m: f32 = vals.iter().sum::<f32>() / vals.len() as f32;
+            let v: f32 = vals.iter().map(|x| (x - m) * (x - m)).sum::<f32>() / vals.len() as f32;
+            assert!(m.abs() < 1e-4, "mean {m}");
+            assert!((v - 1.0).abs() < 1e-2, "var {v}");
+        }
+    }
+
+    #[test]
+    fn backward_matches_finite_difference() {
+        let mut bn = BatchNorm2d::new("bn", 1, 3);
+        let mut x = Tensor::zeros(&[2, 3]);
+        let mut rng = Pcg32::seeded(1);
+        rng.fill_normal(&mut x.data, 1.0);
+        let mut ctx = TrainCtx::new();
+        // loss = Σ y² /2 → g = y
+        let y = bn.forward(&x, &mut ctx);
+        let dx = bn.backward(&y, &mut ctx);
+        let eps = 1e-3f32;
+        let loss = |bn: &mut BatchNorm2d, x: &Tensor, ctx: &mut TrainCtx| -> f64 {
+            let y = bn.forward(x, ctx);
+            y.data.iter().map(|&v| (v * v / 2.0) as f64).sum()
+        };
+        for idx in 0..6 {
+            let mut xp = x.clone();
+            xp.data[idx] += eps;
+            let lp = loss(&mut bn, &xp, &mut ctx);
+            let mut xm = x.clone();
+            xm.data[idx] -= eps;
+            let lm = loss(&mut bn, &xm, &mut ctx);
+            let fd = ((lp - lm) / (2.0 * eps as f64)) as f32;
+            assert!((dx.data[idx] - fd).abs() < 1e-2, "idx={idx}: {} vs {fd}", dx.data[idx]);
+        }
+    }
+
+    #[test]
+    fn eval_mode_uses_running_stats() {
+        let mut bn = BatchNorm2d::new("bn", 1, 2);
+        let mut ctx = TrainCtx::new();
+        let x = Tensor::from_vec(&[2, 2], vec![1.0, 2.0, 3.0, 4.0]);
+        for _ in 0..50 {
+            let _ = bn.forward(&x, &mut ctx);
+        }
+        ctx.training = false;
+        let y_eval = bn.forward(&x, &mut ctx);
+        // running stats converge to batch stats → eval ≈ train output
+        ctx.training = true;
+        let y_train = bn.forward(&x, &mut ctx);
+        for (a, b) in y_eval.data.iter().zip(&y_train.data) {
+            assert!((a - b).abs() < 0.1, "{a} vs {b}");
+        }
+    }
+}

@@ -1,0 +1,441 @@
+//! Elman-RNN encoder–decoder for the machine-translation experiment
+//! (Fig 9a's Sockeye substitute — see DESIGN.md §2).
+//!
+//! Encoder:  h_t = tanh(Wx·e(x_t) + Wh·h_{t−1} + b)
+//! Decoder:  s_t = tanh(Vx·e(y_{t−1}) + Vh·s_{t−1} + c),  logits_t = Why·s_t
+//!
+//! All six projection matmuls run on fake-quantized operands per
+//! Algorithm 1, with activation-gradient quantization inside BPTT — the code
+//! path where unified int16 visibly degrades and adaptive precision recovers
+//! accuracy by escalating some tensors to int24 (the paper's key RNN claim).
+
+use super::{QuantMode, TrainCtx};
+use crate::apt::LayerControllers;
+use crate::fixedpoint::quantize::fake_quant_stats_inplace;
+use crate::fixedpoint::{Scheme, TensorKind};
+use crate::tensor::Tensor;
+use crate::util::Pcg32;
+
+pub struct Seq2Seq {
+    pub vocab: usize,
+    pub dim: usize,
+    // parameters
+    pub emb_src: Tensor,
+    pub emb_tgt: Tensor,
+    pub enc_wx: Tensor,
+    pub enc_wh: Tensor,
+    pub enc_b: Tensor,
+    pub dec_wx: Tensor,
+    pub dec_wh: Tensor,
+    pub dec_b: Tensor,
+    pub why: Tensor,
+    pub by: Tensor,
+    // grads (same shapes)
+    pub grads: Vec<Tensor>,
+    // velocity for SGD-momentum
+    vel: Vec<Tensor>,
+    // quant controllers per projection
+    ctl: Option<Vec<LayerControllers>>, // [enc_wx, enc_wh, dec_wx, dec_wh, why]
+}
+
+const PROJ_NAMES: [&str; 5] = ["enc_wx", "enc_wh", "dec_wx", "dec_wh", "why"];
+
+fn tanh_vec(v: &mut [f32]) {
+    for x in v.iter_mut() {
+        *x = x.tanh();
+    }
+}
+
+impl Seq2Seq {
+    pub fn new(vocab: usize, dim: usize, mode: QuantMode, rng: &mut Pcg32) -> Self {
+        let mut t = |shape: &[usize], std: f32| {
+            let mut x = Tensor::zeros(shape);
+            rng.fill_normal(&mut x.data, std);
+            x
+        };
+        let d = dim;
+        let std = (1.0 / d as f32).sqrt();
+        let shapes: Vec<Vec<usize>> = vec![
+            vec![vocab, d],
+            vec![vocab, d],
+            vec![d, d],
+            vec![d, d],
+            vec![d],
+            vec![d, d],
+            vec![d, d],
+            vec![d],
+            vec![d, vocab],
+            vec![vocab],
+        ];
+        let grads = shapes.iter().map(|s| Tensor::zeros(s)).collect::<Vec<_>>();
+        let vel = shapes.iter().map(|s| Tensor::zeros(s)).collect::<Vec<_>>();
+        Seq2Seq {
+            vocab,
+            dim,
+            emb_src: t(&[vocab, d], 0.1),
+            emb_tgt: t(&[vocab, d], 0.1),
+            enc_wx: t(&[d, d], std),
+            enc_wh: t(&[d, d], std),
+            enc_b: Tensor::zeros(&[d]),
+            dec_wx: t(&[d, d], std),
+            dec_wh: t(&[d, d], std),
+            dec_b: Tensor::zeros(&[d]),
+            why: t(&[d, vocab], std),
+            by: Tensor::zeros(&[vocab]),
+            grads,
+            vel,
+            ctl: mode
+                .config()
+                .map(|c| PROJ_NAMES.iter().map(|n| LayerControllers::new(c, n)).collect()),
+        }
+    }
+
+    /// Gradient bit-widths currently applied per projection (for reporting).
+    pub fn grad_bits(&self) -> Vec<(String, u8)> {
+        match &self.ctl {
+            None => vec![],
+            Some(cs) => cs
+                .iter()
+                .zip(PROJ_NAMES)
+                .map(|(c, n)| (n.to_string(), c.g.bits()))
+                .collect(),
+        }
+    }
+
+    fn embed(table: &Tensor, tokens: &[usize], d: usize) -> Tensor {
+        let mut out = Tensor::zeros(&[tokens.len(), d]);
+        for (i, &t) in tokens.iter().enumerate() {
+            out.data[i * d..(i + 1) * d].copy_from_slice(&table.data[t * d..(t + 1) * d]);
+        }
+        out
+    }
+
+    /// Quantize a weight in place per its controller; returns scheme used.
+    fn qw(ctl: &mut Option<Vec<LayerControllers>>, idx: usize, w: &Tensor, iter: u64, ledger: &mut crate::apt::Ledger) -> Tensor {
+        let mut wq = w.clone();
+        if let Some(cs) = ctl {
+            let c = &mut cs[idx];
+            let s = if c.w.needs_update(iter) {
+                c.w.maybe_update_from_data(iter, &w.data, ledger)
+            } else {
+                c.w.scheme()
+            };
+            fake_quant_stats_inplace(&mut wq.data, s);
+        }
+        wq
+    }
+
+    fn qx(ctl: &mut Option<Vec<LayerControllers>>, idx: usize, x: &Tensor, iter: u64, ledger: &mut crate::apt::Ledger) -> Tensor {
+        let mut xq = x.clone();
+        if let Some(cs) = ctl {
+            let c = &mut cs[idx];
+            let s = if c.x.needs_update(iter) {
+                c.x.maybe_update_from_data(iter, &x.data, ledger)
+            } else {
+                c.x.scheme()
+            };
+            fake_quant_stats_inplace(&mut xq.data, s);
+        }
+        xq
+    }
+
+    fn qg(ctl: &mut Option<Vec<LayerControllers>>, idx: usize, g: &Tensor, iter: u64, ledger: &mut crate::apt::Ledger) -> Tensor {
+        let mut gq = g.clone();
+        if let Some(cs) = ctl {
+            let c = &mut cs[idx];
+            let s = if c.g.needs_update(iter) {
+                c.g.maybe_update_from_data(iter, &g.data, ledger)
+            } else {
+                c.g.scheme()
+            };
+            ledger.trace_bits(PROJ_NAMES[idx], TensorKind::Gradient, iter, s.bits);
+            fake_quant_stats_inplace(&mut gq.data, s);
+        }
+        gq
+    }
+
+    /// Run forward+backward without applying the update (fills `grads`).
+    pub fn train_step_no_update(
+        &mut self,
+        src: &[Vec<usize>],
+        tgt: &[Vec<usize>],
+        ctx: &mut TrainCtx,
+    ) -> (f32, f64) {
+        for g in self.grads.iter_mut() {
+            g.data.fill(0.0);
+        }
+        self.run(src, tgt, true, ctx)
+    }
+
+    /// One training step on a batch of (src, tgt) token sequences with
+    /// teacher forcing. Returns (mean loss, word accuracy).
+    pub fn train_step(
+        &mut self,
+        src: &[Vec<usize>],
+        tgt: &[Vec<usize>],
+        lr: f32,
+        ctx: &mut TrainCtx,
+    ) -> (f32, f64) {
+        let (loss, acc) = self.run(src, tgt, true, ctx);
+        // SGD momentum update
+        let lr = lr;
+        let params: Vec<&mut Tensor> = vec![
+            &mut self.emb_src,
+            &mut self.emb_tgt,
+            &mut self.enc_wx,
+            &mut self.enc_wh,
+            &mut self.enc_b,
+            &mut self.dec_wx,
+            &mut self.dec_wh,
+            &mut self.dec_b,
+            &mut self.why,
+            &mut self.by,
+        ];
+        for ((p, g), v) in params.into_iter().zip(self.grads.iter_mut()).zip(self.vel.iter_mut()) {
+            for ((pv, gv), vv) in p.data.iter_mut().zip(g.data.iter_mut()).zip(v.data.iter_mut()) {
+                *vv = 0.9 * *vv + *gv;
+                *pv -= lr * *vv;
+                *gv = 0.0;
+            }
+        }
+        (loss, acc)
+    }
+
+    /// Evaluate (teacher-forced word accuracy + loss) without updating.
+    pub fn eval(&mut self, src: &[Vec<usize>], tgt: &[Vec<usize>], ctx: &mut TrainCtx) -> (f32, f64) {
+        self.run(src, tgt, false, ctx)
+    }
+
+    fn run(
+        &mut self,
+        src: &[Vec<usize>],
+        tgt: &[Vec<usize>],
+        train: bool,
+        ctx: &mut TrainCtx,
+    ) -> (f32, f64) {
+        let b = src.len();
+        let d = self.dim;
+        let v = self.vocab;
+        let s_len = src[0].len();
+        let t_len = tgt[0].len();
+        let iter = ctx.iter;
+
+        // quantized weights for this step
+        let enc_wx_q = Self::qw(&mut self.ctl, 0, &self.enc_wx, iter, &mut ctx.ledger);
+        let enc_wh_q = Self::qw(&mut self.ctl, 1, &self.enc_wh, iter, &mut ctx.ledger);
+        let dec_wx_q = Self::qw(&mut self.ctl, 2, &self.dec_wx, iter, &mut ctx.ledger);
+        let dec_wh_q = Self::qw(&mut self.ctl, 3, &self.dec_wh, iter, &mut ctx.ledger);
+        let why_q = Self::qw(&mut self.ctl, 4, &self.why, iter, &mut ctx.ledger);
+
+        // ---------------- forward ----------------
+        let mut enc_xq: Vec<Tensor> = Vec::with_capacity(s_len);
+        let mut enc_hq: Vec<Tensor> = Vec::with_capacity(s_len); // quantized h inputs
+        let mut enc_h: Vec<Tensor> = Vec::with_capacity(s_len + 1);
+        enc_h.push(Tensor::zeros(&[b, d]));
+        for t in 0..s_len {
+            let toks: Vec<usize> = src.iter().map(|s| s[t]).collect();
+            let e = Self::embed(&self.emb_src, &toks, d);
+            let eq = Self::qx(&mut self.ctl, 0, &e, iter, &mut ctx.ledger);
+            let hq = Self::qx(&mut self.ctl, 1, enc_h.last().unwrap(), iter, &mut ctx.ledger);
+            let mut h = eq.matmul(&enc_wx_q);
+            h.add_inplace(&hq.matmul(&enc_wh_q));
+            h.add_row_bias(&self.enc_b.data);
+            tanh_vec(&mut h.data);
+            enc_xq.push(eq);
+            enc_hq.push(hq);
+            enc_h.push(h);
+        }
+
+        let mut dec_xq: Vec<Tensor> = Vec::with_capacity(t_len);
+        let mut dec_hq: Vec<Tensor> = Vec::with_capacity(t_len);
+        let mut dec_h: Vec<Tensor> = Vec::with_capacity(t_len + 1);
+        let mut dec_sq: Vec<Tensor> = Vec::with_capacity(t_len); // quantized s for Why
+        dec_h.push(enc_h.last().unwrap().clone());
+        let mut logits_all: Vec<Tensor> = Vec::with_capacity(t_len);
+        let bos = 0usize;
+        for t in 0..t_len {
+            let toks: Vec<usize> = tgt
+                .iter()
+                .map(|s| if t == 0 { bos } else { s[t - 1] })
+                .collect();
+            let e = Self::embed(&self.emb_tgt, &toks, d);
+            let eq = Self::qx(&mut self.ctl, 2, &e, iter, &mut ctx.ledger);
+            let hq = Self::qx(&mut self.ctl, 3, dec_h.last().unwrap(), iter, &mut ctx.ledger);
+            let mut h = eq.matmul(&dec_wx_q);
+            h.add_inplace(&hq.matmul(&dec_wh_q));
+            h.add_row_bias(&self.dec_b.data);
+            tanh_vec(&mut h.data);
+            let sq = Self::qx(&mut self.ctl, 4, &h, iter, &mut ctx.ledger);
+            let mut logits = sq.matmul(&why_q);
+            logits.add_row_bias(&self.by.data);
+            dec_xq.push(eq);
+            dec_hq.push(hq);
+            dec_sq.push(sq);
+            dec_h.push(h);
+            logits_all.push(logits);
+        }
+
+        // loss + metrics
+        let mut loss = 0.0f32;
+        let mut hits = 0usize;
+        let mut dlogits: Vec<Tensor> = Vec::with_capacity(t_len);
+        for t in 0..t_len {
+            let labels: Vec<usize> = tgt.iter().map(|s| s[t]).collect();
+            let (l, g) = super::loss::softmax_xent(&logits_all[t], &labels);
+            loss += l;
+            let preds = logits_all[t].argmax_rows();
+            hits += preds.iter().zip(&labels).filter(|(p, y)| p == y).count();
+            dlogits.push(g);
+        }
+        loss /= t_len as f32;
+        let acc = hits as f64 / (b * t_len) as f64;
+        if !train {
+            return (loss, acc);
+        }
+
+        // ---------------- backward (BPTT) ----------------
+        // grads index map: 0 emb_src, 1 emb_tgt, 2 enc_wx, 3 enc_wh, 4 enc_b,
+        //                  5 dec_wx, 6 dec_wh, 7 dec_b, 8 why, 9 by
+        let scale = 1.0 / t_len as f32;
+        let mut dh_next = Tensor::zeros(&[b, d]);
+        for t in (0..t_len).rev() {
+            let mut dl = dlogits[t].clone();
+            dl.scale_inplace(scale);
+            // quantize dlogits (ΔX̂ for the Why projection)
+            let dlq = Self::qg(&mut self.ctl, 4, &dl, iter, &mut ctx.ledger);
+            // why grads: sᵀ·ĝ ; by: col sums
+            self.grads[8].add_inplace(&dec_sq[t].t().matmul(&dlq));
+            for row in dlq.data.chunks(v) {
+                for (gb, &x) in self.grads[9].data.iter_mut().zip(row) {
+                    *gb += x;
+                }
+            }
+            // ds = ĝ·Whyᵀ + dh_next
+            let mut ds = dlq.matmul(&why_q.t());
+            ds.add_inplace(&dh_next);
+            // through tanh
+            for (dv, &hv) in ds.data.iter_mut().zip(&dec_h[t + 1].data) {
+                *dv *= 1.0 - hv * hv;
+            }
+            // quantize recurrent gradient (ΔX̂ for dec projections)
+            let dsq = Self::qg(&mut self.ctl, 3, &ds, iter, &mut ctx.ledger);
+            self.grads[5].add_inplace(&dec_xq[t].t().matmul(&dsq));
+            self.grads[6].add_inplace(&dec_hq[t].t().matmul(&dsq));
+            for row in dsq.data.chunks(d) {
+                for (gb, &x) in self.grads[7].data.iter_mut().zip(row) {
+                    *gb += x;
+                }
+            }
+            // embedding grad (f32, scatter)
+            let de = dsq.matmul(&dec_wx_q.t());
+            for (bidx, s) in tgt.iter().enumerate() {
+                let tok = if t == 0 { bos } else { s[t - 1] };
+                for j in 0..d {
+                    self.grads[1].data[tok * d + j] += de.data[bidx * d + j];
+                }
+            }
+            dh_next = dsq.matmul(&dec_wh_q.t());
+        }
+
+        // into encoder: gradient w.r.t. enc final h
+        let mut dhe = dh_next;
+        for t in (0..s_len).rev() {
+            for (dv, &hv) in dhe.data.iter_mut().zip(&enc_h[t + 1].data) {
+                *dv *= 1.0 - hv * hv;
+            }
+            let dhq = Self::qg(&mut self.ctl, 1, &dhe, iter, &mut ctx.ledger);
+            self.grads[2].add_inplace(&enc_xq[t].t().matmul(&dhq));
+            self.grads[3].add_inplace(&enc_hq[t].t().matmul(&dhq));
+            for row in dhq.data.chunks(d) {
+                for (gb, &x) in self.grads[4].data.iter_mut().zip(row) {
+                    *gb += x;
+                }
+            }
+            let de = dhq.matmul(&enc_wx_q.t());
+            for (bidx, s) in src.iter().enumerate() {
+                let tok = s[t];
+                for j in 0..d {
+                    self.grads[0].data[tok * d + j] += de.data[bidx * d + j];
+                }
+            }
+            dhe = dhq.matmul(&enc_wh_q.t());
+        }
+
+        (loss, acc)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::translation_batch;
+    use crate::nn::QuantMode;
+
+    #[test]
+    fn bptt_gradient_matches_finite_difference() {
+        let mut rng = Pcg32::seeded(42);
+        let mut m = Seq2Seq::new(8, 6, QuantMode::Float32, &mut rng);
+        let mut ctx = TrainCtx::new();
+        let (src, tgt) = translation_batch(&mut rng, 2, 3, 8);
+        // one backward to fill grads (lr=0 → params unchanged)
+        let _ = m.train_step_no_update(&src, &tgt, &mut ctx);
+        let eps = 1e-3f32;
+        // check a few coordinates of enc_wx (idx 2) and why (idx 8)
+        for (which, idx) in [(0usize, 1usize), (0, 7), (1, 3)] {
+            let grad = if which == 0 { m.grads[2].data[idx] } else { m.grads[8].data[idx] };
+            let bump = |m: &mut Seq2Seq, d: f32| {
+                if which == 0 { m.enc_wx.data[idx] += d } else { m.why.data[idx] += d }
+            };
+            bump(&mut m, eps);
+            let (lp, _) = m.eval(&src, &tgt, &mut ctx);
+            bump(&mut m, -2.0 * eps);
+            let (lm, _) = m.eval(&src, &tgt, &mut ctx);
+            bump(&mut m, eps);
+            let fd = (lp - lm) / (2.0 * eps);
+            assert!((grad - fd).abs() < 2e-2, "which={which} idx={idx}: {grad} vs {fd}");
+        }
+    }
+
+    #[test]
+    fn f32_seq2seq_learns_reversal() {
+        let mut rng = Pcg32::seeded(0);
+        let mut m = Seq2Seq::new(12, 32, QuantMode::Float32, &mut rng);
+        let mut ctx = TrainCtx::new();
+        let mut first = 0.0;
+        let mut last = 0.0;
+        for it in 0..250 {
+            ctx.iter = it;
+            let (src, tgt) = translation_batch(&mut rng, 16, 4, 12);
+            let (l, _) = m.train_step(&src, &tgt, 0.05, &mut ctx);
+            if it == 0 {
+                first = l;
+            }
+            last = l;
+        }
+        assert!(last < first * 0.6, "first={first} last={last}");
+    }
+
+    #[test]
+    fn adaptive_seq2seq_trains_and_reports_bits() {
+        let mut rng = Pcg32::seeded(1);
+        let mut cfg = crate::apt::AptConfig::default();
+        cfg.init_phase_iters = 5;
+        let mut m = Seq2Seq::new(12, 32, QuantMode::Adaptive(cfg), &mut rng);
+        let mut ctx = TrainCtx::new();
+        let mut first = 0.0;
+        let mut last = 0.0;
+        for it in 0..250 {
+            ctx.iter = it;
+            let (src, tgt) = translation_batch(&mut rng, 16, 4, 12);
+            let (l, _) = m.train_step(&src, &tgt, 0.05, &mut ctx);
+            if it == 0 {
+                first = l;
+            }
+            last = l;
+        }
+        assert!(last < first * 0.7, "first={first} last={last}");
+        let bits = m.grad_bits();
+        assert_eq!(bits.len(), 5);
+        assert!(bits.iter().all(|(_, b)| [8u8, 16, 24, 32].contains(b)));
+    }
+}

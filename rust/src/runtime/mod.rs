@@ -1,0 +1,331 @@
+//! PJRT runtime (system S10): loads the AOT HLO-text artifacts produced by
+//! `python/compile/aot.py` and executes them on the CPU PJRT client.
+//!
+//! Interchange is HLO *text* — the image's xla_extension 0.5.1 rejects
+//! jax ≥ 0.5 serialized `HloModuleProto`s (64-bit instruction ids); the text
+//! parser reassigns ids (see /opt/xla-example/README.md). All artifacts are
+//! lowered with `return_tuple=True`, so outputs arrive as one tuple literal
+//! that we decompose per the manifest.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+/// Element type of an artifact I/O slot.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Dtype {
+    F32,
+    I32,
+}
+
+/// One input/output slot.
+#[derive(Clone, Debug)]
+pub struct IoSpec {
+    pub name: String,
+    pub dtype: Dtype,
+    /// Empty = scalar.
+    pub dims: Vec<usize>,
+}
+
+impl IoSpec {
+    pub fn elements(&self) -> usize {
+        self.dims.iter().product::<usize>().max(1)
+    }
+}
+
+/// One artifact's manifest entry.
+#[derive(Clone, Debug)]
+pub struct ArtifactSpec {
+    pub name: String,
+    pub file: String,
+    pub inputs: Vec<IoSpec>,
+    pub outputs: Vec<IoSpec>,
+}
+
+impl ArtifactSpec {
+    pub fn input_index(&self, name: &str) -> Option<usize> {
+        self.inputs.iter().position(|s| s.name == name)
+    }
+
+    pub fn output_index(&self, name: &str) -> Option<usize> {
+        self.outputs.iter().position(|s| s.name == name)
+    }
+}
+
+/// Parsed `manifest.txt`.
+#[derive(Clone, Debug, Default)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub artifacts: Vec<ArtifactSpec>,
+}
+
+fn parse_io(line: &str) -> Result<IoSpec> {
+    // "<name> <dtype> <d0,d1|scalar>"
+    let parts: Vec<&str> = line.split_whitespace().collect();
+    if parts.len() != 3 {
+        bail!("bad io line: {line:?}");
+    }
+    let dtype = match parts[1] {
+        "f32" => Dtype::F32,
+        "i32" => Dtype::I32,
+        other => bail!("unknown dtype {other:?}"),
+    };
+    let dims = if parts[2] == "scalar" {
+        vec![]
+    } else {
+        parts[2]
+            .split(',')
+            .map(|d| d.parse::<usize>().map_err(|e| anyhow!("bad dim {d:?}: {e}")))
+            .collect::<Result<Vec<_>>>()?
+    };
+    Ok(IoSpec { name: parts[0].to_string(), dtype, dims })
+}
+
+impl Manifest {
+    pub fn load(dir: impl AsRef<Path>) -> Result<Self> {
+        let dir = dir.as_ref().to_path_buf();
+        let text = std::fs::read_to_string(dir.join("manifest.txt"))
+            .with_context(|| format!("reading {}/manifest.txt — run `make artifacts`", dir.display()))?;
+        let mut artifacts: Vec<ArtifactSpec> = Vec::new();
+        for (lineno, line) in text.lines().enumerate() {
+            let line = line.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            let (kind, rest) = line
+                .split_once(' ')
+                .ok_or_else(|| anyhow!("manifest line {lineno}: {line:?}"))?;
+            match kind {
+                "artifact" => {
+                    let (name, file) = rest
+                        .split_once(' ')
+                        .ok_or_else(|| anyhow!("artifact line {lineno}"))?;
+                    artifacts.push(ArtifactSpec {
+                        name: name.to_string(),
+                        file: file.to_string(),
+                        inputs: vec![],
+                        outputs: vec![],
+                    });
+                }
+                "in" => artifacts
+                    .last_mut()
+                    .ok_or_else(|| anyhow!("`in` before `artifact` at line {lineno}"))?
+                    .inputs
+                    .push(parse_io(rest)?),
+                "out" => artifacts
+                    .last_mut()
+                    .ok_or_else(|| anyhow!("`out` before `artifact` at line {lineno}"))?
+                    .outputs
+                    .push(parse_io(rest)?),
+                other => bail!("unknown manifest entry {other:?} at line {lineno}"),
+            }
+        }
+        Ok(Manifest { dir, artifacts })
+    }
+
+    pub fn get(&self, name: &str) -> Option<&ArtifactSpec> {
+        self.artifacts.iter().find(|a| a.name == name)
+    }
+}
+
+/// A host-side value crossing the PJRT boundary.
+#[derive(Clone, Debug, PartialEq)]
+pub enum HostValue {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+}
+
+impl HostValue {
+    pub fn as_f32(&self) -> &[f32] {
+        match self {
+            HostValue::F32(v) => v,
+            _ => panic!("expected f32 value"),
+        }
+    }
+
+    pub fn as_i32(&self) -> &[i32] {
+        match self {
+            HostValue::I32(v) => v,
+            _ => panic!("expected i32 value"),
+        }
+    }
+
+    pub fn scalar_f32(&self) -> f32 {
+        self.as_f32()[0]
+    }
+
+    pub fn len(&self) -> usize {
+        match self {
+            HostValue::F32(v) => v.len(),
+            HostValue::I32(v) => v.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+/// Compiled artifact ready to execute.
+pub struct LoadedArtifact {
+    pub spec: ArtifactSpec,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+impl LoadedArtifact {
+    fn literal_for(spec: &IoSpec, v: &HostValue) -> Result<xla::Literal> {
+        if v.len() != spec.elements() {
+            bail!(
+                "input {}: expected {} elements, got {}",
+                spec.name,
+                spec.elements(),
+                v.len()
+            );
+        }
+        let lit = match (spec.dtype, v) {
+            (Dtype::F32, HostValue::F32(data)) => xla::Literal::vec1(data),
+            (Dtype::I32, HostValue::I32(data)) => xla::Literal::vec1(data),
+            _ => bail!("input {}: dtype mismatch", spec.name),
+        };
+        if spec.dims.is_empty() {
+            // scalar: reshape to rank-0
+            Ok(lit.reshape(&[])?)
+        } else {
+            let dims: Vec<i64> = spec.dims.iter().map(|&d| d as i64).collect();
+            Ok(lit.reshape(&dims)?)
+        }
+    }
+
+    /// Execute with inputs in manifest order; returns outputs in manifest
+    /// order as host values.
+    pub fn exec(&self, inputs: &[HostValue]) -> Result<Vec<HostValue>> {
+        if inputs.len() != self.spec.inputs.len() {
+            bail!(
+                "{}: expected {} inputs, got {}",
+                self.spec.name,
+                self.spec.inputs.len(),
+                inputs.len()
+            );
+        }
+        let lits: Vec<xla::Literal> = self
+            .spec
+            .inputs
+            .iter()
+            .zip(inputs)
+            .map(|(s, v)| Self::literal_for(s, v))
+            .collect::<Result<Vec<_>>>()?;
+        let result = self.exe.execute::<xla::Literal>(&lits)?[0][0].to_literal_sync()?;
+        let parts = result.to_tuple()?;
+        if parts.len() != self.spec.outputs.len() {
+            bail!(
+                "{}: artifact returned {} outputs, manifest says {}",
+                self.spec.name,
+                parts.len(),
+                self.spec.outputs.len()
+            );
+        }
+        self.spec
+            .outputs
+            .iter()
+            .zip(parts)
+            .map(|(s, lit)| {
+                Ok(match s.dtype {
+                    Dtype::F32 => HostValue::F32(lit.to_vec::<f32>()?),
+                    Dtype::I32 => HostValue::I32(lit.to_vec::<i32>()?),
+                })
+            })
+            .collect()
+    }
+}
+
+/// The runtime: one PJRT CPU client + compiled artifacts by name.
+pub struct Runtime {
+    pub manifest: Manifest,
+    client: xla::PjRtClient,
+    loaded: HashMap<String, LoadedArtifact>,
+}
+
+impl Runtime {
+    /// Create a client over the artifact directory (no compilation yet).
+    pub fn new(dir: impl AsRef<Path>) -> Result<Self> {
+        let manifest = Manifest::load(dir)?;
+        let client = xla::PjRtClient::cpu()?;
+        Ok(Runtime { manifest, client, loaded: HashMap::new() })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Compile (once) and return an artifact.
+    pub fn load(&mut self, name: &str) -> Result<&LoadedArtifact> {
+        if !self.loaded.contains_key(name) {
+            let spec = self
+                .manifest
+                .get(name)
+                .ok_or_else(|| anyhow!("artifact {name:?} not in manifest"))?
+                .clone();
+            let path = self.manifest.dir.join(&spec.file);
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+            )?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self.client.compile(&comp)?;
+            self.loaded.insert(name.to_string(), LoadedArtifact { spec, exe });
+        }
+        Ok(&self.loaded[name])
+    }
+
+    /// Convenience: load + exec.
+    pub fn exec(&mut self, name: &str, inputs: &[HostValue]) -> Result<Vec<HostValue>> {
+        self.load(name)?.exec(inputs)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn manifest_parses() {
+        let dir = std::env::temp_dir().join("apt_manifest_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(
+            dir.join("manifest.txt"),
+            "artifact foo foo.hlo.txt\nin x f32 2,3\nin n i32 scalar\nout y f32 6\n",
+        )
+        .unwrap();
+        let m = Manifest::load(&dir).unwrap();
+        let a = m.get("foo").unwrap();
+        assert_eq!(a.inputs.len(), 2);
+        assert_eq!(a.inputs[0].dims, vec![2, 3]);
+        assert_eq!(a.inputs[0].elements(), 6);
+        assert_eq!(a.inputs[1].dims, Vec::<usize>::new());
+        assert_eq!(a.inputs[1].elements(), 1);
+        assert_eq!(a.inputs[1].dtype, Dtype::I32);
+        assert_eq!(a.outputs[0].name, "y");
+        assert_eq!(a.input_index("n"), Some(1));
+        assert_eq!(a.output_index("nope"), None);
+    }
+
+    #[test]
+    fn manifest_rejects_garbage() {
+        let dir = std::env::temp_dir().join("apt_manifest_bad");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("manifest.txt"), "in x f32 2 before artifact\n").unwrap();
+        assert!(Manifest::load(&dir).is_err());
+    }
+
+    #[test]
+    fn host_value_accessors() {
+        let v = HostValue::F32(vec![1.0, 2.0]);
+        assert_eq!(v.len(), 2);
+        assert_eq!(v.scalar_f32(), 1.0);
+        let i = HostValue::I32(vec![7]);
+        assert_eq!(i.as_i32(), &[7]);
+    }
+
+    // PJRT execution round-trips are exercised by rust/tests/test_runtime.rs
+    // (integration), which requires `make artifacts` to have run.
+}

@@ -1,0 +1,207 @@
+//! Minimal dense f32 tensor for the pure-Rust training substrate.
+//!
+//! Contiguous row-major storage with a shape vector. Heavy math routes to
+//! `fixedpoint::gemm` / `fixedpoint::conv`; this type mostly manages shape
+//! bookkeeping and elementwise traversal for the `nn` layers.
+
+use crate::fixedpoint::gemm;
+
+/// Dense row-major f32 tensor.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Tensor {
+    pub shape: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+impl Tensor {
+    pub fn zeros(shape: &[usize]) -> Self {
+        let n: usize = shape.iter().product();
+        Tensor { shape: shape.to_vec(), data: vec![0.0; n] }
+    }
+
+    pub fn from_vec(shape: &[usize], data: Vec<f32>) -> Self {
+        assert_eq!(shape.iter().product::<usize>(), data.len(), "shape/data mismatch");
+        Tensor { shape: shape.to_vec(), data }
+    }
+
+    pub fn filled(shape: &[usize], v: f32) -> Self {
+        let n: usize = shape.iter().product();
+        Tensor { shape: shape.to_vec(), data: vec![v; n] }
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    pub fn rank(&self) -> usize {
+        self.shape.len()
+    }
+
+    /// Dim i (panics if out of rank).
+    pub fn dim(&self, i: usize) -> usize {
+        self.shape[i]
+    }
+
+    /// Reshape in place (product must match).
+    pub fn reshape(&mut self, shape: &[usize]) -> &mut Self {
+        assert_eq!(shape.iter().product::<usize>(), self.data.len());
+        self.shape = shape.to_vec();
+        self
+    }
+
+    /// 2-D matmul: self (m×k) · other (k×n).
+    pub fn matmul(&self, other: &Tensor) -> Tensor {
+        assert_eq!(self.rank(), 2);
+        assert_eq!(other.rank(), 2);
+        let (m, k) = (self.shape[0], self.shape[1]);
+        let (k2, n) = (other.shape[0], other.shape[1]);
+        assert_eq!(k, k2, "inner dims: {k} vs {k2}");
+        let mut out = Tensor::zeros(&[m, n]);
+        gemm::gemm_f32(m, k, n, &self.data, &other.data, &mut out.data);
+        out
+    }
+
+    /// Transposed 2-D view materialized.
+    pub fn t(&self) -> Tensor {
+        assert_eq!(self.rank(), 2);
+        let (m, n) = (self.shape[0], self.shape[1]);
+        let mut out = Tensor::zeros(&[n, m]);
+        gemm::transpose(m, n, &self.data, &mut out.data);
+        out
+    }
+
+    pub fn map_inplace(&mut self, f: impl Fn(f32) -> f32) -> &mut Self {
+        for v in self.data.iter_mut() {
+            *v = f(*v);
+        }
+        self
+    }
+
+    pub fn add_inplace(&mut self, other: &Tensor) -> &mut Self {
+        assert_eq!(self.shape, other.shape);
+        for (a, b) in self.data.iter_mut().zip(&other.data) {
+            *a += b;
+        }
+        self
+    }
+
+    pub fn scale_inplace(&mut self, s: f32) -> &mut Self {
+        for v in self.data.iter_mut() {
+            *v *= s;
+        }
+        self
+    }
+
+    /// axpy: self += alpha * other.
+    pub fn axpy_inplace(&mut self, alpha: f32, other: &Tensor) -> &mut Self {
+        assert_eq!(self.shape, other.shape);
+        for (a, &b) in self.data.iter_mut().zip(&other.data) {
+            *a += alpha * b;
+        }
+        self
+    }
+
+    /// Broadcast-add a bias over the last dim of a 2-D tensor.
+    pub fn add_row_bias(&mut self, bias: &[f32]) -> &mut Self {
+        assert_eq!(self.rank(), 2);
+        let n = self.shape[1];
+        assert_eq!(bias.len(), n);
+        for row in self.data.chunks_mut(n) {
+            for (v, &b) in row.iter_mut().zip(bias) {
+                *v += b;
+            }
+        }
+        self
+    }
+
+    pub fn sum(&self) -> f64 {
+        self.data.iter().map(|&x| x as f64).sum()
+    }
+
+    pub fn max_abs(&self) -> f32 {
+        crate::fixedpoint::quantize::max_abs(&self.data)
+    }
+
+    /// Row-wise argmax of a 2-D tensor.
+    pub fn argmax_rows(&self) -> Vec<usize> {
+        assert_eq!(self.rank(), 2);
+        let n = self.shape[1];
+        self.data
+            .chunks(n)
+            .map(|row| {
+                row.iter()
+                    .enumerate()
+                    .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                    .map(|(i, _)| i)
+                    .unwrap()
+            })
+            .collect()
+    }
+}
+
+/// Numerically-stable row softmax in place (2-D).
+pub fn softmax_rows(t: &mut Tensor) {
+    assert_eq!(t.rank(), 2);
+    let n = t.shape[1];
+    for row in t.data.chunks_mut(n) {
+        let m = row.iter().fold(f32::NEG_INFINITY, |a, &b| a.max(b));
+        let mut z = 0.0f32;
+        for v in row.iter_mut() {
+            *v = (*v - m).exp();
+            z += *v;
+        }
+        let inv = 1.0 / z;
+        for v in row.iter_mut() {
+            *v *= inv;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matmul_small() {
+        let a = Tensor::from_vec(&[2, 2], vec![1.0, 2.0, 3.0, 4.0]);
+        let b = Tensor::from_vec(&[2, 2], vec![1.0, 1.0, 1.0, 1.0]);
+        let c = a.matmul(&b);
+        assert_eq!(c.data, vec![3.0, 3.0, 7.0, 7.0]);
+    }
+
+    #[test]
+    fn transpose() {
+        let a = Tensor::from_vec(&[2, 3], vec![1., 2., 3., 4., 5., 6.]);
+        let t = a.t();
+        assert_eq!(t.shape, vec![3, 2]);
+        assert_eq!(t.data, vec![1., 4., 2., 5., 3., 6.]);
+    }
+
+    #[test]
+    fn softmax_rows_sum_to_one() {
+        let mut t = Tensor::from_vec(&[2, 3], vec![1., 2., 3., -1., 0., 1e4]);
+        softmax_rows(&mut t);
+        for row in t.data.chunks(3) {
+            let s: f32 = row.iter().sum();
+            assert!((s - 1.0).abs() < 1e-5);
+            assert!(row.iter().all(|&p| (0.0..=1.0).contains(&p)));
+        }
+    }
+
+    #[test]
+    fn bias_and_argmax() {
+        let mut t = Tensor::zeros(&[2, 3]);
+        t.add_row_bias(&[0.1, 0.5, 0.2]);
+        assert_eq!(t.argmax_rows(), vec![1, 1]);
+    }
+
+    #[test]
+    #[should_panic]
+    fn shape_mismatch_panics() {
+        Tensor::from_vec(&[2, 2], vec![1.0]);
+    }
+}

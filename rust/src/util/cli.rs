@@ -1,0 +1,126 @@
+//! Minimal CLI argument parser (offline substitute for `clap`).
+//!
+//! Supports `--key value`, `--key=value`, boolean `--flag`, and positional
+//! arguments. Convention: positionals come *before* options (a bare token
+//! after `--flag` is consumed as that flag's value — `--key value` wins the
+//! ambiguity, matching how all `apt` subcommands are invoked).
+
+use std::collections::BTreeMap;
+
+/// Parsed arguments: options + positionals.
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    opts: BTreeMap<String, String>,
+    positional: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of raw arguments (excluding argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(raw: I) -> Self {
+        let mut opts = BTreeMap::new();
+        let mut positional = Vec::new();
+        let mut it = raw.into_iter().peekable();
+        while let Some(a) = it.next() {
+            if let Some(body) = a.strip_prefix("--") {
+                if let Some((k, v)) = body.split_once('=') {
+                    opts.insert(k.to_string(), v.to_string());
+                } else if it.peek().map(|n| !n.starts_with("--")).unwrap_or(false) {
+                    let v = it.next().unwrap();
+                    opts.insert(body.to_string(), v);
+                } else {
+                    opts.insert(body.to_string(), "true".to_string());
+                }
+            } else {
+                positional.push(a);
+            }
+        }
+        Args { opts, positional }
+    }
+
+    /// Parse from the process environment (skips argv[0]).
+    pub fn from_env() -> Self {
+        Self::parse(std::env::args().skip(1))
+    }
+
+    pub fn positional(&self) -> &[String] {
+        &self.positional
+    }
+
+    pub fn has(&self, key: &str) -> bool {
+        self.opts.contains_key(key)
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.opts.get(key).map(|s| s.as_str())
+    }
+
+    pub fn str_or(&self, key: &str, default: &str) -> String {
+        self.get(key).unwrap_or(default).to_string()
+    }
+
+    pub fn usize_or(&self, key: &str, default: usize) -> usize {
+        self.get(key)
+            .map(|v| v.parse().unwrap_or_else(|_| panic!("--{key} expects an integer, got {v:?}")))
+            .unwrap_or(default)
+    }
+
+    pub fn u64_or(&self, key: &str, default: u64) -> u64 {
+        self.get(key)
+            .map(|v| v.parse().unwrap_or_else(|_| panic!("--{key} expects an integer, got {v:?}")))
+            .unwrap_or(default)
+    }
+
+    pub fn f32_or(&self, key: &str, default: f32) -> f32 {
+        self.get(key)
+            .map(|v| v.parse().unwrap_or_else(|_| panic!("--{key} expects a float, got {v:?}")))
+            .unwrap_or(default)
+    }
+
+    pub fn bool_or(&self, key: &str, default: bool) -> bool {
+        match self.get(key) {
+            None => default,
+            Some("true") | Some("1") | Some("yes") => true,
+            Some("false") | Some("0") | Some("no") => false,
+            Some(v) => panic!("--{key} expects a bool, got {v:?}"),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from))
+    }
+
+    #[test]
+    fn key_value_forms() {
+        let a = parse("run fig1 --iters 100 --lr=0.05 --verbose");
+        assert_eq!(a.usize_or("iters", 0), 100);
+        assert!((a.f32_or("lr", 0.0) - 0.05).abs() < 1e-9);
+        assert!(a.bool_or("verbose", false));
+        assert_eq!(a.positional(), &["run".to_string(), "fig1".to_string()]);
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = parse("cmd");
+        assert_eq!(a.usize_or("iters", 7), 7);
+        assert_eq!(a.str_or("mode", "mode2"), "mode2");
+        assert!(!a.bool_or("verbose", false));
+    }
+
+    #[test]
+    fn negative_numbers_as_values() {
+        let a = parse("--offset -3");
+        // "-3" does not start with "--" so it is consumed as the value.
+        assert_eq!(a.get("offset"), Some("-3"));
+    }
+
+    #[test]
+    #[should_panic]
+    fn bad_int_panics() {
+        parse("--iters abc").usize_or("iters", 0);
+    }
+}

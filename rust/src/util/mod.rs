@@ -1,0 +1,16 @@
+//! Shared utilities: RNG, statistics, CLI parsing, output writers, timing,
+//! and a minimal randomized-property-test helper.
+//!
+//! The offline crate set has no `rand`, `clap`, `serde`, or `proptest`;
+//! these modules are deliberately small substitutes (see DESIGN.md §2).
+
+pub mod cli;
+pub mod out;
+pub mod proptest;
+pub mod rng;
+pub mod stats;
+pub mod timer;
+
+pub use rng::Pcg32;
+pub use stats::{Ema, Log2Histogram};
+pub use timer::Timer;

@@ -1,0 +1,222 @@
+//! Result writers: CSV and a minimal JSON emitter.
+//!
+//! Every experiment driver writes machine-readable output under `results/`
+//! in addition to its terminal table, so figures can be re-plotted without
+//! re-running training.
+
+use std::fmt::Write as _;
+use std::fs;
+use std::io;
+use std::path::{Path, PathBuf};
+
+/// CSV writer with a fixed header; rows are checked against it.
+pub struct Csv {
+    path: PathBuf,
+    header: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Csv {
+    pub fn new<P: AsRef<Path>>(path: P, header: &[&str]) -> Self {
+        Csv {
+            path: path.as_ref().to_path_buf(),
+            header: header.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row<S: ToString>(&mut self, cells: &[S]) {
+        assert_eq!(cells.len(), self.header.len(), "row width != header width");
+        self.rows.push(cells.iter().map(|c| c.to_string()).collect());
+    }
+
+    pub fn write(&self) -> io::Result<()> {
+        if let Some(dir) = self.path.parent() {
+            fs::create_dir_all(dir)?;
+        }
+        let mut s = String::new();
+        let _ = writeln!(s, "{}", self.header.join(","));
+        for r in &self.rows {
+            let _ = writeln!(s, "{}", r.join(","));
+        }
+        fs::write(&self.path, s)
+    }
+
+    pub fn len(&self) -> usize {
+        self.rows.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.rows.is_empty()
+    }
+}
+
+/// Minimal JSON value for result blobs (substitute for serde_json).
+#[derive(Debug, Clone)]
+pub enum Json {
+    Null,
+    Bool(bool),
+    Num(f64),
+    Str(String),
+    Arr(Vec<Json>),
+    Obj(Vec<(String, Json)>),
+}
+
+impl Json {
+    pub fn obj() -> Json {
+        Json::Obj(Vec::new())
+    }
+
+    /// Insert/overwrite a key on an object; panics on non-objects.
+    pub fn set<S: Into<String>>(&mut self, key: S, val: Json) -> &mut Self {
+        match self {
+            Json::Obj(pairs) => {
+                let key = key.into();
+                if let Some(p) = pairs.iter_mut().find(|(k, _)| *k == key) {
+                    p.1 = val;
+                } else {
+                    pairs.push((key, val));
+                }
+            }
+            _ => panic!("set() on non-object"),
+        }
+        self
+    }
+
+    pub fn num(x: f64) -> Json {
+        Json::Num(x)
+    }
+
+    pub fn str<S: Into<String>>(s: S) -> Json {
+        Json::Str(s.into())
+    }
+
+    pub fn arr_num(xs: &[f64]) -> Json {
+        Json::Arr(xs.iter().map(|&x| Json::Num(x)).collect())
+    }
+
+    pub fn arr_f32(xs: &[f32]) -> Json {
+        Json::Arr(xs.iter().map(|&x| Json::Num(x as f64)).collect())
+    }
+
+    fn escape(s: &str, out: &mut String) {
+        out.push('"');
+        for c in s.chars() {
+            match c {
+                '"' => out.push_str("\\\""),
+                '\\' => out.push_str("\\\\"),
+                '\n' => out.push_str("\\n"),
+                '\t' => out.push_str("\\t"),
+                '\r' => out.push_str("\\r"),
+                c if (c as u32) < 0x20 => {
+                    let _ = write!(out, "\\u{:04x}", c as u32);
+                }
+                c => out.push(c),
+            }
+        }
+        out.push('"');
+    }
+
+    pub fn render(&self) -> String {
+        let mut s = String::new();
+        self.render_into(&mut s);
+        s
+    }
+
+    fn render_into(&self, out: &mut String) {
+        match self {
+            Json::Null => out.push_str("null"),
+            Json::Bool(b) => out.push_str(if *b { "true" } else { "false" }),
+            Json::Num(x) => {
+                if x.is_finite() {
+                    let _ = write!(out, "{x}");
+                } else {
+                    out.push_str("null"); // JSON has no NaN/Inf
+                }
+            }
+            Json::Str(s) => Self::escape(s, out),
+            Json::Arr(xs) => {
+                out.push('[');
+                for (i, x) in xs.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    x.render_into(out);
+                }
+                out.push(']');
+            }
+            Json::Obj(pairs) => {
+                out.push('{');
+                for (i, (k, v)) in pairs.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    Self::escape(k, out);
+                    out.push(':');
+                    v.render_into(out);
+                }
+                out.push('}');
+            }
+        }
+    }
+
+    pub fn write<P: AsRef<Path>>(&self, path: P) -> io::Result<()> {
+        if let Some(dir) = path.as_ref().parent() {
+            fs::create_dir_all(dir)?;
+        }
+        fs::write(path, self.render())
+    }
+}
+
+/// Results directory root (overridable for tests).
+pub fn results_dir() -> PathBuf {
+    std::env::var("APT_RESULTS_DIR")
+        .map(PathBuf::from)
+        .unwrap_or_else(|_| PathBuf::from("results"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn csv_roundtrip() {
+        let dir = std::env::temp_dir().join("apt_csv_test");
+        let p = dir.join("t.csv");
+        let mut c = Csv::new(&p, &["a", "b"]);
+        c.row(&["1", "2"]);
+        c.row(&["x", "y"]);
+        c.write().unwrap();
+        let s = fs::read_to_string(&p).unwrap();
+        assert_eq!(s, "a,b\n1,2\nx,y\n");
+    }
+
+    #[test]
+    #[should_panic]
+    fn csv_width_checked() {
+        let mut c = Csv::new("/tmp/x.csv", &["a", "b"]);
+        c.row(&["only-one"]);
+    }
+
+    #[test]
+    fn json_render() {
+        let mut j = Json::obj();
+        j.set("name", Json::str("fig\"1\""))
+            .set("vals", Json::arr_num(&[1.0, 2.5]))
+            .set("ok", Json::Bool(true))
+            .set("nan", Json::Num(f64::NAN));
+        let s = j.render();
+        assert_eq!(
+            s,
+            r#"{"name":"fig\"1\"","vals":[1,2.5],"ok":true,"nan":null}"#
+        );
+    }
+
+    #[test]
+    fn json_set_overwrites() {
+        let mut j = Json::obj();
+        j.set("k", Json::num(1.0));
+        j.set("k", Json::num(2.0));
+        assert_eq!(j.render(), r#"{"k":2}"#);
+    }
+}

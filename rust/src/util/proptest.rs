@@ -1,0 +1,111 @@
+//! Minimal randomized-property-test helper (offline substitute for the
+//! `proptest` crate — see DESIGN.md §2).
+//!
+//! A property is a closure over a [`Gen`]; [`check`] runs it across many
+//! seeded cases and reports the first failing seed so failures reproduce
+//! exactly (`APT_PROPTEST_SEED=<seed>` reruns a single case).
+
+use crate::util::rng::Pcg32;
+
+/// Value generator handed to properties.
+pub struct Gen {
+    pub rng: Pcg32,
+    pub size: usize,
+}
+
+impl Gen {
+    /// Integer in [lo, hi] inclusive.
+    pub fn int(&mut self, lo: i64, hi: i64) -> i64 {
+        debug_assert!(hi >= lo);
+        lo + self.rng.below((hi - lo + 1) as usize) as i64
+    }
+
+    /// usize in [lo, hi] inclusive.
+    pub fn usize(&mut self, lo: usize, hi: usize) -> usize {
+        self.int(lo as i64, hi as i64) as usize
+    }
+
+    /// f32 in [lo, hi).
+    pub fn f32(&mut self, lo: f32, hi: f32) -> f32 {
+        self.rng.range(lo, hi)
+    }
+
+    /// Log-uniform positive f32 in [lo, hi) — spans decades evenly.
+    pub fn f32_log(&mut self, lo: f32, hi: f32) -> f32 {
+        debug_assert!(lo > 0.0 && hi > lo);
+        (self.rng.range(lo.ln(), hi.ln())).exp()
+    }
+
+    /// Gaussian vector with the given std.
+    pub fn normal_vec(&mut self, len: usize, std: f32) -> Vec<f32> {
+        (0..len).map(|_| self.rng.normal() * std).collect()
+    }
+
+    /// Pick one element of a slice.
+    pub fn choose<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        &xs[self.rng.below(xs.len())]
+    }
+}
+
+/// Run `prop` over `cases` generated cases. Panics with the failing seed on
+/// the first property violation (the closure should panic/assert on failure).
+pub fn check(name: &str, cases: usize, mut prop: impl FnMut(&mut Gen)) {
+    if let Ok(seed) = std::env::var("APT_PROPTEST_SEED") {
+        let seed: u64 = seed.parse().expect("APT_PROPTEST_SEED must be u64");
+        let mut g = Gen { rng: Pcg32::seeded(seed), size: 64 };
+        prop(&mut g);
+        return;
+    }
+    for case in 0..cases {
+        let seed = 0x5eed_0000 + case as u64;
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            let mut g = Gen { rng: Pcg32::seeded(seed), size: 64 };
+            prop(&mut g);
+        }));
+        if let Err(e) = result {
+            let msg = e
+                .downcast_ref::<String>()
+                .cloned()
+                .or_else(|| e.downcast_ref::<&str>().map(|s| s.to_string()))
+                .unwrap_or_else(|| "<non-string panic>".into());
+            panic!(
+                "property {name:?} failed on case {case} (APT_PROPTEST_SEED={seed}): {msg}"
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passes_trivial_property() {
+        check("abs-nonneg", 50, |g| {
+            let x = g.f32(-10.0, 10.0);
+            assert!(x.abs() >= 0.0);
+        });
+    }
+
+    #[test]
+    fn reports_failing_seed() {
+        let r = std::panic::catch_unwind(|| {
+            check("always-fails", 3, |_g| panic!("boom"));
+        });
+        let msg = format!("{:?}", r.unwrap_err().downcast_ref::<String>().unwrap());
+        assert!(msg.contains("APT_PROPTEST_SEED"), "{msg}");
+    }
+
+    #[test]
+    fn gen_ranges_hold() {
+        check("gen-ranges", 20, |g| {
+            let i = g.int(-5, 5);
+            assert!((-5..=5).contains(&i));
+            let f = g.f32_log(1e-3, 1e3);
+            assert!((1e-3..1e3).contains(&f));
+            let n = g.size;
+            let v = g.normal_vec(n, 2.0);
+            assert_eq!(v.len(), 64);
+        });
+    }
+}

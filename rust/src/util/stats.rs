@@ -1,0 +1,226 @@
+//! Small statistics toolkit: summaries, Pearson correlation, histograms.
+//!
+//! Used by the experiment drivers (Fig 1/2 histograms, Fig 5/6 R² scores)
+//! and by the bench harness for timing summaries.
+
+/// Mean of a slice (0 for empty).
+pub fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    xs.iter().sum::<f64>() / xs.len() as f64
+}
+
+/// Population standard deviation.
+pub fn stddev(xs: &[f64]) -> f64 {
+    if xs.len() < 2 {
+        return 0.0;
+    }
+    let m = mean(xs);
+    (xs.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / xs.len() as f64).sqrt()
+}
+
+/// Median (copies + sorts).
+pub fn median(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    let mut v = xs.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let n = v.len();
+    if n % 2 == 1 {
+        v[n / 2]
+    } else {
+        0.5 * (v[n / 2 - 1] + v[n / 2])
+    }
+}
+
+/// Squared Pearson correlation coefficient — paper Eq. 4:
+/// `R² = (Σ(M−M̄)(a−ā))² / (Σ(M−M̄)² Σ(a−ā)²)`.
+pub fn pearson_r2(m: &[f64], a: &[f64]) -> f64 {
+    assert_eq!(m.len(), a.len(), "series must align");
+    if m.len() < 2 {
+        return 0.0;
+    }
+    let mm = mean(m);
+    let ma = mean(a);
+    let mut cov = 0.0;
+    let mut vm = 0.0;
+    let mut va = 0.0;
+    for (x, y) in m.iter().zip(a) {
+        cov += (x - mm) * (y - ma);
+        vm += (x - mm) * (x - mm);
+        va += (y - ma) * (y - ma);
+    }
+    if vm == 0.0 || va == 0.0 {
+        return 0.0;
+    }
+    (cov * cov) / (vm * va)
+}
+
+/// Fixed-bin histogram over base-2 logarithm of |x| — the representation the
+/// paper uses for gradient distributions (Fig 1, Fig 2a).
+#[derive(Clone, Debug)]
+pub struct Log2Histogram {
+    /// Bin i covers log2|x| ∈ [min_exp + i, min_exp + i + 1).
+    pub min_exp: i32,
+    pub counts: Vec<u64>,
+    pub zeros: u64,
+    pub total: u64,
+}
+
+impl Log2Histogram {
+    pub fn new(min_exp: i32, max_exp: i32) -> Self {
+        assert!(max_exp > min_exp);
+        Log2Histogram {
+            min_exp,
+            counts: vec![0; (max_exp - min_exp) as usize],
+            zeros: 0,
+            total: 0,
+        }
+    }
+
+    pub fn add(&mut self, x: f32) {
+        self.total += 1;
+        let a = x.abs();
+        if a == 0.0 {
+            self.zeros += 1;
+            return;
+        }
+        let e = a.log2().floor() as i32;
+        let idx = (e - self.min_exp).clamp(0, self.counts.len() as i32 - 1) as usize;
+        self.counts[idx] += 1;
+    }
+
+    pub fn add_all(&mut self, xs: &[f32]) {
+        for &x in xs {
+            self.add(x);
+        }
+    }
+
+    /// Normalized frequencies per bin.
+    pub fn freqs(&self) -> Vec<f64> {
+        let t = self.total.max(1) as f64;
+        self.counts.iter().map(|&c| c as f64 / t).collect()
+    }
+
+    /// Mean of |x| reconstructed from bin centers (coarse; for display).
+    pub fn coarse_mean_abs(&self) -> f64 {
+        let mut s = 0.0;
+        for (i, &c) in self.counts.iter().enumerate() {
+            let center = (self.min_exp + i as i32) as f64 + 0.5;
+            s += c as f64 * center.exp2();
+        }
+        s / self.total.max(1) as f64
+    }
+
+    /// Render as a compact ASCII bar chart (for terminal output).
+    pub fn ascii(&self, width: usize) -> String {
+        let maxc = *self.counts.iter().max().unwrap_or(&1) as f64;
+        let mut out = String::new();
+        for (i, &c) in self.counts.iter().enumerate() {
+            let e = self.min_exp + i as i32;
+            let bar = ((c as f64 / maxc.max(1.0)) * width as f64).round() as usize;
+            out.push_str(&format!("  2^{e:>4} | {}{} {c}\n", "#".repeat(bar), " ".repeat(width - bar)));
+        }
+        out
+    }
+}
+
+/// Exponential moving average (paper Eq. 3: `R_i = α·Range + (1−α)·R_{i−1}`).
+#[derive(Clone, Copy, Debug)]
+pub struct Ema {
+    pub alpha: f32,
+    pub value: f32,
+    initialized: bool,
+}
+
+impl Ema {
+    pub fn new(alpha: f32) -> Self {
+        Ema { alpha, value: 0.0, initialized: false }
+    }
+
+    /// Update with a new observation; first observation seeds the average.
+    pub fn update(&mut self, x: f32) -> f32 {
+        if !self.initialized {
+            self.value = x;
+            self.initialized = true;
+        } else {
+            self.value = self.alpha * x + (1.0 - self.alpha) * self.value;
+        }
+        self.value
+    }
+
+    pub fn is_initialized(&self) -> bool {
+        self.initialized
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mean_stddev_median() {
+        let xs = [1.0, 2.0, 3.0, 4.0];
+        assert!((mean(&xs) - 2.5).abs() < 1e-12);
+        assert!((median(&xs) - 2.5).abs() < 1e-12);
+        assert!((stddev(&xs) - (1.25f64).sqrt()).abs() < 1e-12);
+        assert_eq!(median(&[3.0, 1.0, 2.0]), 2.0);
+    }
+
+    #[test]
+    fn pearson_perfect_linear() {
+        let m = [1.0, 2.0, 3.0, 4.0];
+        let a = [2.0, 4.0, 6.0, 8.0];
+        assert!((pearson_r2(&m, &a) - 1.0).abs() < 1e-12);
+        let neg = [-2.0, -4.0, -6.0, -8.0];
+        assert!((pearson_r2(&m, &neg) - 1.0).abs() < 1e-12); // R² sign-blind
+    }
+
+    #[test]
+    fn pearson_uncorrelated_is_small() {
+        let m = [1.0, 2.0, 3.0, 4.0, 5.0, 6.0, 7.0, 8.0];
+        let a = [1.0, -1.0, 1.0, -1.0, 1.0, -1.0, 1.0, -1.0];
+        assert!(pearson_r2(&m, &a) < 0.1);
+    }
+
+    #[test]
+    fn pearson_constant_series_is_zero() {
+        assert_eq!(pearson_r2(&[1.0, 1.0, 1.0], &[1.0, 2.0, 3.0]), 0.0);
+    }
+
+    #[test]
+    fn histogram_counts_and_zeros() {
+        let mut h = Log2Histogram::new(-8, 4);
+        h.add_all(&[0.0, 1.5, 0.25, -0.25, 1024.0, 1e-9]);
+        assert_eq!(h.total, 6);
+        assert_eq!(h.zeros, 1);
+        // 1.5 → exp 0; ±0.25 → exp −2 (two entries); 1024 clamps to top bin;
+        // 1e-9 clamps to bottom bin.
+        assert_eq!(h.counts[(0 - h.min_exp) as usize], 1);
+        assert_eq!(h.counts[(-2 - h.min_exp) as usize], 2);
+        assert_eq!(h.counts[h.counts.len() - 1], 1);
+        assert_eq!(h.counts[0], 1);
+        let f: f64 = h.freqs().iter().sum();
+        assert!((f - 5.0 / 6.0).abs() < 1e-12); // zeros excluded from bins
+    }
+
+    #[test]
+    fn ema_tracks_constant() {
+        let mut e = Ema::new(0.01);
+        e.update(5.0);
+        for _ in 0..100 {
+            e.update(5.0);
+        }
+        assert!((e.value - 5.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn ema_seeds_on_first() {
+        let mut e = Ema::new(0.01);
+        assert!(!e.is_initialized());
+        e.update(42.0);
+        assert_eq!(e.value, 42.0);
+    }
+}

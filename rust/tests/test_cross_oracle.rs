@@ -1,0 +1,90 @@
+//! Cross-language oracle check: the Rust `fixedpoint` scheme must be
+//! bit-identical to the Python reference (`python/compile/kernels/ref.py`)
+//! that pins the Pallas kernels. Shells out to the same Python interpreter
+//! used by `make artifacts`; skips if Python/numpy are unavailable.
+
+use apt::fixedpoint::quantize::max_abs;
+use apt::fixedpoint::Scheme;
+use apt::util::Pcg32;
+use std::process::Command;
+
+fn python_fake_quant(xs: &[f32], bits: u8) -> Option<(Vec<f32>, f64, f64)> {
+    // emits: r qmin qmax then the quantized values, one per line
+    let script = r#"
+import sys, math
+import numpy as np
+sys.path.insert(0, "python")
+from compile.kernels import ref
+xs = np.array([float(t) for t in sys.argv[2].split(",")], dtype=np.float32)
+bits = int(sys.argv[1])
+r, qmin, qmax = ref.scheme_params(float(np.abs(xs).max()), bits)
+xq = ref.np_fake_quant(xs, r, qmin, qmax)
+diff = ref.np_qem_diff(xs, r, qmin, qmax)
+print(r, qmin, qmax, diff)
+for v in xq:
+    print(repr(float(v)))
+"#;
+    let csv: Vec<String> = xs.iter().map(|v| format!("{v}")).collect();
+    let out = Command::new("python")
+        .args(["-c", script, &bits.to_string(), &csv.join(",")])
+        .output()
+        .ok()?;
+    if !out.status.success() {
+        eprintln!("python failed: {}", String::from_utf8_lossy(&out.stderr));
+        return None;
+    }
+    let text = String::from_utf8(out.stdout).ok()?;
+    let mut lines = text.lines();
+    let head: Vec<f64> = lines
+        .next()?
+        .split_whitespace()
+        .map(|t| t.parse().unwrap())
+        .collect();
+    let vals: Vec<f32> = lines.map(|l| l.trim().parse().unwrap()).collect();
+    Some((vals, head[0], head[3]))
+}
+
+#[test]
+fn rust_scheme_bit_identical_to_python_ref() {
+    let mut rng = Pcg32::seeded(2024);
+    let xs: Vec<f32> = (0..64).map(|_| rng.normal() * 3.0).collect();
+    for bits in [8u8, 16, 24] {
+        let Some((py_vals, py_r, py_diff)) = python_fake_quant(&xs, bits) else {
+            eprintln!("SKIP: python oracle unavailable");
+            return;
+        };
+        let sch = Scheme::for_range(max_abs(&xs), bits);
+        assert!(
+            (sch.resolution() as f64 - py_r).abs() < 1e-12,
+            "bits={bits}: r {} vs python {py_r}",
+            sch.resolution()
+        );
+        for (i, (&x, &py)) in xs.iter().zip(&py_vals).enumerate() {
+            let rs = sch.fake_quant(x);
+            assert_eq!(rs, py, "bits={bits} elem {i}: rust {rs} vs python {py} (x={x})");
+        }
+        let st = apt::fixedpoint::quantize::stats_only(&xs, sch);
+        // numpy sums |x| in f32 (pairwise); Rust accumulates f64 — the Diff
+        // summary may differ at ~1e-8 even though every value is bit-equal.
+        assert!(
+            (st.diff() - py_diff).abs() < 1e-6,
+            "bits={bits}: Diff {} vs python {py_diff}",
+            st.diff()
+        );
+    }
+}
+
+#[test]
+fn rust_scheme_handles_extreme_magnitudes_like_python() {
+    for &scale in &[1e-20f32, 1e-3, 1e6, 1e20] {
+        let xs: Vec<f32> = vec![scale, -scale / 2.0, scale / 3.0, 0.0];
+        let Some((py_vals, _, _)) = python_fake_quant(&xs, 8) else {
+            eprintln!("SKIP: python oracle unavailable");
+            return;
+        };
+        let sch = Scheme::for_range(max_abs(&xs), 8);
+        for (i, (&x, &py)) in xs.iter().zip(&py_vals).enumerate() {
+            assert_eq!(sch.fake_quant(x), py, "scale={scale} elem {i} (x={x})");
+        }
+    }
+}

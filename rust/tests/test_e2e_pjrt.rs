@@ -1,0 +1,125 @@
+//! Integration: the full three-layer stack — Rust coordinator driving the
+//! AOT MLP train-step artifact with live QEM/QPA, loss must decrease.
+//! Skips when artifacts are absent.
+
+use apt::coordinator::{mlp_slot_names, ArtifactTrainer};
+use apt::nn::QuantMode;
+use apt::runtime::{HostValue, Runtime};
+use apt::util::Pcg32;
+
+fn runtime() -> Option<Runtime> {
+    match Runtime::new("artifacts") {
+        Ok(rt) => Some(rt),
+        Err(e) => {
+            eprintln!("SKIP (no artifacts): {e:#}");
+            None
+        }
+    }
+}
+
+/// Class-template batch matching the artifact's 64-dim input, 10 classes.
+fn batch(rng: &mut Pcg32, templates: &[f32]) -> (HostValue, HostValue) {
+    let mut x = vec![0.0f32; 32 * 64];
+    let mut y = vec![0i32; 32];
+    for b in 0..32 {
+        let cls = rng.below(10);
+        y[b] = cls as i32;
+        for j in 0..64 {
+            x[b * 64 + j] = templates[cls * 64 + j] + rng.normal() * 0.3;
+        }
+    }
+    (HostValue::F32(x), HostValue::I32(y))
+}
+
+fn run_mode(mode: QuantMode, steps: u64) -> (f32, f32, Vec<u8>) {
+    let mut rt = runtime().expect("runtime");
+    let mut trainer = ArtifactTrainer::new(&rt, "mlp_train_step", mlp_slot_names(3), mode, 11).unwrap();
+    let mut rng = Pcg32::seeded(5);
+    let templates: Vec<f32> = {
+        let mut t = vec![0.0f32; 10 * 64];
+        let mut trng = Pcg32::seeded(99);
+        trng.fill_normal(&mut t, 2.0);
+        t
+    };
+    let mut first = 0.0;
+    let mut last = 0.0;
+    let mut bits = vec![];
+    for s in 0..steps {
+        let (x, y) = batch(&mut rng, &templates);
+        let res = trainer.step(&mut rt, vec![x, y], 0.05).expect("step");
+        if s == 0 {
+            first = res.loss;
+        }
+        last = res.loss;
+        bits = res.grad_bits;
+    }
+    (first, last, bits)
+}
+
+#[test]
+fn adaptive_training_reduces_loss_e2e() {
+    if runtime().is_none() {
+        return;
+    }
+    let mut cfg = apt::apt::AptConfig::default();
+    cfg.init_phase_iters = 3;
+    let (first, last, bits) = run_mode(QuantMode::Adaptive(cfg), 40);
+    assert!(
+        last < first * 0.7,
+        "adaptive e2e did not learn: {first} → {last}"
+    );
+    assert_eq!(bits.len(), 3);
+    assert!(bits.iter().all(|b| [8, 16, 24, 32].contains(b)), "{bits:?}");
+}
+
+#[test]
+fn float32_and_int16_also_learn_e2e() {
+    if runtime().is_none() {
+        return;
+    }
+    let (f1, f2, _) = run_mode(QuantMode::Float32, 30);
+    assert!(f2 < f1 * 0.8, "f32 proxy: {f1} → {f2}");
+    let (i1, i2, bits) = run_mode(QuantMode::Static(16), 30);
+    assert!(i2 < i1 * 0.8, "int16: {i1} → {i2}");
+    assert!(bits.iter().all(|&b| b == 16));
+}
+
+#[test]
+fn mlp_eval_artifact_returns_sane_accuracy() {
+    let Some(mut rt) = runtime() else { return };
+    // random weights → accuracy near chance on random labels
+    let spec = rt.manifest.get("mlp_eval").unwrap().clone();
+    let mut rng = Pcg32::seeded(0);
+    let mut inputs = Vec::new();
+    for io in &spec.inputs {
+        match io.dtype {
+            apt::runtime::Dtype::F32 => {
+                let mut v = vec![0.0f32; io.elements()];
+                if io.dims.len() == 2 && io.name != "qparams" {
+                    rng.fill_normal(&mut v, 0.1);
+                }
+                if io.name == "qparams" {
+                    // wide scheme everywhere
+                    let s = apt::fixedpoint::Scheme::for_range(4.0, 16);
+                    let triple = [s.resolution(), s.qmin() as f32, s.qmax() as f32];
+                    for row in 0..io.dims[0] {
+                        for t in 0..3 {
+                            v[row * 9 + t * 3..row * 9 + t * 3 + 3].copy_from_slice(&triple);
+                        }
+                    }
+                }
+                if io.name == "x" {
+                    rng.fill_normal(&mut v, 1.0);
+                }
+                inputs.push(HostValue::F32(v));
+            }
+            apt::runtime::Dtype::I32 => {
+                let v: Vec<i32> = (0..io.elements()).map(|_| rng.below(10) as i32).collect();
+                inputs.push(HostValue::I32(v));
+            }
+        }
+    }
+    let out = rt.exec("mlp_eval", &inputs).expect("mlp_eval");
+    let acc = out[0].scalar_f32();
+    assert!((0.0..=1.0).contains(&acc), "acc={acc}");
+}

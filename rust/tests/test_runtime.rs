@@ -1,0 +1,116 @@
+//! Integration: PJRT round-trips of the L1 kernel artifacts, cross-checked
+//! against the Rust `fixedpoint` implementation — the cross-language
+//! bit-exactness contract between `kernels/ref.py`, the Pallas kernels, and
+//! the Rust substrate.
+//!
+//! Requires `make artifacts` (skips gracefully otherwise so `cargo test`
+//! stays green on a fresh checkout).
+
+use apt::fixedpoint::quantize::{max_abs, stats_only};
+use apt::fixedpoint::{gemm, Scheme};
+use apt::runtime::{HostValue, Runtime};
+use apt::util::Pcg32;
+
+fn runtime() -> Option<Runtime> {
+    match Runtime::new("artifacts") {
+        Ok(rt) => Some(rt),
+        Err(e) => {
+            eprintln!("SKIP (no artifacts): {e:#}");
+            None
+        }
+    }
+}
+
+fn randvec(seed: u64, n: usize, scale: f32) -> Vec<f32> {
+    let mut r = Pcg32::seeded(seed);
+    (0..n).map(|_| r.normal() * scale).collect()
+}
+
+#[test]
+fn quant_fake_artifact_matches_rust_scheme() {
+    let Some(mut rt) = runtime() else { return };
+    let x = randvec(1, 64 * 64, 2.0);
+    let sch = Scheme::for_range(max_abs(&x), 8);
+    let params = vec![sch.resolution(), sch.qmin() as f32, sch.qmax() as f32];
+    let out = rt
+        .exec("quant_fake", &[HostValue::F32(x.clone()), HostValue::F32(params)])
+        .expect("exec quant_fake");
+    let got = out[0].as_f32();
+    for (i, (&g, &v)) in got.iter().zip(&x).enumerate() {
+        let want = sch.fake_quant(v);
+        assert_eq!(g, want, "elem {i}: pallas {g} vs rust {want} (x={v})");
+    }
+}
+
+#[test]
+fn qem_stats_artifact_matches_rust_stats() {
+    let Some(mut rt) = runtime() else { return };
+    let x = randvec(2, 64 * 64, 1.5);
+    let z = max_abs(&x);
+    let sch = Scheme::for_range(z, 8);
+    let params = vec![sch.resolution(), sch.qmin() as f32, sch.qmax() as f32, z];
+    let out = rt
+        .exec("qem_stats", &[HostValue::F32(x.clone()), HostValue::F32(params)])
+        .expect("exec qem_stats");
+    let s = out[0].as_f32();
+    let want = stats_only(&x, sch);
+    let rel = |a: f64, b: f64| (a - b).abs() / b.abs().max(1e-9);
+    assert!(rel(s[0] as f64, want.sum_abs) < 1e-4, "sum_abs {} vs {}", s[0], want.sum_abs);
+    assert_eq!(s[1], want.max_abs);
+    assert!(rel(s[2] as f64, want.sum_abs_q) < 1e-4, "sum_abs_q {} vs {}", s[2], want.sum_abs_q);
+    // candidate columns: int8/int16/int24 sums under range-derived schemes
+    for (idx, bits) in [(3usize, 8u8), (4, 16), (5, 24)] {
+        let c = Scheme::for_range(z, bits);
+        let w = stats_only(&x, c).sum_abs_q;
+        assert!(rel(s[idx] as f64, w) < 1e-4, "cand int{bits}: {} vs {w}", s[idx]);
+    }
+}
+
+#[test]
+fn qmatmul_artifact_matches_rust_qgemm() {
+    let Some(mut rt) = runtime() else { return };
+    let (m, k, n) = (64usize, 64, 64);
+    let a = randvec(3, m * k, 1.0);
+    let b = randvec(4, k * n, 0.3);
+    let sa = Scheme::for_range(max_abs(&a), 8);
+    let sb = Scheme::for_range(max_abs(&b), 8);
+    let params = vec![
+        sa.resolution(),
+        sa.qmin() as f32,
+        sa.qmax() as f32,
+        sb.resolution(),
+        sb.qmin() as f32,
+        sb.qmax() as f32,
+    ];
+    let out = rt
+        .exec(
+            "qmatmul",
+            &[HostValue::F32(a.clone()), HostValue::F32(b.clone()), HostValue::F32(params)],
+        )
+        .expect("exec qmatmul");
+    let got = out[0].as_f32();
+    let mut want = vec![0.0f32; m * n];
+    gemm::qgemm(m, k, n, &a, sa, &b, sb, &mut want);
+    for (i, (&g, &w)) in got.iter().zip(&want).enumerate() {
+        assert!(
+            (g - w).abs() <= 1e-4 * w.abs().max(1.0),
+            "elem {i}: pallas {g} vs rust {w}"
+        );
+    }
+}
+
+#[test]
+fn manifest_lists_all_expected_artifacts() {
+    let Some(rt) = runtime() else { return };
+    for name in ["quant_fake", "qem_stats", "qmatmul", "mlp_train_step", "mlp_eval", "tfm_train_step"] {
+        assert!(rt.manifest.get(name).is_some(), "missing artifact {name}");
+    }
+}
+
+#[test]
+fn exec_rejects_wrong_arity_and_shape() {
+    let Some(mut rt) = runtime() else { return };
+    assert!(rt.exec("quant_fake", &[]).is_err());
+    let bad = vec![HostValue::F32(vec![0.0; 3]), HostValue::F32(vec![0.0; 3])];
+    assert!(rt.exec("quant_fake", &bad).is_err());
+}
