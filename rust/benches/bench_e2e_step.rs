@@ -32,7 +32,9 @@ fn rust_step_bench(bencher: &Bencher, mode: QuantMode, label: &str) {
 fn main() {
     let quick = std::env::var("BENCH_QUICK").is_ok();
     let bencher = if quick { Bencher::quick() } else { Bencher::default() };
-    println!("bench_e2e_step");
+    // All nn-layer GEMMs and quantize passes below route through the global
+    // kernel engine; set APT_THREADS to change its width.
+    println!("bench_e2e_step (kernel engine: {} thread(s))", apt::kernels::global().threads());
     rust_step_bench(&bencher, QuantMode::Float32, "rust alexnet-mini f32");
     let mut cfg = apt::apt::AptConfig::default();
     cfg.init_phase_iters = 3;

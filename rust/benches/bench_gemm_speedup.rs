@@ -1,18 +1,25 @@
 //! cargo bench — Table 3: layer-wise AlexNet GEMM speedups (i8 fwd, i16 bwd
-//! vs f32) on this CPU. `BENCH_QUICK=1` shortens sampling.
+//! vs f32) on this CPU. `BENCH_QUICK=1` shortens sampling; `APT_THREADS=N`
+//! measures the engine-sharded kernels instead of the serial backends.
 
 use apt::bench::Bencher;
 use apt::exp::speed::measure_layers;
+use apt::kernels::Engine;
 
 fn main() {
     let quick = std::env::var("BENCH_QUICK").is_ok();
+    let threads = std::env::var("APT_THREADS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(1);
+    let eng = Engine::new(threads);
     let bencher = if quick { Bencher::quick() } else { Bencher::default() };
-    println!("bench_gemm_speedup (Table 3 substrate)");
+    println!("bench_gemm_speedup (Table 3 substrate, {} thread(s))", eng.threads());
     println!(
         "{:<8} {:>10} {:>10} {:>10} {:>9} {:>9}",
         "layer", "f32 ms", "i8 ms", "i16 ms", "fwd x", "bwd x"
     );
-    let rows = measure_layers(64, &bencher);
+    let rows = measure_layers(64, &bencher, &eng);
     let (mut f, mut i8t, mut i16t) = (0.0, 0.0, 0.0);
     for (name, fwd, bwd, sf, s8, s16) in &rows {
         println!(

@@ -1,0 +1,177 @@
+//! cargo bench — kernel-engine thread scaling (EXPERIMENTS.md §Perf):
+//! 512³ GEMM in f32/i8/i16, an AlexNet-shape conv GEMM, and the bulk
+//! quantize pass, each at 1/2/4/8 threads. Writes
+//! `results/parallel_scaling.csv` with speedups relative to 1 thread.
+//!
+//! `BENCH_QUICK=1` shortens sampling; `APT_BENCH_THREADS=1,2,4` overrides
+//! the thread sweep.
+
+use apt::bench::{Bencher, Sample};
+use apt::fixedpoint::quantize::max_abs;
+use apt::fixedpoint::Scheme;
+use apt::kernels::Engine;
+use apt::util::out::{results_dir, Csv};
+use apt::util::Pcg32;
+
+const DIM: usize = 512;
+
+struct Case {
+    name: &'static str,
+    m: usize,
+    k: usize,
+    n: usize,
+}
+
+const CASES: [Case; 2] = [
+    // The acceptance shape: 512³ (134M MACs per kernel call).
+    Case { name: "gemm-512", m: DIM, k: DIM, n: DIM },
+    // AlexNet conv1 im2col shape — m = out_c, so row panels are
+    // output-channel blocks.
+    Case { name: "conv1-shape", m: 256, k: 48 * 5 * 5, n: 27 * 27 },
+];
+
+fn thread_sweep() -> Vec<usize> {
+    if let Ok(v) = std::env::var("APT_BENCH_THREADS") {
+        return v
+            .split(',')
+            .filter_map(|t| t.trim().parse().ok())
+            .filter(|&t| t >= 1)
+            .collect();
+    }
+    vec![1, 2, 4, 8]
+}
+
+fn run_case(bencher: &Bencher, eng: &Engine, case: &Case) -> (Sample, Sample, Sample) {
+    let (m, k, n) = (case.m, case.k, case.n);
+    let mut rng = Pcg32::seeded(42);
+    let mut a = vec![0.0f32; m * k];
+    let mut b = vec![0.0f32; k * n];
+    rng.fill_normal(&mut a, 1.0);
+    rng.fill_normal(&mut b, 0.2);
+    let sa8 = Scheme::for_range(max_abs(&a), 8);
+    let sb8 = Scheme::for_range(max_abs(&b), 8);
+    let mut a8 = vec![0i8; m * k];
+    let mut b8 = vec![0i8; k * n];
+    eng.codes_i8(&a, &mut a8, sa8);
+    eng.codes_i8(&b, &mut b8, sb8);
+    let sa16 = Scheme::for_range(max_abs(&a), 16);
+    let sb16 = Scheme::for_range(max_abs(&b), 16);
+    let mut a16 = vec![0i16; m * k];
+    let mut b16 = vec![0i16; k * n];
+    eng.codes_i16(&a, &mut a16, sa16);
+    eng.codes_i16(&b, &mut b16, sb16);
+
+    let sf32 = {
+        let (a, b) = (a.clone(), b.clone());
+        let mut c = vec![0.0f32; m * n];
+        bencher.run(&format!("{}-f32", case.name), move || {
+            eng.gemm_f32(m, k, n, &a, &b, &mut c);
+            std::hint::black_box(&c);
+        })
+    };
+    let si8 = {
+        let (a8, b8) = (a8.clone(), b8.clone());
+        let mut acc = vec![0i32; m * n];
+        bencher.run(&format!("{}-i8", case.name), move || {
+            eng.gemm_i8(m, k, n, &a8, &b8, &mut acc);
+            std::hint::black_box(&acc);
+        })
+    };
+    let si16 = {
+        let (a16, b16) = (a16.clone(), b16.clone());
+        let mut acc = vec![0i32; m * n];
+        bencher.run(&format!("{}-i16", case.name), move || {
+            eng.gemm_i16(m, k, n, &a16, &b16, &mut acc);
+            std::hint::black_box(&acc);
+        })
+    };
+    (sf32, si8, si16)
+}
+
+fn main() {
+    let quick = std::env::var("BENCH_QUICK").is_ok();
+    let bencher = if quick { Bencher::quick() } else { Bencher::default() };
+    let threads = thread_sweep();
+    let cores = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    println!("bench_parallel_scaling — engine thread sweep {threads:?} on {cores} core(s)");
+    println!(
+        "{:<14} {:>8} {:>10} {:>10} {:>10} {:>9} {:>9} {:>9}",
+        "case", "threads", "f32 ms", "i8 ms", "i16 ms", "f32 x", "i8 x", "i16 x"
+    );
+
+    let mut csv = Csv::new(
+        results_dir().join("parallel_scaling.csv"),
+        &[
+            "case", "threads", "f32_ms", "i8_ms", "i16_ms",
+            "f32_speedup", "i8_speedup", "i16_speedup",
+        ],
+    );
+    for case in &CASES {
+        let mut base: Option<(f64, f64, f64)> = None;
+        for &t in &threads {
+            let eng = Engine::new(t);
+            let (sf, s8, s16) = run_case(&bencher, &eng, case);
+            let (mf, m8, m16) = (sf.median(), s8.median(), s16.median());
+            let (bf, b8, b16) = *base.get_or_insert((mf, m8, m16));
+            println!(
+                "{:<14} {:>8} {:>10.3} {:>10.3} {:>10.3} {:>8.2}x {:>8.2}x {:>8.2}x",
+                case.name,
+                t,
+                mf * 1e3,
+                m8 * 1e3,
+                m16 * 1e3,
+                bf / mf.max(1e-12),
+                b8 / m8.max(1e-12),
+                b16 / m16.max(1e-12),
+            );
+            csv.row(&[
+                case.name.to_string(),
+                t.to_string(),
+                format!("{:.4}", mf * 1e3),
+                format!("{:.4}", m8 * 1e3),
+                format!("{:.4}", m16 * 1e3),
+                format!("{:.3}", bf / mf.max(1e-12)),
+                format!("{:.3}", b8 / m8.max(1e-12)),
+                format!("{:.3}", b16 / m16.max(1e-12)),
+            ]);
+        }
+    }
+
+    // Quantize-pass scaling (contiguous-slice sharding).
+    let mut rng = Pcg32::seeded(7);
+    let mut xs = vec![0.0f32; 16 << 20];
+    rng.fill_normal(&mut xs, 1.0);
+    let sch = Scheme::for_range(max_abs(&xs), 8);
+    println!();
+    let mut qbase: Option<f64> = None;
+    for &t in &threads {
+        let eng = Engine::new(t);
+        let s = {
+            let xs = xs.clone();
+            let mut out = vec![0i8; xs.len()];
+            bencher.run("codes_i8-16M", move || {
+                eng.codes_i8(&xs, &mut out, sch);
+                std::hint::black_box(&out);
+            })
+        };
+        let m = s.median();
+        let b = *qbase.get_or_insert(m);
+        println!(
+            "{:<14} {:>8} {:>10.3} ms {:>8.2}x",
+            "quantize-16M", t, m * 1e3, b / m.max(1e-12)
+        );
+        csv.row(&[
+            "quantize-16M".to_string(),
+            t.to_string(),
+            format!("{:.4}", m * 1e3),
+            String::new(),
+            String::new(),
+            format!("{:.3}", b / m.max(1e-12)),
+            String::new(),
+            String::new(),
+        ]);
+    }
+    csv.write().unwrap();
+    println!("\nwrote {}", results_dir().join("parallel_scaling.csv").display());
+    println!("target (EXPERIMENTS.md §Perf): >1.5x at 4 threads on gemm-512");
+}

@@ -11,10 +11,13 @@
 //!      (sum|x|, max|x|, sum|x̂| applied, sum|x̂| at candidate int8/16/24)
 //!      and feeds the controllers that are due for an update.
 
+use std::sync::Arc;
+
 use anyhow::{anyhow, Result};
 
 use crate::apt::{AptConfig, Ledger, PrecisionController};
 use crate::fixedpoint::{Scheme, TensorKind};
+use crate::kernels::Engine;
 use crate::nn::QuantMode;
 use crate::runtime::{Dtype, HostValue, Runtime};
 use crate::util::Pcg32;
@@ -61,6 +64,9 @@ pub struct ArtifactTrainer {
     pub slots: Vec<SlotControllers>,
     pub ledger: Ledger,
     pub step_count: u64,
+    /// Kernel engine for host-side bulk work (parameter marshalling); the
+    /// quantified GEMMs themselves run inside the artifact.
+    pub engine: Arc<Engine>,
     n_params: usize,
     data_inputs: usize,
 }
@@ -159,9 +165,23 @@ impl ArtifactTrainer {
             slots,
             ledger: Ledger::new(),
             step_count: 0,
+            engine: crate::kernels::global_arc(),
             n_params,
             data_inputs,
         })
+    }
+
+    /// Clone one parameter bank for the executor, sharding the copies
+    /// across the kernel engine only when the bank is big enough to
+    /// amortize a pool dispatch (mirrors the engine's elementwise gate).
+    fn marshal(&self, bank: &[HostValue]) -> Vec<HostValue> {
+        const PAR_MARSHAL_MIN_ELEMS: usize = 1 << 16;
+        let total: usize = bank.iter().map(|v| v.len()).sum();
+        if total < PAR_MARSHAL_MIN_ELEMS {
+            bank.to_vec()
+        } else {
+            self.engine.map_indexed(bank.len(), |i| bank[i].clone())
+        }
     }
 
     /// Render the current schemes into the qparams input.
@@ -182,10 +202,12 @@ impl ArtifactTrainer {
             anyhow::bail!("expected {} data inputs, got {}", self.data_inputs, data.len());
         }
         let mut inputs = Vec::with_capacity(3 * self.n_params + data.len() + 3);
-        inputs.extend(self.params.iter().cloned());
+        // Parameter marshalling copies every tensor each step; shard the
+        // clones across the kernel engine (memcpy-bound for big models).
+        inputs.extend(self.marshal(&self.params));
         if self.adam {
-            inputs.extend(self.opt_m.iter().cloned());
-            inputs.extend(self.opt_v.iter().cloned());
+            inputs.extend(self.marshal(&self.opt_m));
+            inputs.extend(self.marshal(&self.opt_v));
         }
         inputs.extend(data);
         inputs.push(self.qparams());

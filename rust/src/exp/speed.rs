@@ -4,10 +4,10 @@
 //! reproduction target (DESIGN.md §2).
 
 use crate::bench::{gemm_gflops, Bencher, Sample};
-use crate::fixedpoint::gemm;
 use crate::fixedpoint::gemm_simd;
 use crate::fixedpoint::quantize::{codes_i16, codes_i8, max_abs};
 use crate::fixedpoint::Scheme;
+use crate::kernels::Engine;
 use crate::util::cli::Args;
 use crate::util::out::{results_dir, Csv};
 use crate::util::Pcg32;
@@ -59,8 +59,10 @@ fn make_bufs(m: usize, k: usize, n: usize, seed: u64) -> GemmBufs {
     GemmBufs { a, b, a8, b8, a16, b16, acc: vec![0i32; m * n], c: vec![0.0f32; m * n] }
 }
 
-/// Measured per-layer speedups; returns (name, fwd_speedup_i8, bwd_speedup_i16).
-pub fn measure_layers(batch: usize, bencher: &Bencher) -> Vec<(String, f64, f64, Sample, Sample, Sample)> {
+/// Measured per-layer speedups on the given kernel engine; returns
+/// (name, fwd_speedup_i8, bwd_speedup_i16, f32/i8/i16 samples). Pass
+/// `Engine::serial()` for the single-core paper comparison.
+pub fn measure_layers(batch: usize, bencher: &Bencher, eng: &Engine) -> Vec<(String, f64, f64, Sample, Sample, Sample)> {
     let mut rows = Vec::new();
     for (name, m, k, n) in alexnet_gemm_shapes(batch) {
         let mut bufs = make_bufs(m, k, n, 7);
@@ -68,7 +70,7 @@ pub fn measure_layers(batch: usize, bencher: &Bencher) -> Vec<(String, f64, f64,
             let (a, b) = (bufs.a.clone(), bufs.b.clone());
             let mut c = bufs.c.clone();
             bencher.run(&format!("{name}-f32"), move || {
-                gemm::gemm_f32(m, k, n, &a, &b, &mut c);
+                eng.gemm_f32(m, k, n, &a, &b, &mut c);
                 std::hint::black_box(&c);
             })
         };
@@ -82,7 +84,7 @@ pub fn measure_layers(batch: usize, bencher: &Bencher) -> Vec<(String, f64, f64,
             gemm_simd::pack_bt_i8(k, n, &bufs.b8, &mut bt, &mut colsum);
             let mut acc = bufs.acc.clone();
             bencher.run(&format!("{name}-i8"), move || {
-                gemm_simd::gemm_i8_prepacked(m, k, n, &a, &bt, &colsum, &mut acc);
+                eng.gemm_i8_prepacked(m, k, n, &a, &bt, &colsum, &mut acc);
                 std::hint::black_box(&acc);
             })
         };
@@ -92,7 +94,7 @@ pub fn measure_layers(batch: usize, bencher: &Bencher) -> Vec<(String, f64, f64,
             gemm_simd::pack_bt_i16(k, n, &bufs.b16, &mut bt);
             let mut acc = std::mem::take(&mut bufs.acc);
             bencher.run(&format!("{name}-i16"), move || {
-                gemm_simd::gemm_i16_prepacked(m, k, n, &a, &bt, &mut acc);
+                eng.gemm_i16_prepacked(m, k, n, &a, &bt, &mut acc);
                 std::hint::black_box(&acc);
             })
         };
@@ -107,8 +109,15 @@ pub fn measure_layers(batch: usize, bencher: &Bencher) -> Vec<(String, f64, f64,
 pub fn table3(args: &Args) {
     let batch = args.usize_or("batch", 64);
     let quick = args.bool_or("quick", false);
+    // threads=1 by default: the paper's Table 3 ratios are single-core;
+    // pass --threads N to measure the engine-sharded kernels instead
+    // (EXPERIMENTS.md §Perf).
+    let eng = Engine::new(args.usize_or("threads", 1));
     let bencher = if quick { Bencher::quick() } else { Bencher::default() };
-    println!("== Table 3: layer-wise AlexNet speedup over f32 (this CPU) ==");
+    println!(
+        "== Table 3: layer-wise AlexNet speedup over f32 (this CPU, {} thread(s)) ==",
+        eng.threads()
+    );
     println!("paper CPU rows (Xeon Gold 6154 AVX2): fwd 2.0–6.4×, bwd 1.7–5.0×, overall fwd 3.98 / bwd 2.07");
     println!(
         "\n{:<8} {:>14} {:>14} {:>12} {:>12}",
@@ -116,7 +125,7 @@ pub fn table3(args: &Args) {
     );
     let paper_fwd = [2.03, 3.89, 6.2, 4.44, 4.28, 4.09, 6.42, 4.41];
     let paper_bwd = [1.91, 1.71, 1.78, 2.21, 2.07, 4.41, 4.97, 2.03];
-    let rows = measure_layers(batch, &bencher);
+    let rows = measure_layers(batch, &bencher, &eng);
     let mut csv = Csv::new(
         results_dir().join("table3.csv"),
         &["layer", "fwd_speedup", "paper_fwd", "bwd_speedup", "paper_bwd", "f32_ms", "i8_ms", "i16_ms", "f32_gflops"],
@@ -162,8 +171,14 @@ pub fn table3(args: &Args) {
 /// fixed-point vs float, with the QEM/QPA overhead shown separately.
 pub fn fig10(args: &Args) {
     let quick = args.bool_or("quick", true);
+    // Bind a reference: the bench closures are `move`, and a shared `&Engine`
+    // is Copy, so every closure can capture it without consuming the engine.
+    let eng = &Engine::new(args.usize_or("threads", 1));
     let bencher = if quick { Bencher::quick() } else { Bencher::default() };
-    println!("== Fig 10: conv-scale computation time, fixed vs float ==");
+    println!(
+        "== Fig 10: conv-scale computation time, fixed vs float ({} thread(s)) ==",
+        eng.threads()
+    );
     println!(
         "{:<12} {:>10} {:>10} {:>10} {:>12} {:>10}",
         "ops", "f32 ms", "i8 ms", "quant ms", "QEM+QPA ms", "speedup"
@@ -180,7 +195,7 @@ pub fn fig10(args: &Args) {
             let (a, b) = (bufs.a.clone(), bufs.b.clone());
             let mut c = bufs.c.clone();
             bencher.run("f32", move || {
-                gemm::gemm_f32(m, k, n, &a, &b, &mut c);
+                eng.gemm_f32(m, k, n, &a, &b, &mut c);
                 std::hint::black_box(&c);
             })
         };
@@ -188,11 +203,13 @@ pub fn fig10(args: &Args) {
             let (a, b) = (bufs.a8.clone(), bufs.b8.clone());
             let mut acc = bufs.acc.clone();
             bencher.run("i8", move || {
-                gemm::gemm_i8(m, k, n, &a, &b, &mut acc);
+                eng.gemm_i8(m, k, n, &a, &b, &mut acc);
                 std::hint::black_box(&acc);
             })
         };
-        // quantification cost: f32 → codes for both operands
+        // quantification cost: f32 → codes for both operands, through the
+        // same engine as the GEMMs so the speedup column stays consistent
+        // at --threads > 1 (the training path shards these passes too).
         let squant = {
             let (a, b) = (bufs.a.clone(), bufs.b.clone());
             let mut a8 = bufs.a8.clone();
@@ -200,8 +217,8 @@ pub fn fig10(args: &Args) {
             bencher.run("quant", move || {
                 let sa = Scheme::for_range(max_abs(&a), 8);
                 let sb = Scheme::for_range(max_abs(&b), 8);
-                codes_i8(&a, &mut a8, sa);
-                codes_i8(&b, &mut b8, sb);
+                eng.codes_i8(&a, &mut a8, sa);
+                eng.codes_i8(&b, &mut b8, sb);
                 std::hint::black_box((&a8, &b8));
             })
         };
@@ -241,9 +258,10 @@ pub fn fig10(args: &Args) {
 pub fn appendix_e(args: &Args) {
     let batch = args.usize_or("batch", 64);
     let quick = args.bool_or("quick", true);
+    let eng = Engine::new(args.usize_or("threads", 1));
     let bencher = if quick { Bencher::quick() } else { Bencher::default() };
     println!("== Appendix E: speedup of the adaptive mix over int16-everywhere ==");
-    let rows = measure_layers(batch, &bencher);
+    let rows = measure_layers(batch, &bencher, &eng);
     // forward in int8 vs forward in int16; backward identical (int16): the
     // paper reports 1.7× fwd, 1.13× bwd-inclusive, 1.3× overall.
     let (mut i8f, mut i16f) = (0.0, 0.0);

@@ -4,7 +4,9 @@
 //! convolution to a `(C·KH·KW) × (OH·OW)` patch matrix per image so all
 //! conv speed/accuracy questions reduce to the GEMM kernels in `gemm.rs` —
 //! exactly how the paper's CPU implementation (and MKL-DNN) works, which is
-//! what makes the Table 3 / Fig 10 layer-shape benchmarks faithful.
+//! what makes the Table 3 / Fig 10 layer-shape benchmarks faithful. The
+//! im2col GEMM's `m` is `out_c`, so the engine's row-panel sharding gives
+//! conv its output-channel-block parallelism (DESIGN.md §Kernel-Engine).
 
 use super::gemm;
 

@@ -9,7 +9,10 @@
 //! quality. i8×i8 and i16×i16 products accumulate in i32 (exact — the same
 //! contract as the MXU / VNNI path); the caller rescales by `r1·r2`.
 //!
-//! Row-major everywhere: `a` is m×k, `b` is k×n, `c` is m×n.
+//! Row-major everywhere: `a` is m×k, `b` is k×n, `c` is m×n. These are the
+//! serial-portable backends of `crate::kernels::Engine`; rows are
+//! independent, which is what lets the engine shard by M-row panels with
+//! bit-identical results (DESIGN.md §Kernel-Engine).
 
 /// Blocking parameters shared by all kernels (tuned in the perf pass; see
 /// EXPERIMENTS.md §Perf).

@@ -15,7 +15,9 @@
 //! Both kernels consume B packed **transposed** (`bt[j*k ..]` contiguous in
 //! k) so a whole K-panel streams through one accumulator register chain.
 //! Runtime dispatch: callers go through [`super::gemm::gemm_i8`] /
-//! [`gemm_i16`], which pick these when the CPU supports them.
+//! [`super::gemm::gemm_i16`] (or the parallel `kernels::Engine`, which
+//! shards row panels over the same kernels), picking these when the CPU
+//! supports them.
 
 #[cfg(target_arch = "x86_64")]
 use core::arch::x86_64::*;
@@ -70,6 +72,44 @@ pub fn has_avx512bw() -> bool {
     {
         false
     }
+}
+
+/// Backend selection for i8 GEMM: the VNNI kernel pays off once a full
+/// 64-lane register chain fits in k. Shared by the serial dispatch and the
+/// parallel `kernels::Engine` so the two can never diverge.
+pub fn use_vnni_i8(k: usize) -> bool {
+    has_vnni() && k >= 64
+}
+
+/// Backend selection for i16 GEMM (32-lane vpmaddwd chain); see
+/// [`use_vnni_i8`].
+pub fn use_madd_i16(k: usize) -> bool {
+    has_avx512bw() && k >= 32
+}
+
+/// Unpack BT (n×k) back to row-major B (k×n) — the off-AVX512 fallback of
+/// the prepacked entry points.
+pub fn unpack_bt_i8(k: usize, n: usize, bt: &[i8]) -> Vec<i8> {
+    assert_eq!(bt.len(), k * n);
+    let mut b = vec![0i8; k * n];
+    for j in 0..n {
+        for p in 0..k {
+            b[p * n + j] = bt[j * k + p];
+        }
+    }
+    b
+}
+
+/// i16 variant of [`unpack_bt_i8`].
+pub fn unpack_bt_i16(k: usize, n: usize, bt: &[i16]) -> Vec<i16> {
+    assert_eq!(bt.len(), k * n);
+    let mut b = vec![0i16; k * n];
+    for j in 0..n {
+        for p in 0..k {
+            b[p * n + j] = bt[j * k + p];
+        }
+    }
+    b
 }
 
 /// i8 GEMM on pre-packed BT: c[i,j] = Σ_k a[i,k]·bt[j,k], i32 accumulate.
@@ -168,7 +208,7 @@ pub unsafe fn gemm_i16_madd_packed(
 /// the portable kernel when VNNI is unavailable.
 pub fn gemm_i8_fast(m: usize, k: usize, n: usize, a: &[i8], b: &[i8], c: &mut [i32]) {
     #[cfg(target_arch = "x86_64")]
-    if has_vnni() && k >= 64 {
+    if use_vnni_i8(k) {
         let mut bt = vec![0i8; k * n];
         let mut colsum = vec![0i32; n];
         pack_bt_i8(k, n, b, &mut bt, &mut colsum);
@@ -183,7 +223,7 @@ pub fn gemm_i8_fast(m: usize, k: usize, n: usize, a: &[i8], b: &[i8], c: &mut [i
 /// Safe wrapper: i16 GEMM with row-major B (packs internally).
 pub fn gemm_i16_fast(m: usize, k: usize, n: usize, a: &[i16], b: &[i16], c: &mut [i32]) {
     #[cfg(target_arch = "x86_64")]
-    if has_avx512bw() && k >= 32 {
+    if use_madd_i16(k) {
         let mut bt = vec![0i16; k * n];
         pack_bt_i16(k, n, b, &mut bt);
         unsafe {
@@ -216,12 +256,7 @@ pub fn gemm_i8_prepacked(
         return;
     }
     // unpack and use the portable kernel
-    let mut b = vec![0i8; k * n];
-    for j in 0..n {
-        for p in 0..k {
-            b[p * n + j] = bt[j * k + p];
-        }
-    }
+    let b = unpack_bt_i8(k, n, bt);
     super::gemm::gemm_i8_portable(m, k, n, a, &b, c);
 }
 
@@ -234,12 +269,7 @@ pub fn gemm_i16_prepacked(m: usize, k: usize, n: usize, a: &[i16], bt: &[i16], c
         }
         return;
     }
-    let mut b = vec![0i16; k * n];
-    for j in 0..n {
-        for p in 0..k {
-            b[p * n + j] = bt[j * k + p];
-        }
-    }
+    let b = unpack_bt_i16(k, n, bt);
     super::gemm::gemm_i16_portable(m, k, n, a, &b, c);
 }
 

@@ -5,6 +5,11 @@
 //! - [`gemm`]: i8/i16/f32 GEMM kernels with i32 accumulation — the measured
 //!   substrate for Table 3 / Fig 10 / Appendix E speedups.
 //! - [`conv`]: im2col-based convolution over those GEMMs.
+//!
+//! These modules are the *serial backends* of the parallel kernel engine
+//! (`crate::kernels`, DESIGN.md §Kernel-Engine): hot paths call
+//! `kernels::Engine`, which shards work across a thread pool and falls back
+//! to these kernels for small problems or `threads = 1`.
 
 pub mod conv;
 pub mod gemm;

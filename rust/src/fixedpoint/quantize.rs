@@ -1,6 +1,7 @@
 //! Bulk quantization: f32 slices → integer codes / fake-quant, fused with
 //! the QEM statistics pass (single traversal — the L3 hot-path version of
-//! `kernels/stats.py`).
+//! `kernels/stats.py`). Serial backend of the engine's sliced-parallel
+//! `codes_*` / `fake_quant_stats` dispatch (DESIGN.md §Kernel-Engine).
 
 use super::scheme::Scheme;
 

@@ -1,0 +1,532 @@
+//! Parallel kernel engine (DESIGN.md §Kernel-Engine): one dispatch layer in
+//! front of the `fixedpoint` numeric backends, sharding big kernels across a
+//! persistent worker thread pool (`pool.rs`) and falling back to the serial
+//! kernels for small problems or `threads = 1`.
+//!
+//! Backends (all in [`crate::fixedpoint`]):
+//! - **serial-portable** — the blocked autovectorized kernels in
+//!   `gemm::*_portable` / `gemm_f32`;
+//! - **serial-VNNI** — the AVX-512 `vpdpbusd`/`vpmaddwd` kernels in
+//!   `gemm_simd` (runtime-detected);
+//! - **parallel** — this module: the same kernels on disjoint shards.
+//!
+//! Sharding strategy (EXPERIMENTS.md §Perf):
+//! - GEMM by M-row panels (≤ [`crate::fixedpoint::gemm::MC`] rows each) —
+//!   every output row's accumulation order is unchanged, so parallel i8/i16
+//!   results are **bit-identical** to serial, and parallel f32 is too
+//!   (per-row f32 accumulation order does not depend on the row partition);
+//! - conv by output-channel blocks — the im2col GEMM has `m = out_c`, so
+//!   row panels *are* channel blocks;
+//! - quantize/pack/rescale by contiguous element slices.
+//!
+//! The process-wide engine ([`global`]) sizes itself from `APT_THREADS` or
+//! the machine's available parallelism; `nn::{linear, conv, rnn}`, the
+//! coordinator, and the bench drivers all route through it.
+
+mod pool;
+
+use std::sync::{Arc, OnceLock};
+
+use crate::fixedpoint::conv::{self, Conv2dGeom};
+use crate::fixedpoint::gemm;
+use crate::fixedpoint::gemm_simd;
+use crate::fixedpoint::quantize::{self, QuantStats};
+use crate::fixedpoint::Scheme;
+use pool::{SendPtr, ThreadPool};
+
+/// Below this many MACs a GEMM is dispatched serially: pool hand-off costs
+/// a few µs, which only pays off once the kernel itself is slower than that.
+const PAR_GEMM_MIN_MACS: usize = 1 << 19;
+
+/// Minimum element count before elementwise passes go parallel.
+const PAR_ELEMWISE_MIN: usize = 1 << 16;
+
+/// Contiguous-slice shard size for quantize/pack/rescale.
+const QUANT_CHUNK: usize = 1 << 15;
+
+/// The kernel engine: thread count + (for `threads > 1`) a persistent pool.
+pub struct Engine {
+    threads: usize,
+    pool: Option<ThreadPool>,
+}
+
+impl Engine {
+    /// Engine with an explicit thread count (`threads − 1` workers plus the
+    /// dispatching thread). `0` is treated as `1`.
+    pub fn new(threads: usize) -> Engine {
+        let threads = threads.max(1);
+        let pool = if threads > 1 { Some(ThreadPool::new(threads - 1)) } else { None };
+        Engine { threads, pool }
+    }
+
+    /// Serial engine — every dispatch falls through to the serial backends.
+    pub fn serial() -> Engine {
+        Engine::new(1)
+    }
+
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    /// Run `f(0..total)` across the pool (and the calling thread), or
+    /// inline when the engine is serial or the range is trivial.
+    pub fn parallel_for<F: Fn(usize) + Sync>(&self, total: usize, f: F) {
+        match &self.pool {
+            Some(pool) if total > 1 => pool.dispatch(total, &f),
+            _ => {
+                for i in 0..total {
+                    f(i);
+                }
+            }
+        }
+    }
+
+    /// Parallel indexed map: `(0..n).map(f)` with the work sharded; result
+    /// order matches index order.
+    pub fn map_indexed<T, F>(&self, n: usize, f: F) -> Vec<T>
+    where
+        T: Send,
+        F: Fn(usize) -> T + Sync,
+    {
+        if self.pool.is_none() || n < 2 {
+            return (0..n).map(f).collect();
+        }
+        let mut slots: Vec<Option<T>> = Vec::with_capacity(n);
+        slots.resize_with(n, || None);
+        let out = SendPtr(slots.as_mut_ptr());
+        self.parallel_for(n, move |i| {
+            // SAFETY: each task writes exactly one distinct slot, and the
+            // dispatch barrier ends before `slots` is read.
+            unsafe { *out.0.add(i) = Some(f(i)) };
+        });
+        slots.into_iter().map(|s| s.expect("map_indexed task skipped")).collect()
+    }
+
+    fn parallel_gemm(&self, m: usize, k: usize, n: usize) -> bool {
+        self.pool.is_some()
+            && m >= 2
+            && m.saturating_mul(k).saturating_mul(n) >= PAR_GEMM_MIN_MACS
+    }
+
+    /// Shard the m×n output of a row-major kernel into row panels and run
+    /// `body(r0, r1, rows_slice)` per panel.
+    fn shard_rows<T, B>(&self, m: usize, n: usize, c: &mut [T], body: B)
+    where
+        T: Send,
+        B: Fn(usize, usize, &mut [T]) + Sync,
+    {
+        debug_assert_eq!(c.len(), m * n);
+        let chunk = m.div_ceil(self.threads * 4).clamp(1, gemm::MC);
+        let tasks = m.div_ceil(chunk);
+        let out = SendPtr(c.as_mut_ptr());
+        self.parallel_for(tasks, move |t| {
+            let r0 = t * chunk;
+            let r1 = ((t + 1) * chunk).min(m);
+            // SAFETY: tasks cover disjoint row ranges of `c` and the
+            // dispatch barrier outlives every use of the pointer.
+            let rows = unsafe { std::slice::from_raw_parts_mut(out.0.add(r0 * n), (r1 - r0) * n) };
+            body(r0, r1, rows);
+        });
+    }
+
+    /// Shard a flat output buffer into contiguous `chunk`-sized slices and
+    /// run `body(start, slice)` per shard.
+    fn shard_slices<T, B>(&self, out: &mut [T], chunk: usize, body: B)
+    where
+        T: Send,
+        B: Fn(usize, &mut [T]) + Sync,
+    {
+        let len = out.len();
+        let tasks = len.div_ceil(chunk);
+        let p = SendPtr(out.as_mut_ptr());
+        self.parallel_for(tasks, move |t| {
+            let s = t * chunk;
+            let e = ((t + 1) * chunk).min(len);
+            // SAFETY: disjoint contiguous ranges; barrier outlives use.
+            let slice = unsafe { std::slice::from_raw_parts_mut(p.0.add(s), e - s) };
+            body(s, slice);
+        });
+    }
+
+    // ---------------------------------------------------------------- GEMM
+
+    /// f32 GEMM, row-panel sharded. Bit-identical to the serial kernel for
+    /// any thread count (each output row's accumulation order is fixed).
+    pub fn gemm_f32(&self, m: usize, k: usize, n: usize, a: &[f32], b: &[f32], c: &mut [f32]) {
+        assert_eq!(a.len(), m * k);
+        assert_eq!(b.len(), k * n);
+        assert_eq!(c.len(), m * n);
+        if !self.parallel_gemm(m, k, n) {
+            gemm::gemm_f32(m, k, n, a, b, c);
+            return;
+        }
+        self.shard_rows(m, n, c, |r0, r1, rows| {
+            gemm::gemm_f32(r1 - r0, k, n, &a[r0 * k..r1 * k], b, rows);
+        });
+    }
+
+    /// i8×i8→i32 GEMM. Same backend selection as the serial dispatch
+    /// (VNNI when available and `k ≥ 64`, else portable), so results are
+    /// bit-identical to [`gemm::gemm_i8`] at every thread count.
+    pub fn gemm_i8(&self, m: usize, k: usize, n: usize, a: &[i8], b: &[i8], c: &mut [i32]) {
+        assert_eq!(a.len(), m * k);
+        assert_eq!(b.len(), k * n);
+        assert_eq!(c.len(), m * n);
+        if !self.parallel_gemm(m, k, n) {
+            gemm::gemm_i8(m, k, n, a, b, c);
+            return;
+        }
+        #[cfg(target_arch = "x86_64")]
+        if gemm_simd::use_vnni_i8(k) {
+            let mut bt = vec![0i8; k * n];
+            let mut colsum = vec![0i32; n];
+            gemm_simd::pack_bt_i8(k, n, b, &mut bt, &mut colsum);
+            let (bt, colsum) = (&bt[..], &colsum[..]);
+            self.shard_rows(m, n, c, |r0, r1, rows| {
+                // SAFETY: VNNI availability checked above.
+                unsafe {
+                    gemm_simd::gemm_i8_vnni_packed(r1 - r0, k, n, &a[r0 * k..r1 * k], bt, colsum, rows)
+                }
+            });
+            return;
+        }
+        self.shard_rows(m, n, c, |r0, r1, rows| {
+            gemm::gemm_i8_portable(r1 - r0, k, n, &a[r0 * k..r1 * k], b, rows);
+        });
+    }
+
+    /// i16×i16→i32 GEMM (see [`Engine::gemm_i8`] for the dispatch contract).
+    pub fn gemm_i16(&self, m: usize, k: usize, n: usize, a: &[i16], b: &[i16], c: &mut [i32]) {
+        assert_eq!(a.len(), m * k);
+        assert_eq!(b.len(), k * n);
+        assert_eq!(c.len(), m * n);
+        if !self.parallel_gemm(m, k, n) {
+            gemm::gemm_i16(m, k, n, a, b, c);
+            return;
+        }
+        #[cfg(target_arch = "x86_64")]
+        if gemm_simd::use_madd_i16(k) {
+            let mut bt = vec![0i16; k * n];
+            gemm_simd::pack_bt_i16(k, n, b, &mut bt);
+            let bt = &bt[..];
+            self.shard_rows(m, n, c, |r0, r1, rows| {
+                // SAFETY: AVX-512 BW availability checked above.
+                unsafe { gemm_simd::gemm_i16_madd_packed(r1 - r0, k, n, &a[r0 * k..r1 * k], bt, rows) }
+            });
+            return;
+        }
+        self.shard_rows(m, n, c, |r0, r1, rows| {
+            gemm::gemm_i16_portable(r1 - r0, k, n, &a[r0 * k..r1 * k], b, rows);
+        });
+    }
+
+    /// i8 GEMM over a pre-packed BT + column sums (the training hot path —
+    /// quantization emits BT directly, see `gemm_simd::codes_i8_bt`).
+    pub fn gemm_i8_prepacked(
+        &self,
+        m: usize,
+        k: usize,
+        n: usize,
+        a: &[i8],
+        bt: &[i8],
+        colsum: &[i32],
+        c: &mut [i32],
+    ) {
+        assert_eq!(a.len(), m * k);
+        assert_eq!(bt.len(), k * n);
+        assert_eq!(c.len(), m * n);
+        if !self.parallel_gemm(m, k, n) {
+            gemm_simd::gemm_i8_prepacked(m, k, n, a, bt, colsum, c);
+            return;
+        }
+        #[cfg(target_arch = "x86_64")]
+        if gemm_simd::has_vnni() {
+            self.shard_rows(m, n, c, |r0, r1, rows| {
+                // SAFETY: VNNI availability checked above.
+                unsafe {
+                    gemm_simd::gemm_i8_vnni_packed(r1 - r0, k, n, &a[r0 * k..r1 * k], bt, colsum, rows)
+                }
+            });
+            return;
+        }
+        // Off-AVX512: unpack once, then shard the portable kernel.
+        let b = gemm_simd::unpack_bt_i8(k, n, bt);
+        let b = &b[..];
+        self.shard_rows(m, n, c, |r0, r1, rows| {
+            gemm::gemm_i8_portable(r1 - r0, k, n, &a[r0 * k..r1 * k], b, rows);
+        });
+    }
+
+    /// i16 GEMM over a pre-packed BT (see [`Engine::gemm_i8_prepacked`]).
+    pub fn gemm_i16_prepacked(&self, m: usize, k: usize, n: usize, a: &[i16], bt: &[i16], c: &mut [i32]) {
+        assert_eq!(a.len(), m * k);
+        assert_eq!(bt.len(), k * n);
+        assert_eq!(c.len(), m * n);
+        if !self.parallel_gemm(m, k, n) {
+            gemm_simd::gemm_i16_prepacked(m, k, n, a, bt, c);
+            return;
+        }
+        #[cfg(target_arch = "x86_64")]
+        if gemm_simd::has_avx512bw() {
+            self.shard_rows(m, n, c, |r0, r1, rows| {
+                // SAFETY: AVX-512 BW availability checked above.
+                unsafe { gemm_simd::gemm_i16_madd_packed(r1 - r0, k, n, &a[r0 * k..r1 * k], bt, rows) }
+            });
+            return;
+        }
+        let b = gemm_simd::unpack_bt_i16(k, n, bt);
+        let b = &b[..];
+        self.shard_rows(m, n, c, |r0, r1, rows| {
+            gemm::gemm_i16_portable(r1 - r0, k, n, &a[r0 * k..r1 * k], b, rows);
+        });
+    }
+
+    // ---------------------------------------------------------------- conv
+
+    /// f32 forward convolution of one image via im2col + engine GEMM. The
+    /// GEMM's `m` is `out_c`, so row panels shard by output-channel blocks.
+    /// `scratch` must hold `rows·cols` f32 (see `Conv2dGeom::im2col_dims`).
+    pub fn conv2d_f32(
+        &self,
+        g: Conv2dGeom,
+        h: usize,
+        w: usize,
+        img: &[f32],
+        weight: &[f32],
+        out: &mut [f32],
+        scratch: &mut [f32],
+    ) {
+        let (rows, cols) = g.im2col_dims(h, w);
+        assert_eq!(weight.len(), g.out_c * rows);
+        assert_eq!(out.len(), g.out_c * cols);
+        conv::im2col(g, h, w, img, scratch);
+        self.gemm_f32(g.out_c, rows, cols, weight, scratch, out);
+    }
+
+    /// Quantized i8 forward convolution (codes → integer GEMM → rescale),
+    /// each stage engine-dispatched.
+    pub fn conv2d_i8(
+        &self,
+        g: Conv2dGeom,
+        h: usize,
+        w: usize,
+        img: &[f32],
+        s_img: Scheme,
+        weight: &[f32],
+        s_w: Scheme,
+        out: &mut [f32],
+    ) {
+        let (rows, cols) = g.im2col_dims(h, w);
+        let mut patch = vec![0.0f32; rows * cols];
+        conv::im2col(g, h, w, img, &mut patch);
+        let mut cw = vec![0i8; weight.len()];
+        let mut cp = vec![0i8; patch.len()];
+        self.codes_i8(weight, &mut cw, s_w);
+        self.codes_i8(&patch, &mut cp, s_img);
+        let mut acc = vec![0i32; out.len()];
+        self.gemm_i8(g.out_c, rows, cols, &cw, &cp, &mut acc);
+        self.rescale_i32(&acc, s_w.resolution() * s_img.resolution(), out);
+    }
+
+    // ------------------------------------------------------------ quantize
+
+    /// f32 → i8 codes, sharded by contiguous slices (elementwise, so
+    /// bit-identical to the serial pass).
+    pub fn codes_i8(&self, xs: &[f32], out: &mut [i8], sch: Scheme) {
+        assert_eq!(xs.len(), out.len());
+        if self.pool.is_none() || xs.len() < PAR_ELEMWISE_MIN {
+            quantize::codes_i8(xs, out, sch);
+            return;
+        }
+        self.shard_slices(out, QUANT_CHUNK, |s, o| {
+            quantize::codes_i8(&xs[s..s + o.len()], o, sch);
+        });
+    }
+
+    /// f32 → i16 codes (see [`Engine::codes_i8`]).
+    pub fn codes_i16(&self, xs: &[f32], out: &mut [i16], sch: Scheme) {
+        assert_eq!(xs.len(), out.len());
+        if self.pool.is_none() || xs.len() < PAR_ELEMWISE_MIN {
+            quantize::codes_i16(xs, out, sch);
+            return;
+        }
+        self.shard_slices(out, QUANT_CHUNK, |s, o| {
+            quantize::codes_i16(&xs[s..s + o.len()], o, sch);
+        });
+    }
+
+    /// i32 accumulator → f32 rescale, sharded (elementwise, bit-identical).
+    pub fn rescale_i32(&self, acc: &[i32], scale: f32, out: &mut [f32]) {
+        assert_eq!(acc.len(), out.len());
+        if self.pool.is_none() || out.len() < PAR_ELEMWISE_MIN {
+            gemm::rescale_i32(acc, scale, out);
+            return;
+        }
+        self.shard_slices(out, QUANT_CHUNK, |s, o| {
+            gemm::rescale_i32(&acc[s..s + o.len()], scale, o);
+        });
+    }
+
+    /// Fake-quantize in place with fused QEM statistics. Quantized *values*
+    /// are bit-identical to the serial pass; the f64 stat sums are merged
+    /// per fixed-size chunk in index order, so they are deterministic for
+    /// every thread count (but may differ from the serial single-pass sum
+    /// in the last few ulps — see EXPERIMENTS.md §Perf).
+    pub fn fake_quant_stats(&self, xs: &mut [f32], sch: Scheme) -> QuantStats {
+        if self.pool.is_none() || xs.len() < PAR_ELEMWISE_MIN {
+            return quantize::fake_quant_stats_inplace(xs, sch);
+        }
+        let len = xs.len();
+        let tasks = len.div_ceil(QUANT_CHUNK);
+        let mut parts = vec![QuantStats::default(); tasks];
+        let pp = SendPtr(parts.as_mut_ptr());
+        let xp = SendPtr(xs.as_mut_ptr());
+        self.parallel_for(tasks, move |t| {
+            let s = t * QUANT_CHUNK;
+            let e = ((t + 1) * QUANT_CHUNK).min(len);
+            // SAFETY: disjoint data ranges and one distinct stats slot per
+            // task; the dispatch barrier outlives both pointers.
+            let slice = unsafe { std::slice::from_raw_parts_mut(xp.0.add(s), e - s) };
+            let st = quantize::fake_quant_stats_inplace(slice, sch);
+            unsafe { *pp.0.add(t) = st };
+        });
+        let mut total = QuantStats::default();
+        for st in parts {
+            total.sum_abs += st.sum_abs;
+            total.sum_abs_q += st.sum_abs_q;
+            if st.max_abs > total.max_abs {
+                total.max_abs = st.max_abs;
+            }
+        }
+        total
+    }
+}
+
+// ------------------------------------------------------------------ global
+
+static GLOBAL: OnceLock<Arc<Engine>> = OnceLock::new();
+
+fn default_threads() -> usize {
+    if let Ok(v) = std::env::var("APT_THREADS") {
+        if let Ok(n) = v.trim().parse::<usize>() {
+            return n.max(1);
+        }
+    }
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+}
+
+/// The process-wide engine, created on first use. Thread count comes from
+/// `APT_THREADS` (the CLI's `--threads` sets it before first use) or the
+/// machine's available parallelism.
+pub fn global() -> &'static Engine {
+    GLOBAL.get_or_init(|| Arc::new(Engine::new(default_threads())))
+}
+
+/// Shared handle to the global engine, for components that store it
+/// (e.g. the coordinator).
+pub fn global_arc() -> Arc<Engine> {
+    Arc::clone(GLOBAL.get_or_init(|| Arc::new(Engine::new(default_threads()))))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fixedpoint::quantize::max_abs;
+    use crate::util::Pcg32;
+
+    fn randvec(seed: u64, n: usize) -> Vec<f32> {
+        let mut r = Pcg32::seeded(seed);
+        (0..n).map(|_| r.normal()).collect()
+    }
+
+    #[test]
+    fn f32_gemm_bit_identical_across_thread_counts() {
+        // 160×130×96 ≈ 2M MACs: crosses the parallel threshold.
+        let (m, k, n) = (160usize, 130, 96);
+        let a = randvec(1, m * k);
+        let b = randvec(2, k * n);
+        let mut want = vec![0.0f32; m * n];
+        gemm::gemm_f32(m, k, n, &a, &b, &mut want);
+        for threads in [1usize, 2, 3, 4] {
+            let eng = Engine::new(threads);
+            let mut got = vec![0.0f32; m * n];
+            eng.gemm_f32(m, k, n, &a, &b, &mut got);
+            assert_eq!(got, want, "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn parallel_for_covers_range_once() {
+        use std::sync::atomic::{AtomicU32, Ordering};
+        let eng = Engine::new(4);
+        let hits: Vec<AtomicU32> = (0..257).map(|_| AtomicU32::new(0)).collect();
+        eng.parallel_for(hits.len(), |i| {
+            hits[i].fetch_add(1, Ordering::Relaxed);
+        });
+        assert!(hits.iter().all(|h| h.load(Ordering::Relaxed) == 1));
+    }
+
+    #[test]
+    fn map_indexed_preserves_order() {
+        let eng = Engine::new(3);
+        let v = eng.map_indexed(100, |i| i * i);
+        assert_eq!(v, (0..100).map(|i| i * i).collect::<Vec<_>>());
+        let serial = Engine::serial();
+        assert_eq!(serial.map_indexed(5, |i| i + 1), vec![1, 2, 3, 4, 5]);
+    }
+
+    #[test]
+    fn parallel_panic_propagates_and_engine_survives() {
+        let eng = Engine::new(2);
+        let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            eng.parallel_for(64, |i| {
+                if i == 33 {
+                    panic!("task failure");
+                }
+            });
+        }));
+        assert!(r.is_err());
+        // still usable afterwards
+        let v = eng.map_indexed(10, |i| i);
+        assert_eq!(v.len(), 10);
+    }
+
+    #[test]
+    fn quantize_passes_match_serial() {
+        let eng = Engine::new(4);
+        let xs = randvec(3, PAR_ELEMWISE_MIN + 1234);
+        let sch = Scheme::for_range(max_abs(&xs), 8);
+        let mut got = vec![0i8; xs.len()];
+        let mut want = vec![0i8; xs.len()];
+        eng.codes_i8(&xs, &mut got, sch);
+        quantize::codes_i8(&xs, &mut want, sch);
+        assert_eq!(got, want);
+
+        let mut xq_par = xs.clone();
+        let st_par = eng.fake_quant_stats(&mut xq_par, sch);
+        let mut xq_ser = xs.clone();
+        let st_ser = quantize::fake_quant_stats_inplace(&mut xq_ser, sch);
+        assert_eq!(xq_par, xq_ser, "fake-quant values must be bit-identical");
+        assert_eq!(st_par.max_abs, st_ser.max_abs);
+        assert!((st_par.sum_abs - st_ser.sum_abs).abs() < 1e-6 * st_ser.sum_abs.max(1.0));
+        assert!((st_par.sum_abs_q - st_ser.sum_abs_q).abs() < 1e-6 * st_ser.sum_abs_q.max(1.0));
+
+        // stats deterministic across thread counts (chunking is fixed)
+        let eng2 = Engine::new(2);
+        let mut xq2 = xs.clone();
+        let st2 = eng2.fake_quant_stats(&mut xq2, sch);
+        assert_eq!(st_par.sum_abs.to_bits(), st2.sum_abs.to_bits());
+        assert_eq!(st_par.sum_abs_q.to_bits(), st2.sum_abs_q.to_bits());
+    }
+
+    #[test]
+    fn global_engine_is_usable() {
+        let eng = global();
+        assert!(eng.threads() >= 1);
+        let mut c = vec![0.0f32; 4];
+        eng.gemm_f32(2, 2, 2, &[1.0, 2.0, 3.0, 4.0], &[1.0, 0.0, 0.0, 1.0], &mut c);
+        assert_eq!(c, vec![1.0, 2.0, 3.0, 4.0]);
+        let arc = global_arc();
+        assert_eq!(arc.threads(), eng.threads());
+    }
+}

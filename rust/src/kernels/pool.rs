@@ -1,0 +1,258 @@
+//! Persistent worker thread pool for the kernel engine (DESIGN.md
+//! §Kernel-Engine).
+//!
+//! Plain `std::thread` workers fed over `mpsc` channels — no external
+//! dependencies. Work arrives as a [`Job`]: a lifetime-erased task closure
+//! plus a shared atomic task counter. Every worker that receives the job
+//! claims task indices from the counter until the range is exhausted, then
+//! counts down a latch; the dispatching thread participates in the claim
+//! loop too, so a pool built for `threads` uses `threads − 1` workers.
+//!
+//! Soundness of the lifetime erasure: [`ThreadPool::dispatch`] does not
+//! return until every worker has counted down the latch, and a worker only
+//! counts down after its claim loop stops touching the closure — so the
+//! borrow the raw pointer was made from strictly outlives every use.
+
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::mpsc::{channel, Sender};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+
+/// Raw pointer wrapper asserting cross-thread transferability. Safe to use
+/// only under the dispatch protocol documented in the module header (or,
+/// for output buffers, when tasks write provably disjoint ranges).
+pub(crate) struct SendPtr<T: ?Sized>(pub *mut T);
+
+// Manual Copy/Clone: a derive would demand `T: Copy`, but the pointee type
+// is irrelevant — only the pointer is copied.
+impl<T: ?Sized> Clone for SendPtr<T> {
+    fn clone(&self) -> Self {
+        SendPtr(self.0)
+    }
+}
+
+impl<T: ?Sized> Copy for SendPtr<T> {}
+
+// SAFETY: SendPtr is only dereferenced by engine tasks that either (a) read
+// shared data that outlives the dispatch, or (b) write disjoint ranges; the
+// dispatch barrier guarantees no use-after-return.
+unsafe impl<T: ?Sized> Send for SendPtr<T> {}
+unsafe impl<T: ?Sized> Sync for SendPtr<T> {}
+
+/// Count-down latch: workers count down, the dispatcher waits for zero.
+/// The counter lives in a `Mutex` (not an atomic) because the `Condvar`
+/// wakeup requires one.
+#[allow(clippy::mutex_atomic)]
+struct Latch {
+    remaining: Mutex<usize>,
+    cv: Condvar,
+}
+
+#[allow(clippy::mutex_atomic)]
+impl Latch {
+    fn new(count: usize) -> Self {
+        Latch { remaining: Mutex::new(count), cv: Condvar::new() }
+    }
+
+    fn count_down(&self) {
+        let mut r = self.remaining.lock().unwrap();
+        *r -= 1;
+        if *r == 0 {
+            self.cv.notify_all();
+        }
+    }
+
+    fn wait(&self) {
+        let mut r = self.remaining.lock().unwrap();
+        while *r > 0 {
+            r = self.cv.wait(r).unwrap();
+        }
+    }
+}
+
+/// One broadcast unit of sharded work (see module docs).
+struct Job {
+    /// Lifetime-erased pointer to the caller's `Fn(usize)` closure.
+    ctx: SendPtr<()>,
+    /// Monomorphized trampoline that reconstitutes and calls the closure.
+    ///
+    /// Safety contract: `ctx` must point at a live closure of the type the
+    /// trampoline was instantiated for.
+    call: unsafe fn(*const (), usize),
+    /// Next unclaimed task index (shared across all participants).
+    next: Arc<AtomicUsize>,
+    /// One past the last task index.
+    total: usize,
+    latch: Arc<Latch>,
+    panicked: Arc<AtomicBool>,
+}
+
+fn worker_loop(rx: std::sync::mpsc::Receiver<Job>) {
+    while let Ok(job) = rx.recv() {
+        let result = catch_unwind(AssertUnwindSafe(|| loop {
+            let i = job.next.fetch_add(1, Ordering::Relaxed);
+            if i >= job.total {
+                break;
+            }
+            // SAFETY: dispatch() keeps the closure alive until the latch
+            // we count down below has been waited on.
+            unsafe { (job.call)(job.ctx.0, i) };
+        }));
+        if result.is_err() {
+            job.panicked.store(true, Ordering::SeqCst);
+        }
+        // Always count down, even after a panic, so dispatch() never hangs.
+        job.latch.count_down();
+    }
+}
+
+/// The persistent pool. Dropping it closes the channels and joins the
+/// workers.
+pub struct ThreadPool {
+    senders: Vec<Sender<Job>>,
+    handles: Vec<JoinHandle<()>>,
+}
+
+impl ThreadPool {
+    /// Spawn `workers` persistent worker threads (callers pass
+    /// `threads − 1`: the dispatching thread is the final participant).
+    pub fn new(workers: usize) -> ThreadPool {
+        let mut senders = Vec::with_capacity(workers);
+        let mut handles = Vec::with_capacity(workers);
+        for w in 0..workers {
+            let (tx, rx) = channel::<Job>();
+            let handle = std::thread::Builder::new()
+                .name(format!("apt-kernel-{w}"))
+                .spawn(move || worker_loop(rx))
+                .expect("spawn kernel worker thread");
+            senders.push(tx);
+            handles.push(handle);
+        }
+        ThreadPool { senders, handles }
+    }
+
+    pub fn workers(&self) -> usize {
+        self.senders.len()
+    }
+
+    /// Run `f(0..total)` sharded across the workers *and* the calling
+    /// thread. Blocks until every task has run. Panics (after all workers
+    /// have quiesced) if any task panicked.
+    pub fn dispatch<F: Fn(usize) + Sync>(&self, total: usize, f: &F) {
+        /// Reconstitute the erased closure and run one task.
+        ///
+        /// # Safety
+        /// `ctx` must point at a live `F` for the whole dispatch.
+        unsafe fn trampoline<F: Fn(usize) + Sync>(ctx: *const (), i: usize) {
+            unsafe { (*(ctx as *const F))(i) }
+        }
+
+        // Wake only as many workers as there are tasks beyond the one the
+        // dispatcher itself will claim — a 2-task dispatch on a wide pool
+        // must not pay a full-pool broadcast + latch.
+        let participants = self.workers().min(total.saturating_sub(1));
+        let next = Arc::new(AtomicUsize::new(0));
+        let latch = Arc::new(Latch::new(participants));
+        let panicked = Arc::new(AtomicBool::new(false));
+        let ctx = SendPtr(f as *const F as *const () as *mut ());
+        for tx in self.senders.iter().take(participants) {
+            let job = Job {
+                ctx,
+                call: trampoline::<F>,
+                next: Arc::clone(&next),
+                total,
+                latch: Arc::clone(&latch),
+                panicked: Arc::clone(&panicked),
+            };
+            if let Err(e) = tx.send(job) {
+                // Worker gone (cannot normally happen): keep the latch
+                // balanced so we do not deadlock below.
+                e.0.latch.count_down();
+            }
+        }
+        // The dispatcher participates in the same claim loop.
+        let main_result = catch_unwind(AssertUnwindSafe(|| loop {
+            let i = next.fetch_add(1, Ordering::Relaxed);
+            if i >= total {
+                break;
+            }
+            f(i);
+        }));
+        latch.wait();
+        if main_result.is_err() || panicked.load(Ordering::SeqCst) {
+            panic!("parallel kernel task panicked");
+        }
+    }
+}
+
+impl Drop for ThreadPool {
+    fn drop(&mut self) {
+        self.senders.clear(); // closes the channels → workers exit recv()
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+
+    #[test]
+    fn every_task_runs_exactly_once() {
+        let pool = ThreadPool::new(3);
+        let hits: Vec<AtomicU64> = (0..1000).map(|_| AtomicU64::new(0)).collect();
+        let f = |i: usize| {
+            hits[i].fetch_add(1, Ordering::Relaxed);
+        };
+        pool.dispatch(hits.len(), &f);
+        assert!(hits.iter().all(|h| h.load(Ordering::Relaxed) == 1));
+    }
+
+    #[test]
+    fn zero_and_single_task_dispatch() {
+        let pool = ThreadPool::new(2);
+        let count = AtomicU64::new(0);
+        let f = |_i: usize| {
+            count.fetch_add(1, Ordering::Relaxed);
+        };
+        pool.dispatch(0, &f);
+        assert_eq!(count.load(Ordering::Relaxed), 0);
+        pool.dispatch(1, &f);
+        assert_eq!(count.load(Ordering::Relaxed), 1);
+    }
+
+    #[test]
+    fn pool_survives_a_panicking_job() {
+        let pool = ThreadPool::new(2);
+        let boom = |i: usize| {
+            if i == 7 {
+                panic!("boom");
+            }
+        };
+        let r = catch_unwind(AssertUnwindSafe(|| pool.dispatch(32, &boom)));
+        assert!(r.is_err(), "panic must propagate to the dispatcher");
+        // The pool must still work afterwards.
+        let count = AtomicU64::new(0);
+        let ok = |_i: usize| {
+            count.fetch_add(1, Ordering::Relaxed);
+        };
+        pool.dispatch(16, &ok);
+        assert_eq!(count.load(Ordering::Relaxed), 16);
+    }
+
+    #[test]
+    fn many_sequential_dispatches() {
+        let pool = ThreadPool::new(1);
+        let count = AtomicU64::new(0);
+        for _ in 0..100 {
+            let f = |_i: usize| {
+                count.fetch_add(1, Ordering::Relaxed);
+            };
+            pool.dispatch(10, &f);
+        }
+        assert_eq!(count.load(Ordering::Relaxed), 1000);
+    }
+}

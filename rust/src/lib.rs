@@ -8,11 +8,24 @@
 //!
 //! Three-layer architecture (see DESIGN.md):
 //! - **L3** (this crate): coordinator — `apt` controller, `nn` training
-//!   substrate, experiment drivers, PJRT `runtime` for the AOT artifacts.
+//!   substrate, experiment drivers, PJRT `runtime` for the AOT artifacts,
+//!   and the parallel `kernels` engine the numeric hot paths dispatch
+//!   through (DESIGN.md §Kernel-Engine).
 //! - **L2** (`python/compile/model.py`): JAX train-step graphs, AOT-lowered
 //!   to HLO text at build time.
 //! - **L1** (`python/compile/kernels/`): Pallas quantization/stats/qmatmul
 //!   kernels that lower into those graphs.
+
+// Kernel-style math signatures (m, k, n, operands, schemes, outputs) and
+// index-heavy blocked loops are the local idiom; these style lints fight it.
+#![allow(clippy::too_many_arguments)]
+#![allow(clippy::needless_range_loop)]
+#![allow(clippy::manual_memcpy)]
+#![allow(clippy::manual_range_contains)]
+#![allow(clippy::new_without_default)]
+#![allow(clippy::type_complexity)]
+// the crate and its core controller module share the paper's name
+#![allow(clippy::module_inception)]
 
 pub mod apt;
 pub mod bench;
@@ -20,6 +33,7 @@ pub mod coordinator;
 pub mod data;
 pub mod exp;
 pub mod fixedpoint;
+pub mod kernels;
 pub mod nn;
 pub mod opcount;
 pub mod runtime;

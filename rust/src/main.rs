@@ -12,7 +12,7 @@ use apt::util::cli::Args;
 
 fn usage() -> ! {
     eprintln!(
-        "usage: apt <command>\n\
+        "usage: apt <command> [--threads N]\n\
          \n\
          commands:\n\
          \x20 exp <id|all> [--iters N] [--quick]   run a paper experiment\n\
@@ -20,6 +20,9 @@ fn usage() -> ! {
          \x20       [--mode float32|adaptive|int8|int16] [--iters N] [--lr F]\n\
          \x20 opcount [--batch N]\n\
          \x20 list\n\
+         \n\
+         --threads N sizes the kernel engine (default: all cores;\n\
+         env APT_THREADS equivalent)\n\
          \n\
          experiments: {}",
         exp::ALL.join(" ")
@@ -29,6 +32,10 @@ fn usage() -> ! {
 
 fn main() {
     let args = Args::from_env();
+    // Size the global kernel engine before anything touches it.
+    if let Some(t) = args.get("threads") {
+        std::env::set_var("APT_THREADS", t);
+    }
     let pos = args.positional().to_vec();
     match pos.first().map(|s| s.as_str()) {
         Some("exp") => {

@@ -99,6 +99,9 @@ impl Layer for Conv2d {
             fake_quant_stats_inplace(&mut wq.data, sw);
         }
 
+        // Engine dispatch: the im2col GEMM has m = out_c, so its row panels
+        // shard by output-channel blocks (DESIGN.md §Kernel-Engine).
+        let eng = crate::kernels::global();
         let (oh, ow) = g.out_hw(h, w);
         let mut out = Tensor::zeros(&[n, g.out_c * oh * ow]);
         self.patches_q.clear();
@@ -107,10 +110,10 @@ impl Layer for Conv2d {
             let xi = &x.data[img * g.in_c * h * w..(img + 1) * g.in_c * h * w];
             im2col(g, h, w, xi, &mut patch);
             if let Some(sx) = sx_opt {
-                fake_quant_stats_inplace(&mut patch, sx);
+                eng.fake_quant_stats(&mut patch, sx);
             }
             let co = &mut out.data[img * g.out_c * cols..(img + 1) * g.out_c * cols];
-            gemm::gemm_f32(g.out_c, rows, cols, &wq.data, &patch, co);
+            eng.gemm_f32(g.out_c, rows, cols, &wq.data, &patch, co);
             // bias per output channel
             for oc in 0..g.out_c {
                 let bv = self.b.data[oc];
@@ -152,6 +155,7 @@ impl Layer for Conv2d {
         }
         self.last_g = Some(gout.clone());
 
+        let eng = crate::kernels::global();
         let mut dx = Tensor::zeros(&[n, g.in_c * h * w]);
         let mut dpatch = vec![0.0f32; rows * cols];
         let mut wt = vec![0.0f32; self.w.len()];
@@ -164,7 +168,7 @@ impl Layer for Conv2d {
             // WTGRAD: dW += ĝ[out_c×cols] · patchᵀ[cols×rows]
             let pq = &self.patches_q[img];
             gemm::transpose(rows, cols, &pq.data, &mut patch_t);
-            gemm::gemm_f32(g.out_c, cols, rows, gi, &patch_t, &mut dw_local);
+            eng.gemm_f32(g.out_c, cols, rows, gi, &patch_t, &mut dw_local);
             for (a, &b) in self.gw.data.iter_mut().zip(dw_local.iter()) {
                 *a += b;
             }
@@ -173,7 +177,7 @@ impl Layer for Conv2d {
                 self.gb.data[oc] += gi[oc * cols..(oc + 1) * cols].iter().sum::<f32>();
             }
             // BPROP: dpatch = Ŵᵀ[rows×out_c] · ĝ[out_c×cols]; col2im → dx
-            gemm::gemm_f32(rows, g.out_c, cols, &wt, gi, &mut dpatch);
+            eng.gemm_f32(rows, g.out_c, cols, &wt, gi, &mut dpatch);
             let dxi = &mut dx.data[img * g.in_c * h * w..(img + 1) * g.in_c * h * w];
             col2im(g, h, w, &dpatch, dxi);
         }

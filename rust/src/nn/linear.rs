@@ -56,13 +56,14 @@ impl Linear {
 impl Layer for Linear {
     fn forward(&mut self, x: &Tensor, ctx: &mut TrainCtx) -> Tensor {
         assert_eq!(x.rank(), 2, "{}: expected 2-D input", self.name);
+        let eng = crate::kernels::global();
         match &mut self.ctl {
             None => {
                 if ctx.training {
                     self.x_q = x.clone();
                     self.w_q = self.w.clone();
                 }
-                let mut y = x.matmul(&self.w);
+                let mut y = x.matmul_with(&self.w, eng);
                 y.add_row_bias(&self.b.data);
                 y
             }
@@ -79,10 +80,10 @@ impl Layer for Linear {
                     ctl.x.scheme()
                 };
                 let mut xq = x.clone();
-                fake_quant_stats_inplace(&mut xq.data, sx);
+                eng.fake_quant_stats(&mut xq.data, sx);
                 let mut wq = self.w.clone();
-                fake_quant_stats_inplace(&mut wq.data, sw);
-                let mut y = xq.matmul(&wq);
+                eng.fake_quant_stats(&mut wq.data, sw);
+                let mut y = xq.matmul_with(&wq, eng);
                 y.add_row_bias(&self.b.data);
                 if ctx.training {
                     self.x_q = xq;
@@ -117,8 +118,9 @@ impl Layer for Linear {
             }
         };
         self.last_g = Some(g.clone());
+        let eng = crate::kernels::global();
         // WTGRAD: dW += X̂ᵀ · dŶ
-        let dw = self.x_q.t().matmul(&gq);
+        let dw = self.x_q.t().matmul_with(&gq, eng);
         self.gw.add_inplace(&dw);
         // bias grad: column sums
         let n = gq.dim(1);
@@ -128,7 +130,7 @@ impl Layer for Linear {
             }
         }
         // BPROP: dX = dŶ · Ŵᵀ
-        gq.matmul(&self.w_q.t())
+        gq.matmul_with(&self.w_q.t(), eng)
     }
 
     fn visit_params(&mut self, f: &mut dyn FnMut(&mut Tensor, &mut Tensor)) {

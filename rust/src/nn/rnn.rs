@@ -213,6 +213,7 @@ impl Seq2Seq {
         train: bool,
         ctx: &mut TrainCtx,
     ) -> (f32, f64) {
+        let eng = crate::kernels::global();
         let b = src.len();
         let d = self.dim;
         let v = self.vocab;
@@ -237,8 +238,8 @@ impl Seq2Seq {
             let e = Self::embed(&self.emb_src, &toks, d);
             let eq = Self::qx(&mut self.ctl, 0, &e, iter, &mut ctx.ledger);
             let hq = Self::qx(&mut self.ctl, 1, enc_h.last().unwrap(), iter, &mut ctx.ledger);
-            let mut h = eq.matmul(&enc_wx_q);
-            h.add_inplace(&hq.matmul(&enc_wh_q));
+            let mut h = eq.matmul_with(&enc_wx_q, eng);
+            h.add_inplace(&hq.matmul_with(&enc_wh_q, eng));
             h.add_row_bias(&self.enc_b.data);
             tanh_vec(&mut h.data);
             enc_xq.push(eq);
@@ -261,12 +262,12 @@ impl Seq2Seq {
             let e = Self::embed(&self.emb_tgt, &toks, d);
             let eq = Self::qx(&mut self.ctl, 2, &e, iter, &mut ctx.ledger);
             let hq = Self::qx(&mut self.ctl, 3, dec_h.last().unwrap(), iter, &mut ctx.ledger);
-            let mut h = eq.matmul(&dec_wx_q);
-            h.add_inplace(&hq.matmul(&dec_wh_q));
+            let mut h = eq.matmul_with(&dec_wx_q, eng);
+            h.add_inplace(&hq.matmul_with(&dec_wh_q, eng));
             h.add_row_bias(&self.dec_b.data);
             tanh_vec(&mut h.data);
             let sq = Self::qx(&mut self.ctl, 4, &h, iter, &mut ctx.ledger);
-            let mut logits = sq.matmul(&why_q);
+            let mut logits = sq.matmul_with(&why_q, eng);
             logits.add_row_bias(&self.by.data);
             dec_xq.push(eq);
             dec_hq.push(hq);
@@ -304,14 +305,14 @@ impl Seq2Seq {
             // quantize dlogits (ΔX̂ for the Why projection)
             let dlq = Self::qg(&mut self.ctl, 4, &dl, iter, &mut ctx.ledger);
             // why grads: sᵀ·ĝ ; by: col sums
-            self.grads[8].add_inplace(&dec_sq[t].t().matmul(&dlq));
+            self.grads[8].add_inplace(&dec_sq[t].t().matmul_with(&dlq, eng));
             for row in dlq.data.chunks(v) {
                 for (gb, &x) in self.grads[9].data.iter_mut().zip(row) {
                     *gb += x;
                 }
             }
             // ds = ĝ·Whyᵀ + dh_next
-            let mut ds = dlq.matmul(&why_q.t());
+            let mut ds = dlq.matmul_with(&why_q.t(), eng);
             ds.add_inplace(&dh_next);
             // through tanh
             for (dv, &hv) in ds.data.iter_mut().zip(&dec_h[t + 1].data) {
@@ -319,22 +320,22 @@ impl Seq2Seq {
             }
             // quantize recurrent gradient (ΔX̂ for dec projections)
             let dsq = Self::qg(&mut self.ctl, 3, &ds, iter, &mut ctx.ledger);
-            self.grads[5].add_inplace(&dec_xq[t].t().matmul(&dsq));
-            self.grads[6].add_inplace(&dec_hq[t].t().matmul(&dsq));
+            self.grads[5].add_inplace(&dec_xq[t].t().matmul_with(&dsq, eng));
+            self.grads[6].add_inplace(&dec_hq[t].t().matmul_with(&dsq, eng));
             for row in dsq.data.chunks(d) {
                 for (gb, &x) in self.grads[7].data.iter_mut().zip(row) {
                     *gb += x;
                 }
             }
             // embedding grad (f32, scatter)
-            let de = dsq.matmul(&dec_wx_q.t());
+            let de = dsq.matmul_with(&dec_wx_q.t(), eng);
             for (bidx, s) in tgt.iter().enumerate() {
                 let tok = if t == 0 { bos } else { s[t - 1] };
                 for j in 0..d {
                     self.grads[1].data[tok * d + j] += de.data[bidx * d + j];
                 }
             }
-            dh_next = dsq.matmul(&dec_wh_q.t());
+            dh_next = dsq.matmul_with(&dec_wh_q.t(), eng);
         }
 
         // into encoder: gradient w.r.t. enc final h
@@ -344,21 +345,21 @@ impl Seq2Seq {
                 *dv *= 1.0 - hv * hv;
             }
             let dhq = Self::qg(&mut self.ctl, 1, &dhe, iter, &mut ctx.ledger);
-            self.grads[2].add_inplace(&enc_xq[t].t().matmul(&dhq));
-            self.grads[3].add_inplace(&enc_hq[t].t().matmul(&dhq));
+            self.grads[2].add_inplace(&enc_xq[t].t().matmul_with(&dhq, eng));
+            self.grads[3].add_inplace(&enc_hq[t].t().matmul_with(&dhq, eng));
             for row in dhq.data.chunks(d) {
                 for (gb, &x) in self.grads[4].data.iter_mut().zip(row) {
                     *gb += x;
                 }
             }
-            let de = dhq.matmul(&enc_wx_q.t());
+            let de = dhq.matmul_with(&enc_wx_q.t(), eng);
             for (bidx, s) in src.iter().enumerate() {
                 let tok = s[t];
                 for j in 0..d {
                     self.grads[0].data[tok * d + j] += de.data[bidx * d + j];
                 }
             }
-            dhe = dhq.matmul(&enc_wh_q.t());
+            dhe = dhq.matmul_with(&enc_wh_q.t(), eng);
         }
 
         (loss, acc)

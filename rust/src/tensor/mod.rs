@@ -53,15 +53,22 @@ impl Tensor {
         self
     }
 
-    /// 2-D matmul: self (m×k) · other (k×n).
+    /// 2-D matmul: self (m×k) · other (k×n), dispatched through the global
+    /// [`crate::kernels::Engine`] (row-panel parallel for big shapes,
+    /// serial otherwise; bit-identical either way).
     pub fn matmul(&self, other: &Tensor) -> Tensor {
+        self.matmul_with(other, crate::kernels::global())
+    }
+
+    /// 2-D matmul on an explicit kernel engine.
+    pub fn matmul_with(&self, other: &Tensor, engine: &crate::kernels::Engine) -> Tensor {
         assert_eq!(self.rank(), 2);
         assert_eq!(other.rank(), 2);
         let (m, k) = (self.shape[0], self.shape[1]);
         let (k2, n) = (other.shape[0], other.shape[1]);
         assert_eq!(k, k2, "inner dims: {k} vs {k2}");
         let mut out = Tensor::zeros(&[m, n]);
-        gemm::gemm_f32(m, k, n, &self.data, &other.data, &mut out.data);
+        engine.gemm_f32(m, k, n, &self.data, &other.data, &mut out.data);
         out
     }
 

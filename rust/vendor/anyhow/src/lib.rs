@@ -1,0 +1,149 @@
+//! Offline drop-in subset of the `anyhow` crate.
+//!
+//! The build environment has no network registry access (DESIGN.md §2), so
+//! this vendored shim provides exactly the surface the `apt` crate uses:
+//! [`Error`], [`Result`], the [`anyhow!`] / [`bail!`] macros, and the
+//! [`Context`] extension trait. Error values are rendered eagerly into a
+//! message string with the `source()` chain appended (`: `-joined), which
+//! matches how the callers format errors (`{e}` / `{e:#}`).
+
+use std::fmt;
+
+/// A string-backed error type. Deliberately does **not** implement
+/// `std::error::Error` so the blanket `From<E: Error>` below does not
+/// overlap with `core`'s identity `From` impl — the same coherence trick
+/// the real `anyhow` relies on.
+pub struct Error {
+    msg: String,
+}
+
+impl Error {
+    /// Build an error from anything displayable (used by [`anyhow!`]).
+    pub fn msg<M: fmt::Display>(message: M) -> Error {
+        Error { msg: message.to_string() }
+    }
+
+    /// Prefix the message with additional context.
+    pub fn context<C: fmt::Display>(self, context: C) -> Error {
+        Error { msg: format!("{context}: {}", self.msg) }
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        // `{e:#}` (alternate) and `{e}` both print the full chain: the
+        // chain was flattened into `msg` at construction time.
+        f.write_str(&self.msg)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl<E> From<E> for Error
+where
+    E: std::error::Error + Send + Sync + 'static,
+{
+    fn from(err: E) -> Error {
+        let mut msg = err.to_string();
+        let mut source = err.source();
+        while let Some(cause) = source {
+            msg.push_str(": ");
+            msg.push_str(&cause.to_string());
+            source = cause.source();
+        }
+        Error { msg }
+    }
+}
+
+/// `Result` with [`Error`] as the default error type.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Extension trait adding `.context(..)` / `.with_context(..)` to results.
+pub trait Context<T> {
+    /// Wrap the error with a fixed context message.
+    fn context<C: fmt::Display>(self, context: C) -> Result<T>;
+    /// Wrap the error with a lazily-built context message.
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E> Context<T> for std::result::Result<T, E>
+where
+    E: std::error::Error + Send + Sync + 'static,
+{
+    fn context<C: fmt::Display>(self, context: C) -> Result<T> {
+        self.map_err(|e| Error::from(e).context(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| Error::from(e).context(f()))
+    }
+}
+
+/// Construct an [`Error`] from a format string.
+#[macro_export]
+macro_rules! anyhow {
+    ($($arg:tt)*) => {
+        $crate::Error::msg(::std::format!($($arg)*))
+    };
+}
+
+/// Return early with an [`Error`] built from a format string.
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return ::std::result::Result::Err($crate::anyhow!($($arg)*))
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::io::Error {
+        std::io::Error::new(std::io::ErrorKind::NotFound, "gone")
+    }
+
+    #[test]
+    fn macro_and_display() {
+        let e = anyhow!("bad dim {}: {}", 3, "x");
+        assert_eq!(format!("{e}"), "bad dim 3: x");
+        assert_eq!(format!("{e:#}"), "bad dim 3: x");
+        assert_eq!(format!("{e:?}"), "bad dim 3: x");
+    }
+
+    #[test]
+    fn bail_returns_err() {
+        fn f(fail: bool) -> Result<u32> {
+            if fail {
+                bail!("boom {}", 7);
+            }
+            Ok(1)
+        }
+        assert_eq!(f(false).unwrap(), 1);
+        assert_eq!(format!("{}", f(true).unwrap_err()), "boom 7");
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        fn f() -> Result<()> {
+            let _n: usize = "nope".parse()?;
+            Ok(())
+        }
+        assert!(f().is_err());
+    }
+
+    #[test]
+    fn context_prefixes() {
+        let r: std::result::Result<(), std::io::Error> = Err(io_err());
+        let e = r.with_context(|| format!("reading {}", "m.txt")).unwrap_err();
+        let s = format!("{e}");
+        assert!(s.starts_with("reading m.txt: "), "{s}");
+        let r2: std::result::Result<(), std::io::Error> = Err(io_err());
+        let e2 = r2.context("ctx").unwrap_err();
+        assert!(format!("{e2}").starts_with("ctx: "));
+    }
+}
