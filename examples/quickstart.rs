@@ -1,10 +1,12 @@
 //! Quickstart: train the same classifier in float32 and with Adaptive
-//! Precision Training, and compare accuracy + the bit-widths QPA chose.
+//! Precision Training through the unified `train::Session` API, and
+//! compare accuracy + the bit-widths QPA chose.
 //!
 //!     cargo run --release --example quickstart -- [--model alexnet] [--iters 300]
 
-use apt::exp::common::{grad_mix_string, train_classifier, TrainOpts};
+use apt::exp::common::grad_mix_string;
 use apt::nn::QuantMode;
+use apt::train::SessionBuilder;
 use apt::util::cli::Args;
 
 fn main() {
@@ -14,24 +16,15 @@ fn main() {
 
     println!("Adaptive Precision Training quickstart — {model}-mini, {iters} iters\n");
 
-    let f32_run = train_classifier(
-        &TrainOpts { model: model.clone(), iters, lr: 0.01, ..Default::default() },
-        None,
-    );
+    let f32_run = SessionBuilder::classifier(&model).lr(0.01).train(iters);
     println!("float32 : eval acc {:.3}", f32_run.eval_acc);
 
     let mut cfg = apt::apt::AptConfig::default(); // α=0.01 β=0.025 δ=25 γ=2 T=3% Mode2
     cfg.init_phase_iters = iters / 10;
-    let q_run = train_classifier(
-        &TrainOpts {
-            model: model.clone(),
-            iters,
-            lr: 0.01,
-            mode: QuantMode::Adaptive(cfg),
-            ..Default::default()
-        },
-        None,
-    );
+    let q_run = SessionBuilder::classifier(&model)
+        .lr(0.01)
+        .mode(QuantMode::Adaptive(cfg))
+        .train(iters);
     println!("adaptive: eval acc {:.3}  (Δ {:+.3})", q_run.eval_acc, q_run.eval_acc - f32_run.eval_acc);
     println!("\nactivation-gradient bit mix over training (paper Table 1 style):");
     println!("  {}", grad_mix_string(&q_run.ledger));

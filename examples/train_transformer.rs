@@ -1,6 +1,7 @@
 //! E2E driver: train a Transformer LM through the FULL three-layer stack —
 //! Rust coordinator (QEM/QPA host control) → PJRT CPU client → AOT HLO
-//! containing the Pallas-derived quantized train step.
+//! containing the Pallas-derived quantized train step — behind the same
+//! `train::Session` surface as the host paths (DESIGN.md §Session-API).
 //!
 //! Python never runs here: the artifact was built once by `make artifacts`.
 //!
@@ -12,10 +13,11 @@
 //! --preset); scaling toward the paper's sizes is a preset knob, not a code
 //! change (DESIGN.md §2).
 
-use apt::coordinator::{tfm_slot_names, tokens_value, ArtifactTrainer};
+use apt::coordinator::{tfm_slot_names, tokens_value};
 use apt::data::lm_batch;
 use apt::nn::QuantMode;
 use apt::runtime::Runtime;
+use apt::train::{PjrtBackend, Session};
 use apt::util::cli::Args;
 use apt::util::out::Csv;
 use apt::util::{Pcg32, Timer};
@@ -64,21 +66,42 @@ fn main() -> anyhow::Result<()> {
     rt.load("tfm_train_step")?;
     println!("artifact compiled in {:.2}s", compile_t.secs());
 
-    let mut trainer = ArtifactTrainer::new(&rt, "tfm_train_step", tfm_slot_names(n_layers), mode, 42)?;
     let mut rng = Pcg32::seeded(7);
+    let data = Box::new(move |_iter: u64| {
+        let (tk, tg) = lm_batch(&mut rng, batch, seq, vocab);
+        vec![tokens_value(&tk), tokens_value(&tg)]
+    });
+    let backend = PjrtBackend::new(
+        &mut rt,
+        "tfm_train_step",
+        tfm_slot_names(n_layers),
+        mode,
+        42,
+        lr,
+        "tfm-e2e",
+        data,
+    )?;
+    let mut session = Session::with_backend(backend);
     let mut csv = Csv::new(&log_path, &["step", "loss", "ms", "bits"]);
     let train_t = Timer::start();
     let mut last_loss = 0.0;
     for step in 0..steps {
-        let (tk, tg) = lm_batch(&mut rng, batch, seq, vocab);
+        // `ms` times Session::step, i.e. host batch generation + qparams
+        // render + artifact execution + stats feedback — the full training
+        // step a user pays for, a few µs over the bare artifact call.
         let t = Timer::start();
-        let res = trainer.step(&mut rt, vec![tokens_value(&tk), tokens_value(&tg)], lr)?;
+        let loss = session.step()?;
         let ms = t.secs() * 1e3;
-        last_loss = res.loss;
-        let bits: String = res.grad_bits.iter().map(|b| b.to_string()).collect::<Vec<_>>().join("/");
-        csv.row(&[step.to_string(), format!("{:.4}", res.loss), format!("{ms:.1}"), bits.clone()]);
+        last_loss = loss;
+        let bits: String = session
+            .grad_bits()
+            .iter()
+            .map(|(_, b)| b.to_string())
+            .collect::<Vec<_>>()
+            .join("/");
+        csv.row(&[step.to_string(), format!("{loss:.4}"), format!("{ms:.1}"), bits.clone()]);
         if step % 10 == 0 || step + 1 == steps {
-            println!("step {step:>4}  loss {:.4}  {:.0} ms  grad bits [{bits}]", res.loss, ms);
+            println!("step {step:>4}  loss {loss:.4}  {ms:.0} ms  grad bits [{bits}]");
         }
     }
     csv.write()?;

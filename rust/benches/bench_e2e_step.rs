@@ -1,32 +1,29 @@
 //! cargo bench — end-to-end step latency:
 //!   (a) one pure-Rust adaptive train step (alexnet-mini), vs f32;
 //!   (b) one PJRT artifact train step (mlp / transformer) if artifacts exist.
+//!
+//! Both paths step through `train::Session` (DESIGN.md §Session-API), so
+//! what's timed is exactly what the drivers run.
 
 use apt::bench::Bencher;
-use apt::coordinator::{mlp_slot_names, tokens_value, ArtifactTrainer};
+use apt::coordinator::{mlp_slot_names, tfm_slot_names, tokens_value};
 use apt::data::{lm_batch, SynthImages};
-use apt::nn::loss::softmax_xent;
-use apt::nn::{models, QuantMode, Sgd, TrainCtx};
+use apt::nn::QuantMode;
 use apt::runtime::{HostValue, Runtime};
+use apt::train::{PjrtBackend, Session, SessionBuilder};
 use apt::util::Pcg32;
 
 fn rust_step_bench(bencher: &Bencher, mode: QuantMode, label: &str) {
-    let mut rng = Pcg32::seeded(0);
-    let mut net = models::alexnet_mini(mode, &mut rng);
-    let mut data = SynthImages::new(1, models::CLASSES, 3, 12, 12, 0.5);
-    let mut opt = Sgd::new(0.01, 0.9);
-    let mut ctx = TrainCtx::new();
-    let mut it = 0u64;
-    let s = bencher.run(label, || {
-        ctx.iter = it;
-        let (x, y) = data.batch(16);
-        let logits = net.forward(&x, &mut ctx);
-        let (_, g) = softmax_xent(&logits, &y);
-        net.backward(&g, &mut ctx);
-        opt.step(&mut net);
-        it += 1;
+    let mut s = SessionBuilder::classifier("alexnet")
+        .mode(mode)
+        .lr(0.01)
+        .seed(0)
+        .data(Box::new(SynthImages::new(1, apt::nn::models::CLASSES, 3, 12, 12, 0.5)))
+        .build();
+    let sample = bencher.run(label, || {
+        s.step().expect("host step cannot fail");
     });
-    println!("{:<28} {:>9.2} ms/step", s.name, s.median() * 1e3);
+    println!("{:<28} {:>9.2} ms/step", sample.name, sample.median() * 1e3);
 }
 
 fn main() {
@@ -45,16 +42,27 @@ fn main() {
         Err(e) => println!("pjrt benches skipped: {e:#}"),
         Ok(mut rt) => {
             if rt.manifest.get("mlp_train_step").is_some() {
-                let mut t =
-                    ArtifactTrainer::new(&rt, "mlp_train_step", mlp_slot_names(3), QuantMode::Adaptive(cfg), 0)
-                        .unwrap();
                 let mut rng = Pcg32::seeded(1);
-                let mut x = vec![0.0f32; 32 * 64];
-                let s = bencher.run("pjrt mlp_train_step", || {
+                let data = Box::new(move |_iter: u64| {
+                    let mut x = vec![0.0f32; 32 * 64];
                     rng.fill_normal(&mut x, 1.0);
                     let y: Vec<i32> = (0..32).map(|_| rng.below(10) as i32).collect();
-                    t.step(&mut rt, vec![HostValue::F32(x.clone()), HostValue::I32(y)], 0.05)
-                        .unwrap();
+                    vec![HostValue::F32(x), HostValue::I32(y)]
+                });
+                let backend = PjrtBackend::new(
+                    &mut rt,
+                    "mlp_train_step",
+                    mlp_slot_names(3),
+                    QuantMode::Adaptive(cfg),
+                    0,
+                    0.05,
+                    "pjrt mlp_train_step",
+                    data,
+                )
+                .unwrap();
+                let mut sess = Session::with_backend(backend);
+                let s = bencher.run("pjrt mlp_train_step", || {
+                    sess.step().unwrap();
                 });
                 println!("{:<28} {:>9.2} ms/step", s.name, s.median() * 1e3);
             }
@@ -65,19 +73,25 @@ fn main() {
                 let toks = &spec.inputs[spec.input_index("tokens").unwrap()];
                 let (b, s_len) = (toks.dims[0], toks.dims[1]);
                 let vocab = spec.inputs[spec.input_index("p_embed").unwrap()].dims[0];
-                let mut t = ArtifactTrainer::new(
-                    &rt,
+                let mut rng = Pcg32::seeded(2);
+                let data = Box::new(move |_iter: u64| {
+                    let (tk, tg) = lm_batch(&mut rng, b, s_len, vocab);
+                    vec![tokens_value(&tk), tokens_value(&tg)]
+                });
+                let backend = PjrtBackend::new(
+                    &mut rt,
                     "tfm_train_step",
-                    apt::coordinator::tfm_slot_names(layers),
+                    tfm_slot_names(layers),
                     QuantMode::Adaptive(cfg),
                     0,
+                    3e-3,
+                    "pjrt tfm_train_step",
+                    data,
                 )
                 .unwrap();
-                let mut rng = Pcg32::seeded(2);
+                let mut sess = Session::with_backend(backend);
                 let s = bencher.run("pjrt tfm_train_step", || {
-                    let (tk, tg) = lm_batch(&mut rng, b, s_len, vocab);
-                    t.step(&mut rt, vec![tokens_value(&tk), tokens_value(&tg)], 3e-3)
-                        .unwrap();
+                    sess.step().unwrap();
                 });
                 println!("{:<28} {:>9.2} ms/step", s.name, s.median() * 1e3);
             }

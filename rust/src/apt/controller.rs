@@ -14,6 +14,20 @@ use crate::fixedpoint::quantize;
 use crate::fixedpoint::{Scheme, TensorKind};
 use crate::util::Ema;
 
+/// Serializable decision state of one controller — everything
+/// [`PrecisionController`] mutates between updates. Used by
+/// `train::checkpoint` for bit-identical save/restore.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct ControllerState {
+    pub bits: u8,
+    pub s: i32,
+    pub ema_value: f32,
+    pub ema_initialized: bool,
+    pub prev_range: f32,
+    pub next_update: u64,
+    pub updates: u64,
+}
+
 /// Controller state for one tensor.
 #[derive(Clone, Debug)]
 pub struct PrecisionController {
@@ -63,6 +77,30 @@ impl PrecisionController {
     /// Does Algorithm 1's `if i == update_iter` fire?
     pub fn needs_update(&self, iter: u64) -> bool {
         iter >= self.next_update
+    }
+
+    /// Snapshot the mutable decision state (checkpointing). The config,
+    /// layer name and kind are reconstruction-time inputs, not state.
+    pub fn snapshot(&self) -> ControllerState {
+        ControllerState {
+            bits: self.scheme.bits,
+            s: self.scheme.s,
+            ema_value: self.range_ema.value,
+            ema_initialized: self.range_ema.is_initialized(),
+            prev_range: self.prev_range,
+            next_update: self.next_update,
+            updates: self.updates,
+        }
+    }
+
+    /// Restore a [`snapshot`](Self::snapshot); the controller then continues
+    /// the interrupted run bit-identically.
+    pub fn restore(&mut self, st: &ControllerState) {
+        self.scheme = Scheme { bits: st.bits, s: st.s };
+        self.range_ema.set_state(st.ema_value, st.ema_initialized);
+        self.prev_range = st.prev_range;
+        self.next_update = st.next_update;
+        self.updates = st.updates;
     }
 
     /// Update from in-hand data (the pure-Rust training path). Call only
@@ -260,6 +298,37 @@ mod tests {
         }
         // stable distribution → long intervals → few updates
         assert!(updates < 20, "updates={updates}");
+    }
+
+    #[test]
+    fn snapshot_restore_continues_identically() {
+        let mut cfg = AptConfig::default();
+        cfg.init_phase_iters = 3;
+        let mut ledger = Ledger::new();
+        let mut c = PrecisionController::new(cfg, "l", TensorKind::Gradient);
+        let data = gaussian(21, 2048, 1.0);
+        for it in 0..5u64 {
+            if c.needs_update(it) {
+                c.maybe_update_from_data(it, &data, &mut ledger);
+            }
+        }
+        let st = c.snapshot();
+        let mut c2 = PrecisionController::new(cfg, "l", TensorKind::Gradient);
+        c2.restore(&st);
+        assert_eq!(c2.snapshot(), st);
+        // both continue with identical decisions
+        let tail = gaussian(22, 2048, 0.3);
+        let mut l1 = Ledger::new();
+        let mut l2 = Ledger::new();
+        for it in 5..40u64 {
+            assert_eq!(c.needs_update(it), c2.needs_update(it));
+            if c.needs_update(it) {
+                let s1 = c.maybe_update_from_data(it, &tail, &mut l1);
+                let s2 = c2.maybe_update_from_data(it, &tail, &mut l2);
+                assert_eq!(s1, s2);
+            }
+        }
+        assert_eq!(c.snapshot(), c2.snapshot());
     }
 
     #[test]

@@ -9,5 +9,5 @@ pub mod qem;
 pub mod qpa;
 
 pub use config::{AptConfig, Mode, ThresholdOn};
-pub use controller::{LayerControllers, PrecisionController};
+pub use controller::{ControllerState, LayerControllers, PrecisionController};
 pub use ledger::Ledger;

@@ -52,6 +52,18 @@ impl SynthImages {
         (x, y)
     }
 
+    /// Sample-stream RNG state (checkpointing; templates re-derive from the
+    /// construction seed).
+    pub fn rng_state(&self) -> (u64, u64) {
+        self.rng.state()
+    }
+
+    /// Restore a [`rng_state`](Self::rng_state) snapshot so subsequent
+    /// batches continue the interrupted stream bit-identically.
+    pub fn set_rng_state(&mut self, st: (u64, u64)) {
+        self.rng = Pcg32::from_state(st);
+    }
+
     /// A fixed evaluation set drawn from a separate stream.
     pub fn eval_set(&self, seed: u64, n: usize) -> (Tensor, Vec<usize>) {
         let mut clone = SynthImages {

@@ -2,18 +2,13 @@
 //! Table 2 (method comparison).
 
 use crate::data::{SynthDetection, SynthSegmentation};
-use crate::exp::common::{grad_mix_string, train_classifier, TrainOpts};
+use crate::exp::common::{adaptive_mode, grad_mix_string};
 use crate::nn::models::{DetectionNet, SegNet};
 use crate::nn::{QuantMode, TrainCtx};
+use crate::train::{Seq2SeqBackend, Session, SessionBuilder};
 use crate::util::cli::Args;
 use crate::util::out::{results_dir, Csv};
 use crate::util::Pcg32;
-
-fn adaptive_mode(iters: u64) -> QuantMode {
-    let mut cfg = crate::apt::AptConfig::default();
-    cfg.init_phase_iters = iters / 10;
-    QuantMode::Adaptive(cfg)
-}
 
 /// Table 1: float32 vs adaptive on every task family.
 pub fn table1(args: &Args) {
@@ -27,21 +22,12 @@ pub fn table1(args: &Args) {
 
     println!("{:<12} {:<11} {:>8} {:>9} {:>7}   gradient bits", "task", "network", "float32", "adaptive", "Δ");
     for name in crate::nn::models::ZOO {
-        let f32_run = train_classifier(
-            &TrainOpts { iters, model: name.into(), lr: 0.01, noise: 1.5, ..Default::default() },
-            None,
-        );
-        let q_run = train_classifier(
-            &TrainOpts {
-                iters,
-                model: name.into(),
-                lr: 0.01,
-                noise: 1.5,
-                mode: adaptive_mode(iters),
-                ..Default::default()
-            },
-            None,
-        );
+        let f32_run = SessionBuilder::classifier(name).lr(0.01).noise(1.5).train(iters);
+        let q_run = SessionBuilder::classifier(name)
+            .lr(0.01)
+            .noise(1.5)
+            .mode(adaptive_mode(iters))
+            .train(iters);
         let mix = grad_mix_string(&q_run.ledger);
         println!(
             "{:<12} {:<11} {:>8.3} {:>9.3} {:>+7.3}   {}",
@@ -115,19 +101,11 @@ pub fn table2(args: &Args) {
     );
 
     let rnn_eval = |mode: QuantMode| -> f64 {
-        use crate::data::translation_batch;
-        use crate::nn::rnn::Seq2Seq;
-        let mut rng = Pcg32::seeded(3);
-        let mut m = Seq2Seq::new(12, 32, mode, &mut rng);
-        let mut ctx = TrainCtx::new();
-        for it in 0..iters.max(400) {
-            ctx.iter = it;
-            let (src, tgt) = translation_batch(&mut rng, 16, 4, 12);
-            m.train_step(&src, &tgt, 0.05, &mut ctx);
-        }
-        let (src, tgt) = translation_batch(&mut rng, 64, 4, 12);
-        let (_, acc) = m.eval(&src, &tgt, &mut ctx);
-        acc
+        let mut s = Session::with_backend(Seq2SeqBackend::new(
+            "seq2seq", 12, 32, mode, 3, 16, 4, 0.05, 64,
+        ));
+        s.run(iters.max(400)).expect("rnn training cannot fail");
+        s.record().expect("rnn eval cannot fail").eval_acc
     };
 
     let methods: Vec<(&str, &str, QuantMode)> = vec![
@@ -137,11 +115,12 @@ pub fn table2(args: &Args) {
         ("Adaptive Precision", "int8~24 adaptive", adaptive_mode(iters)),
     ];
     for (name, backward, mode) in methods {
-        let cnn = train_classifier(
-            &TrainOpts { iters, model: "resnet".into(), lr: 0.01, noise: 1.5, mode, ..Default::default() },
-            None,
-        )
-        .eval_acc;
+        let cnn = SessionBuilder::classifier("resnet")
+            .lr(0.01)
+            .noise(1.5)
+            .mode(mode)
+            .train(iters)
+            .eval_acc;
         let rnn = rnn_eval(mode);
         println!("{:<22} {:<18} {:>9.3} {:>9.3}", name, backward, cnn, rnn);
         csv.row(&[name.into(), backward.into(), format!("{cnn:.4}"), format!("{rnn:.4}")]);

@@ -1,111 +1,12 @@
-//! Shared machinery for the experiment drivers: a classification training
-//! loop with loss/accuracy curves, gradient probes, and bit-mix reporting.
+//! Shared reporting helpers for the experiment drivers. Training itself
+//! goes through [`crate::train::SessionBuilder`] (DESIGN.md §Session-API)
+//! and convergence summaries through
+//! [`crate::train::TrainRecord::tail_loss`]; what remains here is
+//! presentation: bit-mix strings and adaptive-config shorthands.
 
-use crate::apt::Ledger;
-use crate::data::SynthImages;
+use crate::apt::{AptConfig, Ledger};
 use crate::fixedpoint::TensorKind;
-use crate::nn::loss::{accuracy, softmax_xent};
-use crate::nn::models;
-use crate::nn::{QuantMode, Sequential, Sgd, TrainCtx};
-use crate::tensor::Tensor;
-use crate::util::Pcg32;
-
-/// One finished training run.
-pub struct TrainRun {
-    pub label: String,
-    pub losses: Vec<f32>,
-    pub eval_acc: f64,
-    pub ledger: Ledger,
-    pub net: Sequential,
-}
-
-/// Options for [`train_classifier`].
-#[derive(Clone)]
-pub struct TrainOpts {
-    pub model: String,
-    pub mode: QuantMode,
-    pub iters: u64,
-    pub batch: usize,
-    pub lr: f32,
-    pub seed: u64,
-    pub noise: f32,
-    /// (layer, bits) gradient overrides applied before training.
-    pub grad_overrides: Vec<(String, u8)>,
-    /// Callback invoked after each backward with (iter, net).
-    pub probe_every: u64,
-}
-
-impl Default for TrainOpts {
-    fn default() -> Self {
-        TrainOpts {
-            model: "alexnet".into(),
-            mode: QuantMode::Float32,
-            iters: 150,
-            batch: 16,
-            lr: 0.02,
-            seed: 0,
-            noise: 0.5,
-            grad_overrides: vec![],
-            probe_every: 0,
-        }
-    }
-}
-
-/// Train a zoo classifier on synthetic images; optionally call `probe`
-/// after backward every `probe_every` iterations.
-pub fn train_classifier(
-    opts: &TrainOpts,
-    mut probe: Option<&mut dyn FnMut(u64, &Sequential)>,
-) -> TrainRun {
-    let mut rng = Pcg32::seeded(opts.seed);
-    let mut net = models::by_name(&opts.model, opts.mode, &mut rng)
-        .unwrap_or_else(|| panic!("unknown model {:?}", opts.model));
-    for (layer, bits) in &opts.grad_overrides {
-        assert!(
-            net.set_grad_override(layer, Some(*bits)),
-            "no layer {layer:?} in {}",
-            opts.model
-        );
-    }
-    let mut data = SynthImages::new(
-        opts.seed + 1000,
-        models::CLASSES,
-        models::IN_C,
-        models::IN_H,
-        models::IN_W,
-        opts.noise,
-    );
-    let mut opt = Sgd::new(opts.lr, 0.9);
-    let mut ctx = TrainCtx::new();
-    let mut losses = Vec::with_capacity(opts.iters as usize);
-    for it in 0..opts.iters {
-        ctx.iter = it;
-        let (x, y) = data.batch(opts.batch);
-        let logits = net.forward(&x, &mut ctx);
-        let (l, g) = softmax_xent(&logits, &y);
-        net.backward(&g, &mut ctx);
-        if opts.probe_every > 0 && it % opts.probe_every == 0 {
-            if let Some(p) = probe.as_mut() {
-                p(it, &net);
-            }
-        }
-        opt.step(&mut net);
-        losses.push(l);
-    }
-    ctx.ledger.set_total_iters(opts.iters);
-    // held-out accuracy (quantized forward — deployment-int8 semantics)
-    ctx.training = false;
-    let (ex, ey) = data.eval_set(999, 256);
-    let logits = net.forward(&ex, &mut ctx);
-    let eval_acc = accuracy(&logits, &ey);
-    TrainRun {
-        label: format!("{}-{}", opts.model, opts.mode.label()),
-        losses,
-        eval_acc,
-        ledger: std::mem::take(&mut ctx.ledger),
-        net,
-    }
-}
+use crate::nn::QuantMode;
 
 /// Format a ledger's gradient bit mix like the paper's Table 1 columns.
 pub fn grad_mix_string(ledger: &Ledger) -> String {
@@ -119,103 +20,43 @@ pub fn grad_mix_string(ledger: &Ledger) -> String {
     )
 }
 
-/// Mean of the last k losses (convergence summary).
-pub fn tail_loss(losses: &[f32], k: usize) -> f64 {
-    let k = k.min(losses.len()).max(1);
-    losses[losses.len() - k..].iter().map(|&x| x as f64).sum::<f64>() / k as f64
-}
-
-/// Quantize one weight tensor of a trained net in place at `bits` and return
-/// (undo snapshot, the raw data copy) — used by the Fig 5/6 single-layer
-/// deployment-quantization sweep. Weight tensors are the 2-D params in
-/// visit order.
-pub fn weight_tensors(net: &mut Sequential) -> Vec<usize> {
-    let mut idx = Vec::new();
-    let mut i = 0usize;
-    net.visit_params(&mut |p, _| {
-        if p.rank() == 2 {
-            idx.push(i);
-        }
-        i += 1;
-    });
-    idx
-}
-
-/// Run `f` with the i-th parameter (visit order) temporarily replaced by a
-/// transformed copy.
-pub fn with_param_replaced<R>(
-    net: &mut Sequential,
-    param_idx: usize,
-    transform: impl Fn(&mut Tensor),
-    f: impl FnOnce(&mut Sequential) -> R,
-) -> R {
-    let mut snapshot: Option<Tensor> = None;
-    let mut i = 0usize;
-    net.visit_params(&mut |p, _| {
-        if i == param_idx {
-            snapshot = Some(p.clone());
-            transform(p);
-        }
-        i += 1;
-    });
-    let out = f(net);
-    let mut i = 0usize;
-    net.visit_params(&mut |p, _| {
-        if i == param_idx {
-            *p = snapshot.take().unwrap();
-        }
-        i += 1;
-    });
-    out
-}
-
-/// Read the i-th parameter (visit order).
-pub fn param_copy(net: &mut Sequential, param_idx: usize) -> Tensor {
-    let mut out = None;
-    let mut i = 0usize;
-    net.visit_params(&mut |p, _| {
-        if i == param_idx {
-            out = Some(p.clone());
-        }
-        i += 1;
-    });
-    out.unwrap()
+/// The paper's adaptive mode with the init phase sized to a run length
+/// ("one-tenth of the first epoch").
+pub fn adaptive_mode(iters: u64) -> QuantMode {
+    let mut cfg = AptConfig::default();
+    cfg.init_phase_iters = iters / 10;
+    QuantMode::Adaptive(cfg)
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::apt::ledger::Event;
 
     #[test]
-    fn classifier_trains_and_reports() {
-        let opts = TrainOpts { iters: 30, model: "mlp".into(), ..Default::default() };
-        let run = train_classifier(&opts, None);
-        assert_eq!(run.losses.len(), 30);
-        assert!(run.eval_acc > 0.15, "acc={}", run.eval_acc); // better than chance
+    fn grad_mix_formats_percentages() {
+        let mut l = Ledger::new();
+        l.set_total_iters(100);
+        l.record_event(
+            "a",
+            TensorKind::Gradient,
+            Event { iter: 0, bits: 8, interval: 1, error: 0.0 },
+        );
+        l.record_event(
+            "a",
+            TensorKind::Gradient,
+            Event { iter: 50, bits: 16, interval: 1, error: 0.0 },
+        );
+        let s = grad_mix_string(&l);
+        assert!(s.contains("int8  50.0%"), "{s}");
+        assert!(s.contains("int16  50.0%"), "{s}");
     }
 
     #[test]
-    fn probe_fires() {
-        let opts = TrainOpts {
-            iters: 10,
-            model: "mlp".into(),
-            probe_every: 2,
-            ..Default::default()
-        };
-        let mut count = 0;
-        let mut probe = |_it: u64, _n: &Sequential| count += 1;
-        let _ = train_classifier(&opts, Some(&mut probe));
-        assert_eq!(count, 5);
-    }
-
-    #[test]
-    fn with_param_replaced_restores() {
-        let mut rng = Pcg32::seeded(0);
-        let mut net = models::mlp(QuantMode::Float32, &mut rng, 8, 4);
-        let before = param_copy(&mut net, 0);
-        with_param_replaced(&mut net, 0, |p| p.data.fill(0.0), |n| {
-            assert!(param_copy(n, 0).data.iter().all(|&v| v == 0.0));
-        });
-        assert_eq!(param_copy(&mut net, 0), before);
+    fn adaptive_mode_sizes_init_phase() {
+        match adaptive_mode(500) {
+            QuantMode::Adaptive(cfg) => assert_eq!(cfg.init_phase_iters, 50),
+            other => panic!("unexpected mode {other:?}"),
+        }
     }
 }

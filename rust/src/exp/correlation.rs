@@ -5,15 +5,18 @@
 //! each bit-width in {6, 8}, quantize only that tensor, run the forward
 //! pass on a held-out set, and record (metric value, accuracy). The paper's
 //! claim: M1 (mean-change) has the highest Pearson R².
+//!
+//! Parameter surgery goes through the stable `ParamId` addresses of
+//! `train::Session` (DESIGN.md §Session-API) instead of the old raw
+//! visit-order indices.
 
 use crate::apt::qem;
 use crate::data::SynthImages;
-use crate::exp::common::{param_copy, train_classifier, weight_tensors, with_param_replaced, TrainOpts};
 use crate::fixedpoint::quantize::{fake_quant_stats_inplace, max_abs};
 use crate::fixedpoint::Scheme;
 use crate::nn::loss::accuracy;
 use crate::nn::models;
-use crate::nn::TrainCtx;
+use crate::train::SessionBuilder;
 use crate::util::cli::Args;
 use crate::util::out::{results_dir, Csv};
 use crate::util::stats::pearson_r2;
@@ -21,50 +24,50 @@ use crate::util::stats::pearson_r2;
 pub fn run(model: &str, figure: &str, args: &Args) {
     let iters = args.u64_or("iters", 250);
     println!("== {figure}: metric↔accuracy correlation on {model}(-mini) ==");
-    let run = train_classifier(
-        &TrainOpts { iters, model: model.into(), lr: 0.01, ..Default::default() },
-        None,
-    );
-    let mut net = run.net;
-    println!("trained float32 baseline: eval acc {:.3}", run.eval_acc);
+    let mut session = SessionBuilder::classifier(model).lr(0.01).build();
+    session.run(iters).expect("host training cannot fail");
+    let eval_acc = session.eval().expect("host eval cannot fail").accuracy;
+    println!("trained float32 baseline: eval acc {eval_acc:.3}");
 
-    let mut data = SynthImages::new(
-        1000 + 1, // must match TrainOpts.seed + 1000 for template identity
+    // Probe set: template-identical to the training data (session seed 0 +
+    // 1000) but drawn from the held-out stream 999 — the same set
+    // `session.eval()` scores, so the sweep's unperturbed point equals the
+    // baseline accuracy above. (The pre-Session driver built a seed-1001
+    // dataset here, silently probing against different class templates.)
+    let data = SynthImages::new(
+        1000,
         models::CLASSES,
         models::IN_C,
         models::IN_H,
         models::IN_W,
         0.5,
     );
-    let (ex, ey) = data.batch(256);
-    let mut ctx = TrainCtx::new();
-    ctx.training = false;
+    let (ex, ey) = data.eval_set(999, 256);
 
-    let widx = weight_tensors(&mut net);
+    let weights = session.weight_params();
     let mut series: Vec<[f64; 4]> = Vec::new();
     let mut accs: Vec<f64> = Vec::new();
     let mut csv = Csv::new(
         results_dir().join(format!("{}_points.csv", figure.to_lowercase())),
         &["param", "bits", "m1", "m2", "m3", "m4", "acc"],
     );
-    for &pi in &widx {
-        let w = param_copy(&mut net, pi);
+    for info in &weights {
+        let w = session.param_copy(&info.id);
         for bits in [6u8, 8] {
             let sch = Scheme::for_range(max_abs(&w.data), bits);
             let ms = qem::all_metrics(&w.data, sch);
-            let acc = with_param_replaced(
-                &mut net,
-                pi,
+            let acc = session.with_param_replaced(
+                &info.id,
                 |p| {
                     fake_quant_stats_inplace(&mut p.data, sch);
                 },
-                |n| {
-                    let logits = n.forward(&ex, &mut ctx);
+                |s| {
+                    let logits = s.eval_logits(&ex);
                     accuracy(&logits, &ey)
                 },
             );
             csv.row(&[
-                pi.to_string(),
+                info.id.to_string(),
                 bits.to_string(),
                 format!("{:.6}", ms[0]),
                 format!("{:.6}", ms[1]),

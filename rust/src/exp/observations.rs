@@ -1,10 +1,13 @@
 //! Fig 1, Fig 2, Fig 11 — the paper's observations on gradient
-//! distributions and per-layer bit-width sensitivity.
+//! distributions and per-layer bit-width sensitivity. Probing rides the
+//! typed `Phase::AfterBackward` hooks of `train::Session`
+//! (DESIGN.md §Session-API).
 
-use crate::exp::common::{tail_loss, train_classifier, TrainOpts};
+use crate::exp::common::adaptive_mode;
 use crate::fixedpoint::quantize::max_abs;
 use crate::fixedpoint::Scheme;
 use crate::nn::QuantMode;
+use crate::train::{Phase, SessionBuilder, TrainRecord};
 use crate::util::cli::Args;
 use crate::util::out::{results_dir, Csv, Json};
 use crate::util::Log2Histogram;
@@ -23,6 +26,17 @@ fn grad_histogram(data: &[f32], bits: Option<u8>) -> Log2Histogram {
     h
 }
 
+/// One ablation run: f32 or adaptive with per-layer gradient overrides.
+fn ablation_run(iters: u64, model: &str, overrides: Vec<(String, u8)>) -> TrainRecord {
+    let mode = if overrides.is_empty() { QuantMode::Float32 } else { adaptive_mode(iters) };
+    SessionBuilder::classifier(model)
+        .lr(0.01)
+        .noise(2.0)
+        .mode(mode)
+        .grad_overrides(overrides)
+        .train(iters)
+}
+
 /// Fig 1: last-fc activation-gradient distribution under f32/int8/12/16 and
 /// the training-loss consequence of quantizing just that layer.
 pub fn fig1(args: &Args) {
@@ -31,15 +45,17 @@ pub fn fig1(args: &Args) {
     // Capture the gradient tensor of the last fc during an f32 run.
     let mut captured: Option<Vec<f32>> = None;
     let capture_at = iters / 2;
-    let mut probe = |it: u64, net: &crate::nn::Sequential| {
-        if it == capture_at {
-            if let Some(g) = net.last_grad_of("fc1") {
-                captured = Some(g.data.clone());
+    {
+        let mut s = SessionBuilder::classifier("alexnet").lr(0.01).noise(2.0).build();
+        s.on(Phase::AfterBackward, 1, |info| {
+            if info.iter == capture_at {
+                if let Some(g) = info.net.and_then(|n| n.last_grad_of("fc1")) {
+                    captured = Some(g.data.clone());
+                }
             }
-        }
-    };
-    let opts = TrainOpts { iters, probe_every: 1, lr: 0.01, noise: 2.0, ..Default::default() };
-    let _ = train_classifier(&opts, Some(&mut probe));
+        });
+        s.run(iters).expect("host training cannot fail");
+    }
     let grad = captured.expect("no fc1 gradient captured");
 
     let mut csv = Csv::new(results_dir().join("fig1_hist.csv"), &["variant", "exp", "freq"]);
@@ -59,20 +75,9 @@ pub fn fig1(args: &Args) {
     println!("{:<10} {:>10} {:>12}", "variant", "tail loss", "vs float32");
     let mut f32_tail = 0.0;
     for (label, bits) in [("float32", None), ("int8", Some(8u8)), ("int12", Some(12)), ("int16", Some(16))] {
-        let mut cfg = crate::apt::AptConfig::default();
-        cfg.init_phase_iters = iters / 10;
-        let opts = TrainOpts {
-            iters,
-            lr: 0.01,
-            noise: 2.0,
-            mode: QuantMode::Adaptive(cfg),
-            grad_overrides: bits.map(|b| vec![("fc1".to_string(), b)]).unwrap_or_default(),
-            // float32 variant: run truly unquantized
-            ..Default::default()
-        };
-        let opts = if bits.is_none() { TrainOpts { mode: QuantMode::Float32, ..opts } } else { opts };
-        let run = train_classifier(&opts, None);
-        let tail = tail_loss(&run.losses, 20);
+        let overrides = bits.map(|b| vec![("fc1".to_string(), b)]).unwrap_or_default();
+        let run = ablation_run(iters, "alexnet", overrides);
+        let tail = run.tail_loss(20);
         if bits.is_none() {
             f32_tail = tail;
         }
@@ -94,22 +99,25 @@ pub fn fig2(args: &Args) {
     let mut maxes: Vec<(u64, Vec<f32>)> = Vec::new();
     let mut final_hists: Vec<(String, Log2Histogram)> = Vec::new();
     let capture_at = iters - 1;
-    let mut probe = |it: u64, net: &crate::nn::Sequential| {
-        let row: Vec<f32> = layers
-            .iter()
-            .map(|l| net.last_grad_of(l).map(|g| g.max_abs()).unwrap_or(0.0))
-            .collect();
-        maxes.push((it, row));
-        if it == capture_at {
-            for l in layers {
-                if let Some(g) = net.last_grad_of(l) {
-                    final_hists.push((l.to_string(), grad_histogram(&g.data, None)));
+    {
+        let mut s = SessionBuilder::classifier("alexnet").lr(0.01).noise(2.0).build();
+        s.on(Phase::AfterBackward, 1, |info| {
+            let net = info.net.expect("host path exposes the net");
+            let row: Vec<f32> = layers
+                .iter()
+                .map(|l| net.last_grad_of(l).map(|g| g.max_abs()).unwrap_or(0.0))
+                .collect();
+            maxes.push((info.iter, row));
+            if info.iter == capture_at {
+                for l in layers {
+                    if let Some(g) = net.last_grad_of(l) {
+                        final_hists.push((l.to_string(), grad_histogram(&g.data, None)));
+                    }
                 }
             }
-        }
-    };
-    let opts = TrainOpts { iters, probe_every: 1, lr: 0.01, noise: 2.0, ..Default::default() };
-    let _ = train_classifier(&opts, Some(&mut probe));
+        });
+        s.run(iters).expect("host training cannot fail");
+    }
 
     println!("\n-- (b) log2 max |dX| during training (first→last sampled rows)");
     println!("{:<8} {}", "iter", layers.map(|l| format!("{l:>8}")).join(""));
@@ -148,14 +156,8 @@ pub fn fig2(args: &Args) {
         ("fc1-int16".into(), vec![("fc1".into(), 16)]),
     ];
     for (label, ovs) in variants {
-        let mut cfg = crate::apt::AptConfig::default();
-        cfg.init_phase_iters = iters / 10;
-        let mode = if ovs.is_empty() { QuantMode::Float32 } else { QuantMode::Adaptive(cfg) };
-        let run = train_classifier(
-            &TrainOpts { iters, lr: 0.01, noise: 2.0, mode, grad_overrides: ovs, ..Default::default() },
-            None,
-        );
-        let tail = tail_loss(&run.losses, 20);
+        let run = ablation_run(iters, "alexnet", ovs);
+        let tail = run.tail_loss(20);
         println!("{:<16} {:>10.4} {:>10.3}", label, tail, run.eval_acc);
         csv.row(&[label, format!("{tail:.4}"), format!("{:.4}", run.eval_acc)]);
     }
@@ -179,14 +181,8 @@ pub fn fig11(args: &Args) {
         ("fc-int16".into(), vec![("fc".into(), 16)]),
     ];
     for (label, ovs) in variants {
-        let mut cfg = crate::apt::AptConfig::default();
-        cfg.init_phase_iters = iters / 10;
-        let mode = if ovs.is_empty() { QuantMode::Float32 } else { QuantMode::Adaptive(cfg) };
-        let run = train_classifier(
-            &TrainOpts { iters, model: "resnet".into(), lr: 0.01, noise: 2.0, mode, grad_overrides: ovs, ..Default::default() },
-            None,
-        );
-        let tail = tail_loss(&run.losses, 20);
+        let run = ablation_run(iters, "resnet", ovs);
+        let tail = run.tail_loss(20);
         println!("{:<16} {:>10.4} {:>10.3}", label, tail, run.eval_acc);
         csv.row(&[label, format!("{tail:.4}"), format!("{:.4}", run.eval_acc)]);
     }

@@ -1,9 +1,9 @@
 //! Fig 7 / Table 5 (analytic op counts) and Fig 8 (QPA dynamics).
 
-use crate::exp::common::{train_classifier, TrainOpts};
 use crate::fixedpoint::TensorKind;
 use crate::nn::QuantMode;
 use crate::opcount;
+use crate::train::SessionBuilder;
 use crate::util::cli::Args;
 use crate::util::out::{results_dir, Csv};
 
@@ -96,15 +96,9 @@ pub fn fig8(args: &Args) {
     ] {
         let mut cfg = cfg;
         cfg.init_phase_iters = iters / 10;
-        let run = train_classifier(
-            &TrainOpts {
-                iters,
-                model: "vgg".into(),
-                mode: QuantMode::Adaptive(cfg),
-                ..Default::default()
-            },
-            None,
-        );
+        let run = SessionBuilder::classifier("vgg")
+            .mode(QuantMode::Adaptive(cfg))
+            .train(iters);
         let freq = run.ledger.adjustment_frequency(TensorKind::Gradient, buckets);
         let share = run.ledger.bits_share_over_time(TensorKind::Gradient, 8, buckets);
         println!("\n-- {label}: acc {:.3}", run.eval_acc);

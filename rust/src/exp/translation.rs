@@ -3,21 +3,20 @@
 //! Three runs each: float32 baseline, unified int16, adaptive precision.
 //! Paper shape: int16 drifts ~2% below float32 on the RNN; adaptive matches
 //! float32 by escalating a few gradient tensors above int16.
+//!
+//! Both halves run through `train::Session` — the RNN on
+//! [`Seq2SeqBackend`], the Transformer on [`PjrtBackend`] — one API over
+//! the host and device paths (DESIGN.md §Session-API).
 
-use crate::coordinator::{tfm_slot_names, tokens_value, ArtifactTrainer};
-use crate::data::{lm_batch, translation_batch};
-use crate::nn::rnn::Seq2Seq;
-use crate::nn::{QuantMode, TrainCtx};
+use crate::coordinator::{tfm_slot_names, tokens_value};
+use crate::data::lm_batch;
+use crate::exp::common::adaptive_mode;
+use crate::nn::QuantMode;
 use crate::runtime::Runtime;
+use crate::train::{PjrtBackend, Seq2SeqBackend, Session};
 use crate::util::cli::Args;
 use crate::util::out::{results_dir, Csv, Json};
 use crate::util::Pcg32;
-
-fn adaptive(iters: u64) -> QuantMode {
-    let mut cfg = crate::apt::AptConfig::default();
-    cfg.init_phase_iters = iters / 10;
-    QuantMode::Adaptive(cfg)
-}
 
 /// Fig 9a: RNN seq2seq on the reversal-translation corpus.
 pub fn fig9a(args: &Args) {
@@ -31,24 +30,19 @@ pub fn fig9a(args: &Args) {
     for (label, mode) in [
         ("float32", QuantMode::Float32),
         ("int16", QuantMode::Static(16)),
-        ("adaptive", adaptive(iters)),
+        ("adaptive", adaptive_mode(iters)),
     ] {
-        let mut rng = Pcg32::seeded(0);
-        let mut m = Seq2Seq::new(vocab, 32, mode, &mut rng);
-        let mut ctx = TrainCtx::new();
-        let mut losses = Vec::new();
-        for it in 0..iters {
-            ctx.iter = it;
-            let (src, tgt) = translation_batch(&mut rng, 16, len, vocab);
-            let (l, _) = m.train_step(&src, &tgt, 0.05, &mut ctx);
-            losses.push(l);
-        }
-        let (src, tgt) = translation_batch(&mut rng, 128, len, vocab);
-        let (loss, acc) = m.eval(&src, &tgt, &mut ctx);
-        let bits: Vec<String> = m.grad_bits().iter().map(|(n, b)| format!("{n}:int{b}")).collect();
-        println!("{:<10} {:>10.3} {:>10.3}   {}", label, acc, loss, bits.join(" "));
-        curves.set(label, Json::arr_f32(&losses));
-        csv.row(&[label.into(), format!("{acc:.4}"), format!("{loss:.4}")]);
+        let mut s = Session::with_backend(Seq2SeqBackend::new(
+            label, vocab, 32, mode, 0, 16, len, 0.05, 128,
+        ));
+        s.run(iters).expect("rnn training cannot fail");
+        let run = s.record().expect("rnn eval cannot fail");
+        let bits: Vec<String> =
+            run.grad_bits.iter().map(|(n, b)| format!("{n}:int{b}")).collect();
+        let loss = run.eval_loss.unwrap_or(f32::NAN);
+        println!("{:<10} {:>10.3} {:>10.3}   {}", label, run.eval_acc, loss, bits.join(" "));
+        curves.set(label, Json::arr_f32(&run.losses));
+        csv.row(&[label.into(), format!("{:.4}", run.eval_acc), format!("{loss:.4}")]);
     }
     curves.write(results_dir().join("fig9a_curves.json")).unwrap();
     csv.write().unwrap();
@@ -87,34 +81,43 @@ pub fn fig9b(args: &Args) {
     for (label, mode) in [
         ("float32", QuantMode::Float32),
         ("int16", QuantMode::Static(16)),
-        ("adaptive", adaptive(steps)),
+        ("adaptive", adaptive_mode(steps)),
     ] {
-        let mut trainer = match ArtifactTrainer::new(&rt, "tfm_train_step", tfm_slot_names(n_layers), mode, 42) {
-            Ok(t) => t,
+        let mut rng = Pcg32::seeded(1);
+        let data = Box::new(move |_iter: u64| {
+            let (toks, tgts) = lm_batch(&mut rng, batch, seq, vocab);
+            vec![tokens_value(&toks), tokens_value(&tgts)]
+        });
+        let backend = match PjrtBackend::new(
+            &mut rt,
+            "tfm_train_step",
+            tfm_slot_names(n_layers),
+            mode,
+            42,
+            3e-3,
+            label,
+            data,
+        ) {
+            Ok(b) => b,
             Err(e) => {
                 println!("SKIPPED {label}: {e:#}");
                 continue;
             }
         };
-        let mut rng = Pcg32::seeded(1);
+        let mut s = Session::with_backend(backend);
         let mut first = 0.0f32;
         let mut last = 0.0f32;
-        let mut final_bits = vec![];
         for step in 0..steps {
-            let (toks, tgts) = lm_batch(&mut rng, batch, seq, vocab);
-            let res = trainer
-                .step(&mut rt, vec![tokens_value(&toks), tokens_value(&tgts)], 3e-3)
-                .expect("artifact step failed");
+            let loss = s.step().expect("artifact step failed");
             if step == 0 {
-                first = res.loss;
+                first = loss;
             }
-            last = res.loss;
-            final_bits = res.grad_bits;
-            csv.row(&[label.into(), step.to_string(), format!("{:.4}", res.loss)]);
+            last = loss;
+            csv.row(&[label.into(), step.to_string(), format!("{loss:.4}")]);
         }
         let mut mix = std::collections::BTreeMap::new();
-        for b in &final_bits {
-            *mix.entry(*b).or_insert(0usize) += 1;
+        for (_, b) in s.grad_bits() {
+            *mix.entry(b).or_insert(0usize) += 1;
         }
         let mix_s: Vec<String> = mix.iter().map(|(b, c)| format!("int{b}×{c}")).collect();
         println!("{:<10} {:>10.3} {:>10.3} {:>12}", label, first, last, mix_s.join(" "));

@@ -8,9 +8,10 @@
 //!
 //! Three-layer architecture (see DESIGN.md):
 //! - **L3** (this crate): coordinator — `apt` controller, `nn` training
-//!   substrate, experiment drivers, PJRT `runtime` for the AOT artifacts,
-//!   and the parallel `kernels` engine the numeric hot paths dispatch
-//!   through (DESIGN.md §Kernel-Engine).
+//!   substrate, the unified `train::Session` front-end over the host and
+//!   PJRT backends (DESIGN.md §Session-API), experiment drivers, PJRT
+//!   `runtime` for the AOT artifacts, and the parallel `kernels` engine the
+//!   numeric hot paths dispatch through (DESIGN.md §Kernel-Engine).
 //! - **L2** (`python/compile/model.py`): JAX train-step graphs, AOT-lowered
 //!   to HLO text at build time.
 //! - **L1** (`python/compile/kernels/`): Pallas quantization/stats/qmatmul
@@ -38,4 +39,5 @@ pub mod nn;
 pub mod opcount;
 pub mod runtime;
 pub mod tensor;
+pub mod train;
 pub mod util;

@@ -6,8 +6,9 @@
 //!   opcount [--batch N]            print the Fig7/Table5 analytic counts
 //!   list                           list experiments and models
 use apt::exp;
-use apt::exp::common::{grad_mix_string, train_classifier, TrainOpts};
+use apt::exp::common::grad_mix_string;
 use apt::nn::QuantMode;
+use apt::train::SessionBuilder;
 use apt::util::cli::Args;
 
 fn usage() -> ! {
@@ -68,17 +69,13 @@ fn main() {
                     usage();
                 }
             };
-            let opts = TrainOpts {
-                model,
-                iters,
-                mode,
-                lr: args.f32_or("lr", 0.01),
-                batch: args.usize_or("batch", 16),
-                seed: args.u64_or("seed", 0),
-                noise: args.f32_or("noise", 0.5),
-                ..Default::default()
-            };
-            let run = train_classifier(&opts, None);
+            let run = SessionBuilder::classifier(model)
+                .mode(mode)
+                .lr(args.f32_or("lr", 0.01))
+                .batch(args.usize_or("batch", 16))
+                .seed(args.u64_or("seed", 0))
+                .noise(args.f32_or("noise", 0.5))
+                .train(iters);
             println!("{}: eval acc {:.3}", run.label, run.eval_acc);
             println!("gradient bits: {}", grad_mix_string(&run.ledger));
             println!(

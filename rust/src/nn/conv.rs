@@ -205,6 +205,16 @@ impl Layer for Conv2d {
             false
         }
     }
+
+    fn quantizes_grads(&self) -> bool {
+        true
+    }
+
+    fn visit_controllers(&mut self, f: &mut dyn FnMut(&str, &mut LayerControllers)) {
+        if let Some(ctl) = self.ctl.as_mut() {
+            f(&self.name, ctl);
+        }
+    }
 }
 
 /// Depthwise 3×3 convolution (MobileNet's separable building block).
@@ -367,6 +377,16 @@ impl Layer for DepthwiseConv2d {
 
     fn last_grad(&self) -> Option<&Tensor> {
         self.last_g.as_ref()
+    }
+
+    fn quantizes_grads(&self) -> bool {
+        true
+    }
+
+    fn visit_controllers(&mut self, f: &mut dyn FnMut(&str, &mut LayerControllers)) {
+        if let Some(ctl) = self.ctl.as_mut() {
+            f(&self.name, ctl);
+        }
     }
 }
 

@@ -154,6 +154,16 @@ impl Layer for Linear {
             false
         }
     }
+
+    fn quantizes_grads(&self) -> bool {
+        true
+    }
+
+    fn visit_controllers(&mut self, f: &mut dyn FnMut(&str, &mut LayerControllers)) {
+        if let Some(ctl) = self.ctl.as_mut() {
+            f(&self.name, ctl);
+        }
+    }
 }
 
 #[cfg(test)]

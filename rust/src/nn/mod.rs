@@ -14,7 +14,7 @@ pub mod models;
 pub mod norm;
 pub mod rnn;
 
-use crate::apt::{AptConfig, Ledger};
+use crate::apt::{AptConfig, LayerControllers, Ledger};
 use crate::tensor::Tensor;
 
 /// Quantization mode of a training run.
@@ -88,6 +88,20 @@ pub trait Layer {
     fn set_grad_override(&mut self, _layer: &str, _bits: Option<u8>) -> bool {
         false
     }
+    /// Whether this layer quantizes its incoming activation gradient per
+    /// Algorithm 1 (linear/conv do; activations, pools and norms do not).
+    /// Structural — true regardless of the run's [`QuantMode`].
+    fn quantizes_grads(&self) -> bool {
+        false
+    }
+    /// Visit the per-tensor precision controllers (layer name, controllers)
+    /// of this layer and any sublayers, in forward order. Layers training in
+    /// Float32 have no controllers and visit nothing. Used by
+    /// `train::checkpoint` for save/restore.
+    fn visit_controllers(&mut self, _f: &mut dyn FnMut(&str, &mut LayerControllers)) {}
+    /// Visit non-parameter state that must survive a checkpoint (e.g.
+    /// batch-norm running statistics), in a deterministic order.
+    fn visit_state(&mut self, _f: &mut dyn FnMut(&mut [f32])) {}
 }
 
 /// A chain of layers.
@@ -122,6 +136,55 @@ impl Sequential {
         }
     }
 
+    /// Visit (layer name, param, grad) triples. Parameters of composite
+    /// blocks report the block's name; the (name, slot-within-name) pair is
+    /// the stable address behind `train::ParamId`.
+    pub fn visit_params_named(&mut self, f: &mut dyn FnMut(&str, &mut Tensor, &mut Tensor)) {
+        for l in self.layers.iter_mut() {
+            let name = l.name().to_string();
+            l.visit_params(&mut |p, g| f(&name, p, g));
+        }
+    }
+
+    /// [`visit_params_named`](Self::visit_params_named) plus the per-layer
+    /// slot index — the single definition of `train::ParamId` addressing
+    /// (param/checkpoint walks must all agree on it).
+    pub fn visit_params_slotted(
+        &mut self,
+        f: &mut dyn FnMut(&str, usize, &mut Tensor, &mut Tensor),
+    ) {
+        for l in self.layers.iter_mut() {
+            let name = l.name().to_string();
+            let mut slot = 0usize;
+            l.visit_params(&mut |p, g| {
+                f(&name, slot, p, g);
+                slot += 1;
+            });
+        }
+    }
+
+    /// Visit every layer's precision controllers, in forward order.
+    pub fn visit_controllers(&mut self, f: &mut dyn FnMut(&str, &mut LayerControllers)) {
+        for l in self.layers.iter_mut() {
+            l.visit_controllers(f);
+        }
+    }
+
+    /// Visit every layer's non-parameter checkpoint state, in forward order.
+    pub fn visit_state(&mut self, f: &mut dyn FnMut(&mut [f32])) {
+        for l in self.layers.iter_mut() {
+            l.visit_state(f);
+        }
+    }
+
+    /// Reset all accumulated parameter gradients to zero. An explicit step:
+    /// optimizers only *read* gradients, so probes between `backward` and
+    /// the next `zero_grads` observe the step's true gradients
+    /// (DESIGN.md §Session-API).
+    pub fn zero_grads(&mut self) {
+        self.visit_params(&mut |_, g| g.data.fill(0.0));
+    }
+
     pub fn param_count(&mut self) -> usize {
         let mut n = 0;
         self.visit_params(&mut |p, _| n += p.len());
@@ -138,47 +201,15 @@ impl Sequential {
         self.layers.iter().find(|l| l.name() == layer).and_then(|l| l.last_grad())
     }
 
-    /// Names of gradient-quantizing layers (linear/conv), in forward order.
+    /// Names of gradient-quantizing layers, in forward order — layers whose
+    /// [`Layer::quantizes_grads`] is true (linear/conv families and the
+    /// composite blocks that contain them).
     pub fn quantized_layer_names(&self) -> Vec<String> {
         self.layers
             .iter()
-            .filter(|l| l.last_grad().is_some() || l.name().starts_with("fc") || l.name().contains("conv") || l.name().starts_with("pw") || l.name().starts_with("dw"))
+            .filter(|l| l.quantizes_grads())
             .map(|l| l.name().to_string())
             .collect()
-    }
-}
-
-/// SGD with momentum. Velocity buffers are kept keyed by parameter identity
-/// (visit order), which is stable for a fixed architecture.
-pub struct Sgd {
-    pub lr: f32,
-    pub momentum: f32,
-    velocity: Vec<Vec<f32>>,
-}
-
-impl Sgd {
-    pub fn new(lr: f32, momentum: f32) -> Self {
-        Sgd { lr, momentum, velocity: Vec::new() }
-    }
-
-    pub fn step(&mut self, net: &mut Sequential) {
-        let mut idx = 0usize;
-        let lr = self.lr;
-        let mu = self.momentum;
-        let vel = &mut self.velocity;
-        net.visit_params(&mut |p, g| {
-            if vel.len() <= idx {
-                vel.push(vec![0.0; p.len()]);
-            }
-            let v = &mut vel[idx];
-            assert_eq!(v.len(), p.len(), "parameter set changed shape");
-            for ((pv, gv), vv) in p.data.iter_mut().zip(g.data.iter_mut()).zip(v.iter_mut()) {
-                *vv = mu * *vv + *gv;
-                *pv -= lr * *vv;
-                *gv = 0.0; // zero grads for the next step
-            }
-            idx += 1;
-        });
     }
 }
 
@@ -187,6 +218,7 @@ mod tests {
     use super::*;
     use crate::nn::linear::Linear;
     use crate::nn::loss::softmax_xent;
+    use crate::train::{Optimizer, Sgd};
     use crate::util::Pcg32;
 
     /// A 2-layer MLP must fit a linearly-separable toy problem in f32.
@@ -217,12 +249,29 @@ mod tests {
             let (l, g) = softmax_xent(&logits, &y);
             net.backward(&g, &mut ctx);
             opt.step(&mut net);
+            net.zero_grads();
             if first.is_none() {
                 first = Some(l);
             }
             last = l;
         }
         assert!(last < first.unwrap() * 0.5, "first={:?} last={last}", first);
+    }
+
+    #[test]
+    fn quantized_layer_names_are_explicit() {
+        let mut rng = Pcg32::seeded(0);
+        let net = crate::nn::models::alexnet_mini(QuantMode::Float32, &mut rng);
+        // structural, mode-independent: convs + fcs, never relus/pools
+        assert_eq!(
+            net.quantized_layer_names(),
+            vec!["conv0", "conv1", "conv2", "fc0", "fc1"]
+        );
+        let net = crate::nn::models::mobilenet_mini(QuantMode::Float32, &mut rng);
+        let names = net.quantized_layer_names();
+        assert!(names.iter().any(|n| n == "dw1"), "depthwise missing: {names:?}");
+        assert!(names.iter().any(|n| n == "pw2"), "pointwise missing: {names:?}");
+        assert!(names.iter().all(|n| !n.starts_with("bn") && !n.starts_with('r')));
     }
 
     #[test]

@@ -81,6 +81,22 @@ impl Layer for ResidualBlock {
     fn set_grad_override(&mut self, layer: &str, bits: Option<u8>) -> bool {
         self.path.iter_mut().any(|l| l.set_grad_override(layer, bits))
     }
+
+    fn quantizes_grads(&self) -> bool {
+        self.path.iter().any(|l| l.quantizes_grads())
+    }
+
+    fn visit_controllers(&mut self, f: &mut dyn FnMut(&str, &mut crate::apt::LayerControllers)) {
+        for l in self.path.iter_mut() {
+            l.visit_controllers(f);
+        }
+    }
+
+    fn visit_state(&mut self, f: &mut dyn FnMut(&mut [f32])) {
+        for l in self.path.iter_mut() {
+            l.visit_state(f);
+        }
+    }
 }
 
 /// Two-branch inception block: [1×1 conv ∥ 3×3 conv], channel-concatenated.
@@ -177,6 +193,20 @@ impl Layer for InceptionBlock {
 
     fn set_grad_override(&mut self, layer: &str, bits: Option<u8>) -> bool {
         self.b1.set_grad_override(layer, bits) || self.b3.set_grad_override(layer, bits)
+    }
+
+    fn quantizes_grads(&self) -> bool {
+        true // both branches are convs
+    }
+
+    fn visit_controllers(&mut self, f: &mut dyn FnMut(&str, &mut crate::apt::LayerControllers)) {
+        self.b1.visit_controllers(f);
+        self.b3.visit_controllers(f);
+    }
+
+    fn visit_state(&mut self, f: &mut dyn FnMut(&mut [f32])) {
+        self.b1.visit_state(f);
+        self.b3.visit_state(f);
     }
 }
 

@@ -152,8 +152,9 @@ pub const ZOO: [&str; 5] = ["alexnet", "vgg", "inception", "resnet", "mobilenet"
 mod tests {
     use super::*;
     use crate::nn::loss::softmax_xent;
-    use crate::nn::{Sgd, TrainCtx};
+    use crate::nn::TrainCtx;
     use crate::tensor::Tensor;
+    use crate::train::{Optimizer, Sgd};
 
     fn smoke(name: &str, mode: QuantMode) {
         let mut rng = Pcg32::seeded(0);
@@ -169,6 +170,7 @@ mod tests {
         assert_eq!(dx.len(), 2 * input_len(), "{name}");
         let mut opt = Sgd::new(0.01, 0.9);
         opt.step(&mut net);
+        net.zero_grads();
     }
 
     #[test]
@@ -203,6 +205,7 @@ mod tests {
             let (l, g) = softmax_xent(&logits, &y);
             net.backward(&g, &mut ctx);
             opt.step(&mut net);
+            net.zero_grads();
             if it == 0 {
                 first = l;
             }

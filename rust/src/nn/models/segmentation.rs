@@ -5,7 +5,8 @@ use crate::fixedpoint::conv::Conv2dGeom;
 use crate::nn::activ::ReLU;
 use crate::nn::conv::Conv2d;
 use crate::nn::loss::{mean_iou, pixel_xent};
-use crate::nn::{QuantMode, Sequential, Sgd, TrainCtx};
+use crate::nn::{QuantMode, Sequential, TrainCtx};
+use crate::train::{Optimizer, Sgd};
 use crate::tensor::Tensor;
 use crate::util::Pcg32;
 
@@ -42,6 +43,7 @@ impl SegNet {
         let (l, g) = pixel_xent(&logits, labels, self.classes);
         self.net.backward(&g, ctx);
         self.opt.step(&mut self.net);
+        self.net.zero_grads();
         l
     }
 

@@ -136,6 +136,11 @@ impl Layer for BatchNorm2d {
     fn name(&self) -> &str {
         &self.name
     }
+
+    fn visit_state(&mut self, f: &mut dyn FnMut(&mut [f32])) {
+        f(&mut self.running_mean);
+        f(&mut self.running_var);
+    }
 }
 
 #[cfg(test)]

@@ -90,13 +90,26 @@ impl Seq2Seq {
         }
     }
 
+    /// Mirror of [`crate::nn::Layer::quantizes_grads`] for the non-`Layer`
+    /// recurrent stack: every projection GEMM quantizes its incoming
+    /// gradient per Algorithm 1 (structural, mode-independent).
+    pub fn quantizes_grads(&self) -> bool {
+        true
+    }
+
+    /// Names of the gradient-quantizing projections, in forward order — the
+    /// rnn analogue of `Sequential::quantized_layer_names`.
+    pub fn quantized_proj_names() -> [&'static str; 5] {
+        PROJ_NAMES
+    }
+
     /// Gradient bit-widths currently applied per projection (for reporting).
     pub fn grad_bits(&self) -> Vec<(String, u8)> {
         match &self.ctl {
             None => vec![],
             Some(cs) => cs
                 .iter()
-                .zip(PROJ_NAMES)
+                .zip(Self::quantized_proj_names())
                 .map(|(c, n)| (n.to_string(), c.g.bits()))
                 .collect(),
         }
@@ -414,6 +427,15 @@ mod tests {
             last = l;
         }
         assert!(last < first * 0.6, "first={first} last={last}");
+    }
+
+    #[test]
+    fn projection_quantization_surface() {
+        let mut rng = Pcg32::seeded(4);
+        let m = Seq2Seq::new(8, 6, QuantMode::Float32, &mut rng);
+        // structural, mode-independent — mirrors Layer::quantizes_grads
+        assert!(m.quantizes_grads());
+        assert_eq!(Seq2Seq::quantized_proj_names(), PROJ_NAMES);
     }
 
     #[test]

@@ -1,0 +1,306 @@
+//! The execution seam under [`super::Session`] (DESIGN.md §Session-API).
+//!
+//! A [`Backend`] owns everything one training path needs — model/artifact,
+//! data stream, optimizer, `TrainCtx`/ledger — and exposes the uniform
+//! step/eval/ledger surface the `Session` drives. Three implementations:
+//!
+//! - [`HostBackend`] — the pure-Rust classifier path (`Sequential` +
+//!   [`DataSource`] + [`Optimizer`]), the successor of the hand-rolled
+//!   `exp::common::train_classifier` loop;
+//! - [`Seq2SeqBackend`] — the Elman encoder–decoder translation path
+//!   (Fig 9a / Table 2);
+//! - [`PjrtBackend`] — the `coordinator::ArtifactTrainer` device path
+//!   (Fig 9b, `train_transformer`), previously a parallel universe with its
+//!   own stepping convention.
+
+use anyhow::{bail, Result};
+
+use super::optim::Optimizer;
+use super::{EvalOut, Phase, StepInfo};
+use crate::apt::Ledger;
+use crate::coordinator::ArtifactTrainer;
+use crate::data::{translation_batch, SynthImages};
+use crate::nn::loss::{accuracy, softmax_xent};
+use crate::nn::rnn::Seq2Seq;
+use crate::nn::{QuantMode, Sequential, TrainCtx};
+use crate::runtime::{HostValue, Runtime};
+use crate::tensor::Tensor;
+use crate::util::Pcg32;
+
+/// A labeled-batch stream for the host classifier path. Implementations
+/// must be deterministic by construction seed, and expose their sample
+/// stream state so checkpoints can resume it bit-identically.
+pub trait DataSource {
+    /// Next training batch: (inputs `[n, d]`, labels).
+    fn batch(&mut self, n: usize) -> (Tensor, Vec<usize>);
+    /// A fixed held-out set drawn from a separate stream.
+    fn eval_set(&self, seed: u64, n: usize) -> (Tensor, Vec<usize>);
+    /// Sample-stream RNG state (checkpointing).
+    fn rng_state(&self) -> (u64, u64);
+    fn set_rng_state(&mut self, st: (u64, u64));
+}
+
+impl DataSource for SynthImages {
+    fn batch(&mut self, n: usize) -> (Tensor, Vec<usize>) {
+        SynthImages::batch(self, n)
+    }
+
+    fn eval_set(&self, seed: u64, n: usize) -> (Tensor, Vec<usize>) {
+        SynthImages::eval_set(self, seed, n)
+    }
+
+    fn rng_state(&self) -> (u64, u64) {
+        SynthImages::rng_state(self)
+    }
+
+    fn set_rng_state(&mut self, st: (u64, u64)) {
+        SynthImages::set_rng_state(self, st)
+    }
+}
+
+/// One training path behind the [`super::Session`] surface.
+pub trait Backend {
+    /// Display label for records/logs (e.g. `"alexnet-adaptive"`).
+    fn label(&self) -> &str;
+    /// One optimization step at iteration `iter`. `observe` fires the
+    /// session's typed hooks: [`Phase::AfterBackward`] between backward and
+    /// the parameter update (host paths only), [`Phase::AfterStep`] after
+    /// it. Returns the step's training loss.
+    fn step(&mut self, iter: u64, observe: &mut dyn FnMut(Phase, &StepInfo)) -> Result<f32>;
+    /// Held-out evaluation after `iters_done` iterations.
+    fn eval(&mut self, iters_done: u64) -> Result<EvalOut>;
+    /// Take the run ledger (stamping `iters_done` as its span).
+    fn take_ledger(&mut self, iters_done: u64) -> Ledger;
+    /// Currently applied gradient bit-widths per quantized tensor, where
+    /// the backend tracks them directly (rnn projections, PJRT slots).
+    fn grad_bits(&self) -> Vec<(String, u8)> {
+        Vec::new()
+    }
+}
+
+/// Host classifier backend: quantized forward/backward on a [`Sequential`]
+/// with QEM/QPA inside the layers, an explicit [`Optimizer`], and deferred
+/// gradient zeroing (§Session-API ordering: gradients of step *i* stay
+/// observable until step *i+1* begins).
+pub struct HostBackend {
+    pub net: Sequential,
+    pub(super) data: Box<dyn DataSource>,
+    pub(super) ctx: TrainCtx,
+    pub(super) opt: Box<dyn Optimizer>,
+    pub(super) batch: usize,
+    pub(super) eval_seed: u64,
+    pub(super) eval_n: usize,
+    pub(super) needs_zero: bool,
+    label: String,
+}
+
+impl HostBackend {
+    pub fn new(
+        net: Sequential,
+        data: Box<dyn DataSource>,
+        opt: Box<dyn Optimizer>,
+        batch: usize,
+        eval_seed: u64,
+        eval_n: usize,
+        label: String,
+    ) -> Self {
+        HostBackend {
+            net,
+            data,
+            ctx: TrainCtx::new(),
+            opt,
+            batch,
+            eval_seed,
+            eval_n,
+            needs_zero: false,
+            label,
+        }
+    }
+
+    /// Forward a batch in inference mode (training caches off, quantized
+    /// forward — deployment-int8 semantics under quantized modes).
+    pub fn eval_logits(&mut self, x: &Tensor) -> Tensor {
+        let was = self.ctx.training;
+        self.ctx.training = false;
+        let logits = self.net.forward(x, &mut self.ctx);
+        self.ctx.training = was;
+        logits
+    }
+}
+
+impl Backend for HostBackend {
+    fn label(&self) -> &str {
+        &self.label
+    }
+
+    fn step(&mut self, iter: u64, observe: &mut dyn FnMut(Phase, &StepInfo)) -> Result<f32> {
+        // Deferred zeroing: clear the *previous* step's gradients only now,
+        // so AfterStep hooks and inter-step probes saw them un-cleared.
+        if self.needs_zero {
+            self.net.zero_grads();
+            self.needs_zero = false;
+        }
+        self.ctx.iter = iter;
+        let (x, y) = self.data.batch(self.batch);
+        let logits = self.net.forward(&x, &mut self.ctx);
+        let (loss, g) = softmax_xent(&logits, &y);
+        self.net.backward(&g, &mut self.ctx);
+        observe(Phase::AfterBackward, &StepInfo { iter, loss, net: Some(&self.net) });
+        self.opt.step(&mut self.net);
+        self.needs_zero = true;
+        observe(Phase::AfterStep, &StepInfo { iter, loss, net: Some(&self.net) });
+        Ok(loss)
+    }
+
+    fn eval(&mut self, iters_done: u64) -> Result<EvalOut> {
+        self.ctx.ledger.set_total_iters(iters_done);
+        let (ex, ey) = self.data.eval_set(self.eval_seed, self.eval_n);
+        let logits = self.eval_logits(&ex);
+        Ok(EvalOut { accuracy: accuracy(&logits, &ey), loss: None })
+    }
+
+    fn take_ledger(&mut self, iters_done: u64) -> Ledger {
+        self.ctx.ledger.set_total_iters(iters_done);
+        std::mem::take(&mut self.ctx.ledger)
+    }
+}
+
+/// RNN translation backend over [`Seq2Seq`] and the token-reversal corpus.
+/// One seeded RNG drives model init *and* the batch stream, matching the
+/// original Fig 9a driver exactly.
+pub struct Seq2SeqBackend {
+    pub model: Seq2Seq,
+    rng: Pcg32,
+    ctx: TrainCtx,
+    batch: usize,
+    len: usize,
+    vocab: usize,
+    lr: f32,
+    eval_batch: usize,
+    label: String,
+}
+
+impl Seq2SeqBackend {
+    pub fn new(
+        label: impl Into<String>,
+        vocab: usize,
+        dim: usize,
+        mode: QuantMode,
+        seed: u64,
+        batch: usize,
+        len: usize,
+        lr: f32,
+        eval_batch: usize,
+    ) -> Self {
+        let mut rng = Pcg32::seeded(seed);
+        let model = Seq2Seq::new(vocab, dim, mode, &mut rng);
+        Seq2SeqBackend {
+            model,
+            rng,
+            ctx: TrainCtx::new(),
+            batch,
+            len,
+            vocab,
+            lr,
+            eval_batch,
+            label: label.into(),
+        }
+    }
+}
+
+impl Backend for Seq2SeqBackend {
+    fn label(&self) -> &str {
+        &self.label
+    }
+
+    fn step(&mut self, iter: u64, observe: &mut dyn FnMut(Phase, &StepInfo)) -> Result<f32> {
+        self.ctx.iter = iter;
+        let (src, tgt) = translation_batch(&mut self.rng, self.batch, self.len, self.vocab);
+        let (loss, _) = self.model.train_step(&src, &tgt, self.lr, &mut self.ctx);
+        observe(Phase::AfterStep, &StepInfo { iter, loss, net: None });
+        Ok(loss)
+    }
+
+    fn eval(&mut self, iters_done: u64) -> Result<EvalOut> {
+        self.ctx.ledger.set_total_iters(iters_done);
+        // Fork the stream: the eval batch is the one the historical driver
+        // drew at this point, but eval() stays idempotent and does not
+        // perturb subsequent training batches.
+        let mut eval_rng = Pcg32::from_state(self.rng.state());
+        let (src, tgt) = translation_batch(&mut eval_rng, self.eval_batch, self.len, self.vocab);
+        let (loss, acc) = self.model.eval(&src, &tgt, &mut self.ctx);
+        Ok(EvalOut { accuracy: acc, loss: Some(loss) })
+    }
+
+    fn take_ledger(&mut self, iters_done: u64) -> Ledger {
+        self.ctx.ledger.set_total_iters(iters_done);
+        std::mem::take(&mut self.ctx.ledger)
+    }
+
+    fn grad_bits(&self) -> Vec<(String, u8)> {
+        self.model.grad_bits()
+    }
+}
+
+/// PJRT backend: drives a train-step artifact through
+/// [`coordinator::ArtifactTrainer`](crate::coordinator::ArtifactTrainer)
+/// while QEM/QPA run on the host. Borrows the `Runtime` so several
+/// sessions (float32 / int16 / adaptive sweeps) can share one compiled
+/// artifact. Data inputs come from a caller-supplied generator so the same
+/// backend serves LM tokens, MLP batches, or anything the manifest expects.
+pub struct PjrtBackend<'r> {
+    rt: &'r mut Runtime,
+    pub trainer: ArtifactTrainer,
+    data: Box<dyn FnMut(u64) -> Vec<HostValue> + 'r>,
+    lr: f32,
+    last_grad_bits: Vec<u8>,
+    label: String,
+}
+
+impl<'r> PjrtBackend<'r> {
+    pub fn new(
+        rt: &'r mut Runtime,
+        artifact: &str,
+        slot_names: Vec<String>,
+        mode: QuantMode,
+        seed: u64,
+        lr: f32,
+        label: impl Into<String>,
+        data: Box<dyn FnMut(u64) -> Vec<HostValue> + 'r>,
+    ) -> Result<Self> {
+        let trainer = ArtifactTrainer::new(rt, artifact, slot_names, mode, seed)?;
+        Ok(PjrtBackend { rt, trainer, data, lr, last_grad_bits: Vec::new(), label: label.into() })
+    }
+}
+
+impl Backend for PjrtBackend<'_> {
+    fn label(&self) -> &str {
+        &self.label
+    }
+
+    fn step(&mut self, iter: u64, observe: &mut dyn FnMut(Phase, &StepInfo)) -> Result<f32> {
+        let data = (self.data)(iter);
+        let res = self.trainer.step(self.rt, data, self.lr)?;
+        self.last_grad_bits = res.grad_bits;
+        observe(Phase::AfterStep, &StepInfo { iter, loss: res.loss, net: None });
+        Ok(res.loss)
+    }
+
+    fn eval(&mut self, _iters_done: u64) -> Result<EvalOut> {
+        bail!("the PJRT train-step artifacts carry no eval graph; read the loss curve instead")
+    }
+
+    fn take_ledger(&mut self, iters_done: u64) -> Ledger {
+        self.trainer.ledger.set_total_iters(iters_done);
+        std::mem::take(&mut self.trainer.ledger)
+    }
+
+    fn grad_bits(&self) -> Vec<(String, u8)> {
+        self.trainer
+            .slots
+            .iter()
+            .map(|s| s.name.clone())
+            .zip(self.last_grad_bits.iter().copied())
+            .collect()
+    }
+}

@@ -1,0 +1,492 @@
+//! Checkpoint save/restore for host-path sessions (DESIGN.md
+//! §Session-API).
+//!
+//! Captures everything a mid-run stop needs to continue **bit-identically**:
+//! iteration count + loss curve, every parameter tensor, optimizer state
+//! buffers, per-tensor `PrecisionController` decision state, the QEM/QPA
+//! ledger, batch-norm running statistics, and the data stream's RNG state.
+//! Accumulated gradients are deliberately *not* saved: the session zeroes
+//! the previous step's gradients at the start of the next step, so a
+//! restored run (fresh zero gradients, `needs_zero = false`) accumulates
+//! into exactly the state the uninterrupted run would have.
+//!
+//! Format: a whitespace-tokenized text file, all f32/f64 payloads written
+//! as raw bit patterns in hex — reads back to the identical float, no
+//! decimal round-tripping. Architecture/config are not stored; the caller
+//! rebuilds the session from the same `SessionBuilder` configuration and
+//! `load` verifies names, slots and shapes as it walks.
+
+use std::fmt::Write as _;
+use std::path::Path;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use super::optim::OptimizerState;
+use super::{HostBackend, Session};
+use crate::apt::{ControllerState, Ledger};
+use crate::apt::ledger::Event;
+use crate::fixedpoint::TensorKind;
+
+const MAGIC: &str = "aptckpt";
+const VERSION: &str = "v1";
+
+fn kind_label(k: TensorKind) -> &'static str {
+    k.label() // "W" | "X" | "dX"
+}
+
+fn parse_kind(s: &str) -> Result<TensorKind> {
+    Ok(match s {
+        "W" => TensorKind::Weight,
+        "X" => TensorKind::Activation,
+        "dX" => TensorKind::Gradient,
+        other => bail!("unknown tensor kind {other:?}"),
+    })
+}
+
+fn push_f32s(out: &mut String, data: &[f32]) {
+    for v in data {
+        let _ = write!(out, " {:08x}", v.to_bits());
+    }
+}
+
+/// Serialize the session. Takes `&mut` only because parameter visitation
+/// is `&mut`-based; nothing is modified.
+pub(super) fn save(session: &mut Session<HostBackend>, path: &Path) -> Result<()> {
+    let mut out = String::new();
+    let _ = writeln!(out, "{MAGIC} {VERSION}");
+    let _ = writeln!(out, "iter {}", session.iter);
+
+    out.push_str(&format!("losses {}", session.losses.len()));
+    push_f32s(&mut out, &session.losses);
+    out.push('\n');
+
+    let host = &mut session.backend;
+    let opt_state = host.opt.state();
+    let _ = writeln!(
+        out,
+        "opt {} {} {}",
+        host.opt.name(),
+        opt_state.step,
+        opt_state.buffers.len()
+    );
+    for buf in &opt_state.buffers {
+        out.push_str(&format!("buf {}", buf.len()));
+        push_f32s(&mut out, buf);
+        out.push('\n');
+    }
+
+    let mut params = String::new();
+    let mut n_params = 0usize;
+    host.net.visit_params_slotted(&mut |layer, slot, p, _| {
+        params.push_str(&format!("p {layer} {slot} {}", p.shape.len()));
+        for d in &p.shape {
+            let _ = write!(params, " {d}");
+        }
+        let _ = write!(params, " {}", p.data.len());
+        push_f32s(&mut params, &p.data);
+        params.push('\n');
+        n_params += 1;
+    });
+    let _ = writeln!(out, "params {n_params}");
+    out.push_str(&params);
+
+    let mut ctls = String::new();
+    let mut n_ctls = 0usize;
+    host.net.visit_controllers(&mut |layer, lc| {
+        for (kind, c) in [("w", &lc.w), ("x", &lc.x), ("g", &lc.g)] {
+            let st = c.snapshot();
+            let _ = writeln!(
+                ctls,
+                "c {layer} {kind} {} {} {:08x} {} {:08x} {} {}",
+                st.bits,
+                st.s,
+                st.ema_value.to_bits(),
+                st.ema_initialized as u8,
+                st.prev_range.to_bits(),
+                st.next_update,
+                st.updates
+            );
+        }
+        n_ctls += 1;
+    });
+    let _ = writeln!(out, "ctls {n_ctls}");
+    out.push_str(&ctls);
+
+    let mut state = String::new();
+    let mut n_state = 0usize;
+    host.net.visit_state(&mut |buf| {
+        state.push_str(&format!("s {}", buf.len()));
+        push_f32s(&mut state, buf);
+        state.push('\n');
+        n_state += 1;
+    });
+    let _ = writeln!(out, "state {n_state}");
+    out.push_str(&state);
+
+    let ledger = &host.ctx.ledger;
+    let _ = writeln!(out, "ledger {} {}", ledger.total_iters, ledger.tensors.len());
+    for ((layer, kind), hist) in &ledger.tensors {
+        let _ = writeln!(
+            out,
+            "t {layer} {} {} {}",
+            kind_label(*kind),
+            hist.events.len(),
+            hist.bits_trace.len()
+        );
+        for ev in &hist.events {
+            let _ = writeln!(
+                out,
+                "e {} {} {} {:016x}",
+                ev.iter,
+                ev.bits,
+                ev.interval,
+                ev.error.to_bits()
+            );
+        }
+        for (it, bits) in &hist.bits_trace {
+            let _ = writeln!(out, "b {it} {bits}");
+        }
+    }
+
+    let (st, inc) = host.data.rng_state();
+    let _ = writeln!(out, "datarng {st} {inc}");
+    let _ = writeln!(out, "end");
+
+    std::fs::write(path, out).with_context(|| format!("writing checkpoint {path:?}"))?;
+    Ok(())
+}
+
+/// Whitespace-token reader with typed accessors.
+struct Lexer<'a> {
+    toks: std::str::SplitAsciiWhitespace<'a>,
+}
+
+impl<'a> Lexer<'a> {
+    fn next(&mut self) -> Result<&'a str> {
+        self.toks.next().ok_or_else(|| anyhow!("truncated checkpoint"))
+    }
+
+    fn expect(&mut self, tag: &str) -> Result<()> {
+        let t = self.next()?;
+        if t != tag {
+            bail!("expected {tag:?}, found {t:?}");
+        }
+        Ok(())
+    }
+
+    fn u64(&mut self) -> Result<u64> {
+        Ok(self.next()?.parse::<u64>()?)
+    }
+
+    fn usize(&mut self) -> Result<usize> {
+        Ok(self.next()?.parse::<usize>()?)
+    }
+
+    fn i32(&mut self) -> Result<i32> {
+        Ok(self.next()?.parse::<i32>()?)
+    }
+
+    fn u8(&mut self) -> Result<u8> {
+        Ok(self.next()?.parse::<u8>()?)
+    }
+
+    fn f32_hex(&mut self) -> Result<f32> {
+        Ok(f32::from_bits(u32::from_str_radix(self.next()?, 16)?))
+    }
+
+    fn f64_hex(&mut self) -> Result<f64> {
+        Ok(f64::from_bits(u64::from_str_radix(self.next()?, 16)?))
+    }
+
+    fn f32_vec(&mut self, n: usize) -> Result<Vec<f32>> {
+        let mut v = Vec::with_capacity(n);
+        for _ in 0..n {
+            v.push(self.f32_hex()?);
+        }
+        Ok(v)
+    }
+}
+
+struct ParamRec {
+    layer: String,
+    slot: usize,
+    shape: Vec<usize>,
+    data: Vec<f32>,
+}
+
+struct CtlRec {
+    layer: String,
+    st: [ControllerState; 3], // w, x, g
+}
+
+/// Everything a checkpoint file contains, fully parsed before any of it is
+/// applied — `load` validates the whole file against the session and only
+/// then mutates, so a failed restore leaves the session untouched.
+struct Parsed {
+    iter: u64,
+    losses: Vec<f32>,
+    opt_name: String,
+    opt_state: OptimizerState,
+    params: Vec<ParamRec>,
+    ctls: Vec<CtlRec>,
+    state_bufs: Vec<Vec<f32>>,
+    ledger: Ledger,
+    data_rng: (u64, u64),
+}
+
+fn parse(text: &str) -> Result<Parsed> {
+    let mut lx = Lexer { toks: text.split_ascii_whitespace() };
+    lx.expect(MAGIC)?;
+    lx.expect(VERSION)?;
+
+    lx.expect("iter")?;
+    let iter = lx.u64()?;
+    lx.expect("losses")?;
+    let n_losses = lx.usize()?;
+    let losses = lx.f32_vec(n_losses)?;
+
+    lx.expect("opt")?;
+    let opt_name = lx.next()?.to_string();
+    let opt_step = lx.u64()?;
+    let n_buf = lx.usize()?;
+    let mut buffers = Vec::with_capacity(n_buf);
+    for _ in 0..n_buf {
+        lx.expect("buf")?;
+        let len = lx.usize()?;
+        buffers.push(lx.f32_vec(len)?);
+    }
+
+    lx.expect("params")?;
+    let n_params = lx.usize()?;
+    let mut params = Vec::with_capacity(n_params);
+    for _ in 0..n_params {
+        lx.expect("p")?;
+        let layer = lx.next()?.to_string();
+        let slot = lx.usize()?;
+        let ndim = lx.usize()?;
+        let mut shape = Vec::with_capacity(ndim);
+        for _ in 0..ndim {
+            shape.push(lx.usize()?);
+        }
+        let len = lx.usize()?;
+        params.push(ParamRec { layer, slot, shape, data: lx.f32_vec(len)? });
+    }
+
+    lx.expect("ctls")?;
+    let n_ctls = lx.usize()?;
+    let mut ctls: Vec<CtlRec> = Vec::with_capacity(n_ctls);
+    for _ in 0..n_ctls {
+        let mut states = [ControllerState {
+            bits: 0,
+            s: 0,
+            ema_value: 0.0,
+            ema_initialized: false,
+            prev_range: 0.0,
+            next_update: 0,
+            updates: 0,
+        }; 3];
+        let mut layer = String::new();
+        for (j, want) in ["w", "x", "g"].iter().enumerate() {
+            lx.expect("c")?;
+            let l = lx.next()?.to_string();
+            if j == 0 {
+                layer = l;
+            } else if l != layer {
+                bail!("controller record order broken: {l} vs {layer}");
+            }
+            lx.expect(want)?;
+            states[j] = ControllerState {
+                bits: lx.u8()?,
+                s: lx.i32()?,
+                ema_value: lx.f32_hex()?,
+                ema_initialized: lx.u8()? != 0,
+                prev_range: lx.f32_hex()?,
+                next_update: lx.u64()?,
+                updates: lx.u64()?,
+            };
+        }
+        ctls.push(CtlRec { layer, st: states });
+    }
+
+    lx.expect("state")?;
+    let n_state = lx.usize()?;
+    let mut state_bufs = Vec::with_capacity(n_state);
+    for _ in 0..n_state {
+        lx.expect("s")?;
+        let len = lx.usize()?;
+        state_bufs.push(lx.f32_vec(len)?);
+    }
+
+    lx.expect("ledger")?;
+    let total_iters = lx.u64()?;
+    let n_tensors = lx.usize()?;
+    let mut ledger = Ledger::new();
+    ledger.set_total_iters(total_iters);
+    for _ in 0..n_tensors {
+        lx.expect("t")?;
+        let layer = lx.next()?.to_string();
+        let kind = parse_kind(lx.next()?)?;
+        let n_events = lx.usize()?;
+        let n_trace = lx.usize()?;
+        for _ in 0..n_events {
+            lx.expect("e")?;
+            let ev = Event {
+                iter: lx.u64()?,
+                bits: lx.u8()?,
+                interval: lx.u64()?,
+                error: lx.f64_hex()?,
+            };
+            ledger.record_event(&layer, kind, ev);
+        }
+        for _ in 0..n_trace {
+            lx.expect("b")?;
+            let it = lx.u64()?;
+            let bits = lx.u8()?;
+            ledger.trace_bits(&layer, kind, it, bits);
+        }
+    }
+
+    lx.expect("datarng")?;
+    let data_rng = (lx.u64()?, lx.u64()?);
+    lx.expect("end")?;
+
+    Ok(Parsed {
+        iter,
+        losses,
+        opt_name,
+        opt_state: OptimizerState { step: opt_step, buffers },
+        params,
+        ctls,
+        state_bufs,
+        ledger,
+        data_rng,
+    })
+}
+
+/// Restore `path` into a session built with the checkpoint's configuration.
+/// Parse → validate → apply: nothing in the session is mutated until the
+/// whole file has been checked against the net's parameter/controller/state
+/// layout.
+pub(super) fn load(session: &mut Session<HostBackend>, path: &Path) -> Result<()> {
+    let text = std::fs::read_to_string(path)
+        .with_context(|| format!("reading checkpoint {path:?}"))?;
+    let ck = parse(&text)?;
+    let host = &mut session.backend;
+
+    // ---- validate (read-only) ----
+    if ck.opt_name != host.opt.name() {
+        bail!(
+            "checkpoint optimizer {:?} ≠ session optimizer {:?}",
+            ck.opt_name,
+            host.opt.name()
+        );
+    }
+    {
+        let mut i = 0usize;
+        let mut err: Option<String> = None;
+        host.net.visit_params_slotted(&mut |layer, slot, p, _| {
+            if err.is_none() {
+                match ck.params.get(i) {
+                    None => err = Some(format!("checkpoint has only {i} parameters")),
+                    Some(r) if r.layer != layer || r.slot != slot || r.shape != p.shape => {
+                        err = Some(format!(
+                            "parameter mismatch at {i}: checkpoint {}#{} {:?} vs net {layer}#{slot} {:?}",
+                            r.layer, r.slot, r.shape, p.shape
+                        ));
+                    }
+                    Some(_) => {}
+                }
+            }
+            i += 1;
+        });
+        if let Some(e) = err {
+            bail!("{e}");
+        }
+        if i != ck.params.len() {
+            bail!("net has {i} parameters, checkpoint has {}", ck.params.len());
+        }
+    }
+    {
+        let mut i = 0usize;
+        let mut err: Option<String> = None;
+        host.net.visit_controllers(&mut |layer, _| {
+            if err.is_none() {
+                match ck.ctls.get(i) {
+                    None => err = Some(format!("checkpoint has only {i} controller sets")),
+                    Some(r) if r.layer != layer => {
+                        err = Some(format!("controller mismatch: {} vs {layer}", r.layer))
+                    }
+                    Some(_) => {}
+                }
+            }
+            i += 1;
+        });
+        if let Some(e) = err {
+            bail!("{e}");
+        }
+        if i != ck.ctls.len() {
+            bail!("net has {i} controller sets, checkpoint has {}", ck.ctls.len());
+        }
+    }
+    {
+        let mut i = 0usize;
+        let mut err: Option<String> = None;
+        host.net.visit_state(&mut |buf| {
+            if err.is_none() {
+                match ck.state_bufs.get(i) {
+                    None => err = Some(format!("checkpoint has only {i} state buffers")),
+                    Some(b) if b.len() != buf.len() => {
+                        err = Some(format!("state buffer {i} length {} vs {}", b.len(), buf.len()))
+                    }
+                    Some(_) => {}
+                }
+            }
+            i += 1;
+        });
+        if let Some(e) = err {
+            bail!("{e}");
+        }
+        if i != ck.state_bufs.len() {
+            bail!("net has {i} state buffers, checkpoint has {}", ck.state_bufs.len());
+        }
+    }
+
+    // ---- apply (cannot fail past this point) ----
+    host.opt.load_state(ck.opt_state);
+    {
+        let mut i = 0usize;
+        host.net.visit_params_slotted(&mut |_, _, p, _| {
+            p.data.copy_from_slice(&ck.params[i].data);
+            i += 1;
+        });
+    }
+    {
+        let mut i = 0usize;
+        host.net.visit_controllers(&mut |_, lc| {
+            let r = &ck.ctls[i];
+            lc.w.restore(&r.st[0]);
+            lc.x.restore(&r.st[1]);
+            lc.g.restore(&r.st[2]);
+            i += 1;
+        });
+    }
+    {
+        let mut i = 0usize;
+        host.net.visit_state(&mut |buf| {
+            buf.copy_from_slice(&ck.state_bufs[i]);
+            i += 1;
+        });
+    }
+    host.ctx.ledger = ck.ledger;
+    host.data.set_rng_state(ck.data_rng);
+
+    // Accumulated gradients are not part of a checkpoint (see module doc):
+    // clear any the session accumulated before the restore (no-op on a
+    // fresh net) so the first continued backward starts from zeros.
+    host.net.zero_grads();
+    host.needs_zero = false;
+    host.ctx.training = true;
+    session.iter = ck.iter;
+    session.losses = ck.losses;
+    Ok(())
+}

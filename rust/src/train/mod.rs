@@ -1,0 +1,591 @@
+//! The unified training front-end (DESIGN.md §Session-API).
+//!
+//! One builder-driven API over every training path in the repository: a
+//! [`SessionBuilder`] configures model, [`QuantMode`], optimizer, data and
+//! seed, and produces a [`Session`] with `step()` / `run(n)` / `eval()`,
+//! typed [`Phase`] hooks, stable [`ParamId`]-addressed parameter access,
+//! checkpoint save/restore, and a [`TrainRecord`] as the uniform result.
+//! The host `Sequential` path, the RNN translation path and the PJRT
+//! `ArtifactTrainer` path all sit behind the same surface via the
+//! [`Backend`] seam — per-tensor precision control (QEM/QPA) stays
+//! consistent across them because each backend threads the same
+//! controllers/ledger machinery.
+//!
+//! Ordering contract (the `zero_grads` fix): a step is
+//! `zero_grads(previous) → forward → loss → backward → [AfterBackward
+//! hooks] → optimizer.step → [AfterStep hooks]`. Gradient clearing is
+//! deferred to the *start* of the next step, so probes after `step()`
+//! observe the step's true gradients; optimizers never clear them.
+//!
+//! ```no_run
+//! use apt::train::SessionBuilder;
+//!
+//! let record = SessionBuilder::classifier("alexnet").lr(0.01).train(300);
+//! println!("{}: eval acc {:.3}", record.label, record.eval_acc);
+//! ```
+
+mod backend;
+mod checkpoint;
+mod optim;
+
+pub use backend::{Backend, DataSource, HostBackend, PjrtBackend, Seq2SeqBackend};
+pub use optim::{Adam, Optimizer, OptimizerState, Sgd};
+
+use std::fmt;
+
+use anyhow::Result;
+
+use crate::apt::Ledger;
+use crate::data::SynthImages;
+use crate::nn::{models, QuantMode, Sequential};
+use crate::tensor::Tensor;
+use crate::util::Pcg32;
+
+/// Where a typed hook fires inside one step.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Phase {
+    /// Between `backward` and the optimizer update — parameter gradients
+    /// are fully accumulated and untouched (host paths expose the net).
+    AfterBackward,
+    /// After the optimizer update (gradients are still un-cleared).
+    AfterStep,
+}
+
+/// What a hook sees.
+pub struct StepInfo<'a> {
+    pub iter: u64,
+    pub loss: f32,
+    /// The live network on host paths; `None` on device backends.
+    pub net: Option<&'a Sequential>,
+}
+
+/// Stable parameter address: layer name + slot within that layer's
+/// `visit_params` order (e.g. `fc0.0` = weight, `fc0.1` = bias). Replaces
+/// the fragile global visit-order indices of the old
+/// `param_copy`/`with_param_replaced` idiom — an id stays valid under any
+/// change that leaves its layer alone.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ParamId {
+    pub layer: String,
+    pub slot: usize,
+}
+
+impl fmt::Display for ParamId {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}.{}", self.layer, self.slot)
+    }
+}
+
+/// One addressable parameter.
+#[derive(Clone, Debug)]
+pub struct ParamInfo {
+    pub id: ParamId,
+    pub shape: Vec<usize>,
+}
+
+/// Held-out evaluation result.
+#[derive(Clone, Copy, Debug)]
+pub struct EvalOut {
+    /// Task metric: classification / word accuracy in [0, 1].
+    pub accuracy: f64,
+    /// Eval loss where the backend computes one.
+    pub loss: Option<f32>,
+}
+
+/// Uniform result of a finished run — the successor of the ad-hoc
+/// `TrainRun` structs each driver used to carry.
+pub struct TrainRecord {
+    pub label: String,
+    /// Per-iteration training losses.
+    pub losses: Vec<f32>,
+    /// Held-out accuracy (NaN when the backend has no eval path).
+    pub eval_acc: f64,
+    pub eval_loss: Option<f32>,
+    /// QEM/QPA decision ledger for the whole run.
+    pub ledger: Ledger,
+    /// Final applied gradient bit-widths, where the backend tracks them.
+    pub grad_bits: Vec<(String, u8)>,
+}
+
+impl TrainRecord {
+    /// Mean of the last `k` losses (convergence summary).
+    pub fn tail_loss(&self, k: usize) -> f64 {
+        let k = k.min(self.losses.len()).max(1);
+        self.losses[self.losses.len() - k..].iter().map(|&x| x as f64).sum::<f64>() / k as f64
+    }
+}
+
+struct Hook<'h> {
+    phase: Phase,
+    every: u64,
+    f: Box<dyn FnMut(&StepInfo) + 'h>,
+}
+
+/// A live training run over some [`Backend`]. `'h` bounds the hook
+/// closures (they may borrow driver locals mutably; take the
+/// [`record`](Session::record) to release them).
+pub struct Session<'h, B: Backend> {
+    backend: B,
+    label: String,
+    iter: u64,
+    losses: Vec<f32>,
+    hooks: Vec<Hook<'h>>,
+}
+
+impl<'h, B: Backend> Session<'h, B> {
+    /// Wrap an explicitly constructed backend (the builder covers the host
+    /// classifier path; RNN/PJRT backends are constructed directly).
+    pub fn with_backend(backend: B) -> Self {
+        let label = backend.label().to_string();
+        Session { backend, label, iter: 0, losses: Vec::new(), hooks: Vec::new() }
+    }
+
+    /// Register a typed hook firing at `phase` on every `every`-th
+    /// iteration (1 = every step). Replaces the old `probe_every` closure.
+    pub fn on(&mut self, phase: Phase, every: u64, f: impl FnMut(&StepInfo) + 'h) {
+        assert!(every >= 1, "hook interval must be ≥ 1");
+        self.hooks.push(Hook { phase, every, f: Box::new(f) });
+    }
+
+    /// One optimization step; returns the training loss.
+    pub fn step(&mut self) -> Result<f32> {
+        let iter = self.iter;
+        let hooks = &mut self.hooks;
+        let backend = &mut self.backend;
+        let loss = backend.step(iter, &mut |phase, info| {
+            for h in hooks.iter_mut() {
+                if h.phase == phase && info.iter % h.every == 0 {
+                    (h.f)(info);
+                }
+            }
+        })?;
+        self.iter += 1;
+        self.losses.push(loss);
+        Ok(loss)
+    }
+
+    /// Run `iters` steps.
+    pub fn run(&mut self, iters: u64) -> Result<&mut Self> {
+        for _ in 0..iters {
+            self.step()?;
+        }
+        Ok(self)
+    }
+
+    /// Held-out evaluation at the current iteration.
+    pub fn eval(&mut self) -> Result<EvalOut> {
+        self.backend.eval(self.iter)
+    }
+
+    pub fn label(&self) -> &str {
+        &self.label
+    }
+
+    pub fn iters_done(&self) -> u64 {
+        self.iter
+    }
+
+    pub fn losses(&self) -> &[f32] {
+        &self.losses
+    }
+
+    pub fn grad_bits(&self) -> Vec<(String, u8)> {
+        self.backend.grad_bits()
+    }
+
+    pub fn backend(&self) -> &B {
+        &self.backend
+    }
+
+    /// Finish with a held-out evaluation (errors on backends without one).
+    pub fn record(mut self) -> Result<TrainRecord> {
+        let eval = self.backend.eval(self.iter)?;
+        Ok(self.finish(Some(eval)))
+    }
+
+    /// Finish without evaluating (e.g. PJRT artifacts, which carry no eval
+    /// graph).
+    pub fn record_without_eval(mut self) -> TrainRecord {
+        self.finish(None)
+    }
+
+    fn finish(&mut self, eval: Option<EvalOut>) -> TrainRecord {
+        TrainRecord {
+            label: self.label.clone(),
+            losses: std::mem::take(&mut self.losses),
+            eval_acc: eval.as_ref().map(|e| e.accuracy).unwrap_or(f64::NAN),
+            eval_loss: eval.and_then(|e| e.loss),
+            ledger: self.backend.take_ledger(self.iter),
+            grad_bits: self.backend.grad_bits(),
+        }
+    }
+}
+
+/// Host-path extras: stable parameter access and checkpointing.
+impl<'h> Session<'h, HostBackend> {
+    pub fn net(&self) -> &Sequential {
+        &self.backend.net
+    }
+
+    pub fn net_mut(&mut self) -> &mut Sequential {
+        &mut self.backend.net
+    }
+
+    /// All parameters, in visit order, as stable [`ParamInfo`]s.
+    pub fn params(&mut self) -> Vec<ParamInfo> {
+        let mut out = Vec::new();
+        self.backend.net.visit_params_slotted(&mut |layer, slot, p, _| {
+            out.push(ParamInfo {
+                id: ParamId { layer: layer.to_string(), slot },
+                shape: p.shape.clone(),
+            });
+        });
+        out
+    }
+
+    /// The 2-D (weight-matrix) parameters — the tensors the Fig 5/6
+    /// deployment-quantization sweep perturbs.
+    pub fn weight_params(&mut self) -> Vec<ParamInfo> {
+        self.params().into_iter().filter(|p| p.shape.len() == 2).collect()
+    }
+
+    fn with_param<R>(&mut self, id: &ParamId, f: &mut dyn FnMut(&mut Tensor) -> R) -> Option<R> {
+        let mut out = None;
+        self.backend.net.visit_params_slotted(&mut |layer, slot, p, _| {
+            if out.is_none() && layer == id.layer && slot == id.slot {
+                out = Some(f(p));
+            }
+        });
+        out
+    }
+
+    /// Copy of one parameter. Panics on an unknown id.
+    pub fn param_copy(&mut self, id: &ParamId) -> Tensor {
+        self.with_param(id, &mut |p| p.clone())
+            .unwrap_or_else(|| panic!("no parameter {id}"))
+    }
+
+    /// Run `f` with parameter `id` temporarily replaced by a transformed
+    /// copy, restoring the original afterwards (Fig 5/6 protocol).
+    pub fn with_param_replaced<R>(
+        &mut self,
+        id: &ParamId,
+        transform: impl Fn(&mut Tensor),
+        f: impl FnOnce(&mut Self) -> R,
+    ) -> R {
+        let snapshot = self
+            .with_param(id, &mut |p| {
+                let snap = p.clone();
+                transform(p);
+                snap
+            })
+            .unwrap_or_else(|| panic!("no parameter {id}"));
+        let out = f(self);
+        let mut snapshot = Some(snapshot);
+        self.with_param(id, &mut |p| *p = snapshot.take().unwrap())
+            .expect("parameter disappeared during with_param_replaced");
+        out
+    }
+
+    /// Forward a batch in inference mode (deployment-int8 semantics under
+    /// quantized modes).
+    pub fn eval_logits(&mut self, x: &Tensor) -> Tensor {
+        self.backend.eval_logits(x)
+    }
+
+    /// Save the full mid-run state — parameters, optimizer buffers,
+    /// controller state, ledger, data stream, loss curve — such that
+    /// [`load_checkpoint`](Session::load_checkpoint) continues the run
+    /// bit-identically (see `train::checkpoint`).
+    pub fn save_checkpoint(&mut self, path: impl AsRef<std::path::Path>) -> Result<()> {
+        checkpoint::save(self, path.as_ref())
+    }
+
+    /// Restore a checkpoint into this session. The session must have been
+    /// built with the same configuration (model, mode, optimizer, seeds)
+    /// that produced the checkpoint; shapes are verified during restore.
+    pub fn load_checkpoint(&mut self, path: impl AsRef<std::path::Path>) -> Result<()> {
+        checkpoint::load(self, path.as_ref())
+    }
+}
+
+/// Optimizer choice for the host path.
+#[derive(Clone, Copy, Debug)]
+pub enum OptChoice {
+    SgdMomentum { momentum: f32 },
+    Adam { beta1: f32, beta2: f32, eps: f32 },
+}
+
+enum ModelSpec {
+    Zoo(String),
+    Custom(String, Box<dyn FnOnce(&mut Pcg32) -> Sequential>),
+}
+
+/// Builder for host-path [`Session`]s — the one way to configure a
+/// classifier training run. Defaults mirror the historical
+/// `exp::common::TrainOpts` defaults (alexnet, float32, lr 0.02, batch 16,
+/// seed 0, noise 0.5, SGD momentum 0.9), so a bare
+/// `SessionBuilder::classifier("alexnet").train(n)` reproduces the old
+/// `train_classifier` run bit-for-bit.
+pub struct SessionBuilder {
+    model: ModelSpec,
+    mode: QuantMode,
+    lr: f32,
+    batch: usize,
+    seed: u64,
+    noise: f32,
+    grad_overrides: Vec<(String, u8)>,
+    optimizer: OptChoice,
+    data: Option<Box<dyn DataSource>>,
+    eval_seed: u64,
+    eval_n: usize,
+    label: Option<String>,
+}
+
+impl SessionBuilder {
+    /// A model-zoo classifier by family name
+    /// (`alexnet|vgg|resnet|mobilenet|inception|mlp`).
+    pub fn classifier(model: impl Into<String>) -> Self {
+        SessionBuilder {
+            model: ModelSpec::Zoo(model.into()),
+            mode: QuantMode::Float32,
+            lr: 0.02,
+            batch: 16,
+            seed: 0,
+            noise: 0.5,
+            grad_overrides: Vec::new(),
+            optimizer: OptChoice::SgdMomentum { momentum: 0.9 },
+            data: None,
+            eval_seed: 999,
+            eval_n: 256,
+            label: None,
+        }
+    }
+
+    /// A custom [`Sequential`], built from the session's seeded RNG so runs
+    /// stay deterministic. Pair with [`data`](Self::data) unless the net
+    /// consumes the default synthetic-image geometry.
+    pub fn custom(
+        label: impl Into<String>,
+        build: impl FnOnce(&mut Pcg32) -> Sequential + 'static,
+    ) -> Self {
+        let label = label.into();
+        let mut b = Self::classifier("");
+        b.model = ModelSpec::Custom(label.clone(), Box::new(build));
+        b.label = Some(label);
+        b
+    }
+
+    pub fn mode(mut self, mode: QuantMode) -> Self {
+        self.mode = mode;
+        self
+    }
+
+    pub fn lr(mut self, lr: f32) -> Self {
+        self.lr = lr;
+        self
+    }
+
+    pub fn batch(mut self, batch: usize) -> Self {
+        self.batch = batch;
+        self
+    }
+
+    pub fn seed(mut self, seed: u64) -> Self {
+        self.seed = seed;
+        self
+    }
+
+    /// Noise level of the default synthetic-image data source.
+    pub fn noise(mut self, noise: f32) -> Self {
+        self.noise = noise;
+        self
+    }
+
+    /// Pin one layer's gradient bit-width (Fig 1/2/11 ablations).
+    pub fn grad_override(mut self, layer: impl Into<String>, bits: u8) -> Self {
+        self.grad_overrides.push((layer.into(), bits));
+        self
+    }
+
+    pub fn grad_overrides(mut self, ovs: Vec<(String, u8)>) -> Self {
+        self.grad_overrides.extend(ovs);
+        self
+    }
+
+    pub fn optimizer(mut self, opt: OptChoice) -> Self {
+        self.optimizer = opt;
+        self
+    }
+
+    /// Use Adam (β₁=0.9, β₂=0.999, ε=1e-8) instead of SGD-momentum.
+    pub fn adam(self) -> Self {
+        self.optimizer(OptChoice::Adam { beta1: 0.9, beta2: 0.999, eps: 1e-8 })
+    }
+
+    /// Replace the default synthetic-image source.
+    pub fn data(mut self, data: Box<dyn DataSource>) -> Self {
+        self.data = Some(data);
+        self
+    }
+
+    /// Held-out evaluation stream (seed, set size); default (999, 256).
+    pub fn eval_set(mut self, seed: u64, n: usize) -> Self {
+        self.eval_seed = seed;
+        self.eval_n = n;
+        self
+    }
+
+    pub fn label(mut self, label: impl Into<String>) -> Self {
+        self.label = Some(label.into());
+        self
+    }
+
+    /// Construct the [`Session`]. Initialization order (RNG → model →
+    /// overrides → data → optimizer) matches the historical loop exactly.
+    pub fn build<'h>(self) -> Session<'h, HostBackend> {
+        let mut rng = Pcg32::seeded(self.seed);
+        let (name, mut net) = match self.model {
+            ModelSpec::Zoo(name) => {
+                let net = models::by_name(&name, self.mode, &mut rng)
+                    .unwrap_or_else(|| panic!("unknown model {name:?}"));
+                (name, net)
+            }
+            ModelSpec::Custom(name, build) => {
+                let net = build(&mut rng);
+                (name, net)
+            }
+        };
+        for (layer, bits) in &self.grad_overrides {
+            assert!(
+                net.set_grad_override(layer, Some(*bits)),
+                "no layer {layer:?} in {name}"
+            );
+        }
+        let data = self.data.unwrap_or_else(|| {
+            Box::new(SynthImages::new(
+                self.seed + 1000,
+                models::CLASSES,
+                models::IN_C,
+                models::IN_H,
+                models::IN_W,
+                self.noise,
+            ))
+        });
+        let opt: Box<dyn Optimizer> = match self.optimizer {
+            OptChoice::SgdMomentum { momentum } => Box::new(Sgd::new(self.lr, momentum)),
+            OptChoice::Adam { beta1, beta2, eps } => {
+                Box::new(Adam::with_config(self.lr, beta1, beta2, eps))
+            }
+        };
+        let label = self
+            .label
+            .unwrap_or_else(|| format!("{}-{}", name, self.mode.label()));
+        Session::with_backend(HostBackend::new(
+            net,
+            data,
+            opt,
+            self.batch,
+            self.eval_seed,
+            self.eval_n,
+            label,
+        ))
+    }
+
+    /// Build, run `iters` steps, evaluate, and return the record — the
+    /// one-call replacement for `train_classifier`.
+    pub fn train(self, iters: u64) -> TrainRecord {
+        let mut s = self.build();
+        s.run(iters).expect("host training cannot fail");
+        s.record().expect("host eval cannot fail")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::apt::AptConfig;
+
+    #[test]
+    fn classifier_trains_and_reports() {
+        let run = SessionBuilder::classifier("mlp").train(30);
+        assert_eq!(run.losses.len(), 30);
+        assert!(run.eval_acc > 0.15, "acc={}", run.eval_acc); // better than chance
+        assert_eq!(run.label, "mlp-float32");
+    }
+
+    #[test]
+    fn hooks_fire_on_schedule() {
+        let mut after_backward = 0usize;
+        let mut after_step = 0usize;
+        {
+            let mut s = SessionBuilder::classifier("mlp").build();
+            s.on(Phase::AfterBackward, 2, |info| {
+                assert!(info.net.is_some());
+                after_backward += 1;
+            });
+            s.on(Phase::AfterStep, 1, |_| after_step += 1);
+            s.run(10).unwrap();
+        }
+        assert_eq!(after_backward, 5); // iters 0,2,4,6,8
+        assert_eq!(after_step, 10);
+    }
+
+    #[test]
+    fn grads_observable_after_step() {
+        let mut s = SessionBuilder::classifier("mlp").build();
+        s.step().unwrap();
+        // the fused-Sgd footgun: these used to read back all-zero
+        let mut nonzero = false;
+        s.net_mut().visit_params(&mut |_, g| {
+            nonzero |= g.data.iter().any(|&v| v != 0.0);
+        });
+        assert!(nonzero, "gradients were cleared before probes could see them");
+    }
+
+    #[test]
+    fn param_ids_are_stable_addresses() {
+        let mut s = SessionBuilder::classifier("mlp").build();
+        let params = s.params();
+        // mlp: 3 × (weight + bias)
+        assert_eq!(params.len(), 6);
+        assert_eq!(params[0].id, ParamId { layer: "fc0".into(), slot: 0 });
+        assert_eq!(params[1].id, ParamId { layer: "fc0".into(), slot: 1 });
+        let weights = s.weight_params();
+        assert_eq!(weights.len(), 3);
+        assert!(weights.iter().all(|p| p.shape.len() == 2));
+
+        let id = weights[0].id.clone();
+        let before = s.param_copy(&id);
+        let seen = s.with_param_replaced(
+            &id,
+            |p| p.data.fill(0.0),
+            |s2| s2.param_copy(&id),
+        );
+        assert!(seen.data.iter().all(|&v| v == 0.0));
+        assert_eq!(s.param_copy(&id), before, "original must be restored");
+    }
+
+    #[test]
+    fn adaptive_session_fills_ledger() {
+        let mut cfg = AptConfig::default();
+        cfg.init_phase_iters = 2;
+        let run = SessionBuilder::classifier("mlp")
+            .mode(QuantMode::Adaptive(cfg))
+            .train(20);
+        assert!(run.ledger.total_updates() > 0);
+        assert_eq!(run.ledger.total_iters, 20);
+        assert_eq!(run.label, "mlp-adaptive");
+    }
+
+    #[test]
+    fn seq2seq_backend_same_surface() {
+        let b = Seq2SeqBackend::new("rnn-f32", 12, 16, QuantMode::Float32, 0, 8, 4, 0.05, 32);
+        let mut s = Session::with_backend(b);
+        s.run(25).unwrap();
+        let rec = s.record().unwrap();
+        assert_eq!(rec.losses.len(), 25);
+        assert!(rec.eval_loss.is_some());
+        assert!(rec.eval_acc >= 0.0 && rec.eval_acc <= 1.0);
+    }
+}

@@ -1,0 +1,278 @@
+//! Optimizers behind one trait (DESIGN.md §Session-API).
+//!
+//! SGD-with-momentum moved here from `nn` (it used to be `nn::Sgd`), plus
+//! Adam to match what the L2 train-step artifacts already support
+//! on-device. Two contracts every implementation upholds:
+//!
+//! 1. **Optimizers read gradients, never clear them.** Gradient zeroing is
+//!    the explicit [`crate::nn::Sequential::zero_grads`] step, scheduled by
+//!    the `Session` at the *start* of the next iteration — so probes that
+//!    run after `step()` observe the step's true gradients (the old fused
+//!    `Sgd::step` silently cleared them mid-update).
+//! 2. **State buffers are keyed by parameter visit order**, which is stable
+//!    for a fixed architecture, and are exposed through
+//!    [`Optimizer::state`] for bit-identical checkpoint round-trips.
+
+use crate::nn::Sequential;
+
+/// Serializable optimizer state: scalar counters + per-parameter buffers in
+/// visit order (SGD: `[velocity…]`; Adam: `[m…, v…]`).
+#[derive(Clone, Debug, Default)]
+pub struct OptimizerState {
+    /// Update counter (Adam's bias-correction `t`; 0 for SGD).
+    pub step: u64,
+    pub buffers: Vec<Vec<f32>>,
+}
+
+/// One parameter update rule over a [`Sequential`].
+pub trait Optimizer {
+    /// Apply one update from the accumulated gradients. Does **not** zero
+    /// them — see the module contract.
+    fn step(&mut self, net: &mut Sequential);
+    /// Identifier written into checkpoints (`"sgd"` / `"adam"`).
+    fn name(&self) -> &'static str;
+    /// Snapshot the mutable state for checkpointing.
+    fn state(&self) -> OptimizerState;
+    /// Restore a [`state`](Optimizer::state) snapshot.
+    fn load_state(&mut self, st: OptimizerState);
+}
+
+/// SGD with momentum: `v ← μ·v + g`, `p ← p − lr·v` — the arithmetic of the
+/// pre-trait `nn::Sgd`, minus its fused gradient clearing.
+pub struct Sgd {
+    pub lr: f32,
+    pub momentum: f32,
+    velocity: Vec<Vec<f32>>,
+}
+
+impl Sgd {
+    pub fn new(lr: f32, momentum: f32) -> Self {
+        Sgd { lr, momentum, velocity: Vec::new() }
+    }
+}
+
+impl Optimizer for Sgd {
+    fn step(&mut self, net: &mut Sequential) {
+        let mut idx = 0usize;
+        let lr = self.lr;
+        let mu = self.momentum;
+        let vel = &mut self.velocity;
+        net.visit_params(&mut |p, g| {
+            if vel.len() <= idx {
+                vel.push(vec![0.0; p.len()]);
+            }
+            let v = &mut vel[idx];
+            assert_eq!(v.len(), p.len(), "parameter set changed shape");
+            for ((pv, &gv), vv) in p.data.iter_mut().zip(g.data.iter()).zip(v.iter_mut()) {
+                *vv = mu * *vv + gv;
+                *pv -= lr * *vv;
+            }
+            idx += 1;
+        });
+    }
+
+    fn name(&self) -> &'static str {
+        "sgd"
+    }
+
+    fn state(&self) -> OptimizerState {
+        OptimizerState { step: 0, buffers: self.velocity.clone() }
+    }
+
+    fn load_state(&mut self, st: OptimizerState) {
+        self.velocity = st.buffers;
+    }
+}
+
+/// Adam (Kingma & Ba): the host-side twin of the Adam update compiled into
+/// the L2 artifacts (`python/compile/model.py`), so a workload can move
+/// between the host and PJRT backends without changing its update rule.
+pub struct Adam {
+    pub lr: f32,
+    pub beta1: f32,
+    pub beta2: f32,
+    pub eps: f32,
+    t: u64,
+    m: Vec<Vec<f32>>,
+    v: Vec<Vec<f32>>,
+}
+
+impl Adam {
+    /// Standard defaults: β₁=0.9, β₂=0.999, ε=1e-8.
+    pub fn new(lr: f32) -> Self {
+        Self::with_config(lr, 0.9, 0.999, 1e-8)
+    }
+
+    pub fn with_config(lr: f32, beta1: f32, beta2: f32, eps: f32) -> Self {
+        Adam { lr, beta1, beta2, eps, t: 0, m: Vec::new(), v: Vec::new() }
+    }
+}
+
+impl Optimizer for Adam {
+    fn step(&mut self, net: &mut Sequential) {
+        self.t += 1;
+        let (b1, b2, lr, eps) = (self.beta1, self.beta2, self.lr, self.eps);
+        let bc1 = 1.0 - b1.powi(self.t as i32);
+        let bc2 = 1.0 - b2.powi(self.t as i32);
+        let mut idx = 0usize;
+        let (ms, vs) = (&mut self.m, &mut self.v);
+        net.visit_params(&mut |p, g| {
+            if ms.len() <= idx {
+                ms.push(vec![0.0; p.len()]);
+                vs.push(vec![0.0; p.len()]);
+            }
+            let (m, v) = (&mut ms[idx], &mut vs[idx]);
+            assert_eq!(m.len(), p.len(), "parameter set changed shape");
+            for (((pv, &gv), mv), vv) in
+                p.data.iter_mut().zip(g.data.iter()).zip(m.iter_mut()).zip(v.iter_mut())
+            {
+                *mv = b1 * *mv + (1.0 - b1) * gv;
+                *vv = b2 * *vv + (1.0 - b2) * gv * gv;
+                *pv -= lr * (*mv / bc1) / ((*vv / bc2).sqrt() + eps);
+            }
+            idx += 1;
+        });
+    }
+
+    fn name(&self) -> &'static str {
+        "adam"
+    }
+
+    fn state(&self) -> OptimizerState {
+        let mut buffers = self.m.clone();
+        buffers.extend(self.v.iter().cloned());
+        OptimizerState { step: self.t, buffers }
+    }
+
+    fn load_state(&mut self, st: OptimizerState) {
+        self.t = st.step;
+        let half = st.buffers.len() / 2;
+        let mut buffers = st.buffers;
+        self.v = buffers.split_off(half);
+        self.m = buffers;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::linear::Linear;
+    use crate::nn::{QuantMode, TrainCtx};
+    use crate::tensor::Tensor;
+    use crate::util::Pcg32;
+
+    fn toy_net(seed: u64) -> Sequential {
+        let mut rng = Pcg32::seeded(seed);
+        Sequential::new(vec![
+            Box::new(Linear::new("fc0", 4, 8, QuantMode::Float32, &mut rng)),
+            Box::new(crate::nn::activ::ReLU::new("r0")),
+            Box::new(Linear::new("fc1", 8, 2, QuantMode::Float32, &mut rng)),
+        ])
+    }
+
+    fn one_backward(net: &mut Sequential, rng: &mut Pcg32) {
+        let mut ctx = TrainCtx::new();
+        let mut x = Tensor::zeros(&[4, 4]);
+        rng.fill_normal(&mut x.data, 1.0);
+        let logits = net.forward(&x, &mut ctx);
+        let (_, g) = crate::nn::loss::softmax_xent(&logits, &[0, 1, 0, 1]);
+        net.backward(&g, &mut ctx);
+    }
+
+    #[test]
+    fn sgd_step_preserves_grads() {
+        let mut net = toy_net(0);
+        let mut rng = Pcg32::seeded(1);
+        one_backward(&mut net, &mut rng);
+        let mut before = Vec::new();
+        net.visit_params(&mut |_, g| before.push(g.clone()));
+        let mut opt = Sgd::new(0.1, 0.9);
+        opt.step(&mut net);
+        let mut after = Vec::new();
+        net.visit_params(&mut |_, g| after.push(g.clone()));
+        assert_eq!(before.len(), after.len());
+        for (b, a) in before.iter().zip(&after) {
+            assert_eq!(b.data, a.data, "optimizer must not clear gradients");
+        }
+        net.zero_grads();
+        net.visit_params(&mut |_, g| assert!(g.data.iter().all(|&v| v == 0.0)));
+    }
+
+    #[test]
+    fn sgd_matches_fused_reference_update() {
+        // Reference: the pre-refactor fused update (v ← μv+g, p ← p−lr·v,
+        // g ← 0) applied by hand. The trait Sgd + explicit zero_grads must
+        // land on bit-identical parameters and velocity.
+        let mut net_a = toy_net(3);
+        let mut net_b = toy_net(3);
+        let mut rng_a = Pcg32::seeded(4);
+        let mut rng_b = Pcg32::seeded(4);
+        let mut opt = Sgd::new(0.05, 0.9);
+        let mut vel: Vec<Vec<f32>> = Vec::new();
+        for _ in 0..5 {
+            one_backward(&mut net_a, &mut rng_a);
+            one_backward(&mut net_b, &mut rng_b);
+            // reference fused loop on net_b
+            let mut idx = 0usize;
+            net_b.visit_params(&mut |p, g| {
+                if vel.len() <= idx {
+                    vel.push(vec![0.0; p.len()]);
+                }
+                let v = &mut vel[idx];
+                for ((pv, gv), vv) in p.data.iter_mut().zip(g.data.iter_mut()).zip(v.iter_mut()) {
+                    *vv = 0.9 * *vv + *gv;
+                    *pv -= 0.05 * *vv;
+                    *gv = 0.0;
+                }
+                idx += 1;
+            });
+            // trait path on net_a
+            opt.step(&mut net_a);
+            net_a.zero_grads();
+        }
+        let mut pa = Vec::new();
+        let mut pb = Vec::new();
+        net_a.visit_params(&mut |p, _| pa.push(p.clone()));
+        net_b.visit_params(&mut |p, _| pb.push(p.clone()));
+        for (a, b) in pa.iter().zip(&pb) {
+            assert_eq!(a.data, b.data, "trait SGD diverged from fused reference");
+        }
+        for (a, b) in opt.state().buffers.iter().zip(&vel) {
+            assert_eq!(a, b, "velocity diverged");
+        }
+    }
+
+    #[test]
+    fn adam_decreases_loss_and_roundtrips_state() {
+        let mut net = toy_net(5);
+        let mut rng = Pcg32::seeded(6);
+        let mut opt = Adam::new(0.01);
+        let mut ctx = TrainCtx::new();
+        let mut x = Tensor::zeros(&[8, 4]);
+        rng.fill_normal(&mut x.data, 1.0);
+        let y: Vec<usize> = (0..8).map(|i| i % 2).collect();
+        let mut first = 0.0;
+        let mut last = 0.0;
+        for it in 0..80 {
+            ctx.iter = it;
+            let logits = net.forward(&x, &mut ctx);
+            let (l, g) = crate::nn::loss::softmax_xent(&logits, &y);
+            net.backward(&g, &mut ctx);
+            opt.step(&mut net);
+            net.zero_grads();
+            if it == 0 {
+                first = l;
+            }
+            last = l;
+        }
+        assert!(last < first * 0.5, "adam failed to fit: first={first} last={last}");
+
+        let st = opt.state();
+        assert_eq!(st.step, 80);
+        let mut opt2 = Adam::new(0.01);
+        opt2.load_state(st.clone());
+        let st2 = opt2.state();
+        assert_eq!(st2.step, st.step);
+        assert_eq!(st2.buffers, st.buffers);
+    }
+}

@@ -154,6 +154,12 @@ impl Ema {
     pub fn is_initialized(&self) -> bool {
         self.initialized
     }
+
+    /// Overwrite the average state (checkpoint restore).
+    pub fn set_state(&mut self, value: f32, initialized: bool) {
+        self.value = value;
+        self.initialized = initialized;
+    }
 }
 
 #[cfg(test)]

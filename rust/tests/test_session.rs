@@ -1,0 +1,228 @@
+//! `train::Session` contract tests:
+//!
+//! 1. **Loop parity** — a seeded `Session` run reproduces the pre-refactor
+//!    `exp::common::train_classifier` loop (replicated inline here, fused
+//!    SGD and all) bit-identically: loss curve, eval accuracy, parameters.
+//!    Covers mlp/alexnet × Float32 / Static(8) / Static(16) / Adaptive —
+//!    which is simultaneously the optimizer-parity guarantee for the
+//!    `Optimizer`-trait SGD against the old fused `Sgd`.
+//! 2. **Checkpoint round-trip** — save mid-run (params, optimizer state,
+//!    controller state, ledger, data stream), restore into a fresh
+//!    `Session`, and the continued iterations are bit-identical to an
+//!    uninterrupted run.
+
+use apt::apt::AptConfig;
+use apt::data::SynthImages;
+use apt::nn::loss::{accuracy, softmax_xent};
+use apt::nn::{models, QuantMode, TrainCtx};
+use apt::train::SessionBuilder;
+use apt::util::Pcg32;
+
+fn adaptive(iters: u64) -> QuantMode {
+    let mut cfg = AptConfig::default();
+    cfg.init_phase_iters = iters / 10;
+    QuantMode::Adaptive(cfg)
+}
+
+/// The pre-refactor `train_classifier` loop, verbatim: seeded RNG → model →
+/// data(seed+1000) → per-iter forward/loss/backward → *fused* SGD-momentum
+/// update that zeroes gradients in the same pass → eval on stream 999.
+fn reference_train(
+    model: &str,
+    mode: QuantMode,
+    iters: u64,
+    lr: f32,
+) -> (Vec<f32>, f64, Vec<Vec<f32>>) {
+    let (batch, seed, noise) = (16usize, 0u64, 0.5f32);
+    let mut rng = Pcg32::seeded(seed);
+    let mut net = models::by_name(model, mode, &mut rng).expect("model");
+    let mut data = SynthImages::new(
+        seed + 1000,
+        models::CLASSES,
+        models::IN_C,
+        models::IN_H,
+        models::IN_W,
+        noise,
+    );
+    let mut velocity: Vec<Vec<f32>> = Vec::new();
+    let mut ctx = TrainCtx::new();
+    let mut losses = Vec::with_capacity(iters as usize);
+    for it in 0..iters {
+        ctx.iter = it;
+        let (x, y) = data.batch(batch);
+        let logits = net.forward(&x, &mut ctx);
+        let (l, g) = softmax_xent(&logits, &y);
+        net.backward(&g, &mut ctx);
+        let mut idx = 0usize;
+        net.visit_params(&mut |p, gr| {
+            if velocity.len() <= idx {
+                velocity.push(vec![0.0; p.len()]);
+            }
+            let v = &mut velocity[idx];
+            for ((pv, gv), vv) in p.data.iter_mut().zip(gr.data.iter_mut()).zip(v.iter_mut()) {
+                *vv = 0.9 * *vv + *gv;
+                *pv -= lr * *vv;
+                *gv = 0.0;
+            }
+            idx += 1;
+        });
+        losses.push(l);
+    }
+    ctx.ledger.set_total_iters(iters);
+    ctx.training = false;
+    let (ex, ey) = data.eval_set(999, 256);
+    let logits = net.forward(&ex, &mut ctx);
+    let acc = accuracy(&logits, &ey);
+    let mut params = Vec::new();
+    net.visit_params(&mut |p, _| params.push(p.data.clone()));
+    (losses, acc, params)
+}
+
+fn assert_session_matches_reference(model: &str, mode: QuantMode, iters: u64, lr: f32) {
+    let (ref_losses, ref_acc, ref_params) = reference_train(model, mode, iters, lr);
+    let mut s = SessionBuilder::classifier(model).mode(mode).lr(lr).build();
+    s.run(iters).unwrap();
+    let eval = s.eval().unwrap();
+    assert_eq!(
+        s.losses(),
+        &ref_losses[..],
+        "{model}/{}: loss curve diverged from the pre-refactor loop",
+        mode.label()
+    );
+    assert_eq!(
+        eval.accuracy,
+        ref_acc,
+        "{model}/{}: eval accuracy diverged",
+        mode.label()
+    );
+    let mut params = Vec::new();
+    s.net_mut().visit_params(&mut |p, _| params.push(p.data.clone()));
+    assert_eq!(params.len(), ref_params.len());
+    for (i, (a, b)) in params.iter().zip(&ref_params).enumerate() {
+        assert_eq!(a, b, "{model}/{}: parameter {i} diverged", mode.label());
+    }
+}
+
+#[test]
+fn session_reproduces_reference_mlp_all_modes() {
+    let iters = 40;
+    for mode in [
+        QuantMode::Float32,
+        QuantMode::Static(8),
+        QuantMode::Static(16),
+        adaptive(iters),
+    ] {
+        assert_session_matches_reference("mlp", mode, iters, 0.02);
+    }
+}
+
+#[test]
+fn session_reproduces_reference_alexnet_all_modes() {
+    let iters = 20;
+    for mode in [
+        QuantMode::Float32,
+        QuantMode::Static(8),
+        QuantMode::Static(16),
+        adaptive(iters),
+    ] {
+        assert_session_matches_reference("alexnet", mode, iters, 0.01);
+    }
+}
+
+fn ckpt_path(tag: &str) -> std::path::PathBuf {
+    std::env::temp_dir().join(format!("apt_ckpt_{tag}_{}.txt", std::process::id()))
+}
+
+fn roundtrip(model: &str, mode: QuantMode, pre: u64, post: u64) {
+    let build = || SessionBuilder::classifier(model).mode(mode).build();
+    let path = ckpt_path(model);
+
+    // uninterrupted run: pre + post iterations
+    let mut a = build();
+    a.run(pre).unwrap();
+    a.save_checkpoint(&path).unwrap();
+    a.run(post).unwrap();
+
+    // fresh session, restored mid-run, continued
+    let mut b = build();
+    b.load_checkpoint(&path).unwrap();
+    assert_eq!(b.iters_done(), pre);
+    assert_eq!(b.losses(), &a.losses()[..pre as usize]);
+    b.run(post).unwrap();
+
+    assert_eq!(
+        b.losses(),
+        a.losses(),
+        "{model}: restored run's losses diverged from the uninterrupted run"
+    );
+    let (ea, eb) = (a.eval().unwrap(), b.eval().unwrap());
+    assert_eq!(ea.accuracy, eb.accuracy, "{model}: eval diverged after restore");
+
+    // parameters and ledger must agree exactly
+    let mut pa = Vec::new();
+    let mut pb = Vec::new();
+    a.net_mut().visit_params(&mut |p, _| pa.push(p.data.clone()));
+    b.net_mut().visit_params(&mut |p, _| pb.push(p.data.clone()));
+    assert_eq!(pa, pb, "{model}: parameters diverged after restore");
+
+    let (ra, rb) = (a.record().unwrap(), b.record().unwrap());
+    assert_eq!(ra.ledger.total_updates(), rb.ledger.total_updates());
+    assert_eq!(ra.ledger.tensors.len(), rb.ledger.tensors.len());
+    for (((na, ka), ha), ((nb, kb), hb)) in
+        ra.ledger.tensors.iter().zip(rb.ledger.tensors.iter())
+    {
+        assert_eq!((na, ka), (nb, kb));
+        assert_eq!(ha.events.len(), hb.events.len(), "{na}: event count");
+        for (x, y) in ha.events.iter().zip(&hb.events) {
+            assert_eq!((x.iter, x.bits, x.interval), (y.iter, y.bits, y.interval), "{na}");
+            assert_eq!(x.error.to_bits(), y.error.to_bits(), "{na}: event error");
+        }
+        assert_eq!(ha.bits_trace, hb.bits_trace, "{na}: bits trace");
+    }
+
+    let _ = std::fs::remove_file(&path);
+}
+
+#[test]
+fn checkpoint_roundtrip_mlp_adaptive() {
+    // Adaptive mode exercises the full state surface: controllers mid-
+    // interval, ledger events, optimizer velocity, data-stream RNG.
+    roundtrip("mlp", adaptive(20), 10, 10);
+}
+
+#[test]
+fn checkpoint_roundtrip_resnet_adaptive() {
+    // ResNet adds nested-block controllers and batch-norm running stats.
+    roundtrip("resnet", adaptive(12), 6, 6);
+}
+
+#[test]
+fn checkpoint_rejects_optimizer_mismatch() {
+    let path = ckpt_path("mismatch");
+    let mut a = SessionBuilder::classifier("mlp").build();
+    a.run(3).unwrap();
+    a.save_checkpoint(&path).unwrap();
+    let mut b = SessionBuilder::classifier("mlp").adam().build();
+    let err = b.load_checkpoint(&path).unwrap_err().to_string();
+    assert!(err.contains("optimizer"), "unexpected error: {err}");
+    let _ = std::fs::remove_file(&path);
+}
+
+#[test]
+fn checkpoint_rejects_architecture_mismatch() {
+    let path = ckpt_path("arch");
+    let mut a = SessionBuilder::classifier("mlp").build();
+    a.run(2).unwrap();
+    a.save_checkpoint(&path).unwrap();
+    let mut b = SessionBuilder::classifier("alexnet").build();
+    assert!(b.load_checkpoint(&path).is_err());
+    let _ = std::fs::remove_file(&path);
+}
+
+#[test]
+fn adam_session_trains() {
+    let run = SessionBuilder::classifier("mlp").adam().lr(0.005).train(60);
+    let first: f64 = run.losses[..5].iter().map(|&x| x as f64).sum::<f64>() / 5.0;
+    assert!(run.tail_loss(5) < first, "adam failed to reduce loss");
+    assert!(run.eval_acc > 0.15, "acc={}", run.eval_acc);
+}

@@ -1,10 +1,11 @@
 //! Integration over the pure-Rust path: Algorithm 1's accuracy claims on
-//! the mini model zoo, plus ledger/controller invariants over a real run.
+//! the mini model zoo, plus ledger/controller invariants over a real run —
+//! all driven through the unified `train::Session` API.
 
 use apt::apt::AptConfig;
-use apt::exp::common::{train_classifier, TrainOpts};
 use apt::fixedpoint::TensorKind;
 use apt::nn::QuantMode;
+use apt::train::SessionBuilder;
 
 fn adaptive(iters: u64) -> QuantMode {
     let mut cfg = AptConfig::default();
@@ -15,14 +16,11 @@ fn adaptive(iters: u64) -> QuantMode {
 #[test]
 fn adaptive_matches_float32_on_alexnet_mini() {
     let iters = 250;
-    let f = train_classifier(
-        &TrainOpts { iters, lr: 0.01, ..Default::default() },
-        None,
-    );
-    let q = train_classifier(
-        &TrainOpts { iters, lr: 0.01, mode: adaptive(iters), ..Default::default() },
-        None,
-    );
+    let f = SessionBuilder::classifier("alexnet").lr(0.01).train(iters);
+    let q = SessionBuilder::classifier("alexnet")
+        .lr(0.01)
+        .mode(adaptive(iters))
+        .train(iters);
     assert!(f.eval_acc > 0.5, "f32 baseline too weak: {}", f.eval_acc);
     assert!(
         q.eval_acc > f.eval_acc - 0.08,
@@ -35,14 +33,14 @@ fn adaptive_matches_float32_on_alexnet_mini() {
 #[test]
 fn unified_int8_is_no_better_than_adaptive() {
     let iters = 250;
-    let q = train_classifier(
-        &TrainOpts { iters, lr: 0.01, mode: adaptive(iters), ..Default::default() },
-        None,
-    );
-    let i8 = train_classifier(
-        &TrainOpts { iters, lr: 0.01, mode: QuantMode::Static(8), ..Default::default() },
-        None,
-    );
+    let q = SessionBuilder::classifier("alexnet")
+        .lr(0.01)
+        .mode(adaptive(iters))
+        .train(iters);
+    let i8 = SessionBuilder::classifier("alexnet")
+        .lr(0.01)
+        .mode(QuantMode::Static(8))
+        .train(iters);
     assert!(
         i8.eval_acc <= q.eval_acc + 0.05,
         "int8-unified {} should not beat adaptive {}",
@@ -54,10 +52,7 @@ fn unified_int8_is_no_better_than_adaptive() {
 #[test]
 fn ledger_invariants_over_real_run() {
     let iters = 200;
-    let run = train_classifier(
-        &TrainOpts { iters, mode: adaptive(iters), ..Default::default() },
-        None,
-    );
+    let run = SessionBuilder::classifier("alexnet").mode(adaptive(iters)).train(iters);
     let l = &run.ledger;
     // every gradient tensor recorded at least one event, first at iter 0
     for ((name, kind), hist) in &l.tensors {
@@ -88,10 +83,7 @@ fn ledger_invariants_over_real_run() {
 #[test]
 fn weights_and_activations_stay_int8() {
     let iters = 120;
-    let run = train_classifier(
-        &TrainOpts { iters, mode: adaptive(iters), ..Default::default() },
-        None,
-    );
+    let run = SessionBuilder::classifier("alexnet").mode(adaptive(iters)).train(iters);
     for ((name, kind), hist) in &run.ledger.tensors {
         if *kind == TensorKind::Gradient {
             continue;
@@ -107,10 +99,9 @@ fn mode1_allows_bit_decrease_mode2_does_not() {
     let iters = 200;
     let mut cfg1 = AptConfig::mode1();
     cfg1.init_phase_iters = iters / 10;
-    let run1 = train_classifier(
-        &TrainOpts { iters, mode: QuantMode::Adaptive(cfg1), ..Default::default() },
-        None,
-    );
+    let run1 = SessionBuilder::classifier("alexnet")
+        .mode(QuantMode::Adaptive(cfg1))
+        .train(iters);
     // Mode1 events may decrease bits; just verify the run is healthy and
     // that bit values stay in the legal set.
     for ((_, kind), hist) in &run1.ledger.tensors {
