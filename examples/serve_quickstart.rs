@@ -1,0 +1,102 @@
+//! Serve quickstart: the full train→deploy loop in one file. Trains a
+//! classifier with int8-pinned forward tensors through `train::Session`,
+//! checkpoints it, freezes the checkpoint into a pre-quantized
+//! `serve::FrozenModel`, verifies the frozen logits against the live
+//! session bit-for-bit, then answers concurrent queries through the
+//! micro-batching `serve::InferenceServer` (DESIGN.md §Serving).
+//!
+//!     cargo run --release --example serve_quickstart -- \
+//!         [--model mlp] [--iters 80] [--requests 64]
+
+use std::sync::Arc;
+
+use apt::data::SynthImages;
+use apt::nn::{models, QuantMode};
+use apt::serve::{FrozenModel, InferenceServer, ServeConfig};
+use apt::train::SessionBuilder;
+use apt::util::cli::Args;
+
+fn main() {
+    let args = Args::from_env();
+    let model = args.str_or("model", "mlp");
+    let iters = args.u64_or("iters", 80);
+    let requests = args.usize_or("requests", 64);
+    let mode = QuantMode::Static(8);
+
+    // 1. Train one "epoch" with int8 weights/activations and checkpoint it.
+    println!("training {model} (int8) for {iters} iters …");
+    let mut session = SessionBuilder::classifier(&model).mode(mode).lr(0.01).build();
+    session.run(iters).expect("host training cannot fail");
+    let ckpt = std::env::temp_dir().join(format!("apt_serve_quickstart_{}.ckpt", std::process::id()));
+    session.save_checkpoint(&ckpt).expect("writing checkpoint");
+    println!("checkpoint: {}", ckpt.display());
+
+    // 2. Freeze: reload the checkpoint into a forward-only model with the
+    //    weights pre-quantized once into int8 codes.
+    let frozen = FrozenModel::from_checkpoint(&ckpt, &model, mode).expect("freeze");
+    println!("frozen {} ({} weights)", frozen.label(), frozen.precision());
+
+    // 3. Parity spot-check: frozen serving is bit-identical to the
+    //    training-side eval path (see rust/tests/test_serve.rs).
+    let data = SynthImages::new(1000, models::CLASSES, models::IN_C, models::IN_H, models::IN_W, 0.5);
+    let (ex, ey) = data.eval_set(999, requests);
+    let want = session.eval_logits(&ex);
+    let got = frozen.forward(&ex, apt::kernels::global());
+    let exact = want
+        .data
+        .iter()
+        .zip(&got.data)
+        .all(|(a, b)| a.to_bits() == b.to_bits());
+    // CI runs this example as the serve smoke test: a parity regression
+    // must fail the run, not just print.
+    assert!(exact, "frozen logits diverged from the session eval path");
+    println!("frozen vs session eval: bit-identical");
+
+    // 4. Serve: concurrent clients against the micro-batching server.
+    let d = frozen.input_len();
+    let server = InferenceServer::start(
+        Arc::new(frozen),
+        apt::kernels::global_arc(),
+        ServeConfig { max_batch: 8, max_wait_us: 200, queue_cap: 128, workers: 2 },
+    );
+    let correct: usize = std::thread::scope(|scope| {
+        let clients = 4usize;
+        let mut handles = Vec::new();
+        for c in 0..clients {
+            let server = &server;
+            let ex = &ex;
+            let ey = &ey;
+            handles.push(scope.spawn(move || {
+                let mut correct = 0usize;
+                let mut i = c;
+                while i < requests {
+                    let logits = server
+                        .submit(ex.data[i * d..(i + 1) * d].to_vec())
+                        .expect("submit")
+                        .wait()
+                        .expect("response");
+                    let pred = logits
+                        .iter()
+                        .enumerate()
+                        .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                        .map(|(j, _)| j)
+                        .unwrap();
+                    if pred == ey[i] {
+                        correct += 1;
+                    }
+                    i += clients;
+                }
+                correct
+            }));
+        }
+        handles.into_iter().map(|h| h.join().expect("client")).sum()
+    });
+    let stats = server.shutdown();
+    println!(
+        "{requests} queries answered in {} batches (mean size {:.2}) — accuracy {:.3}",
+        stats.batches,
+        stats.mean_batch(),
+        correct as f64 / requests as f64
+    );
+    let _ = std::fs::remove_file(&ckpt);
+}

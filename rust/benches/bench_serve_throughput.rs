@@ -1,0 +1,148 @@
+//! cargo bench — serving throughput/latency (EXPERIMENTS.md §Serve):
+//! QPS and client-side p50/p99 over batch size × worker count ×
+//! {f32, int8, int16} frozen mlp models, measured with closed-loop
+//! concurrent clients against the micro-batching `InferenceServer`.
+//! Writes `results/serve_throughput.csv`.
+//!
+//! `BENCH_QUICK=1` shortens the workload; `APT_SERVE_REQUESTS=N`
+//! overrides the per-cell request count.
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use apt::data::SynthImages;
+use apt::kernels::Engine;
+use apt::nn::{models, QuantMode};
+use apt::serve::{FrozenModel, InferenceServer, ServeConfig};
+use apt::train::SessionBuilder;
+use apt::util::out::{results_dir, Csv};
+use apt::util::stats::percentile;
+
+const TRAIN_ITERS: u64 = 30;
+
+fn frozen_for(mode: QuantMode) -> FrozenModel {
+    let mut s = SessionBuilder::classifier("mlp").mode(mode).lr(0.01).build();
+    s.run(TRAIN_ITERS).expect("train");
+    FrozenModel::freeze(format!("mlp-{}", mode.label()), s.net()).expect("freeze")
+}
+
+struct Cell {
+    qps: f64,
+    p50_us: f64,
+    p99_us: f64,
+    mean_batch: f64,
+}
+
+/// Closed-loop load: `clients` threads each submit/wait over their share of
+/// `requests` samples.
+fn run_cell(frozen: &Arc<FrozenModel>, cfg: ServeConfig, requests: usize) -> Cell {
+    // Serial per-worker engines: scaling comes from the worker dimension,
+    // not intra-op threading, so the table isolates the batching effect.
+    let server = InferenceServer::start(Arc::clone(frozen), Arc::new(Engine::serial()), cfg);
+    let clients = (2 * cfg.max_batch).clamp(8, 64);
+    let d = frozen.input_len();
+    let mut data = SynthImages::new(
+        42,
+        models::CLASSES,
+        models::IN_C,
+        models::IN_H,
+        models::IN_W,
+        0.5,
+    );
+    let (xs, _) = data.batch(requests);
+
+    let wall = Instant::now();
+    let latencies = std::thread::scope(|scope| {
+        let mut handles = Vec::new();
+        for c in 0..clients {
+            let server = &server;
+            let xs = &xs;
+            handles.push(scope.spawn(move || {
+                let mut lat = Vec::new();
+                let mut i = c;
+                while i < requests {
+                    let input = xs.data[i * d..(i + 1) * d].to_vec();
+                    let t = Instant::now();
+                    server.submit(input).expect("submit").wait().expect("response");
+                    lat.push(t.elapsed().as_secs_f64());
+                    i += clients;
+                }
+                lat
+            }));
+        }
+        let mut lat = Vec::new();
+        for h in handles {
+            lat.extend(h.join().expect("client"));
+        }
+        lat
+    });
+    let secs = wall.elapsed().as_secs_f64();
+    let stats = server.shutdown();
+    Cell {
+        qps: requests as f64 / secs,
+        p50_us: percentile(&latencies, 50.0) * 1e6,
+        p99_us: percentile(&latencies, 99.0) * 1e6,
+        mean_batch: stats.mean_batch(),
+    }
+}
+
+fn main() {
+    let quick = std::env::var("BENCH_QUICK").is_ok();
+    let requests = std::env::var("APT_SERVE_REQUESTS")
+        .ok()
+        .and_then(|v| v.trim().parse().ok())
+        .unwrap_or(if quick { 96 } else { 384 });
+
+    let modes = [
+        ("f32", QuantMode::Float32),
+        ("int8", QuantMode::Static(8)),
+        ("int16", QuantMode::Static(16)),
+    ];
+    let batch_sweep = [1usize, 8, 32];
+    let worker_sweep = [1usize, 2, 4];
+
+    println!(
+        "bench_serve_throughput — mlp, {requests} requests/cell, closed-loop clients = 2×batch"
+    );
+    println!(
+        "{:<7} {:>8} {:>7} {:>9} {:>10} {:>10} {:>11}",
+        "model", "workers", "batch", "QPS", "p50 µs", "p99 µs", "mean batch"
+    );
+
+    let mut csv = Csv::new(
+        results_dir().join("serve_throughput.csv"),
+        &["precision", "workers", "max_batch", "requests", "qps", "p50_us", "p99_us", "mean_batch"],
+    );
+    for (label, mode) in modes {
+        let frozen = Arc::new(frozen_for(mode));
+        for &workers in &worker_sweep {
+            for &max_batch in &batch_sweep {
+                let cfg = ServeConfig {
+                    max_batch,
+                    max_wait_us: 200,
+                    queue_cap: 256,
+                    workers,
+                };
+                let cell = run_cell(&frozen, cfg, requests);
+                println!(
+                    "{:<7} {:>8} {:>7} {:>9.0} {:>10.1} {:>10.1} {:>11.2}",
+                    label, workers, max_batch, cell.qps, cell.p50_us, cell.p99_us, cell.mean_batch
+                );
+                csv.row(&[
+                    label.to_string(),
+                    workers.to_string(),
+                    max_batch.to_string(),
+                    requests.to_string(),
+                    format!("{:.1}", cell.qps),
+                    format!("{:.2}", cell.p50_us),
+                    format!("{:.2}", cell.p99_us),
+                    format!("{:.3}", cell.mean_batch),
+                ]);
+            }
+        }
+        println!();
+    }
+    csv.write().unwrap();
+    println!("wrote {}", results_dir().join("serve_throughput.csv").display());
+    println!("fill the EXPERIMENTS.md §Serve table from the CSV");
+}

@@ -9,9 +9,11 @@
 //! Three-layer architecture (see DESIGN.md):
 //! - **L3** (this crate): coordinator — `apt` controller, `nn` training
 //!   substrate, the unified `train::Session` front-end over the host and
-//!   PJRT backends (DESIGN.md §Session-API), experiment drivers, PJRT
-//!   `runtime` for the AOT artifacts, and the parallel `kernels` engine the
-//!   numeric hot paths dispatch through (DESIGN.md §Kernel-Engine).
+//!   PJRT backends (DESIGN.md §Session-API), the `serve` inference
+//!   subsystem that deploys frozen int8 checkpoints behind a micro-batching
+//!   server (DESIGN.md §Serving), experiment drivers, PJRT `runtime` for
+//!   the AOT artifacts, and the parallel `kernels` engine the numeric hot
+//!   paths dispatch through (DESIGN.md §Kernel-Engine).
 //! - **L2** (`python/compile/model.py`): JAX train-step graphs, AOT-lowered
 //!   to HLO text at build time.
 //! - **L1** (`python/compile/kernels/`): Pallas quantization/stats/qmatmul
@@ -38,6 +40,7 @@ pub mod kernels;
 pub mod nn;
 pub mod opcount;
 pub mod runtime;
+pub mod serve;
 pub mod tensor;
 pub mod train;
 pub mod util;

@@ -3,13 +3,19 @@
 //! Subcommands:
 //!   exp <id|all> [--iters N ...]   run a paper experiment (fig1..table5)
 //!   train [--model M --mode Q]     train one classifier and report
+//!   serve [--ckpt F --model M]     serve a checkpoint with micro-batching
 //!   opcount [--batch N]            print the Fig7/Table5 analytic counts
 //!   list                           list experiments and models
+use std::sync::Arc;
+use std::time::Instant;
+
 use apt::exp;
 use apt::exp::common::grad_mix_string;
-use apt::nn::QuantMode;
+use apt::nn::{models, QuantMode};
+use apt::serve::{FrozenModel, InferenceServer, ServeConfig};
 use apt::train::SessionBuilder;
 use apt::util::cli::Args;
+use apt::util::stats::percentile;
 
 fn usage() -> ! {
     eprintln!(
@@ -19,6 +25,9 @@ fn usage() -> ! {
          \x20 exp <id|all> [--iters N] [--quick]   run a paper experiment\n\
          \x20 train [--model alexnet|vgg|resnet|mobilenet|inception|mlp]\n\
          \x20       [--mode float32|adaptive|int8|int16] [--iters N] [--lr F]\n\
+         \x20 serve [--ckpt file] [--model mlp] [--mode int8] [--train-iters N]\n\
+         \x20       [--seed N] [--requests N] [--clients N] [--workers N]\n\
+         \x20       [--max-batch N] [--max-wait-us N]\n\
          \x20 opcount [--batch N]\n\
          \x20 list\n\
          \n\
@@ -29,6 +38,162 @@ fn usage() -> ! {
         exp::ALL.join(" ")
     );
     std::process::exit(2);
+}
+
+/// Parse a `--mode` string; `iters` sizes the adaptive init phase.
+fn parse_mode(s: &str, iters: u64) -> QuantMode {
+    match s {
+        "float32" | "f32" => QuantMode::Float32,
+        "adaptive" => {
+            let mut cfg = apt::apt::AptConfig::default();
+            cfg.init_phase_iters = iters / 10;
+            QuantMode::Adaptive(cfg)
+        }
+        s if s.starts_with("int") => QuantMode::Static(s[3..].parse().expect("intN")),
+        other => {
+            eprintln!("unknown mode {other:?}");
+            usage();
+        }
+    }
+}
+
+/// `apt serve`: close the train→deploy loop. Loads (or quickly trains) a
+/// checkpoint, freezes it to pre-quantized weights, starts the
+/// micro-batching [`InferenceServer`], and answers a synthetic concurrent
+/// workload, reporting accuracy, QPS and client-side p50/p99 latency
+/// (protocol: EXPERIMENTS.md §Serve).
+fn cmd_serve(args: &Args) {
+    let model = args.str_or("model", "mlp");
+    let train_iters = args.u64_or("train-iters", 80);
+    let mode = parse_mode(args.str_or("mode", "int8").as_str(), train_iters);
+    let seed = args.u64_or("seed", 0);
+    let requests = args.usize_or("requests", 512);
+    let clients = args.usize_or("clients", 8).max(1);
+    let cfg = ServeConfig {
+        max_batch: args.usize_or("max-batch", 16),
+        max_wait_us: args.u64_or("max-wait-us", 200),
+        queue_cap: args.usize_or("queue-cap", 256),
+        workers: args.usize_or("workers", 2),
+    };
+
+    let ckpt_path = match args.get("ckpt") {
+        Some(p) => std::path::PathBuf::from(p),
+        None => {
+            // No checkpoint given: train one briefly and save it, so the
+            // serve path below is exactly the deployment path.
+            let path = std::env::temp_dir().join(format!(
+                "apt_serve_{}_{}.ckpt",
+                model,
+                std::process::id()
+            ));
+            println!(
+                "no --ckpt given: training {model} ({}) for {train_iters} iters …",
+                mode.label()
+            );
+            let mut s = SessionBuilder::classifier(&model)
+                .mode(mode)
+                .lr(0.01)
+                .seed(seed)
+                .build();
+            s.run(train_iters).expect("host training cannot fail");
+            s.save_checkpoint(&path).expect("writing checkpoint");
+            println!("checkpoint saved to {}", path.display());
+            path
+        }
+    };
+
+    let frozen =
+        FrozenModel::from_checkpoint(&ckpt_path, &model, mode).expect("freezing checkpoint");
+    println!(
+        "serving {} ({} weights, input width {})",
+        frozen.label(),
+        frozen.precision(),
+        frozen.input_len()
+    );
+    let frozen = Arc::new(frozen);
+    let server = InferenceServer::start(Arc::clone(&frozen), apt::kernels::global_arc(), cfg);
+
+    // Synthetic eval workload drawn from the same stream Session::eval
+    // uses (data seed+1000, eval stream 999 — matches the training run
+    // above; pass the training session's --seed when using --ckpt).
+    let data = apt::data::SynthImages::new(
+        seed + 1000,
+        models::CLASSES,
+        models::IN_C,
+        models::IN_H,
+        models::IN_W,
+        0.5,
+    );
+    let (ex, ey) = data.eval_set(999, requests);
+    let d = frozen.input_len();
+
+    let wall = Instant::now();
+    let (correct, latencies) = std::thread::scope(|scope| {
+        let mut handles = Vec::new();
+        for c in 0..clients {
+            let server = &server;
+            let ex = &ex;
+            let ey = &ey;
+            handles.push(scope.spawn(move || {
+                // Closed-loop client: submit, wait, repeat over its slice.
+                let mut correct = 0usize;
+                let mut lat = Vec::new();
+                let mut i = c;
+                while i < requests {
+                    let input = ex.data[i * d..(i + 1) * d].to_vec();
+                    let t = Instant::now();
+                    let logits = server
+                        .submit(input)
+                        .expect("submit")
+                        .wait()
+                        .expect("response");
+                    lat.push(t.elapsed().as_secs_f64());
+                    let pred = logits
+                        .iter()
+                        .enumerate()
+                        .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                        .map(|(j, _)| j)
+                        .unwrap();
+                    if pred == ey[i] {
+                        correct += 1;
+                    }
+                    i += clients;
+                }
+                (correct, lat)
+            }));
+        }
+        let mut correct = 0usize;
+        let mut lat = Vec::new();
+        for h in handles {
+            let (c, l) = h.join().expect("client thread");
+            correct += c;
+            lat.extend(l);
+        }
+        (correct, lat)
+    });
+    let secs = wall.elapsed().as_secs_f64();
+    let stats = server.shutdown();
+
+    println!(
+        "\n{} requests from {clients} clients in {:.3}s — {:.0} QPS",
+        requests,
+        secs,
+        requests as f64 / secs
+    );
+    println!(
+        "latency p50 {:.1}µs  p99 {:.1}µs   (max_batch {}, max_wait {}µs, {} workers)",
+        percentile(&latencies, 50.0) * 1e6,
+        percentile(&latencies, 99.0) * 1e6,
+        cfg.max_batch,
+        cfg.max_wait_us,
+        cfg.workers
+    );
+    println!(
+        "batches {} (mean size {:.2}), accuracy {:.3}",
+        stats.batches,
+        stats.mean_batch(),
+        correct as f64 / requests as f64
+    );
 }
 
 fn main() {
@@ -54,21 +219,7 @@ fn main() {
         Some("train") => {
             let model = args.str_or("model", "alexnet");
             let iters = args.u64_or("iters", 300);
-            let mode = match args.str_or("mode", "adaptive").as_str() {
-                "float32" | "f32" => QuantMode::Float32,
-                "adaptive" => {
-                    let mut cfg = apt::apt::AptConfig::default();
-                    cfg.init_phase_iters = iters / 10;
-                    QuantMode::Adaptive(cfg)
-                }
-                s if s.starts_with("int") => {
-                    QuantMode::Static(s[3..].parse().expect("intN"))
-                }
-                other => {
-                    eprintln!("unknown mode {other:?}");
-                    usage();
-                }
-            };
+            let mode = parse_mode(args.str_or("mode", "adaptive").as_str(), iters);
             let run = SessionBuilder::classifier(model)
                 .mode(mode)
                 .lr(args.f32_or("lr", 0.01))
@@ -84,6 +235,7 @@ fn main() {
                 iters
             );
         }
+        Some("serve") => cmd_serve(&args),
         Some("opcount") => {
             exp::run("fig7", &args);
             println!();

@@ -40,6 +40,11 @@ impl Layer for ReLU {
     fn name(&self) -> &str {
         &self.name
     }
+
+    fn export_infer(&self, out: &mut Vec<crate::serve::InferOp>) -> bool {
+        out.push(crate::serve::InferOp::Relu);
+        true
+    }
 }
 
 /// 2×2 max pool, stride 2, over NCHW carried as [n, c*h*w].
@@ -111,6 +116,11 @@ impl Layer for MaxPool2 {
     fn name(&self) -> &str {
         &self.name
     }
+
+    fn export_infer(&self, out: &mut Vec<crate::serve::InferOp>) -> bool {
+        out.push(crate::serve::InferOp::MaxPool { c: self.c, h: self.h, w: self.w });
+        true
+    }
 }
 
 /// Global average pool: [n, c*h*w] → [n, c].
@@ -160,6 +170,11 @@ impl Layer for GlobalAvgPool {
 
     fn name(&self) -> &str {
         &self.name
+    }
+
+    fn export_infer(&self, out: &mut Vec<crate::serve::InferOp>) -> bool {
+        out.push(crate::serve::InferOp::GlobalAvgPool { c: self.c, h: self.h, w: self.w });
+        true
     }
 }
 

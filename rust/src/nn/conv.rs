@@ -215,6 +215,24 @@ impl Layer for Conv2d {
             f(&self.name, ctl);
         }
     }
+
+    fn export_infer(&self, out: &mut Vec<crate::serve::InferOp>) -> bool {
+        let (sw, sx) = match &self.ctl {
+            None => (None, None),
+            Some(ctl) => (Some(ctl.w.scheme()), Some(ctl.x.scheme())),
+        };
+        out.push(crate::serve::InferOp::Conv {
+            name: self.name.clone(),
+            geom: self.geom,
+            in_h: self.in_h,
+            in_w: self.in_w,
+            w: self.w.clone(),
+            b: self.b.data.clone(),
+            sw,
+            sx,
+        });
+        true
+    }
 }
 
 /// Depthwise 3×3 convolution (MobileNet's separable building block).
@@ -387,6 +405,24 @@ impl Layer for DepthwiseConv2d {
         if let Some(ctl) = self.ctl.as_mut() {
             f(&self.name, ctl);
         }
+    }
+
+    fn export_infer(&self, out: &mut Vec<crate::serve::InferOp>) -> bool {
+        let (sw, sx) = match &self.ctl {
+            None => (None, None),
+            Some(ctl) => (Some(ctl.w.scheme()), Some(ctl.x.scheme())),
+        };
+        out.push(crate::serve::InferOp::Depthwise {
+            name: self.name.clone(),
+            c: self.c,
+            in_h: self.in_h,
+            in_w: self.in_w,
+            stride: self.stride,
+            w: self.w.clone(),
+            sw,
+            sx,
+        });
+        true
     }
 }
 

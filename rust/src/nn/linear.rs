@@ -164,6 +164,21 @@ impl Layer for Linear {
             f(&self.name, ctl);
         }
     }
+
+    fn export_infer(&self, out: &mut Vec<crate::serve::InferOp>) -> bool {
+        let (sw, sx) = match &self.ctl {
+            None => (None, None),
+            Some(ctl) => (Some(ctl.w.scheme()), Some(ctl.x.scheme())),
+        };
+        out.push(crate::serve::InferOp::Linear {
+            name: self.name.clone(),
+            w: self.w.clone(),
+            b: self.b.data.clone(),
+            sw,
+            sx,
+        });
+        true
+    }
 }
 
 #[cfg(test)]

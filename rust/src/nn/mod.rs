@@ -102,6 +102,13 @@ pub trait Layer {
     /// Visit non-parameter state that must survive a checkpoint (e.g.
     /// batch-norm running statistics), in a deterministic order.
     fn visit_state(&mut self, _f: &mut dyn FnMut(&mut [f32])) {}
+    /// Append this layer's forward-only serving ops (frozen schemes, folded
+    /// eval-mode state — see `serve::FrozenModel`, DESIGN.md §Serving) to
+    /// `out`. Returns `false` when the layer has no serving export (the
+    /// default), which makes the whole freeze fail with the layer's name.
+    fn export_infer(&self, _out: &mut Vec<crate::serve::InferOp>) -> bool {
+        false
+    }
 }
 
 /// A chain of layers.
@@ -199,6 +206,22 @@ impl Sequential {
     /// The last pre-quantization activation gradient seen by a named layer.
     pub fn last_grad_of(&self, layer: &str) -> Option<&Tensor> {
         self.layers.iter().find(|l| l.name() == layer).and_then(|l| l.last_grad())
+    }
+
+    /// Export the whole chain as forward-only serving ops, in forward
+    /// order (the input of `serve::FrozenModel::freeze`). Errors with the
+    /// offending layer's name if any layer has no serving export.
+    pub fn export_infer(&self) -> anyhow::Result<Vec<crate::serve::InferOp>> {
+        let mut ops = Vec::new();
+        for l in &self.layers {
+            if !l.export_infer(&mut ops) {
+                anyhow::bail!(
+                    "layer {:?} has no forward-only serving export (serve::FrozenModel)",
+                    l.name()
+                );
+            }
+        }
+        Ok(ops)
     }
 
     /// Names of gradient-quantizing layers, in forward order — layers whose

@@ -97,6 +97,18 @@ impl Layer for ResidualBlock {
             l.visit_state(f);
         }
     }
+
+    fn export_infer(&self, out: &mut Vec<crate::serve::InferOp>) -> bool {
+        // relu(F(x) + x): save the input, lower the path, add-back + ReLU.
+        out.push(crate::serve::InferOp::Push);
+        for l in &self.path {
+            if !l.export_infer(out) {
+                return false;
+            }
+        }
+        out.push(crate::serve::InferOp::AddPopRelu);
+        true
+    }
 }
 
 /// Two-branch inception block: [1×1 conv ∥ 3×3 conv], channel-concatenated.
@@ -207,6 +219,20 @@ impl Layer for InceptionBlock {
     fn visit_state(&mut self, f: &mut dyn FnMut(&mut [f32])) {
         self.b1.visit_state(f);
         self.b3.visit_state(f);
+    }
+
+    fn export_infer(&self, out: &mut Vec<crate::serve::InferOp>) -> bool {
+        // concat(b1(x), b3(x)): save x, run b1, swap x back, run b3, merge.
+        out.push(crate::serve::InferOp::Push);
+        if !self.b1.export_infer(out) {
+            return false;
+        }
+        out.push(crate::serve::InferOp::Swap);
+        if !self.b3.export_infer(out) {
+            return false;
+        }
+        out.push(crate::serve::InferOp::ConcatPop { c_pop: self.c1, c_cur: self.c3, hw: self.hw });
+        true
     }
 }
 

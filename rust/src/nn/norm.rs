@@ -141,6 +141,26 @@ impl Layer for BatchNorm2d {
         f(&mut self.running_mean);
         f(&mut self.running_var);
     }
+
+    fn export_infer(&self, out: &mut Vec<crate::serve::InferOp>) -> bool {
+        // Fold the running stats: istd carries the per-channel sqrt so the
+        // serving pass is a pure affine, computed with the exact expression
+        // of the eval branch above (bit-identical).
+        let istd: Vec<f32> = self
+            .running_var
+            .iter()
+            .map(|&v| 1.0 / (v + self.eps).sqrt())
+            .collect();
+        out.push(crate::serve::InferOp::BnEval {
+            c: self.c,
+            hw: self.hw,
+            gamma: self.gamma.data.clone(),
+            beta: self.beta.data.clone(),
+            mean: self.running_mean.clone(),
+            istd,
+        });
+        true
+    }
 }
 
 #[cfg(test)]

@@ -1,0 +1,296 @@
+//! Dynamic micro-batching inference server (DESIGN.md §Serving).
+//!
+//! Request flow: [`InferenceServer::submit`] pushes a job onto one bounded
+//! FIFO queue (backpressure: submit blocks while the queue is at
+//! `queue_cap`); `workers` threads each run the batching state machine
+//!
+//! `Idle ── job arrives ──▶ Filling(deadline) ── fill target
+//! (= min(max_batch, queue_cap)) reached or max_wait_us elapsed or
+//! shutdown ──▶ Flush ──▶ Idle`
+//!
+//! A flushing worker drains up to `max_batch` jobs under the queue lock,
+//! releases it, stacks the inputs into one `[n, d]` tensor, runs the shared
+//! [`FrozenModel`] forward on its own [`Engine`] handle, and answers each
+//! job over its private response channel — so responses can never be
+//! mis-paired and per-submitter ordering is the caller's `wait()` order.
+//! While one worker computes, the others keep forming batches from new
+//! arrivals.
+//!
+//! Thread ownership: the model is immutable and shared (`Arc<FrozenModel>`,
+//! `forward(&self)`); each worker owns an `Arc<Engine>` handle for its
+//! GEMMs; the only shared mutable state is the queue behind one `Mutex` +
+//! two `Condvar`s (`not_empty` wakes batchers, `space` wakes blocked
+//! submitters). Shutdown ([`InferenceServer::shutdown`] or drop) closes the
+//! queue, lets the workers drain every accepted job, and joins them — an
+//! accepted request is always answered.
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc;
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread;
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, bail, Result};
+
+use super::frozen::FrozenModel;
+use crate::kernels::Engine;
+use crate::tensor::Tensor;
+
+/// Server tuning knobs.
+#[derive(Clone, Copy, Debug)]
+pub struct ServeConfig {
+    /// Flush a batch as soon as this many requests are queued.
+    pub max_batch: usize,
+    /// Flush a partial batch this many microseconds after a worker starts
+    /// filling one (the latency bound under light load).
+    pub max_wait_us: u64,
+    /// Bounded queue capacity; `submit` blocks (and `try_submit` errors)
+    /// when the queue holds this many un-flushed requests. A `queue_cap`
+    /// smaller than `max_batch` also caps the batch: workers flush at
+    /// `min(max_batch, queue_cap)` rather than waiting out the deadline
+    /// on a queue that can never fill further.
+    pub queue_cap: usize,
+    /// Worker thread count (each forms and runs batches independently).
+    pub workers: usize,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        ServeConfig { max_batch: 16, max_wait_us: 200, queue_cap: 256, workers: 2 }
+    }
+}
+
+/// Counters accumulated over the server's lifetime.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct ServerStats {
+    /// Requests accepted by `submit`/`try_submit`.
+    pub accepted: u64,
+    /// Requests answered by a worker.
+    pub served: u64,
+    /// Batches flushed.
+    pub batches: u64,
+}
+
+impl ServerStats {
+    /// Mean flushed batch size (0 when nothing was served).
+    pub fn mean_batch(&self) -> f64 {
+        if self.batches == 0 {
+            0.0
+        } else {
+            self.served as f64 / self.batches as f64
+        }
+    }
+}
+
+struct Job {
+    input: Vec<f32>,
+    tx: mpsc::Sender<Vec<f32>>,
+}
+
+struct QueueState {
+    q: VecDeque<Job>,
+    closed: bool,
+}
+
+struct Shared {
+    model: Arc<FrozenModel>,
+    cfg: ServeConfig,
+    state: Mutex<QueueState>,
+    not_empty: Condvar,
+    space: Condvar,
+    accepted: AtomicU64,
+    served: AtomicU64,
+    batches: AtomicU64,
+}
+
+/// Handle to one in-flight request; resolve it with
+/// [`wait`](Pending::wait).
+pub struct Pending {
+    rx: mpsc::Receiver<Vec<f32>>,
+}
+
+impl Pending {
+    /// Block until the logits for this request arrive. Errors only if the
+    /// server dropped the request without answering (a worker panicked).
+    pub fn wait(self) -> Result<Vec<f32>> {
+        self.rx
+            .recv()
+            .map_err(|_| anyhow!("inference server dropped the request without answering"))
+    }
+}
+
+/// A running inference server over one [`FrozenModel`]: bounded request
+/// queue, dynamic micro-batching, `workers` forward threads. See the
+/// module docs for the batching state machine and thread-ownership map.
+pub struct InferenceServer {
+    shared: Arc<Shared>,
+    workers: Vec<thread::JoinHandle<()>>,
+}
+
+impl InferenceServer {
+    /// Start the worker threads. `engine` is the kernel-engine handle every
+    /// worker uses for its GEMMs — pass [`crate::kernels::global_arc`] to
+    /// share the process pool, or a dedicated `Engine` to isolate serving
+    /// from training traffic.
+    pub fn start(model: Arc<FrozenModel>, engine: Arc<Engine>, cfg: ServeConfig) -> InferenceServer {
+        assert!(cfg.workers >= 1, "need at least one worker");
+        assert!(cfg.max_batch >= 1, "max_batch must be ≥ 1");
+        assert!(cfg.queue_cap >= 1, "queue_cap must be ≥ 1");
+        let shared = Arc::new(Shared {
+            model,
+            cfg,
+            state: Mutex::new(QueueState { q: VecDeque::new(), closed: false }),
+            not_empty: Condvar::new(),
+            space: Condvar::new(),
+            accepted: AtomicU64::new(0),
+            served: AtomicU64::new(0),
+            batches: AtomicU64::new(0),
+        });
+        let workers = (0..cfg.workers)
+            .map(|i| {
+                let sh = Arc::clone(&shared);
+                let eng = Arc::clone(&engine);
+                thread::Builder::new()
+                    .name(format!("apt-serve-{i}"))
+                    .spawn(move || worker_loop(sh, eng))
+                    .expect("spawn serve worker thread")
+            })
+            .collect();
+        InferenceServer { shared, workers }
+    }
+
+    /// The model being served.
+    pub fn model(&self) -> &FrozenModel {
+        &self.shared.model
+    }
+
+    /// Enqueue one flattened sample, blocking while the queue is full
+    /// (backpressure). Errors if the input width is wrong or the server is
+    /// shut down.
+    pub fn submit(&self, input: Vec<f32>) -> Result<Pending> {
+        self.enqueue(input, true)
+    }
+
+    /// Non-blocking [`submit`](Self::submit): errors immediately when the
+    /// queue is full instead of waiting for space.
+    pub fn try_submit(&self, input: Vec<f32>) -> Result<Pending> {
+        self.enqueue(input, false)
+    }
+
+    fn enqueue(&self, input: Vec<f32>, block: bool) -> Result<Pending> {
+        let want = self.shared.model.input_len();
+        if input.len() != want {
+            bail!("input has {} values, model expects {}", input.len(), want);
+        }
+        let (tx, rx) = mpsc::channel();
+        {
+            let mut st = self.shared.state.lock().unwrap();
+            while st.q.len() >= self.shared.cfg.queue_cap && !st.closed {
+                if !block {
+                    bail!("request queue is full ({} pending)", st.q.len());
+                }
+                st = self.shared.space.wait(st).unwrap();
+            }
+            if st.closed {
+                bail!("inference server is shut down");
+            }
+            st.q.push_back(Job { input, tx });
+        }
+        self.shared.accepted.fetch_add(1, Ordering::Relaxed);
+        self.shared.not_empty.notify_one();
+        Ok(Pending { rx })
+    }
+
+    /// Current lifetime counters.
+    pub fn stats(&self) -> ServerStats {
+        ServerStats {
+            accepted: self.shared.accepted.load(Ordering::Relaxed),
+            served: self.shared.served.load(Ordering::Relaxed),
+            batches: self.shared.batches.load(Ordering::Relaxed),
+        }
+    }
+
+    /// Stop accepting requests, answer everything already queued, join the
+    /// workers, and return the final counters.
+    pub fn shutdown(mut self) -> ServerStats {
+        self.close_and_join();
+        self.stats()
+    }
+
+    fn close_and_join(&mut self) {
+        {
+            let mut st = self.shared.state.lock().unwrap();
+            st.closed = true;
+        }
+        self.shared.not_empty.notify_all();
+        self.shared.space.notify_all();
+        for h in std::mem::take(&mut self.workers) {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for InferenceServer {
+    fn drop(&mut self) {
+        self.close_and_join();
+    }
+}
+
+fn worker_loop(shared: Arc<Shared>, eng: Arc<Engine>) {
+    loop {
+        let jobs = {
+            let mut st = shared.state.lock().unwrap();
+            // Idle: wait for the first request (or shutdown).
+            while st.q.is_empty() && !st.closed {
+                st = shared.not_empty.wait(st).unwrap();
+            }
+            if st.q.is_empty() && st.closed {
+                return;
+            }
+            // Filling: hold the batch open until it is full, the deadline
+            // passes, or the server is closing (then flush what we have).
+            // The fill target is clamped by queue_cap: a queue that can
+            // never reach max_batch must flush when full, not wait out the
+            // deadline while submitters sit blocked on backpressure.
+            let fill_target = shared.cfg.max_batch.min(shared.cfg.queue_cap);
+            let deadline = Instant::now() + Duration::from_micros(shared.cfg.max_wait_us);
+            while st.q.len() < fill_target && !st.closed {
+                let now = Instant::now();
+                if now >= deadline {
+                    break;
+                }
+                let (g, timeout) = shared.not_empty.wait_timeout(st, deadline - now).unwrap();
+                st = g;
+                if timeout.timed_out() {
+                    break;
+                }
+                // Another worker may have drained the queue while we slept.
+                if st.q.is_empty() {
+                    break;
+                }
+            }
+            // Flush.
+            let take = st.q.len().min(shared.cfg.max_batch);
+            st.q.drain(..take).collect::<Vec<Job>>()
+        };
+        shared.space.notify_all();
+        if jobs.is_empty() {
+            continue;
+        }
+        let n = jobs.len();
+        let d = shared.model.input_len();
+        let mut x = Tensor::zeros(&[n, d]);
+        for (i, job) in jobs.iter().enumerate() {
+            x.data[i * d..(i + 1) * d].copy_from_slice(&job.input);
+        }
+        let y = shared.model.forward(&x, &eng);
+        let out_d = y.dim(1);
+        shared.batches.fetch_add(1, Ordering::Relaxed);
+        shared.served.fetch_add(n as u64, Ordering::Relaxed);
+        for (i, job) in jobs.into_iter().enumerate() {
+            // A receiver that gave up (dropped its Pending) is not an error.
+            let _ = job.tx.send(y.data[i * out_d..(i + 1) * out_d].to_vec());
+        }
+    }
+}

@@ -1,0 +1,623 @@
+//! Frozen inference models (DESIGN.md §Serving).
+//!
+//! A [`FrozenModel`] is the deployment form of a trained network: the layer
+//! stack is exported once into a flat list of forward-only ops
+//! ([`InferOp`], produced by `nn::Layer::export_infer`), batch-norm running
+//! statistics are folded into per-channel affine coefficients, and the
+//! weights of every quantized GEMM are converted **once** into int8/int16
+//! codes (int8 weights pre-packed into the transposed BT layout the VNNI
+//! kernels consume). Serving then runs integer GEMMs + one rescale per
+//! layer through the [`crate::kernels::Engine`] — no gradient buffers, no
+//! QEM/QPA controller probes, no training caches.
+//!
+//! **Parity contract.** With 8-bit schemes the integer serving path is
+//! *bit-identical* to `train::Session::eval` whenever every GEMM's depth
+//! satisfies `k · 2¹⁴ < 2²⁴` (k ≤ 1024): all products and partial sums are
+//! then exact in both the fake-quant f32 reference and the i32 accumulator,
+//! so the two paths compute the same reals. Every model in the zoo is far
+//! under the bound; `rust/tests/test_serve.rs` pins the property. 16-bit
+//! schemes exceed f32's 24-bit mantissa in the reference path, so int16
+//! serving agrees only to float rounding (the integer path is the *more*
+//! exact of the two).
+
+use std::path::Path;
+
+use anyhow::{anyhow, Result};
+
+use crate::fixedpoint::conv::{im2col, Conv2dGeom};
+use crate::fixedpoint::gemm_simd;
+use crate::fixedpoint::quantize;
+use crate::fixedpoint::Scheme;
+use crate::kernels::Engine;
+use crate::nn::{models, QuantMode, Sequential};
+use crate::tensor::Tensor;
+use crate::train::checkpoint::Checkpoint;
+use crate::util::Pcg32;
+
+/// One forward-only primitive exported by an `nn` layer for serving
+/// (DESIGN.md §Serving). Composite blocks lower to several ops around the
+/// small value-stack ops ([`InferOp::Push`] / [`InferOp::Swap`] /
+/// [`InferOp::AddPopRelu`] / [`InferOp::ConcatPop`]).
+pub enum InferOp {
+    /// Fully-connected `y = x̂·Ŵ + b`; schemes are present iff the layer
+    /// trained quantized.
+    Linear {
+        /// Layer name (diagnostics only).
+        name: String,
+        /// Weight matrix, `din × dout` row-major.
+        w: Tensor,
+        /// Bias, length `dout`.
+        b: Vec<f32>,
+        /// Frozen weight scheme (from the layer's W controller).
+        sw: Option<Scheme>,
+        /// Frozen activation scheme (from the layer's X controller).
+        sx: Option<Scheme>,
+    },
+    /// im2col convolution with the training-time geometry.
+    Conv {
+        /// Layer name (diagnostics only).
+        name: String,
+        /// Convolution geometry (channels, kernel, stride, padding).
+        geom: Conv2dGeom,
+        /// Input height.
+        in_h: usize,
+        /// Input width.
+        in_w: usize,
+        /// Weights, `out_c × (in_c·kh·kw)` row-major.
+        w: Tensor,
+        /// Per-output-channel bias.
+        b: Vec<f32>,
+        /// Frozen weight scheme.
+        sw: Option<Scheme>,
+        /// Frozen activation (patch) scheme.
+        sx: Option<Scheme>,
+    },
+    /// Depthwise 3×3 convolution (scalar kernel; quantization applies as
+    /// fake-quant, matching training).
+    Depthwise {
+        /// Layer name (diagnostics only).
+        name: String,
+        /// Channel count.
+        c: usize,
+        /// Input height.
+        in_h: usize,
+        /// Input width.
+        in_w: usize,
+        /// Stride.
+        stride: usize,
+        /// Per-channel 3×3 kernels, `c × 9`.
+        w: Tensor,
+        /// Frozen weight scheme.
+        sw: Option<Scheme>,
+        /// Frozen activation scheme.
+        sx: Option<Scheme>,
+    },
+    /// Elementwise `max(0, x)`.
+    Relu,
+    /// 2×2 stride-2 max pool over `[n, c·h·w]`.
+    MaxPool {
+        /// Channels.
+        c: usize,
+        /// Input height.
+        h: usize,
+        /// Input width.
+        w: usize,
+    },
+    /// Global average pool `[n, c·h·w] → [n, c]`.
+    GlobalAvgPool {
+        /// Channels.
+        c: usize,
+        /// Input height.
+        h: usize,
+        /// Input width.
+        w: usize,
+    },
+    /// Batch-norm running statistics folded for evaluation:
+    /// `y = γ·(x−μ)·istd + β` with `istd = 1/√(σ²+ε)` precomputed per
+    /// channel (the expensive part of the eval pass — no sqrt at serve
+    /// time, and bit-identical to `BatchNorm2d`'s eval branch).
+    BnEval {
+        /// Channels.
+        c: usize,
+        /// Spatial size per channel (`h·w`).
+        hw: usize,
+        /// Scale γ per channel.
+        gamma: Vec<f32>,
+        /// Shift β per channel.
+        beta: Vec<f32>,
+        /// Running mean μ per channel.
+        mean: Vec<f32>,
+        /// Folded inverse stddev `1/√(σ²+ε)` per channel.
+        istd: Vec<f32>,
+    },
+    /// Save (duplicate) the current activation on the value stack —
+    /// residual/branch entry.
+    Push,
+    /// Swap the current activation with the stack top — second-branch
+    /// entry (the saved input becomes current again).
+    Swap,
+    /// Pop the saved tensor, add it to the current activation, then ReLU —
+    /// residual exit (`relu(F(x) + x)`).
+    AddPopRelu,
+    /// Pop the saved tensor and channel-concatenate `[popped ; current]` —
+    /// branch merge (Inception).
+    ConcatPop {
+        /// Channels of the popped (first) tensor.
+        c_pop: usize,
+        /// Channels of the current (second) tensor.
+        c_cur: usize,
+        /// Spatial size per channel.
+        hw: usize,
+    },
+}
+
+/// Pre-quantized weight form of one frozen linear layer.
+enum LinKind {
+    /// Unquantized f32 weights (`din × dout`).
+    F32 { w: Tensor },
+    /// int8 codes, pre-packed transposed (BT) with per-column sums for the
+    /// VNNI bias trick.
+    I8 { bt: Vec<i8>, colsum: Vec<i32>, sw: Scheme, sx: Scheme },
+    /// int16 codes, pre-packed transposed.
+    I16 { bt: Vec<i16>, sw: Scheme, sx: Scheme },
+    /// Wider-than-16-bit scheme: pre-fake-quantized f32 weights, f32 GEMM.
+    Fq { wq: Tensor, sx: Scheme },
+}
+
+struct ExecLinear {
+    din: usize,
+    dout: usize,
+    b: Vec<f32>,
+    kind: LinKind,
+}
+
+/// Pre-quantized weight form of one frozen convolution.
+enum ConvKind {
+    F32 { w: Vec<f32> },
+    I8 { cw: Vec<i8>, sw: Scheme, sx: Scheme },
+    I16 { cw: Vec<i16>, sw: Scheme, sx: Scheme },
+    Fq { wq: Vec<f32>, sx: Scheme },
+}
+
+struct ExecConv {
+    geom: Conv2dGeom,
+    in_h: usize,
+    in_w: usize,
+    b: Vec<f32>,
+    kind: ConvKind,
+}
+
+struct ExecDw {
+    c: usize,
+    in_h: usize,
+    in_w: usize,
+    stride: usize,
+    /// Pre-fake-quantized (or plain f32) kernels, `c × 9`.
+    wq: Vec<f32>,
+    sx: Option<Scheme>,
+}
+
+enum ExecOp {
+    Linear(ExecLinear),
+    Conv(ExecConv),
+    Depthwise(ExecDw),
+    Relu,
+    MaxPool { c: usize, h: usize, w: usize },
+    Gap { c: usize, h: usize, w: usize },
+    Bn { c: usize, hw: usize, gamma: Vec<f32>, beta: Vec<f32>, mean: Vec<f32>, istd: Vec<f32> },
+    Push,
+    Swap,
+    AddPopRelu,
+    ConcatPop { c_pop: usize, c_cur: usize, hw: usize },
+}
+
+/// A trained network frozen for serving: forward-only op list with
+/// pre-quantized weights and folded batch-norm statistics. Immutable after
+/// construction — [`forward`](FrozenModel::forward) takes `&self`, so one
+/// model is shared by every [`crate::serve::InferenceServer`] worker behind
+/// an `Arc` with no locking.
+pub struct FrozenModel {
+    label: String,
+    precision: String,
+    din: usize,
+    ops: Vec<ExecOp>,
+}
+
+impl FrozenModel {
+    /// Freeze a live network (e.g. `session.net()` right after training).
+    /// Errors if any layer has no forward-only serving export.
+    pub fn freeze(label: impl Into<String>, net: &Sequential) -> Result<FrozenModel> {
+        let ops = net.export_infer()?;
+        Self::compile(label.into(), ops)
+    }
+
+    /// Load a `train::checkpoint` file and freeze it: rebuilds the named
+    /// model-zoo architecture under `mode`, restores parameters, controller
+    /// schemes and batch-norm running stats from the checkpoint, and
+    /// pre-quantizes the weights. This is the train→deploy hand-off: the
+    /// checkpoint must come from a session built with the same
+    /// `(model, mode)` pair (shapes are verified during restore).
+    pub fn from_checkpoint(
+        path: impl AsRef<Path>,
+        model: &str,
+        mode: QuantMode,
+    ) -> Result<FrozenModel> {
+        // `read` already contextualizes I/O errors with the path.
+        let ck = Checkpoint::read(path.as_ref())?;
+        // Parameters are overwritten by the restore; the init seed is moot.
+        let mut rng = Pcg32::seeded(0);
+        let mut net = models::by_name(model, mode, &mut rng)
+            .ok_or_else(|| anyhow!("unknown model {model:?}"))?;
+        ck.restore_net(&mut net)?;
+        Self::freeze(format!("{model}-{}", mode.label()), &net)
+    }
+
+    fn compile(label: String, ops: Vec<InferOp>) -> Result<FrozenModel> {
+        let din = match ops.first() {
+            Some(InferOp::Linear { w, .. }) => w.dim(0),
+            Some(InferOp::Conv { geom, in_h, in_w, .. }) => geom.in_c * in_h * in_w,
+            Some(InferOp::Depthwise { c, in_h, in_w, .. }) => c * in_h * in_w,
+            _ => return Err(anyhow!("cannot infer input width: model must start with a linear/conv layer")),
+        };
+        let mut max_bits: Option<u8> = None;
+        let mut note = |sw: &Option<Scheme>, sx: &Option<Scheme>| {
+            for s in [sw, sx].into_iter().flatten() {
+                max_bits = Some(max_bits.map_or(s.bits, |m| m.max(s.bits)));
+            }
+        };
+        let mut exec = Vec::with_capacity(ops.len());
+        for op in ops {
+            exec.push(match op {
+                InferOp::Linear { w, b, sw, sx, .. } => {
+                    note(&sw, &sx);
+                    let (din_l, dout) = (w.dim(0), w.dim(1));
+                    let kind = match (sw, sx) {
+                        (Some(sw), Some(sx)) if sw.bits <= 8 && sx.bits <= 8 => {
+                            let mut bt = vec![0i8; w.len()];
+                            let mut colsum = vec![0i32; dout];
+                            gemm_simd::codes_i8_bt(din_l, dout, &w.data, sw, &mut bt, &mut colsum);
+                            LinKind::I8 { bt, colsum, sw, sx }
+                        }
+                        (Some(sw), Some(sx)) if sw.bits <= 16 && sx.bits <= 16 => {
+                            let mut cb = vec![0i16; w.len()];
+                            quantize::codes_i16(&w.data, &mut cb, sw);
+                            let mut bt = vec![0i16; w.len()];
+                            gemm_simd::pack_bt_i16(din_l, dout, &cb, &mut bt);
+                            LinKind::I16 { bt, sw, sx }
+                        }
+                        (Some(sw), Some(sx)) => {
+                            let mut wq = w.clone();
+                            quantize::fake_quant_stats_inplace(&mut wq.data, sw);
+                            LinKind::Fq { wq, sx }
+                        }
+                        _ => LinKind::F32 { w },
+                    };
+                    ExecOp::Linear(ExecLinear { din: din_l, dout, b, kind })
+                }
+                InferOp::Conv { geom, in_h, in_w, w, b, sw, sx, .. } => {
+                    note(&sw, &sx);
+                    let kind = match (sw, sx) {
+                        (Some(sw), Some(sx)) if sw.bits <= 8 && sx.bits <= 8 => {
+                            let mut cw = vec![0i8; w.len()];
+                            quantize::codes_i8(&w.data, &mut cw, sw);
+                            ConvKind::I8 { cw, sw, sx }
+                        }
+                        (Some(sw), Some(sx)) if sw.bits <= 16 && sx.bits <= 16 => {
+                            let mut cw = vec![0i16; w.len()];
+                            quantize::codes_i16(&w.data, &mut cw, sw);
+                            ConvKind::I16 { cw, sw, sx }
+                        }
+                        (Some(sw), Some(sx)) => {
+                            let mut wq = w.data.clone();
+                            quantize::fake_quant_stats_inplace(&mut wq, sw);
+                            ConvKind::Fq { wq, sx }
+                        }
+                        _ => ConvKind::F32 { w: w.data },
+                    };
+                    ExecOp::Conv(ExecConv { geom, in_h, in_w, b, kind })
+                }
+                InferOp::Depthwise { c, in_h, in_w, stride, w, sw, sx, .. } => {
+                    note(&sw, &sx);
+                    let mut wq = w.data;
+                    if let Some(sw) = sw {
+                        quantize::fake_quant_stats_inplace(&mut wq, sw);
+                    }
+                    ExecOp::Depthwise(ExecDw { c, in_h, in_w, stride, wq, sx })
+                }
+                InferOp::Relu => ExecOp::Relu,
+                InferOp::MaxPool { c, h, w } => ExecOp::MaxPool { c, h, w },
+                InferOp::GlobalAvgPool { c, h, w } => ExecOp::Gap { c, h, w },
+                InferOp::BnEval { c, hw, gamma, beta, mean, istd } => {
+                    ExecOp::Bn { c, hw, gamma, beta, mean, istd }
+                }
+                InferOp::Push => ExecOp::Push,
+                InferOp::Swap => ExecOp::Swap,
+                InferOp::AddPopRelu => ExecOp::AddPopRelu,
+                InferOp::ConcatPop { c_pop, c_cur, hw } => ExecOp::ConcatPop { c_pop, c_cur, hw },
+            });
+        }
+        let precision = match max_bits {
+            None => "f32".to_string(),
+            Some(b) if b <= 8 => "int8".to_string(),
+            Some(b) if b <= 16 => "int16".to_string(),
+            Some(b) => format!("int{b}"),
+        };
+        Ok(FrozenModel { label, precision, din, ops })
+    }
+
+    /// Display label (`"<model>-<mode>"` when built from a checkpoint).
+    pub fn label(&self) -> &str {
+        &self.label
+    }
+
+    /// Serving precision derived from the frozen forward schemes:
+    /// `"f32"`, `"int8"` or `"int16"` (the widest scheme wins).
+    pub fn precision(&self) -> &str {
+        &self.precision
+    }
+
+    /// Flattened per-sample input width the model expects.
+    pub fn input_len(&self) -> usize {
+        self.din
+    }
+
+    /// Forward a batch `[n, input_len]` → logits `[n, classes]`. Pure:
+    /// takes `&self`, so concurrent callers need no synchronization. Rows
+    /// are computed independently, so a sample's logits do not depend on
+    /// what it was batched with (the micro-batching invariant).
+    pub fn forward(&self, x: &Tensor, eng: &Engine) -> Tensor {
+        assert_eq!(x.rank(), 2, "frozen forward expects [n, d] input");
+        assert_eq!(x.dim(1), self.din, "input width {} ≠ model width {}", x.dim(1), self.din);
+        let mut cur = x.clone();
+        let mut stack: Vec<Tensor> = Vec::new();
+        for op in &self.ops {
+            cur = apply(op, cur, &mut stack, eng);
+        }
+        cur
+    }
+
+    /// Forward one flattened sample; returns its logits.
+    pub fn forward_one(&self, x: &[f32], eng: &Engine) -> Vec<f32> {
+        let t = Tensor::from_vec(&[1, x.len()], x.to_vec());
+        self.forward(&t, eng).data
+    }
+}
+
+fn apply(op: &ExecOp, cur: Tensor, stack: &mut Vec<Tensor>, eng: &Engine) -> Tensor {
+    match op {
+        ExecOp::Linear(l) => exec_linear(l, &cur, eng),
+        ExecOp::Conv(cv) => exec_conv(cv, &cur, eng),
+        ExecOp::Depthwise(dw) => exec_depthwise(dw, &cur),
+        ExecOp::Relu => {
+            let mut y = cur;
+            y.map_inplace(|v| v.max(0.0));
+            y
+        }
+        ExecOp::MaxPool { c, h, w } => exec_maxpool(*c, *h, *w, &cur),
+        ExecOp::Gap { c, h, w } => exec_gap(*c, *h, *w, &cur),
+        ExecOp::Bn { c, hw, gamma, beta, mean, istd } => {
+            let mut y = cur;
+            let n = y.dim(0);
+            for ch in 0..*c {
+                let (g, b) = (gamma[ch], beta[ch]);
+                let (m, is) = (mean[ch], istd[ch]);
+                for img in 0..n {
+                    for i in 0..*hw {
+                        let idx = img * c * hw + ch * hw + i;
+                        let v = y.data[idx];
+                        y.data[idx] = g * (v - m) * is + b;
+                    }
+                }
+            }
+            y
+        }
+        ExecOp::Push => {
+            stack.push(cur.clone());
+            cur
+        }
+        ExecOp::Swap => {
+            let mut cur = cur;
+            let top = stack.last_mut().expect("serve stack underflow (Swap)");
+            std::mem::swap(top, &mut cur);
+            cur
+        }
+        ExecOp::AddPopRelu => {
+            let saved = stack.pop().expect("serve stack underflow (AddPopRelu)");
+            let mut h = cur;
+            h.add_inplace(&saved);
+            h.map_inplace(|v| v.max(0.0));
+            h
+        }
+        ExecOp::ConcatPop { c_pop, c_cur, hw } => {
+            let first = stack.pop().expect("serve stack underflow (ConcatPop)");
+            let n = cur.dim(0);
+            let (c1, c3, hw) = (*c_pop, *c_cur, *hw);
+            let mut out = Tensor::zeros(&[n, (c1 + c3) * hw]);
+            for img in 0..n {
+                out.data[img * (c1 + c3) * hw..][..c1 * hw]
+                    .copy_from_slice(&first.data[img * c1 * hw..][..c1 * hw]);
+                out.data[img * (c1 + c3) * hw + c1 * hw..][..c3 * hw]
+                    .copy_from_slice(&cur.data[img * c3 * hw..][..c3 * hw]);
+            }
+            out
+        }
+    }
+}
+
+fn exec_linear(l: &ExecLinear, x: &Tensor, eng: &Engine) -> Tensor {
+    let m = x.dim(0);
+    assert_eq!(x.dim(1), l.din, "linear input width");
+    match &l.kind {
+        LinKind::F32 { w } => {
+            let mut y = x.matmul_with(w, eng);
+            y.add_row_bias(&l.b);
+            y
+        }
+        LinKind::Fq { wq, sx } => {
+            let mut xq = x.clone();
+            eng.fake_quant_stats(&mut xq.data, *sx);
+            let mut y = xq.matmul_with(wq, eng);
+            y.add_row_bias(&l.b);
+            y
+        }
+        LinKind::I8 { bt, colsum, sw, sx } => {
+            let mut ca = vec![0i8; x.len()];
+            eng.codes_i8(&x.data, &mut ca, *sx);
+            let mut acc = vec![0i32; m * l.dout];
+            eng.gemm_i8_prepacked(m, l.din, l.dout, &ca, bt, colsum, &mut acc);
+            let mut y = Tensor::zeros(&[m, l.dout]);
+            eng.rescale_i32(&acc, sw.resolution() * sx.resolution(), &mut y.data);
+            y.add_row_bias(&l.b);
+            y
+        }
+        LinKind::I16 { bt, sw, sx } => {
+            let mut ca = vec![0i16; x.len()];
+            eng.codes_i16(&x.data, &mut ca, *sx);
+            let mut acc = vec![0i32; m * l.dout];
+            eng.gemm_i16_prepacked(m, l.din, l.dout, &ca, bt, &mut acc);
+            let mut y = Tensor::zeros(&[m, l.dout]);
+            eng.rescale_i32(&acc, sw.resolution() * sx.resolution(), &mut y.data);
+            y.add_row_bias(&l.b);
+            y
+        }
+    }
+}
+
+fn exec_conv(cv: &ExecConv, x: &Tensor, eng: &Engine) -> Tensor {
+    let n = x.dim(0);
+    let g = cv.geom;
+    let (h, w) = (cv.in_h, cv.in_w);
+    assert_eq!(x.dim(1), g.in_c * h * w, "conv input size");
+    let (rows, cols) = g.im2col_dims(h, w);
+    let (oh, ow) = g.out_hw(h, w);
+    let mut out = Tensor::zeros(&[n, g.out_c * oh * ow]);
+    // Per-image scratch, hoisted out of the hot loop (sizes are
+    // loop-invariant; every pass fully overwrites its buffer).
+    let mut patch = vec![0.0f32; rows * cols];
+    let (mut cp8, mut cp16, mut acc) = (Vec::new(), Vec::new(), Vec::new());
+    match &cv.kind {
+        ConvKind::I8 { .. } => {
+            cp8 = vec![0i8; rows * cols];
+            acc = vec![0i32; g.out_c * cols];
+        }
+        ConvKind::I16 { .. } => {
+            cp16 = vec![0i16; rows * cols];
+            acc = vec![0i32; g.out_c * cols];
+        }
+        _ => {}
+    }
+    for img in 0..n {
+        let xi = &x.data[img * g.in_c * h * w..(img + 1) * g.in_c * h * w];
+        im2col(g, h, w, xi, &mut patch);
+        let co = &mut out.data[img * g.out_c * cols..(img + 1) * g.out_c * cols];
+        match &cv.kind {
+            ConvKind::F32 { w } => eng.gemm_f32(g.out_c, rows, cols, w, &patch, co),
+            ConvKind::Fq { wq, sx } => {
+                eng.fake_quant_stats(&mut patch, *sx);
+                eng.gemm_f32(g.out_c, rows, cols, wq, &patch, co);
+            }
+            ConvKind::I8 { cw, sw, sx } => {
+                eng.codes_i8(&patch, &mut cp8, *sx);
+                eng.gemm_i8(g.out_c, rows, cols, cw, &cp8, &mut acc);
+                eng.rescale_i32(&acc, sw.resolution() * sx.resolution(), co);
+            }
+            ConvKind::I16 { cw, sw, sx } => {
+                eng.codes_i16(&patch, &mut cp16, *sx);
+                eng.gemm_i16(g.out_c, rows, cols, cw, &cp16, &mut acc);
+                eng.rescale_i32(&acc, sw.resolution() * sx.resolution(), co);
+            }
+        }
+        for oc in 0..g.out_c {
+            let bv = cv.b[oc];
+            for v in co[oc * cols..(oc + 1) * cols].iter_mut() {
+                *v += bv;
+            }
+        }
+    }
+    out
+}
+
+fn exec_depthwise(dw: &ExecDw, x: &Tensor) -> Tensor {
+    let n = x.dim(0);
+    let (c, h, w, stride) = (dw.c, dw.in_h, dw.in_w, dw.stride);
+    assert_eq!(x.dim(1), c * h * w, "depthwise input size");
+    let (oh, ow) = ((h + 2 - 3) / stride + 1, (w + 2 - 3) / stride + 1);
+    let xq = match dw.sx {
+        None => x.clone(),
+        Some(sx) => {
+            let mut xq = x.clone();
+            quantize::fake_quant_stats_inplace(&mut xq.data, sx);
+            xq
+        }
+    };
+    let mut out = Tensor::zeros(&[n, c * oh * ow]);
+    for img in 0..n {
+        for ch in 0..c {
+            let xi = &xq.data[img * c * h * w + ch * h * w..][..h * w];
+            let k = &dw.wq[ch * 9..(ch + 1) * 9];
+            let oi = &mut out.data[img * c * oh * ow + ch * oh * ow..][..oh * ow];
+            for oy in 0..oh {
+                for ox in 0..ow {
+                    let mut acc = 0.0f32;
+                    for ky in 0..3 {
+                        let iy = (oy * stride + ky) as isize - 1;
+                        if iy < 0 || iy >= h as isize {
+                            continue;
+                        }
+                        for kx in 0..3 {
+                            let ix = (ox * stride + kx) as isize - 1;
+                            if ix < 0 || ix >= w as isize {
+                                continue;
+                            }
+                            acc += k[ky * 3 + kx] * xi[iy as usize * w + ix as usize];
+                        }
+                    }
+                    oi[oy * ow + ox] = acc;
+                }
+            }
+        }
+    }
+    out
+}
+
+fn exec_maxpool(c: usize, h: usize, w: usize, x: &Tensor) -> Tensor {
+    let n = x.dim(0);
+    assert_eq!(x.dim(1), c * h * w, "maxpool input size");
+    let (oh, ow) = (h / 2, w / 2);
+    let mut y = Tensor::zeros(&[n, c * oh * ow]);
+    for img in 0..n {
+        for ch in 0..c {
+            let xi = &x.data[img * c * h * w + ch * h * w..][..h * w];
+            let base_o = img * c * oh * ow + ch * oh * ow;
+            for oy in 0..oh {
+                for ox in 0..ow {
+                    let mut best = f32::NEG_INFINITY;
+                    for dy in 0..2 {
+                        for dx in 0..2 {
+                            let idx = (2 * oy + dy) * w + 2 * ox + dx;
+                            if xi[idx] > best {
+                                best = xi[idx];
+                            }
+                        }
+                    }
+                    y.data[base_o + oy * ow + ox] = best;
+                }
+            }
+        }
+    }
+    y
+}
+
+fn exec_gap(c: usize, h: usize, w: usize, x: &Tensor) -> Tensor {
+    let n = x.dim(0);
+    let hw = h * w;
+    assert_eq!(x.dim(1), c * hw, "global-pool input size");
+    let mut y = Tensor::zeros(&[n, c]);
+    for img in 0..n {
+        for ch in 0..c {
+            let s: f32 = x.data[img * c * hw + ch * hw..][..hw].iter().sum();
+            y.data[img * c + ch] = s / hw as f32;
+        }
+    }
+    y
+}

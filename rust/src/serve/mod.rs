@@ -1,0 +1,45 @@
+//! Quantized inference serving (DESIGN.md §Serving) — the deployment side
+//! of the paper's quantization payoff.
+//!
+//! Training (the `train::Session` API) pins weights and activations to int8
+//! the whole run, so a finished checkpoint *is* an int8 model; this module
+//! closes the train→deploy loop that motivates that design (paper §1,
+//! "Efficiency"; cf. the per-tensor fixed-point deployment argument in
+//! PAPERS.md). Two pieces:
+//!
+//! - [`FrozenModel`] — a checkpoint (or live net) frozen for serving:
+//!   forward-only op list, batch-norm running stats folded to per-channel
+//!   affines, weights pre-quantized **once** into int8/int16 codes that
+//!   feed the integer GEMM kernels. No gradient buffers, no controller
+//!   probes, no training caches.
+//! - [`InferenceServer`] — a bounded request queue with dynamic
+//!   micro-batching (flush on `max_batch` or `max_wait_us`) and N worker
+//!   threads, each owning a [`crate::kernels::Engine`] handle.
+//!
+//! ```no_run
+//! use std::sync::Arc;
+//! use apt::nn::QuantMode;
+//! use apt::serve::{FrozenModel, InferenceServer, ServeConfig};
+//!
+//! let frozen = FrozenModel::from_checkpoint("ckpt.txt", "mlp", QuantMode::Static(8)).unwrap();
+//! let server = InferenceServer::start(
+//!     Arc::new(frozen),
+//!     apt::kernels::global_arc(),
+//!     ServeConfig::default(),
+//! );
+//! let pending = server.submit(vec![0.0; server.model().input_len()]).unwrap();
+//! let logits = pending.wait().unwrap();
+//! println!("prediction: {:?}", logits);
+//! ```
+//!
+//! Operational protocol and the throughput/latency table template live in
+//! EXPERIMENTS.md §Serve; `apt serve` (the CLI) and
+//! `examples/serve_quickstart.rs` are runnable end-to-end demos.
+
+#![warn(missing_docs)]
+
+mod batcher;
+mod frozen;
+
+pub use batcher::{InferenceServer, Pending, ServeConfig, ServerStats};
+pub use frozen::{FrozenModel, InferOp};

@@ -37,6 +37,8 @@ pub trait DataSource {
     fn eval_set(&self, seed: u64, n: usize) -> (Tensor, Vec<usize>);
     /// Sample-stream RNG state (checkpointing).
     fn rng_state(&self) -> (u64, u64);
+    /// Restore a [`rng_state`](DataSource::rng_state) snapshot so batches
+    /// continue the interrupted stream bit-identically.
     fn set_rng_state(&mut self, st: (u64, u64));
 }
 
@@ -83,6 +85,7 @@ pub trait Backend {
 /// gradient zeroing (§Session-API ordering: gradients of step *i* stay
 /// observable until step *i+1* begins).
 pub struct HostBackend {
+    /// The live network (reach it through `Session::{net, net_mut}`).
     pub net: Sequential,
     pub(super) data: Box<dyn DataSource>,
     pub(super) ctx: TrainCtx,
@@ -95,6 +98,8 @@ pub struct HostBackend {
 }
 
 impl HostBackend {
+    /// Assemble a host backend from its parts (the `SessionBuilder` is the
+    /// usual constructor; this is the escape hatch for custom data/nets).
     pub fn new(
         net: Sequential,
         data: Box<dyn DataSource>,
@@ -169,6 +174,7 @@ impl Backend for HostBackend {
 /// One seeded RNG drives model init *and* the batch stream, matching the
 /// original Fig 9a driver exactly.
 pub struct Seq2SeqBackend {
+    /// The live encoder–decoder model.
     pub model: Seq2Seq,
     rng: Pcg32,
     ctx: TrainCtx,
@@ -181,6 +187,8 @@ pub struct Seq2SeqBackend {
 }
 
 impl Seq2SeqBackend {
+    /// Build the Fig 9a translation setup: a seeded RNG initializes the
+    /// model and then drives the token-reversal batch stream.
     pub fn new(
         label: impl Into<String>,
         vocab: usize,
@@ -250,6 +258,7 @@ impl Backend for Seq2SeqBackend {
 /// backend serves LM tokens, MLP batches, or anything the manifest expects.
 pub struct PjrtBackend<'r> {
     rt: &'r mut Runtime,
+    /// The artifact trainer (slot metadata, controllers, ledger).
     pub trainer: ArtifactTrainer,
     data: Box<dyn FnMut(u64) -> Vec<HostValue> + 'r>,
     lr: f32,
@@ -258,6 +267,8 @@ pub struct PjrtBackend<'r> {
 }
 
 impl<'r> PjrtBackend<'r> {
+    /// Compile-free construction over an already-loaded artifact: infers
+    /// slots from the manifest and initializes parameters host-side.
     pub fn new(
         rt: &'r mut Runtime,
         artifact: &str,

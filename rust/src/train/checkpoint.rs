@@ -15,6 +15,15 @@
 //! decimal round-tripping. Architecture/config are not stored; the caller
 //! rebuilds the session from the same `SessionBuilder` configuration and
 //! `load` verifies names, slots and shapes as it walks.
+//!
+//! The public surface is [`Checkpoint`]: `read` parses a file without
+//! needing a session, and `restore_net` applies the network-owned portion
+//! (parameters, controller schemes, batch-norm state) to any compatible
+//! [`Sequential`] — the hand-off `serve::FrozenModel::from_checkpoint`
+//! uses to deploy a trained model without optimizer or data-stream
+//! baggage. Session save/restore (`Session::{save,load}_checkpoint`) rides
+//! on the same type and additionally round-trips optimizer buffers, the
+//! ledger, the loss curve and the data RNG.
 
 use std::fmt::Write as _;
 use std::path::Path;
@@ -26,6 +35,7 @@ use super::{HostBackend, Session};
 use crate::apt::{ControllerState, Ledger};
 use crate::apt::ledger::Event;
 use crate::fixedpoint::TensorKind;
+use crate::nn::Sequential;
 
 const MAGIC: &str = "aptckpt";
 const VERSION: &str = "v1";
@@ -220,9 +230,9 @@ struct CtlRec {
 }
 
 /// Everything a checkpoint file contains, fully parsed before any of it is
-/// applied — `load` validates the whole file against the session and only
-/// then mutates, so a failed restore leaves the session untouched.
-struct Parsed {
+/// applied — restores validate the whole file against the target and only
+/// then mutate, so a failed restore leaves the target untouched.
+pub struct Checkpoint {
     iter: u64,
     losses: Vec<f32>,
     opt_name: String,
@@ -234,7 +244,140 @@ struct Parsed {
     data_rng: (u64, u64),
 }
 
-fn parse(text: &str) -> Result<Parsed> {
+impl Checkpoint {
+    /// Parse a checkpoint file. No session is needed: the result can feed
+    /// either a full [`Session::load_checkpoint`] restore or a
+    /// forward-only [`restore_net`](Checkpoint::restore_net).
+    pub fn read(path: &Path) -> Result<Checkpoint> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading checkpoint {path:?}"))?;
+        parse(&text)
+    }
+
+    /// Iteration count the checkpoint was taken at.
+    pub fn iters_done(&self) -> u64 {
+        self.iter
+    }
+
+    /// Optimizer identifier recorded at save time (`"sgd"` / `"adam"`).
+    pub fn optimizer(&self) -> &str {
+        &self.opt_name
+    }
+
+    /// Restore the network-owned portion — parameter tensors, per-tensor
+    /// controller decision state (frozen schemes included), and
+    /// non-parameter layer state such as batch-norm running statistics —
+    /// into a net built with the same architecture and [`crate::nn::QuantMode`].
+    /// Validates every name, slot and shape against the net before
+    /// mutating anything; on error the net is untouched. Optimizer
+    /// buffers, ledger, loss curve and data RNG are not applied (they are
+    /// session state, not model state).
+    pub fn restore_net(&self, net: &mut Sequential) -> Result<()> {
+        // ---- validate (read-only) ----
+        {
+            let mut i = 0usize;
+            let mut err: Option<String> = None;
+            net.visit_params_slotted(&mut |layer, slot, p, _| {
+                if err.is_none() {
+                    match self.params.get(i) {
+                        None => err = Some(format!("checkpoint has only {i} parameters")),
+                        Some(r) if r.layer != layer || r.slot != slot || r.shape != p.shape => {
+                            err = Some(format!(
+                                "parameter mismatch at {i}: checkpoint {}#{} {:?} vs net {layer}#{slot} {:?}",
+                                r.layer, r.slot, r.shape, p.shape
+                            ));
+                        }
+                        Some(_) => {}
+                    }
+                }
+                i += 1;
+            });
+            if let Some(e) = err {
+                bail!("{e}");
+            }
+            if i != self.params.len() {
+                bail!("net has {i} parameters, checkpoint has {}", self.params.len());
+            }
+        }
+        {
+            let mut i = 0usize;
+            let mut err: Option<String> = None;
+            net.visit_controllers(&mut |layer, _| {
+                if err.is_none() {
+                    match self.ctls.get(i) {
+                        None => err = Some(format!("checkpoint has only {i} controller sets")),
+                        Some(r) if r.layer != layer => {
+                            err = Some(format!("controller mismatch: {} vs {layer}", r.layer))
+                        }
+                        Some(_) => {}
+                    }
+                }
+                i += 1;
+            });
+            if let Some(e) = err {
+                bail!("{e}");
+            }
+            if i != self.ctls.len() {
+                bail!("net has {i} controller sets, checkpoint has {}", self.ctls.len());
+            }
+        }
+        {
+            let mut i = 0usize;
+            let mut err: Option<String> = None;
+            net.visit_state(&mut |buf| {
+                if err.is_none() {
+                    match self.state_bufs.get(i) {
+                        None => err = Some(format!("checkpoint has only {i} state buffers")),
+                        Some(b) if b.len() != buf.len() => {
+                            err = Some(format!(
+                                "state buffer {i} length {} vs {}",
+                                b.len(),
+                                buf.len()
+                            ))
+                        }
+                        Some(_) => {}
+                    }
+                }
+                i += 1;
+            });
+            if let Some(e) = err {
+                bail!("{e}");
+            }
+            if i != self.state_bufs.len() {
+                bail!("net has {i} state buffers, checkpoint has {}", self.state_bufs.len());
+            }
+        }
+
+        // ---- apply (cannot fail past this point) ----
+        {
+            let mut i = 0usize;
+            net.visit_params_slotted(&mut |_, _, p, _| {
+                p.data.copy_from_slice(&self.params[i].data);
+                i += 1;
+            });
+        }
+        {
+            let mut i = 0usize;
+            net.visit_controllers(&mut |_, lc| {
+                let r = &self.ctls[i];
+                lc.w.restore(&r.st[0]);
+                lc.x.restore(&r.st[1]);
+                lc.g.restore(&r.st[2]);
+                i += 1;
+            });
+        }
+        {
+            let mut i = 0usize;
+            net.visit_state(&mut |buf| {
+                buf.copy_from_slice(&self.state_bufs[i]);
+                i += 1;
+            });
+        }
+        Ok(())
+    }
+}
+
+fn parse(text: &str) -> Result<Checkpoint> {
     let mut lx = Lexer { toks: text.split_ascii_whitespace() };
     lx.expect(MAGIC)?;
     lx.expect(VERSION)?;
@@ -350,7 +493,7 @@ fn parse(text: &str) -> Result<Parsed> {
     let data_rng = (lx.u64()?, lx.u64()?);
     lx.expect("end")?;
 
-    Ok(Parsed {
+    Ok(Checkpoint {
         iter,
         losses,
         opt_name,
@@ -366,14 +509,12 @@ fn parse(text: &str) -> Result<Parsed> {
 /// Restore `path` into a session built with the checkpoint's configuration.
 /// Parse → validate → apply: nothing in the session is mutated until the
 /// whole file has been checked against the net's parameter/controller/state
-/// layout.
+/// layout (the network portion rides on [`Checkpoint::restore_net`], which
+/// upholds the same contract).
 pub(super) fn load(session: &mut Session<HostBackend>, path: &Path) -> Result<()> {
-    let text = std::fs::read_to_string(path)
-        .with_context(|| format!("reading checkpoint {path:?}"))?;
-    let ck = parse(&text)?;
+    let ck = Checkpoint::read(path)?;
     let host = &mut session.backend;
 
-    // ---- validate (read-only) ----
     if ck.opt_name != host.opt.name() {
         bail!(
             "checkpoint optimizer {:?} ≠ session optimizer {:?}",
@@ -381,102 +522,10 @@ pub(super) fn load(session: &mut Session<HostBackend>, path: &Path) -> Result<()
             host.opt.name()
         );
     }
-    {
-        let mut i = 0usize;
-        let mut err: Option<String> = None;
-        host.net.visit_params_slotted(&mut |layer, slot, p, _| {
-            if err.is_none() {
-                match ck.params.get(i) {
-                    None => err = Some(format!("checkpoint has only {i} parameters")),
-                    Some(r) if r.layer != layer || r.slot != slot || r.shape != p.shape => {
-                        err = Some(format!(
-                            "parameter mismatch at {i}: checkpoint {}#{} {:?} vs net {layer}#{slot} {:?}",
-                            r.layer, r.slot, r.shape, p.shape
-                        ));
-                    }
-                    Some(_) => {}
-                }
-            }
-            i += 1;
-        });
-        if let Some(e) = err {
-            bail!("{e}");
-        }
-        if i != ck.params.len() {
-            bail!("net has {i} parameters, checkpoint has {}", ck.params.len());
-        }
-    }
-    {
-        let mut i = 0usize;
-        let mut err: Option<String> = None;
-        host.net.visit_controllers(&mut |layer, _| {
-            if err.is_none() {
-                match ck.ctls.get(i) {
-                    None => err = Some(format!("checkpoint has only {i} controller sets")),
-                    Some(r) if r.layer != layer => {
-                        err = Some(format!("controller mismatch: {} vs {layer}", r.layer))
-                    }
-                    Some(_) => {}
-                }
-            }
-            i += 1;
-        });
-        if let Some(e) = err {
-            bail!("{e}");
-        }
-        if i != ck.ctls.len() {
-            bail!("net has {i} controller sets, checkpoint has {}", ck.ctls.len());
-        }
-    }
-    {
-        let mut i = 0usize;
-        let mut err: Option<String> = None;
-        host.net.visit_state(&mut |buf| {
-            if err.is_none() {
-                match ck.state_bufs.get(i) {
-                    None => err = Some(format!("checkpoint has only {i} state buffers")),
-                    Some(b) if b.len() != buf.len() => {
-                        err = Some(format!("state buffer {i} length {} vs {}", b.len(), buf.len()))
-                    }
-                    Some(_) => {}
-                }
-            }
-            i += 1;
-        });
-        if let Some(e) = err {
-            bail!("{e}");
-        }
-        if i != ck.state_bufs.len() {
-            bail!("net has {i} state buffers, checkpoint has {}", ck.state_bufs.len());
-        }
-    }
+    ck.restore_net(&mut host.net)?;
 
-    // ---- apply (cannot fail past this point) ----
+    // ---- session-only state (cannot fail past this point) ----
     host.opt.load_state(ck.opt_state);
-    {
-        let mut i = 0usize;
-        host.net.visit_params_slotted(&mut |_, _, p, _| {
-            p.data.copy_from_slice(&ck.params[i].data);
-            i += 1;
-        });
-    }
-    {
-        let mut i = 0usize;
-        host.net.visit_controllers(&mut |_, lc| {
-            let r = &ck.ctls[i];
-            lc.w.restore(&r.st[0]);
-            lc.x.restore(&r.st[1]);
-            lc.g.restore(&r.st[2]);
-            i += 1;
-        });
-    }
-    {
-        let mut i = 0usize;
-        host.net.visit_state(&mut |buf| {
-            buf.copy_from_slice(&ck.state_bufs[i]);
-            i += 1;
-        });
-    }
     host.ctx.ledger = ck.ledger;
     host.data.set_rng_state(ck.data_rng);
 

@@ -24,8 +24,10 @@
 //! println!("{}: eval acc {:.3}", record.label, record.eval_acc);
 //! ```
 
+#![warn(missing_docs)]
+
 mod backend;
-mod checkpoint;
+pub mod checkpoint;
 mod optim;
 
 pub use backend::{Backend, DataSource, HostBackend, PjrtBackend, Seq2SeqBackend};
@@ -53,7 +55,9 @@ pub enum Phase {
 
 /// What a hook sees.
 pub struct StepInfo<'a> {
+    /// Iteration index of the step being observed (0-based).
     pub iter: u64,
+    /// Training loss of this step.
     pub loss: f32,
     /// The live network on host paths; `None` on device backends.
     pub net: Option<&'a Sequential>,
@@ -66,7 +70,9 @@ pub struct StepInfo<'a> {
 /// change that leaves its layer alone.
 #[derive(Clone, Debug, PartialEq, Eq)]
 pub struct ParamId {
+    /// Owning layer's name (ledger key).
     pub layer: String,
+    /// Index within that layer's `visit_params` order.
     pub slot: usize,
 }
 
@@ -79,7 +85,9 @@ impl fmt::Display for ParamId {
 /// One addressable parameter.
 #[derive(Clone, Debug)]
 pub struct ParamInfo {
+    /// Stable address of the parameter.
     pub id: ParamId,
+    /// Tensor shape.
     pub shape: Vec<usize>,
 }
 
@@ -95,11 +103,13 @@ pub struct EvalOut {
 /// Uniform result of a finished run — the successor of the ad-hoc
 /// `TrainRun` structs each driver used to carry.
 pub struct TrainRecord {
+    /// Run label (e.g. `"alexnet-adaptive"`).
     pub label: String,
     /// Per-iteration training losses.
     pub losses: Vec<f32>,
     /// Held-out accuracy (NaN when the backend has no eval path).
     pub eval_acc: f64,
+    /// Held-out loss, where the backend computes one.
     pub eval_loss: Option<f32>,
     /// QEM/QPA decision ledger for the whole run.
     pub ledger: Ledger,
@@ -177,22 +187,27 @@ impl<'h, B: Backend> Session<'h, B> {
         self.backend.eval(self.iter)
     }
 
+    /// Display label of the run (e.g. `"alexnet-adaptive"`).
     pub fn label(&self) -> &str {
         &self.label
     }
 
+    /// Number of steps taken so far.
     pub fn iters_done(&self) -> u64 {
         self.iter
     }
 
+    /// Training losses of every step so far.
     pub fn losses(&self) -> &[f32] {
         &self.losses
     }
 
+    /// Currently applied gradient bit-widths, where the backend tracks them.
     pub fn grad_bits(&self) -> Vec<(String, u8)> {
         self.backend.grad_bits()
     }
 
+    /// The underlying backend (e.g. to reach `PjrtBackend::trainer`).
     pub fn backend(&self) -> &B {
         &self.backend
     }
@@ -223,10 +238,12 @@ impl<'h, B: Backend> Session<'h, B> {
 
 /// Host-path extras: stable parameter access and checkpointing.
 impl<'h> Session<'h, HostBackend> {
+    /// The live network (e.g. for `serve::FrozenModel::freeze`).
     pub fn net(&self) -> &Sequential {
         &self.backend.net
     }
 
+    /// Mutable access to the live network.
     pub fn net_mut(&mut self) -> &mut Sequential {
         &mut self.backend.net
     }
@@ -312,8 +329,20 @@ impl<'h> Session<'h, HostBackend> {
 /// Optimizer choice for the host path.
 #[derive(Clone, Copy, Debug)]
 pub enum OptChoice {
-    SgdMomentum { momentum: f32 },
-    Adam { beta1: f32, beta2: f32, eps: f32 },
+    /// SGD with momentum coefficient `momentum`.
+    SgdMomentum {
+        /// Momentum coefficient μ.
+        momentum: f32,
+    },
+    /// Adam with the usual moment/epsilon hyper-parameters.
+    Adam {
+        /// First-moment decay β₁.
+        beta1: f32,
+        /// Second-moment decay β₂.
+        beta2: f32,
+        /// Denominator stabilizer ε.
+        eps: f32,
+    },
 }
 
 enum ModelSpec {
@@ -376,21 +405,25 @@ impl SessionBuilder {
         b
     }
 
+    /// Quantization mode of the run (default float32).
     pub fn mode(mut self, mode: QuantMode) -> Self {
         self.mode = mode;
         self
     }
 
+    /// Learning rate (default 0.02).
     pub fn lr(mut self, lr: f32) -> Self {
         self.lr = lr;
         self
     }
 
+    /// Batch size (default 16).
     pub fn batch(mut self, batch: usize) -> Self {
         self.batch = batch;
         self
     }
 
+    /// Model/data seed (default 0).
     pub fn seed(mut self, seed: u64) -> Self {
         self.seed = seed;
         self
@@ -408,11 +441,13 @@ impl SessionBuilder {
         self
     }
 
+    /// Pin several layers' gradient bit-widths at once.
     pub fn grad_overrides(mut self, ovs: Vec<(String, u8)>) -> Self {
         self.grad_overrides.extend(ovs);
         self
     }
 
+    /// Optimizer choice (default SGD, momentum 0.9).
     pub fn optimizer(mut self, opt: OptChoice) -> Self {
         self.optimizer = opt;
         self
@@ -436,6 +471,7 @@ impl SessionBuilder {
         self
     }
 
+    /// Override the record/log label (default `"<model>-<mode>"`).
     pub fn label(mut self, label: impl Into<String>) -> Self {
         self.label = Some(label.into());
         self

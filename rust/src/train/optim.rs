@@ -21,6 +21,7 @@ use crate::nn::Sequential;
 pub struct OptimizerState {
     /// Update counter (Adam's bias-correction `t`; 0 for SGD).
     pub step: u64,
+    /// Per-parameter state buffers in visit order (see struct docs).
     pub buffers: Vec<Vec<f32>>,
 }
 
@@ -40,12 +41,15 @@ pub trait Optimizer {
 /// SGD with momentum: `v ← μ·v + g`, `p ← p − lr·v` — the arithmetic of the
 /// pre-trait `nn::Sgd`, minus its fused gradient clearing.
 pub struct Sgd {
+    /// Learning rate.
     pub lr: f32,
+    /// Momentum coefficient μ.
     pub momentum: f32,
     velocity: Vec<Vec<f32>>,
 }
 
 impl Sgd {
+    /// SGD with fresh (zero) velocity buffers.
     pub fn new(lr: f32, momentum: f32) -> Self {
         Sgd { lr, momentum, velocity: Vec::new() }
     }
@@ -88,9 +92,13 @@ impl Optimizer for Sgd {
 /// the L2 artifacts (`python/compile/model.py`), so a workload can move
 /// between the host and PJRT backends without changing its update rule.
 pub struct Adam {
+    /// Learning rate.
     pub lr: f32,
+    /// First-moment decay β₁.
     pub beta1: f32,
+    /// Second-moment decay β₂.
     pub beta2: f32,
+    /// Denominator stabilizer ε.
     pub eps: f32,
     t: u64,
     m: Vec<Vec<f32>>,
@@ -103,6 +111,7 @@ impl Adam {
         Self::with_config(lr, 0.9, 0.999, 1e-8)
     }
 
+    /// Fully explicit hyper-parameters.
     pub fn with_config(lr: f32, beta1: f32, beta2: f32, eps: f32) -> Self {
         Adam { lr, beta1, beta2, eps, t: 0, m: Vec::new(), v: Vec::new() }
     }

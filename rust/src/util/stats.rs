@@ -20,18 +20,27 @@ pub fn stddev(xs: &[f64]) -> f64 {
     (xs.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / xs.len() as f64).sqrt()
 }
 
-/// Median (copies + sorts).
+/// Median — the 50th [`percentile`] (linear interpolation reproduces the
+/// classic even-length midpoint).
 pub fn median(xs: &[f64]) -> f64 {
+    percentile(xs, 50.0)
+}
+
+/// Linearly interpolated percentile (`q` in [0, 100]) — the p50/p99
+/// summary the serving benches report (EXPERIMENTS.md §Serve).
+pub fn percentile(xs: &[f64], q: f64) -> f64 {
     if xs.is_empty() {
         return 0.0;
     }
     let mut v = xs.to_vec();
     v.sort_by(|a, b| a.partial_cmp(b).unwrap());
-    let n = v.len();
-    if n % 2 == 1 {
-        v[n / 2]
+    let rank = (q.clamp(0.0, 100.0) / 100.0) * (v.len() - 1) as f64;
+    let lo = rank.floor() as usize;
+    let hi = rank.ceil() as usize;
+    if lo == hi {
+        v[lo]
     } else {
-        0.5 * (v[n / 2 - 1] + v[n / 2])
+        v[lo] + (v[hi] - v[lo]) * (rank - lo as f64)
     }
 }
 
@@ -173,6 +182,17 @@ mod tests {
         assert!((median(&xs) - 2.5).abs() < 1e-12);
         assert!((stddev(&xs) - (1.25f64).sqrt()).abs() < 1e-12);
         assert_eq!(median(&[3.0, 1.0, 2.0]), 2.0);
+    }
+
+    #[test]
+    fn percentile_interpolates() {
+        let xs = [4.0, 1.0, 3.0, 2.0]; // sorted: 1 2 3 4
+        assert_eq!(percentile(&xs, 0.0), 1.0);
+        assert_eq!(percentile(&xs, 100.0), 4.0);
+        assert!((percentile(&xs, 50.0) - 2.5).abs() < 1e-12);
+        assert!((percentile(&xs, 99.0) - 3.97).abs() < 1e-12);
+        assert_eq!(percentile(&[], 50.0), 0.0);
+        assert_eq!(percentile(&[7.0], 99.0), 7.0);
     }
 
     #[test]

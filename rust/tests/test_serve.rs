@@ -1,0 +1,295 @@
+//! `serve::` contract tests (DESIGN.md §Serving):
+//!
+//! 1. **Frozen parity** — `FrozenModel::from_checkpoint` logits are
+//!    bit-identical to `Session::eval_logits` on mlp/alexnet checkpoints
+//!    in Float32 and Static(8) modes (the int8 serving path runs integer
+//!    GEMMs, yet lands on the same bits — the exactness argument in the
+//!    `serve::frozen` module docs). Wider/BN-heavy models agree to float
+//!    rounding.
+//! 2. **Batching server** — responses are never mis-paired under
+//!    concurrent pipelined submitters, backpressure blocks rather than
+//!    drops, shutdown answers everything accepted, and malformed inputs
+//!    are rejected.
+
+use std::sync::Arc;
+
+use apt::data::SynthImages;
+use apt::kernels::Engine;
+use apt::nn::{models, QuantMode};
+use apt::serve::{FrozenModel, InferenceServer, ServeConfig};
+use apt::tensor::Tensor;
+use apt::train::SessionBuilder;
+
+fn ckpt_path(tag: &str) -> std::path::PathBuf {
+    std::env::temp_dir().join(format!("apt_serve_ckpt_{tag}_{}.txt", std::process::id()))
+}
+
+/// Builder-default eval batch: the stream `Session::eval` reads.
+fn eval_batch(n: usize) -> (Tensor, Vec<usize>) {
+    let data = SynthImages::new(
+        1000, // builder default: seed 0 + 1000
+        models::CLASSES,
+        models::IN_C,
+        models::IN_H,
+        models::IN_W,
+        0.5,
+    );
+    data.eval_set(999, n)
+}
+
+/// Train briefly, checkpoint, and return (session logits on a fixed eval
+/// batch, frozen-model logits on the same batch, frozen model).
+fn session_vs_frozen(
+    model: &str,
+    mode: QuantMode,
+    iters: u64,
+) -> (Tensor, Tensor, FrozenModel) {
+    let path = ckpt_path(&format!("{model}_{}", mode.label()));
+    let mut s = SessionBuilder::classifier(model).mode(mode).lr(0.01).build();
+    s.run(iters).unwrap();
+    s.save_checkpoint(&path).unwrap();
+
+    // Reload into a fresh session (the same rebuild path a deployment
+    // would use) and evaluate.
+    let mut s2 = SessionBuilder::classifier(model).mode(mode).lr(0.01).build();
+    s2.load_checkpoint(&path).unwrap();
+    let (ex, _) = eval_batch(64);
+    let want = s2.eval_logits(&ex);
+
+    let frozen = FrozenModel::from_checkpoint(&path, model, mode).unwrap();
+    let got = frozen.forward(&ex, apt::kernels::global());
+    let _ = std::fs::remove_file(&path);
+    (want, got, frozen)
+}
+
+fn assert_bits_equal(want: &Tensor, got: &Tensor, tag: &str) {
+    assert_eq!(want.shape, got.shape, "{tag}: shape");
+    for (i, (a, b)) in want.data.iter().zip(&got.data).enumerate() {
+        assert_eq!(
+            a.to_bits(),
+            b.to_bits(),
+            "{tag}: logit {i} diverged ({a} vs {b})"
+        );
+    }
+}
+
+fn max_rel_err(want: &Tensor, got: &Tensor) -> f32 {
+    let scale = want.max_abs().max(1e-12);
+    want.data
+        .iter()
+        .zip(&got.data)
+        .map(|(a, b)| (a - b).abs() / scale)
+        .fold(0.0f32, f32::max)
+}
+
+#[test]
+fn frozen_bit_exact_f32_mlp_alexnet() {
+    for model in ["mlp", "alexnet"] {
+        let (want, got, frozen) = session_vs_frozen(model, QuantMode::Float32, 25);
+        assert_eq!(frozen.precision(), "f32");
+        assert_bits_equal(&want, &got, &format!("{model}-f32"));
+    }
+}
+
+#[test]
+fn frozen_bit_exact_int8_mlp_alexnet() {
+    // The serving path runs i8 codes through the integer GEMM + one
+    // rescale; with 8-bit schemes and k ≤ 1024 every sum is exact in both
+    // paths, so this asserts *bit* equality, not closeness.
+    for model in ["mlp", "alexnet"] {
+        let (want, got, frozen) = session_vs_frozen(model, QuantMode::Static(8), 25);
+        assert_eq!(frozen.precision(), "int8");
+        assert_bits_equal(&want, &got, &format!("{model}-int8"));
+    }
+}
+
+#[test]
+fn frozen_close_on_wider_and_bn_models() {
+    // int16: the session's fake-quant reference accumulates >24-bit
+    // products in f32, so the (exact) integer path differs in float
+    // rounding only.
+    let (want, got, frozen) = session_vs_frozen("mlp", QuantMode::Static(16), 25);
+    assert_eq!(frozen.precision(), "int16");
+    let e = max_rel_err(&want, &got);
+    assert!(e < 1e-3, "mlp-int16 rel err {e}");
+
+    // BN/residual/inception/depthwise model families through the frozen
+    // stack-op path (folded BN running stats, branch merge, add-back).
+    for (model, mode) in [
+        ("resnet", QuantMode::Float32),
+        ("resnet", QuantMode::Static(8)),
+        ("mobilenet", QuantMode::Static(8)),
+        ("inception", QuantMode::Static(8)),
+        ("vgg", QuantMode::Static(8)),
+    ] {
+        let (want, got, _) = session_vs_frozen(model, mode, 12);
+        let e = max_rel_err(&want, &got);
+        assert!(e < 1e-4, "{model}-{}: rel err {e}", mode.label());
+    }
+}
+
+#[test]
+fn frozen_from_live_net_matches_checkpoint_route() {
+    let path = ckpt_path("live");
+    let mut s = SessionBuilder::classifier("mlp").mode(QuantMode::Static(8)).build();
+    s.run(15).unwrap();
+    s.save_checkpoint(&path).unwrap();
+    let via_ckpt = FrozenModel::from_checkpoint(&path, "mlp", QuantMode::Static(8)).unwrap();
+    let via_net = FrozenModel::freeze("mlp-int8", s.net()).unwrap();
+    let (ex, _) = eval_batch(16);
+    let eng = Engine::serial();
+    assert_bits_equal(&via_net.forward(&ex, &eng), &via_ckpt.forward(&ex, &eng), "live-vs-ckpt");
+    let _ = std::fs::remove_file(&path);
+}
+
+fn quick_frozen_mlp() -> FrozenModel {
+    let mut s = SessionBuilder::classifier("mlp").mode(QuantMode::Static(8)).build();
+    s.run(10).unwrap();
+    FrozenModel::freeze("mlp-int8", s.net()).unwrap()
+}
+
+#[test]
+fn server_pairs_responses_under_concurrent_submitters() {
+    let frozen = Arc::new(quick_frozen_mlp());
+    let eng = Arc::new(Engine::serial());
+    let cfg = ServeConfig { max_batch: 4, max_wait_us: 2_000, queue_cap: 64, workers: 2 };
+    let server = InferenceServer::start(Arc::clone(&frozen), Arc::clone(&eng), cfg);
+
+    let clients = 4usize;
+    let per_client = 10usize;
+    let mut data = SynthImages::new(
+        7,
+        models::CLASSES,
+        models::IN_C,
+        models::IN_H,
+        models::IN_W,
+        0.5,
+    );
+    let d = frozen.input_len();
+    let (xs, _) = data.batch(clients * per_client);
+
+    std::thread::scope(|scope| {
+        for c in 0..clients {
+            let server = &server;
+            let frozen = &frozen;
+            let eng = &eng;
+            let xs = &xs;
+            scope.spawn(move || {
+                // Pipelined: submit the whole slice, then resolve in order;
+                // every response must be the logits of *its own* input
+                // (batched rows are computed independently, so single-
+                // sample forward is the exact oracle).
+                let mut pendings = Vec::new();
+                for i in 0..per_client {
+                    let idx = c * per_client + i;
+                    pendings.push((idx, server.submit(xs.data[idx * d..(idx + 1) * d].to_vec()).unwrap()));
+                }
+                for (idx, p) in pendings {
+                    let got = p.wait().unwrap();
+                    let want = frozen.forward_one(&xs.data[idx * d..(idx + 1) * d], eng);
+                    assert_eq!(got.len(), want.len());
+                    for (a, b) in got.iter().zip(&want) {
+                        assert_eq!(a.to_bits(), b.to_bits(), "request {idx} got another sample's logits");
+                    }
+                }
+            });
+        }
+    });
+
+    let stats = server.shutdown();
+    assert_eq!(stats.accepted, (clients * per_client) as u64);
+    assert_eq!(stats.served, (clients * per_client) as u64);
+    assert!(stats.batches <= stats.served, "batches {} > served {}", stats.batches, stats.served);
+    assert!(stats.mean_batch() >= 1.0);
+}
+
+#[test]
+fn server_backpressure_bounded_queue_never_drops() {
+    let frozen = Arc::new(quick_frozen_mlp());
+    let d = frozen.input_len();
+    // Tiny queue, one worker: concurrent blocking submitters must ride the
+    // backpressure seam — block while full, never drop, never deadlock —
+    // and the queue_cap < max_batch clamp must flush full queues instead
+    // of waiting out the deadline (fill target = min(max_batch, queue_cap)).
+    let cfg = ServeConfig { max_batch: 8, max_wait_us: 50_000, queue_cap: 2, workers: 1 };
+    let server = InferenceServer::start(Arc::clone(&frozen), Arc::new(Engine::serial()), cfg);
+    let (threads, per) = (6usize, 8usize);
+    std::thread::scope(|scope| {
+        for _ in 0..threads {
+            let server = &server;
+            scope.spawn(move || {
+                for _ in 0..per {
+                    server.submit(vec![0.4; d]).unwrap().wait().unwrap();
+                }
+            });
+        }
+    });
+    let stats = server.shutdown();
+    assert_eq!(stats.accepted, (threads * per) as u64);
+    assert_eq!(stats.served, (threads * per) as u64);
+}
+
+#[test]
+fn try_submit_reports_full_queue_and_answers_all_accepted() {
+    let frozen = Arc::new(quick_frozen_mlp());
+    let d = frozen.input_len();
+    // One worker, per-request batches, cap 2: a burst far faster than the
+    // worker drains must hit the bounded-queue error on some submissions;
+    // every accepted one must still be answered.
+    let cfg = ServeConfig { max_batch: 1, max_wait_us: 0, queue_cap: 2, workers: 1 };
+    let server = InferenceServer::start(Arc::clone(&frozen), Arc::new(Engine::serial()), cfg);
+    let burst = 200usize;
+    let mut pendings = Vec::new();
+    let mut full_errors = 0usize;
+    for _ in 0..burst {
+        match server.try_submit(vec![0.3; d]) {
+            Ok(p) => pendings.push(p),
+            Err(e) => {
+                assert!(e.to_string().contains("full"), "unexpected error: {e}");
+                full_errors += 1;
+            }
+        }
+    }
+    let accepted = pendings.len();
+    assert_eq!(accepted + full_errors, burst);
+    for p in pendings {
+        p.wait().unwrap();
+    }
+    let stats = server.shutdown();
+    assert_eq!(stats.accepted, accepted as u64);
+    assert_eq!(stats.served, accepted as u64);
+    // A µs-scale burst against ms-scale forwards must engage the bound.
+    assert!(full_errors > 0, "bounded queue never filled under a {burst}-deep burst");
+}
+
+#[test]
+fn server_shutdown_answers_queued_requests() {
+    let frozen = Arc::new(quick_frozen_mlp());
+    let d = frozen.input_len();
+    let cfg = ServeConfig { max_batch: 4, max_wait_us: 200_000, queue_cap: 64, workers: 1 };
+    let server = InferenceServer::start(Arc::clone(&frozen), Arc::new(Engine::serial()), cfg);
+    let pendings: Vec<_> = (0..9).map(|_| server.submit(vec![0.5; d]).unwrap()).collect();
+    let stats = server.shutdown(); // close + drain + join
+    assert_eq!(stats.served, 9);
+    for p in pendings {
+        assert_eq!(p.wait().unwrap().len(), models::CLASSES);
+    }
+}
+
+#[test]
+fn server_rejects_wrong_input_width() {
+    let frozen = Arc::new(quick_frozen_mlp());
+    let server =
+        InferenceServer::start(Arc::clone(&frozen), Arc::new(Engine::serial()), ServeConfig::default());
+    assert!(server.submit(vec![0.0; 3]).is_err());
+    assert!(server.try_submit(vec![]).is_err());
+}
+
+#[test]
+fn freeze_infers_geometry_and_labels() {
+    let frozen = quick_frozen_mlp();
+    assert_eq!(frozen.input_len(), models::input_len());
+    assert_eq!(frozen.label(), "mlp-int8");
+    let logits = frozen.forward_one(&vec![0.0; frozen.input_len()], &Engine::serial());
+    assert_eq!(logits.len(), models::CLASSES);
+}
