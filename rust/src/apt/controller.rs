@@ -177,6 +177,12 @@ impl PrecisionController {
         self.scheme = decision.scheme;
         self.next_update = iter + decision.interval;
         self.updates += 1;
+        if decision.interval_clamped {
+            // The Itv formula ran away (converged tensor); the max_interval
+            // guard decided the re-probe slot. Keep that visible in the run
+            // record — a silent clamp looks like the paper's formula at work.
+            ledger.record_clamp(&self.layer, self.kind, iter);
+        }
         ledger.record_event(
             &self.layer,
             self.kind,
@@ -298,6 +304,24 @@ mod tests {
         }
         // stable distribution → long intervals → few updates
         assert!(updates < 20, "updates={updates}");
+    }
+
+    #[test]
+    fn converged_tensor_clamps_interval_and_logs_it() {
+        let mut ledger = Ledger::new();
+        let mut cfg = AptConfig::default();
+        cfg.init_phase_iters = 0;
+        let mut c = PrecisionController::new(cfg, "l", TensorKind::Gradient);
+        // All-zero gradient: QEM error 0 and range EMA frozen at 0 → the
+        // raw Itv formula is β/0 = inf. The controller must clamp to
+        // max_interval (staying re-probeable) and log the clamp.
+        let zeros = vec![0.0f32; 256];
+        c.maybe_update_from_data(0, &zeros, &mut ledger);
+        assert!(c.needs_update(cfg.max_interval), "controller must re-probe at the ceiling");
+        assert!(!c.needs_update(cfg.max_interval - 1));
+        assert_eq!(ledger.total_clamps(), 1);
+        let hist = &ledger.tensors[&("l".to_string(), TensorKind::Gradient)];
+        assert_eq!(hist.clamps, vec![0]);
     }
 
     #[test]

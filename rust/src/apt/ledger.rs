@@ -21,6 +21,9 @@ pub struct TensorHistory {
     pub events: Vec<Event>,
     /// (iteration, bits) samples — one per iteration bucket for mix curves.
     pub bits_trace: Vec<(u64, u8)>,
+    /// Iterations at which the QPA interval hit the `cfg.max_interval`
+    /// ceiling (the fully-converged-tensor clamp; see `qpa::interval`).
+    pub clamps: Vec<u64>,
 }
 
 /// Identifies one quantized tensor: layer name + role.
@@ -44,6 +47,24 @@ impl Ledger {
             .or_default()
             .events
             .push(ev);
+    }
+
+    /// Record that the QPA update interval was clamped to the configured
+    /// `max_interval` ceiling at `iter` — the tensor's error and range delta
+    /// were both ≈0, so the unclamped Itv formula would have postponed the
+    /// next probe (nearly) forever. Emitted by the controller so converged
+    /// tensors stay observable in the run record.
+    pub fn record_clamp(&mut self, layer: &str, kind: TensorKind, iter: u64) {
+        self.tensors
+            .entry((layer.to_string(), kind))
+            .or_default()
+            .clamps
+            .push(iter);
+    }
+
+    /// Total interval-clamp events across all tensors.
+    pub fn total_clamps(&self) -> u64 {
+        self.tensors.values().map(|h| h.clamps.len() as u64).sum()
     }
 
     /// Sample the applied bit-width at an iteration (call once per iter or
@@ -213,6 +234,19 @@ mod tests {
         }
         let share8 = l.bits_share_over_time(TensorKind::Gradient, 8, 2);
         assert_eq!(share8, vec![1.0, 0.0]);
+    }
+
+    #[test]
+    fn clamp_events_are_recorded_per_tensor() {
+        let mut l = Ledger::new();
+        l.record_clamp("a", TensorKind::Gradient, 5);
+        l.record_clamp("a", TensorKind::Gradient, 90);
+        l.record_clamp("b", TensorKind::Gradient, 7);
+        assert_eq!(l.total_clamps(), 3);
+        let hist = &l.tensors[&("a".to_string(), TensorKind::Gradient)];
+        assert_eq!(hist.clamps, vec![5, 90]);
+        // clamps do not count as QPA updates
+        assert_eq!(l.total_updates(), 0);
     }
 
     #[test]

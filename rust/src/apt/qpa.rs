@@ -27,6 +27,11 @@ pub struct QpaDecision {
     pub error: f64,
     /// Whether the bit-width changed.
     pub bits_changed: bool,
+    /// Whether `interval` was clamped to `cfg.max_interval` (the
+    /// fully-converged-tensor guard: I1 ≈ I2 ≈ 0 makes the raw Itv formula
+    /// divide toward +∞, which would otherwise saturate the `u64` cast and
+    /// freeze the controller forever). The caller logs a ledger event.
+    pub interval_clamped: bool,
 }
 
 /// Convert a QEM error into the thresholded quantity.
@@ -56,17 +61,39 @@ pub fn choose_bits(cfg: &AptConfig, current_bits: u8, probe: &ErrorProbe) -> (u8
 /// The interval rule. `diff` is the Eq. 2 Diff at the chosen width;
 /// `range_delta` is |R_i − R_{i−1}|.
 pub fn interval(cfg: &AptConfig, diff: f64, range_delta: f32, in_init_phase: bool) -> u64 {
+    interval_with_clamp(cfg, diff, range_delta, in_init_phase).0
+}
+
+/// [`interval`] plus whether the `cfg.max_interval` clamp fired.
+///
+/// `Itv = β / max(I1, I2) − γ` is unbounded above: on a fully converged
+/// tensor both `I1 = δ·Diff²` and `I2 = |ΔR|` are ≈0, the division yields
+/// `inf`, and an unguarded `as u64` cast saturates — the controller would
+/// never re-probe again even if the distribution later shifts. The result
+/// is therefore clamped to the documented `cfg.max_interval` ceiling; the
+/// boolean reports when that guard (rather than the paper's formula)
+/// decided the interval, so callers can emit a ledger event.
+pub fn interval_with_clamp(
+    cfg: &AptConfig,
+    diff: f64,
+    range_delta: f32,
+    in_init_phase: bool,
+) -> (u64, bool) {
     if in_init_phase {
-        return 1;
+        return (1, false);
     }
     let i1 = cfg.delta as f64 * diff * diff;
     let i2 = range_delta.abs() as f64;
     let denom = i1.max(i2);
     if denom <= 0.0 {
-        return cfg.max_interval;
+        return (cfg.max_interval, true);
     }
     let itv = cfg.beta as f64 / denom - cfg.gamma as f64;
-    itv.max(1.0).min(cfg.max_interval as f64) as u64
+    if itv >= cfg.max_interval as f64 {
+        (cfg.max_interval, true)
+    } else {
+        (itv.max(1.0) as u64, false)
+    }
 }
 
 /// Full QPA: choose bits, derive the resolution from the range estimate,
@@ -86,11 +113,13 @@ pub fn adjust(
         ThresholdOn::Diff => err.exp2() - 1.0,
     };
     let diff = (ratio + 1.0).log2();
+    let (itv, clamped) = interval_with_clamp(cfg, diff, range_delta, in_init_phase);
     QpaDecision {
         scheme,
-        interval: interval(cfg, diff, range_delta, in_init_phase),
+        interval: itv,
         error: err,
         bits_changed: bits != current.bits,
+        interval_clamped: clamped,
     }
 }
 
@@ -191,6 +220,34 @@ mod tests {
     fn zero_error_and_frozen_range_maxes_interval() {
         let c = cfg();
         assert_eq!(interval(&c, 0.0, 0.0, false), c.max_interval);
+    }
+
+    #[test]
+    fn interval_clamp_fires_only_at_the_ceiling() {
+        let c = cfg();
+        // fully converged: denom = 0 → inf → clamp
+        assert_eq!(interval_with_clamp(&c, 0.0, 0.0, false), (c.max_interval, true));
+        // tiny-but-nonzero denom: raw Itv far above the ceiling → clamp
+        let (itv, clamped) = interval_with_clamp(&c, 1e-12, 0.0, false);
+        assert_eq!(itv, c.max_interval);
+        assert!(clamped, "near-zero denom must report the clamp");
+        // ordinary mid-training values: no clamp
+        let (itv, clamped) = interval_with_clamp(&c, 0.01, 0.0, false);
+        assert!(itv < c.max_interval);
+        assert!(!clamped);
+        // init phase pins Itv = 1 and is never a clamp
+        assert_eq!(interval_with_clamp(&c, 0.0, 0.0, true), (1, false));
+    }
+
+    #[test]
+    fn adjust_reports_interval_clamp() {
+        let c = cfg();
+        let p = table_probe(0.0, 0.0, 0.0); // zero error → Diff = 0
+        let d = adjust(&c, Scheme { bits: 8, s: 0 }, 1.0, 0.0, false, &p);
+        assert_eq!(d.interval, c.max_interval);
+        assert!(d.interval_clamped);
+        let d2 = adjust(&c, Scheme { bits: 8, s: 0 }, 1.0, 0.5, false, &p);
+        assert!(!d2.interval_clamped, "moving range keeps the formula in charge");
     }
 
     #[test]

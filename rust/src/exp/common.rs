@@ -9,8 +9,15 @@ use crate::fixedpoint::TensorKind;
 use crate::nn::QuantMode;
 
 /// Format a ledger's gradient bit mix like the paper's Table 1 columns.
+///
+/// Only *compute* gradients count: data-parallel runs merge their
+/// gradient-communication controllers into the ledger under `comm:*` keys
+/// (DESIGN.md §Data-Parallel), and those are reported separately by the
+/// CLI — including them here would skew the Table-1-style number.
 pub fn grad_mix_string(ledger: &Ledger) -> String {
-    let mix = ledger.timewise_bits_mix(TensorKind::Gradient);
+    let mut compute = ledger.clone();
+    compute.tensors.retain(|(name, _), _| !name.starts_with("comm:"));
+    let mix = compute.timewise_bits_mix(TensorKind::Gradient);
     let pct = |b: u8| mix.get(&b).copied().unwrap_or(0.0) * 100.0;
     format!(
         "int8 {:5.1}% | int16 {:5.1}% | int24 {:5.1}%",

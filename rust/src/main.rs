@@ -3,17 +3,23 @@
 //! Subcommands:
 //!   exp <id|all> [--iters N ...]   run a paper experiment (fig1..table5)
 //!   train [--model M --mode Q]     train one classifier and report
+//!         [--replicas N --comm-bits {8,16,adaptive,f32}]  data-parallel
 //!   serve [--ckpt F --model M]     serve a checkpoint with micro-batching
 //!   opcount [--batch N]            print the Fig7/Table5 analytic counts
 //!   list                           list experiments and models
+//!
+//! User-input failure paths (bad flags, malformed checkpoints, unknown
+//! models) surface as `error: …` + exit(1) through `anyhow`, not panics.
 use std::sync::Arc;
 use std::time::Instant;
+
+use anyhow::{anyhow, bail, Context, Result};
 
 use apt::exp;
 use apt::exp::common::grad_mix_string;
 use apt::nn::{models, QuantMode};
 use apt::serve::{FrozenModel, InferenceServer, ServeConfig};
-use apt::train::SessionBuilder;
+use apt::train::{CommPrecision, SessionBuilder, TrainRecord};
 use apt::util::cli::Args;
 use apt::util::stats::percentile;
 
@@ -25,6 +31,7 @@ fn usage() -> ! {
          \x20 exp <id|all> [--iters N] [--quick]   run a paper experiment\n\
          \x20 train [--model alexnet|vgg|resnet|mobilenet|inception|mlp]\n\
          \x20       [--mode float32|adaptive|int8|int16] [--iters N] [--lr F]\n\
+         \x20       [--replicas N] [--comm-bits 8|16|adaptive|f32]\n\
          \x20 serve [--ckpt file] [--model mlp] [--mode int8] [--train-iters N]\n\
          \x20       [--seed N] [--requests N] [--clients N] [--workers N]\n\
          \x20       [--max-batch N] [--max-wait-us N]\n\
@@ -40,21 +47,76 @@ fn usage() -> ! {
     std::process::exit(2);
 }
 
-/// Parse a `--mode` string; `iters` sizes the adaptive init phase.
-fn parse_mode(s: &str, iters: u64) -> QuantMode {
-    match s {
-        "float32" | "f32" => QuantMode::Float32,
-        "adaptive" => {
-            let mut cfg = apt::apt::AptConfig::default();
-            cfg.init_phase_iters = iters / 10;
-            QuantMode::Adaptive(cfg)
-        }
-        s if s.starts_with("int") => QuantMode::Static(s[3..].parse().expect("intN")),
-        other => {
-            eprintln!("unknown mode {other:?}");
-            usage();
-        }
+/// Checked numeric flag: `Err` (→ `error: …` + exit 1) instead of the
+/// panicking `Args::*_or` accessors — bad CLI input must not abort with a
+/// backtrace.
+fn parsed<T: std::str::FromStr>(args: &Args, key: &str, default: T) -> Result<T> {
+    match args.get(key) {
+        None => Ok(default),
+        Some(v) => v
+            .parse()
+            .map_err(|_| anyhow!("--{key}: cannot parse {v:?} as a number")),
     }
+}
+
+/// Parse a `--mode` string; `iters` sizes the adaptive init phase.
+fn parse_mode(s: &str, iters: u64) -> Result<QuantMode> {
+    Ok(match s {
+        "float32" | "f32" => QuantMode::Float32,
+        "adaptive" => apt::exp::common::adaptive_mode(iters),
+        s if s.starts_with("int") => QuantMode::Static(
+            s[3..]
+                .parse()
+                .map_err(|_| anyhow!("--mode {s:?}: expected intN with numeric N"))?,
+        ),
+        other => bail!("unknown mode {other:?} (expected float32, adaptive or intN)"),
+    })
+}
+
+/// `apt train`: one classifier run, optionally data-parallel
+/// (`--replicas N` shards each batch across N replicas with the quantized
+/// gradient all-reduce of DESIGN.md §Data-Parallel).
+fn cmd_train(args: &Args) -> Result<()> {
+    let model = args.str_or("model", "alexnet");
+    let iters: u64 = parsed(args, "iters", 300)?;
+    let mode = parse_mode(args.str_or("mode", "adaptive").as_str(), iters)?;
+    let replicas: usize = parsed(args, "replicas", 1)?;
+    let comm = CommPrecision::parse(&args.str_or("comm-bits", "f32"), iters)?;
+    let builder = SessionBuilder::classifier(model)
+        .mode(mode)
+        .lr(parsed(args, "lr", 0.01)?)
+        .batch(parsed(args, "batch", 16)?)
+        .seed(parsed(args, "seed", 0)?)
+        .noise(parsed(args, "noise", 0.5)?);
+    // Always build through the Result-based parallel constructor: at
+    // --replicas 1 it is bit-identical to the plain host loop (pinned by
+    // rust/tests/test_parallel.rs), and a bad --model errors instead of
+    // panicking.
+    let mut s = builder.build_parallel(replicas.max(1), comm)?;
+    s.run(iters)?;
+    let run: TrainRecord = s.record()?;
+    println!("{}: eval acc {:.3}", run.label, run.eval_acc);
+    println!("gradient bits: {}", grad_mix_string(&run.ledger));
+    if replicas > 1 {
+        let comm_bits: Vec<String> = run
+            .grad_bits
+            .iter()
+            .map(|(n, b)| format!("{n}=int{b}"))
+            .collect();
+        println!(
+            "comm ({} replicas, {}): {}",
+            replicas,
+            comm.label(),
+            if comm_bits.is_empty() { "f32 (unquantized)".to_string() } else { comm_bits.join(" ") }
+        );
+    }
+    println!(
+        "QPA updates: {} over {} iters ({} interval clamps)",
+        run.ledger.total_updates(),
+        iters,
+        run.ledger.total_clamps()
+    );
+    Ok(())
 }
 
 /// `apt serve`: close the train→deploy loop. Loads (or quickly trains) a
@@ -62,18 +124,18 @@ fn parse_mode(s: &str, iters: u64) -> QuantMode {
 /// micro-batching [`InferenceServer`], and answers a synthetic concurrent
 /// workload, reporting accuracy, QPS and client-side p50/p99 latency
 /// (protocol: EXPERIMENTS.md §Serve).
-fn cmd_serve(args: &Args) {
+fn cmd_serve(args: &Args) -> Result<()> {
     let model = args.str_or("model", "mlp");
-    let train_iters = args.u64_or("train-iters", 80);
-    let mode = parse_mode(args.str_or("mode", "int8").as_str(), train_iters);
-    let seed = args.u64_or("seed", 0);
-    let requests = args.usize_or("requests", 512);
-    let clients = args.usize_or("clients", 8).max(1);
+    let train_iters: u64 = parsed(args, "train-iters", 80)?;
+    let mode = parse_mode(args.str_or("mode", "int8").as_str(), train_iters)?;
+    let seed: u64 = parsed(args, "seed", 0)?;
+    let requests: usize = parsed(args, "requests", 512)?;
+    let clients = parsed(args, "clients", 8usize)?.max(1);
     let cfg = ServeConfig {
-        max_batch: args.usize_or("max-batch", 16),
-        max_wait_us: args.u64_or("max-wait-us", 200),
-        queue_cap: args.usize_or("queue-cap", 256),
-        workers: args.usize_or("workers", 2),
+        max_batch: parsed(args, "max-batch", 16)?,
+        max_wait_us: parsed(args, "max-wait-us", 200)?,
+        queue_cap: parsed(args, "queue-cap", 256)?,
+        workers: parsed(args, "workers", 2)?,
     };
 
     let ckpt_path = match args.get("ckpt") {
@@ -90,20 +152,23 @@ fn cmd_serve(args: &Args) {
                 "no --ckpt given: training {model} ({}) for {train_iters} iters …",
                 mode.label()
             );
+            // build_parallel(1, F32) == build(), but errors on a bad
+            // --model instead of panicking (no-panic CLI contract).
             let mut s = SessionBuilder::classifier(&model)
                 .mode(mode)
                 .lr(0.01)
                 .seed(seed)
-                .build();
-            s.run(train_iters).expect("host training cannot fail");
-            s.save_checkpoint(&path).expect("writing checkpoint");
+                .build_parallel(1, CommPrecision::F32)?;
+            s.run(train_iters)?;
+            s.save_checkpoint(&path)
+                .with_context(|| format!("writing checkpoint {}", path.display()))?;
             println!("checkpoint saved to {}", path.display());
             path
         }
     };
 
-    let frozen =
-        FrozenModel::from_checkpoint(&ckpt_path, &model, mode).expect("freezing checkpoint");
+    let frozen = FrozenModel::from_checkpoint(&ckpt_path, &model, mode)
+        .with_context(|| format!("freezing checkpoint {}", ckpt_path.display()))?;
     println!(
         "serving {} ({} weights, input width {})",
         frozen.label(),
@@ -134,7 +199,7 @@ fn cmd_serve(args: &Args) {
             let server = &server;
             let ex = &ex;
             let ey = &ey;
-            handles.push(scope.spawn(move || {
+            handles.push(scope.spawn(move || -> Result<(usize, Vec<f64>)> {
                 // Closed-loop client: submit, wait, repeat over its slice.
                 let mut correct = 0usize;
                 let mut lat = Vec::new();
@@ -142,35 +207,41 @@ fn cmd_serve(args: &Args) {
                 while i < requests {
                     let input = ex.data[i * d..(i + 1) * d].to_vec();
                     let t = Instant::now();
-                    let logits = server
-                        .submit(input)
-                        .expect("submit")
-                        .wait()
-                        .expect("response");
+                    let logits = server.submit(input)?.wait()?;
                     lat.push(t.elapsed().as_secs_f64());
+                    // total_cmp: a NaN logit must not panic the client
                     let pred = logits
                         .iter()
                         .enumerate()
-                        .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                        .max_by(|a, b| a.1.total_cmp(b.1))
                         .map(|(j, _)| j)
-                        .unwrap();
+                        .unwrap_or(0);
                     if pred == ey[i] {
                         correct += 1;
                     }
                     i += clients;
                 }
-                (correct, lat)
+                Ok((correct, lat))
             }));
         }
         let mut correct = 0usize;
         let mut lat = Vec::new();
+        let mut failure = None;
         for h in handles {
-            let (c, l) = h.join().expect("client thread");
-            correct += c;
-            lat.extend(l);
+            match h.join() {
+                Ok(Ok((c, l))) => {
+                    correct += c;
+                    lat.extend(l);
+                }
+                Ok(Err(e)) => failure = Some(e),
+                Err(_) => failure = Some(anyhow!("serve client thread panicked")),
+            }
         }
-        (correct, lat)
-    });
+        match failure {
+            Some(e) => Err(e),
+            None => Ok((correct, lat)),
+        }
+    })?;
     let secs = wall.elapsed().as_secs_f64();
     let stats = server.shutdown();
 
@@ -194,6 +265,40 @@ fn cmd_serve(args: &Args) {
         stats.mean_batch(),
         correct as f64 / requests as f64
     );
+    Ok(())
+}
+
+fn run(args: &Args) -> Result<()> {
+    let pos = args.positional().to_vec();
+    match pos.first().map(|s| s.as_str()) {
+        Some("exp") => {
+            let id = pos.get(1).map(|s| s.as_str()).unwrap_or("all");
+            if id == "all" {
+                for e in exp::ALL {
+                    exp::run(e, args);
+                    println!();
+                }
+            } else if !exp::run(id, args) {
+                eprintln!("unknown experiment {id:?}");
+                usage();
+            }
+            Ok(())
+        }
+        Some("train") => cmd_train(args),
+        Some("serve") => cmd_serve(args),
+        Some("opcount") => {
+            exp::run("fig7", args);
+            println!();
+            exp::run("table5", args);
+            Ok(())
+        }
+        Some("list") => {
+            println!("experiments: {}", exp::ALL.join(" "));
+            println!("models: {} mlp", apt::nn::models::ZOO.join(" "));
+            Ok(())
+        }
+        _ => usage(),
+    }
 }
 
 fn main() {
@@ -202,49 +307,8 @@ fn main() {
     if let Some(t) = args.get("threads") {
         std::env::set_var("APT_THREADS", t);
     }
-    let pos = args.positional().to_vec();
-    match pos.first().map(|s| s.as_str()) {
-        Some("exp") => {
-            let id = pos.get(1).map(|s| s.as_str()).unwrap_or("all");
-            if id == "all" {
-                for e in exp::ALL {
-                    exp::run(e, &args);
-                    println!();
-                }
-            } else if !exp::run(id, &args) {
-                eprintln!("unknown experiment {id:?}");
-                usage();
-            }
-        }
-        Some("train") => {
-            let model = args.str_or("model", "alexnet");
-            let iters = args.u64_or("iters", 300);
-            let mode = parse_mode(args.str_or("mode", "adaptive").as_str(), iters);
-            let run = SessionBuilder::classifier(model)
-                .mode(mode)
-                .lr(args.f32_or("lr", 0.01))
-                .batch(args.usize_or("batch", 16))
-                .seed(args.u64_or("seed", 0))
-                .noise(args.f32_or("noise", 0.5))
-                .train(iters);
-            println!("{}: eval acc {:.3}", run.label, run.eval_acc);
-            println!("gradient bits: {}", grad_mix_string(&run.ledger));
-            println!(
-                "QPA updates: {} over {} iters",
-                run.ledger.total_updates(),
-                iters
-            );
-        }
-        Some("serve") => cmd_serve(&args),
-        Some("opcount") => {
-            exp::run("fig7", &args);
-            println!();
-            exp::run("table5", &args);
-        }
-        Some("list") => {
-            println!("experiments: {}", exp::ALL.join(" "));
-            println!("models: {} mlp", apt::nn::models::ZOO.join(" "));
-        }
-        _ => usage(),
+    if let Err(e) = run(&args) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
     }
 }

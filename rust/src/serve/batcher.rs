@@ -27,7 +27,7 @@
 use std::collections::VecDeque;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc;
-use std::sync::{Arc, Condvar, Mutex};
+use std::sync::{Arc, Condvar, Mutex, MutexGuard};
 use std::thread;
 use std::time::{Duration, Instant};
 
@@ -36,6 +36,15 @@ use anyhow::{anyhow, bail, Result};
 use super::frozen::FrozenModel;
 use crate::kernels::Engine;
 use crate::tensor::Tensor;
+
+/// Lock the queue, shrugging off poisoning: if a worker panicked while
+/// holding the lock, the queue state itself (a `VecDeque` + flag) is still
+/// coherent — every mutation is a single push/drain — so the remaining
+/// workers and submitters keep serving instead of cascading the panic
+/// through every `lock().unwrap()` in the server.
+fn lock_queue(m: &Mutex<QueueState>) -> MutexGuard<'_, QueueState> {
+    m.lock().unwrap_or_else(|poisoned| poisoned.into_inner())
+}
 
 /// Server tuning knobs.
 #[derive(Clone, Copy, Debug)]
@@ -185,12 +194,16 @@ impl InferenceServer {
         }
         let (tx, rx) = mpsc::channel();
         {
-            let mut st = self.shared.state.lock().unwrap();
+            let mut st = lock_queue(&self.shared.state);
             while st.q.len() >= self.shared.cfg.queue_cap && !st.closed {
                 if !block {
                     bail!("request queue is full ({} pending)", st.q.len());
                 }
-                st = self.shared.space.wait(st).unwrap();
+                st = self
+                    .shared
+                    .space
+                    .wait(st)
+                    .unwrap_or_else(|poisoned| poisoned.into_inner());
             }
             if st.closed {
                 bail!("inference server is shut down");
@@ -220,7 +233,7 @@ impl InferenceServer {
 
     fn close_and_join(&mut self) {
         {
-            let mut st = self.shared.state.lock().unwrap();
+            let mut st = lock_queue(&self.shared.state);
             st.closed = true;
         }
         self.shared.not_empty.notify_all();
@@ -240,10 +253,13 @@ impl Drop for InferenceServer {
 fn worker_loop(shared: Arc<Shared>, eng: Arc<Engine>) {
     loop {
         let jobs = {
-            let mut st = shared.state.lock().unwrap();
+            let mut st = lock_queue(&shared.state);
             // Idle: wait for the first request (or shutdown).
             while st.q.is_empty() && !st.closed {
-                st = shared.not_empty.wait(st).unwrap();
+                st = shared
+                    .not_empty
+                    .wait(st)
+                    .unwrap_or_else(|poisoned| poisoned.into_inner());
             }
             if st.q.is_empty() && st.closed {
                 return;
@@ -260,7 +276,10 @@ fn worker_loop(shared: Arc<Shared>, eng: Arc<Engine>) {
                 if now >= deadline {
                     break;
                 }
-                let (g, timeout) = shared.not_empty.wait_timeout(st, deadline - now).unwrap();
+                let (g, timeout) = shared
+                    .not_empty
+                    .wait_timeout(st, deadline - now)
+                    .unwrap_or_else(|poisoned| poisoned.into_inner());
                 st = g;
                 if timeout.timed_out() {
                     break;

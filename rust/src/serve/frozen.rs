@@ -259,6 +259,31 @@ impl FrozenModel {
             Some(InferOp::Depthwise { c, in_h, in_w, .. }) => c * in_h * in_w,
             _ => return Err(anyhow!("cannot infer input width: model must start with a linear/conv layer")),
         };
+        // Validate value-stack discipline at freeze time, so a malformed
+        // export (hand-built op list, future layer bug) fails here with a
+        // useful error instead of panicking inside a serve worker mid-batch.
+        {
+            let mut depth = 0usize;
+            for (i, op) in ops.iter().enumerate() {
+                let (need, delta): (usize, isize) = match op {
+                    InferOp::Push => (0, 1),
+                    InferOp::Swap => (1, 0),
+                    InferOp::AddPopRelu | InferOp::ConcatPop { .. } => (1, -1),
+                    _ => (0, 0),
+                };
+                if depth < need {
+                    return Err(anyhow!(
+                        "op {i} of {label} underflows the serve value stack (depth {depth})"
+                    ));
+                }
+                depth = (depth as isize + delta) as usize;
+            }
+            if depth != 0 {
+                return Err(anyhow!(
+                    "{label} leaves {depth} unconsumed tensor(s) on the serve value stack"
+                ));
+            }
+        }
         let mut max_bits: Option<u8> = None;
         let mut note = |sw: &Option<Scheme>, sx: &Option<Scheme>| {
             for s in [sw, sx].into_iter().flatten() {
@@ -411,6 +436,8 @@ fn apply(op: &ExecOp, cur: Tensor, stack: &mut Vec<Tensor>, eng: &Engine) -> Ten
             }
             y
         }
+        // Stack discipline is verified by `compile` at freeze time, so the
+        // pops/peeks below cannot underflow on any constructible model.
         ExecOp::Push => {
             stack.push(cur.clone());
             cur

@@ -31,6 +31,7 @@ use std::path::Path;
 use anyhow::{anyhow, bail, Context, Result};
 
 use super::optim::OptimizerState;
+use super::parallel::ParallelBackend;
 use super::{HostBackend, Session};
 use crate::apt::{ControllerState, Ledger};
 use crate::apt::ledger::Event;
@@ -38,7 +39,10 @@ use crate::fixedpoint::TensorKind;
 use crate::nn::Sequential;
 
 const MAGIC: &str = "aptckpt";
-const VERSION: &str = "v1";
+// v2: per-tensor ledger histories carry interval-clamp iterations, and a
+// trailing `comm` section snapshots the data-parallel gradient-
+// communication controllers (empty for single-replica sessions).
+const VERSION: &str = "v2";
 
 fn kind_label(k: TensorKind) -> &'static str {
     k.label() // "W" | "X" | "dX"
@@ -59,18 +63,17 @@ fn push_f32s(out: &mut String, data: &[f32]) {
     }
 }
 
-/// Serialize the session. Takes `&mut` only because parameter visitation
-/// is `&mut`-based; nothing is modified.
-pub(super) fn save(session: &mut Session<HostBackend>, path: &Path) -> Result<()> {
+/// Render everything through the `datarng` record — the host-path portion
+/// shared by single-replica and data-parallel checkpoints. Takes `&mut`
+/// only because parameter visitation is `&mut`-based; nothing is modified.
+fn render_host(iter: u64, losses: &[f32], host: &mut HostBackend) -> String {
     let mut out = String::new();
     let _ = writeln!(out, "{MAGIC} {VERSION}");
-    let _ = writeln!(out, "iter {}", session.iter);
+    let _ = writeln!(out, "iter {iter}");
 
-    out.push_str(&format!("losses {}", session.losses.len()));
-    push_f32s(&mut out, &session.losses);
+    out.push_str(&format!("losses {}", losses.len()));
+    push_f32s(&mut out, losses);
     out.push('\n');
-
-    let host = &mut session.backend;
     let opt_state = host.opt.state();
     let _ = writeln!(
         out,
@@ -138,10 +141,11 @@ pub(super) fn save(session: &mut Session<HostBackend>, path: &Path) -> Result<()
     for ((layer, kind), hist) in &ledger.tensors {
         let _ = writeln!(
             out,
-            "t {layer} {} {} {}",
+            "t {layer} {} {} {} {}",
             kind_label(*kind),
             hist.events.len(),
-            hist.bits_trace.len()
+            hist.bits_trace.len(),
+            hist.clamps.len()
         );
         for ev in &hist.events {
             let _ = writeln!(
@@ -156,12 +160,58 @@ pub(super) fn save(session: &mut Session<HostBackend>, path: &Path) -> Result<()
         for (it, bits) in &hist.bits_trace {
             let _ = writeln!(out, "b {it} {bits}");
         }
+        for it in &hist.clamps {
+            let _ = writeln!(out, "x {it}");
+        }
     }
 
     let (st, inc) = host.data.rng_state();
     let _ = writeln!(out, "datarng {st} {inc}");
-    let _ = writeln!(out, "end");
+    out
+}
 
+/// Render one communication-controller snapshot section (`comm <n>` +
+/// one `cc` record per controller, in visit order).
+fn render_comm(out: &mut String, comm: &[(String, ControllerState)]) {
+    let _ = writeln!(out, "comm {}", comm.len());
+    for (name, st) in comm {
+        let _ = writeln!(
+            out,
+            "cc {name} {} {} {:08x} {} {:08x} {} {}",
+            st.bits,
+            st.s,
+            st.ema_value.to_bits(),
+            st.ema_initialized as u8,
+            st.prev_range.to_bits(),
+            st.next_update,
+            st.updates
+        );
+    }
+}
+
+/// Serialize a host session (no communication controllers).
+pub(super) fn save(session: &mut Session<HostBackend>, path: &Path) -> Result<()> {
+    let mut out = render_host(session.iter, &session.losses, &mut session.backend);
+    render_comm(&mut out, &[]);
+    let _ = writeln!(out, "end");
+    std::fs::write(path, out).with_context(|| format!("writing checkpoint {path:?}"))?;
+    Ok(())
+}
+
+/// Serialize a data-parallel session: the root replica's host-path state
+/// (parameters/optimizer/controllers are bit-identical across replicas
+/// under the sync invariant) plus the per-gradient communication
+/// controllers. Note: under quantized *compute* modes the peers' in-layer
+/// controller state is replica-local and is restored from the root's
+/// snapshot — exact resume is guaranteed for the communication controllers
+/// and for f32-compute runs (see DESIGN.md §Data-Parallel).
+pub(super) fn save_parallel(session: &mut Session<ParallelBackend>, path: &Path) -> Result<()> {
+    let iter = session.iter;
+    let losses = session.losses.clone();
+    let group = &mut session.backend.group;
+    let mut out = render_host(iter, &losses, &mut group.host);
+    render_comm(&mut out, &group.comm.snapshot());
+    let _ = writeln!(out, "end");
     std::fs::write(path, out).with_context(|| format!("writing checkpoint {path:?}"))?;
     Ok(())
 }
@@ -242,6 +292,9 @@ pub struct Checkpoint {
     state_bufs: Vec<Vec<f32>>,
     ledger: Ledger,
     data_rng: (u64, u64),
+    /// Gradient-communication controller snapshots (data-parallel runs);
+    /// empty for single-replica checkpoints.
+    comm: Vec<(String, ControllerState)>,
 }
 
 impl Checkpoint {
@@ -262,6 +315,13 @@ impl Checkpoint {
     /// Optimizer identifier recorded at save time (`"sgd"` / `"adam"`).
     pub fn optimizer(&self) -> &str {
         &self.opt_name
+    }
+
+    /// Gradient-communication controller snapshots recorded at save time
+    /// (`comm:<layer>.<slot>` keys, in parameter visit order). Empty for
+    /// checkpoints from single-replica sessions.
+    pub fn comm_controllers(&self) -> &[(String, ControllerState)] {
+        &self.comm
     }
 
     /// Restore the network-owned portion — parameter tensors, per-tensor
@@ -380,7 +440,15 @@ impl Checkpoint {
 fn parse(text: &str) -> Result<Checkpoint> {
     let mut lx = Lexer { toks: text.split_ascii_whitespace() };
     lx.expect(MAGIC)?;
-    lx.expect(VERSION)?;
+    // v1 files are forward-parseable: they only lack the per-tensor clamp
+    // counts and the trailing `comm` section, so old checkpoints keep
+    // loading (with empty clamp/comm state) instead of erroring.
+    let version = lx.next()?;
+    let v1 = match version {
+        "v1" => true,
+        v if v == VERSION => false,
+        other => bail!("unsupported checkpoint version {other:?} (this build reads v1/{VERSION})"),
+    };
 
     lx.expect("iter")?;
     let iter = lx.u64()?;
@@ -471,6 +539,7 @@ fn parse(text: &str) -> Result<Checkpoint> {
         let kind = parse_kind(lx.next()?)?;
         let n_events = lx.usize()?;
         let n_trace = lx.usize()?;
+        let n_clamps = if v1 { 0 } else { lx.usize()? };
         for _ in 0..n_events {
             lx.expect("e")?;
             let ev = Event {
@@ -487,10 +556,37 @@ fn parse(text: &str) -> Result<Checkpoint> {
             let bits = lx.u8()?;
             ledger.trace_bits(&layer, kind, it, bits);
         }
+        for _ in 0..n_clamps {
+            lx.expect("x")?;
+            let it = lx.u64()?;
+            ledger.record_clamp(&layer, kind, it);
+        }
     }
 
     lx.expect("datarng")?;
     let data_rng = (lx.u64()?, lx.u64()?);
+
+    let n_comm = if v1 {
+        0
+    } else {
+        lx.expect("comm")?;
+        lx.usize()?
+    };
+    let mut comm = Vec::with_capacity(n_comm);
+    for _ in 0..n_comm {
+        lx.expect("cc")?;
+        let name = lx.next()?.to_string();
+        let st = ControllerState {
+            bits: lx.u8()?,
+            s: lx.i32()?,
+            ema_value: lx.f32_hex()?,
+            ema_initialized: lx.u8()? != 0,
+            prev_range: lx.f32_hex()?,
+            next_update: lx.u64()?,
+            updates: lx.u64()?,
+        };
+        comm.push((name, st));
+    }
     lx.expect("end")?;
 
     Ok(Checkpoint {
@@ -503,18 +599,15 @@ fn parse(text: &str) -> Result<Checkpoint> {
         state_bufs,
         ledger,
         data_rng,
+        comm,
     })
 }
 
-/// Restore `path` into a session built with the checkpoint's configuration.
-/// Parse → validate → apply: nothing in the session is mutated until the
-/// whole file has been checked against the net's parameter/controller/state
-/// layout (the network portion rides on [`Checkpoint::restore_net`], which
-/// upholds the same contract).
-pub(super) fn load(session: &mut Session<HostBackend>, path: &Path) -> Result<()> {
-    let ck = Checkpoint::read(path)?;
-    let host = &mut session.backend;
-
+/// Apply the host-path portion of a parsed checkpoint to one
+/// [`HostBackend`] — everything except the owned optimizer buffers and
+/// ledger, which the callers move (single-replica) or clone (per peer) as
+/// their ownership allows. Validation happens before any mutation.
+fn apply_to_host(ck: &Checkpoint, host: &mut HostBackend) -> Result<()> {
     if ck.opt_name != host.opt.name() {
         bail!(
             "checkpoint optimizer {:?} ≠ session optimizer {:?}",
@@ -525,8 +618,6 @@ pub(super) fn load(session: &mut Session<HostBackend>, path: &Path) -> Result<()
     ck.restore_net(&mut host.net)?;
 
     // ---- session-only state (cannot fail past this point) ----
-    host.opt.load_state(ck.opt_state);
-    host.ctx.ledger = ck.ledger;
     host.data.set_rng_state(ck.data_rng);
 
     // Accumulated gradients are not part of a checkpoint (see module doc):
@@ -535,6 +626,55 @@ pub(super) fn load(session: &mut Session<HostBackend>, path: &Path) -> Result<()
     host.net.zero_grads();
     host.needs_zero = false;
     host.ctx.training = true;
+    Ok(())
+}
+
+/// Restore `path` into a session built with the checkpoint's configuration.
+/// Parse → validate → apply: nothing in the session is mutated until the
+/// whole file has been checked against the net's parameter/controller/state
+/// layout (the network portion rides on [`Checkpoint::restore_net`], which
+/// upholds the same contract). A data-parallel checkpoint's communication
+/// controllers are ignored here — deploying a parallel run into a
+/// single-replica session is legitimate (there is nothing to communicate).
+pub(super) fn load(session: &mut Session<HostBackend>, path: &Path) -> Result<()> {
+    let ck = Checkpoint::read(path)?;
+    apply_to_host(&ck, &mut session.backend)?;
+    let host = &mut session.backend;
+    host.opt.load_state(ck.opt_state);
+    host.ctx.ledger = ck.ledger;
+    session.iter = ck.iter;
+    session.losses = ck.losses;
+    Ok(())
+}
+
+/// Restore `path` into a data-parallel session: the root replica takes the
+/// host-path state, every peer is re-broadcast the same network/optimizer
+/// snapshot (re-establishing the sync invariant exactly as a step's
+/// all-reduce would), and the gradient-communication controllers resume
+/// their saved schemes and update schedules. The group must match the
+/// checkpoint's comm policy (controller names are verified).
+pub(super) fn load_parallel(session: &mut Session<ParallelBackend>, path: &Path) -> Result<()> {
+    let ck = Checkpoint::read(path)?;
+    let group = &mut session.backend.group;
+
+    // Validate the comm-controller section read-only *first*, so a policy
+    // mismatch fails before any replica state has been overwritten (the
+    // parse → validate → apply contract of this module).
+    group.comm.check_snapshot(&ck.comm)?;
+    apply_to_host(&ck, &mut group.host)?;
+    for peer in &mut group.peers {
+        ck.restore_net(&mut peer.net)?;
+        peer.opt.load_state(ck.opt_state.clone());
+        peer.net.zero_grads();
+        peer.needs_zero = false;
+        peer.ctx.training = true;
+    }
+    group.comm.restore(&ck.comm)?;
+
+    // Root takes the owned buffers last, after every peer cloned its copy.
+    group.host.opt.load_state(ck.opt_state);
+    group.host.ctx.ledger = ck.ledger;
+
     session.iter = ck.iter;
     session.losses = ck.losses;
     Ok(())

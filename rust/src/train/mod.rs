@@ -5,11 +5,12 @@
 //! seed, and produces a [`Session`] with `step()` / `run(n)` / `eval()`,
 //! typed [`Phase`] hooks, stable [`ParamId`]-addressed parameter access,
 //! checkpoint save/restore, and a [`TrainRecord`] as the uniform result.
-//! The host `Sequential` path, the RNN translation path and the PJRT
-//! `ArtifactTrainer` path all sit behind the same surface via the
-//! [`Backend`] seam — per-tensor precision control (QEM/QPA) stays
-//! consistent across them because each backend threads the same
-//! controllers/ledger machinery.
+//! The host `Sequential` path, the RNN translation path, the PJRT
+//! `ArtifactTrainer` path and the data-parallel [`ReplicaGroup`] path
+//! (`train::parallel`, DESIGN.md §Data-Parallel) all sit behind the same
+//! surface via the [`Backend`] seam — per-tensor precision control
+//! (QEM/QPA) stays consistent across them because each backend threads the
+//! same controllers/ledger machinery.
 //!
 //! Ordering contract (the `zero_grads` fix): a step is
 //! `zero_grads(previous) → forward → loss → backward → [AfterBackward
@@ -29,13 +30,15 @@
 mod backend;
 pub mod checkpoint;
 mod optim;
+pub mod parallel;
 
 pub use backend::{Backend, DataSource, HostBackend, PjrtBackend, Seq2SeqBackend};
 pub use optim::{Adam, Optimizer, OptimizerState, Sgd};
+pub use parallel::{CommPrecision, ParallelBackend, ReplicaGroup};
 
 use std::fmt;
 
-use anyhow::Result;
+use anyhow::{bail, Result};
 
 use crate::apt::Ledger;
 use crate::data::SynthImages;
@@ -326,6 +329,51 @@ impl<'h> Session<'h, HostBackend> {
     }
 }
 
+/// Data-parallel extras: root-replica access, sync checking, and
+/// checkpointing that includes the gradient-communication controllers.
+impl<'h> Session<'h, ParallelBackend> {
+    /// The root replica's live network (bit-identical to every peer under
+    /// the sync invariant).
+    pub fn net(&self) -> &Sequential {
+        &self.backend.group.host.net
+    }
+
+    /// Mutable root-replica network access. Intended for probes; mutating
+    /// parameters here without mirroring the peers breaks the sync
+    /// invariant.
+    pub fn net_mut(&mut self) -> &mut Sequential {
+        &mut self.backend.group.host.net
+    }
+
+    /// Replica count N of the group.
+    pub fn replicas(&self) -> usize {
+        self.backend.group.replicas()
+    }
+
+    /// Verify that every peer's parameters are bit-identical to the
+    /// root's (see [`ReplicaGroup::replicas_in_sync`]).
+    pub fn replicas_in_sync(&mut self) -> bool {
+        self.backend.group.replicas_in_sync()
+    }
+
+    /// Save the full mid-run state — the host-path surface plus the
+    /// per-gradient communication controllers (`train::checkpoint`,
+    /// DESIGN.md §Data-Parallel).
+    pub fn save_checkpoint(&mut self, path: impl AsRef<std::path::Path>) -> Result<()> {
+        checkpoint::save_parallel(self, path.as_ref())
+    }
+
+    /// Restore a checkpoint into this group: the root replica's state is
+    /// applied and broadcast to every peer (re-establishing the sync
+    /// invariant), and the communication controllers resume their saved
+    /// schemes and update schedules. The session must have been built with
+    /// the same configuration (model, mode, optimizer, seeds, replicas,
+    /// comm policy) that produced the checkpoint.
+    pub fn load_checkpoint(&mut self, path: impl AsRef<std::path::Path>) -> Result<()> {
+        checkpoint::load_parallel(self, path.as_ref())
+    }
+}
+
 /// Optimizer choice for the host path.
 #[derive(Clone, Copy, Debug)]
 pub enum OptChoice {
@@ -347,7 +395,63 @@ pub enum OptChoice {
 
 enum ModelSpec {
     Zoo(String),
-    Custom(String, Box<dyn FnOnce(&mut Pcg32) -> Sequential>),
+    // `Fn` (not `FnOnce`) so data-parallel sessions can instantiate one
+    // bit-identical network per replica from the same seeded RNG state.
+    Custom(String, Box<dyn Fn(&mut Pcg32) -> Sequential>),
+}
+
+/// The one model-instantiation sequence (seeded RNG → model → gradient
+/// overrides) shared by [`SessionBuilder::build`] and
+/// [`SessionBuilder::build_parallel`] — the N=1 bit-identity contract
+/// between them rests on there being exactly one copy of this code.
+fn instantiate_net(
+    model: &ModelSpec,
+    mode: QuantMode,
+    seed: u64,
+    overrides: &[(String, u8)],
+) -> Result<(String, Sequential)> {
+    let mut rng = Pcg32::seeded(seed);
+    let (name, mut net) = match model {
+        ModelSpec::Zoo(name) => match models::by_name(name, mode, &mut rng) {
+            Some(net) => (name.clone(), net),
+            None => bail!("unknown model {name:?}"),
+        },
+        ModelSpec::Custom(name, build) => (name.clone(), build(&mut rng)),
+    };
+    for (layer, bits) in overrides {
+        if !net.set_grad_override(layer, Some(*bits)) {
+            bail!("no layer {layer:?} in {name}");
+        }
+    }
+    Ok((name, net))
+}
+
+/// The one optimizer-construction path shared by both build flavors.
+fn make_optimizer(choice: OptChoice, lr: f32) -> Box<dyn Optimizer> {
+    match choice {
+        OptChoice::SgdMomentum { momentum } => Box::new(Sgd::new(lr, momentum)),
+        OptChoice::Adam { beta1, beta2, eps } => {
+            Box::new(Adam::with_config(lr, beta1, beta2, eps))
+        }
+    }
+}
+
+/// The one default-data-source rule shared by both build flavors.
+fn make_data(
+    data: Option<Box<dyn DataSource>>,
+    seed: u64,
+    noise: f32,
+) -> Box<dyn DataSource> {
+    data.unwrap_or_else(|| {
+        Box::new(SynthImages::new(
+            seed + 1000,
+            models::CLASSES,
+            models::IN_C,
+            models::IN_H,
+            models::IN_W,
+            noise,
+        ))
+    })
 }
 
 /// Builder for host-path [`Session`]s — the one way to configure a
@@ -393,10 +497,12 @@ impl SessionBuilder {
 
     /// A custom [`Sequential`], built from the session's seeded RNG so runs
     /// stay deterministic. Pair with [`data`](Self::data) unless the net
-    /// consumes the default synthetic-image geometry.
+    /// consumes the default synthetic-image geometry. The builder closure
+    /// may run once per replica under
+    /// [`build_parallel`](Self::build_parallel), so it must be `Fn`.
     pub fn custom(
         label: impl Into<String>,
-        build: impl FnOnce(&mut Pcg32) -> Sequential + 'static,
+        build: impl Fn(&mut Pcg32) -> Sequential + 'static,
     ) -> Self {
         let label = label.into();
         let mut b = Self::classifier("");
@@ -479,41 +585,13 @@ impl SessionBuilder {
 
     /// Construct the [`Session`]. Initialization order (RNG → model →
     /// overrides → data → optimizer) matches the historical loop exactly.
+    /// Panics on an unknown model/layer (the historical contract);
+    /// [`build_parallel`](Self::build_parallel) is the `Result` flavor.
     pub fn build<'h>(self) -> Session<'h, HostBackend> {
-        let mut rng = Pcg32::seeded(self.seed);
-        let (name, mut net) = match self.model {
-            ModelSpec::Zoo(name) => {
-                let net = models::by_name(&name, self.mode, &mut rng)
-                    .unwrap_or_else(|| panic!("unknown model {name:?}"));
-                (name, net)
-            }
-            ModelSpec::Custom(name, build) => {
-                let net = build(&mut rng);
-                (name, net)
-            }
-        };
-        for (layer, bits) in &self.grad_overrides {
-            assert!(
-                net.set_grad_override(layer, Some(*bits)),
-                "no layer {layer:?} in {name}"
-            );
-        }
-        let data = self.data.unwrap_or_else(|| {
-            Box::new(SynthImages::new(
-                self.seed + 1000,
-                models::CLASSES,
-                models::IN_C,
-                models::IN_H,
-                models::IN_W,
-                self.noise,
-            ))
-        });
-        let opt: Box<dyn Optimizer> = match self.optimizer {
-            OptChoice::SgdMomentum { momentum } => Box::new(Sgd::new(self.lr, momentum)),
-            OptChoice::Adam { beta1, beta2, eps } => {
-                Box::new(Adam::with_config(self.lr, beta1, beta2, eps))
-            }
-        };
+        let (name, net) = instantiate_net(&self.model, self.mode, self.seed, &self.grad_overrides)
+            .unwrap_or_else(|e| panic!("{e}"));
+        let data = make_data(self.data, self.seed, self.noise);
+        let opt = make_optimizer(self.optimizer, self.lr);
         let label = self
             .label
             .unwrap_or_else(|| format!("{}-{}", name, self.mode.label()));
@@ -534,6 +612,75 @@ impl SessionBuilder {
         let mut s = self.build();
         s.run(iters).expect("host training cannot fail");
         s.record().expect("host eval cannot fail")
+    }
+
+    /// Construct a data-parallel [`Session`]: `replicas` bit-identical
+    /// model copies sharding each batch, exchanging gradients under the
+    /// `comm` policy through the deterministic quantized all-reduce
+    /// (DESIGN.md §Data-Parallel). Each replica replays the exact
+    /// [`build`](Self::build) initialization sequence from the same seed,
+    /// and with `replicas == 1` the session degenerates to the plain host
+    /// loop bit-identically, regardless of `comm`. Errors when the batch
+    /// does not split evenly or the model name is unknown.
+    pub fn build_parallel<'h>(
+        self,
+        replicas: usize,
+        comm: CommPrecision,
+    ) -> Result<Session<'h, ParallelBackend>> {
+        if replicas == 0 {
+            bail!("need at least one replica");
+        }
+        if self.batch % replicas != 0 {
+            bail!(
+                "batch {} does not split across {replicas} replicas (use a multiple)",
+                self.batch
+            );
+        }
+        let SessionBuilder {
+            model,
+            mode,
+            lr,
+            batch,
+            seed,
+            noise,
+            grad_overrides,
+            optimizer,
+            data,
+            eval_seed,
+            eval_n,
+            label,
+        } = self;
+        // One bit-identical instantiation per replica: the same
+        // `instantiate_net` sequence `build()` runs, once per replica.
+        let mut nets = Vec::with_capacity(replicas);
+        let mut name = String::new();
+        for _ in 0..replicas {
+            let (n, net) = instantiate_net(&model, mode, seed, &grad_overrides)?;
+            name = n;
+            nets.push(net);
+        }
+        let data = make_data(data, seed, noise);
+        let base = label.unwrap_or_else(|| format!("{}-{}", name, mode.label()));
+        let full = if replicas > 1 {
+            format!("{base}-x{replicas}-{}", comm.label())
+        } else {
+            base
+        };
+        let host = HostBackend::new(
+            nets.remove(0),
+            data,
+            make_optimizer(optimizer, lr),
+            batch,
+            eval_seed,
+            eval_n,
+            full.clone(),
+        );
+        let peer_parts = nets
+            .into_iter()
+            .map(|net| (net, make_optimizer(optimizer, lr)))
+            .collect();
+        let group = ReplicaGroup::new(host, peer_parts, comm)?;
+        Ok(Session::with_backend(ParallelBackend::new(group, full)))
     }
 }
 

@@ -1,0 +1,309 @@
+//! Quantized gradient all-reduce (DESIGN.md §Data-Parallel).
+//!
+//! The communication analogue of the paper's compute-side adaptation: each
+//! data-parallel replica produces a full set of parameter gradients, and
+//! before the (replica-local) optimizer step those gradients are exchanged
+//! as **fixed-point codes** whose bit-width is chosen per tensor by a
+//! dedicated [`PrecisionController`] — QEM measures the quantization error
+//! of the *communication* payload, QPA adapts its width and re-probe
+//! interval, exactly as the in-layer controllers do for compute tensors
+//! (controller keys are `comm:<layer>.<slot>` in the merged run ledger).
+//!
+//! Determinism contract (pinned by `rust/tests/test_parallel.rs`):
+//!
+//! - **f32 path** — partial gradients are summed by [`tree_reduce_f32`], a
+//!   fixed stride-doubling binary tree (round k: `part[i] += part[i + 2^k]`
+//!   for every `i` divisible by `2^(k+1)`), then scaled by `1/n`. The order
+//!   never depends on thread scheduling, so runs are bit-identical
+//!   run-to-run and match the oracle reduction exactly.
+//! - **quantized path** — every replica encodes with the *same* scheme
+//!   (root-probe protocol: the controller updates from replica 0's local
+//!   gradient and the scheme is broadcast), the integer codes are summed in
+//!   an `i64` accumulator — exact, hence order-independent — and decoded
+//!   once as `sum · r / n` in f64 before the final f32 cast.
+
+use anyhow::{bail, Result};
+
+use crate::apt::{AptConfig, Ledger, PrecisionController};
+use crate::apt::ControllerState;
+use crate::fixedpoint::TensorKind;
+
+/// Bit-width policy for the gradient all-reduce payload (CLI
+/// `--comm-bits {8,16,adaptive,f32}`).
+#[derive(Clone, Copy, Debug)]
+pub enum CommPrecision {
+    /// Exchange raw f32 gradients (no communication quantization); the
+    /// deterministic tree reduction still applies.
+    F32,
+    /// Fixed-point codes at a static bit-width (8 or 16) with per-tensor
+    /// range tracking (the scheme's resolution still follows the data).
+    Static(u8),
+    /// Full QEM/QPA adaptation of the communication bit-width per gradient
+    /// tensor, as the paper adapts compute bit-widths.
+    Adaptive(AptConfig),
+}
+
+impl CommPrecision {
+    /// Parse a `--comm-bits` value. `iters` sizes the adaptive init phase
+    /// (one-tenth of the run, mirroring `--mode adaptive`).
+    pub fn parse(s: &str, iters: u64) -> Result<CommPrecision> {
+        Ok(match s {
+            "f32" | "float32" => CommPrecision::F32,
+            "8" | "int8" => CommPrecision::Static(8),
+            "16" | "int16" => CommPrecision::Static(16),
+            "adaptive" => {
+                let mut cfg = AptConfig::default();
+                cfg.init_phase_iters = iters / 10;
+                CommPrecision::Adaptive(cfg)
+            }
+            other => bail!("unknown --comm-bits {other:?} (expected 8, 16, adaptive or f32)"),
+        })
+    }
+
+    /// Display label (`"f32"`, `"int8"`, `"int16"`, `"adaptive"`).
+    pub fn label(&self) -> String {
+        match self {
+            CommPrecision::F32 => "f32".into(),
+            CommPrecision::Static(b) => format!("int{b}"),
+            CommPrecision::Adaptive(_) => "adaptive".into(),
+        }
+    }
+
+    /// Controller config, if the payload is quantized.
+    pub fn config(&self) -> Option<AptConfig> {
+        match self {
+            CommPrecision::F32 => None,
+            CommPrecision::Static(b) => Some(AptConfig::static_bits(*b)),
+            CommPrecision::Adaptive(cfg) => Some(*cfg),
+        }
+    }
+}
+
+/// Deterministic fixed-order tree sum of equally-shaped slices: round k
+/// folds `part[i + 2^k]` into `part[i]` for every `i` divisible by
+/// `2^(k+1)` (non-power-of-two counts simply skip absent partners). The
+/// schedule is a pure function of the replica count, so the floating-point
+/// result is reproducible run-to-run and matches any re-implementation of
+/// the same ladder bit-for-bit.
+pub fn tree_reduce_f32(parts: &[&[f32]]) -> Vec<f32> {
+    assert!(!parts.is_empty(), "tree reduction over zero replicas");
+    let len = parts[0].len();
+    for p in parts {
+        assert_eq!(p.len(), len, "gradient shards must agree in length");
+    }
+    let mut bufs: Vec<Vec<f32>> = parts.iter().map(|p| p.to_vec()).collect();
+    let n = bufs.len();
+    let mut stride = 1;
+    while stride < n {
+        let mut i = 0;
+        while i + stride < n {
+            let (lo, hi) = bufs.split_at_mut(i + stride);
+            let dst = &mut lo[i];
+            let src = &hi[0];
+            for (d, &s) in dst.iter_mut().zip(src.iter()) {
+                *d += s;
+            }
+            i += 2 * stride;
+        }
+        stride *= 2;
+    }
+    bufs.swap_remove(0)
+}
+
+/// The gradient-communication engine of a
+/// [`ReplicaGroup`](super::ReplicaGroup): one [`PrecisionController`] per
+/// parameter-gradient tensor (quantized policies), the communication
+/// ledger, and the reduction itself. See the module docs for the
+/// determinism contract.
+pub struct QuantAllReduce {
+    precision: CommPrecision,
+    /// One controller per tensor, in parameter visit order; empty for f32.
+    ctls: Vec<PrecisionController>,
+    /// Stable tensor names (`<layer>.<slot>` param ids), in visit order.
+    names: Vec<String>,
+    /// QEM/QPA decisions (and interval-clamp events) of the communication
+    /// controllers, keyed `comm:<name>`; merged into the run ledger by
+    /// `ParallelBackend::take_ledger`.
+    pub ledger: Ledger,
+}
+
+impl QuantAllReduce {
+    /// Build the reduction engine for tensors named `names` (the group's
+    /// stable `<layer>.<slot>` parameter ids, in visit order).
+    pub fn new(precision: CommPrecision, names: Vec<String>) -> QuantAllReduce {
+        let ctls = match precision.config() {
+            None => Vec::new(),
+            Some(cfg) => names
+                .iter()
+                .map(|n| PrecisionController::new(cfg, format!("comm:{n}"), TensorKind::Gradient))
+                .collect(),
+        };
+        QuantAllReduce { precision, ctls, names, ledger: Ledger::new() }
+    }
+
+    /// The configured payload policy.
+    pub fn precision(&self) -> &CommPrecision {
+        &self.precision
+    }
+
+    /// Currently applied communication bit-width per tensor (empty for f32).
+    pub fn bits(&self) -> Vec<(String, u8)> {
+        self.names
+            .iter()
+            .zip(&self.ctls)
+            .map(|(n, c)| (format!("comm:{n}"), c.bits()))
+            .collect()
+    }
+
+    /// Average `per_replica[r][t]` over replicas `r` for every tensor `t`,
+    /// returning the reduced tensors in visit order. `iter` drives the
+    /// controllers' update schedule.
+    pub fn reduce(&mut self, iter: u64, per_replica: &[Vec<Vec<f32>>]) -> Vec<Vec<f32>> {
+        let n = per_replica.len();
+        assert!(n >= 1, "reduce over zero replicas");
+        let tensors = per_replica[0].len();
+        let mut out = Vec::with_capacity(tensors);
+        for t in 0..tensors {
+            let parts: Vec<&[f32]> = per_replica.iter().map(|r| r[t].as_slice()).collect();
+            if self.ctls.is_empty() {
+                let mut sum = tree_reduce_f32(&parts);
+                let inv = 1.0 / n as f32;
+                for v in &mut sum {
+                    *v *= inv;
+                }
+                out.push(sum);
+            } else {
+                // Root-probe protocol: QEM/QPA run on replica 0's local
+                // gradient; the resulting scheme is shared by every sender
+                // (a shared scale is what lets integer codes sum exactly).
+                // Values outside the root's range saturate per the scheme.
+                let sch = self.ctls[t].maybe_update_from_data(iter, parts[0], &mut self.ledger);
+                let len = parts[0].len();
+                let mut acc = vec![0i64; len];
+                for part in &parts {
+                    for (a, &x) in acc.iter_mut().zip(part.iter()) {
+                        *a += sch.code(x) as i64;
+                    }
+                }
+                let scale = sch.resolution() as f64 / n as f64;
+                out.push(acc.iter().map(|&c| (c as f64 * scale) as f32).collect());
+            }
+        }
+        out
+    }
+
+    /// Snapshot every communication controller (checkpointing): stable
+    /// ledger key + decision state, in visit order.
+    pub fn snapshot(&self) -> Vec<(String, ControllerState)> {
+        self.ctls.iter().map(|c| (c.layer.clone(), c.snapshot())).collect()
+    }
+
+    /// Validate a [`snapshot`](Self::snapshot) against this group without
+    /// mutating anything — lets a multi-stage restore fail *before* any
+    /// other state has been overwritten.
+    pub fn check_snapshot(&self, st: &[(String, ControllerState)]) -> Result<()> {
+        if st.len() != self.ctls.len() {
+            bail!(
+                "checkpoint has {} communication controllers, this group has {}",
+                st.len(),
+                self.ctls.len()
+            );
+        }
+        for ((name, _), c) in st.iter().zip(&self.ctls) {
+            if *name != c.layer {
+                bail!("communication controller mismatch: checkpoint {name:?} vs group {:?}", c.layer);
+            }
+        }
+        Ok(())
+    }
+
+    /// Restore a [`snapshot`](Self::snapshot). Errors (without mutating
+    /// anything) if the checkpoint's controller list does not match this
+    /// group's tensors — e.g. a checkpoint from a different `--comm-bits`
+    /// policy or model.
+    pub fn restore(&mut self, st: &[(String, ControllerState)]) -> Result<()> {
+        self.check_snapshot(st)?;
+        for ((_, s), c) in st.iter().zip(self.ctls.iter_mut()) {
+            c.restore(s);
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Pcg32;
+
+    fn vecs(seed: u64, n: usize, len: usize) -> Vec<Vec<f32>> {
+        let mut r = Pcg32::seeded(seed);
+        (0..n)
+            .map(|_| {
+                let mut v = vec![0.0f32; len];
+                r.fill_normal(&mut v, 1.0);
+                v
+            })
+            .collect()
+    }
+
+    #[test]
+    fn tree_matches_ladder_spec() {
+        // ((a+b)+(c+d)) for 4 parts, ((a+b)+c) for 3 — per the module spec.
+        let a = vec![1.0f32, 10.0];
+        let b = vec![2.0f32, 20.0];
+        let c = vec![4.0f32, 40.0];
+        let d = vec![8.0f32, 80.0];
+        let r4 = tree_reduce_f32(&[&a, &b, &c, &d]);
+        assert_eq!(r4, vec![(1.0 + 2.0) + (4.0 + 8.0), (10.0 + 20.0) + (40.0 + 80.0)]);
+        let r3 = tree_reduce_f32(&[&a, &b, &c]);
+        assert_eq!(r3, vec![(1.0 + 2.0) + 4.0, (10.0 + 20.0) + 40.0]);
+        let r1 = tree_reduce_f32(&[&a]);
+        assert_eq!(r1, a);
+    }
+
+    #[test]
+    fn f32_reduce_is_deterministic() {
+        let parts = vecs(3, 4, 257);
+        let refs: Vec<&[f32]> = parts.iter().map(|p| p.as_slice()).collect();
+        let x = tree_reduce_f32(&refs);
+        let y = tree_reduce_f32(&refs);
+        assert_eq!(x, y);
+    }
+
+    #[test]
+    fn quantized_reduce_tracks_f32_average() {
+        // Replica 1's gradient sits inside replica 0's range (the root
+        // probe sets the shared scale), so no saturation in this case.
+        let base = vecs(10, 1, 512).remove(0);
+        let half: Vec<f32> = base.iter().map(|&v| v * 0.5).collect();
+        let per: Vec<Vec<Vec<f32>>> = vec![vec![base], vec![half]];
+        let mut q = QuantAllReduce::new(CommPrecision::Static(16), vec!["t.0".into()]);
+        let red = q.reduce(0, &per);
+        // int16 payload: the average should track the exact mean closely
+        let exact: Vec<f32> =
+            (0..512).map(|i| (per[0][0][i] + per[1][0][i]) / 2.0).collect();
+        let err: f32 = red[0]
+            .iter()
+            .zip(&exact)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0, f32::max);
+        assert!(err < 1e-3, "int16 comm error too large: {err}");
+        assert_eq!(q.bits(), vec![("comm:t.0".to_string(), 16u8)]);
+    }
+
+    #[test]
+    fn snapshot_roundtrip_restores_schemes() {
+        let per = vec![vec![vecs(21, 1, 256).remove(0)], vec![vecs(22, 1, 256).remove(0)]];
+        let mut cfg = AptConfig::default();
+        cfg.init_phase_iters = 0;
+        let mut q = QuantAllReduce::new(CommPrecision::Adaptive(cfg), vec!["t.0".into()]);
+        q.reduce(0, &per);
+        let snap = q.snapshot();
+        let mut q2 = QuantAllReduce::new(CommPrecision::Adaptive(cfg), vec!["t.0".into()]);
+        q2.restore(&snap).unwrap();
+        assert_eq!(q2.snapshot(), snap);
+        // mismatched policy errors instead of silently desyncing
+        let mut qf = QuantAllReduce::new(CommPrecision::F32, vec!["t.0".into()]);
+        assert!(qf.restore(&snap).is_err());
+    }
+}

@@ -1,0 +1,273 @@
+//! Data-parallel quantized training (DESIGN.md §Data-Parallel).
+//!
+//! A [`ReplicaGroup`] holds N identically-initialized model replicas. Every
+//! step it draws **one** global batch from the shared [`super::DataSource`],
+//! splits it row-wise into N contiguous shards (replica r gets rows
+//! `[r·B/N, (r+1)·B/N)`), runs forward/backward independently on each
+//! replica (all kernel math multiplexes onto the process-wide
+//! [`crate::kernels::Engine`] thread pool), then aggregates parameter
+//! gradients through the quantized all-reduce of [`QuantAllReduce`] —
+//! per-tensor int8/int16/adaptive codes with a deterministic fixed-order
+//! tree reduction for the f32 policy.
+//! Every replica then applies the *same* averaged gradient with its own
+//! optimizer instance, so parameters and optimizer state stay bit-identical
+//! across replicas by construction (the sync invariant, checkable with
+//! [`ReplicaGroup::replicas_in_sync`]).
+//!
+//! Exactness conditions (pinned by `rust/tests/test_parallel.rs`):
+//!
+//! - `--replicas 1` — there is nothing to communicate, so the group
+//!   degenerates to the plain [`HostBackend`] step *regardless of the
+//!   `--comm-bits` policy*: loss/parameter trajectories are bit-identical
+//!   to the single-replica `Session` loop.
+//! - `--replicas N`, f32 comm — gradients match the stride-doubling tree
+//!   reduction oracle bit-exactly (the schedule is a pure function of N;
+//!   see [`tree_reduce_f32`]).
+//! - quantized comm — the integer-code sum is exact (i64 accumulator), so
+//!   the only deviation from the f32 path is the per-replica encode — the
+//!   same controlled error QEM/QPA bound on the compute side.
+
+mod allreduce;
+
+pub use allreduce::{tree_reduce_f32, CommPrecision, QuantAllReduce};
+
+use anyhow::{bail, Result};
+
+use super::backend::Backend;
+use super::optim::Optimizer;
+use super::{EvalOut, HostBackend, Phase, StepInfo};
+use crate::apt::Ledger;
+use crate::nn::loss::softmax_xent;
+use crate::nn::{Sequential, TrainCtx};
+use crate::tensor::Tensor;
+
+/// One non-root replica: its own network copy, training context and
+/// optimizer instance. (The root replica is the wrapped [`HostBackend`],
+/// which also owns the shared data stream and eval configuration.)
+pub(super) struct Replica {
+    pub(super) net: Sequential,
+    pub(super) ctx: TrainCtx,
+    pub(super) opt: Box<dyn Optimizer>,
+    pub(super) needs_zero: bool,
+}
+
+/// N data-parallel model replicas around one [`HostBackend`] plus the
+/// quantized gradient all-reduce between them. Construct through
+/// [`super::SessionBuilder::build_parallel`].
+pub struct ReplicaGroup {
+    /// Replica 0 — also the data stream, eval set and checkpoint surface.
+    pub(super) host: HostBackend,
+    /// Replicas 1..N.
+    pub(super) peers: Vec<Replica>,
+    /// Gradient communication engine (controllers + comm ledger).
+    pub(super) comm: QuantAllReduce,
+}
+
+/// Collect every parameter gradient of `net` (visit order) as owned
+/// buffers — the send half of the all-reduce.
+fn gather_grads(net: &mut Sequential) -> Vec<Vec<f32>> {
+    let mut out = Vec::new();
+    net.visit_params(&mut |_, g| out.push(g.data.clone()));
+    out
+}
+
+/// Overwrite every parameter gradient of `net` with the reduced tensors —
+/// the receive half of the all-reduce.
+fn scatter_grads(net: &mut Sequential, reduced: &[Vec<f32>]) {
+    let mut i = 0usize;
+    net.visit_params(&mut |_, g| {
+        g.data.copy_from_slice(&reduced[i]);
+        i += 1;
+    });
+}
+
+impl ReplicaGroup {
+    /// Assemble a group. `host` carries the root replica plus the shared
+    /// data stream; `peer_parts` are the (net, optimizer) pairs of replicas
+    /// 1..N, which must be bit-identical copies of the root's initial
+    /// state. Errors if the global batch does not split evenly.
+    pub(super) fn new(
+        mut host: HostBackend,
+        peer_parts: Vec<(Sequential, Box<dyn Optimizer>)>,
+        comm: CommPrecision,
+    ) -> Result<ReplicaGroup> {
+        let replicas = peer_parts.len() + 1;
+        if host.batch % replicas != 0 {
+            bail!(
+                "batch {} does not split across {} replicas (use a multiple)",
+                host.batch,
+                replicas
+            );
+        }
+        let mut names = Vec::new();
+        host.net.visit_params_slotted(&mut |layer, slot, _, _| {
+            names.push(format!("{layer}.{slot}"));
+        });
+        let peers = peer_parts
+            .into_iter()
+            .map(|(net, opt)| Replica { net, ctx: TrainCtx::new(), opt, needs_zero: false })
+            .collect();
+        Ok(ReplicaGroup { host, peers, comm: QuantAllReduce::new(comm, names) })
+    }
+
+    /// Total replica count N (root + peers).
+    pub fn replicas(&self) -> usize {
+        self.peers.len() + 1
+    }
+
+    /// The gradient-communication engine (e.g. for its applied bit-widths).
+    pub fn comm(&self) -> &QuantAllReduce {
+        &self.comm
+    }
+
+    /// Verify the sync invariant: every peer's parameters are bit-identical
+    /// to the root's. A `false` here means the all-reduce or optimizer
+    /// stepping broke determinism — it should never happen.
+    pub fn replicas_in_sync(&mut self) -> bool {
+        let mut root = Vec::new();
+        self.host.net.visit_params(&mut |p, _| root.push(p.data.clone()));
+        for peer in &mut self.peers {
+            let mut i = 0usize;
+            let mut ok = true;
+            peer.net.visit_params(&mut |p, _| {
+                ok &= i < root.len() && p.data == root[i];
+                i += 1;
+            });
+            if !ok || i != root.len() {
+                return false;
+            }
+        }
+        true
+    }
+
+    /// One sharded data-parallel step. See the module docs for the exact
+    /// sequence; with no peers this is precisely the [`HostBackend`] step.
+    fn step(&mut self, iter: u64, observe: &mut dyn FnMut(Phase, &StepInfo)) -> Result<f32> {
+        if self.peers.is_empty() {
+            return self.host.step(iter, observe);
+        }
+        let n = self.replicas();
+
+        // Deferred zeroing, on every replica (§Session-API ordering).
+        if self.host.needs_zero {
+            self.host.net.zero_grads();
+            self.host.needs_zero = false;
+        }
+        for peer in &mut self.peers {
+            if peer.needs_zero {
+                peer.net.zero_grads();
+                peer.needs_zero = false;
+            }
+        }
+        self.host.ctx.iter = iter;
+        for peer in &mut self.peers {
+            peer.ctx.iter = iter;
+        }
+
+        // One global batch, sharded row-wise into N contiguous slices.
+        let (x, y) = self.host.data.batch(self.host.batch);
+        let shard = self.host.batch / n;
+        let d = x.dim(1);
+
+        // Independent forward/backward per replica, then gather grads.
+        let mut shard_losses = Vec::with_capacity(n);
+        let mut per_replica: Vec<Vec<Vec<f32>>> = Vec::with_capacity(n);
+        for r in 0..n {
+            let xs = Tensor::from_vec(
+                &[shard, d],
+                x.data[r * shard * d..(r + 1) * shard * d].to_vec(),
+            );
+            let ys = &y[r * shard..(r + 1) * shard];
+            let (net, ctx) = if r == 0 {
+                (&mut self.host.net, &mut self.host.ctx)
+            } else {
+                let p = &mut self.peers[r - 1];
+                (&mut p.net, &mut p.ctx)
+            };
+            let logits = net.forward(&xs, ctx);
+            let (loss, g) = softmax_xent(&logits, ys);
+            net.backward(&g, ctx);
+            shard_losses.push(loss);
+            per_replica.push(gather_grads(net));
+        }
+
+        // Quantized all-reduce, then broadcast the average back.
+        let reduced = self.comm.reduce(iter, &per_replica);
+        scatter_grads(&mut self.host.net, &reduced);
+        for peer in &mut self.peers {
+            scatter_grads(&mut peer.net, &reduced);
+        }
+
+        // Group loss: fixed-order mean of the shard losses.
+        let loss =
+            (shard_losses.iter().map(|&l| l as f64).sum::<f64>() / n as f64) as f32;
+
+        // Hooks observe the root replica with the *reduced* gradients in
+        // place — the data-parallel analogue of "fully accumulated".
+        observe(Phase::AfterBackward, &StepInfo { iter, loss, net: Some(&self.host.net) });
+
+        // Identical update on every replica keeps them in lockstep.
+        self.host.opt.step(&mut self.host.net);
+        self.host.needs_zero = true;
+        for peer in &mut self.peers {
+            peer.opt.step(&mut peer.net);
+            peer.needs_zero = true;
+        }
+        observe(Phase::AfterStep, &StepInfo { iter, loss, net: Some(&self.host.net) });
+        Ok(loss)
+    }
+}
+
+/// [`super::Backend`] over a [`ReplicaGroup`] — the data-parallel
+/// counterpart of [`HostBackend`], sharing its eval path and checkpoint
+/// surface through the root replica.
+pub struct ParallelBackend {
+    pub(super) group: ReplicaGroup,
+    label: String,
+}
+
+impl ParallelBackend {
+    /// Wrap a group under a display label.
+    pub(super) fn new(group: ReplicaGroup, label: String) -> ParallelBackend {
+        ParallelBackend { group, label }
+    }
+
+    /// The replica group (replica count, comm engine, sync check).
+    pub fn group(&self) -> &ReplicaGroup {
+        &self.group
+    }
+
+    /// Mutable group access (e.g. [`ReplicaGroup::replicas_in_sync`]).
+    pub fn group_mut(&mut self) -> &mut ReplicaGroup {
+        &mut self.group
+    }
+}
+
+impl Backend for ParallelBackend {
+    fn label(&self) -> &str {
+        &self.label
+    }
+
+    fn step(&mut self, iter: u64, observe: &mut dyn FnMut(Phase, &StepInfo)) -> Result<f32> {
+        self.group.step(iter, observe)
+    }
+
+    fn eval(&mut self, iters_done: u64) -> Result<EvalOut> {
+        // Parameters are identical across replicas (sync invariant), so the
+        // root replica evaluates for the group.
+        self.group.host.eval(iters_done)
+    }
+
+    fn take_ledger(&mut self, iters_done: u64) -> Ledger {
+        let mut ledger = self.group.host.take_ledger(iters_done);
+        // Merge the communication controllers' history under their
+        // `comm:<layer>.<slot>` keys (disjoint from layer names by prefix).
+        let comm = std::mem::take(&mut self.group.comm.ledger);
+        ledger.tensors.extend(comm.tensors);
+        ledger
+    }
+
+    fn grad_bits(&self) -> Vec<(String, u8)> {
+        self.group.comm.bits()
+    }
+}

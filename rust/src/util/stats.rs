@@ -28,12 +28,19 @@ pub fn median(xs: &[f64]) -> f64 {
 
 /// Linearly interpolated percentile (`q` in [0, 100]) — the p50/p99
 /// summary the serving benches report (EXPERIMENTS.md §Serve).
+///
+/// NaN-tolerant: samples are ordered with [`f64::total_cmp`], which gives
+/// NaNs a deterministic position (positive NaNs sort above +∞) instead of
+/// panicking mid-sort — a single NaN latency sample used to abort the
+/// whole serve bench via `partial_cmp(..).unwrap()`. NaNs therefore only
+/// influence the extreme percentiles; callers wanting them excluded
+/// entirely should filter with `is_finite` first.
 pub fn percentile(xs: &[f64], q: f64) -> f64 {
     if xs.is_empty() {
         return 0.0;
     }
     let mut v = xs.to_vec();
-    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    v.sort_by(f64::total_cmp);
     let rank = (q.clamp(0.0, 100.0) / 100.0) * (v.len() - 1) as f64;
     let lo = rank.floor() as usize;
     let hi = rank.ceil() as usize;
@@ -193,6 +200,22 @@ mod tests {
         assert!((percentile(&xs, 99.0) - 3.97).abs() < 1e-12);
         assert_eq!(percentile(&[], 50.0), 0.0);
         assert_eq!(percentile(&[7.0], 99.0), 7.0);
+    }
+
+    #[test]
+    fn percentile_survives_nan_samples() {
+        // Regression: `partial_cmp(..).unwrap()` panicked on the first NaN
+        // latency sample, killing the serve bench/CLI mid-run.
+        let xs = [3.0, f64::NAN, 1.0, 2.0];
+        // NaN sorts above the finite values; the lower percentiles are the
+        // same as for the finite samples alone.
+        assert_eq!(percentile(&xs, 0.0), 1.0);
+        assert!((percentile(&xs, 50.0) - 2.5).abs() < 1e-12);
+        // the top of the distribution reflects the NaN — deterministically,
+        // without panicking
+        assert!(percentile(&xs, 100.0).is_nan());
+        // all-NaN input is still a defined (NaN) result, not a crash
+        assert!(percentile(&[f64::NAN], 50.0).is_nan());
     }
 
     #[test]

@@ -1,0 +1,362 @@
+//! Data-parallel training contract tests (DESIGN.md §Data-Parallel):
+//!
+//! 1. **Single-replica parity** — `build_parallel(1, _)` is bit-identical
+//!    to the plain host `Session` loop for every comm policy (nothing is
+//!    communicated at N = 1; that is the documented exactness condition).
+//! 2. **Tree-reduction oracle** — at N ∈ {2, 4} with f32 comm, the loss
+//!    and parameter trajectories match an independently implemented
+//!    shard → backward → fixed-order tree reduction → shared SGD ladder
+//!    bit-exactly.
+//! 3. **Quantized-comm convergence** — int8 gradient exchange still trains
+//!    the tier-1 mlp/alexnet configs.
+//! 4. **Sync invariant** — replicas hold bit-identical parameters after
+//!    any number of steps, under quantized compute and comm.
+//! 5. **Checkpoint round-trip** — the per-gradient communication
+//!    controllers (and the whole group) resume bit-identically.
+
+use apt::apt::AptConfig;
+use apt::data::SynthImages;
+use apt::nn::loss::softmax_xent;
+use apt::nn::{models, QuantMode, TrainCtx};
+use apt::train::{CommPrecision, Optimizer, Sgd, SessionBuilder};
+use apt::util::Pcg32;
+
+fn adaptive(iters: u64) -> QuantMode {
+    let mut cfg = AptConfig::default();
+    cfg.init_phase_iters = iters / 10;
+    QuantMode::Adaptive(cfg)
+}
+
+fn comm_adaptive(iters: u64) -> CommPrecision {
+    let mut cfg = AptConfig::default();
+    cfg.init_phase_iters = iters / 10;
+    CommPrecision::Adaptive(cfg)
+}
+
+// ---------------------------------------------------------------- parity
+
+fn assert_replicas_one_matches_host(mode: QuantMode, comm: CommPrecision, iters: u64) {
+    let mut host = SessionBuilder::classifier("mlp").mode(mode).build();
+    host.run(iters).unwrap();
+    let mut par = SessionBuilder::classifier("mlp")
+        .mode(mode)
+        .build_parallel(1, comm)
+        .unwrap();
+    par.run(iters).unwrap();
+
+    assert_eq!(host.losses(), par.losses(), "loss trajectories diverged at N=1");
+    let (ha, pa) = (host.eval().unwrap(), par.eval().unwrap());
+    assert_eq!(ha.accuracy, pa.accuracy, "eval diverged at N=1");
+    let mut hp = Vec::new();
+    let mut pp = Vec::new();
+    host.net_mut().visit_params(&mut |p, _| hp.push(p.data.clone()));
+    par.net_mut().visit_params(&mut |p, _| pp.push(p.data.clone()));
+    assert_eq!(hp, pp, "parameters diverged at N=1");
+}
+
+#[test]
+fn replicas_one_bit_identical_to_host_loop() {
+    // The comm policy must be irrelevant at N = 1 — int8 codes never touch
+    // the gradients because there is nothing to exchange.
+    let iters = 25;
+    assert_replicas_one_matches_host(QuantMode::Float32, CommPrecision::F32, iters);
+    assert_replicas_one_matches_host(QuantMode::Float32, CommPrecision::Static(8), iters);
+    assert_replicas_one_matches_host(adaptive(iters), CommPrecision::Static(8), iters);
+}
+
+// ------------------------------------------------------ tree-reduce oracle
+
+/// Independent re-implementation of the documented reduction ladder:
+/// recursive split at the largest power of two strictly below `n`, which
+/// is provably the same association as the stride-doubling loop in
+/// `train::parallel::tree_reduce_f32`.
+fn oracle_tree(parts: &[Vec<f32>]) -> Vec<f32> {
+    let n = parts.len();
+    if n == 1 {
+        return parts[0].clone();
+    }
+    let mut p = 1usize;
+    while p * 2 < n {
+        p *= 2;
+    }
+    let left = oracle_tree(&parts[..p]);
+    let right = oracle_tree(&parts[p..]);
+    left.iter().zip(&right).map(|(a, b)| a + b).collect()
+}
+
+/// The data-parallel step sequence, rebuilt from public primitives only:
+/// N identically seeded nets, one shared batch stream, row-sharding,
+/// per-replica backward, oracle tree reduction + mean, per-replica SGD.
+fn oracle_parallel(
+    mode: QuantMode,
+    replicas: usize,
+    iters: u64,
+    lr: f32,
+) -> (Vec<f32>, Vec<Vec<f32>>) {
+    let batch = 16usize;
+    let shard = batch / replicas;
+    let mut nets: Vec<_> = (0..replicas)
+        .map(|_| {
+            let mut rng = Pcg32::seeded(0);
+            models::by_name("mlp", mode, &mut rng).expect("model")
+        })
+        .collect();
+    let mut ctxs: Vec<TrainCtx> = (0..replicas).map(|_| TrainCtx::new()).collect();
+    let mut opts: Vec<Sgd> = (0..replicas).map(|_| Sgd::new(lr, 0.9)).collect();
+    let mut data = SynthImages::new(
+        1000,
+        models::CLASSES,
+        models::IN_C,
+        models::IN_H,
+        models::IN_W,
+        0.5,
+    );
+    let mut losses = Vec::new();
+    for it in 0..iters {
+        let (x, y) = data.batch(batch);
+        let d = x.dim(1);
+        let mut shard_losses = Vec::new();
+        let mut grads: Vec<Vec<Vec<f32>>> = Vec::new();
+        for r in 0..replicas {
+            ctxs[r].iter = it;
+            let xs = apt::tensor::Tensor::from_vec(
+                &[shard, d],
+                x.data[r * shard * d..(r + 1) * shard * d].to_vec(),
+            );
+            let ys = &y[r * shard..(r + 1) * shard];
+            let logits = nets[r].forward(&xs, &mut ctxs[r]);
+            let (l, g) = softmax_xent(&logits, ys);
+            nets[r].backward(&g, &mut ctxs[r]);
+            shard_losses.push(l);
+            let mut gs = Vec::new();
+            nets[r].visit_params(&mut |_, gr| gs.push(gr.data.clone()));
+            grads.push(gs);
+        }
+        let tensors = grads[0].len();
+        let mut avg: Vec<Vec<f32>> = Vec::with_capacity(tensors);
+        for t in 0..tensors {
+            let parts: Vec<Vec<f32>> = grads.iter().map(|g| g[t].clone()).collect();
+            let mut sum = oracle_tree(&parts);
+            let inv = 1.0 / replicas as f32;
+            for v in &mut sum {
+                *v *= inv;
+            }
+            avg.push(sum);
+        }
+        for r in 0..replicas {
+            let mut i = 0usize;
+            nets[r].visit_params(&mut |_, gr| {
+                gr.data.copy_from_slice(&avg[i]);
+                i += 1;
+            });
+            opts[r].step(&mut nets[r]);
+            nets[r].zero_grads();
+        }
+        losses.push(
+            (shard_losses.iter().map(|&l| l as f64).sum::<f64>() / replicas as f64) as f32,
+        );
+    }
+    let mut params = Vec::new();
+    nets[0].visit_params(&mut |p, _| params.push(p.data.clone()));
+    (losses, params)
+}
+
+fn assert_f32_comm_matches_oracle(mode: QuantMode, replicas: usize, iters: u64) {
+    let lr = 0.02;
+    let (oracle_losses, oracle_params) = oracle_parallel(mode, replicas, iters, lr);
+    let mut s = SessionBuilder::classifier("mlp")
+        .mode(mode)
+        .lr(lr)
+        .build_parallel(replicas, CommPrecision::F32)
+        .unwrap();
+    s.run(iters).unwrap();
+    assert_eq!(
+        s.losses(),
+        &oracle_losses[..],
+        "N={replicas}: loss curve diverged from the tree-reduction oracle"
+    );
+    let mut params = Vec::new();
+    s.net_mut().visit_params(&mut |p, _| params.push(p.data.clone()));
+    assert_eq!(params.len(), oracle_params.len());
+    for (i, (a, b)) in params.iter().zip(&oracle_params).enumerate() {
+        assert_eq!(a, b, "N={replicas}: parameter {i} diverged from the oracle");
+    }
+}
+
+#[test]
+fn f32_comm_matches_tree_oracle_two_replicas() {
+    assert_f32_comm_matches_oracle(QuantMode::Float32, 2, 15);
+}
+
+#[test]
+fn f32_comm_matches_tree_oracle_four_replicas() {
+    assert_f32_comm_matches_oracle(QuantMode::Float32, 4, 15);
+}
+
+#[test]
+fn f32_comm_matches_tree_oracle_quantized_compute() {
+    // Quantized *compute* (per-replica QEM/QPA inside the layers) with f32
+    // *comm* still matches the oracle: the controllers are deterministic
+    // functions of each replica's shard.
+    assert_f32_comm_matches_oracle(QuantMode::Static(8), 2, 12);
+}
+
+// ------------------------------------------------------------ convergence
+
+#[test]
+fn int8_comm_converges_mlp() {
+    let iters = 60;
+    let rec = {
+        let mut s = SessionBuilder::classifier("mlp")
+            .mode(adaptive(iters))
+            .build_parallel(2, CommPrecision::Static(8))
+            .unwrap();
+        s.run(iters).unwrap();
+        s.record().unwrap()
+    };
+    let first: f64 = rec.losses[..5].iter().map(|&x| x as f64).sum::<f64>() / 5.0;
+    assert!(
+        rec.tail_loss(10) < first * 0.8,
+        "int8 comm failed to train mlp: first {first:.4} tail {:.4}",
+        rec.tail_loss(10)
+    );
+    assert!(rec.eval_acc > 0.15, "acc={}", rec.eval_acc); // better than chance
+    // the communication controllers actually ran at int8
+    assert!(!rec.grad_bits.is_empty());
+    assert!(rec.grad_bits.iter().all(|(n, b)| n.starts_with("comm:") && *b == 8));
+}
+
+#[test]
+fn int8_comm_converges_alexnet() {
+    let iters = 25;
+    let rec = {
+        let mut s = SessionBuilder::classifier("alexnet")
+            .mode(adaptive(iters))
+            .lr(0.01)
+            .build_parallel(2, CommPrecision::Static(8))
+            .unwrap();
+        s.run(iters).unwrap();
+        s.record().unwrap()
+    };
+    let first: f64 = rec.losses[..5].iter().map(|&x| x as f64).sum::<f64>() / 5.0;
+    assert!(
+        rec.tail_loss(5) < first,
+        "int8 comm failed to reduce alexnet loss: first {first:.4} tail {:.4}",
+        rec.tail_loss(5)
+    );
+}
+
+// ----------------------------------------------------------- sync + misc
+
+#[test]
+fn replicas_stay_in_sync_under_quantized_comm() {
+    let iters = 12;
+    let mut s = SessionBuilder::classifier("mlp")
+        .mode(adaptive(iters))
+        .build_parallel(4, comm_adaptive(iters))
+        .unwrap();
+    s.run(iters).unwrap();
+    assert!(s.replicas_in_sync(), "peer parameters diverged from the root replica");
+    assert_eq!(s.replicas(), 4);
+}
+
+#[test]
+fn batch_must_split_evenly() {
+    let err = SessionBuilder::classifier("mlp")
+        .batch(10)
+        .build_parallel(3, CommPrecision::F32)
+        .err()
+        .expect("10 across 3 replicas must be rejected");
+    assert!(err.to_string().contains("split"), "unexpected error: {err}");
+}
+
+// ------------------------------------------------------------ checkpoints
+
+fn ckpt_path(tag: &str) -> std::path::PathBuf {
+    std::env::temp_dir().join(format!("apt_par_ckpt_{tag}_{}.txt", std::process::id()))
+}
+
+#[test]
+fn parallel_checkpoint_roundtrip_is_bit_identical() {
+    // f32 compute + adaptive int comm: every piece of state that matters —
+    // params, optimizer, data RNG, and the communication controllers — is
+    // in the checkpoint, so the restored run must continue bit-identically.
+    let (pre, post) = (8u64, 8u64);
+    let iters = pre + post;
+    let build = || {
+        SessionBuilder::classifier("mlp")
+            .build_parallel(2, comm_adaptive(iters))
+            .unwrap()
+    };
+    let path = ckpt_path("comm");
+
+    let mut a = build();
+    a.run(pre).unwrap();
+    a.save_checkpoint(&path).unwrap();
+    a.run(post).unwrap();
+
+    let mut b = build();
+    b.load_checkpoint(&path).unwrap();
+    assert_eq!(b.iters_done(), pre);
+    b.run(post).unwrap();
+
+    assert_eq!(a.losses(), b.losses(), "restored run diverged");
+    assert!(b.replicas_in_sync());
+    let mut pa = Vec::new();
+    let mut pb = Vec::new();
+    a.net_mut().visit_params(&mut |p, _| pa.push(p.data.clone()));
+    b.net_mut().visit_params(&mut |p, _| pb.push(p.data.clone()));
+    assert_eq!(pa, pb, "parameters diverged after restore");
+
+    // the communication controllers themselves round-tripped exactly
+    let sa = a.backend().group().comm().snapshot();
+    let sb = b.backend().group().comm().snapshot();
+    assert_eq!(sa, sb, "communication controller state diverged");
+    assert!(!sa.is_empty(), "adaptive comm must have controllers");
+
+    let _ = std::fs::remove_file(&path);
+}
+
+#[test]
+fn parallel_checkpoint_rejects_comm_policy_mismatch() {
+    let path = ckpt_path("policy");
+    let mut a = SessionBuilder::classifier("mlp")
+        .build_parallel(2, CommPrecision::Static(8))
+        .unwrap();
+    a.run(3).unwrap();
+    a.save_checkpoint(&path).unwrap();
+
+    // f32-comm group has no controllers → restore must fail loudly,
+    // and must fail *before* mutating anything (validate-then-apply).
+    let mut b = SessionBuilder::classifier("mlp")
+        .build_parallel(2, CommPrecision::F32)
+        .unwrap();
+    let mut fresh_params = Vec::new();
+    b.net_mut().visit_params(&mut |p, _| fresh_params.push(p.data.clone()));
+    let err = b.load_checkpoint(&path).unwrap_err().to_string();
+    assert!(err.contains("communication"), "unexpected error: {err}");
+    assert_eq!(b.iters_done(), 0, "failed restore must not advance the session");
+    let mut after = Vec::new();
+    b.net_mut().visit_params(&mut |p, _| after.push(p.data.clone()));
+    assert_eq!(fresh_params, after, "failed restore must leave parameters untouched");
+    let _ = std::fs::remove_file(&path);
+}
+
+#[test]
+fn parallel_checkpoint_loads_into_host_session() {
+    // Deploying a data-parallel run into a single-replica session is
+    // legitimate: comm controllers are simply dropped (nothing to
+    // communicate), and the model/optimizer state carries over.
+    let path = ckpt_path("tohost");
+    let mut a = SessionBuilder::classifier("mlp")
+        .build_parallel(2, CommPrecision::Static(8))
+        .unwrap();
+    a.run(4).unwrap();
+    a.save_checkpoint(&path).unwrap();
+
+    let mut b = SessionBuilder::classifier("mlp").build();
+    b.load_checkpoint(&path).unwrap();
+    assert_eq!(b.iters_done(), 4);
+    b.run(3).unwrap(); // and it keeps training
+    let _ = std::fs::remove_file(&path);
+}

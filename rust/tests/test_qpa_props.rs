@@ -1,0 +1,125 @@
+//! Property tests for the QPA decision rules (`apt::qpa`), via the
+//! in-tree `util::proptest` harness: bit-width choice under Mode1/Mode2
+//! and both threshold interpretations, and the interval rule with its
+//! `max_interval` clamp (the fully-converged-tensor guard).
+
+use apt::apt::qpa::{choose_bits, error_for_threshold, interval_with_clamp};
+use apt::apt::{AptConfig, Mode, ThresholdOn};
+use apt::util::proptest::check;
+
+/// A random monotone non-increasing error table over the QPA widths —
+/// more bits never probe worse (the shape real QEM errors have).
+fn error_table(g: &mut apt::util::proptest::Gen) -> [f64; 4] {
+    let e8 = g.f32_log(1e-6, 1.0) as f64;
+    let e16 = e8 * g.f32(0.0, 1.0) as f64;
+    let e24 = e16 * g.f32(0.0, 1.0) as f64;
+    let e32 = e24 * g.f32(0.0, 1.0) as f64;
+    [e8, e16, e24, e32]
+}
+
+fn probe_of(table: [f64; 4]) -> impl Fn(u8) -> f64 {
+    move |bits| match bits {
+        0..=8 => table[0],
+        9..=16 => table[1],
+        17..=24 => table[2],
+        _ => table[3],
+    }
+}
+
+#[test]
+fn prop_choose_bits_bounds_and_threshold() {
+    check("choose-bits-bounds", 200, |g| {
+        let mut cfg = AptConfig::default();
+        cfg.mode = *g.choose(&[Mode::Mode1, Mode::Mode2]);
+        cfg.threshold = g.f32_log(1e-4, 0.5) as f64;
+        let table = error_table(g);
+        let probe = probe_of(table);
+        let current = *g.choose(&[8u8, 16, 24, 32]);
+        let (bits, err) = choose_bits(&cfg, current, &probe);
+        assert!(bits >= cfg.min_bits && bits <= cfg.max_bits, "bits={bits}");
+        // Either the chosen width meets the threshold, or growth is capped.
+        assert!(
+            err <= cfg.threshold || bits == cfg.max_bits,
+            "bits={bits} err={err} T={}",
+            cfg.threshold
+        );
+        // Mode2 never shrinks below the current width; Mode1 may.
+        if cfg.mode == Mode::Mode2 {
+            assert!(bits >= current.min(cfg.max_bits), "mode2 shrank: {bits} < {current}");
+        }
+    });
+}
+
+#[test]
+fn prop_mode1_is_history_free() {
+    check("mode1-history-free", 100, |g| {
+        let mut cfg = AptConfig::mode1();
+        cfg.threshold = g.f32_log(1e-4, 0.5) as f64;
+        let table = error_table(g);
+        let probe = probe_of(table);
+        let (from8, _) = choose_bits(&cfg, 8, &probe);
+        let (from32, _) = choose_bits(&cfg, 32, &probe);
+        assert_eq!(from8, from32, "Mode1 must restart the search identically");
+    });
+}
+
+#[test]
+fn prop_threshold_on_diff_and_ratio_agree() {
+    // T compared against the ratio, and log2(T+1) compared against
+    // Diff = log2(ratio+1), accept exactly the same widths (log2 is
+    // monotone). The two configs must always choose the same bits.
+    check("diff-ratio-agree", 150, |g| {
+        let mut cfg_r = AptConfig::default();
+        cfg_r.threshold_on = ThresholdOn::Ratio;
+        cfg_r.threshold = g.f32_log(1e-4, 0.5) as f64;
+        let mut cfg_d = cfg_r;
+        cfg_d.threshold_on = ThresholdOn::Diff;
+        cfg_d.threshold = (cfg_r.threshold + 1.0).log2();
+
+        let table = error_table(g);
+        let probe_ratio = probe_of(table);
+        // the Diff-space probe reports log2(ratio+1), as QEM does
+        let probe_diff = |bits: u8| error_for_threshold(&cfg_d, probe_ratio(bits));
+
+        let current = *g.choose(&[8u8, 16]);
+        let (br, _) = choose_bits(&cfg_r, current, &probe_ratio);
+        let (bd, _) = choose_bits(&cfg_d, current, &probe_diff);
+        assert_eq!(br, bd, "threshold spaces disagreed");
+    });
+}
+
+#[test]
+fn prop_interval_bounds_and_clamp() {
+    check("interval-bounds", 300, |g| {
+        let mut cfg = AptConfig::default();
+        cfg.max_interval = g.usize(1, 1_000_000) as u64;
+        let diff = g.f32_log(1e-12, 10.0) as f64 * g.int(0, 1) as f64;
+        let range_delta = g.f32(-2.0, 2.0) * g.int(0, 1) as f32;
+        let in_init = g.int(0, 1) == 1;
+        let (itv, clamped) = interval_with_clamp(&cfg, diff, range_delta, in_init);
+        assert!(itv >= 1, "interval must be ≥ 1");
+        assert!(itv <= cfg.max_interval.max(1), "interval {itv} above ceiling");
+        if in_init {
+            assert_eq!((itv, clamped), (1, false), "init phase pins Itv = 1");
+        }
+        if clamped {
+            assert_eq!(itv, cfg.max_interval, "clamp must land exactly on the ceiling");
+        }
+    });
+}
+
+#[test]
+fn prop_interval_monotone_in_stability() {
+    // A more stable tensor (smaller Diff, smaller |ΔR|) never re-probes
+    // sooner than a less stable one.
+    check("interval-monotone", 200, |g| {
+        let cfg = AptConfig::default();
+        let d1 = g.f32_log(1e-6, 1.0) as f64;
+        let d2 = d1 * g.f32(0.0, 1.0) as f64;
+        let r1 = g.f32_log(1e-6, 1.0);
+        let r2 = r1 * g.f32(0.0, 1.0);
+        let (i1, _) = interval_with_clamp(&cfg, d1, r1, false);
+        let (i2, _) = interval_with_clamp(&cfg, d2, r2, false);
+        assert!(i2 >= i1, "stability decreased the interval: {i2} < {i1}");
+    });
+}
