@@ -128,11 +128,23 @@ impl Ledger {
     /// activation gradients quantified to int8" style number): for each
     /// tensor, each iteration contributes the bits applied at it.
     pub fn timewise_bits_mix(&self, kind: TensorKind) -> BTreeMap<u8, f64> {
+        self.timewise_bits_mix_where(kind, |_| true)
+    }
+
+    /// [`timewise_bits_mix`](Self::timewise_bits_mix) restricted to tensors
+    /// whose layer name passes `keep` — how the reporting splits compute
+    /// tensors from the `comm:*` (data-parallel) and `stash:*`
+    /// (activation-storage) subsystems without cloning the ledger.
+    pub fn timewise_bits_mix_where(
+        &self,
+        kind: TensorKind,
+        keep: impl Fn(&str) -> bool,
+    ) -> BTreeMap<u8, f64> {
         let mut weight: BTreeMap<u8, f64> = BTreeMap::new();
         let mut total = 0.0f64;
         let end = self.total_iters;
-        for ((_, k), hist) in &self.tensors {
-            if *k != kind {
+        for ((name, k), hist) in &self.tensors {
+            if *k != kind || !keep(name) {
                 continue;
             }
             for (i, ev) in hist.events.iter().enumerate() {
@@ -247,6 +259,22 @@ mod tests {
         assert_eq!(hist.clamps, vec![5, 90]);
         // clamps do not count as QPA updates
         assert_eq!(l.total_updates(), 0);
+    }
+
+    #[test]
+    fn filtered_mix_splits_subsystems_without_cloning() {
+        let mut l = Ledger::new();
+        l.set_total_iters(100);
+        l.record_event("conv0", TensorKind::Gradient, ev(0, 8));
+        l.record_event("comm:fc0.0", TensorKind::Gradient, ev(0, 16));
+        let compute =
+            l.timewise_bits_mix_where(TensorKind::Gradient, |n| !n.starts_with("comm:"));
+        assert_eq!(compute[&8], 1.0);
+        assert!(!compute.contains_key(&16));
+        let comm = l.timewise_bits_mix_where(TensorKind::Gradient, |n| n.starts_with("comm:"));
+        assert_eq!(comm[&16], 1.0);
+        // the unfiltered method is the keep-everything case
+        assert_eq!(l.timewise_bits_mix(TensorKind::Gradient)[&8], 0.5);
     }
 
     #[test]

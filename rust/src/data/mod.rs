@@ -64,6 +64,33 @@ impl SynthImages {
         self.rng = Pcg32::from_state(st);
     }
 
+    /// Class of the template nearest (squared L2) to `row` — the Bayes
+    /// classifier of this synthetic family. NaN-safe: distances compare via
+    /// `f32::total_cmp`, so a corrupted row (NaN pixels) picks a defined
+    /// class instead of panicking (the `util::stats::percentile` panic
+    /// class; NaN totally orders above every real distance).
+    pub fn nearest_template(&self, row: &[f32]) -> usize {
+        let chw = self.input_len();
+        assert_eq!(row.len(), chw, "row length vs template geometry");
+        // one distance pass per class, then a NaN-total argmin over the
+        // precomputed values (min_by's comparator would otherwise redo the
+        // running minimum's sum on every comparison)
+        let dists: Vec<f32> = (0..self.classes)
+            .map(|cls| {
+                row.iter()
+                    .zip(&self.templates[cls * chw..(cls + 1) * chw])
+                    .map(|(x, t)| (x - t) * (x - t))
+                    .sum()
+            })
+            .collect();
+        dists
+            .iter()
+            .enumerate()
+            .min_by(|a, b| a.1.total_cmp(b.1))
+            .map(|(i, _)| i)
+            .expect("at least one class")
+    }
+
     /// A fixed evaluation set drawn from a separate stream.
     pub fn eval_set(&self, seed: u64, n: usize) -> (Tensor, Vec<usize>) {
         let mut clone = SynthImages {
@@ -252,23 +279,28 @@ mod tests {
         let chw = d1.input_len();
         for b in 0..8 {
             let row = &x1.data[b * chw..(b + 1) * chw];
-            let best = (0..4)
-                .min_by(|&a, &c| {
-                    let da: f32 = row
-                        .iter()
-                        .zip(&d1.templates[a * chw..(a + 1) * chw])
-                        .map(|(x, t)| (x - t) * (x - t))
-                        .sum();
-                    let dc: f32 = row
-                        .iter()
-                        .zip(&d1.templates[c * chw..(c + 1) * chw])
-                        .map(|(x, t)| (x - t) * (x - t))
-                        .sum();
-                    da.partial_cmp(&dc).unwrap()
-                })
-                .unwrap();
-            assert_eq!(best, y1[b]);
+            assert_eq!(d1.nearest_template(row), y1[b]);
         }
+    }
+
+    #[test]
+    fn nearest_template_survives_nan_rows() {
+        // Regression: the old inline partial_cmp(..).unwrap() panicked the
+        // moment a distance came out NaN (same class of bug as the
+        // util::stats::percentile fix in PR 4). total_cmp stays total: a
+        // poisoned row classifies to *some* class instead of aborting.
+        let d = SynthImages::new(7, 4, 3, 8, 8, 0.1);
+        let chw = d.input_len();
+        // every distance NaN
+        let all_nan = vec![f32::NAN; chw];
+        assert!(d.nearest_template(&all_nan) < 4);
+        // a single NaN pixel poisons all distances equally — still no panic
+        let mut one_nan = d.templates[..chw].to_vec();
+        one_nan[0] = f32::NAN;
+        assert!(d.nearest_template(&one_nan) < 4);
+        // and clean rows are unaffected by the comparator change
+        let clean = d.templates[chw..2 * chw].to_vec();
+        assert_eq!(d.nearest_template(&clean), 1);
     }
 
     #[test]

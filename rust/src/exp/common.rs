@@ -12,18 +12,44 @@ use crate::nn::QuantMode;
 ///
 /// Only *compute* gradients count: data-parallel runs merge their
 /// gradient-communication controllers into the ledger under `comm:*` keys
-/// (DESIGN.md §Data-Parallel), and those are reported separately by the
-/// CLI — including them here would skew the Table-1-style number.
+/// (DESIGN.md §Data-Parallel) and adaptive activation storage records its
+/// decisions under `stash:*` keys (DESIGN.md §Activation-Memory); both are
+/// reported separately by the CLI — including either here would skew the
+/// Table-1-style number.
 pub fn grad_mix_string(ledger: &Ledger) -> String {
-    let mut compute = ledger.clone();
-    compute.tensors.retain(|(name, _), _| !name.starts_with("comm:"));
-    let mix = compute.timewise_bits_mix(TensorKind::Gradient);
+    let mix = ledger.timewise_bits_mix_where(TensorKind::Gradient, |name| {
+        !name.starts_with("comm:") && !name.starts_with("stash:")
+    });
     let pct = |b: u8| mix.get(&b).copied().unwrap_or(0.0) * 100.0;
     format!(
         "int8 {:5.1}% | int16 {:5.1}% | int24 {:5.1}%",
         pct(8),
         pct(16),
         pct(24)
+    )
+}
+
+/// Format the adaptive activation-*storage* bit mix — the `stash:*`
+/// entries only (activation kind), grouped apart from the compute and
+/// `comm:*` records so each subsystem's Table-1-style number stays pure.
+/// Buckets follow the stash's payload encodings: ≤8 bits are int8 codes,
+/// 9–16 are int16 codes, wider widths mean exact f32 fallback storage —
+/// so the three columns always sum to 100%.
+pub fn stash_mix_string(ledger: &Ledger) -> String {
+    let mix = ledger
+        .timewise_bits_mix_where(TensorKind::Activation, |name| name.starts_with("stash:"));
+    let bucket = |lo: u8, hi: u8| -> f64 {
+        mix.iter()
+            .filter(|(&b, _)| b >= lo && b <= hi)
+            .map(|(_, &w)| w)
+            .sum::<f64>()
+            * 100.0
+    };
+    format!(
+        "int8 {:5.1}% | int16 {:5.1}% | f32 {:5.1}%",
+        bucket(0, 8),
+        bucket(9, 16),
+        bucket(17, u8::MAX)
     )
 }
 
@@ -57,6 +83,48 @@ mod tests {
         let s = grad_mix_string(&l);
         assert!(s.contains("int8  50.0%"), "{s}");
         assert!(s.contains("int16  50.0%"), "{s}");
+    }
+
+    #[test]
+    fn mix_strings_group_subsystems_apart() {
+        let mut l = Ledger::new();
+        l.set_total_iters(100);
+        l.record_event(
+            "conv0",
+            TensorKind::Gradient,
+            Event { iter: 0, bits: 8, interval: 1, error: 0.0 },
+        );
+        // comm and stash records must not leak into the compute mix…
+        l.record_event(
+            "comm:fc0.0",
+            TensorKind::Gradient,
+            Event { iter: 0, bits: 16, interval: 1, error: 0.0 },
+        );
+        l.record_event(
+            "stash:conv0/patches",
+            TensorKind::Activation,
+            Event { iter: 0, bits: 16, interval: 1, error: 0.0 },
+        );
+        let g = grad_mix_string(&l);
+        assert!(g.contains("int8 100.0%"), "{g}");
+        assert!(g.contains("int16   0.0%"), "{g}");
+        // …and the stash mix counts only stash:* activation records
+        let s = stash_mix_string(&l);
+        assert!(s.contains("int16 100.0%"), "{s}");
+        assert!(s.contains("int8   0.0%"), "{s}");
+    }
+
+    #[test]
+    fn stash_mix_reports_wide_widths_as_f32() {
+        let mut l = Ledger::new();
+        l.set_total_iters(10);
+        l.record_event(
+            "stash:fc0/x",
+            TensorKind::Activation,
+            Event { iter: 0, bits: 24, interval: 1, error: 0.0 },
+        );
+        let s = stash_mix_string(&l);
+        assert!(s.contains("f32 100.0%"), "{s}");
     }
 
     #[test]

@@ -37,6 +37,7 @@ pub mod data;
 pub mod exp;
 pub mod fixedpoint;
 pub mod kernels;
+pub mod mem;
 pub mod nn;
 pub mod opcount;
 pub mod runtime;

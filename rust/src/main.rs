@@ -16,7 +16,8 @@ use std::time::Instant;
 use anyhow::{anyhow, bail, Context, Result};
 
 use apt::exp;
-use apt::exp::common::grad_mix_string;
+use apt::exp::common::{grad_mix_string, stash_mix_string};
+use apt::mem::StashPolicy;
 use apt::nn::{models, QuantMode};
 use apt::serve::{FrozenModel, InferenceServer, ServeConfig};
 use apt::train::{CommPrecision, SessionBuilder, TrainRecord};
@@ -32,6 +33,7 @@ fn usage() -> ! {
          \x20 train [--model alexnet|vgg|resnet|mobilenet|inception|mlp]\n\
          \x20       [--mode float32|adaptive|int8|int16] [--iters N] [--lr F]\n\
          \x20       [--replicas N] [--comm-bits 8|16|adaptive|f32]\n\
+         \x20       [--act-bits 8|16|adaptive|f32] [--recompute]\n\
          \x20 serve [--ckpt file] [--model mlp] [--mode int8] [--train-iters N]\n\
          \x20       [--seed N] [--requests N] [--clients N] [--workers N]\n\
          \x20       [--max-batch N] [--max-wait-us N]\n\
@@ -82,21 +84,42 @@ fn cmd_train(args: &Args) -> Result<()> {
     let mode = parse_mode(args.str_or("mode", "adaptive").as_str(), iters)?;
     let replicas: usize = parsed(args, "replicas", 1)?;
     let comm = CommPrecision::parse(&args.str_or("comm-bits", "f32"), iters)?;
+    let act = StashPolicy::parse(&args.str_or("act-bits", "f32"), iters)?;
+    // checked flag parse: a malformed value must error, not panic (the
+    // no-panic CLI contract of the PR-4 hardening pass)
+    let recompute = match args.get("recompute") {
+        None => false,
+        Some("true") | Some("1") | Some("yes") => true,
+        Some("false") | Some("0") | Some("no") => false,
+        Some(v) => bail!("--recompute expects a bool, got {v:?}"),
+    };
     let builder = SessionBuilder::classifier(model)
         .mode(mode)
         .lr(parsed(args, "lr", 0.01)?)
         .batch(parsed(args, "batch", 16)?)
         .seed(parsed(args, "seed", 0)?)
-        .noise(parsed(args, "noise", 0.5)?);
+        .noise(parsed(args, "noise", 0.5)?)
+        .stash_policy(act)
+        .recompute(recompute);
     // Always build through the Result-based parallel constructor: at
     // --replicas 1 it is bit-identical to the plain host loop (pinned by
     // rust/tests/test_parallel.rs), and a bad --model errors instead of
     // panicking.
     let mut s = builder.build_parallel(replicas.max(1), comm)?;
     s.run(iters)?;
+    let peak_stash = s.mem().peak_bytes();
     let run: TrainRecord = s.record()?;
     println!("{}: eval acc {:.3}", run.label, run.eval_acc);
     println!("gradient bits: {}", grad_mix_string(&run.ledger));
+    println!(
+        "activation stash: {} storage{}, peak {:.1} KB/replica/step",
+        act.label(),
+        if recompute { " + recompute" } else { "" },
+        peak_stash as f64 / 1024.0
+    );
+    if act.config().is_some() {
+        println!("stash bits: {}", stash_mix_string(&run.ledger));
+    }
     if replicas > 1 {
         let comm_bits: Vec<String> = run
             .grad_bits

@@ -1,0 +1,646 @@
+//! Quantized activation memory (DESIGN.md §Activation-Memory, system S19).
+//!
+//! Between forward and backward a training step holds every tensor the
+//! backward pass will need — for conv nets that is the dominant memory cost
+//! of training, and until this module it was all full f32. The
+//! [`ActivationStash`] owns those tensors behind a [`StashPolicy`]:
+//!
+//! - [`StashPolicy::F32`] — store the saved tensors verbatim. Bit-identical
+//!   to the pre-stash layer-private caches (pinned by
+//!   `rust/tests/test_mem.rs` and the `test_session.rs` reference loops).
+//! - [`StashPolicy::Int8`] / [`StashPolicy::Int16`] — encode each stashed
+//!   tensor to fixed-point integer codes plus a per-tensor [`Scheme`] at
+//!   stash time (scale from the tensor's own max-abs, the paper's Appendix-B
+//!   rule), decode at backward time. Per-element error is bounded by half
+//!   the scheme resolution.
+//! - [`StashPolicy::Adaptive`] — one [`PrecisionController`] per stash
+//!   *site* chooses the storage bit-width via QEM/QPA, exactly as the
+//!   compute-side controllers choose GEMM operand widths; decisions are
+//!   recorded in the run [`Ledger`] under `stash:<site>` keys
+//!   (`TensorKind::Activation`). Widths above 16 fall back to exact f32
+//!   storage (there is no packed 24-bit payload).
+//!
+//! Orthogonally, the **recompute** option (gradient checkpointing) lets the
+//! GEMM layers (`nn::linear`, `nn::conv::Conv2d`) stash only their raw
+//! *input* and re-derive the quantized operands during backward from the
+//! frozen QEM/QPA schemes — dropping the conv patch matrices, the largest
+//! stash entries, entirely. Because schemes are frozen between forward and
+//! backward of one step and parameters only change after backward,
+//! recomputation under F32 storage is bit-identical to stashing
+//! (DESIGN.md §Activation-Memory lists the exactness conditions).
+//!
+//! Boolean masks (ReLU) and pooling argmax indices route through the stash
+//! too, as packed bitsets / u32 indices — exact under every policy, but
+//! counted by the [`MemLedger`] so reported peaks cover *all* backward
+//! state, not just the policy-encoded tensors.
+
+#![warn(missing_docs)]
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Result};
+
+use crate::apt::{AptConfig, ControllerState, Ledger, PrecisionController};
+use crate::fixedpoint::quantize::{self, codes_i16, codes_i8};
+use crate::fixedpoint::{Scheme, TensorKind};
+use crate::tensor::Tensor;
+
+/// Storage policy for tensors stashed between forward and backward
+/// (CLI `--act-bits {8,16,adaptive,f32}`).
+#[derive(Clone, Copy, Debug)]
+pub enum StashPolicy {
+    /// Store saved tensors verbatim — bit-identical to the historical
+    /// layer-private caches. The default.
+    F32,
+    /// Encode to int8 codes + per-tensor scale at stash time.
+    Int8,
+    /// Encode to int16 codes + per-tensor scale at stash time.
+    Int16,
+    /// Per-site QEM/QPA choice of the storage bit-width (int8 → int16 →
+    /// exact-f32 fallback above 16 bits), recorded as `stash:*` ledger
+    /// entries.
+    Adaptive(AptConfig),
+}
+
+impl StashPolicy {
+    /// Parse an `--act-bits` value. `iters` sizes the adaptive init phase
+    /// (one-tenth of the run, mirroring `--mode adaptive` / `--comm-bits`).
+    pub fn parse(s: &str, iters: u64) -> Result<StashPolicy> {
+        Ok(match s {
+            "f32" | "float32" => StashPolicy::F32,
+            "8" | "int8" => StashPolicy::Int8,
+            "16" | "int16" => StashPolicy::Int16,
+            "adaptive" => {
+                let mut cfg = AptConfig::default();
+                cfg.init_phase_iters = iters / 10;
+                // Stash controllers are Activation-kind; the paper's
+                // pin-forward rule must not freeze them at min_bits.
+                cfg.pin_forward_bits = false;
+                StashPolicy::Adaptive(cfg)
+            }
+            other => bail!("unknown --act-bits {other:?} (expected 8, 16, adaptive or f32)"),
+        })
+    }
+
+    /// Display label (`"f32"`, `"int8"`, `"int16"`, `"adaptive"`).
+    pub fn label(&self) -> String {
+        match self {
+            StashPolicy::F32 => "f32".into(),
+            StashPolicy::Int8 => "int8".into(),
+            StashPolicy::Int16 => "int16".into(),
+            StashPolicy::Adaptive(_) => "adaptive".into(),
+        }
+    }
+
+    /// Controller config, if the policy adapts per site.
+    pub fn config(&self) -> Option<AptConfig> {
+        match self {
+            StashPolicy::Adaptive(cfg) => Some(*cfg),
+            _ => None,
+        }
+    }
+}
+
+/// Stable address of one stash site: `<layer>/<site>` (e.g. `fc0/x`,
+/// `conv1/patches`). Layers create their handles once at construction and
+/// route every `put`/`take` through them — the successor of the old
+/// layer-private cache fields.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct StashHandle {
+    key: String,
+}
+
+impl StashHandle {
+    /// Handle for `site` of `layer` (key `<layer>/<site>`).
+    pub fn new(layer: &str, site: &str) -> StashHandle {
+        StashHandle { key: format!("{layer}/{site}") }
+    }
+
+    /// The `<layer>/<site>` key (also the `stash:<key>` ledger key under
+    /// the adaptive policy).
+    pub fn key(&self) -> &str {
+        &self.key
+    }
+}
+
+/// Encoded stash payload. Codes store the *quantized* tensor; masks and
+/// indices are exact bookkeeping for backward (ReLU masks, pool argmax).
+enum Payload {
+    /// Verbatim f32 values (the F32 policy, and the adaptive >16-bit
+    /// fallback).
+    F32(Vec<f32>),
+    /// int8 codes + the scheme that decodes them.
+    I8 { codes: Vec<i8>, scheme: Scheme },
+    /// int16 codes + the scheme that decodes them.
+    I16 { codes: Vec<i16>, scheme: Scheme },
+    /// Packed boolean mask (1 bit per element).
+    Mask { bits: Vec<u64>, len: usize },
+    /// u32 element indices (pooling argmax).
+    Indices(Vec<u32>),
+}
+
+impl Payload {
+    /// Stored bytes of this payload (codes/values only; the ~8-byte scheme
+    /// is counted as scheme overhead per encoded entry).
+    fn bytes(&self) -> usize {
+        const SCHEME_BYTES: usize = 8; // bits: u8 + s: i32, padded
+        match self {
+            Payload::F32(v) => 4 * v.len(),
+            Payload::I8 { codes, .. } => codes.len() + SCHEME_BYTES,
+            Payload::I16 { codes, .. } => 2 * codes.len() + SCHEME_BYTES,
+            Payload::Mask { bits, .. } => 8 * bits.len(),
+            Payload::Indices(v) => 4 * v.len(),
+        }
+    }
+}
+
+/// One stashed tensor (shape + encoded payload).
+struct Entry {
+    shape: Vec<usize>,
+    payload: Payload,
+}
+
+/// Byte accounting of the stash: live bytes, per-step peak, run peak and
+/// put traffic — the measurement behind `bench_act_memory` and the CLI's
+/// `stash peak` line.
+#[derive(Clone, Debug, Default)]
+pub struct MemLedger {
+    live_bytes: usize,
+    step_peak_bytes: usize,
+    peak_bytes: usize,
+    total_puts: u64,
+    total_put_bytes: u64,
+}
+
+impl MemLedger {
+    fn on_put(&mut self, bytes: usize) {
+        self.live_bytes += bytes;
+        self.total_puts += 1;
+        self.total_put_bytes += bytes as u64;
+        if self.live_bytes > self.step_peak_bytes {
+            self.step_peak_bytes = self.live_bytes;
+        }
+        if self.live_bytes > self.peak_bytes {
+            self.peak_bytes = self.live_bytes;
+        }
+    }
+
+    fn on_take(&mut self, bytes: usize) {
+        self.live_bytes = self.live_bytes.saturating_sub(bytes);
+    }
+
+    fn begin_step(&mut self) {
+        self.step_peak_bytes = self.live_bytes;
+    }
+
+    /// Bytes currently held by stash entries.
+    pub fn live_bytes(&self) -> usize {
+        self.live_bytes
+    }
+
+    /// Peak stashed bytes within the current step (reset by
+    /// `ActivationStash::begin_step`).
+    pub fn step_peak_bytes(&self) -> usize {
+        self.step_peak_bytes
+    }
+
+    /// Peak stashed bytes over the whole run.
+    pub fn peak_bytes(&self) -> usize {
+        self.peak_bytes
+    }
+
+    /// Number of `put` operations over the run.
+    pub fn total_puts(&self) -> u64 {
+        self.total_puts
+    }
+
+    /// Total bytes written into the stash over the run.
+    pub fn total_put_bytes(&self) -> u64 {
+        self.total_put_bytes
+    }
+}
+
+/// Owns every tensor saved for backward, behind a [`StashPolicy`].
+///
+/// Lifecycle per step: the session calls [`begin_step`](Self::begin_step),
+/// forward `put`s each saved tensor under its layer's [`StashHandle`],
+/// backward `take`s (and thereby frees) it. `put` on a live key replaces
+/// the entry (repeated forwards without backward, e.g. finite-difference
+/// probes, simply overwrite). `take` without a prior `put` is a programmer
+/// error and panics with the offending key.
+pub struct ActivationStash {
+    policy: StashPolicy,
+    recompute: bool,
+    entries: BTreeMap<String, Entry>,
+    /// Per-site storage-width controllers (adaptive policy only), created
+    /// lazily on first `put` of each site, in key order.
+    ctls: BTreeMap<String, PrecisionController>,
+    mem: MemLedger,
+}
+
+impl ActivationStash {
+    /// A stash with the given storage policy and recompute option.
+    pub fn new(policy: StashPolicy, recompute: bool) -> ActivationStash {
+        ActivationStash {
+            policy,
+            recompute,
+            entries: BTreeMap::new(),
+            ctls: BTreeMap::new(),
+            mem: MemLedger::default(),
+        }
+    }
+
+    /// The default stash of `TrainCtx::new()`: F32 storage, no recompute —
+    /// bit-identical to the historical private-field caches.
+    pub fn f32_default() -> ActivationStash {
+        ActivationStash::new(StashPolicy::F32, false)
+    }
+
+    /// The configured storage policy.
+    pub fn policy(&self) -> StashPolicy {
+        self.policy
+    }
+
+    /// Whether the GEMM layers should drop their saved operands and
+    /// recompute them from stashed inputs during backward.
+    pub fn recompute(&self) -> bool {
+        self.recompute
+    }
+
+    /// Byte accounting (peaks, live bytes, put traffic).
+    pub fn mem(&self) -> &MemLedger {
+        &self.mem
+    }
+
+    /// Mark a step boundary: the per-step peak restarts from the currently
+    /// live bytes (normally zero — backward consumed everything).
+    pub fn begin_step(&mut self) {
+        self.mem.begin_step();
+    }
+
+    /// Drop all live entries and restart the byte accounting (checkpoint
+    /// restores land between steps: no in-flight activation survives one,
+    /// and the restored run's reported peaks must not include the
+    /// pre-restore session's traffic).
+    pub fn clear_entries(&mut self) {
+        self.entries.clear();
+        self.mem = MemLedger::default();
+    }
+
+    fn insert(&mut self, h: &StashHandle, shape: Vec<usize>, payload: Payload) {
+        if let Some(old) = self.entries.remove(h.key()) {
+            self.mem.on_take(old.payload.bytes());
+        }
+        self.mem.on_put(payload.bytes());
+        self.entries.insert(h.key().to_string(), Entry { shape, payload });
+    }
+
+    fn remove(&mut self, h: &StashHandle) -> Entry {
+        let e = self
+            .entries
+            .remove(h.key())
+            .unwrap_or_else(|| panic!("stash take of {:?} before put", h.key()));
+        self.mem.on_take(e.payload.bytes());
+        e
+    }
+
+    fn encode_codes(data: &[f32], bits: u8) -> Payload {
+        let scheme = Scheme::for_range(quantize::max_abs(data), bits);
+        if bits <= 8 {
+            let mut codes = vec![0i8; data.len()];
+            codes_i8(data, &mut codes, scheme);
+            Payload::I8 { codes, scheme }
+        } else {
+            let mut codes = vec![0i16; data.len()];
+            codes_i16(data, &mut codes, scheme);
+            Payload::I16 { codes, scheme }
+        }
+    }
+
+    /// Stash a saved tensor under the policy. Takes the tensor by value:
+    /// the F32 policy moves the buffer in without a copy (allocation parity
+    /// with the historical private-field caches), encoded policies consume
+    /// it after the code pass. `iter` drives the adaptive controllers'
+    /// QEM/QPA schedule and `ledger` records their decisions
+    /// (`stash:<key>`, activation kind).
+    pub fn put(&mut self, h: &StashHandle, t: Tensor, iter: u64, ledger: &mut Ledger) {
+        let Tensor { shape, data } = t;
+        let payload = match self.policy {
+            StashPolicy::F32 => Payload::F32(data),
+            StashPolicy::Int8 => Self::encode_codes(&data, 8),
+            StashPolicy::Int16 => Self::encode_codes(&data, 16),
+            StashPolicy::Adaptive(cfg) => {
+                let ctl = self.ctls.entry(h.key().to_string()).or_insert_with(|| {
+                    PrecisionController::new(
+                        cfg,
+                        format!("stash:{}", h.key()),
+                        TensorKind::Activation,
+                    )
+                });
+                let bits = if ctl.needs_update(iter) {
+                    ctl.maybe_update_from_data(iter, &data, ledger).bits
+                } else {
+                    ctl.bits()
+                };
+                if bits <= 16 {
+                    Self::encode_codes(&data, bits)
+                } else {
+                    // no packed storage wider than int16: exact fallback
+                    Payload::F32(data)
+                }
+            }
+        };
+        self.insert(h, shape, payload);
+    }
+
+    /// Take (and free) a stashed tensor, decoding integer codes back to
+    /// f32. Panics if the handle was never `put` (backward before forward).
+    pub fn take(&mut self, h: &StashHandle) -> Tensor {
+        let e = self.remove(h);
+        let data = match e.payload {
+            Payload::F32(v) => v,
+            Payload::I8 { codes, scheme } => {
+                let r = scheme.resolution();
+                codes.iter().map(|&c| c as f32 * r).collect()
+            }
+            Payload::I16 { codes, scheme } => {
+                let r = scheme.resolution();
+                codes.iter().map(|&c| c as f32 * r).collect()
+            }
+            Payload::Mask { .. } | Payload::Indices(_) => {
+                panic!("stash entry {:?} is not a tensor (use take_mask/take_indices)", h.key())
+            }
+        };
+        Tensor::from_vec(&e.shape, data)
+    }
+
+    /// Stash a boolean mask (1 bit per element, exact under every policy).
+    pub fn put_mask(&mut self, h: &StashHandle, mask: &[bool]) {
+        let mut bits = vec![0u64; mask.len().div_ceil(64)];
+        for (i, &m) in mask.iter().enumerate() {
+            if m {
+                bits[i / 64] |= 1u64 << (i % 64);
+            }
+        }
+        self.insert(h, vec![mask.len()], Payload::Mask { bits, len: mask.len() });
+    }
+
+    /// Take (and free) a stashed mask.
+    pub fn take_mask(&mut self, h: &StashHandle) -> Vec<bool> {
+        let e = self.remove(h);
+        match e.payload {
+            Payload::Mask { bits, len } => {
+                (0..len).map(|i| (bits[i / 64] >> (i % 64)) & 1 == 1).collect()
+            }
+            _ => panic!("stash entry {:?} is not a mask", h.key()),
+        }
+    }
+
+    /// Stash element indices (pooling argmax; stored as u32, exact).
+    pub fn put_indices(&mut self, h: &StashHandle, idx: &[usize]) {
+        let v: Vec<u32> = idx
+            .iter()
+            .map(|&i| u32::try_from(i).expect("stash index exceeds u32"))
+            .collect();
+        self.insert(h, vec![idx.len()], Payload::Indices(v));
+    }
+
+    /// Take (and free) stashed indices.
+    pub fn take_indices(&mut self, h: &StashHandle) -> Vec<usize> {
+        let e = self.remove(h);
+        match e.payload {
+            Payload::Indices(v) => v.into_iter().map(|i| i as usize).collect(),
+            _ => panic!("stash entry {:?} is not an index list", h.key()),
+        }
+    }
+
+    /// Currently applied storage bit-width per adaptive site, in key order
+    /// (empty for non-adaptive policies).
+    pub fn stash_bits(&self) -> Vec<(String, u8)> {
+        self.ctls
+            .iter()
+            .map(|(k, c)| (format!("stash:{k}"), c.bits()))
+            .collect()
+    }
+
+    /// Snapshot every storage controller (checkpointing): site key +
+    /// decision state, in key order. Empty for non-adaptive policies.
+    pub fn snapshot_controllers(&self) -> Vec<(String, ControllerState)> {
+        self.ctls.iter().map(|(k, c)| (k.clone(), c.snapshot())).collect()
+    }
+
+    /// Validate a [`snapshot_controllers`](Self::snapshot_controllers)
+    /// record against this stash without mutating anything — restores fail
+    /// *before* any other session state is overwritten. An empty snapshot
+    /// (v1/v2 checkpoints, non-adaptive saves) is compatible with any
+    /// policy; a non-empty one requires an adaptive policy here.
+    pub fn check_controllers(&self, st: &[(String, ControllerState)]) -> Result<()> {
+        if !st.is_empty() && self.policy.config().is_none() {
+            bail!(
+                "checkpoint carries {} stash controllers but this session's \
+                 --act-bits policy is {:?} (expected adaptive)",
+                st.len(),
+                self.policy.label()
+            );
+        }
+        Ok(())
+    }
+
+    /// Restore a controller snapshot: the stash's controller set becomes
+    /// exactly the checkpoint's (sites the restored run never stashed are
+    /// recreated on their next `put`). Errors — without mutating — on a
+    /// policy mismatch; see [`check_controllers`](Self::check_controllers).
+    pub fn restore_controllers(&mut self, st: &[(String, ControllerState)]) -> Result<()> {
+        self.check_controllers(st)?;
+        self.ctls.clear();
+        if let Some(cfg) = self.policy.config() {
+            for (key, state) in st {
+                let mut c = PrecisionController::new(
+                    cfg,
+                    format!("stash:{key}"),
+                    TensorKind::Activation,
+                );
+                c.restore(state);
+                self.ctls.insert(key.clone(), c);
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Pcg32;
+
+    fn randt(seed: u64, shape: &[usize], std: f32) -> Tensor {
+        let mut rng = Pcg32::seeded(seed);
+        let mut t = Tensor::zeros(shape);
+        rng.fill_normal(&mut t.data, std);
+        t
+    }
+
+    #[test]
+    fn f32_policy_roundtrips_verbatim() {
+        let mut s = ActivationStash::f32_default();
+        let mut ledger = Ledger::new();
+        let h = StashHandle::new("fc0", "x");
+        let t = randt(0, &[4, 8], 1.0);
+        s.put(&h, t.clone(), 0, &mut ledger);
+        assert_eq!(s.mem().live_bytes(), 4 * 32);
+        let back = s.take(&h);
+        assert_eq!(back, t);
+        assert_eq!(s.mem().live_bytes(), 0);
+        assert_eq!(s.mem().peak_bytes(), 4 * 32);
+    }
+
+    #[test]
+    fn int8_int16_error_bounded_by_half_resolution() {
+        let t = randt(1, &[16, 32], 2.0);
+        let mut ledger = Ledger::new();
+        for (policy, bits) in [(StashPolicy::Int8, 8u8), (StashPolicy::Int16, 16u8)] {
+            let mut s = ActivationStash::new(policy, false);
+            let h = StashHandle::new("l", "x");
+            s.put(&h, t.clone(), 0, &mut ledger);
+            let back = s.take(&h);
+            let sch = Scheme::for_range(t.max_abs(), bits);
+            let half = sch.resolution() / 2.0;
+            for (&a, &b) in t.data.iter().zip(&back.data) {
+                assert!((a - b).abs() <= half + 1e-9, "bits={bits}: {a} vs {b}");
+            }
+        }
+    }
+
+    #[test]
+    fn int8_storage_is_quarter_of_f32() {
+        let t = randt(2, &[64, 64], 1.0);
+        let mut ledger = Ledger::new();
+        let mut f = ActivationStash::new(StashPolicy::F32, false);
+        let mut q = ActivationStash::new(StashPolicy::Int8, false);
+        let h = StashHandle::new("l", "x");
+        f.put(&h, t.clone(), 0, &mut ledger);
+        q.put(&h, t.clone(), 0, &mut ledger);
+        assert_eq!(f.mem().live_bytes(), 4 * 4096);
+        assert!(q.mem().live_bytes() < 4096 + 64, "{}", q.mem().live_bytes());
+    }
+
+    #[test]
+    fn adaptive_policy_records_stash_ledger_keys() {
+        let mut cfg = AptConfig::default();
+        cfg.init_phase_iters = 0;
+        cfg.pin_forward_bits = false;
+        let mut s = ActivationStash::new(StashPolicy::Adaptive(cfg), false);
+        let mut ledger = Ledger::new();
+        let h = StashHandle::new("conv0", "patches");
+        let t = randt(3, &[8, 27], 1.0);
+        s.put(&h, t.clone(), 0, &mut ledger);
+        let _ = s.take(&h);
+        let key = ("stash:conv0/patches".to_string(), TensorKind::Activation);
+        assert!(ledger.tensors.contains_key(&key), "{:?}", ledger.tensors.keys());
+        assert_eq!(s.stash_bits().len(), 1);
+    }
+
+    #[test]
+    fn adaptive_escalates_long_tail_to_wider_storage() {
+        let mut cfg = AptConfig::default();
+        cfg.init_phase_iters = 0;
+        cfg.pin_forward_bits = false;
+        let mut s = ActivationStash::new(StashPolicy::Adaptive(cfg), false);
+        let mut ledger = Ledger::new();
+        let mut t = randt(4, &[4096], 0.05);
+        for (i, v) in t.data.iter_mut().enumerate() {
+            if i % 64 == 0 {
+                *v *= 400.0;
+            }
+        }
+        let h = StashHandle::new("fc2", "x");
+        s.put(&h, t.clone(), 0, &mut ledger);
+        let bits = s.stash_bits()[0].1;
+        assert!(bits >= 16, "long-tail stash must escalate, got int{bits}");
+        // and the decode error respects the escalated width
+        let back = s.take(&h);
+        let sch = Scheme::for_range(t.max_abs(), bits.min(16));
+        let half = sch.resolution() / 2.0;
+        for (&a, &b) in t.data.iter().zip(&back.data) {
+            assert!((a - b).abs() <= half + 1e-9);
+        }
+    }
+
+    #[test]
+    fn masks_and_indices_roundtrip_exactly() {
+        let mut s = ActivationStash::new(StashPolicy::Int8, false);
+        let hm = StashHandle::new("relu0", "mask");
+        let hi = StashHandle::new("pool0", "argmax");
+        let mask: Vec<bool> = (0..130).map(|i| i % 3 == 0).collect();
+        let idx: Vec<usize> = (0..70).map(|i| i * 13).collect();
+        s.put_mask(&hm, &mask);
+        s.put_indices(&hi, &idx);
+        // 130 bits → 3 u64 words = 24 bytes; 70 u32 = 280 bytes
+        assert_eq!(s.mem().live_bytes(), 24 + 280);
+        assert_eq!(s.take_mask(&hm), mask);
+        assert_eq!(s.take_indices(&hi), idx);
+    }
+
+    #[test]
+    fn put_replaces_and_step_peak_resets() {
+        let mut s = ActivationStash::f32_default();
+        let mut ledger = Ledger::new();
+        let h = StashHandle::new("l", "x");
+        let t = randt(5, &[10], 1.0);
+        s.put(&h, t.clone(), 0, &mut ledger);
+        s.put(&h, t.clone(), 0, &mut ledger); // replace, not leak
+        assert_eq!(s.mem().live_bytes(), 40);
+        assert_eq!(s.mem().step_peak_bytes(), 40);
+        let _ = s.take(&h);
+        s.begin_step();
+        assert_eq!(s.mem().step_peak_bytes(), 0);
+        assert_eq!(s.mem().peak_bytes(), 40);
+        assert_eq!(s.mem().total_puts(), 2);
+    }
+
+    #[test]
+    #[should_panic(expected = "before put")]
+    fn take_before_put_panics_with_key() {
+        let mut s = ActivationStash::f32_default();
+        let _ = s.take(&StashHandle::new("l", "x"));
+    }
+
+    #[test]
+    fn controller_snapshot_roundtrip_and_policy_mismatch() {
+        let mut cfg = AptConfig::default();
+        cfg.init_phase_iters = 0;
+        cfg.pin_forward_bits = false;
+        let mut s = ActivationStash::new(StashPolicy::Adaptive(cfg), false);
+        let mut ledger = Ledger::new();
+        let h = StashHandle::new("fc0", "x");
+        s.put(&h, randt(6, &[256], 1.0), 0, &mut ledger);
+        let snap = s.snapshot_controllers();
+        assert_eq!(snap.len(), 1);
+        assert_eq!(snap[0].0, "fc0/x");
+
+        let mut s2 = ActivationStash::new(StashPolicy::Adaptive(cfg), false);
+        s2.restore_controllers(&snap).unwrap();
+        assert_eq!(s2.snapshot_controllers(), snap);
+
+        // non-adaptive target rejects a controller-carrying snapshot
+        let s3 = ActivationStash::new(StashPolicy::Int8, false);
+        assert!(s3.check_controllers(&snap).is_err());
+        // …but an empty snapshot (v1/v2 checkpoints) is fine everywhere
+        assert!(s3.check_controllers(&[]).is_ok());
+    }
+
+    #[test]
+    fn policy_parse_matches_cli_forms() {
+        assert!(matches!(StashPolicy::parse("f32", 100).unwrap(), StashPolicy::F32));
+        assert!(matches!(StashPolicy::parse("8", 100).unwrap(), StashPolicy::Int8));
+        assert!(matches!(StashPolicy::parse("int16", 100).unwrap(), StashPolicy::Int16));
+        match StashPolicy::parse("adaptive", 100).unwrap() {
+            StashPolicy::Adaptive(cfg) => {
+                assert_eq!(cfg.init_phase_iters, 10);
+                assert!(!cfg.pin_forward_bits);
+            }
+            other => panic!("unexpected policy {other:?}"),
+        }
+        assert!(StashPolicy::parse("int7", 100).is_err());
+    }
+}

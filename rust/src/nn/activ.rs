@@ -1,18 +1,22 @@
 //! Activation / shape layers: ReLU, max-pool 2×2, global average pool.
-//! None of these are quantized (the paper quantizes GEMM operands only).
+//! None of these are quantized (the paper quantizes GEMM operands only) —
+//! but their backward bookkeeping routes through the `TrainCtx` stash as
+//! exact packed payloads (1-bit ReLU masks, u32 pool argmax), so the
+//! reported stash peaks cover every byte held between forward and backward.
 
 use super::{Layer, TrainCtx};
+use crate::mem::StashHandle;
 use crate::tensor::Tensor;
 
 /// Elementwise ReLU.
 pub struct ReLU {
     name: String,
-    mask: Vec<bool>,
+    h_mask: StashHandle,
 }
 
 impl ReLU {
     pub fn new(name: &str) -> Self {
-        ReLU { name: name.to_string(), mask: Vec::new() }
+        ReLU { h_mask: StashHandle::new(name, "mask"), name: name.to_string() }
     }
 }
 
@@ -20,16 +24,18 @@ impl Layer for ReLU {
     fn forward(&mut self, x: &Tensor, ctx: &mut TrainCtx) -> Tensor {
         let mut y = x.clone();
         if ctx.training {
-            self.mask = x.data.iter().map(|&v| v > 0.0).collect();
+            let mask: Vec<bool> = x.data.iter().map(|&v| v > 0.0).collect();
+            ctx.stash.put_mask(&self.h_mask, &mask);
         }
         y.map_inplace(|v| v.max(0.0));
         y
     }
 
-    fn backward(&mut self, g: &Tensor, _ctx: &mut TrainCtx) -> Tensor {
-        assert_eq!(g.len(), self.mask.len());
+    fn backward(&mut self, g: &Tensor, ctx: &mut TrainCtx) -> Tensor {
+        let mask = ctx.stash.take_mask(&self.h_mask);
+        assert_eq!(g.len(), mask.len());
         let mut d = g.clone();
-        for (v, &m) in d.data.iter_mut().zip(&self.mask) {
+        for (v, &m) in d.data.iter_mut().zip(&mask) {
             if !m {
                 *v = 0.0;
             }
@@ -53,13 +59,13 @@ pub struct MaxPool2 {
     pub c: usize,
     pub h: usize,
     pub w: usize,
-    argmax: Vec<usize>,
+    h_argmax: StashHandle,
 }
 
 impl MaxPool2 {
     pub fn new(name: &str, c: usize, h: usize, w: usize) -> Self {
         assert!(h % 2 == 0 && w % 2 == 0, "pool needs even dims, got {h}x{w}");
-        MaxPool2 { name: name.to_string(), c, h, w, argmax: Vec::new() }
+        MaxPool2 { h_argmax: StashHandle::new(name, "argmax"), name: name.to_string(), c, h, w }
     }
 
     pub fn out_hw(&self) -> (usize, usize) {
@@ -74,8 +80,7 @@ impl Layer for MaxPool2 {
         assert_eq!(x.dim(1), c * h * w);
         let (oh, ow) = self.out_hw();
         let mut y = Tensor::zeros(&[n, c * oh * ow]);
-        self.argmax.clear();
-        self.argmax.resize(n * c * oh * ow, 0);
+        let mut argmax = vec![0usize; if ctx.training { n * c * oh * ow } else { 0 }];
         for img in 0..n {
             for ch in 0..c {
                 let xi = &x.data[img * c * h * w + ch * h * w..][..h * w];
@@ -95,20 +100,24 @@ impl Layer for MaxPool2 {
                         }
                         y.data[base_o + oy * ow + ox] = best;
                         if ctx.training {
-                            self.argmax[base_o + oy * ow + ox] = img * c * h * w + ch * h * w + bi;
+                            argmax[base_o + oy * ow + ox] = img * c * h * w + ch * h * w + bi;
                         }
                     }
                 }
             }
         }
+        if ctx.training {
+            ctx.stash.put_indices(&self.h_argmax, &argmax);
+        }
         y
     }
 
-    fn backward(&mut self, g: &Tensor, _ctx: &mut TrainCtx) -> Tensor {
+    fn backward(&mut self, g: &Tensor, ctx: &mut TrainCtx) -> Tensor {
         let n = g.dim(0);
+        let argmax = ctx.stash.take_indices(&self.h_argmax);
         let mut dx = Tensor::zeros(&[n, self.c * self.h * self.w]);
         for (i, &gi) in g.data.iter().enumerate() {
-            dx.data[self.argmax[i]] += gi;
+            dx.data[argmax[i]] += gi;
         }
         dx
     }

@@ -4,6 +4,14 @@
 //! the im2col lowering, so quantization hits exactly the operands the paper
 //! quantizes. NCHW activations flattened as `[n, c*h*w]` 2-D tensors with
 //! the geometry carried by the layer.
+//!
+//! The im2col patch matrices — k·k× the input size, the dominant stash
+//! entry of every conv net — route through the `TrainCtx` activation stash
+//! (`<name>/patches`, one `[n, rows·cols]` tensor per step) together with
+//! Ŵ for quantized runs (`<name>/w`). With recompute on, only the raw
+//! input images are stashed (`<name>/x`) and the patches are re-lowered
+//! (and re-fake-quantized with the frozen scheme) during backward —
+//! classic gradient checkpointing with a ~k² stash reduction.
 
 use super::{Layer, QuantMode, TrainCtx};
 use crate::apt::LayerControllers;
@@ -11,6 +19,7 @@ use crate::fixedpoint::conv::{col2im, im2col, Conv2dGeom};
 use crate::fixedpoint::gemm;
 use crate::fixedpoint::quantize::fake_quant_stats_inplace;
 use crate::fixedpoint::TensorKind;
+use crate::mem::StashHandle;
 use crate::tensor::Tensor;
 use crate::util::Pcg32;
 
@@ -24,8 +33,10 @@ pub struct Conv2d {
     pub gw: Tensor,
     pub gb: Tensor,
     ctl: Option<LayerControllers>,
-    patches_q: Vec<Tensor>, // per image, quantized patch matrix
-    w_q: Tensor,
+    // stash sites: quantized patches + Ŵ, or the raw input under recompute
+    h_patches: StashHandle,
+    h_w: StashHandle,
+    h_x: StashHandle,
     last_g: Option<Tensor>,
     pub grad_bits_override: Option<u8>,
 }
@@ -52,8 +63,9 @@ impl Conv2d {
             gb: Tensor::zeros(&[geom.out_c]),
             ctl: mode.config().map(|c| LayerControllers::new(c, name)),
             w,
-            patches_q: Vec::new(),
-            w_q: Tensor::zeros(&[0]),
+            h_patches: StashHandle::new(name, "patches"),
+            h_w: StashHandle::new(name, "w"),
+            h_x: StashHandle::new(name, "x"),
             last_g: None,
             grad_bits_override: None,
         }
@@ -104,7 +116,13 @@ impl Layer for Conv2d {
         let eng = crate::kernels::global();
         let (oh, ow) = g.out_hw(h, w);
         let mut out = Tensor::zeros(&[n, g.out_c * oh * ow]);
-        self.patches_q.clear();
+        let recompute = ctx.stash.recompute();
+        let save_patches = ctx.training && !recompute;
+        let mut patches_save = if save_patches {
+            Vec::with_capacity(n * rows * cols)
+        } else {
+            Vec::new()
+        };
         let mut patch = vec![0.0f32; rows * cols];
         for img in 0..n {
             let xi = &x.data[img * g.in_c * h * w..(img + 1) * g.in_c * h * w];
@@ -121,12 +139,23 @@ impl Layer for Conv2d {
                     *v += bv;
                 }
             }
-            if ctx.training {
-                self.patches_q.push(Tensor::from_vec(&[rows, cols], patch.clone()));
+            if save_patches {
+                patches_save.extend_from_slice(&patch);
             }
         }
         if ctx.training {
-            self.w_q = wq;
+            if recompute {
+                // checkpointing: the raw input alone (~1/k² of the patch
+                // bytes); backward re-lowers with the frozen schemes
+                ctx.stash.put(&self.h_x, x.clone(), ctx.iter, &mut ctx.ledger);
+            } else {
+                let patches = Tensor::from_vec(&[n, rows * cols], patches_save);
+                ctx.stash.put(&self.h_patches, patches, ctx.iter, &mut ctx.ledger);
+                if self.ctl.is_some() {
+                    // f32 runs read the live weight at backward instead
+                    ctx.stash.put(&self.h_w, wq, ctx.iter, &mut ctx.ledger);
+                }
+            }
         }
         out
     }
@@ -156,18 +185,51 @@ impl Layer for Conv2d {
         self.last_g = Some(gout.clone());
 
         let eng = crate::kernels::global();
+        // Reconstruct the saved operands: the stashed `[n, rows·cols]`
+        // patch tensor + Ŵ, or — with recompute — re-lower im2col from the
+        // raw stashed input and re-apply the schemes frozen at forward time
+        // (bit-identical under F32 storage; weights have not changed).
+        let (patches, wq_owned): (Tensor, Option<Tensor>) = if ctx.stash.recompute() {
+            let x = ctx.stash.take(&self.h_x);
+            let (wq_opt, sx_opt) = match &self.ctl {
+                None => (None, None),
+                Some(ctl) => {
+                    let mut wq = self.w.clone();
+                    fake_quant_stats_inplace(&mut wq.data, ctl.w.scheme());
+                    (Some(wq), Some(ctl.x.scheme()))
+                }
+            };
+            let mut pd = vec![0.0f32; n * rows * cols];
+            let mut patch = vec![0.0f32; rows * cols];
+            for img in 0..n {
+                let xi = &x.data[img * g.in_c * h * w..(img + 1) * g.in_c * h * w];
+                im2col(g, h, w, xi, &mut patch);
+                if let Some(sx) = sx_opt {
+                    eng.fake_quant_stats(&mut patch, sx);
+                }
+                pd[img * rows * cols..(img + 1) * rows * cols].copy_from_slice(&patch);
+            }
+            (Tensor::from_vec(&[n, rows * cols], pd), wq_opt)
+        } else {
+            let p = ctx.stash.take(&self.h_patches);
+            let wq = match &self.ctl {
+                None => None,
+                Some(_) => Some(ctx.stash.take(&self.h_w)),
+            };
+            (p, wq)
+        };
+        let wsrc: &Tensor = wq_owned.as_ref().unwrap_or(&self.w);
         let mut dx = Tensor::zeros(&[n, g.in_c * h * w]);
         let mut dpatch = vec![0.0f32; rows * cols];
         let mut wt = vec![0.0f32; self.w.len()];
-        let wsrc = if self.ctl.is_some() { &self.w_q } else { &self.w };
         gemm::transpose(g.out_c, rows, &wsrc.data, &mut wt);
         let mut dw_local = vec![0.0f32; self.w.len()];
         let mut patch_t = vec![0.0f32; rows * cols];
         for img in 0..n {
             let gi = &gq.data[img * g.out_c * cols..(img + 1) * g.out_c * cols];
             // WTGRAD: dW += ĝ[out_c×cols] · patchᵀ[cols×rows]
-            let pq = &self.patches_q[img];
-            gemm::transpose(rows, cols, &pq.data, &mut patch_t);
+            let pq = &patches.data[img * rows * cols..(img + 1) * rows * cols];
+            gemm::transpose(rows, cols, pq, &mut patch_t);
             eng.gemm_f32(g.out_c, cols, rows, gi, &patch_t, &mut dw_local);
             for (a, &b) in self.gw.data.iter_mut().zip(dw_local.iter()) {
                 *a += b;
@@ -238,6 +300,8 @@ impl Layer for Conv2d {
 /// Depthwise 3×3 convolution (MobileNet's separable building block).
 /// Quantization applies to the per-channel kernels and activations the same
 /// way; implemented directly (no im2col) since each channel is independent.
+/// X̂ stashes under `<name>/x` (Ŵ under `<name>/w` for quantized runs);
+/// recompute does not apply (the input *is* the saved operand here).
 pub struct DepthwiseConv2d {
     name: String,
     pub c: usize,
@@ -247,8 +311,8 @@ pub struct DepthwiseConv2d {
     pub w: Tensor, // c × 9
     pub gw: Tensor,
     ctl: Option<LayerControllers>,
-    x_q: Tensor,
-    w_q: Tensor,
+    h_x: StashHandle,
+    h_w: StashHandle,
     last_g: Option<Tensor>,
 }
 
@@ -265,8 +329,8 @@ impl DepthwiseConv2d {
             gw: Tensor::zeros(&[c, 9]),
             ctl: mode.config().map(|cg| LayerControllers::new(cg, name)),
             w,
-            x_q: Tensor::zeros(&[0]),
-            w_q: Tensor::zeros(&[0]),
+            h_x: StashHandle::new(name, "x"),
+            h_w: StashHandle::new(name, "w"),
             last_g: None,
         }
     }
@@ -327,8 +391,10 @@ impl Layer for DepthwiseConv2d {
             }
         }
         if ctx.training {
-            self.x_q = xq;
-            self.w_q = wq;
+            ctx.stash.put(&self.h_x, xq, ctx.iter, &mut ctx.ledger);
+            if self.ctl.is_some() {
+                ctx.stash.put(&self.h_w, wq, ctx.iter, &mut ctx.ledger);
+            }
         }
         out
     }
@@ -349,11 +415,18 @@ impl Layer for DepthwiseConv2d {
         }
         self.last_g = Some(gout.clone());
 
+        let xq = ctx.stash.take(&self.h_x);
+        let wq_owned = if self.ctl.is_some() {
+            Some(ctx.stash.take(&self.h_w))
+        } else {
+            None
+        };
+        let wq: &Tensor = wq_owned.as_ref().unwrap_or(&self.w);
         let mut dx = Tensor::zeros(&[n, self.c * h * w]);
         for img in 0..n {
             for c in 0..self.c {
-                let xi = &self.x_q.data[img * self.c * h * w + c * h * w..][..h * w];
-                let k = &self.w_q.data[c * 9..(c + 1) * 9];
+                let xi = &xq.data[img * self.c * h * w + c * h * w..][..h * w];
+                let k = &wq.data[c * 9..(c + 1) * 9];
                 let gi = &gq.data[img * self.c * oh * ow + c * oh * ow..][..oh * ow];
                 let dxi = &mut dx.data[img * self.c * h * w + c * h * w..][..h * w];
                 let gk = &mut self.gw.data[c * 9..(c + 1) * 9];

@@ -5,10 +5,18 @@
 //!           dW = X̂ᵀ · dŶ          (WTGRAD — same quantized gradient)
 //!
 //! Bias add and bias grad stay f32 (the paper quantizes the GEMM operands).
+//!
+//! Saved tensors route through the `TrainCtx` activation stash
+//! (DESIGN.md §Activation-Memory): X̂ under the `<name>/x` handle and — for
+//! quantized runs — Ŵ under `<name>/w`; f32 runs read the live weight at
+//! backward (unchanged since forward). With recompute on, only the raw
+//! input is stashed (`<name>/x`) and X̂/Ŵ are re-derived during backward
+//! from the schemes frozen at forward time.
 
 use super::{Layer, QuantMode, TrainCtx};
 use crate::apt::LayerControllers;
 use crate::fixedpoint::quantize::fake_quant_stats_inplace;
+use crate::mem::StashHandle;
 use crate::tensor::Tensor;
 use crate::util::Pcg32;
 
@@ -19,9 +27,9 @@ pub struct Linear {
     pub gw: Tensor,
     pub gb: Tensor,
     ctl: Option<LayerControllers>,
-    // caches
-    x_q: Tensor,
-    w_q: Tensor,
+    // stash sites for the saved backward operands
+    h_x: StashHandle,
+    h_w: StashHandle,
     last_g: Option<Tensor>,
     /// When set, the gradient controller is forced to this static width for
     /// this layer only (the per-layer ablations of Fig 1/2/11).
@@ -41,8 +49,8 @@ impl Linear {
             gb: Tensor::zeros(&[dout]),
             ctl: mode.config().map(|c| LayerControllers::new(c, name)),
             w,
-            x_q: Tensor::zeros(&[0]),
-            w_q: Tensor::zeros(&[0]),
+            h_x: StashHandle::new(name, "x"),
+            h_w: StashHandle::new(name, "w"),
             last_g: None,
             grad_bits_override: None,
         }
@@ -57,11 +65,12 @@ impl Layer for Linear {
     fn forward(&mut self, x: &Tensor, ctx: &mut TrainCtx) -> Tensor {
         assert_eq!(x.rank(), 2, "{}: expected 2-D input", self.name);
         let eng = crate::kernels::global();
+        let recompute = ctx.stash.recompute();
         match &mut self.ctl {
             None => {
                 if ctx.training {
-                    self.x_q = x.clone();
-                    self.w_q = self.w.clone();
+                    // f32 run: X̂ = X; the backward weight is the live `w`.
+                    ctx.stash.put(&self.h_x, x.clone(), ctx.iter, &mut ctx.ledger);
                 }
                 let mut y = x.matmul_with(&self.w, eng);
                 y.add_row_bias(&self.b.data);
@@ -86,8 +95,14 @@ impl Layer for Linear {
                 let mut y = xq.matmul_with(&wq, eng);
                 y.add_row_bias(&self.b.data);
                 if ctx.training {
-                    self.x_q = xq;
-                    self.w_q = wq;
+                    if recompute {
+                        // checkpointing: keep only the raw input; X̂/Ŵ are
+                        // re-derived at backward from the frozen schemes
+                        ctx.stash.put(&self.h_x, x.clone(), ctx.iter, &mut ctx.ledger);
+                    } else {
+                        ctx.stash.put(&self.h_x, xq, ctx.iter, &mut ctx.ledger);
+                        ctx.stash.put(&self.h_w, wq, ctx.iter, &mut ctx.ledger);
+                    }
                 }
                 y
             }
@@ -119,8 +134,33 @@ impl Layer for Linear {
         };
         self.last_g = Some(g.clone());
         let eng = crate::kernels::global();
+        // Reconstruct the saved operands: stashed X̂ (and Ŵ for quantized
+        // runs), or — with recompute — re-derive both from the raw stashed
+        // input and the schemes frozen at forward time (bit-identical under
+        // F32 storage; parameters have not changed since forward).
+        let (x_used, wq_owned): (Tensor, Option<Tensor>) = if ctx.stash.recompute() {
+            let x = ctx.stash.take(&self.h_x);
+            match &self.ctl {
+                None => (x, None),
+                Some(ctl) => {
+                    let mut xq = x;
+                    eng.fake_quant_stats(&mut xq.data, ctl.x.scheme());
+                    let mut wq = self.w.clone();
+                    eng.fake_quant_stats(&mut wq.data, ctl.w.scheme());
+                    (xq, Some(wq))
+                }
+            }
+        } else {
+            let x = ctx.stash.take(&self.h_x);
+            let wq = match &self.ctl {
+                None => None,
+                Some(_) => Some(ctx.stash.take(&self.h_w)),
+            };
+            (x, wq)
+        };
+        let w_used: &Tensor = wq_owned.as_ref().unwrap_or(&self.w);
         // WTGRAD: dW += X̂ᵀ · dŶ
-        let dw = self.x_q.t().matmul_with(&gq, eng);
+        let dw = x_used.t().matmul_with(&gq, eng);
         self.gw.add_inplace(&dw);
         // bias grad: column sums
         let n = gq.dim(1);
@@ -130,7 +170,7 @@ impl Layer for Linear {
             }
         }
         // BPROP: dX = dŶ · Ŵᵀ
-        gq.matmul_with(&self.w_q.t(), eng)
+        gq.matmul_with(&w_used.t(), eng)
     }
 
     fn visit_params(&mut self, f: &mut dyn FnMut(&mut Tensor, &mut Tensor)) {
@@ -230,11 +270,14 @@ mod tests {
         let g = randt(&mut rng, &[3, 4], 1.0);
         let dx = l.backward(&g, &mut ctx);
 
-        // manual: ĝ @ ŵᵀ with the schemes the controllers landed on
+        // manual: ĝ @ ŵᵀ with the schemes the controllers landed on (Ŵ
+        // re-derived from the frozen weight scheme — what the stash held)
         let sg = Scheme::for_range(g.max_abs(), l.ctl.as_ref().unwrap().g.bits());
         let mut gq = g.clone();
         fake_quant_stats_inplace(&mut gq.data, sg);
-        let want = gq.matmul(&l.w_q.t());
+        let mut wq = l.w.clone();
+        fake_quant_stats_inplace(&mut wq.data, l.ctl.as_ref().unwrap().w.scheme());
+        let want = gq.matmul(&wq.t());
         for (a, b) in dx.data.iter().zip(&want.data) {
             assert!((a - b).abs() < 1e-5, "{a} vs {b}");
         }

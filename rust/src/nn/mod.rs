@@ -15,6 +15,7 @@ pub mod norm;
 pub mod rnn;
 
 use crate::apt::{AptConfig, LayerControllers, Ledger};
+use crate::mem::{ActivationStash, StashPolicy};
 use crate::tensor::Tensor;
 
 /// Quantization mode of a training run.
@@ -53,11 +54,32 @@ pub struct TrainCtx {
     pub iter: u64,
     pub training: bool,
     pub ledger: Ledger,
+    /// Every tensor saved for backward lives here, behind the run's
+    /// [`StashPolicy`] (DESIGN.md §Activation-Memory). `new()` uses F32
+    /// storage without recompute — bit-identical to the historical
+    /// layer-private caches.
+    pub stash: ActivationStash,
 }
 
 impl TrainCtx {
     pub fn new() -> Self {
-        TrainCtx { iter: 0, training: true, ledger: Ledger::new() }
+        TrainCtx {
+            iter: 0,
+            training: true,
+            ledger: Ledger::new(),
+            stash: ActivationStash::f32_default(),
+        }
+    }
+
+    /// A context whose stash stores under `policy`, optionally recomputing
+    /// the GEMM layers' saved operands during backward.
+    pub fn with_stash(policy: StashPolicy, recompute: bool) -> Self {
+        TrainCtx {
+            iter: 0,
+            training: true,
+            ledger: Ledger::new(),
+            stash: ActivationStash::new(policy, recompute),
+        }
     }
 }
 

@@ -1,6 +1,7 @@
 //! Composite blocks: residual (ResNet) and parallel-branch (Inception).
 
 use crate::fixedpoint::conv::Conv2dGeom;
+use crate::mem::StashHandle;
 use crate::nn::activ::ReLU;
 use crate::nn::conv::Conv2d;
 use crate::nn::norm::BatchNorm2d;
@@ -9,18 +10,19 @@ use crate::tensor::Tensor;
 use crate::util::Pcg32;
 
 /// Identity residual block: x + F(x) with F = conv-bn-relu-conv-bn.
-/// Channel count and spatial dims preserved.
+/// Channel count and spatial dims preserved. The block's own saved state
+/// (the post-sum ReLU mask) stashes under `<name>/relu_mask`; the path
+/// layers stash through their own handles.
 pub struct ResidualBlock {
     name: String,
     path: Vec<Box<dyn Layer>>,
-    relu_mask: Vec<bool>,
+    h_mask: StashHandle,
 }
 
 impl ResidualBlock {
     pub fn new(name: &str, c: usize, h: usize, w: usize, mode: QuantMode, rng: &mut Pcg32) -> Self {
         let g = Conv2dGeom { in_c: c, out_c: c, kh: 3, kw: 3, stride: 1, pad: 1 };
         ResidualBlock {
-            name: name.to_string(),
             path: vec![
                 Box::new(Conv2d::new(&format!("{name}c1"), g, h, w, mode, rng)),
                 Box::new(BatchNorm2d::new(&format!("{name}bn1"), c, h * w)),
@@ -28,7 +30,8 @@ impl ResidualBlock {
                 Box::new(Conv2d::new(&format!("{name}c2"), g, h, w, mode, rng)),
                 Box::new(BatchNorm2d::new(&format!("{name}bn2"), c, h * w)),
             ],
-            relu_mask: Vec::new(),
+            h_mask: StashHandle::new(name, "relu_mask"),
+            name: name.to_string(),
         }
     }
 }
@@ -42,15 +45,17 @@ impl Layer for ResidualBlock {
         h.add_inplace(x);
         // final ReLU on the sum
         if ctx.training {
-            self.relu_mask = h.data.iter().map(|&v| v > 0.0).collect();
+            let mask: Vec<bool> = h.data.iter().map(|&v| v > 0.0).collect();
+            ctx.stash.put_mask(&self.h_mask, &mask);
         }
         h.map_inplace(|v| v.max(0.0));
         h
     }
 
     fn backward(&mut self, g: &Tensor, ctx: &mut TrainCtx) -> Tensor {
+        let mask = ctx.stash.take_mask(&self.h_mask);
         let mut d = g.clone();
-        for (v, &m) in d.data.iter_mut().zip(&self.relu_mask) {
+        for (v, &m) in d.data.iter_mut().zip(&mask) {
             if !m {
                 *v = 0.0;
             }

@@ -1,8 +1,14 @@
 //! Batch normalization over channels of NCHW activations carried as
 //! [n, c*h*w]. Kept in f32 (the paper quantizes only GEMM operands); needed
 //! for the ResNet/Inception/MobileNet mini architectures to train.
+//!
+//! The saved normalized activation x̂ — the layer's one per-sample backward
+//! tensor — routes through the `TrainCtx` stash (`<name>/xhat`); the
+//! per-channel 1/σ vector is c floats of derived statistics and stays
+//! in-layer.
 
 use super::{Layer, TrainCtx};
+use crate::mem::StashHandle;
 use crate::tensor::Tensor;
 
 pub struct BatchNorm2d {
@@ -17,8 +23,8 @@ pub struct BatchNorm2d {
     pub running_var: Vec<f32>,
     pub momentum: f32,
     eps: f32,
-    // caches
-    xhat: Tensor,
+    // stash site for x̂; the tiny per-channel 1/σ stays a field
+    h_xhat: StashHandle,
     inv_std: Vec<f32>,
 }
 
@@ -36,7 +42,7 @@ impl BatchNorm2d {
             running_var: vec![1.0; c],
             momentum: 0.1,
             eps: 1e-5,
-            xhat: Tensor::zeros(&[0]),
+            h_xhat: StashHandle::new(name, "xhat"),
             inv_std: vec![],
         }
     }
@@ -81,7 +87,7 @@ impl Layer for BatchNorm2d {
                     }
                 }
             }
-            self.xhat = xhat;
+            ctx.stash.put(&self.h_xhat, xhat, ctx.iter, &mut ctx.ledger);
         } else {
             for ch in 0..c {
                 let istd = 1.0 / (self.running_var[ch] + self.eps).sqrt();
@@ -98,10 +104,11 @@ impl Layer for BatchNorm2d {
         y
     }
 
-    fn backward(&mut self, g: &Tensor, _ctx: &mut TrainCtx) -> Tensor {
+    fn backward(&mut self, g: &Tensor, ctx: &mut TrainCtx) -> Tensor {
         let n = g.dim(0);
         let (c, hw) = (self.c, self.hw);
         let cnt = (n * hw) as f32;
+        let xhat = ctx.stash.take(&self.h_xhat);
         let mut dx = Tensor::zeros(&[n, c * hw]);
         for ch in 0..c {
             let mut sum_g = 0.0f32;
@@ -110,7 +117,7 @@ impl Layer for BatchNorm2d {
                 for i in 0..hw {
                     let idx = img * c * hw + ch * hw + i;
                     sum_g += g.data[idx];
-                    sum_gx += g.data[idx] * self.xhat.data[idx];
+                    sum_gx += g.data[idx] * xhat.data[idx];
                 }
             }
             self.gbeta.data[ch] += sum_g;
@@ -121,7 +128,7 @@ impl Layer for BatchNorm2d {
                 for i in 0..hw {
                     let idx = img * c * hw + ch * hw + i;
                     dx.data[idx] = gamma * istd / cnt
-                        * (cnt * g.data[idx] - sum_g - self.xhat.data[idx] * sum_gx);
+                        * (cnt * g.data[idx] - sum_g - xhat.data[idx] * sum_gx);
                 }
             }
         }

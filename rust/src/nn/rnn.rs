@@ -13,6 +13,7 @@ use super::{QuantMode, TrainCtx};
 use crate::apt::LayerControllers;
 use crate::fixedpoint::quantize::fake_quant_stats_inplace;
 use crate::fixedpoint::{Scheme, TensorKind};
+use crate::mem::StashHandle;
 use crate::tensor::Tensor;
 use crate::util::Pcg32;
 
@@ -36,6 +37,11 @@ pub struct Seq2Seq {
     vel: Vec<Tensor>,
     // quant controllers per projection
     ctl: Option<Vec<LayerControllers>>, // [enc_wx, enc_wh, dec_wx, dec_wh, why]
+    // per-timestep stash handles (rnn/<role><t>), created once and grown
+    // lazily to the longest sequence seen — the create-once handle
+    // convention of DESIGN.md §Activation-Memory, adapted to BPTT
+    enc_handles: Vec<(StashHandle, StashHandle)>,
+    dec_handles: Vec<(StashHandle, StashHandle, StashHandle)>,
 }
 
 const PROJ_NAMES: [&str; 5] = ["enc_wx", "enc_wh", "dec_wx", "dec_wh", "why"];
@@ -87,6 +93,28 @@ impl Seq2Seq {
             ctl: mode
                 .config()
                 .map(|c| PROJ_NAMES.iter().map(|n| LayerControllers::new(c, n)).collect()),
+            enc_handles: Vec::new(),
+            dec_handles: Vec::new(),
+        }
+    }
+
+    /// Grow the per-timestep stash-handle caches to cover `s_len`/`t_len`
+    /// (no-op once the longest sequence has been seen).
+    fn ensure_handles(&mut self, s_len: usize, t_len: usize) {
+        while self.enc_handles.len() < s_len {
+            let t = self.enc_handles.len();
+            self.enc_handles.push((
+                StashHandle::new("rnn", &format!("enc_x{t}")),
+                StashHandle::new("rnn", &format!("enc_h{t}")),
+            ));
+        }
+        while self.dec_handles.len() < t_len {
+            let t = self.dec_handles.len();
+            self.dec_handles.push((
+                StashHandle::new("rnn", &format!("dec_x{t}")),
+                StashHandle::new("rnn", &format!("dec_h{t}")),
+                StashHandle::new("rnn", &format!("dec_s{t}")),
+            ));
         }
     }
 
@@ -242,8 +270,16 @@ impl Seq2Seq {
         let why_q = Self::qw(&mut self.ctl, 4, &self.why, iter, &mut ctx.ledger);
 
         // ---------------- forward ----------------
-        let mut enc_xq: Vec<Tensor> = Vec::with_capacity(s_len);
-        let mut enc_hq: Vec<Tensor> = Vec::with_capacity(s_len); // quantized h inputs
+        // BPTT operands (quantized embeddings / hidden inputs / softmax
+        // inputs) stash per timestep under the cached rnn/<role><t>
+        // handles (DESIGN.md §Activation-Memory); the tanh outputs stay
+        // local — they drive the forward recurrence itself. Forward and
+        // backward share the same handle cache, so key agreement is
+        // structural. (A `TrainCtx` serves one model — the repo-wide
+        // convention — so the fixed `rnn` namespace is safe.)
+        if train {
+            self.ensure_handles(s_len, t_len);
+        }
         let mut enc_h: Vec<Tensor> = Vec::with_capacity(s_len + 1);
         enc_h.push(Tensor::zeros(&[b, d]));
         for t in 0..s_len {
@@ -255,15 +291,14 @@ impl Seq2Seq {
             h.add_inplace(&hq.matmul_with(&enc_wh_q, eng));
             h.add_row_bias(&self.enc_b.data);
             tanh_vec(&mut h.data);
-            enc_xq.push(eq);
-            enc_hq.push(hq);
+            if train {
+                ctx.stash.put(&self.enc_handles[t].0, eq, iter, &mut ctx.ledger);
+                ctx.stash.put(&self.enc_handles[t].1, hq, iter, &mut ctx.ledger);
+            }
             enc_h.push(h);
         }
 
-        let mut dec_xq: Vec<Tensor> = Vec::with_capacity(t_len);
-        let mut dec_hq: Vec<Tensor> = Vec::with_capacity(t_len);
         let mut dec_h: Vec<Tensor> = Vec::with_capacity(t_len + 1);
-        let mut dec_sq: Vec<Tensor> = Vec::with_capacity(t_len); // quantized s for Why
         dec_h.push(enc_h.last().unwrap().clone());
         let mut logits_all: Vec<Tensor> = Vec::with_capacity(t_len);
         let bos = 0usize;
@@ -282,9 +317,11 @@ impl Seq2Seq {
             let sq = Self::qx(&mut self.ctl, 4, &h, iter, &mut ctx.ledger);
             let mut logits = sq.matmul_with(&why_q, eng);
             logits.add_row_bias(&self.by.data);
-            dec_xq.push(eq);
-            dec_hq.push(hq);
-            dec_sq.push(sq);
+            if train {
+                ctx.stash.put(&self.dec_handles[t].0, eq, iter, &mut ctx.ledger);
+                ctx.stash.put(&self.dec_handles[t].1, hq, iter, &mut ctx.ledger);
+                ctx.stash.put(&self.dec_handles[t].2, sq, iter, &mut ctx.ledger);
+            }
             dec_h.push(h);
             logits_all.push(logits);
         }
@@ -318,7 +355,8 @@ impl Seq2Seq {
             // quantize dlogits (ΔX̂ for the Why projection)
             let dlq = Self::qg(&mut self.ctl, 4, &dl, iter, &mut ctx.ledger);
             // why grads: sᵀ·ĝ ; by: col sums
-            self.grads[8].add_inplace(&dec_sq[t].t().matmul_with(&dlq, eng));
+            let sq = ctx.stash.take(&self.dec_handles[t].2);
+            self.grads[8].add_inplace(&sq.t().matmul_with(&dlq, eng));
             for row in dlq.data.chunks(v) {
                 for (gb, &x) in self.grads[9].data.iter_mut().zip(row) {
                     *gb += x;
@@ -333,8 +371,10 @@ impl Seq2Seq {
             }
             // quantize recurrent gradient (ΔX̂ for dec projections)
             let dsq = Self::qg(&mut self.ctl, 3, &ds, iter, &mut ctx.ledger);
-            self.grads[5].add_inplace(&dec_xq[t].t().matmul_with(&dsq, eng));
-            self.grads[6].add_inplace(&dec_hq[t].t().matmul_with(&dsq, eng));
+            let xq = ctx.stash.take(&self.dec_handles[t].0);
+            let hq = ctx.stash.take(&self.dec_handles[t].1);
+            self.grads[5].add_inplace(&xq.t().matmul_with(&dsq, eng));
+            self.grads[6].add_inplace(&hq.t().matmul_with(&dsq, eng));
             for row in dsq.data.chunks(d) {
                 for (gb, &x) in self.grads[7].data.iter_mut().zip(row) {
                     *gb += x;
@@ -358,8 +398,10 @@ impl Seq2Seq {
                 *dv *= 1.0 - hv * hv;
             }
             let dhq = Self::qg(&mut self.ctl, 1, &dhe, iter, &mut ctx.ledger);
-            self.grads[2].add_inplace(&enc_xq[t].t().matmul_with(&dhq, eng));
-            self.grads[3].add_inplace(&enc_hq[t].t().matmul_with(&dhq, eng));
+            let xq = ctx.stash.take(&self.enc_handles[t].0);
+            let hq = ctx.stash.take(&self.enc_handles[t].1);
+            self.grads[2].add_inplace(&xq.t().matmul_with(&dhq, eng));
+            self.grads[3].add_inplace(&hq.t().matmul_with(&dhq, eng));
             for row in dhq.data.chunks(d) {
                 for (gb, &x) in self.grads[4].data.iter_mut().zip(row) {
                     *gb += x;

@@ -20,6 +20,7 @@ use super::{EvalOut, Phase, StepInfo};
 use crate::apt::Ledger;
 use crate::coordinator::ArtifactTrainer;
 use crate::data::{translation_batch, SynthImages};
+use crate::mem::{ActivationStash, StashPolicy};
 use crate::nn::loss::{accuracy, softmax_xent};
 use crate::nn::rnn::Seq2Seq;
 use crate::nn::{QuantMode, Sequential, TrainCtx};
@@ -131,6 +132,20 @@ impl HostBackend {
         self.ctx.training = was;
         logits
     }
+
+    /// Replace the activation stash with a fresh one under `policy` /
+    /// `recompute` (DESIGN.md §Activation-Memory). Call before the first
+    /// step — the stash carries no cross-step state, but swapping it while
+    /// a forward's tensors are in flight would strand them.
+    pub fn set_stash(&mut self, policy: StashPolicy, recompute: bool) {
+        self.ctx.stash = ActivationStash::new(policy, recompute);
+    }
+
+    /// The activation stash (storage policy, byte accounting, adaptive
+    /// storage controllers).
+    pub fn stash(&self) -> &ActivationStash {
+        &self.ctx.stash
+    }
 }
 
 impl Backend for HostBackend {
@@ -145,6 +160,7 @@ impl Backend for HostBackend {
             self.net.zero_grads();
             self.needs_zero = false;
         }
+        self.ctx.stash.begin_step();
         self.ctx.iter = iter;
         let (x, y) = self.data.batch(self.batch);
         let logits = self.net.forward(&x, &mut self.ctx);
@@ -214,6 +230,18 @@ impl Seq2SeqBackend {
             label: label.into(),
         }
     }
+
+    /// Replace the activation stash (storage policy for the per-timestep
+    /// BPTT operands; see [`HostBackend::set_stash`]). Call before the
+    /// first step.
+    pub fn set_stash(&mut self, policy: StashPolicy, recompute: bool) {
+        self.ctx.stash = ActivationStash::new(policy, recompute);
+    }
+
+    /// The activation stash (byte accounting, adaptive storage controllers).
+    pub fn stash(&self) -> &ActivationStash {
+        &self.ctx.stash
+    }
 }
 
 impl Backend for Seq2SeqBackend {
@@ -222,6 +250,7 @@ impl Backend for Seq2SeqBackend {
     }
 
     fn step(&mut self, iter: u64, observe: &mut dyn FnMut(Phase, &StepInfo)) -> Result<f32> {
+        self.ctx.stash.begin_step();
         self.ctx.iter = iter;
         let (src, tgt) = translation_batch(&mut self.rng, self.batch, self.len, self.vocab);
         let (loss, _) = self.model.train_step(&src, &tgt, self.lr, &mut self.ctx);

@@ -42,7 +42,11 @@ const MAGIC: &str = "aptckpt";
 // v2: per-tensor ledger histories carry interval-clamp iterations, and a
 // trailing `comm` section snapshots the data-parallel gradient-
 // communication controllers (empty for single-replica sessions).
-const VERSION: &str = "v2";
+// v3: a trailing `stash` section snapshots the adaptive activation-storage
+// controllers (DESIGN.md §Activation-Memory; empty for non-adaptive
+// `--act-bits` policies). v1 and v2 files keep loading — pinned by the
+// fixture checkpoints under rust/tests/fixtures/.
+const VERSION: &str = "v3";
 
 fn kind_label(k: TensorKind) -> &'static str {
     k.label() // "W" | "X" | "dX"
@@ -170,14 +174,21 @@ fn render_host(iter: u64, losses: &[f32], host: &mut HostBackend) -> String {
     out
 }
 
-/// Render one communication-controller snapshot section (`comm <n>` +
-/// one `cc` record per controller, in visit order).
-fn render_comm(out: &mut String, comm: &[(String, ControllerState)]) {
-    let _ = writeln!(out, "comm {}", comm.len());
-    for (name, st) in comm {
+/// Render one controller snapshot section: `<tag> <n>` + one `<rec>`
+/// record per controller, in visit order. Shared by the `comm`/`cc`
+/// (data-parallel gradient communication) and `stash`/`sc` (adaptive
+/// activation storage) sections — the record layout is identical.
+fn render_ctl_section(
+    out: &mut String,
+    tag: &str,
+    rec: &str,
+    ctls: &[(String, ControllerState)],
+) {
+    let _ = writeln!(out, "{tag} {}", ctls.len());
+    for (name, st) in ctls {
         let _ = writeln!(
             out,
-            "cc {name} {} {} {:08x} {} {:08x} {} {}",
+            "{rec} {name} {} {} {:08x} {} {:08x} {} {}",
             st.bits,
             st.s,
             st.ema_value.to_bits(),
@@ -191,8 +202,10 @@ fn render_comm(out: &mut String, comm: &[(String, ControllerState)]) {
 
 /// Serialize a host session (no communication controllers).
 pub(super) fn save(session: &mut Session<HostBackend>, path: &Path) -> Result<()> {
+    let stash = session.backend.ctx.stash.snapshot_controllers();
     let mut out = render_host(session.iter, &session.losses, &mut session.backend);
-    render_comm(&mut out, &[]);
+    render_ctl_section(&mut out, "comm", "cc", &[]);
+    render_ctl_section(&mut out, "stash", "sc", &stash);
     let _ = writeln!(out, "end");
     std::fs::write(path, out).with_context(|| format!("writing checkpoint {path:?}"))?;
     Ok(())
@@ -209,8 +222,10 @@ pub(super) fn save_parallel(session: &mut Session<ParallelBackend>, path: &Path)
     let iter = session.iter;
     let losses = session.losses.clone();
     let group = &mut session.backend.group;
+    let stash = group.host.ctx.stash.snapshot_controllers();
     let mut out = render_host(iter, &losses, &mut group.host);
-    render_comm(&mut out, &group.comm.snapshot());
+    render_ctl_section(&mut out, "comm", "cc", &group.comm.snapshot());
+    render_ctl_section(&mut out, "stash", "sc", &stash);
     let _ = writeln!(out, "end");
     std::fs::write(path, out).with_context(|| format!("writing checkpoint {path:?}"))?;
     Ok(())
@@ -295,6 +310,10 @@ pub struct Checkpoint {
     /// Gradient-communication controller snapshots (data-parallel runs);
     /// empty for single-replica checkpoints.
     comm: Vec<(String, ControllerState)>,
+    /// Adaptive activation-storage controller snapshots
+    /// (`--act-bits adaptive` runs, DESIGN.md §Activation-Memory); empty
+    /// for other policies and for v1/v2 files.
+    stash: Vec<(String, ControllerState)>,
 }
 
 impl Checkpoint {
@@ -322,6 +341,13 @@ impl Checkpoint {
     /// checkpoints from single-replica sessions.
     pub fn comm_controllers(&self) -> &[(String, ControllerState)] {
         &self.comm
+    }
+
+    /// Adaptive activation-storage controller snapshots recorded at save
+    /// time (stash-site keys like `fc0/x`, in key order). Empty for
+    /// non-adaptive `--act-bits` policies and for v1/v2 files.
+    pub fn stash_controllers(&self) -> &[(String, ControllerState)] {
+        &self.stash
     }
 
     /// Restore the network-owned portion — parameter tensors, per-tensor
@@ -437,17 +463,36 @@ impl Checkpoint {
     }
 }
 
+/// Parse the state payload of one `cc`/`sc` controller record — the shared
+/// layout behind [`render_ctl_section`] (tag and name are consumed by the
+/// caller).
+fn parse_ctl_state(lx: &mut Lexer<'_>) -> Result<ControllerState> {
+    Ok(ControllerState {
+        bits: lx.u8()?,
+        s: lx.i32()?,
+        ema_value: lx.f32_hex()?,
+        ema_initialized: lx.u8()? != 0,
+        prev_range: lx.f32_hex()?,
+        next_update: lx.u64()?,
+        updates: lx.u64()?,
+    })
+}
+
 fn parse(text: &str) -> Result<Checkpoint> {
     let mut lx = Lexer { toks: text.split_ascii_whitespace() };
     lx.expect(MAGIC)?;
-    // v1 files are forward-parseable: they only lack the per-tensor clamp
-    // counts and the trailing `comm` section, so old checkpoints keep
-    // loading (with empty clamp/comm state) instead of erroring.
+    // Older files are forward-parseable: v1 lacks the per-tensor clamp
+    // counts and the `comm` section, v2 lacks the `stash` section — both
+    // keep loading (with the missing state empty) instead of erroring.
+    // Pinned by the committed fixtures under rust/tests/fixtures/.
     let version = lx.next()?;
-    let v1 = match version {
-        "v1" => true,
-        v if v == VERSION => false,
-        other => bail!("unsupported checkpoint version {other:?} (this build reads v1/{VERSION})"),
+    let (v1, has_stash) = match version {
+        "v1" => (true, false),
+        "v2" => (false, false),
+        v if v == VERSION => (false, true),
+        other => {
+            bail!("unsupported checkpoint version {other:?} (this build reads v1/v2/{VERSION})")
+        }
     };
 
     lx.expect("iter")?;
@@ -506,15 +551,7 @@ fn parse(text: &str) -> Result<Checkpoint> {
                 bail!("controller record order broken: {l} vs {layer}");
             }
             lx.expect(want)?;
-            states[j] = ControllerState {
-                bits: lx.u8()?,
-                s: lx.i32()?,
-                ema_value: lx.f32_hex()?,
-                ema_initialized: lx.u8()? != 0,
-                prev_range: lx.f32_hex()?,
-                next_update: lx.u64()?,
-                updates: lx.u64()?,
-            };
+            states[j] = parse_ctl_state(&mut lx)?;
         }
         ctls.push(CtlRec { layer, st: states });
     }
@@ -576,16 +613,20 @@ fn parse(text: &str) -> Result<Checkpoint> {
     for _ in 0..n_comm {
         lx.expect("cc")?;
         let name = lx.next()?.to_string();
-        let st = ControllerState {
-            bits: lx.u8()?,
-            s: lx.i32()?,
-            ema_value: lx.f32_hex()?,
-            ema_initialized: lx.u8()? != 0,
-            prev_range: lx.f32_hex()?,
-            next_update: lx.u64()?,
-            updates: lx.u64()?,
-        };
-        comm.push((name, st));
+        comm.push((name, parse_ctl_state(&mut lx)?));
+    }
+
+    let n_stash = if has_stash {
+        lx.expect("stash")?;
+        lx.usize()?
+    } else {
+        0
+    };
+    let mut stash = Vec::with_capacity(n_stash);
+    for _ in 0..n_stash {
+        lx.expect("sc")?;
+        let name = lx.next()?.to_string();
+        stash.push((name, parse_ctl_state(&mut lx)?));
     }
     lx.expect("end")?;
 
@@ -600,6 +641,7 @@ fn parse(text: &str) -> Result<Checkpoint> {
         ledger,
         data_rng,
         comm,
+        stash,
     })
 }
 
@@ -615,10 +657,20 @@ fn apply_to_host(ck: &Checkpoint, host: &mut HostBackend) -> Result<()> {
             host.opt.name()
         );
     }
+    // Validate the stash-controller section read-only *first* (policy
+    // compatibility), keeping the parse → validate → apply contract.
+    host.ctx.stash.check_controllers(&ck.stash)?;
     ck.restore_net(&mut host.net)?;
 
     // ---- session-only state (cannot fail past this point) ----
     host.data.set_rng_state(ck.data_rng);
+    host.ctx
+        .stash
+        .restore_controllers(&ck.stash)
+        .expect("stash controllers validated above");
+    // Checkpoints land between steps: no in-flight stashed activation
+    // survives one.
+    host.ctx.stash.clear_entries();
 
     // Accumulated gradients are not part of a checkpoint (see module doc):
     // clear any the session accumulated before the restore (no-op on a
@@ -665,6 +717,14 @@ pub(super) fn load_parallel(session: &mut Session<ParallelBackend>, path: &Path)
     for peer in &mut group.peers {
         ck.restore_net(&mut peer.net)?;
         peer.opt.load_state(ck.opt_state.clone());
+        // Peers mirror the root's stash-controller snapshot, exactly as
+        // their in-layer controllers are restored from the root's records
+        // (replica-local state; see DESIGN.md §Data-Parallel caveat).
+        peer.ctx
+            .stash
+            .restore_controllers(&ck.stash)
+            .expect("stash controllers validated against the root");
+        peer.ctx.stash.clear_entries();
         peer.net.zero_grads();
         peer.needs_zero = false;
         peer.ctx.training = true;

@@ -42,6 +42,7 @@ use anyhow::{bail, Result};
 
 use crate::apt::Ledger;
 use crate::data::SynthImages;
+use crate::mem::{ActivationStash, MemLedger, StashPolicy};
 use crate::nn::{models, QuantMode, Sequential};
 use crate::tensor::Tensor;
 use crate::util::Pcg32;
@@ -313,6 +314,18 @@ impl<'h> Session<'h, HostBackend> {
         self.backend.eval_logits(x)
     }
 
+    /// The activation stash (storage policy, adaptive storage controllers;
+    /// DESIGN.md §Activation-Memory).
+    pub fn stash(&self) -> &ActivationStash {
+        self.backend.stash()
+    }
+
+    /// Activation-memory accounting: peak stashed bytes per step / per run,
+    /// put traffic. The measurement behind `bench_act_memory`.
+    pub fn mem(&self) -> &MemLedger {
+        self.backend.stash().mem()
+    }
+
     /// Save the full mid-run state — parameters, optimizer buffers,
     /// controller state, ledger, data stream, loss curve — such that
     /// [`load_checkpoint`](Session::load_checkpoint) continues the run
@@ -354,6 +367,19 @@ impl<'h> Session<'h, ParallelBackend> {
     /// root's (see [`ReplicaGroup::replicas_in_sync`]).
     pub fn replicas_in_sync(&mut self) -> bool {
         self.backend.group.replicas_in_sync()
+    }
+
+    /// The root replica's activation stash (every replica shares the
+    /// policy; per-shard peaks are symmetric).
+    pub fn stash(&self) -> &ActivationStash {
+        self.backend.group.stash()
+    }
+
+    /// Root-replica activation-memory accounting (peak stashed bytes per
+    /// step / per run). Multiply by [`replicas`](Self::replicas) for the
+    /// whole-group figure.
+    pub fn mem(&self) -> &MemLedger {
+        self.backend.group.stash().mem()
     }
 
     /// Save the full mid-run state — the host-path surface plus the
@@ -473,6 +499,8 @@ pub struct SessionBuilder {
     eval_seed: u64,
     eval_n: usize,
     label: Option<String>,
+    stash: StashPolicy,
+    recompute: bool,
 }
 
 impl SessionBuilder {
@@ -492,6 +520,8 @@ impl SessionBuilder {
             eval_seed: 999,
             eval_n: 256,
             label: None,
+            stash: StashPolicy::F32,
+            recompute: false,
         }
     }
 
@@ -583,6 +613,24 @@ impl SessionBuilder {
         self
     }
 
+    /// Activation-stash storage policy (CLI `--act-bits`; default
+    /// [`StashPolicy::F32`], bit-identical to the historical private-field
+    /// caches — DESIGN.md §Activation-Memory).
+    pub fn stash_policy(mut self, policy: StashPolicy) -> Self {
+        self.stash = policy;
+        self
+    }
+
+    /// Gradient-checkpointing option (CLI `--recompute`): the GEMM layers
+    /// stash only their raw inputs and re-derive X̂/Ŵ/patches during
+    /// backward from the schemes frozen at forward time. Orthogonal to
+    /// [`stash_policy`](Self::stash_policy); bit-identical under F32
+    /// storage.
+    pub fn recompute(mut self, on: bool) -> Self {
+        self.recompute = on;
+        self
+    }
+
     /// Construct the [`Session`]. Initialization order (RNG → model →
     /// overrides → data → optimizer) matches the historical loop exactly.
     /// Panics on an unknown model/layer (the historical contract);
@@ -595,7 +643,7 @@ impl SessionBuilder {
         let label = self
             .label
             .unwrap_or_else(|| format!("{}-{}", name, self.mode.label()));
-        Session::with_backend(HostBackend::new(
+        let mut backend = HostBackend::new(
             net,
             data,
             opt,
@@ -603,7 +651,9 @@ impl SessionBuilder {
             self.eval_seed,
             self.eval_n,
             label,
-        ))
+        );
+        backend.set_stash(self.stash, self.recompute);
+        Session::with_backend(backend)
     }
 
     /// Build, run `iters` steps, evaluate, and return the record — the
@@ -649,6 +699,8 @@ impl SessionBuilder {
             eval_seed,
             eval_n,
             label,
+            stash,
+            recompute,
         } = self;
         // One bit-identical instantiation per replica: the same
         // `instantiate_net` sequence `build()` runs, once per replica.
@@ -679,7 +731,8 @@ impl SessionBuilder {
             .into_iter()
             .map(|net| (net, make_optimizer(optimizer, lr)))
             .collect();
-        let group = ReplicaGroup::new(host, peer_parts, comm)?;
+        let mut group = ReplicaGroup::new(host, peer_parts, comm)?;
+        group.set_stash(stash, recompute);
         Ok(Session::with_backend(ParallelBackend::new(group, full)))
     }
 }

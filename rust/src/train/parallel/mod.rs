@@ -115,6 +115,24 @@ impl ReplicaGroup {
         self.peers.len() + 1
     }
 
+    /// Give every replica its own fresh activation stash under `policy` /
+    /// `recompute` (DESIGN.md §Activation-Memory). Stashes are
+    /// replica-local — each replica's forward/backward runs on its own
+    /// batch shard — and the N=1 degenerate case is exactly the
+    /// [`HostBackend`] stash, preserving the bit-identity contract.
+    pub(super) fn set_stash(&mut self, policy: crate::mem::StashPolicy, recompute: bool) {
+        self.host.set_stash(policy, recompute);
+        for peer in &mut self.peers {
+            peer.ctx.stash = crate::mem::ActivationStash::new(policy, recompute);
+        }
+    }
+
+    /// The root replica's activation stash (peers mirror its policy; their
+    /// per-shard byte peaks are the same by symmetry).
+    pub fn stash(&self) -> &crate::mem::ActivationStash {
+        self.host.stash()
+    }
+
     /// The gradient-communication engine (e.g. for its applied bit-widths).
     pub fn comm(&self) -> &QuantAllReduce {
         &self.comm
@@ -158,6 +176,10 @@ impl ReplicaGroup {
                 peer.net.zero_grads();
                 peer.needs_zero = false;
             }
+        }
+        self.host.ctx.stash.begin_step();
+        for peer in &mut self.peers {
+            peer.ctx.stash.begin_step();
         }
         self.host.ctx.iter = iter;
         for peer in &mut self.peers {

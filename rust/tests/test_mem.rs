@@ -1,0 +1,420 @@
+//! Integration tests for the quantized activation-memory subsystem
+//! (`mem::`, DESIGN.md §Activation-Memory):
+//!
+//! - `StashPolicy::F32` sessions are bit-identical to the default build
+//!   (the seed contract), across f32/int8/adaptive compute;
+//! - recompute checkpointing is bit-identical to stashing under F32
+//!   storage, for the host loop and for alexnet's conv patches;
+//! - int8/int16 storage respects the half-resolution decode bound and cuts
+//!   alexnet's peak stashed bytes ≥3× (ISSUE 5 acceptance);
+//! - adaptive-stash sessions converge on the tier-1 mlp/alexnet configs;
+//! - checkpoint v3 round-trips the stash controllers bit-identically and
+//!   rejects policy mismatches without mutating the session;
+//! - committed v1/v2 fixture files keep loading under the v3 reader.
+
+use apt::apt::AptConfig;
+use apt::data::SynthImages;
+use apt::mem::StashPolicy;
+use apt::nn::linear::Linear;
+use apt::nn::{QuantMode, Sequential};
+use apt::train::checkpoint::Checkpoint;
+use apt::train::{CommPrecision, SessionBuilder};
+
+fn adaptive_compute(init: u64) -> QuantMode {
+    let mut cfg = AptConfig::default();
+    cfg.init_phase_iters = init;
+    QuantMode::Adaptive(cfg)
+}
+
+fn adaptive_stash(init: u64) -> StashPolicy {
+    let mut cfg = AptConfig::default();
+    cfg.init_phase_iters = init;
+    cfg.pin_forward_bits = false;
+    StashPolicy::Adaptive(cfg)
+}
+
+/// Train `model` under the given compute mode / stash policy and return
+/// (losses, final params, eval accuracy).
+fn run_with(
+    model: &str,
+    mode: QuantMode,
+    policy: StashPolicy,
+    recompute: bool,
+    iters: u64,
+) -> (Vec<f32>, Vec<Vec<f32>>, f64) {
+    let mut s = SessionBuilder::classifier(model)
+        .mode(mode)
+        .stash_policy(policy)
+        .recompute(recompute)
+        .build();
+    s.run(iters).unwrap();
+    let mut params = Vec::new();
+    s.net_mut().visit_params(&mut |p, _| params.push(p.data.clone()));
+    let rec = s.record().unwrap();
+    (rec.losses, params, rec.eval_acc)
+}
+
+fn ckpt_path(tag: &str) -> std::path::PathBuf {
+    std::env::temp_dir().join(format!("apt_mem_{tag}_{}.txt", std::process::id()))
+}
+
+fn fixture(name: &str) -> std::path::PathBuf {
+    std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+        .join("tests/fixtures")
+        .join(name)
+}
+
+// ---------------------------------------------------------------- identity
+
+#[test]
+fn f32_policy_is_bit_identical_to_default_build() {
+    for (model, mode, iters) in [
+        ("mlp", QuantMode::Float32, 15),
+        ("mlp", QuantMode::Static(8), 15),
+        ("mlp", adaptive_compute(2), 15),
+        ("alexnet", adaptive_compute(2), 8),
+    ] {
+        // default build (no stash calls at all — the seed configuration)
+        let mut s = SessionBuilder::classifier(model).mode(mode).build();
+        s.run(iters).unwrap();
+        let mut params_default = Vec::new();
+        s.net_mut().visit_params(&mut |p, _| params_default.push(p.data.clone()));
+        let rec_default = s.record().unwrap();
+
+        let (losses, params, acc) =
+            run_with(model, mode, StashPolicy::F32, false, iters);
+        assert_eq!(rec_default.losses, losses, "{model} losses diverged");
+        assert_eq!(params_default, params, "{model} params diverged");
+        assert_eq!(rec_default.eval_acc, acc, "{model} eval diverged");
+    }
+}
+
+#[test]
+fn recompute_is_bit_identical_under_f32_storage() {
+    // Schemes are frozen between forward and backward of one step and
+    // parameters only move after backward, so re-deriving X̂/Ŵ/patches is
+    // exact — for every compute mode, linear (mlp) and conv (alexnet).
+    for (model, mode, iters) in [
+        ("mlp", QuantMode::Float32, 15),
+        ("mlp", QuantMode::Static(8), 15),
+        ("mlp", adaptive_compute(2), 15),
+        ("alexnet", QuantMode::Float32, 8),
+        ("alexnet", adaptive_compute(2), 8),
+    ] {
+        let (l_stash, p_stash, a_stash) =
+            run_with(model, mode, StashPolicy::F32, false, iters);
+        let (l_rc, p_rc, a_rc) = run_with(model, mode, StashPolicy::F32, true, iters);
+        assert_eq!(l_stash, l_rc, "{model}: recompute losses diverged");
+        assert_eq!(p_stash, p_rc, "{model}: recompute params diverged");
+        assert_eq!(a_stash, a_rc, "{model}: recompute eval diverged");
+    }
+}
+
+#[test]
+fn parallel_n1_parity_holds_with_quantized_stash() {
+    // The data-parallel builder at N=1 must stay bit-identical to the host
+    // loop under every stash policy, not just the default.
+    for policy in [StashPolicy::F32, StashPolicy::Int8, adaptive_stash(2)] {
+        let mut host = SessionBuilder::classifier("mlp")
+            .mode(QuantMode::Static(8))
+            .stash_policy(policy)
+            .build();
+        host.run(12).unwrap();
+        let host_rec = host.record().unwrap();
+
+        let mut par = SessionBuilder::classifier("mlp")
+            .mode(QuantMode::Static(8))
+            .stash_policy(policy)
+            .build_parallel(1, CommPrecision::F32)
+            .unwrap();
+        par.run(12).unwrap();
+        let par_rec = par.record().unwrap();
+        assert_eq!(host_rec.losses, par_rec.losses, "{}", policy.label());
+        assert_eq!(host_rec.eval_acc, par_rec.eval_acc, "{}", policy.label());
+    }
+}
+
+#[test]
+fn parallel_replicas_stay_in_sync_with_quantized_stash() {
+    let mut s = SessionBuilder::classifier("mlp")
+        .mode(QuantMode::Static(8))
+        .stash_policy(StashPolicy::Int8)
+        .recompute(true)
+        .build_parallel(2, CommPrecision::Static(8))
+        .unwrap();
+    s.run(8).unwrap();
+    assert!(s.replicas_in_sync(), "int8 stash broke the sync invariant");
+    assert!(s.mem().peak_bytes() > 0, "root replica stash never measured");
+}
+
+// ------------------------------------------------------------ compression
+
+#[test]
+fn int8_storage_cuts_alexnet_peak_at_least_3x() {
+    // ISSUE 5 acceptance: ≥3× lower peak stashed bytes for int8 vs f32
+    // storage on alexnet (the conv patch matrices dominate and shrink 4×;
+    // bitset masks / u32 argmax are policy-invariant).
+    let peak = |policy, recompute| {
+        let mut s = SessionBuilder::classifier("alexnet")
+            .stash_policy(policy)
+            .recompute(recompute)
+            .build();
+        s.run(3).unwrap();
+        s.mem().peak_bytes()
+    };
+    let f = peak(StashPolicy::F32, false);
+    let q = peak(StashPolicy::Int8, false);
+    assert!(f > 0 && q > 0);
+    let ratio = f as f64 / q as f64;
+    assert!(ratio >= 3.0, "int8 peak {q} vs f32 peak {f}: only {ratio:.2}×");
+
+    // recompute drops the patch matrices — an additional large cut
+    let rc = peak(StashPolicy::F32, true);
+    assert!(
+        (rc as f64) < 0.5 * f as f64,
+        "recompute peak {rc} not well below stash peak {f}"
+    );
+}
+
+#[test]
+fn int16_storage_halves_int8_error() {
+    // End-to-end decode bound: a quantized-stash mlp run must track the
+    // f32-storage run within a loss tolerance that shrinks with width.
+    let (l_f32, _, _) = run_with("mlp", QuantMode::Float32, StashPolicy::F32, false, 20);
+    let (l_i8, _, _) = run_with("mlp", QuantMode::Float32, StashPolicy::Int8, false, 20);
+    let (l_i16, _, _) = run_with("mlp", QuantMode::Float32, StashPolicy::Int16, false, 20);
+    let dev = |a: &[f32], b: &[f32]| {
+        a.iter()
+            .zip(b)
+            .map(|(x, y)| (x - y).abs() as f64)
+            .sum::<f64>()
+            / a.len() as f64
+    };
+    let d8 = dev(&l_f32, &l_i8);
+    let d16 = dev(&l_f32, &l_i16);
+    assert!(d16 <= d8 + 1e-9, "int16 deviation {d16} above int8 {d8}");
+    assert!(d16 < 0.05, "int16 storage deviates too far from f32: {d16}");
+    // and int8 storage still converges
+    assert!(
+        l_i8.last().unwrap() < &(l_i8[0] * 0.8),
+        "int8-storage mlp failed to converge: {:?} → {:?}",
+        l_i8[0],
+        l_i8.last()
+    );
+}
+
+// ------------------------------------------------------------- convergence
+
+#[test]
+fn adaptive_stash_converges_on_mlp() {
+    let (losses, _, acc) = run_with(
+        "mlp",
+        adaptive_compute(6),
+        adaptive_stash(6),
+        false,
+        60,
+    );
+    assert!(
+        losses.last().unwrap() < &(losses[0] * 0.8),
+        "first={} last={}",
+        losses[0],
+        losses.last().unwrap()
+    );
+    assert!(acc > 0.25, "adaptive-stash mlp acc {acc}");
+}
+
+#[test]
+fn adaptive_stash_converges_on_alexnet_with_recompute() {
+    let (losses, _, acc) = run_with(
+        "alexnet",
+        adaptive_compute(4),
+        adaptive_stash(4),
+        true,
+        40,
+    );
+    assert!(
+        losses.last().unwrap() < &(losses[0] * 0.9),
+        "first={} last={}",
+        losses[0],
+        losses.last().unwrap()
+    );
+    assert!(acc > 0.2, "adaptive-stash alexnet acc {acc}");
+}
+
+#[test]
+fn adaptive_stash_fills_ledger_and_reports_bits() {
+    let mut s = SessionBuilder::classifier("mlp")
+        .stash_policy(adaptive_stash(2))
+        .build();
+    s.run(12).unwrap();
+    let bits = s.stash().stash_bits();
+    assert!(!bits.is_empty(), "no stash controllers created");
+    assert!(bits.iter().all(|(k, _)| k.starts_with("stash:")));
+    let rec = s.record().unwrap();
+    let stash_keys: Vec<_> = rec
+        .ledger
+        .tensors
+        .keys()
+        .filter(|(name, _)| name.starts_with("stash:"))
+        .collect();
+    assert!(!stash_keys.is_empty(), "no stash:* ledger entries");
+    // grouping: the Table-1 compute mix must ignore stash records entirely
+    let mix = apt::exp::common::grad_mix_string(&rec.ledger);
+    let stash_mix = apt::exp::common::stash_mix_string(&rec.ledger);
+    assert!(mix.contains("int8") && stash_mix.contains("int8"));
+}
+
+// ------------------------------------------------------------- checkpoints
+
+#[test]
+fn checkpoint_v3_roundtrips_stash_controllers_bit_identically() {
+    let build = || {
+        SessionBuilder::classifier("mlp")
+            .mode(QuantMode::Static(8))
+            .stash_policy(adaptive_stash(3))
+            .build()
+    };
+    let path = ckpt_path("v3_roundtrip");
+    let mut a = build();
+    a.run(8).unwrap();
+    a.save_checkpoint(&path).unwrap();
+
+    // the file is v3 and carries the stash section
+    let ck = Checkpoint::read(&path).unwrap();
+    assert_eq!(ck.iters_done(), 8);
+    assert!(
+        !ck.stash_controllers().is_empty(),
+        "adaptive-stash save lost its controllers"
+    );
+
+    let mut b = build();
+    b.load_checkpoint(&path).unwrap();
+    assert_eq!(b.iters_done(), 8);
+    a.run(6).unwrap();
+    b.run(6).unwrap();
+    assert_eq!(a.losses(), b.losses(), "restored run diverged");
+    let _ = std::fs::remove_file(&path);
+}
+
+#[test]
+fn checkpoint_stash_policy_mismatch_rejected_without_mutation() {
+    let path = ckpt_path("v3_mismatch");
+    let mut a = SessionBuilder::classifier("mlp")
+        .stash_policy(adaptive_stash(2))
+        .build();
+    a.run(5).unwrap();
+    a.save_checkpoint(&path).unwrap();
+
+    // an int8-stash session cannot host adaptive stash controllers
+    let mut b = SessionBuilder::classifier("mlp")
+        .stash_policy(StashPolicy::Int8)
+        .build();
+    let id = b.params()[0].id.clone();
+    let before = b.param_copy(&id);
+    assert!(b.load_checkpoint(&path).is_err());
+    let after = b.param_copy(&id);
+    assert_eq!(before, after, "failed restore must not mutate the session");
+    let _ = std::fs::remove_file(&path);
+}
+
+#[test]
+fn host_sessions_without_adaptive_stash_write_empty_stash_section() {
+    let path = ckpt_path("v3_empty_stash");
+    let mut a = SessionBuilder::classifier("mlp").build();
+    a.run(4).unwrap();
+    a.save_checkpoint(&path).unwrap();
+    let ck = Checkpoint::read(&path).unwrap();
+    assert!(ck.stash_controllers().is_empty());
+    // …and loads into any policy, including adaptive
+    let mut b = SessionBuilder::classifier("mlp")
+        .stash_policy(adaptive_stash(2))
+        .build();
+    b.load_checkpoint(&path).unwrap();
+    assert_eq!(b.iters_done(), 4);
+    let _ = std::fs::remove_file(&path);
+}
+
+// ---------------------------------------------------------------- fixtures
+
+/// The committed fixtures were written against this exact configuration:
+/// a single `fc0: Linear(4 → 3)` over a 3-class 1×2×2 synthetic stream.
+fn fixture_builder(mode: QuantMode) -> SessionBuilder {
+    SessionBuilder::custom("fixture-net", move |rng| {
+        Sequential::new(vec![Box::new(Linear::new("fc0", 4, 3, mode, rng))])
+    })
+    .data(Box::new(SynthImages::new(11, 3, 1, 2, 2, 0.3)))
+    .eval_set(999, 12)
+}
+
+#[test]
+fn v1_fixture_checkpoint_still_loads() {
+    let path = fixture("host_f32_v1.ckpt");
+    let ck = Checkpoint::read(&path).unwrap();
+    assert_eq!(ck.iters_done(), 3);
+    assert_eq!(ck.optimizer(), "sgd");
+    assert!(ck.comm_controllers().is_empty());
+    assert!(ck.stash_controllers().is_empty());
+
+    let mut s = fixture_builder(QuantMode::Float32).build();
+    s.load_checkpoint(&path).unwrap();
+    assert_eq!(s.iters_done(), 3);
+    assert_eq!(s.losses().len(), 3);
+    // the fixture's parameters were applied verbatim
+    let id = s.params()[0].id.clone();
+    let w = s.param_copy(&id);
+    assert_eq!(w.data[0], 0.05);
+    assert_eq!(w.data[1], -0.1);
+    // and the run continues
+    s.run(2).unwrap();
+    assert!(s.losses().iter().all(|l| l.is_finite()));
+    assert_eq!(s.iters_done(), 5);
+}
+
+#[test]
+fn v2_fixture_checkpoint_still_loads_with_controllers() {
+    let path = fixture("host_int8_v2.ckpt");
+    let ck = Checkpoint::read(&path).unwrap();
+    assert_eq!(ck.iters_done(), 3);
+    assert!(ck.stash_controllers().is_empty(), "v2 has no stash section");
+
+    let mut s = fixture_builder(QuantMode::Static(8)).build();
+    s.load_checkpoint(&path).unwrap();
+    // the compute controllers resumed the fixture's schemes
+    let mut schemes = Vec::new();
+    s.net_mut().visit_controllers(&mut |_, lc| {
+        schemes.push((lc.w.scheme(), lc.x.scheme(), lc.g.scheme()));
+    });
+    assert_eq!(schemes.len(), 1);
+    assert_eq!((schemes[0].0.bits, schemes[0].0.s), (8, -9));
+    assert_eq!((schemes[0].1.bits, schemes[0].1.s), (8, -5));
+    assert_eq!((schemes[0].2.bits, schemes[0].2.s), (8, -12));
+
+    s.run(2).unwrap();
+    assert!(s.losses().iter().all(|l| l.is_finite()));
+    let rec = s.record().unwrap();
+    // the v2 ledger came through: 2 events + the clamp at iter 2
+    let hist = &rec.ledger.tensors
+        [&("fc0".to_string(), apt::fixedpoint::TensorKind::Gradient)];
+    assert_eq!(hist.events.len(), 2);
+    assert_eq!(hist.clamps, vec![2]);
+}
+
+// ------------------------------------------------------------------- rnn
+
+#[test]
+fn seq2seq_backend_trains_under_quantized_stash() {
+    use apt::train::{Seq2SeqBackend, Session};
+    let mut b = Seq2SeqBackend::new("rnn-i8stash", 12, 16, QuantMode::Float32, 0, 8, 4, 0.05, 32);
+    b.set_stash(StashPolicy::Int8, false);
+    let mut s = Session::with_backend(b);
+    s.run(25).unwrap();
+    assert!(s.backend().stash().mem().peak_bytes() > 0, "BPTT never stashed");
+    let rec = s.record().unwrap();
+    assert!(rec.losses.iter().all(|l| l.is_finite()));
+    assert!(
+        rec.losses.last().unwrap() < &(rec.losses[0] * 1.2),
+        "int8-stash BPTT diverged: {:?} → {:?}",
+        rec.losses[0],
+        rec.losses.last()
+    );
+}
