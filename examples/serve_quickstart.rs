@@ -57,7 +57,7 @@ fn main() {
     let server = InferenceServer::start(
         Arc::new(frozen),
         apt::kernels::global_arc(),
-        ServeConfig { max_batch: 8, max_wait_us: 200, queue_cap: 128, workers: 2 },
+        ServeConfig { max_batch: 8, max_wait_us: 200, queue_cap: 128, workers: 2, ..ServeConfig::default() },
     );
     let correct: usize = std::thread::scope(|scope| {
         let clients = 4usize;

@@ -1,0 +1,184 @@
+//! cargo bench — SLO behaviour of the serving tier (EXPERIMENTS.md
+//! §Serve-SLO): latency vs offered QPS for flush-and-wait vs continuous
+//! batching under seeded open-loop Poisson arrivals, with per-request
+//! deadlines and explicit shedding. Two row families land in
+//! `results/serve_slo.csv` (same layout, `mode` column distinguishes):
+//!
+//! - `sim` — deterministic virtual-time replay of the production
+//!   scheduler code under a fixed cost model. Bit-reproducible (the
+//!   `loadgen_sim_row_is_deterministic_on_one_worker` test pins it), so
+//!   policy comparisons carry no timing noise. The continuous-beats-flush
+//!   p99 claim is asserted on these rows.
+//! - `real` — the same arrival process against a live
+//!   [`InferenceServer`] running a frozen int8 mlp, measured wall-clock.
+//!
+//! **Panics on any shed-accounting mismatch** (`submitted != served +
+//! shed + refused`) in either family — a lost or double-counted request
+//! is a correctness bug, not a performance artifact.
+//!
+//! Flags after `--`: `--scheduler flush|continuous|both` (default both),
+//! `--deadline-us N` (0 = no deadlines, default 5000). `BENCH_QUICK=1`
+//! shrinks the QPS grids and request counts.
+
+use std::sync::Arc;
+
+use apt::bench::loadgen::{self, LoadReport, SimCost, Trace, SLO_CSV_HEADER};
+use apt::kernels::Engine;
+use apt::nn::QuantMode;
+use apt::serve::{FrozenModel, InferenceServer, SchedConfig, SchedPolicy, ServeConfig};
+use apt::train::SessionBuilder;
+use apt::util::cli::Args;
+use apt::util::out::{results_dir, Csv};
+
+const SEED: u64 = 42;
+const WORKERS: usize = 2;
+const MAX_BATCH: usize = 16;
+const LANES: usize = 3;
+const MAX_WAIT_US: u64 = 2_000;
+
+fn check_accounting(tag: &str, r: &LoadReport) {
+    assert!(
+        r.accounted(),
+        "{tag}: shed-accounting mismatch — {} submitted != {} served + {} shed + {} refused",
+        r.submitted,
+        r.served,
+        r.shed,
+        r.shed_admission
+    );
+}
+
+fn print_row(mode: &str, policy: SchedPolicy, qps: u64, r: &LoadReport) {
+    println!(
+        "{:<5} {:<10} {:>9} {:>8} {:>6} {:>7} {:>10.1} {:>10.1} {:>10.1}",
+        mode,
+        policy.label(),
+        qps,
+        r.served,
+        r.shed,
+        r.shed_admission,
+        r.p50_us,
+        r.p99_us,
+        r.p999_us
+    );
+}
+
+fn main() {
+    let args = Args::from_env();
+    let quick = std::env::var("BENCH_QUICK").is_ok();
+    let policies: Vec<SchedPolicy> = match args.str_or("scheduler", "both").as_str() {
+        "both" => vec![SchedPolicy::Flush, SchedPolicy::Continuous],
+        s => vec![SchedPolicy::parse(s).expect("--scheduler")],
+    };
+    let deadline_us = match args.u64_or("deadline-us", 5_000) {
+        0 => None,
+        d => Some(d),
+    };
+
+    // Sim sweep spans light load through past saturation (the cost model
+    // caps capacity at ~2 workers / ~59 µs·req ≈ 34k QPS).
+    let cost = SimCost { batch_overhead_us: 150, per_row_us: 40 };
+    let (sim_grid, sim_n): (&[u64], usize) = if quick {
+        (&[1_000, 8_000, 64_000], 400)
+    } else {
+        (&[500, 1_000, 2_000, 4_000, 8_000, 16_000, 32_000, 64_000], 3_000)
+    };
+    // Real-server sweep stays modest: wall time per point is n/QPS.
+    let (real_grid, real_n): (&[u64], usize) = if quick {
+        (&[200, 1_000], 100)
+    } else {
+        (&[200, 1_000, 5_000], 600)
+    };
+
+    println!(
+        "bench_serve_slo — open-loop Poisson, seed {SEED}, {WORKERS} workers, max_batch {MAX_BATCH}, deadline {:?} µs",
+        deadline_us
+    );
+    println!(
+        "{:<5} {:<10} {:>9} {:>8} {:>6} {:>7} {:>10} {:>10} {:>10}",
+        "mode", "scheduler", "QPS", "served", "shed", "refused", "p50 µs", "p99 µs", "p99.9 µs"
+    );
+
+    let mut csv = Csv::new(results_dir().join("serve_slo.csv"), &SLO_CSV_HEADER);
+    let scfg = SchedConfig { max_batch: MAX_BATCH, queue_cap: 256, lanes: LANES, max_wait_us: MAX_WAIT_US };
+
+    // ---- sim rows (deterministic) ----
+    let mut sim: Vec<(u64, SchedPolicy, LoadReport)> = Vec::new();
+    for &qps in sim_grid {
+        let trace = Trace::poisson(SEED, qps, sim_n, LANES);
+        for &policy in &policies {
+            let r = loadgen::simulate(policy, scfg, WORKERS, deadline_us, &trace, cost);
+            check_accounting(&format!("sim/{}/{qps}qps", policy.label()), &r);
+            print_row("sim", policy, qps, &r);
+            csv.row(&loadgen::slo_csv_row("sim", policy, &trace, WORKERS, MAX_BATCH, deadline_us, &r));
+            sim.push((qps, policy, r));
+        }
+    }
+
+    // ---- real rows (frozen int8 mlp behind a live server) ----
+    let mut session = SessionBuilder::classifier("mlp")
+        .mode(QuantMode::Static(8))
+        .lr(0.01)
+        .build();
+    session.run(if quick { 15 } else { 30 }).expect("train");
+    let frozen = Arc::new(FrozenModel::freeze("mlp-int8", session.net()).expect("freeze"));
+    let d = frozen.input_len();
+    let input = |i: usize| {
+        // Cheap deterministic per-request payload; serving cost does not
+        // depend on values, only on the forward itself.
+        let mut x = vec![0.1f32; d];
+        x[i % d] = 0.9;
+        x
+    };
+    for &qps in real_grid {
+        let trace = Trace::poisson(SEED, qps, real_n, LANES);
+        for &policy in &policies {
+            let cfg = ServeConfig {
+                max_batch: MAX_BATCH,
+                max_wait_us: MAX_WAIT_US,
+                queue_cap: 256,
+                workers: WORKERS,
+                policy,
+                lanes: LANES,
+            };
+            let server = InferenceServer::start(Arc::clone(&frozen), Arc::new(Engine::serial()), cfg);
+            let r = loadgen::drive(&server, &trace, deadline_us, input);
+            let stats = server.shutdown();
+            let tag = format!("real/{}/{qps}qps", policy.label());
+            check_accounting(&tag, &r);
+            assert!(
+                stats.accounted(),
+                "{tag}: server counters disagree — accepted {} != served {} + shed {}",
+                stats.accepted,
+                stats.served,
+                stats.shed
+            );
+            print_row("real", policy, qps, &r);
+            csv.row(&loadgen::slo_csv_row("real", policy, &trace, WORKERS, MAX_BATCH, deadline_us, &r));
+        }
+    }
+    csv.write().unwrap();
+    println!("wrote {}", results_dir().join("serve_slo.csv").display());
+
+    // ---- flush vs continuous on the deterministic rows ----
+    if policies.len() == 2 {
+        println!("\nsim p99 comparison (flush vs continuous):");
+        let mut wins = 0usize;
+        for &qps in sim_grid {
+            let p99 = |want: SchedPolicy| {
+                sim.iter()
+                    .find(|(q, p, _)| *q == qps && *p == want)
+                    .map(|(_, _, r)| r.p99_us)
+                    .expect("both policies ran")
+            };
+            let (f, c) = (p99(SchedPolicy::Flush), p99(SchedPolicy::Continuous));
+            let mark = if c < f { wins += 1; "continuous" } else { "flush" };
+            println!("  {qps:>6} QPS: flush {f:>10.1} µs  continuous {c:>10.1} µs  → {mark}");
+        }
+        assert!(
+            wins >= 1,
+            "continuous batching should beat flush-and-wait p99 at ≥1 offered-QPS point"
+        );
+        println!("continuous wins p99 at {wins}/{} points", sim_grid.len());
+    }
+    println!("fill the EXPERIMENTS.md §Serve-SLO table from the CSV");
+}

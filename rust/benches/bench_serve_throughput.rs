@@ -122,6 +122,7 @@ fn main() {
                     max_wait_us: 200,
                     queue_cap: 256,
                     workers,
+                    ..ServeConfig::default()
                 };
                 let cell = run_cell(&frozen, cfg, requests);
                 println!(

@@ -1,0 +1,347 @@
+//! Deterministic load generation for the serving tier (DESIGN.md
+//! §Serving-Tier; protocol: EXPERIMENTS.md §Serve-SLO).
+//!
+//! Three pieces:
+//!
+//! - [`Trace`] — a seeded **open-loop Poisson arrival process**:
+//!   exponential inter-arrival times at a given offered QPS, plus a
+//!   priority lane per request. Same seed ⇒ byte-identical trace
+//!   (pinned by test), so SLO numbers are comparable across PRs.
+//! - [`simulate`] — a **virtual-time replay** of a
+//!   [`SchedPolicy`](crate::serve::SchedPolicy) under a deterministic
+//!   cost model: it drives exactly the scheduler code the live server
+//!   runs (admission control, eviction, expiry, batch formation) with a
+//!   simulated clock and fixed per-batch cost, so its output —
+//!   served/shed counts and latency percentiles — is bit-reproducible.
+//!   This is what makes scheduler policies comparable without timing
+//!   noise, and it doubles as a conformance harness.
+//! - [`drive`] — the same trace played **against a real
+//!   [`InferenceServer`]** in wall-clock time: submissions fire at the
+//!   trace's arrival offsets without waiting for responses (open loop —
+//!   overload is offered, not throttled), latencies are stamped at the
+//!   worker's reply instant, and every request is accounted served or
+//!   shed.
+//!
+//! `benches/bench_serve_slo.rs` sweeps offered QPS × policy through
+//! both paths into `results/serve_slo.csv`.
+
+use std::time::{Duration, Instant};
+
+use crate::serve::{
+    Admit, InferenceServer, Plan, Reply, SchedConfig, SchedCtx, SchedPolicy, SchedEntry,
+    SubmitOpts,
+};
+use crate::util::stats::percentile;
+use crate::util::Pcg32;
+
+/// A pre-generated open-loop arrival trace.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Trace {
+    /// Seed the trace was generated from.
+    pub seed: u64,
+    /// Offered arrival rate in requests/second (λ of the Poisson process).
+    pub offered_qps: u64,
+    /// Arrival offsets from t₀ in microseconds, non-decreasing.
+    pub arrivals_us: Vec<u64>,
+    /// Priority lane per request (uniform over `lanes`).
+    pub lanes: Vec<usize>,
+}
+
+impl Trace {
+    /// Generate `n` Poisson arrivals at `offered_qps` requests/second.
+    /// Deterministic: the trace is a pure function of the arguments.
+    pub fn poisson(seed: u64, offered_qps: u64, n: usize, lanes: usize) -> Trace {
+        assert!(offered_qps > 0, "offered_qps must be positive");
+        assert!(lanes >= 1, "need at least one lane");
+        let mut rng = Pcg32::new(seed, 0x10ad);
+        let mut t = 0.0f64;
+        let mut arrivals_us = Vec::with_capacity(n);
+        let mut lane_v = Vec::with_capacity(n);
+        for _ in 0..n {
+            // Exponential inter-arrival: −ln(1−u)/λ, u ∈ [0,1).
+            let u = rng.uniform() as f64;
+            t += -(1.0 - u).ln() / offered_qps as f64;
+            arrivals_us.push((t * 1e6).round() as u64);
+            lane_v.push(rng.below(lanes));
+        }
+        Trace { seed, offered_qps, arrivals_us, lanes: lane_v }
+    }
+
+    /// Request count.
+    pub fn len(&self) -> usize {
+        self.arrivals_us.len()
+    }
+
+    /// True for the empty trace.
+    pub fn is_empty(&self) -> bool {
+        self.arrivals_us.is_empty()
+    }
+
+    /// FNV-1a checksum over the arrival offsets and lanes — a compact
+    /// fingerprint for the CSV, pinning trace identity across PRs.
+    pub fn fnv(&self) -> u64 {
+        let mut h = 0xcbf2_9ce4_8422_2325u64;
+        let mut eat = |v: u64| {
+            for b in v.to_le_bytes() {
+                h ^= b as u64;
+                h = h.wrapping_mul(0x1_0000_01b3);
+            }
+        };
+        eat(self.seed);
+        eat(self.offered_qps);
+        for (&t, &l) in self.arrivals_us.iter().zip(&self.lanes) {
+            eat(t);
+            eat(l as u64);
+        }
+        h
+    }
+}
+
+/// Deterministic cost model for [`simulate`]: a batch of `n` rows takes
+/// `batch_overhead_us + n · per_row_us` virtual microseconds.
+#[derive(Clone, Copy, Debug)]
+pub struct SimCost {
+    /// Fixed per-dispatch cost (queue handoff, stacking, rescale setup).
+    pub batch_overhead_us: u64,
+    /// Marginal cost per batched row.
+    pub per_row_us: u64,
+}
+
+/// Outcome of one load run (simulated or real).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct LoadReport {
+    /// Requests offered (trace length).
+    pub submitted: u64,
+    /// Requests answered with logits.
+    pub served: u64,
+    /// Admitted requests later shed (evicted / expired / shutdown).
+    pub shed: u64,
+    /// Requests refused at admission (queue full, deadline unmeetable).
+    pub shed_admission: u64,
+    /// Batches dispatched.
+    pub batches: u64,
+    /// Latency percentiles over *served* requests, microseconds.
+    pub p50_us: f64,
+    /// 99th percentile latency (µs).
+    pub p99_us: f64,
+    /// 99.9th percentile latency (µs) — the overload tail.
+    pub p999_us: f64,
+    /// Served requests per second over the span from first arrival to
+    /// last completion.
+    pub goodput_qps: f64,
+}
+
+impl LoadReport {
+    /// Every offered request must be accounted exactly once. The SLO
+    /// bench fails on any violation.
+    pub fn accounted(&self) -> bool {
+        self.submitted == self.served + self.shed + self.shed_admission
+    }
+
+    fn finish(&mut self, mut lat_us: Vec<f64>, span_secs: f64) {
+        lat_us.sort_by(f64::total_cmp);
+        self.p50_us = percentile(&lat_us, 50.0);
+        self.p99_us = percentile(&lat_us, 99.0);
+        self.p999_us = percentile(&lat_us, 99.9);
+        self.goodput_qps = if span_secs > 0.0 { self.served as f64 / span_secs } else { 0.0 };
+    }
+}
+
+/// Replay `trace` against a scheduler policy in virtual time. Drives the
+/// *same* `Scheduler` implementation the live server runs; `deadline_us`
+/// (when set) attaches a relative deadline to every request, enabling
+/// reject-on-admission and dispatch-time expiry. Fully deterministic:
+/// same arguments ⇒ identical report, bit for bit.
+pub fn simulate(
+    policy: SchedPolicy,
+    scfg: SchedConfig,
+    workers: usize,
+    deadline_us: Option<u64>,
+    trace: &Trace,
+    cost: SimCost,
+) -> LoadReport {
+    assert!(workers >= 1);
+    let base = Instant::now(); // cancels in every scheduler comparison
+    let at = |us: u64| base + Duration::from_micros(us);
+    let mut sched = policy.build(scfg);
+    // Deterministic service estimate (the live server's EWMA, without
+    // the measurement noise).
+    let est_req_secs = (cost.per_row_us as f64 + cost.batch_overhead_us as f64 / scfg.max_batch as f64) * 1e-6;
+    let ctx = |now_us: u64| SchedCtx { now: at(now_us), est_req_secs, workers };
+
+    let mut report = LoadReport { submitted: trace.len() as u64, ..LoadReport::default() };
+    let mut free_at = vec![0u64; workers];
+    let mut arrival_of = vec![0u64; trace.len()];
+    let mut lat_us: Vec<f64> = Vec::new();
+    let mut next_arrival = 0usize;
+    let mut now = 0u64;
+    let mut last_done = 0u64;
+    loop {
+        // Admit every arrival due now.
+        while next_arrival < trace.len() && trace.arrivals_us[next_arrival] <= now {
+            let id = next_arrival as u64;
+            arrival_of[next_arrival] = trace.arrivals_us[next_arrival];
+            let e = SchedEntry {
+                id,
+                lane: trace.lanes[next_arrival],
+                deadline: deadline_us.map(|d| at(trace.arrivals_us[next_arrival] + d)),
+                arrived: at(trace.arrivals_us[next_arrival]),
+            };
+            match sched.admit(e, &ctx(now)) {
+                Admit::Queued => {}
+                Admit::Evict { .. } => report.shed += 1,
+                Admit::Shed(_) => report.shed_admission += 1,
+            }
+            next_arrival += 1;
+        }
+        // Offer the queue to every idle worker.
+        let mut hold: Option<u64> = None;
+        for w in 0..workers {
+            if free_at[w] > now {
+                continue;
+            }
+            loop {
+                match sched.plan(&ctx(now)) {
+                    Plan::Dispatch { batch, expired } => {
+                        report.shed += expired.len() as u64;
+                        if batch.is_empty() {
+                            continue; // pure expiry made progress; replan
+                        }
+                        let secs = cost.batch_overhead_us + cost.per_row_us * batch.len() as u64;
+                        let done = now + secs;
+                        free_at[w] = done;
+                        last_done = last_done.max(done);
+                        report.batches += 1;
+                        report.served += batch.len() as u64;
+                        for id in batch {
+                            lat_us.push((done - arrival_of[id as usize]) as f64);
+                        }
+                        break; // this worker is busy now
+                    }
+                    Plan::Wait(t) => {
+                        if let Some(t) = t {
+                            let t_us = t.duration_since(base).as_micros() as u64;
+                            hold = Some(hold.map_or(t_us, |h: u64| h.min(t_us)));
+                        }
+                        break;
+                    }
+                }
+            }
+        }
+        // Advance virtual time to the next event.
+        let mut next: Option<u64> = None;
+        let mut consider = |t: u64| {
+            if t > now {
+                next = Some(next.map_or(t, |n: u64| n.min(t)));
+            }
+        };
+        if next_arrival < trace.len() {
+            consider(trace.arrivals_us[next_arrival]);
+        }
+        if sched.len() > 0 || free_at.iter().any(|&f| f > now) {
+            for &f in &free_at {
+                consider(f);
+            }
+        }
+        if let Some(h) = hold {
+            consider(h.max(now + 1));
+        }
+        match next {
+            Some(t) => now = t,
+            None => break, // no arrivals, empty queue, idle workers
+        }
+    }
+    report.finish(lat_us, last_done as f64 * 1e-6);
+    report
+}
+
+/// Play `trace` against a real server, open loop: each request is
+/// submitted at its arrival offset via the non-blocking path (overload
+/// is *offered* — a full queue sheds instead of throttling the
+/// generator), `input(i)` supplies the i-th sample, and latency is
+/// measured from submission to the worker's reply stamp. Blocks until
+/// every request resolves.
+pub fn drive(
+    server: &InferenceServer,
+    trace: &Trace,
+    deadline_us: Option<u64>,
+    input: impl Fn(usize) -> Vec<f32>,
+) -> LoadReport {
+    let mut report = LoadReport { submitted: trace.len() as u64, ..LoadReport::default() };
+    let (px, prx) = std::sync::mpsc::channel();
+    let collector = std::thread::spawn(move || {
+        // Replies are timestamped by the worker, so collecting lazily in
+        // submission order does not distort latency.
+        let mut lat_us = Vec::new();
+        let (mut served, mut shed) = (0u64, 0u64);
+        let mut last_done: Option<Instant> = None;
+        while let Ok((submitted_at, pending)) = prx.recv() {
+            let pending: crate::serve::Pending = pending;
+            match pending.recv() {
+                Ok(Reply::Logits(_, at)) => {
+                    served += 1;
+                    lat_us.push(at.duration_since(submitted_at).as_secs_f64() * 1e6);
+                    last_done = Some(last_done.map_or(at, |l: Instant| l.max(at)));
+                }
+                Ok(Reply::Shed(_, _)) | Err(_) => shed += 1,
+            }
+        }
+        (served, shed, lat_us, last_done)
+    });
+
+    let t0 = Instant::now();
+    for i in 0..trace.len() {
+        let due = t0 + Duration::from_micros(trace.arrivals_us[i]);
+        let now = Instant::now();
+        if due > now {
+            std::thread::sleep(due - now);
+        }
+        let opts = SubmitOpts { lane: trace.lanes[i], deadline_us, model: None };
+        match server.submit_opts(input(i), opts) {
+            Ok(p) => px.send((Instant::now(), p)).expect("collector alive"),
+            Err(_) => report.shed_admission += 1,
+        }
+    }
+    drop(px);
+    let (served, shed, lat_us, last_done) = collector.join().expect("collector thread");
+    report.served = served;
+    report.shed = shed;
+    let span = last_done.map_or(0.0, |l| l.duration_since(t0).as_secs_f64());
+    report.finish(lat_us, span);
+    report
+}
+
+/// The shared `results/serve_slo.csv` row layout — one formatting path
+/// used by both the bench and the determinism test, so "same seed ⇒
+/// identical row" is pinned end to end.
+pub const SLO_CSV_HEADER: [&str; 13] = [
+    "mode", "scheduler", "offered_qps", "requests", "trace_fnv", "workers", "max_batch",
+    "deadline_us", "served", "shed", "p50_us", "p99_us", "p999_us",
+];
+
+/// Format one CSV row (see [`SLO_CSV_HEADER`]).
+pub fn slo_csv_row(
+    mode: &str,
+    policy: SchedPolicy,
+    trace: &Trace,
+    workers: usize,
+    max_batch: usize,
+    deadline_us: Option<u64>,
+    r: &LoadReport,
+) -> Vec<String> {
+    vec![
+        mode.to_string(),
+        policy.label().to_string(),
+        trace.offered_qps.to_string(),
+        trace.len().to_string(),
+        format!("{:016x}", trace.fnv()),
+        workers.to_string(),
+        max_batch.to_string(),
+        deadline_us.map_or("none".to_string(), |d| d.to_string()),
+        r.served.to_string(),
+        (r.shed + r.shed_admission).to_string(),
+        format!("{:.1}", r.p50_us),
+        format!("{:.1}", r.p99_us),
+        format!("{:.1}", r.p999_us),
+    ]
+}

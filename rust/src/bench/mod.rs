@@ -4,6 +4,8 @@
 //! table printer. Used by `rust/benches/*` (cargo bench, harness = false)
 //! and by the experiment drivers that need timing (Table 3, Fig 10).
 
+pub mod loadgen;
+
 use crate::util::stats;
 use crate::util::Timer;
 

@@ -4,7 +4,9 @@
 //!   exp <id|all> [--iters N ...]   run a paper experiment (fig1..table5)
 //!   train [--model M --mode Q]     train one classifier and report
 //!         [--replicas N --comm-bits {8,16,adaptive,f32}]  data-parallel
-//!   serve [--ckpt F --model M]     serve a checkpoint with micro-batching
+//!   serve [--ckpt F --model M]     serve through the serving tier: model
+//!         [--models A,B --scheduler P --deadline-us N]  registry, pluggable
+//!                                  batching policy, SLO-aware shedding
 //!   opcount [--batch N]            print the Fig7/Table5 analytic counts
 //!   list                           list experiments and models
 //!
@@ -19,7 +21,10 @@ use apt::exp;
 use apt::exp::common::{grad_mix_string, stash_mix_string};
 use apt::mem::StashPolicy;
 use apt::nn::{models, QuantMode};
-use apt::serve::{FrozenModel, InferenceServer, ServeConfig};
+use apt::serve::{
+    FrozenModel, InferenceServer, ModelRegistry, SchedPolicy, ServeConfig, ServeModel,
+    ServeOutcome, SubmitOpts,
+};
 use apt::train::{CommPrecision, SessionBuilder, TrainRecord};
 use apt::util::cli::Args;
 use apt::util::stats::percentile;
@@ -34,9 +39,11 @@ fn usage() -> ! {
          \x20       [--mode float32|adaptive|int8|int16] [--iters N] [--lr F]\n\
          \x20       [--replicas N] [--comm-bits 8|16|adaptive|f32]\n\
          \x20       [--act-bits 8|16|adaptive|f32] [--recompute]\n\
-         \x20 serve [--ckpt file] [--model mlp] [--mode int8] [--train-iters N]\n\
-         \x20       [--seed N] [--requests N] [--clients N] [--workers N]\n\
-         \x20       [--max-batch N] [--max-wait-us N]\n\
+         \x20 serve [--ckpt file] [--model mlp] [--models mlp,alexnet,…]\n\
+         \x20       [--mode int8] [--train-iters N] [--seed N] [--requests N]\n\
+         \x20       [--clients N] [--workers N] [--max-batch N] [--max-wait-us N]\n\
+         \x20       [--queue-cap N] [--scheduler flush|continuous]\n\
+         \x20       [--deadline-us N] [--lanes N]\n\
          \x20 opcount [--batch N]\n\
          \x20 list\n\
          \n\
@@ -142,11 +149,28 @@ fn cmd_train(args: &Args) -> Result<()> {
     Ok(())
 }
 
-/// `apt serve`: close the train→deploy loop. Loads (or quickly trains) a
-/// checkpoint, freezes it to pre-quantized weights, starts the
-/// micro-batching [`InferenceServer`], and answers a synthetic concurrent
-/// workload, reporting accuracy, QPS and client-side p50/p99 latency
-/// (protocol: EXPERIMENTS.md §Serve).
+/// Train one zoo model briefly and freeze the live net (the `--models`
+/// registry path — no checkpoint file round-trip needed for a demo zoo).
+fn train_and_freeze(name: &str, mode: QuantMode, iters: u64, seed: u64) -> Result<FrozenModel> {
+    println!("training {name} ({}) for {iters} iters …", mode.label());
+    let mut s = SessionBuilder::classifier(name)
+        .mode(mode)
+        .lr(0.01)
+        .seed(seed)
+        .build_parallel(1, CommPrecision::F32)?;
+    s.run(iters)?;
+    FrozenModel::freeze(format!("{name}-{}", mode.label()), s.net())
+        .with_context(|| format!("freezing {name}"))
+}
+
+/// `apt serve`: close the train→deploy loop through the serving tier
+/// (DESIGN.md §Serving-Tier). Loads (or quickly trains) one checkpoint —
+/// or, with `--models a,b,…`, trains a small zoo and publishes every
+/// model into a [`ModelRegistry`] — then answers a synthetic concurrent
+/// workload through the chosen `--scheduler` policy, with optional
+/// `--deadline-us` SLO shedding, reporting accuracy, QPS, client-side
+/// p50/p99 latency and the full shed accounting (protocol:
+/// EXPERIMENTS.md §Serve and §Serve-SLO).
 fn cmd_serve(args: &Args) -> Result<()> {
     let model = args.str_or("model", "mlp");
     let train_iters: u64 = parsed(args, "train-iters", 80)?;
@@ -154,52 +178,81 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let seed: u64 = parsed(args, "seed", 0)?;
     let requests: usize = parsed(args, "requests", 512)?;
     let clients = parsed(args, "clients", 8usize)?.max(1);
+    let policy = SchedPolicy::parse(&args.str_or("scheduler", "flush"))?;
+    let deadline_us: Option<u64> = match parsed(args, "deadline-us", 0u64)? {
+        0 => None,
+        d => Some(d),
+    };
     let cfg = ServeConfig {
         max_batch: parsed(args, "max-batch", 16)?,
         max_wait_us: parsed(args, "max-wait-us", 200)?,
         queue_cap: parsed(args, "queue-cap", 256)?,
         workers: parsed(args, "workers", 2)?,
+        policy,
+        lanes: parsed(args, "lanes", 3)?,
     };
 
-    let ckpt_path = match args.get("ckpt") {
-        Some(p) => std::path::PathBuf::from(p),
-        None => {
-            // No checkpoint given: train one briefly and save it, so the
-            // serve path below is exactly the deployment path.
-            let path = std::env::temp_dir().join(format!(
-                "apt_serve_{}_{}.ckpt",
-                model,
-                std::process::id()
-            ));
-            println!(
-                "no --ckpt given: training {model} ({}) for {train_iters} iters …",
-                mode.label()
-            );
-            // build_parallel(1, F32) == build(), but errors on a bad
-            // --model instead of panicking (no-panic CLI contract).
-            let mut s = SessionBuilder::classifier(&model)
-                .mode(mode)
-                .lr(0.01)
-                .seed(seed)
-                .build_parallel(1, CommPrecision::F32)?;
-            s.run(train_iters)?;
-            s.save_checkpoint(&path)
-                .with_context(|| format!("writing checkpoint {}", path.display()))?;
-            println!("checkpoint saved to {}", path.display());
-            path
+    // --models a,b,…: round-robin requests across a registry of briefly
+    // trained zoo models instead of serving one checkpoint.
+    let model_names: Option<Vec<String>> = args.get("models").map(|s| {
+        s.split(',')
+            .map(|m| m.trim().to_string())
+            .filter(|m| !m.is_empty())
+            .collect()
+    });
+
+    let server = if let Some(names) = &model_names {
+        if names.is_empty() {
+            bail!("--models expects a comma-separated list of zoo models");
         }
+        let registry = Arc::new(ModelRegistry::new());
+        for name in names {
+            let frozen = train_and_freeze(name, mode, train_iters, seed)?;
+            registry.publish(name.as_str(), 1, Arc::new(frozen) as Arc<dyn ServeModel>)?;
+        }
+        for info in registry.list() {
+            println!("registry: {} v{} active ({} loaded)", info.name, info.active, info.versions.len());
+        }
+        InferenceServer::start_registry(registry, names[0].clone(), apt::kernels::global_arc(), cfg)?
+    } else {
+        let ckpt_path = match args.get("ckpt") {
+            Some(p) => std::path::PathBuf::from(p),
+            None => {
+                // No checkpoint given: train one briefly and save it, so the
+                // serve path below is exactly the deployment path.
+                let path = std::env::temp_dir().join(format!(
+                    "apt_serve_{}_{}.ckpt",
+                    model,
+                    std::process::id()
+                ));
+                println!(
+                    "no --ckpt given: training {model} ({}) for {train_iters} iters …",
+                    mode.label()
+                );
+                // build_parallel(1, F32) == build(), but errors on a bad
+                // --model instead of panicking (no-panic CLI contract).
+                let mut s = SessionBuilder::classifier(&model)
+                    .mode(mode)
+                    .lr(0.01)
+                    .seed(seed)
+                    .build_parallel(1, CommPrecision::F32)?;
+                s.run(train_iters)?;
+                s.save_checkpoint(&path)
+                    .with_context(|| format!("writing checkpoint {}", path.display()))?;
+                println!("checkpoint saved to {}", path.display());
+                path
+            }
+        };
+        let frozen = FrozenModel::from_checkpoint(&ckpt_path, &model, mode)
+            .with_context(|| format!("freezing checkpoint {}", ckpt_path.display()))?;
+        println!(
+            "serving {} ({} weights, input width {})",
+            frozen.label(),
+            frozen.precision(),
+            frozen.input_len()
+        );
+        InferenceServer::start(Arc::new(frozen), apt::kernels::global_arc(), cfg)
     };
-
-    let frozen = FrozenModel::from_checkpoint(&ckpt_path, &model, mode)
-        .with_context(|| format!("freezing checkpoint {}", ckpt_path.display()))?;
-    println!(
-        "serving {} ({} weights, input width {})",
-        frozen.label(),
-        frozen.precision(),
-        frozen.input_len()
-    );
-    let frozen = Arc::new(frozen);
-    let server = InferenceServer::start(Arc::clone(&frozen), apt::kernels::global_arc(), cfg);
 
     // Synthetic eval workload drawn from the same stream Session::eval
     // uses (data seed+1000, eval stream 999 — matches the training run
@@ -213,47 +266,66 @@ fn cmd_serve(args: &Args) -> Result<()> {
         0.5,
     );
     let (ex, ey) = data.eval_set(999, requests);
-    let d = frozen.input_len();
+    let d = server.input_len();
+    let model_names = &model_names;
 
     let wall = Instant::now();
-    let (correct, latencies) = std::thread::scope(|scope| {
+    let (correct, client_served, client_shed, latencies) = std::thread::scope(|scope| {
         let mut handles = Vec::new();
         for c in 0..clients {
             let server = &server;
             let ex = &ex;
             let ey = &ey;
-            handles.push(scope.spawn(move || -> Result<(usize, Vec<f64>)> {
-                // Closed-loop client: submit, wait, repeat over its slice.
-                let mut correct = 0usize;
+            handles.push(scope.spawn(move || -> Result<(usize, usize, usize, Vec<f64>)> {
+                // Closed-loop client: submit, resolve, repeat over its
+                // slice. With --deadline-us, shed replies are an expected
+                // outcome and are counted, not failed.
+                let (mut correct, mut served, mut shed) = (0usize, 0usize, 0usize);
                 let mut lat = Vec::new();
                 let mut i = c;
                 while i < requests {
                     let input = ex.data[i * d..(i + 1) * d].to_vec();
+                    let opts = SubmitOpts {
+                        lane: 1,
+                        deadline_us,
+                        model: model_names.as_ref().map(|ns| ns[i % ns.len()].clone()),
+                    };
                     let t = Instant::now();
-                    let logits = server.submit(input)?.wait()?;
-                    lat.push(t.elapsed().as_secs_f64());
-                    // total_cmp: a NaN logit must not panic the client
-                    let pred = logits
-                        .iter()
-                        .enumerate()
-                        .max_by(|a, b| a.1.total_cmp(b.1))
-                        .map(|(j, _)| j)
-                        .unwrap_or(0);
-                    if pred == ey[i] {
-                        correct += 1;
+                    match server.submit_opts(input, opts) {
+                        Err(e) if e.to_string().contains("request shed") => shed += 1,
+                        Err(e) => return Err(e),
+                        Ok(p) => match p.outcome()? {
+                            ServeOutcome::Shed(_) => shed += 1,
+                            ServeOutcome::Logits(logits) => {
+                                lat.push(t.elapsed().as_secs_f64());
+                                served += 1;
+                                // total_cmp: a NaN logit must not panic the client
+                                let pred = logits
+                                    .iter()
+                                    .enumerate()
+                                    .max_by(|a, b| a.1.total_cmp(b.1))
+                                    .map(|(j, _)| j)
+                                    .unwrap_or(0);
+                                if pred == ey[i] {
+                                    correct += 1;
+                                }
+                            }
+                        },
                     }
                     i += clients;
                 }
-                Ok((correct, lat))
+                Ok((correct, served, shed, lat))
             }));
         }
-        let mut correct = 0usize;
+        let (mut correct, mut served, mut shed) = (0usize, 0usize, 0usize);
         let mut lat = Vec::new();
         let mut failure = None;
         for h in handles {
             match h.join() {
-                Ok(Ok((c, l))) => {
+                Ok(Ok((c, s, x, l))) => {
                     correct += c;
+                    served += s;
+                    shed += x;
                     lat.extend(l);
                 }
                 Ok(Err(e)) => failure = Some(e),
@@ -262,17 +334,18 @@ fn cmd_serve(args: &Args) -> Result<()> {
         }
         match failure {
             Some(e) => Err(e),
-            None => Ok((correct, lat)),
+            None => Ok((correct, served, shed, lat)),
         }
     })?;
     let secs = wall.elapsed().as_secs_f64();
     let stats = server.shutdown();
 
     println!(
-        "\n{} requests from {clients} clients in {:.3}s — {:.0} QPS",
+        "\n{} requests from {clients} clients in {:.3}s — {:.0} QPS ({} scheduler)",
         requests,
         secs,
-        requests as f64 / secs
+        requests as f64 / secs,
+        policy.label()
     );
     println!(
         "latency p50 {:.1}µs  p99 {:.1}µs   (max_batch {}, max_wait {}µs, {} workers)",
@@ -283,11 +356,24 @@ fn cmd_serve(args: &Args) -> Result<()> {
         cfg.workers
     );
     println!(
-        "batches {} (mean size {:.2}), accuracy {:.3}",
+        "batches {} (mean size {:.2}), served {client_served}, shed {client_shed}, accuracy {:.3}",
         stats.batches,
         stats.mean_batch(),
-        correct as f64 / requests as f64
+        correct as f64 / client_served.max(1) as f64
     );
+    println!(
+        "accounting: accepted {} = served {} + shed {} (+{} refused at admission)",
+        stats.accepted, stats.served, stats.shed, stats.shed_admission
+    );
+    if !stats.accounted() || stats.submitted() != requests as u64 {
+        bail!(
+            "serve accounting mismatch: accepted {} served {} shed {} refused {} over {requests} requests",
+            stats.accepted,
+            stats.served,
+            stats.shed,
+            stats.shed_admission
+        );
+    }
     Ok(())
 }
 

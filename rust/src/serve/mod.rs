@@ -1,45 +1,67 @@
-//! Quantized inference serving (DESIGN.md §Serving) — the deployment side
-//! of the paper's quantization payoff.
+//! Quantized inference serving (DESIGN.md §Serving, §Serving-Tier) — the
+//! deployment side of the paper's quantization payoff.
 //!
 //! Training (the `train::Session` API) pins weights and activations to int8
 //! the whole run, so a finished checkpoint *is* an int8 model; this module
 //! closes the train→deploy loop that motivates that design (paper §1,
 //! "Efficiency"; cf. the per-tensor fixed-point deployment argument in
-//! PAPERS.md). Two pieces:
+//! PAPERS.md). Four pieces:
 //!
 //! - [`FrozenModel`] — a checkpoint (or live net) frozen for serving:
 //!   forward-only op list, batch-norm running stats folded to per-channel
 //!   affines, weights pre-quantized **once** into int8/int16 codes that
 //!   feed the integer GEMM kernels. No gradient buffers, no controller
 //!   probes, no training caches.
-//! - [`InferenceServer`] — a bounded request queue with dynamic
-//!   micro-batching (flush on `max_batch` or `max_wait_us`) and N worker
-//!   threads, each owning a [`crate::kernels::Engine`] handle.
+//! - [`ModelRegistry`] — versioned multi-model registry behind the
+//!   [`ServeModel`] trait: load/evict models by name+version, warm swap
+//!   (publish flips the active version for new admissions while in-flight
+//!   batches drain on the version they were pinned to — no queue flush).
+//! - [`Scheduler`] — pluggable batching policy over queued request ids:
+//!   [`SchedPolicy::Flush`] (flush-and-wait micro-batching) and
+//!   [`SchedPolicy::Continuous`] (continuous batching: a free worker
+//!   dispatches whatever is queued, nothing waits out a fill timer), both
+//!   with priority lanes, per-request deadlines and SLO-aware shedding
+//!   (reject-on-admission, lowest-priority-first eviction, dispatch-time
+//!   expiry — every shed is an explicit reply, never a hang).
+//! - [`InferenceServer`] — the data plane: bounded multi-lane queue, N
+//!   worker threads each owning a [`crate::kernels::Engine`] handle,
+//!   `catch_unwind` around every forward so a panicking model answers
+//!   `Rejected(WorkerPanic)` instead of hanging its batch.
 //!
 //! ```no_run
 //! use std::sync::Arc;
 //! use apt::nn::QuantMode;
-//! use apt::serve::{FrozenModel, InferenceServer, ServeConfig};
+//! use apt::serve::{FrozenModel, InferenceServer, ServeConfig, SchedPolicy};
 //!
 //! let frozen = FrozenModel::from_checkpoint("ckpt.txt", "mlp", QuantMode::Static(8)).unwrap();
 //! let server = InferenceServer::start(
 //!     Arc::new(frozen),
 //!     apt::kernels::global_arc(),
-//!     ServeConfig::default(),
+//!     ServeConfig { policy: SchedPolicy::Continuous, ..ServeConfig::default() },
 //! );
-//! let pending = server.submit(vec![0.0; server.model().input_len()]).unwrap();
+//! let pending = server.submit(vec![0.0; server.input_len()]).unwrap();
 //! let logits = pending.wait().unwrap();
 //! println!("prediction: {:?}", logits);
 //! ```
 //!
-//! Operational protocol and the throughput/latency table template live in
-//! EXPERIMENTS.md §Serve; `apt serve` (the CLI) and
-//! `examples/serve_quickstart.rs` are runnable end-to-end demos.
+//! Operational protocol and the tables live in EXPERIMENTS.md §Serve and
+//! §Serve-SLO; `apt serve` (the CLI) and `examples/serve_quickstart.rs`
+//! are runnable end-to-end demos; `bench_serve_slo` sweeps offered QPS
+//! against both schedulers into `results/serve_slo.csv`.
 
 #![warn(missing_docs)]
 
-mod batcher;
 mod frozen;
+mod registry;
+mod scheduler;
+mod server;
 
-pub use batcher::{InferenceServer, Pending, ServeConfig, ServerStats};
 pub use frozen::{FrozenModel, InferOp};
+pub use registry::{ModelInfo, ModelRegistry, ServeModel};
+pub use scheduler::{
+    Admit, ContinuousScheduler, FlushScheduler, Plan, SchedConfig, SchedCtx, SchedEntry,
+    SchedPolicy, Scheduler, ShedReason,
+};
+pub use server::{InferenceServer, Pending, ServeConfig, ServeOutcome, ServerStats, SubmitOpts};
+
+pub(crate) use server::Reply;

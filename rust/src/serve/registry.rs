@@ -1,0 +1,182 @@
+//! Multi-model registry with versioned warm swap (DESIGN.md
+//! §Serving-Tier).
+//!
+//! A [`ModelRegistry`] maps `name → {version → model}` plus one *active*
+//! version per name. Publishing a new version is a **warm swap**: the
+//! active pointer flips atomically under the registry lock, so requests
+//! admitted after the publish resolve to the new version while every
+//! request admitted before it keeps the `Arc` it was pinned to at
+//! admission and drains on the old version — no queue flush, no
+//! mixed-version batch (the server never stacks two model handles into
+//! one tensor). Evicting a non-active version only drops the registry's
+//! `Arc`; in-flight batches still holding clones finish normally and the
+//! model is freed when the last clone drops.
+//!
+//! Models are registered behind the [`ServeModel`] trait —
+//! [`crate::serve::FrozenModel`] is the production implementation; tests
+//! register purpose-built fakes (e.g. a forward that panics) to exercise
+//! the server's failure paths without a real checkpoint.
+
+use std::collections::BTreeMap;
+use std::sync::{Arc, Mutex, MutexGuard};
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::kernels::Engine;
+use crate::tensor::Tensor;
+
+use super::frozen::FrozenModel;
+
+/// What the serving tier needs from a model: a pure batched forward.
+/// `forward` takes `&self`, so one instance is shared by every worker
+/// behind an `Arc` with no locking.
+pub trait ServeModel: Send + Sync {
+    /// Flattened per-sample input width.
+    fn input_len(&self) -> usize;
+    /// Forward a batch `[n, input_len] → [n, classes]`.
+    fn forward(&self, x: &Tensor, eng: &Engine) -> Tensor;
+    /// Display label (diagnostics only).
+    fn label(&self) -> &str;
+}
+
+impl ServeModel for FrozenModel {
+    fn input_len(&self) -> usize {
+        FrozenModel::input_len(self)
+    }
+
+    fn forward(&self, x: &Tensor, eng: &Engine) -> Tensor {
+        FrozenModel::forward(self, x, eng)
+    }
+
+    fn label(&self) -> &str {
+        FrozenModel::label(self)
+    }
+}
+
+struct NameEntry {
+    versions: BTreeMap<u64, Arc<dyn ServeModel>>,
+    active: u64,
+}
+
+/// Registry state: one lock around a small name→versions map. Lookups
+/// clone an `Arc` and leave; the lock is never held across a forward.
+pub struct ModelRegistry {
+    inner: Mutex<BTreeMap<String, NameEntry>>,
+}
+
+impl Default for ModelRegistry {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// One row of [`ModelRegistry::list`].
+#[derive(Clone, Debug)]
+pub struct ModelInfo {
+    /// Registered name.
+    pub name: String,
+    /// Version new requests currently resolve to.
+    pub active: u64,
+    /// Every loaded version, ascending.
+    pub versions: Vec<u64>,
+}
+
+impl ModelRegistry {
+    /// Empty registry.
+    pub fn new() -> ModelRegistry {
+        ModelRegistry { inner: Mutex::new(BTreeMap::new()) }
+    }
+
+    fn lock(&self) -> MutexGuard<'_, BTreeMap<String, NameEntry>> {
+        // Registry mutations are single map inserts/removes; state stays
+        // coherent across a poisoning panic, so keep serving (same
+        // rationale as the serve queue lock).
+        self.inner.lock().unwrap_or_else(|p| p.into_inner())
+    }
+
+    /// Load `model` as `name@version` and make it the active version
+    /// (warm swap when the name already serves traffic). Re-publishing an
+    /// existing `(name, version)` is an error — versions are immutable.
+    pub fn publish(
+        &self,
+        name: impl Into<String>,
+        version: u64,
+        model: Arc<dyn ServeModel>,
+    ) -> Result<()> {
+        let name = name.into();
+        let mut map = self.lock();
+        let entry = map
+            .entry(name.clone())
+            .or_insert_with(|| NameEntry { versions: BTreeMap::new(), active: version });
+        if entry.versions.contains_key(&version) {
+            bail!("model {name}@{version} is already published (versions are immutable)");
+        }
+        entry.versions.insert(version, model);
+        entry.active = version;
+        Ok(())
+    }
+
+    /// Resolve the active version of `name`: `(version, model)`.
+    pub fn resolve(&self, name: &str) -> Option<(u64, Arc<dyn ServeModel>)> {
+        let map = self.lock();
+        let e = map.get(name)?;
+        e.versions.get(&e.active).map(|m| (e.active, Arc::clone(m)))
+    }
+
+    /// Resolve one specific version of `name`.
+    pub fn resolve_version(&self, name: &str, version: u64) -> Option<Arc<dyn ServeModel>> {
+        self.lock().get(name)?.versions.get(&version).cloned()
+    }
+
+    /// Re-point the active version (rollback / canary promote).
+    pub fn activate(&self, name: &str, version: u64) -> Result<()> {
+        let mut map = self.lock();
+        let e = map.get_mut(name).ok_or_else(|| anyhow!("unknown model {name:?}"))?;
+        if !e.versions.contains_key(&version) {
+            bail!("model {name} has no version {version}");
+        }
+        e.active = version;
+        Ok(())
+    }
+
+    /// Unload `name@version`. The active version cannot be evicted
+    /// (activate or publish another first); in-flight batches holding
+    /// the `Arc` finish normally either way.
+    pub fn evict(&self, name: &str, version: u64) -> Result<()> {
+        let mut map = self.lock();
+        let e = map.get_mut(name).ok_or_else(|| anyhow!("unknown model {name:?}"))?;
+        if e.active == version {
+            bail!("cannot evict the active version {name}@{version}");
+        }
+        if e.versions.remove(&version).is_none() {
+            bail!("model {name} has no version {version}");
+        }
+        Ok(())
+    }
+
+    /// Unload every version of `name` (the name stops resolving at once;
+    /// in-flight batches drain).
+    pub fn evict_model(&self, name: &str) -> Result<()> {
+        self.lock()
+            .remove(name)
+            .map(|_| ())
+            .ok_or_else(|| anyhow!("unknown model {name:?}"))
+    }
+
+    /// Names currently registered, with their active + loaded versions.
+    pub fn list(&self) -> Vec<ModelInfo> {
+        self.lock()
+            .iter()
+            .map(|(name, e)| ModelInfo {
+                name: name.clone(),
+                active: e.active,
+                versions: e.versions.keys().copied().collect(),
+            })
+            .collect()
+    }
+
+    /// Total loaded `(name, version)` pairs.
+    pub fn loaded(&self) -> usize {
+        self.lock().values().map(|e| e.versions.len()).sum()
+    }
+}

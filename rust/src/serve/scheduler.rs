@@ -1,0 +1,388 @@
+//! Pluggable batching policies (DESIGN.md §Serving-Tier).
+//!
+//! The [`Scheduler`] trait is the pure *policy* half of the serving tier:
+//! it orders queued request ids into batches; the server
+//! (`serve::server`) owns the payloads, threads, locks and response
+//! channels. Keeping the policy payload-free means every implementation
+//! runs the same conformance battery in `rust/tests/test_scheduler.rs`
+//! (no lost/duplicated ids, `batch ≤ max_batch`, lane FIFO, explicit
+//! shed decisions) and the deterministic virtual-time simulator in
+//! [`crate::bench::loadgen`] can replay a policy without any threads.
+//!
+//! Two policies ship:
+//!
+//! - [`SchedPolicy::Flush`] — the original flush-and-wait micro-batcher:
+//!   hold a batch open until it reaches `min(max_batch, queue_cap)`
+//!   requests or `max_wait_us` has passed since the oldest queued arrival,
+//!   then flush.
+//! - [`SchedPolicy::Continuous`] — continuous batching: never hold a
+//!   batch open. A free worker dispatches whatever is queued *right now*
+//!   (up to `max_batch`); requests that arrive while every worker is busy
+//!   are admitted into the next batch the instant one frees. For one-shot
+//!   CNN/MLP forwards this is exactly the iteration-level admission of
+//!   LLM continuous batching collapsed to a single iteration — under load
+//!   batches form from queue occupancy, under light load nothing ever
+//!   waits out an artificial deadline.
+//!
+//! Both policies share the same admission control ([`LaneQueue::admit`]):
+//! bounded occupancy (`queue_cap`), priority-lane eviction (an arriving
+//! high-priority request may displace the youngest lowest-priority queued
+//! one when full) and SLO-aware reject-on-admission (a request whose
+//! deadline cannot be met under the current queue-delay estimate is shed
+//! immediately instead of timing out in the queue).
+
+use std::collections::VecDeque;
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, Result};
+
+/// Why a request was refused service. Every shed path produces an
+/// *explicit* reply carrying one of these — a shed request never hangs.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ShedReason {
+    /// Queue at `queue_cap` and no lower-priority victim to displace.
+    QueueFull,
+    /// Reject-on-admission: predicted queue delay exceeds the deadline.
+    DeadlineUnmeetable,
+    /// Displaced from the queue by a higher-priority arrival.
+    Evicted,
+    /// Deadline passed while queued; dropped at dispatch time.
+    DeadlineExpired,
+    /// Server shut down before the request was dispatched.
+    Shutdown,
+    /// The worker running the batch panicked mid-forward.
+    WorkerPanic,
+}
+
+impl ShedReason {
+    /// Stable lowercase token (CSV columns, error messages).
+    pub fn label(&self) -> &'static str {
+        match self {
+            ShedReason::QueueFull => "queue-full",
+            ShedReason::DeadlineUnmeetable => "deadline-unmeetable",
+            ShedReason::Evicted => "evicted",
+            ShedReason::DeadlineExpired => "deadline-expired",
+            ShedReason::Shutdown => "shutdown",
+            ShedReason::WorkerPanic => "worker-panic",
+        }
+    }
+}
+
+/// Which batching policy a server (or simulator) runs.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SchedPolicy {
+    /// Flush-and-wait micro-batching (the PR-3 behaviour).
+    Flush,
+    /// Continuous batching — dispatch whatever is queued to a free worker.
+    Continuous,
+}
+
+impl SchedPolicy {
+    /// Parse a `--scheduler` flag value.
+    pub fn parse(s: &str) -> Result<SchedPolicy> {
+        Ok(match s {
+            "flush" => SchedPolicy::Flush,
+            "continuous" | "cont" => SchedPolicy::Continuous,
+            other => bail!("unknown scheduler {other:?} (expected flush or continuous)"),
+        })
+    }
+
+    /// Stable lowercase token.
+    pub fn label(&self) -> &'static str {
+        match self {
+            SchedPolicy::Flush => "flush",
+            SchedPolicy::Continuous => "continuous",
+        }
+    }
+
+    /// Build the scheduler for this policy.
+    pub fn build(&self, cfg: SchedConfig) -> Box<dyn Scheduler> {
+        match self {
+            SchedPolicy::Flush => Box::new(FlushScheduler::new(cfg)),
+            SchedPolicy::Continuous => Box::new(ContinuousScheduler::new(cfg)),
+        }
+    }
+}
+
+/// Policy-level tuning shared by every scheduler.
+#[derive(Clone, Copy, Debug)]
+pub struct SchedConfig {
+    /// Largest batch a single dispatch may return.
+    pub max_batch: usize,
+    /// Bounded queue occupancy; admissions beyond it shed (or evict).
+    pub queue_cap: usize,
+    /// Priority lane count; lane 0 is most urgent, `lanes-1` least.
+    pub lanes: usize,
+    /// Flush-and-wait hold time (ignored by continuous batching).
+    pub max_wait_us: u64,
+}
+
+/// What the policy knows about one queued request. The `id` is the
+/// server's key back to the payload; the scheduler never sees inputs.
+#[derive(Clone, Copy, Debug)]
+pub struct SchedEntry {
+    /// Server-assigned unique id (monotone in admission order).
+    pub id: u64,
+    /// Priority lane, `0 = most urgent`; clamped to `lanes-1`.
+    pub lane: usize,
+    /// Absolute completion deadline, if the client set one.
+    pub deadline: Option<Instant>,
+    /// Admission timestamp (drives the flush hold timer and lane FIFO).
+    pub arrived: Instant,
+}
+
+/// Live service-rate estimate handed to admission control: the server
+/// maintains an EWMA of seconds-per-request over finished batches; the
+/// simulator derives it from its deterministic cost model.
+#[derive(Clone, Copy, Debug)]
+pub struct SchedCtx {
+    /// Decision timestamp.
+    pub now: Instant,
+    /// Estimated seconds to serve one request (0 ⇒ no estimate yet: the
+    /// feasibility check admits everything until the first batch lands).
+    pub est_req_secs: f64,
+    /// Worker threads draining this queue.
+    pub workers: usize,
+}
+
+impl SchedCtx {
+    /// Predicted queueing delay for a request entering behind `ahead`
+    /// queued requests: `ahead · est / workers` — the fluid-limit drain
+    /// time of everything in front of it.
+    pub fn queue_delay(&self, ahead: usize) -> Duration {
+        Duration::from_secs_f64(self.est_req_secs * ahead as f64 / self.workers.max(1) as f64)
+    }
+}
+
+/// Outcome of [`Scheduler::admit`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Admit {
+    /// Entry queued; it will appear in exactly one later dispatch /
+    /// expiry / drain.
+    Queued,
+    /// Entry refused before queueing; the caller must reply `Rejected`.
+    Shed(ShedReason),
+    /// Entry queued after displacing `victim` (a queued lower-priority
+    /// id); the caller must reply `Rejected(Evicted)` to the victim.
+    Evict {
+        /// The displaced id.
+        victim: u64,
+    },
+}
+
+/// Outcome of [`Scheduler::plan`].
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum Plan {
+    /// Run `batch` now (≤ `max_batch` ids, lane-ordered, FIFO within a
+    /// lane). `expired` ids missed their deadline while queued and must
+    /// be answered `Rejected(DeadlineExpired)` without running.
+    Dispatch {
+        /// Ids to forward as one batch.
+        batch: Vec<u64>,
+        /// Ids shed at dispatch time (deadline already passed).
+        expired: Vec<u64>,
+    },
+    /// Nothing runnable. `Some(t)` ⇒ a partial batch is holding until
+    /// `t` (flush policy); `None` ⇒ queue is empty, wait for an arrival.
+    Wait(Option<Instant>),
+}
+
+/// A batching policy over queued request ids. Implementations must be
+/// pure queue logic — no clocks (use `ctx.now`), no threads, no I/O —
+/// so the conformance battery and the virtual-time simulator exercise
+/// exactly the code the live server runs.
+pub trait Scheduler: Send {
+    /// Policy name (`"flush"` / `"continuous"`).
+    fn name(&self) -> &'static str;
+
+    /// Admission decision for one arriving entry.
+    fn admit(&mut self, e: SchedEntry, ctx: &SchedCtx) -> Admit;
+
+    /// Batch-formation decision for an idle worker.
+    fn plan(&mut self, ctx: &SchedCtx) -> Plan;
+
+    /// Queued entry count.
+    fn len(&self) -> usize;
+
+    /// True when nothing is queued.
+    fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Remove and return every queued id (shutdown path); the caller
+    /// replies `Rejected(Shutdown)` to each.
+    fn drain(&mut self) -> Vec<u64>;
+}
+
+/// Per-lane FIFO queues + the admission control shared by every policy.
+struct LaneQueue {
+    cfg: SchedConfig,
+    lanes: Vec<VecDeque<SchedEntry>>,
+    len: usize,
+}
+
+impl LaneQueue {
+    fn new(cfg: SchedConfig) -> LaneQueue {
+        assert!(cfg.lanes >= 1, "need at least one priority lane");
+        LaneQueue { lanes: (0..cfg.lanes).map(|_| VecDeque::new()).collect(), len: 0, cfg }
+    }
+
+    /// Shared admission control: bounded occupancy, SLO feasibility,
+    /// lowest-priority-first eviction.
+    fn admit(&mut self, mut e: SchedEntry, ctx: &SchedCtx) -> Admit {
+        e.lane = e.lane.min(self.cfg.lanes - 1);
+        // Reject-on-admission: requests are served in lane order, so only
+        // occupancy at the same or more urgent lanes delays this one.
+        if let Some(deadline) = e.deadline {
+            let ahead: usize = self.lanes[..=e.lane].iter().map(|q| q.len()).sum();
+            if ctx.now + ctx.queue_delay(ahead) > deadline {
+                return Admit::Shed(ShedReason::DeadlineUnmeetable);
+            }
+        }
+        if self.len >= self.cfg.queue_cap {
+            // Shed lowest priority first: displace the *youngest* entry of
+            // the least urgent non-empty lane strictly below the arrival.
+            let victim_lane = (e.lane + 1..self.cfg.lanes).rev().find(|&l| !self.lanes[l].is_empty());
+            match victim_lane {
+                Some(l) => {
+                    let victim = self.lanes[l].pop_back().expect("non-empty victim lane");
+                    self.lanes[e.lane].push_back(e);
+                    Admit::Evict { victim: victim.id }
+                }
+                None => Admit::Shed(ShedReason::QueueFull),
+            }
+        } else {
+            self.len += 1;
+            self.lanes[e.lane].push_back(e);
+            Admit::Queued
+        }
+    }
+
+    /// Pop up to `max_batch` runnable ids (lane order, FIFO within a
+    /// lane), separating entries whose deadline already passed.
+    fn take_batch(&mut self, now: Instant) -> (Vec<u64>, Vec<u64>) {
+        let mut batch = Vec::new();
+        let mut expired = Vec::new();
+        for lane in &mut self.lanes {
+            while batch.len() < self.cfg.max_batch {
+                match lane.pop_front() {
+                    None => break,
+                    Some(e) => {
+                        self.len -= 1;
+                        match e.deadline {
+                            Some(d) if d < now => expired.push(e.id),
+                            _ => batch.push(e.id),
+                        }
+                    }
+                }
+            }
+            if batch.len() >= self.cfg.max_batch {
+                break;
+            }
+        }
+        (batch, expired)
+    }
+
+    /// Arrival time of the oldest queued entry (drives the flush timer).
+    fn oldest_arrival(&self) -> Option<Instant> {
+        self.lanes.iter().filter_map(|q| q.front()).map(|e| e.arrived).min()
+    }
+
+    fn drain(&mut self) -> Vec<u64> {
+        let mut out = Vec::with_capacity(self.len);
+        for lane in &mut self.lanes {
+            out.extend(lane.drain(..).map(|e| e.id));
+        }
+        self.len = 0;
+        out
+    }
+}
+
+/// Flush-and-wait: hold a batch open until `min(max_batch, queue_cap)`
+/// requests are queued or `max_wait_us` has passed since the oldest
+/// arrival, then flush (the PR-3 state machine, now behind the trait).
+pub struct FlushScheduler {
+    q: LaneQueue,
+}
+
+impl FlushScheduler {
+    /// Build with the given tuning.
+    pub fn new(cfg: SchedConfig) -> FlushScheduler {
+        FlushScheduler { q: LaneQueue::new(cfg) }
+    }
+}
+
+impl Scheduler for FlushScheduler {
+    fn name(&self) -> &'static str {
+        "flush"
+    }
+
+    fn admit(&mut self, e: SchedEntry, ctx: &SchedCtx) -> Admit {
+        self.q.admit(e, ctx)
+    }
+
+    fn plan(&mut self, ctx: &SchedCtx) -> Plan {
+        if self.q.len == 0 {
+            return Plan::Wait(None);
+        }
+        // queue_cap clamps the fill target: a queue that can never reach
+        // max_batch must flush when full, not wait out the deadline while
+        // submitters sit blocked on backpressure.
+        let fill_target = self.q.cfg.max_batch.min(self.q.cfg.queue_cap);
+        let hold_until = self.q.oldest_arrival().expect("non-empty queue")
+            + Duration::from_micros(self.q.cfg.max_wait_us);
+        if self.q.len >= fill_target || ctx.now >= hold_until {
+            let (batch, expired) = self.q.take_batch(ctx.now);
+            Plan::Dispatch { batch, expired }
+        } else {
+            Plan::Wait(Some(hold_until))
+        }
+    }
+
+    fn len(&self) -> usize {
+        self.q.len
+    }
+
+    fn drain(&mut self) -> Vec<u64> {
+        self.q.drain()
+    }
+}
+
+/// Continuous batching: a free worker always dispatches immediately;
+/// batch size is whatever queue occupancy provides (≤ `max_batch`).
+pub struct ContinuousScheduler {
+    q: LaneQueue,
+}
+
+impl ContinuousScheduler {
+    /// Build with the given tuning (`max_wait_us` is ignored).
+    pub fn new(cfg: SchedConfig) -> ContinuousScheduler {
+        ContinuousScheduler { q: LaneQueue::new(cfg) }
+    }
+}
+
+impl Scheduler for ContinuousScheduler {
+    fn name(&self) -> &'static str {
+        "continuous"
+    }
+
+    fn admit(&mut self, e: SchedEntry, ctx: &SchedCtx) -> Admit {
+        self.q.admit(e, ctx)
+    }
+
+    fn plan(&mut self, ctx: &SchedCtx) -> Plan {
+        if self.q.len == 0 {
+            return Plan::Wait(None);
+        }
+        let (batch, expired) = self.q.take_batch(ctx.now);
+        Plan::Dispatch { batch, expired }
+    }
+
+    fn len(&self) -> usize {
+        self.q.len
+    }
+
+    fn drain(&mut self) -> Vec<u64> {
+        self.q.drain()
+    }
+}

@@ -1,0 +1,614 @@
+//! The serving tier's data plane (DESIGN.md §Serving-Tier).
+//!
+//! [`InferenceServer`] owns the threads, locks, payloads and response
+//! channels; the batching *policy* lives behind the
+//! [`Scheduler`](super::scheduler::Scheduler) trait and the model
+//! lookup behind [`ModelRegistry`](super::registry::ModelRegistry).
+//! Request flow:
+//!
+//! 1. **Admission** (`submit` / `try_submit` / `submit_opts`): resolve
+//!    the target model's *active* version in the registry and pin its
+//!    `Arc` into the job (warm-swap pinning: a publish after this point
+//!    does not retarget the request), validate the input width, then ask
+//!    the scheduler to admit `(id, lane, deadline)`. The scheduler may
+//!    queue it, shed it (bounded queue / infeasible deadline — the
+//!    caller gets an immediate error), or admit it by evicting a
+//!    lower-priority queued request (the victim's [`Pending`] resolves
+//!    to an explicit rejection).
+//! 2. **Dispatch**: an idle worker asks the scheduler to `plan`; the
+//!    policy either hands it a batch of ids (flush-and-wait holds
+//!    partial batches open, continuous batching never does) or a
+//!    deadline to sleep until. Dispatched ids whose deadline already
+//!    passed are answered `Rejected(DeadlineExpired)` without running.
+//! 3. **Forward**: the batch is grouped by pinned model handle (a warm
+//!    swap may split one batch into per-version sub-batches — versions
+//!    are never mixed in one tensor), each group is stacked and run
+//!    under `catch_unwind`: a panicking forward turns into explicit
+//!    `Rejected(WorkerPanic)` replies instead of hung clients and a
+//!    poisoned queue, and the worker keeps serving.
+//! 4. **Shutdown**: in-flight batches drain and answer normally; ids
+//!    still queued are answered `Rejected(Shutdown)`.
+//!
+//! Accounting invariant (checked by tests and the SLO bench): every
+//! admitted request is answered exactly once, so after shutdown
+//! `accepted == served + shed` and `submitted == accepted +
+//! shed_admission`.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc;
+use std::sync::{Arc, Condvar, Mutex, MutexGuard};
+use std::thread;
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, bail, Result};
+
+use super::frozen::FrozenModel;
+use super::registry::{ModelRegistry, ServeModel};
+use super::scheduler::{Admit, Plan, SchedConfig, SchedCtx, SchedEntry, SchedPolicy, Scheduler, ShedReason};
+use crate::kernels::Engine;
+use crate::tensor::Tensor;
+
+/// Lock the queue, shrugging off poisoning: every mutation under this
+/// lock is a single scheduler/map operation, so the state stays coherent
+/// if a worker panics while holding it — the remaining workers and
+/// submitters keep serving instead of cascading the panic through every
+/// `lock().unwrap()` in the server.
+fn lock_queue(m: &Mutex<QueueState>) -> MutexGuard<'_, QueueState> {
+    m.lock().unwrap_or_else(|poisoned| poisoned.into_inner())
+}
+
+/// Server tuning knobs.
+#[derive(Clone, Copy, Debug)]
+pub struct ServeConfig {
+    /// Flush a batch as soon as this many requests are queued.
+    pub max_batch: usize,
+    /// Flush-and-wait hold time: flush a partial batch this many
+    /// microseconds after its oldest request arrived (ignored by
+    /// continuous batching, which never holds a batch open).
+    pub max_wait_us: u64,
+    /// Bounded queue capacity; `submit` blocks (and the non-blocking
+    /// paths shed) when the queue holds this many un-dispatched
+    /// requests. A `queue_cap` smaller than `max_batch` also caps the
+    /// flush fill target at `min(max_batch, queue_cap)`.
+    pub queue_cap: usize,
+    /// Worker thread count (each forms and runs batches independently).
+    pub workers: usize,
+    /// Batching policy (see [`SchedPolicy`]).
+    pub policy: SchedPolicy,
+    /// Priority lane count; lane 0 is most urgent. [`SubmitOpts`]
+    /// defaults to lane 1 ("normal" of the default three).
+    pub lanes: usize,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        ServeConfig {
+            max_batch: 16,
+            max_wait_us: 200,
+            queue_cap: 256,
+            workers: 2,
+            policy: SchedPolicy::Flush,
+            lanes: 3,
+        }
+    }
+}
+
+impl ServeConfig {
+    fn sched_config(&self) -> SchedConfig {
+        SchedConfig {
+            max_batch: self.max_batch,
+            queue_cap: self.queue_cap,
+            lanes: self.lanes,
+            max_wait_us: self.max_wait_us,
+        }
+    }
+}
+
+/// Per-request submission options (see [`InferenceServer::submit_opts`]).
+#[derive(Clone, Debug)]
+pub struct SubmitOpts {
+    /// Priority lane, 0 = most urgent (clamped to `cfg.lanes - 1`).
+    pub lane: usize,
+    /// Relative completion deadline; enables reject-on-admission and
+    /// dispatch-time expiry shedding.
+    pub deadline_us: Option<u64>,
+    /// Registry model name; `None` serves the server's default model.
+    pub model: Option<String>,
+}
+
+impl Default for SubmitOpts {
+    fn default() -> Self {
+        SubmitOpts { lane: 1, deadline_us: None, model: None }
+    }
+}
+
+/// Counters accumulated over the server's lifetime.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct ServerStats {
+    /// Requests admitted to the queue.
+    pub accepted: u64,
+    /// Requests answered with logits.
+    pub served: u64,
+    /// Batches flushed (per-model sub-batches count individually).
+    pub batches: u64,
+    /// Admitted requests later answered with an explicit rejection
+    /// (evicted, deadline expired, shutdown, worker panic).
+    pub shed: u64,
+    /// Requests refused synchronously at admission (queue full with no
+    /// victim, or deadline unmeetable) — these never entered the queue.
+    pub shed_admission: u64,
+}
+
+impl ServerStats {
+    /// Mean flushed batch size (0 when nothing was served).
+    pub fn mean_batch(&self) -> f64 {
+        if self.batches == 0 {
+            0.0
+        } else {
+            self.served as f64 / self.batches as f64
+        }
+    }
+
+    /// Total requests that reached admission (accepted or refused).
+    pub fn submitted(&self) -> u64 {
+        self.accepted + self.shed_admission
+    }
+
+    /// The answered-exactly-once invariant: after shutdown every
+    /// accepted request was either served or explicitly shed.
+    pub fn accounted(&self) -> bool {
+        self.accepted == self.served + self.shed
+    }
+}
+
+/// One reply on a request's private channel, stamped with the instant
+/// the worker produced it (so open-loop load generators measure latency
+/// at completion time, not at `wait()` time).
+pub(crate) enum Reply {
+    /// Logits for the request's own input row.
+    Logits(Vec<f32>, Instant),
+    /// Explicit rejection — the request was shed, never silently dropped.
+    Shed(ShedReason, Instant),
+}
+
+/// How one admitted request ended (see [`Pending::outcome`]).
+#[derive(Clone, Debug)]
+pub enum ServeOutcome {
+    /// The request's logits.
+    Logits(Vec<f32>),
+    /// The request was shed for this reason.
+    Shed(ShedReason),
+}
+
+struct Job {
+    input: Vec<f32>,
+    tx: mpsc::Sender<Reply>,
+    model: Arc<dyn ServeModel>,
+}
+
+impl Job {
+    /// Send a reply, stamping it now. A receiver that gave up (dropped
+    /// its `Pending`) is not an error.
+    fn reply(&self, r: Result<Vec<f32>, ShedReason>) {
+        let at = Instant::now();
+        let _ = self.tx.send(match r {
+            Ok(logits) => Reply::Logits(logits, at),
+            Err(reason) => Reply::Shed(reason, at),
+        });
+    }
+}
+
+struct QueueState {
+    sched: Box<dyn Scheduler>,
+    jobs: HashMap<u64, Job>,
+    next_id: u64,
+    closed: bool,
+}
+
+struct Shared {
+    registry: Arc<ModelRegistry>,
+    default_model: String,
+    cfg: ServeConfig,
+    state: Mutex<QueueState>,
+    not_empty: Condvar,
+    space: Condvar,
+    accepted: AtomicU64,
+    served: AtomicU64,
+    batches: AtomicU64,
+    shed: AtomicU64,
+    shed_admission: AtomicU64,
+    /// EWMA of seconds-per-request over finished batches (f64 bits);
+    /// 0 until the first batch lands. Drives deadline feasibility.
+    ewma_req_secs: AtomicU64,
+}
+
+impl Shared {
+    fn ctx(&self, now: Instant) -> SchedCtx {
+        SchedCtx {
+            now,
+            est_req_secs: f64::from_bits(self.ewma_req_secs.load(Ordering::Relaxed)),
+            workers: self.cfg.workers,
+        }
+    }
+
+    fn note_batch(&self, n: usize, secs: f64) {
+        self.batches.fetch_add(1, Ordering::Relaxed);
+        self.served.fetch_add(n as u64, Ordering::Relaxed);
+        let x = secs / n.max(1) as f64;
+        let old = f64::from_bits(self.ewma_req_secs.load(Ordering::Relaxed));
+        let new = if old == 0.0 { x } else { 0.8 * old + 0.2 * x };
+        self.ewma_req_secs.store(new.to_bits(), Ordering::Relaxed);
+    }
+}
+
+/// Handle to one in-flight request; resolve it with
+/// [`wait`](Pending::wait) or [`outcome`](Pending::outcome).
+pub struct Pending {
+    rx: mpsc::Receiver<Reply>,
+}
+
+impl Pending {
+    pub(crate) fn recv(self) -> Result<Reply> {
+        self.rx
+            .recv()
+            .map_err(|_| anyhow!("inference server dropped the request without answering"))
+    }
+
+    /// Block until the logits for this request arrive. Errors if the
+    /// request was shed (the message names the [`ShedReason`]) or the
+    /// server dropped it without answering.
+    pub fn wait(self) -> Result<Vec<f32>> {
+        match self.recv()? {
+            Reply::Logits(logits, _) => Ok(logits),
+            Reply::Shed(reason, _) => Err(anyhow!("request shed ({})", reason.label())),
+        }
+    }
+
+    /// Block until the request resolves, distinguishing logits from an
+    /// explicit shed (useful when shedding is an expected outcome).
+    pub fn outcome(self) -> Result<ServeOutcome> {
+        Ok(match self.recv()? {
+            Reply::Logits(logits, _) => ServeOutcome::Logits(logits),
+            Reply::Shed(reason, _) => ServeOutcome::Shed(reason),
+        })
+    }
+}
+
+/// A running inference server: model registry, bounded multi-lane
+/// queue behind a pluggable [`Scheduler`], `workers` forward threads.
+/// See the module docs for the request lifecycle.
+pub struct InferenceServer {
+    shared: Arc<Shared>,
+    workers: Vec<thread::JoinHandle<()>>,
+}
+
+impl InferenceServer {
+    /// Single-model convenience: registers `model` as version 1 of a
+    /// fresh registry under its own label and serves it. `engine` is the
+    /// kernel-engine handle every worker uses for its GEMMs — pass
+    /// [`crate::kernels::global_arc`] to share the process pool, or a
+    /// dedicated `Engine` to isolate serving from training traffic.
+    pub fn start(model: Arc<FrozenModel>, engine: Arc<Engine>, cfg: ServeConfig) -> InferenceServer {
+        let name = model.label().to_string();
+        let registry = Arc::new(ModelRegistry::new());
+        registry
+            .publish(&name, 1, model as Arc<dyn ServeModel>)
+            .expect("publish into a fresh registry");
+        Self::start_registry(registry, name, engine, cfg)
+            .expect("default model was just published")
+    }
+
+    /// Serve a [`ModelRegistry`]: requests name a model via
+    /// [`SubmitOpts::model`] (default `default_model`) and are pinned to
+    /// its active version at admission. Publishing to the registry while
+    /// the server runs is the warm-swap path. Errors if `default_model`
+    /// does not resolve.
+    pub fn start_registry(
+        registry: Arc<ModelRegistry>,
+        default_model: impl Into<String>,
+        engine: Arc<Engine>,
+        cfg: ServeConfig,
+    ) -> Result<InferenceServer> {
+        assert!(cfg.workers >= 1, "need at least one worker");
+        assert!(cfg.max_batch >= 1, "max_batch must be ≥ 1");
+        assert!(cfg.queue_cap >= 1, "queue_cap must be ≥ 1");
+        assert!(cfg.lanes >= 1, "need at least one priority lane");
+        let default_model = default_model.into();
+        if registry.resolve(&default_model).is_none() {
+            bail!("default model {default_model:?} is not in the registry");
+        }
+        let shared = Arc::new(Shared {
+            registry,
+            default_model,
+            cfg,
+            state: Mutex::new(QueueState {
+                sched: cfg.policy.build(cfg.sched_config()),
+                jobs: HashMap::new(),
+                next_id: 0,
+                closed: false,
+            }),
+            not_empty: Condvar::new(),
+            space: Condvar::new(),
+            accepted: AtomicU64::new(0),
+            served: AtomicU64::new(0),
+            batches: AtomicU64::new(0),
+            shed: AtomicU64::new(0),
+            shed_admission: AtomicU64::new(0),
+            ewma_req_secs: AtomicU64::new(0),
+        });
+        let workers = (0..cfg.workers)
+            .map(|i| {
+                let sh = Arc::clone(&shared);
+                let eng = Arc::clone(&engine);
+                thread::Builder::new()
+                    .name(format!("apt-serve-{i}"))
+                    .spawn(move || worker_loop(sh, eng))
+                    .expect("spawn serve worker thread")
+            })
+            .collect();
+        Ok(InferenceServer { shared, workers })
+    }
+
+    /// The registry this server routes through.
+    pub fn registry(&self) -> &Arc<ModelRegistry> {
+        &self.shared.registry
+    }
+
+    /// Name requests resolve to when [`SubmitOpts::model`] is `None`.
+    pub fn default_model(&self) -> &str {
+        &self.shared.default_model
+    }
+
+    /// Input width of the default model's active version.
+    pub fn input_len(&self) -> usize {
+        self.shared
+            .registry
+            .resolve(&self.shared.default_model)
+            .map(|(_, m)| m.input_len())
+            .unwrap_or(0)
+    }
+
+    /// Enqueue one flattened sample for the default model at normal
+    /// priority with no deadline, blocking while the queue is full
+    /// (backpressure). Errors if the input width is wrong or the server
+    /// is shut down.
+    pub fn submit(&self, input: Vec<f32>) -> Result<Pending> {
+        self.enqueue(input, SubmitOpts::default(), true)
+    }
+
+    /// Non-blocking [`submit`](Self::submit): errors immediately when
+    /// the queue is full instead of waiting for space.
+    pub fn try_submit(&self, input: Vec<f32>) -> Result<Pending> {
+        self.enqueue(input, SubmitOpts::default(), false)
+    }
+
+    /// Full-control submission: priority lane, deadline, target model.
+    /// Never blocks — admission control decides immediately: queued,
+    /// queued-by-evicting-a-lower-priority-request, or refused with an
+    /// error naming the [`ShedReason`].
+    pub fn submit_opts(&self, input: Vec<f32>, opts: SubmitOpts) -> Result<Pending> {
+        self.enqueue(input, opts, false)
+    }
+
+    fn enqueue(&self, input: Vec<f32>, opts: SubmitOpts, block: bool) -> Result<Pending> {
+        let name = opts.model.as_deref().unwrap_or(&self.shared.default_model);
+        let (_version, model) = self
+            .shared
+            .registry
+            .resolve(name)
+            .ok_or_else(|| anyhow!("unknown model {name:?}"))?;
+        let want = model.input_len();
+        if input.len() != want {
+            bail!("input has {} values, model {name:?} expects {want}", input.len());
+        }
+        let (tx, rx) = mpsc::channel();
+        let now = Instant::now();
+        let deadline = opts.deadline_us.map(|us| now + Duration::from_micros(us));
+        let victim = {
+            let mut st = lock_queue(&self.shared.state);
+            if block {
+                while st.sched.len() >= self.shared.cfg.queue_cap && !st.closed {
+                    st = self
+                        .shared
+                        .space
+                        .wait(st)
+                        .unwrap_or_else(|poisoned| poisoned.into_inner());
+                }
+            }
+            if st.closed {
+                bail!("inference server is shut down");
+            }
+            let id = st.next_id;
+            st.next_id += 1;
+            let entry = SchedEntry { id, lane: opts.lane, deadline, arrived: Instant::now() };
+            let ctx = self.shared.ctx(entry.arrived);
+            match st.sched.admit(entry, &ctx) {
+                Admit::Queued => {
+                    st.jobs.insert(id, Job { input, tx, model });
+                    None
+                }
+                Admit::Evict { victim } => {
+                    st.jobs.insert(id, Job { input, tx, model });
+                    st.jobs.remove(&victim)
+                }
+                Admit::Shed(reason) => {
+                    self.shared.shed_admission.fetch_add(1, Ordering::Relaxed);
+                    match reason {
+                        ShedReason::QueueFull => bail!(
+                            "request shed ({}): queue is full ({} pending)",
+                            reason.label(),
+                            st.sched.len()
+                        ),
+                        _ => bail!("request shed ({})", reason.label()),
+                    }
+                }
+            }
+        };
+        if let Some(v) = victim {
+            v.reply(Err(ShedReason::Evicted));
+            self.shared.shed.fetch_add(1, Ordering::Relaxed);
+        }
+        self.shared.accepted.fetch_add(1, Ordering::Relaxed);
+        self.shared.not_empty.notify_one();
+        Ok(Pending { rx })
+    }
+
+    /// Current lifetime counters.
+    pub fn stats(&self) -> ServerStats {
+        ServerStats {
+            accepted: self.shared.accepted.load(Ordering::Relaxed),
+            served: self.shared.served.load(Ordering::Relaxed),
+            batches: self.shared.batches.load(Ordering::Relaxed),
+            shed: self.shared.shed.load(Ordering::Relaxed),
+            shed_admission: self.shared.shed_admission.load(Ordering::Relaxed),
+        }
+    }
+
+    /// Stop accepting requests, let in-flight batches drain and answer,
+    /// reject everything still queued (`Rejected(Shutdown)` — SLO
+    /// semantics: at shutdown a queued request is better told "no" at
+    /// once than served late), join the workers, and return the final
+    /// counters. Every accepted request is answered exactly once.
+    pub fn shutdown(mut self) -> ServerStats {
+        self.close_and_join();
+        self.stats()
+    }
+
+    fn close_and_join(&mut self) {
+        {
+            let mut st = lock_queue(&self.shared.state);
+            st.closed = true;
+        }
+        self.shared.not_empty.notify_all();
+        self.shared.space.notify_all();
+        for h in std::mem::take(&mut self.workers) {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for InferenceServer {
+    fn drop(&mut self) {
+        self.close_and_join();
+    }
+}
+
+/// Pop the jobs for `ids` out of the payload map. Ids whose job vanished
+/// (evicted concurrently — cannot happen today, but cheap to tolerate)
+/// are skipped.
+fn take_jobs(st: &mut QueueState, ids: Vec<u64>) -> Vec<Job> {
+    ids.into_iter().filter_map(|id| st.jobs.remove(&id)).collect()
+}
+
+fn worker_loop(shared: Arc<Shared>, eng: Arc<Engine>) {
+    loop {
+        // Decide under the lock; compute outside it.
+        let (batch, expired, closing) = {
+            let mut st = lock_queue(&shared.state);
+            loop {
+                if st.closed {
+                    // Shutdown: reject everything still queued (the first
+                    // worker in drains it; later workers see empty).
+                    let ids = st.sched.drain();
+                    let jobs = take_jobs(&mut st, ids);
+                    break (Vec::new(), jobs, true);
+                }
+                let ctx = shared.ctx(Instant::now());
+                match st.sched.plan(&ctx) {
+                    Plan::Dispatch { batch, expired } => {
+                        let b = take_jobs(&mut st, batch);
+                        let e = take_jobs(&mut st, expired);
+                        break (b, e, false);
+                    }
+                    Plan::Wait(None) => {
+                        st = shared
+                            .not_empty
+                            .wait(st)
+                            .unwrap_or_else(|poisoned| poisoned.into_inner());
+                    }
+                    Plan::Wait(Some(hold_until)) => {
+                        let now = Instant::now();
+                        if hold_until <= now {
+                            continue; // hold elapsed while planning; replan
+                        }
+                        let (g, _timeout) = shared
+                            .not_empty
+                            .wait_timeout(st, hold_until - now)
+                            .unwrap_or_else(|poisoned| poisoned.into_inner());
+                        st = g;
+                    }
+                }
+            }
+        };
+        shared.space.notify_all();
+        let reason = if closing { ShedReason::Shutdown } else { ShedReason::DeadlineExpired };
+        for job in &expired {
+            job.reply(Err(reason));
+        }
+        shared.shed.fetch_add(expired.len() as u64, Ordering::Relaxed);
+        if closing {
+            return;
+        }
+        if batch.is_empty() {
+            continue;
+        }
+        // More work may be queued than this batch took; hand it to
+        // another idle worker instead of letting it wait for the next
+        // arrival notification.
+        {
+            let st = lock_queue(&shared.state);
+            if st.sched.len() > 0 {
+                shared.not_empty.notify_one();
+            }
+        }
+        // A warm swap between admissions pins different versions into one
+        // dispatch: group by model handle so versions never share a
+        // tensor, then run each group.
+        let mut groups: Vec<(Arc<dyn ServeModel>, Vec<Job>)> = Vec::new();
+        for job in batch {
+            match groups.iter_mut().find(|(m, _)| Arc::ptr_eq(m, &job.model)) {
+                Some((_, v)) => v.push(job),
+                None => {
+                    let m = Arc::clone(&job.model);
+                    groups.push((m, vec![job]));
+                }
+            }
+        }
+        for (model, jobs) in groups {
+            run_group(&shared, &eng, model, jobs);
+        }
+    }
+}
+
+/// Stack one model's jobs into a `[n, d]` tensor, forward under
+/// `catch_unwind`, and answer each job over its private channel — logits
+/// on success, `Rejected(WorkerPanic)` if the forward panicked (an
+/// admitted request is answered even when the model blows up mid-batch).
+fn run_group(shared: &Shared, eng: &Engine, model: Arc<dyn ServeModel>, jobs: Vec<Job>) {
+    let n = jobs.len();
+    let d = model.input_len();
+    let mut x = Tensor::zeros(&[n, d]);
+    for (i, job) in jobs.iter().enumerate() {
+        x.data[i * d..(i + 1) * d].copy_from_slice(&job.input);
+    }
+    let t0 = Instant::now();
+    let forwarded = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+        model.forward(&x, eng)
+    }));
+    match forwarded {
+        Ok(y) => {
+            let out_d = y.dim(1);
+            shared.note_batch(n, t0.elapsed().as_secs_f64());
+            for (i, job) in jobs.into_iter().enumerate() {
+                job.reply(Ok(y.data[i * out_d..(i + 1) * out_d].to_vec()));
+            }
+        }
+        Err(_) => {
+            shared.shed.fetch_add(n as u64, Ordering::Relaxed);
+            for job in jobs.into_iter() {
+                job.reply(Err(ShedReason::WorkerPanic));
+            }
+        }
+    }
+}

@@ -1,0 +1,482 @@
+//! Scheduler conformance suite (DESIGN.md §Serving-Tier): every
+//! [`Scheduler`] implementation runs one shared property battery over
+//! random arrival/advance/dispatch/deadline sequences (mirroring
+//! `test_qpa_props.rs`'s use of the in-tree proptest harness):
+//!
+//! 1. **No request lost or duplicated** — every admitted id resolves to
+//!    exactly one of dispatched / expired / evicted / drained.
+//! 2. **Batch size ≤ `max_batch`** on every dispatch.
+//! 3. **FIFO within a priority lane** — dispatch order preserves
+//!    admission order lane-by-lane.
+//! 4. **Shedding is explicit** — refusals happen only under declared
+//!    conditions (full queue, infeasible deadline) with a reason; the
+//!    queue is bounded by `queue_cap` at all times.
+//!
+//! Plus policy-specific behaviour pins (flush hold timer, continuous
+//! work-conservation, priority eviction) and the loadgen determinism
+//! contract: same seed ⇒ byte-identical arrival trace ⇒ identical
+//! virtual-time `serve_slo.csv` row on 1 worker.
+
+use std::collections::{HashMap, HashSet};
+use std::time::{Duration, Instant};
+
+use apt::bench::loadgen::{self, SimCost, Trace};
+use apt::serve::{
+    Admit, Plan, SchedConfig, SchedCtx, SchedEntry, SchedPolicy, Scheduler, ShedReason,
+};
+use apt::util::proptest::{check, Gen};
+
+const POLICIES: [SchedPolicy; 2] = [SchedPolicy::Flush, SchedPolicy::Continuous];
+
+/// Drives one scheduler through a synthetic event sequence with a
+/// virtual clock, recording the fate of every admitted id.
+struct Harness {
+    base: Instant,
+    cfg: SchedConfig,
+    sched: Box<dyn Scheduler>,
+    now_us: u64,
+    next_id: u64,
+    est_req_secs: f64,
+    workers: usize,
+    /// ids currently queued (mirror of the scheduler's claimed content).
+    queued: HashSet<u64>,
+    lane_of: HashMap<u64, usize>,
+    /// flattened dispatch order across all batches.
+    dispatched: Vec<u64>,
+    expired: Vec<u64>,
+    evicted: Vec<u64>,
+    refused: Vec<(u64, ShedReason)>,
+    max_batch_seen: usize,
+}
+
+impl Harness {
+    fn new(policy: SchedPolicy, cfg: SchedConfig, est_req_secs: f64) -> Harness {
+        Harness {
+            base: Instant::now(),
+            cfg,
+            sched: policy.build(cfg),
+            now_us: 0,
+            next_id: 0,
+            est_req_secs,
+            workers: 1,
+            queued: HashSet::new(),
+            lane_of: HashMap::new(),
+            dispatched: Vec::new(),
+            expired: Vec::new(),
+            evicted: Vec::new(),
+            refused: Vec::new(),
+            max_batch_seen: 0,
+        }
+    }
+
+    fn at(&self, us: u64) -> Instant {
+        self.base + Duration::from_micros(us)
+    }
+
+    fn ctx(&self) -> SchedCtx {
+        SchedCtx { now: self.at(self.now_us), est_req_secs: self.est_req_secs, workers: self.workers }
+    }
+
+    fn arrive(&mut self, lane: usize, deadline_us: Option<u64>) -> Admit {
+        let id = self.next_id;
+        self.next_id += 1;
+        let len_before = self.sched.len();
+        let e = SchedEntry {
+            id,
+            lane,
+            deadline: deadline_us.map(|d| self.at(self.now_us + d)),
+            arrived: self.at(self.now_us),
+        };
+        let outcome = self.sched.admit(e, &self.ctx());
+        match outcome {
+            Admit::Queued => {
+                assert!(
+                    len_before < self.cfg.queue_cap,
+                    "admitted past queue_cap ({} queued)",
+                    len_before
+                );
+                self.queued.insert(id);
+                self.lane_of.insert(id, lane.min(self.cfg.lanes - 1));
+            }
+            Admit::Evict { victim } => {
+                assert!(len_before >= self.cfg.queue_cap, "evicted below capacity");
+                assert!(self.queued.remove(&victim), "evicted id {victim} was not queued");
+                let (vl, nl) = (self.lane_of[&victim], lane.min(self.cfg.lanes - 1));
+                assert!(vl > nl, "evicted lane {vl} is not lower priority than arrival lane {nl}");
+                self.evicted.push(victim);
+                self.queued.insert(id);
+                self.lane_of.insert(id, nl);
+            }
+            Admit::Shed(reason) => {
+                match reason {
+                    ShedReason::QueueFull => assert!(
+                        len_before >= self.cfg.queue_cap,
+                        "QueueFull shed with only {len_before} queued"
+                    ),
+                    ShedReason::DeadlineUnmeetable => assert!(
+                        deadline_us.is_some(),
+                        "DeadlineUnmeetable shed for a request with no deadline"
+                    ),
+                    other => panic!("admission shed with non-admission reason {other:?}"),
+                }
+                self.refused.push((id, reason));
+            }
+        }
+        assert_eq!(self.sched.len(), self.queued.len(), "scheduler len drifted from mirror");
+        outcome
+    }
+
+    /// One idle worker asks for work.
+    fn plan(&mut self) -> Plan {
+        let plan = self.sched.plan(&self.ctx());
+        match &plan {
+            Plan::Dispatch { batch, expired } => {
+                assert!(
+                    batch.len() <= self.cfg.max_batch,
+                    "batch of {} exceeds max_batch {}",
+                    batch.len(),
+                    self.cfg.max_batch
+                );
+                self.max_batch_seen = self.max_batch_seen.max(batch.len());
+                for id in batch {
+                    assert!(self.queued.remove(id), "dispatched id {id} was not queued");
+                    self.dispatched.push(*id);
+                }
+                for id in expired {
+                    assert!(self.queued.remove(id), "expired id {id} was not queued");
+                    self.expired.push(*id);
+                }
+            }
+            Plan::Wait(hold) => {
+                if self.sched.is_empty() {
+                    assert_eq!(*hold, None, "empty queue must wait for an arrival, not a timer");
+                }
+            }
+        }
+        assert_eq!(self.sched.len(), self.queued.len(), "scheduler len drifted from mirror");
+        plan
+    }
+
+    fn advance(&mut self, us: u64) {
+        self.now_us += us;
+    }
+
+    /// Shutdown: everything still queued must come back exactly once.
+    fn drain_and_verify(mut self) {
+        let drained = self.sched.drain();
+        assert_eq!(self.sched.len(), 0);
+        let drained_set: HashSet<u64> = drained.iter().copied().collect();
+        assert_eq!(drained.len(), drained_set.len(), "drain returned duplicates");
+        assert_eq!(drained_set, self.queued, "drain lost or invented ids");
+
+        // Global conservation: every admitted id has exactly one fate.
+        let mut fates: HashMap<u64, usize> = HashMap::new();
+        for id in self
+            .dispatched
+            .iter()
+            .chain(self.expired.iter())
+            .chain(self.evicted.iter())
+            .chain(drained.iter())
+        {
+            *fates.entry(*id).or_insert(0) += 1;
+        }
+        for (id, n) in &fates {
+            assert_eq!(*n, 1, "id {id} resolved {n} times");
+        }
+        let admitted = self.next_id as usize - self.refused.len();
+        assert_eq!(fates.len(), admitted, "some admitted id was lost");
+
+        // FIFO within each priority lane over the dispatch sequence.
+        let mut last_in_lane: HashMap<usize, u64> = HashMap::new();
+        for id in &self.dispatched {
+            let lane = self.lane_of[id];
+            if let Some(prev) = last_in_lane.insert(lane, *id) {
+                assert!(
+                    prev < *id,
+                    "lane {lane} dispatched id {id} after younger id {prev} (FIFO violated)"
+                );
+            }
+        }
+    }
+}
+
+fn small_cfg(g: &mut Gen) -> SchedConfig {
+    SchedConfig {
+        max_batch: g.usize(1, 8),
+        queue_cap: g.usize(1, 12),
+        lanes: g.usize(1, 4),
+        max_wait_us: g.usize(0, 500) as u64,
+    }
+}
+
+#[test]
+fn prop_conformance_battery_all_policies() {
+    for policy in POLICIES {
+        check(&format!("conformance-{}", policy.label()), 150, |g| {
+            let cfg = small_cfg(g);
+            // Half the cases have a live service estimate so the
+            // deadline-feasibility shed path is exercised too.
+            let est = if g.int(0, 1) == 0 { 0.0 } else { g.f32_log(1e-6, 1e-3) as f64 };
+            let mut h = Harness::new(policy, cfg, est);
+            for _ in 0..g.usize(10, 120) {
+                match g.int(0, 9) {
+                    0..=4 => {
+                        let lane = g.usize(0, cfg.lanes + 1); // may exceed lanes-1: clamp path
+                        let deadline = if g.int(0, 2) == 0 {
+                            Some(g.usize(1, 5_000) as u64)
+                        } else {
+                            None
+                        };
+                        h.arrive(lane, deadline);
+                    }
+                    5..=6 => {
+                        h.advance(g.usize(1, 1_000) as u64);
+                    }
+                    _ => {
+                        let _ = h.plan();
+                    }
+                }
+            }
+            h.drain_and_verify();
+        });
+    }
+}
+
+#[test]
+fn prop_every_dispatch_respects_lane_order() {
+    // Within one batch, a lower lane (more urgent) id never follows a
+    // higher lane id — batches are formed lane 0 outward.
+    for policy in POLICIES {
+        check(&format!("lane-order-{}", policy.label()), 80, |g| {
+            let cfg = SchedConfig {
+                max_batch: g.usize(2, 8),
+                queue_cap: 16,
+                lanes: 3,
+                max_wait_us: 0, // flush dispatches on first plan
+            };
+            let mut h = Harness::new(policy, cfg, 0.0);
+            for _ in 0..g.usize(2, 12) {
+                h.arrive(g.usize(0, 2), None);
+            }
+            h.advance(1);
+            if let Plan::Dispatch { batch, .. } = h.plan() {
+                let lanes: Vec<usize> = batch.iter().map(|id| h.lane_of[id]).collect();
+                let mut sorted = lanes.clone();
+                sorted.sort_unstable();
+                assert_eq!(lanes, sorted, "batch not in lane-priority order: {lanes:?}");
+            } else {
+                panic!("non-empty queue with max_wait 0 must dispatch");
+            }
+            h.drain_and_verify();
+        });
+    }
+}
+
+#[test]
+fn flush_holds_partial_batch_until_deadline() {
+    let cfg = SchedConfig { max_batch: 8, queue_cap: 64, lanes: 1, max_wait_us: 1_000 };
+    let mut h = Harness::new(SchedPolicy::Flush, cfg, 0.0);
+    h.arrive(0, None);
+    h.arrive(0, None);
+    // Before the hold expires: a partial batch is held open.
+    match h.plan() {
+        Plan::Wait(Some(_)) => {}
+        other => panic!("flush should hold a 2/8 batch open, got {other:?}"),
+    }
+    // After the hold expires: the partial batch flushes.
+    h.advance(1_001);
+    match h.plan() {
+        Plan::Dispatch { batch, .. } => assert_eq!(batch.len(), 2),
+        other => panic!("flush should dispatch after max_wait, got {other:?}"),
+    }
+    h.drain_and_verify();
+}
+
+#[test]
+fn flush_dispatches_immediately_at_fill_target() {
+    let cfg = SchedConfig { max_batch: 4, queue_cap: 64, lanes: 1, max_wait_us: 1_000_000 };
+    let mut h = Harness::new(SchedPolicy::Flush, cfg, 0.0);
+    for _ in 0..4 {
+        h.arrive(0, None);
+    }
+    match h.plan() {
+        Plan::Dispatch { batch, .. } => assert_eq!(batch.len(), 4),
+        other => panic!("full batch must not wait out the hold timer, got {other:?}"),
+    }
+    h.drain_and_verify();
+}
+
+#[test]
+fn flush_fill_target_clamped_by_queue_cap() {
+    // queue_cap < max_batch: a full queue must flush, not hold.
+    let cfg = SchedConfig { max_batch: 8, queue_cap: 2, lanes: 1, max_wait_us: 1_000_000 };
+    let mut h = Harness::new(SchedPolicy::Flush, cfg, 0.0);
+    h.arrive(0, None);
+    h.arrive(0, None);
+    match h.plan() {
+        Plan::Dispatch { batch, .. } => assert_eq!(batch.len(), 2),
+        other => panic!("cap-limited queue must flush when full, got {other:?}"),
+    }
+    h.drain_and_verify();
+}
+
+#[test]
+fn continuous_never_holds_a_batch() {
+    let cfg = SchedConfig { max_batch: 8, queue_cap: 64, lanes: 1, max_wait_us: 1_000_000 };
+    let mut h = Harness::new(SchedPolicy::Continuous, cfg, 0.0);
+    h.arrive(0, None);
+    match h.plan() {
+        Plan::Dispatch { batch, .. } => assert_eq!(batch.len(), 1),
+        other => panic!("continuous batching must dispatch immediately, got {other:?}"),
+    }
+    h.drain_and_verify();
+}
+
+#[test]
+fn admission_evicts_lowest_priority_youngest_first() {
+    for policy in POLICIES {
+        let cfg = SchedConfig { max_batch: 4, queue_cap: 3, lanes: 3, max_wait_us: 0 };
+        let mut h = Harness::new(policy, cfg, 0.0);
+        h.arrive(2, None); // id 0, low priority, oldest
+        h.arrive(2, None); // id 1, low priority, youngest
+        h.arrive(0, None); // id 2, urgent
+        // Queue full. An urgent arrival displaces the *youngest* low-
+        // priority entry (id 1), keeping lane FIFO for the survivors.
+        match h.arrive(0, None) {
+            Admit::Evict { victim } => assert_eq!(victim, 1),
+            other => panic!("expected eviction, got {other:?}"),
+        }
+        // A low-priority arrival cannot displace anyone (no lane below it).
+        match h.arrive(2, None) {
+            Admit::Shed(ShedReason::QueueFull) => {}
+            other => panic!("expected QueueFull shed, got {other:?}"),
+        }
+        h.drain_and_verify();
+    }
+}
+
+#[test]
+fn infeasible_deadline_is_rejected_on_admission() {
+    for policy in POLICIES {
+        let cfg = SchedConfig { max_batch: 4, queue_cap: 64, lanes: 1, max_wait_us: 0 };
+        // 1 ms per request estimated, 10 requests queued ahead ⇒ ~10 ms
+        // predicted delay; a 2 ms deadline is unmeetable.
+        let mut h = Harness::new(policy, cfg, 1e-3);
+        for _ in 0..10 {
+            h.arrive(0, None);
+        }
+        match h.arrive(0, Some(2_000)) {
+            Admit::Shed(ShedReason::DeadlineUnmeetable) => {}
+            other => panic!("expected reject-on-admission, got {other:?}"),
+        }
+        // A generous deadline is admitted under the same backlog.
+        match h.arrive(0, Some(60_000_000)) {
+            Admit::Queued => {}
+            other => panic!("expected admission, got {other:?}"),
+        }
+        h.drain_and_verify();
+    }
+}
+
+#[test]
+fn queued_requests_past_deadline_expire_at_dispatch() {
+    for policy in POLICIES {
+        let cfg = SchedConfig { max_batch: 4, queue_cap: 64, lanes: 1, max_wait_us: 0 };
+        let mut h = Harness::new(policy, cfg, 0.0);
+        h.arrive(0, Some(500)); // will expire
+        h.arrive(0, None); // no deadline: must run
+        h.advance(1_000);
+        match h.plan() {
+            Plan::Dispatch { batch, expired } => {
+                assert_eq!(expired, vec![0], "stale request must expire, not run");
+                assert_eq!(batch, vec![1]);
+            }
+            other => panic!("expected dispatch, got {other:?}"),
+        }
+        h.drain_and_verify();
+    }
+}
+
+// ---- loadgen determinism (EXPERIMENTS.md §Serve-SLO) ----
+
+#[test]
+fn loadgen_trace_is_deterministic_by_seed() {
+    let a = Trace::poisson(7, 2_000, 512, 3);
+    let b = Trace::poisson(7, 2_000, 512, 3);
+    assert_eq!(a, b, "same seed must give a byte-identical trace");
+    assert_eq!(a.fnv(), b.fnv());
+    let c = Trace::poisson(8, 2_000, 512, 3);
+    assert_ne!(a.arrivals_us, c.arrivals_us, "different seeds must differ");
+    // Arrivals are non-decreasing and the mean rate is in the right
+    // ballpark (±30% over 512 draws).
+    assert!(a.arrivals_us.windows(2).all(|w| w[0] <= w[1]));
+    let span_s = *a.arrivals_us.last().unwrap() as f64 * 1e-6;
+    let rate = a.len() as f64 / span_s;
+    assert!((rate / 2_000.0 - 1.0).abs() < 0.3, "offered rate off: {rate}");
+}
+
+#[test]
+fn loadgen_sim_row_is_deterministic_on_one_worker() {
+    // The determinism pin for results/serve_slo.csv: same seed ⇒ same
+    // trace ⇒ identical simulated CSV row, bit for bit, on 1 worker.
+    let cost = SimCost { batch_overhead_us: 150, per_row_us: 40 };
+    for policy in POLICIES {
+        let cfg = SchedConfig { max_batch: 8, queue_cap: 64, lanes: 3, max_wait_us: 200 };
+        let run = || {
+            let trace = Trace::poisson(42, 3_000, 800, 3);
+            let r = loadgen::simulate(policy, cfg, 1, Some(5_000), &trace, cost);
+            loadgen::slo_csv_row("sim", policy, &trace, 1, cfg.max_batch, Some(5_000), &r)
+        };
+        assert_eq!(run(), run(), "{} sim row must be reproducible", policy.label());
+    }
+}
+
+#[test]
+fn loadgen_sim_accounts_every_request() {
+    let cost = SimCost { batch_overhead_us: 100, per_row_us: 50 };
+    for policy in POLICIES {
+        for qps in [500u64, 5_000, 50_000] {
+            let cfg = SchedConfig { max_batch: 8, queue_cap: 32, lanes: 3, max_wait_us: 200 };
+            let trace = Trace::poisson(3, qps, 600, 3);
+            let r = loadgen::simulate(policy, cfg, 2, Some(4_000), &trace, cost);
+            assert!(
+                r.accounted(),
+                "{} @ {qps} qps: {} submitted ≠ {} served + {} shed + {} refused",
+                policy.label(),
+                r.submitted,
+                r.served,
+                r.shed,
+                r.shed_admission
+            );
+            // Single lane + no deadline: eviction and expiry are both
+            // impossible, so nothing admitted is ever shed later.
+            let cfg1 = SchedConfig { lanes: 1, ..cfg };
+            let trace1 = Trace::poisson(3, qps, 600, 1);
+            let r2 = loadgen::simulate(policy, cfg1, 2, None, &trace1, cost);
+            assert!(r2.accounted());
+            assert_eq!(r2.shed, 0, "single lane + no deadline ⇒ nothing shed post-admission");
+        }
+    }
+}
+
+#[test]
+fn sim_continuous_beats_flush_p99_at_light_load() {
+    // The SLO claim in deterministic virtual time: with a 2 ms hold
+    // timer and arrivals slower than the service rate, flush-and-wait
+    // pays the hold on most batches; continuous batching dispatches on
+    // arrival. (The wall-clock version of this table is
+    // results/serve_slo.csv from bench_serve_slo.)
+    let cfg = SchedConfig { max_batch: 16, queue_cap: 256, lanes: 3, max_wait_us: 2_000 };
+    let cost = SimCost { batch_overhead_us: 100, per_row_us: 50 };
+    let trace = Trace::poisson(11, 1_000, 1_000, 3);
+    let flush = loadgen::simulate(SchedPolicy::Flush, cfg, 2, None, &trace, cost);
+    let cont = loadgen::simulate(SchedPolicy::Continuous, cfg, 2, None, &trace, cost);
+    assert_eq!(flush.served, trace.len() as u64);
+    assert_eq!(cont.served, trace.len() as u64);
+    assert!(
+        cont.p99_us < flush.p99_us,
+        "continuous p99 {:.0}µs should beat flush p99 {:.0}µs at 1k QPS",
+        cont.p99_us,
+        flush.p99_us
+    );
+}

@@ -6,19 +6,29 @@
 //!    GEMMs, yet lands on the same bits — the exactness argument in the
 //!    `serve::frozen` module docs). Wider/BN-heavy models agree to float
 //!    rounding.
-//! 2. **Batching server** — responses are never mis-paired under
-//!    concurrent pipelined submitters, backpressure blocks rather than
-//!    drops, shutdown answers everything accepted, and malformed inputs
-//!    are rejected.
+//! 2. **Serving tier** (DESIGN.md §Serving-Tier) — responses are never
+//!    mis-paired under concurrent pipelined submitters (both scheduler
+//!    policies), backpressure blocks rather than drops, shutdown answers
+//!    every accepted request exactly once (logits or an explicit
+//!    `Shutdown` rejection), 10× overload neither deadlocks nor poisons
+//!    the queue, warm swap pins each request to its admission-time model
+//!    version bit-identically, a panicking worker rejects its batch
+//!    instead of hanging it, and priority/deadline shedding is explicit.
 
 use std::sync::Arc;
+use std::time::Duration;
 
 use apt::data::SynthImages;
 use apt::kernels::Engine;
 use apt::nn::{models, QuantMode};
-use apt::serve::{FrozenModel, InferenceServer, ServeConfig};
+use apt::serve::{
+    FrozenModel, InferenceServer, ModelRegistry, SchedPolicy, ServeConfig, ServeModel,
+    ServeOutcome, ShedReason, SubmitOpts,
+};
 use apt::tensor::Tensor;
 use apt::train::SessionBuilder;
+
+const POLICIES: [SchedPolicy; 2] = [SchedPolicy::Flush, SchedPolicy::Continuous];
 
 fn ckpt_path(tag: &str) -> std::path::PathBuf {
     std::env::temp_dir().join(format!("apt_serve_ckpt_{tag}_{}.txt", std::process::id()))
@@ -149,12 +159,9 @@ fn quick_frozen_mlp() -> FrozenModel {
 }
 
 #[test]
-fn server_pairs_responses_under_concurrent_submitters() {
+fn server_pairs_responses_under_concurrent_submitters_both_policies() {
     let frozen = Arc::new(quick_frozen_mlp());
     let eng = Arc::new(Engine::serial());
-    let cfg = ServeConfig { max_batch: 4, max_wait_us: 2_000, queue_cap: 64, workers: 2 };
-    let server = InferenceServer::start(Arc::clone(&frozen), Arc::clone(&eng), cfg);
-
     let clients = 4usize;
     let per_client = 10usize;
     let mut data = SynthImages::new(
@@ -168,39 +175,55 @@ fn server_pairs_responses_under_concurrent_submitters() {
     let d = frozen.input_len();
     let (xs, _) = data.batch(clients * per_client);
 
-    std::thread::scope(|scope| {
-        for c in 0..clients {
-            let server = &server;
-            let frozen = &frozen;
-            let eng = &eng;
-            let xs = &xs;
-            scope.spawn(move || {
-                // Pipelined: submit the whole slice, then resolve in order;
-                // every response must be the logits of *its own* input
-                // (batched rows are computed independently, so single-
-                // sample forward is the exact oracle).
-                let mut pendings = Vec::new();
-                for i in 0..per_client {
-                    let idx = c * per_client + i;
-                    pendings.push((idx, server.submit(xs.data[idx * d..(idx + 1) * d].to_vec()).unwrap()));
-                }
-                for (idx, p) in pendings {
-                    let got = p.wait().unwrap();
-                    let want = frozen.forward_one(&xs.data[idx * d..(idx + 1) * d], eng);
-                    assert_eq!(got.len(), want.len());
-                    for (a, b) in got.iter().zip(&want) {
-                        assert_eq!(a.to_bits(), b.to_bits(), "request {idx} got another sample's logits");
-                    }
-                }
-            });
-        }
-    });
+    // Both scheduler policies must keep logits bit-identical to the
+    // single-sample oracle — batching strategy is a latency decision,
+    // never a numerics decision.
+    for policy in POLICIES {
+        let cfg = ServeConfig {
+            max_batch: 4,
+            max_wait_us: 2_000,
+            queue_cap: 64,
+            workers: 2,
+            policy,
+            ..ServeConfig::default()
+        };
+        let server = InferenceServer::start(Arc::clone(&frozen), Arc::clone(&eng), cfg);
 
-    let stats = server.shutdown();
-    assert_eq!(stats.accepted, (clients * per_client) as u64);
-    assert_eq!(stats.served, (clients * per_client) as u64);
-    assert!(stats.batches <= stats.served, "batches {} > served {}", stats.batches, stats.served);
-    assert!(stats.mean_batch() >= 1.0);
+        std::thread::scope(|scope| {
+            for c in 0..clients {
+                let server = &server;
+                let frozen = &frozen;
+                let eng = &eng;
+                let xs = &xs;
+                scope.spawn(move || {
+                    // Pipelined: submit the whole slice, then resolve in order;
+                    // every response must be the logits of *its own* input
+                    // (batched rows are computed independently, so single-
+                    // sample forward is the exact oracle).
+                    let mut pendings = Vec::new();
+                    for i in 0..per_client {
+                        let idx = c * per_client + i;
+                        pendings.push((idx, server.submit(xs.data[idx * d..(idx + 1) * d].to_vec()).unwrap()));
+                    }
+                    for (idx, p) in pendings {
+                        let got = p.wait().unwrap();
+                        let want = frozen.forward_one(&xs.data[idx * d..(idx + 1) * d], eng);
+                        assert_eq!(got.len(), want.len());
+                        for (a, b) in got.iter().zip(&want) {
+                            assert_eq!(a.to_bits(), b.to_bits(), "request {idx} got another sample's logits");
+                        }
+                    }
+                });
+            }
+        });
+
+        let stats = server.shutdown();
+        let tag = policy.label();
+        assert_eq!(stats.accepted, (clients * per_client) as u64, "{tag}");
+        assert_eq!(stats.served, (clients * per_client) as u64, "{tag}");
+        assert!(stats.batches <= stats.served, "{tag}: batches {} > served {}", stats.batches, stats.served);
+        assert!(stats.mean_batch() >= 1.0, "{tag}");
+    }
 }
 
 #[test]
@@ -211,7 +234,8 @@ fn server_backpressure_bounded_queue_never_drops() {
     // backpressure seam — block while full, never drop, never deadlock —
     // and the queue_cap < max_batch clamp must flush full queues instead
     // of waiting out the deadline (fill target = min(max_batch, queue_cap)).
-    let cfg = ServeConfig { max_batch: 8, max_wait_us: 50_000, queue_cap: 2, workers: 1 };
+    let cfg =
+        ServeConfig { max_batch: 8, max_wait_us: 50_000, queue_cap: 2, workers: 1, ..ServeConfig::default() };
     let server = InferenceServer::start(Arc::clone(&frozen), Arc::new(Engine::serial()), cfg);
     let (threads, per) = (6usize, 8usize);
     std::thread::scope(|scope| {
@@ -236,7 +260,8 @@ fn try_submit_reports_full_queue_and_answers_all_accepted() {
     // One worker, per-request batches, cap 2: a burst far faster than the
     // worker drains must hit the bounded-queue error on some submissions;
     // every accepted one must still be answered.
-    let cfg = ServeConfig { max_batch: 1, max_wait_us: 0, queue_cap: 2, workers: 1 };
+    let cfg =
+        ServeConfig { max_batch: 1, max_wait_us: 0, queue_cap: 2, workers: 1, ..ServeConfig::default() };
     let server = InferenceServer::start(Arc::clone(&frozen), Arc::new(Engine::serial()), cfg);
     let burst = 200usize;
     let mut pendings = Vec::new();
@@ -263,26 +288,53 @@ fn try_submit_reports_full_queue_and_answers_all_accepted() {
 }
 
 #[test]
-fn server_shutdown_answers_queued_requests() {
+fn server_shutdown_answers_every_accepted_request_exactly_once() {
+    // Shutdown semantics (DESIGN.md §Serving-Tier): in-flight batches
+    // drain and answer normally; requests still queued get an explicit
+    // `Shutdown` rejection — nothing hangs, nothing is silently dropped,
+    // and the accounting invariant accepted == served + shed holds.
     let frozen = Arc::new(quick_frozen_mlp());
     let d = frozen.input_len();
-    let cfg = ServeConfig { max_batch: 4, max_wait_us: 200_000, queue_cap: 64, workers: 1 };
+    let cfg =
+        ServeConfig { max_batch: 4, max_wait_us: 200_000, queue_cap: 64, workers: 1, ..ServeConfig::default() };
     let server = InferenceServer::start(Arc::clone(&frozen), Arc::new(Engine::serial()), cfg);
     let pendings: Vec<_> = (0..9).map(|_| server.submit(vec![0.5; d]).unwrap()).collect();
-    let stats = server.shutdown(); // close + drain + join
-    assert_eq!(stats.served, 9);
+    let stats = server.shutdown(); // close + drain in-flight + reject queued + join
+    assert_eq!(stats.accepted, 9);
+    assert!(
+        stats.accounted(),
+        "accepted {} != served {} + shed {}",
+        stats.accepted,
+        stats.served,
+        stats.shed
+    );
+    let (mut served, mut rejected) = (0u64, 0u64);
     for p in pendings {
-        assert_eq!(p.wait().unwrap().len(), models::CLASSES);
+        match p.outcome().unwrap() {
+            ServeOutcome::Logits(l) => {
+                assert_eq!(l.len(), models::CLASSES);
+                served += 1;
+            }
+            ServeOutcome::Shed(ShedReason::Shutdown) => rejected += 1,
+            ServeOutcome::Shed(r) => panic!("unexpected shed reason {r:?}"),
+        }
     }
+    assert_eq!(served, stats.served);
+    assert_eq!(rejected, stats.shed);
+    assert_eq!(served + rejected, 9);
 }
 
 #[test]
-fn server_rejects_wrong_input_width() {
+fn server_rejects_wrong_input_width_and_unknown_model() {
     let frozen = Arc::new(quick_frozen_mlp());
+    let d = frozen.input_len();
     let server =
         InferenceServer::start(Arc::clone(&frozen), Arc::new(Engine::serial()), ServeConfig::default());
     assert!(server.submit(vec![0.0; 3]).is_err());
     assert!(server.try_submit(vec![]).is_err());
+    let opts = SubmitOpts { model: Some("no-such-model".into()), ..SubmitOpts::default() };
+    let err = server.submit_opts(vec![0.0; d], opts).unwrap_err().to_string();
+    assert!(err.contains("no-such-model"), "unexpected error: {err}");
 }
 
 #[test]
@@ -292,4 +344,337 @@ fn freeze_infers_geometry_and_labels() {
     assert_eq!(frozen.label(), "mlp-int8");
     let logits = frozen.forward_one(&vec![0.0; frozen.input_len()], &Engine::serial());
     assert_eq!(logits.len(), models::CLASSES);
+}
+
+// ---- serving tier: registry, overload, warm swap, panic, shedding ----
+
+/// A scripted [`ServeModel`] for failure-path and scheduling tests:
+/// optional fixed service time, optional poison input that panics the
+/// forward, and an affine output (`y_j = x_0 · scale + j`) that encodes
+/// the input so response pairing stays checkable with exact math.
+struct TestModel {
+    din: usize,
+    dout: usize,
+    sleep_ms: u64,
+    panic_on: Option<f32>,
+    scale: f32,
+}
+
+impl ServeModel for TestModel {
+    fn input_len(&self) -> usize {
+        self.din
+    }
+
+    fn forward(&self, x: &Tensor, _eng: &Engine) -> Tensor {
+        if self.sleep_ms > 0 {
+            std::thread::sleep(Duration::from_millis(self.sleep_ms));
+        }
+        let n = x.shape[0];
+        let mut y = Tensor::zeros(&[n, self.dout]);
+        for i in 0..n {
+            let x0 = x.data[i * self.din];
+            if self.panic_on.map_or(false, |p| x0 == p) {
+                panic!("test model hit its poison input");
+            }
+            for j in 0..self.dout {
+                y.data[i * self.dout + j] = x0 * self.scale + j as f32;
+            }
+        }
+        y
+    }
+
+    fn label(&self) -> &str {
+        "test-model"
+    }
+}
+
+/// `TestModel`'s expected logits for input row `[x0, ..]` at scale 1.
+fn affine(x0: f32, dout: usize) -> Vec<f32> {
+    (0..dout).map(|j| x0 + j as f32).collect()
+}
+
+fn test_server(m: TestModel, cfg: ServeConfig) -> InferenceServer {
+    let registry = Arc::new(ModelRegistry::new());
+    registry.publish("m", 1, Arc::new(m) as Arc<dyn ServeModel>).unwrap();
+    InferenceServer::start_registry(registry, "m", Arc::new(Engine::serial()), cfg).unwrap()
+}
+
+#[test]
+fn registry_lifecycle_publish_activate_evict() {
+    let reg = ModelRegistry::new();
+    let m = |s: f32| {
+        Arc::new(TestModel { din: 2, dout: 2, sleep_ms: 0, panic_on: None, scale: s })
+            as Arc<dyn ServeModel>
+    };
+    reg.publish("m", 1, m(1.0)).unwrap();
+    reg.publish("m", 2, m(2.0)).unwrap(); // warm swap: 2 is now active
+    assert!(reg.publish("m", 2, m(3.0)).is_err(), "versions are immutable");
+    assert_eq!(reg.resolve("m").unwrap().0, 2);
+    assert!(reg.resolve("absent").is_none());
+    reg.activate("m", 1).unwrap(); // rollback
+    assert_eq!(reg.resolve("m").unwrap().0, 1);
+    assert!(reg.evict("m", 1).is_err(), "the active version is protected");
+    reg.evict("m", 2).unwrap();
+    assert!(reg.resolve_version("m", 2).is_none());
+    assert_eq!(reg.loaded(), 1);
+    let info = &reg.list()[0];
+    assert_eq!((info.name.as_str(), info.active, info.versions.as_slice()), ("m", 1, &[1u64][..]));
+    reg.evict_model("m").unwrap();
+    assert_eq!(reg.loaded(), 0);
+}
+
+#[test]
+fn overload_10x_resolves_every_request_without_deadlock() {
+    // 4 threads blast 200 requests each through the never-blocking path
+    // at a server whose capacity is far below the burst rate: the bounded
+    // queue must shed explicitly (admission errors or shed outcomes),
+    // every accepted request must resolve, and the server must still be
+    // healthy afterwards. Run under both policies.
+    for policy in POLICIES {
+        let m = TestModel { din: 4, dout: 3, sleep_ms: 1, panic_on: None, scale: 1.0 };
+        let cfg = ServeConfig {
+            max_batch: 4,
+            max_wait_us: 100,
+            queue_cap: 8,
+            workers: 2,
+            policy,
+            lanes: 3,
+        };
+        let server = test_server(m, cfg);
+        let (threads, per) = (4usize, 200usize);
+        let accepted_by_clients: u64 = std::thread::scope(|scope| {
+            let mut handles = Vec::new();
+            for t in 0..threads {
+                let server = &server;
+                handles.push(scope.spawn(move || {
+                    let mut pendings = Vec::new();
+                    for i in 0..per {
+                        let opts = SubmitOpts {
+                            lane: (t + i) % 3,
+                            deadline_us: if i % 2 == 0 { Some(50_000) } else { None },
+                            model: None,
+                        };
+                        if let Ok(p) = server.submit_opts(vec![0.25; 4], opts) {
+                            pendings.push(p);
+                        }
+                    }
+                    let n = pendings.len() as u64;
+                    for p in pendings {
+                        // Logits or an explicit shed — never a hang, never
+                        // a dropped channel.
+                        p.outcome().unwrap();
+                    }
+                    n
+                }));
+            }
+            handles.into_iter().map(|h| h.join().unwrap()).sum()
+        });
+        // The queue lock survived the storm: a plain request still serves.
+        let got = server.submit(vec![0.5; 4]).unwrap().wait().unwrap();
+        assert_eq!(got, affine(0.5, 3));
+        let stats = server.shutdown();
+        let tag = policy.label();
+        assert_eq!(stats.accepted, accepted_by_clients + 1, "{tag}");
+        assert_eq!(stats.submitted(), (threads * per) as u64 + 1, "{tag}");
+        assert!(
+            stats.accounted(),
+            "{tag}: accepted {} != served {} + shed {}",
+            stats.accepted,
+            stats.served,
+            stats.shed
+        );
+    }
+}
+
+#[test]
+fn warm_swap_pins_admission_time_version_bit_identically() {
+    // Train two checkpoints of the same architecture (v2 = 10 more
+    // steps), publish v1, admit requests, warm-swap to v2 mid-stream,
+    // admit more. Every request must come back with logits bit-identical
+    // to the single-sample forward of the version that was active when
+    // *it* was admitted — in-flight and queued v1 requests drain on v1,
+    // no queue flush. max_batch 8 with a long hold makes the two
+    // admission waves land in one dispatch, exercising the per-version
+    // batch split (versions never share a tensor).
+    let mut s = SessionBuilder::classifier("mlp").mode(QuantMode::Static(8)).build();
+    s.run(10).unwrap();
+    let v1 = Arc::new(FrozenModel::freeze("mlp-v1", s.net()).unwrap());
+    s.run(10).unwrap();
+    let v2 = Arc::new(FrozenModel::freeze("mlp-v2", s.net()).unwrap());
+    let eng = Arc::new(Engine::serial());
+    let d = v1.input_len();
+
+    let registry = Arc::new(ModelRegistry::new());
+    registry.publish("mlp", 1, Arc::clone(&v1) as Arc<dyn ServeModel>).unwrap();
+    let cfg = ServeConfig { max_batch: 8, max_wait_us: 50_000, workers: 1, ..ServeConfig::default() };
+    let server =
+        InferenceServer::start_registry(Arc::clone(&registry), "mlp", Arc::clone(&eng), cfg).unwrap();
+
+    let mut data = SynthImages::new(11, models::CLASSES, models::IN_C, models::IN_H, models::IN_W, 0.5);
+    let (xs, _) = data.batch(8);
+    let row = |i: usize| xs.data[i * d..(i + 1) * d].to_vec();
+
+    let first: Vec<_> = (0..4).map(|i| server.submit(row(i)).unwrap()).collect();
+    registry.publish("mlp", 2, Arc::clone(&v2) as Arc<dyn ServeModel>).unwrap();
+    assert_eq!(registry.resolve("mlp").unwrap().0, 2, "publish flips the active version");
+    let second: Vec<_> = (4..8).map(|i| server.submit(row(i)).unwrap()).collect();
+
+    for (wave, (offset, oracle)) in [(first, (0usize, &v1)), (second, (4usize, &v2))] {
+        for (k, p) in wave.into_iter().enumerate() {
+            let i = offset + k;
+            let want = oracle.forward_one(&row(i), &eng);
+            let got = p.wait().unwrap();
+            assert_eq!(got.len(), want.len());
+            for (a, b) in got.iter().zip(&want) {
+                assert_eq!(a.to_bits(), b.to_bits(), "request {i} ran on the wrong version");
+            }
+        }
+    }
+    let stats = server.shutdown();
+    assert_eq!(stats.served, 8);
+    // Retiring the drained v1 is now legal; v2 keeps serving.
+    registry.evict("mlp", 1).unwrap();
+    assert_eq!(registry.loaded(), 1);
+}
+
+#[test]
+fn worker_panic_rejects_request_instead_of_hanging() {
+    let m = TestModel { din: 4, dout: 3, sleep_ms: 0, panic_on: Some(-1.0), scale: 1.0 };
+    let cfg = ServeConfig {
+        max_batch: 4,
+        max_wait_us: 100,
+        queue_cap: 16,
+        workers: 1,
+        policy: SchedPolicy::Continuous,
+        lanes: 3,
+    };
+    let server = test_server(m, cfg);
+    // Poison forward: the client gets an explicit worker-panic error,
+    // not a hang and not a poisoned queue lock...
+    let p = server.submit(vec![-1.0, 0.0, 0.0, 0.0]).unwrap();
+    let err = p.wait().unwrap_err().to_string();
+    assert!(err.contains("worker-panic"), "unexpected error: {err}");
+    // ...and the same worker keeps serving.
+    let got = server.submit(vec![2.0, 0.0, 0.0, 0.0]).unwrap().wait().unwrap();
+    assert_eq!(got, affine(2.0, 3));
+    let stats = server.shutdown();
+    assert!(stats.accounted());
+    assert_eq!((stats.served, stats.shed), (1, 1));
+}
+
+#[test]
+fn worker_panic_mid_batch_answers_every_member() {
+    // Kill a worker mid-batch: occupy the single worker, queue a batch
+    // containing one poison row, and require every member to resolve —
+    // the poison request always fails with worker-panic; batch-mates
+    // either died with it (same batch) or served normally (dispatch
+    // raced ahead). No outcome may be a hang.
+    let m = TestModel { din: 2, dout: 2, sleep_ms: 20, panic_on: Some(-1.0), scale: 1.0 };
+    let cfg = ServeConfig {
+        max_batch: 8,
+        max_wait_us: 0,
+        queue_cap: 16,
+        workers: 1,
+        policy: SchedPolicy::Continuous,
+        lanes: 3,
+    };
+    let server = test_server(m, cfg);
+    let a = server.submit(vec![1.0, 0.0]).unwrap();
+    std::thread::sleep(Duration::from_millis(5)); // worker is mid-forward on `a`
+    let wave: Vec<_> =
+        [-1.0f32, 2.0, 3.0].iter().map(|&v| (v, server.submit(vec![v, 0.0]).unwrap())).collect();
+    assert_eq!(a.wait().unwrap(), affine(1.0, 2));
+    for (v, p) in wave {
+        match p.outcome().unwrap() {
+            ServeOutcome::Logits(l) => {
+                assert!(v != -1.0, "poison input must not produce logits");
+                assert_eq!(l, affine(v, 2));
+            }
+            ServeOutcome::Shed(ShedReason::WorkerPanic) => {}
+            ServeOutcome::Shed(r) => panic!("unexpected shed reason {r:?}"),
+        }
+    }
+    let stats = server.shutdown();
+    assert!(stats.accounted());
+    assert!(stats.shed >= 1, "the poison request must be counted shed");
+}
+
+#[test]
+fn priority_eviction_sheds_lowest_lane_explicitly() {
+    // One slow worker, cap-2 queue: an urgent arrival on a full queue
+    // displaces the youngest background request (explicit Evicted reply),
+    // and a background arrival with nobody below it is refused.
+    let m = TestModel { din: 2, dout: 2, sleep_ms: 40, panic_on: None, scale: 1.0 };
+    let cfg = ServeConfig {
+        max_batch: 1,
+        max_wait_us: 0,
+        queue_cap: 2,
+        workers: 1,
+        policy: SchedPolicy::Continuous,
+        lanes: 3,
+    };
+    let server = test_server(m, cfg);
+    let lane = |l: usize| SubmitOpts { lane: l, ..SubmitOpts::default() };
+    let a = server.submit_opts(vec![1.0, 0.0], lane(1)).unwrap(); // dispatched at once
+    std::thread::sleep(Duration::from_millis(10)); // worker now busy ~40 ms
+    let b = server.submit_opts(vec![2.0, 0.0], lane(2)).unwrap(); // queued
+    let c = server.submit_opts(vec![3.0, 0.0], lane(2)).unwrap(); // queued; queue full
+    let d = server.submit_opts(vec![4.0, 0.0], lane(0)).unwrap(); // evicts c
+    match c.outcome().unwrap() {
+        ServeOutcome::Shed(ShedReason::Evicted) => {}
+        other => panic!("expected eviction, got {other:?}"),
+    }
+    let err = server.submit_opts(vec![5.0, 0.0], lane(2)).unwrap_err().to_string();
+    assert!(err.contains("queue-full"), "unexpected error: {err}");
+    assert_eq!(a.wait().unwrap(), affine(1.0, 2));
+    assert_eq!(d.wait().unwrap(), affine(4.0, 2)); // urgent lane runs first
+    assert_eq!(b.wait().unwrap(), affine(2.0, 2));
+    let stats = server.shutdown();
+    assert!(stats.accounted());
+    assert_eq!((stats.served, stats.shed, stats.shed_admission), (3, 1, 1));
+}
+
+#[test]
+fn deadlines_shed_on_admission_and_expire_at_dispatch() {
+    let m = TestModel { din: 2, dout: 2, sleep_ms: 30, panic_on: None, scale: 1.0 };
+    let cfg = ServeConfig {
+        max_batch: 1,
+        max_wait_us: 0,
+        queue_cap: 64,
+        workers: 1,
+        policy: SchedPolicy::Continuous,
+        lanes: 3,
+    };
+    let server = test_server(m, cfg);
+    // Prime the service-time EWMA (feasibility admits everything until
+    // the first batch lands).
+    server.submit(vec![0.0, 0.0]).unwrap().wait().unwrap();
+    // Occupy the worker with an undeadlined request; the queue is empty,
+    // so a tight-deadline request is *admitted* (nothing queued ahead)…
+    let busy = server.submit(vec![1.0, 0.0]).unwrap();
+    std::thread::sleep(Duration::from_millis(5));
+    let doomed = server
+        .submit_opts(vec![2.0, 0.0], SubmitOpts { deadline_us: Some(200), ..SubmitOpts::default() })
+        .unwrap();
+    // …then a backlog builds behind it, and a 1 ms deadline behind ~6
+    // requests × ~30 ms each is refused at admission.
+    let backlog: Vec<_> = (0..5).map(|i| server.submit(vec![3.0 + i as f32, 0.0]).unwrap()).collect();
+    let err = server
+        .submit_opts(vec![9.0, 0.0], SubmitOpts { deadline_us: Some(1_000), ..SubmitOpts::default() })
+        .unwrap_err()
+        .to_string();
+    assert!(err.contains("deadline-unmeetable"), "unexpected error: {err}");
+    // The admitted tight-deadline request expired while the worker was
+    // busy: it is dropped at dispatch with an explicit reply, not run late.
+    match doomed.outcome().unwrap() {
+        ServeOutcome::Shed(ShedReason::DeadlineExpired) => {}
+        other => panic!("expected dispatch-time expiry, got {other:?}"),
+    }
+    assert_eq!(busy.wait().unwrap(), affine(1.0, 2));
+    for (i, p) in backlog.into_iter().enumerate() {
+        assert_eq!(p.wait().unwrap(), affine(3.0 + i as f32, 2));
+    }
+    let stats = server.shutdown();
+    assert!(stats.accounted());
+    assert_eq!((stats.shed, stats.shed_admission), (1, 1));
 }
