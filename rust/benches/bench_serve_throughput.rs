@@ -1,7 +1,11 @@
 //! cargo bench — serving throughput/latency (EXPERIMENTS.md §Serve):
 //! QPS and client-side p50/p99 over batch size × worker count ×
-//! {f32, int8, int16} frozen mlp models, measured with closed-loop
-//! concurrent clients against the micro-batching `InferenceServer`.
+//! {f32, int8, int16} frozen mlp models × {fused plan, unfused
+//! interpreter}, measured with closed-loop concurrent clients against the
+//! micro-batching `InferenceServer`. The fused/unfused pair at equal
+//! config is the inference-compiler speedup (EXPERIMENTS.md
+//! §Serve-Compiler) — the two paths are bit-identical (test_compiler.rs),
+//! so any gap is pure execution efficiency.
 //! Writes `results/serve_throughput.csv`.
 //!
 //! `BENCH_QUICK=1` shortens the workload; `APT_SERVE_REQUESTS=N`
@@ -10,6 +14,7 @@
 use std::sync::Arc;
 use std::time::Instant;
 
+use apt::compiler::CompileOptions;
 use apt::data::SynthImages;
 use apt::kernels::Engine;
 use apt::nn::{models, QuantMode};
@@ -20,10 +25,11 @@ use apt::util::stats::percentile;
 
 const TRAIN_ITERS: u64 = 30;
 
-fn frozen_for(mode: QuantMode) -> FrozenModel {
+fn frozen_for(mode: QuantMode, fuse: bool) -> FrozenModel {
     let mut s = SessionBuilder::classifier("mlp").mode(mode).lr(0.01).build();
     s.run(TRAIN_ITERS).expect("train");
-    FrozenModel::freeze(format!("mlp-{}", mode.label()), s.net()).expect("freeze")
+    let opts = CompileOptions { fuse, tune: false };
+    FrozenModel::freeze_with(format!("mlp-{}", mode.label()), s.net(), &opts).expect("freeze")
 }
 
 struct Cell {
@@ -99,51 +105,73 @@ fn main() {
         ("int16", QuantMode::Static(16)),
     ];
     let batch_sweep = [1usize, 8, 32];
-    let worker_sweep = [1usize, 2, 4];
+    // Quick mode keeps the fused-vs-unfused comparison but drops the
+    // worker sweep (the compiler gap is per-forward, not per-worker).
+    let worker_sweep: &[usize] = if quick { &[2] } else { &[1, 2, 4] };
 
     println!(
         "bench_serve_throughput — mlp, {requests} requests/cell, closed-loop clients = 2×batch"
     );
     println!(
-        "{:<7} {:>8} {:>7} {:>9} {:>10} {:>10} {:>11}",
-        "model", "workers", "batch", "QPS", "p50 µs", "p99 µs", "mean batch"
+        "{:<7} {:>5} {:>8} {:>7} {:>9} {:>10} {:>10} {:>11}",
+        "model", "fused", "workers", "batch", "QPS", "p50 µs", "p99 µs", "mean batch"
     );
 
     let mut csv = Csv::new(
         results_dir().join("serve_throughput.csv"),
-        &["precision", "workers", "max_batch", "requests", "qps", "p50_us", "p99_us", "mean_batch"],
+        &[
+            "precision",
+            "fused",
+            "workers",
+            "max_batch",
+            "requests",
+            "qps",
+            "p50_us",
+            "p99_us",
+            "mean_batch",
+        ],
     );
     for (label, mode) in modes {
-        let frozen = Arc::new(frozen_for(mode));
-        for &workers in &worker_sweep {
-            for &max_batch in &batch_sweep {
-                let cfg = ServeConfig {
-                    max_batch,
-                    max_wait_us: 200,
-                    queue_cap: 256,
-                    workers,
-                    ..ServeConfig::default()
-                };
-                let cell = run_cell(&frozen, cfg, requests);
-                println!(
-                    "{:<7} {:>8} {:>7} {:>9.0} {:>10.1} {:>10.1} {:>11.2}",
-                    label, workers, max_batch, cell.qps, cell.p50_us, cell.p99_us, cell.mean_batch
-                );
-                csv.row(&[
-                    label.to_string(),
-                    workers.to_string(),
-                    max_batch.to_string(),
-                    requests.to_string(),
-                    format!("{:.1}", cell.qps),
-                    format!("{:.2}", cell.p50_us),
-                    format!("{:.2}", cell.p99_us),
-                    format!("{:.3}", cell.mean_batch),
-                ]);
+        for fused in [true, false] {
+            let frozen = Arc::new(frozen_for(mode, fused));
+            for &workers in worker_sweep {
+                for &max_batch in &batch_sweep {
+                    let cfg = ServeConfig {
+                        max_batch,
+                        max_wait_us: 200,
+                        queue_cap: 256,
+                        workers,
+                        ..ServeConfig::default()
+                    };
+                    let cell = run_cell(&frozen, cfg, requests);
+                    println!(
+                        "{:<7} {:>5} {:>8} {:>7} {:>9.0} {:>10.1} {:>10.1} {:>11.2}",
+                        label,
+                        if fused { "yes" } else { "no" },
+                        workers,
+                        max_batch,
+                        cell.qps,
+                        cell.p50_us,
+                        cell.p99_us,
+                        cell.mean_batch
+                    );
+                    csv.row(&[
+                        label.to_string(),
+                        (fused as u8).to_string(),
+                        workers.to_string(),
+                        max_batch.to_string(),
+                        requests.to_string(),
+                        format!("{:.1}", cell.qps),
+                        format!("{:.2}", cell.p50_us),
+                        format!("{:.2}", cell.p99_us),
+                        format!("{:.3}", cell.mean_batch),
+                    ]);
+                }
             }
         }
         println!();
     }
     csv.write().unwrap();
     println!("wrote {}", results_dir().join("serve_throughput.csv").display());
-    println!("fill the EXPERIMENTS.md §Serve table from the CSV");
+    println!("fill the EXPERIMENTS.md §Serve and §Serve-Compiler tables from the CSV");
 }

@@ -1,0 +1,573 @@
+//! Fused plan executor (DESIGN.md §Inference-Compiler).
+//!
+//! Runs an [`ExecPlan`] produced by [`super::fuse`]: each GEMM step applies
+//! its whole epilogue (bias → folded BN → residual add → ReLU) in one pass
+//! over the accumulator block and, when the next consumer is an integer
+//! layer, emits quantized codes directly — the activation flowing between
+//! fused steps is an [`Act`] that can be int8/int16 codes, with max-pools
+//! executed on the codes themselves. Bit-identity with the unfused
+//! interpreter holds because every scalar f32 operation happens in exactly
+//! the same order with exactly the same formula (see DESIGN.md for the
+//! per-rewrite legality arguments); the `test_compiler` integration tests
+//! pin it per model.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Duration;
+
+use crate::fixedpoint::conv::{
+    im2col, im2col_bt_codes_i16, im2col_bt_codes_i8, im2col_bt_quant_i16, im2col_bt_quant_i8,
+};
+use crate::fixedpoint::{quantize, Scheme};
+use crate::kernels::Engine;
+use crate::tensor::Tensor;
+
+use super::fuse::{Emit, Epilogue, ExecPlan, Step};
+use super::interp::{self, dw_channel};
+use super::ir::{ConvKind, ExecConv, ExecDw, ExecLinear, ExecOp, LinKind};
+
+/// Cumulative wall-time for one plan step (or one interpreter op), shared
+/// across serve workers — hence atomics, not a `Cell`.
+pub(crate) struct StepTimer {
+    ns: AtomicU64,
+    calls: AtomicU64,
+}
+
+impl StepTimer {
+    pub(crate) fn new() -> Self {
+        StepTimer { ns: AtomicU64::new(0), calls: AtomicU64::new(0) }
+    }
+
+    pub(crate) fn add(&self, d: Duration) {
+        self.ns.fetch_add(d.as_nanos() as u64, Ordering::Relaxed);
+        self.calls.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// (total nanoseconds, call count).
+    pub(crate) fn snapshot(&self) -> (u64, u64) {
+        (self.ns.load(Ordering::Relaxed), self.calls.load(Ordering::Relaxed))
+    }
+}
+
+/// The activation flowing between plan steps: plain f32, or quantized
+/// codes tagged with their scheme (what the next integer GEMM would have
+/// produced by quantizing the f32 tensor — kept in code space instead).
+pub(crate) enum Act {
+    F32(Tensor),
+    I8 { codes: Vec<i8>, n: usize, d: usize, s: Scheme },
+    I16 { codes: Vec<i16>, n: usize, d: usize, s: Scheme },
+}
+
+impl Act {
+    fn rows(&self) -> usize {
+        match self {
+            Act::F32(t) => t.dim(0),
+            Act::I8 { n, .. } | Act::I16 { n, .. } => *n,
+        }
+    }
+}
+
+fn expect_f32(act: Act) -> Tensor {
+    match act {
+        Act::F32(t) => t,
+        _ => panic!("fused plan invariant violated: codes reached a step expecting f32"),
+    }
+}
+
+/// Execute a compiled plan. `timers` may be empty (no timing) or hold one
+/// slot per step.
+pub(crate) fn run_plan(
+    plan: &ExecPlan,
+    ops: &[ExecOp],
+    x: &Tensor,
+    eng: &Engine,
+    timers: &[StepTimer],
+) -> Tensor {
+    let mut act = Act::F32(x.clone());
+    let mut stack: Vec<Tensor> = Vec::new();
+    for (si, step) in plan.steps.iter().enumerate() {
+        let t0 = std::time::Instant::now();
+        act = run_step(step, ops, act, &mut stack, eng);
+        if let Some(t) = timers.get(si) {
+            t.add(t0.elapsed());
+        }
+    }
+    // The fuse pass always emits f32 at the terminal op (no consumer).
+    expect_f32(act)
+}
+
+fn run_step(step: &Step, ops: &[ExecOp], act: Act, stack: &mut Vec<Tensor>, eng: &Engine) -> Act {
+    match step {
+        Step::Linear { op, epi, tile } => {
+            let l = match &ops[*op] {
+                ExecOp::Linear(l) => l,
+                _ => unreachable!("plan step/op mismatch"),
+            };
+            run_linear(l, epi, *tile, act, stack, eng)
+        }
+        Step::Conv { op, epi, tile } => {
+            let cv = match &ops[*op] {
+                ExecOp::Conv(cv) => cv,
+                _ => unreachable!("plan step/op mismatch"),
+            };
+            run_conv(cv, epi.bn.map(|bi| &ops[bi]), epi, *tile, act, stack, eng)
+        }
+        Step::Dw { op, relu, emit } => {
+            let dw = match &ops[*op] {
+                ExecOp::Depthwise(dw) => dw,
+                _ => unreachable!("plan step/op mismatch"),
+            };
+            run_dw(dw, *relu, emit, act)
+        }
+        Step::PoolI8 { op } | Step::PoolI16 { op } => {
+            let (c, h, w) = match &ops[*op] {
+                ExecOp::MaxPool { c, h, w } => (*c, *h, *w),
+                _ => unreachable!("plan step/op mismatch"),
+            };
+            pool_codes(c, h, w, act)
+        }
+        Step::Op(i) => {
+            let cur = expect_f32(act);
+            Act::F32(interp::apply_op(&ops[*i], cur, stack, eng))
+        }
+    }
+}
+
+/// Quantize a finished f32 activation into the form the next step wants.
+/// Uses the exact consumer-side formulas (`Engine::codes_*`), so a codes
+/// emit is bit-identical to handing the consumer the f32 tensor.
+fn emit_tensor(y: Tensor, emit: &Emit, eng: &Engine) -> Act {
+    match emit {
+        Emit::F32 => Act::F32(y),
+        Emit::I8(s) => {
+            let (n, d) = (y.dim(0), y.dim(1));
+            let mut codes = vec![0i8; y.len()];
+            eng.codes_i8(&y.data, &mut codes, *s);
+            Act::I8 { codes, n, d, s: *s }
+        }
+        Emit::I16(s) => {
+            let (n, d) = (y.dim(0), y.dim(1));
+            let mut codes = vec![0i16; y.len()];
+            eng.codes_i16(&y.data, &mut codes, *s);
+            Act::I16 { codes, n, d, s: *s }
+        }
+    }
+}
+
+/// Fused linear: GEMM (codes in when the producer already emitted them) +
+/// bias + optional residual add + ReLU + emit, with the caller's tile.
+fn run_linear(
+    l: &ExecLinear,
+    epi: &Epilogue,
+    tile: crate::fixedpoint::gemm::Tile,
+    act: Act,
+    stack: &mut Vec<Tensor>,
+    eng: &Engine,
+) -> Act {
+    debug_assert!(epi.bn.is_none(), "BN never fuses into linear");
+    let m = act.rows();
+    let saved = if epi.add_pop {
+        Some(stack.pop().expect("fused plan stack underflow (validated at lower time)"))
+    } else {
+        None
+    };
+    let mut y = match &l.kind {
+        LinKind::F32 { w } => {
+            let x = expect_f32(act);
+            assert_eq!(x.dim(1), l.din, "linear input width");
+            let mut y = Tensor::zeros(&[m, l.dout]);
+            eng.gemm_f32_tiled(m, l.din, l.dout, &x.data, &w.data, &mut y.data, tile);
+            y
+        }
+        LinKind::Fq { wq, sx } => {
+            let mut xq = expect_f32(act);
+            assert_eq!(xq.dim(1), l.din, "linear input width");
+            eng.fake_quant_stats(&mut xq.data, *sx);
+            let mut y = Tensor::zeros(&[m, l.dout]);
+            eng.gemm_f32_tiled(m, l.din, l.dout, &xq.data, &wq.data, &mut y.data, tile);
+            y
+        }
+        LinKind::I8 { bt, colsum, sw, sx } => {
+            let mut cab: Vec<i8> = Vec::new();
+            let ca: &[i8] = match &act {
+                Act::I8 { codes, d, s, .. } => {
+                    assert_eq!(*d, l.din, "linear input width");
+                    debug_assert_eq!(*s, *sx, "producer emitted codes at the wrong scheme");
+                    codes
+                }
+                Act::F32(x) => {
+                    assert_eq!(x.dim(1), l.din, "linear input width");
+                    cab = vec![0i8; x.len()];
+                    eng.codes_i8(&x.data, &mut cab, *sx);
+                    &cab
+                }
+                Act::I16 { .. } => panic!("fused plan invariant violated: i16 codes at i8 linear"),
+            };
+            let mut acc = vec![0i32; m * l.dout];
+            eng.gemm_i8_prepacked_tiled(m, l.din, l.dout, ca, bt, colsum, &mut acc, tile);
+            drop(cab);
+            let mut y = Tensor::zeros(&[m, l.dout]);
+            eng.rescale_i32(&acc, sw.resolution() * sx.resolution(), &mut y.data);
+            y
+        }
+        LinKind::I16 { bt, sw, sx } => {
+            let mut cab: Vec<i16> = Vec::new();
+            let ca: &[i16] = match &act {
+                Act::I16 { codes, d, s, .. } => {
+                    assert_eq!(*d, l.din, "linear input width");
+                    debug_assert_eq!(*s, *sx, "producer emitted codes at the wrong scheme");
+                    codes
+                }
+                Act::F32(x) => {
+                    assert_eq!(x.dim(1), l.din, "linear input width");
+                    cab = vec![0i16; x.len()];
+                    eng.codes_i16(&x.data, &mut cab, *sx);
+                    &cab
+                }
+                Act::I8 { .. } => panic!("fused plan invariant violated: i8 codes at i16 linear"),
+            };
+            let mut acc = vec![0i32; m * l.dout];
+            eng.gemm_i16_prepacked_tiled(m, l.din, l.dout, ca, bt, &mut acc, tile);
+            drop(cab);
+            let mut y = Tensor::zeros(&[m, l.dout]);
+            eng.rescale_i32(&acc, sw.resolution() * sx.resolution(), &mut y.data);
+            y
+        }
+    };
+    // Same scalar chain, same order as the unfused interpreter:
+    // bias → residual add → ReLU.
+    y.add_row_bias(&l.b);
+    if let Some(sv) = &saved {
+        y.add_inplace(sv);
+    }
+    if epi.relu {
+        y.map_inplace(|v| v.max(0.0));
+    }
+    emit_tensor(y, &epi.emit, eng)
+}
+
+enum ConvOut {
+    F(Tensor),
+    C8(Vec<i8>, Scheme),
+    C16(Vec<i16>, Scheme),
+}
+
+/// Fused conv: per image, im2col straight into the BT layout (gathering
+/// producer codes when available), prepacked GEMM with the caller's tile,
+/// then one epilogue pass (bias → BN → residual add → ReLU) over the
+/// accumulator block, emitted per the plan.
+#[allow(clippy::too_many_arguments)]
+fn run_conv(
+    cv: &ExecConv,
+    bn_op: Option<&ExecOp>,
+    epi: &Epilogue,
+    tile: crate::fixedpoint::gemm::Tile,
+    act: Act,
+    stack: &mut Vec<Tensor>,
+    eng: &Engine,
+) -> Act {
+    let g = cv.geom;
+    let (h, w) = (cv.in_h, cv.in_w);
+    let (rows, cols) = g.im2col_dims(h, w);
+    let d_in = g.in_c * h * w;
+    let d_out = g.out_c * cols;
+    let n = act.rows();
+    match &act {
+        Act::F32(x) => assert_eq!(x.dim(1), d_in, "conv input size"),
+        Act::I8 { d, .. } | Act::I16 { d, .. } => assert_eq!(*d, d_in, "conv input size"),
+    }
+    let saved = if epi.add_pop {
+        Some(stack.pop().expect("fused plan stack underflow (validated at lower time)"))
+    } else {
+        None
+    };
+    let bnp = bn_op.map(|op| match op {
+        ExecOp::Bn { gamma, beta, mean, istd, .. } => (gamma, beta, mean, istd),
+        _ => unreachable!("plan epilogue bn index must point at a BN op"),
+    });
+    // Per-image scratch (loop-invariant sizes, fully overwritten each pass).
+    let (mut btp8, mut btp16) = (Vec::new(), Vec::new());
+    let (mut colsum, mut acc, mut patch) = (Vec::new(), Vec::new(), Vec::new());
+    match &cv.kind {
+        ConvKind::I8 { .. } => {
+            btp8 = vec![0i8; rows * cols];
+            colsum = vec![0i32; cols];
+            acc = vec![0i32; g.out_c * cols];
+        }
+        ConvKind::I16 { .. } => {
+            btp16 = vec![0i16; rows * cols];
+            acc = vec![0i32; g.out_c * cols];
+        }
+        _ => patch = vec![0.0f32; rows * cols],
+    }
+    let mut vb = vec![0.0f32; d_out];
+    let mut out = match &epi.emit {
+        Emit::F32 => ConvOut::F(Tensor::zeros(&[n, d_out])),
+        Emit::I8(s) => ConvOut::C8(vec![0i8; n * d_out], *s),
+        Emit::I16(s) => ConvOut::C16(vec![0i16; n * d_out], *s),
+    };
+    for img in 0..n {
+        // 1. GEMM block for this image, rescaled into `vb` (f32).
+        match &cv.kind {
+            ConvKind::I8 { cw, sw, sx } => {
+                match &act {
+                    Act::F32(x) => {
+                        let xi = &x.data[img * d_in..(img + 1) * d_in];
+                        im2col_bt_quant_i8(g, h, w, xi, *sx, &mut btp8, &mut colsum);
+                    }
+                    Act::I8 { codes, s, .. } => {
+                        debug_assert_eq!(*s, *sx, "producer emitted codes at the wrong scheme");
+                        let ci = &codes[img * d_in..(img + 1) * d_in];
+                        im2col_bt_codes_i8(g, h, w, ci, &mut btp8, &mut colsum);
+                    }
+                    Act::I16 { .. } => {
+                        panic!("fused plan invariant violated: i16 codes at i8 conv")
+                    }
+                }
+                eng.gemm_i8_prepacked_tiled(g.out_c, rows, cols, cw, &btp8, &colsum, &mut acc, tile);
+                eng.rescale_i32(&acc, sw.resolution() * sx.resolution(), &mut vb);
+            }
+            ConvKind::I16 { cw, sw, sx } => {
+                match &act {
+                    Act::F32(x) => {
+                        let xi = &x.data[img * d_in..(img + 1) * d_in];
+                        im2col_bt_quant_i16(g, h, w, xi, *sx, &mut btp16);
+                    }
+                    Act::I16 { codes, s, .. } => {
+                        debug_assert_eq!(*s, *sx, "producer emitted codes at the wrong scheme");
+                        let ci = &codes[img * d_in..(img + 1) * d_in];
+                        im2col_bt_codes_i16(g, h, w, ci, &mut btp16);
+                    }
+                    Act::I8 { .. } => {
+                        panic!("fused plan invariant violated: i8 codes at i16 conv")
+                    }
+                }
+                eng.gemm_i16_prepacked_tiled(g.out_c, rows, cols, cw, &btp16, &mut acc, tile);
+                eng.rescale_i32(&acc, sw.resolution() * sx.resolution(), &mut vb);
+            }
+            ConvKind::F32 { w: wt } => {
+                let x = match &act {
+                    Act::F32(x) => x,
+                    _ => panic!("fused plan invariant violated: codes at f32 conv"),
+                };
+                let xi = &x.data[img * d_in..(img + 1) * d_in];
+                im2col(g, h, w, xi, &mut patch);
+                eng.gemm_f32_tiled(g.out_c, rows, cols, wt, &patch, &mut vb, tile);
+            }
+            ConvKind::Fq { wq, sx } => {
+                let x = match &act {
+                    Act::F32(x) => x,
+                    _ => panic!("fused plan invariant violated: codes at fq conv"),
+                };
+                let xi = &x.data[img * d_in..(img + 1) * d_in];
+                im2col(g, h, w, xi, &mut patch);
+                eng.fake_quant_stats(&mut patch, *sx);
+                eng.gemm_f32_tiled(g.out_c, rows, cols, wq, &patch, &mut vb, tile);
+            }
+        }
+        // 2. Single epilogue pass, identical scalar chain/order to the
+        // unfused ops: +bias, then BN, then residual add, then ReLU.
+        for oc in 0..g.out_c {
+            let bv = cv.b[oc];
+            for j in 0..cols {
+                let idx = oc * cols + j;
+                let mut v = vb[idx] + bv;
+                if let Some((ga, be, mu, is)) = &bnp {
+                    v = ga[oc] * (v - mu[oc]) * is[oc] + be[oc];
+                }
+                if let Some(sv) = &saved {
+                    v += sv.data[img * d_out + idx];
+                }
+                if epi.relu {
+                    v = v.max(0.0);
+                }
+                vb[idx] = v;
+            }
+        }
+        // 3. Emit this image's block.
+        match &mut out {
+            ConvOut::F(t) => t.data[img * d_out..(img + 1) * d_out].copy_from_slice(&vb),
+            ConvOut::C8(codes, s) => {
+                quantize::codes_i8(&vb, &mut codes[img * d_out..(img + 1) * d_out], *s)
+            }
+            ConvOut::C16(codes, s) => {
+                quantize::codes_i16(&vb, &mut codes[img * d_out..(img + 1) * d_out], *s)
+            }
+        }
+    }
+    match out {
+        ConvOut::F(t) => Act::F32(t),
+        ConvOut::C8(codes, s) => Act::I8 { codes, n, d: d_out, s },
+        ConvOut::C16(codes, s) => Act::I16 { codes, n, d: d_out, s },
+    }
+}
+
+/// Fused depthwise conv. Producer codes dequantize exactly to the
+/// fake-quantized input the unfused path computes (`code · 2^s` is exact in
+/// f32 for every representable code), so accepting codes loses nothing.
+fn run_dw(dw: &ExecDw, relu: bool, emit: &Emit, act: Act) -> Act {
+    {
+        let (c, h, w, stride) = (dw.c, dw.in_h, dw.in_w, dw.stride);
+        let d_in = c * h * w;
+        let (oh, ow) = ((h + 2 - 3) / stride + 1, (w + 2 - 3) / stride + 1);
+        let xq: Tensor = match act {
+            Act::F32(x) => {
+                assert_eq!(x.dim(1), d_in, "depthwise input size");
+                match dw.sx {
+                    None => x,
+                    Some(sx) => {
+                        let mut xq = x;
+                        quantize::fake_quant_stats_inplace(&mut xq.data, sx);
+                        xq
+                    }
+                }
+            }
+            Act::I8 { codes, n, d, s } => {
+                assert_eq!(d, d_in, "depthwise input size");
+                debug_assert_eq!(Some(s), dw.sx, "producer emitted codes at the wrong scheme");
+                let r = s.resolution();
+                let mut xq = Tensor::zeros(&[n, d]);
+                for (o, &cd) in xq.data.iter_mut().zip(&codes) {
+                    *o = cd as f32 * r;
+                }
+                xq
+            }
+            Act::I16 { codes, n, d, s } => {
+                assert_eq!(d, d_in, "depthwise input size");
+                debug_assert_eq!(Some(s), dw.sx, "producer emitted codes at the wrong scheme");
+                let r = s.resolution();
+                let mut xq = Tensor::zeros(&[n, d]);
+                for (o, &cd) in xq.data.iter_mut().zip(&codes) {
+                    *o = cd as f32 * r;
+                }
+                xq
+            }
+        };
+        let n = xq.dim(0);
+        let mut y = Tensor::zeros(&[n, c * oh * ow]);
+        for img in 0..n {
+            for ch in 0..c {
+                let xi = &xq.data[img * c * h * w + ch * h * w..][..h * w];
+                let k = &dw.wq[ch * 9..(ch + 1) * 9];
+                let oi = &mut y.data[img * c * oh * ow + ch * oh * ow..][..oh * ow];
+                dw_channel(k, xi, oi, h, w, oh, ow, stride);
+            }
+        }
+        if relu {
+            y.map_inplace(|v| v.max(0.0));
+        }
+        match emit {
+            Emit::F32 => Act::F32(y),
+            Emit::I8(s) => {
+                let (n, d) = (y.dim(0), y.dim(1));
+                let mut codes = vec![0i8; y.len()];
+                quantize::codes_i8(&y.data, &mut codes, *s);
+                Act::I8 { codes, n, d, s: *s }
+            }
+            Emit::I16(s) => {
+                let (n, d) = (y.dim(0), y.dim(1));
+                let mut codes = vec![0i16; y.len()];
+                quantize::codes_i16(&y.data, &mut codes, *s);
+                Act::I16 { codes, n, d, s: *s }
+            }
+        }
+    }
+}
+
+/// 2×2 stride-2 max pool directly on integer codes. Legal because
+/// quantization is monotone and the pooled maximum is one of the pooled
+/// values: `quant(max(vs)) == max(quant(vs))` exactly.
+fn pool_codes(c: usize, h: usize, w: usize, act: Act) -> Act {
+    match act {
+        Act::I8 { codes, n, d, s } => {
+            assert_eq!(d, c * h * w, "maxpool input size");
+            let (oh, ow) = (h / 2, w / 2);
+            let mut out = vec![0i8; n * c * oh * ow];
+            pool_block(&codes, &mut out, n, c, h, w, oh, ow, i8::MIN);
+            Act::I8 { codes: out, n, d: c * oh * ow, s }
+        }
+        Act::I16 { codes, n, d, s } => {
+            assert_eq!(d, c * h * w, "maxpool input size");
+            let (oh, ow) = (h / 2, w / 2);
+            let mut out = vec![0i16; n * c * oh * ow];
+            pool_block(&codes, &mut out, n, c, h, w, oh, ow, i16::MIN);
+            Act::I16 { codes: out, n, d: c * oh * ow, s }
+        }
+        Act::F32(_) => panic!("fused plan invariant violated: f32 at a codes max-pool"),
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
+fn pool_block<T: Copy + PartialOrd>(
+    src: &[T],
+    dst: &mut [T],
+    n: usize,
+    c: usize,
+    h: usize,
+    w: usize,
+    oh: usize,
+    ow: usize,
+    floor: T,
+) {
+    for img in 0..n {
+        for ch in 0..c {
+            let xi = &src[img * c * h * w + ch * h * w..][..h * w];
+            let base_o = img * c * oh * ow + ch * oh * ow;
+            for oy in 0..oh {
+                for ox in 0..ow {
+                    let mut best = floor;
+                    for dy in 0..2 {
+                        for dx in 0..2 {
+                            let v = xi[(2 * oy + dy) * w + 2 * ox + dx];
+                            if v > best {
+                                best = v;
+                            }
+                        }
+                    }
+                    dst[base_o + oy * ow + ox] = best;
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fixedpoint::quantize;
+
+    #[test]
+    fn step_timer_accumulates() {
+        let t = StepTimer::new();
+        t.add(Duration::from_nanos(40));
+        t.add(Duration::from_nanos(2));
+        assert_eq!(t.snapshot(), (42, 2));
+    }
+
+    #[test]
+    fn pool_on_codes_commutes_with_quantize() {
+        // quant(maxpool(x)) == maxpool(quant(x)) — the legality condition
+        // for running max-pool in code space.
+        let (c, h, w) = (2, 4, 6);
+        let s = Scheme { bits: 8, s: -4 };
+        let xs: Vec<f32> = (0..2 * c * h * w)
+            .map(|i| ((i * 37 + 11) % 97) as f32 * 0.11 - 5.0)
+            .collect();
+        let mut x = Tensor::zeros(&[2, c * h * w]);
+        x.data.copy_from_slice(&xs);
+        // f32 pool then quantize.
+        let pooled = interp::exec_maxpool(c, h, w, &x);
+        let mut want = vec![0i8; pooled.len()];
+        quantize::codes_i8(&pooled.data, &mut want, s);
+        // quantize then code-space pool.
+        let mut codes = vec![0i8; xs.len()];
+        quantize::codes_i8(&xs, &mut codes, s);
+        let got = pool_codes(c, h, w, Act::I8 { codes, n: 2, d: c * h * w, s });
+        match got {
+            Act::I8 { codes, d, .. } => {
+                assert_eq!(d, c * (h / 2) * (w / 2));
+                assert_eq!(codes, want);
+            }
+            _ => panic!("pool must stay in codes"),
+        }
+    }
+}

@@ -1,0 +1,404 @@
+//! The fusion pass: [`ExecOp`] list → [`ExecPlan`] (DESIGN.md
+//! §Inference-Compiler).
+//!
+//! A plan step is either one fused group — a GEMM-ish op with its whole
+//! epilogue (folded BN, residual add, ReLU) and an *emission* decision —
+//! or a single pass-through op executed by the shared interpreter.
+//!
+//! Emission is decided by lookahead: if the next real consumer (skipping
+//! only max-pools) is an integer GEMM, the group emits that consumer's
+//! activation codes directly and the intervening max-pools run in code
+//! space. Every other op — `Push`, `Swap`, `AddPopRelu` not absorbed into
+//! an epilogue, `ConcatPop`, standalone BN/ReLU, global average pool, and
+//! the end of the program — is a barrier that forces an f32 emit. These are
+//! exactly the rewrites with an exactness argument (quantization is
+//! monotone, so pooling commutes with it; the epilogue chain is the same
+//! scalar f32 program in the same order), which is what keeps the fused
+//! executor bit-identical to the unfused interpreter.
+
+use crate::fixedpoint::gemm::Tile;
+use crate::fixedpoint::Scheme;
+
+use super::ir::{ConvKind, ExecOp, LinKind};
+use super::tune::{lookup, GemmKind, ShapeKey, TuneEntry, TUNE_BATCH};
+
+/// What a fused group hands to the next step.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub(crate) enum Emit {
+    /// Plain f32 tensor (barrier follows, or the consumer is f32/fq).
+    F32,
+    /// int8 codes at the consumer's activation scheme.
+    I8(Scheme),
+    /// int16 codes at the consumer's activation scheme.
+    I16(Scheme),
+}
+
+/// The fused tail of a GEMM step, applied in one pass over the accumulator:
+/// bias (always) → BN → residual add → ReLU → emit.
+#[derive(Clone, Copy, Debug)]
+pub(crate) struct Epilogue {
+    /// Index of the folded `ExecOp::Bn` (conv groups only).
+    pub(crate) bn: Option<usize>,
+    /// Absorbed `AddPopRelu`: pop the saved tensor and add it (implies
+    /// `relu`).
+    pub(crate) add_pop: bool,
+    /// Absorbed trailing ReLU.
+    pub(crate) relu: bool,
+    /// Output form.
+    pub(crate) emit: Emit,
+}
+
+/// One executable plan step. GEMM steps reference their op by index (the
+/// pre-packed weights live in the op list — no duplication) and carry the
+/// autotuned tile.
+pub(crate) enum Step {
+    Linear { op: usize, epi: Epilogue, tile: Tile },
+    Conv { op: usize, epi: Epilogue, tile: Tile },
+    Dw { op: usize, relu: bool, emit: Emit },
+    /// Max-pool executed on int8 codes.
+    PoolI8 { op: usize },
+    /// Max-pool executed on int16 codes.
+    PoolI16 { op: usize },
+    /// Pass-through: run `ops[i]` in the shared interpreter (f32 in/out).
+    Op(usize),
+}
+
+/// A compiled execution plan: fused steps, display labels (aligned with
+/// `steps`), and the tile decisions that should be written back to the
+/// artifact's plan cache.
+pub(crate) struct ExecPlan {
+    pub(crate) steps: Vec<Step>,
+    pub(crate) labels: Vec<String>,
+    pub(crate) tuned: Vec<TuneEntry>,
+}
+
+impl ExecPlan {
+    /// How many steps emit integer codes instead of f32 (the "stayed in
+    /// code space" edges the compile report counts).
+    pub(crate) fn code_edges(&self) -> usize {
+        self.steps
+            .iter()
+            .filter(|s| {
+                let e = match s {
+                    Step::Linear { epi, .. } | Step::Conv { epi, .. } => &epi.emit,
+                    Step::Dw { emit, .. } => emit,
+                    Step::PoolI8 { .. } | Step::PoolI16 { .. } => return true,
+                    _ => return false,
+                };
+                !matches!(e, Emit::F32)
+            })
+            .count()
+    }
+}
+
+/// What the next real consumer (skipping max-pools only) wants as input.
+fn decide_emit(ops: &[ExecOp], j: usize) -> Emit {
+    let mut k = j;
+    while matches!(ops.get(k), Some(ExecOp::MaxPool { .. })) {
+        k += 1;
+    }
+    match ops.get(k) {
+        Some(ExecOp::Linear(l)) => match &l.kind {
+            LinKind::I8 { sx, .. } => Emit::I8(*sx),
+            LinKind::I16 { sx, .. } => Emit::I16(*sx),
+            _ => Emit::F32,
+        },
+        Some(ExecOp::Conv(cv)) => match &cv.kind {
+            ConvKind::I8 { sx, .. } => Emit::I8(*sx),
+            ConvKind::I16 { sx, .. } => Emit::I16(*sx),
+            _ => Emit::F32,
+        },
+        Some(ExecOp::Depthwise(dw)) => match dw.sx {
+            Some(s) if s.bits <= 8 => Emit::I8(s),
+            Some(s) if s.bits <= 16 => Emit::I16(s),
+            _ => Emit::F32,
+        },
+        _ => Emit::F32,
+    }
+}
+
+/// After a codes emit, absorb the max-pools sitting between the producer
+/// and its consumer as code-space pool steps.
+fn consume_pools(ops: &[ExecOp], mut i: usize, emit: &Emit, steps: &mut Vec<Step>) -> usize {
+    loop {
+        match (emit, ops.get(i)) {
+            (Emit::I8(_), Some(ExecOp::MaxPool { .. })) => {
+                steps.push(Step::PoolI8 { op: i });
+                i += 1;
+            }
+            (Emit::I16(_), Some(ExecOp::MaxPool { .. })) => {
+                steps.push(Step::PoolI16 { op: i });
+                i += 1;
+            }
+            _ => return i,
+        }
+    }
+}
+
+/// Absorb a trailing `Relu` / `AddPopRelu` at `j` into an epilogue.
+/// Returns (relu, add_pop, next index).
+fn take_activation(ops: &[ExecOp], j: usize) -> (bool, bool, usize) {
+    match ops.get(j) {
+        Some(ExecOp::Relu) => (true, false, j + 1),
+        Some(ExecOp::AddPopRelu) => (true, true, j + 1),
+        _ => (false, false, j),
+    }
+}
+
+/// Build the fused plan (default tiles; [`apply_tiles`] patches in tuned
+/// ones afterwards).
+pub(crate) fn build_plan(ops: &[ExecOp]) -> ExecPlan {
+    let mut steps = Vec::new();
+    let mut i = 0;
+    while i < ops.len() {
+        match &ops[i] {
+            ExecOp::Linear(_) => {
+                let (relu, add_pop, j) = take_activation(ops, i + 1);
+                let emit = decide_emit(ops, j);
+                steps.push(Step::Linear {
+                    op: i,
+                    epi: Epilogue { bn: None, add_pop, relu, emit },
+                    tile: Tile::default(),
+                });
+                i = consume_pools(ops, j, &emit, &mut steps);
+            }
+            ExecOp::Conv(cv) => {
+                let mut j = i + 1;
+                let mut bn = None;
+                if let Some(ExecOp::Bn { c, hw, .. }) = ops.get(j) {
+                    let (_, cols) = cv.geom.im2col_dims(cv.in_h, cv.in_w);
+                    if *c == cv.geom.out_c && *hw == cols {
+                        bn = Some(j);
+                        j += 1;
+                    }
+                }
+                let (relu, add_pop, j) = take_activation(ops, j);
+                let emit = decide_emit(ops, j);
+                steps.push(Step::Conv {
+                    op: i,
+                    epi: Epilogue { bn, add_pop, relu, emit },
+                    tile: Tile::default(),
+                });
+                i = consume_pools(ops, j, &emit, &mut steps);
+            }
+            ExecOp::Depthwise(_) => {
+                let (relu, _, j) = match ops.get(i + 1) {
+                    Some(ExecOp::Relu) => (true, false, i + 2),
+                    _ => (false, false, i + 1),
+                };
+                let emit = decide_emit(ops, j);
+                steps.push(Step::Dw { op: i, relu, emit });
+                i = consume_pools(ops, j, &emit, &mut steps);
+            }
+            _ => {
+                steps.push(Step::Op(i));
+                i += 1;
+            }
+        }
+    }
+    let labels = steps.iter().map(|s| step_label(ops, s)).collect();
+    ExecPlan { steps, labels, tuned: Vec::new() }
+}
+
+/// The autotuner shape of one step, if it is a tiled GEMM.
+pub(crate) fn step_shape(ops: &[ExecOp], step: &Step) -> Option<ShapeKey> {
+    match step {
+        Step::Linear { op, .. } => {
+            let l = match &ops[*op] {
+                ExecOp::Linear(l) => l,
+                _ => unreachable!("plan step/op mismatch"),
+            };
+            let kind = match &l.kind {
+                LinKind::I8 { .. } => GemmKind::I8,
+                LinKind::I16 { .. } => GemmKind::I16,
+                _ => GemmKind::F32,
+            };
+            Some(ShapeKey { kind, m: TUNE_BATCH, k: l.din, n: l.dout })
+        }
+        Step::Conv { op, .. } => {
+            let cv = match &ops[*op] {
+                ExecOp::Conv(cv) => cv,
+                _ => unreachable!("plan step/op mismatch"),
+            };
+            let (rows, cols) = cv.geom.im2col_dims(cv.in_h, cv.in_w);
+            let kind = match &cv.kind {
+                ConvKind::I8 { .. } => GemmKind::I8,
+                ConvKind::I16 { .. } => GemmKind::I16,
+                _ => GemmKind::F32,
+            };
+            Some(ShapeKey { kind, m: cv.geom.out_c, k: rows, n: cols })
+        }
+        _ => None,
+    }
+}
+
+/// Every tunable shape in plan order (with duplicates; the tuner dedupes).
+pub(crate) fn shape_keys(ops: &[ExecOp], steps: &[Step]) -> Vec<ShapeKey> {
+    steps.iter().filter_map(|s| step_shape(ops, s)).collect()
+}
+
+/// Patch resolved tiles into the plan's GEMM steps; shapes without an
+/// entry keep the default tile.
+pub(crate) fn apply_tiles(ops: &[ExecOp], steps: &mut [Step], entries: &[TuneEntry]) {
+    for s in steps.iter_mut() {
+        let Some(key) = step_shape(ops, s) else { continue };
+        let Some(tile) = lookup(entries, key) else { continue };
+        match s {
+            Step::Linear { tile: t, .. } | Step::Conv { tile: t, .. } => *t = tile,
+            _ => {}
+        }
+    }
+}
+
+fn step_label(ops: &[ExecOp], step: &Step) -> String {
+    let decorate = |op: usize, bn: bool, add_pop: bool, relu: bool, emit: &Emit| {
+        let mut l = ops[op].describe();
+        if bn {
+            l.push_str("+bn");
+        }
+        if add_pop {
+            l.push_str("+add+relu");
+        } else if relu {
+            l.push_str("+relu");
+        }
+        match emit {
+            Emit::I8(_) => l.push_str("->i8"),
+            Emit::I16(_) => l.push_str("->i16"),
+            Emit::F32 => {}
+        }
+        l
+    };
+    match step {
+        Step::Linear { op, epi, .. } | Step::Conv { op, epi, .. } => {
+            decorate(*op, epi.bn.is_some(), epi.add_pop, epi.relu, &epi.emit)
+        }
+        Step::Dw { op, relu, emit } => decorate(*op, false, false, *relu, emit),
+        Step::PoolI8 { .. } => "maxpool@i8".to_string(),
+        Step::PoolI16 { .. } => "maxpool@i16".to_string(),
+        Step::Op(i) => ops[*i].describe(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::ir::{lower, InferOp};
+    use super::*;
+    use crate::tensor::Tensor;
+
+    fn sch(bits: u8, s: i32) -> Scheme {
+        Scheme { bits, s }
+    }
+
+    fn lin(name: &str, din: usize, dout: usize, q: Option<(Scheme, Scheme)>) -> InferOp {
+        InferOp::Linear {
+            name: name.to_string(),
+            w: Tensor::zeros(&[din, dout]),
+            b: vec![0.0; dout],
+            sw: q.map(|(sw, _)| sw),
+            sx: q.map(|(_, sx)| sx),
+        }
+    }
+
+    #[test]
+    fn mlp_chain_stays_in_codes() {
+        let q = Some((sch(8, -6), sch(8, -4)));
+        let ops = vec![lin("fc0", 4, 8, q), InferOp::Relu, lin("fc1", 8, 3, q)];
+        let low = lower("t", ops).unwrap();
+        let plan = build_plan(&low.ops);
+        assert_eq!(plan.steps.len(), 2);
+        match &plan.steps[0] {
+            Step::Linear { epi, .. } => {
+                assert!(epi.relu && !epi.add_pop);
+                assert_eq!(epi.emit, Emit::I8(sch(8, -4)));
+            }
+            _ => panic!("expected fused linear"),
+        }
+        match &plan.steps[1] {
+            Step::Linear { epi, .. } => assert_eq!(epi.emit, Emit::F32),
+            _ => panic!("expected fused linear"),
+        }
+        assert_eq!(plan.code_edges(), 1);
+        assert!(plan.labels[0].contains("+relu") && plan.labels[0].contains("->i8"));
+    }
+
+    #[test]
+    fn push_is_a_barrier_and_add_pop_fuses() {
+        let q = Some((sch(8, -6), sch(8, -4)));
+        let ops = vec![
+            lin("fcin", 4, 4, q),
+            InferOp::Push,
+            lin("fc0", 4, 4, q),
+            InferOp::AddPopRelu,
+            lin("fc1", 4, 3, q),
+        ];
+        let low = lower("t", ops).unwrap();
+        let plan = build_plan(&low.ops);
+        // fcin | push | fc0+add+relu | fc1
+        assert_eq!(plan.steps.len(), 4);
+        match &plan.steps[0] {
+            // Push right after fcin is a barrier: must emit f32.
+            Step::Linear { epi, .. } => assert_eq!(epi.emit, Emit::F32),
+            _ => panic!("expected fused linear"),
+        }
+        assert!(matches!(plan.steps[1], Step::Op(1)));
+        match &plan.steps[2] {
+            Step::Linear { epi, .. } => {
+                assert!(epi.add_pop && epi.relu);
+                // next consumer is fc1 (i8) — codes emit is still legal
+                // after a fused residual add.
+                assert_eq!(epi.emit, Emit::I8(sch(8, -4)));
+            }
+            _ => panic!("expected fused linear"),
+        }
+    }
+
+    #[test]
+    fn pools_run_in_code_space_between_int_convs() {
+        use crate::fixedpoint::conv::Conv2dGeom;
+        let g = Conv2dGeom { in_c: 1, out_c: 2, kh: 3, kw: 3, stride: 1, pad: 1 };
+        let g2 = Conv2dGeom { in_c: 2, out_c: 2, kh: 3, kw: 3, stride: 1, pad: 1 };
+        let q = Some((sch(8, -6), sch(8, -4)));
+        let conv = |name: &str, g: Conv2dGeom, h: usize, w: usize| InferOp::Conv {
+            name: name.to_string(),
+            geom: g,
+            in_h: h,
+            in_w: w,
+            w: Tensor::zeros(&[g.out_c, g.in_c * g.kh * g.kw]),
+            b: vec![0.0; g.out_c],
+            sw: q.map(|(sw, _)| sw),
+            sx: q.map(|(_, sx)| sx),
+        };
+        let ops = vec![
+            conv("c0", g, 8, 8),
+            InferOp::Relu,
+            InferOp::MaxPool { c: 2, h: 8, w: 8 },
+            conv("c1", g2, 4, 4),
+        ];
+        let low = lower("t", ops).unwrap();
+        let plan = build_plan(&low.ops);
+        assert_eq!(plan.steps.len(), 3);
+        assert!(matches!(
+            plan.steps[0],
+            Step::Conv { epi: Epilogue { emit: Emit::I8(_), relu: true, .. }, .. }
+        ));
+        assert!(matches!(plan.steps[1], Step::PoolI8 { op: 2 }));
+        assert!(matches!(plan.steps[2], Step::Conv { .. }));
+        assert_eq!(plan.code_edges(), 2);
+    }
+
+    #[test]
+    fn tiles_patch_into_matching_steps() {
+        let q = Some((sch(8, -6), sch(8, -4)));
+        let ops = vec![lin("fc0", 4, 8, q)];
+        let low = lower("t", ops).unwrap();
+        let mut plan = build_plan(&low.ops);
+        let key = step_shape(&low.ops, &plan.steps[0]).unwrap();
+        assert_eq!(key, ShapeKey { kind: GemmKind::I8, m: TUNE_BATCH, k: 4, n: 8 });
+        let tile = Tile { mc: 7, kc: 9, shard: 0 };
+        apply_tiles(&low.ops, &mut plan.steps, &[TuneEntry { key, tile }]);
+        match &plan.steps[0] {
+            Step::Linear { tile: t, .. } => assert_eq!(*t, tile),
+            _ => panic!("expected linear step"),
+        }
+    }
+}

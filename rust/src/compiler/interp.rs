@@ -1,0 +1,299 @@
+//! The unfused reference interpreter: one [`ExecOp`] at a time, f32
+//! activations between every op (DESIGN.md §Inference-Compiler).
+//!
+//! This is the oracle the fused plan executor ([`super::exec`]) is pinned
+//! against, and the serving path behind `apt serve --no-fuse`. It is *not*
+//! naive: weights are pre-quantized/pre-packed at lower time, and the conv
+//! path quantizes + gathers each image's im2col patch straight into the BT
+//! layout (`fixedpoint::conv::im2col_bt_quant_*`), so even the interpreter
+//! allocates no pack buffers per GEMM call — the per-call `pack_bt_*` of
+//! the original serving tier is gone from both execution strategies.
+
+use crate::fixedpoint::conv::{im2col, im2col_bt_quant_i16, im2col_bt_quant_i8};
+use crate::fixedpoint::quantize;
+use crate::kernels::Engine;
+use crate::tensor::Tensor;
+
+use super::exec::StepTimer;
+use super::ir::{ConvKind, ExecConv, ExecDw, ExecLinear, ExecOp, LinKind};
+
+/// Run the full op list unfused. `timers` may be empty (no timing) or hold
+/// one slot per op.
+pub(crate) fn run_unfused(ops: &[ExecOp], x: &Tensor, eng: &Engine, timers: &[StepTimer]) -> Tensor {
+    let mut cur = x.clone();
+    let mut stack: Vec<Tensor> = Vec::new();
+    for (i, op) in ops.iter().enumerate() {
+        let t0 = std::time::Instant::now();
+        cur = apply_op(op, cur, &mut stack, eng);
+        if let Some(t) = timers.get(i) {
+            t.add(t0.elapsed());
+        }
+    }
+    cur
+}
+
+/// Execute one op against the current activation + value stack. Shared
+/// verbatim by the fused plan executor for ops outside any fusion group,
+/// so pass-through semantics cannot drift between the two strategies.
+pub(crate) fn apply_op(op: &ExecOp, cur: Tensor, stack: &mut Vec<Tensor>, eng: &Engine) -> Tensor {
+    match op {
+        ExecOp::Linear(l) => exec_linear(l, &cur, eng),
+        ExecOp::Conv(cv) => exec_conv(cv, &cur, eng),
+        ExecOp::Depthwise(dw) => exec_depthwise(dw, &cur),
+        ExecOp::Relu => {
+            let mut y = cur;
+            y.map_inplace(|v| v.max(0.0));
+            y
+        }
+        ExecOp::MaxPool { c, h, w } => exec_maxpool(*c, *h, *w, &cur),
+        ExecOp::Gap { c, h, w } => exec_gap(*c, *h, *w, &cur),
+        ExecOp::Bn { c, hw, gamma, beta, mean, istd } => {
+            let mut y = cur;
+            let n = y.dim(0);
+            for ch in 0..*c {
+                let (g, b) = (gamma[ch], beta[ch]);
+                let (m, is) = (mean[ch], istd[ch]);
+                for img in 0..n {
+                    for i in 0..*hw {
+                        let idx = img * c * hw + ch * hw + i;
+                        let v = y.data[idx];
+                        y.data[idx] = g * (v - m) * is + b;
+                    }
+                }
+            }
+            y
+        }
+        // Stack discipline is verified by `ir::lower` at freeze time, so
+        // the pops/peeks below cannot underflow on any constructible model.
+        ExecOp::Push => {
+            stack.push(cur.clone());
+            cur
+        }
+        ExecOp::Swap => {
+            let mut cur = cur;
+            let top = stack.last_mut().expect("serve stack underflow (Swap)");
+            std::mem::swap(top, &mut cur);
+            cur
+        }
+        ExecOp::AddPopRelu => {
+            let saved = stack.pop().expect("serve stack underflow (AddPopRelu)");
+            let mut h = cur;
+            h.add_inplace(&saved);
+            h.map_inplace(|v| v.max(0.0));
+            h
+        }
+        ExecOp::ConcatPop { c_pop, c_cur, hw } => {
+            let first = stack.pop().expect("serve stack underflow (ConcatPop)");
+            let n = cur.dim(0);
+            let (c1, c3, hw) = (*c_pop, *c_cur, *hw);
+            let mut out = Tensor::zeros(&[n, (c1 + c3) * hw]);
+            for img in 0..n {
+                out.data[img * (c1 + c3) * hw..][..c1 * hw]
+                    .copy_from_slice(&first.data[img * c1 * hw..][..c1 * hw]);
+                out.data[img * (c1 + c3) * hw + c1 * hw..][..c3 * hw]
+                    .copy_from_slice(&cur.data[img * c3 * hw..][..c3 * hw]);
+            }
+            out
+        }
+    }
+}
+
+pub(crate) fn exec_linear(l: &ExecLinear, x: &Tensor, eng: &Engine) -> Tensor {
+    let m = x.dim(0);
+    assert_eq!(x.dim(1), l.din, "linear input width");
+    match &l.kind {
+        LinKind::F32 { w } => {
+            let mut y = x.matmul_with(w, eng);
+            y.add_row_bias(&l.b);
+            y
+        }
+        LinKind::Fq { wq, sx } => {
+            let mut xq = x.clone();
+            eng.fake_quant_stats(&mut xq.data, *sx);
+            let mut y = xq.matmul_with(wq, eng);
+            y.add_row_bias(&l.b);
+            y
+        }
+        LinKind::I8 { bt, colsum, sw, sx } => {
+            let mut ca = vec![0i8; x.len()];
+            eng.codes_i8(&x.data, &mut ca, *sx);
+            let mut acc = vec![0i32; m * l.dout];
+            eng.gemm_i8_prepacked(m, l.din, l.dout, &ca, bt, colsum, &mut acc);
+            let mut y = Tensor::zeros(&[m, l.dout]);
+            eng.rescale_i32(&acc, sw.resolution() * sx.resolution(), &mut y.data);
+            y.add_row_bias(&l.b);
+            y
+        }
+        LinKind::I16 { bt, sw, sx } => {
+            let mut ca = vec![0i16; x.len()];
+            eng.codes_i16(&x.data, &mut ca, *sx);
+            let mut acc = vec![0i32; m * l.dout];
+            eng.gemm_i16_prepacked(m, l.din, l.dout, &ca, bt, &mut acc);
+            let mut y = Tensor::zeros(&[m, l.dout]);
+            eng.rescale_i32(&acc, sw.resolution() * sx.resolution(), &mut y.data);
+            y.add_row_bias(&l.b);
+            y
+        }
+    }
+}
+
+pub(crate) fn exec_conv(cv: &ExecConv, x: &Tensor, eng: &Engine) -> Tensor {
+    let n = x.dim(0);
+    let g = cv.geom;
+    let (h, w) = (cv.in_h, cv.in_w);
+    assert_eq!(x.dim(1), g.in_c * h * w, "conv input size");
+    let (rows, cols) = g.im2col_dims(h, w);
+    let (oh, ow) = g.out_hw(h, w);
+    let mut out = Tensor::zeros(&[n, g.out_c * oh * ow]);
+    // Per-image scratch, hoisted out of the hot loop (sizes are
+    // loop-invariant; every pass fully overwrites its buffer). The int
+    // paths quantize + gather the patch straight into the BT layout and
+    // feed the prepacked GEMM entry points — no per-call `pack_bt_*`.
+    let mut patch = Vec::new();
+    let (mut btp8, mut btp16, mut colsum, mut acc) = (Vec::new(), Vec::new(), Vec::new(), Vec::new());
+    match &cv.kind {
+        ConvKind::I8 { .. } => {
+            btp8 = vec![0i8; rows * cols];
+            colsum = vec![0i32; cols];
+            acc = vec![0i32; g.out_c * cols];
+        }
+        ConvKind::I16 { .. } => {
+            btp16 = vec![0i16; rows * cols];
+            acc = vec![0i32; g.out_c * cols];
+        }
+        _ => patch = vec![0.0f32; rows * cols],
+    }
+    for img in 0..n {
+        let xi = &x.data[img * g.in_c * h * w..(img + 1) * g.in_c * h * w];
+        let co = &mut out.data[img * g.out_c * cols..(img + 1) * g.out_c * cols];
+        match &cv.kind {
+            ConvKind::F32 { w: wt } => {
+                im2col(g, h, w, xi, &mut patch);
+                eng.gemm_f32(g.out_c, rows, cols, wt, &patch, co);
+            }
+            ConvKind::Fq { wq, sx } => {
+                im2col(g, h, w, xi, &mut patch);
+                eng.fake_quant_stats(&mut patch, *sx);
+                eng.gemm_f32(g.out_c, rows, cols, wq, &patch, co);
+            }
+            ConvKind::I8 { cw, sw, sx } => {
+                im2col_bt_quant_i8(g, h, w, xi, *sx, &mut btp8, &mut colsum);
+                eng.gemm_i8_prepacked(g.out_c, rows, cols, cw, &btp8, &colsum, &mut acc);
+                eng.rescale_i32(&acc, sw.resolution() * sx.resolution(), co);
+            }
+            ConvKind::I16 { cw, sw, sx } => {
+                im2col_bt_quant_i16(g, h, w, xi, *sx, &mut btp16);
+                eng.gemm_i16_prepacked(g.out_c, rows, cols, cw, &btp16, &mut acc);
+                eng.rescale_i32(&acc, sw.resolution() * sx.resolution(), co);
+            }
+        }
+        for oc in 0..g.out_c {
+            let bv = cv.b[oc];
+            for v in co[oc * cols..(oc + 1) * cols].iter_mut() {
+                *v += bv;
+            }
+        }
+    }
+    out
+}
+
+pub(crate) fn exec_depthwise(dw: &ExecDw, x: &Tensor) -> Tensor {
+    let n = x.dim(0);
+    let (c, h, w, stride) = (dw.c, dw.in_h, dw.in_w, dw.stride);
+    assert_eq!(x.dim(1), c * h * w, "depthwise input size");
+    let (oh, ow) = ((h + 2 - 3) / stride + 1, (w + 2 - 3) / stride + 1);
+    let xq = match dw.sx {
+        None => x.clone(),
+        Some(sx) => {
+            let mut xq = x.clone();
+            quantize::fake_quant_stats_inplace(&mut xq.data, sx);
+            xq
+        }
+    };
+    let mut out = Tensor::zeros(&[n, c * oh * ow]);
+    for img in 0..n {
+        for ch in 0..c {
+            let xi = &xq.data[img * c * h * w + ch * h * w..][..h * w];
+            let k = &dw.wq[ch * 9..(ch + 1) * 9];
+            let oi = &mut out.data[img * c * oh * ow + ch * oh * ow..][..oh * ow];
+            dw_channel(k, xi, oi, h, w, oh, ow, stride);
+        }
+    }
+    out
+}
+
+/// One depthwise 3×3 channel: `oi = k ⊛ xi` (pad 1). Shared with the fused
+/// executor so the inner arithmetic cannot drift.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn dw_channel(
+    k: &[f32],
+    xi: &[f32],
+    oi: &mut [f32],
+    h: usize,
+    w: usize,
+    oh: usize,
+    ow: usize,
+    stride: usize,
+) {
+    for oy in 0..oh {
+        for ox in 0..ow {
+            let mut acc = 0.0f32;
+            for ky in 0..3 {
+                let iy = (oy * stride + ky) as isize - 1;
+                if iy < 0 || iy >= h as isize {
+                    continue;
+                }
+                for kx in 0..3 {
+                    let ix = (ox * stride + kx) as isize - 1;
+                    if ix < 0 || ix >= w as isize {
+                        continue;
+                    }
+                    acc += k[ky * 3 + kx] * xi[iy as usize * w + ix as usize];
+                }
+            }
+            oi[oy * ow + ox] = acc;
+        }
+    }
+}
+
+pub(crate) fn exec_maxpool(c: usize, h: usize, w: usize, x: &Tensor) -> Tensor {
+    let n = x.dim(0);
+    assert_eq!(x.dim(1), c * h * w, "maxpool input size");
+    let (oh, ow) = (h / 2, w / 2);
+    let mut y = Tensor::zeros(&[n, c * oh * ow]);
+    for img in 0..n {
+        for ch in 0..c {
+            let xi = &x.data[img * c * h * w + ch * h * w..][..h * w];
+            let base_o = img * c * oh * ow + ch * oh * ow;
+            for oy in 0..oh {
+                for ox in 0..ow {
+                    let mut best = f32::NEG_INFINITY;
+                    for dy in 0..2 {
+                        for dx in 0..2 {
+                            let idx = (2 * oy + dy) * w + 2 * ox + dx;
+                            if xi[idx] > best {
+                                best = xi[idx];
+                            }
+                        }
+                    }
+                    y.data[base_o + oy * ow + ox] = best;
+                }
+            }
+        }
+    }
+    y
+}
+
+pub(crate) fn exec_gap(c: usize, h: usize, w: usize, x: &Tensor) -> Tensor {
+    let n = x.dim(0);
+    let hw = h * w;
+    assert_eq!(x.dim(1), c * hw, "global-pool input size");
+    let mut y = Tensor::zeros(&[n, c]);
+    for img in 0..n {
+        for ch in 0..c {
+            let s: f32 = x.data[img * c * hw + ch * hw..][..hw].iter().sum();
+            y.data[img * c + ch] = s / hw as f32;
+        }
+    }
+    y
+}

@@ -1,0 +1,381 @@
+//! The serving IR (DESIGN.md §Inference-Compiler).
+//!
+//! Two levels, one lowering:
+//!
+//! - [`InferOp`] — the *export* IR: what `nn::Layer::export_infer` emits.
+//!   Weights are still f32 tensors; schemes are attached but not applied.
+//! - [`ExecOp`] — the *executable* IR: weights pre-quantized once (int8
+//!   codes in the transposed BT/VNNI layout with column sums, int16 BT
+//!   codes, or pre-fake-quantized f32), batch-norm already folded by the
+//!   exporter. Both the unfused interpreter ([`super::interp`]) and the
+//!   fusing plan compiler ([`super::fuse`]) consume this one definition —
+//!   there is exactly one `InferOp → ExecOp` lowering, [`lower`], shared
+//!   by every execution strategy.
+//!
+//! Lowering also validates the value-stack discipline (`Push` / `Swap` /
+//! `AddPopRelu` / `ConcatPop`): a malformed op list — hand-built, or from a
+//! future exporter bug — fails here with the op index named instead of
+//! panicking inside a serve worker mid-batch.
+
+use anyhow::{anyhow, Result};
+
+use crate::fixedpoint::conv::Conv2dGeom;
+use crate::fixedpoint::{gemm_simd, quantize, Scheme};
+use crate::tensor::Tensor;
+
+/// One forward-only primitive exported by an `nn` layer for serving
+/// (DESIGN.md §Serving). Composite blocks lower to several ops around the
+/// small value-stack ops ([`InferOp::Push`] / [`InferOp::Swap`] /
+/// [`InferOp::AddPopRelu`] / [`InferOp::ConcatPop`]).
+pub enum InferOp {
+    /// Fully-connected `y = x̂·Ŵ + b`; schemes are present iff the layer
+    /// trained quantized.
+    Linear {
+        /// Layer name (diagnostics only).
+        name: String,
+        /// Weight matrix, `din × dout` row-major.
+        w: Tensor,
+        /// Bias, length `dout`.
+        b: Vec<f32>,
+        /// Frozen weight scheme (from the layer's W controller).
+        sw: Option<Scheme>,
+        /// Frozen activation scheme (from the layer's X controller).
+        sx: Option<Scheme>,
+    },
+    /// im2col convolution with the training-time geometry.
+    Conv {
+        /// Layer name (diagnostics only).
+        name: String,
+        /// Convolution geometry (channels, kernel, stride, padding).
+        geom: Conv2dGeom,
+        /// Input height.
+        in_h: usize,
+        /// Input width.
+        in_w: usize,
+        /// Weights, `out_c × (in_c·kh·kw)` row-major.
+        w: Tensor,
+        /// Per-output-channel bias.
+        b: Vec<f32>,
+        /// Frozen weight scheme.
+        sw: Option<Scheme>,
+        /// Frozen activation (patch) scheme.
+        sx: Option<Scheme>,
+    },
+    /// Depthwise 3×3 convolution (scalar kernel; quantization applies as
+    /// fake-quant, matching training).
+    Depthwise {
+        /// Layer name (diagnostics only).
+        name: String,
+        /// Channel count.
+        c: usize,
+        /// Input height.
+        in_h: usize,
+        /// Input width.
+        in_w: usize,
+        /// Stride.
+        stride: usize,
+        /// Per-channel 3×3 kernels, `c × 9`.
+        w: Tensor,
+        /// Frozen weight scheme.
+        sw: Option<Scheme>,
+        /// Frozen activation scheme.
+        sx: Option<Scheme>,
+    },
+    /// Elementwise `max(0, x)`.
+    Relu,
+    /// 2×2 stride-2 max pool over `[n, c·h·w]`.
+    MaxPool {
+        /// Channels.
+        c: usize,
+        /// Input height.
+        h: usize,
+        /// Input width.
+        w: usize,
+    },
+    /// Global average pool `[n, c·h·w] → [n, c]`.
+    GlobalAvgPool {
+        /// Channels.
+        c: usize,
+        /// Input height.
+        h: usize,
+        /// Input width.
+        w: usize,
+    },
+    /// Batch-norm running statistics folded for evaluation:
+    /// `y = γ·(x−μ)·istd + β` with `istd = 1/√(σ²+ε)` precomputed per
+    /// channel (the expensive part of the eval pass — no sqrt at serve
+    /// time, and bit-identical to `BatchNorm2d`'s eval branch).
+    BnEval {
+        /// Channels.
+        c: usize,
+        /// Spatial size per channel (`h·w`).
+        hw: usize,
+        /// Scale γ per channel.
+        gamma: Vec<f32>,
+        /// Shift β per channel.
+        beta: Vec<f32>,
+        /// Running mean μ per channel.
+        mean: Vec<f32>,
+        /// Folded inverse stddev `1/√(σ²+ε)` per channel.
+        istd: Vec<f32>,
+    },
+    /// Save (duplicate) the current activation on the value stack —
+    /// residual/branch entry.
+    Push,
+    /// Swap the current activation with the stack top — second-branch
+    /// entry (the saved input becomes current again).
+    Swap,
+    /// Pop the saved tensor, add it to the current activation, then ReLU —
+    /// residual exit (`relu(F(x) + x)`).
+    AddPopRelu,
+    /// Pop the saved tensor and channel-concatenate `[popped ; current]` —
+    /// branch merge (Inception).
+    ConcatPop {
+        /// Channels of the popped (first) tensor.
+        c_pop: usize,
+        /// Channels of the current (second) tensor.
+        c_cur: usize,
+        /// Spatial size per channel.
+        hw: usize,
+    },
+}
+
+/// Pre-quantized weight form of one frozen linear layer.
+pub(crate) enum LinKind {
+    /// Unquantized f32 weights (`din × dout`).
+    F32 { w: Tensor },
+    /// int8 codes, pre-packed transposed (BT) with per-column sums for the
+    /// VNNI bias trick.
+    I8 { bt: Vec<i8>, colsum: Vec<i32>, sw: Scheme, sx: Scheme },
+    /// int16 codes, pre-packed transposed.
+    I16 { bt: Vec<i16>, sw: Scheme, sx: Scheme },
+    /// Wider-than-16-bit scheme: pre-fake-quantized f32 weights, f32 GEMM.
+    Fq { wq: Tensor, sx: Scheme },
+}
+
+pub(crate) struct ExecLinear {
+    pub(crate) name: String,
+    pub(crate) din: usize,
+    pub(crate) dout: usize,
+    pub(crate) b: Vec<f32>,
+    pub(crate) kind: LinKind,
+}
+
+/// Pre-quantized weight form of one frozen convolution. The int weights
+/// stay row-major (`out_c × rows`): they are the GEMM's *A* operand — it is
+/// the per-image patch matrix that gets the BT treatment, at execution
+/// time, via the fused `im2col_bt_*` kernels.
+pub(crate) enum ConvKind {
+    F32 { w: Vec<f32> },
+    I8 { cw: Vec<i8>, sw: Scheme, sx: Scheme },
+    I16 { cw: Vec<i16>, sw: Scheme, sx: Scheme },
+    Fq { wq: Vec<f32>, sx: Scheme },
+}
+
+pub(crate) struct ExecConv {
+    pub(crate) name: String,
+    pub(crate) geom: Conv2dGeom,
+    pub(crate) in_h: usize,
+    pub(crate) in_w: usize,
+    pub(crate) b: Vec<f32>,
+    pub(crate) kind: ConvKind,
+}
+
+pub(crate) struct ExecDw {
+    pub(crate) name: String,
+    pub(crate) c: usize,
+    pub(crate) in_h: usize,
+    pub(crate) in_w: usize,
+    pub(crate) stride: usize,
+    /// Pre-fake-quantized (or plain f32) kernels, `c × 9`.
+    pub(crate) wq: Vec<f32>,
+    pub(crate) sx: Option<Scheme>,
+}
+
+/// Executable op: [`InferOp`] with weights pre-quantized/pre-packed once.
+pub(crate) enum ExecOp {
+    Linear(ExecLinear),
+    Conv(ExecConv),
+    Depthwise(ExecDw),
+    Relu,
+    MaxPool { c: usize, h: usize, w: usize },
+    Gap { c: usize, h: usize, w: usize },
+    Bn { c: usize, hw: usize, gamma: Vec<f32>, beta: Vec<f32>, mean: Vec<f32>, istd: Vec<f32> },
+    Push,
+    Swap,
+    AddPopRelu,
+    ConcatPop { c_pop: usize, c_cur: usize, hw: usize },
+}
+
+impl ExecOp {
+    /// Short human-readable tag for compile reports and timing tables.
+    pub(crate) fn describe(&self) -> String {
+        match self {
+            ExecOp::Linear(l) => {
+                let k = match &l.kind {
+                    LinKind::F32 { .. } => "f32",
+                    LinKind::I8 { .. } => "i8",
+                    LinKind::I16 { .. } => "i16",
+                    LinKind::Fq { .. } => "fq",
+                };
+                format!("linear {} {k} [{}x{}]", l.name, l.din, l.dout)
+            }
+            ExecOp::Conv(cv) => {
+                let k = match &cv.kind {
+                    ConvKind::F32 { .. } => "f32",
+                    ConvKind::I8 { .. } => "i8",
+                    ConvKind::I16 { .. } => "i16",
+                    ConvKind::Fq { .. } => "fq",
+                };
+                let g = cv.geom;
+                format!("conv {} {k} [{}x{}x{}x{}]", cv.name, g.out_c, g.in_c, g.kh, g.kw)
+            }
+            ExecOp::Depthwise(dw) => format!("dw {} [c={}]", dw.name, dw.c),
+            ExecOp::Relu => "relu".to_string(),
+            ExecOp::MaxPool { .. } => "maxpool".to_string(),
+            ExecOp::Gap { .. } => "gap".to_string(),
+            ExecOp::Bn { .. } => "bn".to_string(),
+            ExecOp::Push => "push".to_string(),
+            ExecOp::Swap => "swap".to_string(),
+            ExecOp::AddPopRelu => "add-pop-relu".to_string(),
+            ExecOp::ConcatPop { .. } => "concat-pop".to_string(),
+        }
+    }
+}
+
+/// Result of [`lower`]: the executable op list plus the model facts every
+/// execution strategy needs.
+pub(crate) struct Lowered {
+    /// Flattened per-sample input width (from the first GEMM-ish op).
+    pub(crate) din: usize,
+    /// `"f32"` / `"int8"` / `"int16"` — widest frozen scheme wins.
+    pub(crate) precision: String,
+    pub(crate) ops: Vec<ExecOp>,
+}
+
+/// Lower the export IR into executable ops: validate the value-stack
+/// discipline, infer the input width, pre-quantize/pre-pack every weight
+/// exactly once, and derive the serving precision label. The single
+/// `InferOp → ExecOp` definition shared by the unfused interpreter and the
+/// fusing compiler.
+pub(crate) fn lower(label: &str, ops: Vec<InferOp>) -> Result<Lowered> {
+    let din = match ops.first() {
+        Some(InferOp::Linear { w, .. }) => w.dim(0),
+        Some(InferOp::Conv { geom, in_h, in_w, .. }) => geom.in_c * in_h * in_w,
+        Some(InferOp::Depthwise { c, in_h, in_w, .. }) => c * in_h * in_w,
+        _ => {
+            return Err(anyhow!(
+                "cannot infer input width: model must start with a linear/conv layer"
+            ))
+        }
+    };
+    // Validate value-stack discipline at freeze time, so a malformed
+    // export (hand-built op list, future layer bug) fails here with a
+    // useful error instead of panicking inside a serve worker mid-batch.
+    {
+        let mut depth = 0usize;
+        for (i, op) in ops.iter().enumerate() {
+            let (need, delta): (usize, isize) = match op {
+                InferOp::Push => (0, 1),
+                InferOp::Swap => (1, 0),
+                InferOp::AddPopRelu | InferOp::ConcatPop { .. } => (1, -1),
+                _ => (0, 0),
+            };
+            if depth < need {
+                return Err(anyhow!(
+                    "op {i} of {label} underflows the serve value stack (depth {depth})"
+                ));
+            }
+            depth = (depth as isize + delta) as usize;
+        }
+        if depth != 0 {
+            return Err(anyhow!(
+                "{label} leaves {depth} unconsumed tensor(s) on the serve value stack"
+            ));
+        }
+    }
+    let mut max_bits: Option<u8> = None;
+    let mut note = |sw: &Option<Scheme>, sx: &Option<Scheme>| {
+        for s in [sw, sx].into_iter().flatten() {
+            max_bits = Some(max_bits.map_or(s.bits, |m| m.max(s.bits)));
+        }
+    };
+    let mut exec = Vec::with_capacity(ops.len());
+    for op in ops {
+        exec.push(match op {
+            InferOp::Linear { name, w, b, sw, sx } => {
+                note(&sw, &sx);
+                let (din_l, dout) = (w.dim(0), w.dim(1));
+                let kind = match (sw, sx) {
+                    (Some(sw), Some(sx)) if sw.bits <= 8 && sx.bits <= 8 => {
+                        let mut bt = vec![0i8; w.len()];
+                        let mut colsum = vec![0i32; dout];
+                        gemm_simd::codes_i8_bt(din_l, dout, &w.data, sw, &mut bt, &mut colsum);
+                        LinKind::I8 { bt, colsum, sw, sx }
+                    }
+                    (Some(sw), Some(sx)) if sw.bits <= 16 && sx.bits <= 16 => {
+                        let mut cb = vec![0i16; w.len()];
+                        quantize::codes_i16(&w.data, &mut cb, sw);
+                        let mut bt = vec![0i16; w.len()];
+                        gemm_simd::pack_bt_i16(din_l, dout, &cb, &mut bt);
+                        LinKind::I16 { bt, sw, sx }
+                    }
+                    (Some(sw), Some(sx)) => {
+                        let mut wq = w.clone();
+                        quantize::fake_quant_stats_inplace(&mut wq.data, sw);
+                        LinKind::Fq { wq, sx }
+                    }
+                    _ => LinKind::F32 { w },
+                };
+                ExecOp::Linear(ExecLinear { name, din: din_l, dout, b, kind })
+            }
+            InferOp::Conv { name, geom, in_h, in_w, w, b, sw, sx } => {
+                note(&sw, &sx);
+                let kind = match (sw, sx) {
+                    (Some(sw), Some(sx)) if sw.bits <= 8 && sx.bits <= 8 => {
+                        let mut cw = vec![0i8; w.len()];
+                        quantize::codes_i8(&w.data, &mut cw, sw);
+                        ConvKind::I8 { cw, sw, sx }
+                    }
+                    (Some(sw), Some(sx)) if sw.bits <= 16 && sx.bits <= 16 => {
+                        let mut cw = vec![0i16; w.len()];
+                        quantize::codes_i16(&w.data, &mut cw, sw);
+                        ConvKind::I16 { cw, sw, sx }
+                    }
+                    (Some(sw), Some(sx)) => {
+                        let mut wq = w.data.clone();
+                        quantize::fake_quant_stats_inplace(&mut wq, sw);
+                        ConvKind::Fq { wq, sx }
+                    }
+                    _ => ConvKind::F32 { w: w.data },
+                };
+                ExecOp::Conv(ExecConv { name, geom, in_h, in_w, b, kind })
+            }
+            InferOp::Depthwise { name, c, in_h, in_w, stride, w, sw, sx } => {
+                note(&sw, &sx);
+                let mut wq = w.data;
+                if let Some(sw) = sw {
+                    quantize::fake_quant_stats_inplace(&mut wq, sw);
+                }
+                ExecOp::Depthwise(ExecDw { name, c, in_h, in_w, stride, wq, sx })
+            }
+            InferOp::Relu => ExecOp::Relu,
+            InferOp::MaxPool { c, h, w } => ExecOp::MaxPool { c, h, w },
+            InferOp::GlobalAvgPool { c, h, w } => ExecOp::Gap { c, h, w },
+            InferOp::BnEval { c, hw, gamma, beta, mean, istd } => {
+                ExecOp::Bn { c, hw, gamma, beta, mean, istd }
+            }
+            InferOp::Push => ExecOp::Push,
+            InferOp::Swap => ExecOp::Swap,
+            InferOp::AddPopRelu => ExecOp::AddPopRelu,
+            InferOp::ConcatPop { c_pop, c_cur, hw } => ExecOp::ConcatPop { c_pop, c_cur, hw },
+        });
+    }
+    let precision = match max_bits {
+        None => "f32".to_string(),
+        Some(b) if b <= 8 => "int8".to_string(),
+        Some(b) if b <= 16 => "int16".to_string(),
+        Some(b) => format!("int{b}"),
+    };
+    Ok(Lowered { din, precision, ops: exec })
+}

@@ -1,0 +1,244 @@
+//! Inference compiler for the frozen serving IR (DESIGN.md
+//! §Inference-Compiler).
+//!
+//! Freeze time hands this module the [`InferOp`] list a model exports; the
+//! compiler turns it into an executable artifact in three stages:
+//!
+//! 1. **Lower** (`ir`) — validate the value-stack discipline and
+//!    pre-quantize/pre-pack every weight exactly once (int8 codes in the
+//!    transposed VNNI/BT layout with column sums, int16 BT codes, or
+//!    pre-fake-quantized f32). One `InferOp → ExecOp` definition shared by
+//!    every execution strategy.
+//! 2. **Fuse** (`fuse`) — collapse `Linear`/`Conv`/`Depthwise` with their
+//!    folded BN, residual add, and ReLU into single steps, and decide per
+//!    step whether to emit f32 or the next consumer's integer codes
+//!    (max-pools between integer layers run in code space). Every rewrite
+//!    has an exactness argument, so fused execution is bit-identical to the
+//!    unfused interpreter (`interp`) — which stays around as the oracle
+//!    and as the `--no-fuse` escape hatch.
+//! 3. **Tune** (`tune`) — per-GEMM-shape tile search at load time, with
+//!    winners cached in the frozen artifact's `tune` section so subsequent
+//!    loads skip the search.
+
+mod exec;
+mod fuse;
+mod interp;
+mod ir;
+mod tune;
+
+pub use ir::InferOp;
+pub use tune::{GemmKind, ShapeKey, TuneEntry, TUNE_BATCH};
+
+pub(crate) use exec::StepTimer;
+
+use ir::ExecOp;
+
+use anyhow::Result;
+
+use crate::kernels::Engine;
+use crate::tensor::Tensor;
+
+/// Knobs for the compile pass. Defaults match `apt serve`: fusion on, load-time
+/// tile search off (cached tiles are always applied when present).
+#[derive(Clone, Copy, Debug)]
+pub struct CompileOptions {
+    /// Build a fused execution plan (`false` = interpret the ops unfused —
+    /// the `--no-fuse` escape hatch).
+    pub fuse: bool,
+    /// Search tiles for shapes missing from the plan cache (costs a few
+    /// milliseconds per novel shape at load time).
+    pub tune: bool,
+}
+
+impl Default for CompileOptions {
+    fn default() -> Self {
+        CompileOptions { fuse: true, tune: false }
+    }
+}
+
+/// What the compile pass did — shown by `apt serve` at startup and
+/// exposed programmatically via `FrozenModel::compile_report`.
+#[derive(Clone, Debug, Default)]
+pub struct CompileReport {
+    /// Model label the plan was compiled for.
+    pub label: String,
+    /// Serving precision (`"f32"` / `"int8"` / `"int16"`).
+    pub precision: String,
+    /// Ops in the lowered program.
+    pub ops: usize,
+    /// Steps in the executable plan (equals `ops` when fusion is off).
+    pub steps: usize,
+    /// Whether a fused plan was built.
+    pub fused: bool,
+    /// Steps whose output stays in integer codes (no f32 round-trip).
+    pub code_edges: usize,
+    /// GEMM shapes whose tile came from the artifact's plan cache.
+    pub tiles_cached: usize,
+    /// GEMM shapes tile-searched at this load.
+    pub tiles_tuned: usize,
+    /// One display line per plan step.
+    pub lines: Vec<String>,
+}
+
+impl std::fmt::Display for CompileReport {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        writeln!(
+            f,
+            "compiled {} ({}): {} ops -> {} steps{}, {} code edge(s), tiles: {} cached / {} tuned",
+            self.label,
+            self.precision,
+            self.ops,
+            self.steps,
+            if self.fused { "" } else { " (fusion off)" },
+            self.code_edges,
+            self.tiles_cached,
+            self.tiles_tuned,
+        )?;
+        for (i, line) in self.lines.iter().enumerate() {
+            writeln!(f, "  [{i:2}] {line}")?;
+        }
+        Ok(())
+    }
+}
+
+/// A compiled model: the executable op list plus (unless fusion was
+/// disabled) the fused plan. Owned by `serve::FrozenModel`.
+pub(crate) struct Compiled {
+    pub(crate) din: usize,
+    pub(crate) precision: String,
+    pub(crate) ops: Vec<ExecOp>,
+    pub(crate) plan: Option<fuse::ExecPlan>,
+    pub(crate) report: CompileReport,
+}
+
+impl Compiled {
+    /// Steps the primary execution path has (plan steps when fused, ops
+    /// when not) — the timer vector is sized to this.
+    pub(crate) fn n_steps(&self) -> usize {
+        self.plan.as_ref().map_or(self.ops.len(), |p| p.steps.len())
+    }
+
+    /// Run the primary path: the fused plan when present, the unfused
+    /// interpreter otherwise.
+    pub(crate) fn run(&self, x: &Tensor, eng: &Engine, timers: &[StepTimer]) -> Tensor {
+        match &self.plan {
+            Some(plan) => exec::run_plan(plan, &self.ops, x, eng, timers),
+            None => interp::run_unfused(&self.ops, x, eng, timers),
+        }
+    }
+
+    /// Run the unfused interpreter regardless of the plan — the oracle the
+    /// bit-identity tests compare against. Never touches the step timers
+    /// (they belong to the primary path).
+    pub(crate) fn run_unfused(&self, x: &Tensor, eng: &Engine) -> Tensor {
+        interp::run_unfused(&self.ops, x, eng, &[])
+    }
+
+    /// Tile decisions to persist in the artifact's plan cache.
+    pub(crate) fn tuned(&self) -> &[TuneEntry] {
+        self.plan.as_ref().map_or(&[], |p| &p.tuned)
+    }
+}
+
+/// Compile an exported op list into an executable artifact: lower +
+/// validate, optionally fuse, and resolve tiles (plan `cache` first, then —
+/// when `opts.tune` — a timed search on `eng` for the rest).
+pub(crate) fn compile(
+    label: &str,
+    infer_ops: Vec<InferOp>,
+    opts: &CompileOptions,
+    cache: &[TuneEntry],
+    eng: &Engine,
+) -> Result<Compiled> {
+    let lowered = ir::lower(label, infer_ops)?;
+    let mut report = CompileReport {
+        label: label.to_string(),
+        precision: lowered.precision.clone(),
+        ops: lowered.ops.len(),
+        steps: lowered.ops.len(),
+        fused: opts.fuse,
+        ..CompileReport::default()
+    };
+    let plan = if opts.fuse {
+        let mut plan = fuse::build_plan(&lowered.ops);
+        let shapes = fuse::shape_keys(&lowered.ops, &plan.steps);
+        let outcome = tune::resolve_tiles(&shapes, cache, opts.tune, eng);
+        fuse::apply_tiles(&lowered.ops, &mut plan.steps, &outcome.entries);
+        plan.tuned = outcome.entries;
+        report.steps = plan.steps.len();
+        report.code_edges = plan.code_edges();
+        report.tiles_cached = outcome.cached;
+        report.tiles_tuned = outcome.searched;
+        report.lines = plan.labels.clone();
+        Some(plan)
+    } else {
+        report.lines = lowered.ops.iter().map(|op| op.describe()).collect();
+        None
+    };
+    Ok(Compiled { din: lowered.din, precision: lowered.precision, ops: lowered.ops, plan, report })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fixedpoint::Scheme;
+
+    fn mlp_ops() -> Vec<InferOp> {
+        let q = |s| (Scheme { bits: 8, s }, Scheme { bits: 8, s: s + 1 });
+        let lin = |name: &str, din: usize, dout: usize, s: i32| InferOp::Linear {
+            name: name.to_string(),
+            w: Tensor::zeros(&[din, dout]),
+            b: vec![0.0; dout],
+            sw: Some(q(s).0),
+            sx: Some(q(s).1),
+        };
+        vec![lin("fc0", 6, 8, -6), InferOp::Relu, lin("fc1", 8, 4, -5)]
+    }
+
+    #[test]
+    fn compile_fused_and_unfused_report_shapes() {
+        let eng = Engine::serial();
+        let fused =
+            compile("m", mlp_ops(), &CompileOptions::default(), &[], &eng).unwrap();
+        assert_eq!(fused.precision, "int8");
+        assert_eq!(fused.din, 6);
+        assert_eq!(fused.report.steps, 2);
+        assert_eq!(fused.report.code_edges, 1);
+        assert!(fused.plan.is_some());
+
+        let opts = CompileOptions { fuse: false, tune: false };
+        let unfused = compile("m", mlp_ops(), &opts, &[], &eng).unwrap();
+        assert!(unfused.plan.is_none());
+        assert_eq!(unfused.report.steps, 3);
+        assert_eq!(unfused.report.lines.len(), 3);
+        let txt = format!("{}", unfused.report);
+        assert!(txt.contains("fusion off"));
+    }
+
+    #[test]
+    fn compile_rejects_malformed_stack_programs() {
+        let eng = Engine::serial();
+        let mut ops = mlp_ops();
+        ops.push(InferOp::AddPopRelu); // nothing pushed — must underflow
+        let err = compile("bad", ops, &CompileOptions::default(), &[], &eng)
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("op 3"), "error must name the op index: {err}");
+        assert!(err.contains("underflows"));
+    }
+
+    #[test]
+    fn tune_search_records_entries_for_every_gemm_shape() {
+        let eng = Engine::serial();
+        let opts = CompileOptions { fuse: true, tune: true };
+        let c = compile("m", mlp_ops(), &opts, &[], &eng).unwrap();
+        assert_eq!(c.tuned().len(), 2);
+        assert_eq!(c.report.tiles_tuned, 2);
+        // Second compile with the cache: no search.
+        let cache: Vec<TuneEntry> = c.tuned().to_vec();
+        let c2 = compile("m", mlp_ops(), &opts, &cache, &eng).unwrap();
+        assert_eq!(c2.report.tiles_tuned, 0);
+        assert_eq!(c2.report.tiles_cached, 2);
+        assert_eq!(c2.tuned(), cache.as_slice());
+    }
+}

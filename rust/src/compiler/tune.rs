@@ -1,0 +1,280 @@
+//! Per-shape tile autotuning (DESIGN.md §Inference-Compiler).
+//!
+//! Every fused GEMM step in a plan carries a [`Tile`] — blocking `mc`/`kc`
+//! plus the engine's row-shard chunk. All tiles are bit-identical by
+//! construction (pinned in `fixedpoint::gemm` and `kernels` tests), so the
+//! search is a pure speed question: run each candidate on synthetic
+//! operands of the exact shape, keep the fastest. Results are cached as
+//! [`TuneEntry`] rows in the frozen artifact's `tune` section
+//! (`train::checkpoint`), so subsequent loads of the same checkpoint skip
+//! the search entirely.
+//!
+//! Honesty note: on the AVX-512 VNNI/BW paths the SIMD kernels stream
+//! full-`k` dot products and ignore `mc`/`kc`; there the only tunable axis
+//! is the parallel shard chunk, and on a serial engine the candidate set
+//! degenerates to the default tile (no search, nothing to win). The f32
+//! and portable-integer paths expose the full blocking space.
+
+use std::time::{Duration, Instant};
+
+use crate::fixedpoint::gemm::Tile;
+use crate::fixedpoint::gemm_simd;
+use crate::kernels::Engine;
+
+/// Which GEMM kernel family a tuned shape belongs to.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum GemmKind {
+    /// f32 blocked kernel (`gemm_f32_tiled`).
+    F32,
+    /// int8 prepacked kernel (VNNI or portable fallback).
+    I8,
+    /// int16 prepacked kernel (vpmaddwd or portable fallback).
+    I16,
+}
+
+impl GemmKind {
+    /// Stable one-token name used by the checkpoint `tune` section.
+    pub fn token(&self) -> &'static str {
+        match self {
+            GemmKind::F32 => "f32",
+            GemmKind::I8 => "i8",
+            GemmKind::I16 => "i16",
+        }
+    }
+
+    /// Inverse of [`GemmKind::token`].
+    pub fn from_token(s: &str) -> Option<GemmKind> {
+        match s {
+            "f32" => Some(GemmKind::F32),
+            "i8" => Some(GemmKind::I8),
+            "i16" => Some(GemmKind::I16),
+            _ => None,
+        }
+    }
+}
+
+/// One GEMM shape as the autotuner keys it: kernel family × (m, k, n).
+/// Linear steps are tuned at the nominal serving batch [`TUNE_BATCH`]
+/// (their real `m` varies per request batch); conv steps use their exact
+/// per-image shape (`m = out_c`, `k = rows`, `n = cols`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ShapeKey {
+    /// Kernel family.
+    pub kind: GemmKind,
+    /// Output rows.
+    pub m: usize,
+    /// Reduction depth.
+    pub k: usize,
+    /// Output columns.
+    pub n: usize,
+}
+
+/// A tuned (or cached) tile decision for one shape — the unit the frozen
+/// artifact's `tune` section stores.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct TuneEntry {
+    /// The shape this tile was chosen for.
+    pub key: ShapeKey,
+    /// The winning tile.
+    pub tile: Tile,
+}
+
+/// Nominal batch size linear-layer shapes are tuned at (their `m` is
+/// request-dependent; conv shapes are exact).
+pub const TUNE_BATCH: usize = 32;
+
+/// What tile resolution produced, with provenance counts for the compile
+/// report.
+pub(crate) struct TuneOutcome {
+    /// Every decided entry (cache hits + fresh searches) — this is what
+    /// gets written back to the artifact.
+    pub(crate) entries: Vec<TuneEntry>,
+    /// Shapes freshly measured this load.
+    pub(crate) searched: usize,
+    /// Shapes answered from the artifact's plan cache.
+    pub(crate) cached: usize,
+}
+
+pub(crate) fn lookup(entries: &[TuneEntry], key: ShapeKey) -> Option<Tile> {
+    entries.iter().find(|e| e.key == key).map(|e| e.tile)
+}
+
+/// Resolve a tile for every shape: plan cache first, then (when `search`
+/// is on) a timed sweep of the candidate set, else the default tile.
+/// Shapes that were neither cached nor searched are *not* recorded, so a
+/// later tuning load still measures them.
+pub(crate) fn resolve_tiles(
+    shapes: &[ShapeKey],
+    cache: &[TuneEntry],
+    search: bool,
+    eng: &Engine,
+) -> TuneOutcome {
+    let mut out = TuneOutcome { entries: Vec::new(), searched: 0, cached: 0 };
+    for &key in shapes {
+        if lookup(&out.entries, key).is_some() {
+            continue; // duplicate shape in this plan — already decided
+        }
+        if let Some(tile) = lookup(cache, key) {
+            out.entries.push(TuneEntry { key, tile });
+            out.cached += 1;
+        } else if search {
+            let tile = tune_shape(key, eng);
+            out.entries.push(TuneEntry { key, tile });
+            out.searched += 1;
+        }
+    }
+    out
+}
+
+/// Candidate tiles for one shape on this engine. Single-element when the
+/// kernel has no tunable axis here (SIMD path on a serial engine).
+pub(crate) fn candidates(kind: GemmKind, threads: usize) -> Vec<Tile> {
+    let simd = match kind {
+        GemmKind::F32 => false,
+        GemmKind::I8 => gemm_simd::has_vnni(),
+        GemmKind::I16 => gemm_simd::has_avx512bw(),
+    };
+    let blocks: &[(usize, usize)] = if simd {
+        // mc/kc are moot for the SIMD kernels; only the shard axis counts.
+        &[(64, 256)]
+    } else {
+        &[(32, 128), (32, 512), (64, 256), (128, 256), (128, 1024)]
+    };
+    let shards: &[usize] = if threads > 1 { &[0, 8, 32, 64] } else { &[0] };
+    let mut out = Vec::with_capacity(blocks.len() * shards.len());
+    for &(mc, kc) in blocks {
+        for &shard in shards {
+            out.push(Tile { mc, kc, shard });
+        }
+    }
+    out
+}
+
+/// Deterministic synthetic operands of one shape (seedless integer
+/// pattern — the values only need to be representative, incl. some zeros
+/// for the f32 kernel's zero-skip).
+enum Operands {
+    F32 { a: Vec<f32>, b: Vec<f32> },
+    I8 { a: Vec<i8>, bt: Vec<i8>, colsum: Vec<i32> },
+    I16 { a: Vec<i16>, bt: Vec<i16> },
+}
+
+fn synth(key: ShapeKey) -> Operands {
+    let (m, k, n) = (key.m, key.k, key.n);
+    let pat = |i: usize| (i * 7 + 3) % 13;
+    match key.kind {
+        GemmKind::F32 => {
+            let a: Vec<f32> = (0..m * k).map(|i| pat(i) as f32 - 6.0).collect();
+            let b: Vec<f32> = (0..k * n).map(|i| pat(i + 5) as f32 - 6.0).collect();
+            Operands::F32 { a, b }
+        }
+        GemmKind::I8 => {
+            let a: Vec<i8> = (0..m * k).map(|i| (pat(i) as i8) - 6).collect();
+            let bt: Vec<i8> = (0..k * n).map(|i| (pat(i + 5) as i8) - 6).collect();
+            let mut colsum = vec![0i32; n];
+            for (j, cs) in colsum.iter_mut().enumerate() {
+                *cs = bt[j * k..(j + 1) * k].iter().map(|&v| v as i32).sum();
+            }
+            Operands::I8 { a, bt, colsum }
+        }
+        GemmKind::I16 => {
+            let a: Vec<i16> = (0..m * k).map(|i| (pat(i) as i16) - 6).collect();
+            let bt: Vec<i16> = (0..k * n).map(|i| (pat(i + 5) as i16) - 6).collect();
+            Operands::I16 { a, bt }
+        }
+    }
+}
+
+fn run_once(key: ShapeKey, ops: &Operands, tile: Tile, eng: &Engine) -> Duration {
+    let (m, k, n) = (key.m, key.k, key.n);
+    match ops {
+        Operands::F32 { a, b } => {
+            let mut c = vec![0.0f32; m * n];
+            let t0 = Instant::now();
+            eng.gemm_f32_tiled(m, k, n, a, b, &mut c, tile);
+            t0.elapsed()
+        }
+        Operands::I8 { a, bt, colsum } => {
+            let mut c = vec![0i32; m * n];
+            let t0 = Instant::now();
+            eng.gemm_i8_prepacked_tiled(m, k, n, a, bt, colsum, &mut c, tile);
+            t0.elapsed()
+        }
+        Operands::I16 { a, bt } => {
+            let mut c = vec![0i32; m * n];
+            let t0 = Instant::now();
+            eng.gemm_i16_prepacked_tiled(m, k, n, a, bt, &mut c, tile);
+            t0.elapsed()
+        }
+    }
+}
+
+/// Time every candidate on this engine and return the fastest (min over
+/// `REPS` timed runs after one warmup — serving shapes are small, so the
+/// whole search stays in the milliseconds).
+pub(crate) fn tune_shape(key: ShapeKey, eng: &Engine) -> Tile {
+    const REPS: usize = 3;
+    let cands = candidates(key.kind, eng.threads());
+    if cands.len() == 1 {
+        return cands[0];
+    }
+    let ops = synth(key);
+    let mut best = cands[0];
+    let mut best_t = Duration::MAX;
+    for &tile in &cands {
+        run_once(key, &ops, tile, eng); // warmup: page in buffers, spin pool
+        let mut t = Duration::MAX;
+        for _ in 0..REPS {
+            t = t.min(run_once(key, &ops, tile, eng));
+        }
+        if t < best_t {
+            best_t = t;
+            best = tile;
+        }
+    }
+    best
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn kind_tokens_roundtrip() {
+        for k in [GemmKind::F32, GemmKind::I8, GemmKind::I16] {
+            assert_eq!(GemmKind::from_token(k.token()), Some(k));
+        }
+        assert_eq!(GemmKind::from_token("i4"), None);
+    }
+
+    #[test]
+    fn resolve_prefers_cache_and_dedupes() {
+        let key = ShapeKey { kind: GemmKind::F32, m: 8, k: 16, n: 8 };
+        let cached_tile = Tile { mc: 32, kc: 128, shard: 0 };
+        let cache = [TuneEntry { key, tile: cached_tile }];
+        let eng = Engine::serial();
+        let out = resolve_tiles(&[key, key], &cache, true, &eng);
+        assert_eq!(out.entries.len(), 1);
+        assert_eq!(out.entries[0].tile, cached_tile);
+        assert_eq!((out.cached, out.searched), (1, 0));
+    }
+
+    #[test]
+    fn search_returns_a_candidate() {
+        let eng = Engine::serial();
+        for kind in [GemmKind::F32, GemmKind::I8, GemmKind::I16] {
+            let key = ShapeKey { kind, m: 8, k: 32, n: 8 };
+            let tile = tune_shape(key, &eng);
+            assert!(candidates(kind, 1).contains(&tile));
+        }
+    }
+
+    #[test]
+    fn no_search_records_nothing() {
+        let key = ShapeKey { kind: GemmKind::I8, m: 4, k: 8, n: 4 };
+        let eng = Engine::serial();
+        let out = resolve_tiles(&[key], &[], false, &eng);
+        assert!(out.entries.is_empty());
+        assert_eq!((out.cached, out.searched), (0, 0));
+    }
+}

@@ -73,6 +73,181 @@ pub fn im2col(g: Conv2dGeom, h: usize, w: usize, img: &[f32], out: &mut [f32]) {
     }
 }
 
+/// im2col fused with int8 quantization straight into the BT (column-major)
+/// GEMM layout: `bt[col·rows + row]` holds the code of patch element
+/// `(row, col)`, and `colsum[col]` the column's code sum (the VNNI unsigned
+/// bias correction — see `gemm_simd::pack_bt_i8`). One pass replaces the
+/// serve hot path's im2col → `codes_i8` → `pack_bt_i8` chain (three sweeps
+/// + two temporaries); per-element results are bit-identical because the
+/// scalar quantize is the same expression, padding quantizes 0.0 → code 0,
+/// and the element order never feeds back into the values.
+pub fn im2col_bt_quant_i8(
+    g: Conv2dGeom,
+    h: usize,
+    w: usize,
+    img: &[f32],
+    sch: super::Scheme,
+    bt: &mut [i8],
+    colsum: &mut [i32],
+) {
+    let (oh, ow) = g.out_hw(h, w);
+    let (rows, cols) = g.im2col_dims(h, w);
+    assert_eq!(img.len(), g.in_c * h * w);
+    assert_eq!(bt.len(), rows * cols);
+    assert_eq!(colsum.len(), cols);
+    let inv_r = 1.0 / sch.resolution();
+    let lo = sch.qmin() as f32;
+    let hi = sch.qmax() as f32;
+    // Column-outer: each output position gathers its patch contiguously
+    // into one BT column (unit-stride writes, unlike transposing im2col's
+    // row-major output).
+    let mut col = 0usize;
+    for oy in 0..oh {
+        for ox in 0..ow {
+            let bcol = &mut bt[col * rows..(col + 1) * rows];
+            let mut sum = 0i32;
+            let mut row = 0usize;
+            for c in 0..g.in_c {
+                for ky in 0..g.kh {
+                    let iy = (oy * g.stride + ky) as isize - g.pad as isize;
+                    for kx in 0..g.kw {
+                        let ix = (ox * g.stride + kx) as isize - g.pad as isize;
+                        let q = if iy >= 0 && iy < h as isize && ix >= 0 && ix < w as isize {
+                            let x = img[c * h * w + iy as usize * w + ix as usize];
+                            (x * inv_r).round_ties_even().clamp(lo, hi) as i8
+                        } else {
+                            0
+                        };
+                        bcol[row] = q;
+                        sum += q as i32;
+                        row += 1;
+                    }
+                }
+            }
+            colsum[col] = sum;
+            col += 1;
+        }
+    }
+}
+
+/// int16 sibling of [`im2col_bt_quant_i8`] (no column sums — the
+/// `vpmaddwd` kernel multiplies signed operands directly).
+pub fn im2col_bt_quant_i16(
+    g: Conv2dGeom,
+    h: usize,
+    w: usize,
+    img: &[f32],
+    sch: super::Scheme,
+    bt: &mut [i16],
+) {
+    let (oh, ow) = g.out_hw(h, w);
+    let (rows, cols) = g.im2col_dims(h, w);
+    assert_eq!(img.len(), g.in_c * h * w);
+    assert_eq!(bt.len(), rows * cols);
+    let inv_r = 1.0 / sch.resolution();
+    let lo = sch.qmin() as f32;
+    let hi = sch.qmax() as f32;
+    let mut col = 0usize;
+    for oy in 0..oh {
+        for ox in 0..ow {
+            let bcol = &mut bt[col * rows..(col + 1) * rows];
+            let mut row = 0usize;
+            for c in 0..g.in_c {
+                for ky in 0..g.kh {
+                    let iy = (oy * g.stride + ky) as isize - g.pad as isize;
+                    for kx in 0..g.kw {
+                        let ix = (ox * g.stride + kx) as isize - g.pad as isize;
+                        bcol[row] = if iy >= 0 && iy < h as isize && ix >= 0 && ix < w as isize {
+                            let x = img[c * h * w + iy as usize * w + ix as usize];
+                            (x * inv_r).round_ties_even().clamp(lo, hi) as i16
+                        } else {
+                            0
+                        };
+                        row += 1;
+                    }
+                }
+            }
+            col += 1;
+        }
+    }
+}
+
+/// im2col over an image that is *already* int8 codes, gathered straight
+/// into the BT layout: the fused-execution path where a producer op emitted
+/// integer codes and the consumer conv never sees f32 at all
+/// (DESIGN.md §Inference-Compiler). Padding contributes code 0 — exactly
+/// what quantizing a 0.0 pad yields.
+pub fn im2col_bt_codes_i8(
+    g: Conv2dGeom,
+    h: usize,
+    w: usize,
+    img: &[i8],
+    bt: &mut [i8],
+    colsum: &mut [i32],
+) {
+    let (oh, ow) = g.out_hw(h, w);
+    let (rows, cols) = g.im2col_dims(h, w);
+    assert_eq!(img.len(), g.in_c * h * w);
+    assert_eq!(bt.len(), rows * cols);
+    assert_eq!(colsum.len(), cols);
+    let mut col = 0usize;
+    for oy in 0..oh {
+        for ox in 0..ow {
+            let bcol = &mut bt[col * rows..(col + 1) * rows];
+            let mut sum = 0i32;
+            let mut row = 0usize;
+            for c in 0..g.in_c {
+                for ky in 0..g.kh {
+                    let iy = (oy * g.stride + ky) as isize - g.pad as isize;
+                    for kx in 0..g.kw {
+                        let ix = (ox * g.stride + kx) as isize - g.pad as isize;
+                        let q = if iy >= 0 && iy < h as isize && ix >= 0 && ix < w as isize {
+                            img[c * h * w + iy as usize * w + ix as usize]
+                        } else {
+                            0
+                        };
+                        bcol[row] = q;
+                        sum += q as i32;
+                        row += 1;
+                    }
+                }
+            }
+            colsum[col] = sum;
+            col += 1;
+        }
+    }
+}
+
+/// int16 sibling of [`im2col_bt_codes_i8`].
+pub fn im2col_bt_codes_i16(g: Conv2dGeom, h: usize, w: usize, img: &[i16], bt: &mut [i16]) {
+    let (oh, ow) = g.out_hw(h, w);
+    let (rows, cols) = g.im2col_dims(h, w);
+    assert_eq!(img.len(), g.in_c * h * w);
+    assert_eq!(bt.len(), rows * cols);
+    let mut col = 0usize;
+    for oy in 0..oh {
+        for ox in 0..ow {
+            let bcol = &mut bt[col * rows..(col + 1) * rows];
+            let mut row = 0usize;
+            for c in 0..g.in_c {
+                for ky in 0..g.kh {
+                    let iy = (oy * g.stride + ky) as isize - g.pad as isize;
+                    for kx in 0..g.kw {
+                        let ix = (ox * g.stride + kx) as isize - g.pad as isize;
+                        bcol[row] = if iy >= 0 && iy < h as isize && ix >= 0 && ix < w as isize {
+                            img[c * h * w + iy as usize * w + ix as usize]
+                        } else {
+                            0
+                        };
+                        row += 1;
+                    }
+                }
+            }
+            col += 1;
+        }
+    }
+}
+
 /// Scatter-add the transpose of im2col (col2im) — the backward of `im2col`,
 /// used by BPROP to push patch-space gradients back to image space.
 pub fn col2im(g: Conv2dGeom, h: usize, w: usize, cols_mat: &[f32], img_grad: &mut [f32]) {
@@ -226,6 +401,64 @@ mod tests {
         let err: f32 = qout.iter().zip(&want).map(|(a, b)| (a - b).abs()).sum::<f32>()
             / want.iter().map(|v| v.abs()).sum::<f32>();
         assert!(err < 0.05, "relative int8 conv error {err}");
+    }
+
+    #[test]
+    fn im2col_bt_quant_matches_two_pass() {
+        // Fused gather+quantize+BT-pack must be bit-identical to
+        // im2col → codes → pack_bt (the route it replaces in serving).
+        use crate::fixedpoint::gemm_simd::{pack_bt_i16, pack_bt_i8};
+        use crate::fixedpoint::quantize::{codes_i16, codes_i8};
+        for &(g, h, w) in &[
+            (geom(), 11, 9),
+            (Conv2dGeom { in_c: 1, out_c: 2, kh: 3, kw: 3, stride: 1, pad: 1 }, 5, 4),
+            (Conv2dGeom { in_c: 4, out_c: 3, kh: 5, kw: 5, stride: 2, pad: 2 }, 12, 12),
+        ] {
+            let mut r = Pcg32::seeded(31);
+            let img: Vec<f32> = (0..g.in_c * h * w).map(|_| r.normal()).collect();
+            let sch = Scheme::for_range(max_abs(&img), 8);
+            let (rows, cols) = g.im2col_dims(h, w);
+
+            let mut patch = vec![0.0f32; rows * cols];
+            im2col(g, h, w, &img, &mut patch);
+            let mut pc8 = vec![0i8; rows * cols];
+            codes_i8(&patch, &mut pc8, sch);
+            let mut want_bt = vec![0i8; rows * cols];
+            let mut want_cs = vec![0i32; cols];
+            pack_bt_i8(rows, cols, &pc8, &mut want_bt, &mut want_cs);
+
+            let mut bt = vec![0i8; rows * cols];
+            let mut cs = vec![0i32; cols];
+            im2col_bt_quant_i8(g, h, w, &img, sch, &mut bt, &mut cs);
+            assert_eq!(bt, want_bt);
+            assert_eq!(cs, want_cs);
+
+            // codes-input gather: quantize image first, then gather.
+            let mut ci = vec![0i8; img.len()];
+            codes_i8(&img, &mut ci, sch);
+            let mut bt2 = vec![0i8; rows * cols];
+            let mut cs2 = vec![0i32; cols];
+            im2col_bt_codes_i8(g, h, w, &ci, &mut bt2, &mut cs2);
+            // gather-of-codes == quantize-of-gather: im2col only copies
+            // (and pads with 0.0 → code 0), so the two commute exactly.
+            assert_eq!(bt2, want_bt);
+            assert_eq!(cs2, want_cs);
+
+            let s16 = Scheme::for_range(max_abs(&img), 16);
+            let mut pc16 = vec![0i16; rows * cols];
+            codes_i16(&patch, &mut pc16, s16);
+            let mut want16 = vec![0i16; rows * cols];
+            pack_bt_i16(rows, cols, &pc16, &mut want16);
+            let mut bt16 = vec![0i16; rows * cols];
+            im2col_bt_quant_i16(g, h, w, &img, s16, &mut bt16);
+            assert_eq!(bt16, want16);
+
+            let mut ci16 = vec![0i16; img.len()];
+            codes_i16(&img, &mut ci16, s16);
+            let mut bt16b = vec![0i16; rows * cols];
+            im2col_bt_codes_i16(g, h, w, &ci16, &mut bt16b);
+            assert_eq!(bt16b, want16);
+        }
     }
 
     #[test]

@@ -19,17 +19,58 @@
 pub const MC: usize = 64;
 pub const KC: usize = 256;
 
+/// A blocking choice for one GEMM shape: panel heights `mc`/`kc` for the
+/// blocked loops plus the engine's row-shard chunk (`shard == 0` keeps the
+/// engine's load-balancing default). Any `Tile` produces bit-identical
+/// results to any other — blocking only reorders *which* panel is visited
+/// when, never the per-element accumulation order (the `p` loop always
+/// ascends within a row) — so the inference compiler is free to autotune it
+/// per shape (DESIGN.md §Inference-Compiler).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Tile {
+    /// Row-panel height for the blocked i-loop (`MC` by default).
+    pub mc: usize,
+    /// Depth-panel length for the blocked p-loop (`KC` by default).
+    pub kc: usize,
+    /// Engine row-shard chunk override; 0 = engine default.
+    pub shard: usize,
+}
+
+impl Default for Tile {
+    fn default() -> Self {
+        Tile { mc: MC, kc: KC, shard: 0 }
+    }
+}
+
 /// f32 GEMM baseline: c = a·b (c fully overwritten).
 pub fn gemm_f32(m: usize, k: usize, n: usize, a: &[f32], b: &[f32], c: &mut [f32]) {
+    gemm_f32_tiled(m, k, n, a, b, c, MC, KC)
+}
+
+/// f32 GEMM with caller-chosen blocking. Bit-identical to `gemm_f32` for
+/// every `(mc, kc)`: within each output row the `p` accumulation order is
+/// ascending regardless of panel boundaries, and the `av == 0.0` skip fires
+/// on exactly the same elements.
+pub fn gemm_f32_tiled(
+    m: usize,
+    k: usize,
+    n: usize,
+    a: &[f32],
+    b: &[f32],
+    c: &mut [f32],
+    mc: usize,
+    kc: usize,
+) {
     assert_eq!(a.len(), m * k);
     assert_eq!(b.len(), k * n);
     assert_eq!(c.len(), m * n);
+    let (mc, kc) = (mc.max(1), kc.max(1));
     c.fill(0.0);
     // i-k-j loop order: unit-stride over b and c rows → autovectorizes.
-    for ic in (0..m).step_by(MC) {
-        let mend = (ic + MC).min(m);
-        for pc in (0..k).step_by(KC) {
-            let kend = (pc + KC).min(k);
+    for ic in (0..m).step_by(mc) {
+        let mend = (ic + mc).min(m);
+        for pc in (0..k).step_by(kc) {
+            let kend = (pc + kc).min(k);
             for i in ic..mend {
                 let arow = &a[i * k..(i + 1) * k];
                 let crow = &mut c[i * n..(i + 1) * n];
@@ -58,14 +99,30 @@ pub fn gemm_i8(m: usize, k: usize, n: usize, a: &[i8], b: &[i8], c: &mut [i32]) 
 /// Portable autovectorized int8 kernel (the pre-perf-pass baseline, kept
 /// for dispatch fallback and for the §Perf before/after comparison).
 pub fn gemm_i8_portable(m: usize, k: usize, n: usize, a: &[i8], b: &[i8], c: &mut [i32]) {
+    gemm_i8_portable_tiled(m, k, n, a, b, c, MC, KC)
+}
+
+/// Portable int8 kernel with caller-chosen blocking (exact integer math,
+/// so any tiling is trivially bit-identical).
+pub fn gemm_i8_portable_tiled(
+    m: usize,
+    k: usize,
+    n: usize,
+    a: &[i8],
+    b: &[i8],
+    c: &mut [i32],
+    mc: usize,
+    kc: usize,
+) {
     assert_eq!(a.len(), m * k);
     assert_eq!(b.len(), k * n);
     assert_eq!(c.len(), m * n);
+    let (mc, kc) = (mc.max(1), kc.max(1));
     c.fill(0);
-    for ic in (0..m).step_by(MC) {
-        let mend = (ic + MC).min(m);
-        for pc in (0..k).step_by(KC) {
-            let kend = (pc + KC).min(k);
+    for ic in (0..m).step_by(mc) {
+        let mend = (ic + mc).min(m);
+        for pc in (0..k).step_by(kc) {
+            let kend = (pc + kc).min(k);
             for i in ic..mend {
                 let arow = &a[i * k..(i + 1) * k];
                 let crow = &mut c[i * n..(i + 1) * n];
@@ -93,14 +150,30 @@ pub fn gemm_i16(m: usize, k: usize, n: usize, a: &[i16], b: &[i16], c: &mut [i32
 
 /// Portable autovectorized int16 kernel (fallback + §Perf baseline).
 pub fn gemm_i16_portable(m: usize, k: usize, n: usize, a: &[i16], b: &[i16], c: &mut [i32]) {
+    gemm_i16_portable_tiled(m, k, n, a, b, c, MC, KC)
+}
+
+/// Portable int16 kernel with caller-chosen blocking (exact integer math,
+/// so any tiling is trivially bit-identical).
+pub fn gemm_i16_portable_tiled(
+    m: usize,
+    k: usize,
+    n: usize,
+    a: &[i16],
+    b: &[i16],
+    c: &mut [i32],
+    mc: usize,
+    kc: usize,
+) {
     assert_eq!(a.len(), m * k);
     assert_eq!(b.len(), k * n);
     assert_eq!(c.len(), m * n);
+    let (mc, kc) = (mc.max(1), kc.max(1));
     c.fill(0);
-    for ic in (0..m).step_by(MC) {
-        let mend = (ic + MC).min(m);
-        for pc in (0..k).step_by(KC) {
-            let kend = (pc + KC).min(k);
+    for ic in (0..m).step_by(mc) {
+        let mend = (ic + mc).min(m);
+        for pc in (0..k).step_by(kc) {
+            let kend = (pc + kc).min(k);
             for i in ic..mend {
                 let arow = &a[i * k..(i + 1) * k];
                 let crow = &mut c[i * n..(i + 1) * n];
@@ -282,6 +355,46 @@ mod tests {
                 assert!((x - y).abs() <= tol, "{x} vs {y} (m={m},k={k},n={n},bits={bits})");
             }
         });
+    }
+
+    #[test]
+    fn f32_tiled_bit_identical_across_tiles() {
+        // The autotuner's legality argument: any (mc, kc) choice is
+        // bit-identical, not just numerically close.
+        for &(m, k, n) in &[(1, 1, 1), (3, 5, 7), (65, 130, 33), (64, 300, 17)] {
+            let a = randvec(m as u64 + 100, m * k, 1.0);
+            let b = randvec(n as u64 + 200, k * n, 1.0);
+            let mut base = vec![0.0; m * n];
+            gemm_f32(m, k, n, &a, &b, &mut base);
+            for &(mc, kc) in &[(1, 1), (8, 16), (32, 512), (1024, 1024), (7, 13)] {
+                let mut c = vec![0.0; m * n];
+                gemm_f32_tiled(m, k, n, &a, &b, &mut c, mc, kc);
+                let eq = base.iter().zip(&c).all(|(x, y)| x.to_bits() == y.to_bits());
+                assert!(eq, "tile ({mc},{kc}) diverged at shape ({m},{k},{n})");
+            }
+        }
+    }
+
+    #[test]
+    fn int_tiled_bit_identical_across_tiles() {
+        let mut r = Pcg32::seeded(9);
+        let (m, k, n) = (13, 77, 19);
+        let a8: Vec<i8> = (0..m * k).map(|_| (r.below(255) as i32 - 127) as i8).collect();
+        let b8: Vec<i8> = (0..k * n).map(|_| (r.below(255) as i32 - 127) as i8).collect();
+        let a16: Vec<i16> = a8.iter().map(|&v| v as i16 * 3).collect();
+        let b16: Vec<i16> = b8.iter().map(|&v| v as i16 * 5).collect();
+        let mut base8 = vec![0i32; m * n];
+        let mut base16 = vec![0i32; m * n];
+        gemm_i8_portable(m, k, n, &a8, &b8, &mut base8);
+        gemm_i16_portable(m, k, n, &a16, &b16, &mut base16);
+        for &(mc, kc) in &[(1, 1), (5, 9), (256, 256)] {
+            let mut c8 = vec![0i32; m * n];
+            let mut c16 = vec![0i32; m * n];
+            gemm_i8_portable_tiled(m, k, n, &a8, &b8, &mut c8, mc, kc);
+            gemm_i16_portable_tiled(m, k, n, &a16, &b16, &mut c16, mc, kc);
+            assert_eq!(base8, c8, "i8 tile ({mc},{kc})");
+            assert_eq!(base16, c16, "i16 tile ({mc},{kc})");
+        }
     }
 
     #[test]

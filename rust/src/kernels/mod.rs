@@ -29,6 +29,7 @@ use std::sync::{Arc, OnceLock};
 
 use crate::fixedpoint::conv::{self, Conv2dGeom};
 use crate::fixedpoint::gemm;
+pub use crate::fixedpoint::gemm::Tile;
 use crate::fixedpoint::gemm_simd;
 use crate::fixedpoint::quantize::{self, QuantStats};
 use crate::fixedpoint::Scheme;
@@ -115,8 +116,25 @@ impl Engine {
         T: Send,
         B: Fn(usize, usize, &mut [T]) + Sync,
     {
+        self.shard_rows_chunk(m, n, 0, c, body)
+    }
+
+    /// [`Engine::shard_rows`] with an explicit panel height; `chunk == 0`
+    /// keeps the load-balancing default. The partition never changes the
+    /// per-row accumulation order, so every chunk choice is bit-identical —
+    /// which is what lets the inference compiler autotune it
+    /// (DESIGN.md §Inference-Compiler).
+    fn shard_rows_chunk<T, B>(&self, m: usize, n: usize, chunk: usize, c: &mut [T], body: B)
+    where
+        T: Send,
+        B: Fn(usize, usize, &mut [T]) + Sync,
+    {
         debug_assert_eq!(c.len(), m * n);
-        let chunk = m.div_ceil(self.threads * 4).clamp(1, gemm::MC);
+        let chunk = if chunk == 0 {
+            m.div_ceil(self.threads * 4).clamp(1, gemm::MC)
+        } else {
+            chunk.min(m.max(1))
+        };
         let tasks = m.div_ceil(chunk);
         let out = SendPtr(c.as_mut_ptr());
         self.parallel_for(tasks, move |t| {
@@ -162,6 +180,31 @@ impl Engine {
         }
         self.shard_rows(m, n, c, |r0, r1, rows| {
             gemm::gemm_f32(r1 - r0, k, n, &a[r0 * k..r1 * k], b, rows);
+        });
+    }
+
+    /// f32 GEMM with an explicit [`Tile`] (blocking + shard chunk). Every
+    /// tile is bit-identical to [`Engine::gemm_f32`]; the compiler's
+    /// autotuner picks the fastest one per shape.
+    pub fn gemm_f32_tiled(
+        &self,
+        m: usize,
+        k: usize,
+        n: usize,
+        a: &[f32],
+        b: &[f32],
+        c: &mut [f32],
+        t: Tile,
+    ) {
+        assert_eq!(a.len(), m * k);
+        assert_eq!(b.len(), k * n);
+        assert_eq!(c.len(), m * n);
+        if !self.parallel_gemm(m, k, n) {
+            gemm::gemm_f32_tiled(m, k, n, a, b, c, t.mc, t.kc);
+            return;
+        }
+        self.shard_rows_chunk(m, n, t.shard, c, |r0, r1, rows| {
+            gemm::gemm_f32_tiled(r1 - r0, k, n, &a[r0 * k..r1 * k], b, rows, t.mc, t.kc);
         });
     }
 
@@ -278,6 +321,90 @@ impl Engine {
         let b = &b[..];
         self.shard_rows(m, n, c, |r0, r1, rows| {
             gemm::gemm_i16_portable(r1 - r0, k, n, &a[r0 * k..r1 * k], b, rows);
+        });
+    }
+
+    /// [`Engine::gemm_i8_prepacked`] with an explicit [`Tile`]. On the VNNI
+    /// path `mc`/`kc` are moot (the SIMD kernel streams full-`k` dot
+    /// products); the shard chunk and the portable-fallback blocking are
+    /// what the tile actually steers. Exact integer math → any tile is
+    /// bit-identical.
+    pub fn gemm_i8_prepacked_tiled(
+        &self,
+        m: usize,
+        k: usize,
+        n: usize,
+        a: &[i8],
+        bt: &[i8],
+        colsum: &[i32],
+        c: &mut [i32],
+        t: Tile,
+    ) {
+        assert_eq!(a.len(), m * k);
+        assert_eq!(bt.len(), k * n);
+        assert_eq!(c.len(), m * n);
+        #[cfg(target_arch = "x86_64")]
+        if gemm_simd::has_vnni() {
+            if !self.parallel_gemm(m, k, n) {
+                // SAFETY: VNNI availability checked above.
+                unsafe { gemm_simd::gemm_i8_vnni_packed(m, k, n, a, bt, colsum, c) };
+                return;
+            }
+            self.shard_rows_chunk(m, n, t.shard, c, |r0, r1, rows| {
+                // SAFETY: VNNI availability checked above.
+                unsafe {
+                    gemm_simd::gemm_i8_vnni_packed(r1 - r0, k, n, &a[r0 * k..r1 * k], bt, colsum, rows)
+                }
+            });
+            return;
+        }
+        let b = gemm_simd::unpack_bt_i8(k, n, bt);
+        let b = &b[..];
+        if !self.parallel_gemm(m, k, n) {
+            gemm::gemm_i8_portable_tiled(m, k, n, a, b, c, t.mc, t.kc);
+            return;
+        }
+        self.shard_rows_chunk(m, n, t.shard, c, |r0, r1, rows| {
+            gemm::gemm_i8_portable_tiled(r1 - r0, k, n, &a[r0 * k..r1 * k], b, rows, t.mc, t.kc);
+        });
+    }
+
+    /// [`Engine::gemm_i16_prepacked`] with an explicit [`Tile`] (see
+    /// [`Engine::gemm_i8_prepacked_tiled`] for what the tile steers).
+    pub fn gemm_i16_prepacked_tiled(
+        &self,
+        m: usize,
+        k: usize,
+        n: usize,
+        a: &[i16],
+        bt: &[i16],
+        c: &mut [i32],
+        t: Tile,
+    ) {
+        assert_eq!(a.len(), m * k);
+        assert_eq!(bt.len(), k * n);
+        assert_eq!(c.len(), m * n);
+        #[cfg(target_arch = "x86_64")]
+        if gemm_simd::has_avx512bw() {
+            if !self.parallel_gemm(m, k, n) {
+                // SAFETY: AVX-512 BW availability checked above.
+                unsafe { gemm_simd::gemm_i16_madd_packed(m, k, n, a, bt, c) };
+                return;
+            }
+            self.shard_rows_chunk(m, n, t.shard, c, |r0, r1, rows| {
+                // SAFETY: AVX-512 BW availability checked above.
+                unsafe { gemm_simd::gemm_i16_madd_packed(r1 - r0, k, n, &a[r0 * k..r1 * k], bt, rows) }
+            });
+            return;
+        }
+        let b = gemm_simd::unpack_bt_i16(k, n, bt);
+        let b = &b[..];
+        if !self.parallel_gemm(m, k, n) {
+            gemm::gemm_i16_portable_tiled(m, k, n, a, b, c, t.mc, t.kc);
+            return;
+        }
+        self.shard_rows_chunk(m, n, t.shard, c, |r0, r1, rows| {
+            gemm::gemm_i16_portable_tiled(r1 - r0, k, n, &a[r0 * k..r1 * k], b, rows, t.mc, t.kc);
         });
     }
 
@@ -452,6 +579,44 @@ mod tests {
             let mut got = vec![0.0f32; m * n];
             eng.gemm_f32(m, k, n, &a, &b, &mut got);
             assert_eq!(got, want, "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn tiled_gemm_bit_identical_for_any_tile_and_thread_count() {
+        let (m, k, n) = (160usize, 130, 96);
+        let a = randvec(7, m * k);
+        let b = randvec(8, k * n);
+        let sa = Scheme::for_range(max_abs(&a), 8);
+        let sb = Scheme::for_range(max_abs(&b), 8);
+        let mut ca = vec![0i8; a.len()];
+        let mut cb = vec![0i8; b.len()];
+        quantize::codes_i8(&a, &mut ca, sa);
+        quantize::codes_i8(&b, &mut cb, sb);
+        let mut bt = vec![0i8; k * n];
+        let mut colsum = vec![0i32; n];
+        gemm_simd::pack_bt_i8(k, n, &cb, &mut bt, &mut colsum);
+
+        let mut want_f = vec![0.0f32; m * n];
+        gemm::gemm_f32(m, k, n, &a, &b, &mut want_f);
+        let mut want_i = vec![0i32; m * n];
+        gemm::gemm_i8(m, k, n, &ca, &cb, &mut want_i);
+
+        for threads in [1usize, 2, 4] {
+            let eng = Engine::new(threads);
+            for t in [
+                Tile::default(),
+                Tile { mc: 16, kc: 64, shard: 8 },
+                Tile { mc: 128, kc: 512, shard: 64 },
+                Tile { mc: 1, kc: 1, shard: 1 },
+            ] {
+                let mut cf = vec![0.0f32; m * n];
+                eng.gemm_f32_tiled(m, k, n, &a, &b, &mut cf, t);
+                assert_eq!(cf, want_f, "f32 threads={threads} tile={t:?}");
+                let mut ci = vec![0i32; m * n];
+                eng.gemm_i8_prepacked_tiled(m, k, n, &ca, &bt, &colsum, &mut ci, t);
+                assert_eq!(ci, want_i, "i8 threads={threads} tile={t:?}");
+            }
         }
     }
 

@@ -32,6 +32,7 @@
 
 pub mod apt;
 pub mod bench;
+pub mod compiler;
 pub mod coordinator;
 pub mod data;
 pub mod exp;

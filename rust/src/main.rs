@@ -7,6 +7,8 @@
 //!   serve [--ckpt F --model M]     serve through the serving tier: model
 //!         [--models A,B --scheduler P --deadline-us N]  registry, pluggable
 //!                                  batching policy, SLO-aware shedding
+//!         [--no-fuse --tune]       inference-compiler knobs: unfused
+//!                                  interpreter / load-time tile search
 //!   opcount [--batch N]            print the Fig7/Table5 analytic counts
 //!   list                           list experiments and models
 //!
@@ -17,6 +19,7 @@ use std::time::Instant;
 
 use anyhow::{anyhow, bail, Context, Result};
 
+use apt::compiler::CompileOptions;
 use apt::exp;
 use apt::exp::common::{grad_mix_string, stash_mix_string};
 use apt::mem::StashPolicy;
@@ -25,6 +28,7 @@ use apt::serve::{
     FrozenModel, InferenceServer, ModelRegistry, SchedPolicy, ServeConfig, ServeModel,
     ServeOutcome, SubmitOpts,
 };
+use apt::train::checkpoint::Checkpoint;
 use apt::train::{CommPrecision, SessionBuilder, TrainRecord};
 use apt::util::cli::Args;
 use apt::util::stats::percentile;
@@ -43,7 +47,7 @@ fn usage() -> ! {
          \x20       [--mode int8] [--train-iters N] [--seed N] [--requests N]\n\
          \x20       [--clients N] [--workers N] [--max-batch N] [--max-wait-us N]\n\
          \x20       [--queue-cap N] [--scheduler flush|continuous]\n\
-         \x20       [--deadline-us N] [--lanes N]\n\
+         \x20       [--deadline-us N] [--lanes N] [--no-fuse] [--tune]\n\
          \x20 opcount [--batch N]\n\
          \x20 list\n\
          \n\
@@ -65,6 +69,17 @@ fn parsed<T: std::str::FromStr>(args: &Args, key: &str, default: T) -> Result<T>
         Some(v) => v
             .parse()
             .map_err(|_| anyhow!("--{key}: cannot parse {v:?} as a number")),
+    }
+}
+
+/// Checked boolean flag (`--flag`, `--flag true|1|yes|false|0|no`):
+/// errors on junk instead of panicking, same contract as [`parsed`].
+fn flag(args: &Args, key: &str) -> Result<bool> {
+    match args.get(key) {
+        None => Ok(false),
+        Some("true") | Some("1") | Some("yes") => Ok(true),
+        Some("false") | Some("0") | Some("no") => Ok(false),
+        Some(v) => bail!("--{key} expects a bool, got {v:?}"),
     }
 }
 
@@ -94,12 +109,7 @@ fn cmd_train(args: &Args) -> Result<()> {
     let act = StashPolicy::parse(&args.str_or("act-bits", "f32"), iters)?;
     // checked flag parse: a malformed value must error, not panic (the
     // no-panic CLI contract of the PR-4 hardening pass)
-    let recompute = match args.get("recompute") {
-        None => false,
-        Some("true") | Some("1") | Some("yes") => true,
-        Some("false") | Some("0") | Some("no") => false,
-        Some(v) => bail!("--recompute expects a bool, got {v:?}"),
-    };
+    let recompute = flag(args, "recompute")?;
     let builder = SessionBuilder::classifier(model)
         .mode(mode)
         .lr(parsed(args, "lr", 0.01)?)
@@ -151,7 +161,13 @@ fn cmd_train(args: &Args) -> Result<()> {
 
 /// Train one zoo model briefly and freeze the live net (the `--models`
 /// registry path — no checkpoint file round-trip needed for a demo zoo).
-fn train_and_freeze(name: &str, mode: QuantMode, iters: u64, seed: u64) -> Result<FrozenModel> {
+fn train_and_freeze(
+    name: &str,
+    mode: QuantMode,
+    iters: u64,
+    seed: u64,
+    copts: &CompileOptions,
+) -> Result<FrozenModel> {
     println!("training {name} ({}) for {iters} iters …", mode.label());
     let mut s = SessionBuilder::classifier(name)
         .mode(mode)
@@ -159,7 +175,7 @@ fn train_and_freeze(name: &str, mode: QuantMode, iters: u64, seed: u64) -> Resul
         .seed(seed)
         .build_parallel(1, CommPrecision::F32)?;
     s.run(iters)?;
-    FrozenModel::freeze(format!("{name}-{}", mode.label()), s.net())
+    FrozenModel::freeze_with(format!("{name}-{}", mode.label()), s.net(), copts)
         .with_context(|| format!("freezing {name}"))
 }
 
@@ -191,6 +207,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
         policy,
         lanes: parsed(args, "lanes", 3)?,
     };
+    let copts = CompileOptions { fuse: !flag(args, "no-fuse")?, tune: flag(args, "tune")? };
 
     // --models a,b,…: round-robin requests across a registry of briefly
     // trained zoo models instead of serving one checkpoint.
@@ -207,7 +224,8 @@ fn cmd_serve(args: &Args) -> Result<()> {
         }
         let registry = Arc::new(ModelRegistry::new());
         for name in names {
-            let frozen = train_and_freeze(name, mode, train_iters, seed)?;
+            let frozen = train_and_freeze(name, mode, train_iters, seed, &copts)?;
+            print!("{}", frozen.compile_report());
             registry.publish(name.as_str(), 1, Arc::new(frozen) as Arc<dyn ServeModel>)?;
         }
         for info in registry.list() {
@@ -243,8 +261,20 @@ fn cmd_serve(args: &Args) -> Result<()> {
                 path
             }
         };
-        let frozen = FrozenModel::from_checkpoint(&ckpt_path, &model, mode)
+        let frozen = FrozenModel::from_checkpoint_with(&ckpt_path, &model, mode, &copts)
             .with_context(|| format!("freezing checkpoint {}", ckpt_path.display()))?;
+        print!("{}", frozen.compile_report());
+        if copts.tune && frozen.compile_report().tiles_tuned > 0 {
+            // Persist the freshly searched tiles so the next load of this
+            // artifact answers every shape from the plan cache.
+            Checkpoint::write_tune_cache(&ckpt_path, frozen.tuned_tiles())
+                .with_context(|| format!("caching tiles in {}", ckpt_path.display()))?;
+            println!(
+                "tune cache: wrote {} tile(s) back to {}",
+                frozen.tuned_tiles().len(),
+                ckpt_path.display()
+            );
+        }
         println!(
             "serving {} ({} weights, input width {})",
             frozen.label(),
@@ -338,6 +368,9 @@ fn cmd_serve(args: &Args) -> Result<()> {
         }
     })?;
     let secs = wall.elapsed().as_secs_f64();
+    // Per-step timings accumulate in the models; read them out before the
+    // shutdown consumes the server.
+    let timing_reports = server.timing_reports();
     let stats = server.shutdown();
 
     println!(
@@ -365,6 +398,9 @@ fn cmd_serve(args: &Args) -> Result<()> {
         "accounting: accepted {} = served {} + shed {} (+{} refused at admission)",
         stats.accepted, stats.served, stats.shed, stats.shed_admission
     );
+    for r in &timing_reports {
+        print!("\n{r}");
+    }
     if !stats.accounted() || stats.submitted() != requests as u64 {
         bail!(
             "serve accounting mismatch: accepted {} served {} shed {} refused {} over {requests} requests",

@@ -1,14 +1,17 @@
-//! Frozen inference models (DESIGN.md §Serving).
+//! Frozen inference models (DESIGN.md §Serving, §Inference-Compiler).
 //!
 //! A [`FrozenModel`] is the deployment form of a trained network: the layer
 //! stack is exported once into a flat list of forward-only ops
-//! ([`InferOp`], produced by `nn::Layer::export_infer`), batch-norm running
-//! statistics are folded into per-channel affine coefficients, and the
-//! weights of every quantized GEMM are converted **once** into int8/int16
-//! codes (int8 weights pre-packed into the transposed BT layout the VNNI
-//! kernels consume). Serving then runs integer GEMMs + one rescale per
-//! layer through the [`crate::kernels::Engine`] — no gradient buffers, no
-//! QEM/QPA controller probes, no training caches.
+//! ([`InferOp`], produced by `nn::Layer::export_infer`) and handed to the
+//! inference compiler ([`crate::compiler`]), which validates the op list,
+//! pre-quantizes every weight **once** (int8 weights pre-packed into the
+//! transposed BT layout the VNNI kernels consume), fuses GEMM → BN →
+//! ReLU → requantize chains into single steps that pass integer codes
+//! between ops, and resolves per-shape GEMM tiles from the artifact's plan
+//! cache (or a load-time search). Serving then runs the compiled plan
+//! through the [`crate::kernels::Engine`] — no gradient buffers, no QEM/QPA
+//! controller probes, no training caches. The unfused interpreter stays
+//! available as the correctness oracle and behind `apt serve --no-fuse`.
 //!
 //! **Parity contract.** With 8-bit schemes the integer serving path is
 //! *bit-identical* to `train::Session::eval` whenever every GEMM's depth
@@ -18,217 +21,64 @@
 //! under the bound; `rust/tests/test_serve.rs` pins the property. 16-bit
 //! schemes exceed f32's 24-bit mantissa in the reference path, so int16
 //! serving agrees only to float rounding (the integer path is the *more*
-//! exact of the two).
+//! exact of the two). Fused execution is additionally bit-identical to the
+//! unfused interpreter — every fusion rewrite has an exactness argument
+//! (DESIGN.md §Inference-Compiler) and `rust/tests/test_compiler.rs` pins
+//! it per zoo model.
 
 use std::path::Path;
 
 use anyhow::{anyhow, Result};
 
-use crate::fixedpoint::conv::{im2col, Conv2dGeom};
-use crate::fixedpoint::gemm_simd;
-use crate::fixedpoint::quantize;
-use crate::fixedpoint::Scheme;
+use crate::compiler::{self, CompileOptions, CompileReport, StepTimer, TuneEntry};
 use crate::kernels::Engine;
 use crate::nn::{models, QuantMode, Sequential};
 use crate::tensor::Tensor;
 use crate::train::checkpoint::Checkpoint;
 use crate::util::Pcg32;
 
-/// One forward-only primitive exported by an `nn` layer for serving
-/// (DESIGN.md §Serving). Composite blocks lower to several ops around the
-/// small value-stack ops ([`InferOp::Push`] / [`InferOp::Swap`] /
-/// [`InferOp::AddPopRelu`] / [`InferOp::ConcatPop`]).
-pub enum InferOp {
-    /// Fully-connected `y = x̂·Ŵ + b`; schemes are present iff the layer
-    /// trained quantized.
-    Linear {
-        /// Layer name (diagnostics only).
-        name: String,
-        /// Weight matrix, `din × dout` row-major.
-        w: Tensor,
-        /// Bias, length `dout`.
-        b: Vec<f32>,
-        /// Frozen weight scheme (from the layer's W controller).
-        sw: Option<Scheme>,
-        /// Frozen activation scheme (from the layer's X controller).
-        sx: Option<Scheme>,
-    },
-    /// im2col convolution with the training-time geometry.
-    Conv {
-        /// Layer name (diagnostics only).
-        name: String,
-        /// Convolution geometry (channels, kernel, stride, padding).
-        geom: Conv2dGeom,
-        /// Input height.
-        in_h: usize,
-        /// Input width.
-        in_w: usize,
-        /// Weights, `out_c × (in_c·kh·kw)` row-major.
-        w: Tensor,
-        /// Per-output-channel bias.
-        b: Vec<f32>,
-        /// Frozen weight scheme.
-        sw: Option<Scheme>,
-        /// Frozen activation (patch) scheme.
-        sx: Option<Scheme>,
-    },
-    /// Depthwise 3×3 convolution (scalar kernel; quantization applies as
-    /// fake-quant, matching training).
-    Depthwise {
-        /// Layer name (diagnostics only).
-        name: String,
-        /// Channel count.
-        c: usize,
-        /// Input height.
-        in_h: usize,
-        /// Input width.
-        in_w: usize,
-        /// Stride.
-        stride: usize,
-        /// Per-channel 3×3 kernels, `c × 9`.
-        w: Tensor,
-        /// Frozen weight scheme.
-        sw: Option<Scheme>,
-        /// Frozen activation scheme.
-        sx: Option<Scheme>,
-    },
-    /// Elementwise `max(0, x)`.
-    Relu,
-    /// 2×2 stride-2 max pool over `[n, c·h·w]`.
-    MaxPool {
-        /// Channels.
-        c: usize,
-        /// Input height.
-        h: usize,
-        /// Input width.
-        w: usize,
-    },
-    /// Global average pool `[n, c·h·w] → [n, c]`.
-    GlobalAvgPool {
-        /// Channels.
-        c: usize,
-        /// Input height.
-        h: usize,
-        /// Input width.
-        w: usize,
-    },
-    /// Batch-norm running statistics folded for evaluation:
-    /// `y = γ·(x−μ)·istd + β` with `istd = 1/√(σ²+ε)` precomputed per
-    /// channel (the expensive part of the eval pass — no sqrt at serve
-    /// time, and bit-identical to `BatchNorm2d`'s eval branch).
-    BnEval {
-        /// Channels.
-        c: usize,
-        /// Spatial size per channel (`h·w`).
-        hw: usize,
-        /// Scale γ per channel.
-        gamma: Vec<f32>,
-        /// Shift β per channel.
-        beta: Vec<f32>,
-        /// Running mean μ per channel.
-        mean: Vec<f32>,
-        /// Folded inverse stddev `1/√(σ²+ε)` per channel.
-        istd: Vec<f32>,
-    },
-    /// Save (duplicate) the current activation on the value stack —
-    /// residual/branch entry.
-    Push,
-    /// Swap the current activation with the stack top — second-branch
-    /// entry (the saved input becomes current again).
-    Swap,
-    /// Pop the saved tensor, add it to the current activation, then ReLU —
-    /// residual exit (`relu(F(x) + x)`).
-    AddPopRelu,
-    /// Pop the saved tensor and channel-concatenate `[popped ; current]` —
-    /// branch merge (Inception).
-    ConcatPop {
-        /// Channels of the popped (first) tensor.
-        c_pop: usize,
-        /// Channels of the current (second) tensor.
-        c_cur: usize,
-        /// Spatial size per channel.
-        hw: usize,
-    },
-}
+pub use crate::compiler::InferOp;
 
-/// Pre-quantized weight form of one frozen linear layer.
-enum LinKind {
-    /// Unquantized f32 weights (`din × dout`).
-    F32 { w: Tensor },
-    /// int8 codes, pre-packed transposed (BT) with per-column sums for the
-    /// VNNI bias trick.
-    I8 { bt: Vec<i8>, colsum: Vec<i32>, sw: Scheme, sx: Scheme },
-    /// int16 codes, pre-packed transposed.
-    I16 { bt: Vec<i16>, sw: Scheme, sx: Scheme },
-    /// Wider-than-16-bit scheme: pre-fake-quantized f32 weights, f32 GEMM.
-    Fq { wq: Tensor, sx: Scheme },
-}
-
-struct ExecLinear {
-    din: usize,
-    dout: usize,
-    b: Vec<f32>,
-    kind: LinKind,
-}
-
-/// Pre-quantized weight form of one frozen convolution.
-enum ConvKind {
-    F32 { w: Vec<f32> },
-    I8 { cw: Vec<i8>, sw: Scheme, sx: Scheme },
-    I16 { cw: Vec<i16>, sw: Scheme, sx: Scheme },
-    Fq { wq: Vec<f32>, sx: Scheme },
-}
-
-struct ExecConv {
-    geom: Conv2dGeom,
-    in_h: usize,
-    in_w: usize,
-    b: Vec<f32>,
-    kind: ConvKind,
-}
-
-struct ExecDw {
-    c: usize,
-    in_h: usize,
-    in_w: usize,
-    stride: usize,
-    /// Pre-fake-quantized (or plain f32) kernels, `c × 9`.
-    wq: Vec<f32>,
-    sx: Option<Scheme>,
-}
-
-enum ExecOp {
-    Linear(ExecLinear),
-    Conv(ExecConv),
-    Depthwise(ExecDw),
-    Relu,
-    MaxPool { c: usize, h: usize, w: usize },
-    Gap { c: usize, h: usize, w: usize },
-    Bn { c: usize, hw: usize, gamma: Vec<f32>, beta: Vec<f32>, mean: Vec<f32>, istd: Vec<f32> },
-    Push,
-    Swap,
-    AddPopRelu,
-    ConcatPop { c_pop: usize, c_cur: usize, hw: usize },
-}
-
-/// A trained network frozen for serving: forward-only op list with
+/// A trained network frozen for serving: a compiled forward-only plan with
 /// pre-quantized weights and folded batch-norm statistics. Immutable after
 /// construction — [`forward`](FrozenModel::forward) takes `&self`, so one
 /// model is shared by every [`crate::serve::InferenceServer`] worker behind
-/// an `Arc` with no locking.
+/// an `Arc` with no locking (the per-step timers are atomics).
 pub struct FrozenModel {
     label: String,
-    precision: String,
-    din: usize,
-    ops: Vec<ExecOp>,
+    compiled: compiler::Compiled,
+    timers: Vec<StepTimer>,
 }
 
 impl FrozenModel {
-    /// Freeze a live network (e.g. `session.net()` right after training).
+    /// Freeze a live network (e.g. `session.net()` right after training)
+    /// with default compile options (fusion on, no load-time tile search).
     /// Errors if any layer has no forward-only serving export.
     pub fn freeze(label: impl Into<String>, net: &Sequential) -> Result<FrozenModel> {
+        Self::freeze_with(label, net, &CompileOptions::default())
+    }
+
+    /// [`freeze`](FrozenModel::freeze) with explicit compile options —
+    /// `fuse: false` keeps the unfused interpreter as the primary path.
+    pub fn freeze_with(
+        label: impl Into<String>,
+        net: &Sequential,
+        opts: &CompileOptions,
+    ) -> Result<FrozenModel> {
         let ops = net.export_infer()?;
-        Self::compile(label.into(), ops)
+        Self::compile_ops(label.into(), ops, opts, &[])
+    }
+
+    /// Compile a hand-built op list. Exposed so tests (and future
+    /// exporters) can exercise freeze-time validation directly: malformed
+    /// value-stack programs fail here with the op index named, never at
+    /// execution time inside a serve worker.
+    pub fn from_infer_ops(
+        label: impl Into<String>,
+        ops: Vec<InferOp>,
+        opts: &CompileOptions,
+    ) -> Result<FrozenModel> {
+        Self::compile_ops(label.into(), ops, opts, &[])
     }
 
     /// Load a `train::checkpoint` file and freeze it: rebuilds the named
@@ -236,11 +86,26 @@ impl FrozenModel {
     /// schemes and batch-norm running stats from the checkpoint, and
     /// pre-quantizes the weights. This is the train→deploy hand-off: the
     /// checkpoint must come from a session built with the same
-    /// `(model, mode)` pair (shapes are verified during restore).
+    /// `(model, mode)` pair (shapes are verified during restore). Default
+    /// compile options; any tile plan cached in the artifact is applied.
     pub fn from_checkpoint(
         path: impl AsRef<Path>,
         model: &str,
         mode: QuantMode,
+    ) -> Result<FrozenModel> {
+        Self::from_checkpoint_with(path, model, mode, &CompileOptions::default())
+    }
+
+    /// [`from_checkpoint`](FrozenModel::from_checkpoint) with explicit
+    /// compile options. With `tune: true`, shapes missing from the
+    /// artifact's plan cache are tile-searched at load time; persist
+    /// [`tuned_tiles`](FrozenModel::tuned_tiles) back with
+    /// `Checkpoint::write_tune_cache` so subsequent loads skip the search.
+    pub fn from_checkpoint_with(
+        path: impl AsRef<Path>,
+        model: &str,
+        mode: QuantMode,
+        opts: &CompileOptions,
     ) -> Result<FrozenModel> {
         // `read` already contextualizes I/O errors with the path.
         let ck = Checkpoint::read(path.as_ref())?;
@@ -249,125 +114,19 @@ impl FrozenModel {
         let mut net = models::by_name(model, mode, &mut rng)
             .ok_or_else(|| anyhow!("unknown model {model:?}"))?;
         ck.restore_net(&mut net)?;
-        Self::freeze(format!("{model}-{}", mode.label()), &net)
+        let ops = net.export_infer()?;
+        Self::compile_ops(format!("{model}-{}", mode.label()), ops, opts, ck.tune_cache())
     }
 
-    fn compile(label: String, ops: Vec<InferOp>) -> Result<FrozenModel> {
-        let din = match ops.first() {
-            Some(InferOp::Linear { w, .. }) => w.dim(0),
-            Some(InferOp::Conv { geom, in_h, in_w, .. }) => geom.in_c * in_h * in_w,
-            Some(InferOp::Depthwise { c, in_h, in_w, .. }) => c * in_h * in_w,
-            _ => return Err(anyhow!("cannot infer input width: model must start with a linear/conv layer")),
-        };
-        // Validate value-stack discipline at freeze time, so a malformed
-        // export (hand-built op list, future layer bug) fails here with a
-        // useful error instead of panicking inside a serve worker mid-batch.
-        {
-            let mut depth = 0usize;
-            for (i, op) in ops.iter().enumerate() {
-                let (need, delta): (usize, isize) = match op {
-                    InferOp::Push => (0, 1),
-                    InferOp::Swap => (1, 0),
-                    InferOp::AddPopRelu | InferOp::ConcatPop { .. } => (1, -1),
-                    _ => (0, 0),
-                };
-                if depth < need {
-                    return Err(anyhow!(
-                        "op {i} of {label} underflows the serve value stack (depth {depth})"
-                    ));
-                }
-                depth = (depth as isize + delta) as usize;
-            }
-            if depth != 0 {
-                return Err(anyhow!(
-                    "{label} leaves {depth} unconsumed tensor(s) on the serve value stack"
-                ));
-            }
-        }
-        let mut max_bits: Option<u8> = None;
-        let mut note = |sw: &Option<Scheme>, sx: &Option<Scheme>| {
-            for s in [sw, sx].into_iter().flatten() {
-                max_bits = Some(max_bits.map_or(s.bits, |m| m.max(s.bits)));
-            }
-        };
-        let mut exec = Vec::with_capacity(ops.len());
-        for op in ops {
-            exec.push(match op {
-                InferOp::Linear { w, b, sw, sx, .. } => {
-                    note(&sw, &sx);
-                    let (din_l, dout) = (w.dim(0), w.dim(1));
-                    let kind = match (sw, sx) {
-                        (Some(sw), Some(sx)) if sw.bits <= 8 && sx.bits <= 8 => {
-                            let mut bt = vec![0i8; w.len()];
-                            let mut colsum = vec![0i32; dout];
-                            gemm_simd::codes_i8_bt(din_l, dout, &w.data, sw, &mut bt, &mut colsum);
-                            LinKind::I8 { bt, colsum, sw, sx }
-                        }
-                        (Some(sw), Some(sx)) if sw.bits <= 16 && sx.bits <= 16 => {
-                            let mut cb = vec![0i16; w.len()];
-                            quantize::codes_i16(&w.data, &mut cb, sw);
-                            let mut bt = vec![0i16; w.len()];
-                            gemm_simd::pack_bt_i16(din_l, dout, &cb, &mut bt);
-                            LinKind::I16 { bt, sw, sx }
-                        }
-                        (Some(sw), Some(sx)) => {
-                            let mut wq = w.clone();
-                            quantize::fake_quant_stats_inplace(&mut wq.data, sw);
-                            LinKind::Fq { wq, sx }
-                        }
-                        _ => LinKind::F32 { w },
-                    };
-                    ExecOp::Linear(ExecLinear { din: din_l, dout, b, kind })
-                }
-                InferOp::Conv { geom, in_h, in_w, w, b, sw, sx, .. } => {
-                    note(&sw, &sx);
-                    let kind = match (sw, sx) {
-                        (Some(sw), Some(sx)) if sw.bits <= 8 && sx.bits <= 8 => {
-                            let mut cw = vec![0i8; w.len()];
-                            quantize::codes_i8(&w.data, &mut cw, sw);
-                            ConvKind::I8 { cw, sw, sx }
-                        }
-                        (Some(sw), Some(sx)) if sw.bits <= 16 && sx.bits <= 16 => {
-                            let mut cw = vec![0i16; w.len()];
-                            quantize::codes_i16(&w.data, &mut cw, sw);
-                            ConvKind::I16 { cw, sw, sx }
-                        }
-                        (Some(sw), Some(sx)) => {
-                            let mut wq = w.data.clone();
-                            quantize::fake_quant_stats_inplace(&mut wq, sw);
-                            ConvKind::Fq { wq, sx }
-                        }
-                        _ => ConvKind::F32 { w: w.data },
-                    };
-                    ExecOp::Conv(ExecConv { geom, in_h, in_w, b, kind })
-                }
-                InferOp::Depthwise { c, in_h, in_w, stride, w, sw, sx, .. } => {
-                    note(&sw, &sx);
-                    let mut wq = w.data;
-                    if let Some(sw) = sw {
-                        quantize::fake_quant_stats_inplace(&mut wq, sw);
-                    }
-                    ExecOp::Depthwise(ExecDw { c, in_h, in_w, stride, wq, sx })
-                }
-                InferOp::Relu => ExecOp::Relu,
-                InferOp::MaxPool { c, h, w } => ExecOp::MaxPool { c, h, w },
-                InferOp::GlobalAvgPool { c, h, w } => ExecOp::Gap { c, h, w },
-                InferOp::BnEval { c, hw, gamma, beta, mean, istd } => {
-                    ExecOp::Bn { c, hw, gamma, beta, mean, istd }
-                }
-                InferOp::Push => ExecOp::Push,
-                InferOp::Swap => ExecOp::Swap,
-                InferOp::AddPopRelu => ExecOp::AddPopRelu,
-                InferOp::ConcatPop { c_pop, c_cur, hw } => ExecOp::ConcatPop { c_pop, c_cur, hw },
-            });
-        }
-        let precision = match max_bits {
-            None => "f32".to_string(),
-            Some(b) if b <= 8 => "int8".to_string(),
-            Some(b) if b <= 16 => "int16".to_string(),
-            Some(b) => format!("int{b}"),
-        };
-        Ok(FrozenModel { label, precision, din, ops })
+    fn compile_ops(
+        label: String,
+        ops: Vec<InferOp>,
+        opts: &CompileOptions,
+        cache: &[TuneEntry],
+    ) -> Result<FrozenModel> {
+        let compiled = compiler::compile(&label, ops, opts, cache, crate::kernels::global())?;
+        let timers = (0..compiled.n_steps()).map(|_| StepTimer::new()).collect();
+        Ok(FrozenModel { label, compiled, timers })
     }
 
     /// Display label (`"<model>-<mode>"` when built from a checkpoint).
@@ -378,27 +137,56 @@ impl FrozenModel {
     /// Serving precision derived from the frozen forward schemes:
     /// `"f32"`, `"int8"` or `"int16"` (the widest scheme wins).
     pub fn precision(&self) -> &str {
-        &self.precision
+        &self.compiled.precision
     }
 
     /// Flattened per-sample input width the model expects.
     pub fn input_len(&self) -> usize {
-        self.din
+        self.compiled.din
+    }
+
+    /// Whether the primary execution path is the fused plan.
+    pub fn fused(&self) -> bool {
+        self.compiled.plan.is_some()
+    }
+
+    /// What the compile pass did: op/step counts, code edges, tile
+    /// provenance, per-step labels.
+    pub fn compile_report(&self) -> &CompileReport {
+        &self.compiled.report
+    }
+
+    /// Tile decisions this model runs with (plan-cache hits + load-time
+    /// search results) — persist with `Checkpoint::write_tune_cache`.
+    pub fn tuned_tiles(&self) -> &[TuneEntry] {
+        self.compiled.tuned()
     }
 
     /// Forward a batch `[n, input_len]` → logits `[n, classes]`. Pure:
     /// takes `&self`, so concurrent callers need no synchronization. Rows
     /// are computed independently, so a sample's logits do not depend on
-    /// what it was batched with (the micro-batching invariant).
+    /// what it was batched with (the micro-batching invariant). Runs the
+    /// fused plan when one was compiled, the unfused interpreter otherwise,
+    /// and accumulates per-step wall-time into
+    /// [`timing_report`](FrozenModel::timing_report).
     pub fn forward(&self, x: &Tensor, eng: &Engine) -> Tensor {
+        self.check_input(x);
+        self.compiled.run(x, eng, &self.timers)
+    }
+
+    /// Forward through the unfused reference interpreter regardless of the
+    /// compiled plan — the oracle fused execution is pinned against (and
+    /// the loser side of the fused-vs-unfused benchmarks). Does not touch
+    /// the step timers.
+    pub fn forward_unfused(&self, x: &Tensor, eng: &Engine) -> Tensor {
+        self.check_input(x);
+        self.compiled.run_unfused(x, eng)
+    }
+
+    fn check_input(&self, x: &Tensor) {
         assert_eq!(x.rank(), 2, "frozen forward expects [n, d] input");
-        assert_eq!(x.dim(1), self.din, "input width {} ≠ model width {}", x.dim(1), self.din);
-        let mut cur = x.clone();
-        let mut stack: Vec<Tensor> = Vec::new();
-        for op in &self.ops {
-            cur = apply(op, cur, &mut stack, eng);
-        }
-        cur
+        let din = self.compiled.din;
+        assert_eq!(x.dim(1), din, "input width {} ≠ model width {}", x.dim(1), din);
     }
 
     /// Forward one flattened sample; returns its logits.
@@ -406,245 +194,30 @@ impl FrozenModel {
         let t = Tensor::from_vec(&[1, x.len()], x.to_vec());
         self.forward(&t, eng).data
     }
-}
 
-fn apply(op: &ExecOp, cur: Tensor, stack: &mut Vec<Tensor>, eng: &Engine) -> Tensor {
-    match op {
-        ExecOp::Linear(l) => exec_linear(l, &cur, eng),
-        ExecOp::Conv(cv) => exec_conv(cv, &cur, eng),
-        ExecOp::Depthwise(dw) => exec_depthwise(dw, &cur),
-        ExecOp::Relu => {
-            let mut y = cur;
-            y.map_inplace(|v| v.max(0.0));
-            y
+    /// Per-step timing table over every [`forward`](FrozenModel::forward)
+    /// since construction, or `None` before the first forward. Lines align
+    /// with the compile report's steps.
+    pub fn timing_report(&self) -> Option<String> {
+        let snaps: Vec<(u64, u64)> = self.timers.iter().map(|t| t.snapshot()).collect();
+        let total_ns: u64 = snaps.iter().map(|s| s.0).sum();
+        let calls = snaps.iter().map(|s| s.1).max().unwrap_or(0);
+        if calls == 0 {
+            return None;
         }
-        ExecOp::MaxPool { c, h, w } => exec_maxpool(*c, *h, *w, &cur),
-        ExecOp::Gap { c, h, w } => exec_gap(*c, *h, *w, &cur),
-        ExecOp::Bn { c, hw, gamma, beta, mean, istd } => {
-            let mut y = cur;
-            let n = y.dim(0);
-            for ch in 0..*c {
-                let (g, b) = (gamma[ch], beta[ch]);
-                let (m, is) = (mean[ch], istd[ch]);
-                for img in 0..n {
-                    for i in 0..*hw {
-                        let idx = img * c * hw + ch * hw + i;
-                        let v = y.data[idx];
-                        y.data[idx] = g * (v - m) * is + b;
-                    }
-                }
-            }
-            y
+        let mut out = format!(
+            "per-step timings for {} ({} calls, {:.1} ms total):\n",
+            self.label,
+            calls,
+            total_ns as f64 / 1e6
+        );
+        for (i, ((ns, n), line)) in
+            snaps.iter().zip(&self.compiled.report.lines).enumerate()
+        {
+            let us = *ns as f64 / (*n).max(1) as f64 / 1e3;
+            let pct = if total_ns > 0 { *ns as f64 * 100.0 / total_ns as f64 } else { 0.0 };
+            out.push_str(&format!("  [{i:2}] {line:<44} {us:>9.1} us/call {pct:5.1}%\n"));
         }
-        // Stack discipline is verified by `compile` at freeze time, so the
-        // pops/peeks below cannot underflow on any constructible model.
-        ExecOp::Push => {
-            stack.push(cur.clone());
-            cur
-        }
-        ExecOp::Swap => {
-            let mut cur = cur;
-            let top = stack.last_mut().expect("serve stack underflow (Swap)");
-            std::mem::swap(top, &mut cur);
-            cur
-        }
-        ExecOp::AddPopRelu => {
-            let saved = stack.pop().expect("serve stack underflow (AddPopRelu)");
-            let mut h = cur;
-            h.add_inplace(&saved);
-            h.map_inplace(|v| v.max(0.0));
-            h
-        }
-        ExecOp::ConcatPop { c_pop, c_cur, hw } => {
-            let first = stack.pop().expect("serve stack underflow (ConcatPop)");
-            let n = cur.dim(0);
-            let (c1, c3, hw) = (*c_pop, *c_cur, *hw);
-            let mut out = Tensor::zeros(&[n, (c1 + c3) * hw]);
-            for img in 0..n {
-                out.data[img * (c1 + c3) * hw..][..c1 * hw]
-                    .copy_from_slice(&first.data[img * c1 * hw..][..c1 * hw]);
-                out.data[img * (c1 + c3) * hw + c1 * hw..][..c3 * hw]
-                    .copy_from_slice(&cur.data[img * c3 * hw..][..c3 * hw]);
-            }
-            out
-        }
+        Some(out)
     }
-}
-
-fn exec_linear(l: &ExecLinear, x: &Tensor, eng: &Engine) -> Tensor {
-    let m = x.dim(0);
-    assert_eq!(x.dim(1), l.din, "linear input width");
-    match &l.kind {
-        LinKind::F32 { w } => {
-            let mut y = x.matmul_with(w, eng);
-            y.add_row_bias(&l.b);
-            y
-        }
-        LinKind::Fq { wq, sx } => {
-            let mut xq = x.clone();
-            eng.fake_quant_stats(&mut xq.data, *sx);
-            let mut y = xq.matmul_with(wq, eng);
-            y.add_row_bias(&l.b);
-            y
-        }
-        LinKind::I8 { bt, colsum, sw, sx } => {
-            let mut ca = vec![0i8; x.len()];
-            eng.codes_i8(&x.data, &mut ca, *sx);
-            let mut acc = vec![0i32; m * l.dout];
-            eng.gemm_i8_prepacked(m, l.din, l.dout, &ca, bt, colsum, &mut acc);
-            let mut y = Tensor::zeros(&[m, l.dout]);
-            eng.rescale_i32(&acc, sw.resolution() * sx.resolution(), &mut y.data);
-            y.add_row_bias(&l.b);
-            y
-        }
-        LinKind::I16 { bt, sw, sx } => {
-            let mut ca = vec![0i16; x.len()];
-            eng.codes_i16(&x.data, &mut ca, *sx);
-            let mut acc = vec![0i32; m * l.dout];
-            eng.gemm_i16_prepacked(m, l.din, l.dout, &ca, bt, &mut acc);
-            let mut y = Tensor::zeros(&[m, l.dout]);
-            eng.rescale_i32(&acc, sw.resolution() * sx.resolution(), &mut y.data);
-            y.add_row_bias(&l.b);
-            y
-        }
-    }
-}
-
-fn exec_conv(cv: &ExecConv, x: &Tensor, eng: &Engine) -> Tensor {
-    let n = x.dim(0);
-    let g = cv.geom;
-    let (h, w) = (cv.in_h, cv.in_w);
-    assert_eq!(x.dim(1), g.in_c * h * w, "conv input size");
-    let (rows, cols) = g.im2col_dims(h, w);
-    let (oh, ow) = g.out_hw(h, w);
-    let mut out = Tensor::zeros(&[n, g.out_c * oh * ow]);
-    // Per-image scratch, hoisted out of the hot loop (sizes are
-    // loop-invariant; every pass fully overwrites its buffer).
-    let mut patch = vec![0.0f32; rows * cols];
-    let (mut cp8, mut cp16, mut acc) = (Vec::new(), Vec::new(), Vec::new());
-    match &cv.kind {
-        ConvKind::I8 { .. } => {
-            cp8 = vec![0i8; rows * cols];
-            acc = vec![0i32; g.out_c * cols];
-        }
-        ConvKind::I16 { .. } => {
-            cp16 = vec![0i16; rows * cols];
-            acc = vec![0i32; g.out_c * cols];
-        }
-        _ => {}
-    }
-    for img in 0..n {
-        let xi = &x.data[img * g.in_c * h * w..(img + 1) * g.in_c * h * w];
-        im2col(g, h, w, xi, &mut patch);
-        let co = &mut out.data[img * g.out_c * cols..(img + 1) * g.out_c * cols];
-        match &cv.kind {
-            ConvKind::F32 { w } => eng.gemm_f32(g.out_c, rows, cols, w, &patch, co),
-            ConvKind::Fq { wq, sx } => {
-                eng.fake_quant_stats(&mut patch, *sx);
-                eng.gemm_f32(g.out_c, rows, cols, wq, &patch, co);
-            }
-            ConvKind::I8 { cw, sw, sx } => {
-                eng.codes_i8(&patch, &mut cp8, *sx);
-                eng.gemm_i8(g.out_c, rows, cols, cw, &cp8, &mut acc);
-                eng.rescale_i32(&acc, sw.resolution() * sx.resolution(), co);
-            }
-            ConvKind::I16 { cw, sw, sx } => {
-                eng.codes_i16(&patch, &mut cp16, *sx);
-                eng.gemm_i16(g.out_c, rows, cols, cw, &cp16, &mut acc);
-                eng.rescale_i32(&acc, sw.resolution() * sx.resolution(), co);
-            }
-        }
-        for oc in 0..g.out_c {
-            let bv = cv.b[oc];
-            for v in co[oc * cols..(oc + 1) * cols].iter_mut() {
-                *v += bv;
-            }
-        }
-    }
-    out
-}
-
-fn exec_depthwise(dw: &ExecDw, x: &Tensor) -> Tensor {
-    let n = x.dim(0);
-    let (c, h, w, stride) = (dw.c, dw.in_h, dw.in_w, dw.stride);
-    assert_eq!(x.dim(1), c * h * w, "depthwise input size");
-    let (oh, ow) = ((h + 2 - 3) / stride + 1, (w + 2 - 3) / stride + 1);
-    let xq = match dw.sx {
-        None => x.clone(),
-        Some(sx) => {
-            let mut xq = x.clone();
-            quantize::fake_quant_stats_inplace(&mut xq.data, sx);
-            xq
-        }
-    };
-    let mut out = Tensor::zeros(&[n, c * oh * ow]);
-    for img in 0..n {
-        for ch in 0..c {
-            let xi = &xq.data[img * c * h * w + ch * h * w..][..h * w];
-            let k = &dw.wq[ch * 9..(ch + 1) * 9];
-            let oi = &mut out.data[img * c * oh * ow + ch * oh * ow..][..oh * ow];
-            for oy in 0..oh {
-                for ox in 0..ow {
-                    let mut acc = 0.0f32;
-                    for ky in 0..3 {
-                        let iy = (oy * stride + ky) as isize - 1;
-                        if iy < 0 || iy >= h as isize {
-                            continue;
-                        }
-                        for kx in 0..3 {
-                            let ix = (ox * stride + kx) as isize - 1;
-                            if ix < 0 || ix >= w as isize {
-                                continue;
-                            }
-                            acc += k[ky * 3 + kx] * xi[iy as usize * w + ix as usize];
-                        }
-                    }
-                    oi[oy * ow + ox] = acc;
-                }
-            }
-        }
-    }
-    out
-}
-
-fn exec_maxpool(c: usize, h: usize, w: usize, x: &Tensor) -> Tensor {
-    let n = x.dim(0);
-    assert_eq!(x.dim(1), c * h * w, "maxpool input size");
-    let (oh, ow) = (h / 2, w / 2);
-    let mut y = Tensor::zeros(&[n, c * oh * ow]);
-    for img in 0..n {
-        for ch in 0..c {
-            let xi = &x.data[img * c * h * w + ch * h * w..][..h * w];
-            let base_o = img * c * oh * ow + ch * oh * ow;
-            for oy in 0..oh {
-                for ox in 0..ow {
-                    let mut best = f32::NEG_INFINITY;
-                    for dy in 0..2 {
-                        for dx in 0..2 {
-                            let idx = (2 * oy + dy) * w + 2 * ox + dx;
-                            if xi[idx] > best {
-                                best = xi[idx];
-                            }
-                        }
-                    }
-                    y.data[base_o + oy * ow + ox] = best;
-                }
-            }
-        }
-    }
-    y
-}
-
-fn exec_gap(c: usize, h: usize, w: usize, x: &Tensor) -> Tensor {
-    let n = x.dim(0);
-    let hw = h * w;
-    assert_eq!(x.dim(1), c * hw, "global-pool input size");
-    let mut y = Tensor::zeros(&[n, c]);
-    for img in 0..n {
-        for ch in 0..c {
-            let s: f32 = x.data[img * c * hw + ch * hw..][..hw].iter().sum();
-            y.data[img * c + ch] = s / hw as f32;
-        }
-    }
-    y
 }

@@ -7,11 +7,15 @@
 //! "Efficiency"; cf. the per-tensor fixed-point deployment argument in
 //! PAPERS.md). Four pieces:
 //!
-//! - [`FrozenModel`] — a checkpoint (or live net) frozen for serving:
-//!   forward-only op list, batch-norm running stats folded to per-channel
-//!   affines, weights pre-quantized **once** into int8/int16 codes that
-//!   feed the integer GEMM kernels. No gradient buffers, no controller
-//!   probes, no training caches.
+//! - [`FrozenModel`] — a checkpoint (or live net) frozen for serving
+//!   through the inference compiler (`crate::compiler`, DESIGN.md
+//!   §Inference-Compiler): forward-only op list validated at freeze time,
+//!   batch-norm running stats folded to per-channel affines, weights
+//!   pre-quantized and pre-packed **once** into the layouts the integer
+//!   GEMM kernels consume, GEMM→requantize→ReLU chains fused into steps
+//!   that pass integer codes (bit-identical to the unfused interpreter),
+//!   and per-shape tiles autotuned/cached. No gradient buffers, no
+//!   controller probes, no training caches.
 //! - [`ModelRegistry`] — versioned multi-model registry behind the
 //!   [`ServeModel`] trait: load/evict models by name+version, warm swap
 //!   (publish flips the active version for new admissions while in-flight

@@ -37,6 +37,11 @@ pub trait ServeModel: Send + Sync {
     fn forward(&self, x: &Tensor, eng: &Engine) -> Tensor;
     /// Display label (diagnostics only).
     fn label(&self) -> &str;
+    /// Per-step timing table accumulated across forwards, if the model
+    /// tracks one (compiled [`FrozenModel`]s do; fakes may not bother).
+    fn timing_report(&self) -> Option<String> {
+        None
+    }
 }
 
 impl ServeModel for FrozenModel {
@@ -50,6 +55,10 @@ impl ServeModel for FrozenModel {
 
     fn label(&self) -> &str {
         FrozenModel::label(self)
+    }
+
+    fn timing_report(&self) -> Option<String> {
+        FrozenModel::timing_report(self)
     }
 }
 

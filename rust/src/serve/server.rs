@@ -465,6 +465,24 @@ impl InferenceServer {
         }
     }
 
+    /// Per-step timing tables from every registered model version that
+    /// has served at least one forward (see
+    /// [`ServeModel::timing_report`]). One string per `(name, version)`
+    /// pair, registry order; empty until the first batch lands.
+    pub fn timing_reports(&self) -> Vec<String> {
+        let mut out = Vec::new();
+        for info in self.shared.registry.list() {
+            for v in &info.versions {
+                if let Some(m) = self.shared.registry.resolve_version(&info.name, *v) {
+                    if let Some(r) = m.timing_report() {
+                        out.push(format!("{}@{v}: {r}", info.name));
+                    }
+                }
+            }
+        }
+        out
+    }
+
     /// Stop accepting requests, let in-flight batches drain and answer,
     /// reject everything still queued (`Rejected(Shutdown)` — SLO
     /// semantics: at shutdown a queued request is better told "no" at

@@ -24,6 +24,14 @@
 //! baggage. Session save/restore (`Session::{save,load}_checkpoint`) rides
 //! on the same type and additionally round-trips optimizer buffers, the
 //! ledger, the loss curve and the data RNG.
+//!
+//! Deployment additionally rides a serving-only *plan cache*: an optional
+//! trailing `tune` section holding the inference compiler's per-shape GEMM
+//! tile decisions (DESIGN.md §Inference-Compiler). Training never writes
+//! it; `Checkpoint::write_tune_cache` appends/replaces it in an existing
+//! file after a load-time tile search, and `from_checkpoint` loads apply
+//! it via [`Checkpoint::tune_cache`]. Files without the section parse
+//! exactly as before.
 
 use std::fmt::Write as _;
 use std::path::Path;
@@ -35,7 +43,9 @@ use super::parallel::ParallelBackend;
 use super::{HostBackend, Session};
 use crate::apt::{ControllerState, Ledger};
 use crate::apt::ledger::Event;
+use crate::compiler::{GemmKind, ShapeKey, TuneEntry};
 use crate::fixedpoint::TensorKind;
+use crate::kernels::Tile;
 use crate::nn::Sequential;
 
 const MAGIC: &str = "aptckpt";
@@ -46,6 +56,12 @@ const MAGIC: &str = "aptckpt";
 // controllers (DESIGN.md §Activation-Memory; empty for non-adaptive
 // `--act-bits` policies). v1 and v2 files keep loading — pinned by the
 // fixture checkpoints under rust/tests/fixtures/.
+//
+// Still v3: an *optional* `tune` section may sit between `stash` and the
+// final `end` — the serving plan cache appended by
+// `Checkpoint::write_tune_cache`. Readers that predate it would reject the
+// file, but it is only ever added to artifacts by the serving tier, never
+// by training saves; absence parses exactly as before, so no version bump.
 const VERSION: &str = "v3";
 
 fn kind_label(k: TensorKind) -> &'static str {
@@ -314,6 +330,10 @@ pub struct Checkpoint {
     /// (`--act-bits adaptive` runs, DESIGN.md §Activation-Memory); empty
     /// for other policies and for v1/v2 files.
     stash: Vec<(String, ControllerState)>,
+    /// Serving plan cache: per-shape GEMM tile decisions appended by
+    /// [`Checkpoint::write_tune_cache`]. Empty for files without the
+    /// optional `tune` section (every training save).
+    tune: Vec<TuneEntry>,
 }
 
 impl Checkpoint {
@@ -348,6 +368,57 @@ impl Checkpoint {
     /// non-adaptive `--act-bits` policies and for v1/v2 files.
     pub fn stash_controllers(&self) -> &[(String, ControllerState)] {
         &self.stash
+    }
+
+    /// The serving plan cache: GEMM tile decisions recorded by a previous
+    /// tuning load via [`write_tune_cache`](Checkpoint::write_tune_cache).
+    /// Empty when the file has no `tune` section.
+    pub fn tune_cache(&self) -> &[TuneEntry] {
+        &self.tune
+    }
+
+    /// Append (or replace) the `tune` plan-cache section of an existing
+    /// checkpoint file with `entries` — typically
+    /// `FrozenModel::tuned_tiles` after a `tune: true` load, so subsequent
+    /// loads of the artifact skip the tile search. Only the trailing
+    /// section is rewritten; everything the training session saved is
+    /// byte-identical afterwards. The file is parsed first, so a corrupt
+    /// checkpoint is refused untouched.
+    pub fn write_tune_cache(path: impl AsRef<Path>, entries: &[TuneEntry]) -> Result<()> {
+        let path = path.as_ref();
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading checkpoint {path:?}"))?;
+        parse(&text).with_context(|| format!("refusing to rewrite {path:?}"))?;
+        let body = text.trim_end();
+        let body = body
+            .strip_suffix("end")
+            .ok_or_else(|| anyhow!("checkpoint {path:?} does not end with \"end\""))?;
+        // Drop a previous tune section, if any. `tune` at the start of a
+        // line only ever introduces the section: every other record tag is
+        // distinct and layer/model names never begin a line.
+        let body = match body.rfind("\ntune ") {
+            Some(pos) => &body[..pos],
+            None => body,
+        };
+        let mut out = body.trim_end().to_string();
+        out.push('\n');
+        let _ = writeln!(out, "tune {}", entries.len());
+        for e in entries {
+            let _ = writeln!(
+                out,
+                "tl {} {} {} {} {} {} {}",
+                e.key.kind.token(),
+                e.key.m,
+                e.key.k,
+                e.key.n,
+                e.tile.mc,
+                e.tile.kc,
+                e.tile.shard
+            );
+        }
+        out.push_str("end\n");
+        std::fs::write(path, out).with_context(|| format!("writing checkpoint {path:?}"))?;
+        Ok(())
     }
 
     /// Restore the network-owned portion — parameter tensors, per-tensor
@@ -628,7 +699,28 @@ fn parse(text: &str) -> Result<Checkpoint> {
         let name = lx.next()?.to_string();
         stash.push((name, parse_ctl_state(&mut lx)?));
     }
-    lx.expect("end")?;
+
+    // Optional serving plan cache (see the VERSION note): `tune <n>` with
+    // one `tl <kind> <m> <k> <n> <mc> <kc> <shard>` row per shape, sitting
+    // just before the final `end`.
+    let mut tune = Vec::new();
+    match lx.next()? {
+        "end" => {}
+        "tune" => {
+            let n_tune = lx.usize()?;
+            for _ in 0..n_tune {
+                lx.expect("tl")?;
+                let tok = lx.next()?;
+                let kind = GemmKind::from_token(tok)
+                    .ok_or_else(|| anyhow!("unknown GEMM kind {tok:?} in tune section"))?;
+                let key = ShapeKey { kind, m: lx.usize()?, k: lx.usize()?, n: lx.usize()? };
+                let tile = Tile { mc: lx.usize()?, kc: lx.usize()?, shard: lx.usize()? };
+                tune.push(TuneEntry { key, tile });
+            }
+            lx.expect("end")?;
+        }
+        other => bail!("expected \"tune\" or \"end\", found {other:?}"),
+    }
 
     Ok(Checkpoint {
         iter,
@@ -642,6 +734,7 @@ fn parse(text: &str) -> Result<Checkpoint> {
         data_rng,
         comm,
         stash,
+        tune,
     })
 }
 

@@ -1,0 +1,251 @@
+//! `compiler::` contract tests (DESIGN.md §Inference-Compiler) — the gate
+//! for the fused serving path:
+//!
+//! 1. **Fused ≡ unfused** — for every zoo model family (plain MLP, conv
+//!    stacks, residual add-back, Inception concat, depthwise) and mode,
+//!    the fused plan's logits are *bit-identical* to the unfused reference
+//!    interpreter. Fusion is a scheduling/layout decision, never a
+//!    numerics decision.
+//! 2. **Freeze-time validation** — malformed value-stack programs fail at
+//!    compile time with the op index named, never as an exec-time panic
+//!    inside a serve worker.
+//! 3. **Plan cache** — `--tune` tile decisions round-trip through the
+//!    checkpoint's `tune` section: a second load answers every shape from
+//!    the cache, serves bit-identically, and the file still restores into
+//!    a training session (the trailing section is serving-only).
+
+use apt::compiler::CompileOptions;
+use apt::data::SynthImages;
+use apt::fixedpoint::Scheme;
+use apt::kernels::Engine;
+use apt::nn::{models, QuantMode};
+use apt::serve::{FrozenModel, InferOp};
+use apt::tensor::Tensor;
+use apt::train::checkpoint::Checkpoint;
+use apt::train::{HostBackend, Session, SessionBuilder};
+
+fn ckpt_path(tag: &str) -> std::path::PathBuf {
+    std::env::temp_dir().join(format!("apt_compiler_ckpt_{tag}_{}.txt", std::process::id()))
+}
+
+/// Builder-default eval batch: the stream `Session::eval` reads.
+fn eval_batch(n: usize) -> Tensor {
+    let data = SynthImages::new(
+        1000,
+        models::CLASSES,
+        models::IN_C,
+        models::IN_H,
+        models::IN_W,
+        0.5,
+    );
+    data.eval_set(999, n).0
+}
+
+fn assert_bits_equal(want: &Tensor, got: &Tensor, tag: &str) {
+    assert_eq!(want.shape, got.shape, "{tag}: shape");
+    for (i, (a, b)) in want.data.iter().zip(&got.data).enumerate() {
+        assert_eq!(a.to_bits(), b.to_bits(), "{tag}: logit {i} diverged ({a} vs {b})");
+    }
+}
+
+fn train_net(model: &str, mode: QuantMode, iters: u64) -> Session<'static, HostBackend> {
+    let mut s = SessionBuilder::classifier(model).mode(mode).lr(0.01).build();
+    s.run(iters).unwrap();
+    s
+}
+
+#[test]
+fn fused_bit_identical_to_unfused_across_zoo() {
+    // Batch > 1 so fused batching/tiling decisions are exercised; models
+    // cover every fusion pattern: plain GEMM chain (mlp), conv + maxpool
+    // (alexnet), BN + residual AddPopRelu (resnet), ConcatPop branch merge
+    // (inception), depthwise + GAP (mobilenet).
+    for (model, mode, iters) in [
+        ("mlp", QuantMode::Float32, 20),
+        ("mlp", QuantMode::Static(8), 20),
+        ("mlp", QuantMode::Static(16), 20),
+        ("alexnet", QuantMode::Static(8), 10),
+        ("resnet", QuantMode::Static(8), 10),
+        ("inception", QuantMode::Static(8), 10),
+        ("mobilenet", QuantMode::Static(8), 10),
+    ] {
+        let tag = format!("{model}-{}", mode.label());
+        let s = train_net(model, mode, iters);
+        let fused = FrozenModel::freeze(tag.clone(), s.net()).unwrap();
+        assert!(fused.fused(), "{tag}: default freeze must build a plan");
+        let ex = eval_batch(32);
+        let eng = Engine::serial();
+        let got = fused.forward(&ex, &eng);
+        let want = fused.forward_unfused(&ex, &eng);
+        assert_bits_equal(&want, &got, &tag);
+
+        // A model frozen with fusion off (the --no-fuse path) runs the
+        // interpreter as its *primary* path and must land on the same bits.
+        let opts = CompileOptions { fuse: false, tune: false };
+        let unfused = FrozenModel::freeze_with(tag.clone(), s.net(), &opts).unwrap();
+        assert!(!unfused.fused());
+        assert_bits_equal(&want, &unfused.forward(&ex, &eng), &format!("{tag}-nofuse"));
+
+        // Fusion must actually fuse something on the quantized models:
+        // fewer steps than ops and at least one integer edge.
+        let rep = fused.compile_report();
+        assert_eq!(rep.ops, unfused.compile_report().steps, "{tag}: op count");
+        if !matches!(mode, QuantMode::Float32) {
+            assert!(rep.steps < rep.ops, "{tag}: {} steps for {} ops", rep.steps, rep.ops);
+            assert!(rep.code_edges > 0, "{tag}: no code edges");
+        }
+    }
+}
+
+#[test]
+fn fused_multithreaded_engine_matches_serial() {
+    // Thread count is a scheduling decision too: the fused plan on a
+    // 4-thread engine must reproduce the serial bits exactly.
+    let s = train_net("resnet", QuantMode::Static(8), 8);
+    let frozen = FrozenModel::freeze("resnet-int8", s.net()).unwrap();
+    let ex = eval_batch(16);
+    let serial = frozen.forward(&ex, &Engine::serial());
+    let parallel = frozen.forward(&ex, &Engine::new(4));
+    assert_bits_equal(&serial, &parallel, "resnet-int8-threads");
+}
+
+// ---- freeze-time validation (satellite: never an exec-time panic) ----
+
+fn lin(name: &str, din: usize, dout: usize) -> InferOp {
+    let w: Vec<f32> = (0..din * dout).map(|i| ((i * 7 + 3) % 13) as f32 * 0.01 - 0.06).collect();
+    InferOp::Linear {
+        name: name.to_string(),
+        w: Tensor::from_vec(&[din, dout], w),
+        b: vec![0.1; dout],
+        sw: Some(Scheme { bits: 8, s: -6 }),
+        sx: Some(Scheme { bits: 8, s: -5 }),
+    }
+}
+
+#[test]
+fn freeze_rejects_stack_underflow_naming_the_op() {
+    let opts = CompileOptions::default();
+    // AddPopRelu with nothing pushed: underflow at op 1.
+    let err = FrozenModel::from_infer_ops("bad", vec![lin("fc0", 4, 4), InferOp::AddPopRelu], &opts)
+        .unwrap_err()
+        .to_string();
+    assert!(err.contains("op 1"), "must name the op index: {err}");
+    assert!(err.contains("underflows"), "unexpected error: {err}");
+    assert!(err.contains("bad"), "must name the model: {err}");
+
+    // Swap and ConcatPop underflow the same way.
+    for (i, op) in [InferOp::Swap, InferOp::ConcatPop { c_pop: 1, c_cur: 1, hw: 4 }]
+        .into_iter()
+        .enumerate()
+    {
+        let err = FrozenModel::from_infer_ops("bad2", vec![lin("fc0", 4, 4), op], &opts)
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("op 1") && err.contains("underflows"), "case {i}: {err}");
+    }
+}
+
+#[test]
+fn freeze_rejects_leftover_stack_entries_and_headless_programs() {
+    let opts = CompileOptions::default();
+    // Push with no matching pop: a tensor is left on the stack at the end.
+    let err = FrozenModel::from_infer_ops(
+        "leak",
+        vec![lin("fc0", 4, 4), InferOp::Push, lin("fc1", 4, 4)],
+        &opts,
+    )
+    .unwrap_err()
+    .to_string();
+    assert!(err.contains("unconsumed"), "unexpected error: {err}");
+
+    // No leading layer: the input width cannot be inferred.
+    let err = FrozenModel::from_infer_ops("headless", vec![InferOp::Relu], &opts)
+        .unwrap_err()
+        .to_string();
+    assert!(err.contains("input width"), "unexpected error: {err}");
+}
+
+#[test]
+fn valid_hand_built_program_compiles_and_runs_both_paths() {
+    // A residual block in miniature: fc0 → push → fc1 → add+relu → fc2.
+    // Bit-identity between the fused plan (which collapses the AddPopRelu
+    // into fc1's epilogue) and the interpreter, on a hand-built program.
+    let ops = vec![
+        lin("fc0", 6, 4),
+        InferOp::Push,
+        lin("fc1", 4, 4),
+        InferOp::AddPopRelu,
+        lin("fc2", 4, 3),
+    ];
+    let m = FrozenModel::from_infer_ops("resmini", ops, &CompileOptions::default()).unwrap();
+    assert_eq!(m.input_len(), 6);
+    assert_eq!(m.precision(), "int8");
+    let x = Tensor::from_vec(&[2, 6], (0..12).map(|i| i as f32 * 0.11 - 0.5).collect());
+    let eng = Engine::serial();
+    assert_bits_equal(&m.forward_unfused(&x, &eng), &m.forward(&x, &eng), "resmini");
+}
+
+// ---- plan cache: tune → checkpoint → reload ----
+
+#[test]
+fn tune_cache_roundtrips_through_checkpoint_and_keeps_bits() {
+    let path = ckpt_path("tune");
+    let mut s = SessionBuilder::classifier("alexnet").mode(QuantMode::Static(8)).lr(0.01).build();
+    s.run(8).unwrap();
+    s.save_checkpoint(&path).unwrap();
+
+    // First load searches (no cache in a fresh training checkpoint).
+    let tuned = CompileOptions { fuse: true, tune: true };
+    let m1 = FrozenModel::from_checkpoint_with(&path, "alexnet", QuantMode::Static(8), &tuned)
+        .unwrap();
+    let rep1 = m1.compile_report();
+    assert!(rep1.tiles_tuned > 0, "tune load must search");
+    assert_eq!(rep1.tiles_cached, 0);
+    let entries = m1.tuned_tiles().to_vec();
+    assert_eq!(entries.len(), rep1.tiles_tuned);
+
+    // Persist and reload: every shape answers from the cache, bits agree.
+    Checkpoint::write_tune_cache(&path, &entries).unwrap();
+    assert_eq!(Checkpoint::read(&path).unwrap().tune_cache(), entries.as_slice());
+    let m2 = FrozenModel::from_checkpoint_with(&path, "alexnet", QuantMode::Static(8), &tuned)
+        .unwrap();
+    assert_eq!(m2.compile_report().tiles_tuned, 0);
+    assert_eq!(m2.compile_report().tiles_cached, entries.len());
+    assert_eq!(m2.tuned_tiles(), entries.as_slice());
+    let ex = eval_batch(16);
+    let eng = Engine::serial();
+    assert_bits_equal(&m1.forward(&ex, &eng), &m2.forward(&ex, &eng), "tiles-change-no-bits");
+    // Tiles are speed-only: the untuned default plan lands on the same bits.
+    let m3 = FrozenModel::from_checkpoint(&path, "alexnet", QuantMode::Static(8)).unwrap();
+    assert_bits_equal(&m1.forward(&ex, &eng), &m3.forward(&ex, &eng), "tuned-vs-default");
+
+    // write_tune_cache is idempotent (replaces, not appends).
+    Checkpoint::write_tune_cache(&path, &entries).unwrap();
+    assert_eq!(Checkpoint::read(&path).unwrap().tune_cache(), entries.as_slice());
+
+    // The training payload is untouched: the file still restores into a
+    // session (the tune section is serving-only tail data).
+    let mut s2 = SessionBuilder::classifier("alexnet").mode(QuantMode::Static(8)).lr(0.01).build();
+    s2.load_checkpoint(&path).unwrap();
+    let _ = std::fs::remove_file(&path);
+}
+
+// ---- compile report + per-step timings ----
+
+#[test]
+fn compile_report_and_timing_report_expose_the_plan() {
+    let s = train_net("mlp", QuantMode::Static(8), 10);
+    let frozen = FrozenModel::freeze("mlp-int8", s.net()).unwrap();
+    let rep = format!("{}", frozen.compile_report());
+    assert!(rep.contains("mlp-int8"), "report: {rep}");
+    assert!(rep.contains("ops ->"), "report: {rep}");
+    assert_eq!(frozen.compile_report().lines.len(), frozen.compile_report().steps);
+
+    assert!(frozen.timing_report().is_none(), "no timings before the first forward");
+    let ex = eval_batch(8);
+    frozen.forward(&ex, &Engine::serial());
+    let t = frozen.timing_report().expect("timings after a forward");
+    assert!(t.contains("mlp-int8"), "timing: {t}");
+    assert!(t.contains("us/call"), "timing: {t}");
+    assert_eq!(t.lines().count(), 1 + frozen.compile_report().steps, "one line per step");
+}
