@@ -1,15 +1,18 @@
-//! cargo bench — data-parallel replica scaling (EXPERIMENTS.md
-//! §Parallel-Replicas): trains the mlp classifier at 1/2/4 replicas under
-//! each communication policy (f32, int8, int16, adaptive) and writes
-//! `results/parallel_replicas.csv` with wall time, steps/s, tail loss and
-//! eval accuracy per cell.
+//! cargo bench — data-parallel replica scaling × gradient compression
+//! (EXPERIMENTS.md §Parallel-Replicas and §Compression): trains the mlp
+//! classifier across the replica sweep under each (comm precision,
+//! compression policy) pair and writes `results/parallel_replicas.csv`
+//! with wall time, steps/s, tail loss, eval accuracy and bytes-on-wire
+//! (per-replica compressed, inter-node hierarchical, reduction vs raw f32)
+//! per cell. A headline pass pins the ISSUE-8 acceptance bar: ≥5×
+//! bytes-on-wire reduction at topk:0.1+int8 with N=16 replicas.
 //!
 //! `BENCH_QUICK=1` shortens the run (CI smoke); `APT_BENCH_REPLICAS=1,2`
 //! overrides the replica sweep.
 
 use std::time::Instant;
 
-use apt::train::{CommPrecision, SessionBuilder};
+use apt::train::{CommPrecision, CompressPolicy, SessionBuilder};
 use apt::util::out::{results_dir, Csv};
 
 fn replica_sweep() -> Vec<usize> {
@@ -20,14 +23,34 @@ fn replica_sweep() -> Vec<usize> {
             .filter(|&r| r >= 1)
             .collect();
     }
-    vec![1, 2, 4]
+    vec![1, 2, 4, 8, 16]
 }
 
-fn comm_policies(iters: u64) -> Vec<(&'static str, CommPrecision)> {
-    // The same parser the CLI uses — one definition of each policy.
-    ["f32", "int8", "int16", "adaptive"]
-        .into_iter()
-        .map(|name| (name, CommPrecision::parse(name, iters).unwrap()))
+/// The (comm precision, compression policy) grid — parsed through the same
+/// parsers the CLI uses, so there is one definition of each policy.
+fn configs(iters: u64, quick: bool) -> Vec<(String, CommPrecision, CompressPolicy)> {
+    let names: &[(&str, &str)] = if quick {
+        &[("f32", "none"), ("int8", "quantize"), ("int8", "topk:0.1+quantize")]
+    } else {
+        &[
+            ("f32", "none"),
+            ("int8", "quantize"),
+            ("int16", "quantize"),
+            ("adaptive", "quantize"),
+            ("f32", "topk:0.1"),
+            ("int8", "topk:0.1+quantize"),
+            ("int8", "topk:0.05+quantize"),
+        ]
+    };
+    names
+        .iter()
+        .map(|(c, p)| {
+            (
+                format!("{c}/{p}"),
+                CommPrecision::parse(c, iters).unwrap(),
+                CompressPolicy::parse(p).unwrap(),
+            )
+        })
         .collect()
 }
 
@@ -39,55 +62,119 @@ fn main() {
         "bench_parallel_replicas — mlp, {iters} iters, batch 16, replica sweep {replicas:?}"
     );
     println!(
-        "{:<10} {:>9} {:>10} {:>10} {:>11} {:>9}",
-        "comm", "replicas", "total s", "steps/s", "tail loss", "acc"
+        "{:<22} {:>4} {:>5} {:>8} {:>8} {:>10} {:>7} {:>9} {:>9} {:>7}",
+        "comm/compress", "N", "node", "total s", "steps/s", "tail loss", "acc", "wire KB",
+        "node KB", "redux"
     );
 
     let mut csv = Csv::new(
         results_dir().join("parallel_replicas.csv"),
-        &["comm", "replicas", "iters", "total_s", "steps_per_s", "tail_loss", "eval_acc"],
+        &[
+            "comm",
+            "compress",
+            "replicas",
+            "node",
+            "iters",
+            "total_s",
+            "steps_per_s",
+            "tail_loss",
+            "eval_acc",
+            "wire_kb",
+            "internode_kb",
+            "reduction_x",
+        ],
     );
-    for (name, comm) in comm_policies(iters) {
+    for (name, comm, policy) in configs(iters, quick) {
         for &r in &replicas {
-            let builder = SessionBuilder::classifier("mlp").lr(0.02);
+            // Two-level reduce once there is more than one "node" worth of
+            // replicas; flat below that (node size must divide nothing —
+            // any power of two works — but 4 is the interesting cell).
+            let node = if r >= 4 { 4 } else { 1 };
+            let builder =
+                SessionBuilder::classifier("mlp").lr(0.02).compress(policy).node_size(node);
             let mut s = match builder.build_parallel(r, comm) {
                 Ok(s) => s,
                 Err(e) => {
-                    println!("{name:<10} {r:>9}   skipped: {e}");
+                    println!("{name:<22} {r:>4}   skipped: {e}");
                     continue;
                 }
             };
             let t = Instant::now();
             s.run(iters).expect("parallel training cannot fail");
             let secs = t.elapsed().as_secs_f64();
+            let wire = s.wire_stats();
             let rec = s.record().expect("eval cannot fail");
             let tail = rec.tail_loss(10);
+            let (wire_kb, node_kb) = (
+                wire.replica_bytes as f64 / 1024.0,
+                wire.internode_bytes as f64 / 1024.0,
+            );
             println!(
-                "{:<10} {:>9} {:>10.3} {:>10.1} {:>11.4} {:>9.3}",
+                "{:<22} {:>4} {:>5} {:>8.3} {:>8.1} {:>10.4} {:>7.3} {:>9.1} {:>9.1} {:>6.1}x",
                 name,
                 r,
+                node,
                 secs,
                 iters as f64 / secs.max(1e-9),
                 tail,
-                rec.eval_acc
+                rec.eval_acc,
+                wire_kb,
+                node_kb,
+                wire.reduction()
             );
+            let (comm_name, policy_name) =
+                name.split_once('/').expect("config names are comm/policy");
             csv.row(&[
-                name.to_string(),
+                comm_name.to_string(),
+                policy_name.to_string(),
                 r.to_string(),
+                node.to_string(),
                 iters.to_string(),
                 format!("{secs:.4}"),
                 format!("{:.2}", iters as f64 / secs.max(1e-9)),
                 format!("{tail:.6}"),
                 format!("{:.4}", rec.eval_acc),
+                format!("{wire_kb:.1}"),
+                format!("{node_kb:.1}"),
+                format!("{:.2}", wire.reduction()),
             ]);
         }
     }
     csv.write().unwrap();
     println!("\nwrote {}", results_dir().join("parallel_replicas.csv").display());
+
+    // Headline acceptance cell (always runs, short in quick mode): N=16
+    // replicas, topk:0.1 + int8 codes, hierarchical node size 4 — the wire
+    // payload must shrink ≥5× vs raw f32 while the loss still falls.
+    let head_iters: u64 = if quick { 4 } else { 30 };
+    let mut s = SessionBuilder::classifier("mlp")
+        .lr(0.02)
+        .compress(CompressPolicy::parse("topk:0.1+quantize").unwrap())
+        .node_size(4)
+        .build_parallel(16, CommPrecision::Static(8))
+        .expect("headline config must build");
+    s.run(head_iters).expect("parallel training cannot fail");
+    let wire = s.wire_stats();
+    let rec = s.record().expect("eval cannot fail");
     println!(
-        "expectations (EXPERIMENTS.md §Parallel-Replicas): int8 comm tracks the f32 \
-         tail loss at every replica count; per-step cost grows with N on one machine \
-         (replicas share the kernel-engine pool — the bench isolates comm-precision \
-         effects, not wall-clock scaling across hosts)"
+        "headline: N=16 topk:0.1+int8 node=4 → wire {:.1} KB vs dense {:.1} KB = {:.1}x \
+         reduction (inter-node {:.1}x), first loss {:.3} → tail {:.3}",
+        wire.replica_bytes as f64 / 1024.0,
+        wire.dense_bytes as f64 / 1024.0,
+        wire.reduction(),
+        wire.internode_reduction(),
+        rec.losses.first().copied().unwrap_or(f32::NAN),
+        rec.tail_loss(5)
+    );
+    assert!(
+        wire.reduction() >= 5.0,
+        "ISSUE-8 acceptance: expected ≥5x bytes-on-wire reduction at topk:0.1+int8, got {:.2}x",
+        wire.reduction()
+    );
+    println!(
+        "expectations (EXPERIMENTS.md §Compression): quantize tracks the f32 tail loss at \
+         every replica count; topk error feedback recovers the withheld mass across steps; \
+         per-step cost grows with N on one machine (replicas share the kernel-engine pool — \
+         the bench isolates comm effects, not wall-clock scaling across hosts)"
     );
 }

@@ -4,6 +4,9 @@
 //!   exp <id|all> [--iters N ...]   run a paper experiment (fig1..table5)
 //!   train [--model M --mode Q]     train one classifier and report
 //!         [--replicas N --comm-bits {8,16,adaptive,f32}]  data-parallel
+//!         [--compress {none,quantize,topk:<r>,topk:<r>+quantize}]
+//!         [--node-size N]          gradient compression + hierarchical
+//!                                  reduce (DESIGN.md §Data-Parallel)
 //!   serve [--ckpt F --model M]     serve through the serving tier: model
 //!         [--models A,B --scheduler P --deadline-us N]  registry, pluggable
 //!                                  batching policy, SLO-aware shedding
@@ -29,7 +32,7 @@ use apt::serve::{
     ServeOutcome, SubmitOpts,
 };
 use apt::train::checkpoint::Checkpoint;
-use apt::train::{CommPrecision, SessionBuilder, TrainRecord};
+use apt::train::{CommPrecision, CompressPolicy, SessionBuilder, TrainRecord};
 use apt::util::cli::Args;
 use apt::util::stats::percentile;
 
@@ -42,6 +45,8 @@ fn usage() -> ! {
          \x20 train [--model alexnet|vgg|resnet|mobilenet|inception|mlp]\n\
          \x20       [--mode float32|adaptive|int8|int16] [--iters N] [--lr F]\n\
          \x20       [--replicas N] [--comm-bits 8|16|adaptive|f32]\n\
+         \x20       [--compress none|quantize|topk:<r>|topk:<r>+quantize]\n\
+         \x20       [--node-size N] (power of two; hierarchical all-reduce)\n\
          \x20       [--act-bits 8|16|adaptive|f32] [--recompute]\n\
          \x20 serve [--ckpt file] [--model mlp] [--models mlp,alexnet,…]\n\
          \x20       [--mode int8] [--train-iters N] [--seed N] [--requests N]\n\
@@ -98,26 +103,46 @@ fn parse_mode(s: &str, iters: u64) -> Result<QuantMode> {
 }
 
 /// `apt train`: one classifier run, optionally data-parallel
-/// (`--replicas N` shards each batch across N replicas with the quantized
-/// gradient all-reduce of DESIGN.md §Data-Parallel).
+/// (`--replicas N` shards each batch across N replicas with the compressed
+/// gradient all-reduce of DESIGN.md §Data-Parallel; `--compress` picks the
+/// lossy wire stage, `--node-size` the hierarchical grouping).
 fn cmd_train(args: &Args) -> Result<()> {
     let model = args.str_or("model", "alexnet");
     let iters: u64 = parsed(args, "iters", 300)?;
     let mode = parse_mode(args.str_or("mode", "adaptive").as_str(), iters)?;
     let replicas: usize = parsed(args, "replicas", 1)?;
-    let comm = CommPrecision::parse(&args.str_or("comm-bits", "f32"), iters)?;
+    let compress: Option<CompressPolicy> = match args.get("compress") {
+        Some(s) => Some(CompressPolicy::parse(s)?),
+        None => None,
+    };
+    // --comm-bits defaults to f32, except that a quantizing --compress
+    // policy with no explicit --comm-bits gets int8 (the natural pairing);
+    // contradictory explicit combinations error in the builder.
+    let comm = match args.get("comm-bits") {
+        Some(s) => CommPrecision::parse(s, iters)?,
+        None => match &compress {
+            Some(p) if p.wants_codes() => CommPrecision::Static(8),
+            _ => CommPrecision::F32,
+        },
+    };
+    let policy = compress.unwrap_or_else(|| comm.default_compress());
+    let node: usize = parsed(args, "node-size", 1)?;
     let act = StashPolicy::parse(&args.str_or("act-bits", "f32"), iters)?;
     // checked flag parse: a malformed value must error, not panic (the
     // no-panic CLI contract of the PR-4 hardening pass)
     let recompute = flag(args, "recompute")?;
-    let builder = SessionBuilder::classifier(model)
+    let mut builder = SessionBuilder::classifier(model)
         .mode(mode)
         .lr(parsed(args, "lr", 0.01)?)
         .batch(parsed(args, "batch", 16)?)
         .seed(parsed(args, "seed", 0)?)
         .noise(parsed(args, "noise", 0.5)?)
         .stash_policy(act)
+        .node_size(node)
         .recompute(recompute);
+    if let Some(p) = compress {
+        builder = builder.compress(p);
+    }
     // Always build through the Result-based parallel constructor: at
     // --replicas 1 it is bit-identical to the plain host loop (pinned by
     // rust/tests/test_parallel.rs), and a bad --model errors instead of
@@ -125,6 +150,7 @@ fn cmd_train(args: &Args) -> Result<()> {
     let mut s = builder.build_parallel(replicas.max(1), comm)?;
     s.run(iters)?;
     let peak_stash = s.mem().peak_bytes();
+    let wire = s.wire_stats();
     let run: TrainRecord = s.record()?;
     println!("{}: eval acc {:.3}", run.label, run.eval_acc);
     println!("gradient bits: {}", grad_mix_string(&run.ledger));
@@ -148,6 +174,16 @@ fn cmd_train(args: &Args) -> Result<()> {
             replicas,
             comm.label(),
             if comm_bits.is_empty() { "f32 (unquantized)".to_string() } else { comm_bits.join(" ") }
+        );
+        println!(
+            "compression ({}, node {node}): wire {:.1} KB vs dense {:.1} KB — {:.1}x \
+             (inter-node {:.1} KB, {:.1}x)",
+            policy.label(),
+            wire.replica_bytes as f64 / 1024.0,
+            wire.dense_bytes as f64 / 1024.0,
+            wire.reduction(),
+            wire.internode_bytes as f64 / 1024.0,
+            wire.internode_reduction()
         );
     }
     println!(

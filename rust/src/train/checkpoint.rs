@@ -39,7 +39,7 @@ use std::path::Path;
 use anyhow::{anyhow, bail, Context, Result};
 
 use super::optim::OptimizerState;
-use super::parallel::ParallelBackend;
+use super::parallel::{CompressSnapshot, ParallelBackend};
 use super::{HostBackend, Session};
 use crate::apt::{ControllerState, Ledger};
 use crate::apt::ledger::Event;
@@ -62,6 +62,14 @@ const MAGIC: &str = "aptckpt";
 // `Checkpoint::write_tune_cache`. Readers that predate it would reject the
 // file, but it is only ever added to artifacts by the serving tier, never
 // by training saves; absence parses exactly as before, so no version bump.
+//
+// Still v3 (gradient compression v2): an *optional* `compress` section may
+// sit between `stash` and `tune`/`end` — the data-parallel compression
+// policy label plus every error-feedback residual (`cr <tensor> <replica>
+// <len> <hex…>` records). Written by every data-parallel save; absent from
+// host saves and all older artifacts, which keep loading (a missing
+// section restores fine into stateless policies and is rejected read-only
+// by error-feedback ones — see `QuantAllReduce::check_compress`).
 const VERSION: &str = "v3";
 
 fn kind_label(k: TensorKind) -> &'static str {
@@ -227,10 +235,22 @@ pub(super) fn save(session: &mut Session<HostBackend>, path: &Path) -> Result<()
     Ok(())
 }
 
+/// Render the `compress` section: policy label + one `cr` record per
+/// (tensor, replica) error-feedback residual.
+fn render_compress_section(out: &mut String, snap: &CompressSnapshot) {
+    let _ = writeln!(out, "compress {} {}", snap.label, snap.residuals.len());
+    for (t, r, v) in &snap.residuals {
+        let _ = write!(out, "cr {t} {r} {}", v.len());
+        push_f32s(out, v);
+        out.push('\n');
+    }
+}
+
 /// Serialize a data-parallel session: the root replica's host-path state
 /// (parameters/optimizer/controllers are bit-identical across replicas
 /// under the sync invariant) plus the per-gradient communication
-/// controllers. Note: under quantized *compute* modes the peers' in-layer
+/// controllers and the compression-policy state (label + error-feedback
+/// residuals). Note: under quantized *compute* modes the peers' in-layer
 /// controller state is replica-local and is restored from the root's
 /// snapshot — exact resume is guaranteed for the communication controllers
 /// and for f32-compute runs (see DESIGN.md §Data-Parallel).
@@ -242,6 +262,7 @@ pub(super) fn save_parallel(session: &mut Session<ParallelBackend>, path: &Path)
     let mut out = render_host(iter, &losses, &mut group.host);
     render_ctl_section(&mut out, "comm", "cc", &group.comm.snapshot());
     render_ctl_section(&mut out, "stash", "sc", &stash);
+    render_compress_section(&mut out, &group.comm.compress_snapshot());
     let _ = writeln!(out, "end");
     std::fs::write(path, out).with_context(|| format!("writing checkpoint {path:?}"))?;
     Ok(())
@@ -330,6 +351,10 @@ pub struct Checkpoint {
     /// (`--act-bits adaptive` runs, DESIGN.md §Activation-Memory); empty
     /// for other policies and for v1/v2 files.
     stash: Vec<(String, ControllerState)>,
+    /// Gradient-compression state (policy label + error-feedback
+    /// residuals) of data-parallel saves; `None` for host saves and for
+    /// artifacts predating the optional `compress` section.
+    compress: Option<CompressSnapshot>,
     /// Serving plan cache: per-shape GEMM tile decisions appended by
     /// [`Checkpoint::write_tune_cache`]. Empty for files without the
     /// optional `tune` section (every training save).
@@ -375,6 +400,13 @@ impl Checkpoint {
     /// Empty when the file has no `tune` section.
     pub fn tune_cache(&self) -> &[TuneEntry] {
         &self.tune
+    }
+
+    /// Gradient-compression state recorded at save time (policy label +
+    /// error-feedback residuals). `None` for host saves and for artifacts
+    /// predating the optional `compress` section.
+    pub fn compress_state(&self) -> Option<&CompressSnapshot> {
+        self.compress.as_ref()
     }
 
     /// Append (or replace) the `tune` plan-cache section of an existing
@@ -700,11 +732,31 @@ fn parse(text: &str) -> Result<Checkpoint> {
         stash.push((name, parse_ctl_state(&mut lx)?));
     }
 
+    // Optional gradient-compression section (see the VERSION note):
+    // `compress <label> <n>` with one `cr <tensor> <replica> <len> <hex…>`
+    // error-feedback residual per record, between `stash` and `tune`/`end`.
+    let mut compress = None;
+    let mut tok = lx.next()?;
+    if tok == "compress" {
+        let label = lx.next()?.to_string();
+        let n_res = lx.usize()?;
+        let mut residuals = Vec::with_capacity(n_res);
+        for _ in 0..n_res {
+            lx.expect("cr")?;
+            let t = lx.usize()?;
+            let r = lx.usize()?;
+            let len = lx.usize()?;
+            residuals.push((t, r, lx.f32_vec(len)?));
+        }
+        compress = Some(CompressSnapshot { label, residuals });
+        tok = lx.next()?;
+    }
+
     // Optional serving plan cache (see the VERSION note): `tune <n>` with
     // one `tl <kind> <m> <k> <n> <mc> <kc> <shard>` row per shape, sitting
     // just before the final `end`.
     let mut tune = Vec::new();
-    match lx.next()? {
+    match tok {
         "end" => {}
         "tune" => {
             let n_tune = lx.usize()?;
@@ -719,7 +771,7 @@ fn parse(text: &str) -> Result<Checkpoint> {
             }
             lx.expect("end")?;
         }
-        other => bail!("expected \"tune\" or \"end\", found {other:?}"),
+        other => bail!("expected \"compress\", \"tune\" or \"end\", found {other:?}"),
     }
 
     Ok(Checkpoint {
@@ -734,6 +786,7 @@ fn parse(text: &str) -> Result<Checkpoint> {
         data_rng,
         comm,
         stash,
+        compress,
         tune,
     })
 }
@@ -796,16 +849,20 @@ pub(super) fn load(session: &mut Session<HostBackend>, path: &Path) -> Result<()
 /// host-path state, every peer is re-broadcast the same network/optimizer
 /// snapshot (re-establishing the sync invariant exactly as a step's
 /// all-reduce would), and the gradient-communication controllers resume
-/// their saved schemes and update schedules. The group must match the
-/// checkpoint's comm policy (controller names are verified).
+/// their saved schemes and update schedules, as does any compression
+/// (error-feedback) state. The group must match the checkpoint's comm and
+/// compression policies (controller names and the policy label are
+/// verified read-only before anything is mutated).
 pub(super) fn load_parallel(session: &mut Session<ParallelBackend>, path: &Path) -> Result<()> {
     let ck = Checkpoint::read(path)?;
     let group = &mut session.backend.group;
 
-    // Validate the comm-controller section read-only *first*, so a policy
-    // mismatch fails before any replica state has been overwritten (the
-    // parse → validate → apply contract of this module).
+    // Validate the comm-controller and compression sections read-only
+    // *first*, so a policy mismatch fails before any replica state has
+    // been overwritten (the parse → validate → apply contract of this
+    // module).
     group.comm.check_snapshot(&ck.comm)?;
+    group.comm.check_compress(ck.compress.as_ref())?;
     apply_to_host(&ck, &mut group.host)?;
     for peer in &mut group.peers {
         ck.restore_net(&mut peer.net)?;
@@ -823,6 +880,7 @@ pub(super) fn load_parallel(session: &mut Session<ParallelBackend>, path: &Path)
         peer.ctx.training = true;
     }
     group.comm.restore(&ck.comm)?;
+    group.comm.restore_compress(ck.compress.as_ref())?;
 
     // Root takes the owned buffers last, after every peer cloned its copy.
     group.host.opt.load_state(ck.opt_state);

@@ -34,7 +34,9 @@ pub mod parallel;
 
 pub use backend::{Backend, DataSource, HostBackend, PjrtBackend, Seq2SeqBackend};
 pub use optim::{Adam, Optimizer, OptimizerState, Sgd};
-pub use parallel::{CommPrecision, ParallelBackend, ReplicaGroup};
+pub use parallel::{
+    CommPrecision, CompressPolicy, ParallelBackend, ReduceError, ReplicaGroup, WireStats,
+};
 
 use std::fmt;
 
@@ -382,9 +384,18 @@ impl<'h> Session<'h, ParallelBackend> {
         self.backend.group.stash().mem()
     }
 
+    /// Cumulative bytes-on-wire accounting of the gradient all-reduce
+    /// (compressed payload vs raw-f32 baseline vs inter-node traffic) —
+    /// the measurement behind `bench_parallel_replicas` (EXPERIMENTS.md
+    /// §Compression).
+    pub fn wire_stats(&self) -> WireStats {
+        *self.backend.group.comm().wire()
+    }
+
     /// Save the full mid-run state — the host-path surface plus the
-    /// per-gradient communication controllers (`train::checkpoint`,
-    /// DESIGN.md §Data-Parallel).
+    /// per-gradient communication controllers and any compression
+    /// (error-feedback) state (`train::checkpoint`, DESIGN.md
+    /// §Data-Parallel).
     pub fn save_checkpoint(&mut self, path: impl AsRef<std::path::Path>) -> Result<()> {
         checkpoint::save_parallel(self, path.as_ref())
     }
@@ -501,6 +512,8 @@ pub struct SessionBuilder {
     label: Option<String>,
     stash: StashPolicy,
     recompute: bool,
+    compress: Option<CompressPolicy>,
+    node_size: usize,
 }
 
 impl SessionBuilder {
@@ -522,6 +535,8 @@ impl SessionBuilder {
             label: None,
             stash: StashPolicy::F32,
             recompute: false,
+            compress: None,
+            node_size: 1,
         }
     }
 
@@ -631,6 +646,27 @@ impl SessionBuilder {
         self
     }
 
+    /// Gradient-compression policy of the data-parallel all-reduce (CLI
+    /// `--compress`; DESIGN.md §Data-Parallel). Defaults per `--comm-bits`:
+    /// dense codes ([`CompressPolicy::Quantize`]) for quantized precisions,
+    /// [`CompressPolicy::None`] for f32. Only
+    /// [`build_parallel`](Self::build_parallel) consults it; compatibility
+    /// with the comm precision is validated there.
+    pub fn compress(mut self, policy: CompressPolicy) -> Self {
+        self.compress = Some(policy);
+        self
+    }
+
+    /// Hierarchical node size of the all-reduce (CLI `--node-size`;
+    /// default 1 = flat). Replicas are grouped into consecutive
+    /// power-of-two "nodes": the intra-node hop aggregates exactly, only
+    /// the inter-node hop pays compressed traffic. Bit-identical to the
+    /// flat reduction at any node size (the `hier_reduce_f32` lemma).
+    pub fn node_size(mut self, node: usize) -> Self {
+        self.node_size = node;
+        self
+    }
+
     /// Construct the [`Session`]. Initialization order (RNG → model →
     /// overrides → data → optimizer) matches the historical loop exactly.
     /// Panics on an unknown model/layer (the historical contract);
@@ -666,12 +702,15 @@ impl SessionBuilder {
 
     /// Construct a data-parallel [`Session`]: `replicas` bit-identical
     /// model copies sharding each batch, exchanging gradients under the
-    /// `comm` policy through the deterministic quantized all-reduce
-    /// (DESIGN.md §Data-Parallel). Each replica replays the exact
-    /// [`build`](Self::build) initialization sequence from the same seed,
-    /// and with `replicas == 1` the session degenerates to the plain host
-    /// loop bit-identically, regardless of `comm`. Errors when the batch
-    /// does not split evenly or the model name is unknown.
+    /// `comm` precision and the configured [`compress`](Self::compress) /
+    /// [`node_size`](Self::node_size) policy through the deterministic
+    /// compressed all-reduce (DESIGN.md §Data-Parallel). Each replica
+    /// replays the exact [`build`](Self::build) initialization sequence
+    /// from the same seed, and with `replicas == 1` the session degenerates
+    /// to the plain host loop bit-identically, regardless of `comm` or
+    /// compression policy. Errors when the batch does not split evenly,
+    /// the model name is unknown, or the (comm, compress, node) combination
+    /// is invalid.
     pub fn build_parallel<'h>(
         self,
         replicas: usize,
@@ -701,7 +740,10 @@ impl SessionBuilder {
             label,
             stash,
             recompute,
+            compress,
+            node_size,
         } = self;
+        let policy = compress.unwrap_or_else(|| comm.default_compress());
         // One bit-identical instantiation per replica: the same
         // `instantiate_net` sequence `build()` runs, once per replica.
         let mut nets = Vec::with_capacity(replicas);
@@ -714,7 +756,11 @@ impl SessionBuilder {
         let data = make_data(data, seed, noise);
         let base = label.unwrap_or_else(|| format!("{}-{}", name, mode.label()));
         let full = if replicas > 1 {
-            format!("{base}-x{replicas}-{}", comm.label())
+            if policy == comm.default_compress() {
+                format!("{base}-x{replicas}-{}", comm.label())
+            } else {
+                format!("{base}-x{replicas}-{}-{}", comm.label(), policy.label())
+            }
         } else {
             base
         };
@@ -731,7 +777,7 @@ impl SessionBuilder {
             .into_iter()
             .map(|net| (net, make_optimizer(optimizer, lr)))
             .collect();
-        let mut group = ReplicaGroup::new(host, peer_parts, comm)?;
+        let mut group = ReplicaGroup::new(host, peer_parts, comm, policy, node_size)?;
         group.set_stash(stash, recompute);
         Ok(Session::with_backend(ParallelBackend::new(group, full)))
     }

@@ -1,32 +1,43 @@
-//! Quantized gradient all-reduce (DESIGN.md §Data-Parallel).
+//! Compressed gradient all-reduce (DESIGN.md §Data-Parallel).
 //!
 //! The communication analogue of the paper's compute-side adaptation: each
 //! data-parallel replica produces a full set of parameter gradients, and
 //! before the (replica-local) optimizer step those gradients are exchanged
-//! as **fixed-point codes** whose bit-width is chosen per tensor by a
-//! dedicated [`PrecisionController`] — QEM measures the quantization error
-//! of the *communication* payload, QPA adapts its width and re-probe
-//! interval, exactly as the in-layer controllers do for compute tensors
-//! (controller keys are `comm:<layer>.<slot>` in the merged run ledger).
+//! through a composable [`Compressor`] stage — identity f32, QEM/QPA
+//! fixed-point codes, top-k sparsification with error feedback, or the
+//! top-k ∘ quantize composition (`train::parallel::compress`). The
+//! quantized policies keep one [`crate::apt::PrecisionController`] per
+//! tensor (ledger keys `comm:<layer>.<slot>`), exactly as the in-layer
+//! controllers do for compute tensors.
 //!
-//! Determinism contract (pinned by `rust/tests/test_parallel.rs`):
+//! Determinism contract (pinned by `rust/tests/test_parallel.rs` and
+//! `rust/tests/test_compress_props.rs`):
 //!
-//! - **f32 path** — partial gradients are summed by [`tree_reduce_f32`], a
-//!   fixed stride-doubling binary tree (round k: `part[i] += part[i + 2^k]`
-//!   for every `i` divisible by `2^(k+1)`), then scaled by `1/n`. The order
-//!   never depends on thread scheduling, so runs are bit-identical
-//!   run-to-run and match the oracle reduction exactly.
-//! - **quantized path** — every replica encodes with the *same* scheme
-//!   (root-probe protocol: the controller updates from replica 0's local
-//!   gradient and the scheme is broadcast), the integer codes are summed in
-//!   an `i64` accumulator — exact, hence order-independent — and decoded
-//!   once as `sum · r / n` in f64 before the final f32 cast.
+//! - **f32 payloads** (identity / top-k) — partial gradients are summed by
+//!   [`tree_reduce_f32`], a fixed stride-doubling binary tree (round k:
+//!   `part[i] += part[i + 2^k]` for every `i` divisible by `2^(k+1)`), then
+//!   scaled by `1/n`. The order never depends on thread scheduling, so runs
+//!   are bit-identical run-to-run and match the oracle reduction exactly.
+//! - **coded payloads** (quantize / top-k+quantize) — every replica encodes
+//!   with the *same* scheme (root-probe protocol: the controller updates
+//!   from replica 0's corrected gradient and the scheme is broadcast), the
+//!   integer codes are summed in an `i64` accumulator — exact, hence
+//!   order-independent — and decoded once as `sum · r / n` in f64 before
+//!   the final f32 cast.
+//! - **hierarchical reduce** — [`hier_reduce_f32`] splits replicas into
+//!   power-of-two "nodes", reduces each node exactly, then reduces the node
+//!   sums. By the lemma on [`hier_reduce_f32`] this is bit-identical to the
+//!   flat tree for f32 payloads; for coded payloads the i64 sum is exact at
+//!   any grouping, so the node size never changes the result — it only
+//!   changes the *bytes-on-wire accounting* of the inter-node hop.
 
 use anyhow::{bail, Result};
 
-use crate::apt::{AptConfig, Ledger, PrecisionController};
-use crate::apt::ControllerState;
-use crate::fixedpoint::TensorKind;
+use super::compress::{
+    aggregate_wire_bytes, CompressPolicy, CompressSnapshot, Compressor, IdentityCompressor,
+    QuantizeCompressor, ReduceError, TopKCompressor, TopKQuantizeCompressor, WireStats,
+};
+use crate::apt::{AptConfig, ControllerState, Ledger};
 
 /// Bit-width policy for the gradient all-reduce payload (CLI
 /// `--comm-bits {8,16,adaptive,f32}`).
@@ -77,6 +88,17 @@ impl CommPrecision {
             CommPrecision::Adaptive(cfg) => Some(*cfg),
         }
     }
+
+    /// The compression policy this precision implies when `--compress` is
+    /// not given: quantized precisions keep the historical dense-code path,
+    /// f32 stays uncompressed.
+    pub fn default_compress(&self) -> CompressPolicy {
+        if self.config().is_some() {
+            CompressPolicy::Quantize
+        } else {
+            CompressPolicy::None
+        }
+    }
 }
 
 /// Deterministic fixed-order tree sum of equally-shaped slices: round k
@@ -110,17 +132,48 @@ pub fn tree_reduce_f32(parts: &[&[f32]]) -> Vec<f32> {
     bufs.swap_remove(0)
 }
 
+/// Two-level deterministic tree sum: replicas are grouped into consecutive
+/// "nodes" of `node` members (the last node may be partial), each node is
+/// summed by [`tree_reduce_f32`], then the node sums are summed by the same
+/// tree — the schedule of a hierarchical all-reduce (exact intra-node hop,
+/// compressed inter-node hop).
+///
+/// **Bit-exactness lemma** (pinned by the property battery): for any
+/// replica count `n` and any power-of-two `node = p`, this two-level
+/// schedule performs *exactly the additions of the flat ladder* — rounds
+/// with stride `< p` pair indices only within aligned `p`-blocks (a partial
+/// last block runs the same sub-ladder), and rounds with stride `≥ p` are
+/// the flat ladder over block bases via `j = i / p`. Hence
+/// `hier_reduce_f32(parts, p) == tree_reduce_f32(parts)` bit-for-bit.
+/// Non-power-of-two node sizes would break the alignment argument, so they
+/// are rejected.
+pub fn hier_reduce_f32(parts: &[&[f32]], node: usize) -> Vec<f32> {
+    assert!(
+        node >= 1 && node.is_power_of_two(),
+        "hierarchical node size {node} must be a power of two"
+    );
+    assert!(!parts.is_empty(), "tree reduction over zero replicas");
+    let sums: Vec<Vec<f32>> = parts.chunks(node).map(tree_reduce_f32).collect();
+    let refs: Vec<&[f32]> = sums.iter().map(|s| s.as_slice()).collect();
+    tree_reduce_f32(&refs)
+}
+
 /// The gradient-communication engine of a
-/// [`ReplicaGroup`](super::ReplicaGroup): one [`PrecisionController`] per
-/// parameter-gradient tensor (quantized policies), the communication
-/// ledger, and the reduction itself. See the module docs for the
-/// determinism contract.
+/// [`ReplicaGroup`](super::ReplicaGroup): a [`Compressor`] stage chosen by
+/// ([`CommPrecision`], [`CompressPolicy`]), the communication ledger, the
+/// hierarchical node size, bytes-on-wire accounting, and the reduction
+/// itself. See the module docs for the determinism contract.
 pub struct QuantAllReduce {
     precision: CommPrecision,
-    /// One controller per tensor, in parameter visit order; empty for f32.
-    ctls: Vec<PrecisionController>,
+    policy: CompressPolicy,
+    /// The lossy stage between local gradients and the wire.
+    comp: Box<dyn Compressor>,
+    /// Hierarchical node size (1 = flat single-level reduction).
+    node: usize,
     /// Stable tensor names (`<layer>.<slot>` param ids), in visit order.
     names: Vec<String>,
+    /// Cumulative bytes-on-wire accounting across `reduce` calls.
+    wire: WireStats,
     /// QEM/QPA decisions (and interval-clamp events) of the communication
     /// controllers, keyed `comm:<name>`; merged into the run ledger by
     /// `ParallelBackend::take_ledger`.
@@ -128,17 +181,63 @@ pub struct QuantAllReduce {
 }
 
 impl QuantAllReduce {
-    /// Build the reduction engine for tensors named `names` (the group's
-    /// stable `<layer>.<slot>` parameter ids, in visit order).
+    /// Build the reduction engine with the precision's default compression
+    /// policy (dense codes for quantized precisions, identity for f32) and
+    /// a flat (node size 1) reduction.
     pub fn new(precision: CommPrecision, names: Vec<String>) -> QuantAllReduce {
-        let ctls = match precision.config() {
-            None => Vec::new(),
-            Some(cfg) => names
-                .iter()
-                .map(|n| PrecisionController::new(cfg, format!("comm:{n}"), TensorKind::Gradient))
-                .collect(),
+        QuantAllReduce::with_policy(precision, precision.default_compress(), 1, names)
+            .expect("the default compression policy is always compatible")
+    }
+
+    /// Build the reduction engine for tensors named `names` (the group's
+    /// stable `<layer>.<slot>` parameter ids, in visit order) under an
+    /// explicit compression policy and hierarchical node size. Errors on
+    /// incompatible (precision, policy) pairs — coded policies need a
+    /// quantized `--comm-bits`, f32 policies need `--comm-bits f32` — on
+    /// out-of-range top-k ratios, and on non-power-of-two node sizes.
+    pub fn with_policy(
+        precision: CommPrecision,
+        policy: CompressPolicy,
+        node: usize,
+        names: Vec<String>,
+    ) -> Result<QuantAllReduce> {
+        policy.validate_ratio()?;
+        if node == 0 || !node.is_power_of_two() {
+            bail!(
+                "hierarchical node size {node} must be a power of two \
+                 (bit-exactness of the two-level reduce)"
+            );
+        }
+        let comp: Box<dyn Compressor> = match (policy, precision.config()) {
+            (CompressPolicy::None, None) => Box::new(IdentityCompressor),
+            (CompressPolicy::TopK(r), None) => Box::new(TopKCompressor::new(r)),
+            (CompressPolicy::Quantize, Some(cfg)) => {
+                Box::new(QuantizeCompressor::new(cfg, &names))
+            }
+            (CompressPolicy::TopKQuantize(r), Some(cfg)) => {
+                Box::new(TopKQuantizeCompressor::new(cfg, r, &names))
+            }
+            (p, None) => bail!(
+                "--compress {} quantizes the payload and needs a quantized --comm-bits \
+                 (8, 16 or adaptive), not f32",
+                p.label()
+            ),
+            (p, Some(_)) => bail!(
+                "--comm-bits {} quantizes the payload, but --compress {} sends raw f32; \
+                 use --compress quantize or topk:<ratio>+quantize",
+                precision.label(),
+                p.label()
+            ),
         };
-        QuantAllReduce { precision, ctls, names, ledger: Ledger::new() }
+        Ok(QuantAllReduce {
+            precision,
+            policy,
+            comp,
+            node,
+            names,
+            wire: WireStats::default(),
+            ledger: Ledger::new(),
+        })
     }
 
     /// The configured payload policy.
@@ -146,75 +245,122 @@ impl QuantAllReduce {
         &self.precision
     }
 
-    /// Currently applied communication bit-width per tensor (empty for f32).
+    /// The configured compression policy.
+    pub fn policy(&self) -> CompressPolicy {
+        self.policy
+    }
+
+    /// The hierarchical node size (1 = flat).
+    pub fn node_size(&self) -> usize {
+        self.node
+    }
+
+    /// Cumulative bytes-on-wire accounting across all `reduce` calls.
+    pub fn wire(&self) -> &WireStats {
+        &self.wire
+    }
+
+    /// Currently applied communication bit-width per tensor (empty for
+    /// unquantized policies).
     pub fn bits(&self) -> Vec<(String, u8)> {
-        self.names
-            .iter()
-            .zip(&self.ctls)
-            .map(|(n, c)| (format!("comm:{n}"), c.bits()))
-            .collect()
+        self.comp.controller_bits()
     }
 
     /// Average `per_replica[r][t]` over replicas `r` for every tensor `t`,
     /// returning the reduced tensors in visit order. `iter` drives the
-    /// controllers' update schedule.
-    pub fn reduce(&mut self, iter: u64, per_replica: &[Vec<Vec<f32>>]) -> Vec<Vec<f32>> {
+    /// controllers' update schedule. Malformed inputs (mismatched tensor
+    /// counts or lengths across replicas) are rejected with a typed
+    /// [`ReduceError`] instead of a silently wrong average.
+    pub fn reduce(
+        &mut self,
+        iter: u64,
+        per_replica: &[Vec<Vec<f32>>],
+    ) -> std::result::Result<Vec<Vec<f32>>, ReduceError> {
         let n = per_replica.len();
-        assert!(n >= 1, "reduce over zero replicas");
+        if n == 0 {
+            return Err(ReduceError::Empty);
+        }
         let tensors = per_replica[0].len();
+        for (r, grads) in per_replica.iter().enumerate() {
+            if grads.len() != tensors {
+                return Err(ReduceError::TensorCount { replica: r, got: grads.len(), want: tensors });
+            }
+        }
+        for t in 0..tensors {
+            let want = per_replica[0][t].len();
+            for (r, grads) in per_replica.iter().enumerate() {
+                if grads[t].len() != want {
+                    return Err(ReduceError::Length { tensor: t, replica: r, got: grads[t].len(), want });
+                }
+            }
+        }
+
+        self.wire.reduces += 1;
         let mut out = Vec::with_capacity(tensors);
         for t in 0..tensors {
-            let parts: Vec<&[f32]> = per_replica.iter().map(|r| r[t].as_slice()).collect();
-            if self.ctls.is_empty() {
-                let mut sum = tree_reduce_f32(&parts);
+            let len = per_replica[0][t].len();
+            // Root-probe protocol: the compressor observes replica 0's
+            // *corrected* gradient (error feedback applied) before any
+            // payload is built — quantizing policies freeze the step's
+            // shared scheme here (a shared scale is what lets integer codes
+            // sum exactly; values outside the root's range saturate).
+            let root = self.comp.corrected(t, 0, &per_replica[0][t]);
+            self.comp.begin_tensor(iter, t, &root, &mut self.ledger);
+            let mut payloads = Vec::with_capacity(n);
+            payloads.push(self.comp.compress(t, 0, root));
+            for (r, grads) in per_replica.iter().enumerate().skip(1) {
+                let corrected = self.comp.corrected(t, r, &grads[t]);
+                payloads.push(self.comp.compress(t, r, corrected));
+            }
+
+            // Bytes-on-wire accounting: what each replica sends, what the
+            // same traffic costs as raw f32, and what crosses the
+            // inter-node boundary after exact intra-node aggregation.
+            for p in &payloads {
+                self.wire.replica_bytes += p.wire_bytes();
+            }
+            self.wire.dense_bytes += 4 * len as u64 * n as u64;
+            for chunk in payloads.chunks(self.node) {
+                self.wire.internode_bytes += aggregate_wire_bytes(chunk);
+            }
+
+            if payloads[0].is_coded() {
+                // Exact i64 code summation — order-independent, so the
+                // hierarchical grouping cannot change the result.
+                let scheme = payloads[0].scheme().expect("coded payload has a scheme");
+                let mut acc = vec![0i64; len];
+                for p in &payloads {
+                    p.accumulate_codes(&mut acc);
+                }
+                let scale = scheme.resolution() as f64 / n as f64;
+                out.push(acc.iter().map(|&c| (c as f64 * scale) as f32).collect());
+            } else {
+                // f32 payloads: deterministic hierarchical tree (bit-equal
+                // to the flat ladder by the hier_reduce_f32 lemma).
+                let dense: Vec<Vec<f32>> = payloads.iter().map(|p| p.to_dense()).collect();
+                let refs: Vec<&[f32]> = dense.iter().map(|d| d.as_slice()).collect();
+                let mut sum = hier_reduce_f32(&refs, self.node);
                 let inv = 1.0 / n as f32;
                 for v in &mut sum {
                     *v *= inv;
                 }
                 out.push(sum);
-            } else {
-                // Root-probe protocol: QEM/QPA run on replica 0's local
-                // gradient; the resulting scheme is shared by every sender
-                // (a shared scale is what lets integer codes sum exactly).
-                // Values outside the root's range saturate per the scheme.
-                let sch = self.ctls[t].maybe_update_from_data(iter, parts[0], &mut self.ledger);
-                let len = parts[0].len();
-                let mut acc = vec![0i64; len];
-                for part in &parts {
-                    for (a, &x) in acc.iter_mut().zip(part.iter()) {
-                        *a += sch.code(x) as i64;
-                    }
-                }
-                let scale = sch.resolution() as f64 / n as f64;
-                out.push(acc.iter().map(|&c| (c as f64 * scale) as f32).collect());
             }
         }
-        out
+        Ok(out)
     }
 
     /// Snapshot every communication controller (checkpointing): stable
     /// ledger key + decision state, in visit order.
     pub fn snapshot(&self) -> Vec<(String, ControllerState)> {
-        self.ctls.iter().map(|c| (c.layer.clone(), c.snapshot())).collect()
+        self.comp.controller_snapshot()
     }
 
     /// Validate a [`snapshot`](Self::snapshot) against this group without
     /// mutating anything — lets a multi-stage restore fail *before* any
     /// other state has been overwritten.
     pub fn check_snapshot(&self, st: &[(String, ControllerState)]) -> Result<()> {
-        if st.len() != self.ctls.len() {
-            bail!(
-                "checkpoint has {} communication controllers, this group has {}",
-                st.len(),
-                self.ctls.len()
-            );
-        }
-        for ((name, _), c) in st.iter().zip(&self.ctls) {
-            if *name != c.layer {
-                bail!("communication controller mismatch: checkpoint {name:?} vs group {:?}", c.layer);
-            }
-        }
-        Ok(())
+        self.comp.check_controllers(st)
     }
 
     /// Restore a [`snapshot`](Self::snapshot). Errors (without mutating
@@ -222,9 +368,64 @@ impl QuantAllReduce {
     /// group's tensors — e.g. a checkpoint from a different `--comm-bits`
     /// policy or model.
     pub fn restore(&mut self, st: &[(String, ControllerState)]) -> Result<()> {
-        self.check_snapshot(st)?;
-        for ((_, s), c) in st.iter().zip(self.ctls.iter_mut()) {
-            c.restore(s);
+        self.comp.restore_controllers(st)
+    }
+
+    /// Snapshot the compression policy state (label + error-feedback
+    /// residuals) for the checkpoint `compress` section.
+    pub fn compress_snapshot(&self) -> CompressSnapshot {
+        CompressSnapshot {
+            label: self.policy.label(),
+            residuals: self.comp.residual_snapshot(),
+        }
+    }
+
+    /// Validate a checkpoint's optional `compress` section against this
+    /// group without mutating anything. A missing section is accepted for
+    /// stateless policies (none/quantize — every pre-v2-compression
+    /// artifact loads), rejected for error-feedback policies; a present
+    /// section must carry this group's exact policy label and in-range
+    /// tensor indices.
+    pub fn check_compress(&self, snap: Option<&CompressSnapshot>) -> Result<()> {
+        match snap {
+            None => {
+                if self.comp.has_residual_state() {
+                    bail!(
+                        "checkpoint has no compress section, but this group's --compress {} \
+                         carries error-feedback residual state",
+                        self.policy.label()
+                    );
+                }
+                Ok(())
+            }
+            Some(s) => {
+                if s.label != self.policy.label() {
+                    bail!(
+                        "compression policy mismatch: checkpoint compress {:?} vs group {:?}",
+                        s.label,
+                        self.policy.label()
+                    );
+                }
+                for (t, _, _) in &s.residuals {
+                    if *t >= self.names.len() {
+                        bail!(
+                            "compress section references tensor {t}, this group has {} tensors",
+                            self.names.len()
+                        );
+                    }
+                }
+                Ok(())
+            }
+        }
+    }
+
+    /// Restore a checkpoint's optional `compress` section
+    /// ([`check_compress`](Self::check_compress) first; errors leave the
+    /// engine untouched).
+    pub fn restore_compress(&mut self, snap: Option<&CompressSnapshot>) -> Result<()> {
+        self.check_compress(snap)?;
+        if let Some(s) = snap {
+            self.comp.restore_residuals(&s.residuals);
         }
         Ok(())
     }
@@ -271,6 +472,32 @@ mod tests {
     }
 
     #[test]
+    fn hierarchical_reduce_is_bit_identical_to_flat() {
+        // The lemma, exercised across non-power-of-two replica counts and
+        // node sizes larger than the group.
+        for n in [1usize, 2, 3, 5, 6, 8, 13, 16] {
+            let parts = vecs(40 + n as u64, n, 129);
+            let refs: Vec<&[f32]> = parts.iter().map(|p| p.as_slice()).collect();
+            let flat = tree_reduce_f32(&refs);
+            for node in [1usize, 2, 4, 8, 32] {
+                assert_eq!(
+                    hier_reduce_f32(&refs, node),
+                    flat,
+                    "hier(node={node}) diverged from flat at n={n}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "power of two")]
+    fn hierarchical_reduce_rejects_non_power_of_two_nodes() {
+        let parts = vecs(7, 4, 8);
+        let refs: Vec<&[f32]> = parts.iter().map(|p| p.as_slice()).collect();
+        hier_reduce_f32(&refs, 3);
+    }
+
+    #[test]
     fn quantized_reduce_tracks_f32_average() {
         // Replica 1's gradient sits inside replica 0's range (the root
         // probe sets the shared scale), so no saturation in this case.
@@ -278,7 +505,7 @@ mod tests {
         let half: Vec<f32> = base.iter().map(|&v| v * 0.5).collect();
         let per: Vec<Vec<Vec<f32>>> = vec![vec![base], vec![half]];
         let mut q = QuantAllReduce::new(CommPrecision::Static(16), vec!["t.0".into()]);
-        let red = q.reduce(0, &per);
+        let red = q.reduce(0, &per).unwrap();
         // int16 payload: the average should track the exact mean closely
         let exact: Vec<f32> =
             (0..512).map(|i| (per[0][0][i] + per[1][0][i]) / 2.0).collect();
@@ -292,12 +519,74 @@ mod tests {
     }
 
     #[test]
+    fn reduce_rejects_malformed_inputs_with_typed_errors() {
+        let mut q = QuantAllReduce::new(CommPrecision::F32, vec!["t.0".into()]);
+        assert_eq!(q.reduce(0, &[]).unwrap_err(), ReduceError::Empty);
+        let per = vec![vec![vec![1.0f32; 4]], vec![]];
+        assert_eq!(
+            q.reduce(0, &per).unwrap_err(),
+            ReduceError::TensorCount { replica: 1, got: 0, want: 1 }
+        );
+        let per = vec![vec![vec![1.0f32; 4]], vec![vec![1.0f32; 3]]];
+        assert_eq!(
+            q.reduce(0, &per).unwrap_err(),
+            ReduceError::Length { tensor: 0, replica: 1, got: 3, want: 4 }
+        );
+    }
+
+    #[test]
+    fn with_policy_rejects_incompatible_combinations() {
+        let names = vec!["t.0".to_string()];
+        // coded policy over f32 wire
+        assert!(QuantAllReduce::with_policy(
+            CommPrecision::F32,
+            CompressPolicy::Quantize,
+            1,
+            names.clone()
+        )
+        .is_err());
+        // f32 policy over quantized wire
+        assert!(QuantAllReduce::with_policy(
+            CommPrecision::Static(8),
+            CompressPolicy::TopK(0.1),
+            1,
+            names.clone()
+        )
+        .is_err());
+        // out-of-range ratio
+        assert!(QuantAllReduce::with_policy(
+            CommPrecision::F32,
+            CompressPolicy::TopK(0.0),
+            1,
+            names.clone()
+        )
+        .is_err());
+        // non-power-of-two node size
+        assert!(QuantAllReduce::with_policy(
+            CommPrecision::F32,
+            CompressPolicy::None,
+            3,
+            names.clone()
+        )
+        .is_err());
+        // the valid corners build
+        for (prec, pol) in [
+            (CommPrecision::F32, CompressPolicy::None),
+            (CommPrecision::F32, CompressPolicy::TopK(0.25)),
+            (CommPrecision::Static(8), CompressPolicy::Quantize),
+            (CommPrecision::Static(8), CompressPolicy::TopKQuantize(0.25)),
+        ] {
+            assert!(QuantAllReduce::with_policy(prec, pol, 4, names.clone()).is_ok());
+        }
+    }
+
+    #[test]
     fn snapshot_roundtrip_restores_schemes() {
         let per = vec![vec![vecs(21, 1, 256).remove(0)], vec![vecs(22, 1, 256).remove(0)]];
         let mut cfg = AptConfig::default();
         cfg.init_phase_iters = 0;
         let mut q = QuantAllReduce::new(CommPrecision::Adaptive(cfg), vec!["t.0".into()]);
-        q.reduce(0, &per);
+        q.reduce(0, &per).unwrap();
         let snap = q.snapshot();
         let mut q2 = QuantAllReduce::new(CommPrecision::Adaptive(cfg), vec!["t.0".into()]);
         q2.restore(&snap).unwrap();
@@ -305,5 +594,48 @@ mod tests {
         // mismatched policy errors instead of silently desyncing
         let mut qf = QuantAllReduce::new(CommPrecision::F32, vec!["t.0".into()]);
         assert!(qf.restore(&snap).is_err());
+    }
+
+    #[test]
+    fn compress_snapshot_roundtrip_and_mismatch() {
+        let names = vec!["t.0".to_string(), "t.1".to_string()];
+        let mut q = QuantAllReduce::with_policy(
+            CommPrecision::F32,
+            CompressPolicy::TopK(0.5),
+            1,
+            names.clone(),
+        )
+        .unwrap();
+        let per = vec![
+            vec![vecs(31, 1, 8).remove(0), vecs(32, 1, 5).remove(0)],
+            vec![vecs(33, 1, 8).remove(0), vecs(34, 1, 5).remove(0)],
+        ];
+        q.reduce(0, &per).unwrap();
+        let snap = q.compress_snapshot();
+        assert_eq!(snap.label, "topk:0.5");
+        assert_eq!(snap.residuals.len(), 4); // 2 tensors × 2 replicas
+        let mut q2 = QuantAllReduce::with_policy(
+            CommPrecision::F32,
+            CompressPolicy::TopK(0.5),
+            1,
+            names.clone(),
+        )
+        .unwrap();
+        q2.restore_compress(Some(&snap)).unwrap();
+        assert_eq!(q2.compress_snapshot(), snap);
+        // missing section: fine without residual state, fatal with it
+        let qn = QuantAllReduce::new(CommPrecision::F32, names.clone());
+        assert!(qn.check_compress(None).is_ok());
+        assert!(q2.check_compress(None).is_err());
+        // label mismatch rejected
+        let qr = QuantAllReduce::with_policy(
+            CommPrecision::F32,
+            CompressPolicy::TopK(0.25),
+            1,
+            names,
+        )
+        .unwrap();
+        let err = qr.check_compress(Some(&snap)).unwrap_err().to_string();
+        assert!(err.contains("compression policy mismatch"), "{err}");
     }
 }

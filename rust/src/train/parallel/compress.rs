@@ -1,0 +1,911 @@
+//! Composable gradient compressors for the data-parallel all-reduce
+//! (DESIGN.md §Data-Parallel).
+//!
+//! The [`Compressor`] trait is the lossy-stage seam of
+//! [`QuantAllReduce`](super::QuantAllReduce): each replica's parameter
+//! gradient is **corrected** (error-feedback residual added back),
+//! **compressed** into a [`WirePayload`], and the payloads are combined by
+//! the engine — exact i64 code summation for quantized payloads, the
+//! deterministic f32 tree for dense/sparse ones. Four policies compose the
+//! two lossy stages the literature layers on top of each other:
+//!
+//! - [`IdentityCompressor`] (`--compress none`) — raw f32 payloads,
+//!   bit-identical to the pre-seam f32 path.
+//! - [`QuantizeCompressor`] (`--compress quantize`) — the QEM/QPA-adaptive
+//!   fixed-point path: shared root-probed scheme, integer codes on the wire.
+//! - [`TopKCompressor`] (`--compress topk:<ratio>`) — magnitude top-k
+//!   sparsification with **error feedback**: the un-sent mass is carried
+//!   into the next step's gradient, not dropped.
+//! - [`TopKQuantizeCompressor`] (`--compress topk:<ratio>+quantize`) —
+//!   the composition: top-k selection first, then fixed-point codes for the
+//!   selected values under a root-probed shared scheme.
+//!
+//! Exactness contracts (pinned by `rust/tests/test_compress_props.rs`):
+//! compress∘decompress of the identity policy is bit-identical to its
+//! input; the quantize policy equals the scheme's `fake_quant` per element;
+//! and top-k error feedback is an exact *partition* of the corrected
+//! gradient — every element lands bit-identically either in the payload or
+//! in the stored residual, never both, never changed.
+
+use std::collections::BTreeMap;
+use std::fmt;
+
+use anyhow::{bail, Result};
+
+use crate::apt::{AptConfig, ControllerState, Ledger, PrecisionController};
+use crate::fixedpoint::{Scheme, TensorKind};
+
+/// Fallback top-k ratio for the bare `topk` / `topk+quantize` spellings.
+pub const DEFAULT_TOPK_RATIO: f32 = 0.1;
+
+/// Which lossy stages sit on the gradient wire (CLI `--compress`). The
+/// payload *bit-width* stays a [`super::CommPrecision`] concern; the policy
+/// decides whether quantization and/or sparsification are applied at all.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum CompressPolicy {
+    /// Raw f32 payloads (requires f32 comm precision).
+    None,
+    /// Fixed-point codes under the root-probed per-tensor scheme — the
+    /// historical quantized all-reduce (requires quantized comm precision).
+    Quantize,
+    /// Top-k sparsification with error feedback; selected values travel as
+    /// raw f32 (requires f32 comm precision).
+    TopK(f32),
+    /// Top-k sparsification with error feedback, selected values quantized
+    /// to fixed-point codes (requires quantized comm precision).
+    TopKQuantize(f32),
+}
+
+impl CompressPolicy {
+    /// Parse a `--compress` value: `none`, `quantize`, `topk[:<ratio>]`,
+    /// `topk[:<ratio>]+quantize`.
+    pub fn parse(s: &str) -> Result<CompressPolicy> {
+        let s = s.trim();
+        let parsed = match s {
+            "none" => CompressPolicy::None,
+            "quantize" => CompressPolicy::Quantize,
+            "topk" => CompressPolicy::TopK(DEFAULT_TOPK_RATIO),
+            "topk+quantize" => CompressPolicy::TopKQuantize(DEFAULT_TOPK_RATIO),
+            _ => match s.strip_prefix("topk:") {
+                Some(rest) => {
+                    let (ratio_str, quantize) = match rest.strip_suffix("+quantize") {
+                        Some(r) => (r, true),
+                        None => (rest, false),
+                    };
+                    let ratio: f32 = ratio_str.parse().map_err(|_| {
+                        anyhow::anyhow!("--compress topk ratio {ratio_str:?} is not a number")
+                    })?;
+                    if quantize {
+                        CompressPolicy::TopKQuantize(ratio)
+                    } else {
+                        CompressPolicy::TopK(ratio)
+                    }
+                }
+                None => bail!(
+                    "unknown --compress {s:?} (expected none, quantize, topk:<ratio> or \
+                     topk:<ratio>+quantize)"
+                ),
+            },
+        };
+        parsed.validate_ratio()?;
+        Ok(parsed)
+    }
+
+    /// Display label; also the token stored in the checkpoint `compress`
+    /// section, so it must stay whitespace-free and deterministic.
+    pub fn label(&self) -> String {
+        match self {
+            CompressPolicy::None => "none".into(),
+            CompressPolicy::Quantize => "quantize".into(),
+            CompressPolicy::TopK(r) => format!("topk:{r}"),
+            CompressPolicy::TopKQuantize(r) => format!("topk:{r}+quantize"),
+        }
+    }
+
+    /// Whether the wire payload is integer codes (needs a quantized
+    /// [`super::CommPrecision`]).
+    pub fn wants_codes(&self) -> bool {
+        matches!(self, CompressPolicy::Quantize | CompressPolicy::TopKQuantize(_))
+    }
+
+    /// Whether the policy carries per-(tensor, replica) error-feedback
+    /// residuals that a checkpoint must round-trip.
+    pub fn has_residual_state(&self) -> bool {
+        matches!(self, CompressPolicy::TopK(_) | CompressPolicy::TopKQuantize(_))
+    }
+
+    pub(crate) fn validate_ratio(&self) -> Result<()> {
+        if let CompressPolicy::TopK(r) | CompressPolicy::TopKQuantize(r) = self {
+            if !(*r > 0.0 && *r <= 1.0) {
+                bail!("top-k ratio must be in (0, 1], got {r}");
+            }
+        }
+        Ok(())
+    }
+}
+
+/// A typed all-reduce input rejection — malformed per-replica gradients
+/// fail loudly instead of producing a silently wrong average (the
+/// zip-truncation bug class this replaces).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum ReduceError {
+    /// `reduce` was called with an empty replica list.
+    Empty,
+    /// A replica contributed a different number of gradient tensors than
+    /// replica 0.
+    TensorCount {
+        /// Offending replica index.
+        replica: usize,
+        /// Its tensor count.
+        got: usize,
+        /// Replica 0's tensor count.
+        want: usize,
+    },
+    /// One replica's gradient tensor disagrees in length with replica 0's.
+    Length {
+        /// Tensor index (parameter visit order).
+        tensor: usize,
+        /// Offending replica index.
+        replica: usize,
+        /// Its tensor length.
+        got: usize,
+        /// Replica 0's tensor length.
+        want: usize,
+    },
+}
+
+impl fmt::Display for ReduceError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            ReduceError::Empty => write!(f, "gradient all-reduce over zero replicas"),
+            ReduceError::TensorCount { replica, got, want } => write!(
+                f,
+                "replica {replica} contributed {got} gradient tensors, replica 0 has {want}"
+            ),
+            ReduceError::Length { tensor, replica, got, want } => write!(
+                f,
+                "gradient tensor {tensor}: replica {replica} has length {got}, replica 0 has {want}"
+            ),
+        }
+    }
+}
+
+impl std::error::Error for ReduceError {}
+
+/// What one replica actually puts on the wire for one gradient tensor.
+/// [`wire_bytes`](WirePayload::wire_bytes) is the accounting the replica
+/// bench reports; [`encode`](WirePayload::encode) is the canonical byte
+/// serialization those counts are pinned against (and the determinism
+/// witness: same input ⇒ byte-identical payload).
+#[derive(Clone, Debug, PartialEq)]
+pub enum WirePayload {
+    /// Raw f32 gradient (identity policy / f32 comm).
+    Dense(Vec<f32>),
+    /// Fixed-point codes of every element under a shared scheme.
+    Codes {
+        /// The shared (root-probed) quantization scheme.
+        scheme: Scheme,
+        /// One code per element.
+        codes: Vec<i32>,
+    },
+    /// Top-k values at their indices; un-sent elements are implicit zeros.
+    Sparse {
+        /// Dense length of the tensor.
+        len: usize,
+        /// Selected indices, ascending.
+        idx: Vec<u32>,
+        /// Selected values, parallel to `idx`.
+        val: Vec<f32>,
+    },
+    /// Top-k *quantized* values at their indices.
+    SparseCodes {
+        /// Dense length of the tensor.
+        len: usize,
+        /// The shared (root-probed) quantization scheme.
+        scheme: Scheme,
+        /// Selected indices, ascending.
+        idx: Vec<u32>,
+        /// Codes of the selected values, parallel to `idx`.
+        codes: Vec<i32>,
+    },
+}
+
+/// Bytes one `bits`-wide two's-complement code occupies on the wire.
+fn bytes_per_code(bits: u32) -> u64 {
+    (bits as u64).div_ceil(8)
+}
+
+/// Extra carry bits an exact sum of `m` codes needs: ceil(log2(m)).
+fn carry_bits(m: usize) -> u32 {
+    if m <= 1 {
+        0
+    } else {
+        usize::BITS - (m - 1).leading_zeros()
+    }
+}
+
+impl WirePayload {
+    /// Dense length of the tensor the payload describes.
+    pub fn dense_len(&self) -> usize {
+        match self {
+            WirePayload::Dense(v) => v.len(),
+            WirePayload::Codes { codes, .. } => codes.len(),
+            WirePayload::Sparse { len, .. } | WirePayload::SparseCodes { len, .. } => *len,
+        }
+    }
+
+    /// The shared quantization scheme, for code-carrying payloads.
+    pub fn scheme(&self) -> Option<Scheme> {
+        match self {
+            WirePayload::Codes { scheme, .. } | WirePayload::SparseCodes { scheme, .. } => {
+                Some(*scheme)
+            }
+            _ => None,
+        }
+    }
+
+    /// Bytes this payload occupies on the wire — exactly
+    /// `self.encode().len()` (pinned by the property battery), computed
+    /// without materializing the bytes.
+    pub fn wire_bytes(&self) -> u64 {
+        match self {
+            WirePayload::Dense(v) => 5 + 4 * v.len() as u64,
+            WirePayload::Codes { scheme, codes } => {
+                10 + bytes_per_code(scheme.bits as u32) * codes.len() as u64
+            }
+            WirePayload::Sparse { idx, .. } => 9 + 8 * idx.len() as u64,
+            WirePayload::SparseCodes { scheme, idx, .. } => {
+                14 + (4 + bytes_per_code(scheme.bits as u32)) * idx.len() as u64
+            }
+        }
+    }
+
+    /// Canonical little-endian serialization: a 1-byte tag, the layout
+    /// header, then the packed elements (codes take `ceil(bits/8)` bytes
+    /// each). Deterministic by construction — the byte-identity witness of
+    /// the determinism property.
+    pub fn encode(&self) -> Vec<u8> {
+        let mut out = Vec::with_capacity(self.wire_bytes() as usize);
+        match self {
+            WirePayload::Dense(v) => {
+                out.push(0u8);
+                out.extend_from_slice(&(v.len() as u32).to_le_bytes());
+                for x in v {
+                    out.extend_from_slice(&x.to_le_bytes());
+                }
+            }
+            WirePayload::Codes { scheme, codes } => {
+                out.push(1u8);
+                out.extend_from_slice(&(codes.len() as u32).to_le_bytes());
+                out.push(scheme.bits);
+                out.extend_from_slice(&scheme.s.to_le_bytes());
+                let bp = bytes_per_code(scheme.bits as u32) as usize;
+                for c in codes {
+                    out.extend_from_slice(&c.to_le_bytes()[..bp.min(4)]);
+                }
+            }
+            WirePayload::Sparse { len, idx, val } => {
+                out.push(2u8);
+                out.extend_from_slice(&(*len as u32).to_le_bytes());
+                out.extend_from_slice(&(idx.len() as u32).to_le_bytes());
+                for i in idx {
+                    out.extend_from_slice(&i.to_le_bytes());
+                }
+                for x in val {
+                    out.extend_from_slice(&x.to_le_bytes());
+                }
+            }
+            WirePayload::SparseCodes { len, scheme, idx, codes } => {
+                out.push(3u8);
+                out.extend_from_slice(&(*len as u32).to_le_bytes());
+                out.extend_from_slice(&(idx.len() as u32).to_le_bytes());
+                out.push(scheme.bits);
+                out.extend_from_slice(&scheme.s.to_le_bytes());
+                let bp = bytes_per_code(scheme.bits as u32) as usize;
+                for (i, c) in idx.iter().zip(codes) {
+                    out.extend_from_slice(&i.to_le_bytes());
+                    out.extend_from_slice(&c.to_le_bytes()[..bp.min(4)]);
+                }
+            }
+        }
+        out
+    }
+
+    /// Decode back to a dense f32 tensor (un-sent sparse elements are 0.0).
+    pub fn to_dense(&self) -> Vec<f32> {
+        match self {
+            WirePayload::Dense(v) => v.clone(),
+            WirePayload::Codes { scheme, codes } => {
+                codes.iter().map(|&c| scheme.decode(c)).collect()
+            }
+            WirePayload::Sparse { len, idx, val } => {
+                let mut out = vec![0.0f32; *len];
+                for (&i, &x) in idx.iter().zip(val) {
+                    out[i as usize] = x;
+                }
+                out
+            }
+            WirePayload::SparseCodes { len, scheme, idx, codes } => {
+                let mut out = vec![0.0f32; *len];
+                for (&i, &c) in idx.iter().zip(codes) {
+                    out[i as usize] = scheme.decode(c);
+                }
+                out
+            }
+        }
+    }
+
+    /// Whether the payload carries integer codes (summed exactly in i64)
+    /// rather than f32 values (summed by the deterministic tree).
+    pub fn is_coded(&self) -> bool {
+        matches!(self, WirePayload::Codes { .. } | WirePayload::SparseCodes { .. })
+    }
+
+    /// Add this payload's codes into a dense i64 accumulator — the exact,
+    /// order-independent summation of the quantized paths.
+    pub(crate) fn accumulate_codes(&self, acc: &mut [i64]) {
+        match self {
+            WirePayload::Codes { codes, .. } => {
+                for (a, &c) in acc.iter_mut().zip(codes) {
+                    *a += c as i64;
+                }
+            }
+            WirePayload::SparseCodes { idx, codes, .. } => {
+                for (&i, &c) in idx.iter().zip(codes) {
+                    acc[i as usize] += c as i64;
+                }
+            }
+            _ => unreachable!("f32 payloads are tree-reduced, not code-summed"),
+        }
+    }
+}
+
+/// Bytes the exact intra-node aggregate of `group` payloads occupies on
+/// the inter-node wire: code payloads widen by ceil(log2(members)) carry
+/// bits (the i64 partial sum re-encoded at the minimal exact width),
+/// sparse payloads merge to their support union. With one member this is
+/// exactly the member's [`WirePayload::wire_bytes`].
+pub fn aggregate_wire_bytes(group: &[WirePayload]) -> u64 {
+    assert!(!group.is_empty(), "aggregate over an empty node");
+    let carry = carry_bits(group.len());
+    match &group[0] {
+        WirePayload::Dense(v) => 5 + 4 * v.len() as u64,
+        WirePayload::Codes { scheme, codes } => {
+            10 + bytes_per_code(scheme.bits as u32 + carry) * codes.len() as u64
+        }
+        WirePayload::Sparse { len, .. } => 9 + 8 * union_support(group, *len),
+        WirePayload::SparseCodes { len, scheme, .. } => {
+            14 + (4 + bytes_per_code(scheme.bits as u32 + carry)) * union_support(group, *len)
+        }
+    }
+}
+
+/// Size of the union of sparse supports across `group`.
+fn union_support(group: &[WirePayload], len: usize) -> u64 {
+    let mut seen = vec![false; len];
+    for p in group {
+        if let WirePayload::Sparse { idx, .. } | WirePayload::SparseCodes { idx, .. } = p {
+            for &i in idx {
+                seen[i as usize] = true;
+            }
+        }
+    }
+    seen.iter().filter(|&&s| s).count() as u64
+}
+
+/// Cumulative bytes-on-wire accounting of a reduction engine — the
+/// measurement behind `bench_parallel_replicas` (EXPERIMENTS.md
+/// §Compression). Purely observational: no reduction math depends on it.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct WireStats {
+    /// Total compressed payload bytes produced by all replicas (the flat,
+    /// single-level communication cost).
+    pub replica_bytes: u64,
+    /// Bytes crossing the inter-node boundary under the two-level
+    /// hierarchical reduce (equals `replica_bytes` at `node_size` 1).
+    pub internode_bytes: u64,
+    /// What the same gradient traffic costs as raw f32 (4 bytes/element ×
+    /// replicas) — the baseline of the reduction ratio.
+    pub dense_bytes: u64,
+    /// Number of `reduce` calls accounted.
+    pub reduces: u64,
+}
+
+impl WireStats {
+    /// Bytes-on-wire reduction factor vs raw f32: `dense / replica` (1.0
+    /// before any traffic).
+    pub fn reduction(&self) -> f64 {
+        if self.replica_bytes == 0 {
+            1.0
+        } else {
+            self.dense_bytes as f64 / self.replica_bytes as f64
+        }
+    }
+
+    /// Reduction factor of the inter-node hop (hierarchical aggregation on
+    /// top of per-replica compression).
+    pub fn internode_reduction(&self) -> f64 {
+        if self.internode_bytes == 0 {
+            1.0
+        } else {
+            self.dense_bytes as f64 / self.internode_bytes as f64
+        }
+    }
+}
+
+/// One checkpointed error-feedback residual: (tensor index, replica index,
+/// residual vector) — the `cr` records of the checkpoint `compress`
+/// section.
+pub type ResidualRecord = (usize, usize, Vec<f32>);
+
+/// The checkpointed state of a compression policy: its label (format
+/// compatibility gate, mirroring the comm-controller name check) plus every
+/// error-feedback residual. Serialized as the optional trailing `compress`
+/// section of checkpoint format v3 (`train::checkpoint`).
+#[derive(Clone, Debug, PartialEq)]
+pub struct CompressSnapshot {
+    /// [`CompressPolicy::label`] of the saving group.
+    pub label: String,
+    /// Per-(tensor, replica) residuals, in key order; empty for policies
+    /// without error feedback.
+    pub residuals: Vec<ResidualRecord>,
+}
+
+/// Validate a controller-snapshot section against a controller list —
+/// shared by every compressor so the error wording (pinned by
+/// `test_parallel.rs`) stays identical across policies.
+fn check_controller_snapshot(
+    ctls: &[PrecisionController],
+    st: &[(String, ControllerState)],
+) -> Result<()> {
+    if st.len() != ctls.len() {
+        bail!(
+            "checkpoint has {} communication controllers, this group has {}",
+            st.len(),
+            ctls.len()
+        );
+    }
+    for ((name, _), c) in st.iter().zip(ctls) {
+        if *name != c.layer {
+            bail!("communication controller mismatch: checkpoint {name:?} vs group {:?}", c.layer);
+        }
+    }
+    Ok(())
+}
+
+/// One lossy (or identity) stage between a replica's local gradient and
+/// the wire. The engine drives it per tensor `t` as: `corrected(t, 0)` →
+/// [`begin_tensor`](Compressor::begin_tensor) (root probe) → one
+/// [`compress`](Compressor::compress) per replica → payload combination.
+/// State (controllers, residuals) is snapshot/restored through the same
+/// methods checkpointing uses for the rest of the session.
+pub trait Compressor {
+    /// Policy label (matches [`CompressPolicy::label`]).
+    fn label(&self) -> String;
+
+    /// Root-probe hook: called once per tensor per step with replica 0's
+    /// *corrected* gradient, before any `compress` call — where the
+    /// quantizing policies run QEM/QPA and freeze the step's shared scheme.
+    fn begin_tensor(&mut self, _iter: u64, _t: usize, _root: &[f32], _ledger: &mut Ledger) {}
+
+    /// Error-feedback correction for (tensor `t`, replica `r`): the local
+    /// gradient plus the residual withheld from the previous step
+    /// (identity for policies without residuals).
+    fn corrected(&self, _t: usize, _r: usize, grad: &[f32]) -> Vec<f32> {
+        grad.to_vec()
+    }
+
+    /// Compress the corrected gradient into its wire payload, updating the
+    /// (tensor, replica) residual state for policies that keep one.
+    fn compress(&mut self, t: usize, r: usize, corrected: Vec<f32>) -> WirePayload;
+
+    /// Decode a payload back to dense f32 — the receive half of the seam.
+    fn decompress(&self, p: &WirePayload) -> Vec<f32> {
+        p.to_dense()
+    }
+
+    /// Currently applied communication bit-width per tensor (empty for
+    /// unquantized policies).
+    fn controller_bits(&self) -> Vec<(String, u8)> {
+        Vec::new()
+    }
+
+    /// Snapshot every communication controller, in tensor order.
+    fn controller_snapshot(&self) -> Vec<(String, ControllerState)> {
+        Vec::new()
+    }
+
+    /// Validate a controller snapshot read-only (multi-stage restores fail
+    /// before anything has been mutated).
+    fn check_controllers(&self, st: &[(String, ControllerState)]) -> Result<()> {
+        check_controller_snapshot(&[], st)
+    }
+
+    /// Restore a controller snapshot ([`check_controllers`](Compressor::check_controllers)
+    /// first; errors leave the compressor untouched).
+    fn restore_controllers(&mut self, st: &[(String, ControllerState)]) -> Result<()> {
+        check_controller_snapshot(&[], st)
+    }
+
+    /// Whether the policy carries error-feedback residual state.
+    fn has_residual_state(&self) -> bool {
+        false
+    }
+
+    /// Snapshot every (tensor, replica) residual, in key order.
+    fn residual_snapshot(&self) -> Vec<ResidualRecord> {
+        Vec::new()
+    }
+
+    /// Replace the residual state with checkpointed records.
+    fn restore_residuals(&mut self, _res: &[ResidualRecord]) {}
+}
+
+// ------------------------------------------------------------------ identity
+
+/// `--compress none`: the payload is the raw f32 gradient. Combined with
+/// the deterministic f32 tree this is bit-identical to the pre-seam
+/// unquantized all-reduce (pinned by the N ∈ {2, 4} oracle tests).
+pub struct IdentityCompressor;
+
+impl Compressor for IdentityCompressor {
+    fn label(&self) -> String {
+        "none".into()
+    }
+
+    fn compress(&mut self, _t: usize, _r: usize, corrected: Vec<f32>) -> WirePayload {
+        WirePayload::Dense(corrected)
+    }
+}
+
+// ------------------------------------------------------------------ quantize
+
+/// `--compress quantize`: the historical QEM/QPA fixed-point path behind
+/// the seam. One [`PrecisionController`] per tensor adapts the payload
+/// bit-width from replica 0's gradient (root-probe protocol); every sender
+/// encodes with the resulting shared scheme so integer codes sum exactly.
+pub struct QuantizeCompressor {
+    ctls: Vec<PrecisionController>,
+    /// Scheme frozen per tensor by the last root probe.
+    schemes: Vec<Scheme>,
+}
+
+impl QuantizeCompressor {
+    /// One controller per tensor name, keyed `comm:<name>` in the ledger.
+    pub fn new(cfg: AptConfig, names: &[String]) -> QuantizeCompressor {
+        let ctls: Vec<PrecisionController> = names
+            .iter()
+            .map(|n| PrecisionController::new(cfg, format!("comm:{n}"), TensorKind::Gradient))
+            .collect();
+        let schemes = ctls.iter().map(|c| c.scheme()).collect();
+        QuantizeCompressor { ctls, schemes }
+    }
+}
+
+impl Compressor for QuantizeCompressor {
+    fn label(&self) -> String {
+        "quantize".into()
+    }
+
+    fn begin_tensor(&mut self, iter: u64, t: usize, root: &[f32], ledger: &mut Ledger) {
+        self.schemes[t] = self.ctls[t].maybe_update_from_data(iter, root, ledger);
+    }
+
+    fn compress(&mut self, t: usize, _r: usize, corrected: Vec<f32>) -> WirePayload {
+        let scheme = self.schemes[t];
+        let codes = corrected.iter().map(|&x| scheme.code(x)).collect();
+        WirePayload::Codes { scheme, codes }
+    }
+
+    fn controller_bits(&self) -> Vec<(String, u8)> {
+        self.ctls.iter().map(|c| (c.layer.clone(), c.bits())).collect()
+    }
+
+    fn controller_snapshot(&self) -> Vec<(String, ControllerState)> {
+        self.ctls.iter().map(|c| (c.layer.clone(), c.snapshot())).collect()
+    }
+
+    fn check_controllers(&self, st: &[(String, ControllerState)]) -> Result<()> {
+        check_controller_snapshot(&self.ctls, st)
+    }
+
+    fn restore_controllers(&mut self, st: &[(String, ControllerState)]) -> Result<()> {
+        check_controller_snapshot(&self.ctls, st)?;
+        for ((_, s), c) in st.iter().zip(self.ctls.iter_mut()) {
+            c.restore(s);
+        }
+        Ok(())
+    }
+}
+
+// -------------------------------------------------------------------- top-k
+
+/// Deterministic magnitude top-k selection: indices of the `k =
+/// clamp(ceil(ratio·len), 1, len)` largest `|values|`, returned in
+/// ascending index order. Ties break toward the lower index, so the
+/// selection is a pure function of the input (the determinism property
+/// rests on this).
+pub fn top_k_indices(values: &[f32], ratio: f32) -> Vec<u32> {
+    let len = values.len();
+    if len == 0 {
+        return Vec::new();
+    }
+    let k = ((ratio as f64 * len as f64).ceil() as usize).clamp(1, len);
+    let mut order: Vec<u32> = (0..len as u32).collect();
+    if k < len {
+        // Partition so the first k entries are the top-k under
+        // (magnitude descending, index ascending) — a total order even
+        // with NaN gradients (total_cmp), hence fully deterministic.
+        order.select_nth_unstable_by(k - 1, |&a, &b| {
+            values[b as usize]
+                .abs()
+                .total_cmp(&values[a as usize].abs())
+                .then(a.cmp(&b))
+        });
+        order.truncate(k);
+    }
+    order.sort_unstable();
+    order
+}
+
+/// Per-(tensor, replica) error-feedback store: the exactly-withheld mass of
+/// each top-k step, added back into the next step's gradient.
+#[derive(Default)]
+struct ErrorFeedback {
+    residuals: BTreeMap<(usize, usize), Vec<f32>>,
+}
+
+impl ErrorFeedback {
+    fn corrected(&self, t: usize, r: usize, grad: &[f32]) -> Vec<f32> {
+        match self.residuals.get(&(t, r)) {
+            Some(res) if res.len() == grad.len() => {
+                grad.iter().zip(res).map(|(g, e)| g + e).collect()
+            }
+            _ => grad.to_vec(),
+        }
+    }
+
+    fn store(&mut self, t: usize, r: usize, residual: Vec<f32>) {
+        self.residuals.insert((t, r), residual);
+    }
+
+    fn snapshot(&self) -> Vec<ResidualRecord> {
+        self.residuals.iter().map(|(&(t, r), v)| (t, r, v.clone())).collect()
+    }
+
+    fn restore(&mut self, recs: &[ResidualRecord]) {
+        self.residuals =
+            recs.iter().map(|(t, r, v)| ((*t, *r), v.clone())).collect();
+    }
+}
+
+/// Split `corrected` into its top-k payload half and its residual half —
+/// an exact partition: selected elements move into `vals` bit-identically
+/// and are zeroed in the residual; everything else stays in the residual
+/// bit-identically. Returns (indices, selected values, residual).
+fn split_top_k(corrected: Vec<f32>, ratio: f32) -> (Vec<u32>, Vec<f32>, Vec<f32>) {
+    let idx = top_k_indices(&corrected, ratio);
+    let mut residual = corrected;
+    let mut vals = Vec::with_capacity(idx.len());
+    for &i in &idx {
+        vals.push(residual[i as usize]);
+        residual[i as usize] = 0.0;
+    }
+    (idx, vals, residual)
+}
+
+/// `--compress topk:<ratio>`: magnitude top-k sparsification with error
+/// feedback. Selected values travel as raw f32 (combined by the
+/// deterministic tree); the withheld remainder is carried bit-exactly into
+/// the next step's corrected gradient.
+pub struct TopKCompressor {
+    ratio: f32,
+    fb: ErrorFeedback,
+}
+
+impl TopKCompressor {
+    /// Keep `ratio` of each tensor's elements per step (0 < ratio ≤ 1).
+    pub fn new(ratio: f32) -> TopKCompressor {
+        TopKCompressor { ratio, fb: ErrorFeedback::default() }
+    }
+}
+
+impl Compressor for TopKCompressor {
+    fn label(&self) -> String {
+        CompressPolicy::TopK(self.ratio).label()
+    }
+
+    fn corrected(&self, t: usize, r: usize, grad: &[f32]) -> Vec<f32> {
+        self.fb.corrected(t, r, grad)
+    }
+
+    fn compress(&mut self, t: usize, r: usize, corrected: Vec<f32>) -> WirePayload {
+        let len = corrected.len();
+        let (idx, val, residual) = split_top_k(corrected, self.ratio);
+        self.fb.store(t, r, residual);
+        WirePayload::Sparse { len, idx, val }
+    }
+
+    fn has_residual_state(&self) -> bool {
+        true
+    }
+
+    fn residual_snapshot(&self) -> Vec<ResidualRecord> {
+        self.fb.snapshot()
+    }
+
+    fn restore_residuals(&mut self, res: &[ResidualRecord]) {
+        self.fb.restore(res);
+    }
+}
+
+// ----------------------------------------------------------- topk ∘ quantize
+
+/// `--compress topk:<ratio>+quantize`: the composition. Top-k selection
+/// (with error feedback) picks what travels; the selected values are then
+/// encoded as fixed-point codes under a shared scheme root-probed from
+/// replica 0's *selected* values — QEM measures the error of exactly the
+/// payload that ships. Only the sparsification error is fed back: the
+/// residual stays the exact un-sent mass, so the partition invariant (and
+/// its checkpoint round-trip) is identical to plain top-k, while the
+/// quantization error stays the same bounded, controller-managed error the
+/// dense quantized path has.
+pub struct TopKQuantizeCompressor {
+    ratio: f32,
+    ctls: Vec<PrecisionController>,
+    schemes: Vec<Scheme>,
+    fb: ErrorFeedback,
+}
+
+impl TopKQuantizeCompressor {
+    /// One controller per tensor name (ledger keys `comm:<name>`), plus the
+    /// top-k ratio (0 < ratio ≤ 1).
+    pub fn new(cfg: AptConfig, ratio: f32, names: &[String]) -> TopKQuantizeCompressor {
+        let ctls: Vec<PrecisionController> = names
+            .iter()
+            .map(|n| PrecisionController::new(cfg, format!("comm:{n}"), TensorKind::Gradient))
+            .collect();
+        let schemes = ctls.iter().map(|c| c.scheme()).collect();
+        TopKQuantizeCompressor { ratio, ctls, schemes, fb: ErrorFeedback::default() }
+    }
+}
+
+impl Compressor for TopKQuantizeCompressor {
+    fn label(&self) -> String {
+        CompressPolicy::TopKQuantize(self.ratio).label()
+    }
+
+    fn begin_tensor(&mut self, iter: u64, t: usize, root: &[f32], ledger: &mut Ledger) {
+        // Probe on the values the root will actually send: its top-k
+        // selection. Top-k keeps the largest magnitudes, so the range the
+        // controller sees equals the full tensor's — but QEM's error ratio
+        // reflects the shipped payload, not elements that never travel.
+        let idx = top_k_indices(root, self.ratio);
+        let sel: Vec<f32> = idx.iter().map(|&i| root[i as usize]).collect();
+        self.schemes[t] = self.ctls[t].maybe_update_from_data(iter, &sel, ledger);
+    }
+
+    fn corrected(&self, t: usize, r: usize, grad: &[f32]) -> Vec<f32> {
+        self.fb.corrected(t, r, grad)
+    }
+
+    fn compress(&mut self, t: usize, r: usize, corrected: Vec<f32>) -> WirePayload {
+        let len = corrected.len();
+        let scheme = self.schemes[t];
+        let (idx, val, residual) = split_top_k(corrected, self.ratio);
+        self.fb.store(t, r, residual);
+        let codes = val.iter().map(|&x| scheme.code(x)).collect();
+        WirePayload::SparseCodes { len, scheme, idx, codes }
+    }
+
+    fn controller_bits(&self) -> Vec<(String, u8)> {
+        self.ctls.iter().map(|c| (c.layer.clone(), c.bits())).collect()
+    }
+
+    fn controller_snapshot(&self) -> Vec<(String, ControllerState)> {
+        self.ctls.iter().map(|c| (c.layer.clone(), c.snapshot())).collect()
+    }
+
+    fn check_controllers(&self, st: &[(String, ControllerState)]) -> Result<()> {
+        check_controller_snapshot(&self.ctls, st)
+    }
+
+    fn restore_controllers(&mut self, st: &[(String, ControllerState)]) -> Result<()> {
+        check_controller_snapshot(&self.ctls, st)?;
+        for ((_, s), c) in st.iter().zip(self.ctls.iter_mut()) {
+            c.restore(s);
+        }
+        Ok(())
+    }
+
+    fn has_residual_state(&self) -> bool {
+        true
+    }
+
+    fn residual_snapshot(&self) -> Vec<ResidualRecord> {
+        self.fb.snapshot()
+    }
+
+    fn restore_residuals(&mut self, res: &[ResidualRecord]) {
+        self.fb.restore(res);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn policy_labels_roundtrip_through_parse() {
+        for p in [
+            CompressPolicy::None,
+            CompressPolicy::Quantize,
+            CompressPolicy::TopK(0.1),
+            CompressPolicy::TopK(0.25),
+            CompressPolicy::TopKQuantize(0.1),
+            CompressPolicy::TopKQuantize(0.05),
+        ] {
+            assert_eq!(CompressPolicy::parse(&p.label()).unwrap(), p);
+        }
+        assert!(CompressPolicy::parse("topk:0").is_err());
+        assert!(CompressPolicy::parse("topk:1.5").is_err());
+        assert!(CompressPolicy::parse("topk:x").is_err());
+        assert!(CompressPolicy::parse("gzip").is_err());
+        assert_eq!(
+            CompressPolicy::parse("topk+quantize").unwrap(),
+            CompressPolicy::TopKQuantize(DEFAULT_TOPK_RATIO)
+        );
+    }
+
+    #[test]
+    fn top_k_selects_largest_magnitudes_in_index_order() {
+        let v = [0.1f32, -5.0, 0.0, 3.0, -0.2, 3.0];
+        assert_eq!(top_k_indices(&v, 0.34), vec![1, 3]); // k = ceil(0.34*6) = 3? no: 2.04 → 3
+        // ceil(0.34 * 6) = ceil(2.04) = 3 → indices of |-5|, |3|, |3| with
+        // the tie broken toward the lower index
+        assert_eq!(top_k_indices(&v, 0.34).len(), 3);
+        assert_eq!(top_k_indices(&v, 0.34), vec![1, 3, 5]);
+        // k floors at 1 and caps at len
+        assert_eq!(top_k_indices(&v, 0.0001), vec![1]);
+        assert_eq!(top_k_indices(&v, 1.0), vec![0, 1, 2, 3, 4, 5]);
+        assert_eq!(top_k_indices(&[], 0.5), Vec::<u32>::new());
+    }
+
+    #[test]
+    fn payload_roundtrips_to_dense() {
+        let p = WirePayload::Sparse { len: 5, idx: vec![1, 4], val: vec![2.5, -1.0] };
+        assert_eq!(p.to_dense(), vec![0.0, 2.5, 0.0, 0.0, -1.0]);
+        let sch = Scheme { bits: 8, s: -4 };
+        let q = WirePayload::SparseCodes { len: 3, scheme: sch, idx: vec![2], codes: vec![16] };
+        assert_eq!(q.to_dense(), vec![0.0, 0.0, 1.0]);
+    }
+
+    #[test]
+    fn aggregate_bytes_degenerate_to_member_bytes_at_node_one() {
+        let sch = Scheme { bits: 8, s: -4 };
+        for p in [
+            WirePayload::Dense(vec![1.0; 7]),
+            WirePayload::Codes { scheme: sch, codes: vec![1; 7] },
+            WirePayload::Sparse { len: 7, idx: vec![0, 3], val: vec![1.0, 2.0] },
+            WirePayload::SparseCodes { len: 7, scheme: sch, idx: vec![0, 3], codes: vec![1, 2] },
+        ] {
+            assert_eq!(aggregate_wire_bytes(std::slice::from_ref(&p)), p.wire_bytes());
+        }
+    }
+
+    #[test]
+    fn aggregate_bytes_widen_codes_and_union_supports() {
+        let sch = Scheme { bits: 8, s: -4 };
+        // 4 members → 2 carry bits → 10-bit codes → 2 bytes each
+        let codes: Vec<WirePayload> = (0..4)
+            .map(|_| WirePayload::Codes { scheme: sch, codes: vec![1; 6] })
+            .collect();
+        assert_eq!(aggregate_wire_bytes(&codes), 10 + 2 * 6);
+        // overlapping supports {0,3} and {3,5} union to 3 indices
+        let sparse = vec![
+            WirePayload::Sparse { len: 8, idx: vec![0, 3], val: vec![1.0, 2.0] },
+            WirePayload::Sparse { len: 8, idx: vec![3, 5], val: vec![4.0, 8.0] },
+        ];
+        assert_eq!(aggregate_wire_bytes(&sparse), 9 + 8 * 3);
+    }
+}

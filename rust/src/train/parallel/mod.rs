@@ -6,9 +6,11 @@
 //! `[r·B/N, (r+1)·B/N)`), runs forward/backward independently on each
 //! replica (all kernel math multiplexes onto the process-wide
 //! [`crate::kernels::Engine`] thread pool), then aggregates parameter
-//! gradients through the quantized all-reduce of [`QuantAllReduce`] —
-//! per-tensor int8/int16/adaptive codes with a deterministic fixed-order
-//! tree reduction for the f32 policy.
+//! gradients through the compressed all-reduce of [`QuantAllReduce`] — a
+//! composable [`Compressor`] stage (identity, per-tensor
+//! int8/int16/adaptive codes, top-k sparsification with error feedback, or
+//! top-k ∘ quantize) over a deterministic fixed-order tree reduction, with
+//! an optional two-level hierarchical schedule for large N.
 //! Every replica then applies the *same* averaged gradient with its own
 //! optimizer instance, so parameters and optimizer state stay bit-identical
 //! across replicas by construction (the sync invariant, checkable with
@@ -18,18 +20,28 @@
 //!
 //! - `--replicas 1` — there is nothing to communicate, so the group
 //!   degenerates to the plain [`HostBackend`] step *regardless of the
-//!   `--comm-bits` policy*: loss/parameter trajectories are bit-identical
-//!   to the single-replica `Session` loop.
+//!   `--comm-bits` / `--compress` policy*: loss/parameter trajectories are
+//!   bit-identical to the single-replica `Session` loop.
 //! - `--replicas N`, f32 comm — gradients match the stride-doubling tree
 //!   reduction oracle bit-exactly (the schedule is a pure function of N;
-//!   see [`tree_reduce_f32`]).
+//!   see [`tree_reduce_f32`]), at any hierarchical node size (the
+//!   [`hier_reduce_f32`] lemma).
 //! - quantized comm — the integer-code sum is exact (i64 accumulator), so
 //!   the only deviation from the f32 path is the per-replica encode — the
 //!   same controlled error QEM/QPA bound on the compute side.
+//! - top-k comm — the un-sent mass is withheld bit-exactly into the next
+//!   step's error-feedback residual (an exact partition of the corrected
+//!   gradient; `rust/tests/test_compress_props.rs`).
 
 mod allreduce;
+mod compress;
 
-pub use allreduce::{tree_reduce_f32, CommPrecision, QuantAllReduce};
+pub use allreduce::{hier_reduce_f32, tree_reduce_f32, CommPrecision, QuantAllReduce};
+pub use compress::{
+    aggregate_wire_bytes, top_k_indices, CompressPolicy, CompressSnapshot, Compressor,
+    IdentityCompressor, QuantizeCompressor, ReduceError, ResidualRecord, TopKCompressor,
+    TopKQuantizeCompressor, WirePayload, WireStats, DEFAULT_TOPK_RATIO,
+};
 
 use anyhow::{bail, Result};
 
@@ -85,11 +97,14 @@ impl ReplicaGroup {
     /// Assemble a group. `host` carries the root replica plus the shared
     /// data stream; `peer_parts` are the (net, optimizer) pairs of replicas
     /// 1..N, which must be bit-identical copies of the root's initial
-    /// state. Errors if the global batch does not split evenly.
+    /// state. Errors if the global batch does not split evenly or the
+    /// (comm, policy, node) combination is invalid.
     pub(super) fn new(
         mut host: HostBackend,
         peer_parts: Vec<(Sequential, Box<dyn Optimizer>)>,
         comm: CommPrecision,
+        policy: CompressPolicy,
+        node: usize,
     ) -> Result<ReplicaGroup> {
         let replicas = peer_parts.len() + 1;
         if host.batch % replicas != 0 {
@@ -107,7 +122,11 @@ impl ReplicaGroup {
             .into_iter()
             .map(|(net, opt)| Replica { net, ctx: TrainCtx::new(), opt, needs_zero: false })
             .collect();
-        Ok(ReplicaGroup { host, peers, comm: QuantAllReduce::new(comm, names) })
+        Ok(ReplicaGroup {
+            host,
+            peers,
+            comm: QuantAllReduce::with_policy(comm, policy, node, names)?,
+        })
     }
 
     /// Total replica count N (root + peers).
@@ -213,8 +232,8 @@ impl ReplicaGroup {
             per_replica.push(gather_grads(net));
         }
 
-        // Quantized all-reduce, then broadcast the average back.
-        let reduced = self.comm.reduce(iter, &per_replica);
+        // Compressed all-reduce, then broadcast the average back.
+        let reduced = self.comm.reduce(iter, &per_replica)?;
         scatter_grads(&mut self.host.net, &reduced);
         for peer in &mut self.peers {
             scatter_grads(&mut peer.net, &reduced);

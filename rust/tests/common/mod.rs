@@ -1,0 +1,6 @@
+//! Shared helpers for the integration-test crates. Each test crate pulls
+//! this in with `mod common;` — cargo compiles a copy per crate, so not
+//! every crate uses every helper.
+#![allow(dead_code)]
+
+pub mod oracle;

@@ -1,0 +1,118 @@
+//! Independent re-implementations of the data-parallel reduction and step
+//! sequence (DESIGN.md §Data-Parallel), shared by `test_parallel.rs` and
+//! `test_compress_props.rs`. These are *oracles*: they rebuild the
+//! documented semantics from public primitives only, so a bit-exact match
+//! pins the production path against its spec rather than against itself.
+
+use apt::data::SynthImages;
+use apt::nn::loss::softmax_xent;
+use apt::nn::{models, QuantMode, TrainCtx};
+use apt::train::{Optimizer, Sgd};
+use apt::util::Pcg32;
+
+/// The documented reduction ladder: recursive split at the largest power
+/// of two strictly below `n`, which is provably the same association as
+/// the stride-doubling loop in `train::parallel::tree_reduce_f32`.
+pub fn oracle_tree(parts: &[Vec<f32>]) -> Vec<f32> {
+    let n = parts.len();
+    if n == 1 {
+        return parts[0].clone();
+    }
+    let mut p = 1usize;
+    while p * 2 < n {
+        p *= 2;
+    }
+    let left = oracle_tree(&parts[..p]);
+    let right = oracle_tree(&parts[p..]);
+    left.iter().zip(&right).map(|(a, b)| a + b).collect()
+}
+
+/// The two-level hierarchical schedule: tree within consecutive
+/// power-of-two `node`-chunks, then tree over the chunk sums. By the
+/// `hier_reduce_f32` lemma this equals [`oracle_tree`] bit-for-bit — the
+/// property battery checks both against the production ladder.
+pub fn oracle_hier(parts: &[Vec<f32>], node: usize) -> Vec<f32> {
+    assert!(node >= 1 && node.is_power_of_two(), "oracle node size must be a power of two");
+    let sums: Vec<Vec<f32>> = parts.chunks(node).map(oracle_tree).collect();
+    oracle_tree(&sums)
+}
+
+/// The data-parallel step sequence, rebuilt from public primitives only:
+/// N identically seeded nets, one shared batch stream, row-sharding,
+/// per-replica backward, oracle tree reduction + mean, per-replica SGD.
+/// Returns the (group loss curve, root replica's final parameters).
+pub fn oracle_parallel(
+    model: &str,
+    mode: QuantMode,
+    replicas: usize,
+    iters: u64,
+    lr: f32,
+) -> (Vec<f32>, Vec<Vec<f32>>) {
+    let batch = 16usize;
+    assert_eq!(batch % replicas, 0, "oracle batch must split evenly");
+    let shard = batch / replicas;
+    let mut nets: Vec<_> = (0..replicas)
+        .map(|_| {
+            let mut rng = Pcg32::seeded(0);
+            models::by_name(model, mode, &mut rng).expect("model")
+        })
+        .collect();
+    let mut ctxs: Vec<TrainCtx> = (0..replicas).map(|_| TrainCtx::new()).collect();
+    let mut opts: Vec<Sgd> = (0..replicas).map(|_| Sgd::new(lr, 0.9)).collect();
+    let mut data = SynthImages::new(
+        1000,
+        models::CLASSES,
+        models::IN_C,
+        models::IN_H,
+        models::IN_W,
+        0.5,
+    );
+    let mut losses = Vec::new();
+    for it in 0..iters {
+        let (x, y) = data.batch(batch);
+        let d = x.dim(1);
+        let mut shard_losses = Vec::new();
+        let mut grads: Vec<Vec<Vec<f32>>> = Vec::new();
+        for r in 0..replicas {
+            ctxs[r].iter = it;
+            let xs = apt::tensor::Tensor::from_vec(
+                &[shard, d],
+                x.data[r * shard * d..(r + 1) * shard * d].to_vec(),
+            );
+            let ys = &y[r * shard..(r + 1) * shard];
+            let logits = nets[r].forward(&xs, &mut ctxs[r]);
+            let (l, g) = softmax_xent(&logits, ys);
+            nets[r].backward(&g, &mut ctxs[r]);
+            shard_losses.push(l);
+            let mut gs = Vec::new();
+            nets[r].visit_params(&mut |_, gr| gs.push(gr.data.clone()));
+            grads.push(gs);
+        }
+        let tensors = grads[0].len();
+        let mut avg: Vec<Vec<f32>> = Vec::with_capacity(tensors);
+        for t in 0..tensors {
+            let parts: Vec<Vec<f32>> = grads.iter().map(|g| g[t].clone()).collect();
+            let mut sum = oracle_tree(&parts);
+            let inv = 1.0 / replicas as f32;
+            for v in &mut sum {
+                *v *= inv;
+            }
+            avg.push(sum);
+        }
+        for r in 0..replicas {
+            let mut i = 0usize;
+            nets[r].visit_params(&mut |_, gr| {
+                gr.data.copy_from_slice(&avg[i]);
+                i += 1;
+            });
+            opts[r].step(&mut nets[r]);
+            nets[r].zero_grads();
+        }
+        losses.push(
+            (shard_losses.iter().map(|&l| l as f64).sum::<f64>() / replicas as f64) as f32,
+        );
+    }
+    let mut params = Vec::new();
+    nets[0].visit_params(&mut |p, _| params.push(p.data.clone()));
+    (losses, params)
+}

@@ -1,0 +1,289 @@
+//! Randomized property battery for the gradient-compression seam
+//! (DESIGN.md §Data-Parallel, `train::parallel::compress`), on the offline
+//! proptest substitute `apt::util::proptest`:
+//!
+//! - **identity bit-parity** — `--compress none` round-trips every gradient
+//!   bit-identically through compress ∘ decompress;
+//! - **quantize = fake-quant** — the quantize compressor's round-trip
+//!   equals the scheme's `fake_quant` per element (bit-exact), with the
+//!   half-resolution error bound for in-range values;
+//! - **top-k partition** — error feedback is an exact partition: every
+//!   element of the corrected gradient lands bit-identically either in the
+//!   payload or in the stored residual, never both (the -0.0-safe way of
+//!   saying "residuals sum to exactly the withheld mass");
+//! - **top-k selection bounds** — k = clamp(ceil(ratio·len), 1, len),
+//!   indices ascending/unique/in-range, selected magnitudes dominate;
+//! - **determinism** — same gradient sequence ⇒ byte-identical wire
+//!   payloads from independently constructed compressors;
+//! - **wire accounting** — `WirePayload::wire_bytes` equals the length of
+//!   the canonical `encode()` serialization, and intra-node aggregation
+//!   never exceeds the sum of member payloads;
+//! - **hierarchical = flat** — `hier_reduce_f32` is bit-identical to
+//!   `tree_reduce_f32` and to both independent oracles, for every replica
+//!   count × power-of-two node size.
+
+mod common;
+
+use apt::apt::{AptConfig, Ledger};
+use apt::fixedpoint::Scheme;
+use apt::train::parallel::{
+    aggregate_wire_bytes, hier_reduce_f32, top_k_indices, tree_reduce_f32, Compressor,
+    IdentityCompressor, QuantizeCompressor, TopKCompressor, TopKQuantizeCompressor, WirePayload,
+};
+use apt::util::proptest::check;
+use common::oracle::{oracle_hier, oracle_tree};
+
+fn names(n: usize) -> Vec<String> {
+    (0..n).map(|i| format!("t.{i}")).collect()
+}
+
+fn bits_eq(a: &[f32], b: &[f32]) -> bool {
+    a.len() == b.len() && a.iter().zip(b).all(|(x, y)| x.to_bits() == y.to_bits())
+}
+
+#[test]
+fn prop_identity_bit_parity() {
+    check("identity-bit-parity", 60, |g| {
+        let len = g.usize(1, 300);
+        let grad = g.normal_vec(len, *g.choose(&[0.01f32, 1.0, 100.0]));
+        let mut c = IdentityCompressor;
+        let corrected = c.corrected(0, 0, &grad);
+        assert!(bits_eq(&corrected, &grad), "identity corrected() must not touch the gradient");
+        let p = c.compress(0, 0, corrected);
+        assert!(matches!(p, WirePayload::Dense(_)));
+        assert!(
+            bits_eq(&c.decompress(&p), &grad),
+            "identity compress∘decompress must be bit-identical"
+        );
+    });
+}
+
+#[test]
+fn prop_quantize_matches_fake_quant() {
+    check("quantize-fake-quant", 60, |g| {
+        let bits = *g.choose(&[8u8, 16]);
+        let len = g.usize(1, 300);
+        let grad = g.normal_vec(len, g.f32_log(1e-4, 10.0));
+        let mut c = QuantizeCompressor::new(AptConfig::static_bits(bits), &names(1));
+        let mut ledger = Ledger::new();
+        c.begin_tensor(0, 0, &grad, &mut ledger);
+        let p = c.compress(0, 0, grad.clone());
+        let sch = p.scheme().expect("quantize payload carries its scheme");
+        assert_eq!(sch.bits, bits);
+        let dec = c.decompress(&p);
+        let half = sch.resolution() * 0.5;
+        for (i, (&d, &x)) in dec.iter().zip(&grad).enumerate() {
+            assert_eq!(
+                d.to_bits(),
+                sch.fake_quant(x).to_bits(),
+                "element {i}: decode must equal the scheme's fake_quant"
+            );
+            if x.abs() <= sch.range_top() {
+                assert!(
+                    (d - x).abs() <= half * 1.0001,
+                    "element {i}: in-range error {} exceeds resolution/2 = {half}",
+                    (d - x).abs()
+                );
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_topk_residual_partition() {
+    // The -0.0-proof statement of residual conservation: compress splits
+    // the corrected gradient into payload and residual *bitwise* — so the
+    // withheld mass is exact by construction, not up to rounding.
+    check("topk-residual-partition", 60, |g| {
+        let len = g.usize(1, 200);
+        let ratio = g.f32(0.01, 1.0);
+        let grad = g.normal_vec(len, 1.0);
+        let mut c = TopKCompressor::new(ratio);
+        let corrected = c.corrected(0, 0, &grad);
+        let p = c.compress(0, 0, corrected.clone());
+        let (idx, val) = match &p {
+            WirePayload::Sparse { len: l, idx, val } => {
+                assert_eq!(*l, len);
+                (idx.clone(), val.clone())
+            }
+            other => panic!("topk payload must be Sparse, got {other:?}"),
+        };
+        let res = c.residual_snapshot();
+        assert_eq!(res.len(), 1);
+        let (t, r, residual) = &res[0];
+        assert_eq!((*t, *r), (0, 0));
+        assert_eq!(residual.len(), len);
+
+        let selected: std::collections::BTreeSet<u32> = idx.iter().copied().collect();
+        for (j, &i) in idx.iter().enumerate() {
+            assert_eq!(
+                val[j].to_bits(),
+                corrected[i as usize].to_bits(),
+                "selected element {i} must move to the payload bit-identically"
+            );
+            assert_eq!(
+                residual[i as usize].to_bits(),
+                0.0f32.to_bits(),
+                "selected element {i} must be zeroed in the residual"
+            );
+        }
+        for i in 0..len {
+            if !selected.contains(&(i as u32)) {
+                assert_eq!(
+                    residual[i].to_bits(),
+                    corrected[i].to_bits(),
+                    "unselected element {i} must stay in the residual bit-identically"
+                );
+            }
+        }
+
+        // …and the next step's correction applies exactly that residual.
+        let grad2 = g.normal_vec(len, 1.0);
+        let corrected2 = c.corrected(0, 0, &grad2);
+        let expect: Vec<f32> = grad2.iter().zip(residual).map(|(a, b)| a + b).collect();
+        assert!(bits_eq(&corrected2, &expect), "error feedback must add the stored residual");
+    });
+}
+
+#[test]
+fn prop_topk_quantize_keeps_the_partition() {
+    // The composition feeds back only the sparsification error: its
+    // residual is the same exact partition remainder as plain top-k
+    // (quantization error stays on the wire, bounded by the controller).
+    check("topk-quantize-partition", 40, |g| {
+        let len = g.usize(1, 200);
+        let ratio = g.f32(0.05, 0.9);
+        let grad = g.normal_vec(len, 1.0);
+        let mut plain = TopKCompressor::new(ratio);
+        let mut composed =
+            TopKQuantizeCompressor::new(AptConfig::static_bits(8), ratio, &names(1));
+        let mut ledger = Ledger::new();
+        composed.begin_tensor(0, 0, &grad, &mut ledger);
+        let _ = plain.compress(0, 0, grad.clone());
+        let p = composed.compress(0, 0, grad.clone());
+        assert!(matches!(p, WirePayload::SparseCodes { .. }));
+        assert_eq!(
+            composed.residual_snapshot(),
+            plain.residual_snapshot(),
+            "composition must withhold exactly what plain top-k withholds"
+        );
+    });
+}
+
+#[test]
+fn prop_topk_selection_bounds() {
+    check("topk-selection-bounds", 80, |g| {
+        let len = g.usize(1, 400);
+        let ratio = g.f32(0.001, 1.0);
+        let v = g.normal_vec(len, g.f32_log(1e-3, 1e3));
+        let idx = top_k_indices(&v, ratio);
+        let k = ((ratio as f64 * len as f64).ceil() as usize).clamp(1, len);
+        assert_eq!(idx.len(), k, "k must be clamp(ceil(ratio·len), 1, len)");
+        assert!(idx.windows(2).all(|w| w[0] < w[1]), "indices ascending and unique");
+        assert!(idx.iter().all(|&i| (i as usize) < len), "indices in range");
+        let selected: std::collections::BTreeSet<u32> = idx.iter().copied().collect();
+        let min_sel = idx.iter().map(|&i| v[i as usize].abs()).fold(f32::INFINITY, f32::min);
+        let max_unsel = (0..len as u32)
+            .filter(|i| !selected.contains(i))
+            .map(|i| v[i as usize].abs())
+            .fold(0.0f32, f32::max);
+        assert!(
+            min_sel >= max_unsel,
+            "selected magnitudes must dominate: min selected {min_sel} < max unselected {max_unsel}"
+        );
+    });
+}
+
+#[test]
+fn prop_wire_payloads_are_deterministic() {
+    // Two independently constructed compressors fed the same gradient
+    // sequence must emit byte-identical wire payloads — selection,
+    // scheme probing and packing are all pure functions of the input.
+    check("wire-determinism", 30, |g| {
+        let len = g.usize(1, 120);
+        let ratio = g.f32(0.05, 0.9);
+        let steps: Vec<Vec<f32>> = (0..3).map(|_| g.normal_vec(len, 1.0)).collect();
+        let run = |mut c: Box<dyn Compressor>| -> Vec<u8> {
+            let mut ledger = Ledger::new();
+            let mut bytes = Vec::new();
+            for (it, grad) in steps.iter().enumerate() {
+                let corrected = c.corrected(0, 0, grad);
+                c.begin_tensor(it as u64, 0, &corrected, &mut ledger);
+                bytes.extend(c.compress(0, 0, corrected).encode());
+            }
+            bytes
+        };
+        let cfg = AptConfig::static_bits(8);
+        let pairs: Vec<(Box<dyn Compressor>, Box<dyn Compressor>)> = vec![
+            (Box::new(IdentityCompressor), Box::new(IdentityCompressor)),
+            (
+                Box::new(QuantizeCompressor::new(cfg, &names(1))),
+                Box::new(QuantizeCompressor::new(cfg, &names(1))),
+            ),
+            (Box::new(TopKCompressor::new(ratio)), Box::new(TopKCompressor::new(ratio))),
+            (
+                Box::new(TopKQuantizeCompressor::new(cfg, ratio, &names(1))),
+                Box::new(TopKQuantizeCompressor::new(cfg, ratio, &names(1))),
+            ),
+        ];
+        for (a, b) in pairs {
+            let label = a.label();
+            assert_eq!(run(a), run(b), "{label}: wire payloads diverged across twins");
+        }
+    });
+}
+
+#[test]
+fn prop_wire_bytes_match_encoding() {
+    check("wire-bytes-accounting", 60, |g| {
+        let len = g.usize(1, 120);
+        let sch = Scheme { bits: *g.choose(&[8u8, 16]), s: g.int(-12, 2) as i32 };
+        let vals = g.normal_vec(len, 1.0);
+        let codes: Vec<i32> = vals.iter().map(|&x| sch.code(x)).collect();
+        let k = g.usize(1, len);
+        let idx: Vec<u32> = (0..k as u32).collect();
+        let payloads = vec![
+            WirePayload::Dense(vals.clone()),
+            WirePayload::Codes { scheme: sch, codes: codes.clone() },
+            WirePayload::Sparse { len, idx: idx.clone(), val: vals[..k].to_vec() },
+            WirePayload::SparseCodes { len, scheme: sch, idx, codes: codes[..k].to_vec() },
+        ];
+        for p in &payloads {
+            assert_eq!(
+                p.wire_bytes(),
+                p.encode().len() as u64,
+                "wire_bytes must equal the canonical encoding length"
+            );
+            // intra-node aggregation is never more expensive than sending
+            // the members individually
+            let node: Vec<WirePayload> = vec![p.clone(), p.clone()];
+            assert!(aggregate_wire_bytes(&node) <= 2 * p.wire_bytes());
+        }
+    });
+}
+
+#[test]
+fn prop_hierarchical_reduce_matches_flat_and_oracles() {
+    check("hier-flat-oracle", 60, |g| {
+        let n = g.usize(1, 17);
+        let len = g.usize(1, 120);
+        let parts: Vec<Vec<f32>> =
+            (0..n).map(|_| g.normal_vec(len, g.f32_log(1e-2, 1e2))).collect();
+        let refs: Vec<&[f32]> = parts.iter().map(|p| p.as_slice()).collect();
+        let flat = tree_reduce_f32(&refs);
+        assert!(
+            bits_eq(&flat, &oracle_tree(&parts)),
+            "production ladder diverged from the recursive oracle at n={n}"
+        );
+        for node in [1usize, 2, 4, 8, 16] {
+            assert!(
+                bits_eq(&hier_reduce_f32(&refs, node), &flat),
+                "hier(node={node}) diverged from flat at n={n}"
+            );
+            assert!(
+                bits_eq(&oracle_hier(&parts, node), &flat),
+                "oracle hier(node={node}) diverged from flat at n={n}"
+            );
+        }
+    });
+}

@@ -1,25 +1,40 @@
 //! Data-parallel training contract tests (DESIGN.md §Data-Parallel):
 //!
 //! 1. **Single-replica parity** — `build_parallel(1, _)` is bit-identical
-//!    to the plain host `Session` loop for every comm policy (nothing is
-//!    communicated at N = 1; that is the documented exactness condition).
-//! 2. **Tree-reduction oracle** — at N ∈ {2, 4} with f32 comm, the loss
-//!    and parameter trajectories match an independently implemented
-//!    shard → backward → fixed-order tree reduction → shared SGD ladder
+//!    to the plain host `Session` loop for every comm precision *and every
+//!    compression policy* (nothing is communicated at N = 1; that is the
+//!    documented exactness condition).
+//! 2. **Tree-reduction oracle** — at N ∈ {2, 4} flat and N ∈ {8, 16}
+//!    hierarchical (node 4) with f32 comm, the loss and parameter
+//!    trajectories match the independent shard → backward → fixed-order
+//!    tree reduction → shared SGD oracle (`tests/common/oracle.rs`)
 //!    bit-exactly.
-//! 3. **Quantized-comm convergence** — int8 gradient exchange still trains
-//!    the tier-1 mlp/alexnet configs.
-//! 4. **Sync invariant** — replicas hold bit-identical parameters after
+//! 3. **Node-size invariance** — for every compressor policy the
+//!    hierarchical node size changes bytes-on-wire accounting only, never
+//!    the trained result (the `hier_reduce_f32` lemma for f32 payloads,
+//!    exact i64 code summation for quantized ones).
+//! 4. **Quantized/compressed-comm convergence** — int8 and
+//!    topk+quantize gradient exchange still train the tier-1 mlp/alexnet
+//!    configs.
+//! 5. **Sync invariant** — replicas hold bit-identical parameters after
 //!    any number of steps, under quantized compute and comm.
-//! 5. **Checkpoint round-trip** — the per-gradient communication
-//!    controllers (and the whole group) resume bit-identically.
+//! 6. **Typed input rejection** — malformed per-replica gradient lists
+//!    fail with a [`ReduceError`] instead of a silently wrong average.
+//! 7. **Checkpoint round-trip** — communication controllers *and*
+//!    error-feedback residuals resume bit-identically; policy mismatches
+//!    and residual-less artifacts are rejected read-only; the committed
+//!    v1 (host) and v3 (parallel top-k) fixtures keep loading.
+
+mod common;
 
 use apt::apt::AptConfig;
 use apt::data::SynthImages;
-use apt::nn::loss::softmax_xent;
-use apt::nn::{models, QuantMode, TrainCtx};
-use apt::train::{CommPrecision, Optimizer, Sgd, SessionBuilder};
-use apt::util::Pcg32;
+use apt::nn::linear::Linear;
+use apt::nn::{QuantMode, Sequential};
+use apt::train::checkpoint::Checkpoint;
+use apt::train::parallel::QuantAllReduce;
+use apt::train::{CommPrecision, CompressPolicy, ReduceError, SessionBuilder};
+use common::oracle::oracle_parallel;
 
 fn adaptive(iters: u64) -> QuantMode {
     let mut cfg = AptConfig::default();
@@ -33,25 +48,43 @@ fn comm_adaptive(iters: u64) -> CommPrecision {
     CommPrecision::Adaptive(cfg)
 }
 
+/// The four (comm precision, compression policy) corners of the seam, for
+/// the tests that must hold under *every* compressor.
+fn policy_corners() -> Vec<(CommPrecision, CompressPolicy)> {
+    vec![
+        (CommPrecision::F32, CompressPolicy::None),
+        (CommPrecision::Static(8), CompressPolicy::Quantize),
+        (CommPrecision::F32, CompressPolicy::TopK(0.25)),
+        (CommPrecision::Static(8), CompressPolicy::TopKQuantize(0.25)),
+    ]
+}
+
 // ---------------------------------------------------------------- parity
 
-fn assert_replicas_one_matches_host(mode: QuantMode, comm: CommPrecision, iters: u64) {
+fn assert_replicas_one_matches_host(
+    mode: QuantMode,
+    comm: CommPrecision,
+    policy: CompressPolicy,
+    iters: u64,
+) {
     let mut host = SessionBuilder::classifier("mlp").mode(mode).build();
     host.run(iters).unwrap();
     let mut par = SessionBuilder::classifier("mlp")
         .mode(mode)
+        .compress(policy)
         .build_parallel(1, comm)
         .unwrap();
     par.run(iters).unwrap();
 
-    assert_eq!(host.losses(), par.losses(), "loss trajectories diverged at N=1");
+    let label = policy.label();
+    assert_eq!(host.losses(), par.losses(), "loss trajectories diverged at N=1 ({label})");
     let (ha, pa) = (host.eval().unwrap(), par.eval().unwrap());
-    assert_eq!(ha.accuracy, pa.accuracy, "eval diverged at N=1");
+    assert_eq!(ha.accuracy, pa.accuracy, "eval diverged at N=1 ({label})");
     let mut hp = Vec::new();
     let mut pp = Vec::new();
     host.net_mut().visit_params(&mut |p, _| hp.push(p.data.clone()));
     par.net_mut().visit_params(&mut |p, _| pp.push(p.data.clone()));
-    assert_eq!(hp, pp, "parameters diverged at N=1");
+    assert_eq!(hp, pp, "parameters diverged at N=1 ({label})");
 }
 
 #[test]
@@ -59,138 +92,55 @@ fn replicas_one_bit_identical_to_host_loop() {
     // The comm policy must be irrelevant at N = 1 — int8 codes never touch
     // the gradients because there is nothing to exchange.
     let iters = 25;
-    assert_replicas_one_matches_host(QuantMode::Float32, CommPrecision::F32, iters);
-    assert_replicas_one_matches_host(QuantMode::Float32, CommPrecision::Static(8), iters);
-    assert_replicas_one_matches_host(adaptive(iters), CommPrecision::Static(8), iters);
+    let f32c = CompressPolicy::None;
+    let q = CompressPolicy::Quantize;
+    assert_replicas_one_matches_host(QuantMode::Float32, CommPrecision::F32, f32c, iters);
+    assert_replicas_one_matches_host(QuantMode::Float32, CommPrecision::Static(8), q, iters);
+    assert_replicas_one_matches_host(adaptive(iters), CommPrecision::Static(8), q, iters);
+}
+
+#[test]
+fn replicas_one_bit_identical_for_every_compressor_policy() {
+    // Identity, quantize, top-k and the composition are all inert at N=1:
+    // the group short-circuits to the host step before any payload exists.
+    for (comm, policy) in policy_corners() {
+        assert_replicas_one_matches_host(QuantMode::Float32, comm, policy, 10);
+    }
 }
 
 // ------------------------------------------------------ tree-reduce oracle
 
-/// Independent re-implementation of the documented reduction ladder:
-/// recursive split at the largest power of two strictly below `n`, which
-/// is provably the same association as the stride-doubling loop in
-/// `train::parallel::tree_reduce_f32`.
-fn oracle_tree(parts: &[Vec<f32>]) -> Vec<f32> {
-    let n = parts.len();
-    if n == 1 {
-        return parts[0].clone();
-    }
-    let mut p = 1usize;
-    while p * 2 < n {
-        p *= 2;
-    }
-    let left = oracle_tree(&parts[..p]);
-    let right = oracle_tree(&parts[p..]);
-    left.iter().zip(&right).map(|(a, b)| a + b).collect()
-}
-
-/// The data-parallel step sequence, rebuilt from public primitives only:
-/// N identically seeded nets, one shared batch stream, row-sharding,
-/// per-replica backward, oracle tree reduction + mean, per-replica SGD.
-fn oracle_parallel(
-    mode: QuantMode,
-    replicas: usize,
-    iters: u64,
-    lr: f32,
-) -> (Vec<f32>, Vec<Vec<f32>>) {
-    let batch = 16usize;
-    let shard = batch / replicas;
-    let mut nets: Vec<_> = (0..replicas)
-        .map(|_| {
-            let mut rng = Pcg32::seeded(0);
-            models::by_name("mlp", mode, &mut rng).expect("model")
-        })
-        .collect();
-    let mut ctxs: Vec<TrainCtx> = (0..replicas).map(|_| TrainCtx::new()).collect();
-    let mut opts: Vec<Sgd> = (0..replicas).map(|_| Sgd::new(lr, 0.9)).collect();
-    let mut data = SynthImages::new(
-        1000,
-        models::CLASSES,
-        models::IN_C,
-        models::IN_H,
-        models::IN_W,
-        0.5,
-    );
-    let mut losses = Vec::new();
-    for it in 0..iters {
-        let (x, y) = data.batch(batch);
-        let d = x.dim(1);
-        let mut shard_losses = Vec::new();
-        let mut grads: Vec<Vec<Vec<f32>>> = Vec::new();
-        for r in 0..replicas {
-            ctxs[r].iter = it;
-            let xs = apt::tensor::Tensor::from_vec(
-                &[shard, d],
-                x.data[r * shard * d..(r + 1) * shard * d].to_vec(),
-            );
-            let ys = &y[r * shard..(r + 1) * shard];
-            let logits = nets[r].forward(&xs, &mut ctxs[r]);
-            let (l, g) = softmax_xent(&logits, ys);
-            nets[r].backward(&g, &mut ctxs[r]);
-            shard_losses.push(l);
-            let mut gs = Vec::new();
-            nets[r].visit_params(&mut |_, gr| gs.push(gr.data.clone()));
-            grads.push(gs);
-        }
-        let tensors = grads[0].len();
-        let mut avg: Vec<Vec<f32>> = Vec::with_capacity(tensors);
-        for t in 0..tensors {
-            let parts: Vec<Vec<f32>> = grads.iter().map(|g| g[t].clone()).collect();
-            let mut sum = oracle_tree(&parts);
-            let inv = 1.0 / replicas as f32;
-            for v in &mut sum {
-                *v *= inv;
-            }
-            avg.push(sum);
-        }
-        for r in 0..replicas {
-            let mut i = 0usize;
-            nets[r].visit_params(&mut |_, gr| {
-                gr.data.copy_from_slice(&avg[i]);
-                i += 1;
-            });
-            opts[r].step(&mut nets[r]);
-            nets[r].zero_grads();
-        }
-        losses.push(
-            (shard_losses.iter().map(|&l| l as f64).sum::<f64>() / replicas as f64) as f32,
-        );
-    }
-    let mut params = Vec::new();
-    nets[0].visit_params(&mut |p, _| params.push(p.data.clone()));
-    (losses, params)
-}
-
-fn assert_f32_comm_matches_oracle(mode: QuantMode, replicas: usize, iters: u64) {
+fn assert_f32_comm_matches_oracle(mode: QuantMode, replicas: usize, node: usize, iters: u64) {
     let lr = 0.02;
-    let (oracle_losses, oracle_params) = oracle_parallel(mode, replicas, iters, lr);
+    let (oracle_losses, oracle_params) = oracle_parallel("mlp", mode, replicas, iters, lr);
     let mut s = SessionBuilder::classifier("mlp")
         .mode(mode)
         .lr(lr)
+        .node_size(node)
         .build_parallel(replicas, CommPrecision::F32)
         .unwrap();
     s.run(iters).unwrap();
     assert_eq!(
         s.losses(),
         &oracle_losses[..],
-        "N={replicas}: loss curve diverged from the tree-reduction oracle"
+        "N={replicas} node={node}: loss curve diverged from the tree-reduction oracle"
     );
     let mut params = Vec::new();
     s.net_mut().visit_params(&mut |p, _| params.push(p.data.clone()));
     assert_eq!(params.len(), oracle_params.len());
     for (i, (a, b)) in params.iter().zip(&oracle_params).enumerate() {
-        assert_eq!(a, b, "N={replicas}: parameter {i} diverged from the oracle");
+        assert_eq!(a, b, "N={replicas} node={node}: parameter {i} diverged from the oracle");
     }
 }
 
 #[test]
 fn f32_comm_matches_tree_oracle_two_replicas() {
-    assert_f32_comm_matches_oracle(QuantMode::Float32, 2, 15);
+    assert_f32_comm_matches_oracle(QuantMode::Float32, 2, 1, 15);
 }
 
 #[test]
 fn f32_comm_matches_tree_oracle_four_replicas() {
-    assert_f32_comm_matches_oracle(QuantMode::Float32, 4, 15);
+    assert_f32_comm_matches_oracle(QuantMode::Float32, 4, 1, 15);
 }
 
 #[test]
@@ -198,7 +148,45 @@ fn f32_comm_matches_tree_oracle_quantized_compute() {
     // Quantized *compute* (per-replica QEM/QPA inside the layers) with f32
     // *comm* still matches the oracle: the controllers are deterministic
     // functions of each replica's shard.
-    assert_f32_comm_matches_oracle(QuantMode::Static(8), 2, 12);
+    assert_f32_comm_matches_oracle(QuantMode::Static(8), 2, 1, 12);
+}
+
+#[test]
+fn f32_comm_matches_tree_oracle_eight_replicas_hierarchical() {
+    // The oracle reduces with the *flat* ladder; the session reduces
+    // two-level with node 4 — bit-equal by the hier_reduce_f32 lemma.
+    assert_f32_comm_matches_oracle(QuantMode::Float32, 8, 4, 10);
+}
+
+#[test]
+fn f32_comm_matches_tree_oracle_sixteen_replicas_hierarchical() {
+    assert_f32_comm_matches_oracle(QuantMode::Float32, 16, 4, 8);
+}
+
+#[test]
+fn node_size_never_changes_the_trained_result() {
+    // For every compressor policy, N=8 trained flat (node 1) and
+    // hierarchically (node 4) must be bit-identical — the node size is an
+    // accounting boundary, not a numeric one.
+    for (comm, policy) in policy_corners() {
+        let run = |node: usize| {
+            let mut s = SessionBuilder::classifier("mlp")
+                .lr(0.02)
+                .compress(policy)
+                .node_size(node)
+                .build_parallel(8, comm)
+                .unwrap();
+            s.run(6).unwrap();
+            let mut params = Vec::new();
+            s.net_mut().visit_params(&mut |p, _| params.push(p.data.clone()));
+            (s.losses().to_vec(), params)
+        };
+        let (l1, p1) = run(1);
+        let (l4, p4) = run(4);
+        let label = policy.label();
+        assert_eq!(l1, l4, "losses diverged across node sizes ({label})");
+        assert_eq!(p1, p4, "parameters diverged across node sizes ({label})");
+    }
 }
 
 // ------------------------------------------------------------ convergence
@@ -246,6 +234,53 @@ fn int8_comm_converges_alexnet() {
     );
 }
 
+#[test]
+fn topk_quantize_comm_converges_mlp() {
+    // The composed policy: top-k sparsification with error feedback on top
+    // of int8 codes. The withheld mass is fed back, so the trajectory still
+    // descends despite 75% of each payload being dropped per step.
+    let iters = 60;
+    let rec = {
+        let mut s = SessionBuilder::classifier("mlp")
+            .mode(adaptive(iters))
+            .compress(CompressPolicy::TopKQuantize(0.25))
+            .build_parallel(2, CommPrecision::Static(8))
+            .unwrap();
+        s.run(iters).unwrap();
+        s.record().unwrap()
+    };
+    let first: f64 = rec.losses[..5].iter().map(|&x| x as f64).sum::<f64>() / 5.0;
+    assert!(
+        rec.tail_loss(10) < first * 0.9,
+        "topk+quantize comm failed to train mlp: first {first:.4} tail {:.4}",
+        rec.tail_loss(10)
+    );
+    // the communication controllers actually ran at int8
+    assert!(!rec.grad_bits.is_empty());
+    assert!(rec.grad_bits.iter().all(|(n, b)| n.starts_with("comm:") && *b == 8));
+}
+
+#[test]
+fn topk_quantize_comm_converges_alexnet() {
+    let iters = 25;
+    let rec = {
+        let mut s = SessionBuilder::classifier("alexnet")
+            .mode(adaptive(iters))
+            .lr(0.01)
+            .compress(CompressPolicy::TopKQuantize(0.25))
+            .build_parallel(2, CommPrecision::Static(8))
+            .unwrap();
+        s.run(iters).unwrap();
+        s.record().unwrap()
+    };
+    let first: f64 = rec.losses[..5].iter().map(|&x| x as f64).sum::<f64>() / 5.0;
+    assert!(
+        rec.tail_loss(5) < first,
+        "topk+quantize comm failed to reduce alexnet loss: first {first:.4} tail {:.4}",
+        rec.tail_loss(5)
+    );
+}
+
 // ----------------------------------------------------------- sync + misc
 
 #[test]
@@ -261,6 +296,18 @@ fn replicas_stay_in_sync_under_quantized_comm() {
 }
 
 #[test]
+fn replicas_stay_in_sync_under_topk_error_feedback() {
+    // Error feedback is per-replica state, but every replica applies the
+    // same reduced gradient — the sync invariant must survive it.
+    let mut s = SessionBuilder::classifier("mlp")
+        .compress(CompressPolicy::TopK(0.1))
+        .build_parallel(4, CommPrecision::F32)
+        .unwrap();
+    s.run(12).unwrap();
+    assert!(s.replicas_in_sync(), "peer parameters diverged under top-k comm");
+}
+
+#[test]
 fn batch_must_split_evenly() {
     let err = SessionBuilder::classifier("mlp")
         .batch(10)
@@ -270,10 +317,47 @@ fn batch_must_split_evenly() {
     assert!(err.to_string().contains("split"), "unexpected error: {err}");
 }
 
+#[test]
+fn incompatible_comm_and_compress_rejected_at_build() {
+    // topk sends raw f32, so int8 comm is contradictory…
+    let err = SessionBuilder::classifier("mlp")
+        .compress(CompressPolicy::TopK(0.1))
+        .build_parallel(2, CommPrecision::Static(8))
+        .err()
+        .expect("topk over int8 comm must be rejected");
+    assert!(err.to_string().contains("--compress"), "unexpected error: {err}");
+    // …and a quantizing policy cannot ride an f32 wire.
+    let err = SessionBuilder::classifier("mlp")
+        .compress(CompressPolicy::TopKQuantize(0.1))
+        .build_parallel(2, CommPrecision::F32)
+        .err()
+        .expect("topk+quantize over f32 comm must be rejected");
+    assert!(err.to_string().contains("--comm-bits"), "unexpected error: {err}");
+}
+
+#[test]
+fn reduce_rejects_mismatched_length_gradients() {
+    // Regression: mismatched per-replica tensor lengths used to be
+    // silently zip-truncated; they must fail with the typed error now.
+    let mut q = QuantAllReduce::new(CommPrecision::Static(8), vec!["t.0".into()]);
+    let per = vec![vec![vec![1.0f32; 4]], vec![vec![2.0f32; 5]]];
+    let err = q.reduce(0, &per).unwrap_err();
+    assert_eq!(err, ReduceError::Length { tensor: 0, replica: 1, got: 5, want: 4 });
+    assert!(err.to_string().contains("length 5"), "unexpected display: {err}");
+    // and anyhow-converted through the session step machinery it stays typed
+    assert!(anyhow::Error::from(err).downcast_ref::<ReduceError>().is_some());
+}
+
 // ------------------------------------------------------------ checkpoints
 
 fn ckpt_path(tag: &str) -> std::path::PathBuf {
     std::env::temp_dir().join(format!("apt_par_ckpt_{tag}_{}.txt", std::process::id()))
+}
+
+fn fixture(name: &str) -> std::path::PathBuf {
+    std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+        .join("tests/fixtures")
+        .join(name)
 }
 
 #[test]
@@ -318,6 +402,50 @@ fn parallel_checkpoint_roundtrip_is_bit_identical() {
 }
 
 #[test]
+fn topk_quantize_checkpoint_roundtrip_is_bit_identical() {
+    // The strongest round-trip: communication controllers *and* per-
+    // (tensor, replica) error-feedback residuals must both resume for the
+    // continued trajectory to be bit-identical.
+    let (pre, post) = (6u64, 6u64);
+    let build = || {
+        SessionBuilder::classifier("mlp")
+            .compress(CompressPolicy::TopKQuantize(0.25))
+            .build_parallel(2, CommPrecision::Static(8))
+            .unwrap()
+    };
+    let path = ckpt_path("topkq");
+
+    let mut a = build();
+    a.run(pre).unwrap();
+    a.save_checkpoint(&path).unwrap();
+
+    // the saved artifact carries the compress section with every residual
+    let ck = Checkpoint::read(&path).unwrap();
+    let snap = ck.compress_state().expect("topk+quantize save must write compress state");
+    assert_eq!(snap.label, "topk:0.25+quantize");
+    assert_eq!(snap.residuals.len(), 6 * 2, "6 tensors × 2 replicas");
+
+    a.run(post).unwrap();
+
+    let mut b = build();
+    b.load_checkpoint(&path).unwrap();
+    assert_eq!(
+        b.backend().group().comm().compress_snapshot(),
+        *snap,
+        "error-feedback residuals diverged after restore"
+    );
+    b.run(post).unwrap();
+
+    assert_eq!(a.losses(), b.losses(), "restored run diverged");
+    let mut pa = Vec::new();
+    let mut pb = Vec::new();
+    a.net_mut().visit_params(&mut |p, _| pa.push(p.data.clone()));
+    b.net_mut().visit_params(&mut |p, _| pb.push(p.data.clone()));
+    assert_eq!(pa, pb, "parameters diverged after restore");
+    let _ = std::fs::remove_file(&path);
+}
+
+#[test]
 fn parallel_checkpoint_rejects_comm_policy_mismatch() {
     let path = ckpt_path("policy");
     let mut a = SessionBuilder::classifier("mlp")
@@ -343,13 +471,41 @@ fn parallel_checkpoint_rejects_comm_policy_mismatch() {
 }
 
 #[test]
+fn parallel_checkpoint_rejects_compress_policy_mismatch() {
+    let path = ckpt_path("compress_mismatch");
+    let mut a = SessionBuilder::classifier("mlp")
+        .compress(CompressPolicy::TopK(0.25))
+        .build_parallel(2, CommPrecision::F32)
+        .unwrap();
+    a.run(3).unwrap();
+    a.save_checkpoint(&path).unwrap();
+
+    // same family, different ratio → different label → rejected read-only
+    let mut b = SessionBuilder::classifier("mlp")
+        .compress(CompressPolicy::TopK(0.5))
+        .build_parallel(2, CommPrecision::F32)
+        .unwrap();
+    let mut fresh_params = Vec::new();
+    b.net_mut().visit_params(&mut |p, _| fresh_params.push(p.data.clone()));
+    let err = b.load_checkpoint(&path).unwrap_err().to_string();
+    assert!(err.contains("compress"), "unexpected error: {err}");
+    assert_eq!(b.iters_done(), 0, "failed restore must not advance the session");
+    let mut after = Vec::new();
+    b.net_mut().visit_params(&mut |p, _| after.push(p.data.clone()));
+    assert_eq!(fresh_params, after, "failed restore must leave parameters untouched");
+    let _ = std::fs::remove_file(&path);
+}
+
+#[test]
 fn parallel_checkpoint_loads_into_host_session() {
     // Deploying a data-parallel run into a single-replica session is
-    // legitimate: comm controllers are simply dropped (nothing to
-    // communicate), and the model/optimizer state carries over.
+    // legitimate: comm controllers (and any compression residuals) are
+    // simply dropped — nothing to communicate — and the model/optimizer
+    // state carries over.
     let path = ckpt_path("tohost");
     let mut a = SessionBuilder::classifier("mlp")
-        .build_parallel(2, CommPrecision::Static(8))
+        .compress(CompressPolicy::TopK(0.1))
+        .build_parallel(2, CommPrecision::F32)
         .unwrap();
     a.run(4).unwrap();
     a.save_checkpoint(&path).unwrap();
@@ -359,4 +515,70 @@ fn parallel_checkpoint_loads_into_host_session() {
     assert_eq!(b.iters_done(), 4);
     b.run(3).unwrap(); // and it keeps training
     let _ = std::fs::remove_file(&path);
+}
+
+// -------------------------------------------------------------- fixtures
+
+/// The committed fixtures were written against this exact configuration:
+/// a single `fc0: Linear(4 → 3)` over a 3-class 1×2×2 synthetic stream
+/// (the same network as the host-path fixtures in `test_mem.rs`).
+fn fixture_builder(mode: QuantMode) -> SessionBuilder {
+    SessionBuilder::custom("fixture-net", move |rng| {
+        Sequential::new(vec![Box::new(Linear::new("fc0", 4, 3, mode, rng))])
+    })
+    .data(Box::new(SynthImages::new(11, 3, 1, 2, 2, 0.3)))
+    .eval_set(999, 12)
+}
+
+#[test]
+fn v3_topk_fixture_checkpoint_loads_with_residuals() {
+    let path = fixture("parallel_topk_v3.ckpt");
+    let ck = Checkpoint::read(&path).unwrap();
+    assert_eq!(ck.iters_done(), 2);
+    let snap = ck.compress_state().expect("fixture carries a compress section");
+    assert_eq!(snap.label, "topk:0.25");
+    assert_eq!(snap.residuals.len(), 4, "2 tensors × 2 replicas");
+    assert_eq!(snap.residuals[0].2.len(), 12, "fc0 weight residual");
+    assert_eq!(snap.residuals[3].2.len(), 3, "fc0 bias residual");
+
+    // loads into the matching group and the residual state resumes exactly
+    let mut s = fixture_builder(QuantMode::Float32)
+        .compress(CompressPolicy::TopK(0.25))
+        .build_parallel(2, CommPrecision::F32)
+        .unwrap();
+    s.load_checkpoint(&path).unwrap();
+    assert_eq!(s.iters_done(), 2);
+    assert_eq!(s.backend().group().comm().compress_snapshot(), *snap);
+    s.run(2).unwrap(); // and it keeps training
+    assert!(s.losses().iter().all(|l| l.is_finite()));
+
+    // a group under a different compression policy must refuse it
+    let mut wrong = fixture_builder(QuantMode::Float32)
+        .compress(CompressPolicy::TopK(0.5))
+        .build_parallel(2, CommPrecision::F32)
+        .unwrap();
+    let err = wrong.load_checkpoint(&path).unwrap_err().to_string();
+    assert!(err.contains("compress"), "unexpected error: {err}");
+}
+
+#[test]
+fn v1_fixture_checkpoint_loads_into_parallel_group() {
+    // Pre-compression artifacts keep loading into stateless policies: the
+    // missing compress section restores fine into a `none` group…
+    let path = fixture("host_f32_v1.ckpt");
+    let mut s = fixture_builder(QuantMode::Float32)
+        .build_parallel(2, CommPrecision::F32)
+        .unwrap();
+    s.load_checkpoint(&path).unwrap();
+    assert_eq!(s.iters_done(), 3);
+    s.run(2).unwrap();
+    assert!(s.replicas_in_sync());
+
+    // …but an error-feedback group cannot invent residuals it never saved.
+    let mut topk = fixture_builder(QuantMode::Float32)
+        .compress(CompressPolicy::TopK(0.25))
+        .build_parallel(2, CommPrecision::F32)
+        .unwrap();
+    let err = topk.load_checkpoint(&path).unwrap_err().to_string();
+    assert!(err.contains("compress"), "unexpected error: {err}");
 }
