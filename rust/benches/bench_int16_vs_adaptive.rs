@@ -1,8 +1,31 @@
 //! cargo bench — Appendix E: the adaptive int8-fwd/int16-bwd mix vs
-//! int16-everywhere (paper: 1.7× fwd, 1.3× overall).
+//! int16-everywhere (paper: 1.7× fwd, 1.3× overall), extended with the
+//! format-family sweep of EXPERIMENTS.md §Formats: training accuracy
+//! across int8/e4m3/e5m2 compute formats plus the int4 weight-only
+//! serving footprint off the int8 run. Writes `results/formats.csv`.
 
+use apt::apt::AptConfig;
+use apt::compiler::CompileOptions;
 use apt::exp;
+use apt::fixedpoint::FormatFamily;
+use apt::nn::QuantMode;
+use apt::serve::FrozenModel;
+use apt::train::SessionBuilder;
 use apt::util::cli::Args;
+use apt::util::out::{results_dir, Csv};
+
+/// `--mode`-equivalent for one sweep column (`int8` static, else the
+/// adaptive controller pinned to the format family).
+fn mode_for(label: &str, iters: u64) -> QuantMode {
+    match label {
+        "int8" => QuantMode::Static(8),
+        fam => {
+            let mut cfg = AptConfig::for_family(FormatFamily::parse(fam).expect("sweep family"));
+            cfg.init_phase_iters = iters / 10;
+            QuantMode::Adaptive(cfg)
+        }
+    }
+}
 
 fn main() {
     let quick = std::env::var("BENCH_QUICK").is_ok();
@@ -11,4 +34,57 @@ fn main() {
             .into_iter(),
     );
     exp::run("appxE", &args);
+
+    // ---- format-family sweep (EXPERIMENTS.md §Formats) ----
+    let iters: u64 = if quick { 40 } else { 200 };
+    let models: &[&str] = if quick { &["mlp"] } else { &["mlp", "alexnet"] };
+    let mut csv = Csv::new(
+        results_dir().join("formats.csv"),
+        &["model", "format", "iters", "tail_loss", "eval_acc", "weight_bytes_int8", "weight_bytes_int4w"],
+    );
+    println!("\nformat sweep ({iters} iters):");
+    for &model in models {
+        for fmt in ["int8", "e4m3", "e5m2"] {
+            let mut s = SessionBuilder::classifier(model)
+                .mode(mode_for(fmt, iters))
+                .lr(0.01)
+                .build();
+            s.run(iters).unwrap();
+            // serving footprint: freeze the int8 run both ways before the
+            // session is consumed by record()
+            let (w8, w4) = if fmt == "int8" {
+                let i8m = FrozenModel::freeze(format!("{model}-int8"), s.net()).unwrap();
+                let opts = CompileOptions {
+                    weight_format: Some(FormatFamily::Int4),
+                    ..CompileOptions::default()
+                };
+                let i4m = FrozenModel::freeze_with(format!("{model}-int4w"), s.net(), &opts).unwrap();
+                (i8m.compile_report().weight_bytes, i4m.compile_report().weight_bytes)
+            } else {
+                (0, 0)
+            };
+            let rec = s.record().unwrap();
+            let footprint = if w8 > 0 {
+                format!("  (weights: int8 {w8} B -> int4w {w4} B)")
+            } else {
+                String::new()
+            };
+            println!(
+                "  {model:<9} {fmt:<5} tail loss {:.4}  eval acc {:.3}{footprint}",
+                rec.tail_loss(10),
+                rec.eval_acc
+            );
+            csv.row(&[
+                model.to_string(),
+                fmt.to_string(),
+                iters.to_string(),
+                format!("{:.5}", rec.tail_loss(10)),
+                format!("{:.4}", rec.eval_acc),
+                w8.to_string(),
+                w4.to_string(),
+            ]);
+        }
+    }
+    csv.write().unwrap();
+    println!("wrote {}", results_dir().join("formats.csv").display());
 }

@@ -28,7 +28,7 @@ const TRAIN_ITERS: u64 = 30;
 fn frozen_for(mode: QuantMode, fuse: bool) -> FrozenModel {
     let mut s = SessionBuilder::classifier("mlp").mode(mode).lr(0.01).build();
     s.run(TRAIN_ITERS).expect("train");
-    let opts = CompileOptions { fuse, tune: false };
+    let opts = CompileOptions { fuse, ..CompileOptions::default() };
     FrozenModel::freeze_with(format!("mlp-{}", mode.label()), s.net(), &opts).expect("freeze")
 }
 

@@ -1,5 +1,7 @@
 //! Hyper-parameters of adaptive precision training (paper §5.3).
 
+use crate::fixedpoint::FormatFamily;
+
 /// QPA bit-width restart policy (paper §4.2).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum Mode {
@@ -56,6 +58,14 @@ pub struct AptConfig {
     /// If true, weights and activations are pinned to `min_bits` (the
     /// paper's experimental setting: only gradients adapt).
     pub pin_forward_bits: bool,
+    /// Format family the controller adapts within (DESIGN.md §Formats).
+    /// `FixedPoint` (the default) reproduces the paper's bit-width axis
+    /// exactly; the fixed-width families (`E4M3`/`E5M2`/`Int4`) pin the
+    /// storage width and adapt only the scale exponent.
+    pub family: FormatFamily,
+    /// Per-channel weight scales (conv/fc): the family/bits decision stays
+    /// per-tensor, but each output channel gets its own scale exponent.
+    pub per_channel_weights: bool,
 }
 
 impl Default for AptConfig {
@@ -74,6 +84,8 @@ impl Default for AptConfig {
             init_phase_iters: 100,
             max_interval: 10_000,
             pin_forward_bits: true,
+            family: FormatFamily::FixedPoint,
+            per_channel_weights: false,
         }
     }
 }
@@ -93,6 +105,19 @@ impl AptConfig {
     /// Mode1 variant of the defaults.
     pub fn mode1() -> Self {
         AptConfig { mode: Mode::Mode1, ..Default::default() }
+    }
+
+    /// Config for a fixed-width format family (minifloat / int4): storage
+    /// width is pinned by the family, QPA adapts only the scale exponent.
+    /// `FixedPoint` returns the plain defaults (the paper's axis).
+    pub fn for_family(family: FormatFamily) -> Self {
+        let mut cfg = AptConfig { family, ..Default::default() };
+        if family != FormatFamily::FixedPoint {
+            let bits = family.storage_bits();
+            cfg.min_bits = bits;
+            cfg.max_bits = bits;
+        }
+        cfg
     }
 }
 

@@ -11,12 +11,14 @@ use super::config::AptConfig;
 use super::ledger::{Event, Ledger};
 use super::qpa;
 use crate::fixedpoint::quantize;
-use crate::fixedpoint::{Scheme, TensorKind};
+use crate::fixedpoint::{Format, FormatFamily, Scheme, TensorKind};
 use crate::util::Ema;
 
 /// Serializable decision state of one controller — everything
 /// [`PrecisionController`] mutates between updates. Used by
-/// `train::checkpoint` for bit-identical save/restore.
+/// `train::checkpoint` for bit-identical save/restore. `family` is the
+/// format family the record was written under (checkpoint v4 tag); it is
+/// validated against the config on restore, never applied from it.
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub struct ControllerState {
     pub bits: u8,
@@ -26,6 +28,7 @@ pub struct ControllerState {
     pub prev_range: f32,
     pub next_update: u64,
     pub updates: u64,
+    pub family: FormatFamily,
 }
 
 /// Controller state for one tensor.
@@ -39,6 +42,11 @@ pub struct PrecisionController {
     prev_range: f32,
     next_update: u64,
     updates: u64,
+    /// Per-channel scale exponents for weight tensors under
+    /// `cfg.per_channel_weights` (empty = per-tensor). Refreshed by the
+    /// owning layer at update iterations; checkpointed in the v4 `pc`
+    /// section.
+    pc_scales: Vec<i32>,
 }
 
 impl PrecisionController {
@@ -49,8 +57,16 @@ impl PrecisionController {
         if cfg.pin_forward_bits && kind != TensorKind::Gradient {
             cfg.max_bits = cfg.min_bits;
         }
+        // Fixed-width families (minifloat/int4) have no bit axis: pin the
+        // storage width so QPA only tracks the scale exponent.
+        if cfg.family != FormatFamily::FixedPoint {
+            let b = cfg.family.storage_bits();
+            cfg.min_bits = b;
+            cfg.max_bits = b;
+        }
+        let init_s = Format::for_range(cfg.family, 1.0, cfg.min_bits).scale_exp();
         PrecisionController {
-            scheme: Scheme::for_range(1.0, cfg.min_bits),
+            scheme: Scheme { bits: cfg.min_bits, s: init_s },
             cfg,
             layer: layer.into(),
             kind,
@@ -58,12 +74,80 @@ impl PrecisionController {
             prev_range: 0.0,
             next_update: 0,
             updates: 0,
+            pc_scales: Vec::new(),
         }
     }
 
-    /// Scheme to apply at this iteration.
+    /// Scheme to apply at this iteration. For non-fixed-point families the
+    /// `s` slot carries the family's scale exponent; prefer
+    /// [`format`](Self::format) which interprets it.
     pub fn scheme(&self) -> Scheme {
         self.scheme
+    }
+
+    /// The full format to apply at this iteration (family + adapted
+    /// parameters). For `FixedPoint` configs this wraps [`scheme`] exactly.
+    pub fn format(&self) -> Format {
+        Format::from_scheme(self.cfg.family, self.scheme)
+    }
+
+    /// Per-channel scale exponents (empty = per-tensor quantization).
+    pub fn pc_scales(&self) -> &[i32] {
+        &self.pc_scales
+    }
+
+    /// Install per-channel scale exponents (the owning layer computes them
+    /// from the weight data at update iterations; checkpoint restore
+    /// re-installs the saved vector).
+    pub fn set_pc_scales(&mut self, scales: Vec<i32>) {
+        self.pc_scales = scales;
+    }
+
+    /// Recompute per-channel scale exponents from the weight data when this
+    /// controller is configured `per_channel_weights` (no-op otherwise).
+    /// Layers call this at update iterations, right after
+    /// [`maybe_update_from_data`](Self::maybe_update_from_data), so the
+    /// scales freeze together with the per-tensor decision. `by_rows`
+    /// selects which axis of the row-major `rows × cols` matrix the
+    /// channels index (conv weights: rows = output channels; linear
+    /// weights: cols = output features).
+    pub fn refresh_pc_scales(&mut self, w: &[f32], rows: usize, cols: usize, by_rows: bool) {
+        if !self.cfg.per_channel_weights {
+            return;
+        }
+        self.pc_scales = if by_rows {
+            quantize::channel_scales_rows(w, rows, cols, self.cfg.family, self.scheme.bits)
+        } else {
+            quantize::channel_scales_cols(w, rows, cols, self.cfg.family, self.scheme.bits)
+        };
+    }
+
+    /// Fake-quantize a weight matrix under this controller's decision:
+    /// the per-tensor [`format`](Self::format) normally, the installed
+    /// per-channel scales when present. Axis convention as in
+    /// [`refresh_pc_scales`](Self::refresh_pc_scales).
+    pub fn fake_quant_weights(&self, w: &mut [f32], rows: usize, cols: usize, by_rows: bool) {
+        if self.pc_scales.is_empty() {
+            crate::kernels::global().fake_quant_fmt(w, self.format());
+        } else if by_rows {
+            quantize::fake_quant_per_channel_rows(
+                w,
+                rows,
+                cols,
+                self.cfg.family,
+                self.scheme.bits,
+                &self.pc_scales,
+            );
+        } else {
+            quantize::fake_quant_per_channel_cols(
+                w,
+                rows,
+                cols,
+                self.cfg.family,
+                self.scheme.bits,
+                &self.pc_scales,
+            );
+        }
     }
 
     pub fn bits(&self) -> u8 {
@@ -90,6 +174,7 @@ impl PrecisionController {
             prev_range: self.prev_range,
             next_update: self.next_update,
             updates: self.updates,
+            family: self.cfg.family,
         }
     }
 
@@ -116,9 +201,11 @@ impl PrecisionController {
         }
         let range_now = quantize::max_abs(data);
         let cfg = self.cfg;
+        // Family-generic probe: for FixedPoint this is exactly the original
+        // `Scheme::for_range` + `stats_only` path (bit-identity pinned).
         let probe = move |bits: u8| {
-            let sch = Scheme::for_range(range_now.max(1e-30), bits);
-            qpa::error_for_threshold(&cfg, quantize::stats_only(data, sch).ratio())
+            let fmt = Format::for_range(cfg.family, range_now.max(1e-30), bits);
+            qpa::error_for_threshold(&cfg, quantize::stats_only_fmt(data, fmt).ratio())
         };
         self.apply_decision(iter, range_now, &probe, ledger)
     }
@@ -174,7 +261,15 @@ impl PrecisionController {
 
         let in_init = iter < self.cfg.init_phase_iters;
         let decision = qpa::adjust(&self.cfg, self.scheme, r_i.max(range_now), range_delta, in_init, probe);
-        self.scheme = decision.scheme;
+        self.scheme = if self.cfg.family == FormatFamily::FixedPoint {
+            decision.scheme
+        } else {
+            // Fixed-width family: bits are pinned by the family; the scale
+            // exponent follows the family's range rule instead of the
+            // fixed-point one.
+            let fmt = Format::for_range(self.cfg.family, r_i.max(range_now), decision.scheme.bits);
+            Scheme { bits: decision.scheme.bits, s: fmt.scale_exp() }
+        };
         self.next_update = iter + decision.interval;
         self.updates += 1;
         if decision.interval_clamped {
@@ -183,7 +278,7 @@ impl PrecisionController {
             // record — a silent clamp looks like the paper's formula at work.
             ledger.record_clamp(&self.layer, self.kind, iter);
         }
-        ledger.record_event(
+        ledger.record_event_fmt(
             &self.layer,
             self.kind,
             Event {
@@ -192,6 +287,7 @@ impl PrecisionController {
                 interval: decision.interval,
                 error: decision.error,
             },
+            self.cfg.family,
         );
         self.scheme
     }

@@ -4,7 +4,7 @@
 
 use std::collections::BTreeMap;
 
-use crate::fixedpoint::TensorKind;
+use crate::fixedpoint::{FormatFamily, TensorKind};
 
 /// One QPA event.
 #[derive(Clone, Copy, Debug)]
@@ -24,6 +24,10 @@ pub struct TensorHistory {
     /// Iterations at which the QPA interval hit the `cfg.max_interval`
     /// ceiling (the fully-converged-tensor clamp; see `qpa::interval`).
     pub clamps: Vec<u64>,
+    /// Format family this tensor's controller adapts within — `bits` in
+    /// the events are fixed-point widths only under `FixedPoint`; other
+    /// families pin them to the storage width (DESIGN.md §Formats).
+    pub family: FormatFamily,
 }
 
 /// Identifies one quantized tensor: layer name + role.
@@ -42,11 +46,22 @@ impl Ledger {
     }
 
     pub fn record_event(&mut self, layer: &str, kind: TensorKind, ev: Event) {
-        self.tensors
-            .entry((layer.to_string(), kind))
-            .or_default()
-            .events
-            .push(ev);
+        self.record_event_fmt(layer, kind, ev, FormatFamily::FixedPoint);
+    }
+
+    /// [`record_event`](Self::record_event) with the controller's format
+    /// family — keeps the mix reporting honest for non-fixed-point tensors
+    /// (whose `bits` are storage widths, not precision choices).
+    pub fn record_event_fmt(
+        &mut self,
+        layer: &str,
+        kind: TensorKind,
+        ev: Event,
+        family: FormatFamily,
+    ) {
+        let hist = self.tensors.entry((layer.to_string(), kind)).or_default();
+        hist.family = family;
+        hist.events.push(ev);
     }
 
     /// Record that the QPA update interval was clamped to the configured
@@ -158,6 +173,51 @@ impl Ledger {
             .into_iter()
             .map(|(b, w)| (b, w / total.max(1.0)))
             .collect()
+    }
+
+    /// Format-aware sibling of
+    /// [`timewise_bits_mix_where`](Self::timewise_bits_mix_where): keys are
+    /// format labels (`int8`/`int16`/… for fixed-point widths, `e4m3` /
+    /// `e5m2` / `int4` for the fixed-width families). For ledgers that only
+    /// ever saw fixed-point tensors, the label set is exactly the
+    /// `int{bits}` image of the bits mix.
+    pub fn timewise_format_mix_where(
+        &self,
+        kind: TensorKind,
+        keep: impl Fn(&str) -> bool,
+    ) -> BTreeMap<String, f64> {
+        let mut weight: BTreeMap<String, f64> = BTreeMap::new();
+        let mut total = 0.0f64;
+        let end = self.total_iters;
+        for ((name, k), hist) in &self.tensors {
+            if *k != kind || !keep(name) {
+                continue;
+            }
+            for (i, ev) in hist.events.iter().enumerate() {
+                let until = hist.events.get(i + 1).map(|e| e.iter).unwrap_or(end);
+                let span = until.saturating_sub(ev.iter) as f64;
+                let label = match hist.family {
+                    FormatFamily::FixedPoint => format!("int{}", ev.bits),
+                    other => other.label().to_string(),
+                };
+                *weight.entry(label).or_default() += span;
+                total += span;
+            }
+        }
+        weight.into_iter().map(|(b, w)| (b, w / total.max(1.0))).collect()
+    }
+
+    /// Do any recorded tensors of `kind` passing `keep` use a
+    /// non-fixed-point family? (The mix strings switch to format labels
+    /// only when this is true, keeping the historical output pinned.)
+    pub fn has_non_fixed_formats_where(
+        &self,
+        kind: TensorKind,
+        keep: impl Fn(&str) -> bool,
+    ) -> bool {
+        self.tensors.iter().any(|((name, k), hist)| {
+            *k == kind && keep(name) && hist.family != FormatFamily::FixedPoint
+        })
     }
 
     /// Percentage of *iterations* at each bit-width for one kind, bucketed

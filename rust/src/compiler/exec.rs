@@ -17,7 +17,7 @@ use std::time::Duration;
 use crate::fixedpoint::conv::{
     im2col, im2col_bt_codes_i16, im2col_bt_codes_i8, im2col_bt_quant_i16, im2col_bt_quant_i8,
 };
-use crate::fixedpoint::{quantize, Scheme};
+use crate::fixedpoint::{quantize, unpack_nibbles, Scheme};
 use crate::kernels::Engine;
 use crate::tensor::Tensor;
 
@@ -181,7 +181,7 @@ fn run_linear(
         LinKind::Fq { wq, sx } => {
             let mut xq = expect_f32(act);
             assert_eq!(xq.dim(1), l.din, "linear input width");
-            eng.fake_quant_stats(&mut xq.data, *sx);
+            eng.fake_quant_fmt(&mut xq.data, *sx);
             let mut y = Tensor::zeros(&[m, l.dout]);
             eng.gemm_f32_tiled(m, l.din, l.dout, &xq.data, &wq.data, &mut y.data, tile);
             y
@@ -204,6 +204,33 @@ fn run_linear(
             };
             let mut acc = vec![0i32; m * l.dout];
             eng.gemm_i8_prepacked_tiled(m, l.din, l.dout, ca, bt, colsum, &mut acc, tile);
+            drop(cab);
+            let mut y = Tensor::zeros(&[m, l.dout]);
+            eng.rescale_i32(&acc, sw.resolution() * sx.resolution(), &mut y.data);
+            y
+        }
+        LinKind::I4 { packed, colsum, sw, sx } => {
+            // Weight-only int4: unpack the nibble-packed BT codes into an
+            // i8 scratch, then the path is identical to the i8 kind.
+            let mut bt = vec![0i8; l.din * l.dout];
+            unpack_nibbles(packed, &mut bt);
+            let mut cab: Vec<i8> = Vec::new();
+            let ca: &[i8] = match &act {
+                Act::I8 { codes, d, s, .. } => {
+                    assert_eq!(*d, l.din, "linear input width");
+                    debug_assert_eq!(*s, *sx, "producer emitted codes at the wrong scheme");
+                    codes
+                }
+                Act::F32(x) => {
+                    assert_eq!(x.dim(1), l.din, "linear input width");
+                    cab = vec![0i8; x.len()];
+                    eng.codes_i8(&x.data, &mut cab, *sx);
+                    &cab
+                }
+                Act::I16 { .. } => panic!("fused plan invariant violated: i16 codes at i4 linear"),
+            };
+            let mut acc = vec![0i32; m * l.dout];
+            eng.gemm_i8_prepacked_tiled(m, l.din, l.dout, ca, &bt, colsum, &mut acc, tile);
             drop(cab);
             let mut y = Tensor::zeros(&[m, l.dout]);
             eng.rescale_i32(&acc, sw.resolution() * sx.resolution(), &mut y.data);
@@ -287,11 +314,20 @@ fn run_conv(
     // Per-image scratch (loop-invariant sizes, fully overwritten each pass).
     let (mut btp8, mut btp16) = (Vec::new(), Vec::new());
     let (mut colsum, mut acc, mut patch) = (Vec::new(), Vec::new(), Vec::new());
+    let mut cw8 = Vec::new();
     match &cv.kind {
         ConvKind::I8 { .. } => {
             btp8 = vec![0i8; rows * cols];
             colsum = vec![0i32; cols];
             acc = vec![0i32; g.out_c * cols];
+        }
+        ConvKind::I4 { packed, .. } => {
+            btp8 = vec![0i8; rows * cols];
+            colsum = vec![0i32; cols];
+            acc = vec![0i32; g.out_c * cols];
+            // Unpack the weight nibbles once per forward (loop-invariant).
+            cw8 = vec![0i8; g.out_c * rows];
+            unpack_nibbles(packed, &mut cw8);
         }
         ConvKind::I16 { .. } => {
             btp16 = vec![0i16; rows * cols];
@@ -324,6 +360,24 @@ fn run_conv(
                     }
                 }
                 eng.gemm_i8_prepacked_tiled(g.out_c, rows, cols, cw, &btp8, &colsum, &mut acc, tile);
+                eng.rescale_i32(&acc, sw.resolution() * sx.resolution(), &mut vb);
+            }
+            ConvKind::I4 { sw, sx, .. } => {
+                match &act {
+                    Act::F32(x) => {
+                        let xi = &x.data[img * d_in..(img + 1) * d_in];
+                        im2col_bt_quant_i8(g, h, w, xi, *sx, &mut btp8, &mut colsum);
+                    }
+                    Act::I8 { codes, s, .. } => {
+                        debug_assert_eq!(*s, *sx, "producer emitted codes at the wrong scheme");
+                        let ci = &codes[img * d_in..(img + 1) * d_in];
+                        im2col_bt_codes_i8(g, h, w, ci, &mut btp8, &mut colsum);
+                    }
+                    Act::I16 { .. } => {
+                        panic!("fused plan invariant violated: i16 codes at i4 conv")
+                    }
+                }
+                eng.gemm_i8_prepacked_tiled(g.out_c, rows, cols, &cw8, &btp8, &colsum, &mut acc, tile);
                 eng.rescale_i32(&acc, sw.resolution() * sx.resolution(), &mut vb);
             }
             ConvKind::I16 { cw, sw, sx } => {
@@ -360,7 +414,7 @@ fn run_conv(
                 };
                 let xi = &x.data[img * d_in..(img + 1) * d_in];
                 im2col(g, h, w, xi, &mut patch);
-                eng.fake_quant_stats(&mut patch, *sx);
+                eng.fake_quant_fmt(&mut patch, *sx);
                 eng.gemm_f32_tiled(g.out_c, rows, cols, wq, &patch, &mut vb, tile);
             }
         }
@@ -414,16 +468,20 @@ fn run_dw(dw: &ExecDw, relu: bool, emit: &Emit, act: Act) -> Act {
                 assert_eq!(x.dim(1), d_in, "depthwise input size");
                 match dw.sx {
                     None => x,
-                    Some(sx) => {
+                    Some(fx) => {
                         let mut xq = x;
-                        quantize::fake_quant_stats_inplace(&mut xq.data, sx);
+                        quantize::fake_quant_stats_inplace_fmt(&mut xq.data, fx);
                         xq
                     }
                 }
             }
             Act::I8 { codes, n, d, s } => {
                 assert_eq!(d, d_in, "depthwise input size");
-                debug_assert_eq!(Some(s), dw.sx, "producer emitted codes at the wrong scheme");
+                debug_assert_eq!(
+                    Some(s),
+                    dw.sx.and_then(|f| f.as_scheme()),
+                    "producer emitted codes at the wrong scheme"
+                );
                 let r = s.resolution();
                 let mut xq = Tensor::zeros(&[n, d]);
                 for (o, &cd) in xq.data.iter_mut().zip(&codes) {
@@ -433,7 +491,11 @@ fn run_dw(dw: &ExecDw, relu: bool, emit: &Emit, act: Act) -> Act {
             }
             Act::I16 { codes, n, d, s } => {
                 assert_eq!(d, d_in, "depthwise input size");
-                debug_assert_eq!(Some(s), dw.sx, "producer emitted codes at the wrong scheme");
+                debug_assert_eq!(
+                    Some(s),
+                    dw.sx.and_then(|f| f.as_scheme()),
+                    "producer emitted codes at the wrong scheme"
+                );
                 let r = s.resolution();
                 let mut xq = Tensor::zeros(&[n, d]);
                 for (o, &cd) in xq.data.iter_mut().zip(&codes) {

@@ -98,17 +98,21 @@ fn decide_emit(ops: &[ExecOp], j: usize) -> Emit {
         k += 1;
     }
     match ops.get(k) {
+        // The int4 weight-only kind consumes i8 activation codes at `sx`
+        // exactly like the i8 kind — same emit decision.
         Some(ExecOp::Linear(l)) => match &l.kind {
-            LinKind::I8 { sx, .. } => Emit::I8(*sx),
+            LinKind::I8 { sx, .. } | LinKind::I4 { sx, .. } => Emit::I8(*sx),
             LinKind::I16 { sx, .. } => Emit::I16(*sx),
             _ => Emit::F32,
         },
         Some(ExecOp::Conv(cv)) => match &cv.kind {
-            ConvKind::I8 { sx, .. } => Emit::I8(*sx),
+            ConvKind::I8 { sx, .. } | ConvKind::I4 { sx, .. } => Emit::I8(*sx),
             ConvKind::I16 { sx, .. } => Emit::I16(*sx),
             _ => Emit::F32,
         },
-        Some(ExecOp::Depthwise(dw)) => match dw.sx {
+        // Depthwise only accepts codes for formats with a fixed-point
+        // view (codes dequantize exactly); minifloat stays f32.
+        Some(ExecOp::Depthwise(dw)) => match dw.sx.and_then(|f| f.as_scheme()) {
             Some(s) if s.bits <= 8 => Emit::I8(s),
             Some(s) if s.bits <= 16 => Emit::I16(s),
             _ => Emit::F32,
@@ -209,7 +213,7 @@ pub(crate) fn step_shape(ops: &[ExecOp], step: &Step) -> Option<ShapeKey> {
                 _ => unreachable!("plan step/op mismatch"),
             };
             let kind = match &l.kind {
-                LinKind::I8 { .. } => GemmKind::I8,
+                LinKind::I8 { .. } | LinKind::I4 { .. } => GemmKind::I8,
                 LinKind::I16 { .. } => GemmKind::I16,
                 _ => GemmKind::F32,
             };
@@ -222,7 +226,7 @@ pub(crate) fn step_shape(ops: &[ExecOp], step: &Step) -> Option<ShapeKey> {
             };
             let (rows, cols) = cv.geom.im2col_dims(cv.in_h, cv.in_w);
             let kind = match &cv.kind {
-                ConvKind::I8 { .. } => GemmKind::I8,
+                ConvKind::I8 { .. } | ConvKind::I4 { .. } => GemmKind::I8,
                 ConvKind::I16 { .. } => GemmKind::I16,
                 _ => GemmKind::F32,
             };
@@ -294,8 +298,8 @@ mod tests {
             name: name.to_string(),
             w: Tensor::zeros(&[din, dout]),
             b: vec![0.0; dout],
-            sw: q.map(|(sw, _)| sw),
-            sx: q.map(|(_, sx)| sx),
+            sw: q.map(|(sw, _)| crate::fixedpoint::Format::FixedPoint(sw)),
+            sx: q.map(|(_, sx)| crate::fixedpoint::Format::FixedPoint(sx)),
         }
     }
 
@@ -303,7 +307,7 @@ mod tests {
     fn mlp_chain_stays_in_codes() {
         let q = Some((sch(8, -6), sch(8, -4)));
         let ops = vec![lin("fc0", 4, 8, q), InferOp::Relu, lin("fc1", 8, 3, q)];
-        let low = lower("t", ops).unwrap();
+        let low = lower("t", ops, None).unwrap();
         let plan = build_plan(&low.ops);
         assert_eq!(plan.steps.len(), 2);
         match &plan.steps[0] {
@@ -331,7 +335,7 @@ mod tests {
             InferOp::AddPopRelu,
             lin("fc1", 4, 3, q),
         ];
-        let low = lower("t", ops).unwrap();
+        let low = lower("t", ops, None).unwrap();
         let plan = build_plan(&low.ops);
         // fcin | push | fc0+add+relu | fc1
         assert_eq!(plan.steps.len(), 4);
@@ -365,8 +369,8 @@ mod tests {
             in_w: w,
             w: Tensor::zeros(&[g.out_c, g.in_c * g.kh * g.kw]),
             b: vec![0.0; g.out_c],
-            sw: q.map(|(sw, _)| sw),
-            sx: q.map(|(_, sx)| sx),
+            sw: q.map(|(sw, _)| crate::fixedpoint::Format::FixedPoint(sw)),
+            sx: q.map(|(_, sx)| crate::fixedpoint::Format::FixedPoint(sx)),
         };
         let ops = vec![
             conv("c0", g, 8, 8),
@@ -374,7 +378,7 @@ mod tests {
             InferOp::MaxPool { c: 2, h: 8, w: 8 },
             conv("c1", g2, 4, 4),
         ];
-        let low = lower("t", ops).unwrap();
+        let low = lower("t", ops, None).unwrap();
         let plan = build_plan(&low.ops);
         assert_eq!(plan.steps.len(), 3);
         assert!(matches!(
@@ -390,7 +394,7 @@ mod tests {
     fn tiles_patch_into_matching_steps() {
         let q = Some((sch(8, -6), sch(8, -4)));
         let ops = vec![lin("fc0", 4, 8, q)];
-        let low = lower("t", ops).unwrap();
+        let low = lower("t", ops, None).unwrap();
         let mut plan = build_plan(&low.ops);
         let key = step_shape(&low.ops, &plan.steps[0]).unwrap();
         assert_eq!(key, ShapeKey { kind: GemmKind::I8, m: TUNE_BATCH, k: 4, n: 8 });

@@ -10,7 +10,7 @@
 //! the original serving tier is gone from both execution strategies.
 
 use crate::fixedpoint::conv::{im2col, im2col_bt_quant_i16, im2col_bt_quant_i8};
-use crate::fixedpoint::quantize;
+use crate::fixedpoint::{quantize, unpack_nibbles};
 use crate::kernels::Engine;
 use crate::tensor::Tensor;
 
@@ -109,7 +109,7 @@ pub(crate) fn exec_linear(l: &ExecLinear, x: &Tensor, eng: &Engine) -> Tensor {
         }
         LinKind::Fq { wq, sx } => {
             let mut xq = x.clone();
-            eng.fake_quant_stats(&mut xq.data, *sx);
+            eng.fake_quant_fmt(&mut xq.data, *sx);
             let mut y = xq.matmul_with(wq, eng);
             y.add_row_bias(&l.b);
             y
@@ -119,6 +119,21 @@ pub(crate) fn exec_linear(l: &ExecLinear, x: &Tensor, eng: &Engine) -> Tensor {
             eng.codes_i8(&x.data, &mut ca, *sx);
             let mut acc = vec![0i32; m * l.dout];
             eng.gemm_i8_prepacked(m, l.din, l.dout, &ca, bt, colsum, &mut acc);
+            let mut y = Tensor::zeros(&[m, l.dout]);
+            eng.rescale_i32(&acc, sw.resolution() * sx.resolution(), &mut y.data);
+            y.add_row_bias(&l.b);
+            y
+        }
+        LinKind::I4 { packed, colsum, sw, sx } => {
+            // Weight-only int4: unpack the nibble-packed BT codes into an
+            // i8 scratch and run the ordinary prepacked int8 GEMM — the
+            // codes are identical to what an i8 BT pack at `sw` would hold.
+            let mut bt = vec![0i8; l.din * l.dout];
+            unpack_nibbles(packed, &mut bt);
+            let mut ca = vec![0i8; x.len()];
+            eng.codes_i8(&x.data, &mut ca, *sx);
+            let mut acc = vec![0i32; m * l.dout];
+            eng.gemm_i8_prepacked(m, l.din, l.dout, &ca, &bt, colsum, &mut acc);
             let mut y = Tensor::zeros(&[m, l.dout]);
             eng.rescale_i32(&acc, sw.resolution() * sx.resolution(), &mut y.data);
             y.add_row_bias(&l.b);
@@ -151,11 +166,21 @@ pub(crate) fn exec_conv(cv: &ExecConv, x: &Tensor, eng: &Engine) -> Tensor {
     // feed the prepacked GEMM entry points — no per-call `pack_bt_*`.
     let mut patch = Vec::new();
     let (mut btp8, mut btp16, mut colsum, mut acc) = (Vec::new(), Vec::new(), Vec::new(), Vec::new());
+    let mut cw8 = Vec::new();
     match &cv.kind {
         ConvKind::I8 { .. } => {
             btp8 = vec![0i8; rows * cols];
             colsum = vec![0i32; cols];
             acc = vec![0i32; g.out_c * cols];
+        }
+        ConvKind::I4 { packed, .. } => {
+            btp8 = vec![0i8; rows * cols];
+            colsum = vec![0i32; cols];
+            acc = vec![0i32; g.out_c * cols];
+            // Unpack the nibble-packed weight codes once per forward —
+            // loop-invariant across images.
+            cw8 = vec![0i8; g.out_c * rows];
+            unpack_nibbles(packed, &mut cw8);
         }
         ConvKind::I16 { .. } => {
             btp16 = vec![0i16; rows * cols];
@@ -173,12 +198,17 @@ pub(crate) fn exec_conv(cv: &ExecConv, x: &Tensor, eng: &Engine) -> Tensor {
             }
             ConvKind::Fq { wq, sx } => {
                 im2col(g, h, w, xi, &mut patch);
-                eng.fake_quant_stats(&mut patch, *sx);
+                eng.fake_quant_fmt(&mut patch, *sx);
                 eng.gemm_f32(g.out_c, rows, cols, wq, &patch, co);
             }
             ConvKind::I8 { cw, sw, sx } => {
                 im2col_bt_quant_i8(g, h, w, xi, *sx, &mut btp8, &mut colsum);
                 eng.gemm_i8_prepacked(g.out_c, rows, cols, cw, &btp8, &colsum, &mut acc);
+                eng.rescale_i32(&acc, sw.resolution() * sx.resolution(), co);
+            }
+            ConvKind::I4 { sw, sx, .. } => {
+                im2col_bt_quant_i8(g, h, w, xi, *sx, &mut btp8, &mut colsum);
+                eng.gemm_i8_prepacked(g.out_c, rows, cols, &cw8, &btp8, &colsum, &mut acc);
                 eng.rescale_i32(&acc, sw.resolution() * sx.resolution(), co);
             }
             ConvKind::I16 { cw, sw, sx } => {
@@ -204,9 +234,9 @@ pub(crate) fn exec_depthwise(dw: &ExecDw, x: &Tensor) -> Tensor {
     let (oh, ow) = ((h + 2 - 3) / stride + 1, (w + 2 - 3) / stride + 1);
     let xq = match dw.sx {
         None => x.clone(),
-        Some(sx) => {
+        Some(fx) => {
             let mut xq = x.clone();
-            quantize::fake_quant_stats_inplace(&mut xq.data, sx);
+            quantize::fake_quant_stats_inplace_fmt(&mut xq.data, fx);
             xq
         }
     };

@@ -3,24 +3,36 @@
 //! Two levels, one lowering:
 //!
 //! - [`InferOp`] — the *export* IR: what `nn::Layer::export_infer` emits.
-//!   Weights are still f32 tensors; schemes are attached but not applied.
+//!   Weights are still f32 tensors; formats are attached but not applied.
 //! - [`ExecOp`] — the *executable* IR: weights pre-quantized once (int8
 //!   codes in the transposed BT/VNNI layout with column sums, int16 BT
-//!   codes, or pre-fake-quantized f32), batch-norm already folded by the
-//!   exporter. Both the unfused interpreter ([`super::interp`]) and the
-//!   fusing plan compiler ([`super::fuse`]) consume this one definition —
-//!   there is exactly one `InferOp → ExecOp` lowering, [`lower`], shared
-//!   by every execution strategy.
+//!   codes, nibble-packed int4 codes, or pre-fake-quantized f32),
+//!   batch-norm already folded by the exporter. Both the unfused
+//!   interpreter ([`super::interp`]) and the fusing plan compiler
+//!   ([`super::fuse`]) consume this one definition — there is exactly one
+//!   `InferOp → ExecOp` lowering, [`lower`], shared by every execution
+//!   strategy.
 //!
 //! Lowering also validates the value-stack discipline (`Push` / `Swap` /
 //! `AddPopRelu` / `ConcatPop`): a malformed op list — hand-built, or from a
 //! future exporter bug — fails here with the op index named instead of
 //! panicking inside a serve worker mid-batch.
+//!
+//! **Format dispatch.** The frozen formats are [`Format`]s, not bare
+//! schemes. Any format with a fixed-point view (`as_scheme`) takes the
+//! integer GEMM paths exactly as before — an 8-bit fixed format lowers to
+//! the same `I8` kind byte-for-byte it always did. Minifloat formats have
+//! no integer codes, so they lower to the fake-quant (`Fq`) kinds: weights
+//! pre-fake-quantized through the codec once, activations fake-quantized
+//! per forward, f32 GEMM. A freeze-time `weight_format` override
+//! re-quantizes *weights only* into another family — `int4` nibble-packs
+//! them two codes per byte (halving weight bytes vs int8) while
+//! activations stay on their trained 8-bit scheme.
 
 use anyhow::{anyhow, Result};
 
 use crate::fixedpoint::conv::Conv2dGeom;
-use crate::fixedpoint::{gemm_simd, quantize, Scheme};
+use crate::fixedpoint::{gemm_simd, pack_nibbles, quantize, Format, FormatFamily, Scheme};
 use crate::tensor::Tensor;
 
 /// One forward-only primitive exported by an `nn` layer for serving
@@ -28,7 +40,7 @@ use crate::tensor::Tensor;
 /// small value-stack ops ([`InferOp::Push`] / [`InferOp::Swap`] /
 /// [`InferOp::AddPopRelu`] / [`InferOp::ConcatPop`]).
 pub enum InferOp {
-    /// Fully-connected `y = x̂·Ŵ + b`; schemes are present iff the layer
+    /// Fully-connected `y = x̂·Ŵ + b`; formats are present iff the layer
     /// trained quantized.
     Linear {
         /// Layer name (diagnostics only).
@@ -37,10 +49,10 @@ pub enum InferOp {
         w: Tensor,
         /// Bias, length `dout`.
         b: Vec<f32>,
-        /// Frozen weight scheme (from the layer's W controller).
-        sw: Option<Scheme>,
-        /// Frozen activation scheme (from the layer's X controller).
-        sx: Option<Scheme>,
+        /// Frozen weight format (from the layer's W controller).
+        sw: Option<Format>,
+        /// Frozen activation format (from the layer's X controller).
+        sx: Option<Format>,
     },
     /// im2col convolution with the training-time geometry.
     Conv {
@@ -56,10 +68,10 @@ pub enum InferOp {
         w: Tensor,
         /// Per-output-channel bias.
         b: Vec<f32>,
-        /// Frozen weight scheme.
-        sw: Option<Scheme>,
-        /// Frozen activation (patch) scheme.
-        sx: Option<Scheme>,
+        /// Frozen weight format.
+        sw: Option<Format>,
+        /// Frozen activation (patch) format.
+        sx: Option<Format>,
     },
     /// Depthwise 3×3 convolution (scalar kernel; quantization applies as
     /// fake-quant, matching training).
@@ -76,10 +88,10 @@ pub enum InferOp {
         stride: usize,
         /// Per-channel 3×3 kernels, `c × 9`.
         w: Tensor,
-        /// Frozen weight scheme.
-        sw: Option<Scheme>,
-        /// Frozen activation scheme.
-        sx: Option<Scheme>,
+        /// Frozen weight format.
+        sw: Option<Format>,
+        /// Frozen activation format.
+        sx: Option<Format>,
     },
     /// Elementwise `max(0, x)`.
     Relu,
@@ -149,8 +161,14 @@ pub(crate) enum LinKind {
     I8 { bt: Vec<i8>, colsum: Vec<i32>, sw: Scheme, sx: Scheme },
     /// int16 codes, pre-packed transposed.
     I16 { bt: Vec<i16>, sw: Scheme, sx: Scheme },
-    /// Wider-than-16-bit scheme: pre-fake-quantized f32 weights, f32 GEMM.
-    Fq { wq: Tensor, sx: Scheme },
+    /// Weight-only int4: BT-layout 4-bit codes nibble-packed two per byte
+    /// (half the bytes of `I8`), unpacked to an i8 scratch at execution
+    /// and fed to the same prepacked int8 GEMM. Activations stay int8.
+    I4 { packed: Vec<u8>, colsum: Vec<i32>, sw: Scheme, sx: Scheme },
+    /// No integer kernel for the format pair (minifloat, or wider than 16
+    /// bits): pre-fake-quantized f32 weights, fake-quant activations, f32
+    /// GEMM.
+    Fq { wq: Tensor, sx: Format },
 }
 
 pub(crate) struct ExecLinear {
@@ -169,7 +187,10 @@ pub(crate) enum ConvKind {
     F32 { w: Vec<f32> },
     I8 { cw: Vec<i8>, sw: Scheme, sx: Scheme },
     I16 { cw: Vec<i16>, sw: Scheme, sx: Scheme },
-    Fq { wq: Vec<f32>, sx: Scheme },
+    /// Weight-only int4: row-major 4-bit codes nibble-packed; unpacked
+    /// once per forward into an i8 scratch for the int8 conv GEMM.
+    I4 { packed: Vec<u8>, sw: Scheme, sx: Scheme },
+    Fq { wq: Vec<f32>, sx: Format },
 }
 
 pub(crate) struct ExecConv {
@@ -189,7 +210,7 @@ pub(crate) struct ExecDw {
     pub(crate) stride: usize,
     /// Pre-fake-quantized (or plain f32) kernels, `c × 9`.
     pub(crate) wq: Vec<f32>,
-    pub(crate) sx: Option<Scheme>,
+    pub(crate) sx: Option<Format>,
 }
 
 /// Executable op: [`InferOp`] with weights pre-quantized/pre-packed once.
@@ -216,7 +237,12 @@ impl ExecOp {
                     LinKind::F32 { .. } => "f32",
                     LinKind::I8 { .. } => "i8",
                     LinKind::I16 { .. } => "i16",
-                    LinKind::Fq { .. } => "fq",
+                    LinKind::I4 { .. } => "i4w",
+                    LinKind::Fq { sx, .. } => match sx.family() {
+                        FormatFamily::E4M3 => "e4m3",
+                        FormatFamily::E5M2 => "e5m2",
+                        _ => "fq",
+                    },
                 };
                 format!("linear {} {k} [{}x{}]", l.name, l.din, l.dout)
             }
@@ -225,7 +251,12 @@ impl ExecOp {
                     ConvKind::F32 { .. } => "f32",
                     ConvKind::I8 { .. } => "i8",
                     ConvKind::I16 { .. } => "i16",
-                    ConvKind::Fq { .. } => "fq",
+                    ConvKind::I4 { .. } => "i4w",
+                    ConvKind::Fq { sx, .. } => match sx.family() {
+                        FormatFamily::E4M3 => "e4m3",
+                        FormatFamily::E5M2 => "e5m2",
+                        _ => "fq",
+                    },
                 };
                 let g = cv.geom;
                 format!("conv {} {k} [{}x{}x{}x{}]", cv.name, g.out_c, g.in_c, g.kh, g.kw)
@@ -248,17 +279,65 @@ impl ExecOp {
 pub(crate) struct Lowered {
     /// Flattened per-sample input width (from the first GEMM-ish op).
     pub(crate) din: usize,
-    /// `"f32"` / `"int8"` / `"int16"` — widest frozen scheme wins.
+    /// `"f32"` / `"int8"` / `"int16"` / a format-family label (`"e4m3"`,
+    /// `"int4w"` for the weight-only override) — widest frozen format wins.
     pub(crate) precision: String,
     pub(crate) ops: Vec<ExecOp>,
+}
+
+/// Bytes of pre-packed weight payload across the executable program (codes
+/// or f32 values; per-column sums and biases excluded). This is the number
+/// the int4 weight-only path halves vs int8 — surfaced in the compile
+/// report.
+pub(crate) fn weight_bytes(ops: &[ExecOp]) -> usize {
+    ops.iter()
+        .map(|op| match op {
+            ExecOp::Linear(l) => match &l.kind {
+                LinKind::F32 { w } => 4 * w.len(),
+                LinKind::Fq { wq, .. } => 4 * wq.len(),
+                LinKind::I8 { bt, .. } => bt.len(),
+                LinKind::I16 { bt, .. } => 2 * bt.len(),
+                LinKind::I4 { packed, .. } => packed.len(),
+            },
+            ExecOp::Conv(cv) => match &cv.kind {
+                ConvKind::F32 { w } => 4 * w.len(),
+                ConvKind::Fq { wq, .. } => 4 * wq.len(),
+                ConvKind::I8 { cw, .. } => cw.len(),
+                ConvKind::I16 { cw, .. } => 2 * cw.len(),
+                ConvKind::I4 { packed, .. } => packed.len(),
+            },
+            ExecOp::Depthwise(dw) => 4 * dw.wq.len(),
+            _ => 0,
+        })
+        .sum()
+}
+
+/// Apply the freeze-time weight-format override: re-derive the weight
+/// format in the requested family from the frozen weights' own range.
+/// `FixedPoint` (or no override) keeps the trained format — the layer's
+/// controller already chose it.
+fn effective_weight_format(fw: Format, w: &[f32], over: Option<FormatFamily>) -> Format {
+    match over {
+        None | Some(FormatFamily::FixedPoint) => fw,
+        Some(fam) => {
+            let z = w.iter().fold(0.0f32, |m, v| m.max(v.abs()));
+            Format::for_range(fam, z, fw.storage_bits().max(4))
+        }
+    }
 }
 
 /// Lower the export IR into executable ops: validate the value-stack
 /// discipline, infer the input width, pre-quantize/pre-pack every weight
 /// exactly once, and derive the serving precision label. The single
 /// `InferOp → ExecOp` definition shared by the unfused interpreter and the
-/// fusing compiler.
-pub(crate) fn lower(label: &str, ops: Vec<InferOp>) -> Result<Lowered> {
+/// fusing compiler. `weight_format` is the freeze-time weight-only
+/// re-quantization override (`CompileOptions::weight_format`); it only
+/// applies to layers that trained quantized.
+pub(crate) fn lower(
+    label: &str,
+    ops: Vec<InferOp>,
+    weight_format: Option<FormatFamily>,
+) -> Result<Lowered> {
     let din = match ops.first() {
         Some(InferOp::Linear { w, .. }) => w.dim(0),
         Some(InferOp::Conv { geom, in_h, in_w, .. }) => geom.in_c * in_h * in_w,
@@ -295,9 +374,20 @@ pub(crate) fn lower(label: &str, ops: Vec<InferOp>) -> Result<Lowered> {
         }
     }
     let mut max_bits: Option<u8> = None;
-    let mut note = |sw: &Option<Scheme>, sx: &Option<Scheme>| {
-        for s in [sw, sx].into_iter().flatten() {
-            max_bits = Some(max_bits.map_or(s.bits, |m| m.max(s.bits)));
+    let mut fams: Vec<FormatFamily> = Vec::new();
+    let mut note = |sw: &Option<Format>, sx: &Option<Format>| {
+        for f in [sw, sx].into_iter().flatten() {
+            match f {
+                Format::FixedPoint(s) => {
+                    max_bits = Some(max_bits.map_or(s.bits, |m| m.max(s.bits)))
+                }
+                _ => {
+                    let fam = f.family();
+                    if !fams.contains(&fam) {
+                        fams.push(fam);
+                    }
+                }
+            }
         }
     };
     let mut exec = Vec::with_capacity(ops.len());
@@ -307,23 +397,36 @@ pub(crate) fn lower(label: &str, ops: Vec<InferOp>) -> Result<Lowered> {
                 note(&sw, &sx);
                 let (din_l, dout) = (w.dim(0), w.dim(1));
                 let kind = match (sw, sx) {
-                    (Some(sw), Some(sx)) if sw.bits <= 8 && sx.bits <= 8 => {
-                        let mut bt = vec![0i8; w.len()];
-                        let mut colsum = vec![0i32; dout];
-                        gemm_simd::codes_i8_bt(din_l, dout, &w.data, sw, &mut bt, &mut colsum);
-                        LinKind::I8 { bt, colsum, sw, sx }
-                    }
-                    (Some(sw), Some(sx)) if sw.bits <= 16 && sx.bits <= 16 => {
-                        let mut cb = vec![0i16; w.len()];
-                        quantize::codes_i16(&w.data, &mut cb, sw);
-                        let mut bt = vec![0i16; w.len()];
-                        gemm_simd::pack_bt_i16(din_l, dout, &cb, &mut bt);
-                        LinKind::I16 { bt, sw, sx }
-                    }
-                    (Some(sw), Some(sx)) => {
-                        let mut wq = w.clone();
-                        quantize::fake_quant_stats_inplace(&mut wq.data, sw);
-                        LinKind::Fq { wq, sx }
+                    (Some(fw), Some(fx)) => {
+                        let fw = effective_weight_format(fw, &w.data, weight_format);
+                        match (fw.as_scheme(), fx.as_scheme()) {
+                            (Some(ws), Some(xs))
+                                if fw.family() == FormatFamily::Int4 && xs.bits <= 8 =>
+                            {
+                                let mut bt = vec![0i8; w.len()];
+                                let mut colsum = vec![0i32; dout];
+                                gemm_simd::codes_i8_bt(din_l, dout, &w.data, ws, &mut bt, &mut colsum);
+                                LinKind::I4 { packed: pack_nibbles(&bt), colsum, sw: ws, sx: xs }
+                            }
+                            (Some(ws), Some(xs)) if ws.bits <= 8 && xs.bits <= 8 => {
+                                let mut bt = vec![0i8; w.len()];
+                                let mut colsum = vec![0i32; dout];
+                                gemm_simd::codes_i8_bt(din_l, dout, &w.data, ws, &mut bt, &mut colsum);
+                                LinKind::I8 { bt, colsum, sw: ws, sx: xs }
+                            }
+                            (Some(ws), Some(xs)) if ws.bits <= 16 && xs.bits <= 16 => {
+                                let mut cb = vec![0i16; w.len()];
+                                quantize::codes_i16(&w.data, &mut cb, ws);
+                                let mut bt = vec![0i16; w.len()];
+                                gemm_simd::pack_bt_i16(din_l, dout, &cb, &mut bt);
+                                LinKind::I16 { bt, sw: ws, sx: xs }
+                            }
+                            _ => {
+                                let mut wq = w.clone();
+                                quantize::fake_quant_stats_inplace_fmt(&mut wq.data, fw);
+                                LinKind::Fq { wq, sx: fx }
+                            }
+                        }
                     }
                     _ => LinKind::F32 { w },
                 };
@@ -332,20 +435,32 @@ pub(crate) fn lower(label: &str, ops: Vec<InferOp>) -> Result<Lowered> {
             InferOp::Conv { name, geom, in_h, in_w, w, b, sw, sx } => {
                 note(&sw, &sx);
                 let kind = match (sw, sx) {
-                    (Some(sw), Some(sx)) if sw.bits <= 8 && sx.bits <= 8 => {
-                        let mut cw = vec![0i8; w.len()];
-                        quantize::codes_i8(&w.data, &mut cw, sw);
-                        ConvKind::I8 { cw, sw, sx }
-                    }
-                    (Some(sw), Some(sx)) if sw.bits <= 16 && sx.bits <= 16 => {
-                        let mut cw = vec![0i16; w.len()];
-                        quantize::codes_i16(&w.data, &mut cw, sw);
-                        ConvKind::I16 { cw, sw, sx }
-                    }
-                    (Some(sw), Some(sx)) => {
-                        let mut wq = w.data.clone();
-                        quantize::fake_quant_stats_inplace(&mut wq, sw);
-                        ConvKind::Fq { wq, sx }
+                    (Some(fw), Some(fx)) => {
+                        let fw = effective_weight_format(fw, &w.data, weight_format);
+                        match (fw.as_scheme(), fx.as_scheme()) {
+                            (Some(ws), Some(xs))
+                                if fw.family() == FormatFamily::Int4 && xs.bits <= 8 =>
+                            {
+                                let mut cw = vec![0i8; w.len()];
+                                quantize::codes_i8(&w.data, &mut cw, ws);
+                                ConvKind::I4 { packed: pack_nibbles(&cw), sw: ws, sx: xs }
+                            }
+                            (Some(ws), Some(xs)) if ws.bits <= 8 && xs.bits <= 8 => {
+                                let mut cw = vec![0i8; w.len()];
+                                quantize::codes_i8(&w.data, &mut cw, ws);
+                                ConvKind::I8 { cw, sw: ws, sx: xs }
+                            }
+                            (Some(ws), Some(xs)) if ws.bits <= 16 && xs.bits <= 16 => {
+                                let mut cw = vec![0i16; w.len()];
+                                quantize::codes_i16(&w.data, &mut cw, ws);
+                                ConvKind::I16 { cw, sw: ws, sx: xs }
+                            }
+                            _ => {
+                                let mut wq = w.data.clone();
+                                quantize::fake_quant_stats_inplace_fmt(&mut wq, fw);
+                                ConvKind::Fq { wq, sx: fx }
+                            }
+                        }
                     }
                     _ => ConvKind::F32 { w: w.data },
                 };
@@ -354,8 +469,9 @@ pub(crate) fn lower(label: &str, ops: Vec<InferOp>) -> Result<Lowered> {
             InferOp::Depthwise { name, c, in_h, in_w, stride, w, sw, sx } => {
                 note(&sw, &sx);
                 let mut wq = w.data;
-                if let Some(sw) = sw {
-                    quantize::fake_quant_stats_inplace(&mut wq, sw);
+                if let Some(fw) = sw {
+                    let fw = effective_weight_format(fw, &wq, weight_format);
+                    quantize::fake_quant_stats_inplace_fmt(&mut wq, fw);
                 }
                 ExecOp::Depthwise(ExecDw { name, c, in_h, in_w, stride, wq, sx })
             }
@@ -371,11 +487,21 @@ pub(crate) fn lower(label: &str, ops: Vec<InferOp>) -> Result<Lowered> {
             InferOp::ConcatPop { c_pop, c_cur, hw } => ExecOp::ConcatPop { c_pop, c_cur, hw },
         });
     }
-    let precision = match max_bits {
-        None => "f32".to_string(),
-        Some(b) if b <= 8 => "int8".to_string(),
-        Some(b) if b <= 16 => "int16".to_string(),
-        Some(b) => format!("int{b}"),
+    let precision = if let Some(fam) = weight_format.filter(|f| *f != FormatFamily::FixedPoint) {
+        // Weight-only override: label it distinctly (`int4w` = int4
+        // weights over the trained activation formats).
+        format!("{}w", fam.label())
+    } else if fams.len() == 1 {
+        fams[0].label().to_string()
+    } else if fams.len() > 1 {
+        "mixed".to_string()
+    } else {
+        match max_bits {
+            None => "f32".to_string(),
+            Some(b) if b <= 8 => "int8".to_string(),
+            Some(b) if b <= 16 => "int16".to_string(),
+            Some(b) => format!("int{b}"),
+        }
     };
     Ok(Lowered { din, precision, ops: exec })
 }

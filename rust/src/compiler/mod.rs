@@ -48,11 +48,17 @@ pub struct CompileOptions {
     /// Search tiles for shapes missing from the plan cache (costs a few
     /// milliseconds per novel shape at load time).
     pub tune: bool,
+    /// Freeze-time weight-only re-quantization: re-derive every quantized
+    /// layer's *weight* format in this family from the frozen weights'
+    /// range (`int4` nibble-packs them, halving weight bytes vs int8;
+    /// activations keep their trained formats). `None` / `FixedPoint`
+    /// keeps the trained weight formats.
+    pub weight_format: Option<crate::fixedpoint::FormatFamily>,
 }
 
 impl Default for CompileOptions {
     fn default() -> Self {
-        CompileOptions { fuse: true, tune: false }
+        CompileOptions { fuse: true, tune: false, weight_format: None }
     }
 }
 
@@ -62,10 +68,14 @@ impl Default for CompileOptions {
 pub struct CompileReport {
     /// Model label the plan was compiled for.
     pub label: String,
-    /// Serving precision (`"f32"` / `"int8"` / `"int16"`).
+    /// Serving precision (`"f32"` / `"int8"` / `"int16"` / a format-family
+    /// label such as `"e4m3"`, or `"int4w"` for weight-only int4).
     pub precision: String,
     /// Ops in the lowered program.
     pub ops: usize,
+    /// Bytes of pre-packed weight payload (codes / f32 values) across the
+    /// program — the number weight-only int4 halves vs int8.
+    pub weight_bytes: usize,
     /// Steps in the executable plan (equals `ops` when fusion is off).
     pub steps: usize,
     /// Whether a fused plan was built.
@@ -84,13 +94,14 @@ impl std::fmt::Display for CompileReport {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
         writeln!(
             f,
-            "compiled {} ({}): {} ops -> {} steps{}, {} code edge(s), tiles: {} cached / {} tuned",
+            "compiled {} ({}): {} ops -> {} steps{}, {} code edge(s), {} weight bytes, tiles: {} cached / {} tuned",
             self.label,
             self.precision,
             self.ops,
             self.steps,
             if self.fused { "" } else { " (fusion off)" },
             self.code_edges,
+            self.weight_bytes,
             self.tiles_cached,
             self.tiles_tuned,
         )?;
@@ -150,12 +161,13 @@ pub(crate) fn compile(
     cache: &[TuneEntry],
     eng: &Engine,
 ) -> Result<Compiled> {
-    let lowered = ir::lower(label, infer_ops)?;
+    let lowered = ir::lower(label, infer_ops, opts.weight_format)?;
     let mut report = CompileReport {
         label: label.to_string(),
         precision: lowered.precision.clone(),
         ops: lowered.ops.len(),
         steps: lowered.ops.len(),
+        weight_bytes: ir::weight_bytes(&lowered.ops),
         fused: opts.fuse,
         ..CompileReport::default()
     };
@@ -181,10 +193,15 @@ pub(crate) fn compile(
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::fixedpoint::Scheme;
+    use crate::fixedpoint::{Format, FormatFamily, Scheme};
 
     fn mlp_ops() -> Vec<InferOp> {
-        let q = |s| (Scheme { bits: 8, s }, Scheme { bits: 8, s: s + 1 });
+        let q = |s| {
+            (
+                Format::FixedPoint(Scheme { bits: 8, s }),
+                Format::FixedPoint(Scheme { bits: 8, s: s + 1 }),
+            )
+        };
         let lin = |name: &str, din: usize, dout: usize, s: i32| InferOp::Linear {
             name: name.to_string(),
             w: Tensor::zeros(&[din, dout]),
@@ -206,13 +223,27 @@ mod tests {
         assert_eq!(fused.report.code_edges, 1);
         assert!(fused.plan.is_some());
 
-        let opts = CompileOptions { fuse: false, tune: false };
+        let opts = CompileOptions { fuse: false, ..CompileOptions::default() };
         let unfused = compile("m", mlp_ops(), &opts, &[], &eng).unwrap();
         assert!(unfused.plan.is_none());
         assert_eq!(unfused.report.steps, 3);
         assert_eq!(unfused.report.lines.len(), 3);
         let txt = format!("{}", unfused.report);
         assert!(txt.contains("fusion off"));
+    }
+
+    #[test]
+    fn int4_weight_only_halves_weight_bytes() {
+        let eng = Engine::serial();
+        let i8c = compile("m", mlp_ops(), &CompileOptions::default(), &[], &eng).unwrap();
+        let opts =
+            CompileOptions { weight_format: Some(FormatFamily::Int4), ..CompileOptions::default() };
+        let i4c = compile("m", mlp_ops(), &opts, &[], &eng).unwrap();
+        assert_eq!(i4c.precision, "int4w");
+        assert_eq!(i4c.report.weight_bytes * 2, i8c.report.weight_bytes);
+        // Codes still flow between the two linears: the i4 kind consumes
+        // i8 activation codes exactly like the i8 kind.
+        assert_eq!(i4c.report.code_edges, 1);
     }
 
     #[test]
@@ -230,7 +261,7 @@ mod tests {
     #[test]
     fn tune_search_records_entries_for_every_gemm_shape() {
         let eng = Engine::serial();
-        let opts = CompileOptions { fuse: true, tune: true };
+        let opts = CompileOptions { tune: true, ..CompileOptions::default() };
         let c = compile("m", mlp_ops(), &opts, &[], &eng).unwrap();
         assert_eq!(c.tuned().len(), 2);
         assert_eq!(c.report.tiles_tuned, 2);

@@ -4,9 +4,32 @@
 //! [`crate::train::TrainRecord::tail_loss`]; what remains here is
 //! presentation: bit-mix strings and adaptive-config shorthands.
 
+use std::collections::BTreeMap;
+
 use crate::apt::{AptConfig, Ledger};
 use crate::fixedpoint::TensorKind;
 use crate::nn::QuantMode;
+
+/// Render a format-label mix (`int16  37.5% | e4m3  62.5%`) in a stable
+/// order: fixed-point widths ascending, then the fixed-width families
+/// alphabetically. Used by the mix strings once a ledger contains
+/// non-fixed-point tensors — the historical three-column layout has no
+/// bucket those labels fit in.
+fn format_mix_line(mix: &BTreeMap<String, f64>) -> String {
+    let sort_key = |label: &str| -> (u8, u32) {
+        match label.strip_prefix("int").and_then(|n| n.parse::<u32>().ok()) {
+            Some(n) => (0, n),
+            None => (1, 0),
+        }
+    };
+    let mut entries: Vec<(&String, f64)> = mix.iter().map(|(l, &w)| (l, w)).collect();
+    entries.sort_by(|a, b| sort_key(a.0).cmp(&sort_key(b.0)).then(a.0.cmp(b.0)));
+    entries
+        .iter()
+        .map(|(l, w)| format!("{l} {:5.1}%", w * 100.0))
+        .collect::<Vec<_>>()
+        .join(" | ")
+}
 
 /// Format a ledger's gradient bit mix like the paper's Table 1 columns.
 ///
@@ -16,10 +39,18 @@ use crate::nn::QuantMode;
 /// decisions under `stash:*` keys (DESIGN.md §Activation-Memory); both are
 /// reported separately by the CLI — including either here would skew the
 /// Table-1-style number.
+///
+/// Fixed-point-only ledgers keep the pinned historical
+/// `int8 | int16 | int24` layout; once any gradient controller runs a
+/// minifloat/int4 family the string switches to format labels (a minifloat
+/// tensor's `bits` are its storage width, so bucketing it as `int8` would
+/// misreport the format).
 pub fn grad_mix_string(ledger: &Ledger) -> String {
-    let mix = ledger.timewise_bits_mix_where(TensorKind::Gradient, |name| {
-        !name.starts_with("comm:") && !name.starts_with("stash:")
-    });
+    let keep = |name: &str| !name.starts_with("comm:") && !name.starts_with("stash:");
+    if ledger.has_non_fixed_formats_where(TensorKind::Gradient, keep) {
+        return format_mix_line(&ledger.timewise_format_mix_where(TensorKind::Gradient, keep));
+    }
+    let mix = ledger.timewise_bits_mix_where(TensorKind::Gradient, keep);
     let pct = |b: u8| mix.get(&b).copied().unwrap_or(0.0) * 100.0;
     format!(
         "int8 {:5.1}% | int16 {:5.1}% | int24 {:5.1}%",
@@ -34,10 +65,15 @@ pub fn grad_mix_string(ledger: &Ledger) -> String {
 /// `comm:*` records so each subsystem's Table-1-style number stays pure.
 /// Buckets follow the stash's payload encodings: ≤8 bits are int8 codes,
 /// 9–16 are int16 codes, wider widths mean exact f32 fallback storage —
-/// so the three columns always sum to 100%.
+/// so the three columns always sum to 100%. As with
+/// [`grad_mix_string`], a ledger holding non-fixed-point stash tensors
+/// switches to exact format labels instead of the width buckets.
 pub fn stash_mix_string(ledger: &Ledger) -> String {
-    let mix = ledger
-        .timewise_bits_mix_where(TensorKind::Activation, |name| name.starts_with("stash:"));
+    let keep = |name: &str| name.starts_with("stash:");
+    if ledger.has_non_fixed_formats_where(TensorKind::Activation, keep) {
+        return format_mix_line(&ledger.timewise_format_mix_where(TensorKind::Activation, keep));
+    }
+    let mix = ledger.timewise_bits_mix_where(TensorKind::Activation, keep);
     let bucket = |lo: u8, hi: u8| -> f64 {
         mix.iter()
             .filter(|(&b, _)| b >= lo && b <= hi)
@@ -125,6 +161,45 @@ mod tests {
         );
         let s = stash_mix_string(&l);
         assert!(s.contains("f32 100.0%"), "{s}");
+    }
+
+    #[test]
+    fn mix_strings_switch_to_format_labels_for_non_fixed_families() {
+        use crate::fixedpoint::FormatFamily;
+        let mut l = Ledger::new();
+        l.set_total_iters(100);
+        // one e4m3 gradient controller alongside a fixed-point one: the
+        // historical int8/int16/int24 buckets cannot express the mix, so
+        // the string must switch to exact labels — and an 8-bit-wide e4m3
+        // tensor must NOT be misfiled under "int8".
+        l.record_event_fmt(
+            "conv0",
+            TensorKind::Gradient,
+            Event { iter: 0, bits: 8, interval: 1, error: 0.0 },
+            FormatFamily::E4M3,
+        );
+        l.record_event(
+            "fc0",
+            TensorKind::Gradient,
+            Event { iter: 0, bits: 16, interval: 1, error: 0.0 },
+        );
+        let g = grad_mix_string(&l);
+        assert!(g.contains("e4m3  50.0%"), "{g}");
+        assert!(g.contains("int16  50.0%"), "{g}");
+        assert!(!g.contains("int8"), "8-wide e4m3 misfiled as int8: {g}");
+        // fixed-point widths sort ahead of the minifloat families
+        assert!(g.find("int16").unwrap() < g.find("e4m3").unwrap(), "{g}");
+
+        // same switch for the stash buckets
+        l.record_event_fmt(
+            "stash:conv0/patches",
+            TensorKind::Activation,
+            Event { iter: 0, bits: 8, interval: 1, error: 0.0 },
+            FormatFamily::E5M2,
+        );
+        let s = stash_mix_string(&l);
+        assert!(s.contains("e5m2 100.0%"), "{s}");
+        assert!(!s.contains("f32"), "{s}");
     }
 
     #[test]

@@ -1,0 +1,541 @@
+//! Format family: the generalization of [`Scheme`] from "how many
+//! fixed-point bits" to "which number format" (DESIGN.md §Formats).
+//!
+//! The paper's controllers adapt a symmetric fixed-point width; AdaPT
+//! (arXiv 2107.13490) and the OCP FP8 formats argue the range-vs-precision
+//! tradeoff is really a choice of format *family*. This module adds:
+//!
+//! - [`MinifloatKind`]: the two OCP 8-bit minifloats (E4M3, E5M2) with a
+//!   saturating, NaN/Inf-safe codec (reserved NaN/Inf patterns are never
+//!   emitted; `encode(NaN) = 0`, out-of-range magnitudes clamp to the
+//!   largest finite value).
+//! - [`Format`]: fixed-point (the existing [`Scheme`]), scaled minifloat
+//!   (`2^s · fp8`), and int4 (a 4-bit fixed-point scheme with nibble-packed
+//!   storage, weight-only in serving).
+//! - [`QuantAxis`]: per-tensor vs per-channel scale selection for conv/fc
+//!   weights.
+//! - [`pack_nibbles`]/[`unpack_nibbles`]: two int4 codes per byte for the
+//!   weight-only GEMM hot path.
+//!
+//! Fixed-point stays the default family everywhere; a config that never
+//! mentions a minifloat or int4 format takes exactly the code paths it took
+//! before this module existed (bit-identity pinned by `test_formats.rs`).
+
+use super::scheme::Scheme;
+
+/// The two OCP 8-bit minifloat formats.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum MinifloatKind {
+    /// 1 sign + 4 exponent + 3 mantissa, bias 7, max finite 448.
+    E4M3,
+    /// 1 sign + 5 exponent + 2 mantissa, bias 15, max finite 57344.
+    E5M2,
+}
+
+impl MinifloatKind {
+    /// (exponent bits, mantissa bits, bias).
+    #[inline]
+    pub fn spec(&self) -> (u32, u32, i32) {
+        match self {
+            MinifloatKind::E4M3 => (4, 3, 7),
+            MinifloatKind::E5M2 => (5, 2, 15),
+        }
+    }
+
+    /// Largest finite representable magnitude (OCP: 448 / 57344).
+    #[inline]
+    pub fn max_normal(&self) -> f32 {
+        match self {
+            MinifloatKind::E4M3 => 448.0,
+            MinifloatKind::E5M2 => 57344.0,
+        }
+    }
+
+    /// Code of the largest finite magnitude (sign bit clear).
+    #[inline]
+    pub fn max_code(&self) -> u8 {
+        match self {
+            MinifloatKind::E4M3 => (15 << 3) | 6, // 2^8 · 1.75 = 448
+            MinifloatKind::E5M2 => (30 << 2) | 3, // 2^15 · 1.75 = 57344
+        }
+    }
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            MinifloatKind::E4M3 => "e4m3",
+            MinifloatKind::E5M2 => "e5m2",
+        }
+    }
+
+    /// The format family this kind belongs to.
+    pub fn family(&self) -> FormatFamily {
+        match self {
+            MinifloatKind::E4M3 => FormatFamily::E4M3,
+            MinifloatKind::E5M2 => FormatFamily::E5M2,
+        }
+    }
+
+    /// Encode a value to its 8-bit pattern: saturating (no Inf codes),
+    /// NaN → +0, round-ties-even in the mantissa, subnormals supported.
+    pub fn encode(&self, x: f32) -> u8 {
+        if x.is_nan() {
+            return 0;
+        }
+        let (ebits, mbits, bias) = self.spec();
+        let sign = if x.is_sign_negative() { 1u8 << (ebits + mbits) } else { 0 };
+        let a = x.abs();
+        if !a.is_finite() {
+            return sign | self.max_code();
+        }
+        if a == 0.0 {
+            return 0;
+        }
+        let min_exp = 1 - bias; // exponent of the smallest normal
+        // floor(log2(a)) from the f32 exponent field (f32 subnormals map
+        // below min_exp and clamp, which is what the codec wants).
+        let e_f32 = ((a.to_bits() >> 23) & 0xff) as i32 - 127;
+        let mut e = e_f32.max(min_exp);
+        let quantum = ((e - mbits as i32) as f32).exp2();
+        let mut m = (a / quantum).round_ties_even() as u32;
+        if m >= 1 << (mbits + 1) {
+            // mantissa carry: 1.111..1 rounded up to 10.00..0
+            e += 1;
+            m = 1 << mbits;
+        }
+        // overflow past the largest finite value saturates
+        let val = m as f32 * ((e - mbits as i32) as f32).exp2();
+        if val > self.max_normal() {
+            return sign | self.max_code();
+        }
+        if m == 0 {
+            return 0; // rounded to zero: canonical +0
+        }
+        if m < 1 << mbits {
+            sign | m as u8 // subnormal: biased exponent 0
+        } else {
+            let be = (e + bias) as u8;
+            sign | (be << mbits) | (m - (1 << mbits)) as u8
+        }
+    }
+
+    /// Decode an 8-bit pattern. Reserved NaN/Inf patterns are never emitted
+    /// by [`encode`](Self::encode); if fed in anyway they decode through the
+    /// same formula (finite, monotone), keeping the codec total.
+    pub fn decode(&self, code: u8) -> f32 {
+        let (ebits, mbits, bias) = self.spec();
+        let mf = (code & ((1 << mbits) - 1)) as u32;
+        let be = ((code >> mbits) & ((1 << ebits) - 1)) as i32;
+        let sign = if code >> (ebits + mbits) != 0 { -1.0f32 } else { 1.0 };
+        let mag = if be == 0 {
+            mf as f32 * ((1 - bias - mbits as i32) as f32).exp2()
+        } else {
+            ((1u32 << mbits) + mf) as f32 * ((be - bias - mbits as i32) as f32).exp2()
+        };
+        sign * mag
+    }
+
+    /// Fake-quantize one value through the codec (no external scale).
+    #[inline]
+    pub fn fake_quant(&self, x: f32) -> f32 {
+        self.decode(self.encode(x))
+    }
+}
+
+/// Which format family a controller adapts within. `FixedPoint` is the
+/// paper's original axis (QPA grows the bit-width); the other families have
+/// a fixed storage width, so QPA only tracks the scale exponent.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum FormatFamily {
+    /// Symmetric fixed-point, 2..=32 bits (the default — today's behavior).
+    FixedPoint,
+    /// OCP E4M3 minifloat with a power-of-two tensor scale.
+    E4M3,
+    /// OCP E5M2 minifloat with a power-of-two tensor scale.
+    E5M2,
+    /// 4-bit symmetric fixed-point, nibble-packed storage (weight-only in
+    /// serving).
+    Int4,
+}
+
+impl Default for FormatFamily {
+    /// Fixed-point is the paper's axis and the default everywhere.
+    fn default() -> Self {
+        FormatFamily::FixedPoint
+    }
+}
+
+impl FormatFamily {
+    /// Storage bits per element.
+    #[inline]
+    pub fn storage_bits(&self) -> u8 {
+        match self {
+            FormatFamily::FixedPoint => 0, // variable; see `Scheme::bits`
+            FormatFamily::E4M3 | FormatFamily::E5M2 => 8,
+            FormatFamily::Int4 => 4,
+        }
+    }
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            FormatFamily::FixedPoint => "fixed",
+            FormatFamily::E4M3 => "e4m3",
+            FormatFamily::E5M2 => "e5m2",
+            FormatFamily::Int4 => "int4",
+        }
+    }
+
+    /// Parse a family label (`fixed`, `e4m3`, `e5m2`, `int4`).
+    pub fn parse(s: &str) -> Option<FormatFamily> {
+        match s {
+            "fixed" | "fixedpoint" => Some(FormatFamily::FixedPoint),
+            "e4m3" => Some(FormatFamily::E4M3),
+            "e5m2" => Some(FormatFamily::E5M2),
+            "int4" => Some(FormatFamily::Int4),
+            _ => None,
+        }
+    }
+
+    /// Checkpoint tag (v4 controller records).
+    pub fn tag(&self) -> &'static str {
+        self.label()
+    }
+}
+
+/// A concrete quantization format: family + the parameters the controller
+/// adapts. This is the generalization of [`Scheme`] that the stash, wire,
+/// and compiler layers dispatch on.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Format {
+    /// The paper's symmetric fixed-point scheme.
+    FixedPoint(Scheme),
+    /// `x ≈ 2^s · fp8(x / 2^s)` — minifloat with a power-of-two scale.
+    Minifloat { kind: MinifloatKind, s: i32 },
+    /// 4-bit symmetric fixed-point (`Scheme { bits: 4, s }` semantics,
+    /// nibble-packed storage).
+    Int4 { s: i32 },
+}
+
+impl Format {
+    /// Build the format a controller applies: its family plus the scheme
+    /// slot it adapts (`bits` for fixed-point, `s` reused as the scale
+    /// exponent for the fixed-width families).
+    pub fn from_scheme(family: FormatFamily, sch: Scheme) -> Format {
+        match family {
+            FormatFamily::FixedPoint => Format::FixedPoint(sch),
+            FormatFamily::E4M3 => Format::Minifloat { kind: MinifloatKind::E4M3, s: sch.s },
+            FormatFamily::E5M2 => Format::Minifloat { kind: MinifloatKind::E5M2, s: sch.s },
+            FormatFamily::Int4 => Format::Int4 { s: sch.s },
+        }
+    }
+
+    /// Scale rule per family for max-abs `Z` (the generalization of
+    /// [`Scheme::for_range`]): fixed-point covers `Z` with `2^s·qmax`,
+    /// minifloat picks `s = ceil(log2(Z / max_normal))` so `Z/2^s` fits the
+    /// finite range. Zero/NaN/Inf `Z` falls back like `Scheme::for_range`.
+    pub fn for_range(family: FormatFamily, max_abs: f32, bits: u8) -> Format {
+        match family {
+            FormatFamily::FixedPoint => Format::FixedPoint(Scheme::for_range(max_abs, bits)),
+            FormatFamily::Int4 => Format::Int4 { s: Scheme::for_range(max_abs, 4).s },
+            FormatFamily::E4M3 | FormatFamily::E5M2 => {
+                let kind = if family == FormatFamily::E4M3 {
+                    MinifloatKind::E4M3
+                } else {
+                    MinifloatKind::E5M2
+                };
+                let s = if max_abs > 0.0 && max_abs.is_finite() {
+                    ((max_abs / kind.max_normal()).log2().ceil() as i32).clamp(-126, 127)
+                } else {
+                    0
+                };
+                Format::Minifloat { kind, s }
+            }
+        }
+    }
+
+    #[inline]
+    pub fn family(&self) -> FormatFamily {
+        match self {
+            Format::FixedPoint(_) => FormatFamily::FixedPoint,
+            Format::Minifloat { kind: MinifloatKind::E4M3, .. } => FormatFamily::E4M3,
+            Format::Minifloat { kind: MinifloatKind::E5M2, .. } => FormatFamily::E5M2,
+            Format::Int4 { .. } => FormatFamily::Int4,
+        }
+    }
+
+    /// Storage bits per element.
+    #[inline]
+    pub fn storage_bits(&self) -> u8 {
+        match self {
+            Format::FixedPoint(sch) => sch.bits,
+            Format::Minifloat { .. } => 8,
+            Format::Int4 { .. } => 4,
+        }
+    }
+
+    /// Scale exponent (the `s` slot the controller adapts).
+    #[inline]
+    pub fn scale_exp(&self) -> i32 {
+        match self {
+            Format::FixedPoint(sch) => sch.s,
+            Format::Minifloat { s, .. } | Format::Int4 { s } => *s,
+        }
+    }
+
+    /// The fixed-point view of this format, if it has one (int4 is a 4-bit
+    /// scheme; minifloat has none).
+    #[inline]
+    pub fn as_scheme(&self) -> Option<Scheme> {
+        match self {
+            Format::FixedPoint(sch) => Some(*sch),
+            Format::Int4 { s } => Some(Scheme { bits: 4, s: *s }),
+            Format::Minifloat { .. } => None,
+        }
+    }
+
+    /// Finest representable step near zero (fixed-point: `2^s`; minifloat:
+    /// the scaled subnormal quantum). Generalizes [`Scheme::resolution`].
+    pub fn resolution(&self) -> f32 {
+        match self {
+            Format::FixedPoint(sch) => sch.resolution(),
+            Format::Int4 { s } => (*s as f32).exp2(),
+            Format::Minifloat { kind, s } => {
+                let (_, mbits, bias) = kind.spec();
+                ((s + 1 - bias - mbits as i32) as f32).exp2()
+            }
+        }
+    }
+
+    /// Largest representable magnitude (generalizes `r·qmax`).
+    pub fn range_top(&self) -> f32 {
+        match self {
+            Format::FixedPoint(sch) => sch.range_top(),
+            Format::Int4 { s } => (Scheme { bits: 4, s: *s }).range_top(),
+            Format::Minifloat { kind, s } => (*s as f32).exp2() * kind.max_normal(),
+        }
+    }
+
+    /// Fake-quantize one value (saturating, NaN-safe: NaN → 0).
+    pub fn fake_quant(&self, x: f32) -> f32 {
+        match self {
+            Format::FixedPoint(sch) => sch.fake_quant(x),
+            Format::Int4 { s } => (Scheme { bits: 4, s: *s }).fake_quant(x),
+            Format::Minifloat { kind, s } => {
+                let r = (*s as f32).exp2();
+                kind.decode(kind.encode(x / r)) * r
+            }
+        }
+    }
+
+    /// Reporting label (`int8`/`int16`/… for fixed-point widths, the family
+    /// label otherwise) — what the format-aware ledger mix strings print.
+    pub fn label(&self) -> String {
+        match self {
+            Format::FixedPoint(sch) => format!("int{}", sch.bits),
+            Format::Minifloat { kind, .. } => kind.label().to_string(),
+            Format::Int4 { .. } => "int4".to_string(),
+        }
+    }
+}
+
+/// Scale granularity for weight quantization (Sakr & Shanbhag, arXiv
+/// 1812.11732: per-tensor precision criteria map naturally onto per-channel
+/// scales). Bit-width / family decisions stay per-tensor; only the scale
+/// exponent varies per channel.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum QuantAxis {
+    /// One scale for the whole tensor (the default — today's behavior).
+    PerTensor,
+    /// One scale per channel along the given dimension (conv: output
+    /// channel; fc: output feature).
+    PerChannel(usize),
+}
+
+/// Pack int4 codes two per byte: element `2i` in the low nibble, `2i+1` in
+/// the high nibble; odd lengths pad the final high nibble with 0. Codes must
+/// already be in the int4 range `[-8, 7]`.
+pub fn pack_nibbles(codes: &[i8]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(codes.len().div_ceil(2));
+    for pair in codes.chunks(2) {
+        let lo = (pair[0] as u8) & 0x0f;
+        let hi = if pair.len() == 2 { (pair[1] as u8) & 0x0f } else { 0 };
+        out.push(lo | (hi << 4));
+    }
+    out
+}
+
+/// Unpack [`pack_nibbles`] output into sign-extended i8 codes. `out.len()`
+/// selects how many elements to recover (the packed slice must hold them).
+pub fn unpack_nibbles(packed: &[u8], out: &mut [i8]) {
+    assert!(
+        packed.len() >= out.len().div_ceil(2),
+        "packed int4 buffer too short: {} bytes for {} codes",
+        packed.len(),
+        out.len()
+    );
+    for (i, o) in out.iter_mut().enumerate() {
+        let byte = packed[i / 2];
+        let nib = if i % 2 == 0 { byte & 0x0f } else { byte >> 4 };
+        // sign-extend the 4-bit two's-complement nibble
+        *o = ((nib << 4) as i8) >> 4;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn minifloat_decode_known_values() {
+        let k = MinifloatKind::E4M3;
+        assert_eq!(k.decode(0), 0.0);
+        assert_eq!(k.decode(k.max_code()), 448.0);
+        assert_eq!(k.decode(0x80 | k.max_code()), -448.0);
+        // smallest subnormal: 2^-6 / 8 = 2^-9
+        assert_eq!(k.decode(1), (-9f32).exp2());
+        let k = MinifloatKind::E5M2;
+        assert_eq!(k.decode(k.max_code()), 57344.0);
+        assert_eq!(k.decode(1), (-16f32).exp2()); // 2^-14 / 4
+    }
+
+    #[test]
+    fn minifloat_encode_exact_on_representables() {
+        // every decodable finite magnitude round-trips exactly
+        for kind in [MinifloatKind::E4M3, MinifloatKind::E5M2] {
+            for code in 0..=kind.max_code() {
+                let v = kind.decode(code);
+                assert_eq!(kind.encode(v), code, "{} code {code} v {v}", kind.label());
+                let neg = kind.decode(0x80 | code);
+                if code != 0 {
+                    assert_eq!(kind.encode(neg), 0x80 | code);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn minifloat_nan_inf_safe() {
+        for kind in [MinifloatKind::E4M3, MinifloatKind::E5M2] {
+            assert_eq!(kind.encode(f32::NAN), 0);
+            assert_eq!(kind.decode(kind.encode(f32::INFINITY)), kind.max_normal());
+            assert_eq!(kind.decode(kind.encode(f32::NEG_INFINITY)), -kind.max_normal());
+            assert_eq!(kind.encode(1e30), kind.max_code());
+        }
+    }
+
+    #[test]
+    fn minifloat_round_ties_even() {
+        let k = MinifloatKind::E4M3;
+        // between 1.0 (code m=8) and 1.125 (m=9): midpoint 1.0625 → even m=8
+        assert_eq!(k.fake_quant(1.0625), 1.0);
+        // between 1.125 and 1.25: midpoint 1.1875 → even m=10 → 1.25
+        assert_eq!(k.fake_quant(1.1875), 1.25);
+    }
+
+    #[test]
+    fn minifloat_mantissa_carry() {
+        let k = MinifloatKind::E4M3;
+        // 1.96875 = 1.1111(1) just below 2.0: rounds up across the binade
+        assert_eq!(k.fake_quant(1.97), 2.0);
+        // carry at the top of the range saturates instead of overflowing
+        assert_eq!(k.fake_quant(447.9), 448.0);
+        assert_eq!(k.fake_quant(460.0), 448.0);
+        assert_eq!(k.fake_quant(465.0), 448.0);
+    }
+
+    #[test]
+    fn minifloat_fake_quant_monotone() {
+        for kind in [MinifloatKind::E4M3, MinifloatKind::E5M2] {
+            let mut prev = f32::NEG_INFINITY;
+            let mut x = -500.0f32;
+            while x <= 500.0 {
+                let q = kind.fake_quant(x);
+                assert!(q >= prev, "{} non-monotone at {x}: {q} < {prev}", kind.label());
+                prev = q;
+                x += 0.37;
+            }
+        }
+    }
+
+    #[test]
+    fn format_scale_rule_covers_range() {
+        for family in [FormatFamily::E4M3, FormatFamily::E5M2, FormatFamily::Int4] {
+            for &z in &[1e-5f32, 0.3, 1.0, 77.0, 1e6] {
+                let f = Format::for_range(family, z, 8);
+                assert!(
+                    f.range_top() >= z * (1.0 - 1e-6),
+                    "{:?} z={z} top={}",
+                    family,
+                    f.range_top()
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn format_fixedpoint_matches_scheme_exactly() {
+        let sch = Scheme::for_range(3.7, 8);
+        let f = Format::FixedPoint(sch);
+        for &x in &[0.0f32, 0.1, -2.5, 3.69, 100.0, -100.0] {
+            assert_eq!(f.fake_quant(x), sch.fake_quant(x));
+        }
+        assert_eq!(f.resolution(), sch.resolution());
+        assert_eq!(f.range_top(), sch.range_top());
+    }
+
+    #[test]
+    fn format_int4_is_four_bit_scheme() {
+        let f = Format::for_range(FormatFamily::Int4, 7.0, 8);
+        let sch = Scheme::for_range(7.0, 4);
+        assert_eq!(f.as_scheme(), Some(sch));
+        for &x in &[0.0f32, 1.0, -6.9, 7.0, 50.0] {
+            assert_eq!(f.fake_quant(x), sch.fake_quant(x));
+        }
+    }
+
+    #[test]
+    fn format_zero_range_fallback() {
+        for family in [FormatFamily::E4M3, FormatFamily::E5M2] {
+            for z in [0.0f32, f32::NAN, f32::INFINITY] {
+                let f = Format::for_range(family, z, 8);
+                assert_eq!(f.scale_exp(), 0, "{:?} z={z}", family);
+                assert_eq!(f.fake_quant(0.0), 0.0);
+            }
+        }
+    }
+
+    #[test]
+    fn format_labels() {
+        assert_eq!(Format::FixedPoint(Scheme { bits: 8, s: 0 }).label(), "int8");
+        assert_eq!(Format::FixedPoint(Scheme { bits: 16, s: 0 }).label(), "int16");
+        assert_eq!(Format::Minifloat { kind: MinifloatKind::E4M3, s: 0 }.label(), "e4m3");
+        assert_eq!(Format::Int4 { s: 0 }.label(), "int4");
+        assert_eq!(FormatFamily::parse("e5m2"), Some(FormatFamily::E5M2));
+        assert_eq!(FormatFamily::parse("nope"), None);
+    }
+
+    #[test]
+    fn nibble_pack_round_trip() {
+        let codes: Vec<i8> = (-8..=7).collect();
+        let packed = pack_nibbles(&codes);
+        assert_eq!(packed.len(), 8);
+        let mut back = vec![0i8; codes.len()];
+        unpack_nibbles(&packed, &mut back);
+        assert_eq!(back, codes);
+        // odd length pads
+        let odd = [3i8, -8, 7];
+        let p = pack_nibbles(&odd);
+        assert_eq!(p.len(), 2);
+        let mut b = vec![0i8; 3];
+        unpack_nibbles(&p, &mut b);
+        assert_eq!(b, odd);
+    }
+
+    #[test]
+    fn minifloat_scaled_fake_quant() {
+        // values far outside the bare fp8 range quantize fine under a scale
+        let f = Format::for_range(FormatFamily::E4M3, 1.0e6, 8);
+        let q = f.fake_quant(9.0e5);
+        assert!((q - 9.0e5).abs() / 9.0e5 < 0.05, "q={q}");
+        assert_eq!(f.fake_quant(f32::NAN), 0.0);
+    }
+}

@@ -1,6 +1,8 @@
 //! Fixed-point numeric substrate (system S1 in DESIGN.md).
 //!
 //! - [`scheme`]: bit-width + power-of-two-resolution schemes (Appendix B).
+//! - [`format`]: the format family generalization (minifloat FP8, int4,
+//!   per-channel scales) layered over the scheme math (DESIGN.md §Formats).
 //! - [`quantize`]: bulk fake-quant / integer codes fused with QEM stats.
 //! - [`gemm`]: i8/i16/f32 GEMM kernels with i32 accumulation — the measured
 //!   substrate for Table 3 / Fig 10 / Appendix E speedups.
@@ -12,10 +14,12 @@
 //! to these kernels for small problems or `threads = 1`.
 
 pub mod conv;
+pub mod format;
 pub mod gemm;
 pub mod gemm_simd;
 pub mod quantize;
 pub mod scheme;
 
+pub use format::{pack_nibbles, unpack_nibbles, Format, FormatFamily, MinifloatKind, QuantAxis};
 pub use quantize::QuantStats;
 pub use scheme::{Scheme, TensorKind, BIT_STEPS};

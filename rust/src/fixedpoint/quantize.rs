@@ -3,6 +3,7 @@
 //! `kernels/stats.py`). Serial backend of the engine's sliced-parallel
 //! `codes_*` / `fake_quant_stats` dispatch (DESIGN.md §Kernel-Engine).
 
+use super::format::{Format, FormatFamily, MinifloatKind};
 use super::scheme::Scheme;
 
 /// QEM statistics of one tensor under one scheme (mirrors kernels/stats.py).
@@ -91,6 +92,174 @@ pub fn stats_only(xs: &[f32], sch: Scheme) -> QuantStats {
 /// Max |x| of a slice (the paper's `Z` / `Range` probe).
 pub fn max_abs(xs: &[f32]) -> f32 {
     xs.iter().fold(0.0f32, |a, &x| a.max(x.abs()))
+}
+
+/// Format-generic [`fake_quant_stats_inplace`]: fixed-point and int4 route
+/// to the pinned scheme kernel (bit-identical to before the format axis
+/// existed); minifloat runs the scaled fp8 codec elementwise.
+pub fn fake_quant_stats_inplace_fmt(xs: &mut [f32], fmt: Format) -> QuantStats {
+    match fmt {
+        Format::FixedPoint(sch) => fake_quant_stats_inplace(xs, sch),
+        Format::Int4 { s } => fake_quant_stats_inplace(xs, Scheme { bits: 4, s }),
+        Format::Minifloat { kind, s } => {
+            let r = (s as f32).exp2();
+            let inv_r = 1.0 / r;
+            let mut sum_abs = 0.0f64;
+            let mut sum_abs_q = 0.0f64;
+            let mut max = 0.0f32;
+            for x in xs.iter_mut() {
+                let v = *x;
+                let a = v.abs();
+                sum_abs += a as f64;
+                if a > max {
+                    max = a;
+                }
+                let q = kind.decode(kind.encode(v * inv_r)) * r;
+                sum_abs_q += q.abs() as f64;
+                *x = q;
+            }
+            QuantStats { sum_abs, max_abs: max, sum_abs_q }
+        }
+    }
+}
+
+/// Format-generic [`stats_only`] (no mutation) — the QEM probe for
+/// non-fixed-point families.
+pub fn stats_only_fmt(xs: &[f32], fmt: Format) -> QuantStats {
+    match fmt {
+        Format::FixedPoint(sch) => stats_only(xs, sch),
+        Format::Int4 { s } => stats_only(xs, Scheme { bits: 4, s }),
+        Format::Minifloat { kind, s } => {
+            let r = (s as f32).exp2();
+            let inv_r = 1.0 / r;
+            let mut sum_abs = 0.0f64;
+            let mut sum_abs_q = 0.0f64;
+            let mut max = 0.0f32;
+            for &v in xs {
+                let a = v.abs();
+                sum_abs += a as f64;
+                if a > max {
+                    max = a;
+                }
+                let q = kind.decode(kind.encode(v * inv_r)) * r;
+                sum_abs_q += q.abs() as f64;
+            }
+            QuantStats { sum_abs, max_abs: max, sum_abs_q }
+        }
+    }
+}
+
+/// Quantize to fp8 byte codes under a scaled minifloat format.
+pub fn codes_f8(xs: &[f32], out: &mut [u8], kind: MinifloatKind, s: i32) {
+    debug_assert_eq!(xs.len(), out.len());
+    let inv_r = 1.0 / (s as f32).exp2();
+    for (o, &x) in out.iter_mut().zip(xs) {
+        *o = kind.encode(x * inv_r);
+    }
+}
+
+/// Decode fp8 byte codes back to f32 under a scaled minifloat format.
+pub fn decode_f8(codes: &[u8], out: &mut [f32], kind: MinifloatKind, s: i32) {
+    debug_assert_eq!(codes.len(), out.len());
+    let r = (s as f32).exp2();
+    for (o, &c) in out.iter_mut().zip(codes) {
+        *o = kind.decode(c) * r;
+    }
+}
+
+/// Per-channel scale exponents for a row-major `rows × cols` weight matrix
+/// with one channel per **row** (conv layout: `[out_c, fan_in]`): each
+/// channel gets the family's scale rule on its own max-abs, at the
+/// per-tensor decided `bits`.
+pub fn channel_scales_rows(
+    w: &[f32],
+    rows: usize,
+    cols: usize,
+    family: FormatFamily,
+    bits: u8,
+) -> Vec<i32> {
+    assert_eq!(w.len(), rows * cols);
+    (0..rows)
+        .map(|r| {
+            let z = max_abs(&w[r * cols..(r + 1) * cols]);
+            Format::for_range(family, z, bits).scale_exp()
+        })
+        .collect()
+}
+
+/// [`channel_scales_rows`] with one channel per **column** (fc layout:
+/// `[d_in, d_out]`, output features along columns).
+pub fn channel_scales_cols(
+    w: &[f32],
+    rows: usize,
+    cols: usize,
+    family: FormatFamily,
+    bits: u8,
+) -> Vec<i32> {
+    assert_eq!(w.len(), rows * cols);
+    let mut z = vec![0.0f32; cols];
+    for r in 0..rows {
+        let row = &w[r * cols..(r + 1) * cols];
+        for (zc, &v) in z.iter_mut().zip(row) {
+            *zc = zc.max(v.abs());
+        }
+    }
+    z.iter().map(|&zc| Format::for_range(family, zc, bits).scale_exp()).collect()
+}
+
+/// Fake-quantize a row-major `rows × cols` matrix with one scale per row
+/// (conv weights). `scales[r]` carries the per-channel exponent; family and
+/// `bits` are the tensor-wide decision. Returns fused QEM stats.
+pub fn fake_quant_per_channel_rows(
+    w: &mut [f32],
+    rows: usize,
+    cols: usize,
+    family: FormatFamily,
+    bits: u8,
+    scales: &[i32],
+) -> QuantStats {
+    assert_eq!(w.len(), rows * cols);
+    assert_eq!(scales.len(), rows);
+    let mut st = QuantStats::default();
+    for (r, &s) in scales.iter().enumerate() {
+        let fmt = Format::from_scheme(family, Scheme { bits, s });
+        let row = fake_quant_stats_inplace_fmt(&mut w[r * cols..(r + 1) * cols], fmt);
+        st.sum_abs += row.sum_abs;
+        st.sum_abs_q += row.sum_abs_q;
+        st.max_abs = st.max_abs.max(row.max_abs);
+    }
+    st
+}
+
+/// [`fake_quant_per_channel_rows`] with one scale per column (fc weights).
+pub fn fake_quant_per_channel_cols(
+    w: &mut [f32],
+    rows: usize,
+    cols: usize,
+    family: FormatFamily,
+    bits: u8,
+    scales: &[i32],
+) -> QuantStats {
+    assert_eq!(w.len(), rows * cols);
+    assert_eq!(scales.len(), cols);
+    let mut st = QuantStats::default();
+    let fmts: Vec<Format> =
+        scales.iter().map(|&s| Format::from_scheme(family, Scheme { bits, s })).collect();
+    for r in 0..rows {
+        for (c, fmt) in fmts.iter().enumerate() {
+            let i = r * cols + c;
+            let v = w[i];
+            let a = v.abs();
+            st.sum_abs += a as f64;
+            if a > st.max_abs {
+                st.max_abs = a;
+            }
+            let q = fmt.fake_quant(v);
+            st.sum_abs_q += q.abs() as f64;
+            w[i] = q;
+        }
+    }
+    st
 }
 
 /// Quantize to i8 codes (for the integer GEMM hot path). Panics in debug if

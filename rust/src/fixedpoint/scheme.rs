@@ -152,6 +152,37 @@ mod tests {
     }
 
     #[test]
+    fn non_finite_range_falls_back_like_zero() {
+        // A NaN/Inf max-abs (dead layer, overflowed stat) must not poison
+        // the scale: both take the zero-range fallback s = −(n−1), and the
+        // resulting scheme stays fully usable on finite inputs.
+        for z in [f32::NAN, f32::INFINITY, f32::NEG_INFINITY, -3.0] {
+            for bits in BIT_STEPS {
+                let sch = Scheme::for_range(z, bits);
+                assert_eq!(sch, Scheme::for_range(0.0, bits), "z={z} bits={bits}");
+                assert!(sch.resolution().is_finite());
+                assert_eq!(sch.fake_quant(0.5), {
+                    let r = sch.resolution();
+                    (0.5 / r).round_ties_even() * r
+                });
+            }
+        }
+    }
+
+    #[test]
+    fn non_finite_values_saturate_not_panic() {
+        // Codes for non-finite *inputs* under a finite scheme: ±Inf clamp
+        // to the end codes; NaN's clamp is well-defined in Rust (NaN.clamp
+        // propagates NaN, `as i32` then saturates-to-0) — pin that it at
+        // least stays in code range rather than UB-ing.
+        let sch = Scheme::for_range(1.0, 8);
+        assert_eq!(sch.code(f32::INFINITY) as i64, sch.qmax());
+        assert_eq!(sch.code(f32::NEG_INFINITY) as i64, sch.qmin());
+        let c = sch.code(f32::NAN) as i64;
+        assert!(c >= sch.qmin() && c <= sch.qmax());
+    }
+
+    #[test]
     fn saturation() {
         let s = Scheme { bits: 8, s: 0 }; // r = 1
         assert_eq!(s.code(1000.0), 127);

@@ -32,7 +32,7 @@ use crate::fixedpoint::gemm;
 pub use crate::fixedpoint::gemm::Tile;
 use crate::fixedpoint::gemm_simd;
 use crate::fixedpoint::quantize::{self, QuantStats};
-use crate::fixedpoint::Scheme;
+use crate::fixedpoint::{Format, Scheme};
 use pool::{SendPtr, ThreadPool};
 
 /// Below this many MACs a GEMM is dispatched serially: pool hand-off costs
@@ -515,6 +515,43 @@ impl Engine {
             // task; the dispatch barrier outlives both pointers.
             let slice = unsafe { std::slice::from_raw_parts_mut(xp.0.add(s), e - s) };
             let st = quantize::fake_quant_stats_inplace(slice, sch);
+            unsafe { *pp.0.add(t) = st };
+        });
+        let mut total = QuantStats::default();
+        for st in parts {
+            total.sum_abs += st.sum_abs;
+            total.sum_abs_q += st.sum_abs_q;
+            if st.max_abs > total.max_abs {
+                total.max_abs = st.max_abs;
+            }
+        }
+        total
+    }
+
+    /// Format-generic [`Engine::fake_quant_stats`] (DESIGN.md §Formats):
+    /// fixed-point and int4 formats route to the pinned scheme kernel —
+    /// bit-identical to the pre-format-axis path — while minifloat formats
+    /// run the scaled fp8 codec with the same chunked, index-ordered stat
+    /// merge (deterministic at every thread count).
+    pub fn fake_quant_fmt(&self, xs: &mut [f32], fmt: Format) -> QuantStats {
+        if let Some(sch) = fmt.as_scheme() {
+            return self.fake_quant_stats(xs, sch);
+        }
+        if self.pool.is_none() || xs.len() < PAR_ELEMWISE_MIN {
+            return quantize::fake_quant_stats_inplace_fmt(xs, fmt);
+        }
+        let len = xs.len();
+        let tasks = len.div_ceil(QUANT_CHUNK);
+        let mut parts = vec![QuantStats::default(); tasks];
+        let pp = SendPtr(parts.as_mut_ptr());
+        let xp = SendPtr(xs.as_mut_ptr());
+        self.parallel_for(tasks, move |t| {
+            let s = t * QUANT_CHUNK;
+            let e = ((t + 1) * QUANT_CHUNK).min(len);
+            // SAFETY: disjoint data ranges and one distinct stats slot per
+            // task; the dispatch barrier outlives both pointers.
+            let slice = unsafe { std::slice::from_raw_parts_mut(xp.0.add(s), e - s) };
+            let st = quantize::fake_quant_stats_inplace_fmt(slice, fmt);
             unsafe { *pp.0.add(t) = st };
         });
         let mut total = QuantStats::default();

@@ -2,8 +2,10 @@
 //!
 //! Subcommands:
 //!   exp <id|all> [--iters N ...]   run a paper experiment (fig1..table5)
-//!   train [--model M --mode Q]     train one classifier and report
-//!         [--replicas N --comm-bits {8,16,adaptive,f32}]  data-parallel
+//!   train [--model M --mode Q]     train one classifier and report;
+//!         [--per-channel]          Q includes the format families
+//!         [--quant-delay N]        e4m3|e5m2|int4 (DESIGN.md §Formats),
+//!         [--replicas N --comm-bits {8,16,e4m3,e5m2,adaptive,f32}]
 //!         [--compress {none,quantize,topk:<r>,topk:<r>+quantize}]
 //!         [--node-size N]          gradient compression + hierarchical
 //!                                  reduce (DESIGN.md §Data-Parallel)
@@ -11,7 +13,9 @@
 //!         [--models A,B --scheduler P --deadline-us N]  registry, pluggable
 //!                                  batching policy, SLO-aware shedding
 //!         [--no-fuse --tune]       inference-compiler knobs: unfused
-//!                                  interpreter / load-time tile search
+//!         [--weight-format F]      interpreter / load-time tile search /
+//!                                  weight-only re-quantization (int4 packs
+//!                                  two codes per byte)
 //!   opcount [--batch N]            print the Fig7/Table5 analytic counts
 //!   list                           list experiments and models
 //!
@@ -22,8 +26,10 @@ use std::time::Instant;
 
 use anyhow::{anyhow, bail, Context, Result};
 
+use apt::apt::AptConfig;
 use apt::compiler::CompileOptions;
 use apt::exp;
+use apt::fixedpoint::FormatFamily;
 use apt::exp::common::{grad_mix_string, stash_mix_string};
 use apt::mem::StashPolicy;
 use apt::nn::{models, QuantMode};
@@ -43,16 +49,18 @@ fn usage() -> ! {
          commands:\n\
          \x20 exp <id|all> [--iters N] [--quick]   run a paper experiment\n\
          \x20 train [--model alexnet|vgg|resnet|mobilenet|inception|mlp]\n\
-         \x20       [--mode float32|adaptive|int8|int16] [--iters N] [--lr F]\n\
-         \x20       [--replicas N] [--comm-bits 8|16|adaptive|f32]\n\
+         \x20       [--mode float32|adaptive|int8|int16|e4m3|e5m2|int4]\n\
+         \x20       [--iters N] [--lr F] [--per-channel] [--quant-delay N]\n\
+         \x20       [--replicas N] [--comm-bits 8|16|e4m3|e5m2|adaptive|f32]\n\
          \x20       [--compress none|quantize|topk:<r>|topk:<r>+quantize]\n\
          \x20       [--node-size N] (power of two; hierarchical all-reduce)\n\
-         \x20       [--act-bits 8|16|adaptive|f32] [--recompute]\n\
+         \x20       [--act-bits 8|16|e4m3|e5m2|adaptive|f32] [--recompute]\n\
          \x20 serve [--ckpt file] [--model mlp] [--models mlp,alexnet,…]\n\
          \x20       [--mode int8] [--train-iters N] [--seed N] [--requests N]\n\
          \x20       [--clients N] [--workers N] [--max-batch N] [--max-wait-us N]\n\
          \x20       [--queue-cap N] [--scheduler flush|continuous]\n\
          \x20       [--deadline-us N] [--lanes N] [--no-fuse] [--tune]\n\
+         \x20       [--weight-format int4|e4m3|e5m2]\n\
          \x20 opcount [--batch N]\n\
          \x20 list\n\
          \n\
@@ -89,16 +97,28 @@ fn flag(args: &Args, key: &str) -> Result<bool> {
 }
 
 /// Parse a `--mode` string; `iters` sizes the adaptive init phase.
+/// Format-family modes (`e4m3`, `e5m2`, `int4`) run the adaptive
+/// controller pinned to that family's storage width: QPA adapts the scale
+/// exponent only (DESIGN.md §Formats).
 fn parse_mode(s: &str, iters: u64) -> Result<QuantMode> {
     Ok(match s {
         "float32" | "f32" => QuantMode::Float32,
         "adaptive" => apt::exp::common::adaptive_mode(iters),
+        "e4m3" | "e5m2" | "int4" => {
+            let family = FormatFamily::parse(s)
+                .ok_or_else(|| anyhow!("--mode {s:?}: unknown format family"))?;
+            let mut cfg = AptConfig::for_family(family);
+            cfg.init_phase_iters = iters / 10;
+            QuantMode::Adaptive(cfg)
+        }
         s if s.starts_with("int") => QuantMode::Static(
             s[3..]
                 .parse()
                 .map_err(|_| anyhow!("--mode {s:?}: expected intN with numeric N"))?,
         ),
-        other => bail!("unknown mode {other:?} (expected float32, adaptive or intN)"),
+        other => {
+            bail!("unknown mode {other:?} (expected float32, adaptive, intN, e4m3, e5m2 or int4)")
+        }
     })
 }
 
@@ -109,7 +129,19 @@ fn parse_mode(s: &str, iters: u64) -> Result<QuantMode> {
 fn cmd_train(args: &Args) -> Result<()> {
     let model = args.str_or("model", "alexnet");
     let iters: u64 = parsed(args, "iters", 300)?;
-    let mode = parse_mode(args.str_or("mode", "adaptive").as_str(), iters)?;
+    let mut mode = parse_mode(args.str_or("mode", "adaptive").as_str(), iters)?;
+    // --per-channel: per-output-channel weight scales on conv/fc layers.
+    // Only the adaptive controller owns weight schemes, so the other modes
+    // have nothing to apply it to — error instead of silently ignoring.
+    if flag(args, "per-channel")? {
+        match &mut mode {
+            QuantMode::Adaptive(cfg) => cfg.per_channel_weights = true,
+            _ => bail!(
+                "--per-channel needs an adaptive or format-family --mode \
+                 (float32/static modes have no weight controllers)"
+            ),
+        }
+    }
     let replicas: usize = parsed(args, "replicas", 1)?;
     let compress: Option<CompressPolicy> = match args.get("compress") {
         Some(s) => Some(CompressPolicy::parse(s)?),
@@ -139,6 +171,7 @@ fn cmd_train(args: &Args) -> Result<()> {
         .noise(parsed(args, "noise", 0.5)?)
         .stash_policy(act)
         .node_size(node)
+        .quant_delay(parsed(args, "quant-delay", 0)?)
         .recompute(recompute);
     if let Some(p) = compress {
         builder = builder.compress(p);
@@ -164,10 +197,15 @@ fn cmd_train(args: &Args) -> Result<()> {
         println!("stash bits: {}", stash_mix_string(&run.ledger));
     }
     if replicas > 1 {
+        // minifloat comm has no adapted bit-width: its reported 8 is the
+        // storage width, so label the format, not "int8"
         let comm_bits: Vec<String> = run
             .grad_bits
             .iter()
-            .map(|(n, b)| format!("{n}=int{b}"))
+            .map(|(n, b)| match comm.minifloat_kind() {
+                Some(k) => format!("{n}={}", k.label()),
+                None => format!("{n}=int{b}"),
+            })
             .collect();
         println!(
             "comm ({} replicas, {}): {}",
@@ -243,7 +281,20 @@ fn cmd_serve(args: &Args) -> Result<()> {
         policy,
         lanes: parsed(args, "lanes", 3)?,
     };
-    let copts = CompileOptions { fuse: !flag(args, "no-fuse")?, tune: flag(args, "tune")? };
+    // --weight-format int4|e4m3|e5m2: re-encode frozen weights into that
+    // family at freeze time (int4 nibble-packs — half the weight bytes of
+    // int8). `fixed` is the no-op spelling of the default int8 path.
+    let weight_format = match args.get("weight-format") {
+        None => None,
+        Some(s) => Some(FormatFamily::parse(s).ok_or_else(|| {
+            anyhow!("--weight-format {s:?}: expected fixed, int4, e4m3 or e5m2")
+        })?),
+    };
+    let copts = CompileOptions {
+        fuse: !flag(args, "no-fuse")?,
+        tune: flag(args, "tune")?,
+        weight_format,
+    };
 
     // --models a,b,…: round-robin requests across a registry of briefly
     // trained zoo models instead of serving one checkpoint.

@@ -13,6 +13,9 @@
 //!   stash time (scale from the tensor's own max-abs, the paper's Appendix-B
 //!   rule), decode at backward time. Per-element error is bounded by half
 //!   the scheme resolution.
+//! - [`StashPolicy::Minifloat`] — encode to scaled OCP minifloat byte codes
+//!   (e4m3 or e5m2): int8's footprint with *relative* error, which degrades
+//!   gracefully on long-tailed activations.
 //! - [`StashPolicy::Adaptive`] — one [`PrecisionController`] per stash
 //!   *site* chooses the storage bit-width via QEM/QPA, exactly as the
 //!   compute-side controllers choose GEMM operand widths; decisions are
@@ -42,11 +45,11 @@ use anyhow::{bail, Result};
 
 use crate::apt::{AptConfig, ControllerState, Ledger, PrecisionController};
 use crate::fixedpoint::quantize::{self, codes_i16, codes_i8};
-use crate::fixedpoint::{Scheme, TensorKind};
+use crate::fixedpoint::{Format, MinifloatKind, Scheme, TensorKind};
 use crate::tensor::Tensor;
 
 /// Storage policy for tensors stashed between forward and backward
-/// (CLI `--act-bits {8,16,adaptive,f32}`).
+/// (CLI `--act-bits {8,16,e4m3,e5m2,adaptive,f32}`).
 #[derive(Clone, Copy, Debug)]
 pub enum StashPolicy {
     /// Store saved tensors verbatim — bit-identical to the historical
@@ -56,6 +59,10 @@ pub enum StashPolicy {
     Int8,
     /// Encode to int16 codes + per-tensor scale at stash time.
     Int16,
+    /// Encode to scaled OCP minifloat byte codes (e4m3 or e5m2) — same
+    /// 1 byte/element as int8, but the error is *relative* (graceful on
+    /// long-tailed activations that force fixed-point to coarse scales).
+    Minifloat(MinifloatKind),
     /// Per-site QEM/QPA choice of the storage bit-width (int8 → int16 →
     /// exact-f32 fallback above 16 bits), recorded as `stash:*` ledger
     /// entries.
@@ -70,6 +77,8 @@ impl StashPolicy {
             "f32" | "float32" => StashPolicy::F32,
             "8" | "int8" => StashPolicy::Int8,
             "16" | "int16" => StashPolicy::Int16,
+            "e4m3" => StashPolicy::Minifloat(MinifloatKind::E4M3),
+            "e5m2" => StashPolicy::Minifloat(MinifloatKind::E5M2),
             "adaptive" => {
                 let mut cfg = AptConfig::default();
                 cfg.init_phase_iters = iters / 10;
@@ -78,16 +87,20 @@ impl StashPolicy {
                 cfg.pin_forward_bits = false;
                 StashPolicy::Adaptive(cfg)
             }
-            other => bail!("unknown --act-bits {other:?} (expected 8, 16, adaptive or f32)"),
+            other => bail!(
+                "unknown --act-bits {other:?} (expected 8, 16, e4m3, e5m2, adaptive or f32)"
+            ),
         })
     }
 
-    /// Display label (`"f32"`, `"int8"`, `"int16"`, `"adaptive"`).
+    /// Display label (`"f32"`, `"int8"`, `"int16"`, `"e4m3"`, `"e5m2"`,
+    /// `"adaptive"`).
     pub fn label(&self) -> String {
         match self {
             StashPolicy::F32 => "f32".into(),
             StashPolicy::Int8 => "int8".into(),
             StashPolicy::Int16 => "int16".into(),
+            StashPolicy::Minifloat(kind) => kind.label().into(),
             StashPolicy::Adaptive(_) => "adaptive".into(),
         }
     }
@@ -133,6 +146,8 @@ enum Payload {
     I8 { codes: Vec<i8>, scheme: Scheme },
     /// int16 codes + the scheme that decodes them.
     I16 { codes: Vec<i16>, scheme: Scheme },
+    /// Scaled minifloat byte codes + the kind/scale that decode them.
+    F8 { codes: Vec<u8>, kind: MinifloatKind, s: i32 },
     /// Packed boolean mask (1 bit per element).
     Mask { bits: Vec<u64>, len: usize },
     /// u32 element indices (pooling argmax).
@@ -148,6 +163,7 @@ impl Payload {
             Payload::F32(v) => 4 * v.len(),
             Payload::I8 { codes, .. } => codes.len() + SCHEME_BYTES,
             Payload::I16 { codes, .. } => 2 * codes.len() + SCHEME_BYTES,
+            Payload::F8 { codes, .. } => codes.len() + SCHEME_BYTES,
             Payload::Mask { bits, .. } => 8 * bits.len(),
             Payload::Indices(v) => 4 * v.len(),
         }
@@ -317,6 +333,15 @@ impl ActivationStash {
         }
     }
 
+    fn encode_f8(data: &[f32], kind: MinifloatKind) -> Payload {
+        // Family scale rule: place the codec's max normal at the tensor's
+        // max-abs (Format::for_range handles zero/non-finite ranges).
+        let s = Format::for_range(kind.family(), quantize::max_abs(data), 8).scale_exp();
+        let mut codes = vec![0u8; data.len()];
+        quantize::codes_f8(data, &mut codes, kind, s);
+        Payload::F8 { codes, kind, s }
+    }
+
     /// Stash a saved tensor under the policy. Takes the tensor by value:
     /// the F32 policy moves the buffer in without a copy (allocation parity
     /// with the historical private-field caches), encoded policies consume
@@ -329,6 +354,7 @@ impl ActivationStash {
             StashPolicy::F32 => Payload::F32(data),
             StashPolicy::Int8 => Self::encode_codes(&data, 8),
             StashPolicy::Int16 => Self::encode_codes(&data, 16),
+            StashPolicy::Minifloat(kind) => Self::encode_f8(&data, kind),
             StashPolicy::Adaptive(cfg) => {
                 let ctl = self.ctls.entry(h.key().to_string()).or_insert_with(|| {
                     PrecisionController::new(
@@ -366,6 +392,11 @@ impl ActivationStash {
             Payload::I16 { codes, scheme } => {
                 let r = scheme.resolution();
                 codes.iter().map(|&c| c as f32 * r).collect()
+            }
+            Payload::F8 { codes, kind, s } => {
+                let mut out = vec![0.0f32; codes.len()];
+                quantize::decode_f8(&codes, &mut out, kind, s);
+                out
             }
             Payload::Mask { .. } | Payload::Indices(_) => {
                 panic!("stash entry {:?} is not a tensor (use take_mask/take_indices)", h.key())
@@ -512,6 +543,27 @@ mod tests {
     }
 
     #[test]
+    fn minifloat_policy_byte_sized_with_relative_error() {
+        let t = randt(7, &[16, 32], 2.0);
+        let mut ledger = Ledger::new();
+        for kind in [MinifloatKind::E4M3, MinifloatKind::E5M2] {
+            let mut s = ActivationStash::new(StashPolicy::Minifloat(kind), false);
+            let h = StashHandle::new("l", "x");
+            s.put(&h, t.clone(), 0, &mut ledger);
+            // 1 byte/element, like int8.
+            assert_eq!(s.mem().live_bytes(), 16 * 32 + 8, "{}", kind.label());
+            let back = s.take(&h);
+            // Half-ulp relative error for normals plus the scaled subnormal
+            // step as the absolute floor near zero.
+            let fmt = Format::for_range(kind.family(), t.max_abs(), 8);
+            for (&a, &b) in t.data.iter().zip(&back.data) {
+                let bound = a.abs() * 0.125 + fmt.resolution();
+                assert!((a - b).abs() <= bound, "{}: {a} vs {b}", kind.label());
+            }
+        }
+    }
+
+    #[test]
     fn int8_storage_is_quarter_of_f32() {
         let t = randt(2, &[64, 64], 1.0);
         let mut ledger = Ledger::new();
@@ -634,6 +686,14 @@ mod tests {
         assert!(matches!(StashPolicy::parse("f32", 100).unwrap(), StashPolicy::F32));
         assert!(matches!(StashPolicy::parse("8", 100).unwrap(), StashPolicy::Int8));
         assert!(matches!(StashPolicy::parse("int16", 100).unwrap(), StashPolicy::Int16));
+        assert!(matches!(
+            StashPolicy::parse("e4m3", 100).unwrap(),
+            StashPolicy::Minifloat(MinifloatKind::E4M3)
+        ));
+        assert!(matches!(
+            StashPolicy::parse("e5m2", 100).unwrap(),
+            StashPolicy::Minifloat(MinifloatKind::E5M2)
+        ));
         match StashPolicy::parse("adaptive", 100).unwrap() {
             StashPolicy::Adaptive(cfg) => {
                 assert_eq!(cfg.init_phase_iters, 10);

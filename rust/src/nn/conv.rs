@@ -17,8 +17,8 @@ use super::{Layer, QuantMode, TrainCtx};
 use crate::apt::LayerControllers;
 use crate::fixedpoint::conv::{col2im, im2col, Conv2dGeom};
 use crate::fixedpoint::gemm;
-use crate::fixedpoint::quantize::fake_quant_stats_inplace;
-use crate::fixedpoint::TensorKind;
+use crate::fixedpoint::quantize::fake_quant_stats_inplace_fmt;
+use crate::fixedpoint::{Format, TensorKind};
 use crate::mem::StashHandle;
 use crate::tensor::Tensor;
 use crate::util::Pcg32;
@@ -89,26 +89,27 @@ impl Layer for Conv2d {
         assert_eq!(x.dim(1), g.in_c * h * w, "{}: input size", self.name);
         let (rows, cols) = g.im2col_dims(h, w);
 
-        // quantization parameter update + weight fake-quant
-        let (sw_opt, sx_opt) = match &mut self.ctl {
-            None => (None, None),
-            Some(ctl) => {
-                let sw = if ctl.w.needs_update(ctx.iter) {
-                    ctl.w.maybe_update_from_data(ctx.iter, &self.w.data, &mut ctx.ledger)
-                } else {
-                    ctl.w.scheme()
-                };
-                let sx = if ctl.x.needs_update(ctx.iter) {
-                    ctl.x.maybe_update_from_data(ctx.iter, &x.data, &mut ctx.ledger)
-                } else {
-                    ctl.x.scheme()
-                };
-                (Some(sw), Some(sx))
+        // quantization parameter update + weight fake-quant; `fx_opt` is
+        // Some exactly when quantization is live this step (controllers
+        // present and past any `--quant-delay`)
+        let fx_opt = match &mut self.ctl {
+            Some(ctl) if ctx.quant_on() => {
+                if ctl.w.needs_update(ctx.iter) {
+                    ctl.w.maybe_update_from_data(ctx.iter, &self.w.data, &mut ctx.ledger);
+                    // per-channel scales freeze with the per-tensor decision
+                    ctl.w.refresh_pc_scales(&self.w.data, g.out_c, rows, true);
+                }
+                if ctl.x.needs_update(ctx.iter) {
+                    ctl.x.maybe_update_from_data(ctx.iter, &x.data, &mut ctx.ledger);
+                }
+                Some(ctl.x.format())
             }
+            _ => None,
         };
         let mut wq = self.w.clone();
-        if let Some(sw) = sw_opt {
-            fake_quant_stats_inplace(&mut wq.data, sw);
+        if fx_opt.is_some() {
+            let ctl = self.ctl.as_ref().unwrap();
+            ctl.w.fake_quant_weights(&mut wq.data, g.out_c, rows, true);
         }
 
         // Engine dispatch: the im2col GEMM has m = out_c, so its row panels
@@ -127,8 +128,8 @@ impl Layer for Conv2d {
         for img in 0..n {
             let xi = &x.data[img * g.in_c * h * w..(img + 1) * g.in_c * h * w];
             im2col(g, h, w, xi, &mut patch);
-            if let Some(sx) = sx_opt {
-                eng.fake_quant_stats(&mut patch, sx);
+            if let Some(fx) = fx_opt {
+                eng.fake_quant_fmt(&mut patch, fx);
             }
             let co = &mut out.data[img * g.out_c * cols..(img + 1) * g.out_c * cols];
             eng.gemm_f32(g.out_c, rows, cols, &wq.data, &patch, co);
@@ -151,8 +152,8 @@ impl Layer for Conv2d {
             } else {
                 let patches = Tensor::from_vec(&[n, rows * cols], patches_save);
                 ctx.stash.put(&self.h_patches, patches, ctx.iter, &mut ctx.ledger);
-                if self.ctl.is_some() {
-                    // f32 runs read the live weight at backward instead
+                if fx_opt.is_some() {
+                    // float-path runs read the live weight at backward instead
                     ctx.stash.put(&self.h_w, wq, ctx.iter, &mut ctx.ledger);
                 }
             }
@@ -169,18 +170,22 @@ impl Layer for Conv2d {
         // quantize the incoming activation gradient (Algorithm 1's ΔX̂)
         let mut gq = gout.clone();
         if let Some(ctl) = &mut self.ctl {
-            let sg = match self.grad_bits_override {
-                Some(bits) => crate::fixedpoint::Scheme::for_range(gout.max_abs(), bits),
-                None => {
-                    if ctl.g.needs_update(ctx.iter) {
-                        ctl.g.maybe_update_from_data(ctx.iter, &gout.data, &mut ctx.ledger)
-                    } else {
-                        ctl.g.scheme()
+            if ctx.quant_on() {
+                let fg = match self.grad_bits_override {
+                    Some(bits) => Format::FixedPoint(crate::fixedpoint::Scheme::for_range(
+                        gout.max_abs(),
+                        bits,
+                    )),
+                    None => {
+                        if ctl.g.needs_update(ctx.iter) {
+                            ctl.g.maybe_update_from_data(ctx.iter, &gout.data, &mut ctx.ledger);
+                        }
+                        ctl.g.format()
                     }
-                }
-            };
-            ctx.ledger.trace_bits(&self.name, TensorKind::Gradient, ctx.iter, sg.bits);
-            fake_quant_stats_inplace(&mut gq.data, sg);
+                };
+                ctx.ledger.trace_bits(&self.name, TensorKind::Gradient, ctx.iter, fg.storage_bits());
+                fake_quant_stats_inplace_fmt(&mut gq.data, fg);
+            }
         }
         self.last_g = Some(gout.clone());
 
@@ -191,21 +196,21 @@ impl Layer for Conv2d {
         // (bit-identical under F32 storage; weights have not changed).
         let (patches, wq_owned): (Tensor, Option<Tensor>) = if ctx.stash.recompute() {
             let x = ctx.stash.take(&self.h_x);
-            let (wq_opt, sx_opt) = match &self.ctl {
-                None => (None, None),
-                Some(ctl) => {
+            let (wq_opt, fx_opt) = match &self.ctl {
+                Some(ctl) if ctx.quant_on() => {
                     let mut wq = self.w.clone();
-                    fake_quant_stats_inplace(&mut wq.data, ctl.w.scheme());
-                    (Some(wq), Some(ctl.x.scheme()))
+                    ctl.w.fake_quant_weights(&mut wq.data, g.out_c, rows, true);
+                    (Some(wq), Some(ctl.x.format()))
                 }
+                _ => (None, None),
             };
             let mut pd = vec![0.0f32; n * rows * cols];
             let mut patch = vec![0.0f32; rows * cols];
             for img in 0..n {
                 let xi = &x.data[img * g.in_c * h * w..(img + 1) * g.in_c * h * w];
                 im2col(g, h, w, xi, &mut patch);
-                if let Some(sx) = sx_opt {
-                    eng.fake_quant_stats(&mut patch, sx);
+                if let Some(fx) = fx_opt {
+                    eng.fake_quant_fmt(&mut patch, fx);
                 }
                 pd[img * rows * cols..(img + 1) * rows * cols].copy_from_slice(&patch);
             }
@@ -213,8 +218,8 @@ impl Layer for Conv2d {
         } else {
             let p = ctx.stash.take(&self.h_patches);
             let wq = match &self.ctl {
-                None => None,
-                Some(_) => Some(ctx.stash.take(&self.h_w)),
+                Some(_) if ctx.quant_on() => Some(ctx.stash.take(&self.h_w)),
+                _ => None,
             };
             (p, wq)
         };
@@ -281,7 +286,7 @@ impl Layer for Conv2d {
     fn export_infer(&self, out: &mut Vec<crate::serve::InferOp>) -> bool {
         let (sw, sx) = match &self.ctl {
             None => (None, None),
-            Some(ctl) => (Some(ctl.w.scheme()), Some(ctl.x.scheme())),
+            Some(ctl) => (Some(ctl.w.format()), Some(ctl.x.format())),
         };
         out.push(crate::serve::InferOp::Conv {
             name: self.name.clone(),
@@ -348,19 +353,19 @@ impl Layer for DepthwiseConv2d {
         assert_eq!(x.dim(1), self.c * h * w);
 
         let (mut xq, mut wq) = (x.clone(), self.w.clone());
+        let quant = ctx.quant_on();
         if let Some(ctl) = &mut self.ctl {
-            let sw = if ctl.w.needs_update(ctx.iter) {
-                ctl.w.maybe_update_from_data(ctx.iter, &self.w.data, &mut ctx.ledger)
-            } else {
-                ctl.w.scheme()
-            };
-            let sx = if ctl.x.needs_update(ctx.iter) {
-                ctl.x.maybe_update_from_data(ctx.iter, &x.data, &mut ctx.ledger)
-            } else {
-                ctl.x.scheme()
-            };
-            fake_quant_stats_inplace(&mut xq.data, sx);
-            fake_quant_stats_inplace(&mut wq.data, sw);
+            if quant {
+                if ctl.w.needs_update(ctx.iter) {
+                    ctl.w.maybe_update_from_data(ctx.iter, &self.w.data, &mut ctx.ledger);
+                    ctl.w.refresh_pc_scales(&self.w.data, self.c, 9, true);
+                }
+                if ctl.x.needs_update(ctx.iter) {
+                    ctl.x.maybe_update_from_data(ctx.iter, &x.data, &mut ctx.ledger);
+                }
+                fake_quant_stats_inplace_fmt(&mut xq.data, ctl.x.format());
+                ctl.w.fake_quant_weights(&mut wq.data, self.c, 9, true);
+            }
         }
 
         let mut out = Tensor::zeros(&[n, self.c * oh * ow]);
@@ -392,7 +397,7 @@ impl Layer for DepthwiseConv2d {
         }
         if ctx.training {
             ctx.stash.put(&self.h_x, xq, ctx.iter, &mut ctx.ledger);
-            if self.ctl.is_some() {
+            if self.ctl.is_some() && quant {
                 ctx.stash.put(&self.h_w, wq, ctx.iter, &mut ctx.ledger);
             }
         }
@@ -403,20 +408,22 @@ impl Layer for DepthwiseConv2d {
         let n = gout.dim(0);
         let (h, w) = (self.in_h, self.in_w);
         let (oh, ow) = self.out_hw();
+        let quant = ctx.quant_on();
         let mut gq = gout.clone();
         if let Some(ctl) = &mut self.ctl {
-            let sg = if ctl.g.needs_update(ctx.iter) {
-                ctl.g.maybe_update_from_data(ctx.iter, &gout.data, &mut ctx.ledger)
-            } else {
-                ctl.g.scheme()
-            };
-            ctx.ledger.trace_bits(&self.name, TensorKind::Gradient, ctx.iter, sg.bits);
-            fake_quant_stats_inplace(&mut gq.data, sg);
+            if quant {
+                if ctl.g.needs_update(ctx.iter) {
+                    ctl.g.maybe_update_from_data(ctx.iter, &gout.data, &mut ctx.ledger);
+                }
+                let fg = ctl.g.format();
+                ctx.ledger.trace_bits(&self.name, TensorKind::Gradient, ctx.iter, fg.storage_bits());
+                fake_quant_stats_inplace_fmt(&mut gq.data, fg);
+            }
         }
         self.last_g = Some(gout.clone());
 
         let xq = ctx.stash.take(&self.h_x);
-        let wq_owned = if self.ctl.is_some() {
+        let wq_owned = if self.ctl.is_some() && quant {
             Some(ctx.stash.take(&self.h_w))
         } else {
             None
@@ -483,7 +490,7 @@ impl Layer for DepthwiseConv2d {
     fn export_infer(&self, out: &mut Vec<crate::serve::InferOp>) -> bool {
         let (sw, sx) = match &self.ctl {
             None => (None, None),
-            Some(ctl) => (Some(ctl.w.scheme()), Some(ctl.x.scheme())),
+            Some(ctl) => (Some(ctl.w.format()), Some(ctl.x.format())),
         };
         out.push(crate::serve::InferOp::Depthwise {
             name: self.name.clone(),

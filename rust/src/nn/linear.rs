@@ -15,7 +15,8 @@
 
 use super::{Layer, QuantMode, TrainCtx};
 use crate::apt::LayerControllers;
-use crate::fixedpoint::quantize::fake_quant_stats_inplace;
+use crate::fixedpoint::quantize::fake_quant_stats_inplace_fmt;
+use crate::fixedpoint::Format;
 use crate::mem::StashHandle;
 use crate::tensor::Tensor;
 use crate::util::Pcg32;
@@ -67,31 +68,21 @@ impl Layer for Linear {
         let eng = crate::kernels::global();
         let recompute = ctx.stash.recompute();
         match &mut self.ctl {
-            None => {
-                if ctx.training {
-                    // f32 run: X̂ = X; the backward weight is the live `w`.
-                    ctx.stash.put(&self.h_x, x.clone(), ctx.iter, &mut ctx.ledger);
-                }
-                let mut y = x.matmul_with(&self.w, eng);
-                y.add_row_bias(&self.b.data);
-                y
-            }
-            Some(ctl) => {
+            Some(ctl) if ctx.quant_on() => {
                 // QEM/QPA at update iterations, then fake-quantize.
-                let sw = if ctl.w.needs_update(ctx.iter) {
-                    ctl.w.maybe_update_from_data(ctx.iter, &self.w.data, &mut ctx.ledger)
-                } else {
-                    ctl.w.scheme()
-                };
-                let sx = if ctl.x.needs_update(ctx.iter) {
-                    ctl.x.maybe_update_from_data(ctx.iter, &x.data, &mut ctx.ledger)
-                } else {
-                    ctl.x.scheme()
-                };
+                let (din, dout) = (self.w.dim(0), self.w.dim(1));
+                if ctl.w.needs_update(ctx.iter) {
+                    ctl.w.maybe_update_from_data(ctx.iter, &self.w.data, &mut ctx.ledger);
+                    // per-channel scales freeze with the per-tensor decision
+                    ctl.w.refresh_pc_scales(&self.w.data, din, dout, false);
+                }
+                if ctl.x.needs_update(ctx.iter) {
+                    ctl.x.maybe_update_from_data(ctx.iter, &x.data, &mut ctx.ledger);
+                }
                 let mut xq = x.clone();
-                eng.fake_quant_stats(&mut xq.data, sx);
+                eng.fake_quant_fmt(&mut xq.data, ctl.x.format());
                 let mut wq = self.w.clone();
-                eng.fake_quant_stats(&mut wq.data, sw);
+                ctl.w.fake_quant_weights(&mut wq.data, din, dout, false);
                 let mut y = xq.matmul_with(&wq, eng);
                 y.add_row_bias(&self.b.data);
                 if ctx.training {
@@ -106,55 +97,69 @@ impl Layer for Linear {
                 }
                 y
             }
+            // Float path: no controllers, or quantization not yet live
+            // (`--quant-delay`). X̂ = X; the backward weight is the live `w`.
+            _ => {
+                if ctx.training {
+                    ctx.stash.put(&self.h_x, x.clone(), ctx.iter, &mut ctx.ledger);
+                }
+                let mut y = x.matmul_with(&self.w, eng);
+                y.add_row_bias(&self.b.data);
+                y
+            }
         }
     }
 
     fn backward(&mut self, g: &Tensor, ctx: &mut TrainCtx) -> Tensor {
         let gq = match &mut self.ctl {
-            None => g.clone(),
-            Some(ctl) => {
-                let sg = match self.grad_bits_override {
+            Some(ctl) if ctx.quant_on() => {
+                let fg = match self.grad_bits_override {
                     Some(bits) => {
                         // static per-layer override (observation ablations)
-                        crate::fixedpoint::Scheme::for_range(g.max_abs(), bits)
+                        Format::FixedPoint(crate::fixedpoint::Scheme::for_range(g.max_abs(), bits))
                     }
                     None => {
                         if ctl.g.needs_update(ctx.iter) {
-                            ctl.g.maybe_update_from_data(ctx.iter, &g.data, &mut ctx.ledger)
-                        } else {
-                            ctl.g.scheme()
+                            ctl.g.maybe_update_from_data(ctx.iter, &g.data, &mut ctx.ledger);
                         }
+                        ctl.g.format()
                     }
                 };
-                ctx.ledger.trace_bits(&self.name, crate::fixedpoint::TensorKind::Gradient, ctx.iter, sg.bits);
+                ctx.ledger.trace_bits(
+                    &self.name,
+                    crate::fixedpoint::TensorKind::Gradient,
+                    ctx.iter,
+                    fg.storage_bits(),
+                );
                 let mut gq = g.clone();
-                fake_quant_stats_inplace(&mut gq.data, sg);
+                fake_quant_stats_inplace_fmt(&mut gq.data, fg);
                 gq
             }
+            _ => g.clone(),
         };
         self.last_g = Some(g.clone());
         let eng = crate::kernels::global();
         // Reconstruct the saved operands: stashed X̂ (and Ŵ for quantized
         // runs), or — with recompute — re-derive both from the raw stashed
-        // input and the schemes frozen at forward time (bit-identical under
+        // input and the formats frozen at forward time (bit-identical under
         // F32 storage; parameters have not changed since forward).
         let (x_used, wq_owned): (Tensor, Option<Tensor>) = if ctx.stash.recompute() {
             let x = ctx.stash.take(&self.h_x);
             match &self.ctl {
-                None => (x, None),
-                Some(ctl) => {
+                Some(ctl) if ctx.quant_on() => {
                     let mut xq = x;
-                    eng.fake_quant_stats(&mut xq.data, ctl.x.scheme());
+                    eng.fake_quant_fmt(&mut xq.data, ctl.x.format());
                     let mut wq = self.w.clone();
-                    eng.fake_quant_stats(&mut wq.data, ctl.w.scheme());
+                    ctl.w.fake_quant_weights(&mut wq.data, self.w.dim(0), self.w.dim(1), false);
                     (xq, Some(wq))
                 }
+                _ => (x, None),
             }
         } else {
             let x = ctx.stash.take(&self.h_x);
             let wq = match &self.ctl {
-                None => None,
-                Some(_) => Some(ctx.stash.take(&self.h_w)),
+                Some(_) if ctx.quant_on() => Some(ctx.stash.take(&self.h_w)),
+                _ => None,
             };
             (x, wq)
         };
@@ -208,7 +213,7 @@ impl Layer for Linear {
     fn export_infer(&self, out: &mut Vec<crate::serve::InferOp>) -> bool {
         let (sw, sx) = match &self.ctl {
             None => (None, None),
-            Some(ctl) => (Some(ctl.w.scheme()), Some(ctl.x.scheme())),
+            Some(ctl) => (Some(ctl.w.format()), Some(ctl.x.format())),
         };
         out.push(crate::serve::InferOp::Linear {
             name: self.name.clone(),
@@ -225,6 +230,7 @@ impl Layer for Linear {
 mod tests {
     use super::*;
     use crate::apt::AptConfig;
+    use crate::fixedpoint::quantize::fake_quant_stats_inplace;
     use crate::fixedpoint::Scheme;
     use crate::util::Pcg32;
 

@@ -54,6 +54,12 @@ pub struct TrainCtx {
     pub iter: u64,
     pub training: bool,
     pub ledger: Ledger,
+    /// First iteration at which quantization is live (`apt train
+    /// --quant-delay N`). Iterations below this train in plain f32 — the
+    /// layers skip controller updates and fake-quant entirely — then the
+    /// controllers warm-start from the float weights at `quant_from`.
+    /// 0 (the default) is bit-identical to quantizing from the start.
+    pub quant_from: u64,
     /// Every tensor saved for backward lives here, behind the run's
     /// [`StashPolicy`] (DESIGN.md §Activation-Memory). `new()` uses F32
     /// storage without recompute — bit-identical to the historical
@@ -67,6 +73,7 @@ impl TrainCtx {
             iter: 0,
             training: true,
             ledger: Ledger::new(),
+            quant_from: 0,
             stash: ActivationStash::f32_default(),
         }
     }
@@ -78,8 +85,16 @@ impl TrainCtx {
             iter: 0,
             training: true,
             ledger: Ledger::new(),
+            quant_from: 0,
             stash: ActivationStash::new(policy, recompute),
         }
+    }
+
+    /// Is quantization live at the current iteration? Layers consult this
+    /// in both forward and backward (the same `iter`, so the two passes of
+    /// one step always agree).
+    pub fn quant_on(&self) -> bool {
+        self.iter >= self.quant_from
     }
 }
 

@@ -11,8 +11,8 @@
 
 use super::{QuantMode, TrainCtx};
 use crate::apt::LayerControllers;
-use crate::fixedpoint::quantize::fake_quant_stats_inplace;
-use crate::fixedpoint::{Scheme, TensorKind};
+use crate::fixedpoint::quantize::fake_quant_stats_inplace_fmt;
+use crate::fixedpoint::TensorKind;
 use crate::mem::StashHandle;
 use crate::tensor::Tensor;
 use crate::util::Pcg32;
@@ -151,46 +151,74 @@ impl Seq2Seq {
         out
     }
 
-    /// Quantize a weight in place per its controller; returns scheme used.
-    fn qw(ctl: &mut Option<Vec<LayerControllers>>, idx: usize, w: &Tensor, iter: u64, ledger: &mut crate::apt::Ledger) -> Tensor {
+    /// Quantize a weight in place per its controller's format (per-channel
+    /// scales over output columns when configured). `quant` is false while
+    /// a `--quant-delay` holds the run in f32.
+    fn qw(
+        ctl: &mut Option<Vec<LayerControllers>>,
+        idx: usize,
+        w: &Tensor,
+        iter: u64,
+        quant: bool,
+        ledger: &mut crate::apt::Ledger,
+    ) -> Tensor {
         let mut wq = w.clone();
+        if !quant {
+            return wq;
+        }
         if let Some(cs) = ctl {
             let c = &mut cs[idx];
-            let s = if c.w.needs_update(iter) {
-                c.w.maybe_update_from_data(iter, &w.data, ledger)
-            } else {
-                c.w.scheme()
-            };
-            fake_quant_stats_inplace(&mut wq.data, s);
+            if c.w.needs_update(iter) {
+                c.w.maybe_update_from_data(iter, &w.data, ledger);
+                c.w.refresh_pc_scales(&w.data, w.dim(0), w.dim(1), false);
+            }
+            c.w.fake_quant_weights(&mut wq.data, w.dim(0), w.dim(1), false);
         }
         wq
     }
 
-    fn qx(ctl: &mut Option<Vec<LayerControllers>>, idx: usize, x: &Tensor, iter: u64, ledger: &mut crate::apt::Ledger) -> Tensor {
+    fn qx(
+        ctl: &mut Option<Vec<LayerControllers>>,
+        idx: usize,
+        x: &Tensor,
+        iter: u64,
+        quant: bool,
+        ledger: &mut crate::apt::Ledger,
+    ) -> Tensor {
         let mut xq = x.clone();
+        if !quant {
+            return xq;
+        }
         if let Some(cs) = ctl {
             let c = &mut cs[idx];
-            let s = if c.x.needs_update(iter) {
-                c.x.maybe_update_from_data(iter, &x.data, ledger)
-            } else {
-                c.x.scheme()
-            };
-            fake_quant_stats_inplace(&mut xq.data, s);
+            if c.x.needs_update(iter) {
+                c.x.maybe_update_from_data(iter, &x.data, ledger);
+            }
+            fake_quant_stats_inplace_fmt(&mut xq.data, c.x.format());
         }
         xq
     }
 
-    fn qg(ctl: &mut Option<Vec<LayerControllers>>, idx: usize, g: &Tensor, iter: u64, ledger: &mut crate::apt::Ledger) -> Tensor {
+    fn qg(
+        ctl: &mut Option<Vec<LayerControllers>>,
+        idx: usize,
+        g: &Tensor,
+        iter: u64,
+        quant: bool,
+        ledger: &mut crate::apt::Ledger,
+    ) -> Tensor {
         let mut gq = g.clone();
+        if !quant {
+            return gq;
+        }
         if let Some(cs) = ctl {
             let c = &mut cs[idx];
-            let s = if c.g.needs_update(iter) {
-                c.g.maybe_update_from_data(iter, &g.data, ledger)
-            } else {
-                c.g.scheme()
-            };
-            ledger.trace_bits(PROJ_NAMES[idx], TensorKind::Gradient, iter, s.bits);
-            fake_quant_stats_inplace(&mut gq.data, s);
+            if c.g.needs_update(iter) {
+                c.g.maybe_update_from_data(iter, &g.data, ledger);
+            }
+            let fg = c.g.format();
+            ledger.trace_bits(PROJ_NAMES[idx], TensorKind::Gradient, iter, fg.storage_bits());
+            fake_quant_stats_inplace_fmt(&mut gq.data, fg);
         }
         gq
     }
@@ -261,13 +289,14 @@ impl Seq2Seq {
         let s_len = src[0].len();
         let t_len = tgt[0].len();
         let iter = ctx.iter;
+        let quant = ctx.quant_on();
 
         // quantized weights for this step
-        let enc_wx_q = Self::qw(&mut self.ctl, 0, &self.enc_wx, iter, &mut ctx.ledger);
-        let enc_wh_q = Self::qw(&mut self.ctl, 1, &self.enc_wh, iter, &mut ctx.ledger);
-        let dec_wx_q = Self::qw(&mut self.ctl, 2, &self.dec_wx, iter, &mut ctx.ledger);
-        let dec_wh_q = Self::qw(&mut self.ctl, 3, &self.dec_wh, iter, &mut ctx.ledger);
-        let why_q = Self::qw(&mut self.ctl, 4, &self.why, iter, &mut ctx.ledger);
+        let enc_wx_q = Self::qw(&mut self.ctl, 0, &self.enc_wx, iter, quant, &mut ctx.ledger);
+        let enc_wh_q = Self::qw(&mut self.ctl, 1, &self.enc_wh, iter, quant, &mut ctx.ledger);
+        let dec_wx_q = Self::qw(&mut self.ctl, 2, &self.dec_wx, iter, quant, &mut ctx.ledger);
+        let dec_wh_q = Self::qw(&mut self.ctl, 3, &self.dec_wh, iter, quant, &mut ctx.ledger);
+        let why_q = Self::qw(&mut self.ctl, 4, &self.why, iter, quant, &mut ctx.ledger);
 
         // ---------------- forward ----------------
         // BPTT operands (quantized embeddings / hidden inputs / softmax
@@ -285,8 +314,8 @@ impl Seq2Seq {
         for t in 0..s_len {
             let toks: Vec<usize> = src.iter().map(|s| s[t]).collect();
             let e = Self::embed(&self.emb_src, &toks, d);
-            let eq = Self::qx(&mut self.ctl, 0, &e, iter, &mut ctx.ledger);
-            let hq = Self::qx(&mut self.ctl, 1, enc_h.last().unwrap(), iter, &mut ctx.ledger);
+            let eq = Self::qx(&mut self.ctl, 0, &e, iter, quant, &mut ctx.ledger);
+            let hq = Self::qx(&mut self.ctl, 1, enc_h.last().unwrap(), iter, quant, &mut ctx.ledger);
             let mut h = eq.matmul_with(&enc_wx_q, eng);
             h.add_inplace(&hq.matmul_with(&enc_wh_q, eng));
             h.add_row_bias(&self.enc_b.data);
@@ -308,13 +337,13 @@ impl Seq2Seq {
                 .map(|s| if t == 0 { bos } else { s[t - 1] })
                 .collect();
             let e = Self::embed(&self.emb_tgt, &toks, d);
-            let eq = Self::qx(&mut self.ctl, 2, &e, iter, &mut ctx.ledger);
-            let hq = Self::qx(&mut self.ctl, 3, dec_h.last().unwrap(), iter, &mut ctx.ledger);
+            let eq = Self::qx(&mut self.ctl, 2, &e, iter, quant, &mut ctx.ledger);
+            let hq = Self::qx(&mut self.ctl, 3, dec_h.last().unwrap(), iter, quant, &mut ctx.ledger);
             let mut h = eq.matmul_with(&dec_wx_q, eng);
             h.add_inplace(&hq.matmul_with(&dec_wh_q, eng));
             h.add_row_bias(&self.dec_b.data);
             tanh_vec(&mut h.data);
-            let sq = Self::qx(&mut self.ctl, 4, &h, iter, &mut ctx.ledger);
+            let sq = Self::qx(&mut self.ctl, 4, &h, iter, quant, &mut ctx.ledger);
             let mut logits = sq.matmul_with(&why_q, eng);
             logits.add_row_bias(&self.by.data);
             if train {
@@ -353,7 +382,7 @@ impl Seq2Seq {
             let mut dl = dlogits[t].clone();
             dl.scale_inplace(scale);
             // quantize dlogits (ΔX̂ for the Why projection)
-            let dlq = Self::qg(&mut self.ctl, 4, &dl, iter, &mut ctx.ledger);
+            let dlq = Self::qg(&mut self.ctl, 4, &dl, iter, quant, &mut ctx.ledger);
             // why grads: sᵀ·ĝ ; by: col sums
             let sq = ctx.stash.take(&self.dec_handles[t].2);
             self.grads[8].add_inplace(&sq.t().matmul_with(&dlq, eng));
@@ -370,7 +399,7 @@ impl Seq2Seq {
                 *dv *= 1.0 - hv * hv;
             }
             // quantize recurrent gradient (ΔX̂ for dec projections)
-            let dsq = Self::qg(&mut self.ctl, 3, &ds, iter, &mut ctx.ledger);
+            let dsq = Self::qg(&mut self.ctl, 3, &ds, iter, quant, &mut ctx.ledger);
             let xq = ctx.stash.take(&self.dec_handles[t].0);
             let hq = ctx.stash.take(&self.dec_handles[t].1);
             self.grads[5].add_inplace(&xq.t().matmul_with(&dsq, eng));
@@ -397,7 +426,7 @@ impl Seq2Seq {
             for (dv, &hv) in dhe.data.iter_mut().zip(&enc_h[t + 1].data) {
                 *dv *= 1.0 - hv * hv;
             }
-            let dhq = Self::qg(&mut self.ctl, 1, &dhe, iter, &mut ctx.ledger);
+            let dhq = Self::qg(&mut self.ctl, 1, &dhe, iter, quant, &mut ctx.ledger);
             let xq = ctx.stash.take(&self.enc_handles[t].0);
             let hq = ctx.stash.take(&self.enc_handles[t].1);
             self.grads[2].add_inplace(&xq.t().matmul_with(&dhq, eng));

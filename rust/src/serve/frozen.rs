@@ -134,8 +134,11 @@ impl FrozenModel {
         &self.label
     }
 
-    /// Serving precision derived from the frozen forward schemes:
-    /// `"f32"`, `"int8"` or `"int16"` (the widest scheme wins).
+    /// Serving precision derived from the frozen forward formats:
+    /// `"f32"`, `"int8"` or `"int16"` for fixed-point (the widest scheme
+    /// wins), a family label (`"e4m3"`, `"e5m2"`, `"int4"`) when the model
+    /// trained in that family, or `"int4w"` under the weight-only int4
+    /// compile override.
     pub fn precision(&self) -> &str {
         &self.compiled.precision
     }

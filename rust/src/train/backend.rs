@@ -146,6 +146,15 @@ impl HostBackend {
     pub fn stash(&self) -> &ActivationStash {
         &self.ctx.stash
     }
+
+    /// Keep every compute controller dormant until step `n`: forward and
+    /// backward run pure f32 for iterations `< n`, then the quantized path
+    /// activates with controllers warm-starting from the float weights
+    /// (CLI `--quant-delay`). `n = 0` (the default) leaves every step
+    /// quantized — bit-identical to never calling this.
+    pub fn set_quant_delay(&mut self, n: u64) {
+        self.ctx.quant_from = n;
+    }
 }
 
 impl Backend for HostBackend {
@@ -241,6 +250,12 @@ impl Seq2SeqBackend {
     /// The activation stash (byte accounting, adaptive storage controllers).
     pub fn stash(&self) -> &ActivationStash {
         &self.ctx.stash
+    }
+
+    /// Float warm-up: quantized BPTT stays dormant until step `n` (see
+    /// [`HostBackend::set_quant_delay`]).
+    pub fn set_quant_delay(&mut self, n: u64) {
+        self.ctx.quant_from = n;
     }
 }
 

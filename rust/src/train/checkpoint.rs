@@ -44,7 +44,7 @@ use super::{HostBackend, Session};
 use crate::apt::{ControllerState, Ledger};
 use crate::apt::ledger::Event;
 use crate::compiler::{GemmKind, ShapeKey, TuneEntry};
-use crate::fixedpoint::TensorKind;
+use crate::fixedpoint::{FormatFamily, TensorKind};
 use crate::kernels::Tile;
 use crate::nn::Sequential;
 
@@ -70,7 +70,15 @@ const MAGIC: &str = "aptckpt";
 // host saves and all older artifacts, which keep loading (a missing
 // section restores fine into stateless policies and is rejected read-only
 // by error-feedback ones — see `QuantAllReduce::check_compress`).
-const VERSION: &str = "v3";
+//
+// v4 (format-family axis, DESIGN.md §Formats): every controller record
+// (`c`/`cc`/`sc`) carries a format-family tag (`fixed`/`e4m3`/`e5m2`/
+// `int4`) between the record head and the `bits` field, and a `pcs`
+// section after `stash` holds per-channel weight scale exponents
+// (`pc <layer> <n> <s…>`, empty for per-tensor runs). v1–v3 files keep
+// loading read-only with family = fixed and no per-channel scales —
+// pinned by the fixture checkpoints under rust/tests/fixtures/.
+const VERSION: &str = "v4";
 
 fn kind_label(k: TensorKind) -> &'static str {
     k.label() // "W" | "X" | "dX"
@@ -138,7 +146,8 @@ fn render_host(iter: u64, losses: &[f32], host: &mut HostBackend) -> String {
             let st = c.snapshot();
             let _ = writeln!(
                 ctls,
-                "c {layer} {kind} {} {} {:08x} {} {:08x} {} {}",
+                "c {layer} {kind} {} {} {} {:08x} {} {:08x} {} {}",
+                st.family.tag(),
                 st.bits,
                 st.s,
                 st.ema_value.to_bits(),
@@ -212,7 +221,8 @@ fn render_ctl_section(
     for (name, st) in ctls {
         let _ = writeln!(
             out,
-            "{rec} {name} {} {} {:08x} {} {:08x} {} {}",
+            "{rec} {name} {} {} {} {:08x} {} {:08x} {} {}",
+            st.family.tag(),
             st.bits,
             st.s,
             st.ema_value.to_bits(),
@@ -224,12 +234,34 @@ fn render_ctl_section(
     }
 }
 
+/// Render the v4 `pcs` section: per-channel weight scale exponents, one
+/// `pc <layer> <n> <s…>` record per layer whose weight controller carries a
+/// per-channel scale vector (none under per-tensor quantization).
+fn render_pc_section(out: &mut String, host: &mut HostBackend) {
+    let mut rows = String::new();
+    let mut n = 0usize;
+    host.net.visit_controllers(&mut |layer, lc| {
+        let scales = lc.w.pc_scales();
+        if !scales.is_empty() {
+            let _ = write!(rows, "pc {layer} {}", scales.len());
+            for s in scales {
+                let _ = write!(rows, " {s}");
+            }
+            rows.push('\n');
+            n += 1;
+        }
+    });
+    let _ = writeln!(out, "pcs {n}");
+    out.push_str(&rows);
+}
+
 /// Serialize a host session (no communication controllers).
 pub(super) fn save(session: &mut Session<HostBackend>, path: &Path) -> Result<()> {
     let stash = session.backend.ctx.stash.snapshot_controllers();
     let mut out = render_host(session.iter, &session.losses, &mut session.backend);
     render_ctl_section(&mut out, "comm", "cc", &[]);
     render_ctl_section(&mut out, "stash", "sc", &stash);
+    render_pc_section(&mut out, &mut session.backend);
     let _ = writeln!(out, "end");
     std::fs::write(path, out).with_context(|| format!("writing checkpoint {path:?}"))?;
     Ok(())
@@ -262,6 +294,7 @@ pub(super) fn save_parallel(session: &mut Session<ParallelBackend>, path: &Path)
     let mut out = render_host(iter, &losses, &mut group.host);
     render_ctl_section(&mut out, "comm", "cc", &group.comm.snapshot());
     render_ctl_section(&mut out, "stash", "sc", &stash);
+    render_pc_section(&mut out, &mut group.host);
     render_compress_section(&mut out, &group.comm.compress_snapshot());
     let _ = writeln!(out, "end");
     std::fs::write(path, out).with_context(|| format!("writing checkpoint {path:?}"))?;
@@ -351,6 +384,9 @@ pub struct Checkpoint {
     /// (`--act-bits adaptive` runs, DESIGN.md §Activation-Memory); empty
     /// for other policies and for v1/v2 files.
     stash: Vec<(String, ControllerState)>,
+    /// Per-channel weight scale exponents (v4 `pcs` section, DESIGN.md
+    /// §Formats); empty for per-tensor runs and for v1–v3 files.
+    pc: Vec<(String, Vec<i32>)>,
     /// Gradient-compression state (policy label + error-feedback
     /// residuals) of data-parallel saves; `None` for host saves and for
     /// artifacts predating the optional `compress` section.
@@ -491,12 +527,19 @@ impl Checkpoint {
         {
             let mut i = 0usize;
             let mut err: Option<String> = None;
-            net.visit_controllers(&mut |layer, _| {
+            net.visit_controllers(&mut |layer, lc| {
                 if err.is_none() {
                     match self.ctls.get(i) {
                         None => err = Some(format!("checkpoint has only {i} controller sets")),
                         Some(r) if r.layer != layer => {
                             err = Some(format!("controller mismatch: {} vs {layer}", r.layer))
+                        }
+                        Some(r) if r.st[0].family != lc.w.cfg.family => {
+                            err = Some(format!(
+                                "controller format-family mismatch at {layer}: checkpoint {} vs session {}",
+                                r.st[0].family.label(),
+                                lc.w.cfg.family.label()
+                            ))
                         }
                         Some(_) => {}
                     }
@@ -508,6 +551,11 @@ impl Checkpoint {
             }
             if i != self.ctls.len() {
                 bail!("net has {i} controller sets, checkpoint has {}", self.ctls.len());
+            }
+            for (layer, _) in &self.pc {
+                if !self.ctls.iter().any(|r| &r.layer == layer) {
+                    bail!("per-channel scales for unknown layer {layer:?}");
+                }
             }
         }
         {
@@ -547,11 +595,18 @@ impl Checkpoint {
         }
         {
             let mut i = 0usize;
-            net.visit_controllers(&mut |_, lc| {
+            net.visit_controllers(&mut |layer, lc| {
                 let r = &self.ctls[i];
                 lc.w.restore(&r.st[0]);
                 lc.x.restore(&r.st[1]);
                 lc.g.restore(&r.st[2]);
+                let scales = self
+                    .pc
+                    .iter()
+                    .find(|(l, _)| l.as_str() == layer)
+                    .map(|(_, s)| s.clone())
+                    .unwrap_or_default();
+                lc.w.set_pc_scales(scales);
                 i += 1;
             });
         }
@@ -568,8 +623,16 @@ impl Checkpoint {
 
 /// Parse the state payload of one `cc`/`sc` controller record — the shared
 /// layout behind [`render_ctl_section`] (tag and name are consumed by the
-/// caller).
-fn parse_ctl_state(lx: &mut Lexer<'_>) -> Result<ControllerState> {
+/// caller). v4 records lead with a format-family tag; older files are all
+/// fixed-point.
+fn parse_ctl_state(lx: &mut Lexer<'_>, v4: bool) -> Result<ControllerState> {
+    let family = if v4 {
+        let tag = lx.next()?;
+        FormatFamily::parse(tag)
+            .ok_or_else(|| anyhow!("unknown format family {tag:?} in controller record"))?
+    } else {
+        FormatFamily::FixedPoint
+    };
     Ok(ControllerState {
         bits: lx.u8()?,
         s: lx.i32()?,
@@ -578,6 +641,7 @@ fn parse_ctl_state(lx: &mut Lexer<'_>) -> Result<ControllerState> {
         prev_range: lx.f32_hex()?,
         next_update: lx.u64()?,
         updates: lx.u64()?,
+        family,
     })
 }
 
@@ -585,16 +649,18 @@ fn parse(text: &str) -> Result<Checkpoint> {
     let mut lx = Lexer { toks: text.split_ascii_whitespace() };
     lx.expect(MAGIC)?;
     // Older files are forward-parseable: v1 lacks the per-tensor clamp
-    // counts and the `comm` section, v2 lacks the `stash` section — both
-    // keep loading (with the missing state empty) instead of erroring.
+    // counts and the `comm` section, v2 lacks the `stash` section, v3
+    // lacks the format-family tags and the `pcs` section — all keep
+    // loading (with the missing state defaulted) instead of erroring.
     // Pinned by the committed fixtures under rust/tests/fixtures/.
     let version = lx.next()?;
-    let (v1, has_stash) = match version {
-        "v1" => (true, false),
-        "v2" => (false, false),
-        v if v == VERSION => (false, true),
+    let (v1, has_stash, v4) = match version {
+        "v1" => (true, false, false),
+        "v2" => (false, false, false),
+        "v3" => (false, true, false),
+        v if v == VERSION => (false, true, true),
         other => {
-            bail!("unsupported checkpoint version {other:?} (this build reads v1/v2/{VERSION})")
+            bail!("unsupported checkpoint version {other:?} (this build reads v1/v2/v3/{VERSION})")
         }
     };
 
@@ -643,6 +709,7 @@ fn parse(text: &str) -> Result<Checkpoint> {
             prev_range: 0.0,
             next_update: 0,
             updates: 0,
+            family: FormatFamily::FixedPoint,
         }; 3];
         let mut layer = String::new();
         for (j, want) in ["w", "x", "g"].iter().enumerate() {
@@ -654,7 +721,7 @@ fn parse(text: &str) -> Result<Checkpoint> {
                 bail!("controller record order broken: {l} vs {layer}");
             }
             lx.expect(want)?;
-            states[j] = parse_ctl_state(&mut lx)?;
+            states[j] = parse_ctl_state(&mut lx, v4)?;
         }
         ctls.push(CtlRec { layer, st: states });
     }
@@ -716,7 +783,7 @@ fn parse(text: &str) -> Result<Checkpoint> {
     for _ in 0..n_comm {
         lx.expect("cc")?;
         let name = lx.next()?.to_string();
-        comm.push((name, parse_ctl_state(&mut lx)?));
+        comm.push((name, parse_ctl_state(&mut lx, v4)?));
     }
 
     let n_stash = if has_stash {
@@ -729,7 +796,25 @@ fn parse(text: &str) -> Result<Checkpoint> {
     for _ in 0..n_stash {
         lx.expect("sc")?;
         let name = lx.next()?.to_string();
-        stash.push((name, parse_ctl_state(&mut lx)?));
+        stash.push((name, parse_ctl_state(&mut lx, v4)?));
+    }
+
+    // v4: per-channel weight scale exponents (`pcs <n>` + `pc <layer>
+    // <len> <s…>` records). Older files have none.
+    let mut pc: Vec<(String, Vec<i32>)> = Vec::new();
+    if v4 {
+        lx.expect("pcs")?;
+        let n_pc = lx.usize()?;
+        for _ in 0..n_pc {
+            lx.expect("pc")?;
+            let layer = lx.next()?.to_string();
+            let len = lx.usize()?;
+            let mut scales = Vec::with_capacity(len);
+            for _ in 0..len {
+                scales.push(lx.i32()?);
+            }
+            pc.push((layer, scales));
+        }
     }
 
     // Optional gradient-compression section (see the VERSION note):
@@ -786,6 +871,7 @@ fn parse(text: &str) -> Result<Checkpoint> {
         data_rng,
         comm,
         stash,
+        pc,
         compress,
         tune,
     })

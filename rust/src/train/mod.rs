@@ -514,6 +514,21 @@ pub struct SessionBuilder {
     recompute: bool,
     compress: Option<CompressPolicy>,
     node_size: usize,
+    quant_delay: u64,
+}
+
+/// Under a quantization delay the Adaptive init phase (probe every
+/// iteration) shifts to begin at activation, so the controllers still get
+/// their dense warm-up on the first *quantized* steps. Delay 0 returns the
+/// mode untouched — the bit-identity pin.
+fn delayed_mode(mode: QuantMode, delay: u64) -> QuantMode {
+    match mode {
+        QuantMode::Adaptive(mut cfg) if delay > 0 => {
+            cfg.init_phase_iters += delay;
+            QuantMode::Adaptive(cfg)
+        }
+        m => m,
+    }
 }
 
 impl SessionBuilder {
@@ -537,6 +552,7 @@ impl SessionBuilder {
             recompute: false,
             compress: None,
             node_size: 1,
+            quant_delay: 0,
         }
     }
 
@@ -657,6 +673,19 @@ impl SessionBuilder {
         self
     }
 
+    /// Float warm-up before quantization (CLI `--quant-delay`): the first
+    /// `n` steps run pure f32 forward/backward, then the controllers
+    /// activate, warm-starting from the float weights. Under
+    /// [`QuantMode::Adaptive`] the init probe phase shifts to begin at
+    /// step `n`, so the probe-every-iteration warm-up covers the first
+    /// quantized steps. `n = 0` (the default) is bit-identical to an
+    /// undelayed run. Compute-side only — the data-parallel comm precision
+    /// is unaffected (wire compression has its own adaptive warm-up).
+    pub fn quant_delay(mut self, n: u64) -> Self {
+        self.quant_delay = n;
+        self
+    }
+
     /// Hierarchical node size of the all-reduce (CLI `--node-size`;
     /// default 1 = flat). Replicas are grouped into consecutive
     /// power-of-two "nodes": the intra-node hop aggregates exactly, only
@@ -672,7 +701,8 @@ impl SessionBuilder {
     /// Panics on an unknown model/layer (the historical contract);
     /// [`build_parallel`](Self::build_parallel) is the `Result` flavor.
     pub fn build<'h>(self) -> Session<'h, HostBackend> {
-        let (name, net) = instantiate_net(&self.model, self.mode, self.seed, &self.grad_overrides)
+        let mode = delayed_mode(self.mode, self.quant_delay);
+        let (name, net) = instantiate_net(&self.model, mode, self.seed, &self.grad_overrides)
             .unwrap_or_else(|e| panic!("{e}"));
         let data = make_data(self.data, self.seed, self.noise);
         let opt = make_optimizer(self.optimizer, self.lr);
@@ -689,6 +719,7 @@ impl SessionBuilder {
             label,
         );
         backend.set_stash(self.stash, self.recompute);
+        backend.set_quant_delay(self.quant_delay);
         Session::with_backend(backend)
     }
 
@@ -742,7 +773,9 @@ impl SessionBuilder {
             recompute,
             compress,
             node_size,
+            quant_delay,
         } = self;
+        let mode = delayed_mode(mode, quant_delay);
         let policy = compress.unwrap_or_else(|| comm.default_compress());
         // One bit-identical instantiation per replica: the same
         // `instantiate_net` sequence `build()` runs, once per replica.
@@ -779,6 +812,7 @@ impl SessionBuilder {
             .collect();
         let mut group = ReplicaGroup::new(host, peer_parts, comm, policy, node_size)?;
         group.set_stash(stash, recompute);
+        group.set_quant_delay(quant_delay);
         Ok(Session::with_backend(ParallelBackend::new(group, full)))
     }
 }
@@ -858,6 +892,38 @@ mod tests {
         assert!(run.ledger.total_updates() > 0);
         assert_eq!(run.ledger.total_iters, 20);
         assert_eq!(run.label, "mlp-adaptive");
+    }
+
+    #[test]
+    fn quant_delay_zero_is_bit_identical_and_delay_floats_first() {
+        let mut cfg = AptConfig::default();
+        cfg.init_phase_iters = 2;
+        // delay 0 must be a no-op down to the bits.
+        let base = SessionBuilder::classifier("mlp").mode(QuantMode::Adaptive(cfg)).train(12);
+        let d0 = SessionBuilder::classifier("mlp")
+            .mode(QuantMode::Adaptive(cfg))
+            .quant_delay(0)
+            .train(12);
+        for (i, (a, b)) in base.losses.iter().zip(&d0.losses).enumerate() {
+            assert_eq!(a.to_bits(), b.to_bits(), "delay-0 loss {i} diverged");
+        }
+        // delay n: the first n steps are the float trajectory, bit for bit
+        // (controllers exist but stay dormant), and the run still finishes.
+        let f32run = SessionBuilder::classifier("mlp").train(12);
+        let d6 = SessionBuilder::classifier("mlp")
+            .mode(QuantMode::Adaptive(cfg))
+            .quant_delay(6)
+            .train(12);
+        for i in 0..6 {
+            assert_eq!(
+                f32run.losses[i].to_bits(),
+                d6.losses[i].to_bits(),
+                "pre-activation loss {i} diverged from float"
+            );
+        }
+        assert_eq!(d6.losses.len(), 12);
+        // After activation the controllers actually record decisions.
+        assert!(d6.ledger.total_updates() > 0, "controllers never activated");
     }
 
     #[test]

@@ -35,12 +35,14 @@ use anyhow::{bail, Result};
 
 use super::compress::{
     aggregate_wire_bytes, CompressPolicy, CompressSnapshot, Compressor, IdentityCompressor,
-    QuantizeCompressor, ReduceError, TopKCompressor, TopKQuantizeCompressor, WireStats,
+    MinifloatCompressor, QuantizeCompressor, ReduceError, TopKCompressor,
+    TopKQuantizeCompressor, WireStats,
 };
 use crate::apt::{AptConfig, ControllerState, Ledger};
+use crate::fixedpoint::MinifloatKind;
 
 /// Bit-width policy for the gradient all-reduce payload (CLI
-/// `--comm-bits {8,16,adaptive,f32}`).
+/// `--comm-bits {8,16,e4m3,e5m2,adaptive,f32}`).
 #[derive(Clone, Copy, Debug)]
 pub enum CommPrecision {
     /// Exchange raw f32 gradients (no communication quantization); the
@@ -49,6 +51,10 @@ pub enum CommPrecision {
     /// Fixed-point codes at a static bit-width (8 or 16) with per-tensor
     /// range tracking (the scheme's resolution still follows the data).
     Static(u8),
+    /// Scaled OCP minifloat byte codes (e4m3 or e5m2): int8's wire
+    /// footprint with relative error. Payloads decode to f32 and travel the
+    /// deterministic tree (minifloat sums are not exact).
+    Minifloat(MinifloatKind),
     /// Full QEM/QPA adaptation of the communication bit-width per gradient
     /// tensor, as the paper adapts compute bit-widths.
     Adaptive(AptConfig),
@@ -62,41 +68,55 @@ impl CommPrecision {
             "f32" | "float32" => CommPrecision::F32,
             "8" | "int8" => CommPrecision::Static(8),
             "16" | "int16" => CommPrecision::Static(16),
+            "e4m3" => CommPrecision::Minifloat(MinifloatKind::E4M3),
+            "e5m2" => CommPrecision::Minifloat(MinifloatKind::E5M2),
             "adaptive" => {
                 let mut cfg = AptConfig::default();
                 cfg.init_phase_iters = iters / 10;
                 CommPrecision::Adaptive(cfg)
             }
-            other => bail!("unknown --comm-bits {other:?} (expected 8, 16, adaptive or f32)"),
+            other => bail!(
+                "unknown --comm-bits {other:?} (expected 8, 16, e4m3, e5m2, adaptive or f32)"
+            ),
         })
     }
 
-    /// Display label (`"f32"`, `"int8"`, `"int16"`, `"adaptive"`).
+    /// Display label (`"f32"`, `"int8"`, `"int16"`, `"e4m3"`, `"e5m2"`,
+    /// `"adaptive"`).
     pub fn label(&self) -> String {
         match self {
             CommPrecision::F32 => "f32".into(),
             CommPrecision::Static(b) => format!("int{b}"),
+            CommPrecision::Minifloat(kind) => kind.label().into(),
             CommPrecision::Adaptive(_) => "adaptive".into(),
         }
     }
 
-    /// Controller config, if the payload is quantized.
+    /// Controller config, if the payload carries *fixed-point* codes (the
+    /// minifloat precisions quantize but have no bit-width to adapt).
     pub fn config(&self) -> Option<AptConfig> {
         match self {
-            CommPrecision::F32 => None,
+            CommPrecision::F32 | CommPrecision::Minifloat(_) => None,
             CommPrecision::Static(b) => Some(AptConfig::static_bits(*b)),
             CommPrecision::Adaptive(cfg) => Some(*cfg),
         }
     }
 
+    /// The minifloat codec, if that is the payload format.
+    pub fn minifloat_kind(&self) -> Option<MinifloatKind> {
+        match self {
+            CommPrecision::Minifloat(kind) => Some(*kind),
+            _ => None,
+        }
+    }
+
     /// The compression policy this precision implies when `--compress` is
-    /// not given: quantized precisions keep the historical dense-code path,
-    /// f32 stays uncompressed.
+    /// not given: quantized precisions (fixed-point *and* minifloat) keep
+    /// the dense-code path, f32 stays uncompressed.
     pub fn default_compress(&self) -> CompressPolicy {
-        if self.config().is_some() {
-            CompressPolicy::Quantize
-        } else {
-            CompressPolicy::None
+        match self {
+            CommPrecision::F32 => CompressPolicy::None,
+            _ => CompressPolicy::Quantize,
         }
     }
 }
@@ -208,26 +228,45 @@ impl QuantAllReduce {
                  (bit-exactness of the two-level reduce)"
             );
         }
-        let comp: Box<dyn Compressor> = match (policy, precision.config()) {
-            (CompressPolicy::None, None) => Box::new(IdentityCompressor),
-            (CompressPolicy::TopK(r), None) => Box::new(TopKCompressor::new(r)),
-            (CompressPolicy::Quantize, Some(cfg)) => {
-                Box::new(QuantizeCompressor::new(cfg, &names))
+        let comp: Box<dyn Compressor> = if let Some(kind) = precision.minifloat_kind() {
+            match policy {
+                CompressPolicy::Quantize => Box::new(MinifloatCompressor::new(kind, &names)),
+                CompressPolicy::TopKQuantize(_) => bail!(
+                    "--compress {} re-encodes selected values as shared-scheme fixed-point \
+                     codes, which minifloat --comm-bits {} does not provide; use \
+                     --compress quantize, or a fixed-point --comm-bits for top-k+quantize",
+                    policy.label(),
+                    precision.label()
+                ),
+                p => bail!(
+                    "--comm-bits {} quantizes the payload, but --compress {} sends raw f32; \
+                     use --compress quantize",
+                    precision.label(),
+                    p.label()
+                ),
             }
-            (CompressPolicy::TopKQuantize(r), Some(cfg)) => {
-                Box::new(TopKQuantizeCompressor::new(cfg, r, &names))
+        } else {
+            match (policy, precision.config()) {
+                (CompressPolicy::None, None) => Box::new(IdentityCompressor),
+                (CompressPolicy::TopK(r), None) => Box::new(TopKCompressor::new(r)),
+                (CompressPolicy::Quantize, Some(cfg)) => {
+                    Box::new(QuantizeCompressor::new(cfg, &names))
+                }
+                (CompressPolicy::TopKQuantize(r), Some(cfg)) => {
+                    Box::new(TopKQuantizeCompressor::new(cfg, r, &names))
+                }
+                (p, None) => bail!(
+                    "--compress {} quantizes the payload and needs a quantized --comm-bits \
+                     (8, 16, e4m3, e5m2 or adaptive), not f32",
+                    p.label()
+                ),
+                (p, Some(_)) => bail!(
+                    "--comm-bits {} quantizes the payload, but --compress {} sends raw f32; \
+                     use --compress quantize or topk:<ratio>+quantize",
+                    precision.label(),
+                    p.label()
+                ),
             }
-            (p, None) => bail!(
-                "--compress {} quantizes the payload and needs a quantized --comm-bits \
-                 (8, 16 or adaptive), not f32",
-                p.label()
-            ),
-            (p, Some(_)) => bail!(
-                "--comm-bits {} quantizes the payload, but --compress {} sends raw f32; \
-                 use --compress quantize or topk:<ratio>+quantize",
-                precision.label(),
-                p.label()
-            ),
         };
         Ok(QuantAllReduce {
             precision,
@@ -516,6 +555,58 @@ mod tests {
             .fold(0.0, f32::max);
         assert!(err < 1e-3, "int16 comm error too large: {err}");
         assert_eq!(q.bits(), vec![("comm:t.0".to_string(), 16u8)]);
+    }
+
+    #[test]
+    fn minifloat_reduce_tracks_f32_average() {
+        let base = vecs(11, 1, 512).remove(0);
+        let half: Vec<f32> = base.iter().map(|&v| v * 0.5).collect();
+        let per: Vec<Vec<Vec<f32>>> = vec![vec![base], vec![half]];
+        for kind in [MinifloatKind::E4M3, MinifloatKind::E5M2] {
+            let mut q = QuantAllReduce::new(
+                CommPrecision::Minifloat(kind),
+                vec!["t.0".into()],
+            );
+            let red = q.reduce(0, &per).unwrap();
+            let exact: Vec<f32> =
+                (0..512).map(|i| (per[0][0][i] + per[1][0][i]) / 2.0).collect();
+            // Relative error of the codec (e5m2: 2 mantissa bits → half-ulp
+            // 1/8) plus a tiny absolute floor near zero.
+            let err = red[0]
+                .iter()
+                .zip(&exact)
+                .map(|(a, b)| (a - b).abs() / b.abs().max(0.05))
+                .fold(0.0, f32::max);
+            assert!(err < 0.15, "{} comm error too large: {err}", kind.label());
+            // 1 byte/element on the replica hop, both replicas.
+            assert_eq!(q.wire().replica_bytes, 2 * (10 + 512));
+            // No bit-width controllers, but the fixed 8-bit report exists.
+            assert_eq!(q.bits(), vec![("comm:t.0".to_string(), 8u8)]);
+            assert!(q.snapshot().is_empty());
+        }
+    }
+
+    #[test]
+    fn minifloat_rejects_topk_quantize_and_raw_policies() {
+        let names = vec!["t.0".to_string()];
+        let prec = CommPrecision::Minifloat(MinifloatKind::E4M3);
+        let err = QuantAllReduce::with_policy(
+            prec,
+            CompressPolicy::TopKQuantize(0.1),
+            1,
+            names.clone(),
+        )
+        .unwrap_err()
+        .to_string();
+        assert!(err.contains("fixed-point"), "{err}");
+        assert!(QuantAllReduce::with_policy(prec, CompressPolicy::TopK(0.1), 1, names.clone())
+            .is_err());
+        assert!(QuantAllReduce::with_policy(prec, CompressPolicy::None, 1, names.clone())
+            .is_err());
+        // the default pairing (quantize) builds
+        assert!(
+            QuantAllReduce::with_policy(prec, prec.default_compress(), 1, names).is_ok()
+        );
     }
 
     #[test]

@@ -33,7 +33,7 @@ use std::fmt;
 use anyhow::{bail, Result};
 
 use crate::apt::{AptConfig, ControllerState, Ledger, PrecisionController};
-use crate::fixedpoint::{Scheme, TensorKind};
+use crate::fixedpoint::{quantize, Format, MinifloatKind, Scheme, TensorKind};
 
 /// Fallback top-k ratio for the bare `topk` / `topk+quantize` spellings.
 pub const DEFAULT_TOPK_RATIO: f32 = 0.1;
@@ -188,6 +188,18 @@ pub enum WirePayload {
         /// One code per element.
         codes: Vec<i32>,
     },
+    /// Scaled minifloat byte codes of every element (`--comm-bits
+    /// e4m3|e5m2`). Minifloat sums are not exact, so these decode to f32
+    /// and travel the deterministic tree like dense payloads — the saving
+    /// is the 1 byte/element replica hop, not the reduction itself.
+    F8 {
+        /// The minifloat codec.
+        kind: MinifloatKind,
+        /// Per-payload scale exponent (each sender scales to its own range).
+        s: i32,
+        /// One byte code per element.
+        codes: Vec<u8>,
+    },
     /// Top-k values at their indices; un-sent elements are implicit zeros.
     Sparse {
         /// Dense length of the tensor.
@@ -230,6 +242,7 @@ impl WirePayload {
         match self {
             WirePayload::Dense(v) => v.len(),
             WirePayload::Codes { codes, .. } => codes.len(),
+            WirePayload::F8 { codes, .. } => codes.len(),
             WirePayload::Sparse { len, .. } | WirePayload::SparseCodes { len, .. } => *len,
         }
     }
@@ -253,6 +266,7 @@ impl WirePayload {
             WirePayload::Codes { scheme, codes } => {
                 10 + bytes_per_code(scheme.bits as u32) * codes.len() as u64
             }
+            WirePayload::F8 { codes, .. } => 10 + codes.len() as u64,
             WirePayload::Sparse { idx, .. } => 9 + 8 * idx.len() as u64,
             WirePayload::SparseCodes { scheme, idx, .. } => {
                 14 + (4 + bytes_per_code(scheme.bits as u32)) * idx.len() as u64
@@ -283,6 +297,16 @@ impl WirePayload {
                 for c in codes {
                     out.extend_from_slice(&c.to_le_bytes()[..bp.min(4)]);
                 }
+            }
+            WirePayload::F8 { kind, s, codes } => {
+                out.push(4u8);
+                out.extend_from_slice(&(codes.len() as u32).to_le_bytes());
+                out.push(match kind {
+                    MinifloatKind::E4M3 => 0,
+                    MinifloatKind::E5M2 => 1,
+                });
+                out.extend_from_slice(&s.to_le_bytes());
+                out.extend_from_slice(codes);
             }
             WirePayload::Sparse { len, idx, val } => {
                 out.push(2u8);
@@ -317,6 +341,11 @@ impl WirePayload {
             WirePayload::Dense(v) => v.clone(),
             WirePayload::Codes { scheme, codes } => {
                 codes.iter().map(|&c| scheme.decode(c)).collect()
+            }
+            WirePayload::F8 { kind, s, codes } => {
+                let mut out = vec![0.0f32; codes.len()];
+                quantize::decode_f8(codes, &mut out, *kind, *s);
+                out
             }
             WirePayload::Sparse { len, idx, val } => {
                 let mut out = vec![0.0f32; *len];
@@ -367,12 +396,19 @@ impl WirePayload {
 /// exactly the member's [`WirePayload::wire_bytes`].
 pub fn aggregate_wire_bytes(group: &[WirePayload]) -> u64 {
     assert!(!group.is_empty(), "aggregate over an empty node");
+    if group.len() == 1 {
+        // A node of one forwards the payload as-is, whatever its type.
+        return group[0].wire_bytes();
+    }
     let carry = carry_bits(group.len());
     match &group[0] {
         WirePayload::Dense(v) => 5 + 4 * v.len() as u64,
         WirePayload::Codes { scheme, codes } => {
             10 + bytes_per_code(scheme.bits as u32 + carry) * codes.len() as u64
         }
+        // Minifloat partial sums are not representable in f8 without new
+        // rounding, so the inter-node hop carries the decoded f32 sums.
+        WirePayload::F8 { codes, .. } => 5 + 4 * codes.len() as u64,
         WirePayload::Sparse { len, .. } => 9 + 8 * union_support(group, *len),
         WirePayload::SparseCodes { len, scheme, .. } => {
             14 + (4 + bytes_per_code(scheme.bits as u32 + carry)) * union_support(group, *len)
@@ -615,6 +651,46 @@ impl Compressor for QuantizeCompressor {
             c.restore(s);
         }
         Ok(())
+    }
+}
+
+// ---------------------------------------------------------------- minifloat
+
+/// `--comm-bits e4m3|e5m2` with the (default) quantize policy: every
+/// replica encodes its corrected gradient as scaled minifloat byte codes —
+/// int8's wire footprint with relative error. Each sender scales to its own
+/// range (no root probe: f8 payloads decode to f32 and travel the
+/// deterministic tree, so a shared scale buys no exact-summation property
+/// the way a shared fixed-point scheme does). No controllers: the format is
+/// the static 8-bit codec, so there is no bit-width to adapt.
+pub struct MinifloatCompressor {
+    kind: MinifloatKind,
+    names: Vec<String>,
+}
+
+impl MinifloatCompressor {
+    /// Encode every tensor with `kind`; `names` label the fixed 8-bit
+    /// reports of [`controller_bits`](Compressor::controller_bits).
+    pub fn new(kind: MinifloatKind, names: &[String]) -> MinifloatCompressor {
+        MinifloatCompressor { kind, names: names.to_vec() }
+    }
+}
+
+impl Compressor for MinifloatCompressor {
+    fn label(&self) -> String {
+        "quantize".into()
+    }
+
+    fn compress(&mut self, _t: usize, _r: usize, corrected: Vec<f32>) -> WirePayload {
+        let s = Format::for_range(self.kind.family(), quantize::max_abs(&corrected), 8)
+            .scale_exp();
+        let mut codes = vec![0u8; corrected.len()];
+        quantize::codes_f8(&corrected, &mut codes, self.kind, s);
+        WirePayload::F8 { kind: self.kind, s, codes }
+    }
+
+    fn controller_bits(&self) -> Vec<(String, u8)> {
+        self.names.iter().map(|n| (format!("comm:{n}"), 8u8)).collect()
     }
 }
 

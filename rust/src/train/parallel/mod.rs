@@ -39,8 +39,8 @@ mod compress;
 pub use allreduce::{hier_reduce_f32, tree_reduce_f32, CommPrecision, QuantAllReduce};
 pub use compress::{
     aggregate_wire_bytes, top_k_indices, CompressPolicy, CompressSnapshot, Compressor,
-    IdentityCompressor, QuantizeCompressor, ReduceError, ResidualRecord, TopKCompressor,
-    TopKQuantizeCompressor, WirePayload, WireStats, DEFAULT_TOPK_RATIO,
+    IdentityCompressor, MinifloatCompressor, QuantizeCompressor, ReduceError, ResidualRecord,
+    TopKCompressor, TopKQuantizeCompressor, WirePayload, WireStats, DEFAULT_TOPK_RATIO,
 };
 
 use anyhow::{bail, Result};
@@ -143,6 +143,18 @@ impl ReplicaGroup {
         self.host.set_stash(policy, recompute);
         for peer in &mut self.peers {
             peer.ctx.stash = crate::mem::ActivationStash::new(policy, recompute);
+        }
+    }
+
+    /// Float warm-up on every replica: compute quantization stays dormant
+    /// until step `n` (see [`HostBackend::set_quant_delay`]). Replicas must
+    /// share the delay or they would diverge at activation; the gradient
+    /// all-reduce keeps its own comm precision throughout (wire compression
+    /// is a bandwidth decision, not a compute one).
+    pub(super) fn set_quant_delay(&mut self, n: u64) {
+        self.host.set_quant_delay(n);
+        for peer in &mut self.peers {
+            peer.ctx.quant_from = n;
         }
     }
 

@@ -16,7 +16,7 @@
 
 use apt::compiler::CompileOptions;
 use apt::data::SynthImages;
-use apt::fixedpoint::Scheme;
+use apt::fixedpoint::{Format, Scheme};
 use apt::kernels::Engine;
 use apt::nn::{models, QuantMode};
 use apt::serve::{FrozenModel, InferOp};
@@ -81,7 +81,7 @@ fn fused_bit_identical_to_unfused_across_zoo() {
 
         // A model frozen with fusion off (the --no-fuse path) runs the
         // interpreter as its *primary* path and must land on the same bits.
-        let opts = CompileOptions { fuse: false, tune: false };
+        let opts = CompileOptions { fuse: false, ..CompileOptions::default() };
         let unfused = FrozenModel::freeze_with(tag.clone(), s.net(), &opts).unwrap();
         assert!(!unfused.fused());
         assert_bits_equal(&want, &unfused.forward(&ex, &eng), &format!("{tag}-nofuse"));
@@ -117,8 +117,8 @@ fn lin(name: &str, din: usize, dout: usize) -> InferOp {
         name: name.to_string(),
         w: Tensor::from_vec(&[din, dout], w),
         b: vec![0.1; dout],
-        sw: Some(Scheme { bits: 8, s: -6 }),
-        sx: Some(Scheme { bits: 8, s: -5 }),
+        sw: Some(Format::FixedPoint(Scheme { bits: 8, s: -6 })),
+        sx: Some(Format::FixedPoint(Scheme { bits: 8, s: -5 })),
     }
 }
 
@@ -195,7 +195,7 @@ fn tune_cache_roundtrips_through_checkpoint_and_keeps_bits() {
     s.save_checkpoint(&path).unwrap();
 
     // First load searches (no cache in a fresh training checkpoint).
-    let tuned = CompileOptions { fuse: true, tune: true };
+    let tuned = CompileOptions { tune: true, ..CompileOptions::default() };
     let m1 = FrozenModel::from_checkpoint_with(&path, "alexnet", QuantMode::Static(8), &tuned)
         .unwrap();
     let rep1 = m1.compile_report();

@@ -1,0 +1,324 @@
+//! Format-family contract tests (DESIGN.md §Formats) — the gate for the
+//! Scheme → Format generalization:
+//!
+//! 1. **Codec bounds** — every family's fake-quant stays within its
+//!    resolution/half-ulp error envelope on random data, and the scaled-fp8
+//!    byte codec (`codes_f8`/`decode_f8`, the stash/wire payload encoding)
+//!    lands on exactly the same values as `Format::fake_quant`.
+//! 2. **Monotonicity** — fake-quant never reorders inputs in any family
+//!    (a saturating rounding codec must be a monotone step function).
+//! 3. **Int4 packing** — nibble pack/unpack is exact for every code in
+//!    [−8, 7] at every length parity.
+//! 4. **Per-channel ≡ per-tensor at equal scales** — per-channel scales are
+//!    a pure refinement: when all channels share one range the per-channel
+//!    kernels are bit-identical to the per-tensor path.
+//! 5. **Fixed-point pin** — a `FormatFamily::FixedPoint` config takes
+//!    exactly the pre-format code paths (bit-identical losses).
+//! 6. **Checkpoint v4** — a per-channel e4m3 session round-trips
+//!    bit-identically through the v4 format, and the committed v1/v2/v3
+//!    fixtures still load under the v4 reader.
+//! 7. **Int4 weight-only serving** — ≤ 0.55× the int8 weight bytes with
+//!    ≥ 99% top-1 agreement on the synthetic eval stream.
+
+use apt::apt::AptConfig;
+use apt::compiler::CompileOptions;
+use apt::data::SynthImages;
+use apt::fixedpoint::{
+    pack_nibbles, quantize, unpack_nibbles, Format, FormatFamily, MinifloatKind, Scheme,
+};
+use apt::kernels::Engine;
+use apt::nn::{models, QuantMode};
+use apt::serve::FrozenModel;
+use apt::tensor::Tensor;
+use apt::train::checkpoint::Checkpoint;
+use apt::train::SessionBuilder;
+use apt::util::proptest::check;
+
+const FAMILIES: [FormatFamily; 4] = [
+    FormatFamily::FixedPoint,
+    FormatFamily::E4M3,
+    FormatFamily::E5M2,
+    FormatFamily::Int4,
+];
+
+// ------------------------------------------------------------ codec bounds
+
+/// Worst-case |x − fq(x)| for a format on an in-range input: half a
+/// resolution step for the fixed-point families, a half-ulp of relative
+/// error plus one subnormal quantum for the minifloats.
+fn error_bound(fmt: Format, x: f32) -> f32 {
+    match fmt {
+        Format::FixedPoint(_) | Format::Int4 { .. } => fmt.resolution() / 2.0,
+        Format::Minifloat { kind, .. } => {
+            let (_, mbits, _) = kind.spec();
+            x.abs() * (-(mbits as f32 + 1.0)).exp2() + fmt.resolution()
+        }
+    }
+}
+
+#[test]
+fn prop_fake_quant_error_within_family_envelope() {
+    check("format-error-envelope", 60, |g| {
+        let family = *g.choose(&FAMILIES);
+        let scale = g.f32_log(1e-4, 1e4);
+        let xs = g.normal_vec(128, scale);
+        let fmt = Format::for_range(family, quantize::max_abs(&xs), 8);
+        for &x in &xs {
+            let q = fmt.fake_quant(x);
+            let e = (x - q).abs();
+            let bound = error_bound(fmt, x) + 1e-12;
+            assert!(e <= bound, "{family:?} x={x} q={q} err={e} bound={bound}");
+        }
+    });
+}
+
+#[test]
+fn prop_f8_byte_codec_matches_fake_quant() {
+    // The stash/wire byte path (encode to codes, decode later) must land on
+    // exactly the values the in-place fake-quant produces — otherwise a
+    // stashed activation and a live one would diverge.
+    check("f8-codec-consistency", 40, |g| {
+        let kind = *g.choose(&[MinifloatKind::E4M3, MinifloatKind::E5M2]);
+        let xs = g.normal_vec(g.usize(1, 200), g.f32_log(1e-3, 1e3));
+        let fmt = Format::for_range(kind.family(), quantize::max_abs(&xs), 8);
+        let s = fmt.scale_exp();
+        let mut codes = vec![0u8; xs.len()];
+        quantize::codes_f8(&xs, &mut codes, kind, s);
+        let mut back = vec![0f32; xs.len()];
+        quantize::decode_f8(&codes, &mut back, kind, s);
+        for (&x, &b) in xs.iter().zip(&back) {
+            assert_eq!(
+                b.to_bits(),
+                fmt.fake_quant(x).to_bits(),
+                "{} x={x}: codec {b} vs fake_quant {}",
+                kind.label(),
+                fmt.fake_quant(x)
+            );
+        }
+    });
+}
+
+#[test]
+fn prop_fake_quant_monotone_in_every_family() {
+    check("format-monotone", 60, |g| {
+        let family = *g.choose(&FAMILIES);
+        let fmt = Format::for_range(family, g.f32_log(1e-2, 1e2), 8);
+        let top = fmt.range_top();
+        let mut a = g.f32(-2.0 * top, 2.0 * top);
+        let mut b = g.f32(-2.0 * top, 2.0 * top);
+        if a > b {
+            std::mem::swap(&mut a, &mut b);
+        }
+        let (qa, qb) = (fmt.fake_quant(a), fmt.fake_quant(b));
+        assert!(qa <= qb, "{family:?}: fq({a})={qa} > fq({b})={qb}");
+    });
+}
+
+// ------------------------------------------------------------ int4 packing
+
+#[test]
+fn prop_nibble_pack_exact_for_all_codes_and_parities() {
+    check("int4-pack-exact", 60, |g| {
+        let len = g.usize(1, 101);
+        let codes: Vec<i8> = (0..len).map(|_| g.int(-8, 7) as i8).collect();
+        let packed = pack_nibbles(&codes);
+        assert_eq!(packed.len(), len.div_ceil(2));
+        let mut back = vec![0i8; len];
+        unpack_nibbles(&packed, &mut back);
+        assert_eq!(back, codes);
+    });
+}
+
+// ---------------------------------------- per-channel vs per-tensor scales
+
+#[test]
+fn prop_per_channel_equals_per_tensor_when_scales_agree() {
+    // Replicated rows ⇒ every channel sees the same range ⇒ the per-channel
+    // scale vector is constant and the refinement must vanish bitwise.
+    check("per-channel-identity", 40, |g| {
+        let family = *g.choose(&FAMILIES);
+        let bits = 8u8;
+        let (rows, cols) = (g.usize(2, 8), g.usize(1, 32));
+        let row = g.normal_vec(cols, g.f32_log(1e-2, 1e2));
+        let w: Vec<f32> = (0..rows).flat_map(|_| row.iter().copied()).collect();
+
+        let scales = quantize::channel_scales_rows(&w, rows, cols, family, bits);
+        assert!(scales.windows(2).all(|p| p[0] == p[1]), "{family:?}: {scales:?}");
+        let fmt = Format::for_range(family, quantize::max_abs(&w), bits);
+        assert_eq!(scales[0], fmt.scale_exp(), "{family:?}");
+
+        let mut pc = w.clone();
+        let st_pc = quantize::fake_quant_per_channel_rows(&mut pc, rows, cols, family, bits, &scales);
+        let mut pt = w.clone();
+        let st_pt = quantize::fake_quant_stats_inplace_fmt(&mut pt, fmt);
+        for (i, (a, b)) in pc.iter().zip(&pt).enumerate() {
+            assert_eq!(a.to_bits(), b.to_bits(), "{family:?} elem {i}: {a} vs {b}");
+        }
+        // fused stats agree too (tolerance: the two kernels accumulate the
+        // f64 sums in different association orders)
+        let tol = 1e-9 * st_pt.sum_abs_q.abs().max(1.0);
+        assert!(
+            (st_pc.sum_abs_q - st_pt.sum_abs_q).abs() <= tol,
+            "{family:?}: fused stats diverged: {} vs {}",
+            st_pc.sum_abs_q,
+            st_pt.sum_abs_q
+        );
+    });
+}
+
+// ------------------------------------------------------- fixed-point pins
+
+#[test]
+fn fixed_point_family_config_trains_bit_identically_to_default() {
+    // `for_family(FixedPoint)` must be the do-nothing spelling of the
+    // default config: same RNG draws, same schemes, same losses to the bit.
+    let run = |cfg: AptConfig| {
+        let mut s = SessionBuilder::classifier("mlp").mode(QuantMode::Adaptive(cfg)).build();
+        s.run(10).unwrap();
+        s.losses().to_vec()
+    };
+    let mut base = AptConfig::default();
+    base.init_phase_iters = 2;
+    let mut fam = AptConfig::for_family(FormatFamily::FixedPoint);
+    fam.init_phase_iters = 2;
+    let (a, b) = (run(base), run(fam));
+    assert_eq!(a.len(), b.len());
+    for (i, (x, y)) in a.iter().zip(&b).enumerate() {
+        assert_eq!(x.to_bits(), y.to_bits(), "loss {i} diverged: {x} vs {y}");
+    }
+}
+
+// ---------------------------------------------------------- checkpoint v4
+
+fn ckpt_path(tag: &str) -> std::path::PathBuf {
+    std::env::temp_dir().join(format!("apt_formats_ckpt_{tag}_{}.txt", std::process::id()))
+}
+
+fn fixture(name: &str) -> std::path::PathBuf {
+    std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+        .join("tests/fixtures")
+        .join(name)
+}
+
+#[test]
+fn v4_roundtrips_a_per_channel_e4m3_session_bit_identically() {
+    let mut cfg = AptConfig::for_family(FormatFamily::E4M3);
+    cfg.init_phase_iters = 2;
+    cfg.per_channel_weights = true;
+    let build = || {
+        SessionBuilder::classifier("mlp")
+            .mode(QuantMode::Adaptive(cfg))
+            .build()
+    };
+    let path = ckpt_path("v4_e4m3_pc");
+    let mut a = build();
+    a.run(8).unwrap();
+    a.save_checkpoint(&path).unwrap();
+
+    // the artifact is v4 and records both format tags and channel scales
+    let text = std::fs::read_to_string(&path).unwrap();
+    let header = text.lines().next().unwrap();
+    assert!(header.ends_with(" v4"), "unexpected header {header:?}");
+    assert!(text.contains("e4m3"), "no format-family tags in the file");
+    assert!(text.contains("pcs"), "no per-channel scale section");
+    assert!(Checkpoint::read(&path).is_ok());
+
+    let mut b = build();
+    b.load_checkpoint(&path).unwrap();
+    assert_eq!(b.iters_done(), 8);
+    a.run(6).unwrap();
+    b.run(6).unwrap();
+    assert_eq!(a.losses(), b.losses(), "restored e4m3 per-channel run diverged");
+    let _ = std::fs::remove_file(&path);
+}
+
+#[test]
+fn v4_reader_rejects_family_mismatch() {
+    // an e4m3 checkpoint must not restore into a fixed-point session
+    let mut cfg = AptConfig::for_family(FormatFamily::E5M2);
+    cfg.init_phase_iters = 2;
+    let path = ckpt_path("v4_mismatch");
+    let mut a = SessionBuilder::classifier("mlp").mode(QuantMode::Adaptive(cfg)).build();
+    a.run(4).unwrap();
+    a.save_checkpoint(&path).unwrap();
+
+    let mut fixed = AptConfig::default();
+    fixed.init_phase_iters = 2;
+    let mut b = SessionBuilder::classifier("mlp").mode(QuantMode::Adaptive(fixed)).build();
+    let err = b.load_checkpoint(&path).unwrap_err().to_string();
+    assert!(err.contains("family"), "unexpected error: {err}");
+    let _ = std::fs::remove_file(&path);
+}
+
+#[test]
+fn v1_v2_v3_fixtures_still_load_under_the_v4_reader() {
+    for (name, iters) in [
+        ("host_f32_v1.ckpt", 3),
+        ("host_int8_v2.ckpt", 3),
+        ("parallel_topk_v3.ckpt", 2),
+    ] {
+        let ck = Checkpoint::read(&fixture(name)).unwrap_or_else(|e| {
+            panic!("{name} no longer parses under the v4 reader: {e:#}")
+        });
+        assert_eq!(ck.iters_done(), iters, "{name}");
+    }
+}
+
+// ------------------------------------------------- int4 weight-only serve
+
+fn eval_batch(n: usize) -> Tensor {
+    let data = SynthImages::new(
+        1000,
+        models::CLASSES,
+        models::IN_C,
+        models::IN_H,
+        models::IN_W,
+        0.5,
+    );
+    data.eval_set(999, n).0
+}
+
+fn top1(logits: &Tensor) -> Vec<usize> {
+    let (n, c) = (logits.shape[0], logits.shape[1]);
+    (0..n)
+        .map(|i| {
+            logits.data[i * c..(i + 1) * c]
+                .iter()
+                .enumerate()
+                .max_by(|a, b| a.1.total_cmp(b.1))
+                .map(|(j, _)| j)
+                .unwrap()
+        })
+        .collect()
+}
+
+#[test]
+fn int4_weight_only_alexnet_halves_weight_bytes_and_keeps_top1() {
+    let mut s = SessionBuilder::classifier("alexnet").mode(QuantMode::Static(8)).lr(0.01).build();
+    s.run(60).unwrap();
+    let i8m = FrozenModel::freeze("alexnet-int8".to_string(), s.net()).unwrap();
+    let opts = CompileOptions {
+        weight_format: Some(FormatFamily::Int4),
+        ..CompileOptions::default()
+    };
+    let i4m = FrozenModel::freeze_with("alexnet-int4w".to_string(), s.net(), &opts).unwrap();
+    assert_eq!(i4m.precision(), "int4w");
+
+    let (w8, w4) = (i8m.compile_report().weight_bytes, i4m.compile_report().weight_bytes);
+    assert!(w8 > 0 && w4 > 0, "weight byte accounting missing: int8 {w8}, int4 {w4}");
+    assert!(
+        w4 * 100 <= w8 * 55,
+        "int4 weight-only must be ≤ 0.55× the int8 weight bytes: {w4} vs {w8}"
+    );
+
+    let ex = eval_batch(256);
+    let eng = Engine::serial();
+    let p8 = top1(&i8m.forward(&ex, &eng));
+    let p4 = top1(&i4m.forward(&ex, &eng));
+    let agree = p8.iter().zip(&p4).filter(|(a, b)| a == b).count();
+    assert!(
+        agree * 100 >= p8.len() * 99,
+        "int4w top-1 agreement too low: {agree}/{}",
+        p8.len()
+    );
+}
