@@ -1,10 +1,18 @@
 //! Reproduce the paper's observation figures (Fig 1 + Fig 2) in one run:
 //! gradient distributions per layer, range evolution, and the per-layer
-//! bit-width sensitivity that motivates adaptive precision.
+//! bit-width sensitivity that motivates adaptive precision — then turn the
+//! same lens on *activations* through the calibration observers
+//! (DESIGN.md §Calibration): one shared stats path for both the figures
+//! and `apt calibrate`.
 //!
 //!     cargo run --release --example observe_distributions -- [--iters 200]
 
+use apt::calib::{Calibrator, ObserverKind};
+use apt::data::SynthImages;
 use apt::exp;
+use apt::fixedpoint::FormatFamily;
+use apt::nn::{models, QuantMode};
+use apt::train::SessionBuilder;
 use apt::util::cli::Args;
 
 fn main() {
@@ -14,4 +22,52 @@ fn main() {
     exp::run("fig2", &args);
     println!();
     exp::run("fig11", &args);
+    println!();
+    observe_activations(args.u64_or("calib-iters", 60));
+}
+
+/// Per-site activation ranges under each calibration observer, side by
+/// side: the exact envelope (minmax) against the smoothed/clipped
+/// estimators — the choice `apt calibrate --observer` exposes.
+fn observe_activations(iters: u64) {
+    println!("== activation ranges through the calibration observers ==");
+    let mut s = SessionBuilder::classifier("alexnet")
+        .mode(QuantMode::Float32)
+        .lr(0.01)
+        .build();
+    s.run(iters).expect("host training cannot fail");
+
+    let kinds = [
+        ObserverKind::MinMax,
+        ObserverKind::Ema(0.01),
+        ObserverKind::Percentile(99.99),
+        ObserverKind::Kl,
+    ];
+    let mut tables = Vec::new();
+    for kind in kinds {
+        let mut cal =
+            Calibrator::from_net("alexnet", s.net(), kind).expect("alexnet exports to the IR");
+        let mut data = SynthImages::new(
+            1000,
+            models::CLASSES,
+            models::IN_C,
+            models::IN_H,
+            models::IN_W,
+            0.5,
+        );
+        for _ in 0..8 {
+            let (x, _) = data.batch(32);
+            cal.observe(&x);
+        }
+        tables.push(cal.finish(FormatFamily::FixedPoint, 8, false));
+    }
+
+    let head: String = tables.iter().map(|t| format!("{:>18}", t.observer)).collect();
+    println!("{:<10}{head}", "site");
+    for i in 0..tables[0].sites.len() {
+        let row: String =
+            tables.iter().map(|t| format!("{:>18.5}", t.sites[i].max_abs)).collect();
+        println!("{:<10}{row}", tables[0].sites[i].name);
+    }
+    println!("minmax tracks the outlier envelope; percentile/kl clip it");
 }

@@ -58,7 +58,8 @@ fn main() {
         Arc::new(frozen),
         apt::kernels::global_arc(),
         ServeConfig { max_batch: 8, max_wait_us: 200, queue_cap: 128, workers: 2, ..ServeConfig::default() },
-    );
+    )
+    .expect("serve config is valid");
     let correct: usize = std::thread::scope(|scope| {
         let clients = 4usize;
         let mut handles = Vec::new();

@@ -1,0 +1,130 @@
+//! cargo bench — PTQ calibration sweep (EXPERIMENTS.md §PTQ): train each
+//! model purely in f32, calibrate activation formats post hoc with every
+//! observer, freeze through `FrozenModel::freeze_ptq_net`, and measure
+//! eval accuracy plus top-1 agreement with the float eval path. QAT
+//! reference rows (the paper's quantize-during-training loop at the same
+//! width) and the float ceiling land in the same table, so the CSV answers
+//! both EXPERIMENTS.md questions: accuracy vs bits, and PTQ vs QAT.
+//! Writes `results/ptq.csv`.
+//!
+//! `BENCH_QUICK=1` shrinks the model set, iteration counts, and sweeps.
+
+use apt::calib::{Calibrator, ObserverKind};
+use apt::compiler::CompileOptions;
+use apt::data::SynthImages;
+use apt::fixedpoint::FormatFamily;
+use apt::nn::loss::accuracy;
+use apt::nn::{models, QuantMode};
+use apt::serve::FrozenModel;
+use apt::tensor::Tensor;
+use apt::train::SessionBuilder;
+use apt::util::out::{results_dir, Csv};
+
+const EVAL_N: usize = 256;
+
+fn synth(seed: u64) -> SynthImages {
+    SynthImages::new(seed, models::CLASSES, models::IN_C, models::IN_H, models::IN_W, 0.5)
+}
+
+fn top1_agreement(a: &Tensor, b: &Tensor) -> f64 {
+    let (pa, pb) = (a.argmax_rows(), b.argmax_rows());
+    let agree = pa.iter().zip(&pb).filter(|(x, y)| x == y).count();
+    agree as f64 / pa.len() as f64
+}
+
+fn main() {
+    let quick = std::env::var("BENCH_QUICK").is_ok();
+    let model_names: &[&str] = if quick { &["mlp"] } else { &["mlp", "alexnet"] };
+    let iters: u64 = if quick { 40 } else { 120 };
+    let calib_samples: usize = if quick { 96 } else { 256 };
+    let observers: &[&str] = if quick {
+        &["minmax", "percentile:99.99"]
+    } else {
+        &["minmax", "ema:0.01", "percentile:99.9", "percentile:99.99", "kl"]
+    };
+    let bits_sweep: &[u8] = if quick { &[8] } else { &[4, 6, 8, 16] };
+
+    println!("bench_ptq — float train {iters} iters, {calib_samples} calibration samples, eval {EVAL_N}");
+    println!(
+        "{:<8} {:<6} {:<18} {:>4} {:>10} {:>9}",
+        "model", "method", "observer", "bits", "agreement", "accuracy"
+    );
+
+    let mut csv = Csv::new(
+        results_dir().join("ptq.csv"),
+        &["model", "method", "observer", "bits", "samples", "agreement", "accuracy"],
+    );
+    let mut emit = |model: &str, method: &str, observer: &str, bits: u8, samples: usize, agreement: f64, acc: f64| {
+        println!(
+            "{:<8} {:<6} {:<18} {:>4} {:>10.4} {:>9.4}",
+            model, method, observer, bits, agreement, acc
+        );
+        csv.row(&[
+            model.to_string(),
+            method.to_string(),
+            observer.to_string(),
+            bits.to_string(),
+            samples.to_string(),
+            format!("{agreement:.4}"),
+            format!("{acc:.4}"),
+        ]);
+    };
+
+    for &model in model_names {
+        // Float baseline: the network every PTQ variant is frozen from.
+        let mut float = SessionBuilder::classifier(model).mode(QuantMode::Float32).lr(0.01).build();
+        float.run(iters).expect("float training");
+        let (ex, ey) = synth(42).eval_set(999, EVAL_N);
+        let float_logits = float.eval_logits(&ex);
+        let float_acc = accuracy(&float_logits, &ey);
+        emit(model, "float", "-", 32, 0, 1.0, float_acc);
+
+        // One calibration stream per observer, shared across the bit sweep
+        // (the observer sees f32 activations; bits only shapes `finish`).
+        for &obs in observers {
+            let kind = ObserverKind::parse(obs).expect("observer spec");
+            let mut cal =
+                Calibrator::from_net(model, float.net(), kind).expect("observation program");
+            let mut stream = synth(4242);
+            while cal.samples() < calib_samples {
+                let (x, _) = stream.batch(32);
+                cal.observe(&x);
+            }
+            for &bits in bits_sweep {
+                let table = cal.finish(FormatFamily::FixedPoint, bits, false);
+                let frozen = FrozenModel::freeze_ptq_net(
+                    format!("{model}-ptq-int{bits}"),
+                    float.net(),
+                    &table,
+                    &CompileOptions::default(),
+                )
+                .expect("calibrated freeze");
+                let logits = frozen.forward(&ex, apt::kernels::global());
+                emit(
+                    model,
+                    "ptq",
+                    obs,
+                    bits,
+                    cal.samples(),
+                    top1_agreement(&float_logits, &logits),
+                    accuracy(&logits, &ey),
+                );
+            }
+        }
+
+        // QAT reference: the paper's loop — quantization live for the whole
+        // run at the same static width.
+        for &bits in bits_sweep {
+            let mut qat =
+                SessionBuilder::classifier(model).mode(QuantMode::Static(bits)).lr(0.01).build();
+            qat.run(iters).expect("QAT training");
+            let logits = qat.eval_logits(&ex);
+            emit(model, "qat", "-", bits, 0, top1_agreement(&float_logits, &logits), accuracy(&logits, &ey));
+        }
+        println!();
+    }
+
+    csv.write().unwrap();
+    println!("wrote {}", results_dir().join("ptq.csv").display());
+    println!("fill the EXPERIMENTS.md §PTQ tables from the CSV");
+}

@@ -140,7 +140,8 @@ fn main() {
                 policy,
                 lanes: LANES,
             };
-            let server = InferenceServer::start(Arc::clone(&frozen), Arc::new(Engine::serial()), cfg);
+            let server = InferenceServer::start(Arc::clone(&frozen), Arc::new(Engine::serial()), cfg)
+                .expect("serve config is valid");
             let r = loadgen::drive(&server, &trace, deadline_us, input);
             let stats = server.shutdown();
             let tag = format!("real/{}/{qps}qps", policy.label());

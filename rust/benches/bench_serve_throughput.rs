@@ -44,7 +44,8 @@ struct Cell {
 fn run_cell(frozen: &Arc<FrozenModel>, cfg: ServeConfig, requests: usize) -> Cell {
     // Serial per-worker engines: scaling comes from the worker dimension,
     // not intra-op threading, so the table isolates the batching effect.
-    let server = InferenceServer::start(Arc::clone(frozen), Arc::new(Engine::serial()), cfg);
+    let server = InferenceServer::start(Arc::clone(frozen), Arc::new(Engine::serial()), cfg)
+        .expect("serve config is valid");
     let clients = (2 * cfg.max_batch).clamp(8, 64);
     let d = frozen.input_len();
     let mut data = SynthImages::new(

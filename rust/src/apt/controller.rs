@@ -188,6 +188,48 @@ impl PrecisionController {
         self.updates = st.updates;
     }
 
+    /// Retune to `bits` at a `calib::Schedule` phase boundary. Moves the
+    /// configured width floor (see [`set_width_floor`](Self::set_width_floor))
+    /// and, when the applied width actually differs, resets the scheme to
+    /// `bits` with a scale derived from the tracked range and forces the
+    /// next QEM/QPA update to this iteration, so the controller re-probes at
+    /// the new width immediately. When the width already matches — every
+    /// degenerate schedule, and every checkpoint resume inside a phase —
+    /// nothing but the config floor is touched, preserving bit-identity
+    /// with the unscheduled path. No-op for fixed-width families
+    /// (minifloat/int4 have no bit axis).
+    pub fn retune_bits(&mut self, bits: u8, iter: u64) {
+        if self.cfg.family != FormatFamily::FixedPoint {
+            return;
+        }
+        self.set_width_floor(bits);
+        if self.scheme.bits != bits {
+            let r = if self.range_ema.is_initialized() { self.range_ema.value } else { 1.0 };
+            let s = Format::for_range(FormatFamily::FixedPoint, r, bits).scale_exp();
+            self.scheme = Scheme { bits, s };
+            self.next_update = iter;
+        }
+    }
+
+    /// Move the configured width floor to `bits` without touching the live
+    /// scheme or update schedule: `min_bits` becomes `bits`; under the
+    /// paper's pinned forward widths non-gradient tensors get `max_bits =
+    /// bits` too, while gradient controllers keep their adaptation headroom
+    /// (`max_bits` only ever widens). Checkpoint restore re-applies the
+    /// in-force schedule phase through this, so a gradient controller that
+    /// adapted *above* the phase floor is not forced back down on resume.
+    pub fn set_width_floor(&mut self, bits: u8) {
+        if self.cfg.family != FormatFamily::FixedPoint {
+            return;
+        }
+        self.cfg.min_bits = bits;
+        self.cfg.max_bits = if self.cfg.pin_forward_bits && self.kind != TensorKind::Gradient {
+            bits
+        } else {
+            self.cfg.max_bits.max(bits)
+        };
+    }
+
     /// Update from in-hand data (the pure-Rust training path). Call only
     /// when [`needs_update`] is true; returns the applied scheme either way.
     pub fn maybe_update_from_data(

@@ -1,0 +1,144 @@
+//! Post-training calibration and precision schedules
+//! (DESIGN.md §Calibration).
+//!
+//! The paper quantizes *during* training; this subsystem covers the two
+//! workflows around that loop:
+//!
+//! 1. **PTQ calibration** — the tf.contrib.quantize-style "train float,
+//!    quantize later" path. An [`Observer`] ([`MinMax`], [`MovingAverage`],
+//!    [`Percentile`], [`Kl`]) watches each quantizable site's activations
+//!    while a [`Calibrator`] drives forward-only passes over a data stream
+//!    through the serving compiler's observed interpreter; the result is a
+//!    [`CalibTable`] (site → calibrated [`crate::fixedpoint::Format`]),
+//!    which `serve::FrozenModel::freeze_ptq` combines with a *float*
+//!    checkpoint into a statically quantized serving artifact — no QAT run
+//!    needed (Sakr & Shanbhag, arXiv 1812.11732: precision from observed
+//!    statistics alone). Tables persist as standalone files
+//!    (`apt calibrate --out` / `apt serve --calib`) and as the optional
+//!    `calib` checkpoint section.
+//! 2. **Precision schedules** — [`Schedule`] generalizes the old
+//!    `quant_delay` knob on `train::SessionBuilder` into a full axis:
+//!    `delay:<n>`, `warmup`, and phased `progressive:16@0,8@k` schedules
+//!    that retune every fixed-point controller at exact step boundaries
+//!    (AdaPT, arXiv 2107.13490). `delay:0` and degenerate schedules are
+//!    bit-identical to the pre-schedule controller path.
+//!
+//! ```
+//! use apt::calib::{Calibrator, ObserverKind};
+//! use apt::data::SynthImages;
+//! use apt::fixedpoint::FormatFamily;
+//! use apt::nn::{models, QuantMode};
+//! use apt::train::SessionBuilder;
+//!
+//! // A float model: no train-time activation schemes anywhere.
+//! let s = SessionBuilder::classifier("mlp").mode(QuantMode::Float32).build();
+//! let mut cal = Calibrator::from_net("mlp", s.net(), ObserverKind::Percentile(99.9)).unwrap();
+//! let mut data =
+//!     SynthImages::new(1000, models::CLASSES, models::IN_C, models::IN_H, models::IN_W, 0.5);
+//! for _ in 0..4 {
+//!     let (x, _) = data.batch(16);
+//!     cal.observe(&x);
+//! }
+//! let table = cal.finish(FormatFamily::FixedPoint, 8, false);
+//! assert_eq!(table.sites.len(), 3); // mlp: fc0, fc1, fc2
+//! assert!(table.sites.iter().all(|s| s.max_abs > 0.0));
+//! ```
+
+mod observer;
+mod schedule;
+mod table;
+
+pub use observer::{Kl, MagnitudeHistogram, MinMax, MovingAverage, Observer, ObserverKind, Percentile};
+pub use schedule::Schedule;
+pub use table::{CalibSite, CalibTable};
+
+pub(crate) use table::parse_fmt;
+
+use anyhow::Result;
+
+use crate::compiler::{self, CompileOptions};
+use crate::fixedpoint::{Format, FormatFamily};
+use crate::nn::Sequential;
+use crate::serve::InferOp;
+use crate::tensor::Tensor;
+
+/// Drives calibration: a forward-only program compiled from a model's
+/// serving export, with one [`Observer`] attached to every quantizable
+/// site (linear / conv / depthwise input). Feed it batches with
+/// [`observe`](Calibrator::observe), then [`finish`](Calibrator::finish)
+/// into a [`CalibTable`].
+pub struct Calibrator {
+    program: compiler::Compiled,
+    observers: Vec<(String, Box<dyn Observer>)>,
+    kind: ObserverKind,
+    samples: usize,
+}
+
+impl Calibrator {
+    /// Build from an exported op list (what `Sequential::export_infer`
+    /// yields). The ops run unfused and unquantized — exactly the f32
+    /// forward the calibrated model will approximate.
+    pub fn from_infer_ops(label: &str, ops: Vec<InferOp>, kind: ObserverKind) -> Result<Calibrator> {
+        let opts = CompileOptions { fuse: false, tune: false, weight_format: None };
+        let program = compiler::compile(label, ops, &opts, &[], crate::kernels::global())?;
+        let observers =
+            program.site_names().into_iter().map(|n| (n, kind.build())).collect();
+        Ok(Calibrator { program, observers, kind, samples: 0 })
+    }
+
+    /// Build from a live net (convenience over
+    /// [`from_infer_ops`](Self::from_infer_ops)).
+    pub fn from_net(label: &str, net: &Sequential, kind: ObserverKind) -> Result<Calibrator> {
+        Self::from_infer_ops(label, net.export_infer()?, kind)
+    }
+
+    /// Run one forward-only pass over a batch `[n, din]`, feeding every
+    /// site's input activation to its observer.
+    pub fn observe(&mut self, x: &Tensor) {
+        let observers = &mut self.observers;
+        self.program.run_observed(x, crate::kernels::global(), &mut |name, data| {
+            if let Some((_, ob)) = observers.iter_mut().find(|(n, _)| n == name) {
+                ob.observe(data);
+            }
+        });
+        self.samples += x.dim(0);
+    }
+
+    /// Sites being observed, in forward (program) order.
+    pub fn site_names(&self) -> Vec<String> {
+        self.observers.iter().map(|(n, _)| n.clone()).collect()
+    }
+
+    /// Samples (input rows) observed so far.
+    pub fn samples(&self) -> usize {
+        self.samples
+    }
+
+    /// Derive the calibration table: each site's observed range becomes a
+    /// `family`-family activation format at `bits` (fixed-width families
+    /// keep their storage width; only the scale tracks the range).
+    /// `per_channel` marks the table for per-output-channel weight
+    /// quantization at freeze time.
+    pub fn finish(&self, family: FormatFamily, bits: u8, per_channel: bool) -> CalibTable {
+        let sites = self
+            .observers
+            .iter()
+            .map(|(name, ob)| {
+                let max_abs = ob.calibrated_max(bits);
+                CalibSite {
+                    name: name.clone(),
+                    max_abs,
+                    fmt: Format::for_range(family, max_abs, bits),
+                }
+            })
+            .collect();
+        CalibTable {
+            observer: self.kind.label(),
+            family,
+            bits,
+            per_channel,
+            samples: self.samples,
+            sites,
+        }
+    }
+}

@@ -1,0 +1,224 @@
+//! Precision schedules: when quantization turns on and at what width
+//! (DESIGN.md §Calibration).
+//!
+//! Generalizes the old `quant_delay` knob into one axis on
+//! [`crate::train::SessionBuilder`]: a [`Schedule`] says *from which
+//! iteration* quantization is live (`quant_from`, what `--quant-delay`
+//! set) and, optionally, a sequence of *phases* that retune every
+//! fixed-point controller to a new bit-width at exact step boundaries
+//! (AdaPT, arXiv 2107.13490: schedule-driven precision over a run).
+//!
+//! Degenerate schedules are pinned bit-identical to the pre-schedule
+//! behavior: `delay:0` is exactly today's quantize-from-the-start path,
+//! and a single phase at the controllers' existing width retunes nothing
+//! (`PrecisionController::retune_bits` is a no-op when the width already
+//! matches — see `rust/tests/test_calib.rs`).
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::nn::TrainCtx;
+
+/// When quantization is live and at what bit-width.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Schedule {
+    /// First iteration at which quantization is on (iterations below train
+    /// in plain f32).
+    quant_from: u64,
+    /// `(start_iter, bits)` phases, strictly increasing in `start_iter`:
+    /// at each phase start every fixed-point controller is retuned to
+    /// `bits`. Empty = the controllers keep their configured widths.
+    phases: Vec<(u64, u8)>,
+}
+
+impl Schedule {
+    /// Quantize from iteration `n` on (`delay:0` = from the start — the
+    /// historical default, bit-identical to pre-schedule sessions).
+    pub fn delay(n: u64) -> Schedule {
+        Schedule { quant_from: n, phases: Vec::new() }
+    }
+
+    /// The `warmup` spelling: float for the first tenth of the run, then
+    /// quantize — the same heuristic the adaptive init phase uses.
+    pub fn warmup(total_iters: u64) -> Schedule {
+        Schedule::delay(total_iters / 10)
+    }
+
+    /// A phased width schedule (`progressive:16@0,8@500`): quantization is
+    /// live from the first phase's start, and each phase retunes every
+    /// fixed-point controller to its width. Phases must be non-empty,
+    /// strictly increasing in start iteration, with widths in 2..=32.
+    pub fn progressive(phases: Vec<(u64, u8)>) -> Result<Schedule> {
+        if phases.is_empty() {
+            bail!("progressive schedule needs at least one bits@iter phase");
+        }
+        for win in phases.windows(2) {
+            if win[1].0 <= win[0].0 {
+                bail!(
+                    "progressive schedule phases must strictly increase: {}@{} after {}@{}",
+                    win[1].1,
+                    win[1].0,
+                    win[0].1,
+                    win[0].0
+                );
+            }
+        }
+        for &(at, bits) in &phases {
+            if !(2..=32).contains(&bits) {
+                bail!("progressive schedule: {bits} bits at iter {at} outside 2..=32");
+            }
+        }
+        Ok(Schedule { quant_from: phases[0].0, phases })
+    }
+
+    /// Parse a `--schedule` spec: `delay:<n>`, `warmup`, or
+    /// `progressive:<bits>@<iter>,…` (e.g. `progressive:16@0,8@500`).
+    /// `total_iters` sizes `warmup`.
+    pub fn parse(s: &str, total_iters: u64) -> Result<Schedule> {
+        let (head, arg) = match s.split_once(':') {
+            Some((h, a)) => (h, Some(a)),
+            None => (s, None),
+        };
+        match (head, arg) {
+            ("delay", Some(n)) => Ok(Schedule::delay(
+                n.parse()
+                    .map_err(|_| anyhow!("schedule {s:?}: cannot parse delay {n:?}"))?,
+            )),
+            ("warmup", None) => Ok(Schedule::warmup(total_iters)),
+            ("progressive", Some(spec)) => {
+                let mut phases = Vec::new();
+                for part in spec.split(',') {
+                    let (bits, at) = part.split_once('@').ok_or_else(|| {
+                        anyhow!("schedule {s:?}: phase {part:?} is not <bits>@<iter>")
+                    })?;
+                    phases.push((
+                        at.parse().map_err(|_| {
+                            anyhow!("schedule {s:?}: cannot parse iter {at:?}")
+                        })?,
+                        bits.parse().map_err(|_| {
+                            anyhow!("schedule {s:?}: cannot parse bits {bits:?}")
+                        })?,
+                    ));
+                }
+                Schedule::progressive(phases)
+            }
+            _ => bail!(
+                "unknown schedule {s:?} (expected delay:<n>, warmup, or progressive:<bits>@<iter>,…)"
+            ),
+        }
+    }
+
+    /// First iteration at which quantization is live.
+    pub fn quant_from(&self) -> u64 {
+        self.quant_from
+    }
+
+    /// The width to retune to if `iter` is exactly a phase boundary.
+    /// Backends consult this at the top of every step.
+    pub fn retune_at(&self, iter: u64) -> Option<u8> {
+        self.phases.iter().find(|&&(at, _)| at == iter).map(|&(_, bits)| bits)
+    }
+
+    /// The width in force at `iter` (the latest phase whose start is
+    /// ≤ `iter`); `None` before the first phase or for phase-less
+    /// schedules. Checkpoint restores use this to re-establish the width
+    /// floor mid-phase.
+    pub fn bits_at(&self, iter: u64) -> Option<u8> {
+        self.phases.iter().rev().find(|&&(at, _)| at <= iter).map(|&(_, bits)| bits)
+    }
+
+    /// Whether this schedule is the trivial `delay:0` (nothing to install,
+    /// nothing to retune — the pre-schedule behavior).
+    pub fn is_trivial(&self) -> bool {
+        self.quant_from == 0 && self.phases.is_empty()
+    }
+
+    /// Install the schedule's quantization-start iteration into a training
+    /// context — the single definition behind every backend's
+    /// `set_schedule` (the old per-backend `quant_from` plumbing).
+    pub fn install(&self, ctx: &mut TrainCtx) {
+        ctx.quant_from = self.quant_from;
+    }
+
+    /// Round-trips through [`parse`](Self::parse) for `delay`/`progressive`
+    /// (`warmup` renders as the delay it resolved to).
+    pub fn label(&self) -> String {
+        if self.phases.is_empty() {
+            format!("delay:{}", self.quant_from)
+        } else {
+            let parts: Vec<String> =
+                self.phases.iter().map(|(at, bits)| format!("{bits}@{at}")).collect();
+            format!("progressive:{}", parts.join(","))
+        }
+    }
+}
+
+impl Default for Schedule {
+    /// `delay:0` — quantize from the start, retune nothing.
+    fn default() -> Self {
+        Schedule::delay(0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_delay_and_warmup() {
+        let s = Schedule::parse("delay:40", 1000).unwrap();
+        assert_eq!(s.quant_from(), 40);
+        assert_eq!(s.retune_at(40), None);
+        assert_eq!(s.label(), "delay:40");
+        let w = Schedule::parse("warmup", 1000).unwrap();
+        assert_eq!(w.quant_from(), 100);
+        assert!(Schedule::parse("delay:0", 10).unwrap().is_trivial());
+        assert!(!w.is_trivial());
+    }
+
+    #[test]
+    fn parse_progressive() {
+        let s = Schedule::parse("progressive:16@0,8@500", 1000).unwrap();
+        assert_eq!(s.quant_from(), 0);
+        assert_eq!(s.retune_at(0), Some(16));
+        assert_eq!(s.retune_at(1), None);
+        assert_eq!(s.retune_at(500), Some(8));
+        assert_eq!(s.bits_at(0), Some(16));
+        assert_eq!(s.bits_at(499), Some(16));
+        assert_eq!(s.bits_at(9999), Some(8));
+        assert_eq!(s.label(), "progressive:16@0,8@500");
+        // quantization starts at the first phase
+        let late = Schedule::parse("progressive:8@100", 1000).unwrap();
+        assert_eq!(late.quant_from(), 100);
+        assert_eq!(late.bits_at(99), None);
+    }
+
+    #[test]
+    fn parse_rejects_malformed_specs() {
+        for bad in [
+            "nope",
+            "delay",
+            "delay:x",
+            "progressive:",
+            "progressive:8",
+            "progressive:8@x",
+            "progressive:8@0,16@0",
+            "progressive:16@100,8@50",
+            "progressive:1@0",
+            "progressive:64@0",
+            "warmup:10",
+        ] {
+            assert!(Schedule::parse(bad, 100).is_err(), "{bad:?} should not parse");
+        }
+    }
+
+    #[test]
+    fn install_sets_quant_from() {
+        let mut ctx = TrainCtx::new();
+        Schedule::parse("delay:7", 10).unwrap().install(&mut ctx);
+        assert_eq!(ctx.quant_from, 7);
+        ctx.iter = 6;
+        assert!(!ctx.quant_on());
+        ctx.iter = 7;
+        assert!(ctx.quant_on());
+    }
+}

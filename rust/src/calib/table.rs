@@ -1,0 +1,222 @@
+//! The calibration table: per-site calibrated activation formats
+//! (DESIGN.md §Calibration).
+//!
+//! A [`CalibTable`] is what a calibration pass produces and what
+//! `serve::FrozenModel::freeze_ptq` consumes: one record per quantizable
+//! site (linear / conv / depthwise layer, keyed by layer name) holding the
+//! observed clipping range and the [`Format`] derived from it. Tables
+//! round-trip through a small whitespace-tokenized text file (same
+//! conventions as the checkpoint format: f32 payloads as hex bit patterns,
+//! so ranges reload bit-exactly) — the artifact behind
+//! `apt calibrate --out <file>` / `apt serve --calib <file>` — and embed
+//! into checkpoints as the optional `calib` section
+//! (`train::checkpoint::Checkpoint::write_calib`).
+
+use std::fmt::Write as _;
+use std::path::Path;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::fixedpoint::{Format, FormatFamily, Scheme};
+
+const MAGIC: &str = "aptcalib";
+const VERSION: &str = "v1";
+
+/// One calibrated site: a quantizable layer's activation input.
+#[derive(Clone, Debug, PartialEq)]
+pub struct CalibSite {
+    /// Layer name (the serving IR's site key).
+    pub name: String,
+    /// Calibrated clipping range max |x| the format was derived from.
+    pub max_abs: f32,
+    /// The activation format this site freezes to.
+    pub fmt: Format,
+}
+
+/// Site → calibrated format map plus the provenance needed to reproduce it.
+#[derive(Clone, Debug, PartialEq)]
+pub struct CalibTable {
+    /// Observer label (`minmax`, `ema:<a>`, `percentile:<q>`, `kl`).
+    pub observer: String,
+    /// Format family every site was calibrated into.
+    pub family: FormatFamily,
+    /// Target bit-width (fixed-point; fixed-width families keep their
+    /// storage width).
+    pub bits: u8,
+    /// Whether `freeze_ptq` should quantize weights per output channel.
+    pub per_channel: bool,
+    /// Samples (input rows) observed.
+    pub samples: usize,
+    /// Calibrated sites, in forward (program) order.
+    pub sites: Vec<CalibSite>,
+}
+
+impl CalibTable {
+    /// Look up a site by layer name.
+    pub fn get(&self, name: &str) -> Option<&CalibSite> {
+        self.sites.iter().find(|s| s.name == name)
+    }
+
+    /// Render to the text format (the `--out` artifact).
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        let _ = writeln!(out, "{MAGIC} {VERSION}");
+        let _ = writeln!(out, "observer {}", self.observer);
+        let _ = writeln!(out, "family {} {}", self.family.tag(), self.bits);
+        let _ = writeln!(out, "per_channel {}", self.per_channel as u8);
+        let _ = writeln!(out, "samples {}", self.samples);
+        let _ = writeln!(out, "sites {}", self.sites.len());
+        for s in &self.sites {
+            let _ = writeln!(
+                out,
+                "site {} {:08x} {} {} {}",
+                s.name,
+                s.max_abs.to_bits(),
+                s.fmt.family().tag(),
+                s.fmt.storage_bits(),
+                s.fmt.scale_exp()
+            );
+        }
+        out.push_str("end\n");
+        out
+    }
+
+    /// Parse the text format.
+    pub fn parse(text: &str) -> Result<CalibTable> {
+        let mut toks = text.split_ascii_whitespace();
+        let mut next = || toks.next().ok_or_else(|| anyhow!("truncated calibration table"));
+        let expect = |t: &str, want: &str| -> Result<()> {
+            if t != want {
+                bail!("expected {want:?}, found {t:?}");
+            }
+            Ok(())
+        };
+        expect(next()?, MAGIC)?;
+        let v = next()?;
+        if v != VERSION {
+            bail!("unsupported calibration table version {v:?} (this build reads {VERSION})");
+        }
+        expect(next()?, "observer")?;
+        let observer = next()?.to_string();
+        expect(next()?, "family")?;
+        let ftag = next()?;
+        let family = FormatFamily::parse(ftag)
+            .ok_or_else(|| anyhow!("unknown format family {ftag:?} in calibration table"))?;
+        let bits: u8 = next()?.parse()?;
+        expect(next()?, "per_channel")?;
+        let per_channel = next()?.parse::<u8>()? != 0;
+        expect(next()?, "samples")?;
+        let samples: usize = next()?.parse()?;
+        expect(next()?, "sites")?;
+        let n: usize = next()?.parse()?;
+        let mut sites = Vec::with_capacity(n);
+        for _ in 0..n {
+            expect(next()?, "site")?;
+            let name = next()?.to_string();
+            let max_abs = f32::from_bits(u32::from_str_radix(next()?, 16)?);
+            sites.push(CalibSite { name, max_abs, fmt: parse_fmt(next()?, next()?, next()?)? });
+        }
+        expect(next()?, "end")?;
+        Ok(CalibTable { observer, family, bits, per_channel, samples, sites })
+    }
+
+    /// Read a table file (the `apt serve --calib <file>` artifact).
+    pub fn read(path: impl AsRef<Path>) -> Result<CalibTable> {
+        let path = path.as_ref();
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading calibration table {path:?}"))?;
+        Self::parse(&text).with_context(|| format!("parsing calibration table {path:?}"))
+    }
+
+    /// Write the table file.
+    pub fn write(&self, path: impl AsRef<Path>) -> Result<()> {
+        let path = path.as_ref();
+        if let Some(dir) = path.parent() {
+            if !dir.as_os_str().is_empty() {
+                std::fs::create_dir_all(dir)
+                    .with_context(|| format!("creating directory {dir:?}"))?;
+            }
+        }
+        std::fs::write(path, self.render())
+            .with_context(|| format!("writing calibration table {path:?}"))
+    }
+}
+
+/// Parse one site's `(family, bits, s)` token triple back into a [`Format`]
+/// — shared with the checkpoint `calib` section reader.
+pub(crate) fn parse_fmt(ftag: &str, bits: &str, s: &str) -> Result<Format> {
+    let family = FormatFamily::parse(ftag)
+        .ok_or_else(|| anyhow!("unknown format family {ftag:?} in calibration site"))?;
+    let bits: u8 = bits.parse()?;
+    let s: i32 = s.parse()?;
+    Ok(match family {
+        FormatFamily::FixedPoint => Format::FixedPoint(Scheme { bits, s }),
+        other => Format::from_scheme(other, Scheme { bits, s }),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn table() -> CalibTable {
+        CalibTable {
+            observer: "percentile:99.99".into(),
+            family: FormatFamily::FixedPoint,
+            bits: 8,
+            per_channel: false,
+            samples: 512,
+            sites: vec![
+                CalibSite {
+                    name: "conv0".into(),
+                    max_abs: 1.375,
+                    fmt: Format::FixedPoint(Scheme { bits: 8, s: -6 }),
+                },
+                CalibSite {
+                    name: "fc1".into(),
+                    max_abs: 0.03125,
+                    fmt: Format::FixedPoint(Scheme { bits: 8, s: -12 }),
+                },
+            ],
+        }
+    }
+
+    #[test]
+    fn render_parse_round_trip() {
+        let t = table();
+        let back = CalibTable::parse(&t.render()).unwrap();
+        assert_eq!(back, t);
+    }
+
+    #[test]
+    fn minifloat_sites_round_trip() {
+        let mut t = table();
+        t.family = FormatFamily::E4M3;
+        t.sites[0].fmt = Format::for_range(FormatFamily::E4M3, 1e5, 8);
+        t.sites[1].fmt = Format::for_range(FormatFamily::E5M2, 0.5, 8);
+        let back = CalibTable::parse(&t.render()).unwrap();
+        assert_eq!(back, t);
+    }
+
+    #[test]
+    fn file_round_trip_and_lookup() {
+        let t = table();
+        let p = std::env::temp_dir().join("apt_calib_table_test.calib");
+        t.write(&p).unwrap();
+        let back = CalibTable::read(&p).unwrap();
+        assert_eq!(back.get("fc1").unwrap().max_abs, 0.03125);
+        assert!(back.get("nope").is_none());
+        let _ = std::fs::remove_file(&p);
+    }
+
+    #[test]
+    fn parse_rejects_garbage() {
+        assert!(CalibTable::parse("not a table").is_err());
+        assert!(CalibTable::parse("aptcalib v9 end").is_err());
+        // truncated site list
+        let t = table();
+        let text = t.render();
+        let cut = &text[..text.len() - 20];
+        assert!(CalibTable::parse(cut).is_err());
+    }
+}

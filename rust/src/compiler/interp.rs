@@ -32,6 +32,31 @@ pub(crate) fn run_unfused(ops: &[ExecOp], x: &Tensor, eng: &Engine, timers: &[St
     cur
 }
 
+/// Run the full op list unfused, handing each quantizable site's *input*
+/// activation to `tap(site_name, data)` just before the op consumes it —
+/// the observation hook behind `calib::Calibrator`. Conv sites observe the
+/// pre-im2col input: padding only adds zeros, so the patch range the
+/// frozen `Fq`/int kinds will clip to is the same.
+pub(crate) fn run_observed(
+    ops: &[ExecOp],
+    x: &Tensor,
+    eng: &Engine,
+    tap: &mut dyn FnMut(&str, &[f32]),
+) -> Tensor {
+    let mut cur = x.clone();
+    let mut stack: Vec<Tensor> = Vec::new();
+    for op in ops {
+        match op {
+            ExecOp::Linear(l) => tap(&l.name, &cur.data),
+            ExecOp::Conv(cv) => tap(&cv.name, &cur.data),
+            ExecOp::Depthwise(dw) => tap(&dw.name, &cur.data),
+            _ => {}
+        }
+        cur = apply_op(op, cur, &mut stack, eng);
+    }
+    cur
+}
+
 /// Execute one op against the current activation + value stack. Shared
 /// verbatim by the fused plan executor for ops outside any fusion group,
 /// so pass-through semantics cannot drift between the two strategies.

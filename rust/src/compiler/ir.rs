@@ -428,6 +428,11 @@ pub(crate) fn lower(
                             }
                         }
                     }
+                    // Activation-only quantization (PTQ per-channel freeze):
+                    // the weights arrive already quantized — per-channel, so
+                    // no single per-tensor format could re-derive them — and
+                    // only the calibrated activation format remains to apply.
+                    (None, Some(fx)) => LinKind::Fq { wq: w, sx: fx },
                     _ => LinKind::F32 { w },
                 };
                 ExecOp::Linear(ExecLinear { name, din: din_l, dout, b, kind })
@@ -462,6 +467,8 @@ pub(crate) fn lower(
                             }
                         }
                     }
+                    // Activation-only quantization — see the linear arm.
+                    (None, Some(fx)) => ConvKind::Fq { wq: w.data, sx: fx },
                     _ => ConvKind::F32 { w: w.data },
                 };
                 ExecOp::Conv(ExecConv { name, geom, in_h, in_w, b, kind })

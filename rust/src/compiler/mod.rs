@@ -145,6 +145,33 @@ impl Compiled {
         interp::run_unfused(&self.ops, x, eng, &[])
     }
 
+    /// Run unfused with each quantizable site's input activation handed to
+    /// `tap(site_name, data)` before the op consumes it — the observation
+    /// hook `calib::Calibrator` drives its forward-only passes through.
+    pub(crate) fn run_observed(
+        &self,
+        x: &Tensor,
+        eng: &Engine,
+        tap: &mut dyn FnMut(&str, &[f32]),
+    ) -> Tensor {
+        interp::run_observed(&self.ops, x, eng, tap)
+    }
+
+    /// Quantizable site names (linear / conv / depthwise layers), in
+    /// forward order — the keys `run_observed` taps and a `CalibTable`
+    /// indexes by.
+    pub(crate) fn site_names(&self) -> Vec<String> {
+        self.ops
+            .iter()
+            .filter_map(|op| match op {
+                ExecOp::Linear(l) => Some(l.name.clone()),
+                ExecOp::Conv(cv) => Some(cv.name.clone()),
+                ExecOp::Depthwise(dw) => Some(dw.name.clone()),
+                _ => None,
+            })
+            .collect()
+    }
+
     /// Tile decisions to persist in the artifact's plan cache.
     pub(crate) fn tuned(&self) -> &[TuneEntry] {
         self.plan.as_ref().map_or(&[], |p| &p.tuned)

@@ -3,8 +3,8 @@
 //! typed `Phase::AfterBackward` hooks of `train::Session`
 //! (DESIGN.md §Session-API).
 
+use crate::calib::{MinMax, Observer};
 use crate::exp::common::adaptive_mode;
-use crate::fixedpoint::quantize::max_abs;
 use crate::fixedpoint::Scheme;
 use crate::nn::QuantMode;
 use crate::train::{Phase, SessionBuilder, TrainRecord};
@@ -12,12 +12,21 @@ use crate::util::cli::Args;
 use crate::util::out::{results_dir, Csv, Json};
 use crate::util::Log2Histogram;
 
+/// Range of one probed tensor, through the calibration [`Observer`] — the
+/// same stats path `apt calibrate` runs (DESIGN.md §Calibration), so the
+/// figures and the PTQ subsystem share one range estimator.
+fn observed_max(data: &[f32]) -> f32 {
+    let mut ob = MinMax::new();
+    ob.observe(data);
+    ob.calibrated_max(32)
+}
+
 fn grad_histogram(data: &[f32], bits: Option<u8>) -> Log2Histogram {
     let mut h = Log2Histogram::new(-24, 8);
     match bits {
         None => h.add_all(data),
         Some(b) => {
-            let sch = Scheme::for_range(max_abs(data), b);
+            let sch = Scheme::for_range(observed_max(data), b);
             for &v in data {
                 h.add(sch.fake_quant(v));
             }
@@ -105,7 +114,7 @@ pub fn fig2(args: &Args) {
             let net = info.net.expect("host path exposes the net");
             let row: Vec<f32> = layers
                 .iter()
-                .map(|l| net.last_grad_of(l).map(|g| g.max_abs()).unwrap_or(0.0))
+                .map(|l| net.last_grad_of(l).map(|g| observed_max(&g.data)).unwrap_or(0.0))
                 .collect();
             maxes.push((info.iter, row));
             if info.iter == capture_at {

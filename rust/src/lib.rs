@@ -32,6 +32,7 @@
 
 pub mod apt;
 pub mod bench;
+pub mod calib;
 pub mod compiler;
 pub mod coordinator;
 pub mod data;

@@ -16,6 +16,12 @@
 //!         [--weight-format F]      interpreter / load-time tile search /
 //!                                  weight-only re-quantization (int4 packs
 //!                                  two codes per byte)
+//!         [--calib F]              PTQ: freeze a *float* checkpoint with a
+//!                                  calibration table (file or embedded)
+//!   calibrate [--model M]          PTQ calibration pass (DESIGN.md
+//!         [--ckpt F --observer K]  §Calibration): observe activations over
+//!         [--samples N --bits B]   forward-only passes, derive per-site
+//!         [--out F | --embed]      formats, write a table artifact
 //!   opcount [--batch N]            print the Fig7/Table5 analytic counts
 //!   list                           list experiments and models
 //!
@@ -27,6 +33,7 @@ use std::time::Instant;
 use anyhow::{anyhow, bail, Context, Result};
 
 use apt::apt::AptConfig;
+use apt::calib::{CalibTable, Calibrator, ObserverKind, Schedule};
 use apt::compiler::CompileOptions;
 use apt::exp;
 use apt::fixedpoint::FormatFamily;
@@ -51,6 +58,7 @@ fn usage() -> ! {
          \x20 train [--model alexnet|vgg|resnet|mobilenet|inception|mlp]\n\
          \x20       [--mode float32|adaptive|int8|int16|e4m3|e5m2|int4]\n\
          \x20       [--iters N] [--lr F] [--per-channel] [--quant-delay N]\n\
+         \x20       [--schedule delay:<n>|warmup|progressive:<bits>@<iter>,…]\n\
          \x20       [--replicas N] [--comm-bits 8|16|e4m3|e5m2|adaptive|f32]\n\
          \x20       [--compress none|quantize|topk:<r>|topk:<r>+quantize]\n\
          \x20       [--node-size N] (power of two; hierarchical all-reduce)\n\
@@ -60,7 +68,11 @@ fn usage() -> ! {
          \x20       [--clients N] [--workers N] [--max-batch N] [--max-wait-us N]\n\
          \x20       [--queue-cap N] [--scheduler flush|continuous]\n\
          \x20       [--deadline-us N] [--lanes N] [--no-fuse] [--tune]\n\
-         \x20       [--weight-format int4|e4m3|e5m2]\n\
+         \x20       [--weight-format int4|e4m3|e5m2] [--calib file]\n\
+         \x20 calibrate [--model mlp] [--ckpt file] [--observer minmax|ema[:a]|percentile:<q>|kl]\n\
+         \x20       [--samples N] [--bits B] [--family fixed|int4|e4m3|e5m2]\n\
+         \x20       [--per-channel] [--out file] [--embed] [--train-iters N]\n\
+         \x20       [--ckpt-out file] [--seed N]\n\
          \x20 opcount [--batch N]\n\
          \x20 list\n\
          \n\
@@ -163,6 +175,15 @@ fn cmd_train(args: &Args) -> Result<()> {
     // checked flag parse: a malformed value must error, not panic (the
     // no-panic CLI contract of the PR-4 hardening pass)
     let recompute = flag(args, "recompute")?;
+    // --schedule subsumes --quant-delay (`delay:<n>` is the schedule
+    // spelling); both at once is ambiguous, so error instead of picking.
+    let schedule = match (args.get("schedule"), args.get("quant-delay")) {
+        (Some(_), Some(_)) => {
+            bail!("--schedule and --quant-delay conflict (delay:<n> is the --schedule spelling)")
+        }
+        (Some(s), None) => Schedule::parse(s, iters)?,
+        (None, _) => Schedule::delay(parsed(args, "quant-delay", 0)?),
+    };
     let mut builder = SessionBuilder::classifier(model)
         .mode(mode)
         .lr(parsed(args, "lr", 0.01)?)
@@ -171,7 +192,7 @@ fn cmd_train(args: &Args) -> Result<()> {
         .noise(parsed(args, "noise", 0.5)?)
         .stash_policy(act)
         .node_size(node)
-        .quant_delay(parsed(args, "quant-delay", 0)?)
+        .schedule(schedule)
         .recompute(recompute);
     if let Some(p) = compress {
         builder = builder.compress(p);
@@ -305,6 +326,17 @@ fn cmd_serve(args: &Args) -> Result<()> {
             .collect()
     });
 
+    // --calib: PTQ deployment — freeze a *float* checkpoint statically
+    // through a calibration table instead of re-deriving formats from
+    // trained controller schemes (DESIGN.md §Calibration).
+    let calib_path = args.get("calib");
+    if calib_path.is_some() && args.get("mode").is_some() {
+        bail!("--calib freezes a float checkpoint via its calibration table; --mode does not apply");
+    }
+    if calib_path.is_some() && model_names.is_some() {
+        bail!("--calib serves one model (use --model/--ckpt, not --models)");
+    }
+
     let server = if let Some(names) = &model_names {
         if names.is_empty() {
             bail!("--models expects a comma-separated list of zoo models");
@@ -330,14 +362,18 @@ fn cmd_serve(args: &Args) -> Result<()> {
                     model,
                     std::process::id()
                 ));
+                // PTQ freezes from a *float* checkpoint, so the quick
+                // bootstrap train runs float when --calib is given.
+                let train_mode =
+                    if calib_path.is_some() { QuantMode::Float32 } else { mode };
                 println!(
                     "no --ckpt given: training {model} ({}) for {train_iters} iters …",
-                    mode.label()
+                    train_mode.label()
                 );
                 // build_parallel(1, F32) == build(), but errors on a bad
                 // --model instead of panicking (no-panic CLI contract).
                 let mut s = SessionBuilder::classifier(&model)
-                    .mode(mode)
+                    .mode(train_mode)
                     .lr(0.01)
                     .seed(seed)
                     .build_parallel(1, CommPrecision::F32)?;
@@ -348,8 +384,20 @@ fn cmd_serve(args: &Args) -> Result<()> {
                 path
             }
         };
-        let frozen = FrozenModel::from_checkpoint_with(&ckpt_path, &model, mode, &copts)
-            .with_context(|| format!("freezing checkpoint {}", ckpt_path.display()))?;
+        let frozen = if let Some(cpath) = calib_path {
+            let table = load_calib_table(cpath)?;
+            println!(
+                "PTQ freeze: {} table ({} sites, {} samples)",
+                table.observer,
+                table.sites.len(),
+                table.samples
+            );
+            FrozenModel::freeze_ptq(&ckpt_path, &model, &table, &copts)
+                .with_context(|| format!("PTQ-freezing checkpoint {}", ckpt_path.display()))?
+        } else {
+            FrozenModel::from_checkpoint_with(&ckpt_path, &model, mode, &copts)
+                .with_context(|| format!("freezing checkpoint {}", ckpt_path.display()))?
+        };
         print!("{}", frozen.compile_report());
         if copts.tune && frozen.compile_report().tiles_tuned > 0 {
             // Persist the freshly searched tiles so the next load of this
@@ -368,7 +416,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
             frozen.precision(),
             frozen.input_len()
         );
-        InferenceServer::start(Arc::new(frozen), apt::kernels::global_arc(), cfg)
+        InferenceServer::start(Arc::new(frozen), apt::kernels::global_arc(), cfg)?
     };
 
     // Synthetic eval workload drawn from the same stream Session::eval
@@ -500,6 +548,133 @@ fn cmd_serve(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// Load a calibration table: either a standalone table artifact
+/// (`apt calibrate --out`) or a checkpoint carrying the embedded `calib`
+/// section (`apt calibrate --embed`).
+fn load_calib_table(path: &str) -> Result<CalibTable> {
+    let text = std::fs::read_to_string(path)
+        .with_context(|| format!("reading calibration table {path:?}"))?;
+    if text.starts_with("aptcalib") {
+        CalibTable::parse(&text).with_context(|| format!("parsing calibration table {path:?}"))
+    } else {
+        Checkpoint::read(std::path::Path::new(path))?
+            .calib_table()
+            .cloned()
+            .ok_or_else(|| {
+                anyhow!(
+                    "{path}: neither a calibration table nor a checkpoint with an \
+                     embedded calib section"
+                )
+            })
+    }
+}
+
+/// `apt calibrate`: the PTQ calibration pass (DESIGN.md §Calibration).
+/// Restores a *float* checkpoint (or trains one briefly), streams
+/// `--samples` calibration inputs through forward-only passes with an
+/// `--observer` watching every quantizable site, and derives a per-site
+/// format table — written to `--out` and/or embedded into the checkpoint's
+/// `calib` section with `--embed`, ready for `apt serve --calib`.
+fn cmd_calibrate(args: &Args) -> Result<()> {
+    let model = args.str_or("model", "mlp");
+    let observer = ObserverKind::parse(&args.str_or("observer", "percentile:99.99"))?;
+    let samples: usize = parsed(args, "samples", 256)?;
+    let bits: u8 = parsed(args, "bits", 8)?;
+    if !(2..=16).contains(&bits) {
+        bail!("--bits {bits}: calibrated activation widths must be in 2..=16");
+    }
+    let family = match args.get("family") {
+        None => FormatFamily::FixedPoint,
+        Some(s) => FormatFamily::parse(s).ok_or_else(|| {
+            anyhow!("--family {s:?}: expected fixed, int4, e4m3 or e5m2")
+        })?,
+    };
+    let per_channel = flag(args, "per-channel")?;
+    let seed: u64 = parsed(args, "seed", 0)?;
+    let train_iters: u64 = parsed(args, "train-iters", 80)?;
+
+    // A float session: PTQ calibrates the f32 forward, never a QAT run.
+    let mut s = SessionBuilder::classifier(&model)
+        .mode(QuantMode::Float32)
+        .lr(0.01)
+        .seed(seed)
+        .build_parallel(1, CommPrecision::F32)?;
+    let ckpt_path = match args.get("ckpt") {
+        Some(p) => {
+            let p = std::path::PathBuf::from(p);
+            s.load_checkpoint(&p)
+                .with_context(|| format!("restoring float checkpoint {}", p.display()))?;
+            p
+        }
+        None => {
+            // No checkpoint given: train float briefly and save it, so the
+            // table calibrates exactly the weights `serve --calib` will
+            // freeze.
+            let path = match args.get("ckpt-out") {
+                Some(p) => std::path::PathBuf::from(p),
+                None => std::env::temp_dir().join(format!(
+                    "apt_calibrate_{}_{}.ckpt",
+                    model,
+                    std::process::id()
+                )),
+            };
+            println!("no --ckpt given: training {model} (float32) for {train_iters} iters …");
+            s.run(train_iters)?;
+            s.save_checkpoint(&path)
+                .with_context(|| format!("writing checkpoint {}", path.display()))?;
+            println!("checkpoint saved to {}", path.display());
+            path
+        }
+    };
+
+    let mut cal = Calibrator::from_net(&model, s.net(), observer)?;
+    // Calibration stream: the same synthetic distribution the training and
+    // serve paths draw from (data seed+1000).
+    let mut data = apt::data::SynthImages::new(
+        seed + 1000,
+        models::CLASSES,
+        models::IN_C,
+        models::IN_H,
+        models::IN_W,
+        0.5,
+    );
+    while cal.samples() < samples {
+        let n = (samples - cal.samples()).min(32);
+        let (x, _) = data.batch(n);
+        cal.observe(&x);
+    }
+    let table = cal.finish(family, bits, per_channel);
+
+    println!(
+        "calibrated {} sites over {} samples ({}, {} @ {} bits{})",
+        table.sites.len(),
+        table.samples,
+        table.observer,
+        table.family.label(),
+        table.bits,
+        if per_channel { ", per-channel weights" } else { "" }
+    );
+    for site in &table.sites {
+        println!("  {:<12} max|x| {:>10.5} → {}", site.name, site.max_abs, site.fmt.label());
+    }
+    let mut delivered = false;
+    if let Some(out) = args.get("out") {
+        table.write(out)?;
+        println!("table written to {out}");
+        delivered = true;
+    }
+    if flag(args, "embed")? {
+        Checkpoint::write_calib(&ckpt_path, &table)
+            .with_context(|| format!("embedding table in {}", ckpt_path.display()))?;
+        println!("table embedded in {}", ckpt_path.display());
+        delivered = true;
+    }
+    if !delivered {
+        print!("{}", table.render());
+    }
+    Ok(())
+}
+
 fn run(args: &Args) -> Result<()> {
     let pos = args.positional().to_vec();
     match pos.first().map(|s| s.as_str()) {
@@ -518,6 +693,7 @@ fn run(args: &Args) -> Result<()> {
         }
         Some("train") => cmd_train(args),
         Some("serve") => cmd_serve(args),
+        Some("calibrate") => cmd_calibrate(args),
         Some("opcount") => {
             exp::run("fig7", args);
             println!();

@@ -118,6 +118,38 @@ impl FrozenModel {
         Self::compile_ops(format!("{model}-{}", mode.label()), ops, opts, ck.tune_cache())
     }
 
+    /// Post-training quantization: freeze a **float** checkpoint into a
+    /// statically quantized model using a calibration table instead of
+    /// train-time controller schemes (DESIGN.md §Calibration). The
+    /// checkpoint must come from a `QuantMode::Float32` session for `model`
+    /// (no QAT run anywhere); `apt calibrate` produces the table. Per
+    /// quantizable site the table supplies the calibrated activation
+    /// format; weight formats are re-derived from the frozen weights' own
+    /// range — per tensor (feeding the ordinary integer/minifloat kinds)
+    /// or, when the table says `per_channel`, per output channel
+    /// (weights fake-quantized channel-wise at freeze time, activations on
+    /// the calibrated per-tensor format).
+    pub fn freeze_ptq(
+        path: impl AsRef<Path>,
+        model: &str,
+        table: &crate::calib::CalibTable,
+        opts: &CompileOptions,
+    ) -> Result<FrozenModel> {
+        let ck = Checkpoint::read(path.as_ref())?;
+        let mut rng = Pcg32::seeded(0);
+        let mut net = models::by_name(model, QuantMode::Float32, &mut rng)
+            .ok_or_else(|| anyhow!("unknown model {model:?}"))?;
+        ck.restore_net(&mut net)?;
+        let mut ops = net.export_infer()?;
+        apply_calib(&mut ops, table)?;
+        Self::compile_ops(
+            format!("{model}-ptq-{}", table.observer),
+            ops,
+            opts,
+            ck.tune_cache(),
+        )
+    }
+
     fn compile_ops(
         label: String,
         ops: Vec<InferOp>,
@@ -198,6 +230,22 @@ impl FrozenModel {
         self.forward(&t, eng).data
     }
 
+    /// Apply a calibration table to a float export: set every quantizable
+    /// site's activation format from its calibrated range and derive the
+    /// weight format from the frozen weights themselves. Split out of
+    /// [`freeze_ptq`](FrozenModel::freeze_ptq) so live nets (no checkpoint
+    /// on disk) can take the same path.
+    pub fn freeze_ptq_net(
+        label: impl Into<String>,
+        net: &Sequential,
+        table: &crate::calib::CalibTable,
+        opts: &CompileOptions,
+    ) -> Result<FrozenModel> {
+        let mut ops = net.export_infer()?;
+        apply_calib(&mut ops, table)?;
+        Self::compile_ops(label.into(), ops, opts, &[])
+    }
+
     /// Per-step timing table over every [`forward`](FrozenModel::forward)
     /// since construction, or `None` before the first forward. Lines align
     /// with the compile report's steps.
@@ -223,4 +271,92 @@ impl FrozenModel {
         }
         Some(out)
     }
+}
+
+/// Stamp a calibration table onto a float export. Per-tensor: the site gets
+/// a weight format derived from the frozen weights' range plus the
+/// calibrated activation format — the ordinary integer/minifloat kinds.
+/// Per-channel: weights are fake-quantized per output channel right here
+/// (no single per-tensor format could describe them, so `sw` stays `None`
+/// and lowering takes the activation-only `Fq` kind).
+fn apply_calib(ops: &mut [InferOp], table: &crate::calib::CalibTable) -> Result<()> {
+    use crate::fixedpoint::{quantize, Format};
+
+    let max_abs = |w: &[f32]| w.iter().fold(0.0f32, |m, v| m.max(v.abs()));
+    let site_of = |name: &str| {
+        table.get(name).ok_or_else(|| {
+            anyhow!("calibration table has no site {name:?} (calibrated for a different model?)")
+        })
+    };
+    for op in ops.iter_mut() {
+        match op {
+            InferOp::Linear { name, w, sw, sx, .. } => {
+                if sw.is_some() || sx.is_some() {
+                    return Err(anyhow!(
+                        "{name}: checkpoint already carries trained formats — freeze_ptq expects a float export"
+                    ));
+                }
+                let site = site_of(name)?;
+                if table.per_channel {
+                    // Linear weights are din × dout: output channels are
+                    // the columns.
+                    let (rows, cols) = (w.dim(0), w.dim(1));
+                    let scales = quantize::channel_scales_cols(
+                        &w.data, rows, cols, table.family, table.bits,
+                    );
+                    quantize::fake_quant_per_channel_cols(
+                        &mut w.data, rows, cols, table.family, table.bits, &scales,
+                    );
+                } else {
+                    *sw = Some(Format::for_range(table.family, max_abs(&w.data), table.bits));
+                }
+                *sx = Some(site.fmt);
+            }
+            InferOp::Conv { name, w, geom, sw, sx, .. } => {
+                if sw.is_some() || sx.is_some() {
+                    return Err(anyhow!(
+                        "{name}: checkpoint already carries trained formats — freeze_ptq expects a float export"
+                    ));
+                }
+                let site = site_of(name)?;
+                if table.per_channel {
+                    // Conv weights are out_c × (in_c·kh·kw): output
+                    // channels are the rows.
+                    let rows = geom.out_c;
+                    let cols = w.len() / rows;
+                    let scales = quantize::channel_scales_rows(
+                        &w.data, rows, cols, table.family, table.bits,
+                    );
+                    quantize::fake_quant_per_channel_rows(
+                        &mut w.data, rows, cols, table.family, table.bits, &scales,
+                    );
+                } else {
+                    *sw = Some(Format::for_range(table.family, max_abs(&w.data), table.bits));
+                }
+                *sx = Some(site.fmt);
+            }
+            InferOp::Depthwise { name, w, c, sw, sx, .. } => {
+                if sw.is_some() || sx.is_some() {
+                    return Err(anyhow!(
+                        "{name}: checkpoint already carries trained formats — freeze_ptq expects a float export"
+                    ));
+                }
+                let site = site_of(name)?;
+                if table.per_channel {
+                    // Depthwise kernels are c × 9: one channel per row.
+                    let scales = quantize::channel_scales_rows(
+                        &w.data, *c, 9, table.family, table.bits,
+                    );
+                    quantize::fake_quant_per_channel_rows(
+                        &mut w.data, *c, 9, table.family, table.bits, &scales,
+                    );
+                } else {
+                    *sw = Some(Format::for_range(table.family, max_abs(&w.data), table.bits));
+                }
+                *sx = Some(site.fmt);
+            }
+            _ => {}
+        }
+    }
+    Ok(())
 }

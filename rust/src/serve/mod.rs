@@ -42,7 +42,7 @@
 //!     Arc::new(frozen),
 //!     apt::kernels::global_arc(),
 //!     ServeConfig { policy: SchedPolicy::Continuous, ..ServeConfig::default() },
-//! );
+//! ).unwrap();
 //! let pending = server.submit(vec![0.0; server.input_len()]).unwrap();
 //! let logits = pending.wait().unwrap();
 //! println!("prediction: {:?}", logits);

@@ -242,12 +242,14 @@ impl LaneQueue {
         if self.len >= self.cfg.queue_cap {
             // Shed lowest priority first: displace the *youngest* entry of
             // the least urgent non-empty lane strictly below the arrival.
-            let victim_lane = (e.lane + 1..self.cfg.lanes).rev().find(|&l| !self.lanes[l].is_empty());
-            match victim_lane {
-                Some(l) => {
-                    let victim = self.lanes[l].pop_back().expect("non-empty victim lane");
+            // `pop_back` doubles as the emptiness check — no unwrap on a
+            // lane that could race empty under a future locking change.
+            let victim =
+                (e.lane + 1..self.cfg.lanes).rev().find_map(|l| self.lanes[l].pop_back());
+            match victim {
+                Some(v) => {
                     self.lanes[e.lane].push_back(e);
-                    Admit::Evict { victim: victim.id }
+                    Admit::Evict { victim: v.id }
                 }
                 None => Admit::Shed(ShedReason::QueueFull),
             }
@@ -329,8 +331,13 @@ impl Scheduler for FlushScheduler {
         // max_batch must flush when full, not wait out the deadline while
         // submitters sit blocked on backpressure.
         let fill_target = self.q.cfg.max_batch.min(self.q.cfg.queue_cap);
-        let hold_until = self.q.oldest_arrival().expect("non-empty queue")
-            + Duration::from_micros(self.q.cfg.max_wait_us);
+        let hold_until = match self.q.oldest_arrival() {
+            Some(t) => t + Duration::from_micros(self.q.cfg.max_wait_us),
+            // `len > 0` with every lane empty would be a bookkeeping bug;
+            // flush whatever take_batch finds instead of panicking the
+            // worker that noticed.
+            None => ctx.now,
+        };
         if self.q.len >= fill_target || ctx.now >= hold_until {
             let (batch, expired) = self.q.take_batch(ctx.now);
             Plan::Dispatch { batch, expired }

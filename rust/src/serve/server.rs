@@ -41,7 +41,7 @@ use std::sync::{Arc, Condvar, Mutex, MutexGuard};
 use std::thread;
 use std::time::{Duration, Instant};
 
-use anyhow::{anyhow, bail, Result};
+use anyhow::{anyhow, bail, Context, Result};
 
 use super::frozen::FrozenModel;
 use super::registry::{ModelRegistry, ServeModel};
@@ -289,14 +289,17 @@ impl InferenceServer {
     /// kernel-engine handle every worker uses for its GEMMs — pass
     /// [`crate::kernels::global_arc`] to share the process pool, or a
     /// dedicated `Engine` to isolate serving from training traffic.
-    pub fn start(model: Arc<FrozenModel>, engine: Arc<Engine>, cfg: ServeConfig) -> InferenceServer {
+    /// Errors on a bad [`ServeConfig`] or unspawnable workers — typed,
+    /// like every other serving-tier failure, never a panic.
+    pub fn start(
+        model: Arc<FrozenModel>,
+        engine: Arc<Engine>,
+        cfg: ServeConfig,
+    ) -> Result<InferenceServer> {
         let name = model.label().to_string();
         let registry = Arc::new(ModelRegistry::new());
-        registry
-            .publish(&name, 1, model as Arc<dyn ServeModel>)
-            .expect("publish into a fresh registry");
+        registry.publish(&name, 1, model as Arc<dyn ServeModel>)?;
         Self::start_registry(registry, name, engine, cfg)
-            .expect("default model was just published")
     }
 
     /// Serve a [`ModelRegistry`]: requests name a model via
@@ -310,10 +313,21 @@ impl InferenceServer {
         engine: Arc<Engine>,
         cfg: ServeConfig,
     ) -> Result<InferenceServer> {
-        assert!(cfg.workers >= 1, "need at least one worker");
-        assert!(cfg.max_batch >= 1, "max_batch must be ≥ 1");
-        assert!(cfg.queue_cap >= 1, "queue_cap must be ≥ 1");
-        assert!(cfg.lanes >= 1, "need at least one priority lane");
+        // Config validation errors instead of asserting: these are
+        // CLI-reachable (`--workers 0`), and the no-panic contract of the
+        // serving tier covers its construction too.
+        if cfg.workers < 1 {
+            bail!("serve config: need at least one worker");
+        }
+        if cfg.max_batch < 1 {
+            bail!("serve config: max_batch must be ≥ 1");
+        }
+        if cfg.queue_cap < 1 {
+            bail!("serve config: queue_cap must be ≥ 1");
+        }
+        if cfg.lanes < 1 {
+            bail!("serve config: need at least one priority lane");
+        }
         let default_model = default_model.into();
         if registry.resolve(&default_model).is_none() {
             bail!("default model {default_model:?} is not in the registry");
@@ -344,9 +358,9 @@ impl InferenceServer {
                 thread::Builder::new()
                     .name(format!("apt-serve-{i}"))
                     .spawn(move || worker_loop(sh, eng))
-                    .expect("spawn serve worker thread")
             })
-            .collect();
+            .collect::<std::io::Result<Vec<_>>>()
+            .context("spawning serve worker threads")?;
         Ok(InferenceServer { shared, workers })
     }
 

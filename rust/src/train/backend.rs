@@ -18,6 +18,7 @@ use anyhow::{bail, Result};
 use super::optim::Optimizer;
 use super::{EvalOut, Phase, StepInfo};
 use crate::apt::Ledger;
+use crate::calib::Schedule;
 use crate::coordinator::ArtifactTrainer;
 use crate::data::{translation_batch, SynthImages};
 use crate::mem::{ActivationStash, StashPolicy};
@@ -95,7 +96,20 @@ pub struct HostBackend {
     pub(super) eval_seed: u64,
     pub(super) eval_n: usize,
     pub(super) needs_zero: bool,
+    pub(super) schedule: Schedule,
     label: String,
+}
+
+/// Retune every compute controller of `net` to `bits` at iteration `iter` —
+/// what a [`Schedule`] phase boundary does
+/// (`PrecisionController::retune_bits`; no-op for controllers already at
+/// the width, so degenerate schedules stay bit-identical).
+pub(super) fn retune_net(net: &mut Sequential, bits: u8, iter: u64) {
+    net.visit_controllers(&mut |_, lc| {
+        lc.w.retune_bits(bits, iter);
+        lc.x.retune_bits(bits, iter);
+        lc.g.retune_bits(bits, iter);
+    });
 }
 
 impl HostBackend {
@@ -119,6 +133,7 @@ impl HostBackend {
             eval_seed,
             eval_n,
             needs_zero: false,
+            schedule: Schedule::default(),
             label,
         }
     }
@@ -147,13 +162,24 @@ impl HostBackend {
         &self.ctx.stash
     }
 
-    /// Keep every compute controller dormant until step `n`: forward and
-    /// backward run pure f32 for iterations `< n`, then the quantized path
-    /// activates with controllers warm-starting from the float weights
-    /// (CLI `--quant-delay`). `n = 0` (the default) leaves every step
-    /// quantized — bit-identical to never calling this.
+    /// Keep every compute controller dormant until step `n` — sugar for
+    /// [`set_schedule`](Self::set_schedule) with `Schedule::delay(n)`.
     pub fn set_quant_delay(&mut self, n: u64) {
-        self.ctx.quant_from = n;
+        self.set_schedule(Schedule::delay(n));
+    }
+
+    /// Install a precision schedule (DESIGN.md §Calibration): forward and
+    /// backward run pure f32 for iterations below the schedule's
+    /// quantization start, then the controllers activate warm-starting from
+    /// the float weights; progressive phases retune every compute
+    /// controller at their start iterations. The trivial `delay:0`
+    /// schedule (the default) is bit-identical to an unscheduled run.
+    /// `Schedule::install` is the single definition of the quantization
+    /// start — the plumbing `set_quant_delay` used to duplicate per
+    /// backend.
+    pub fn set_schedule(&mut self, schedule: Schedule) {
+        schedule.install(&mut self.ctx);
+        self.schedule = schedule;
     }
 }
 
@@ -171,6 +197,9 @@ impl Backend for HostBackend {
         }
         self.ctx.stash.begin_step();
         self.ctx.iter = iter;
+        if let Some(bits) = self.schedule.retune_at(iter) {
+            retune_net(&mut self.net, bits, iter);
+        }
         let (x, y) = self.data.batch(self.batch);
         let logits = self.net.forward(&x, &mut self.ctx);
         let (loss, g) = softmax_xent(&logits, &y);
@@ -252,10 +281,19 @@ impl Seq2SeqBackend {
         &self.ctx.stash
     }
 
-    /// Float warm-up: quantized BPTT stays dormant until step `n` (see
-    /// [`HostBackend::set_quant_delay`]).
+    /// Float warm-up: quantized BPTT stays dormant until step `n` — sugar
+    /// for [`set_schedule`](Self::set_schedule) with `Schedule::delay(n)`.
     pub fn set_quant_delay(&mut self, n: u64) {
-        self.ctx.quant_from = n;
+        self.set_schedule(Schedule::delay(n));
+    }
+
+    /// Install a precision schedule's quantization start (one
+    /// `Schedule::install` definition shared with [`HostBackend`]). The RNN
+    /// path's projection controllers are not externally visitable, so
+    /// progressive phase retunes apply only on the classifier backends; the
+    /// delay axis is fully honored here.
+    pub fn set_schedule(&mut self, schedule: Schedule) {
+        schedule.install(&mut self.ctx);
     }
 }
 

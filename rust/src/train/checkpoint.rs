@@ -42,6 +42,7 @@ use super::optim::OptimizerState;
 use super::parallel::{CompressSnapshot, ParallelBackend};
 use super::{HostBackend, Session};
 use crate::apt::{ControllerState, Ledger};
+use crate::calib::{CalibSite, CalibTable};
 use crate::apt::ledger::Event;
 use crate::compiler::{GemmKind, ShapeKey, TuneEntry};
 use crate::fixedpoint::{FormatFamily, TensorKind};
@@ -70,6 +71,13 @@ const MAGIC: &str = "aptckpt";
 // host saves and all older artifacts, which keep loading (a missing
 // section restores fine into stateless policies and is rejected read-only
 // by error-feedback ones — see `QuantAllReduce::check_compress`).
+//
+// Still v3 (calibration subsystem, DESIGN.md §Calibration): an *optional*
+// `calib` section may sit between `compress` and `tune`/`end` — a PTQ
+// calibration table (`calib <observer> <family> <bits> <per_channel>
+// <samples> <n>` + one `cs <site> <maxabs-hex> <ftag> <bits> <s>` record
+// per site) embedded by `Checkpoint::write_calib` or `apt calibrate
+// --embed`. Training never writes it; absence parses exactly as before.
 //
 // v4 (format-family axis, DESIGN.md §Formats): every controller record
 // (`c`/`cc`/`sc`) carries a format-family tag (`fixed`/`e4m3`/`e5m2`/
@@ -278,6 +286,33 @@ fn render_compress_section(out: &mut String, snap: &CompressSnapshot) {
     }
 }
 
+/// Render the optional `calib` section: the table head plus one `cs`
+/// record per calibrated site — the checkpoint-embedded twin of
+/// [`CalibTable::render`], re-tokenized to the checkpoint's conventions.
+fn render_calib_section(out: &mut String, t: &CalibTable) {
+    let _ = writeln!(
+        out,
+        "calib {} {} {} {} {} {}",
+        t.observer,
+        t.family.tag(),
+        t.bits,
+        t.per_channel as u8,
+        t.samples,
+        t.sites.len()
+    );
+    for s in &t.sites {
+        let _ = writeln!(
+            out,
+            "cs {} {:08x} {} {} {}",
+            s.name,
+            s.max_abs.to_bits(),
+            s.fmt.family().tag(),
+            s.fmt.storage_bits(),
+            s.fmt.scale_exp()
+        );
+    }
+}
+
 /// Serialize a data-parallel session: the root replica's host-path state
 /// (parameters/optimizer/controllers are bit-identical across replicas
 /// under the sync invariant) plus the per-gradient communication
@@ -391,6 +426,10 @@ pub struct Checkpoint {
     /// residuals) of data-parallel saves; `None` for host saves and for
     /// artifacts predating the optional `compress` section.
     compress: Option<CompressSnapshot>,
+    /// PTQ calibration table embedded by [`Checkpoint::write_calib`] or
+    /// `apt calibrate --embed`; `None` for files without the optional
+    /// `calib` section (every training save).
+    calib: Option<CalibTable>,
     /// Serving plan cache: per-shape GEMM tile decisions appended by
     /// [`Checkpoint::write_tune_cache`]. Empty for files without the
     /// optional `tune` section (every training save).
@@ -443,6 +482,55 @@ impl Checkpoint {
     /// predating the optional `compress` section.
     pub fn compress_state(&self) -> Option<&CompressSnapshot> {
         self.compress.as_ref()
+    }
+
+    /// The embedded PTQ calibration table, if a calibration pass wrote one
+    /// via [`write_calib`](Checkpoint::write_calib). `None` when the file
+    /// has no `calib` section.
+    pub fn calib_table(&self) -> Option<&CalibTable> {
+        self.calib.as_ref()
+    }
+
+    /// Embed (or replace) the `calib` section of an existing checkpoint
+    /// file with `table` — the single-artifact deployment path (`apt
+    /// calibrate --embed`), so `serve --calib` can read ranges from the
+    /// checkpoint itself. Only the optional tail is rewritten: everything
+    /// the training session saved is byte-identical afterwards, and an
+    /// existing `tune` plan cache is preserved (the `calib` section always
+    /// precedes `tune`, which is why [`write_tune_cache`]
+    /// (Checkpoint::write_tune_cache)'s tail cut keeps it intact). The
+    /// file is parsed first, so a corrupt checkpoint is refused untouched.
+    pub fn write_calib(path: impl AsRef<Path>, table: &CalibTable) -> Result<()> {
+        let path = path.as_ref();
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading checkpoint {path:?}"))?;
+        parse(&text).with_context(|| format!("refusing to rewrite {path:?}"))?;
+        let body = text.trim_end();
+        let body = body
+            .strip_suffix("end")
+            .ok_or_else(|| anyhow!("checkpoint {path:?} does not end with \"end\""))?;
+        // Lift off a trailing tune section (kept, re-appended after the new
+        // calib) and drop a previous calib section, if any. Like the tune
+        // cut in `write_tune_cache`, these tags only ever introduce their
+        // sections at the start of a line.
+        let (body, tune_text) = match body.rfind("\ntune ") {
+            Some(pos) => (&body[..pos], Some(body[pos + 1..].trim_end().to_string())),
+            None => (body, None),
+        };
+        let body = match body.rfind("\ncalib ") {
+            Some(pos) => &body[..pos],
+            None => body,
+        };
+        let mut out = body.trim_end().to_string();
+        out.push('\n');
+        render_calib_section(&mut out, table);
+        if let Some(t) = tune_text {
+            out.push_str(&t);
+            out.push('\n');
+        }
+        out.push_str("end\n");
+        std::fs::write(path, out).with_context(|| format!("writing checkpoint {path:?}"))?;
+        Ok(())
     }
 
     /// Append (or replace) the `tune` plan-cache section of an existing
@@ -837,6 +925,31 @@ fn parse(text: &str) -> Result<Checkpoint> {
         tok = lx.next()?;
     }
 
+    // Optional PTQ calibration table (see the VERSION note): the table
+    // head plus one `cs` record per site, between `compress` and
+    // `tune`/`end`.
+    let mut calib = None;
+    if tok == "calib" {
+        let observer = lx.next()?.to_string();
+        let ftag = lx.next()?;
+        let family = FormatFamily::parse(ftag)
+            .ok_or_else(|| anyhow!("unknown format family {ftag:?} in calib section"))?;
+        let bits = lx.u8()?;
+        let per_channel = lx.u8()? != 0;
+        let samples = lx.usize()?;
+        let n_sites = lx.usize()?;
+        let mut sites = Vec::with_capacity(n_sites);
+        for _ in 0..n_sites {
+            lx.expect("cs")?;
+            let name = lx.next()?.to_string();
+            let max_abs = lx.f32_hex()?;
+            let fmt = crate::calib::parse_fmt(lx.next()?, lx.next()?, lx.next()?)?;
+            sites.push(CalibSite { name, max_abs, fmt });
+        }
+        calib = Some(CalibTable { observer, family, bits, per_channel, samples, sites });
+        tok = lx.next()?;
+    }
+
     // Optional serving plan cache (see the VERSION note): `tune <n>` with
     // one `tl <kind> <m> <k> <n> <mc> <kc> <shard>` row per shape, sitting
     // just before the final `end`.
@@ -856,7 +969,7 @@ fn parse(text: &str) -> Result<Checkpoint> {
             }
             lx.expect("end")?;
         }
-        other => bail!("expected \"compress\", \"tune\" or \"end\", found {other:?}"),
+        other => bail!("expected \"compress\", \"calib\", \"tune\" or \"end\", found {other:?}"),
     }
 
     Ok(Checkpoint {
@@ -873,6 +986,7 @@ fn parse(text: &str) -> Result<Checkpoint> {
         stash,
         pc,
         compress,
+        calib,
         tune,
     })
 }
@@ -926,9 +1040,28 @@ pub(super) fn load(session: &mut Session<HostBackend>, path: &Path) -> Result<()
     let host = &mut session.backend;
     host.opt.load_state(ck.opt_state);
     host.ctx.ledger = ck.ledger;
+    // Mid-phase resume under a progressive schedule: the restored schemes
+    // already reflect the phase's retune at save time, but the width
+    // *floor* lives in session config (not checkpoint state) — re-pin it
+    // without touching the restored schemes, so controllers that adapted
+    // above the floor keep their widths.
+    if let Some(bits) = host.schedule.bits_at(ck.iter) {
+        apply_width_floor(&mut host.net, bits);
+    }
     session.iter = ck.iter;
     session.losses = ck.losses;
     Ok(())
+}
+
+/// Re-pin every controller's width floor after a restore (see the
+/// schedule note in [`load`]). Bounds only — restored schemes stay as
+/// saved.
+fn apply_width_floor(net: &mut Sequential, bits: u8) {
+    net.visit_controllers(&mut |_, lc| {
+        lc.w.set_width_floor(bits);
+        lc.x.set_width_floor(bits);
+        lc.g.set_width_floor(bits);
+    });
 }
 
 /// Restore `path` into a data-parallel session: the root replica takes the
@@ -971,6 +1104,13 @@ pub(super) fn load_parallel(session: &mut Session<ParallelBackend>, path: &Path)
     // Root takes the owned buffers last, after every peer cloned its copy.
     group.host.opt.load_state(ck.opt_state);
     group.host.ctx.ledger = ck.ledger;
+    // Re-pin the schedule's width floor on every replica (see `load`).
+    if let Some(bits) = group.host.schedule.bits_at(ck.iter) {
+        apply_width_floor(&mut group.host.net, bits);
+        for peer in &mut group.peers {
+            apply_width_floor(&mut peer.net, bits);
+        }
+    }
 
     session.iter = ck.iter;
     session.losses = ck.losses;

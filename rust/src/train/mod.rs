@@ -43,6 +43,7 @@ use std::fmt;
 use anyhow::{bail, Result};
 
 use crate::apt::Ledger;
+use crate::calib::Schedule;
 use crate::data::SynthImages;
 use crate::mem::{ActivationStash, MemLedger, StashPolicy};
 use crate::nn::{models, QuantMode, Sequential};
@@ -514,13 +515,13 @@ pub struct SessionBuilder {
     recompute: bool,
     compress: Option<CompressPolicy>,
     node_size: usize,
-    quant_delay: u64,
+    schedule: Schedule,
 }
 
-/// Under a quantization delay the Adaptive init phase (probe every
-/// iteration) shifts to begin at activation, so the controllers still get
-/// their dense warm-up on the first *quantized* steps. Delay 0 returns the
-/// mode untouched — the bit-identity pin.
+/// Under a schedule with a quantization delay the Adaptive init phase
+/// (probe every iteration) shifts to begin at activation, so the
+/// controllers still get their dense warm-up on the first *quantized*
+/// steps. Delay 0 returns the mode untouched — the bit-identity pin.
 fn delayed_mode(mode: QuantMode, delay: u64) -> QuantMode {
     match mode {
         QuantMode::Adaptive(mut cfg) if delay > 0 => {
@@ -552,7 +553,7 @@ impl SessionBuilder {
             recompute: false,
             compress: None,
             node_size: 1,
-            quant_delay: 0,
+            schedule: Schedule::default(),
         }
     }
 
@@ -681,8 +682,20 @@ impl SessionBuilder {
     /// quantized steps. `n = 0` (the default) is bit-identical to an
     /// undelayed run. Compute-side only — the data-parallel comm precision
     /// is unaffected (wire compression has its own adaptive warm-up).
-    pub fn quant_delay(mut self, n: u64) -> Self {
-        self.quant_delay = n;
+    /// Sugar for [`schedule`](Self::schedule) with `Schedule::delay(n)`.
+    pub fn quant_delay(self, n: u64) -> Self {
+        self.schedule(Schedule::delay(n))
+    }
+
+    /// Precision schedule of the run (CLI `--schedule`; DESIGN.md
+    /// §Calibration): when quantization turns on
+    /// (generalizing [`quant_delay`](Self::quant_delay)) and, for
+    /// progressive schedules, which bit-width every compute controller is
+    /// retuned to at each phase boundary. The default `Schedule::delay(0)`
+    /// and any degenerate schedule (single phase at the configured width)
+    /// are bit-identical to an unscheduled run.
+    pub fn schedule(mut self, schedule: Schedule) -> Self {
+        self.schedule = schedule;
         self
     }
 
@@ -701,7 +714,7 @@ impl SessionBuilder {
     /// Panics on an unknown model/layer (the historical contract);
     /// [`build_parallel`](Self::build_parallel) is the `Result` flavor.
     pub fn build<'h>(self) -> Session<'h, HostBackend> {
-        let mode = delayed_mode(self.mode, self.quant_delay);
+        let mode = delayed_mode(self.mode, self.schedule.quant_from());
         let (name, net) = instantiate_net(&self.model, mode, self.seed, &self.grad_overrides)
             .unwrap_or_else(|e| panic!("{e}"));
         let data = make_data(self.data, self.seed, self.noise);
@@ -719,7 +732,7 @@ impl SessionBuilder {
             label,
         );
         backend.set_stash(self.stash, self.recompute);
-        backend.set_quant_delay(self.quant_delay);
+        backend.set_schedule(self.schedule);
         Session::with_backend(backend)
     }
 
@@ -773,9 +786,9 @@ impl SessionBuilder {
             recompute,
             compress,
             node_size,
-            quant_delay,
+            schedule,
         } = self;
-        let mode = delayed_mode(mode, quant_delay);
+        let mode = delayed_mode(mode, schedule.quant_from());
         let policy = compress.unwrap_or_else(|| comm.default_compress());
         // One bit-identical instantiation per replica: the same
         // `instantiate_net` sequence `build()` runs, once per replica.
@@ -812,7 +825,7 @@ impl SessionBuilder {
             .collect();
         let mut group = ReplicaGroup::new(host, peer_parts, comm, policy, node_size)?;
         group.set_stash(stash, recompute);
-        group.set_quant_delay(quant_delay);
+        group.set_schedule(schedule);
         Ok(Session::with_backend(ParallelBackend::new(group, full)))
     }
 }

@@ -146,16 +146,21 @@ impl ReplicaGroup {
         }
     }
 
-    /// Float warm-up on every replica: compute quantization stays dormant
-    /// until step `n` (see [`HostBackend::set_quant_delay`]). Replicas must
-    /// share the delay or they would diverge at activation; the gradient
+    /// Install a precision schedule on every replica (DESIGN.md
+    /// §Calibration): one `Schedule::install` per training context sets the
+    /// quantization start (the plumbing `set_quant_delay` used to
+    /// duplicate), and progressive phases retune each replica's compute
+    /// controllers at their start iterations. Replicas must share the
+    /// schedule or they would diverge at activation; the gradient
     /// all-reduce keeps its own comm precision throughout (wire compression
     /// is a bandwidth decision, not a compute one).
-    pub(super) fn set_quant_delay(&mut self, n: u64) {
-        self.host.set_quant_delay(n);
+    pub(super) fn set_schedule(&mut self, schedule: crate::calib::Schedule) {
         for peer in &mut self.peers {
-            peer.ctx.quant_from = n;
+            schedule.install(&mut peer.ctx);
         }
+        // The host backend stores the schedule too: the N=1 degenerate step
+        // delegates to `HostBackend::step`, which applies the retunes.
+        self.host.set_schedule(schedule);
     }
 
     /// The root replica's activation stash (peers mirror its policy; their
@@ -215,6 +220,15 @@ impl ReplicaGroup {
         self.host.ctx.iter = iter;
         for peer in &mut self.peers {
             peer.ctx.iter = iter;
+        }
+        // Schedule phase boundary: retune every replica's controllers in
+        // lockstep (same `retune_bits` call on bit-identical state, so the
+        // sync invariant is preserved by construction).
+        if let Some(bits) = self.host.schedule.retune_at(iter) {
+            super::backend::retune_net(&mut self.host.net, bits, iter);
+            for peer in &mut self.peers {
+                super::backend::retune_net(&mut peer.net, bits, iter);
+            }
         }
 
         // One global batch, sharded row-wise into N contiguous slices.

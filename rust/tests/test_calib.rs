@@ -1,0 +1,193 @@
+//! Calibration-subsystem gate (DESIGN.md §Calibration):
+//!
+//! 1. **PTQ acceptance** — alexnet trained *float*, frozen through
+//!    `FrozenModel::freeze_ptq` with percentile-calibrated int8 activation
+//!    formats, must agree with the float `Session::eval` path on ≥ 98% of
+//!    eval top-1 predictions — and the whole pipeline works with zero
+//!    training steps (quantization entirely post hoc).
+//! 2. **Schedule pins** — `Schedule::delay(0)` and a single-phase
+//!    progressive schedule at the controllers' existing width are
+//!    bit-identical to the pre-schedule controller path; a multi-phase
+//!    schedule actually retunes the live widths at its boundaries.
+//! 3. **Checkpoint `calib` section** — tables embed into checkpoints,
+//!    survive re-reads, replace on re-write, and never disturb the weight
+//!    payload a session restores from.
+
+use apt::calib::{Calibrator, ObserverKind, Schedule};
+use apt::compiler::CompileOptions;
+use apt::data::SynthImages;
+use apt::fixedpoint::FormatFamily;
+use apt::nn::{models, QuantMode, Sequential};
+use apt::serve::{FrozenModel, InferOp};
+use apt::train::checkpoint::Checkpoint;
+use apt::train::SessionBuilder;
+
+fn tmp(name: &str) -> std::path::PathBuf {
+    std::env::temp_dir().join(format!("apt_test_calib_{name}_{}.ckpt", std::process::id()))
+}
+
+fn synth(seed: u64) -> SynthImages {
+    SynthImages::new(seed, models::CLASSES, models::IN_C, models::IN_H, models::IN_W, 0.5)
+}
+
+// ---------------------------------------------------------- PTQ acceptance
+
+#[test]
+fn ptq_alexnet_agrees_with_float_eval_top1() {
+    // Train alexnet purely in f32 — no quantization anywhere in training.
+    let mut s = SessionBuilder::classifier("alexnet").mode(QuantMode::Float32).lr(0.01).build();
+    s.run(80).expect("float training");
+    let ckpt = tmp("alexnet_ptq");
+    s.save_checkpoint(&ckpt).expect("save float checkpoint");
+
+    // Calibrate int8 activation formats from observed statistics alone.
+    let mut cal = Calibrator::from_net("alexnet", s.net(), ObserverKind::Percentile(99.99))
+        .expect("observation program");
+    let mut data = synth(4242);
+    while cal.samples() < 256 {
+        let (x, _) = data.batch(32);
+        cal.observe(&x);
+    }
+    let table = cal.finish(FormatFamily::FixedPoint, 8, false);
+    assert_eq!(table.samples, 256);
+    assert!(table.sites.iter().all(|site| site.max_abs > 0.0));
+
+    // Freeze the float checkpoint with the calibrated formats.
+    let frozen = FrozenModel::freeze_ptq(&ckpt, "alexnet", &table, &CompileOptions::default())
+        .expect("calibrated freeze");
+
+    // ≥ 98% top-1 agreement with the float eval path (the ISSUE pin).
+    let (ex, _) = data.eval_set(999, 256);
+    let want = s.eval_logits(&ex).argmax_rows();
+    let got = frozen.forward(&ex, apt::kernels::global()).argmax_rows();
+    let agree = want.iter().zip(&got).filter(|(a, b)| a == b).count();
+    let frac = agree as f64 / want.len() as f64;
+    assert!(frac >= 0.98, "PTQ int8 top-1 agreement {frac:.4} < 0.98 vs float eval");
+    let _ = std::fs::remove_file(&ckpt);
+}
+
+#[test]
+fn ptq_freeze_works_with_zero_training_steps() {
+    // Checkpoint straight out of the initializer: PTQ must not depend on
+    // any training having happened.
+    let mut s = SessionBuilder::classifier("mlp").mode(QuantMode::Float32).build();
+    let ckpt = tmp("mlp_zero_step");
+    s.save_checkpoint(&ckpt).expect("save untrained checkpoint");
+
+    let mut cal =
+        Calibrator::from_net("mlp", s.net(), ObserverKind::MinMax).expect("observation program");
+    let mut data = synth(7);
+    let (x, _) = data.batch(32);
+    cal.observe(&x);
+    let table = cal.finish(FormatFamily::FixedPoint, 8, false);
+    let frozen = FrozenModel::freeze_ptq(&ckpt, "mlp", &table, &CompileOptions::default())
+        .expect("calibrated freeze of an untrained checkpoint");
+
+    let y = frozen.forward(&x, apt::kernels::global());
+    assert_eq!(y.shape, vec![32, models::CLASSES]);
+    assert!(y.data.iter().all(|v| v.is_finite()), "finite logits from the zero-step freeze");
+    let _ = std::fs::remove_file(&ckpt);
+}
+
+// ------------------------------------------------------------ schedule pins
+
+#[test]
+fn degenerate_schedules_are_bit_identical_to_the_controller_path() {
+    let base = SessionBuilder::classifier("mlp").mode(QuantMode::Static(8)).train(12);
+
+    // delay:0 — the historical default, spelled through the new axis.
+    let d0 = SessionBuilder::classifier("mlp")
+        .mode(QuantMode::Static(8))
+        .schedule(Schedule::delay(0))
+        .train(12);
+    for (i, (a, b)) in base.losses.iter().zip(&d0.losses).enumerate() {
+        assert_eq!(a.to_bits(), b.to_bits(), "delay:0 loss {i} diverged");
+    }
+
+    // A single phase at the controllers' existing width retunes nothing.
+    let single = SessionBuilder::classifier("mlp")
+        .mode(QuantMode::Static(8))
+        .schedule(Schedule::parse("progressive:8@0", 12).unwrap())
+        .train(12);
+    for (i, (a, b)) in base.losses.iter().zip(&single.losses).enumerate() {
+        assert_eq!(a.to_bits(), b.to_bits(), "progressive:8@0 loss {i} diverged");
+    }
+}
+
+/// Live weight/activation widths as the serving export would freeze them.
+fn live_widths(net: &Sequential) -> Vec<u8> {
+    net.export_infer()
+        .expect("classifier nets export")
+        .iter()
+        .filter_map(|op| match op {
+            InferOp::Linear { sw: Some(f), .. } => Some(f.storage_bits()),
+            InferOp::Conv { sw: Some(f), .. } => Some(f.storage_bits()),
+            InferOp::Depthwise { sw: Some(f), .. } => Some(f.storage_bits()),
+            _ => None,
+        })
+        .collect()
+}
+
+#[test]
+fn progressive_schedule_retunes_widths_at_phase_boundaries() {
+    let sched = Schedule::parse("progressive:16@0,8@6", 20).unwrap();
+    let mut s = SessionBuilder::classifier("mlp")
+        .mode(QuantMode::Static(16))
+        .schedule(sched)
+        .build();
+
+    s.run(4).expect("first phase");
+    let w = live_widths(s.net());
+    assert!(!w.is_empty(), "static session exposes quantized sites");
+    assert!(w.iter().all(|&b| b == 16), "mid-first-phase widths {w:?} should be 16");
+
+    s.run(8).expect("across the 8@6 boundary");
+    let w = live_widths(s.net());
+    assert!(w.iter().all(|&b| b == 8), "post-boundary widths {w:?} should be 8");
+    assert!(s.losses().iter().all(|l| l.is_finite()), "finite losses across the retune");
+}
+
+// -------------------------------------------------- checkpoint calib section
+
+#[test]
+fn checkpoint_calib_section_round_trips_and_replaces() {
+    let mut s = SessionBuilder::classifier("mlp").mode(QuantMode::Float32).build();
+    s.run(4).expect("short float run");
+    let ckpt = tmp("mlp_calib_section");
+    s.save_checkpoint(&ckpt).expect("save");
+    assert!(
+        Checkpoint::read(&ckpt).expect("read").calib_table().is_none(),
+        "fresh checkpoints carry no calib section"
+    );
+
+    let mut cal =
+        Calibrator::from_net("mlp", s.net(), ObserverKind::MinMax).expect("observation program");
+    let mut data = synth(31);
+    let (x, _) = data.batch(16);
+    cal.observe(&x);
+
+    // Embed, re-read, compare bit-exactly.
+    let table = cal.finish(FormatFamily::FixedPoint, 8, false);
+    Checkpoint::write_calib(&ckpt, &table).expect("embed calib section");
+    let back = Checkpoint::read(&ckpt).expect("re-read");
+    assert_eq!(back.calib_table(), Some(&table));
+
+    // Re-embedding replaces the section rather than stacking a second one.
+    let table2 = cal.finish(FormatFamily::FixedPoint, 4, true);
+    assert_ne!(table, table2);
+    Checkpoint::write_calib(&ckpt, &table2).expect("replace calib section");
+    assert_eq!(Checkpoint::read(&ckpt).expect("re-read").calib_table(), Some(&table2));
+
+    // The weight payload is untouched: a fresh session restored from the
+    // annotated checkpoint evaluates bit-identically to the live one.
+    let mut restored = SessionBuilder::classifier("mlp").mode(QuantMode::Float32).build();
+    restored.load_checkpoint(&ckpt).expect("restore annotated checkpoint");
+    let (ex, _) = data.batch(8);
+    let a = s.eval_logits(&ex);
+    let b = restored.eval_logits(&ex);
+    assert_eq!(a.shape, b.shape);
+    for (i, (x, y)) in a.data.iter().zip(&b.data).enumerate() {
+        assert_eq!(x.to_bits(), y.to_bits(), "logit {i} diverged after calib embed + restore");
+    }
+    let _ = std::fs::remove_file(&ckpt);
+}

@@ -187,7 +187,7 @@ fn server_pairs_responses_under_concurrent_submitters_both_policies() {
             policy,
             ..ServeConfig::default()
         };
-        let server = InferenceServer::start(Arc::clone(&frozen), Arc::clone(&eng), cfg);
+        let server = InferenceServer::start(Arc::clone(&frozen), Arc::clone(&eng), cfg).unwrap();
 
         std::thread::scope(|scope| {
             for c in 0..clients {
@@ -236,7 +236,7 @@ fn server_backpressure_bounded_queue_never_drops() {
     // of waiting out the deadline (fill target = min(max_batch, queue_cap)).
     let cfg =
         ServeConfig { max_batch: 8, max_wait_us: 50_000, queue_cap: 2, workers: 1, ..ServeConfig::default() };
-    let server = InferenceServer::start(Arc::clone(&frozen), Arc::new(Engine::serial()), cfg);
+    let server = InferenceServer::start(Arc::clone(&frozen), Arc::new(Engine::serial()), cfg).unwrap();
     let (threads, per) = (6usize, 8usize);
     std::thread::scope(|scope| {
         for _ in 0..threads {
@@ -262,7 +262,7 @@ fn try_submit_reports_full_queue_and_answers_all_accepted() {
     // every accepted one must still be answered.
     let cfg =
         ServeConfig { max_batch: 1, max_wait_us: 0, queue_cap: 2, workers: 1, ..ServeConfig::default() };
-    let server = InferenceServer::start(Arc::clone(&frozen), Arc::new(Engine::serial()), cfg);
+    let server = InferenceServer::start(Arc::clone(&frozen), Arc::new(Engine::serial()), cfg).unwrap();
     let burst = 200usize;
     let mut pendings = Vec::new();
     let mut full_errors = 0usize;
@@ -297,7 +297,7 @@ fn server_shutdown_answers_every_accepted_request_exactly_once() {
     let d = frozen.input_len();
     let cfg =
         ServeConfig { max_batch: 4, max_wait_us: 200_000, queue_cap: 64, workers: 1, ..ServeConfig::default() };
-    let server = InferenceServer::start(Arc::clone(&frozen), Arc::new(Engine::serial()), cfg);
+    let server = InferenceServer::start(Arc::clone(&frozen), Arc::new(Engine::serial()), cfg).unwrap();
     let pendings: Vec<_> = (0..9).map(|_| server.submit(vec![0.5; d]).unwrap()).collect();
     let stats = server.shutdown(); // close + drain in-flight + reject queued + join
     assert_eq!(stats.accepted, 9);
@@ -329,12 +329,33 @@ fn server_rejects_wrong_input_width_and_unknown_model() {
     let frozen = Arc::new(quick_frozen_mlp());
     let d = frozen.input_len();
     let server =
-        InferenceServer::start(Arc::clone(&frozen), Arc::new(Engine::serial()), ServeConfig::default());
+        InferenceServer::start(Arc::clone(&frozen), Arc::new(Engine::serial()), ServeConfig::default())
+            .unwrap();
     assert!(server.submit(vec![0.0; 3]).is_err());
     assert!(server.try_submit(vec![]).is_err());
     let opts = SubmitOpts { model: Some("no-such-model".into()), ..SubmitOpts::default() };
     let err = server.submit_opts(vec![0.0; d], opts).unwrap_err().to_string();
     assert!(err.contains("no-such-model"), "unexpected error: {err}");
+}
+
+#[test]
+fn server_rejects_degenerate_configs_with_typed_errors() {
+    // CLI-reachable config mistakes (--workers 0, --max-batch 0, …) must
+    // surface as Err, never as a panic inside the serving tier (the
+    // unwrap-audit contract).
+    let frozen = Arc::new(quick_frozen_mlp());
+    for (cfg, what) in [
+        (ServeConfig { workers: 0, ..ServeConfig::default() }, "worker"),
+        (ServeConfig { max_batch: 0, ..ServeConfig::default() }, "max_batch"),
+        (ServeConfig { queue_cap: 0, ..ServeConfig::default() }, "queue_cap"),
+        (ServeConfig { lanes: 0, ..ServeConfig::default() }, "lane"),
+    ] {
+        let err = InferenceServer::start(Arc::clone(&frozen), Arc::new(Engine::serial()), cfg)
+            .err()
+            .map(|e| e.to_string())
+            .unwrap_or_else(|| panic!("{what}: degenerate config must be rejected"));
+        assert!(err.contains(what), "{what}: unexpected error {err}");
+    }
 }
 
 #[test]

@@ -1,0 +1,200 @@
+//! First integration coverage for the zoo's task heads — detection
+//! (SSD-lite) and segmentation (deeplab-lite) — plus their hookup into the
+//! calibration subsystem: forward/backward shape contracts, int8-vs-f32
+//! convergence smoke, PTQ observer sites over the conv trunks, and a
+//! calibrated freeze of the segmentation net (DESIGN.md §Calibration).
+
+use apt::calib::{Calibrator, ObserverKind};
+use apt::compiler::CompileOptions;
+use apt::data::{SynthDetection, SynthSegmentation};
+use apt::fixedpoint::FormatFamily;
+use apt::nn::models::{DetectionNet, SegNet};
+use apt::nn::{QuantMode, TrainCtx};
+use apt::serve::FrozenModel;
+use apt::util::Pcg32;
+
+const CLASSES: usize = 3;
+
+// ---------------------------------------------------------------- detection
+
+#[test]
+fn detection_forward_shapes_and_finite_backward() {
+    let mut rng = Pcg32::seeded(7);
+    let mut net = DetectionNet::new(CLASSES, QuantMode::Float32, &mut rng);
+    let mut data = SynthDetection::new(3, CLASSES, 3, 16, 16);
+    let mut ctx = TrainCtx::new();
+    let (x, gt_boxes, gt_classes) = data.batch(8);
+
+    let (boxes, logits) = net.forward(&x, &mut ctx);
+    assert_eq!(boxes.shape, vec![8, 4], "box head emits [n, 4]");
+    assert_eq!(logits.shape, vec![8, CLASSES], "class head emits [n, classes]");
+    assert!(
+        boxes.data.iter().all(|v| (0.0..=1.0).contains(v)),
+        "sigmoid boxes live in [0, 1]"
+    );
+    assert!(logits.data.iter().all(|v| v.is_finite()), "finite class logits");
+
+    // One full train step: losses finite, gradients actually moved weights.
+    let before: Vec<f32> = net.head_cls.w.data.clone();
+    let (lb, lc) = net.train_step(&x, &gt_boxes, &gt_classes, 0.05, &mut ctx);
+    assert!(lb.is_finite() && lb >= 0.0, "box loss {lb}");
+    assert!(lc.is_finite() && lc > 0.0, "class loss {lc}");
+    assert!(
+        net.head_cls.w.data.iter().zip(&before).any(|(a, b)| a != b),
+        "backward/SGD must update the classification head"
+    );
+}
+
+#[test]
+fn detection_converges_under_int8_and_f32() {
+    for (label, mode) in [("f32", QuantMode::Float32), ("int8", QuantMode::Static(8))] {
+        let mut rng = Pcg32::seeded(0);
+        let mut net = DetectionNet::new(CLASSES, mode, &mut rng);
+        let mut data = SynthDetection::new(1, CLASSES, 3, 16, 16);
+        let mut ctx = TrainCtx::new();
+        let (mut first, mut last) = (0.0, 0.0);
+        for it in 0..30 {
+            ctx.iter = it;
+            let (x, boxes, classes) = data.batch(8);
+            let (lb, lc) = net.train_step(&x, &boxes, &classes, 0.05, &mut ctx);
+            assert!(
+                lb.is_finite() && lc.is_finite(),
+                "{label}: non-finite loss at iter {it}"
+            );
+            if it == 0 {
+                first = lb + lc;
+            }
+            last = lb + lc;
+        }
+        assert!(last < first, "{label}: detector failed to learn — first={first} last={last}");
+    }
+}
+
+// ------------------------------------------------------------- segmentation
+
+#[test]
+fn segmentation_predict_shapes_and_finite_backward() {
+    let mut rng = Pcg32::seeded(11);
+    let mut net = SegNet::new(CLASSES, QuantMode::Float32, &mut rng);
+    let mut data = SynthSegmentation::new(5, CLASSES, 3, 12, 12);
+    let mut ctx = TrainCtx::new();
+    let (x, labels) = data.batch(6);
+
+    let masks = net.predict(&x, &mut ctx);
+    assert_eq!(masks.len(), 6, "one mask per image");
+    for mask in &masks {
+        assert_eq!(mask.len(), 12 * 12, "per-pixel mask covers the full image");
+        assert!(mask.iter().all(|&c| c < CLASSES), "mask classes in range");
+    }
+
+    let loss = net.train_step(&x, &labels, &mut ctx);
+    assert!(loss.is_finite() && loss > 0.0, "pixel loss {loss}");
+
+    let miou = net.eval_miou(&x, &labels, &mut ctx);
+    assert!((0.0..=1.0).contains(&miou), "mIoU {miou} out of range");
+}
+
+#[test]
+fn segmentation_converges_under_int8_and_f32() {
+    for (label, mode) in [("f32", QuantMode::Float32), ("int8", QuantMode::Static(8))] {
+        let mut rng = Pcg32::seeded(0);
+        let mut net = SegNet::new(CLASSES, mode, &mut rng);
+        let mut data = SynthSegmentation::new(1, CLASSES, 3, 12, 12);
+        let mut ctx = TrainCtx::new();
+        let (mut first, mut last) = (0.0, 0.0);
+        for it in 0..25 {
+            ctx.iter = it;
+            let (x, labels) = data.batch(8);
+            let l = net.train_step(&x, &labels, &mut ctx);
+            assert!(l.is_finite(), "{label}: non-finite loss at iter {it}");
+            if it == 0 {
+                first = l;
+            }
+            last = l;
+        }
+        assert!(last < first, "{label}: segmenter failed to learn — first={first} last={last}");
+    }
+}
+
+// ------------------------------------------------- calibration over the zoo
+
+#[test]
+fn zoo_trunks_expose_calibration_sites() {
+    let mut rng = Pcg32::seeded(2);
+
+    // Detection trunk: two conv sites (pool/relu are not observation points).
+    let det = DetectionNet::new(CLASSES, QuantMode::Float32, &mut rng);
+    let mut cal = Calibrator::from_net("det-trunk", &det.trunk, ObserverKind::MinMax)
+        .expect("detection trunk exports for observation");
+    assert_eq!(cal.site_names(), vec!["det_conv0", "det_conv1"]);
+    let mut data = SynthDetection::new(9, CLASSES, 3, 16, 16);
+    let (x, _, _) = data.batch(16);
+    cal.observe(&x);
+    assert_eq!(cal.samples(), 16);
+    let table = cal.finish(FormatFamily::FixedPoint, 8, false);
+    assert_eq!(table.sites.len(), 2);
+    for site in &table.sites {
+        assert!(site.max_abs > 0.0, "{}: observed range must be positive", site.name);
+        assert_eq!(site.fmt.storage_bits(), 8, "{}: int8 activation format", site.name);
+    }
+
+    // Segmentation net: conv0/conv1/head, fully convolutional.
+    let seg = SegNet::new(CLASSES, QuantMode::Float32, &mut rng);
+    let mut cal = Calibrator::from_net("segnet", &seg.net, ObserverKind::Percentile(99.99))
+        .expect("segmentation net exports for observation");
+    assert_eq!(cal.site_names(), vec!["seg_conv0", "seg_conv1", "seg_head"]);
+}
+
+#[test]
+fn segnet_ptq_freeze_matches_float_masks() {
+    let mut rng = Pcg32::seeded(0);
+    let mut net = SegNet::new(CLASSES, QuantMode::Float32, &mut rng);
+    let mut data = SynthSegmentation::new(1, CLASSES, 3, 12, 12);
+    let mut ctx = TrainCtx::new();
+    for it in 0..25 {
+        ctx.iter = it;
+        let (x, labels) = data.batch(8);
+        net.train_step(&x, &labels, &mut ctx);
+    }
+
+    // PTQ: observe activations on held-out batches, then freeze the float
+    // net with calibrated int8 activation formats — zero quantized training.
+    let mut cal = Calibrator::from_net("segnet", &net.net, ObserverKind::MinMax).expect("observe");
+    let mut eval = SynthSegmentation::new(77, CLASSES, 3, 12, 12);
+    for _ in 0..4 {
+        let (x, _) = eval.batch(16);
+        cal.observe(&x);
+    }
+    let table = cal.finish(FormatFamily::FixedPoint, 8, false);
+    let frozen = FrozenModel::freeze_ptq_net("segnet-ptq", &net.net, &table, &CompileOptions::default())
+        .expect("calibrated freeze");
+
+    let (x, _) = eval.batch(16);
+    let float_masks = net.predict(&x, &mut ctx);
+    let logits = frozen.forward(&x, apt::kernels::global());
+    assert_eq!(logits.shape, vec![16, CLASSES * 12 * 12]);
+    assert!(logits.data.iter().all(|v| v.is_finite()), "finite frozen logits");
+
+    // Per-pixel argmax agreement between the int8 frozen path and the float
+    // net. int8 PTQ on a trained net should track the float masks closely;
+    // 0.75 leaves headroom for borderline pixels.
+    let hw = 12 * 12;
+    let (mut agree, mut total) = (0usize, 0usize);
+    for (img, fm) in float_masks.iter().enumerate() {
+        for p in 0..hw {
+            let mut best = f32::NEG_INFINITY;
+            let mut cls = 0usize;
+            for c in 0..CLASSES {
+                let v = logits.data[img * CLASSES * hw + c * hw + p];
+                if v > best {
+                    best = v;
+                    cls = c;
+                }
+            }
+            agree += (cls == fm[p]) as usize;
+            total += 1;
+        }
+    }
+    let frac = agree as f64 / total as f64;
+    assert!(frac >= 0.75, "PTQ masks diverged from float masks: agreement {frac:.3}");
+}
